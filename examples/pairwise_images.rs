@@ -1,0 +1,72 @@
+//! Pairwise-distance preservation on image data (the paper's Appendix
+//! B.1 use case): embed images with tensorized maps and verify that
+//! nearest-neighbor structure survives.
+//!
+//! ```text
+//! cargo run --release --example pairwise_images [-- --cifar path/to/data_batch_1.bin]
+//! ```
+
+use tensorized_rp::data::images::{load_images, TENSOR_DIMS};
+use tensorized_rp::experiments::MapSpec;
+use tensorized_rp::rng::Rng;
+use tensorized_rp::tensor::DenseTensor;
+use tensorized_rp::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1)).unwrap();
+    let cifar = args.get("cifar").map(std::path::PathBuf::from);
+    let n = 24usize;
+    let (images, source) = load_images(n, cifar.as_deref(), 5);
+    println!("[pairwise] {n} {source} images as {:?} tensors", TENSOR_DIMS);
+
+    let tensors: Vec<DenseTensor> = images.iter().map(|im| im.to_tensor()).collect();
+    let mut rng = Rng::seed_from(11);
+    let k = 64;
+
+    for spec in [MapSpec::Gaussian, MapSpec::Tt(5), MapSpec::Cp(25)] {
+        let f = spec.build(&TENSOR_DIMS, k, &mut rng);
+        let projected: Vec<Vec<f64>> = tensors.iter().map(|t| f.project_dense(t)).collect();
+
+        // Pairwise ratio stats + nearest-neighbor preservation.
+        let mut ratios = Vec::new();
+        let mut nn_preserved = 0usize;
+        for i in 0..n {
+            let mut best_orig = (f64::MAX, usize::MAX);
+            let mut best_proj = (f64::MAX, usize::MAX);
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let dx = tensors[i].sub(&tensors[j]).fro_norm();
+                let dy: f64 = projected[i]
+                    .iter()
+                    .zip(&projected[j])
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum::<f64>()
+                    .sqrt();
+                if dx > 1e-12 {
+                    ratios.push(dy / dx);
+                }
+                if dx < best_orig.0 {
+                    best_orig = (dx, j);
+                }
+                if dy < best_proj.0 {
+                    best_proj = (dy, j);
+                }
+            }
+            if best_orig.1 == best_proj.1 {
+                nn_preserved += 1;
+            }
+        }
+        let s = tensorized_rp::util::stats::Summary::of(&ratios);
+        println!(
+            "{:<10} k={k}: distance ratio mean {:.3} ± {:.3} | nearest-neighbor preserved {}/{}",
+            spec.label(),
+            s.mean,
+            s.std,
+            nn_preserved,
+            n
+        );
+    }
+    println!("\nexpected shape (paper Fig. 3): tensorized maps ≈ Gaussian RP on image data.");
+}

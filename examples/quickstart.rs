@@ -1,0 +1,57 @@
+//! Quickstart: draw tensorized random projections, embed a high-order
+//! tensor, and compare against the paper's theory.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use tensorized_rp::prelude::*;
+use tensorized_rp::projections::distortion_ratio;
+use tensorized_rp::theory;
+
+fn main() {
+    let mut rng = Rng::seed_from(42);
+
+    // A 12-mode, 3-dimensional tensor (ambient dimension 3^12 = 531 441),
+    // generated directly in TT format with rank 10 and unit norm — the
+    // paper's medium-order input.
+    let dims = vec![3usize; 12];
+    let x = TtTensor::random_unit(&dims, 10, &mut rng);
+    println!(
+        "input: {} modes, ambient dim {}, TT rank {}, {} parameters",
+        dims.len(),
+        531441,
+        10,
+        x.num_params()
+    );
+
+    // Embed into R^128 with a TT(5) tensorized random projection
+    // (Definition 1) and with a CP(25) one (Definition 2) — roughly equal
+    // parameter budgets, per the paper's §6 pairing.
+    let k = 128;
+    for (name, y, params) in [
+        {
+            let f = TtProjection::new(&dims, 5, k, &mut rng);
+            ("f_TT(5) ", f.project_tt(&x), f.num_params())
+        },
+        {
+            let f = CpProjection::new(&dims, 25, k, &mut rng);
+            ("f_CP(25)", f.project_tt(&x), f.num_params())
+        },
+    ] {
+        let d = distortion_ratio(&y, x.fro_norm());
+        println!("{name}: k={k}, params={params:>8}, distortion |‖f(X)‖²/‖X‖² − 1| = {d:.4}");
+    }
+
+    // What a dense Gaussian JLT would need to store for the same job:
+    println!(
+        "dense Gaussian RP would store k·d^N = {} parameters",
+        k * 531441
+    );
+
+    // Theory: Theorem 2 lower bounds on k for ε = 0.5, m = 100 points.
+    let (eps, m, delta) = (0.5, 100, 0.05);
+    let tt_k = theory::tt_k_lower_bound(eps, 12, 5, m, delta);
+    let cp_k = theory::cp_k_lower_bound(eps, 12, 25, m, delta);
+    println!("Theorem 2: k_TT ≳ {tt_k:.2e}, k_CP ≳ {cp_k:.2e} (CP needs {:.1e}× more)", cp_k / tt_k);
+}

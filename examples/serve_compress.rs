@@ -1,0 +1,119 @@
+//! **End-to-end driver** (DESIGN.md §4, "E2E serving"): run the full
+//! three-layer system on a realistic workload and report serving metrics.
+//!
+//! This exercises every layer composing:
+//!   artifacts (JAX/Pallas, AOT) → PJRT runtime → router → dynamic
+//!   batcher → worker pool → responses, with the native engine serving
+//!   the shapes no artifact covers, and a numerical cross-check of the
+//!   two paths at the end.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example serve_compress
+//! ```
+//!
+//! The run is recorded in EXPERIMENTS.md §E2E.
+
+use tensorized_rp::coordinator::{Coordinator, CoordinatorConfig, EnginePath, ProjectRequest};
+use tensorized_rp::data::inputs::Regime;
+use tensorized_rp::data::workload::{poisson_trace, FormatMix};
+use tensorized_rp::projections::squared_norm;
+use tensorized_rp::runtime::PjrtEngine;
+use tensorized_rp::tensor::{AnyTensor, TtTensor};
+use tensorized_rp::util::stats::Summary;
+
+fn main() -> Result<(), String> {
+    // ── 1. Load the compiled artifact set. ────────────────────────────
+    let mut engine = PjrtEngine::cpu().map_err(|e| e.to_string())?;
+    let n_artifacts = engine
+        .load_dir(std::path::Path::new("artifacts"))
+        .map_err(|e| format!("{e} — run `make artifacts` first"))?;
+    println!("[e2e] PJRT {} | {} artifacts compiled", engine.platform(), n_artifacts);
+
+    // ── 2. Start the coordinator. ─────────────────────────────────────
+    let coord = Coordinator::start(
+        CoordinatorConfig { master_seed: 42, max_delay_us: 2_000, ..Default::default() },
+        Some(engine),
+    );
+
+    // ── 3. Replay a Poisson trace of mixed TT/CP requests. ────────────
+    let n = 400;
+    let trace = poisson_trace(n, 4_000.0, Regime::Medium, FormatMix { tt: 0.7, cp: 0.3 }, 7);
+    println!("[e2e] replaying {n} requests (70% TT / 30% CP, medium-order inputs)");
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = trace
+        .payloads
+        .into_iter()
+        .enumerate()
+        .map(|(i, p)| coord.submit(ProjectRequest::new(i as u64, p)))
+        .collect();
+    let mut latencies = Vec::with_capacity(n);
+    let mut norms = Vec::with_capacity(n);
+    let mut pjrt_count = 0usize;
+    for rx in rxs {
+        let resp = rx.recv().map_err(|e| e.to_string())??;
+        latencies.push((resp.queued_us + resp.exec_us) as f64 / 1e3);
+        norms.push(squared_norm(&resp.embedding));
+        if matches!(resp.path, EnginePath::Pjrt(_)) {
+            pjrt_count += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = coord.metrics();
+    let lat = Summary::of(&latencies);
+    let nrm = Summary::of(&norms);
+
+    println!("\n===== E2E serving report =====");
+    println!("requests        : {n} ({} via PJRT, {} native)", pjrt_count, n - pjrt_count);
+    println!("wall time       : {wall:.3} s → throughput {:.0} req/s", n as f64 / wall);
+    println!(
+        "latency (ms)    : mean {:.1} | p50 {:.1} | p95 {:.1} | max {:.1}",
+        lat.mean, lat.median, lat.p95, lat.max
+    );
+    println!(
+        "PJRT batches    : {} ({} padded slots, {:.1}% padding)",
+        m.pjrt_batches,
+        m.padded_slots,
+        100.0 * m.padded_slots as f64 / (m.pjrt_batches as f64 * 8.0).max(1.0)
+    );
+    println!(
+        "isometry check  : mean ‖f(X)‖² = {:.4} (unit-norm inputs ⇒ expect ≈ 1), std {:.4}",
+        nrm.mean, nrm.std
+    );
+
+    // ── 4. Cross-check: PJRT path ≡ native path on the same map. ──────
+    let mut rng = tensorized_rp::rng::Rng::seed_from(99);
+    let x = TtTensor::random_unit(&Regime::Medium.dims(), 10, &mut rng);
+    let via_pjrt = coord
+        .project_blocking(ProjectRequest::new(9_000, AnyTensor::Tt(x.clone())))?;
+    coord.shutdown();
+
+    // Native coordinator configured to use the *same* registry key
+    // (rank 5, k 128 — the artifact's parameters) and master seed.
+    let native = Coordinator::start(
+        CoordinatorConfig {
+            master_seed: 42,
+            default_tt_rank: 5,
+            default_k: 128,
+            ..Default::default()
+        },
+        None,
+    );
+    let via_native = native.project_blocking(ProjectRequest::new(9_001, AnyTensor::Tt(x)))?;
+    native.shutdown();
+
+    let max_diff = via_pjrt
+        .embedding
+        .iter()
+        .zip(&via_native.embedding)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f64, f64::max);
+    println!(
+        "path cross-check: max |pjrt − native| = {max_diff:.2e} ({} vs {})",
+        via_pjrt.path, via_native.path
+    );
+    if max_diff > 1e-3 {
+        return Err(format!("cross-check failed: {max_diff}"));
+    }
+    println!("e2e OK");
+    Ok(())
+}

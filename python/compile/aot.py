@@ -1,0 +1,156 @@
+"""AOT pipeline: lower the L2 graphs to HLO **text** + manifest.json.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids that the xla_extension 0.5.1
+bundled with the Rust ``xla`` crate rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage (from the ``python/`` directory, as the Makefile does):
+
+    python -m compile.aot --out-dir ../artifacts [--skip-pallas]
+
+Writes one ``<name>.hlo.txt`` per artifact plus ``manifest.json``
+describing parameter order/shapes and map metadata for the Rust runtime.
+"""
+
+import argparse
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# The artifact set (see DESIGN.md §7). `B` is the compiled batch size the
+# Rust dynamic batcher pads to; parameters are runtime inputs.
+ARTIFACTS = [
+    dict(
+        name="tt_rp_medium",
+        kind="tt",
+        cfg=model.TtConfig(
+            n_modes=12, dim=3, rank=5, input_rank=10, k=128, batch=8, use_pallas=False
+        ),
+    ),
+    dict(
+        name="tt_rp_medium_pallas",
+        kind="tt",
+        cfg=model.TtConfig(
+            n_modes=12, dim=3, rank=5, input_rank=10, k=128, batch=8, use_pallas=True
+        ),
+    ),
+    dict(
+        name="cp_rp_medium",
+        kind="cp",
+        cfg=model.CpConfig(
+            n_modes=12, dim=3, rank=25, input_rank=10, k=128, batch=8, use_pallas=True
+        ),
+    ),
+    dict(
+        name="gauss_small",
+        kind="dense",
+        cfg=model.DenseConfig(input_dim=3375, k=128, batch=8, use_pallas=True),
+    ),
+    dict(
+        name="tt_rp_small",
+        kind="tt",
+        cfg=model.TtConfig(
+            n_modes=3, dim=15, rank=5, input_rank=10, k=128, batch=8, use_pallas=True
+        ),
+    ),
+]
+
+
+def build_fn(kind, cfg):
+    if kind == "tt":
+        return model.tt_project_fn(cfg)
+    if kind == "cp":
+        return model.cp_project_fn(cfg)
+    if kind == "dense":
+        return model.dense_project_fn(cfg)
+    raise ValueError(f"unknown artifact kind {kind!r}")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(kind, cfg):
+    fn = build_fn(kind, cfg)
+    specs = [
+        jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in cfg.param_shapes()
+    ]
+    return jax.jit(fn).lower(*specs)
+
+
+def artifact_manifest_entry(name, kind, cfg):
+    entry = {
+        "name": name,
+        "kind": kind,
+        "file": f"{name}.hlo.txt",
+        "dtype": "f32",
+        "k": cfg.k,
+        "batch": cfg.batch,
+        "scale": 1.0 / math.sqrt(cfg.k),
+        "use_pallas": cfg.use_pallas,
+        "params": [
+            {"name": pname, "shape": list(shape)} for pname, shape in cfg.param_shapes()
+        ],
+        "output_shape": [cfg.batch, cfg.k],
+    }
+    if kind in ("tt", "cp"):
+        entry.update(
+            n_modes=cfg.n_modes,
+            dim=cfg.dim,
+            rank=cfg.rank,
+            input_rank=cfg.input_rank,
+        )
+    else:
+        entry.update(input_dim=cfg.input_dim)
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--skip-pallas",
+        action="store_true",
+        help="skip pallas-path artifacts (faster lowering for smoke tests)",
+    )
+    ap.add_argument("--only", default=None, help="lower a single artifact by name")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {"format_version": 1, "artifacts": []}
+    for spec in ARTIFACTS:
+        name, kind, cfg = spec["name"], spec["kind"], spec["cfg"]
+        if args.only and name != args.only:
+            continue
+        if args.skip_pallas and cfg.use_pallas:
+            continue
+        print(f"[aot] lowering {name} …", flush=True)
+        lowered = lower_artifact(kind, cfg)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"[aot]   wrote {path} ({len(text)} chars)")
+        manifest["artifacts"].append(artifact_manifest_entry(name, kind, cfg))
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"[aot] wrote {mpath} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""L1: Pallas kernels for the projection hot-spots + pure-jnp oracles.
+
+* ``tt_step``    — boundary-matrix update of f_TT(R) on TT inputs,
+* ``cp_project`` — fused per-mode Gram/Hadamard of f_CP(R) on CP inputs,
+* ``gemm``       — tiled matmul for the dense Gaussian RP baseline,
+* ``ref``        — einsum oracles for all of the above.
+"""
+
+from . import cp_project, gemm, ref, tt_step  # noqa: F401

@@ -1,0 +1,60 @@
+"""Pallas kernel for ``f_CP(R)`` on CP inputs (Layer 1).
+
+For every (batch b, output component k) the projection component is
+
+    y = Σ_{r, t}  Π_n  G_n[r, t],   G_n = AⁿᵀXⁿ  ∈ R^{R×Rt}
+
+The kernel fuses the N per-mode Gram products and the Hadamard
+accumulation per (b, k) grid cell: the running Hadamard product stays in
+VMEM (an ``R×Rt`` slab) while the factor slabs stream in. N is static at
+trace time (one compiled artifact per order), so the mode loop unrolls.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cp_project_kernel(a_ref, x_ref, o_ref, *, scale):
+    """Grid cell (b, k): one projection component.
+
+    Blocks: a [N, d, R] (factors of row k), x [N, d, Rt] (input factors of
+    batch item b) → o scalar (stored as [1, 1]).
+    """
+    a = a_ref[0, :, :, :]
+    x = x_ref[0, :, :, :]
+    n = a.shape[0]
+    # h[r, t] ← Π_n AⁿᵀXⁿ, unrolled (n is static).
+    h = a[0].T @ x[0]
+    for i in range(1, n):
+        h = h * (a[i].T @ x[i])
+    o_ref[0, 0] = jnp.sum(h) * scale
+
+
+def cp_project(a, x, scale):
+    """Batched CP projection via Pallas.
+
+    a: [K, N, d, R], x: [B, N, d, Rt] → y [B, K] (scaled by ``scale``).
+    """
+    k, n, d, r = a.shape
+    bsz, _, _, rt = x.shape
+
+    def kernel(a_ref, x_ref, o_ref):
+        _cp_project_kernel(a_ref, x_ref, o_ref, scale=scale)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz, k),
+        in_specs=[
+            pl.BlockSpec((1, n, d, r), lambda b, i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, n, d, rt), lambda b, i: (b, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((bsz, k), a.dtype),
+        interpret=True,
+    )(a, x)
+
+
+def vmem_bytes(n, d, r, rt, dtype_bytes=4):
+    """Static VMEM footprint per grid cell: factor slabs + Hadamard slab."""
+    return dtype_bytes * (n * d * r + n * d * rt + 2 * r * rt)

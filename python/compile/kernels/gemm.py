@@ -1,0 +1,62 @@
+"""Tiled-GEMM Pallas kernel for the dense Gaussian RP baseline (Layer 1).
+
+``y[B, K] = scale · x[B, D] @ w[K, D]ᵀ`` with a classic blocked matmul:
+grid over (B/bm, K/bn, D/bk) tiles, an f32 accumulator tile resident in
+VMEM, and the reduction dimension as the innermost (sequential) grid axis.
+This is the direct MXU mapping described in DESIGN.md §Hardware-Adaptation;
+block sizes default to MXU-friendly 128 but shrink to the problem size.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gemm_kernel(x_ref, w_ref, o_ref, *, scale, n_k_blocks):
+    """Tile (i, j, kb): accumulate x-tile @ w-tileᵀ into the output tile."""
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...] @ w_ref[...].T
+
+    @pl.when(kb == n_k_blocks - 1)
+    def _finish():
+        o_ref[...] = o_ref[...] * scale
+
+
+def gemm_project(x, w, scale, bm=128, bn=128, bk=128):
+    """Dense projection ``scale·x@wᵀ`` via a tiled Pallas matmul.
+
+    x: [B, D], w: [K, D] → y [B, K].
+    """
+    b, d = x.shape
+    k, _ = w.shape
+    bm = min(bm, b)
+    bn = min(bn, k)
+    bk = min(bk, d)
+    assert b % bm == 0 and k % bn == 0 and d % bk == 0, (
+        f"tile sizes must divide the problem: ({b},{k},{d}) vs ({bm},{bn},{bk})"
+    )
+    n_k_blocks = d // bk
+    kernel = functools.partial(_gemm_kernel, scale=scale, n_k_blocks=n_k_blocks)
+    return pl.pallas_call(
+        kernel,
+        grid=(b // bm, k // bn, n_k_blocks),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kb: (i, kb)),
+            pl.BlockSpec((bn, bk), lambda i, j, kb: (j, kb)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kb: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, k), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+def vmem_bytes(bm=128, bn=128, bk=128, dtype_bytes=4):
+    """Static VMEM footprint per grid cell: x-tile + w-tile + accumulator."""
+    return dtype_bytes * (bm * bk + bn * bk + bm * bn)

@@ -1,0 +1,99 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package has an exact einsum counterpart here;
+pytest/hypothesis assert elementwise agreement. These references are also
+used directly by `model.py` when a config opts out of the Pallas path
+(`use_pallas=False`), so the AOT artifacts can be built either way.
+
+Shape conventions (uniform mode size ``d``, uniform ranks):
+
+* TT projection rows, stacked over the embedding dimension ``k``:
+  ``g_first  [k, d, R]`` — first cores (left rank 1 squeezed),
+  ``g_mid    [k, N-2, R, d, R]`` — interior cores,
+  ``g_last   [k, R, d]`` — last cores (right rank 1 squeezed).
+* TT inputs, stacked over the request batch ``B``:
+  ``x_first  [B, d, Rt]``, ``x_mid [B, N-2, Rt, d, Rt]``, ``x_last [B, Rt, d]``.
+* CP projection rows: ``a [k, N, d, R]``; CP inputs: ``x [B, N, d, Rt]``.
+* Dense: ``w [k, D]``; inputs ``x [B, D]``.
+"""
+
+import jax.numpy as jnp
+
+
+def tt_boundary_init(g_first, x_first):
+    """First-mode contraction: M[b,k,r,t] = sum_j g_first[k,j,r]·x_first[b,j,t]."""
+    return jnp.einsum("kjr,bjt->bkrt", g_first, x_first)
+
+
+def tt_step_ref(m, g, x):
+    """One interior-mode update of the TT×TT boundary matrix.
+
+    m: [B, k, R, Rt], g: [k, R, d, R], x: [B, Rt, d, Rt] → [B, k, R, Rt].
+    """
+    # tmp[b,k,j,r2,t] = sum_r m[b,k,r,t] g[k,r,j,r2]
+    tmp = jnp.einsum("bkrt,krjs->bkjst", m, g)
+    # out[b,k,r2,t2] = sum_{j,t} tmp[b,k,j,r2,t] x[b,t,j,t2]
+    return jnp.einsum("bkjst,btju->bksu", tmp, x)
+
+
+def tt_finalize(m, g_last, x_last):
+    """Last-mode contraction: y[b,k] = sum_{r,t,j} m[b,k,r,t]·g_last[k,r,j]·x_last[b,t,j]."""
+    return jnp.einsum("bkrt,krj,btj->bk", m, g_last, x_last)
+
+
+def tt_project_ref(g_first, g_mid, g_last, x_first, x_mid, x_last, scale):
+    """Full f_TT(R) on TT inputs: [B, k] projections (already scaled by 1/√k)."""
+    m = tt_boundary_init(g_first, x_first)
+    n_mid = g_mid.shape[1]
+    for i in range(n_mid):
+        m = tt_step_ref(m, g_mid[:, i], x_mid[:, i])
+    return tt_finalize(m, g_last, x_last) * scale
+
+
+def cp_mode_product(a, x):
+    """Per-mode CP Gram product: G[b,k,r,t] = sum_i a[k,i,r]·x[b,i,t]."""
+    return jnp.einsum("kir,bit->bkrt", a, x)
+
+
+def cp_project_ref(a, x, scale):
+    """Full f_CP(R) on CP inputs.
+
+    a: [k, N, d, R], x: [B, N, d, Rt] → y [B, k] = scale·Σ_{r,t} Π_n G_n.
+    """
+    n = a.shape[1]
+    h = cp_mode_product(a[:, 0], x[:, 0])
+    for i in range(1, n):
+        h = h * cp_mode_product(a[:, i], x[:, i])
+    return jnp.sum(h, axis=(2, 3)) * scale
+
+
+def gemm_project_ref(w, x, scale):
+    """Dense Gaussian RP: y [B, k] = scale·x @ wᵀ."""
+    return (x @ w.T) * scale
+
+
+def tt_to_dense(first, mid, last):
+    """Materialize a (single) stacked-core TT tensor — test helper only.
+
+    first: [d, R], mid: [N-2, R, d, R], last: [R, d] → dense [d]*N.
+    """
+    t = first  # [d1, r]
+    n_mid = mid.shape[0]
+    d = first.shape[0]
+    for i in range(n_mid):
+        core = mid[i]  # [r, d, r2]
+        r, dd, r2 = core.shape
+        t = jnp.reshape(t, (-1, r)) @ jnp.reshape(core, (r, dd * r2))
+        t = jnp.reshape(t, (-1, r2))
+    t = jnp.reshape(t, (-1, last.shape[0])) @ last  # [(d^{N-1}), d]
+    n = n_mid + 2
+    return jnp.reshape(t, (d,) * n)
+
+
+def cp_to_dense(factors):
+    """Materialize a CP tensor from factors [N, d, R] — test helper only."""
+    n, d, r = factors.shape
+    m = factors[0]  # [d, R]
+    for i in range(1, n):
+        m = jnp.reshape(m[:, None, :] * factors[i][None, :, :], (-1, r))
+    return jnp.reshape(jnp.sum(m, axis=1), (d,) * n)

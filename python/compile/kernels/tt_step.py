@@ -1,0 +1,121 @@
+"""Pallas kernel for the TT-projection boundary update — the hot spot of
+``f_TT(R)`` on TT inputs (Layer 1).
+
+One interior mode of the contraction chain updates, for every (batch b,
+output component k), the boundary matrix ``M ∈ R^{R×Rt}``:
+
+    M'[r2, t2] = Σ_{r, j, t}  M[r, t] · G[r, j, r2] · X[t, j, t2]
+
+The kernel fuses both contractions per (b, k) grid cell, holding the M
+slab and one projection core in VMEM while streaming the input core.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid is (B, k) so
+each program instance owns an ``R×Rt`` slab — MXU-shaped matmuls of size
+``R×Rt`` per mode index — and the BlockSpec index maps express the
+HBM↔VMEM schedule a CUDA implementation would express with threadblocks.
+``interpret=True`` everywhere on this image: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so lowering stays in plain HLO.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tt_step_kernel(m_ref, g_ref, x_ref, o_ref):
+    """Grid cell (b, k): update one boundary matrix.
+
+    Block shapes: m [R, Rt], g [R, d, R2], x [Rt, d, Rt2] → o [R2, Rt2].
+    """
+    m = m_ref[0, 0, :, :]
+    g = g_ref[0, :, :, :]
+    x = x_ref[0, :, :, :]
+    r, d, r2 = g.shape
+    t, _, t2 = x.shape
+    # tmp[j, r2, t] = Σ_r g[r, j, r2]·m[r, t] — one (d·R2)×R by R×Rt matmul.
+    gm = jnp.reshape(jnp.transpose(g, (1, 2, 0)), (d * r2, r))  # [(j r2), r]
+    tmp = jnp.reshape(gm @ m, (d, r2, t))  # [j, r2, t]
+    # out[r2, t2] = Σ_{j,t} tmp[j, r2, t]·x[t, j, t2] — R2×(d·Rt) by (d·Rt)×Rt2.
+    lhs = jnp.reshape(jnp.transpose(tmp, (1, 0, 2)), (r2, d * t))  # [r2, (j t)]
+    rhs = jnp.reshape(jnp.transpose(x, (1, 0, 2)), (d * t, t2))  # [(j t), t2]
+    o_ref[0, 0, :, :] = lhs @ rhs
+
+
+@functools.partial(jax.jit, static_argnames=())
+def tt_step(m, g, x):
+    """Batched boundary update via Pallas.
+
+    m: [B, K, R, Rt], g: [K, R, d, R2], x: [B, Rt, d, Rt2] → [B, K, R2, Rt2].
+    """
+    bsz, k, r, t = m.shape
+    _, _, d, r2 = g.shape
+    t2 = x.shape[-1]
+    return pl.pallas_call(
+        _tt_step_kernel,
+        grid=(bsz, k),
+        in_specs=[
+            pl.BlockSpec((1, 1, r, t), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((1, r, d, r2), lambda b, i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, t, d, t2), lambda b, i: (b, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, r2, t2), lambda b, i: (b, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, k, r2, t2), m.dtype),
+        interpret=True,
+    )(m, g, x)
+
+
+def _tt_step_kernel_blocked(m_ref, g_ref, x_ref, o_ref):
+    """Grid cell (b, k-block): update KB boundary matrices at once.
+
+    Block shapes: m [1, KB, R, Rt], g [KB, R, d, R2], x [1, Rt, d, Rt2] →
+    o [1, KB, R2, Rt2]. Batching KB output components per grid cell
+    amortizes the streamed X core across KB boundary updates — the VMEM
+    trade-off knob of DESIGN.md §Hardware-Adaptation: VMEM grows by
+    KB·(R·Rt + R·d·R2) while X-core HBM traffic drops by KB×.
+    """
+    m = m_ref[0]  # [KB, R, Rt]
+    g = g_ref[...]  # [KB, R, d, R2]
+    x = x_ref[0]  # [Rt, d, Rt2]
+    kb, r, d, r2 = g.shape
+    t, _, t2 = x.shape
+    # tmp[kb, j, r2, t] = Σ_r g[kb, r, j, r2]·m[kb, r, t]
+    gm = jnp.reshape(jnp.transpose(g, (0, 2, 3, 1)), (kb, d * r2, r))
+    tmp = jnp.reshape(gm @ m, (kb, d, r2, t))
+    # out[kb, r2, t2] = Σ_{j,t} tmp[kb, j, r2, t]·x[t, j, t2]
+    lhs = jnp.reshape(jnp.transpose(tmp, (0, 2, 1, 3)), (kb, r2, d * t))
+    rhs = jnp.reshape(jnp.transpose(x, (1, 0, 2)), (d * t, t2))
+    o_ref[0] = lhs @ rhs
+
+
+def tt_step_blocked(m, g, x, kb=8):
+    """K-blocked variant of :func:`tt_step` (requires ``kb | K``)."""
+    bsz, k, r, t = m.shape
+    _, _, d, r2 = g.shape
+    t2 = x.shape[-1]
+    assert k % kb == 0, f"k-block {kb} must divide k={k}"
+    return pl.pallas_call(
+        _tt_step_kernel_blocked,
+        grid=(bsz, k // kb),
+        in_specs=[
+            pl.BlockSpec((1, kb, r, t), lambda b, i: (b, i, 0, 0)),
+            pl.BlockSpec((kb, r, d, r2), lambda b, i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, t, d, t2), lambda b, i: (b, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, kb, r2, t2), lambda b, i: (b, i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, k, r2, t2), m.dtype),
+        interpret=True,
+    )(m, g, x)
+
+
+def vmem_bytes(r, rt, d, dtype_bytes=4, kb=1):
+    """Static VMEM footprint estimate for one grid cell (DESIGN.md §Perf):
+    M slabs + G cores + X core + output slabs + the two reshaped operands.
+    ``kb`` is the k-block of :func:`tt_step_blocked` (1 = unblocked)."""
+    m = kb * r * rt
+    g = kb * r * d * r
+    x = rt * d * rt
+    out = kb * r * rt
+    tmp = kb * d * r * rt
+    return dtype_bytes * (m + g + x + out + 2 * tmp)

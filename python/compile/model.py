@@ -1,0 +1,163 @@
+"""L2: JAX compute graphs for the projection maps (build-time only).
+
+Each function here assembles the full batched projection for one artifact
+configuration, calling the L1 Pallas kernels for the hot contractions (or
+the einsum references when ``use_pallas=False`` — both lower to the same
+interface and are cross-checked by pytest).
+
+The random projection parameters (TT cores / CP factors / dense matrix)
+are *runtime inputs* of the compiled function, not baked constants: one
+artifact serves any seed. The Rust coordinator draws the parameters with
+its own RNG and feeds them as PJRT literals.
+
+Stacked-core layouts match `kernels/ref.py` (and the Rust runtime packs
+the same layouts — see ``rust/src/runtime/pack.rs``).
+"""
+
+import math
+from dataclasses import dataclass
+
+from .kernels import cp_project as cp_kernel
+from .kernels import gemm as gemm_kernel
+from .kernels import ref
+from .kernels import tt_step as tt_kernel
+
+
+@dataclass(frozen=True)
+class TtConfig:
+    """Shape configuration of one f_TT(R) artifact (uniform d and ranks)."""
+
+    n_modes: int
+    dim: int
+    rank: int  # projection TT rank R
+    input_rank: int  # input TT rank R~
+    k: int  # embedding dimension
+    batch: int  # compiled request batch B
+    use_pallas: bool = True
+
+    @property
+    def scale(self) -> float:
+        return 1.0 / math.sqrt(self.k)
+
+    def param_shapes(self):
+        """Ordered (name, shape) of the compiled function's parameters."""
+        n, d, r, rt, k, b = (
+            self.n_modes,
+            self.dim,
+            self.rank,
+            self.input_rank,
+            self.k,
+            self.batch,
+        )
+        return [
+            ("g_first", (k, d, r)),
+            ("g_mid", (k, n - 2, r, d, r)),
+            ("g_last", (k, r, d)),
+            ("x_first", (b, d, rt)),
+            ("x_mid", (b, n - 2, rt, d, rt)),
+            ("x_last", (b, rt, d)),
+        ]
+
+
+@dataclass(frozen=True)
+class CpConfig:
+    """Shape configuration of one f_CP(R) artifact."""
+
+    n_modes: int
+    dim: int
+    rank: int
+    input_rank: int
+    k: int
+    batch: int
+    use_pallas: bool = True
+
+    @property
+    def scale(self) -> float:
+        return 1.0 / math.sqrt(self.k)
+
+    def param_shapes(self):
+        n, d, r, rt, k, b = (
+            self.n_modes,
+            self.dim,
+            self.rank,
+            self.input_rank,
+            self.k,
+            self.batch,
+        )
+        return [
+            ("a", (k, n, d, r)),
+            ("x", (b, n, d, rt)),
+        ]
+
+
+@dataclass(frozen=True)
+class DenseConfig:
+    """Shape configuration of one dense Gaussian RP artifact."""
+
+    input_dim: int
+    k: int
+    batch: int
+    use_pallas: bool = True
+
+    @property
+    def scale(self) -> float:
+        return 1.0 / math.sqrt(self.k)
+
+    def param_shapes(self):
+        return [
+            ("w", (self.k, self.input_dim)),
+            ("x", (self.batch, self.input_dim)),
+        ]
+
+
+def tt_project_fn(cfg: TtConfig):
+    """Build the batched f_TT(R)-on-TT-input function: params → y [B, k]."""
+
+    def fn(g_first, g_mid, g_last, x_first, x_mid, x_last):
+        m = ref.tt_boundary_init(g_first, x_first)
+        for i in range(cfg.n_modes - 2):
+            if cfg.use_pallas:
+                m = tt_kernel.tt_step(m, g_mid[:, i], x_mid[:, i])
+            else:
+                m = ref.tt_step_ref(m, g_mid[:, i], x_mid[:, i])
+        return (ref.tt_finalize(m, g_last, x_last) * cfg.scale,)
+
+    return fn
+
+
+def cp_project_fn(cfg: CpConfig):
+    """Build the batched f_CP(R)-on-CP-input function: params → y [B, k]."""
+
+    def fn(a, x):
+        if cfg.use_pallas:
+            y = cp_kernel.cp_project(a, x, cfg.scale)
+        else:
+            y = ref.cp_project_ref(a, x, cfg.scale)
+        return (y,)
+
+    return fn
+
+
+def dense_project_fn(cfg: DenseConfig):
+    """Build the batched dense Gaussian RP function: params → y [B, k]."""
+
+    def fn(w, x):
+        if cfg.use_pallas:
+            # Pick tile sizes that divide the problem exactly.
+            bm = _largest_divisor(cfg.batch, 128)
+            bn = _largest_divisor(cfg.k, 128)
+            bk = _largest_divisor(cfg.input_dim, 128)
+            y = gemm_kernel.gemm_project(x, w, cfg.scale, bm=bm, bn=bn, bk=bk)
+        else:
+            y = ref.gemm_project_ref(w, x, cfg.scale)
+        return (y,)
+
+    return fn
+
+
+def _largest_divisor(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is ≤ cap (≥ 1)."""
+    for c in range(min(cap, n), 0, -1):
+        if n % c == 0:
+            return c
+    return 1

@@ -1,0 +1,76 @@
+"""AOT pipeline CLI behaviour + artifact-set invariants."""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+from compile import aot
+
+PY_DIR = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_aot(*extra):
+    out = tempfile.mkdtemp(prefix="trp_aot_")
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out-dir", out, *extra],
+        cwd=PY_DIR,
+        check=True,
+        capture_output=True,
+    )
+    return out
+
+
+def test_only_flag_lowers_single_artifact():
+    out = run_aot("--only", "tt_rp_medium")
+    with open(os.path.join(out, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert [a["name"] for a in manifest["artifacts"]] == ["tt_rp_medium"]
+    assert os.path.exists(os.path.join(out, "tt_rp_medium.hlo.txt"))
+
+
+def test_skip_pallas_excludes_pallas_artifacts():
+    out = run_aot("--skip-pallas")
+    with open(os.path.join(out, "manifest.json")) as f:
+        manifest = json.load(f)
+    names = [a["name"] for a in manifest["artifacts"]]
+    assert "tt_rp_medium" in names
+    assert all(not a["use_pallas"] for a in manifest["artifacts"])
+
+
+def test_artifact_set_covers_paper_regimes():
+    """The compiled set must cover: medium-order TT (ref + pallas), medium
+    CP, small dense, small TT — the serving configs of DESIGN.md §7."""
+    names = {a["name"] for a in aot.ARTIFACTS}
+    assert {
+        "tt_rp_medium",
+        "tt_rp_medium_pallas",
+        "cp_rp_medium",
+        "gauss_small",
+        "tt_rp_small",
+    } <= names
+    for spec in aot.ARTIFACTS:
+        cfg = spec["cfg"]
+        # Batch and k are positive; scale is 1/sqrt(k).
+        assert cfg.k > 0 and cfg.batch > 0
+        entry = aot.artifact_manifest_entry(spec["name"], spec["kind"], cfg)
+        assert abs(entry["scale"] - cfg.k ** -0.5) < 1e-12
+        # Parameter shapes are consistent with the config's own shapes.
+        assert entry["params"] == [
+            {"name": n, "shape": list(s)} for n, s in cfg.param_shapes()
+        ]
+
+
+def test_medium_configs_match_paper_regime():
+    tt = next(s for s in aot.ARTIFACTS if s["name"] == "tt_rp_medium")["cfg"]
+    assert (tt.n_modes, tt.dim, tt.input_rank) == (12, 3, 10)
+    small = next(s for s in aot.ARTIFACTS if s["name"] == "gauss_small")["cfg"]
+    assert small.input_dim == 15 ** 3
+
+
+def test_unknown_kind_rejected():
+    with pytest.raises(ValueError):
+        aot.build_fn("tucker", None)

@@ -1,0 +1,172 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes, ranks and dtypes; assert_allclose against ref.py
+is the core correctness signal of the build path (see DESIGN.md §8).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.cp_project import cp_project, vmem_bytes as cp_vmem
+from compile.kernels.gemm import gemm_project, vmem_bytes as gemm_vmem
+from compile.kernels.tt_step import (
+    tt_step,
+    tt_step_blocked,
+    vmem_bytes as tt_vmem,
+)
+
+# interpret=True Pallas is CPU-slow; keep hypothesis deadlines off.
+COMMON = dict(deadline=None, max_examples=20)
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, dtype)
+
+
+@settings(**COMMON)
+@given(
+    b=st.integers(1, 3),
+    k=st.integers(1, 4),
+    r=st.integers(1, 6),
+    rt=st.integers(1, 6),
+    d=st.integers(1, 5),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_tt_step_matches_ref(b, k, r, rt, d, dtype):
+    # x64 is disabled on this image; sweep the two TPU-relevant dtypes.
+    keys = jax.random.split(jax.random.PRNGKey(b * 1000 + k * 100 + r * 10 + d), 3)
+    m = _rand(keys[0], (b, k, r, rt), dtype)
+    g = _rand(keys[1], (k, r, d, r), dtype)
+    x = _rand(keys[2], (b, rt, d, rt), dtype)
+    got = tt_step(m, g, x)
+    want = ref.tt_step_ref(m, g, x)
+    assert got.dtype == want.dtype
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=tol, atol=tol
+    )
+
+
+@settings(**COMMON)
+@given(
+    b=st.integers(1, 3),
+    k=st.integers(1, 5),
+    n=st.integers(2, 6),
+    d=st.integers(1, 5),
+    r=st.integers(1, 5),
+    rt=st.integers(1, 4),
+)
+def test_cp_project_matches_ref(b, k, n, d, r, rt):
+    keys = jax.random.split(jax.random.PRNGKey(n * 37 + d * 7 + r), 2)
+    a = _rand(keys[0], (k, n, d, r), jnp.float32)
+    x = _rand(keys[1], (b, n, d, rt), jnp.float32)
+    scale = 1.0 / np.sqrt(k)
+    got = cp_project(a, x, scale)
+    want = ref.cp_project_ref(a, x, scale)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@settings(**COMMON)
+@given(
+    b=st.sampled_from([1, 2, 4, 8]),
+    k=st.sampled_from([4, 8, 16]),
+    d=st.sampled_from([32, 64, 128, 256]),
+)
+def test_gemm_matches_ref(b, k, d):
+    keys = jax.random.split(jax.random.PRNGKey(b + k + d), 2)
+    x = _rand(keys[0], (b, d), jnp.float32)
+    w = _rand(keys[1], (k, d), jnp.float32)
+    got = gemm_project(x, w, 0.5, bm=min(b, 128), bn=min(k, 128), bk=min(d, 64))
+    want = ref.gemm_project_ref(w, x, 0.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@settings(**COMMON)
+@given(
+    b=st.integers(1, 2),
+    kblocks=st.integers(1, 3),
+    kb=st.sampled_from([1, 2, 4]),
+    r=st.integers(1, 4),
+    rt=st.integers(1, 4),
+    d=st.integers(1, 4),
+)
+def test_tt_step_blocked_matches_unblocked(b, kblocks, kb, r, rt, d):
+    k = kblocks * kb
+    keys = jax.random.split(jax.random.PRNGKey(k * 97 + r * 11 + d), 3)
+    m = _rand(keys[0], (b, k, r, rt), jnp.float32)
+    g = _rand(keys[1], (k, r, d, r), jnp.float32)
+    x = _rand(keys[2], (b, rt, d, rt), jnp.float32)
+    got = tt_step_blocked(m, g, x, kb=kb)
+    want = tt_step(m, g, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_tt_step_blocked_rejects_non_dividing_block():
+    m = jnp.zeros((1, 3, 2, 2), jnp.float32)
+    g = jnp.zeros((3, 2, 2, 2), jnp.float32)
+    x = jnp.zeros((1, 2, 2, 2), jnp.float32)
+    with pytest.raises(AssertionError):
+        tt_step_blocked(m, g, x, kb=2)
+
+
+def test_blocked_vmem_scales_with_kb():
+    assert tt_vmem(5, 10, 3, kb=8) > tt_vmem(5, 10, 3, kb=1)
+    # The medium-config blocked kernel still fits VMEM easily.
+    assert tt_vmem(5, 10, 3, kb=128) < 16 * 1024 * 1024 // 4
+
+
+def test_gemm_rejects_non_dividing_tiles():
+    x = jnp.zeros((3, 10), jnp.float32)
+    w = jnp.zeros((2, 10), jnp.float32)
+    with pytest.raises(AssertionError):
+        gemm_project(x, w, 1.0, bm=2, bn=2, bk=10)
+
+
+def test_tt_chain_equals_dense_inner_product():
+    """End-to-end L1 check: the full boundary-matrix chain equals the inner
+    product of the materialized TT tensors."""
+    key = jax.random.PRNGKey(7)
+    n, d, r, rt = 5, 3, 3, 2
+    ks = jax.random.split(key, 6)
+    g_first = _rand(ks[0], (1, d, r), jnp.float32)
+    g_mid = _rand(ks[1], (1, n - 2, r, d, r), jnp.float32)
+    g_last = _rand(ks[2], (1, r, d), jnp.float32)
+    x_first = _rand(ks[3], (1, d, rt), jnp.float32)
+    x_mid = _rand(ks[4], (1, n - 2, rt, d, rt), jnp.float32)
+    x_last = _rand(ks[5], (1, rt, d), jnp.float32)
+
+    m = ref.tt_boundary_init(g_first, x_first)
+    for i in range(n - 2):
+        m = tt_step(m, g_mid[:, i], x_mid[:, i])
+    y = ref.tt_finalize(m, g_last, x_last)[0, 0]
+
+    g_dense = ref.tt_to_dense(g_first[0], g_mid[0], g_last[0])
+    x_dense = ref.tt_to_dense(x_first[0], x_mid[0], x_last[0])
+    want = jnp.sum(g_dense * x_dense)
+    np.testing.assert_allclose(float(y), float(want), rtol=1e-4)
+
+
+def test_cp_ref_equals_dense_inner_product():
+    key = jax.random.PRNGKey(9)
+    n, d, r, rt = 4, 3, 3, 2
+    ks = jax.random.split(key, 2)
+    a = _rand(ks[0], (1, n, d, r), jnp.float32)
+    x = _rand(ks[1], (1, n, d, rt), jnp.float32)
+    y = ref.cp_project_ref(a, x, 1.0)[0, 0]
+    a_dense = ref.cp_to_dense(a[0])
+    x_dense = ref.cp_to_dense(x[0])
+    want = jnp.sum(a_dense * x_dense)
+    np.testing.assert_allclose(float(y), float(want), rtol=1e-4)
+
+
+def test_vmem_estimates_fit_tpu_budget():
+    """DESIGN.md §Hardware-Adaptation: the artifact-config working sets must
+    fit a 16 MiB VMEM with ample slack."""
+    budget = 16 * 1024 * 1024
+    assert tt_vmem(r=5, rt=10, d=3) < budget // 100
+    assert cp_vmem(n=12, d=3, r=25, rt=10) < budget // 100
+    assert gemm_vmem(128, 128, 128) < budget // 4

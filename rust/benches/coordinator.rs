@@ -1,0 +1,103 @@
+//! Coordinator/serving benches: end-to-end throughput and latency of the
+//! compression service under a Poisson trace — native path vs PJRT
+//! artifacts, and the dynamic-batching ablation (batch size / deadline).
+//!
+//! ```text
+//! cargo bench --bench coordinator [-- --requests N --quick]
+//! ```
+
+use tensorized_rp::coordinator::{Coordinator, CoordinatorConfig, ProjectRequest};
+use tensorized_rp::data::inputs::Regime;
+use tensorized_rp::data::workload::{poisson_trace, FormatMix, Trace};
+use tensorized_rp::runtime::PjrtEngine;
+use tensorized_rp::util::bench::BenchReport;
+use tensorized_rp::util::cli::Args;
+
+fn run_trace(coord: &Coordinator, trace: &Trace) -> (f64, tensorized_rp::coordinator::MetricsSnapshot) {
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = trace
+        .payloads
+        .iter()
+        .enumerate()
+        .map(|(i, p)| coord.submit(ProjectRequest::new(i as u64, p.clone())))
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().expect("request failed");
+    }
+    (t0.elapsed().as_secs_f64(), coord.metrics())
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench")).unwrap();
+    let n: usize = args
+        .get("requests")
+        .map(|s| s.parse().expect("bad --requests"))
+        .unwrap_or(if args.flag("quick") { 48 } else { 256 });
+    let trace = poisson_trace(n, 5_000.0, Regime::Medium, FormatMix::default(), 42);
+
+    let mut report = BenchReport::new(
+        "Coordinator: throughput/latency, native vs PJRT, batching ablation",
+        &["config", "req_s", "mean_us", "p50_us", "p99_us", "batches", "padded"],
+    );
+
+    // Native-only baseline — configured with the SAME map parameters the
+    // artifacts compile (k=128, TT rank 5, CP rank 25) so the comparison
+    // is apples-to-apples.
+    {
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                default_k: 128,
+                default_tt_rank: 5,
+                default_cp_rank: 25,
+                ..Default::default()
+            },
+            None,
+        );
+        let (secs, m) = run_trace(&coord, &trace);
+        report.push(vec![
+            "native".into(),
+            format!("{:.0}", n as f64 / secs),
+            format!("{:.0}", m.mean_latency_us),
+            m.p50_latency_us.to_string(),
+            m.p99_latency_us.to_string(),
+            "0".into(),
+            "0".into(),
+        ]);
+        coord.shutdown();
+    }
+
+    // PJRT with different batching deadlines (ablation).
+    for &delay_us in &[500u64, 2_000, 10_000] {
+        let engine = match PjrtEngine::cpu() {
+            Ok(mut e) => match e.load_dir(std::path::Path::new("artifacts")) {
+                Ok(_) => Some(e),
+                Err(err) => {
+                    eprintln!("[coordinator] artifacts unavailable ({err}); skipping PJRT rows");
+                    None
+                }
+            },
+            Err(err) => {
+                eprintln!("[coordinator] PJRT unavailable ({err}); skipping");
+                None
+            }
+        };
+        let Some(engine) = engine else { break };
+        let coord = Coordinator::start(
+            CoordinatorConfig { max_delay_us: delay_us, ..Default::default() },
+            Some(engine),
+        );
+        let (secs, m) = run_trace(&coord, &trace);
+        report.push(vec![
+            format!("pjrt_delay{delay_us}us"),
+            format!("{:.0}", n as f64 / secs),
+            format!("{:.0}", m.mean_latency_us),
+            m.p50_latency_us.to_string(),
+            m.p99_latency_us.to_string(),
+            m.pjrt_batches.to_string(),
+            m.padded_slots.to_string(),
+        ]);
+        coord.shutdown();
+    }
+
+    report.finish("coordinator_serving.csv");
+}

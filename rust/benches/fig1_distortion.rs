@@ -1,0 +1,69 @@
+//! Bench target regenerating **Figure 1**: distortion ratio vs `k` for the
+//! small / medium / high-order regimes.
+//!
+//! ```text
+//! cargo bench --bench fig1_distortion                  # all three panels
+//! cargo bench --bench fig1_distortion -- --case high --trials 100
+//! cargo bench --bench fig1_distortion -- --quick
+//! ```
+//!
+//! Writes `results/fig1_<case>.csv` and prints the paper-shaped tables.
+//! Expected shape (paper §6): all maps ≈ Gaussian in the small case; rank
+//! matters in the medium case with CP(100) still poor; CP fails outright
+//! in the high case while TT(5,10) embeds well.
+
+use tensorized_rp::data::inputs::Regime;
+use tensorized_rp::experiments::fig1;
+use tensorized_rp::util::bench::BenchReport;
+use tensorized_rp::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench")).unwrap();
+    let quick = args.flag("quick");
+    let cases: Vec<Regime> = match args.get("case") {
+        Some(c) => vec![Regime::parse(c).expect("bad --case")],
+        None => vec![Regime::Small, Regime::Medium, Regime::High],
+    };
+    for case in cases {
+        let mut cfg = if quick {
+            fig1::Fig1Config::quick(case)
+        } else {
+            fig1::Fig1Config::paper(case)
+        };
+        if let Some(t) = args.get("trials") {
+            cfg.trials = t.parse().expect("bad --trials");
+        }
+        if let Some(s) = args.get("seed") {
+            cfg.seed = s.parse().expect("bad --seed");
+        }
+        eprintln!(
+            "[fig1] case={} trials={} ks={:?}",
+            case.name(),
+            cfg.trials,
+            cfg.ks
+        );
+        let rows = fig1::run(&cfg);
+        let mut report = BenchReport::new(
+            &format!("Figure 1 ({}): mean distortion ratio vs k", case.name()),
+            &["map", "k", "mean_distortion", "std"],
+        );
+        for r in &rows {
+            report.push(vec![
+                r.map.clone(),
+                r.k.to_string(),
+                format!("{:.4}", r.mean),
+                format!("{:.4}", r.std),
+            ]);
+        }
+        report.finish(&format!("fig1_{}.csv", case.name()));
+
+        // Paper-shape sanity line: who wins at the largest k.
+        let kmax = *cfg.ks.iter().max().unwrap();
+        let best = rows
+            .iter()
+            .filter(|r| r.k == kmax)
+            .min_by(|a, b| a.mean.partial_cmp(&b.mean).unwrap())
+            .unwrap();
+        println!("[fig1:{}] best at k={kmax}: {} ({:.4})", case.name(), best.map, best.mean);
+    }
+}

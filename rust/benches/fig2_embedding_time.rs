@@ -1,0 +1,51 @@
+//! Bench target regenerating **Figure 2**: embedding time vs `k` for the
+//! medium-order case, with TT-format (top) and CP-format (bottom) inputs.
+//!
+//! ```text
+//! cargo bench --bench fig2_embedding_time [-- --quick]
+//! ```
+//!
+//! Expected shape: `f_TT` fastest on TT inputs, `f_CP` fastest on CP
+//! inputs, `f_TT` always faster than very sparse RP.
+
+use tensorized_rp::experiments::fig2;
+use tensorized_rp::util::bench::BenchReport;
+use tensorized_rp::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench")).unwrap();
+    let cfg = if args.flag("quick") {
+        fig2::Fig2Config::quick()
+    } else {
+        fig2::Fig2Config::paper()
+    };
+    eprintln!("[fig2] ks={:?} reps={}", cfg.ks, cfg.reps);
+    let rows = fig2::run(&cfg);
+    for panel in ["tt", "cp"] {
+        let mut report = BenchReport::new(
+            &format!("Figure 2 ({panel}-format input): embedding time vs k"),
+            &["map", "k", "median_secs"],
+        );
+        for r in rows.iter().filter(|r| r.input_format == panel) {
+            report.push(vec![
+                r.map.clone(),
+                r.k.to_string(),
+                format!("{:.3e}", r.secs),
+            ]);
+        }
+        report.finish(&format!("fig2_time_{panel}_input.csv"));
+    }
+    // Shape check: per panel, which map is fastest at the largest k.
+    let kmax = *cfg.ks.iter().max().unwrap();
+    for panel in ["tt", "cp"] {
+        let fastest = rows
+            .iter()
+            .filter(|r| r.input_format == panel && r.k == kmax)
+            .min_by(|a, b| a.secs.partial_cmp(&b.secs).unwrap())
+            .unwrap();
+        println!(
+            "[fig2:{panel}-input] fastest at k={kmax}: {} ({:.3e}s)",
+            fastest.map, fastest.secs
+        );
+    }
+}

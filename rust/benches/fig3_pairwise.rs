@@ -1,0 +1,58 @@
+//! Bench target regenerating **Figure 3** (Appendix B.1): pairwise
+//! distance preservation on image data, tensorized vs Gaussian RP.
+//!
+//! ```text
+//! cargo bench --bench fig3_pairwise [-- --quick --trials T --cifar PATH]
+//! ```
+//!
+//! Uses real CIFAR-10 binary batches when `--cifar` points at one (or the
+//! default path exists); otherwise the synthetic natural-image substitute
+//! of DESIGN.md §5. Expected shape: tensorized maps track Gaussian RP
+//! closely, with higher ranks tightening the std.
+
+use tensorized_rp::experiments::fig3;
+use tensorized_rp::util::bench::BenchReport;
+use tensorized_rp::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench")).unwrap();
+    let mut cfg = if args.flag("quick") {
+        fig3::Fig3Config::quick()
+    } else {
+        fig3::Fig3Config::paper()
+    };
+    if let Some(t) = args.get("trials") {
+        cfg.trials = t.parse().expect("bad --trials");
+    }
+    if let Some(p) = args.get("cifar") {
+        cfg.cifar_path = Some(p.into());
+    }
+    eprintln!(
+        "[fig3] images={} trials={} ks={:?}",
+        cfg.n_images, cfg.trials, cfg.ks
+    );
+    let rows = fig3::run(&cfg);
+    let source = rows.first().map(|r| r.source.clone()).unwrap_or_default();
+    let mut report = BenchReport::new(
+        &format!("Figure 3: pairwise distance ratio on {source} images"),
+        &["panel", "map", "k", "mean_ratio", "std"],
+    );
+    for r in &rows {
+        report.push(vec![
+            r.panel.clone(),
+            r.map.clone(),
+            r.k.to_string(),
+            format!("{:.4}", r.mean_ratio),
+            format!("{:.4}", r.std_ratio),
+        ]);
+    }
+    report.finish("fig3_pairwise.csv");
+    // Shape check: at the largest k every map's ratio is near 1.
+    let kmax = *cfg.ks.iter().max().unwrap();
+    for r in rows.iter().filter(|r| r.k == kmax) {
+        println!(
+            "[fig3:{}] {} ratio at k={kmax}: {:.4} ± {:.4}",
+            r.panel, r.map, r.mean_ratio, r.std_ratio
+        );
+    }
+}

@@ -1,0 +1,53 @@
+//! Bench target regenerating **Figure 4** (Appendix B.2): embedding time
+//! vs input dimension `d^N` for `d=3, N ∈ {8,11,12,13}`.
+//!
+//! ```text
+//! cargo bench --bench fig4_scaling [-- --quick]
+//! ```
+//!
+//! Expected shape: tensorized maps scale ~linearly in N (so ~log in d^N);
+//! the Gaussian series disappears once `k·d^N` is unmaterializable; TT is
+//! faster than classical RPs on both panels at large `d^N`.
+
+use tensorized_rp::experiments::fig4;
+use tensorized_rp::util::bench::BenchReport;
+use tensorized_rp::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench")).unwrap();
+    let cfg = if args.flag("quick") {
+        fig4::Fig4Config::quick()
+    } else {
+        fig4::Fig4Config::paper()
+    };
+    eprintln!("[fig4] orders={:?} k={} reps={}", cfg.orders, cfg.k, cfg.reps);
+    let rows = fig4::run(&cfg);
+    for panel in ["tt", "cp"] {
+        let mut report = BenchReport::new(
+            &format!("Figure 4 ({panel}-format input): time vs d^N"),
+            &["map", "order", "numel", "median_secs"],
+        );
+        for r in rows.iter().filter(|r| r.input_format == panel) {
+            report.push(vec![
+                r.map.clone(),
+                r.order.to_string(),
+                format!("{:.3e}", r.numel),
+                format!("{:.3e}", r.secs),
+            ]);
+        }
+        report.finish(&format!("fig4_scaling_{panel}_input.csv"));
+    }
+    let nmax = *cfg.orders.iter().max().unwrap();
+    for panel in ["tt", "cp"] {
+        if let Some(fastest) = rows
+            .iter()
+            .filter(|r| r.input_format == panel && r.order == nmax)
+            .min_by(|a, b| a.secs.partial_cmp(&b.secs).unwrap())
+        {
+            println!(
+                "[fig4:{panel}-input] fastest at N={nmax}: {} ({:.3e}s)",
+                fastest.map, fastest.secs
+            );
+        }
+    }
+}

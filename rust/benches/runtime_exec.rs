@@ -1,0 +1,77 @@
+//! Runtime-layer bench: per-batch execution time of each compiled
+//! artifact vs the native engine on identical inputs — the L2/L3 numbers
+//! behind EXPERIMENTS.md §Perf (including the pallas-interpret vs fused
+//! artifact comparison that drives the router's preference).
+//!
+//! ```text
+//! cargo bench --bench runtime_exec
+//! ```
+
+use tensorized_rp::projections::Projection;
+use tensorized_rp::rng::Rng;
+use tensorized_rp::runtime::{pack, PjrtEngine};
+use tensorized_rp::tensor::TtTensor;
+use tensorized_rp::util::bench::BenchReport;
+
+fn main() {
+    let mut engine = match PjrtEngine::cpu() {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("[runtime_exec] PJRT unavailable: {e}");
+            return;
+        }
+    };
+    if let Err(e) = engine.load_dir(std::path::Path::new("artifacts")) {
+        eprintln!("[runtime_exec] artifacts unavailable ({e}); run `make artifacts`");
+        return;
+    }
+
+    let spec = engine.spec("tt_rp_medium").expect("tt_rp_medium").clone();
+    let (n, d, r, rt) = spec.tt_meta().unwrap();
+    let dims = vec![d; n];
+    let mut rng = Rng::seed_from(1);
+    let f = tensorized_rp::projections::TtProjection::new(&dims, r, spec.k, &mut rng);
+    let (gf, gm, gl) = pack::pack_tt_projection(&f, n, d, r).unwrap();
+    let xs: Vec<TtTensor> = (0..spec.batch)
+        .map(|_| TtTensor::random_unit(&dims, rt, &mut rng))
+        .collect();
+    let xrefs: Vec<&TtTensor> = xs.iter().collect();
+    let (xf, xm, xl) = pack::pack_tt_inputs(&xrefs, spec.batch, n, d, rt).unwrap();
+    let inputs = vec![gf, gm, gl, xf, xm, xl];
+
+    let mut report = BenchReport::new(
+        "Runtime: ms per batch of 8 medium-order TT projections (k=128, R=5)",
+        &["engine", "ms_per_batch", "ms_per_request"],
+    );
+    let reps = 20;
+    for name in ["tt_rp_medium", "tt_rp_medium_pallas"] {
+        engine.execute(name, &inputs).unwrap(); // warmup/compile caches
+        let t = std::time::Instant::now();
+        for _ in 0..reps {
+            engine.execute(name, &inputs).unwrap();
+        }
+        let ms = t.elapsed().as_secs_f64() * 1e3 / reps as f64;
+        report.push(vec![
+            format!("pjrt:{name}"),
+            format!("{ms:.3}"),
+            format!("{:.3}", ms / spec.batch as f64),
+        ]);
+    }
+    // Native engine, same 8 inputs.
+    for x in &xs {
+        std::hint::black_box(f.project_tt(x));
+    }
+    let t = std::time::Instant::now();
+    for _ in 0..reps {
+        for x in &xs {
+            std::hint::black_box(f.project_tt(x));
+        }
+    }
+    let ms = t.elapsed().as_secs_f64() * 1e3 / reps as f64;
+    report.push(vec![
+        "native".into(),
+        format!("{ms:.3}"),
+        format!("{:.3}", ms / spec.batch as f64),
+    ]);
+    report.finish("runtime_exec.csv");
+}

@@ -1,0 +1,83 @@
+//! Application-level configuration shared by the CLI, benches and
+//! examples: directory layout and common experiment knobs, parsed from
+//! `util::cli::Args`.
+
+use crate::util::cli::Args;
+use std::path::PathBuf;
+
+/// Global configuration of a `trp` invocation.
+#[derive(Debug, Clone)]
+pub struct AppConfig {
+    /// Directory holding `manifest.json` + `*.hlo.txt`.
+    pub artifacts_dir: PathBuf,
+    /// Output directory for CSV results.
+    pub results_dir: PathBuf,
+    /// Master seed.
+    pub seed: u64,
+    /// Trials override for experiment sweeps (None = per-experiment default).
+    pub trials: Option<usize>,
+    /// Thread override.
+    pub threads: Option<usize>,
+    /// Quick mode (reduced sweeps).
+    pub quick: bool,
+}
+
+impl AppConfig {
+    /// Parse the shared options out of `args`.
+    pub fn from_args(args: &Args) -> Result<Self, String> {
+        Ok(Self {
+            artifacts_dir: PathBuf::from(args.get_or("artifacts", "artifacts")),
+            results_dir: PathBuf::from(args.get_or("out", "results")),
+            seed: args.get_parsed_or("seed", 0xC0FFEEu64)?,
+            trials: match args.get("trials") {
+                Some(v) => Some(v.parse().map_err(|_| format!("bad --trials {v}"))?),
+                None => None,
+            },
+            threads: match args.get("threads") {
+                Some(v) => Some(v.parse().map_err(|_| format!("bad --threads {v}"))?),
+                None => None,
+            },
+            quick: args.flag("quick"),
+        })
+    }
+
+    /// Effective thread count.
+    pub fn threads(&self) -> usize {
+        self.threads
+            .unwrap_or_else(crate::experiments::default_threads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> AppConfig {
+        let args = Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap();
+        AppConfig::from_args(&args).unwrap()
+    }
+
+    #[test]
+    fn defaults() {
+        let c = parse("");
+        assert_eq!(c.artifacts_dir, PathBuf::from("artifacts"));
+        assert_eq!(c.results_dir, PathBuf::from("results"));
+        assert!(!c.quick);
+        assert!(c.trials.is_none());
+    }
+
+    #[test]
+    fn overrides() {
+        let c = parse("--artifacts /tmp/a --trials 7 --quick --seed 9");
+        assert_eq!(c.artifacts_dir, PathBuf::from("/tmp/a"));
+        assert_eq!(c.trials, Some(7));
+        assert!(c.quick);
+        assert_eq!(c.seed, 9);
+    }
+
+    #[test]
+    fn bad_trials_is_an_error() {
+        let args = Args::parse(["--trials".to_string(), "x".to_string()]).unwrap();
+        assert!(AppConfig::from_args(&args).is_err());
+    }
+}

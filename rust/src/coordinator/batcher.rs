@@ -1,0 +1,143 @@
+//! Dynamic batcher: accumulate requests for one artifact signature until
+//! the compiled batch size is reached or the oldest request's deadline
+//! expires — the classic serving trade-off between padding waste and
+//! queueing latency.
+//!
+//! Time is passed in explicitly (microsecond ticks) so the policy is
+//! deterministic and property-testable without sleeping.
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Flush as soon as this many items are pending (the artifact's
+    /// compiled batch size `B`).
+    pub max_batch: usize,
+    /// Flush when the oldest pending item has waited this long (µs).
+    pub max_delay_us: u64,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self { max_batch: 8, max_delay_us: 2_000 }
+    }
+}
+
+/// A size-or-deadline batcher over items of type `T`.
+#[derive(Debug)]
+pub struct Batcher<T> {
+    cfg: BatcherConfig,
+    pending: Vec<T>,
+    /// Arrival tick of the oldest pending item.
+    oldest_us: Option<u64>,
+}
+
+impl<T> Batcher<T> {
+    /// New empty batcher.
+    pub fn new(cfg: BatcherConfig) -> Self {
+        assert!(cfg.max_batch >= 1);
+        Self { cfg, pending: Vec::with_capacity(cfg.max_batch), oldest_us: None }
+    }
+
+    /// Number of pending items.
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// True when nothing is pending.
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Add an item at time `now_us`; returns a full batch if the size
+    /// threshold is reached.
+    pub fn push(&mut self, item: T, now_us: u64) -> Option<Vec<T>> {
+        if self.pending.is_empty() {
+            self.oldest_us = Some(now_us);
+        }
+        self.pending.push(item);
+        if self.pending.len() >= self.cfg.max_batch {
+            return self.flush();
+        }
+        None
+    }
+
+    /// Flush if the oldest item's deadline has expired.
+    pub fn poll(&mut self, now_us: u64) -> Option<Vec<T>> {
+        match self.oldest_us {
+            Some(t0) if now_us.saturating_sub(t0) >= self.cfg.max_delay_us => self.flush(),
+            _ => None,
+        }
+    }
+
+    /// Tick at which the current batch must flush (for dispatcher sleeps).
+    pub fn deadline_us(&self) -> Option<u64> {
+        self.oldest_us.map(|t0| t0 + self.cfg.max_delay_us)
+    }
+
+    /// Unconditionally take the pending batch.
+    pub fn flush(&mut self) -> Option<Vec<T>> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        self.oldest_us = None;
+        Some(std::mem::take(&mut self.pending))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(max_batch: usize, max_delay_us: u64) -> BatcherConfig {
+        BatcherConfig { max_batch, max_delay_us }
+    }
+
+    #[test]
+    fn flushes_on_size() {
+        let mut b = Batcher::new(cfg(3, 1_000));
+        assert!(b.push(1, 0).is_none());
+        assert!(b.push(2, 10).is_none());
+        let batch = b.push(3, 20).expect("full batch");
+        assert_eq!(batch, vec![1, 2, 3]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let mut b = Batcher::new(cfg(10, 500));
+        b.push("a", 100);
+        assert!(b.poll(400).is_none(), "deadline not reached");
+        let batch = b.poll(600).expect("deadline flush");
+        assert_eq!(batch, vec!["a"]);
+        assert!(b.poll(10_000).is_none(), "nothing left");
+    }
+
+    #[test]
+    fn deadline_tracks_oldest_item() {
+        let mut b = Batcher::new(cfg(10, 500));
+        b.push(1, 100);
+        b.push(2, 450);
+        assert_eq!(b.deadline_us(), Some(600));
+        let batch = b.poll(601).unwrap();
+        assert_eq!(batch.len(), 2);
+        // After a flush the next push restarts the clock.
+        b.push(3, 700);
+        assert_eq!(b.deadline_us(), Some(1_200));
+    }
+
+    #[test]
+    fn manual_flush_drains() {
+        let mut b = Batcher::new(cfg(10, 500));
+        assert!(b.flush().is_none());
+        b.push(1, 0);
+        b.push(2, 1);
+        assert_eq!(b.flush().unwrap(), vec![1, 2]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn batch_size_one_flushes_immediately() {
+        let mut b = Batcher::new(cfg(1, 1_000_000));
+        assert_eq!(b.push(42, 0).unwrap(), vec![42]);
+    }
+}

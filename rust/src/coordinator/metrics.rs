@@ -1,0 +1,186 @@
+//! Service metrics: lock-free counters plus a log-bucketed latency
+//! histogram (atomic, so the worker pool records without contention).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of log₂ latency buckets (1µs … ~17min).
+const BUCKETS: usize = 30;
+
+/// Log₂-bucketed latency histogram over microseconds.
+#[derive(Debug, Default)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl LatencyHistogram {
+    /// New empty histogram.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one latency observation.
+    pub fn record(&self, us: u64) {
+        let b = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Observation count.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in µs.
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    /// Approximate quantile (upper edge of the bucket containing it).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = (q * n as f64).ceil() as u64;
+        let mut seen = 0;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            seen += bucket.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (b + 1); // upper edge
+            }
+        }
+        1u64 << BUCKETS
+    }
+}
+
+/// All service metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Requests accepted into the queue.
+    pub submitted: AtomicU64,
+    /// Requests completed successfully.
+    pub completed: AtomicU64,
+    /// Requests that failed (engine error).
+    pub failed: AtomicU64,
+    /// PJRT batches executed.
+    pub pjrt_batches: AtomicU64,
+    /// Requests served by the native path.
+    pub native_requests: AtomicU64,
+    /// Requests served by the PJRT path.
+    pub pjrt_requests: AtomicU64,
+    /// Padding slots wasted across all PJRT batches.
+    pub padded_slots: AtomicU64,
+    /// End-to-end latency (submit → response).
+    pub e2e_latency: LatencyHistogram,
+}
+
+/// A point-in-time copy of the metrics for reporting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricsSnapshot {
+    /// See [`Metrics::submitted`].
+    pub submitted: u64,
+    /// See [`Metrics::completed`].
+    pub completed: u64,
+    /// See [`Metrics::failed`].
+    pub failed: u64,
+    /// See [`Metrics::pjrt_batches`].
+    pub pjrt_batches: u64,
+    /// See [`Metrics::native_requests`].
+    pub native_requests: u64,
+    /// See [`Metrics::pjrt_requests`].
+    pub pjrt_requests: u64,
+    /// See [`Metrics::padded_slots`].
+    pub padded_slots: u64,
+    /// Mean end-to-end latency (µs).
+    pub mean_latency_us: f64,
+    /// p50 end-to-end latency (µs, bucket upper edge).
+    pub p50_latency_us: u64,
+    /// p99 end-to-end latency (µs, bucket upper edge).
+    pub p99_latency_us: u64,
+}
+
+impl Metrics {
+    /// New zeroed metrics.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Take a snapshot.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            pjrt_batches: self.pjrt_batches.load(Ordering::Relaxed),
+            native_requests: self.native_requests.load(Ordering::Relaxed),
+            pjrt_requests: self.pjrt_requests.load(Ordering::Relaxed),
+            padded_slots: self.padded_slots.load(Ordering::Relaxed),
+            mean_latency_us: self.e2e_latency.mean_us(),
+            p50_latency_us: self.e2e_latency.quantile_us(0.50),
+            p99_latency_us: self.e2e_latency.quantile_us(0.99),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_records_and_counts() {
+        let h = LatencyHistogram::new();
+        for us in [1u64, 10, 100, 1_000, 10_000] {
+            h.record(us);
+        }
+        assert_eq!(h.count(), 5);
+        assert!((h.mean_us() - 11_111.0 / 5.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn quantiles_are_monotone_and_bracket() {
+        let h = LatencyHistogram::new();
+        for i in 0..1000u64 {
+            h.record(i + 1);
+        }
+        let p50 = h.quantile_us(0.5);
+        let p99 = h.quantile_us(0.99);
+        assert!(p50 <= p99);
+        // p50 of 1..=1000 is ~500; bucket upper edge is 512.
+        assert_eq!(p50, 512);
+        assert_eq!(p99, 1024);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile_us(0.99), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_reflects_counters() {
+        let m = Metrics::new();
+        m.submitted.fetch_add(3, Ordering::Relaxed);
+        m.completed.fetch_add(2, Ordering::Relaxed);
+        m.e2e_latency.record(100);
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 3);
+        assert_eq!(s.completed, 2);
+        assert!(s.mean_latency_us > 0.0);
+    }
+
+    #[test]
+    fn huge_latency_clamps_to_last_bucket() {
+        let h = LatencyHistogram::new();
+        h.record(u64::MAX);
+        assert_eq!(h.count(), 1);
+        assert!(h.quantile_us(1.0) >= 1 << 29);
+    }
+}

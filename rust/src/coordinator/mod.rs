@@ -1,0 +1,40 @@
+//! L3 coordinator: the serving layer that makes the projection maps
+//! consumable as a compression service.
+//!
+//! Architecture (vLLM-router mold, scaled to this paper's workload):
+//!
+//! ```text
+//!  submit() ──▶ bounded queue ──▶ dispatcher thread
+//!                                   │ route on (format, dims, rank)
+//!                  ┌────────────────┴───────────────┐
+//!                  ▼                                ▼
+//!          native path                      PJRT path (per-artifact
+//!          (worker pool, any shape)         dynamic batcher: size B
+//!                  │                        or deadline, zero-padded)
+//!                  ▼                                ▼
+//!          projections::*                   runtime::PjrtEngine
+//!                  └────────────▶ responses ◀───────┘
+//! ```
+//!
+//! Invariants (property-tested in `rust/tests/coordinator_props.rs`):
+//! every submitted request gets exactly one response; responses carry the
+//! request's id; batch padding never leaks between requests; the registry
+//! returns the identical map for identical keys (seed determinism);
+//! bounded queues provide backpressure instead of unbounded growth.
+
+mod batcher;
+mod metrics;
+pub mod net;
+mod request;
+mod router;
+mod server;
+mod state;
+pub mod wire;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use metrics::{LatencyHistogram, Metrics, MetricsSnapshot};
+pub use net::{NetClient, NetServer};
+pub use request::{EnginePath, ProjectRequest, ProjectResponse};
+pub use router::{RouteKey, RouteTarget, Router};
+pub use server::{Coordinator, CoordinatorConfig};
+pub use state::{MapKey, MapKind, ProjectionRegistry};

@@ -1,0 +1,264 @@
+//! TCP front-end: newline-delimited JSON requests over plain sockets
+//! (std::net — no async runtime offline, and the workload is compute-
+//! bound so blocking I/O threads are the right tool).
+//!
+//! One reader thread per connection; responses are written by the worker
+//! completion path through a per-connection writer lock, so pipelined
+//! requests from one client overlap in the batcher exactly like requests
+//! from different clients.
+
+use super::request::ProjectRequest;
+use super::server::Coordinator;
+use super::wire;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Handle to a running TCP server.
+pub struct NetServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+    served: Arc<AtomicU64>,
+}
+
+impl NetServer {
+    /// Start serving `coordinator` on `addr` (e.g. `"127.0.0.1:0"` for an
+    /// ephemeral port). The coordinator must outlive the server; it is
+    /// shared behind an `Arc`.
+    pub fn start(coordinator: Arc<Coordinator>, addr: &str) -> std::io::Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let served = Arc::new(AtomicU64::new(0));
+        let accept_thread = {
+            let stop = Arc::clone(&stop);
+            let served = Arc::clone(&served);
+            std::thread::spawn(move || {
+                accept_loop(listener, coordinator, stop, served);
+            })
+        };
+        Ok(NetServer { addr: local, stop, accept_thread: Some(accept_thread), served })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Requests served so far.
+    pub fn served(&self) -> u64 {
+        self.served.load(Ordering::Relaxed)
+    }
+
+    /// Stop accepting and join the accept loop. Established connections
+    /// finish their in-flight requests.
+    pub fn shutdown(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    coordinator: Arc<Coordinator>,
+    stop: Arc<AtomicBool>,
+    served: Arc<AtomicU64>,
+) {
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let coordinator = Arc::clone(&coordinator);
+                let served = Arc::clone(&served);
+                std::thread::spawn(move || {
+                    let _ = handle_connection(stream, coordinator, served);
+                });
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    coordinator: Arc<Coordinator>,
+    served: Arc<AtomicU64>,
+) -> std::io::Result<()> {
+    stream.set_nonblocking(false)?;
+    let writer = Arc::new(Mutex::new(stream.try_clone()?));
+    let reader = BufReader::new(stream);
+    let mut reply_threads = Vec::new();
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match wire::decode_request(&line) {
+            Ok(req) => {
+                let id = req.id;
+                let rx = coordinator.submit(req);
+                let writer = Arc::clone(&writer);
+                let served = Arc::clone(&served);
+                // Reply asynchronously so the client can pipeline.
+                reply_threads.push(std::thread::spawn(move || {
+                    let result = rx
+                        .recv()
+                        .unwrap_or_else(|_| Err("coordinator dropped the request".into()));
+                    let out = wire::encode_response(&result, id);
+                    let mut w = writer.lock().unwrap();
+                    let _ = writeln!(w, "{out}");
+                    let _ = w.flush();
+                    served.fetch_add(1, Ordering::Relaxed);
+                }));
+            }
+            Err(e) => {
+                let mut w = writer.lock().unwrap();
+                let _ = writeln!(w, "{}", wire::encode_response(&Err(e), 0));
+                let _ = w.flush();
+            }
+        }
+    }
+    for t in reply_threads {
+        let _ = t.join();
+    }
+    Ok(())
+}
+
+/// Minimal blocking client for the wire protocol (used by tests, the
+/// `trp client` subcommand and the serving example).
+pub struct NetClient {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl NetClient {
+    /// Connect to a server.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> std::io::Result<NetClient> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(NetClient { writer: stream, reader })
+    }
+
+    /// Send one request (does not wait).
+    pub fn send(&mut self, req: &ProjectRequest) -> std::io::Result<()> {
+        writeln!(self.writer, "{}", wire::encode_request(req))?;
+        self.writer.flush()
+    }
+
+    /// Read the next response line.
+    pub fn recv(&mut self) -> std::io::Result<wire::WireResponse> {
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        wire::decode_response(line.trim_end())
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))
+    }
+
+    /// Send and wait for the matching response (single in-flight).
+    pub fn roundtrip(&mut self, req: &ProjectRequest) -> std::io::Result<wire::WireResponse> {
+        self.send(req)?;
+        self.recv()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CoordinatorConfig;
+    use crate::rng::Rng;
+    use crate::tensor::{AnyTensor, TtTensor};
+
+    fn start_server() -> (Arc<Coordinator>, NetServer) {
+        let coord = Arc::new(Coordinator::start(
+            CoordinatorConfig { default_k: 8, workers: 2, ..Default::default() },
+            None,
+        ));
+        let server = NetServer::start(Arc::clone(&coord), "127.0.0.1:0").unwrap();
+        (coord, server)
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let (_coord, server) = start_server();
+        let mut client = NetClient::connect(server.addr()).unwrap();
+        let mut rng = Rng::seed_from(1);
+        let x = TtTensor::random_unit(&[3; 4], 2, &mut rng);
+        let resp = client
+            .roundtrip(&ProjectRequest::new(5, AnyTensor::Tt(x)))
+            .unwrap();
+        assert_eq!(resp.id, 5);
+        assert_eq!(resp.embedding.unwrap().len(), 8);
+        assert!(resp.error.is_none());
+        server.shutdown();
+    }
+
+    #[test]
+    fn pipelined_requests_all_answered() {
+        let (_coord, server) = start_server();
+        let mut client = NetClient::connect(server.addr()).unwrap();
+        let mut rng = Rng::seed_from(2);
+        let n = 16;
+        for i in 0..n {
+            let x = TtTensor::random_unit(&[3; 4], 2, &mut rng);
+            client.send(&ProjectRequest::new(i, AnyTensor::Tt(x))).unwrap();
+        }
+        let mut ids: Vec<u64> = (0..n).map(|_| client.recv().unwrap().id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..n).collect::<Vec<u64>>());
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_line_yields_error_response() {
+        let (_coord, server) = start_server();
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        writeln!(w, "this is not json").unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = wire::decode_response(line.trim_end()).unwrap();
+        assert!(resp.error.is_some());
+        server.shutdown();
+    }
+
+    #[test]
+    fn multiple_clients_share_the_service() {
+        let (_coord, server) = start_server();
+        let addr = server.addr();
+        let handles: Vec<_> = (0..4u64)
+            .map(|c| {
+                std::thread::spawn(move || {
+                    let mut client = NetClient::connect(addr).unwrap();
+                    let mut rng = Rng::seed_from(c);
+                    let x = TtTensor::random_unit(&[3; 4], 2, &mut rng);
+                    let resp = client
+                        .roundtrip(&ProjectRequest::new(c, AnyTensor::Tt(x)))
+                        .unwrap();
+                    assert_eq!(resp.id, c);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(server.served(), 4);
+        server.shutdown();
+    }
+}

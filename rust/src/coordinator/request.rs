@@ -1,0 +1,74 @@
+//! Request/response types of the compression service.
+
+use crate::tensor::AnyTensor;
+
+/// Which execution path served a request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EnginePath {
+    /// Computed by the native Rust projection engine.
+    Native,
+    /// Computed by a compiled PJRT artifact (name attached).
+    Pjrt(String),
+}
+
+impl std::fmt::Display for EnginePath {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EnginePath::Native => write!(f, "native"),
+            EnginePath::Pjrt(a) => write!(f, "pjrt:{a}"),
+        }
+    }
+}
+
+/// A projection request: embed `payload` into `R^k` with the service's
+/// configured map for this payload signature.
+#[derive(Debug, Clone)]
+pub struct ProjectRequest {
+    /// Caller-assigned id, echoed in the response.
+    pub id: u64,
+    /// The tensor to embed, in any supported format.
+    pub payload: AnyTensor,
+}
+
+impl ProjectRequest {
+    /// Convenience constructor.
+    pub fn new(id: u64, payload: AnyTensor) -> Self {
+        Self { id, payload }
+    }
+}
+
+/// A completed projection.
+#[derive(Debug, Clone)]
+pub struct ProjectResponse {
+    /// Echo of [`ProjectRequest::id`].
+    pub id: u64,
+    /// The embedding `f(X) ∈ R^k`.
+    pub embedding: Vec<f64>,
+    /// Which engine computed it.
+    pub path: EnginePath,
+    /// Time spent queued + batched before execution (microseconds).
+    pub queued_us: u64,
+    /// Execution time of the (possibly batched) computation (microseconds).
+    pub exec_us: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::tensor::{DenseTensor, Format};
+
+    #[test]
+    fn request_carries_payload_format() {
+        let mut rng = Rng::seed_from(1);
+        let r = ProjectRequest::new(7, AnyTensor::Dense(DenseTensor::random(&[2, 2], &mut rng)));
+        assert_eq!(r.id, 7);
+        assert_eq!(r.payload.format(), Format::Dense);
+    }
+
+    #[test]
+    fn engine_path_display() {
+        assert_eq!(EnginePath::Native.to_string(), "native");
+        assert_eq!(EnginePath::Pjrt("tt_rp_medium".into()).to_string(), "pjrt:tt_rp_medium");
+    }
+}

@@ -1,0 +1,236 @@
+//! Request routing: payload signature → execution target.
+//!
+//! A request is routed to a compiled PJRT artifact when its signature
+//! (format, mode sizes, input rank) matches the artifact's compiled
+//! shapes exactly; anything else falls back to the native engine, which
+//! handles arbitrary shapes. Routing is pure and total: every request
+//! gets exactly one target.
+
+use crate::runtime::{ArtifactKind, ArtifactSpec};
+use crate::tensor::{AnyTensor, Format};
+use std::collections::HashMap;
+
+/// The shape signature a request is routed on.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct RouteKey {
+    /// Payload format.
+    pub format: Format,
+    /// Mode sizes.
+    pub dims: Vec<usize>,
+    /// Input rank (TT: uniform internal rank; CP: rank; dense: none).
+    pub input_rank: Option<usize>,
+}
+
+impl RouteKey {
+    /// Extract the signature of a payload.
+    pub fn of(payload: &AnyTensor) -> RouteKey {
+        match payload {
+            AnyTensor::Dense(t) => RouteKey {
+                format: Format::Dense,
+                dims: t.dims().to_vec(),
+                input_rank: None,
+            },
+            AnyTensor::Tt(t) => {
+                // Uniform internal rank or None (non-uniform TT tensors
+                // only run on the native path).
+                let inner = &t.ranks()[1..t.ranks().len() - 1];
+                let uniform = if inner.is_empty() {
+                    Some(1)
+                } else if inner.iter().all(|&r| r == inner[0]) {
+                    Some(inner[0])
+                } else {
+                    None
+                };
+                RouteKey {
+                    format: Format::Tt,
+                    dims: t.dims().to_vec(),
+                    input_rank: uniform,
+                }
+            }
+            AnyTensor::Cp(t) => RouteKey {
+                format: Format::Cp,
+                dims: t.dims().to_vec(),
+                input_rank: Some(t.rank()),
+            },
+        }
+    }
+}
+
+/// Where a request executes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RouteTarget {
+    /// Native Rust engine (any shape).
+    Native,
+    /// Named compiled artifact.
+    Pjrt(String),
+}
+
+/// The routing table.
+#[derive(Debug, Default)]
+pub struct Router {
+    table: HashMap<RouteKey, String>,
+}
+
+impl Router {
+    /// Empty router: everything goes native.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register the artifacts a loaded engine exposes. Later registrations
+    /// win (so a pallas-path artifact can shadow its reference twin if
+    /// registered second).
+    pub fn register_artifacts<'a>(&mut self, specs: impl IntoIterator<Item = &'a ArtifactSpec>) {
+        for spec in specs {
+            let key = match spec.kind {
+                ArtifactKind::Tt => RouteKey {
+                    format: Format::Tt,
+                    dims: spec.input_dims().expect("tt artifact dims"),
+                    input_rank: spec.input_rank,
+                },
+                ArtifactKind::Cp => RouteKey {
+                    format: Format::Cp,
+                    dims: spec.input_dims().expect("cp artifact dims"),
+                    input_rank: spec.input_rank,
+                },
+                ArtifactKind::Dense => {
+                    // Dense artifacts are keyed on the vectorized length;
+                    // the canonical dense signature uses a single mode.
+                    RouteKey {
+                        format: Format::Dense,
+                        dims: vec![spec.input_dim.expect("dense artifact dim")],
+                        input_rank: None,
+                    }
+                }
+            };
+            self.table.insert(key, spec.name.clone());
+        }
+    }
+
+    /// Number of registered routes.
+    pub fn len(&self) -> usize {
+        self.table.len()
+    }
+
+    /// True when no artifact routes exist.
+    pub fn is_empty(&self) -> bool {
+        self.table.is_empty()
+    }
+
+    /// Route a payload. Dense payloads are matched on their vectorized
+    /// length so callers don't need to pre-flatten.
+    pub fn route(&self, payload: &AnyTensor) -> RouteTarget {
+        let mut key = RouteKey::of(payload);
+        if key.format == Format::Dense {
+            key.dims = vec![key.dims.iter().product()];
+        }
+        match self.table.get(&key) {
+            Some(name) => RouteTarget::Pjrt(name.clone()),
+            None => RouteTarget::Native,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::tensor::{CpTensor, DenseTensor, TtTensor};
+
+    fn tt_spec() -> ArtifactSpec {
+        ArtifactSpec {
+            name: "tt_rp_tiny".into(),
+            kind: ArtifactKind::Tt,
+            file: "tt_rp_tiny.hlo.txt".into(),
+            k: 4,
+            batch: 2,
+            scale: 0.5,
+            use_pallas: false,
+            params: vec![],
+            output_shape: vec![2, 4],
+            n_modes: Some(4),
+            dim: Some(3),
+            rank: Some(2),
+            input_rank: Some(2),
+            input_dim: None,
+        }
+    }
+
+    #[test]
+    fn routes_matching_tt_payload_to_artifact() {
+        let mut router = Router::new();
+        router.register_artifacts([&tt_spec()]);
+        let mut rng = Rng::seed_from(1);
+        let x = TtTensor::random(&[3; 4], 2, &mut rng);
+        assert_eq!(
+            router.route(&AnyTensor::Tt(x)),
+            RouteTarget::Pjrt("tt_rp_tiny".into())
+        );
+    }
+
+    #[test]
+    fn mismatched_rank_falls_back_to_native() {
+        let mut router = Router::new();
+        router.register_artifacts([&tt_spec()]);
+        let mut rng = Rng::seed_from(2);
+        let x = TtTensor::random(&[3; 4], 5, &mut rng); // rank 5 != 2
+        assert_eq!(router.route(&AnyTensor::Tt(x)), RouteTarget::Native);
+        let y = TtTensor::random(&[3; 5], 2, &mut rng); // order 5 != 4
+        assert_eq!(router.route(&AnyTensor::Tt(y)), RouteTarget::Native);
+    }
+
+    #[test]
+    fn cp_payload_does_not_match_tt_artifact() {
+        let mut router = Router::new();
+        router.register_artifacts([&tt_spec()]);
+        let mut rng = Rng::seed_from(3);
+        let x = CpTensor::random(&[3; 4], 2, &mut rng);
+        assert_eq!(router.route(&AnyTensor::Cp(x)), RouteTarget::Native);
+    }
+
+    #[test]
+    fn dense_matches_on_vectorized_length() {
+        let mut spec = tt_spec();
+        spec.name = "gauss_tiny".into();
+        spec.kind = ArtifactKind::Dense;
+        spec.n_modes = None;
+        spec.dim = None;
+        spec.rank = None;
+        spec.input_rank = None;
+        spec.input_dim = Some(36);
+        let mut router = Router::new();
+        router.register_artifacts([&spec]);
+        let mut rng = Rng::seed_from(4);
+        // 6×6 = 36 → matches even though the payload is 2-mode.
+        let x = DenseTensor::random(&[6, 6], &mut rng);
+        assert_eq!(
+            router.route(&AnyTensor::Dense(x)),
+            RouteTarget::Pjrt("gauss_tiny".into())
+        );
+        let y = DenseTensor::random(&[5, 5], &mut rng);
+        assert_eq!(router.route(&AnyTensor::Dense(y)), RouteTarget::Native);
+    }
+
+    #[test]
+    fn empty_router_is_all_native() {
+        let router = Router::new();
+        assert!(router.is_empty());
+        let mut rng = Rng::seed_from(5);
+        let x = TtTensor::random(&[3; 4], 2, &mut rng);
+        assert_eq!(router.route(&AnyTensor::Tt(x)), RouteTarget::Native);
+    }
+
+    #[test]
+    fn non_uniform_tt_rank_goes_native() {
+        let mut router = Router::new();
+        router.register_artifacts([&tt_spec()]);
+        // Build a TT tensor with non-uniform ranks [1, 2, 3, 2, 1].
+        let dims = [3usize; 4];
+        let ranks = [1usize, 2, 3, 2, 1];
+        let cores: Vec<Vec<f64>> = (0..4)
+            .map(|n| vec![0.5; ranks[n] * dims[n] * ranks[n + 1]])
+            .collect();
+        let x = TtTensor::from_cores(&dims, &ranks, cores);
+        assert_eq!(router.route(&AnyTensor::Tt(x)), RouteTarget::Native);
+    }
+}

@@ -1,0 +1,497 @@
+//! The coordinator server: bounded ingress queue → dispatcher thread →
+//! (native worker pool | per-artifact dynamic batchers → PJRT engine).
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::metrics::Metrics;
+use super::request::{EnginePath, ProjectRequest, ProjectResponse};
+use super::router::{RouteTarget, Router};
+use super::state::{MapKey, MapKind, PackedParams, ProjectionRegistry};
+use crate::runtime::{pack, ArtifactKind, PjrtEngine};
+use crate::tensor::AnyTensor;
+use crate::util::threadpool::ThreadPool;
+use std::collections::HashMap;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Worker threads executing projections.
+    pub workers: usize,
+    /// Ingress queue capacity (backpressure bound).
+    pub queue_cap: usize,
+    /// Dynamic-batcher deadline (µs).
+    pub max_delay_us: u64,
+    /// Master seed for the projection registry.
+    pub master_seed: u64,
+    /// Map policy for native TT-format requests: TT rank.
+    pub default_tt_rank: usize,
+    /// Map policy for native CP-format requests: CP rank.
+    pub default_cp_rank: usize,
+    /// Embedding dimension for native-routed requests.
+    pub default_k: usize,
+    /// Dense inputs above this size use very sparse RP instead of Gaussian.
+    pub dense_gaussian_limit: usize,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            queue_cap: 1024,
+            max_delay_us: 2_000,
+            master_seed: 0xC0FFEE,
+            default_tt_rank: 5,
+            default_cp_rank: 25,
+            default_k: 64,
+            dense_gaussian_limit: 1 << 20,
+        }
+    }
+}
+
+/// Reply type: the response or a failure message.
+pub type Reply = Result<ProjectResponse, String>;
+
+struct Envelope {
+    req: ProjectRequest,
+    submit_us: u64,
+    reply: SyncSender<Reply>,
+}
+
+struct Shared {
+    registry: ProjectionRegistry,
+    engine: Option<PjrtEngine>,
+    metrics: Metrics,
+    cfg: CoordinatorConfig,
+    epoch: Instant,
+}
+
+impl Shared {
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+}
+
+/// The coordinator service handle.
+pub struct Coordinator {
+    shared: Arc<Shared>,
+    tx: Option<SyncSender<Envelope>>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Start a coordinator. Pass a loaded [`PjrtEngine`] to enable the
+    /// compiled path; with `None` everything runs on the native engine.
+    pub fn start(cfg: CoordinatorConfig, engine: Option<PjrtEngine>) -> Self {
+        let shared = Arc::new(Shared {
+            registry: ProjectionRegistry::new(cfg.master_seed),
+            engine,
+            metrics: Metrics::new(),
+            cfg: cfg.clone(),
+            epoch: Instant::now(),
+        });
+        let (tx, rx) = sync_channel::<Envelope>(cfg.queue_cap);
+        let dispatcher = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || dispatcher_loop(shared, rx))
+        };
+        Self { shared, tx: Some(tx), dispatcher: Some(dispatcher) }
+    }
+
+    /// Submit a request; blocks if the ingress queue is full
+    /// (backpressure). Returns the channel the response arrives on.
+    pub fn submit(&self, req: ProjectRequest) -> Receiver<Reply> {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        let env = Envelope {
+            req,
+            submit_us: self.shared.now_us(),
+            reply: reply_tx,
+        };
+        self.shared.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .as_ref()
+            .expect("coordinator shut down")
+            .send(env)
+            .expect("dispatcher gone");
+        reply_rx
+    }
+
+    /// Submit and wait for the response.
+    pub fn project_blocking(&self, req: ProjectRequest) -> Reply {
+        self.submit(req)
+            .recv()
+            .unwrap_or_else(|_| Err("coordinator dropped the request".into()))
+    }
+
+    /// Metrics snapshot.
+    pub fn metrics(&self) -> super::MetricsSnapshot {
+        self.shared.metrics.snapshot()
+    }
+
+    /// Whether a PJRT engine is attached.
+    pub fn has_pjrt(&self) -> bool {
+        self.shared.engine.is_some()
+    }
+
+    /// Graceful shutdown: drains queued requests, then joins all threads.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        drop(self.tx.take());
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// Items carried through a PJRT batch.
+struct BatchItem {
+    env: Envelope,
+}
+
+fn dispatcher_loop(shared: Arc<Shared>, rx: Receiver<Envelope>) {
+    // Build the routing table from the attached engine's artifacts.
+    let mut router = Router::new();
+    let mut artifact_batch_cfg: HashMap<String, BatcherConfig> = HashMap::new();
+    if let Some(engine) = &shared.engine {
+        let mut specs: Vec<_> = engine
+            .artifact_names()
+            .iter()
+            .filter_map(|n| engine.spec(n).cloned())
+            .collect();
+        // Later registrations shadow earlier ones for identical
+        // signatures: put pallas-path artifacts first so their fused
+        // (non-pallas) twins win the route. On CPU the interpret-mode
+        // pallas lowering is ~20× slower (EXPERIMENTS.md §Perf); on a
+        // real TPU the preference would flip.
+        specs.sort_by_key(|s| std::cmp::Reverse(s.use_pallas));
+        router.register_artifacts(specs.iter());
+        for s in &specs {
+            artifact_batch_cfg.insert(
+                s.name.clone(),
+                BatcherConfig { max_batch: s.batch, max_delay_us: shared.cfg.max_delay_us },
+            );
+        }
+    }
+    let pool = ThreadPool::new(shared.cfg.workers, shared.cfg.queue_cap);
+    let mut batchers: HashMap<String, Batcher<BatchItem>> = HashMap::new();
+
+    loop {
+        // Sleep until the nearest batch deadline (or a coarse tick).
+        let now = shared.now_us();
+        let next_deadline = batchers
+            .values()
+            .filter_map(|b| b.deadline_us())
+            .min()
+            .unwrap_or(now + 5_000);
+        let wait = Duration::from_micros(next_deadline.saturating_sub(now).max(100));
+        match rx.recv_timeout(wait) {
+            Ok(env) => {
+                match router.route(&env.req.payload) {
+                    RouteTarget::Native => {
+                        dispatch_native(&shared, &pool, env);
+                    }
+                    RouteTarget::Pjrt(name) => {
+                        let cfg = artifact_batch_cfg[&name];
+                        let b = batchers
+                            .entry(name.clone())
+                            .or_insert_with(|| Batcher::new(cfg));
+                        if let Some(batch) = b.push(BatchItem { env }, shared.now_us()) {
+                            dispatch_pjrt(&shared, &pool, &name, batch);
+                        }
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Timeout) => {
+                let now = shared.now_us();
+                for (name, b) in batchers.iter_mut() {
+                    if let Some(batch) = b.poll(now) {
+                        dispatch_pjrt(&shared, &pool, name, batch);
+                    }
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => {
+                // Drain: flush every pending batch, then stop.
+                for (name, b) in batchers.iter_mut() {
+                    if let Some(batch) = b.flush() {
+                        dispatch_pjrt(&shared, &pool, name, batch);
+                    }
+                }
+                break;
+            }
+        }
+    }
+    // Dropping the pool joins the workers after queued jobs finish.
+    drop(pool);
+}
+
+/// Map policy for native-path requests.
+fn native_map_key(shared: &Shared, payload: &AnyTensor) -> MapKey {
+    let cfg = &shared.cfg;
+    let dims = payload.dims().to_vec();
+    match payload {
+        AnyTensor::Tt(_) => MapKey {
+            kind: MapKind::Tt { rank: cfg.default_tt_rank },
+            dims,
+            k: cfg.default_k,
+        },
+        AnyTensor::Cp(_) => MapKey {
+            kind: MapKind::Cp { rank: cfg.default_cp_rank },
+            dims,
+            k: cfg.default_k,
+        },
+        AnyTensor::Dense(t) => {
+            let kind = if t.numel() <= cfg.dense_gaussian_limit {
+                MapKind::Gaussian
+            } else {
+                MapKind::VerySparse
+            };
+            MapKey { kind, dims, k: cfg.default_k }
+        }
+    }
+}
+
+fn dispatch_native(shared: &Arc<Shared>, pool: &ThreadPool, env: Envelope) {
+    let shared = Arc::clone(shared);
+    pool.submit(move || {
+        let key = native_map_key(&shared, &env.req.payload);
+        let entry = shared.registry.get_or_create(&key);
+        let t0 = shared.now_us();
+        let embedding = entry.map.project(&env.req.payload);
+        let t1 = shared.now_us();
+        shared.metrics.native_requests.fetch_add(1, Ordering::Relaxed);
+        shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
+        shared.metrics.e2e_latency.record(t1.saturating_sub(env.submit_us));
+        let resp = ProjectResponse {
+            id: env.req.id,
+            embedding,
+            path: EnginePath::Native,
+            queued_us: t0.saturating_sub(env.submit_us),
+            exec_us: t1 - t0,
+        };
+        let _ = env.reply.send(Ok(resp));
+    });
+}
+
+fn dispatch_pjrt(shared: &Arc<Shared>, pool: &ThreadPool, artifact: &str, batch: Vec<BatchItem>) {
+    let shared = Arc::clone(shared);
+    let artifact = artifact.to_string();
+    pool.submit(move || {
+        if let Err(msg) = run_pjrt_batch(&shared, &artifact, &batch) {
+            shared
+                .metrics
+                .failed
+                .fetch_add(batch.len() as u64, Ordering::Relaxed);
+            for item in batch {
+                let _ = item.env.reply.send(Err(msg.clone()));
+            }
+        }
+    });
+}
+
+/// Execute one padded batch on the PJRT engine; on success the responses
+/// are sent inside (so partial failures never double-reply).
+fn run_pjrt_batch(shared: &Arc<Shared>, artifact: &str, batch: &[BatchItem]) -> Result<(), String> {
+    let engine = shared.engine.as_ref().ok_or("no PJRT engine attached")?;
+    let spec = engine
+        .spec(artifact)
+        .ok_or_else(|| format!("unknown artifact {artifact}"))?
+        .clone();
+    let t0 = shared.now_us();
+    // Resolve the (shared) projection map for this artifact.
+    let dims = spec.input_dims().unwrap_or_else(|| vec![spec.input_dim.unwrap_or(0)]);
+    let key = match spec.kind {
+        ArtifactKind::Tt => MapKey {
+            kind: MapKind::Tt { rank: spec.rank.unwrap() },
+            dims,
+            k: spec.k,
+        },
+        ArtifactKind::Cp => MapKey {
+            kind: MapKind::Cp { rank: spec.rank.unwrap() },
+            dims,
+            k: spec.k,
+        },
+        ArtifactKind::Dense => MapKey { kind: MapKind::Gaussian, dims, k: spec.k },
+    };
+    let entry = shared
+        .registry
+        .get_or_create_for_artifact(&key, &spec)
+        .map_err(|e| e.to_string())?;
+
+    // Pack inputs and assemble the parameter list in manifest order.
+    let inputs: Result<Vec<Vec<f32>>, String> = (|| {
+        match (&spec.kind, entry.packed.as_ref()) {
+            (ArtifactKind::Tt, Some(PackedParams::Tt(g))) => {
+                let (n, d, _r, rt) = spec.tt_meta().map_err(|e| e.to_string())?;
+                let xs: Vec<&crate::tensor::TtTensor> = batch
+                    .iter()
+                    .map(|item| match &item.env.req.payload {
+                        AnyTensor::Tt(t) => Ok(t),
+                        _ => Err("routed non-TT payload to TT artifact".to_string()),
+                    })
+                    .collect::<Result<_, _>>()?;
+                let (xf, xm, xl) =
+                    pack::pack_tt_inputs(&xs, spec.batch, n, d, rt).map_err(|e| e.to_string())?;
+                Ok(vec![g.0.clone(), g.1.clone(), g.2.clone(), xf, xm, xl])
+            }
+            (ArtifactKind::Cp, Some(PackedParams::Cp(a))) => {
+                let n = spec.n_modes.unwrap();
+                let d = spec.dim.unwrap();
+                let rt = spec.input_rank.unwrap();
+                let xs: Vec<&crate::tensor::CpTensor> = batch
+                    .iter()
+                    .map(|item| match &item.env.req.payload {
+                        AnyTensor::Cp(t) => Ok(t),
+                        _ => Err("routed non-CP payload to CP artifact".to_string()),
+                    })
+                    .collect::<Result<_, _>>()?;
+                let x = pack::pack_cp_inputs(&xs, spec.batch, n, d, rt).map_err(|e| e.to_string())?;
+                Ok(vec![a.as_ref().clone(), x])
+            }
+            (ArtifactKind::Dense, Some(PackedParams::Dense(w))) => {
+                let dim = spec.input_dim.unwrap();
+                let xs: Vec<&crate::tensor::DenseTensor> = batch
+                    .iter()
+                    .map(|item| match &item.env.req.payload {
+                        AnyTensor::Dense(t) => Ok(t),
+                        _ => Err("routed non-dense payload to dense artifact".to_string()),
+                    })
+                    .collect::<Result<_, _>>()?;
+                let x = pack::pack_dense_inputs(&xs, spec.batch, dim).map_err(|e| e.to_string())?;
+                Ok(vec![w.as_ref().clone(), x])
+            }
+            _ => Err("registry entry missing packed parameters".to_string()),
+        }
+    })();
+    let inputs = inputs?;
+
+    let y = engine
+        .execute(artifact, &inputs)
+        .map_err(|e| e.to_string())?;
+    let t1 = shared.now_us();
+
+    shared.metrics.pjrt_batches.fetch_add(1, Ordering::Relaxed);
+    shared
+        .metrics
+        .pjrt_requests
+        .fetch_add(batch.len() as u64, Ordering::Relaxed);
+    shared
+        .metrics
+        .padded_slots
+        .fetch_add((spec.batch - batch.len()) as u64, Ordering::Relaxed);
+
+    // Split the [B, k] output into per-request rows.
+    for (i, item) in batch.iter().enumerate() {
+        let row = y[i * spec.k..(i + 1) * spec.k].to_vec();
+        shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
+        shared
+            .metrics
+            .e2e_latency
+            .record(t1.saturating_sub(item.env.submit_us));
+        let resp = ProjectResponse {
+            id: item.env.req.id,
+            embedding: row,
+            path: EnginePath::Pjrt(artifact.to_string()),
+            queued_us: t0.saturating_sub(item.env.submit_us),
+            exec_us: t1 - t0,
+        };
+        let _ = item.env.reply.send(Ok(resp));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::tensor::{CpTensor, DenseTensor, TtTensor};
+
+    fn native_coordinator() -> Coordinator {
+        Coordinator::start(
+            CoordinatorConfig { workers: 2, default_k: 16, ..Default::default() },
+            None,
+        )
+    }
+
+    #[test]
+    fn native_roundtrip_all_formats() {
+        let c = native_coordinator();
+        let mut rng = Rng::seed_from(1);
+        let payloads = vec![
+            AnyTensor::Tt(TtTensor::random_unit(&[3; 5], 2, &mut rng)),
+            AnyTensor::Cp(CpTensor::random_unit(&[3; 4], 2, &mut rng)),
+            AnyTensor::Dense(DenseTensor::random_unit(&[4, 4], &mut rng)),
+        ];
+        for (i, p) in payloads.into_iter().enumerate() {
+            let resp = c.project_blocking(ProjectRequest::new(i as u64, p)).unwrap();
+            assert_eq!(resp.id, i as u64);
+            assert_eq!(resp.embedding.len(), 16);
+            assert_eq!(resp.path, EnginePath::Native);
+        }
+        let m = c.metrics();
+        assert_eq!(m.submitted, 3);
+        assert_eq!(m.completed, 3);
+        assert_eq!(m.native_requests, 3);
+        c.shutdown();
+    }
+
+    #[test]
+    fn identical_payload_gets_identical_embedding() {
+        // Registry determinism through the full service path.
+        let c = native_coordinator();
+        let mut rng = Rng::seed_from(2);
+        let x = TtTensor::random_unit(&[3; 4], 2, &mut rng);
+        let r1 = c
+            .project_blocking(ProjectRequest::new(1, AnyTensor::Tt(x.clone())))
+            .unwrap();
+        let r2 = c
+            .project_blocking(ProjectRequest::new(2, AnyTensor::Tt(x)))
+            .unwrap();
+        assert_eq!(r1.embedding, r2.embedding);
+        c.shutdown();
+    }
+
+    #[test]
+    fn many_concurrent_requests_all_answered() {
+        let c = native_coordinator();
+        let mut rng = Rng::seed_from(3);
+        let rxs: Vec<_> = (0..64)
+            .map(|i| {
+                let x = TtTensor::random_unit(&[3; 4], 2, &mut rng);
+                c.submit(ProjectRequest::new(i, AnyTensor::Tt(x)))
+            })
+            .collect();
+        let mut ids: Vec<u64> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().unwrap().unwrap().id)
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..64).collect::<Vec<u64>>());
+        assert_eq!(c.metrics().completed, 64);
+        c.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let c = native_coordinator();
+        let mut rng = Rng::seed_from(4);
+        let rx = {
+            let x = TtTensor::random_unit(&[3; 4], 2, &mut rng);
+            c.submit(ProjectRequest::new(9, AnyTensor::Tt(x)))
+        };
+        c.shutdown();
+        // The response must still arrive (drain semantics).
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.id, 9);
+    }
+}

@@ -1,0 +1,248 @@
+//! Projection-map state: the registry of drawn maps.
+//!
+//! A serving deployment must answer every request for the same signature
+//! with the *same* random map — otherwise embeddings are not comparable
+//! across requests. The registry derives each map's seed deterministically
+//! from `(master_seed, map key)`, so a restarted coordinator reproduces
+//! identical maps, and the PJRT and native paths share one draw.
+
+use crate::projections::{
+    CpProjection, GaussianProjection, Projection, SparseKind, SparseProjection, TtProjection,
+};
+use crate::rng::Rng;
+use crate::runtime::{pack, ArtifactKind, ArtifactSpec};
+use anyhow::Result;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Which projection family a registry entry uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MapKind {
+    /// `f_TT(R)`.
+    Tt {
+        /// TT rank R.
+        rank: usize,
+    },
+    /// `f_CP(R)`.
+    Cp {
+        /// CP rank R.
+        rank: usize,
+    },
+    /// Dense Gaussian RP.
+    Gaussian,
+    /// Very sparse RP (Li et al.).
+    VerySparse,
+}
+
+/// Registry key: one map per (kind, input dims, k).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct MapKey {
+    /// Map family + rank.
+    pub kind: MapKind,
+    /// Input mode sizes.
+    pub dims: Vec<usize>,
+    /// Embedding dimension.
+    pub k: usize,
+}
+
+/// Cached PJRT parameter buffers for one map (packed once, reused for
+/// every batch).
+#[derive(Debug, Clone)]
+pub enum PackedParams {
+    /// `(g_first, g_mid, g_last)` for TT artifacts.
+    Tt(Arc<(Vec<f32>, Vec<f32>, Vec<f32>)>),
+    /// `a` for CP artifacts.
+    Cp(Arc<Vec<f32>>),
+    /// `w` for dense artifacts.
+    Dense(Arc<Vec<f32>>),
+}
+
+/// A registry entry: the map plus optional packed parameters.
+pub struct MapEntry {
+    /// The projection map (native execution).
+    pub map: Arc<dyn Projection>,
+    /// Packed PJRT parameters, present when an artifact matches this map.
+    pub packed: Option<PackedParams>,
+}
+
+/// Deterministic, thread-safe projection-map registry.
+pub struct ProjectionRegistry {
+    master_seed: u64,
+    maps: Mutex<HashMap<MapKey, Arc<MapEntry>>>,
+}
+
+impl ProjectionRegistry {
+    /// New registry; all map draws derive from `master_seed`.
+    pub fn new(master_seed: u64) -> Self {
+        Self { master_seed, maps: Mutex::new(HashMap::new()) }
+    }
+
+    /// Stable per-key seed: hash the key fields into the master seed.
+    fn seed_for(&self, key: &MapKey) -> u64 {
+        // FNV-1a over the key's canonical encoding, mixed with the master.
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325 ^ self.master_seed;
+        let mut eat = |x: u64| {
+            h ^= x;
+            h = h.wrapping_mul(0x1_0000_0000_01b3);
+        };
+        match key.kind {
+            MapKind::Tt { rank } => {
+                eat(1);
+                eat(rank as u64);
+            }
+            MapKind::Cp { rank } => {
+                eat(2);
+                eat(rank as u64);
+            }
+            MapKind::Gaussian => eat(3),
+            MapKind::VerySparse => eat(4),
+        }
+        for &d in &key.dims {
+            eat(d as u64);
+        }
+        eat(key.k as u64);
+        h
+    }
+
+    /// Get or create the map for `key` (no PJRT packing).
+    pub fn get_or_create(&self, key: &MapKey) -> Arc<MapEntry> {
+        self.get_or_create_inner(key, None).expect("native map creation cannot fail")
+    }
+
+    /// Get or create the map for `key`, packing parameters for `spec`'s
+    /// artifact layout on first creation.
+    pub fn get_or_create_for_artifact(
+        &self,
+        key: &MapKey,
+        spec: &ArtifactSpec,
+    ) -> Result<Arc<MapEntry>> {
+        self.get_or_create_inner(key, Some(spec))
+    }
+
+    fn get_or_create_inner(
+        &self,
+        key: &MapKey,
+        spec: Option<&ArtifactSpec>,
+    ) -> Result<Arc<MapEntry>> {
+        let mut maps = self.maps.lock().unwrap();
+        if let Some(e) = maps.get(key) {
+            // Upgrade an existing entry with packing if newly needed.
+            if e.packed.is_some() || spec.is_none() {
+                return Ok(Arc::clone(e));
+            }
+        }
+        let mut rng = Rng::seed_from(self.seed_for(key));
+        let (map, packed): (Arc<dyn Projection>, Option<PackedParams>) = match key.kind {
+            MapKind::Tt { rank } => {
+                let f = TtProjection::new(&key.dims, rank, key.k, &mut rng);
+                let packed = match spec {
+                    Some(s) if s.kind == ArtifactKind::Tt => {
+                        let (n, d, r, _) = s.tt_meta()?;
+                        Some(PackedParams::Tt(Arc::new(pack::pack_tt_projection(
+                            &f, n, d, r,
+                        )?)))
+                    }
+                    _ => None,
+                };
+                (Arc::new(f), packed)
+            }
+            MapKind::Cp { rank } => {
+                let f = CpProjection::new(&key.dims, rank, key.k, &mut rng);
+                let packed = match spec {
+                    Some(s) if s.kind == ArtifactKind::Cp => {
+                        let n = s.n_modes.unwrap();
+                        let d = s.dim.unwrap();
+                        Some(PackedParams::Cp(Arc::new(pack::pack_cp_projection(
+                            &f, n, d, rank,
+                        )?)))
+                    }
+                    _ => None,
+                };
+                (Arc::new(f), packed)
+            }
+            MapKind::Gaussian => {
+                let f = GaussianProjection::new(&key.dims, key.k, &mut rng);
+                let packed = match spec {
+                    Some(s) if s.kind == ArtifactKind::Dense => {
+                        Some(PackedParams::Dense(Arc::new(pack::pack_dense_projection(&f))))
+                    }
+                    _ => None,
+                };
+                (Arc::new(f), packed)
+            }
+            MapKind::VerySparse => {
+                let f = SparseProjection::new(&key.dims, key.k, SparseKind::VerySparse, &mut rng);
+                (Arc::new(f), None)
+            }
+        };
+        let entry = Arc::new(MapEntry { map, packed });
+        maps.insert(key.clone(), Arc::clone(&entry));
+        Ok(entry)
+    }
+
+    /// Number of registered maps.
+    pub fn len(&self) -> usize {
+        self.maps.lock().unwrap().len()
+    }
+
+    /// True when no maps have been drawn yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{AnyTensor, TtTensor};
+
+    fn tt_key() -> MapKey {
+        MapKey { kind: MapKind::Tt { rank: 2 }, dims: vec![3; 4], k: 6 }
+    }
+
+    #[test]
+    fn same_key_returns_same_map() {
+        let reg = ProjectionRegistry::new(42);
+        let a = reg.get_or_create(&tt_key());
+        let b = reg.get_or_create(&tt_key());
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn same_master_seed_reproduces_identical_maps() {
+        let mut rng = Rng::seed_from(9);
+        let x = AnyTensor::Tt(TtTensor::random_unit(&[3; 4], 2, &mut rng));
+        let y1 = ProjectionRegistry::new(42).get_or_create(&tt_key()).map.project(&x);
+        let y2 = ProjectionRegistry::new(42).get_or_create(&tt_key()).map.project(&x);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn different_master_seed_differs() {
+        let mut rng = Rng::seed_from(9);
+        let x = AnyTensor::Tt(TtTensor::random_unit(&[3; 4], 2, &mut rng));
+        let y1 = ProjectionRegistry::new(1).get_or_create(&tt_key()).map.project(&x);
+        let y2 = ProjectionRegistry::new(2).get_or_create(&tt_key()).map.project(&x);
+        assert_ne!(y1, y2);
+    }
+
+    #[test]
+    fn different_keys_get_different_maps() {
+        let reg = ProjectionRegistry::new(42);
+        let a = reg.get_or_create(&tt_key());
+        let mut k2 = tt_key();
+        k2.k = 7;
+        let b = reg.get_or_create(&k2);
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(reg.len(), 2);
+    }
+
+    #[test]
+    fn kinds_are_distinguished_in_seeding() {
+        let reg = ProjectionRegistry::new(0);
+        let tt = MapKey { kind: MapKind::Tt { rank: 3 }, dims: vec![4; 3], k: 5 };
+        let cp = MapKey { kind: MapKind::Cp { rank: 3 }, dims: vec![4; 3], k: 5 };
+        assert_ne!(reg.seed_for(&tt), reg.seed_for(&cp));
+    }
+}

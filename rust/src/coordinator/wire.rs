@@ -1,0 +1,239 @@
+//! Wire format: newline-delimited JSON encoding of requests/responses for
+//! the TCP front-end ([`super::net`]).
+//!
+//! Request:
+//! ```json
+//! {"id": 7, "format": "tt", "dims": [3,3,3], "ranks": [1,2,2,1],
+//!  "cores": [[…], […], […]]}
+//! {"id": 8, "format": "cp", "dims": [3,3], "rank": 2, "factors": [[…], […]]}
+//! {"id": 9, "format": "dense", "dims": [4,4], "values": [
+
+//! …]}
+//! ```
+//! Response: `{"id": 7, "embedding": […], "path": "pjrt:tt_rp_medium",
+//! "queued_us": 120, "exec_us": 1500}` or `{"id": 7, "error": "…"}`.
+
+use super::request::{ProjectRequest, ProjectResponse};
+use crate::linalg::Matrix;
+use crate::tensor::{AnyTensor, CpTensor, DenseTensor, TtTensor};
+use crate::util::json::{num_arr, obj, usize_arr, Json};
+
+/// Encode a request as a single JSON line (no trailing newline).
+pub fn encode_request(req: &ProjectRequest) -> String {
+    let mut fields: Vec<(&str, Json)> = vec![("id", Json::Num(req.id as f64))];
+    match &req.payload {
+        AnyTensor::Dense(t) => {
+            fields.push(("format", Json::Str("dense".into())));
+            fields.push(("dims", usize_arr(t.dims())));
+            fields.push(("values", num_arr(t.data())));
+        }
+        AnyTensor::Tt(t) => {
+            fields.push(("format", Json::Str("tt".into())));
+            fields.push(("dims", usize_arr(t.dims())));
+            fields.push(("ranks", usize_arr(t.ranks())));
+            fields.push((
+                "cores",
+                Json::Arr((0..t.order()).map(|n| num_arr(t.core(n))).collect()),
+            ));
+        }
+        AnyTensor::Cp(t) => {
+            fields.push(("format", Json::Str("cp".into())));
+            fields.push(("dims", usize_arr(t.dims())));
+            fields.push(("rank", Json::Num(t.rank() as f64)));
+            fields.push((
+                "factors",
+                Json::Arr(
+                    (0..t.order())
+                        .map(|n| num_arr(t.factor(n).data()))
+                        .collect(),
+                ),
+            ));
+        }
+    }
+    obj(fields).to_string_compact()
+}
+
+/// Decode a request line.
+pub fn decode_request(line: &str) -> Result<ProjectRequest, String> {
+    let j = Json::parse(line).map_err(|e| e.to_string())?;
+    let id = j
+        .get("id")
+        .and_then(Json::as_f64)
+        .ok_or("missing id")? as u64;
+    let format = j.get("format").and_then(Json::as_str).ok_or("missing format")?;
+    let dims = j
+        .get("dims")
+        .and_then(Json::as_usize_vec)
+        .ok_or("missing dims")?;
+    let payload = match format {
+        "dense" => {
+            let values = num_vec(j.get("values").ok_or("missing values")?)?;
+            AnyTensor::Dense(DenseTensor::from_vec(&dims, values))
+        }
+        "tt" => {
+            let ranks = j
+                .get("ranks")
+                .and_then(Json::as_usize_vec)
+                .ok_or("missing ranks")?;
+            let cores_json = j.get("cores").and_then(Json::as_arr).ok_or("missing cores")?;
+            let cores = cores_json
+                .iter()
+                .map(num_vec)
+                .collect::<Result<Vec<_>, _>>()?;
+            AnyTensor::Tt(TtTensor::from_cores(&dims, &ranks, cores))
+        }
+        "cp" => {
+            let rank = j
+                .get("rank")
+                .and_then(Json::as_usize)
+                .ok_or("missing rank")?;
+            let factors_json = j
+                .get("factors")
+                .and_then(Json::as_arr)
+                .ok_or("missing factors")?;
+            if factors_json.len() != dims.len() {
+                return Err("factor count != mode count".into());
+            }
+            let factors = factors_json
+                .iter()
+                .zip(&dims)
+                .map(|(f, &d)| Ok(Matrix::from_vec(d, rank, num_vec(f)?)))
+                .collect::<Result<Vec<_>, String>>()?;
+            AnyTensor::Cp(CpTensor::from_factors(factors))
+        }
+        other => return Err(format!("unknown format {other:?}")),
+    };
+    Ok(ProjectRequest::new(id, payload))
+}
+
+/// Encode a (successful or failed) response as a JSON line.
+pub fn encode_response(result: &Result<ProjectResponse, String>, fallback_id: u64) -> String {
+    match result {
+        Ok(resp) => obj(vec![
+            ("id", Json::Num(resp.id as f64)),
+            ("embedding", num_arr(&resp.embedding)),
+            ("path", Json::Str(resp.path.to_string())),
+            ("queued_us", Json::Num(resp.queued_us as f64)),
+            ("exec_us", Json::Num(resp.exec_us as f64)),
+        ])
+        .to_string_compact(),
+        Err(e) => obj(vec![
+            ("id", Json::Num(fallback_id as f64)),
+            ("error", Json::Str(e.clone())),
+        ])
+        .to_string_compact(),
+    }
+}
+
+/// Decoded response for client use.
+#[derive(Debug, Clone)]
+pub struct WireResponse {
+    /// Request id.
+    pub id: u64,
+    /// Embedding when successful.
+    pub embedding: Option<Vec<f64>>,
+    /// Error message when failed.
+    pub error: Option<String>,
+    /// Serving path string.
+    pub path: Option<String>,
+}
+
+/// Decode a response line.
+pub fn decode_response(line: &str) -> Result<WireResponse, String> {
+    let j = Json::parse(line).map_err(|e| e.to_string())?;
+    let id = j.get("id").and_then(Json::as_f64).ok_or("missing id")? as u64;
+    Ok(WireResponse {
+        id,
+        embedding: match j.get("embedding") {
+            Some(v) => Some(num_vec(v)?),
+            None => None,
+        },
+        error: j.get("error").and_then(Json::as_str).map(|s| s.to_string()),
+        path: j.get("path").and_then(Json::as_str).map(|s| s.to_string()),
+    })
+}
+
+fn num_vec(j: &Json) -> Result<Vec<f64>, String> {
+    j.as_arr()
+        .ok_or("expected array")?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| "expected number".to_string()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn tt_request_roundtrip() {
+        let mut rng = Rng::seed_from(1);
+        let x = TtTensor::random_unit(&[3, 4, 3], 2, &mut rng);
+        let req = ProjectRequest::new(42, AnyTensor::Tt(x.clone()));
+        let line = encode_request(&req);
+        let back = decode_request(&line).unwrap();
+        assert_eq!(back.id, 42);
+        match back.payload {
+            AnyTensor::Tt(t) => {
+                assert_eq!(t.dims(), x.dims());
+                assert!((t.fro_norm() - x.fro_norm()).abs() < 1e-12);
+            }
+            _ => panic!("wrong format"),
+        }
+    }
+
+    #[test]
+    fn cp_and_dense_roundtrip() {
+        let mut rng = Rng::seed_from(2);
+        let cp = CpTensor::random_unit(&[3, 2, 3], 2, &mut rng);
+        let back = decode_request(&encode_request(&ProjectRequest::new(
+            1,
+            AnyTensor::Cp(cp.clone()),
+        )))
+        .unwrap();
+        assert!((back.payload.fro_norm() - cp.fro_norm()).abs() < 1e-12);
+
+        let d = DenseTensor::random(&[2, 5], &mut rng);
+        let back = decode_request(&encode_request(&ProjectRequest::new(
+            2,
+            AnyTensor::Dense(d.clone()),
+        )))
+        .unwrap();
+        match back.payload {
+            AnyTensor::Dense(t) => assert_eq!(t.data(), d.data()),
+            _ => panic!("wrong format"),
+        }
+    }
+
+    #[test]
+    fn response_roundtrip_ok_and_err() {
+        let resp = ProjectResponse {
+            id: 9,
+            embedding: vec![0.5, -1.5],
+            path: super::super::request::EnginePath::Native,
+            queued_us: 10,
+            exec_us: 20,
+        };
+        let line = encode_response(&Ok(resp), 9);
+        let back = decode_response(&line).unwrap();
+        assert_eq!(back.id, 9);
+        assert_eq!(back.embedding.unwrap(), vec![0.5, -1.5]);
+        assert_eq!(back.path.as_deref(), Some("native"));
+        assert!(back.error.is_none());
+
+        let line = encode_response(&Err("boom".into()), 7);
+        let back = decode_response(&line).unwrap();
+        assert_eq!(back.id, 7);
+        assert_eq!(back.error.as_deref(), Some("boom"));
+        assert!(back.embedding.is_none());
+    }
+
+    #[test]
+    fn malformed_requests_are_rejected() {
+        assert!(decode_request("not json").is_err());
+        assert!(decode_request(r#"{"id": 1}"#).is_err());
+        assert!(decode_request(r#"{"id":1,"format":"tucker","dims":[2]}"#).is_err());
+        assert!(decode_request(r#"{"id":1,"format":"dense","dims":[2]}"#).is_err());
+    }
+}

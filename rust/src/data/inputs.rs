@@ -1,0 +1,122 @@
+//! Input-tensor generators for the paper's experiment regimes (§6).
+//!
+//! The paper generates unit-norm tensors *in the TT format* with rank
+//! `R̃ = 10`, for three regimes: small-order `(d=15, N=3)`, medium-order
+//! `(d=3, N=12)` and high-order `(d=3, N=25)`.
+
+use crate::rng::Rng;
+use crate::tensor::{AnyTensor, CpTensor, DenseTensor, TtTensor};
+
+/// The paper's three input regimes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Regime {
+    /// `d = 15, N = 3` (dense dim 3 375) — Gaussian RP feasible.
+    Small,
+    /// `d = 3, N = 12` (dense dim 531 441) — very sparse RP feasible.
+    Medium,
+    /// `d = 3, N = 25` (dense dim ≈ 8.5·10¹¹) — tensorized maps only.
+    High,
+}
+
+impl Regime {
+    /// Mode sizes of this regime.
+    pub fn dims(&self) -> Vec<usize> {
+        match self {
+            Regime::Small => vec![15; 3],
+            Regime::Medium => vec![3; 12],
+            Regime::High => vec![3; 25],
+        }
+    }
+
+    /// The paper's input TT rank `R̃`.
+    pub fn input_rank(&self) -> usize {
+        10
+    }
+
+    /// Whether the dense input dimension is materializable.
+    pub fn dense_feasible(&self) -> bool {
+        matches!(self, Regime::Small | Regime::Medium)
+    }
+
+    /// Parse from the CLI name.
+    pub fn parse(s: &str) -> Option<Regime> {
+        match s {
+            "small" => Some(Regime::Small),
+            "medium" => Some(Regime::Medium),
+            "high" => Some(Regime::High),
+            _ => None,
+        }
+    }
+
+    /// CLI name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Regime::Small => "small",
+            Regime::Medium => "medium",
+            Regime::High => "high",
+        }
+    }
+}
+
+/// Unit-norm TT input of the regime (the paper's default input).
+pub fn regime_input(regime: Regime, rng: &mut Rng) -> TtTensor {
+    TtTensor::random_unit(&regime.dims(), regime.input_rank(), rng)
+}
+
+/// Unit-norm CP input with the same shape (for the Figure 2/4 CP-input
+/// timing series).
+pub fn regime_cp_input(regime: Regime, rng: &mut Rng) -> CpTensor {
+    CpTensor::random_unit(&regime.dims(), regime.input_rank(), rng)
+}
+
+/// Unit-norm tensor in the requested format.
+pub fn unit_input(dims: &[usize], rank: usize, format: &str, rng: &mut Rng) -> AnyTensor {
+    match format {
+        "tt" => AnyTensor::Tt(TtTensor::random_unit(dims, rank, rng)),
+        "cp" => AnyTensor::Cp(CpTensor::random_unit(dims, rank, rng)),
+        "dense" => AnyTensor::Dense(DenseTensor::random_unit(dims, rng)),
+        other => panic!("unknown input format {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regime_shapes() {
+        assert_eq!(Regime::Small.dims(), vec![15, 15, 15]);
+        assert_eq!(Regime::Medium.dims().len(), 12);
+        assert_eq!(Regime::High.dims().len(), 25);
+        assert!(Regime::Small.dense_feasible());
+        assert!(!Regime::High.dense_feasible());
+    }
+
+    #[test]
+    fn regime_inputs_are_unit_norm() {
+        let mut rng = Rng::seed_from(1);
+        for r in [Regime::Small, Regime::Medium, Regime::High] {
+            let x = regime_input(r, &mut rng);
+            assert!((x.fro_norm() - 1.0).abs() < 1e-9, "{:?}", r);
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for r in [Regime::Small, Regime::Medium, Regime::High] {
+            assert_eq!(Regime::parse(r.name()), Some(r));
+        }
+        assert_eq!(Regime::parse("huge"), None);
+    }
+
+    #[test]
+    fn unit_input_formats() {
+        let mut rng = Rng::seed_from(2);
+        let t = unit_input(&[3; 4], 2, "tt", &mut rng);
+        assert!((t.fro_norm() - 1.0).abs() < 1e-9);
+        let c = unit_input(&[3; 4], 2, "cp", &mut rng);
+        assert!((c.fro_norm() - 1.0).abs() < 1e-9);
+        let d = unit_input(&[3, 3], 0, "dense", &mut rng);
+        assert!((d.fro_norm() - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,10 @@
+//! Workload and dataset generation.
+//!
+//! * [`inputs`] — the unit-norm random TT/CP/dense tensors of §6,
+//! * [`images`] — the CIFAR-10 substitute for Appendix B.1 (synthetic
+//!   natural-image-like data; loads real CIFAR batches when present),
+//! * [`workload`] — request traces for the serving benches/examples.
+
+pub mod images;
+pub mod inputs;
+pub mod workload;

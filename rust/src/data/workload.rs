@@ -1,0 +1,117 @@
+//! Serving workload traces for the coordinator benches and the
+//! `serve_compress` end-to-end example.
+
+use super::inputs::Regime;
+use crate::rng::Rng;
+use crate::tensor::{AnyTensor, CpTensor, TtTensor};
+
+/// Mix of payload formats in a trace (weights need not sum to 1).
+#[derive(Debug, Clone, Copy)]
+pub struct FormatMix {
+    /// Weight of TT-format requests.
+    pub tt: f64,
+    /// Weight of CP-format requests.
+    pub cp: f64,
+}
+
+impl Default for FormatMix {
+    fn default() -> Self {
+        Self { tt: 0.8, cp: 0.2 }
+    }
+}
+
+/// A generated request trace: payloads plus arrival offsets.
+#[derive(Debug)]
+pub struct Trace {
+    /// Payloads in arrival order.
+    pub payloads: Vec<AnyTensor>,
+    /// Arrival time offsets in µs (non-decreasing; Poisson arrivals).
+    pub arrivals_us: Vec<u64>,
+}
+
+/// Generate a Poisson-arrival trace of `n` requests at `rate_per_sec`,
+/// with payload shapes from `regime` and format mix `mix`.
+///
+/// TT payloads use the regime's input rank so they match the compiled
+/// artifact signature; CP payloads likewise.
+pub fn poisson_trace(
+    n: usize,
+    rate_per_sec: f64,
+    regime: Regime,
+    mix: FormatMix,
+    seed: u64,
+) -> Trace {
+    assert!(rate_per_sec > 0.0);
+    let mut rng = Rng::seed_from(seed);
+    let dims = regime.dims();
+    let rank = regime.input_rank();
+    let total = (mix.tt + mix.cp).max(1e-12);
+    let mut payloads = Vec::with_capacity(n);
+    let mut arrivals = Vec::with_capacity(n);
+    let mut t_us = 0.0f64;
+    for _ in 0..n {
+        // Exponential inter-arrival.
+        let u = rng.uniform().max(f64::MIN_POSITIVE);
+        t_us += -u.ln() / rate_per_sec * 1e6;
+        arrivals.push(t_us as u64);
+        let pick = rng.uniform() * total;
+        if pick < mix.tt {
+            payloads.push(AnyTensor::Tt(TtTensor::random_unit(&dims, rank, &mut rng)));
+        } else {
+            payloads.push(AnyTensor::Cp(CpTensor::random_unit(&dims, rank, &mut rng)));
+        }
+    }
+    Trace { payloads, arrivals_us: arrivals }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Format;
+
+    #[test]
+    fn trace_has_sorted_arrivals_and_right_count() {
+        let t = poisson_trace(50, 1000.0, Regime::Medium, FormatMix::default(), 1);
+        assert_eq!(t.payloads.len(), 50);
+        assert_eq!(t.arrivals_us.len(), 50);
+        for w in t.arrivals_us.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn trace_mix_respects_weights() {
+        let t = poisson_trace(
+            400,
+            1000.0,
+            Regime::Medium,
+            FormatMix { tt: 1.0, cp: 0.0 },
+            2,
+        );
+        assert!(t.payloads.iter().all(|p| p.format() == Format::Tt));
+        let t2 = poisson_trace(
+            200,
+            1000.0,
+            Regime::Medium,
+            FormatMix { tt: 0.5, cp: 0.5 },
+            3,
+        );
+        let n_tt = t2.payloads.iter().filter(|p| p.format() == Format::Tt).count();
+        assert!(n_tt > 50 && n_tt < 150, "n_tt={n_tt}");
+    }
+
+    #[test]
+    fn mean_interarrival_matches_rate() {
+        let t = poisson_trace(2000, 10_000.0, Regime::Medium, FormatMix::default(), 4);
+        let total_s = *t.arrivals_us.last().unwrap() as f64 / 1e6;
+        let rate = 2000.0 / total_s;
+        assert!((rate - 10_000.0).abs() < 1_500.0, "rate={rate}");
+    }
+
+    #[test]
+    fn trace_is_deterministic() {
+        let a = poisson_trace(10, 100.0, Regime::Small, FormatMix::default(), 9);
+        let b = poisson_trace(10, 100.0, Regime::Small, FormatMix::default(), 9);
+        assert_eq!(a.arrivals_us, b.arrivals_us);
+    }
+}

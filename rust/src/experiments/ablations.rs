@@ -1,0 +1,321 @@
+//! Ablations: the design-choice checks DESIGN.md calls out.
+//!
+//! * **Theorem 1 bound vs measurement** — empirical `Var(‖f(X)‖²)` against
+//!   the TT/CP variance bounds across (N, R, k);
+//! * **order-2 exact TT variance** — the paper's closed form
+//!   `(2‖X‖⁴ + (6/R)Tr[(XᵀX)²])/k` vs measurement;
+//! * **variance prescription ablation** — what happens to the expected
+//!   isometry if Definition 1's per-core variances are replaced by naive
+//!   unit variances (answer: the isometry breaks by a factor `R^{N/2}`-ish,
+//!   which is *why* the prescription matters).
+
+use crate::projections::{squared_norm, Projection};
+use crate::rng::Rng;
+use crate::tensor::{AnyTensor, TtTensor};
+use crate::theory;
+use crate::util::csv::CsvTable;
+use crate::util::stats;
+
+/// Configuration of the variance-bound sweep.
+#[derive(Debug, Clone)]
+pub struct AblationConfig {
+    /// Orders to test.
+    pub orders: Vec<usize>,
+    /// Ranks to test.
+    pub ranks: Vec<usize>,
+    /// Embedding dimension.
+    pub k: usize,
+    /// Mode size.
+    pub dim: usize,
+    /// Map draws per point.
+    pub trials: usize,
+    /// Master seed.
+    pub seed: u64,
+    /// Worker threads.
+    pub threads: usize,
+}
+
+impl AblationConfig {
+    /// Defaults sized for a few seconds of runtime.
+    pub fn default_sweep() -> Self {
+        Self {
+            orders: vec![2, 4, 6],
+            ranks: vec![1, 2, 5],
+            k: 16,
+            dim: 3,
+            trials: 400,
+            seed: 0xAB1A,
+            threads: super::default_threads(),
+        }
+    }
+
+    /// Reduced settings for smoke tests.
+    pub fn quick() -> Self {
+        Self {
+            orders: vec![3],
+            ranks: vec![2],
+            trials: 60,
+            ..Self::default_sweep()
+        }
+    }
+}
+
+/// One bound-vs-measurement row.
+#[derive(Debug, Clone)]
+pub struct VarianceRow {
+    /// `"tt"` or `"cp"`.
+    pub map: String,
+    /// Order `N`.
+    pub order: usize,
+    /// Rank `R`.
+    pub rank: usize,
+    /// Embedding dimension `k`.
+    pub k: usize,
+    /// Empirical mean of `‖f(X)‖²` (should be ≈ 1).
+    pub emp_mean: f64,
+    /// Empirical variance of `‖f(X)‖²`.
+    pub emp_var: f64,
+    /// Theorem 1 bound.
+    pub bound: f64,
+}
+
+/// Empirical `(mean, var)` of `‖f(X)‖²` for a map-builder over trials.
+fn norm_moments(
+    build: impl Fn(&mut Rng) -> Box<dyn Projection> + Sync,
+    x: &AnyTensor,
+    trials: usize,
+    seed: u64,
+    threads: usize,
+) -> (f64, f64) {
+    let trial_ids: Vec<u64> = (0..trials as u64).collect();
+    let vals = crate::util::threadpool::par_map(trial_ids, threads, |t| {
+        let mut rng = Rng::seed_from(crate::rng::derive_seed(seed, t));
+        let f = build(&mut rng);
+        squared_norm(&f.project(x))
+    });
+    (stats::mean(&vals), stats::variance(&vals))
+}
+
+/// Run the Theorem-1 sweep for both maps.
+pub fn run_variance_sweep(cfg: &AblationConfig) -> Vec<VarianceRow> {
+    let mut rows = Vec::new();
+    let mut rng = Rng::seed_from(cfg.seed);
+    for &n in &cfg.orders {
+        let dims = vec![cfg.dim; n];
+        let x = AnyTensor::Tt(TtTensor::random_unit(&dims, 3.min(cfg.dim), &mut rng));
+        for &r in &cfg.ranks {
+            let seed = crate::rng::derive_seed(cfg.seed, (n * 1000 + r) as u64);
+            let (m_tt, v_tt) = norm_moments(
+                |rng| Box::new(crate::projections::TtProjection::new(&dims, r, cfg.k, rng)),
+                &x,
+                cfg.trials,
+                seed,
+                cfg.threads,
+            );
+            rows.push(VarianceRow {
+                map: "tt".into(),
+                order: n,
+                rank: r,
+                k: cfg.k,
+                emp_mean: m_tt,
+                emp_var: v_tt,
+                bound: theory::tt_variance_bound(n, r, cfg.k),
+            });
+            let (m_cp, v_cp) = norm_moments(
+                |rng| Box::new(crate::projections::CpProjection::new(&dims, r, cfg.k, rng)),
+                &x,
+                cfg.trials,
+                seed ^ 1,
+                cfg.threads,
+            );
+            rows.push(VarianceRow {
+                map: "cp".into(),
+                order: n,
+                rank: r,
+                k: cfg.k,
+                emp_mean: m_cp,
+                emp_var: v_cp,
+                bound: theory::cp_variance_bound(n, r, cfg.k),
+            });
+        }
+    }
+    rows
+}
+
+/// Ablation: replace Definition 1's variances with naive unit-variance
+/// cores and report the resulting `E‖f(X)‖²` (exposes why the paper's
+/// prescription is what it is). Returns `(prescribed, naive)` means.
+pub fn run_prescription_ablation(
+    n: usize,
+    r: usize,
+    k: usize,
+    trials: usize,
+    seed: u64,
+) -> (f64, f64) {
+    let dims = vec![3usize; n];
+    let mut rng = Rng::seed_from(seed);
+    let x = TtTensor::random_unit(&dims, 2, &mut rng);
+    let mut prescribed = Vec::with_capacity(trials);
+    let mut naive = Vec::with_capacity(trials);
+    let scale = 1.0 / (k as f64).sqrt();
+    for _ in 0..trials {
+        // Prescribed (Definition 1) rows.
+        let mut acc_p = 0.0;
+        let mut acc_n = 0.0;
+        for _ in 0..k {
+            let row_p = TtTensor::random_projection_row(&dims, r, &mut rng);
+            let y = row_p.inner(&x) * scale;
+            acc_p += y * y;
+            let row_n = TtTensor::random(&dims, r, &mut rng); // unit-variance cores
+            let z = row_n.inner(&x) * scale;
+            acc_n += z * z;
+        }
+        prescribed.push(acc_p);
+        naive.push(acc_n);
+    }
+    (stats::mean(&prescribed), stats::mean(&naive))
+}
+
+/// JL point-set experiment (the actual Theorem 2 statement): embed `m`
+/// points simultaneously and report the **maximum pairwise distortion**
+/// `max_{u≠v} |‖f(u)−f(v)‖²/‖u−v‖² − 1|` over `trials` map draws.
+#[derive(Debug, Clone)]
+pub struct JlSetRow {
+    /// Map label.
+    pub map: String,
+    /// Embedding dimension.
+    pub k: usize,
+    /// Mean (over trials) of the max pairwise distortion.
+    pub mean_max_distortion: f64,
+    /// Fraction of trials where every pair stayed within ε.
+    pub success_rate: f64,
+}
+
+/// Run the JL point-set sweep on `m` medium-order TT points.
+pub fn run_jl_set(
+    m: usize,
+    ks: &[usize],
+    eps: f64,
+    trials: usize,
+    seed: u64,
+) -> Vec<JlSetRow> {
+    use crate::experiments::MapSpec;
+    let dims = vec![3usize; 8];
+    let mut rng = Rng::seed_from(seed);
+    let points: Vec<TtTensor> = (0..m)
+        .map(|_| TtTensor::random_unit(&dims, 4, &mut rng))
+        .collect();
+    // Precompute exact pairwise squared distances in TT format.
+    let mut pair_d2 = Vec::new();
+    for i in 0..m {
+        for j in (i + 1)..m {
+            let d2 = points[i].inner(&points[i]) + points[j].inner(&points[j])
+                - 2.0 * points[i].inner(&points[j]);
+            pair_d2.push(((i, j), d2));
+        }
+    }
+    let mut rows = Vec::new();
+    for spec in [MapSpec::Tt(5), MapSpec::Cp(25)] {
+        for &k in ks {
+            let mut maxes = Vec::with_capacity(trials);
+            let mut successes = 0usize;
+            for t in 0..trials as u64 {
+                let mut rng = Rng::seed_from(crate::rng::derive_seed(seed ^ k as u64, t));
+                let f = spec.build(&dims, k, &mut rng);
+                let embs: Vec<Vec<f64>> = points.iter().map(|p| f.project_tt(p)).collect();
+                let mut worst = 0.0f64;
+                for &((i, j), d2) in &pair_d2 {
+                    let mut pd2 = 0.0;
+                    for (a, b) in embs[i].iter().zip(&embs[j]) {
+                        pd2 += (a - b) * (a - b);
+                    }
+                    worst = worst.max((pd2 / d2 - 1.0).abs());
+                }
+                maxes.push(worst);
+                if worst <= eps {
+                    successes += 1;
+                }
+            }
+            rows.push(JlSetRow {
+                map: spec.label(),
+                k,
+                mean_max_distortion: stats::mean(&maxes),
+                success_rate: successes as f64 / trials as f64,
+            });
+        }
+    }
+    rows
+}
+
+/// Render JL point-set rows as CSV.
+pub fn jl_set_to_csv(rows: &[JlSetRow]) -> CsvTable {
+    let mut t = CsvTable::new(&["map", "k", "mean_max_distortion", "success_rate"]);
+    for r in rows {
+        t.push_row(vec![
+            r.map.clone(),
+            r.k.to_string(),
+            format!("{:.4}", r.mean_max_distortion),
+            format!("{:.3}", r.success_rate),
+        ]);
+    }
+    t
+}
+
+/// Render variance rows as CSV.
+pub fn to_csv(rows: &[VarianceRow]) -> CsvTable {
+    let mut t = CsvTable::new(&["map", "order", "rank", "k", "emp_mean", "emp_var", "bound"]);
+    for r in rows {
+        t.push_row(vec![
+            r.map.clone(),
+            r.order.to_string(),
+            r.rank.to_string(),
+            r.k.to_string(),
+            format!("{:.6}", r.emp_mean),
+            format!("{:.6e}", r.emp_var),
+            format!("{:.6e}", r.bound),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empirical_variance_respects_bound() {
+        let cfg = AblationConfig::quick();
+        let rows = run_variance_sweep(&cfg);
+        for r in &rows {
+            assert!((r.emp_mean - 1.0).abs() < 0.3, "isometry broken: {r:?}");
+            // CLT slack: with 60 trials the sample variance can exceed the
+            // true variance by ~(1 + 3√(2/60)); use a 2× guard.
+            assert!(
+                r.emp_var <= r.bound * 2.0,
+                "variance above bound with slack: {r:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn jl_set_success_improves_with_k() {
+        let rows = run_jl_set(6, &[8, 256], 0.9, 8, 3);
+        let tt8 = rows.iter().find(|r| r.map == "tt_r5" && r.k == 8).unwrap();
+        let tt256 = rows.iter().find(|r| r.map == "tt_r5" && r.k == 256).unwrap();
+        assert!(
+            tt256.mean_max_distortion < tt8.mean_max_distortion,
+            "{} vs {}",
+            tt256.mean_max_distortion,
+            tt8.mean_max_distortion
+        );
+        assert!(tt256.success_rate >= tt8.success_rate);
+    }
+
+    #[test]
+    fn naive_variance_breaks_isometry() {
+        let (prescribed, naive) = run_prescription_ablation(4, 3, 8, 40, 5);
+        assert!((prescribed - 1.0).abs() < 0.4, "prescribed={prescribed}");
+        // Unit-variance cores inflate E‖f(X)‖² by ≈ R^{N-1} ≫ 1.
+        assert!(naive > 5.0, "naive={naive}");
+    }
+}

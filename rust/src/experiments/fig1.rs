@@ -1,0 +1,177 @@
+//! Figure 1: distortion ratio vs embedding dimension `k` for the three
+//! input regimes (small / medium / high order).
+//!
+//! Series (matching the paper's legends):
+//! * small:  Gaussian, TT(2,5,10), CP(4,25,100)
+//! * medium: very sparse RP, TT(2,5,10), CP(4,25,100)
+//! * high:   TT(2,5,10), CP(4,25,100)  (dense/sparse infeasible)
+//!
+//! The rank pairs are chosen by the paper so TT(R) and CP(R') have
+//! roughly equal parameter counts: `(N−2)dR² + 2dR ≈ NdR'`.
+
+use super::{mean_distortion, MapSpec};
+use crate::data::inputs::{regime_input, Regime};
+use crate::rng::Rng;
+use crate::tensor::AnyTensor;
+use crate::util::csv::CsvTable;
+
+/// Sweep configuration.
+#[derive(Debug, Clone)]
+pub struct Fig1Config {
+    /// Input regime.
+    pub regime: Regime,
+    /// Embedding dimensions to sweep.
+    pub ks: Vec<usize>,
+    /// Independent map draws per point (paper: 100).
+    pub trials: usize,
+    /// Master seed.
+    pub seed: u64,
+    /// Worker threads.
+    pub threads: usize,
+}
+
+impl Fig1Config {
+    /// Paper-faithful defaults for a regime.
+    pub fn paper(regime: Regime) -> Self {
+        Self {
+            regime,
+            ks: vec![5, 10, 20, 50, 100, 200],
+            trials: 100,
+            seed: 0xF161,
+            threads: super::default_threads(),
+        }
+    }
+
+    /// Reduced settings for smoke tests / quick benches.
+    pub fn quick(regime: Regime) -> Self {
+        Self {
+            ks: vec![5, 20, 80],
+            trials: 12,
+            ..Self::paper(regime)
+        }
+    }
+}
+
+/// The projection series for a regime.
+pub fn series_for(regime: Regime) -> Vec<MapSpec> {
+    let tensorized = [
+        MapSpec::Tt(2),
+        MapSpec::Tt(5),
+        MapSpec::Tt(10),
+        MapSpec::Cp(4),
+        MapSpec::Cp(25),
+        MapSpec::Cp(100),
+    ];
+    let mut out: Vec<MapSpec> = Vec::new();
+    match regime {
+        Regime::Small => out.push(MapSpec::Gaussian),
+        Regime::Medium => out.push(MapSpec::VerySparse),
+        Regime::High => {}
+    }
+    out.extend(tensorized);
+    out
+}
+
+/// One output row.
+#[derive(Debug, Clone)]
+pub struct Fig1Row {
+    /// Series label.
+    pub map: String,
+    /// Embedding dimension.
+    pub k: usize,
+    /// Mean distortion ratio over trials.
+    pub mean: f64,
+    /// Std of the distortion ratio.
+    pub std: f64,
+}
+
+/// Run the sweep; returns all rows.
+pub fn run(cfg: &Fig1Config) -> Vec<Fig1Row> {
+    let mut rng = Rng::seed_from(cfg.seed);
+    let x = AnyTensor::Tt(regime_input(cfg.regime, &mut rng));
+    let numel = crate::tensor::Shape::new(x.dims()).numel_f64();
+    let mut rows = Vec::new();
+    for spec in series_for(cfg.regime) {
+        if !spec.feasible(numel) {
+            continue;
+        }
+        for &k in &cfg.ks {
+            let (mean, std) = mean_distortion(
+                spec,
+                &x,
+                k,
+                cfg.trials,
+                crate::rng::derive_seed(cfg.seed, k as u64),
+                cfg.threads,
+            );
+            rows.push(Fig1Row { map: spec.label(), k, mean, std });
+        }
+    }
+    rows
+}
+
+/// Render rows as the CSV the bench target writes.
+pub fn to_csv(regime: Regime, rows: &[Fig1Row]) -> CsvTable {
+    let mut t = CsvTable::new(&["case", "map", "k", "mean_distortion", "std_distortion"]);
+    for r in rows {
+        t.push_row(vec![
+            regime.name().to_string(),
+            r.map.clone(),
+            r.k.to_string(),
+            format!("{:.6}", r.mean),
+            format!("{:.6}", r.std),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_match_paper_legends() {
+        let small = series_for(Regime::Small);
+        assert!(small.contains(&MapSpec::Gaussian));
+        assert!(!small.contains(&MapSpec::VerySparse));
+        let medium = series_for(Regime::Medium);
+        assert!(medium.contains(&MapSpec::VerySparse));
+        let high = series_for(Regime::High);
+        assert_eq!(high.len(), 6, "high order: tensorized maps only");
+    }
+
+    #[test]
+    fn quick_run_produces_all_rows() {
+        let mut cfg = Fig1Config::quick(Regime::Small);
+        cfg.ks = vec![4, 16];
+        cfg.trials = 4;
+        let rows = run(&cfg);
+        // 7 series × 2 k values.
+        assert_eq!(rows.len(), 14);
+        assert!(rows.iter().all(|r| r.mean.is_finite() && r.mean >= 0.0));
+        let csv = to_csv(Regime::Small, &rows);
+        assert_eq!(csv.len(), 14);
+    }
+
+    #[test]
+    fn tt_beats_cp_at_high_order_quickcheck() {
+        // A coarse version of the paper's headline claim, cheap enough for
+        // unit tests: at N=25 with matched parameter budgets, TT(5)
+        // distorts far less than CP(25).
+        let cfg = Fig1Config {
+            regime: Regime::High,
+            ks: vec![50],
+            trials: 8,
+            seed: 11,
+            threads: 2,
+        };
+        let mut rng = Rng::seed_from(cfg.seed);
+        let x = AnyTensor::Tt(regime_input(cfg.regime, &mut rng));
+        let (tt, _) = mean_distortion(MapSpec::Tt(5), &x, 50, cfg.trials, 5, 2);
+        let (cp, _) = mean_distortion(MapSpec::Cp(25), &x, 50, cfg.trials, 5, 2);
+        assert!(
+            tt < cp,
+            "TT should dominate CP at high order: tt={tt:.3} cp={cp:.3}"
+        );
+    }
+}

@@ -1,0 +1,153 @@
+//! Figure 2: embedding time vs `k` for the medium-order case, with the
+//! input given in TT format (top panel) or CP format (bottom panel).
+//!
+//! The paper's observations to reproduce:
+//! * `f_TT(R)` is fastest on TT inputs, `f_CP(R)` on CP inputs;
+//! * `f_TT(R)` beats very sparse RP at every `k`, while `f_CP(100)` does
+//!   not.
+
+use super::MapSpec;
+use crate::data::inputs::{regime_cp_input, regime_input, Regime};
+use crate::rng::Rng;
+use crate::tensor::AnyTensor;
+use crate::util::csv::CsvTable;
+use crate::util::Timer;
+
+/// Sweep configuration.
+#[derive(Debug, Clone)]
+pub struct Fig2Config {
+    /// Embedding dimensions to sweep.
+    pub ks: Vec<usize>,
+    /// Timed repetitions per point (median reported).
+    pub reps: usize,
+    /// Master seed.
+    pub seed: u64,
+}
+
+impl Fig2Config {
+    /// Paper-style defaults.
+    pub fn paper() -> Self {
+        Self { ks: vec![10, 25, 50, 100, 250, 500], reps: 5, seed: 0xF162 }
+    }
+
+    /// Reduced settings for smoke tests.
+    pub fn quick() -> Self {
+        Self { ks: vec![10, 50], reps: 2, seed: 0xF162 }
+    }
+}
+
+/// Map series of the figure.
+pub fn series() -> Vec<MapSpec> {
+    vec![
+        MapSpec::Tt(2),
+        MapSpec::Tt(5),
+        MapSpec::Tt(10),
+        MapSpec::Cp(4),
+        MapSpec::Cp(25),
+        MapSpec::Cp(100),
+        MapSpec::VerySparse,
+    ]
+}
+
+/// One timing row.
+#[derive(Debug, Clone)]
+pub struct Fig2Row {
+    /// `"tt"` or `"cp"` — the input format (panel).
+    pub input_format: String,
+    /// Series label.
+    pub map: String,
+    /// Embedding dimension.
+    pub k: usize,
+    /// Median seconds to project the input once.
+    pub secs: f64,
+}
+
+/// Median time to apply `f` to `x`, over `reps` repetitions.
+fn time_projection(f: &dyn crate::projections::Projection, x: &AnyTensor, reps: usize) -> f64 {
+    let mut times = Vec::with_capacity(reps);
+    // One warmup.
+    std::hint::black_box(f.project(x));
+    for _ in 0..reps {
+        let t = Timer::start();
+        std::hint::black_box(f.project(x));
+        times.push(t.elapsed_secs());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+/// Run both panels.
+pub fn run(cfg: &Fig2Config) -> Vec<Fig2Row> {
+    let mut rng = Rng::seed_from(cfg.seed);
+    let regime = Regime::Medium;
+    let x_tt = AnyTensor::Tt(regime_input(regime, &mut rng));
+    let x_cp = AnyTensor::Cp(regime_cp_input(regime, &mut rng));
+    let dims = regime.dims();
+    let mut rows = Vec::new();
+    for (panel, x) in [("tt", &x_tt), ("cp", &x_cp)] {
+        for spec in series() {
+            for &k in &cfg.ks {
+                let f = spec.build(&dims, k, &mut rng);
+                let secs = time_projection(f.as_ref(), x, cfg.reps);
+                rows.push(Fig2Row {
+                    input_format: panel.to_string(),
+                    map: spec.label(),
+                    k,
+                    secs,
+                });
+            }
+        }
+    }
+    rows
+}
+
+/// Render rows as CSV.
+pub fn to_csv(rows: &[Fig2Row]) -> CsvTable {
+    let mut t = CsvTable::new(&["input_format", "map", "k", "median_secs"]);
+    for r in rows {
+        t.push_row(vec![
+            r.input_format.clone(),
+            r.map.clone(),
+            r.k.to_string(),
+            format!("{:.6e}", r.secs),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_run_covers_both_panels() {
+        let mut cfg = Fig2Config::quick();
+        cfg.ks = vec![8];
+        cfg.reps = 1;
+        let rows = run(&cfg);
+        // 7 series × 1 k × 2 panels.
+        assert_eq!(rows.len(), 14);
+        assert!(rows.iter().all(|r| r.secs >= 0.0));
+        assert!(rows.iter().any(|r| r.input_format == "tt"));
+        assert!(rows.iter().any(|r| r.input_format == "cp"));
+    }
+
+    #[test]
+    fn tt_map_on_tt_input_beats_very_sparse() {
+        // The paper's Fig 2 claim (top panel): f_TT is always faster than
+        // very sparse RP on TT inputs. Checked at one medium k.
+        let mut rng = Rng::seed_from(3);
+        let regime = Regime::Medium;
+        let x = AnyTensor::Tt(regime_input(regime, &mut rng));
+        let dims = regime.dims();
+        let k = 50;
+        let f_tt = MapSpec::Tt(10).build(&dims, k, &mut rng);
+        let f_vs = MapSpec::VerySparse.build(&dims, k, &mut rng);
+        let t_tt = time_projection(f_tt.as_ref(), &x, 3);
+        let t_vs = time_projection(f_vs.as_ref(), &x, 3);
+        assert!(
+            t_tt < t_vs,
+            "TT(10) should beat very sparse on TT input: {t_tt:.2e} vs {t_vs:.2e}"
+        );
+    }
+}

@@ -1,0 +1,197 @@
+//! Figure 3 (Appendix B.1): pairwise-distance preservation on image data.
+//!
+//! 50 images (CIFAR-10 when available, synthetic natural-image model
+//! otherwise — DESIGN.md §5) reshaped to `4×4×4×4×4×3`, normalized; the
+//! metric is the mean pairwise ratio
+//! `(1/(n(n−1)))·Σ_{i≠j} ‖f(x_i)−f(x_j)‖ / ‖x_i−x_j‖` and its std over
+//! trials. Panels pair ranks so parameter counts match: rank 1 (TT1/CP1),
+//! ranks 3–10 (TT3/CP10), ranks 5–25 (TT5/CP25); Gaussian RP everywhere.
+
+use super::MapSpec;
+use crate::data::images::{load_images, TENSOR_DIMS};
+use crate::rng::Rng;
+use crate::tensor::DenseTensor;
+use crate::util::csv::CsvTable;
+use std::path::PathBuf;
+
+/// Sweep configuration.
+#[derive(Debug, Clone)]
+pub struct Fig3Config {
+    /// Number of images (paper: 50).
+    pub n_images: usize,
+    /// Embedding dimensions to sweep.
+    pub ks: Vec<usize>,
+    /// Map redraws per point (paper: 100).
+    pub trials: usize,
+    /// Master seed.
+    pub seed: u64,
+    /// Optional CIFAR-10 binary batch path.
+    pub cifar_path: Option<PathBuf>,
+    /// Worker threads.
+    pub threads: usize,
+}
+
+impl Fig3Config {
+    /// Paper-style defaults (trials reduced from 100 to 25: the dense
+    /// Gaussian redraw dominates; scale up via --trials for publication
+    /// runs).
+    pub fn paper() -> Self {
+        Self {
+            n_images: 50,
+            ks: vec![5, 10, 25, 50, 100],
+            trials: 25,
+            seed: 0xF163,
+            cifar_path: Some(PathBuf::from("data/cifar-10-batches-bin/data_batch_1.bin")),
+            threads: super::default_threads(),
+        }
+    }
+
+    /// Reduced settings for smoke tests.
+    pub fn quick() -> Self {
+        Self {
+            n_images: 8,
+            ks: vec![10, 40],
+            trials: 4,
+            ..Self::paper()
+        }
+    }
+}
+
+/// The three paper panels: (panel label, TT rank, CP rank).
+pub fn panels() -> Vec<(&'static str, usize, usize)> {
+    vec![("rank1", 1, 1), ("rank3_10", 3, 10), ("rank5_25", 5, 25)]
+}
+
+/// One output row.
+#[derive(Debug, Clone)]
+pub struct Fig3Row {
+    /// Panel label.
+    pub panel: String,
+    /// Series label.
+    pub map: String,
+    /// Embedding dimension.
+    pub k: usize,
+    /// Mean pairwise-distance ratio (1.0 = perfect).
+    pub mean_ratio: f64,
+    /// Std of the ratio across trials.
+    pub std_ratio: f64,
+    /// Data source (`"cifar10"` or `"synthetic"`).
+    pub source: String,
+}
+
+/// Mean pairwise ratio for one drawn map over the image set.
+fn pairwise_ratio(f: &dyn crate::projections::Projection, tensors: &[DenseTensor]) -> f64 {
+    let n = tensors.len();
+    // Project each image once; use linearity for pair differences.
+    let projected: Vec<Vec<f64>> = tensors.iter().map(|t| f.project_dense(t)).collect();
+    let mut acc = 0.0;
+    let mut count = 0usize;
+    for i in 0..n {
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            let dx = tensors[i].sub(&tensors[j]).fro_norm();
+            if dx < 1e-12 {
+                continue;
+            }
+            let dy: f64 = projected[i]
+                .iter()
+                .zip(&projected[j])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            acc += dy / dx;
+            count += 1;
+        }
+    }
+    acc / count as f64
+}
+
+/// Run the full sweep.
+pub fn run(cfg: &Fig3Config) -> Vec<Fig3Row> {
+    let (images, source) = load_images(cfg.n_images, cfg.cifar_path.as_deref(), cfg.seed);
+    let tensors: Vec<DenseTensor> = images.iter().map(|im| im.to_tensor()).collect();
+    let dims = TENSOR_DIMS.to_vec();
+    let mut rows = Vec::new();
+    for (panel, tt_rank, cp_rank) in panels() {
+        let specs = vec![MapSpec::Gaussian, MapSpec::Tt(tt_rank), MapSpec::Cp(cp_rank)];
+        for spec in specs {
+            for &k in &cfg.ks {
+                let trial_ids: Vec<u64> = (0..cfg.trials as u64).collect();
+                let seed = crate::rng::derive_seed(cfg.seed, (k * 31 + tt_rank) as u64);
+                let ratios = crate::util::threadpool::par_map(trial_ids, cfg.threads, |t| {
+                    let mut rng = Rng::seed_from(crate::rng::derive_seed(seed, t));
+                    let f = spec.build(&dims, k, &mut rng);
+                    pairwise_ratio(f.as_ref(), &tensors)
+                });
+                let s = crate::util::stats::Summary::of(&ratios);
+                rows.push(Fig3Row {
+                    panel: panel.to_string(),
+                    map: spec.label(),
+                    k,
+                    mean_ratio: s.mean,
+                    std_ratio: s.std,
+                    source: source.to_string(),
+                });
+            }
+        }
+    }
+    rows
+}
+
+/// Render rows as CSV.
+pub fn to_csv(rows: &[Fig3Row]) -> CsvTable {
+    let mut t = CsvTable::new(&["panel", "map", "k", "mean_ratio", "std_ratio", "source"]);
+    for r in rows {
+        t.push_row(vec![
+            r.panel.clone(),
+            r.map.clone(),
+            r.k.to_string(),
+            format!("{:.6}", r.mean_ratio),
+            format!("{:.6}", r.std_ratio),
+            r.source.clone(),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_run_covers_all_panels() {
+        let mut cfg = Fig3Config::quick();
+        cfg.n_images = 5;
+        cfg.ks = vec![16];
+        cfg.trials = 3;
+        cfg.cifar_path = None;
+        let rows = run(&cfg);
+        // 3 panels × 3 series × 1 k.
+        assert_eq!(rows.len(), 9);
+        for r in &rows {
+            assert!(r.mean_ratio.is_finite() && r.mean_ratio > 0.0, "{r:?}");
+            assert_eq!(r.source, "synthetic");
+        }
+    }
+
+    #[test]
+    fn ratios_concentrate_near_one_for_large_k() {
+        let mut cfg = Fig3Config::quick();
+        cfg.n_images = 6;
+        cfg.ks = vec![128];
+        cfg.trials = 4;
+        cfg.cifar_path = None;
+        let rows = run(&cfg);
+        // Gaussian at k=128 must sit well within 25% of 1.0.
+        let g = rows
+            .iter()
+            .find(|r| r.map == "gaussian" && r.panel == "rank1")
+            .unwrap();
+        assert!(
+            (g.mean_ratio - 1.0).abs() < 0.25,
+            "gaussian ratio {g:?}"
+        );
+    }
+}

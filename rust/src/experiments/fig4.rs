@@ -1,0 +1,162 @@
+//! Figure 4 (Appendix B.2): embedding time vs input dimension `d^N` for
+//! the medium-order family `d = 3, N ∈ {8, 11, 12, 13}`, with the input
+//! in TT format (left panel) or CP format (right panel).
+//!
+//! Baselines: Gaussian RP (while the `k×d^N` matrix is materializable)
+//! and very sparse RP — mirroring the paper, the Gaussian series stops
+//! where memory runs out.
+
+use super::MapSpec;
+use crate::rng::Rng;
+use crate::tensor::{AnyTensor, CpTensor, TtTensor};
+use crate::util::csv::CsvTable;
+use crate::util::Timer;
+
+/// Sweep configuration.
+#[derive(Debug, Clone)]
+pub struct Fig4Config {
+    /// Orders to sweep (paper: 8, 11, 12, 13).
+    pub orders: Vec<usize>,
+    /// Mode size (paper: 3).
+    pub dim: usize,
+    /// Input rank (paper: 10).
+    pub input_rank: usize,
+    /// Embedding dimension (fixed across the sweep).
+    pub k: usize,
+    /// Timed repetitions (median reported).
+    pub reps: usize,
+    /// Master seed.
+    pub seed: u64,
+}
+
+impl Fig4Config {
+    /// Paper-style defaults.
+    pub fn paper() -> Self {
+        Self {
+            orders: vec![8, 11, 12, 13],
+            dim: 3,
+            input_rank: 10,
+            k: 50,
+            reps: 3,
+            seed: 0xF164,
+        }
+    }
+
+    /// Reduced settings for smoke tests.
+    pub fn quick() -> Self {
+        Self {
+            orders: vec![5, 7],
+            input_rank: 4,
+            k: 10,
+            reps: 1,
+            ..Self::paper()
+        }
+    }
+}
+
+/// Series of the figure.
+pub fn series() -> Vec<MapSpec> {
+    vec![
+        MapSpec::Tt(5),
+        MapSpec::Tt(10),
+        MapSpec::Cp(25),
+        MapSpec::Cp(100),
+        MapSpec::Gaussian,
+        MapSpec::VerySparse,
+    ]
+}
+
+/// One timing row.
+#[derive(Debug, Clone)]
+pub struct Fig4Row {
+    /// `"tt"` or `"cp"` input format (panel).
+    pub input_format: String,
+    /// Series label.
+    pub map: String,
+    /// Tensor order `N`.
+    pub order: usize,
+    /// Input dimension `d^N`.
+    pub numel: f64,
+    /// Median seconds per projection.
+    pub secs: f64,
+}
+
+/// Run both panels.
+pub fn run(cfg: &Fig4Config) -> Vec<Fig4Row> {
+    let mut rng = Rng::seed_from(cfg.seed);
+    let mut rows = Vec::new();
+    for &n in &cfg.orders {
+        let dims = vec![cfg.dim; n];
+        let numel = crate::tensor::Shape::new(&dims).numel_f64();
+        let x_tt = AnyTensor::Tt(TtTensor::random_unit(&dims, cfg.input_rank, &mut rng));
+        let x_cp = AnyTensor::Cp(CpTensor::random_unit(&dims, cfg.input_rank, &mut rng));
+        for (panel, x) in [("tt", &x_tt), ("cp", &x_cp)] {
+            for spec in series() {
+                if !spec.feasible(numel) {
+                    continue; // Gaussian drops out at large d^N, as in the paper.
+                }
+                let f = spec.build(&dims, cfg.k, &mut rng);
+                let mut times = Vec::with_capacity(cfg.reps);
+                std::hint::black_box(f.project(x));
+                for _ in 0..cfg.reps {
+                    let t = Timer::start();
+                    std::hint::black_box(f.project(x));
+                    times.push(t.elapsed_secs());
+                }
+                times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                rows.push(Fig4Row {
+                    input_format: panel.to_string(),
+                    map: spec.label(),
+                    order: n,
+                    numel,
+                    secs: times[times.len() / 2],
+                });
+            }
+        }
+    }
+    rows
+}
+
+/// Render rows as CSV.
+pub fn to_csv(rows: &[Fig4Row]) -> CsvTable {
+    let mut t = CsvTable::new(&["input_format", "map", "order", "numel", "median_secs"]);
+    for r in rows {
+        t.push_row(vec![
+            r.input_format.clone(),
+            r.map.clone(),
+            r.order.to_string(),
+            format!("{:.3e}", r.numel),
+            format!("{:.6e}", r.secs),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_run_produces_rows_for_both_panels() {
+        let cfg = Fig4Config::quick();
+        let rows = run(&cfg);
+        assert!(!rows.is_empty());
+        assert!(rows.iter().any(|r| r.input_format == "tt"));
+        assert!(rows.iter().any(|r| r.input_format == "cp"));
+        assert!(rows.iter().all(|r| r.secs.is_finite()));
+    }
+
+    #[test]
+    fn gaussian_drops_out_at_infeasible_sizes() {
+        let cfg = Fig4Config {
+            orders: vec![16], // 3^16 ≈ 43M, k×D ≫ 2^24
+            reps: 1,
+            k: 4,
+            input_rank: 2,
+            ..Fig4Config::paper()
+        };
+        let rows = run(&cfg);
+        assert!(rows.iter().all(|r| r.map != "gaussian"));
+        assert!(rows.iter().any(|r| r.map.starts_with("tt_")));
+    }
+}

@@ -1,0 +1,133 @@
+//! Experiment harness: one module per figure of the paper's evaluation,
+//! plus the ablation suite. Each regenerator prints a table and writes a
+//! CSV under `results/` (see DESIGN.md §4 for the experiment index).
+
+pub mod ablations;
+pub mod fig1;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+
+use crate::projections::{
+    CpProjection, GaussianProjection, Projection, SparseKind, SparseProjection, TtProjection,
+};
+use crate::rng::Rng;
+use crate::tensor::AnyTensor;
+
+/// A projection-map family + hyperparameters, instantiable per trial.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MapSpec {
+    /// Dense Gaussian RP.
+    Gaussian,
+    /// Very sparse RP (Li et al., `s = √D`).
+    VerySparse,
+    /// `f_TT(R)`.
+    Tt(usize),
+    /// `f_CP(R)`.
+    Cp(usize),
+}
+
+impl MapSpec {
+    /// Series label used in tables/CSV (matches the paper's legends).
+    pub fn label(&self) -> String {
+        match self {
+            MapSpec::Gaussian => "gaussian".into(),
+            MapSpec::VerySparse => "very_sparse".into(),
+            MapSpec::Tt(r) => format!("tt_r{r}"),
+            MapSpec::Cp(r) => format!("cp_r{r}"),
+        }
+    }
+
+    /// Draw a fresh map of this spec.
+    pub fn build(&self, dims: &[usize], k: usize, rng: &mut Rng) -> Box<dyn Projection> {
+        match self {
+            MapSpec::Gaussian => Box::new(GaussianProjection::new(dims, k, rng)),
+            MapSpec::VerySparse => {
+                Box::new(SparseProjection::new(dims, k, SparseKind::VerySparse, rng))
+            }
+            MapSpec::Tt(r) => Box::new(TtProjection::new(dims, *r, k, rng)),
+            MapSpec::Cp(r) => Box::new(CpProjection::new(dims, *r, k, rng)),
+        }
+    }
+
+    /// Whether this spec can handle the given dense input dimension.
+    pub fn feasible(&self, numel_f64: f64) -> bool {
+        match self {
+            // Dense matrix k×D must materialize.
+            MapSpec::Gaussian => numel_f64 <= (1 << 24) as f64,
+            // Sparse rows index into [D]; the practical bound is usize
+            // indexing (time is handled by the k-grids).
+            MapSpec::VerySparse => numel_f64 <= (1u64 << 40) as f64,
+            MapSpec::Tt(_) | MapSpec::Cp(_) => true,
+        }
+    }
+}
+
+/// Mean (and std) distortion ratio of `spec` on input `x` over `trials`
+/// independent map draws — the quantity plotted in Figure 1.
+pub fn mean_distortion(
+    spec: MapSpec,
+    x: &AnyTensor,
+    k: usize,
+    trials: usize,
+    seed: u64,
+    threads: usize,
+) -> (f64, f64) {
+    let input_norm = x.fro_norm();
+    let dims = x.dims().to_vec();
+    let trial_ids: Vec<u64> = (0..trials as u64).collect();
+    let ds = crate::util::threadpool::par_map(trial_ids, threads, |t| {
+        let mut rng = Rng::seed_from(crate::rng::derive_seed(seed, t));
+        let f = spec.build(&dims, k, &mut rng);
+        let y = f.project(x);
+        crate::projections::distortion_ratio(&y, input_norm)
+    });
+    let s = crate::util::stats::Summary::of(&ds);
+    (s.mean, s.std)
+}
+
+/// Default number of worker threads for experiment sweeps.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::TtTensor;
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(MapSpec::Tt(5).label(), "tt_r5");
+        assert_eq!(MapSpec::Cp(25).label(), "cp_r25");
+        assert_eq!(MapSpec::Gaussian.label(), "gaussian");
+    }
+
+    #[test]
+    fn feasibility_gates_dense_maps() {
+        assert!(!MapSpec::Gaussian.feasible(3f64.powi(25)));
+        assert!(MapSpec::Tt(5).feasible(3f64.powi(25)));
+        assert!(MapSpec::Gaussian.feasible(3375.0));
+    }
+
+    #[test]
+    fn mean_distortion_decreases_with_k() {
+        let mut rng = Rng::seed_from(1);
+        let x = AnyTensor::Tt(TtTensor::random_unit(&[3; 5], 3, &mut rng));
+        let (d_small, _) = mean_distortion(MapSpec::Tt(5), &x, 4, 30, 7, 2);
+        let (d_large, _) = mean_distortion(MapSpec::Tt(5), &x, 128, 30, 7, 2);
+        assert!(
+            d_large < d_small,
+            "distortion should shrink with k: {d_small} vs {d_large}"
+        );
+    }
+
+    #[test]
+    fn mean_distortion_is_deterministic_in_seed() {
+        let mut rng = Rng::seed_from(2);
+        let x = AnyTensor::Tt(TtTensor::random_unit(&[3; 4], 2, &mut rng));
+        let a = mean_distortion(MapSpec::Cp(4), &x, 8, 10, 3, 2);
+        let b = mean_distortion(MapSpec::Cp(4), &x, 8, 10, 3, 4);
+        assert_eq!(a.0, b.0, "thread count must not change results");
+    }
+}

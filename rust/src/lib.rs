@@ -1,0 +1,60 @@
+//! # Tensorized Random Projections
+//!
+//! A production-grade reproduction of *"Tensorized Random Projections"*
+//! (Rakhshan & Rabusseau, AISTATS 2020).
+//!
+//! The paper introduces two tensorized Johnson-Lindenstrauss transforms,
+//! `f_TT(R)` and `f_CP(R)`, that replace the dense Gaussian matrix of a
+//! classical random projection with rows constrained to low-rank tensor
+//! train (TT) or CP structure. This crate implements:
+//!
+//! * the full tensor algebra substrate ([`tensor`], [`linalg`]) — dense
+//!   tensors, TT and CP formats, matricizations, inner products, norms;
+//! * the projection library ([`projections`]) — Gaussian, sparse,
+//!   very-sparse, TT(R), CP(R), TRP and Kronecker-FJLT maps with fast
+//!   paths for inputs given in TT or CP format;
+//! * the theoretical bounds from the paper ([`theory`]) used both for
+//!   validation and for auto-sizing projections;
+//! * a serving coordinator ([`coordinator`]) — request router, dynamic
+//!   batcher, worker pool and metrics — which executes projections either
+//!   through the native Rust engine or through AOT-compiled XLA artifacts
+//!   ([`runtime`]) produced by the JAX/Pallas build path in `python/`;
+//! * the experiment harness ([`experiments`]) regenerating every figure of
+//!   the paper's evaluation section.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use tensorized_rp::prelude::*;
+//!
+//! let mut rng = Rng::seed_from(42);
+//! // A 12-mode, 3-dimensional unit-norm tensor in TT format (rank 10).
+//! let x = TtTensor::random_unit(&[3; 12], 10, &mut rng);
+//! // A TT(5) tensorized random projection into R^64.
+//! let f = TtProjection::new(&[3; 12], 5, 64, &mut rng);
+//! let y = f.project_tt(&x);
+//! let distortion = (y.iter().map(|v| v * v).sum::<f64>() - 1.0).abs();
+//! assert!(distortion < 1.0);
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod projections;
+pub mod rng;
+pub mod runtime;
+pub mod sketch;
+pub mod tensor;
+pub mod theory;
+pub mod util;
+
+/// Convenient re-exports of the most commonly used types.
+pub mod prelude {
+    pub use crate::projections::{
+        CpProjection, GaussianProjection, Projection, SparseProjection, TtProjection,
+    };
+    pub use crate::rng::Rng;
+    pub use crate::tensor::{CpTensor, DenseTensor, TtTensor};
+}

@@ -1,0 +1,184 @@
+//! Iterative radix-2 complex FFT + circular convolution.
+//!
+//! Substrate for the Tensor Sketch baseline (Pham & Pagh 2013, the
+//! paper's related work): sketching a Kronecker/CP structure reduces to
+//! circular convolutions of count-sketches, computed here via FFT. No FFT
+//! crate offline, so this is a from-scratch iterative Cooley-Tukey with a
+//! wrap-around trick so *any* convolution length is supported with
+//! power-of-two transforms.
+
+use std::f64::consts::PI;
+
+/// In-place iterative radix-2 FFT over interleaved complex buffers.
+/// `inverse = true` computes the unscaled inverse (caller divides by n).
+fn fft_pow2(re: &mut [f64], im: &mut [f64], inverse: bool) {
+    let n = re.len();
+    debug_assert!(n.is_power_of_two());
+    debug_assert_eq!(im.len(), n);
+    // Bit-reversal permutation.
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            re.swap(i, j);
+            im.swap(i, j);
+        }
+    }
+    // Butterflies.
+    let mut len = 2;
+    while len <= n {
+        let ang = 2.0 * PI / len as f64 * if inverse { 1.0 } else { -1.0 };
+        let (wr, wi) = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let mut cur_r = 1.0f64;
+            let mut cur_i = 0.0f64;
+            for k in 0..len / 2 {
+                let (ar, ai) = (re[i + k], im[i + k]);
+                let (br, bi) = (re[i + k + len / 2], im[i + k + len / 2]);
+                let tr = br * cur_r - bi * cur_i;
+                let ti = br * cur_i + bi * cur_r;
+                re[i + k] = ar + tr;
+                im[i + k] = ai + ti;
+                re[i + k + len / 2] = ar - tr;
+                im[i + k + len / 2] = ai - ti;
+                let nr = cur_r * wr - cur_i * wi;
+                cur_i = cur_r * wi + cur_i * wr;
+                cur_r = nr;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// Complex spectrum of a real signal, zero-padded to `n_fft` (power of 2).
+pub fn rfft(signal: &[f64], n_fft: usize) -> (Vec<f64>, Vec<f64>) {
+    assert!(n_fft.is_power_of_two());
+    assert!(n_fft >= signal.len());
+    let mut re = vec![0.0; n_fft];
+    let mut im = vec![0.0; n_fft];
+    re[..signal.len()].copy_from_slice(signal);
+    fft_pow2(&mut re, &mut im, false);
+    (re, im)
+}
+
+/// Pointwise complex multiply: `a *= b`.
+pub fn spectrum_mul(ar: &mut [f64], ai: &mut [f64], br: &[f64], bi: &[f64]) {
+    for k in 0..ar.len() {
+        let r = ar[k] * br[k] - ai[k] * bi[k];
+        let i = ar[k] * bi[k] + ai[k] * br[k];
+        ar[k] = r;
+        ai[k] = i;
+    }
+}
+
+/// Inverse FFT returning the real part (scaled).
+pub fn irfft(re: &mut [f64], im: &mut [f64]) -> Vec<f64> {
+    let n = re.len();
+    fft_pow2(re, im, true);
+    re.iter().map(|&x| x / n as f64).collect()
+}
+
+/// Circular convolution of length `n` (any `n`): linear convolution via a
+/// power-of-two FFT of size ≥ `2n−1`, then wrap-around mod `n`.
+pub fn circular_convolve(a: &[f64], b: &[f64]) -> Vec<f64> {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if n == 1 {
+        return vec![a[0] * b[0]];
+    }
+    // Small sizes: direct O(n²) beats FFT overhead.
+    if n <= 32 {
+        let mut out = vec![0.0; n];
+        for i in 0..n {
+            let av = a[i];
+            if av == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                out[(i + j) % n] += av * b[j];
+            }
+        }
+        return out;
+    }
+    let n_fft = (2 * n - 1).next_power_of_two();
+    let (mut ar, mut ai) = rfft(a, n_fft);
+    let (br, bi) = rfft(b, n_fft);
+    spectrum_mul(&mut ar, &mut ai, &br, &bi);
+    let lin = irfft(&mut ar, &mut ai);
+    let mut out = vec![0.0; n];
+    for (i, &v) in lin.iter().take(2 * n - 1).enumerate() {
+        out[i % n] += v;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn convolve_naive(a: &[f64], b: &[f64]) -> Vec<f64> {
+        let n = a.len();
+        let mut out = vec![0.0; n];
+        for i in 0..n {
+            for j in 0..n {
+                out[(i + j) % n] += a[i] * b[j];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn fft_roundtrip() {
+        let mut rng = Rng::seed_from(1);
+        let x = rng.gaussian_vec(64, 1.0);
+        let (mut re, mut im) = rfft(&x, 64);
+        let back = irfft(&mut re, &mut im);
+        for (a, b) in x.iter().zip(&back) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn parseval_holds() {
+        let mut rng = Rng::seed_from(2);
+        let x = rng.gaussian_vec(128, 1.0);
+        let (re, im) = rfft(&x, 128);
+        let time: f64 = x.iter().map(|v| v * v).sum();
+        let freq: f64 = re.iter().zip(&im).map(|(r, i)| r * r + i * i).sum::<f64>() / 128.0;
+        assert!((time - freq).abs() < 1e-8 * time);
+    }
+
+    #[test]
+    fn circular_convolution_matches_naive_all_sizes() {
+        let mut rng = Rng::seed_from(3);
+        for n in [1usize, 2, 3, 7, 16, 33, 50, 100, 127] {
+            let a = rng.gaussian_vec(n, 1.0);
+            let b = rng.gaussian_vec(n, 1.0);
+            let fast = circular_convolve(&a, &b);
+            let slow = convolve_naive(&a, &b);
+            for (x, y) in fast.iter().zip(&slow) {
+                assert!((x - y).abs() < 1e-9, "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn convolution_with_delta_is_shift() {
+        let a = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let mut delta = vec![0.0; 5];
+        delta[1] = 1.0; // shift by one
+        let out = circular_convolve(&a, &delta);
+        assert_eq!(out.iter().map(|x| x.round()).collect::<Vec<_>>(), vec![5.0, 1.0, 2.0, 3.0, 4.0]);
+    }
+}

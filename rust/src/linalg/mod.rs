@@ -1,0 +1,54 @@
+//! Dense linear algebra substrate.
+//!
+//! No BLAS/LAPACK binding is available offline, so the kernels the tensor
+//! layer needs are implemented here from scratch:
+//!
+//! * [`Matrix`] — a minimal row-major matrix type,
+//! * [`matmul`] / [`Matrix::matmul`] — cache-blocked GEMM with a
+//!   micro-kernel written to autovectorize,
+//! * [`qr`] — Householder QR (thin), used by TT orthogonalization,
+//! * [`svd`] — one-sided Jacobi SVD, used by TT-SVD and TT-rounding.
+//!
+//! All routines are deterministic and carry unit tests against algebraic
+//! identities (reconstruction, orthogonality, known decompositions).
+
+pub mod fft;
+mod gemm;
+mod matrix;
+mod qr;
+mod svd;
+
+pub use gemm::{matmul, matmul_acc, matmul_into, matvec};
+pub use matrix::Matrix;
+pub use qr::qr;
+pub use svd::{svd, Svd};
+
+/// Frobenius-norm relative error `‖a − b‖ / max(‖a‖, 1e-300)`.
+pub fn rel_err(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (x, y) in a.iter().zip(b) {
+        num += (x - y) * (x - y);
+        den += x * x;
+    }
+    (num / den.max(1e-300)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_err_zero_for_identical() {
+        let a = [1.0, 2.0, 3.0];
+        assert_eq!(rel_err(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn rel_err_scales() {
+        let a = [1.0, 0.0];
+        let b = [1.1, 0.0];
+        assert!((rel_err(&a, &b) - 0.1).abs() < 1e-12);
+    }
+}

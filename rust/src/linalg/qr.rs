@@ -1,0 +1,146 @@
+//! Thin Householder QR decomposition.
+//!
+//! Used by TT left/right-orthogonalization (a pre-step of TT-rounding).
+//! For an `m×n` input with `m ≥ n` it returns `Q` (`m×n`, orthonormal
+//! columns) and `R` (`n×n`, upper triangular) with `A = Q·R`; for `m < n`
+//! it returns the full `m×m` `Q` and `m×n` `R`.
+
+use super::Matrix;
+
+/// Householder QR. Returns `(q, r)` with `a = q·r`.
+pub fn qr(a: &Matrix) -> (Matrix, Matrix) {
+    let m = a.rows();
+    let n = a.cols();
+    let p = m.min(n);
+    // Work on a column-major copy of A for contiguous column access.
+    let mut r = a.clone();
+    // Householder vectors, one per reflection, stored densely.
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(p);
+
+    for j in 0..p {
+        // Compute the norm of the j-th column below the diagonal.
+        let mut norm2 = 0.0;
+        for i in j..m {
+            let x = r[(i, j)];
+            norm2 += x * x;
+        }
+        let norm = norm2.sqrt();
+        let mut v = vec![0.0; m - j];
+        if norm <= f64::EPSILON * 16.0 {
+            // Degenerate column: identity reflection.
+            vs.push(v);
+            continue;
+        }
+        let alpha = if r[(j, j)] >= 0.0 { -norm } else { norm };
+        for i in j..m {
+            v[i - j] = r[(i, j)];
+        }
+        v[0] -= alpha;
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 <= f64::EPSILON * 16.0 {
+            vs.push(vec![0.0; m - j]);
+            continue;
+        }
+        // Apply H = I − 2vvᵀ/‖v‖² to R[j.., j..].
+        for col in j..n {
+            let mut dot = 0.0;
+            for i in j..m {
+                dot += v[i - j] * r[(i, col)];
+            }
+            let f = 2.0 * dot / vnorm2;
+            for i in j..m {
+                r[(i, col)] -= f * v[i - j];
+            }
+        }
+        vs.push(v);
+    }
+
+    // Zero out strictly-lower part of R and trim to p×n.
+    let mut r_out = Matrix::zeros(p, n);
+    for i in 0..p {
+        for j in i..n {
+            r_out[(i, j)] = r[(i, j)];
+        }
+    }
+
+    // Accumulate Q by applying the reflections to the identity (thin: m×p).
+    let mut q = Matrix::zeros(m, p);
+    for i in 0..p {
+        q[(i, i)] = 1.0;
+    }
+    for j in (0..p).rev() {
+        let v = &vs[j];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 <= f64::EPSILON * 16.0 {
+            continue;
+        }
+        for col in 0..p {
+            let mut dot = 0.0;
+            for i in j..m {
+                dot += v[i - j] * q[(i, col)];
+            }
+            let f = 2.0 * dot / vnorm2;
+            for i in j..m {
+                q[(i, col)] -= f * v[i - j];
+            }
+        }
+    }
+
+    (q, r_out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rel_err;
+    use crate::rng::Rng;
+
+    fn check_qr(m: usize, n: usize, seed: u64) {
+        let mut rng = Rng::seed_from(seed);
+        let a = Matrix::from_vec(m, n, rng.gaussian_vec(m * n, 1.0));
+        let (q, r) = qr(&a);
+        let p = m.min(n);
+        assert_eq!(q.rows(), m);
+        assert_eq!(q.cols(), p);
+        assert_eq!(r.rows(), p);
+        assert_eq!(r.cols(), n);
+        // Reconstruction.
+        let qr_prod = q.matmul(&r);
+        assert!(rel_err(qr_prod.data(), a.data()) < 1e-10, "recon {m}x{n}");
+        // Orthonormal columns: QᵀQ = I.
+        let qtq = q.transpose().matmul(&q);
+        let eye = Matrix::identity(p);
+        assert!(rel_err(qtq.data(), eye.data()) < 1e-10, "ortho {m}x{n}");
+        // R upper triangular.
+        for i in 0..p {
+            for j in 0..i.min(n) {
+                assert!(r[(i, j)].abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn tall_square_wide() {
+        check_qr(8, 3, 1);
+        check_qr(5, 5, 2);
+        check_qr(3, 7, 3);
+        check_qr(40, 12, 4);
+        check_qr(1, 1, 5);
+    }
+
+    #[test]
+    fn rank_deficient_input() {
+        // Two identical columns.
+        let a = Matrix::from_rows(&[&[1.0, 1.0], &[2.0, 2.0], &[3.0, 3.0]]);
+        let (q, r) = qr(&a);
+        let qr_prod = q.matmul(&r);
+        assert!(rel_err(qr_prod.data(), a.data()) < 1e-10);
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let a = Matrix::zeros(4, 2);
+        let (q, r) = qr(&a);
+        assert!(q.matmul(&r).fro_norm() < 1e-12);
+    }
+}

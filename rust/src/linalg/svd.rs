@@ -1,0 +1,250 @@
+//! One-sided Jacobi SVD.
+//!
+//! Needed by TT-SVD (decomposing dense tensors into TT format, used by the
+//! image experiments) and TT-rounding. One-sided Jacobi is simple, robust
+//! and accurate for the small-to-medium matrices that arise from TT
+//! matricizations (`Rd × R'` with `R, R' ≤ ~100`).
+//!
+//! For an `m×n` input (any aspect ratio) [`svd`] returns `U` (`m×p`),
+//! `σ` (length `p`) and `V` (`n×p`) with `A ≈ U·diag(σ)·Vᵀ`, `p = min(m,n)`,
+//! singular values sorted descending.
+
+use super::{qr, Matrix};
+
+/// Result of a singular value decomposition.
+#[derive(Debug, Clone)]
+pub struct Svd {
+    /// Left singular vectors, `m × p`.
+    pub u: Matrix,
+    /// Singular values, descending, length `p`.
+    pub s: Vec<f64>,
+    /// Right singular vectors, `n × p` (i.e. `A ≈ U diag(s) Vᵀ`).
+    pub v: Matrix,
+}
+
+impl Svd {
+    /// Reconstruct `U diag(s) Vᵀ`.
+    pub fn reconstruct(&self) -> Matrix {
+        let p = self.s.len();
+        let mut us = self.u.clone();
+        for i in 0..us.rows() {
+            for j in 0..p {
+                us[(i, j)] *= self.s[j];
+            }
+        }
+        us.matmul(&self.v.transpose())
+    }
+
+    /// Truncate to the leading `r` components.
+    pub fn truncate(&self, r: usize) -> Svd {
+        let r = r.min(self.s.len());
+        Svd {
+            u: self.u.leading_cols(r),
+            s: self.s[..r].to_vec(),
+            v: self.v.leading_cols(r),
+        }
+    }
+
+    /// Smallest rank whose discarded tail has Frobenius norm ≤ `eps * ‖A‖`.
+    pub fn rank_for_tolerance(&self, eps: f64) -> usize {
+        let total: f64 = self.s.iter().map(|x| x * x).sum();
+        if total == 0.0 {
+            return 0;
+        }
+        let budget = eps * eps * total;
+        let mut tail = 0.0;
+        for r in (0..self.s.len()).rev() {
+            tail += self.s[r] * self.s[r];
+            if tail > budget {
+                return r + 1;
+            }
+        }
+        0
+    }
+}
+
+/// One-sided Jacobi SVD (with a QR pre-reduction for tall matrices).
+pub fn svd(a: &Matrix) -> Svd {
+    let m = a.rows();
+    let n = a.cols();
+    if m < n {
+        // SVD of Aᵀ and swap factors.
+        let t = svd(&a.transpose());
+        return Svd { u: t.v, s: t.s, v: t.u };
+    }
+    // Tall case: QR first so Jacobi runs on an n×n matrix.
+    if m > n {
+        let (q, r) = qr(a);
+        let inner = svd(&r);
+        return Svd { u: q.matmul(&inner.u), s: inner.s, v: inner.v };
+    }
+
+    // Square one-sided Jacobi: rotate columns of W = A·J₁·J₂… until all
+    // column pairs are orthogonal; then σ_j = ‖w_j‖, U = W·diag(1/σ), V = ∏J.
+    let mut w = a.clone();
+    let mut v = Matrix::identity(n);
+    let eps = 1e-14;
+    let max_sweeps = 60;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q_ in (p + 1)..n {
+                // Gram entries for the column pair (p, q).
+                let mut app = 0.0;
+                let mut aqq = 0.0;
+                let mut apq = 0.0;
+                for i in 0..n {
+                    let wp = w[(i, p)];
+                    let wq = w[(i, q_)];
+                    app += wp * wp;
+                    aqq += wq * wq;
+                    apq += wp * wq;
+                }
+                if apq.abs() <= eps * (app * aqq).sqrt().max(1e-300) {
+                    continue;
+                }
+                off = off.max(apq.abs() / (app * aqq).sqrt().max(1e-300));
+                // Jacobi rotation annihilating the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..n {
+                    let wp = w[(i, p)];
+                    let wq = w[(i, q_)];
+                    w[(i, p)] = c * wp - s * wq;
+                    w[(i, q_)] = s * wp + c * wq;
+                }
+                for i in 0..n {
+                    let vp = v[(i, p)];
+                    let vq = v[(i, q_)];
+                    v[(i, p)] = c * vp - s * vq;
+                    v[(i, q_)] = s * vp + c * vq;
+                }
+            }
+        }
+        if off < eps * 10.0 {
+            break;
+        }
+    }
+
+    // Extract singular values and normalize columns of W into U.
+    let mut s: Vec<f64> = (0..n)
+        .map(|j| (0..n).map(|i| w[(i, j)] * w[(i, j)]).sum::<f64>().sqrt())
+        .collect();
+    let mut u = w;
+    for j in 0..n {
+        if s[j] > 1e-300 {
+            let inv = 1.0 / s[j];
+            for i in 0..n {
+                u[(i, j)] *= inv;
+            }
+        }
+    }
+    // Sort descending by singular value.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| s[b].partial_cmp(&s[a]).unwrap());
+    let mut u_sorted = Matrix::zeros(n, n);
+    let mut v_sorted = Matrix::zeros(n, n);
+    let mut s_sorted = vec![0.0; n];
+    for (new_j, &old_j) in order.iter().enumerate() {
+        s_sorted[new_j] = s[old_j];
+        for i in 0..n {
+            u_sorted[(i, new_j)] = u[(i, old_j)];
+            v_sorted[(i, new_j)] = v[(i, old_j)];
+        }
+    }
+    s = s_sorted;
+    Svd { u: u_sorted, s, v: v_sorted }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rel_err;
+    use crate::rng::Rng;
+
+    fn check_svd(m: usize, n: usize, seed: u64) {
+        let mut rng = Rng::seed_from(seed);
+        let a = Matrix::from_vec(m, n, rng.gaussian_vec(m * n, 1.0));
+        let d = svd(&a);
+        let p = m.min(n);
+        assert_eq!(d.u.rows(), m);
+        assert_eq!(d.u.cols(), p);
+        assert_eq!(d.v.rows(), n);
+        assert_eq!(d.s.len(), p);
+        // Reconstruction.
+        let rec = d.reconstruct();
+        assert!(rel_err(rec.data(), a.data()) < 1e-9, "recon {m}x{n}");
+        // Orthogonality.
+        let utu = d.u.transpose().matmul(&d.u);
+        assert!(rel_err(utu.data(), Matrix::identity(p).data()) < 1e-9);
+        let vtv = d.v.transpose().matmul(&d.v);
+        assert!(rel_err(vtv.data(), Matrix::identity(p).data()) < 1e-9);
+        // Descending singular values, all nonnegative.
+        for w in d.s.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+        assert!(d.s.iter().all(|&x| x >= 0.0));
+    }
+
+    #[test]
+    fn shapes() {
+        check_svd(6, 6, 1);
+        check_svd(10, 4, 2);
+        check_svd(4, 10, 3);
+        check_svd(1, 1, 4);
+        check_svd(30, 30, 5);
+    }
+
+    #[test]
+    fn known_diagonal() {
+        let a = Matrix::from_rows(&[&[3.0, 0.0], &[0.0, 2.0]]);
+        let d = svd(&a);
+        assert!((d.s[0] - 3.0).abs() < 1e-12);
+        assert!((d.s[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn low_rank_input_detected() {
+        // Rank-1 outer product.
+        let mut rng = Rng::seed_from(9);
+        let u = rng.gaussian_vec(12, 1.0);
+        let v = rng.gaussian_vec(7, 1.0);
+        let mut a = Matrix::zeros(12, 7);
+        for i in 0..12 {
+            for j in 0..7 {
+                a[(i, j)] = u[i] * v[j];
+            }
+        }
+        let d = svd(&a);
+        assert!(d.s[1] < 1e-9 * d.s[0]);
+        assert_eq!(d.rank_for_tolerance(1e-8), 1);
+    }
+
+    #[test]
+    fn truncate_keeps_best_approximation() {
+        let mut rng = Rng::seed_from(13);
+        let a = Matrix::from_vec(8, 8, rng.gaussian_vec(64, 1.0));
+        let d = svd(&a);
+        let t = d.truncate(3);
+        // Eckart-Young: the absolute error equals the dropped tail's norm.
+        let rec = t.reconstruct();
+        let err_abs: f64 = rec
+            .data()
+            .iter()
+            .zip(a.data())
+            .map(|(x, y)| (x - y) * (x - y))
+            .sum::<f64>()
+            .sqrt();
+        let tail: f64 = d.s[3..].iter().map(|x| x * x).sum::<f64>().sqrt();
+        assert!((err_abs - tail).abs() < 1e-8, "err={err_abs} tail={tail}");
+    }
+
+    #[test]
+    fn zero_matrix() {
+        let a = Matrix::zeros(3, 5);
+        let d = svd(&a);
+        assert!(d.s.iter().all(|&x| x == 0.0));
+    }
+}

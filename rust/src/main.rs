@@ -1,0 +1,414 @@
+//! `trp` — the tensorized-random-projections CLI.
+//!
+//! ```text
+//! trp serve       [--requests N] [--rate R] [--case medium] [--no-pjrt]
+//! trp project     --case medium --format tt [--k 64] [--map tt:5]
+//! trp experiment  fig1|fig2|fig3|fig4|ablation [--quick] [--trials T]
+//! trp bounds      --eps 0.5 --n 12 --r 10 --m 100 [--delta 0.05]
+//! trp artifacts   [--artifacts DIR]          # list + verify compiled set
+//! ```
+
+use tensorized_rp::config::AppConfig;
+use tensorized_rp::coordinator::{Coordinator, CoordinatorConfig, ProjectRequest};
+use tensorized_rp::data::inputs::{unit_input, Regime};
+use tensorized_rp::data::workload::{poisson_trace, FormatMix};
+use tensorized_rp::experiments::{ablations, fig1, fig2, fig3, fig4, MapSpec};
+use tensorized_rp::rng::Rng;
+use tensorized_rp::runtime::PjrtEngine;
+use tensorized_rp::tensor::AnyTensor;
+use tensorized_rp::theory;
+use tensorized_rp::util::cli::Args;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<(), String> {
+    let cfg = AppConfig::from_args(args)?;
+    match args.pos(0) {
+        Some("serve") => cmd_serve(args, &cfg),
+        Some("client") => cmd_client(args, &cfg),
+        Some("project") => cmd_project(args, &cfg),
+        Some("experiment") => cmd_experiment(args, &cfg),
+        Some("bounds") => cmd_bounds(args),
+        Some("sketch") => cmd_sketch(args, &cfg),
+        Some("artifacts") => cmd_artifacts(&cfg),
+        _ => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "trp — Tensorized Random Projections (Rakhshan & Rabusseau, AISTATS 2020)\n\
+         \n\
+         subcommands:\n\
+           serve       run the compression service on a synthetic trace\n\
+           project     project one random input and print the distortion\n\
+           experiment  regenerate a paper figure: fig1|fig2|fig3|fig4|ablation\n\
+           bounds      evaluate the Theorem 2 size bounds\n\
+           sketch      sketched SVD demo with a tensorized test matrix (§7)\n\
+           client      send requests to a listening `trp serve --listen` instance\n\
+           artifacts   list and verify the compiled artifact set\n\
+         \n\
+         common options: --seed S --trials T --threads W --quick --artifacts DIR --out DIR"
+    )
+}
+
+fn cmd_serve(args: &Args, cfg: &AppConfig) -> Result<(), String> {
+    let n: usize = args.get_parsed_or("requests", 200usize)?;
+    let rate: f64 = args.get_parsed_or("rate", 2_000.0f64)?;
+    let case = Regime::parse(&args.get_or("case", "medium")).ok_or("bad --case")?;
+    let use_pjrt = !args.flag("no-pjrt");
+
+    let engine = if use_pjrt {
+        match PjrtEngine::cpu() {
+            Ok(mut e) => match e.load_dir(&cfg.artifacts_dir) {
+                Ok(na) => {
+                    println!("[serve] PJRT {} with {na} artifacts", e.platform());
+                    Some(e)
+                }
+                Err(err) => {
+                    println!("[serve] artifacts unavailable ({err}); native only");
+                    None
+                }
+            },
+            Err(err) => {
+                println!("[serve] PJRT unavailable ({err}); native only");
+                None
+            }
+        }
+    } else {
+        None
+    };
+
+    let coord = Coordinator::start(
+        CoordinatorConfig { master_seed: cfg.seed, ..Default::default() },
+        engine,
+    );
+
+    // --listen ADDR: expose the service over TCP instead of replaying a
+    // synthetic trace (newline-delimited JSON; see coordinator::wire).
+    if let Some(addr) = args.get("listen") {
+        let coord = std::sync::Arc::new(coord);
+        let server = tensorized_rp::coordinator::NetServer::start(
+            std::sync::Arc::clone(&coord),
+            addr,
+        )
+        .map_err(|e| e.to_string())?;
+        println!("[serve] listening on {} — Ctrl-C to stop", server.addr());
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(5));
+            let m = coord.metrics();
+            println!(
+                "[serve] served={} completed={} pjrt_batches={} mean={:.0}µs",
+                server.served(),
+                m.completed,
+                m.pjrt_batches,
+                m.mean_latency_us
+            );
+        }
+    }
+
+    let trace = poisson_trace(n, rate, case, FormatMix::default(), cfg.seed);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = trace
+        .payloads
+        .into_iter()
+        .enumerate()
+        .map(|(i, p)| coord.submit(ProjectRequest::new(i as u64, p)))
+        .collect();
+    let mut ok = 0usize;
+    for rx in rxs {
+        if rx.recv().map_err(|e| e.to_string())?.is_ok() {
+            ok += 1;
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let m = coord.metrics();
+    println!(
+        "[serve] {ok}/{n} ok in {elapsed:.3}s → {:.0} req/s | native={} pjrt={} batches={} \
+         padded={} | mean={:.0}µs p50={}µs p99={}µs",
+        ok as f64 / elapsed,
+        m.native_requests,
+        m.pjrt_requests,
+        m.pjrt_batches,
+        m.padded_slots,
+        m.mean_latency_us,
+        m.p50_latency_us,
+        m.p99_latency_us,
+    );
+    coord.shutdown();
+    Ok(())
+}
+
+fn cmd_client(args: &Args, cfg: &AppConfig) -> Result<(), String> {
+    let addr = args.get("connect").unwrap_or("127.0.0.1:7070");
+    let case = Regime::parse(&args.get_or("case", "medium")).ok_or("bad --case")?;
+    let format = args.get_or("format", "tt");
+    let n: usize = args.get_parsed_or("requests", 4usize)?;
+    let mut client =
+        tensorized_rp::coordinator::NetClient::connect(addr).map_err(|e| e.to_string())?;
+    let mut rng = Rng::seed_from(cfg.seed);
+    for i in 0..n {
+        let x = unit_input(&case.dims(), case.input_rank(), &format, &mut rng);
+        let resp = client
+            .roundtrip(&ProjectRequest::new(i as u64, x))
+            .map_err(|e| e.to_string())?;
+        match (resp.embedding, resp.error) {
+            (Some(y), _) => {
+                let n2: f64 = y.iter().map(|v| v * v).sum();
+                println!(
+                    "id={} k={} ‖y‖²={n2:.4} via {}",
+                    resp.id,
+                    y.len(),
+                    resp.path.unwrap_or_default()
+                );
+            }
+            (_, Some(e)) => println!("id={} error: {e}", resp.id),
+            _ => println!("id={} empty response", resp.id),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_project(args: &Args, cfg: &AppConfig) -> Result<(), String> {
+    let case = Regime::parse(&args.get_or("case", "medium")).ok_or("bad --case")?;
+    let format = args.get_or("format", "tt");
+    let k: usize = args.get_parsed_or("k", 64usize)?;
+    let map = parse_map_spec(&args.get_or("map", "tt:5"))?;
+    let mut rng = Rng::seed_from(cfg.seed);
+    let x = unit_input(&case.dims(), case.input_rank(), &format, &mut rng);
+    let f = map.build(&case.dims(), k, &mut rng);
+    let t = tensorized_rp::util::Timer::start();
+    let y = f.project(&x);
+    let secs = t.elapsed_secs();
+    let d = tensorized_rp::projections::distortion_ratio(&y, x.fro_norm());
+    println!(
+        "map={} k={k} input={format}/{} | distortion={d:.4} | {:.3} ms | params={}",
+        f.name(),
+        case.name(),
+        secs * 1e3,
+        f.num_params()
+    );
+    Ok(())
+}
+
+fn parse_map_spec(s: &str) -> Result<MapSpec, String> {
+    match s {
+        "gaussian" => return Ok(MapSpec::Gaussian),
+        "very_sparse" | "sparse" => return Ok(MapSpec::VerySparse),
+        _ => {}
+    }
+    if let Some((kind, r)) = s.split_once(':') {
+        let r: usize = r.parse().map_err(|_| format!("bad rank in --map {s}"))?;
+        return match kind {
+            "tt" => Ok(MapSpec::Tt(r)),
+            "cp" => Ok(MapSpec::Cp(r)),
+            _ => Err(format!("unknown map kind {kind}")),
+        };
+    }
+    Err(format!("cannot parse --map {s} (want tt:R, cp:R, gaussian, very_sparse)"))
+}
+
+fn cmd_experiment(args: &Args, cfg: &AppConfig) -> Result<(), String> {
+    let which = args.pos(1).ok_or("experiment needs a figure name")?;
+    match which {
+        "fig1" => {
+            let case = Regime::parse(&args.get_or("case", "medium")).ok_or("bad --case")?;
+            let mut c = if cfg.quick {
+                fig1::Fig1Config::quick(case)
+            } else {
+                fig1::Fig1Config::paper(case)
+            };
+            c.seed = cfg.seed;
+            if let Some(t) = cfg.trials {
+                c.trials = t;
+            }
+            c.threads = cfg.threads();
+            let rows = fig1::run(&c);
+            let csv = fig1::to_csv(case, &rows);
+            print!("{}", csv.to_markdown());
+            let path = cfg.results_dir.join(format!("fig1_{}.csv", case.name()));
+            csv.write_to(&path).map_err(|e| e.to_string())?;
+            println!("[written {}]", path.display());
+        }
+        "fig2" => {
+            let c = if cfg.quick { fig2::Fig2Config::quick() } else { fig2::Fig2Config::paper() };
+            let rows = fig2::run(&c);
+            let csv = fig2::to_csv(&rows);
+            print!("{}", csv.to_markdown());
+            let path = cfg.results_dir.join("fig2_time.csv");
+            csv.write_to(&path).map_err(|e| e.to_string())?;
+            println!("[written {}]", path.display());
+        }
+        "fig3" => {
+            let mut c = if cfg.quick { fig3::Fig3Config::quick() } else { fig3::Fig3Config::paper() };
+            c.seed = cfg.seed;
+            if let Some(t) = cfg.trials {
+                c.trials = t;
+            }
+            c.threads = cfg.threads();
+            let rows = fig3::run(&c);
+            let csv = fig3::to_csv(&rows);
+            print!("{}", csv.to_markdown());
+            let path = cfg.results_dir.join("fig3_pairwise.csv");
+            csv.write_to(&path).map_err(|e| e.to_string())?;
+            println!("[written {}]", path.display());
+        }
+        "fig4" => {
+            let c = if cfg.quick { fig4::Fig4Config::quick() } else { fig4::Fig4Config::paper() };
+            let rows = fig4::run(&c);
+            let csv = fig4::to_csv(&rows);
+            print!("{}", csv.to_markdown());
+            let path = cfg.results_dir.join("fig4_scaling.csv");
+            csv.write_to(&path).map_err(|e| e.to_string())?;
+            println!("[written {}]", path.display());
+        }
+        "ablation" => {
+            let mut c = if cfg.quick {
+                ablations::AblationConfig::quick()
+            } else {
+                ablations::AblationConfig::default_sweep()
+            };
+            if let Some(t) = cfg.trials {
+                c.trials = t;
+            }
+            c.threads = cfg.threads();
+            let rows = ablations::run_variance_sweep(&c);
+            let csv = ablations::to_csv(&rows);
+            print!("{}", csv.to_markdown());
+            let path = cfg.results_dir.join("ablation_variance.csv");
+            csv.write_to(&path).map_err(|e| e.to_string())?;
+            println!("[written {}]", path.display());
+        }
+        other => return Err(format!("unknown experiment {other}")),
+    }
+    Ok(())
+}
+
+fn cmd_bounds(args: &Args) -> Result<(), String> {
+    let eps: f64 = args.get_parsed_or("eps", 0.5f64)?;
+    let n: usize = args.get_parsed_or("n", 12usize)?;
+    let r: usize = args.get_parsed_or("r", 10usize)?;
+    let m: usize = args.get_parsed_or("m", 100usize)?;
+    let delta: f64 = args.get_parsed_or("delta", 0.05f64)?;
+    let tt = theory::tt_k_lower_bound(eps, n, r, m, delta);
+    let cp = theory::cp_k_lower_bound(eps, n, r, m, delta);
+    let (best, k) = theory::suggest_k(eps, n, r, m, delta);
+    println!("Theorem 2 size bounds (ε={eps}, N={n}, R={r}, m={m}, δ={delta}):");
+    println!("  k_TT ≳ {tt:.3e}");
+    println!("  k_CP ≳ {cp:.3e}   (ratio CP/TT = {:.3e})", cp / tt);
+    println!("  suggestion: {best} with k ≈ {k:.3e}");
+    println!(
+        "  variance bounds at k=100: TT {:.3e}, CP {:.3e}",
+        theory::tt_variance_bound(n, r, 100),
+        theory::cp_variance_bound(n, r, 100)
+    );
+    Ok(())
+}
+
+fn cmd_sketch(args: &Args, cfg: &AppConfig) -> Result<(), String> {
+    // Demo of the §7 future-work extension: sketched low-rank SVD with a
+    // tensorized (Definition-1) test matrix on a synthetic decaying-
+    // spectrum matrix whose columns factorize over `--col-dims`.
+    use tensorized_rp::linalg::{qr, Matrix};
+    use tensorized_rp::sketch::{sketched_svd, SketchConfig};
+    let rows: usize = args.get_parsed_or("rows", 64usize)?;
+    let rank: usize = args.get_parsed_or("rank", 8usize)?;
+    let tt_rank: usize = args.get_parsed_or("tt-rank", 3usize)?;
+    let col_dims: Vec<usize> = args
+        .get_or("col-dims", "4,4,4,4")
+        .split(',')
+        .map(|s| s.parse().map_err(|_| format!("bad --col-dims entry {s}")))
+        .collect::<Result<_, String>>()?;
+    let cols: usize = col_dims.iter().product();
+    let mut rng = Rng::seed_from(cfg.seed);
+    // Synthetic matrix with geometric spectrum 0.7^i.
+    let (u, _) = qr(&Matrix::from_vec(rows, rows, rng.gaussian_vec(rows * rows, 1.0)));
+    let (v, _) = qr(&Matrix::from_vec(cols, cols.min(rows), {
+        let n = cols * cols.min(rows);
+        rng.gaussian_vec(n, 1.0)
+    }));
+    let mut a = Matrix::zeros(rows, cols);
+    for r in 0..rows.min(cols) {
+        let sv = 0.7f64.powi(r as i32);
+        for i in 0..rows {
+            for j in 0..cols {
+                a[(i, j)] += sv * u[(i, r)] * v[(j, r)];
+            }
+        }
+    }
+    let t = tensorized_rp::util::Timer::start();
+    let out = sketched_svd(
+        &a,
+        &col_dims,
+        SketchConfig { rank, oversample: 8, tt_rank, seed: cfg.seed },
+    );
+    let secs = t.elapsed_secs();
+    let err = tensorized_rp::linalg::rel_err(a.data(), out.svd.reconstruct().data());
+    println!(
+        "sketched SVD: {rows}×{cols} → rank {rank} in {:.1} ms | rel err {err:.4} | \
+         tensorized Ω stores {} params (dense Ω would store {})",
+        secs * 1e3,
+        out.omega_params,
+        cols * (rank + 8)
+    );
+    Ok(())
+}
+
+fn cmd_artifacts(cfg: &AppConfig) -> Result<(), String> {
+    let mut engine = PjrtEngine::cpu().map_err(|e| e.to_string())?;
+    let n = engine.load_dir(&cfg.artifacts_dir).map_err(|e| e.to_string())?;
+    println!("[artifacts] compiled {n} artifacts on {}", engine.platform());
+    for name in engine.artifact_names() {
+        let spec = engine.spec(&name).unwrap();
+        println!(
+            "  {name}: kind={:?} k={} B={} pallas={} params={}",
+            spec.kind,
+            spec.k,
+            spec.batch,
+            spec.use_pallas,
+            spec.params.len()
+        );
+    }
+    // Smoke-execute one TT artifact through the coordinator and report the
+    // squared norm (≈ 1 for unit inputs).
+    let names = engine.artifact_names();
+    if let Some(name) = names.iter().find(|n| {
+        engine.spec(n).map(|s| s.kind == tensorized_rp::runtime::ArtifactKind::Tt) == Some(true)
+    }) {
+        let spec = engine.spec(name).unwrap().clone();
+        let (n_modes, d, _r, rt) = spec.tt_meta().map_err(|e| e.to_string())?;
+        let mut rng = Rng::seed_from(7);
+        let x = tensorized_rp::tensor::TtTensor::random_unit(&vec![d; n_modes], rt, &mut rng);
+        let coord = Coordinator::start(
+            CoordinatorConfig { master_seed: cfg.seed, ..Default::default() },
+            Some(engine),
+        );
+        let resp = coord.project_blocking(ProjectRequest::new(0, AnyTensor::Tt(x)))?;
+        println!(
+            "  smoke: {name} → ‖y‖² = {:.4} via {}",
+            tensorized_rp::projections::squared_norm(&resp.embedding),
+            resp.path
+        );
+        coord.shutdown();
+    }
+    Ok(())
+}

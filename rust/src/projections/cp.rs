@@ -1,0 +1,229 @@
+//! `f_CP(R)` — the CP random projection of **Definition 2**.
+//!
+//! Component `i` is `(1/√k)·⟨[[A¹ᵢ,…,A^Nᵢ]], X⟩` with all factor entries
+//! i.i.d. `N(0, (1/R)^{1/N})`. Storage `O(kNdR)`; projecting CP inputs
+//! costs `O(kNd·max(R,R̃)²)` and TT inputs `O(kNd·max(R,R̃)³)`.
+//!
+//! The paper's central negative result: the variance bound carries a
+//! `3^{N-1}` factor that the rank `R` cannot mitigate, so this map needs
+//! `k` exponential in `N` — implemented here both as a first-class map and
+//! as the foil for the TT map in every experiment.
+
+use super::Projection;
+use crate::rng::Rng;
+use crate::tensor::{CpTensor, DenseTensor, TtTensor};
+
+/// CP random projection map.
+pub struct CpProjection {
+    dims: Vec<usize>,
+    rank: usize,
+    k: usize,
+    /// The `k` random CP rows.
+    rows: Vec<CpTensor>,
+    scale: f64,
+}
+
+impl CpProjection {
+    /// Draw a fresh `f_CP(R)` for inputs of shape `dims` into `R^k`.
+    pub fn new(dims: &[usize], rank: usize, k: usize, rng: &mut Rng) -> Self {
+        assert!(rank >= 1, "CP rank must be ≥ 1");
+        assert!(k >= 1, "embedding dimension must be ≥ 1");
+        let rows = (0..k)
+            .map(|_| CpTensor::random_projection_row(dims, rank, rng))
+            .collect();
+        Self {
+            dims: dims.to_vec(),
+            rank,
+            k,
+            rows,
+            scale: 1.0 / (k as f64).sqrt(),
+        }
+    }
+
+    /// Assemble a map from pre-built rows (internal; used by the TRP
+    /// equivalence construction via [`CpProjection::from_rows`]).
+    pub(crate) fn from_parts(dims: Vec<usize>, rank: usize, k: usize, rows: Vec<CpTensor>) -> Self {
+        Self {
+            dims,
+            rank,
+            k,
+            rows,
+            scale: 1.0 / (k as f64).sqrt(),
+        }
+    }
+
+    /// The CP rank `R` of the map.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// The random CP rows.
+    pub fn rows(&self) -> &[CpTensor] {
+        &self.rows
+    }
+
+    /// Inner product of one CP row with a dense tensor:
+    /// `⟨[[A¹,…,A^N]], X⟩ = Σ_r ⟨a¹_r ∘ … ∘ a^N_r, X⟩`, each rank-one term
+    /// contracted mode by mode (`O(D)` per component, right-to-left).
+    fn row_dense_inner(row: &CpTensor, x: &DenseTensor) -> f64 {
+        let dims = x.dims();
+        let n = dims.len();
+        let mut total = 0.0;
+        // Reusable buffers across rank components.
+        let mut cur: Vec<f64> = Vec::new();
+        for r in 0..row.rank() {
+            // Contract the last mode: cur[prefix] = Σ_i X[prefix, i]·a^N[i].
+            let d_last = dims[n - 1];
+            let prefix = x.numel() / d_last;
+            cur.clear();
+            cur.resize(prefix, 0.0);
+            let f_last = row.factor(n - 1);
+            for p in 0..prefix {
+                let base = p * d_last;
+                let mut acc = 0.0;
+                for i in 0..d_last {
+                    acc += x.data()[base + i] * f_last[(i, r)];
+                }
+                cur[p] = acc;
+            }
+            // Contract remaining modes right-to-left.
+            for m in (0..n - 1).rev() {
+                let d = dims[m];
+                let pref = cur.len() / d;
+                let f = row.factor(m);
+                for p in 0..pref {
+                    let mut acc = 0.0;
+                    for i in 0..d {
+                        acc += cur[p * d + i] * f[(i, r)];
+                    }
+                    cur[p] = acc;
+                }
+                cur.truncate(pref);
+            }
+            total += cur[0];
+        }
+        total
+    }
+}
+
+impl Projection for CpProjection {
+    fn name(&self) -> String {
+        format!("CP(R={})", self.rank)
+    }
+
+    fn input_dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn num_params(&self) -> usize {
+        self.rows.iter().map(|r| r.num_params()).sum()
+    }
+
+    fn project_dense(&self, x: &DenseTensor) -> Vec<f64> {
+        assert_eq!(x.dims(), self.input_dims(), "input shape mismatch");
+        self.rows
+            .iter()
+            .map(|row| Self::row_dense_inner(row, x) * self.scale)
+            .collect()
+    }
+
+    fn project_tt(&self, x: &TtTensor) -> Vec<f64> {
+        assert_eq!(x.dims(), self.input_dims(), "input shape mismatch");
+        self.rows
+            .iter()
+            .map(|row| row.inner_tt(x) * self.scale)
+            .collect()
+    }
+
+    fn project_cp(&self, x: &CpTensor) -> Vec<f64> {
+        assert_eq!(x.dims(), self.input_dims(), "input shape mismatch");
+        self.rows
+            .iter()
+            .map(|row| row.inner(x) * self.scale)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projections::squared_norm;
+    use crate::util::stats::mean;
+
+    #[test]
+    fn all_input_formats_agree() {
+        let mut rng = Rng::seed_from(1);
+        let dims = [3usize, 2, 4, 2];
+        let f = CpProjection::new(&dims, 3, 9, &mut rng);
+        let x_cp = CpTensor::random_unit(&dims, 2, &mut rng);
+        let y_cp = f.project_cp(&x_cp);
+        let y_dense = f.project_dense(&x_cp.to_dense());
+        for (a, b) in y_cp.iter().zip(&y_dense) {
+            assert!((a - b).abs() < 1e-9, "cp={a} dense={b}");
+        }
+        let x_tt = TtTensor::random_unit(&dims, 2, &mut rng);
+        let y_tt = f.project_tt(&x_tt);
+        let y_td = f.project_dense(&x_tt.to_dense());
+        for (a, b) in y_tt.iter().zip(&y_td) {
+            assert!((a - b).abs() < 1e-9, "tt={a} dense={b}");
+        }
+    }
+
+    #[test]
+    fn expected_isometry_over_maps() {
+        // Theorem 1: E‖f_CP(X)‖² = ‖X‖²_F.
+        let mut rng = Rng::seed_from(2);
+        let dims = [3usize, 3, 3];
+        let x = CpTensor::random_unit(&dims, 2, &mut rng);
+        let norms: Vec<f64> = (0..500)
+            .map(|_| {
+                let f = CpProjection::new(&dims, 2, 8, &mut rng);
+                squared_norm(&f.project_cp(&x))
+            })
+            .collect();
+        let m = mean(&norms);
+        assert!((m - 1.0).abs() < 0.1, "mean={m}");
+    }
+
+    #[test]
+    fn num_params_matches_paper_formula() {
+        // NdR per row, k rows.
+        let mut rng = Rng::seed_from(3);
+        let (d, n, r, k) = (5usize, 6usize, 4usize, 3usize);
+        let f = CpProjection::new(&vec![d; n], r, k, &mut rng);
+        assert_eq!(f.num_params(), k * n * d * r);
+    }
+
+    #[test]
+    fn works_on_high_order_without_densifying() {
+        let mut rng = Rng::seed_from(4);
+        let dims = vec![3usize; 25];
+        let f = CpProjection::new(&dims, 4, 4, &mut rng);
+        let x = TtTensor::random_unit(&dims, 3, &mut rng);
+        let y = f.project_tt(&x);
+        assert_eq!(y.len(), 4);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn cp_memory_is_below_tt_memory_at_matched_rank() {
+        // The paper compares ranks giving ≈ equal parameter counts;
+        // at the *same* rank CP stores ~R× fewer parameters.
+        let mut rng = Rng::seed_from(5);
+        let dims = vec![3usize; 8];
+        let f_cp = CpProjection::new(&dims, 10, 4, &mut rng);
+        let f_tt = crate::projections::TtProjection::new(&dims, 10, 4, &mut rng);
+        assert!(f_cp.num_params() < f_tt.num_params());
+    }
+
+    #[test]
+    fn name_includes_rank() {
+        let mut rng = Rng::seed_from(6);
+        let f = CpProjection::new(&[3, 3], 25, 2, &mut rng);
+        assert_eq!(f.name(), "CP(R=25)");
+    }
+}

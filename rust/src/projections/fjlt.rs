@@ -1,0 +1,248 @@
+//! Kronecker fast JL transform (Jin, Kolda & Ward 2019) — the related-work
+//! baseline of the paper's §4.1 comparison.
+//!
+//! `f(x) = √(D/k)·S·(H D_s)^⊗·x`: per-mode random sign flips `D_s`,
+//! per-mode normalized Walsh-Hadamard transforms `H` (modes are zero-padded
+//! to powers of two), then uniform sampling `S` of `k` coordinates.
+//!
+//! Projecting a rank-one / CP input touches only the factors:
+//! `O(R̃·(N·d·log d + k·N))` — matching the complexity the paper quotes.
+//! TT inputs fall back to densification, mirroring the paper's remark that
+//! low-rank TT tensors have exponentially large CP rank and therefore no
+//! efficient path through this transform.
+
+use super::Projection;
+use crate::rng::Rng;
+use crate::tensor::{CpTensor, DenseTensor};
+
+/// Kronecker-structured fast JL transform.
+pub struct KroneckerFjlt {
+    dims: Vec<usize>,
+    /// Per-mode padded (power-of-two) sizes.
+    padded: Vec<usize>,
+    k: usize,
+    /// Per-mode sign vectors (length `dims[n]` — signs for real entries).
+    signs: Vec<Vec<f64>>,
+    /// Sampled multi-indices in the padded index space, one per output.
+    samples: Vec<Vec<usize>>,
+    scale: f64,
+}
+
+impl KroneckerFjlt {
+    /// Draw a fresh transform.
+    pub fn new(dims: &[usize], k: usize, rng: &mut Rng) -> Self {
+        assert!(k >= 1);
+        let padded: Vec<usize> = dims.iter().map(|&d| d.next_power_of_two()).collect();
+        let signs = dims
+            .iter()
+            .map(|&d| (0..d).map(|_| rng.sign()).collect())
+            .collect();
+        let samples = (0..k)
+            .map(|_| padded.iter().map(|&p| rng.below(p as u64) as usize).collect())
+            .collect();
+        let d_pad: f64 = padded.iter().map(|&p| p as f64).product();
+        Self {
+            dims: dims.to_vec(),
+            padded,
+            k,
+            signs,
+            samples,
+            // √(D_pad/k): sampling k of D_pad coordinates of an orthonormal
+            // transform of the (zero-padded, norm-preserved) input.
+            scale: (d_pad / k as f64).sqrt(),
+        }
+    }
+
+    /// In-place normalized fast Walsh-Hadamard transform (length must be a
+    /// power of two).
+    fn fwht(buf: &mut [f64]) {
+        let n = buf.len();
+        debug_assert!(n.is_power_of_two());
+        let mut h = 1;
+        while h < n {
+            let mut i = 0;
+            while i < n {
+                for j in i..i + h {
+                    let x = buf[j];
+                    let y = buf[j + h];
+                    buf[j] = x + y;
+                    buf[j + h] = x - y;
+                }
+                i += h * 2;
+            }
+            h *= 2;
+        }
+        let norm = 1.0 / (n as f64).sqrt();
+        for v in buf {
+            *v *= norm;
+        }
+    }
+
+    /// Apply sign-flip + pad + FWHT to a mode-`n` vector.
+    fn transform_mode_vec(&self, n: usize, v: &[f64]) -> Vec<f64> {
+        let mut buf = vec![0.0; self.padded[n]];
+        for (i, &x) in v.iter().enumerate() {
+            buf[i] = x * self.signs[n][i];
+        }
+        Self::fwht(&mut buf);
+        buf
+    }
+}
+
+impl Projection for KroneckerFjlt {
+    fn name(&self) -> String {
+        "KronFJLT".to_string()
+    }
+
+    fn input_dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn num_params(&self) -> usize {
+        // Signs + sampled indices; the Hadamard matrices are implicit.
+        self.signs.iter().map(|s| s.len()).sum::<usize>() + self.k * self.dims.len()
+    }
+
+    fn project_dense(&self, x: &DenseTensor) -> Vec<f64> {
+        assert_eq!(x.dims(), self.input_dims(), "input shape mismatch");
+        let n = self.dims.len();
+        // Materialize the padded tensor, then apply sign+FWHT mode by mode.
+        // Mode-wise application: for each mode, transform all fibers.
+        let mut data = {
+            // Zero-pad into the padded shape.
+            let mut padded = DenseTensor::zeros(&self.padded);
+            for idx in crate::tensor::Shape::new(&self.dims).iter_indices() {
+                padded.set(&idx, x.get(&idx) * sign_product(&self.signs, &idx));
+            }
+            padded
+        };
+        for mode in 0..n {
+            let dims = data.dims().to_vec();
+            let d = dims[mode];
+            let inner: usize = dims[mode + 1..].iter().product();
+            let outer: usize = dims[..mode].iter().product();
+            let buf = data.data_mut();
+            let mut fiber = vec![0.0; d];
+            for o in 0..outer {
+                for inn in 0..inner {
+                    for i in 0..d {
+                        fiber[i] = buf[(o * d + i) * inner + inn];
+                    }
+                    Self::fwht(&mut fiber);
+                    for i in 0..d {
+                        buf[(o * d + i) * inner + inn] = fiber[i];
+                    }
+                }
+            }
+        }
+        self.samples
+            .iter()
+            .map(|s| data.get(s) * self.scale)
+            .collect()
+    }
+
+    fn project_cp(&self, x: &CpTensor) -> Vec<f64> {
+        assert_eq!(x.dims(), self.input_dims(), "input shape mismatch");
+        let n = self.dims.len();
+        let r = x.rank();
+        // Transform each factor column: O(R·N·d log d).
+        // transformed[mode][r] is the padded, transformed column.
+        let transformed: Vec<Vec<Vec<f64>>> = (0..n)
+            .map(|mode| {
+                (0..r)
+                    .map(|comp| {
+                        let col: Vec<f64> = (0..self.dims[mode])
+                            .map(|i| x.factor(mode)[(i, comp)])
+                            .collect();
+                        self.transform_mode_vec(mode, &col)
+                    })
+                    .collect()
+            })
+            .collect();
+        // Evaluate sampled coordinates: O(k·N·R).
+        self.samples
+            .iter()
+            .map(|s| {
+                let mut acc = 0.0;
+                for comp in 0..r {
+                    let mut prod = 1.0;
+                    for (mode, &j) in s.iter().enumerate() {
+                        prod *= transformed[mode][comp][j];
+                    }
+                    acc += prod;
+                }
+                acc * self.scale
+            })
+            .collect()
+    }
+}
+
+/// Product of per-mode signs at a multi-index.
+fn sign_product(signs: &[Vec<f64>], idx: &[usize]) -> f64 {
+    idx.iter()
+        .enumerate()
+        .map(|(n, &i)| signs[n][i])
+        .product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projections::squared_norm;
+    use crate::util::stats::mean;
+
+    #[test]
+    fn fwht_is_orthonormal() {
+        let mut v = vec![1.0, 2.0, 3.0, 4.0];
+        let norm0: f64 = v.iter().map(|x| x * x).sum();
+        KroneckerFjlt::fwht(&mut v);
+        let norm1: f64 = v.iter().map(|x| x * x).sum();
+        assert!((norm0 - norm1).abs() < 1e-10);
+        // Applying twice recovers the input (H is an involution).
+        KroneckerFjlt::fwht(&mut v);
+        assert!((v[0] - 1.0).abs() < 1e-10);
+        assert!((v[3] - 4.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn cp_path_matches_dense_path() {
+        let mut rng = Rng::seed_from(1);
+        let dims = [3usize, 4, 2];
+        let f = KroneckerFjlt::new(&dims, 7, &mut rng);
+        let x = CpTensor::random_unit(&dims, 2, &mut rng);
+        let via_cp = f.project_cp(&x);
+        let via_dense = f.project_dense(&x.to_dense());
+        for (a, b) in via_cp.iter().zip(&via_dense) {
+            assert!((a - b).abs() < 1e-9, "cp={a} dense={b}");
+        }
+    }
+
+    #[test]
+    fn expected_isometry() {
+        let mut rng = Rng::seed_from(2);
+        let dims = [4usize, 4, 4];
+        let x = DenseTensor::random_unit(&dims, &mut rng);
+        let norms: Vec<f64> = (0..400)
+            .map(|_| {
+                let f = KroneckerFjlt::new(&dims, 16, &mut rng);
+                squared_norm(&f.project_dense(&x))
+            })
+            .collect();
+        let m = mean(&norms);
+        assert!((m - 1.0).abs() < 0.12, "mean={m}");
+    }
+
+    #[test]
+    fn non_power_of_two_modes_are_padded() {
+        let mut rng = Rng::seed_from(3);
+        let f = KroneckerFjlt::new(&[3, 5], 4, &mut rng);
+        let x = DenseTensor::random_unit(&[3, 5], &mut rng);
+        let y = f.project_dense(&x);
+        assert_eq!(y.len(), 4);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,145 @@
+//! Classical dense Gaussian random projection (the JLT of §2.3).
+//!
+//! `f(x) = (1/√k)·A·vec(x)` with `A ∈ R^{k×D}`, `A_ij ~ N(0,1)` i.i.d.
+//! Storage `O(kD)` and projection cost `O(kD)` — the baseline the
+//! tensorized maps beat on memory and, for compressed inputs, on time.
+
+use super::Projection;
+use crate::linalg::matvec;
+use crate::rng::Rng;
+use crate::tensor::DenseTensor;
+
+/// Dense Gaussian JL transform.
+pub struct GaussianProjection {
+    dims: Vec<usize>,
+    k: usize,
+    /// `k × D` row-major.
+    matrix: Vec<f64>,
+    scale: f64,
+}
+
+impl GaussianProjection {
+    /// Draw a fresh map for inputs of shape `dims` into `R^k`.
+    ///
+    /// Panics if the materialized matrix would exceed ~2^31 entries — at
+    /// that point the paper's medium/high-order regimes apply and a
+    /// tensorized map must be used instead.
+    pub fn new(dims: &[usize], k: usize, rng: &mut Rng) -> Self {
+        let d: usize = dims.iter().product();
+        let entries = d.checked_mul(k).expect("k·D overflows usize");
+        assert!(
+            entries <= (1 << 31),
+            "dense Gaussian RP with {entries} entries is not materializable; \
+             use TtProjection / CpProjection"
+        );
+        let matrix = rng.gaussian_vec(entries, 1.0);
+        Self {
+            dims: dims.to_vec(),
+            k,
+            matrix,
+            scale: 1.0 / (k as f64).sqrt(),
+        }
+    }
+
+    /// Input dimension `D = ∏ dims`.
+    pub fn input_dim(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Raw projection matrix (row-major `k × D`), used by the AOT runtime
+    /// to feed identical parameters to the compiled artifact.
+    pub fn matrix(&self) -> &[f64] {
+        &self.matrix
+    }
+}
+
+impl Projection for GaussianProjection {
+    fn name(&self) -> String {
+        "Gaussian".to_string()
+    }
+
+    fn input_dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn num_params(&self) -> usize {
+        self.matrix.len()
+    }
+
+    fn project_dense(&self, x: &DenseTensor) -> Vec<f64> {
+        assert_eq!(x.dims(), self.input_dims(), "input shape mismatch");
+        let d = self.input_dim();
+        let mut y = matvec(&self.matrix, x.data(), self.k, d);
+        for v in &mut y {
+            *v *= self.scale;
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projections::squared_norm;
+    use crate::util::stats::mean;
+
+    #[test]
+    fn output_length_is_k() {
+        let mut rng = Rng::seed_from(1);
+        let f = GaussianProjection::new(&[4, 5], 7, &mut rng);
+        let x = DenseTensor::random(&[4, 5], &mut rng);
+        assert_eq!(f.project_dense(&x).len(), 7);
+    }
+
+    #[test]
+    fn expected_isometry() {
+        // Average ‖f(x)‖² over many independent maps ≈ ‖x‖².
+        let mut rng = Rng::seed_from(2);
+        let x = DenseTensor::random_unit(&[6, 6], &mut rng);
+        let norms: Vec<f64> = (0..300)
+            .map(|_| {
+                let f = GaussianProjection::new(&[6, 6], 16, &mut rng);
+                squared_norm(&f.project_dense(&x))
+            })
+            .collect();
+        let m = mean(&norms);
+        assert!((m - 1.0).abs() < 0.05, "mean={m}");
+    }
+
+    #[test]
+    fn linearity() {
+        let mut rng = Rng::seed_from(3);
+        let f = GaussianProjection::new(&[3, 3], 5, &mut rng);
+        let a = DenseTensor::random(&[3, 3], &mut rng);
+        let b = DenseTensor::random(&[3, 3], &mut rng);
+        let mut apb = a.clone();
+        for (x, y) in apb.data_mut().iter_mut().zip(b.data()) {
+            *x += y;
+        }
+        let ya = f.project_dense(&a);
+        let yb = f.project_dense(&b);
+        let yab = f.project_dense(&apb);
+        for i in 0..5 {
+            assert!((yab[i] - ya[i] - yb[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn num_params_is_k_times_d() {
+        let mut rng = Rng::seed_from(4);
+        let f = GaussianProjection::new(&[3, 4, 5], 8, &mut rng);
+        assert_eq!(f.num_params(), 8 * 60);
+    }
+
+    #[test]
+    #[should_panic(expected = "not materializable")]
+    fn refuses_huge_inputs() {
+        let mut rng = Rng::seed_from(5);
+        // 3^20 * 10 entries ≫ 2^31.
+        let _ = GaussianProjection::new(&[3; 20], 10, &mut rng);
+    }
+}

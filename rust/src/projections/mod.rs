@@ -1,0 +1,118 @@
+//! Random projection maps — the paper's core contribution plus every
+//! baseline its evaluation compares against.
+//!
+//! | Map | Paper reference | Structure on rows of `A` |
+//! |---|---|---|
+//! | [`GaussianProjection`] | §2.3 | none (dense i.i.d. Gaussian) |
+//! | [`SparseProjection`] | Achlioptas 2003 / Li et al. 2006 | `s`-sparse ±√s |
+//! | [`TtProjection`] | **Definition 1** | rank-`R` tensor train |
+//! | [`CpProjection`] | **Definition 2** | rank-`R` CP |
+//! | [`TrpProjection`] | Sun et al. 2018 (§3 equivalence) | Khatri-Rao rank-1 average |
+//! | [`KroneckerFjlt`] | Jin et al. 2019 (§4.1 comparison) | per-mode SRHT |
+//!
+//! All maps implement the [`Projection`] trait, which exposes both a
+//! format-dispatching [`Projection::project`] and per-format fast paths
+//! with exactly the complexities the paper states in §3.
+
+mod cp;
+mod fjlt;
+mod gaussian;
+pub mod persist;
+mod sparse;
+mod tensor_sketch;
+mod trp;
+mod tt;
+
+pub use cp::CpProjection;
+pub use fjlt::KroneckerFjlt;
+pub use gaussian::GaussianProjection;
+pub use sparse::{SparseKind, SparseProjection};
+pub use tensor_sketch::TensorSketch;
+pub use trp::TrpProjection;
+pub use tt::TtProjection;
+
+use crate::tensor::{AnyTensor, CpTensor, DenseTensor, TtTensor};
+
+/// A linear map `R^{d₁×…×d_N} → R^k` that (approximately) preserves
+/// Euclidean geometry — a Johnson-Lindenstrauss transform.
+pub trait Projection: Send + Sync {
+    /// Human-readable name including parameters, e.g. `"TT(R=5)"`.
+    fn name(&self) -> String;
+
+    /// Input mode sizes `d₁,…,d_N`.
+    fn input_dims(&self) -> &[usize];
+
+    /// Embedding dimension `k`.
+    fn k(&self) -> usize;
+
+    /// Number of stored parameters (the paper's memory comparison).
+    fn num_params(&self) -> usize;
+
+    /// Project a dense input.
+    fn project_dense(&self, x: &DenseTensor) -> Vec<f64>;
+
+    /// Project an input given in TT format.
+    ///
+    /// Default: densify (correct but memory-bound — concrete maps override
+    /// with the compressed-format contraction the paper describes).
+    fn project_tt(&self, x: &TtTensor) -> Vec<f64> {
+        self.project_dense(&x.to_dense())
+    }
+
+    /// Project an input given in CP format.
+    fn project_cp(&self, x: &CpTensor) -> Vec<f64> {
+        self.project_dense(&x.to_dense())
+    }
+
+    /// Format-dispatching projection.
+    fn project(&self, x: &AnyTensor) -> Vec<f64> {
+        match x {
+            AnyTensor::Dense(t) => self.project_dense(t),
+            AnyTensor::Tt(t) => self.project_tt(t),
+            AnyTensor::Cp(t) => self.project_cp(t),
+        }
+    }
+}
+
+/// Distortion ratio `D(f, X) = | ‖f(X)‖²/‖X‖² − 1 |` — the embedding
+/// quality metric of the paper's §6.
+pub fn distortion_ratio(projected: &[f64], input_norm: f64) -> f64 {
+    let pn2: f64 = projected.iter().map(|v| v * v).sum();
+    (pn2 / (input_norm * input_norm) - 1.0).abs()
+}
+
+/// Squared norm of a projected vector.
+pub fn squared_norm(y: &[f64]) -> f64 {
+    y.iter().map(|v| v * v).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn distortion_ratio_of_perfect_isometry_is_zero() {
+        // ‖y‖² == ‖x‖² ⇒ distortion 0.
+        let y = [3.0, 4.0];
+        assert!((distortion_ratio(&y, 5.0) - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distortion_ratio_detects_inflation() {
+        let y = [2.0];
+        // ‖y‖² = 4, ‖x‖² = 1 ⇒ ratio |4 − 1| = 3.
+        assert!((distortion_ratio(&y, 1.0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dispatch_matches_direct_calls() {
+        let mut rng = Rng::seed_from(3);
+        let dims = [3usize, 4, 3];
+        let f = TtProjection::new(&dims, 2, 8, &mut rng);
+        let x = TtTensor::random_unit(&dims, 2, &mut rng);
+        let via_dispatch = f.project(&AnyTensor::Tt(x.clone()));
+        let direct = f.project_tt(&x);
+        assert_eq!(via_dispatch, direct);
+    }
+}

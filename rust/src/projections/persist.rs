@@ -1,0 +1,193 @@
+//! Projection-map persistence.
+//!
+//! A deployed compression service must answer with the *same* map across
+//! restarts and upgrades — seed-determinism (see
+//! `coordinator::ProjectionRegistry`) covers restarts, but only explicit
+//! serialization protects against RNG/algorithm changes. This module
+//! round-trips the two first-class maps through the in-repo JSON codec.
+
+use super::{CpProjection, Projection, TtProjection};
+use crate::linalg::Matrix;
+use crate::tensor::{CpTensor, TtTensor};
+use crate::util::json::{num_arr, obj, usize_arr, Json};
+
+/// Serialize a TT projection map.
+pub fn tt_to_json(f: &TtProjection) -> Json {
+    obj(vec![
+        ("kind", Json::Str("tt".into())),
+        ("dims", usize_arr(f.input_dims())),
+        ("rank", Json::Num(f.rank() as f64)),
+        ("k", Json::Num(f.k() as f64)),
+        (
+            "rows",
+            Json::Arr(
+                f.rows()
+                    .iter()
+                    .map(|row| {
+                        obj(vec![
+                            ("ranks", usize_arr(row.ranks())),
+                            (
+                                "cores",
+                                Json::Arr(
+                                    (0..row.order()).map(|n| num_arr(row.core(n))).collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Deserialize a TT projection map.
+pub fn tt_from_json(j: &Json) -> Result<TtProjection, String> {
+    expect_kind(j, "tt")?;
+    let dims = j.get("dims").and_then(Json::as_usize_vec).ok_or("missing dims")?;
+    let rank = j.get("rank").and_then(Json::as_usize).ok_or("missing rank")?;
+    let k = j.get("k").and_then(Json::as_usize).ok_or("missing k")?;
+    let rows_json = j.get("rows").and_then(Json::as_arr).ok_or("missing rows")?;
+    if rows_json.len() != k {
+        return Err(format!("row count {} != k {k}", rows_json.len()));
+    }
+    let rows = rows_json
+        .iter()
+        .map(|r| {
+            let ranks = r.get("ranks").and_then(Json::as_usize_vec).ok_or("missing ranks")?;
+            let cores = r
+                .get("cores")
+                .and_then(Json::as_arr)
+                .ok_or("missing cores")?
+                .iter()
+                .map(num_vec)
+                .collect::<Result<Vec<_>, _>>()?;
+            Ok(TtTensor::from_cores(&dims, &ranks, cores))
+        })
+        .collect::<Result<Vec<_>, String>>()?;
+    Ok(TtProjection::from_rows(dims, rank, k, rows))
+}
+
+/// Serialize a CP projection map.
+pub fn cp_to_json(f: &CpProjection) -> Json {
+    obj(vec![
+        ("kind", Json::Str("cp".into())),
+        ("dims", usize_arr(f.input_dims())),
+        ("rank", Json::Num(f.rank() as f64)),
+        ("k", Json::Num(f.k() as f64)),
+        (
+            "rows",
+            Json::Arr(
+                f.rows()
+                    .iter()
+                    .map(|row| {
+                        Json::Arr(
+                            (0..row.order())
+                                .map(|n| num_arr(row.factor(n).data()))
+                                .collect(),
+                        )
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Deserialize a CP projection map.
+pub fn cp_from_json(j: &Json) -> Result<CpProjection, String> {
+    expect_kind(j, "cp")?;
+    let dims = j.get("dims").and_then(Json::as_usize_vec).ok_or("missing dims")?;
+    let rank = j.get("rank").and_then(Json::as_usize).ok_or("missing rank")?;
+    let k = j.get("k").and_then(Json::as_usize).ok_or("missing k")?;
+    let rows_json = j.get("rows").and_then(Json::as_arr).ok_or("missing rows")?;
+    if rows_json.len() != k {
+        return Err(format!("row count {} != k {k}", rows_json.len()));
+    }
+    let rows = rows_json
+        .iter()
+        .map(|r| {
+            let factors = r
+                .as_arr()
+                .ok_or("row must be an array of factors")?
+                .iter()
+                .zip(&dims)
+                .map(|(f, &d)| Ok(Matrix::from_vec(d, rank, num_vec(f)?)))
+                .collect::<Result<Vec<_>, String>>()?;
+            Ok(CpTensor::from_factors(factors))
+        })
+        .collect::<Result<Vec<_>, String>>()?;
+    Ok(CpProjection::from_rows(dims, rank, k, rows))
+}
+
+fn expect_kind(j: &Json, want: &str) -> Result<(), String> {
+    match j.get("kind").and_then(Json::as_str) {
+        Some(k) if k == want => Ok(()),
+        Some(k) => Err(format!("expected kind {want:?}, found {k:?}")),
+        None => Err("missing kind".into()),
+    }
+}
+
+fn num_vec(j: &Json) -> Result<Vec<f64>, String> {
+    j.as_arr()
+        .ok_or("expected array")?
+        .iter()
+        .map(|v| v.as_f64().ok_or_else(|| "expected number".to_string()))
+        .collect()
+}
+
+impl TtProjection {
+    /// Assemble a map from explicit rows (deserialization).
+    pub fn from_rows(dims: Vec<usize>, rank: usize, k: usize, rows: Vec<TtTensor>) -> Self {
+        assert_eq!(rows.len(), k);
+        for r in &rows {
+            assert_eq!(r.dims(), &dims[..], "row shape mismatch");
+        }
+        Self::from_parts(dims, rank, k, rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+    use crate::tensor::TtTensor;
+
+    #[test]
+    fn tt_map_roundtrips_exactly() {
+        let mut rng = Rng::seed_from(1);
+        let dims = [3usize, 4, 3];
+        let f = TtProjection::new(&dims, 3, 7, &mut rng);
+        let text = tt_to_json(&f).to_string_pretty();
+        let g = tt_from_json(&Json::parse(&text).unwrap()).unwrap();
+        let x = TtTensor::random_unit(&dims, 2, &mut rng);
+        assert_eq!(f.project_tt(&x), g.project_tt(&x), "embeddings must be identical");
+        assert_eq!(g.k(), 7);
+        assert_eq!(g.rank(), 3);
+    }
+
+    #[test]
+    fn cp_map_roundtrips_exactly() {
+        let mut rng = Rng::seed_from(2);
+        let dims = [3usize, 2, 4];
+        let f = CpProjection::new(&dims, 4, 5, &mut rng);
+        let text = cp_to_json(&f).to_string_compact();
+        let g = cp_from_json(&Json::parse(&text).unwrap()).unwrap();
+        let x = crate::tensor::CpTensor::random_unit(&dims, 2, &mut rng);
+        assert_eq!(f.project_cp(&x), g.project_cp(&x));
+    }
+
+    #[test]
+    fn kind_mismatch_is_rejected() {
+        let mut rng = Rng::seed_from(3);
+        let f = TtProjection::new(&[3, 3], 2, 2, &mut rng);
+        let j = tt_to_json(&f);
+        assert!(cp_from_json(&j).is_err());
+    }
+
+    #[test]
+    fn corrupted_row_count_is_rejected() {
+        let mut rng = Rng::seed_from(4);
+        let f = TtProjection::new(&[3, 3], 2, 2, &mut rng);
+        let text = tt_to_json(&f).to_string_compact().replace("\"k\":2", "\"k\":3");
+        assert!(tt_from_json(&Json::parse(&text).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,215 @@
+//! Sparse and very-sparse random projections (Achlioptas 2003; Li,
+//! Hastie & Church 2006) — the strongest classical baselines in the
+//! paper's Figures 1 (medium), 2 and 4.
+//!
+//! Rows have i.i.d. entries `±√s` with probability `1/(2s)` each and `0`
+//! otherwise; `s = 3` (Achlioptas) or `s = √D` (very sparse). Rows are
+//! stored compressed (indices + values), so memory is `O(kD/s)` and dense
+//! projection costs `O(kD/s)`.
+//!
+//! For inputs in TT/CP format the projection evaluates only the input
+//! entries under the nonzeros (`O(k·(D/s)·N·r²)` for TT) — this is the
+//! very-sparse-RP-on-TT-input series of Figure 2, and is precisely where
+//! the tensorized maps win.
+
+use super::Projection;
+use crate::rng::{Rng, SparseEntry, SparseSampler};
+use crate::tensor::{CpTensor, DenseTensor, Shape, TtTensor};
+
+/// Which sparsity regime a [`SparseProjection`] uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SparseKind {
+    /// Achlioptas' database-friendly scheme, `s = 3`.
+    Achlioptas,
+    /// Li et al.'s very sparse scheme, `s = √D`.
+    VerySparse,
+}
+
+/// Sparse JL transform with compressed rows.
+pub struct SparseProjection {
+    dims: Vec<usize>,
+    k: usize,
+    kind: SparseKind,
+    /// Compressed rows: sorted (index, value) pairs.
+    rows: Vec<Vec<SparseEntry>>,
+    scale: f64,
+}
+
+impl SparseProjection {
+    /// Draw a fresh sparse map.
+    pub fn new(dims: &[usize], k: usize, kind: SparseKind, rng: &mut Rng) -> Self {
+        let d: usize = dims.iter().product();
+        let sampler = match kind {
+            SparseKind::Achlioptas => SparseSampler::achlioptas(),
+            SparseKind::VerySparse => SparseSampler::very_sparse(d),
+        };
+        let rows = (0..k).map(|_| sampler.sample_row(d, rng)).collect();
+        Self {
+            dims: dims.to_vec(),
+            k,
+            kind,
+            rows,
+            scale: 1.0 / (k as f64).sqrt(),
+        }
+    }
+
+    /// The sparsity parameter `s` in use.
+    pub fn s(&self) -> f64 {
+        match self.kind {
+            SparseKind::Achlioptas => 3.0,
+            SparseKind::VerySparse => {
+                (self.dims.iter().product::<usize>() as f64).sqrt().max(1.0)
+            }
+        }
+    }
+
+    /// Total stored nonzeros.
+    pub fn total_nnz(&self) -> usize {
+        self.rows.iter().map(|r| r.len()).sum()
+    }
+}
+
+impl Projection for SparseProjection {
+    fn name(&self) -> String {
+        match self.kind {
+            SparseKind::Achlioptas => "Sparse(s=3)".to_string(),
+            SparseKind::VerySparse => "VerySparse".to_string(),
+        }
+    }
+
+    fn input_dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn num_params(&self) -> usize {
+        // index + value per stored nonzero.
+        2 * self.total_nnz()
+    }
+
+    fn project_dense(&self, x: &DenseTensor) -> Vec<f64> {
+        assert_eq!(x.dims(), self.input_dims(), "input shape mismatch");
+        let data = x.data();
+        self.rows
+            .iter()
+            .map(|row| {
+                let mut acc = 0.0;
+                for e in row {
+                    acc += e.value * data[e.index];
+                }
+                acc * self.scale
+            })
+            .collect()
+    }
+
+    fn project_tt(&self, x: &TtTensor) -> Vec<f64> {
+        assert_eq!(x.dims(), self.input_dims(), "input shape mismatch");
+        let shape = Shape::new(x.dims());
+        // Allocation-free inner loop with prefix-cached TT evaluation:
+        // row nonzeros are sorted, so consecutive entries share long index
+        // prefixes the evaluator skips recomputing.
+        let mut idx = vec![0usize; x.order()];
+        let mut eval = crate::tensor::TtEntryEvaluator::new(x);
+        self.rows
+            .iter()
+            .map(|row| {
+                let mut acc = 0.0;
+                for e in row {
+                    shape.multi_into(e.index, &mut idx);
+                    acc += e.value * eval.eval(&idx);
+                }
+                acc * self.scale
+            })
+            .collect()
+    }
+
+    fn project_cp(&self, x: &CpTensor) -> Vec<f64> {
+        assert_eq!(x.dims(), self.input_dims(), "input shape mismatch");
+        let shape = Shape::new(x.dims());
+        let mut idx = vec![0usize; x.order()];
+        self.rows
+            .iter()
+            .map(|row| {
+                let mut acc = 0.0;
+                for e in row {
+                    shape.multi_into(e.index, &mut idx);
+                    acc += e.value * x.get(&idx);
+                }
+                acc * self.scale
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projections::squared_norm;
+    use crate::util::stats::mean;
+
+    #[test]
+    fn tt_path_matches_dense_path() {
+        let mut rng = Rng::seed_from(1);
+        let dims = [3usize, 4, 3, 2];
+        let f = SparseProjection::new(&dims, 9, SparseKind::VerySparse, &mut rng);
+        let x = TtTensor::random_unit(&dims, 3, &mut rng);
+        let via_tt = f.project_tt(&x);
+        let via_dense = f.project_dense(&x.to_dense());
+        for (a, b) in via_tt.iter().zip(&via_dense) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn cp_path_matches_dense_path() {
+        let mut rng = Rng::seed_from(2);
+        let dims = [3usize, 4, 3];
+        let f = SparseProjection::new(&dims, 6, SparseKind::Achlioptas, &mut rng);
+        let x = CpTensor::random_unit(&dims, 3, &mut rng);
+        let via_cp = f.project_cp(&x);
+        let via_dense = f.project_dense(&x.to_dense());
+        for (a, b) in via_cp.iter().zip(&via_dense) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn expected_isometry_achlioptas() {
+        let mut rng = Rng::seed_from(3);
+        let dims = [8usize, 8];
+        let x = DenseTensor::random_unit(&dims, &mut rng);
+        let norms: Vec<f64> = (0..400)
+            .map(|_| {
+                let f = SparseProjection::new(&dims, 16, SparseKind::Achlioptas, &mut rng);
+                squared_norm(&f.project_dense(&x))
+            })
+            .collect();
+        let m = mean(&norms);
+        assert!((m - 1.0).abs() < 0.06, "mean={m}");
+    }
+
+    #[test]
+    fn very_sparse_memory_is_sublinear() {
+        let mut rng = Rng::seed_from(4);
+        let dims = [4usize; 6]; // D = 4096, s = 64, ~64 nnz per row
+        let f = SparseProjection::new(&dims, 10, SparseKind::VerySparse, &mut rng);
+        let dense_params = 10 * 4096;
+        assert!(
+            f.num_params() < dense_params / 10,
+            "nnz params {} should be ≪ dense {}",
+            f.num_params(),
+            dense_params
+        );
+    }
+
+    #[test]
+    fn name_and_s() {
+        let mut rng = Rng::seed_from(5);
+        let f = SparseProjection::new(&[10, 10], 2, SparseKind::VerySparse, &mut rng);
+        assert_eq!(f.name(), "VerySparse");
+        assert!((f.s() - 10.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,207 @@
+//! Tensor Sketch (Pham & Pagh 2013) — the count-sketch-based related-work
+//! baseline of the paper's §1.
+//!
+//! Per mode `n`: a hash `hₙ : [dₙ] → [k]` and a sign `sₙ : [dₙ] → ±1`.
+//! The sketch of a rank-one tensor `⊗ₙ xₙ` is the circular convolution of
+//! the per-mode count-sketches — computed in `O(N(d + k log k))` via FFT —
+//! and extends to CP inputs by linearity. Dense inputs use the combined
+//! hash `h(i) = Σₙ hₙ(iₙ) mod k`, `s(i) = Πₙ sₙ(iₙ)` in `O(D·N)`.
+//!
+//! Unlike the tensorized Gaussian maps, the sketch is an *unbiased*
+//! estimator of inner products with variance `O(1/k)` per point but no
+//! rank knob; it serves as the hashing-family contrast to Definitions 1/2.
+
+use super::Projection;
+use crate::linalg::fft::circular_convolve;
+use crate::rng::Rng;
+use crate::tensor::{CpTensor, DenseTensor, Shape};
+
+/// Count-sketch based tensor sketch.
+pub struct TensorSketch {
+    dims: Vec<usize>,
+    k: usize,
+    /// `hashes[n][i] ∈ [k]`.
+    hashes: Vec<Vec<usize>>,
+    /// `signs[n][i] ∈ {±1}`.
+    signs: Vec<Vec<f64>>,
+}
+
+impl TensorSketch {
+    /// Draw a fresh sketch for inputs of shape `dims` into `R^k`.
+    pub fn new(dims: &[usize], k: usize, rng: &mut Rng) -> Self {
+        assert!(k >= 1);
+        let hashes = dims
+            .iter()
+            .map(|&d| (0..d).map(|_| rng.below(k as u64) as usize).collect())
+            .collect();
+        let signs = dims
+            .iter()
+            .map(|&d| (0..d).map(|_| rng.sign()).collect())
+            .collect();
+        Self { dims: dims.to_vec(), k, hashes, signs }
+    }
+
+    /// Count-sketch of a single mode-`n` vector.
+    fn mode_sketch(&self, n: usize, v: &[f64]) -> Vec<f64> {
+        let mut out = vec![0.0; self.k];
+        for (i, &x) in v.iter().enumerate() {
+            out[self.hashes[n][i]] += self.signs[n][i] * x;
+        }
+        out
+    }
+}
+
+impl Projection for TensorSketch {
+    fn name(&self) -> String {
+        "TensorSketch".to_string()
+    }
+
+    fn input_dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn num_params(&self) -> usize {
+        // One hash index + one sign per mode entry.
+        2 * self.dims.iter().sum::<usize>()
+    }
+
+    fn project_dense(&self, x: &DenseTensor) -> Vec<f64> {
+        assert_eq!(x.dims(), self.input_dims(), "input shape mismatch");
+        let shape = Shape::new(x.dims());
+        let n = self.dims.len();
+        let mut idx = vec![0usize; n];
+        let mut out = vec![0.0; self.k];
+        for (lin, &v) in x.data().iter().enumerate() {
+            if v == 0.0 {
+                continue;
+            }
+            shape.multi_into(lin, &mut idx);
+            let mut h = 0usize;
+            let mut s = 1.0;
+            for m in 0..n {
+                h += self.hashes[m][idx[m]];
+                s *= self.signs[m][idx[m]];
+            }
+            out[h % self.k] += s * v;
+        }
+        out
+    }
+
+    fn project_cp(&self, x: &CpTensor) -> Vec<f64> {
+        assert_eq!(x.dims(), self.input_dims(), "input shape mismatch");
+        let n = self.dims.len();
+        let mut out = vec![0.0; self.k];
+        let mut col = Vec::new();
+        for r in 0..x.rank() {
+            // Sketch each mode's column, convolve across modes.
+            col.clear();
+            col.extend((0..self.dims[0]).map(|i| x.factor(0)[(i, r)]));
+            let mut acc = self.mode_sketch(0, &col);
+            for m in 1..n {
+                col.clear();
+                col.extend((0..self.dims[m]).map(|i| x.factor(m)[(i, r)]));
+                let cs = self.mode_sketch(m, &col);
+                acc = circular_convolve(&acc, &cs);
+            }
+            for (o, a) in out.iter_mut().zip(&acc) {
+                *o += a;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projections::squared_norm;
+    use crate::util::stats::mean;
+
+    #[test]
+    fn cp_path_matches_dense_path() {
+        let mut rng = Rng::seed_from(1);
+        let dims = [3usize, 4, 2];
+        let f = TensorSketch::new(&dims, 13, &mut rng);
+        let x = CpTensor::random_unit(&dims, 3, &mut rng);
+        let via_cp = f.project_cp(&x);
+        let via_dense = f.project_dense(&x.to_dense());
+        for (a, b) in via_cp.iter().zip(&via_dense) {
+            assert!((a - b).abs() < 1e-9, "cp={a} dense={b}");
+        }
+    }
+
+    #[test]
+    fn expected_isometry() {
+        // E‖S(x)‖² = ‖x‖² for count sketches.
+        let mut rng = Rng::seed_from(2);
+        let dims = [4usize, 4, 4];
+        let x = DenseTensor::random_unit(&dims, &mut rng);
+        let norms: Vec<f64> = (0..600)
+            .map(|_| {
+                let f = TensorSketch::new(&dims, 32, &mut rng);
+                squared_norm(&f.project_dense(&x))
+            })
+            .collect();
+        let m = mean(&norms);
+        assert!((m - 1.0).abs() < 0.1, "mean={m}");
+    }
+
+    #[test]
+    fn preserves_inner_products_in_expectation() {
+        let mut rng = Rng::seed_from(3);
+        let dims = [3usize, 3, 3];
+        let a = DenseTensor::random_unit(&dims, &mut rng);
+        let b = DenseTensor::random_unit(&dims, &mut rng);
+        let exact = a.inner(&b);
+        let est: Vec<f64> = (0..800)
+            .map(|_| {
+                let f = TensorSketch::new(&dims, 32, &mut rng);
+                let ya = f.project_dense(&a);
+                let yb = f.project_dense(&b);
+                ya.iter().zip(&yb).map(|(p, q)| p * q).sum::<f64>()
+            })
+            .collect();
+        let m = mean(&est);
+        assert!((m - exact).abs() < 0.08, "estimate {m} vs exact {exact}");
+    }
+
+    #[test]
+    fn memory_is_linear_in_mode_sizes() {
+        let mut rng = Rng::seed_from(4);
+        let f = TensorSketch::new(&[5; 8], 64, &mut rng);
+        assert_eq!(f.num_params(), 2 * 40);
+        assert_eq!(f.k(), 64);
+        assert_eq!(f.name(), "TensorSketch");
+    }
+
+    #[test]
+    fn linearity_over_cp_components() {
+        let mut rng = Rng::seed_from(5);
+        let dims = [3usize, 4];
+        let f = TensorSketch::new(&dims, 9, &mut rng);
+        let a = CpTensor::random(&dims, 1, &mut rng);
+        let b = CpTensor::random(&dims, 1, &mut rng);
+        // Stack a and b into a rank-2 tensor.
+        let fa = crate::linalg::Matrix::from_vec(
+            3,
+            2,
+            (0..3).flat_map(|i| [a.factor(0)[(i, 0)], b.factor(0)[(i, 0)]]).collect(),
+        );
+        let fb = crate::linalg::Matrix::from_vec(
+            4,
+            2,
+            (0..4).flat_map(|i| [a.factor(1)[(i, 0)], b.factor(1)[(i, 0)]]).collect(),
+        );
+        let ab = CpTensor::from_factors(vec![fa, fb]);
+        let ya = f.project_cp(&a);
+        let yb = f.project_cp(&b);
+        let yab = f.project_cp(&ab);
+        for i in 0..9 {
+            assert!((yab[i] - ya[i] - yb[i]).abs() < 1e-9);
+        }
+    }
+}

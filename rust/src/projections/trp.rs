@@ -1,0 +1,234 @@
+//! `f_TRP(T)` — the Tensor Random Projection of Sun et al. (2018),
+//! implemented independently so the paper's §3 equivalence claims can be
+//! *tested* rather than assumed:
+//!
+//! * `f_TRP ≡ f_CP(1)`, and
+//! * `f_TRP(T) ≡ f_CP(R)` for `R = T`
+//!
+//! (exact equality under the factor rescaling `B = (1/T)^{1/2N}·A`, see
+//! [`TrpProjection::as_cp_projection`]).
+//!
+//! `f_TRP(X) = (1/√k)·(A¹ ⊙ A² ⊙ … ⊙ A^N)ᵀ·vec(X)` with `Aⁿ ∈ R^{dₙ×k}`
+//! i.i.d. standard normal, `⊙` the column-wise Khatri-Rao product;
+//! `f_TRP(T)` averages `T` independent such maps scaled by `1/√T`.
+
+use super::{CpProjection, Projection};
+use crate::linalg::Matrix;
+use crate::rng::{GaussianSource, Rng};
+use crate::tensor::{CpTensor, DenseTensor};
+
+/// Khatri-Rao tensor random projection (variance-reduced with `T` terms).
+pub struct TrpProjection {
+    dims: Vec<usize>,
+    k: usize,
+    t: usize,
+    /// `factors[t][n]` is `Aⁿ` of the `t`-th independent TRP: `dₙ × k`.
+    factors: Vec<Vec<Matrix>>,
+    scale: f64,
+}
+
+impl TrpProjection {
+    /// Draw a fresh `f_TRP(T)`; `t = 1` gives the plain TRP.
+    pub fn new(dims: &[usize], t: usize, k: usize, rng: &mut Rng) -> Self {
+        assert!(t >= 1 && k >= 1);
+        let factors = (0..t)
+            .map(|_| {
+                dims.iter()
+                    .map(|&d| Matrix::from_vec(d, k, rng.gaussian_vec(d * k, 1.0)))
+                    .collect()
+            })
+            .collect();
+        Self {
+            dims: dims.to_vec(),
+            k,
+            t,
+            factors,
+            // 1/√k from the JLT scaling, 1/√T from the averaging.
+            scale: 1.0 / ((k * t) as f64).sqrt(),
+        }
+    }
+
+    /// Number of averaged TRPs `T`.
+    pub fn t(&self) -> usize {
+        self.t
+    }
+
+    /// Construct the **exactly equal** `f_CP(R = T)` map: row `i` of the
+    /// CP map has factor matrices `Bⁿᵢ[:, t] = (1/T)^{1/2N}·Aⁿ_t[:, i]`.
+    ///
+    /// With this rescaling the two maps agree entrywise on every input —
+    /// the §3 equivalence made concrete.
+    pub fn as_cp_projection(&self) -> CpProjection {
+        let n = self.dims.len();
+        // Definition-2 variance for rank T and order N is (1/T)^{1/N};
+        // each standard-normal factor must be scaled by its square root.
+        let factor_scale = GaussianSource::cp_factor_std(n, self.t);
+        let rows: Vec<CpTensor> = (0..self.k)
+            .map(|i| {
+                let factors: Vec<Matrix> = (0..n)
+                    .map(|mode| {
+                        let d = self.dims[mode];
+                        let mut m = Matrix::zeros(d, self.t);
+                        for t in 0..self.t {
+                            let a = &self.factors[t][mode];
+                            for row in 0..d {
+                                m[(row, t)] = factor_scale * a[(row, i)];
+                            }
+                        }
+                        m
+                    })
+                    .collect();
+                CpTensor::from_factors(factors)
+            })
+            .collect();
+        CpProjection::from_rows(self.dims.clone(), self.t, self.k, rows)
+    }
+}
+
+impl CpProjection {
+    /// Build a CP projection from explicit rows (used by the TRP
+    /// equivalence construction and by tests).
+    pub fn from_rows(dims: Vec<usize>, rank: usize, k: usize, rows: Vec<CpTensor>) -> Self {
+        assert_eq!(rows.len(), k);
+        for r in &rows {
+            assert_eq!(r.dims(), &dims[..]);
+            assert_eq!(r.rank(), rank);
+        }
+        Self::from_parts(dims, rank, k, rows)
+    }
+}
+
+impl Projection for TrpProjection {
+    fn name(&self) -> String {
+        if self.t == 1 {
+            "TRP".to_string()
+        } else {
+            format!("TRP(T={})", self.t)
+        }
+    }
+
+    fn input_dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn num_params(&self) -> usize {
+        self.t * self.dims.iter().map(|d| d * self.k).sum::<usize>()
+    }
+
+    fn project_dense(&self, x: &DenseTensor) -> Vec<f64> {
+        assert_eq!(x.dims(), self.input_dims(), "input shape mismatch");
+        let n = self.dims.len();
+        let mut y = vec![0.0; self.k];
+        // For each independent TRP: contract modes right-to-left, keeping a
+        // per-column partial result (cur is [prefix × k] row-major).
+        for t in 0..self.t {
+            // First contraction handles the last mode with a plain GEMM:
+            // cur[prefix, k] = X_mat[prefix, d_N] · A^N.
+            let d_last = self.dims[n - 1];
+            let prefix = x.numel() / d_last;
+            let a_last = &self.factors[t][n - 1];
+            let mut cur = crate::linalg::matmul(x.data(), a_last.data(), prefix, d_last, self.k);
+            // Remaining modes: column-matched contraction
+            // cur[p, i_col] = Σ_i cur[(p·d + i), i_col] · Aⁿ[i, i_col].
+            for mode in (0..n - 1).rev() {
+                let d = self.dims[mode];
+                let pref = cur.len() / (d * self.k);
+                let a = &self.factors[t][mode];
+                let mut next = vec![0.0; pref * self.k];
+                for p in 0..pref {
+                    let dst = &mut next[p * self.k..(p + 1) * self.k];
+                    for i in 0..d {
+                        let src = &cur[(p * d + i) * self.k..(p * d + i + 1) * self.k];
+                        let arow = a.row(i);
+                        for c in 0..self.k {
+                            dst[c] += src[c] * arow[c];
+                        }
+                    }
+                }
+                cur = next;
+            }
+            debug_assert_eq!(cur.len(), self.k);
+            for (acc, v) in y.iter_mut().zip(&cur) {
+                *acc += v;
+            }
+        }
+        for v in &mut y {
+            *v *= self.scale;
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::TtTensor;
+
+    #[test]
+    fn equivalent_cp_map_agrees_exactly_on_dense_inputs() {
+        let mut rng = Rng::seed_from(1);
+        let dims = [3usize, 4, 2];
+        for t in [1usize, 3] {
+            let trp = TrpProjection::new(&dims, t, 6, &mut rng);
+            let cp = trp.as_cp_projection();
+            let x = DenseTensor::random(&dims, &mut rng);
+            let y_trp = trp.project_dense(&x);
+            let y_cp = cp.project_dense(&x);
+            for (a, b) in y_trp.iter().zip(&y_cp) {
+                assert!((a - b).abs() < 1e-9, "T={t}: trp={a} cp={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn equivalent_cp_map_agrees_on_tt_inputs() {
+        // The CP view unlocks the fast TT-input path; results must match
+        // the TRP's dense computation.
+        let mut rng = Rng::seed_from(2);
+        let dims = [3usize, 3, 3, 3];
+        let trp = TrpProjection::new(&dims, 2, 5, &mut rng);
+        let cp = trp.as_cp_projection();
+        let x = TtTensor::random_unit(&dims, 2, &mut rng);
+        let y_fast = cp.project_tt(&x);
+        let y_ref = trp.project_dense(&x.to_dense());
+        for (a, b) in y_fast.iter().zip(&y_ref) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn trp1_is_rank_one_cp() {
+        let mut rng = Rng::seed_from(3);
+        let trp = TrpProjection::new(&[4, 4], 1, 3, &mut rng);
+        let cp = trp.as_cp_projection();
+        assert_eq!(cp.rank(), 1);
+        assert_eq!(cp.name(), "CP(R=1)");
+    }
+
+    #[test]
+    fn num_params_matches_sun_et_al() {
+        // T·k·Σ dₙ parameters.
+        let mut rng = Rng::seed_from(4);
+        let trp = TrpProjection::new(&[3, 5, 2], 4, 7, &mut rng);
+        assert_eq!(trp.num_params(), 4 * 7 * (3 + 5 + 2));
+    }
+
+    #[test]
+    fn expected_isometry() {
+        let mut rng = Rng::seed_from(5);
+        let dims = [3usize, 3, 3];
+        let x = DenseTensor::random_unit(&dims, &mut rng);
+        let norms: Vec<f64> = (0..400)
+            .map(|_| {
+                let f = TrpProjection::new(&dims, 2, 8, &mut rng);
+                crate::projections::squared_norm(&f.project_dense(&x))
+            })
+            .collect();
+        let m = crate::util::stats::mean(&norms);
+        assert!((m - 1.0).abs() < 0.1, "mean={m}");
+    }
+}

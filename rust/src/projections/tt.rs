@@ -1,0 +1,295 @@
+//! `f_TT(R)` — the tensor-train random projection of **Definition 1**,
+//! the paper's headline contribution.
+//!
+//! Component `i` of the map is `(1/√k)·⟨⟨⟨G¹ᵢ,…,G^Nᵢ⟩⟩, X⟩` with Gaussian
+//! cores (`Var = 1/√R` boundary, `1/R` interior). Storage `O(kNdR²)`;
+//! projection cost `O(kNd·max(R,R̃)³)` for rank-`R̃` TT or CP inputs.
+
+use super::Projection;
+use crate::linalg::matmul;
+use crate::rng::Rng;
+use crate::tensor::{CpTensor, DenseTensor, TtTensor};
+
+/// Tensor-train random projection map.
+pub struct TtProjection {
+    dims: Vec<usize>,
+    rank: usize,
+    k: usize,
+    /// The `k` random TT rows.
+    rows: Vec<TtTensor>,
+    scale: f64,
+}
+
+impl TtProjection {
+    /// Draw a fresh `f_TT(R)` for inputs of shape `dims` into `R^k`.
+    pub fn new(dims: &[usize], rank: usize, k: usize, rng: &mut Rng) -> Self {
+        assert!(rank >= 1, "TT rank must be ≥ 1");
+        assert!(k >= 1, "embedding dimension must be ≥ 1");
+        let rows = (0..k)
+            .map(|_| TtTensor::random_projection_row(dims, rank, rng))
+            .collect();
+        Self {
+            dims: dims.to_vec(),
+            rank,
+            k,
+            rows,
+            scale: 1.0 / (k as f64).sqrt(),
+        }
+    }
+
+    /// Assemble a map from pre-built rows (deserialization path; see
+    /// [`TtProjection::from_rows`]).
+    pub(crate) fn from_parts(dims: Vec<usize>, rank: usize, k: usize, rows: Vec<TtTensor>) -> Self {
+        Self {
+            dims,
+            rank,
+            k,
+            rows,
+            scale: 1.0 / (k as f64).sqrt(),
+        }
+    }
+
+    /// The TT rank `R` of the map.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// The random TT rows (used by the AOT runtime to feed the compiled
+    /// artifact the same parameters the native engine uses).
+    pub fn rows(&self) -> &[TtTensor] {
+        &self.rows
+    }
+
+    /// Parallel TT-input projection: shard the `k` rows across `threads`
+    /// workers (each with its own contraction scratch). Bit-identical to
+    /// [`Projection::project_tt`]; used by the experiment sweeps when a
+    /// single very large projection dominates (e.g. k ≥ 1000).
+    pub fn project_tt_parallel(&self, x: &TtTensor, threads: usize) -> Vec<f64> {
+        assert_eq!(x.dims(), self.input_dims(), "input shape mismatch");
+        if threads <= 1 || self.k < 2 * threads {
+            return self.project_tt(x);
+        }
+        let chunk = self.k.div_ceil(threads);
+        let chunks: Vec<&[TtTensor]> = self.rows.chunks(chunk).collect();
+        let parts = crate::util::threadpool::par_map(chunks, threads, |rows| {
+            let ctx = crate::tensor::TtContraction::new(x);
+            rows.iter()
+                .map(|row| ctx.inner(row) * self.scale)
+                .collect::<Vec<f64>>()
+        });
+        parts.into_iter().flatten().collect()
+    }
+
+    /// Inner product of one TT row with a dense tensor by right-to-left
+    /// core absorption: `O(D·R)` per mode pass, `O(D·R²)` total.
+    fn row_dense_inner(row: &TtTensor, x: &DenseTensor) -> f64 {
+        let dims = x.dims();
+        let n = dims.len();
+        // cur: row-major [prefix, r] where prefix = d₁…d_m after absorbing
+        // modes m+1..N. Start by absorbing the last core.
+        let d_last = dims[n - 1];
+        let r_last = row.ranks()[n - 1];
+        // core^N is [r_{N-1}, d_N, 1] → matrix [r_{N-1}, d_N]; we need
+        // cur[prefix, r_{N-1}] = X_mat[prefix, d_N] · core^Nᵀ.
+        let prefix = x.numel() / d_last;
+        let core_t = transpose(row.core(n - 1), r_last, d_last);
+        let mut cur = matmul(x.data(), &core_t, prefix, d_last, r_last);
+        let mut r = r_last;
+        for m in (0..n - 1).rev() {
+            let d = dims[m];
+            let rl = row.ranks()[m];
+            let rr = row.ranks()[m + 1];
+            debug_assert_eq!(rr, r);
+            // cur is [pref·d, r]; view as [pref, d·r] (row-major contiguity)
+            // and multiply by core^mᵀ where core^m is [rl, d·rr].
+            let pref = cur.len() / (d * r);
+            let core_t = transpose(row.core(m), rl, d * rr);
+            cur = matmul(&cur, &core_t, pref, d * r, rl);
+            r = rl;
+        }
+        debug_assert_eq!(cur.len(), 1);
+        cur[0]
+    }
+}
+
+/// Transpose a row-major `rows × cols` buffer.
+fn transpose(a: &[f64], rows: usize, cols: usize) -> Vec<f64> {
+    debug_assert_eq!(a.len(), rows * cols);
+    let mut t = vec![0.0; a.len()];
+    for i in 0..rows {
+        for j in 0..cols {
+            t[j * rows + i] = a[i * cols + j];
+        }
+    }
+    t
+}
+
+impl Projection for TtProjection {
+    fn name(&self) -> String {
+        format!("TT(R={})", self.rank)
+    }
+
+    fn input_dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn num_params(&self) -> usize {
+        self.rows.iter().map(|r| r.num_params()).sum()
+    }
+
+    fn project_dense(&self, x: &DenseTensor) -> Vec<f64> {
+        assert_eq!(x.dims(), self.input_dims(), "input shape mismatch");
+        self.rows
+            .iter()
+            .map(|row| Self::row_dense_inner(row, x) * self.scale)
+            .collect()
+    }
+
+    fn project_tt(&self, x: &TtTensor) -> Vec<f64> {
+        assert_eq!(x.dims(), self.input_dims(), "input shape mismatch");
+        // Amortize the x-side core permutation across all k rows and run
+        // the per-row chain allocation-free (see TtContraction).
+        let ctx = crate::tensor::TtContraction::new(x);
+        self.rows
+            .iter()
+            .map(|row| ctx.inner(row) * self.scale)
+            .collect()
+    }
+
+    fn project_cp(&self, x: &CpTensor) -> Vec<f64> {
+        assert_eq!(x.dims(), self.input_dims(), "input shape mismatch");
+        self.rows
+            .iter()
+            .map(|row| x.inner_tt(row) * self.scale)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::projections::squared_norm;
+    use crate::util::stats::{mean, variance};
+
+    #[test]
+    fn all_input_formats_agree() {
+        let mut rng = Rng::seed_from(1);
+        let dims = [3usize, 4, 2, 3];
+        let f = TtProjection::new(&dims, 3, 11, &mut rng);
+        let x_tt = TtTensor::random_unit(&dims, 2, &mut rng);
+        let x_dense = x_tt.to_dense();
+        let y_tt = f.project_tt(&x_tt);
+        let y_dense = f.project_dense(&x_dense);
+        for (a, b) in y_tt.iter().zip(&y_dense) {
+            assert!((a - b).abs() < 1e-9, "tt={a} dense={b}");
+        }
+        // CP input: build a CP tensor and compare against its dense form.
+        let x_cp = CpTensor::random_unit(&dims, 2, &mut rng);
+        let y_cp = f.project_cp(&x_cp);
+        let y_cd = f.project_dense(&x_cp.to_dense());
+        for (a, b) in y_cp.iter().zip(&y_cd) {
+            assert!((a - b).abs() < 1e-9, "cp={a} dense={b}");
+        }
+    }
+
+    #[test]
+    fn expected_isometry_over_maps() {
+        // Theorem 1: E‖f_TT(X)‖² = ‖X‖²_F.
+        let mut rng = Rng::seed_from(2);
+        let dims = [3usize, 3, 3, 3];
+        let x = TtTensor::random_unit(&dims, 2, &mut rng);
+        // Larger k lowers the per-trial variance (Theorem 1), so the
+        // CLT tolerance can stay tight without many more trials.
+        let norms: Vec<f64> = (0..500)
+            .map(|_| {
+                let f = TtProjection::new(&dims, 2, 32, &mut rng);
+                squared_norm(&f.project_tt(&x))
+            })
+            .collect();
+        let m = mean(&norms);
+        assert!((m - 1.0).abs() < 0.15, "mean={m}");
+    }
+
+    #[test]
+    fn variance_decreases_with_k() {
+        // Theorem 1: Var(‖f(X)‖²) ≤ C/k — doubling k should roughly halve
+        // the variance. Checked with generous tolerance.
+        let mut rng = Rng::seed_from(3);
+        let dims = [3usize; 4];
+        let x = TtTensor::random_unit(&dims, 2, &mut rng);
+        let sample = |k: usize, rng: &mut Rng| -> f64 {
+            let vals: Vec<f64> = (0..300)
+                .map(|_| {
+                    let f = TtProjection::new(&dims, 3, k, rng);
+                    squared_norm(&f.project_tt(&x))
+                })
+                .collect();
+            variance(&vals)
+        };
+        let v_small = sample(4, &mut rng);
+        let v_large = sample(32, &mut rng);
+        assert!(
+            v_large < v_small * 0.45,
+            "variance should shrink ~8x: k=4 → {v_small}, k=32 → {v_large}"
+        );
+    }
+
+    #[test]
+    fn num_params_matches_paper_formula() {
+        // (N−2)dR² + 2dR per row, k rows.
+        let mut rng = Rng::seed_from(4);
+        let (d, n, r, k) = (5usize, 6usize, 3usize, 7usize);
+        let f = TtProjection::new(&vec![d; n], r, k, &mut rng);
+        assert_eq!(f.num_params(), k * ((n - 2) * d * r * r + 2 * d * r));
+    }
+
+    #[test]
+    fn linearity_on_tt_inputs() {
+        let mut rng = Rng::seed_from(5);
+        let dims = [2usize, 3, 2];
+        let f = TtProjection::new(&dims, 2, 6, &mut rng);
+        let a = TtTensor::random(&dims, 2, &mut rng);
+        let y_a = f.project_tt(&a);
+        let mut a2 = a.clone();
+        a2.scale(2.0);
+        let y_a2 = f.project_tt(&a2);
+        for i in 0..6 {
+            assert!((y_a2[i] - 2.0 * y_a[i]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn works_on_high_order_without_densifying() {
+        // d=3, N=25: dense dim ≈ 8.5e11 — must still run fast in TT format.
+        let mut rng = Rng::seed_from(6);
+        let dims = vec![3usize; 25];
+        let f = TtProjection::new(&dims, 2, 4, &mut rng);
+        let x = TtTensor::random_unit(&dims, 3, &mut rng);
+        let y = f.project_tt(&x);
+        assert_eq!(y.len(), 4);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn parallel_projection_is_bit_identical() {
+        let mut rng = Rng::seed_from(31);
+        let dims = vec![3usize; 8];
+        let f = TtProjection::new(&dims, 4, 64, &mut rng);
+        let x = TtTensor::random_unit(&dims, 5, &mut rng);
+        let serial = f.project_tt(&x);
+        for threads in [1usize, 2, 4, 7] {
+            assert_eq!(f.project_tt_parallel(&x, threads), serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn name_includes_rank() {
+        let mut rng = Rng::seed_from(7);
+        let f = TtProjection::new(&[3, 3], 5, 2, &mut rng);
+        assert_eq!(f.name(), "TT(R=5)");
+    }
+}

@@ -1,0 +1,112 @@
+//! Buffered Gaussian source with per-mode variances.
+//!
+//! Definitions 1 and 2 of the paper prescribe *different* variances per
+//! core/factor position: `1/√R` for TT boundary cores, `1/R` for interior
+//! cores, `(1/R)^{1/N}` for every CP factor. [`GaussianSource`] centralizes
+//! those rules so the projection constructors cannot get them wrong, and so
+//! tests can assert the exact prescription.
+
+use super::Rng;
+
+/// A stream of Gaussian draws tied to one projection map, with helpers for
+/// the paper's variance prescriptions.
+#[derive(Debug, Clone)]
+pub struct GaussianSource {
+    rng: Rng,
+}
+
+impl GaussianSource {
+    /// Create a source from a seed.
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Rng::seed_from(seed) }
+    }
+
+    /// Wrap an existing generator.
+    pub fn from_rng(rng: Rng) -> Self {
+        Self { rng }
+    }
+
+    /// Standard deviation of the entries of TT core `n` (0-indexed) out of
+    /// `num_modes` cores, for TT rank `r` — Definition 1 of the paper.
+    ///
+    /// Boundary cores (`n == 0` or `n == N-1`) get variance `1/√R`, interior
+    /// cores variance `1/R`; the standard deviation is the square root.
+    ///
+    /// For `N == 1` the map degenerates to a dense Gaussian RP and the
+    /// variance is 1 (the classical JLT), matching the paper's remark that
+    /// `R` is necessarily 1 when `N = 1`.
+    pub fn tt_core_std(n: usize, num_modes: usize, r: usize) -> f64 {
+        assert!(n < num_modes);
+        if num_modes == 1 {
+            return 1.0;
+        }
+        let rf = r as f64;
+        if n == 0 || n == num_modes - 1 {
+            // variance 1/sqrt(R)  =>  std = R^{-1/4}
+            rf.powf(-0.25)
+        } else {
+            // variance 1/R  =>  std = R^{-1/2}
+            rf.powf(-0.5)
+        }
+    }
+
+    /// Standard deviation of CP factor entries for CP rank `r` and tensor
+    /// order `num_modes` — Definition 2: variance `(1/R)^{1/N}`.
+    pub fn cp_factor_std(num_modes: usize, r: usize) -> f64 {
+        let var = (1.0 / r as f64).powf(1.0 / num_modes as f64);
+        var.sqrt()
+    }
+
+    /// Draw a vector of `n` i.i.d. `N(0, std²)` entries.
+    pub fn vector(&mut self, n: usize, std: f64) -> Vec<f64> {
+        self.rng.gaussian_vec(n, std)
+    }
+
+    /// Access the underlying generator.
+    pub fn rng_mut(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tt_boundary_vs_interior_std() {
+        let r = 4;
+        let b = GaussianSource::tt_core_std(0, 5, r);
+        let e = GaussianSource::tt_core_std(4, 5, r);
+        let i = GaussianSource::tt_core_std(2, 5, r);
+        // variance 1/sqrt(4) = 0.5 -> std = sqrt(0.5)
+        assert!((b * b - 0.5).abs() < 1e-12);
+        assert!((e * e - 0.5).abs() < 1e-12);
+        // variance 1/4 -> std = 0.5
+        assert!((i * i - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tt_order_one_degenerates_to_classical() {
+        assert_eq!(GaussianSource::tt_core_std(0, 1, 1), 1.0);
+    }
+
+    #[test]
+    fn cp_factor_variance_product_is_inverse_rank() {
+        // The product of the N per-factor variances must be 1/R so that a
+        // rank-one component has second moment 1/R and the R-term sum is an
+        // expected isometry.
+        for &(n, r) in &[(2usize, 3usize), (5, 7), (12, 25)] {
+            let std = GaussianSource::cp_factor_std(n, r);
+            let prod = (std * std).powi(n as i32);
+            assert!((prod - 1.0 / r as f64).abs() < 1e-12, "n={n} r={r}");
+        }
+    }
+
+    #[test]
+    fn vector_has_requested_std() {
+        let mut src = GaussianSource::new(31);
+        let v = src.vector(100_000, 0.5);
+        let var = v.iter().map(|x| x * x).sum::<f64>() / v.len() as f64;
+        assert!((var - 0.25).abs() < 0.01, "var={var}");
+    }
+}

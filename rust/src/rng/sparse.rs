@@ -1,0 +1,162 @@
+//! Samplers for the sparse random-projection baselines.
+//!
+//! * Achlioptas (2003): entries are `±√3` with probability `1/6` each and
+//!   `0` with probability `2/3` (the "database-friendly" s = 3 scheme).
+//! * Li, Hastie & Church (2006) "very sparse" RP: entries are `±√s` with
+//!   probability `1/(2s)` each and `0` otherwise, with `s = √D` where `D`
+//!   is the input dimension. This is the baseline used by Figures 1
+//!   (medium-order), 2 and 4 of the paper.
+//!
+//! Both preserve `E[a²] = 1`, which is all the JL analysis needs.
+
+use super::Rng;
+
+/// One nonzero entry of a sparse projection row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SparseEntry {
+    /// Column index within the row.
+    pub index: usize,
+    /// Entry value (±√s).
+    pub value: f64,
+}
+
+/// Sampler producing sparse projection rows with the `s`-sparse scheme.
+#[derive(Debug, Clone)]
+pub struct SparseSampler {
+    /// Sparsity parameter: entries are nonzero with probability `1/s`.
+    s: f64,
+}
+
+impl SparseSampler {
+    /// Achlioptas' scheme (`s = 3`).
+    pub fn achlioptas() -> Self {
+        Self { s: 3.0 }
+    }
+
+    /// Li et al.'s very sparse scheme for input dimension `dim`
+    /// (`s = √dim`).
+    pub fn very_sparse(dim: usize) -> Self {
+        Self { s: (dim as f64).sqrt().max(1.0) }
+    }
+
+    /// Custom sparsity.
+    pub fn with_s(s: f64) -> Self {
+        assert!(s >= 1.0, "sparsity parameter must be >= 1");
+        Self { s }
+    }
+
+    /// The sparsity parameter `s`.
+    pub fn s(&self) -> f64 {
+        self.s
+    }
+
+    /// Expected number of nonzeros in a row of length `dim`.
+    pub fn expected_nnz(&self, dim: usize) -> f64 {
+        dim as f64 / self.s
+    }
+
+    /// Sample one sparse row of length `dim`, returning only the nonzeros.
+    ///
+    /// Uses geometric skipping: instead of flipping a coin per column, the
+    /// gap to the next nonzero is drawn directly from the geometric
+    /// distribution, making row generation `O(nnz)` rather than `O(dim)` —
+    /// essential when `dim = d^N` is in the hundreds of thousands.
+    pub fn sample_row(&self, dim: usize, rng: &mut Rng) -> Vec<SparseEntry> {
+        let p = 1.0 / self.s;
+        let value_mag = self.s.sqrt();
+        let mut entries = Vec::with_capacity((self.expected_nnz(dim) * 1.5) as usize + 4);
+        if p >= 0.999_999 {
+            // Dense degenerate case (s = 1): every entry is ±1.
+            for index in 0..dim {
+                entries.push(SparseEntry { index, value: rng.sign() });
+            }
+            return entries;
+        }
+        let log1mp = (1.0 - p).ln();
+        let mut i: f64 = -1.0;
+        loop {
+            // Geometric gap: floor(ln(U)/ln(1-p)).
+            let u = rng.uniform().max(f64::MIN_POSITIVE);
+            i += 1.0 + (u.ln() / log1mp).floor();
+            if i >= dim as f64 {
+                break;
+            }
+            entries.push(SparseEntry {
+                index: i as usize,
+                value: value_mag * rng.sign(),
+            });
+        }
+        entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn achlioptas_moments() {
+        let sampler = SparseSampler::achlioptas();
+        let mut rng = Rng::seed_from(77);
+        let dim = 10_000;
+        let mut sum = 0.0;
+        let mut sumsq = 0.0;
+        let trials = 50;
+        for _ in 0..trials {
+            for e in sampler.sample_row(dim, &mut rng) {
+                sum += e.value;
+                sumsq += e.value * e.value;
+            }
+        }
+        let n = (dim * trials) as f64;
+        // E[a] = 0, E[a²] = 1.
+        assert!((sum / n).abs() < 0.02, "mean={}", sum / n);
+        assert!((sumsq / n - 1.0).abs() < 0.05, "second moment={}", sumsq / n);
+    }
+
+    #[test]
+    fn very_sparse_nnz_matches_expectation() {
+        let dim = 40_000; // s = 200, expected nnz = 200
+        let sampler = SparseSampler::very_sparse(dim);
+        let mut rng = Rng::seed_from(5);
+        let trials = 100;
+        let total: usize = (0..trials)
+            .map(|_| sampler.sample_row(dim, &mut rng).len())
+            .sum();
+        let avg = total as f64 / trials as f64;
+        let expect = sampler.expected_nnz(dim);
+        assert!(
+            (avg - expect).abs() < 0.15 * expect,
+            "avg={avg} expect={expect}"
+        );
+    }
+
+    #[test]
+    fn indices_are_strictly_increasing_and_in_range() {
+        let sampler = SparseSampler::very_sparse(5_000);
+        let mut rng = Rng::seed_from(9);
+        let row = sampler.sample_row(5_000, &mut rng);
+        for w in row.windows(2) {
+            assert!(w[0].index < w[1].index);
+        }
+        assert!(row.iter().all(|e| e.index < 5_000));
+    }
+
+    #[test]
+    fn values_are_plus_minus_sqrt_s() {
+        let sampler = SparseSampler::with_s(16.0);
+        let mut rng = Rng::seed_from(3);
+        for e in sampler.sample_row(10_000, &mut rng) {
+            assert!((e.value.abs() - 4.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn s_equal_one_is_dense_rademacher() {
+        let sampler = SparseSampler::with_s(1.0);
+        let mut rng = Rng::seed_from(4);
+        let row = sampler.sample_row(128, &mut rng);
+        assert_eq!(row.len(), 128);
+        assert!(row.iter().all(|e| e.value.abs() == 1.0));
+    }
+}

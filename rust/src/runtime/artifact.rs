@@ -1,0 +1,349 @@
+//! Manifest parsing: the contract between the Python AOT pipeline and the
+//! Rust runtime.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing each
+//! compiled artifact: parameter order and shapes, output shape, map kind
+//! and hyperparameters. This module parses it with `util::json` into typed
+//! [`ArtifactSpec`]s; shape consistency is validated eagerly so a stale
+//! manifest fails at load time, not mid-request.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Which projection map an artifact implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// `f_TT(R)` on TT-format inputs.
+    Tt,
+    /// `f_CP(R)` on CP-format inputs.
+    Cp,
+    /// Dense Gaussian RP on vectorized inputs.
+    Dense,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "tt" => Ok(Self::Tt),
+            "cp" => Ok(Self::Cp),
+            "dense" => Ok(Self::Dense),
+            other => bail!("unknown artifact kind {other:?}"),
+        }
+    }
+}
+
+/// One named parameter of a compiled function.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamSpec {
+    /// Parameter name (documentation; order is what matters).
+    pub name: String,
+    /// Dense row-major shape.
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    /// Total element count.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Full description of one compiled artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Unique artifact name (also the HLO file stem).
+    pub name: String,
+    /// Map kind.
+    pub kind: ArtifactKind,
+    /// HLO text file, relative to the artifact directory.
+    pub file: String,
+    /// Embedding dimension `k`.
+    pub k: usize,
+    /// Compiled request batch size `B` (the batcher pads to this).
+    pub batch: usize,
+    /// `1/√k` scaling baked into the graph.
+    pub scale: f64,
+    /// Whether the graph routes through the Pallas kernels.
+    pub use_pallas: bool,
+    /// Ordered function parameters.
+    pub params: Vec<ParamSpec>,
+    /// Output shape `[B, k]`.
+    pub output_shape: Vec<usize>,
+    /// Tensor order `N` (TT/CP kinds).
+    pub n_modes: Option<usize>,
+    /// Mode size `d` (TT/CP kinds).
+    pub dim: Option<usize>,
+    /// Projection rank `R` (TT/CP kinds).
+    pub rank: Option<usize>,
+    /// Input rank `R̃` (TT/CP kinds).
+    pub input_rank: Option<usize>,
+    /// Vectorized input dimension `D` (dense kind).
+    pub input_dim: Option<usize>,
+}
+
+impl ArtifactSpec {
+    fn from_json(j: &Json) -> Result<Self> {
+        let get_str = |key: &str| -> Result<String> {
+            Ok(j.get(key)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("manifest entry missing string field {key:?}"))?
+                .to_string())
+        };
+        let get_usize = |key: &str| -> Result<usize> {
+            j.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest entry missing integer field {key:?}"))
+        };
+        let params = j
+            .get("params")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest entry missing params"))?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("param missing name"))?
+                        .to_string(),
+                    shape: p
+                        .get("shape")
+                        .and_then(Json::as_usize_vec)
+                        .ok_or_else(|| anyhow!("param missing shape"))?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let spec = ArtifactSpec {
+            name: get_str("name")?,
+            kind: ArtifactKind::parse(&get_str("kind")?)?,
+            file: get_str("file")?,
+            k: get_usize("k")?,
+            batch: get_usize("batch")?,
+            scale: j
+                .get("scale")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("manifest entry missing scale"))?,
+            use_pallas: j.get("use_pallas").and_then(Json::as_bool).unwrap_or(false),
+            params,
+            output_shape: j
+                .get("output_shape")
+                .and_then(Json::as_usize_vec)
+                .ok_or_else(|| anyhow!("manifest entry missing output_shape"))?,
+            n_modes: j.get("n_modes").and_then(Json::as_usize),
+            dim: j.get("dim").and_then(Json::as_usize),
+            rank: j.get("rank").and_then(Json::as_usize),
+            input_rank: j.get("input_rank").and_then(Json::as_usize),
+            input_dim: j.get("input_dim").and_then(Json::as_usize),
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Cross-field consistency checks.
+    pub fn validate(&self) -> Result<()> {
+        if self.output_shape != [self.batch, self.k] {
+            bail!(
+                "artifact {}: output_shape {:?} != [batch, k] = [{}, {}]",
+                self.name,
+                self.output_shape,
+                self.batch,
+                self.k
+            );
+        }
+        let expected_scale = 1.0 / (self.k as f64).sqrt();
+        if (self.scale - expected_scale).abs() > 1e-9 {
+            bail!("artifact {}: scale {} != 1/√k", self.name, self.scale);
+        }
+        match self.kind {
+            ArtifactKind::Tt => {
+                let (n, d, r, rt) = self.tt_meta()?;
+                let want = vec![
+                    vec![self.k, d, r],
+                    vec![self.k, n - 2, r, d, r],
+                    vec![self.k, r, d],
+                    vec![self.batch, d, rt],
+                    vec![self.batch, n - 2, rt, d, rt],
+                    vec![self.batch, rt, d],
+                ];
+                let got: Vec<Vec<usize>> =
+                    self.params.iter().map(|p| p.shape.clone()).collect();
+                if got != want {
+                    bail!("artifact {}: TT param shapes {got:?} != {want:?}", self.name);
+                }
+            }
+            ArtifactKind::Cp => {
+                let n = self.n_modes.ok_or_else(|| anyhow!("cp missing n_modes"))?;
+                let d = self.dim.ok_or_else(|| anyhow!("cp missing dim"))?;
+                let r = self.rank.ok_or_else(|| anyhow!("cp missing rank"))?;
+                let rt = self
+                    .input_rank
+                    .ok_or_else(|| anyhow!("cp missing input_rank"))?;
+                let want = vec![
+                    vec![self.k, n, d, r],
+                    vec![self.batch, n, d, rt],
+                ];
+                let got: Vec<Vec<usize>> =
+                    self.params.iter().map(|p| p.shape.clone()).collect();
+                if got != want {
+                    bail!("artifact {}: CP param shapes {got:?} != {want:?}", self.name);
+                }
+            }
+            ArtifactKind::Dense => {
+                let dd = self
+                    .input_dim
+                    .ok_or_else(|| anyhow!("dense missing input_dim"))?;
+                let want = vec![vec![self.k, dd], vec![self.batch, dd]];
+                let got: Vec<Vec<usize>> =
+                    self.params.iter().map(|p| p.shape.clone()).collect();
+                if got != want {
+                    bail!(
+                        "artifact {}: dense param shapes {got:?} != {want:?}",
+                        self.name
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// `(N, d, R, R̃)` for TT artifacts.
+    pub fn tt_meta(&self) -> Result<(usize, usize, usize, usize)> {
+        Ok((
+            self.n_modes.ok_or_else(|| anyhow!("tt missing n_modes"))?,
+            self.dim.ok_or_else(|| anyhow!("tt missing dim"))?,
+            self.rank.ok_or_else(|| anyhow!("tt missing rank"))?,
+            self.input_rank
+                .ok_or_else(|| anyhow!("tt missing input_rank"))?,
+        ))
+    }
+
+    /// Uniform input mode sizes `[d; N]` for TT/CP artifacts.
+    pub fn input_dims(&self) -> Option<Vec<usize>> {
+        match (self.n_modes, self.dim) {
+            (Some(n), Some(d)) => Some(vec![d; n]),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Directory the manifest (and artifacts) live in.
+    pub dir: PathBuf,
+    /// All artifact specs.
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let mpath = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&mpath)
+            .with_context(|| format!("reading {}", mpath.display()))?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (separated from I/O for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let version = j
+            .get("format_version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("manifest missing format_version"))?;
+        if version != 1 {
+            bail!("unsupported manifest format_version {version}");
+        }
+        let artifacts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+            .iter()
+            .map(ArtifactSpec::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Find an artifact by name.
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format_version": 1,
+      "artifacts": [
+        {
+          "name": "tt_rp_tiny", "kind": "tt", "file": "tt_rp_tiny.hlo.txt",
+          "dtype": "f32", "k": 4, "batch": 2, "scale": 0.5, "use_pallas": true,
+          "n_modes": 4, "dim": 3, "rank": 2, "input_rank": 2,
+          "params": [
+            {"name": "g_first", "shape": [4, 3, 2]},
+            {"name": "g_mid",   "shape": [4, 2, 2, 3, 2]},
+            {"name": "g_last",  "shape": [4, 2, 3]},
+            {"name": "x_first", "shape": [2, 3, 2]},
+            {"name": "x_mid",   "shape": [2, 2, 2, 3, 2]},
+            {"name": "x_last",  "shape": [2, 2, 3]}
+          ],
+          "output_shape": [2, 4]
+        }
+      ]
+    }"#;
+
+    #[test]
+    fn parses_valid_manifest() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.get("tt_rp_tiny").unwrap();
+        assert_eq!(a.kind, ArtifactKind::Tt);
+        assert_eq!(a.k, 4);
+        assert_eq!(a.tt_meta().unwrap(), (4, 3, 2, 2));
+        assert_eq!(a.input_dims().unwrap(), vec![3, 3, 3, 3]);
+        assert_eq!(a.params[1].numel(), 4 * 2 * 2 * 3 * 2);
+    }
+
+    #[test]
+    fn rejects_wrong_output_shape() {
+        let bad = SAMPLE.replace("\"output_shape\": [2, 4]", "\"output_shape\": [4, 2]");
+        assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_scale() {
+        let bad = SAMPLE.replace("\"scale\": 0.5", "\"scale\": 0.7");
+        assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_param_shape() {
+        let bad = SAMPLE.replace("[4, 3, 2]", "[4, 3, 3]");
+        assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_kind() {
+        let bad = SAMPLE.replace("\"kind\": \"tt\"", "\"kind\": \"tucker\"");
+        assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn rejects_future_format_version() {
+        let bad = SAMPLE.replace("\"format_version\": 1", "\"format_version\": 2");
+        assert!(Manifest::parse(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn loads_repo_manifest_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(!m.artifacts.is_empty());
+            assert!(m.get("tt_rp_medium").is_some());
+        }
+    }
+}

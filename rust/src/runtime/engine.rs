@@ -1,0 +1,174 @@
+//! The PJRT execution engine: compile once, execute per batch.
+//!
+//! Adapted from /opt/xla-example/load_hlo: HLO *text* is the interchange
+//! format (xla_extension 0.5.1 rejects jax≥0.5 serialized protos), parsed
+//! by `HloModuleProto::from_text_file`, compiled by the PJRT CPU client and
+//! executed with f32 literal inputs.
+
+use super::{ArtifactSpec, Manifest};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// Execution statistics for one artifact.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecStats {
+    /// Number of executed batches.
+    pub executions: u64,
+    /// Total wall time spent inside PJRT execute (seconds).
+    pub total_secs: f64,
+}
+
+struct Loaded {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    stats: Mutex<ExecStats>,
+}
+
+/// A PJRT CPU client plus the compiled artifact set.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    loaded: HashMap<String, Loaded>,
+}
+
+impl PjrtEngine {
+    /// Create an engine backed by the PJRT CPU client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        Ok(Self { client, loaded: HashMap::new() })
+    }
+
+    /// Platform name reported by PJRT (e.g. `"cpu"`).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile every artifact in `dir` (per its manifest).
+    /// Returns the number of compiled artifacts.
+    pub fn load_dir(&mut self, dir: &Path) -> Result<usize> {
+        let manifest = Manifest::load(dir)?;
+        let mut n = 0;
+        for spec in &manifest.artifacts {
+            self.load_artifact(dir, spec.clone())
+                .with_context(|| format!("loading artifact {}", spec.name))?;
+            n += 1;
+        }
+        Ok(n)
+    }
+
+    /// Load and compile a single artifact.
+    pub fn load_artifact(&mut self, dir: &Path, spec: ArtifactSpec) -> Result<()> {
+        let path = dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", spec.name))?;
+        self.loaded.insert(
+            spec.name.clone(),
+            Loaded { spec, exe, stats: Mutex::new(ExecStats::default()) },
+        );
+        Ok(())
+    }
+
+    /// Names of all compiled artifacts.
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.loaded.keys().cloned().collect();
+        names.sort();
+        names
+    }
+
+    /// Spec of a compiled artifact.
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.loaded.get(name).map(|l| &l.spec)
+    }
+
+    /// Execute artifact `name` with the given flat f32 parameter buffers
+    /// (one per manifest param, row-major). Returns the flat `[B, k]`
+    /// output as f64 (the crate-wide numeric type).
+    pub fn execute(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<f64>> {
+        let loaded = self
+            .loaded
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name:?}"))?;
+        let spec = &loaded.spec;
+        if inputs.len() != spec.params.len() {
+            bail!(
+                "artifact {name}: expected {} inputs, got {}",
+                spec.params.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (buf, param) in inputs.iter().zip(&spec.params) {
+            if buf.len() != param.numel() {
+                bail!(
+                    "artifact {name}: param {} needs {} elements, got {}",
+                    param.name,
+                    param.numel(),
+                    buf.len()
+                );
+            }
+            let dims: Vec<i64> = param.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(buf)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshaping {}: {e}", param.name))?;
+            literals.push(lit);
+        }
+        let t = crate::util::Timer::start();
+        let result = loaded
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e}"))?;
+        // Graphs are lowered with return_tuple=True → unwrap the 1-tuple.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untupling result of {name}: {e}"))?;
+        let values: Vec<f32> = out
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("reading result of {name}: {e}"))?;
+        let expected: usize = spec.output_shape.iter().product();
+        if values.len() != expected {
+            bail!(
+                "artifact {name}: output has {} elements, expected {expected}",
+                values.len()
+            );
+        }
+        {
+            let mut stats = loaded.stats.lock().unwrap();
+            stats.executions += 1;
+            stats.total_secs += t.elapsed_secs();
+        }
+        Ok(values.into_iter().map(|v| v as f64).collect())
+    }
+
+    /// Execution statistics for an artifact.
+    pub fn stats(&self, name: &str) -> Option<ExecStats> {
+        self.loaded.get(name).map(|l| *l.stats.lock().unwrap())
+    }
+}
+
+// The PJRT client and executables are internally synchronized; the xla
+// crate just doesn't mark them. Execution from the coordinator worker pool
+// requires Send + Sync.
+unsafe impl Send for PjrtEngine {}
+unsafe impl Sync for PjrtEngine {}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-backed tests live in rust/tests/runtime_pjrt.rs (they need the
+    // artifacts directory built by `make artifacts`). Here we only test
+    // pure logic that needs no client.
+
+    #[test]
+    fn exec_stats_default_is_zero() {
+        let s = super::ExecStats::default();
+        assert_eq!(s.executions, 0);
+        assert_eq!(s.total_secs, 0.0);
+    }
+}

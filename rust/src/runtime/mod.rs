@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them on the request path — Python is never involved at
+//! runtime.
+//!
+//! Flow: `artifacts/manifest.json` → [`Manifest`] → [`PjrtEngine::load_dir`]
+//! (`HloModuleProto::from_text_file` → `client.compile`) → [`PjrtEngine::execute`]
+//! with packed f32 literals ([`pack`]).
+
+mod artifact;
+mod engine;
+pub mod pack;
+
+pub use artifact::{ArtifactKind, ArtifactSpec, Manifest, ParamSpec};
+pub use engine::{ExecStats, PjrtEngine};

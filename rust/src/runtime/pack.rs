@@ -1,0 +1,218 @@
+//! Packing native tensors into the stacked f32 layouts the AOT artifacts
+//! expect (see `python/compile/kernels/ref.py` for the layout contract).
+//!
+//! All layouts are row-major:
+//!
+//! * TT projection rows → `g_first [k,d,R]`, `g_mid [k,N-2,R,d,R]`,
+//!   `g_last [k,R,d]`;
+//! * TT input batch → `x_first [B,d,R̃]`, `x_mid [B,N-2,R̃,d,R̃]`,
+//!   `x_last [B,R̃,d]`;
+//! * CP projection rows → `a [k,N,d,R]`; CP input batch → `x [B,N,d,R̃]`;
+//! * dense → `w [k,D]`, `x [B,D]`.
+//!
+//! Batches smaller than the compiled `B` are zero-padded; the caller slices
+//! the first `b·k` outputs.
+
+use crate::projections::{CpProjection, GaussianProjection, TtProjection};
+use crate::tensor::{CpTensor, DenseTensor, TtTensor};
+use anyhow::{bail, Result};
+
+/// Check that a TT tensor has the uniform shape an artifact expects.
+fn check_tt_uniform(t: &TtTensor, n: usize, d: usize, r: usize, what: &str) -> Result<()> {
+    if t.dims() != vec![d; n].as_slice() {
+        bail!("{what}: dims {:?} != [{d}; {n}]", t.dims());
+    }
+    let want = TtTensor::prescribed_ranks(&vec![d; n], r);
+    if t.ranks() != want.as_slice() {
+        bail!("{what}: ranks {:?} != {want:?}", t.ranks());
+    }
+    Ok(())
+}
+
+/// Pack the rows of a [`TtProjection`] into `(g_first, g_mid, g_last)`.
+pub fn pack_tt_projection(
+    f: &TtProjection,
+    n: usize,
+    d: usize,
+    r: usize,
+) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+    let k = f.rows().len();
+    let mut g_first = Vec::with_capacity(k * d * r);
+    let mut g_mid = Vec::with_capacity(k * (n - 2) * r * d * r);
+    let mut g_last = Vec::with_capacity(k * r * d);
+    for row in f.rows() {
+        check_tt_uniform(row, n, d, r, "projection row")?;
+        push_tt_cores(row, n, &mut g_first, &mut g_mid, &mut g_last);
+    }
+    Ok((g_first, g_mid, g_last))
+}
+
+/// Pack a batch of TT inputs into `(x_first, x_mid, x_last)`, zero-padding
+/// to `batch` items.
+pub fn pack_tt_inputs(
+    xs: &[&TtTensor],
+    batch: usize,
+    n: usize,
+    d: usize,
+    rt: usize,
+) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+    if xs.len() > batch {
+        bail!("batch overflow: {} > {batch}", xs.len());
+    }
+    let mut x_first = Vec::with_capacity(batch * d * rt);
+    let mut x_mid = Vec::with_capacity(batch * (n - 2) * rt * d * rt);
+    let mut x_last = Vec::with_capacity(batch * rt * d);
+    for x in xs {
+        check_tt_uniform(x, n, d, rt, "input")?;
+        push_tt_cores(x, n, &mut x_first, &mut x_mid, &mut x_last);
+    }
+    // Zero-pad the remaining slots.
+    x_first.resize(batch * d * rt, 0.0);
+    x_mid.resize(batch * (n - 2) * rt * d * rt, 0.0);
+    x_last.resize(batch * rt * d, 0.0);
+    Ok((x_first, x_mid, x_last))
+}
+
+/// Append one TT tensor's cores to the stacked buffers.
+///
+/// The native core layouts already match: core 0 is `[1,d,r] ≡ [d,r]`,
+/// interior cores are `[r,d,r]`, the last core is `[r,d,1] ≡ [r,d]`.
+fn push_tt_cores(
+    t: &TtTensor,
+    n: usize,
+    first: &mut Vec<f32>,
+    mid: &mut Vec<f32>,
+    last: &mut Vec<f32>,
+) {
+    first.extend(t.core(0).iter().map(|&v| v as f32));
+    for m in 1..n - 1 {
+        mid.extend(t.core(m).iter().map(|&v| v as f32));
+    }
+    last.extend(t.core(n - 1).iter().map(|&v| v as f32));
+}
+
+/// Pack the rows of a [`CpProjection`] into `a [k,N,d,R]`.
+pub fn pack_cp_projection(f: &CpProjection, n: usize, d: usize, r: usize) -> Result<Vec<f32>> {
+    let mut a = Vec::with_capacity(f.rows().len() * n * d * r);
+    for row in f.rows() {
+        if row.dims() != vec![d; n].as_slice() || row.rank() != r {
+            bail!(
+                "projection row: dims {:?} rank {} != ([{d};{n}], {r})",
+                row.dims(),
+                row.rank()
+            );
+        }
+        for mode in 0..n {
+            // Factor is d×R row-major — exactly the [d, R] slab we need.
+            a.extend(row.factor(mode).data().iter().map(|&v| v as f32));
+        }
+    }
+    Ok(a)
+}
+
+/// Pack a batch of CP inputs into `x [B,N,d,R̃]`, zero-padded.
+pub fn pack_cp_inputs(xs: &[&CpTensor], batch: usize, n: usize, d: usize, rt: usize) -> Result<Vec<f32>> {
+    if xs.len() > batch {
+        bail!("batch overflow: {} > {batch}", xs.len());
+    }
+    let mut out = Vec::with_capacity(batch * n * d * rt);
+    for x in xs {
+        if x.dims() != vec![d; n].as_slice() || x.rank() != rt {
+            bail!("input: dims {:?} rank {} != ([{d};{n}], {rt})", x.dims(), x.rank());
+        }
+        for mode in 0..n {
+            out.extend(x.factor(mode).data().iter().map(|&v| v as f32));
+        }
+    }
+    out.resize(batch * n * d * rt, 0.0);
+    Ok(out)
+}
+
+/// Pack a dense Gaussian projection matrix into `w [k,D]`.
+pub fn pack_dense_projection(f: &GaussianProjection) -> Vec<f32> {
+    f.matrix().iter().map(|&v| v as f32).collect()
+}
+
+/// Pack a batch of dense inputs into `x [B,D]`, zero-padded.
+pub fn pack_dense_inputs(xs: &[&DenseTensor], batch: usize, dim: usize) -> Result<Vec<f32>> {
+    if xs.len() > batch {
+        bail!("batch overflow: {} > {batch}", xs.len());
+    }
+    let mut out = Vec::with_capacity(batch * dim);
+    for x in xs {
+        if x.numel() != dim {
+            bail!("input numel {} != {dim}", x.numel());
+        }
+        out.extend(x.data().iter().map(|&v| v as f32));
+    }
+    out.resize(batch * dim, 0.0);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn tt_pack_shapes() {
+        let mut rng = Rng::seed_from(1);
+        let (n, d, r, k) = (5usize, 3usize, 2usize, 4usize);
+        let f = TtProjection::new(&vec![d; n], r, k, &mut rng);
+        let (gf, gm, gl) = pack_tt_projection(&f, n, d, r).unwrap();
+        assert_eq!(gf.len(), k * d * r);
+        assert_eq!(gm.len(), k * (n - 2) * r * d * r);
+        assert_eq!(gl.len(), k * r * d);
+    }
+
+    #[test]
+    fn tt_inputs_pad_with_zeros() {
+        let mut rng = Rng::seed_from(2);
+        let (n, d, rt, b) = (4usize, 3usize, 2usize, 3usize);
+        let x = TtTensor::random(&vec![d; n], rt, &mut rng);
+        let (xf, xm, xl) = pack_tt_inputs(&[&x], b, n, d, rt).unwrap();
+        assert_eq!(xf.len(), b * d * rt);
+        // Slots beyond the first item are zero.
+        assert!(xf[d * rt..].iter().all(|&v| v == 0.0));
+        assert!(xm[(n - 2) * rt * d * rt..].iter().all(|&v| v == 0.0));
+        assert!(xl[rt * d..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn tt_pack_rejects_wrong_rank() {
+        let mut rng = Rng::seed_from(3);
+        let x = TtTensor::random(&[3; 4], 5, &mut rng);
+        assert!(pack_tt_inputs(&[&x], 2, 4, 3, 2).is_err());
+    }
+
+    #[test]
+    fn tt_pack_rejects_batch_overflow() {
+        let mut rng = Rng::seed_from(4);
+        let x = TtTensor::random(&[3; 4], 2, &mut rng);
+        assert!(pack_tt_inputs(&[&x, &x, &x], 2, 4, 3, 2).is_err());
+    }
+
+    #[test]
+    fn cp_pack_shapes_and_padding() {
+        let mut rng = Rng::seed_from(5);
+        let (n, d, r, k, b) = (4usize, 3usize, 2usize, 5usize, 4usize);
+        let f = CpProjection::new(&vec![d; n], r, k, &mut rng);
+        let a = pack_cp_projection(&f, n, d, r).unwrap();
+        assert_eq!(a.len(), k * n * d * r);
+        let x = CpTensor::random(&vec![d; n], 3, &mut rng);
+        let xp = pack_cp_inputs(&[&x], b, n, d, 3).unwrap();
+        assert_eq!(xp.len(), b * n * d * 3);
+        assert!(xp[n * d * 3..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn dense_pack() {
+        let mut rng = Rng::seed_from(6);
+        let f = GaussianProjection::new(&[4, 4], 3, &mut rng);
+        assert_eq!(pack_dense_projection(&f).len(), 3 * 16);
+        let x = DenseTensor::random(&[4, 4], &mut rng);
+        let xp = pack_dense_inputs(&[&x], 2, 16).unwrap();
+        assert_eq!(xp.len(), 32);
+        assert!(xp[16..].iter().all(|&v| v == 0.0));
+    }
+}

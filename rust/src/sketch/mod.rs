@@ -1,0 +1,256 @@
+//! Sketching extensions — the paper's stated future work (§7): *"fast low
+//! rank approximation algorithms for matrices given in the TT format,
+//! which could prove particularly useful for designing efficient PCA …"*.
+//!
+//! This module implements the randomized range finder (Halko, Martinsson &
+//! Tropp 2011) with **tensorized test matrices**: the Gaussian test matrix
+//! `Ω ∈ R^{cols × s}` is replaced by one whose columns are rank-`R` TT
+//! tensors over the column-mode factorization — exactly the `f_TT(R)` rows
+//! of Definition 1. The sketch `Y = A·Ω` therefore never materializes `Ω`
+//! (`O(s·N·d·R²)` parameters instead of `O(s·d^N)`), and when `A` is a
+//! matricization of a TT tensor the product can be computed in compressed
+//! form.
+//!
+//! Pipeline: `Y = A·Ω` → thin QR → `B = QᵀA` → small SVD → truncate.
+
+use crate::linalg::{qr, svd, Matrix, Svd};
+use crate::rng::Rng;
+use crate::tensor::{DenseTensor, TtTensor};
+
+/// Configuration of a tensorized randomized SVD.
+#[derive(Debug, Clone, Copy)]
+pub struct SketchConfig {
+    /// Target rank of the approximation.
+    pub rank: usize,
+    /// Oversampling (sketch width = rank + oversample).
+    pub oversample: usize,
+    /// TT rank of the tensorized test vectors.
+    pub tt_rank: usize,
+    /// Seed for the test matrix.
+    pub seed: u64,
+}
+
+impl Default for SketchConfig {
+    fn default() -> Self {
+        Self { rank: 8, oversample: 8, tt_rank: 2, seed: 0x5E7C }
+    }
+}
+
+/// Result of a sketched SVD.
+pub struct SketchedSvd {
+    /// The rank-`r` factorization.
+    pub svd: Svd,
+    /// Parameters stored by the test matrix (tensorized vs dense).
+    pub omega_params: usize,
+}
+
+/// Randomized low-rank approximation of `a` (`rows × cols`) where `cols`
+/// factorizes as `col_dims` (so test vectors can be TT-structured over
+/// the column modes).
+pub fn sketched_svd(a: &Matrix, col_dims: &[usize], cfg: SketchConfig) -> SketchedSvd {
+    let cols: usize = col_dims.iter().product();
+    assert_eq!(a.cols(), cols, "column modes must factorize a.cols()");
+    let s = (cfg.rank + cfg.oversample).min(a.rows().min(cols));
+    let mut rng = Rng::seed_from(cfg.seed);
+
+    // Tensorized test vectors: s independent Definition-1 TT rows.
+    let omegas: Vec<TtTensor> = (0..s)
+        .map(|_| TtTensor::random_projection_row(col_dims, cfg.tt_rank, &mut rng))
+        .collect();
+    let omega_params: usize = omegas.iter().map(|t| t.num_params()).sum();
+
+    // Y = A·Ω  (multiply each row of A, viewed as a col_dims tensor, with
+    // each TT test vector — O(rows·s·cols·R) via the TT-dense contraction).
+    let mut y = Matrix::zeros(a.rows(), s);
+    for i in 0..a.rows() {
+        let row_tensor = DenseTensor::from_vec(col_dims, a.row(i).to_vec());
+        let ctx_free_row = row_tensor; // clarity
+        for (j, om) in omegas.iter().enumerate() {
+            // ⟨row, ω⟩ via densified ω would cost O(d^N); use the TT-dense
+            // contraction instead.
+            y[(i, j)] = tt_dense_inner(om, &ctx_free_row);
+        }
+    }
+
+    // Q = orth(Y); B = QᵀA; SVD(B) and lift back.
+    let (q, _) = qr(&y);
+    let b = q.transpose().matmul(a);
+    let inner = svd(&b);
+    let trunc = inner.truncate(cfg.rank);
+    SketchedSvd {
+        svd: Svd { u: q.matmul(&trunc.u), s: trunc.s, v: trunc.v },
+        omega_params,
+    }
+}
+
+/// Inner product of a TT tensor with a dense tensor by right-to-left core
+/// absorption (shared with `projections::tt`, specialized here for reuse).
+pub fn tt_dense_inner(tt: &TtTensor, x: &DenseTensor) -> f64 {
+    let dims = x.dims();
+    let n = dims.len();
+    let d_last = dims[n - 1];
+    let r_last = tt.ranks()[n - 1];
+    let prefix = x.numel() / d_last;
+    // core^N as matrix [r_{N-1}, d_N]; cur = X_mat · core^Nᵀ.
+    let mut core_t = vec![0.0; d_last * r_last];
+    for a in 0..r_last {
+        for i in 0..d_last {
+            core_t[i * r_last + a] = tt.core(n - 1)[a * d_last + i];
+        }
+    }
+    let mut cur = crate::linalg::matmul(x.data(), &core_t, prefix, d_last, r_last);
+    let mut r = r_last;
+    for m in (0..n - 1).rev() {
+        let d = dims[m];
+        let rl = tt.ranks()[m];
+        let rr = tt.ranks()[m + 1];
+        debug_assert_eq!(rr, r);
+        let pref = cur.len() / (d * r);
+        let mut ct = vec![0.0; d * rr * rl];
+        for a in 0..rl {
+            for x_ in 0..d * rr {
+                ct[x_ * rl + a] = tt.core(m)[a * d * rr + x_];
+            }
+        }
+        cur = crate::linalg::matmul(&cur, &ct, pref, d * r, rl);
+        r = rl;
+    }
+    debug_assert_eq!(cur.len(), 1);
+    cur[0]
+}
+
+/// Sketched PCA: top-`rank` principal directions of row-observations `a`
+/// (rows = samples, cols = features factored as `col_dims`), without
+/// materializing a dense test matrix.
+pub fn sketched_pca(a: &Matrix, col_dims: &[usize], cfg: SketchConfig) -> Svd {
+    // Center the columns.
+    let mut centered = a.clone();
+    for j in 0..a.cols() {
+        let mean: f64 = (0..a.rows()).map(|i| a[(i, j)]).sum::<f64>() / a.rows() as f64;
+        for i in 0..a.rows() {
+            centered[(i, j)] -= mean;
+        }
+    }
+    sketched_svd(&centered, col_dims, cfg).svd
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rel_err;
+
+    /// Build a rows×cols matrix of known rank.
+    fn low_rank_matrix(rows: usize, cols: usize, rank: usize, rng: &mut Rng) -> Matrix {
+        let u = Matrix::from_vec(rows, rank, rng.gaussian_vec(rows * rank, 1.0));
+        let v = Matrix::from_vec(rank, cols, rng.gaussian_vec(rank * cols, 1.0));
+        u.matmul(&v)
+    }
+
+    #[test]
+    fn recovers_low_rank_matrix() {
+        let mut rng = Rng::seed_from(1);
+        let col_dims = [4usize, 4, 4]; // cols = 64
+        let a = low_rank_matrix(20, 64, 3, &mut rng);
+        let out = sketched_svd(
+            &a,
+            &col_dims,
+            SketchConfig { rank: 3, oversample: 10, tt_rank: 3, seed: 5 },
+        );
+        let rec = out.svd.reconstruct();
+        assert!(
+            rel_err(rec.data(), a.data()) < 1e-6,
+            "rank-3 matrix should be recovered: err={}",
+            rel_err(rec.data(), a.data())
+        );
+    }
+
+    #[test]
+    fn near_optimal_on_decaying_spectrum() {
+        let mut rng = Rng::seed_from(2);
+        let col_dims = [3usize, 3, 3, 3]; // cols = 81
+        // Matrix with geometric singular-value decay.
+        let rows = 30;
+        let u = {
+            let (q, _) = qr(&Matrix::from_vec(rows, rows, rng.gaussian_vec(rows * rows, 1.0)));
+            q
+        };
+        let v = {
+            let (q, _) = qr(&Matrix::from_vec(81, 81, rng.gaussian_vec(81 * 81, 1.0)));
+            q
+        };
+        let mut a = Matrix::zeros(rows, 81);
+        for r in 0..rows.min(81) {
+            let sv = 0.6f64.powi(r as i32);
+            for i in 0..rows {
+                for j in 0..81 {
+                    a[(i, j)] += sv * u[(i, r)] * v[(j, r)];
+                }
+            }
+        }
+        let rank = 6;
+        let out = sketched_svd(
+            &a,
+            &col_dims,
+            SketchConfig { rank, oversample: 12, tt_rank: 3, seed: 9 },
+        );
+        let err = rel_err(out.svd.reconstruct().data(), a.data());
+        // Optimal rank-6 error = σ₇/‖A‖ tail.
+        let exact = svd(&a);
+        let tail: f64 = exact.s[rank..].iter().map(|x| x * x).sum::<f64>().sqrt();
+        let optimal = tail / a.fro_norm();
+        assert!(
+            err < 6.0 * optimal + 0.05,
+            "sketched err {err} vs optimal {optimal}"
+        );
+    }
+
+    #[test]
+    fn tensorized_test_matrix_is_compressed() {
+        let mut rng = Rng::seed_from(3);
+        let col_dims = [4usize; 6]; // cols = 4096
+        let a = low_rank_matrix(10, 4096, 2, &mut rng);
+        let out = sketched_svd(
+            &a,
+            &col_dims,
+            SketchConfig { rank: 2, oversample: 6, tt_rank: 2, seed: 4 },
+        );
+        let dense_params = 4096 * 8; // dense Ω would be cols × s
+        assert!(
+            out.omega_params < dense_params / 5,
+            "tensorized Ω should be ≪ dense: {} vs {}",
+            out.omega_params,
+            dense_params
+        );
+    }
+
+    #[test]
+    fn tt_dense_inner_matches_densified() {
+        let mut rng = Rng::seed_from(4);
+        let dims = [3usize, 4, 2, 3];
+        let tt = TtTensor::random(&dims, 3, &mut rng);
+        let x = DenseTensor::random(&dims, &mut rng);
+        let fast = tt_dense_inner(&tt, &x);
+        let slow = tt.to_dense().inner(&x);
+        assert!((fast - slow).abs() < 1e-9 * slow.abs().max(1.0));
+    }
+
+    #[test]
+    fn sketched_pca_centers_data() {
+        let mut rng = Rng::seed_from(5);
+        let col_dims = [3usize, 3];
+        // Data with a dominant direction plus an offset.
+        let mut a = Matrix::zeros(40, 9);
+        let dir = rng.gaussian_vec(9, 1.0);
+        for i in 0..40 {
+            let t = rng.gaussian();
+            for j in 0..9 {
+                a[(i, j)] = 5.0 + t * dir[j] + 0.01 * rng.gaussian();
+            }
+        }
+        let p = sketched_pca(&a, &col_dims, SketchConfig { rank: 1, ..Default::default() });
+        // Top right-singular vector ≈ ±dir/‖dir‖.
+        let norm: f64 = dir.iter().map(|x| x * x).sum::<f64>().sqrt();
+        let cos: f64 = (0..9).map(|j| p.v[(j, 0)] * dir[j] / norm).sum::<f64>().abs();
+        assert!(cos > 0.98, "principal direction cos={cos}");
+    }
+}

@@ -1,0 +1,397 @@
+//! CP / CANDECOMP-PARAFAC format (Hitchcock 1927).
+//!
+//! A CP tensor `S = [[A¹,…,A^N]]` of rank `R` stores one factor matrix per
+//! mode, `Aⁿ ∈ R^{dₙ × R}`, and is defined by
+//! `S = Σ_r a¹_r ∘ a²_r ∘ … ∘ a^N_r`.
+
+use super::{DenseTensor, TtTensor};
+use crate::linalg::Matrix;
+use crate::rng::{GaussianSource, Rng};
+
+/// A tensor in CP format.
+#[derive(Debug, Clone)]
+pub struct CpTensor {
+    dims: Vec<usize>,
+    rank: usize,
+    /// Factor `n` is `dims[n] × rank`, row-major.
+    factors: Vec<Matrix>,
+}
+
+impl CpTensor {
+    /// Build from explicit factor matrices.
+    pub fn from_factors(factors: Vec<Matrix>) -> Self {
+        assert!(!factors.is_empty());
+        let rank = factors[0].cols();
+        assert!(rank > 0, "CP rank must be positive");
+        for f in &factors {
+            assert_eq!(f.cols(), rank, "inconsistent CP rank across factors");
+        }
+        let dims = factors.iter().map(|f| f.rows()).collect();
+        Self { dims, rank, factors }
+    }
+
+    /// Random CP tensor with i.i.d. `N(0,1)` factor entries (generic input
+    /// generation — *not* the projection-row prescription).
+    pub fn random(dims: &[usize], rank: usize, rng: &mut Rng) -> Self {
+        let factors = dims
+            .iter()
+            .map(|&d| Matrix::from_vec(d, rank, rng.gaussian_vec(d * rank, 1.0)))
+            .collect();
+        Self::from_factors(factors)
+    }
+
+    /// Random CP tensor scaled to unit Frobenius norm.
+    pub fn random_unit(dims: &[usize], rank: usize, rng: &mut Rng) -> Self {
+        let mut t = Self::random(dims, rank, rng);
+        let norm = t.fro_norm();
+        if norm > 0.0 {
+            t.scale(1.0 / norm);
+        }
+        t
+    }
+
+    /// Random CP tensor following **Definition 2** of the paper: all factor
+    /// entries i.i.d. `N(0, (1/R)^{1/N})`. One draw is one *row* of the
+    /// `f_CP(R)` map.
+    pub fn random_projection_row(dims: &[usize], rank: usize, rng: &mut Rng) -> Self {
+        let std = GaussianSource::cp_factor_std(dims.len(), rank);
+        let factors = dims
+            .iter()
+            .map(|&d| Matrix::from_vec(d, rank, rng.gaussian_vec(d * rank, std)))
+            .collect();
+        Self::from_factors(factors)
+    }
+
+    /// Mode sizes.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// CP rank `R`.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Order `N`.
+    pub fn order(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Factor matrix for mode `n` (`dₙ × R`).
+    pub fn factor(&self, n: usize) -> &Matrix {
+        &self.factors[n]
+    }
+
+    /// Number of parameters (the paper's `O(NdR)` storage).
+    pub fn num_params(&self) -> usize {
+        self.factors.iter().map(|f| f.rows() * f.cols()).sum()
+    }
+
+    /// Scale by `s` (absorbed into the first factor).
+    pub fn scale(&mut self, s: f64) {
+        self.factors[0].scale(s);
+    }
+
+    /// Evaluate one entry.
+    pub fn get(&self, idx: &[usize]) -> f64 {
+        assert_eq!(idx.len(), self.dims.len());
+        let mut acc = 0.0;
+        for r in 0..self.rank {
+            let mut prod = 1.0;
+            for (n, &i) in idx.iter().enumerate() {
+                prod *= self.factors[n][(i, r)];
+            }
+            acc += prod;
+        }
+        acc
+    }
+
+    /// Materialize as a dense tensor (small shapes only).
+    pub fn to_dense(&self) -> DenseTensor {
+        let numel: usize = self.dims.iter().product();
+        assert!(
+            numel <= (1 << 28),
+            "refusing to densify a {numel}-element CP tensor"
+        );
+        // Progressive Khatri-Rao: M starts as A¹ (d₁ × R), then
+        // M ← M ⊙_rows A ⁿ (rowwise Kronecker expansion), ending with the
+        // (d₁…d_N) × R matrix whose row-sum over columns is vec(S).
+        let mut m: Vec<f64> = self.factors[0].data().to_vec();
+        let mut rows = self.dims[0];
+        for n in 1..self.dims.len() {
+            let d = self.dims[n];
+            let f = &self.factors[n];
+            let mut next = vec![0.0; rows * d * self.rank];
+            for i in 0..rows {
+                let mrow = &m[i * self.rank..(i + 1) * self.rank];
+                for j in 0..d {
+                    let frow = f.row(j);
+                    let dst = &mut next[(i * d + j) * self.rank..(i * d + j + 1) * self.rank];
+                    for r in 0..self.rank {
+                        dst[r] = mrow[r] * frow[r];
+                    }
+                }
+            }
+            m = next;
+            rows *= d;
+        }
+        let data: Vec<f64> = m.chunks(self.rank).map(|c| c.iter().sum()).collect();
+        DenseTensor::from_vec(&self.dims, data)
+    }
+
+    /// Inner product with another CP tensor — `O(N·d·R·R̃)` via the
+    /// Hadamard product of per-mode Gram matrices:
+    /// `⟨S, T⟩ = Σ_{r,r'} Π_n (AⁿᵀBⁿ)[r,r']`.
+    pub fn inner(&self, other: &CpTensor) -> f64 {
+        assert_eq!(self.dims, other.dims, "shape mismatch");
+        let ra = self.rank;
+        let rb = other.rank;
+        let mut h = vec![1.0f64; ra * rb];
+        let mut g = vec![0.0f64; ra * rb];
+        for n in 0..self.dims.len() {
+            // G = AᵀB without materializing Aᵀ: rank-1 accumulation over
+            // rows keeps both operands streaming contiguously (§Perf).
+            g.fill(0.0);
+            let fa = &self.factors[n];
+            let fb = &other.factors[n];
+            for i in 0..self.dims[n] {
+                let arow = fa.row(i);
+                let brow = fb.row(i);
+                for (r, &av) in arow.iter().enumerate() {
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let dst = &mut g[r * rb..(r + 1) * rb];
+                    for (dv, &bv) in dst.iter_mut().zip(brow) {
+                        *dv += av * bv;
+                    }
+                }
+            }
+            for (hv, gv) in h.iter_mut().zip(&g) {
+                *hv *= gv;
+            }
+        }
+        h.iter().sum()
+    }
+
+    /// Inner product with a TT tensor — `O(R̃·N·d·R²)`: each rank-one CP
+    /// component contracts through the TT chain as a sequence of
+    /// matrix-vector products.
+    pub fn inner_tt(&self, tt: &TtTensor) -> f64 {
+        assert_eq!(self.dims(), tt.dims(), "shape mismatch");
+        let n_modes = self.dims.len();
+        let mut total = 0.0;
+        let mut v: Vec<f64> = Vec::new();
+        let mut next: Vec<f64> = Vec::new();
+        for r in 0..self.rank {
+            // v ← Σ_i a¹_r[i] · G¹[:, i, :]  (1 × r₁ row vector)
+            v.clear();
+            v.resize(tt.ranks()[1], 0.0);
+            let f0 = &self.factors[0];
+            let core0 = tt.core(0);
+            let r1 = tt.ranks()[1];
+            for i in 0..self.dims[0] {
+                let a = f0[(i, r)];
+                if a == 0.0 {
+                    continue;
+                }
+                for b in 0..r1 {
+                    v[b] += a * core0[i * r1 + b];
+                }
+            }
+            // Chain through the remaining cores.
+            for n in 1..n_modes {
+                let rl = tt.ranks()[n];
+                let rr = tt.ranks()[n + 1];
+                let d = self.dims[n];
+                let core = tt.core(n);
+                let f = &self.factors[n];
+                next.clear();
+                next.resize(rr, 0.0);
+                for a in 0..rl {
+                    let va = v[a];
+                    if va == 0.0 {
+                        continue;
+                    }
+                    for i in 0..d {
+                        let coef = va * f[(i, r)];
+                        if coef == 0.0 {
+                            continue;
+                        }
+                        let base = (a * d + i) * rr;
+                        for b in 0..rr {
+                            next[b] += coef * core[base + b];
+                        }
+                    }
+                }
+                std::mem::swap(&mut v, &mut next);
+            }
+            debug_assert_eq!(v.len(), 1);
+            total += v[0];
+        }
+        total
+    }
+
+    /// Frobenius norm in CP format.
+    pub fn fro_norm(&self) -> f64 {
+        self.inner(self).max(0.0).sqrt()
+    }
+
+    /// Exact conversion to TT format with all internal ranks equal to `R`:
+    /// the standard construction with "diagonal" interior cores
+    /// `Gⁿ[r, i, r'] = δ_{rr'} Aⁿ[i, r]`.
+    pub fn to_tt(&self) -> TtTensor {
+        let n = self.dims.len();
+        if n == 1 {
+            // Order-1: the tensor is just the row-sum of the factor.
+            let d = self.dims[0];
+            let mut core = vec![0.0; d];
+            for i in 0..d {
+                for r in 0..self.rank {
+                    core[i] += self.factors[0][(i, r)];
+                }
+            }
+            return TtTensor::from_cores(&self.dims, &[1, 1], vec![core]);
+        }
+        let r = self.rank;
+        let mut ranks = vec![r; n + 1];
+        ranks[0] = 1;
+        ranks[n] = 1;
+        let mut cores = Vec::with_capacity(n);
+        // First core: [1, d₁, R] = A¹.
+        cores.push(self.factors[0].data().to_vec());
+        // Interior cores: [R, dₙ, R] diagonal in (r, r').
+        for m in 1..n - 1 {
+            let d = self.dims[m];
+            let f = &self.factors[m];
+            let mut core = vec![0.0; r * d * r];
+            for rr in 0..r {
+                for i in 0..d {
+                    core[(rr * d + i) * r + rr] = f[(i, rr)];
+                }
+            }
+            cores.push(core);
+        }
+        // Last core: [R, d_N, 1] = A^Nᵀ laid out as (r, i).
+        let f = &self.factors[n - 1];
+        let d = self.dims[n - 1];
+        let mut core = vec![0.0; r * d];
+        for rr in 0..r {
+            for i in 0..d {
+                core[rr * d + i] = f[(i, rr)];
+            }
+        }
+        cores.push(core);
+        TtTensor::from_cores(&self.dims, &ranks, cores)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rel_err;
+    use crate::tensor::Shape;
+
+    #[test]
+    fn get_matches_dense() {
+        let mut rng = Rng::seed_from(1);
+        let t = CpTensor::random(&[3, 4, 2], 3, &mut rng);
+        let d = t.to_dense();
+        for idx in Shape::new(t.dims()).iter_indices() {
+            assert!((t.get(&idx) - d.get(&idx)).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn inner_matches_dense() {
+        let mut rng = Rng::seed_from(2);
+        let a = CpTensor::random(&[3, 4, 2], 3, &mut rng);
+        let b = CpTensor::random(&[3, 4, 2], 5, &mut rng);
+        let exact = a.to_dense().inner(&b.to_dense());
+        let fast = a.inner(&b);
+        assert!((exact - fast).abs() < 1e-9 * exact.abs().max(1.0));
+    }
+
+    #[test]
+    fn inner_tt_matches_dense() {
+        let mut rng = Rng::seed_from(3);
+        let a = CpTensor::random(&[3, 2, 4, 2], 4, &mut rng);
+        let b = TtTensor::random(&[3, 2, 4, 2], 3, &mut rng);
+        let exact = a.to_dense().inner(&b.to_dense());
+        let fast = a.inner_tt(&b);
+        assert!(
+            (exact - fast).abs() < 1e-9 * exact.abs().max(1.0),
+            "exact={exact} fast={fast}"
+        );
+    }
+
+    #[test]
+    fn norm_matches_dense() {
+        let mut rng = Rng::seed_from(4);
+        let t = CpTensor::random(&[4, 3, 4], 6, &mut rng);
+        assert!((t.fro_norm() - t.to_dense().fro_norm()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn to_tt_is_exact() {
+        let mut rng = Rng::seed_from(5);
+        let cp = CpTensor::random(&[3, 4, 2, 3], 4, &mut rng);
+        let tt = cp.to_tt();
+        assert!(rel_err(tt.to_dense().data(), cp.to_dense().data()) < 1e-12);
+        assert_eq!(tt.ranks(), &[1, 4, 4, 4, 1]);
+    }
+
+    #[test]
+    fn to_tt_order_two() {
+        let mut rng = Rng::seed_from(6);
+        let cp = CpTensor::random(&[5, 7], 3, &mut rng);
+        let tt = cp.to_tt();
+        assert!(rel_err(tt.to_dense().data(), cp.to_dense().data()) < 1e-12);
+    }
+
+    #[test]
+    fn projection_row_variance_follows_definition_2() {
+        let mut rng = Rng::seed_from(7);
+        let n_modes = 3;
+        let r = 8;
+        let mut sum = 0.0;
+        let mut count = 0usize;
+        for _ in 0..100 {
+            let t = CpTensor::random_projection_row(&[5; 3], r, &mut rng);
+            for n in 0..n_modes {
+                for &x in t.factor(n).data() {
+                    sum += x * x;
+                }
+                count += t.factor(n).data().len();
+            }
+        }
+        let var = sum / count as f64;
+        let expect = (1.0f64 / r as f64).powf(1.0 / n_modes as f64);
+        assert!((var - expect).abs() < 0.02 * expect, "var={var} expect={expect}");
+    }
+
+    #[test]
+    fn random_unit_norm() {
+        let mut rng = Rng::seed_from(8);
+        let t = CpTensor::random_unit(&[3; 6], 5, &mut rng);
+        assert!((t.fro_norm() - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn num_params_matches_formula() {
+        let mut rng = Rng::seed_from(9);
+        let t = CpTensor::random(&[5; 6], 3, &mut rng);
+        // Paper: NdR parameters.
+        assert_eq!(t.num_params(), 6 * 5 * 3);
+    }
+
+    #[test]
+    fn rank_one_is_outer_product() {
+        let a = Matrix::from_rows(&[&[1.0], &[2.0]]);
+        let b = Matrix::from_rows(&[&[3.0], &[4.0], &[5.0]]);
+        let t = CpTensor::from_factors(vec![a, b]);
+        let d = t.to_dense();
+        assert_eq!(d.get(&[1, 2]), 10.0);
+        assert_eq!(d.get(&[0, 0]), 3.0);
+    }
+}

@@ -1,0 +1,251 @@
+//! Dense (fully materialized) tensors.
+
+use super::Shape;
+use crate::linalg::Matrix;
+use crate::rng::Rng;
+
+/// A dense `N`-th order tensor stored row-major (last mode fastest).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseTensor {
+    shape: Shape,
+    data: Vec<f64>,
+}
+
+impl DenseTensor {
+    /// Zero tensor of the given shape.
+    pub fn zeros(dims: &[usize]) -> Self {
+        let shape = Shape::new(dims);
+        let n = shape.numel();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    /// Build from a row-major buffer.
+    pub fn from_vec(dims: &[usize], data: Vec<f64>) -> Self {
+        let shape = Shape::new(dims);
+        assert_eq!(data.len(), shape.numel(), "buffer size mismatch");
+        Self { shape, data }
+    }
+
+    /// i.i.d. standard Gaussian entries.
+    pub fn random(dims: &[usize], rng: &mut Rng) -> Self {
+        let shape = Shape::new(dims);
+        let data = rng.gaussian_vec(shape.numel(), 1.0);
+        Self { shape, data }
+    }
+
+    /// Random Gaussian tensor normalized to unit Frobenius norm.
+    pub fn random_unit(dims: &[usize], rng: &mut Rng) -> Self {
+        let mut t = Self::random(dims, rng);
+        let norm = t.fro_norm();
+        if norm > 0.0 {
+            t.scale(1.0 / norm);
+        }
+        t
+    }
+
+    /// Mode sizes.
+    pub fn dims(&self) -> &[usize] {
+        self.shape.dims()
+    }
+
+    /// Shape object.
+    pub fn shape(&self) -> &Shape {
+        &self.shape
+    }
+
+    /// Order `N`.
+    pub fn order(&self) -> usize {
+        self.shape.order()
+    }
+
+    /// Total element count.
+    pub fn numel(&self) -> usize {
+        self.shape.numel()
+    }
+
+    /// Row-major buffer.
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable row-major buffer.
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Element access by multi-index.
+    pub fn get(&self, idx: &[usize]) -> f64 {
+        self.data[self.shape.linear(idx)]
+    }
+
+    /// Element assignment by multi-index.
+    pub fn set(&mut self, idx: &[usize], v: f64) {
+        let lin = self.shape.linear(idx);
+        self.data[lin] = v;
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Inner product `⟨self, other⟩`.
+    pub fn inner(&self, other: &DenseTensor) -> f64 {
+        assert_eq!(self.dims(), other.dims(), "shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a * b)
+            .sum()
+    }
+
+    /// Scale in place.
+    pub fn scale(&mut self, s: f64) {
+        for x in &mut self.data {
+            *x *= s;
+        }
+    }
+
+    /// Elementwise difference `self − other`.
+    pub fn sub(&self, other: &DenseTensor) -> DenseTensor {
+        assert_eq!(self.dims(), other.dims());
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        DenseTensor { shape: self.shape.clone(), data }
+    }
+
+    /// Vectorization: the tensor's row-major buffer as a vector copy
+    /// (`vec(S)` under this crate's fixed ordering convention).
+    pub fn vectorize(&self) -> Vec<f64> {
+        self.data.clone()
+    }
+
+    /// Mode-`n` matricization `S₍ₙ₎ ∈ R^{d_n × ∏_{m≠n} d_m}`.
+    ///
+    /// Row `i` holds the mode-`n` fiber slice `S[…, i_n = i, …]` with the
+    /// remaining modes flattened row-major in their original order.
+    pub fn matricize(&self, n: usize) -> Matrix {
+        let dims = self.dims();
+        assert!(n < dims.len());
+        let (rows, cols) = self.shape.matricization_shape(n);
+        let mut out = Matrix::zeros(rows, cols);
+        // inner = product of dims after n; outer = product of dims before n.
+        let inner: usize = dims[n + 1..].iter().product();
+        let outer: usize = dims[..n].iter().product();
+        let dn = dims[n];
+        for o in 0..outer {
+            for i in 0..dn {
+                let src_base = (o * dn + i) * inner;
+                let dst_base = o * inner;
+                let dst_row = out.row_mut(i);
+                dst_row[dst_base..dst_base + inner]
+                    .copy_from_slice(&self.data[src_base..src_base + inner]);
+            }
+        }
+        out
+    }
+
+    /// Matricization over the leading `split` modes:
+    /// `S₍{1..split}₎ ∈ R^{(d₁…d_split) × (d_{split+1}…d_N)}`.
+    ///
+    /// Under row-major layout this is a pure reshape (no data movement).
+    pub fn matricize_split(&self, split: usize) -> Matrix {
+        let dims = self.dims();
+        assert!(split >= 1 && split < dims.len());
+        let rows: usize = dims[..split].iter().product();
+        let cols: usize = dims[split..].iter().product();
+        Matrix::from_vec(rows, cols, self.data.clone())
+    }
+
+    /// Reshape to new dims with identical element count (row-major).
+    pub fn reshape(&self, dims: &[usize]) -> DenseTensor {
+        let shape = Shape::new(dims);
+        assert_eq!(shape.numel(), self.numel(), "reshape element count");
+        DenseTensor { shape, data: self.data.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn iota(dims: &[usize]) -> DenseTensor {
+        let n: usize = dims.iter().product();
+        DenseTensor::from_vec(dims, (0..n).map(|x| x as f64).collect())
+    }
+
+    #[test]
+    fn get_set_roundtrip() {
+        let mut t = DenseTensor::zeros(&[2, 3, 4]);
+        t.set(&[1, 2, 3], 42.0);
+        assert_eq!(t.get(&[1, 2, 3]), 42.0);
+        assert_eq!(t.get(&[0, 0, 0]), 0.0);
+    }
+
+    #[test]
+    fn matricize_mode0_is_reshape() {
+        let t = iota(&[2, 3]);
+        let m = t.matricize(0);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.row(0), &[0.0, 1.0, 2.0]);
+        assert_eq!(m.row(1), &[3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn matricize_last_mode_matches_fibers() {
+        let t = iota(&[2, 3]);
+        let m = t.matricize(1);
+        // Mode-1 fibers of a 2x3: columns of the original matrix.
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.row(0), &[0.0, 3.0]);
+        assert_eq!(m.row(1), &[1.0, 4.0]);
+        assert_eq!(m.row(2), &[2.0, 5.0]);
+    }
+
+    #[test]
+    fn matricization_preserves_norm() {
+        let mut rng = Rng::seed_from(3);
+        let t = DenseTensor::random(&[3, 4, 5], &mut rng);
+        for n in 0..3 {
+            assert!((t.matricize(n).fro_norm() - t.fro_norm()).abs() < 1e-10);
+        }
+        assert!((t.matricize_split(2).fro_norm() - t.fro_norm()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn matricize_middle_mode_entries() {
+        let t = iota(&[2, 3, 2]);
+        let m = t.matricize(1);
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.cols(), 4);
+        // Check entry: S[o=1, i=2, inner=1] = element (1,2,1) = 1*6+2*2+1 = 11.
+        // Row 2 (i=2), column o*inner+in = 1*2+1 = 3.
+        assert_eq!(m[(2, 3)], 11.0);
+    }
+
+    #[test]
+    fn inner_product_and_norm() {
+        let mut rng = Rng::seed_from(4);
+        let a = DenseTensor::random(&[4, 4], &mut rng);
+        assert!((a.inner(&a) - a.fro_norm().powi(2)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn random_unit_has_unit_norm() {
+        let mut rng = Rng::seed_from(5);
+        let t = DenseTensor::random_unit(&[5, 5, 5], &mut rng);
+        assert!((t.fro_norm() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = iota(&[2, 6]);
+        let r = t.reshape(&[3, 4]);
+        assert_eq!(r.data(), t.data());
+        assert_eq!(r.dims(), &[3, 4]);
+    }
+}

@@ -1,0 +1,125 @@
+//! Tensor formats: dense, tensor-train (TT) and CP.
+//!
+//! The paper's projection maps act on `N`-th order tensors that may be
+//! given dense, in TT format (`⟨⟨G¹,…,G^N⟩⟩`, Oseledets 2011) or in CP
+//! format (`[[A¹,…,A^N]]`, Hitchcock 1927). This module implements all
+//! three with the operations the projection layer and the experiment
+//! harness need: evaluation, conversion, matricization, inner products in
+//! compressed form, norms, random generation with the paper's variance
+//! prescriptions, TT-SVD and TT-rounding.
+
+mod cp;
+mod dense;
+mod shape;
+mod tt;
+mod tucker;
+
+pub use cp::CpTensor;
+pub use dense::DenseTensor;
+pub use shape::Shape;
+pub use tt::{TtContraction, TtEntryEvaluator, TtTensor};
+pub use tucker::TuckerTensor;
+
+/// How an input tensor is physically represented.
+///
+/// The coordinator routes requests on this tag, and the projection maps
+/// pick the contraction schedule with the complexity the paper states for
+/// each case (§3 and §4.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Format {
+    /// Fully materialized `d₁·…·d_N` buffer.
+    Dense,
+    /// Tensor-train cores.
+    Tt,
+    /// CP factor matrices.
+    Cp,
+}
+
+impl std::fmt::Display for Format {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Format::Dense => write!(f, "dense"),
+            Format::Tt => write!(f, "tt"),
+            Format::Cp => write!(f, "cp"),
+        }
+    }
+}
+
+/// A tensor in any of the three supported formats.
+#[derive(Debug, Clone)]
+pub enum AnyTensor {
+    /// Dense representation.
+    Dense(DenseTensor),
+    /// Tensor-train representation.
+    Tt(TtTensor),
+    /// CP representation.
+    Cp(CpTensor),
+}
+
+impl AnyTensor {
+    /// The format tag of this tensor.
+    pub fn format(&self) -> Format {
+        match self {
+            AnyTensor::Dense(_) => Format::Dense,
+            AnyTensor::Tt(_) => Format::Tt,
+            AnyTensor::Cp(_) => Format::Cp,
+        }
+    }
+
+    /// Mode sizes.
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            AnyTensor::Dense(t) => t.dims(),
+            AnyTensor::Tt(t) => t.dims(),
+            AnyTensor::Cp(t) => t.dims(),
+        }
+    }
+
+    /// Frobenius norm (computed in-format; never materializes).
+    pub fn fro_norm(&self) -> f64 {
+        match self {
+            AnyTensor::Dense(t) => t.fro_norm(),
+            AnyTensor::Tt(t) => t.fro_norm(),
+            AnyTensor::Cp(t) => t.fro_norm(),
+        }
+    }
+
+    /// Materialize as a dense tensor (only valid for small products of
+    /// dims; callers guard with [`Shape::numel`]).
+    pub fn to_dense(&self) -> DenseTensor {
+        match self {
+            AnyTensor::Dense(t) => t.clone(),
+            AnyTensor::Tt(t) => t.to_dense(),
+            AnyTensor::Cp(t) => t.to_dense(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn format_tags() {
+        let mut rng = Rng::seed_from(1);
+        let t = TtTensor::random(&[2, 3, 2], 2, &mut rng);
+        assert_eq!(AnyTensor::Tt(t).format(), Format::Tt);
+    }
+
+    #[test]
+    fn any_tensor_norm_consistency() {
+        let mut rng = Rng::seed_from(2);
+        let t = TtTensor::random(&[3, 4, 3], 3, &mut rng);
+        let any = AnyTensor::Tt(t.clone());
+        let dense = any.to_dense();
+        assert!((any.fro_norm() - dense.fro_norm()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn format_display() {
+        assert_eq!(Format::Tt.to_string(), "tt");
+        assert_eq!(Format::Cp.to_string(), "cp");
+        assert_eq!(Format::Dense.to_string(), "dense");
+    }
+}

@@ -1,0 +1,190 @@
+//! Shape arithmetic: dims, strides, multi-index ↔ linear-index mapping.
+//!
+//! Index convention: we use **row-major** (last index fastest) linear
+//! ordering throughout the crate. The paper's identities (matricization
+//! round trips, `vec(S) = vec(S₍₁₎)` etc.) hold under any fixed convention
+//! — see the paper's footnote: "the specific ordering of the fibers does
+//! not matter as long as it is consistent across all reshaping operations."
+
+/// Mode sizes of a tensor plus derived stride helpers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Shape {
+    dims: Vec<usize>,
+}
+
+impl Shape {
+    /// Construct from mode sizes. Every mode must be nonzero.
+    pub fn new(dims: &[usize]) -> Self {
+        assert!(!dims.is_empty(), "tensors must have at least one mode");
+        assert!(dims.iter().all(|&d| d > 0), "zero-sized mode");
+        Self { dims: dims.to_vec() }
+    }
+
+    /// Mode sizes.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Order `N` (number of modes).
+    pub fn order(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Total number of elements `d₁·…·d_N`.
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Total number of elements as `f64` (usable when the product overflows
+    /// `usize`, e.g. the paper's high-order case `3^25 ≈ 8.5e11`).
+    pub fn numel_f64(&self) -> f64 {
+        self.dims.iter().map(|&d| d as f64).product()
+    }
+
+    /// Row-major strides (last mode has stride 1).
+    pub fn strides(&self) -> Vec<usize> {
+        let n = self.dims.len();
+        let mut s = vec![1usize; n];
+        for i in (0..n.saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.dims[i + 1];
+        }
+        s
+    }
+
+    /// Linear index of a multi-index.
+    pub fn linear(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.dims.len());
+        let strides = self.strides();
+        let mut lin = 0;
+        for (k, (&i, &s)) in idx.iter().zip(&strides).enumerate() {
+            debug_assert!(i < self.dims[k], "index {i} out of range for mode {k}");
+            lin += i * s;
+        }
+        lin
+    }
+
+    /// Multi-index of a linear index.
+    pub fn multi(&self, lin: usize) -> Vec<usize> {
+        let mut idx = vec![0usize; self.dims.len()];
+        self.multi_into(lin, &mut idx);
+        idx
+    }
+
+    /// Allocation-free variant of [`Shape::multi`] writing into `idx`
+    /// (hot path of sparse projections over compressed inputs).
+    pub fn multi_into(&self, mut lin: usize, idx: &mut [usize]) {
+        debug_assert_eq!(idx.len(), self.dims.len());
+        // Row-major: peel from the last (fastest) mode without computing
+        // the stride vector.
+        for k in (0..self.dims.len()).rev() {
+            let d = self.dims[k];
+            idx[k] = lin % d;
+            lin /= d;
+        }
+    }
+
+    /// Iterate all multi-indices in row-major order.
+    pub fn iter_indices(&self) -> IndexIter {
+        IndexIter {
+            dims: self.dims.clone(),
+            current: vec![0; self.dims.len()],
+            done: self.numel() == 0,
+        }
+    }
+
+    /// Shape of the mode-`n` matricization: `d_n × (∏_{m≠n} d_m)`.
+    pub fn matricization_shape(&self, n: usize) -> (usize, usize) {
+        assert!(n < self.order());
+        let rows = self.dims[n];
+        (rows, self.numel() / rows)
+    }
+}
+
+/// Row-major multi-index iterator.
+pub struct IndexIter {
+    dims: Vec<usize>,
+    current: Vec<usize>,
+    done: bool,
+}
+
+impl Iterator for IndexIter {
+    type Item = Vec<usize>;
+
+    fn next(&mut self) -> Option<Vec<usize>> {
+        if self.done {
+            return None;
+        }
+        let out = self.current.clone();
+        // Increment last mode first (row-major).
+        let mut k = self.dims.len();
+        loop {
+            if k == 0 {
+                self.done = true;
+                break;
+            }
+            k -= 1;
+            self.current[k] += 1;
+            if self.current[k] < self.dims[k] {
+                break;
+            }
+            self.current[k] = 0;
+        }
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_row_major() {
+        let s = Shape::new(&[2, 3, 4]);
+        assert_eq!(s.strides(), vec![12, 4, 1]);
+        assert_eq!(s.numel(), 24);
+        assert_eq!(s.order(), 3);
+    }
+
+    #[test]
+    fn linear_multi_roundtrip() {
+        let s = Shape::new(&[3, 4, 5]);
+        for lin in 0..s.numel() {
+            let m = s.multi(lin);
+            assert_eq!(s.linear(&m), lin);
+            for (k, &i) in m.iter().enumerate() {
+                assert!(i < s.dims()[k]);
+            }
+        }
+    }
+
+    #[test]
+    fn iter_covers_all_indices_in_order() {
+        let s = Shape::new(&[2, 3]);
+        let all: Vec<Vec<usize>> = s.iter_indices().collect();
+        assert_eq!(all.len(), 6);
+        assert_eq!(all[0], vec![0, 0]);
+        assert_eq!(all[1], vec![0, 1]);
+        assert_eq!(all[5], vec![1, 2]);
+        for (lin, idx) in all.iter().enumerate() {
+            assert_eq!(s.linear(idx), lin);
+        }
+    }
+
+    #[test]
+    fn numel_f64_for_huge_shapes() {
+        let s = Shape::new(&[3; 25]);
+        assert!((s.numel_f64() - 3f64.powi(25)).abs() < 1.0);
+    }
+
+    #[test]
+    fn matricization_shape() {
+        let s = Shape::new(&[2, 3, 4]);
+        assert_eq!(s.matricization_shape(1), (3, 8));
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_mode_rejected() {
+        Shape::new(&[2, 0, 3]);
+    }
+}

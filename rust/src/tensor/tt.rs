@@ -1,0 +1,874 @@
+//! Tensor-train (TT) format (Oseledets 2011).
+//!
+//! A TT tensor `S = ⟨⟨G¹,…,G^N⟩⟩` stores one 3rd-order core per mode,
+//! `Gⁿ ∈ R^{rₙ₋₁ × dₙ × rₙ}` with boundary ranks `r₀ = r_N = 1`, and is
+//! defined entrywise by `S[i₁,…,i_N] = G¹[:,i₁,:]·…·G^N[:,i_N,:]`.
+//!
+//! This module implements everything the projection layer and experiments
+//! need: random generation (both generic and with the paper's Definition 1
+//! variance prescription), evaluation, densification, the `O(Ndr³)` TT×TT
+//! inner product, norms, TT-SVD of dense tensors and TT-rounding.
+
+use super::{CpTensor, DenseTensor, Shape};
+use crate::linalg::{matmul, svd, Matrix};
+use crate::rng::{GaussianSource, Rng};
+
+/// A tensor in TT format.
+#[derive(Debug, Clone)]
+pub struct TtTensor {
+    dims: Vec<usize>,
+    /// Rank vector of length `N+1`; `ranks[0] = ranks[N] = 1`.
+    ranks: Vec<usize>,
+    /// Core `n` stored row-major with shape `[ranks[n], dims[n], ranks[n+1]]`.
+    cores: Vec<Vec<f64>>,
+}
+
+impl TtTensor {
+    /// Build from explicit cores. Panics if shapes are inconsistent.
+    pub fn from_cores(dims: &[usize], ranks: &[usize], cores: Vec<Vec<f64>>) -> Self {
+        let n = dims.len();
+        assert_eq!(ranks.len(), n + 1, "rank vector length");
+        assert_eq!(ranks[0], 1, "left boundary rank");
+        assert_eq!(ranks[n], 1, "right boundary rank");
+        assert_eq!(cores.len(), n, "core count");
+        for (k, core) in cores.iter().enumerate() {
+            assert_eq!(
+                core.len(),
+                ranks[k] * dims[k] * ranks[k + 1],
+                "core {k} size"
+            );
+        }
+        Self { dims: dims.to_vec(), ranks: ranks.to_vec(), cores }
+    }
+
+    /// Uniform internal rank vector `[1, r, r, …, r, 1]` clipped to the
+    /// maximal attainable TT ranks for the given dims.
+    pub fn uniform_ranks(dims: &[usize], r: usize) -> Vec<usize> {
+        let n = dims.len();
+        let mut ranks = vec![1usize; n + 1];
+        for k in 1..n {
+            // Max rank at cut k is min(prod(dims[..k]), prod(dims[k..])),
+            // computed with saturation to avoid overflow for high orders.
+            let left: usize = dims[..k]
+                .iter()
+                .fold(1usize, |a, &d| a.saturating_mul(d))
+                .min(1 << 40);
+            let right: usize = dims[k..]
+                .iter()
+                .fold(1usize, |a, &d| a.saturating_mul(d))
+                .min(1 << 40);
+            ranks[k] = r.min(left).min(right);
+        }
+        ranks
+    }
+
+    /// Prescribed (unclipped) rank vector `[1, r, …, r, 1]` — the shape
+    /// Definition 1 and TT-Toolbox's `tt_rand` use, even when `r` exceeds
+    /// the maximal attainable rank at a cut (the parameterization is then
+    /// merely redundant, which the paper's analysis allows).
+    pub fn prescribed_ranks(dims: &[usize], r: usize) -> Vec<usize> {
+        let n = dims.len();
+        let mut ranks = vec![r; n + 1];
+        ranks[0] = 1;
+        ranks[n] = 1;
+        ranks
+    }
+
+    /// Random TT tensor with i.i.d. `N(0,1)` core entries (generic input
+    /// generation — *not* the projection-row prescription).
+    pub fn random(dims: &[usize], rank: usize, rng: &mut Rng) -> Self {
+        let ranks = Self::prescribed_ranks(dims, rank);
+        let cores = (0..dims.len())
+            .map(|k| rng.gaussian_vec(ranks[k] * dims[k] * ranks[k + 1], 1.0))
+            .collect();
+        Self::from_cores(dims, &ranks, cores)
+    }
+
+    /// Random TT tensor scaled to unit Frobenius norm (the input
+    /// distribution of the paper's §6 experiments, with `rank = R̃ = 10`).
+    pub fn random_unit(dims: &[usize], rank: usize, rng: &mut Rng) -> Self {
+        let mut t = Self::random(dims, rank, rng);
+        let norm = t.fro_norm();
+        if norm > 0.0 {
+            t.scale(1.0 / norm);
+        }
+        t
+    }
+
+    /// Random TT tensor following **Definition 1** of the paper: core
+    /// entries are `N(0, 1/√R)` for boundary cores and `N(0, 1/R)` for
+    /// interior cores. One such draw is one *row* of the `f_TT(R)` map.
+    pub fn random_projection_row(dims: &[usize], rank: usize, rng: &mut Rng) -> Self {
+        let n = dims.len();
+        let ranks = Self::prescribed_ranks(dims, rank);
+        let cores = (0..n)
+            .map(|k| {
+                let std = GaussianSource::tt_core_std(k, n, rank);
+                rng.gaussian_vec(ranks[k] * dims[k] * ranks[k + 1], std)
+            })
+            .collect();
+        Self::from_cores(dims, &ranks, cores)
+    }
+
+    /// Mode sizes.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Rank vector (length `N+1`).
+    pub fn ranks(&self) -> &[usize] {
+        &self.ranks
+    }
+
+    /// Maximal internal rank.
+    pub fn max_rank(&self) -> usize {
+        self.ranks.iter().copied().max().unwrap_or(1)
+    }
+
+    /// Order `N`.
+    pub fn order(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Core `n` as a flat row-major `[r_n, d_n, r_{n+1}]` buffer.
+    pub fn core(&self, n: usize) -> &[f64] {
+        &self.cores[n]
+    }
+
+    /// Mutable core buffer.
+    pub fn core_mut(&mut self, n: usize) -> &mut Vec<f64> {
+        &mut self.cores[n]
+    }
+
+    /// Number of parameters (the paper's `O(NdR²)` storage).
+    pub fn num_params(&self) -> usize {
+        self.cores.iter().map(|c| c.len()).sum()
+    }
+
+    /// Scale the tensor by `s` (absorbed into the first core).
+    pub fn scale(&mut self, s: f64) {
+        for x in &mut self.cores[0] {
+            *x *= s;
+        }
+    }
+
+    /// Evaluate a single entry `S[idx]` by the chain of matrix products.
+    pub fn get(&self, idx: &[usize]) -> f64 {
+        let mut v = Vec::new();
+        let mut buf = Vec::new();
+        self.get_with(idx, &mut v, &mut buf)
+    }
+
+    /// Allocation-free entry evaluation with caller-provided scratch —
+    /// the hot path of sparse projections over TT inputs (§Perf).
+    pub fn get_with(&self, idx: &[usize], v: &mut Vec<f64>, buf: &mut Vec<f64>) -> f64 {
+        assert_eq!(idx.len(), self.dims.len());
+        // v starts as the i₁-th row of G¹ (1 × r₁), then v ← v · Gⁿ[:,iₙ,:].
+        v.clear();
+        v.extend_from_slice(self.core_slice(0, idx[0]));
+        for n in 1..self.dims.len() {
+            let rl = self.ranks[n];
+            let rr = self.ranks[n + 1];
+            buf.clear();
+            buf.resize(rr, 0.0);
+            let core = &self.cores[n];
+            let d = self.dims[n];
+            let i = idx[n];
+            for a in 0..rl {
+                let va = v[a];
+                if va == 0.0 {
+                    continue;
+                }
+                let base = (a * d + i) * rr;
+                for b in 0..rr {
+                    buf[b] += va * core[base + b];
+                }
+            }
+            std::mem::swap(v, buf);
+        }
+        debug_assert_eq!(v.len(), 1);
+        v[0]
+    }
+
+    /// The slice `Gⁿ[:, i, :]` is not contiguous; this returns the
+    /// contiguous row `G¹[0, i, :]` of the first core only.
+    fn core_slice(&self, n: usize, i: usize) -> &[f64] {
+        debug_assert_eq!(n, 0);
+        let rr = self.ranks[1];
+        &self.cores[0][i * rr..(i + 1) * rr]
+    }
+
+    /// Materialize the full tensor (guard: panics above `max_numel`
+    /// elements to catch accidental densification of huge tensors).
+    pub fn to_dense(&self) -> DenseTensor {
+        let shape = Shape::new(&self.dims);
+        let numel = shape.numel();
+        assert!(
+            numel <= (1 << 28),
+            "refusing to densify a {numel}-element TT tensor"
+        );
+        // Sequential unfolding: T ∈ R^{(d₁…dₙ) × rₙ}, absorbed core by core.
+        let mut t: Vec<f64> = self.cores[0].clone(); // (d₁) × r₁ row-major
+        let mut rows = self.dims[0];
+        for n in 1..self.dims.len() {
+            let rl = self.ranks[n];
+            let d = self.dims[n];
+            let rr = self.ranks[n + 1];
+            // T_next[(rows*d), rr] = T[rows, rl] · core[rl, d*rr]
+            let next = matmul(&t, &self.cores[n], rows, rl, d * rr);
+            t = next;
+            rows *= d;
+        }
+        DenseTensor::from_vec(&self.dims, t)
+    }
+
+    /// Inner product `⟨self, other⟩` in TT format — `O(N·d·r³)`, the
+    /// complexity the paper states for projecting TT inputs.
+    pub fn inner(&self, other: &TtTensor) -> f64 {
+        assert_eq!(self.dims, other.dims, "shape mismatch");
+        // M ∈ R^{ra × rb} carries the partial contraction; starts 1×1 = [1].
+        let mut m: Vec<f64> = vec![1.0];
+        let mut ra = 1usize;
+        let mut rb = 1usize;
+        for n in 0..self.dims.len() {
+            let d = self.dims[n];
+            let ra2 = self.ranks[n + 1];
+            let rb2 = other.ranks[n + 1];
+            m = tt_inner_step(&m, &self.cores[n], &other.cores[n], ra, rb, d, ra2, rb2);
+            ra = ra2;
+            rb = rb2;
+        }
+        debug_assert_eq!(m.len(), 1);
+        m[0]
+    }
+
+    /// Frobenius norm, computed in TT format.
+    pub fn fro_norm(&self) -> f64 {
+        self.inner(self).max(0.0).sqrt()
+    }
+
+    /// TT-SVD: decompose a dense tensor into TT format with relative
+    /// Frobenius error ≤ `eps` and ranks capped at `max_rank`
+    /// (Oseledets 2011, Algorithm 1).
+    pub fn tt_svd(x: &DenseTensor, eps: f64, max_rank: usize) -> TtTensor {
+        let dims = x.dims().to_vec();
+        let n = dims.len();
+        // Per-step tolerance so the accumulated error stays ≤ eps‖X‖.
+        let step_eps = if n > 1 {
+            eps / ((n - 1) as f64).sqrt()
+        } else {
+            eps
+        };
+        let mut cores: Vec<Vec<f64>> = Vec::with_capacity(n);
+        let mut ranks = vec![1usize; n + 1];
+        // C holds the remainder, shaped (r_{k} * d_k) × (d_{k+1}…d_N).
+        let mut c = x.data().to_vec();
+        let mut c_rows = dims[0];
+        let mut c_cols = x.numel() / dims[0];
+        for k in 0..n - 1 {
+            let mat = Matrix::from_vec(c_rows, c_cols, c.clone());
+            let dec = svd(&mat);
+            let mut r = dec.rank_for_tolerance(step_eps).max(1);
+            r = r.min(max_rank).max(1);
+            let trunc = dec.truncate(r);
+            // Core k: U reshaped to [r_{k}, d_k, r].
+            cores.push(trunc.u.data().to_vec());
+            ranks[k + 1] = r;
+            // Remainder: diag(s)·Vᵀ, reshaped for the next step.
+            let mut sv = trunc.v.transpose(); // r × c_cols
+            for i in 0..r {
+                let srow = trunc.s[i];
+                for x in sv.row_mut(i) {
+                    *x *= srow;
+                }
+            }
+            c = sv.into_vec();
+            if k + 1 < n - 1 {
+                c_rows = r * dims[k + 1];
+                c_cols /= dims[k + 1];
+            } else {
+                c_rows = r;
+                c_cols = dims[n - 1];
+            }
+        }
+        // Last core: the remainder itself, [r_{N-1}, d_N, 1].
+        cores.push(c);
+        TtTensor::from_cores(&dims, &ranks, cores)
+    }
+
+    /// TT-rounding: recompress to relative error ≤ `eps`, ranks ≤
+    /// `max_rank` (Oseledets 2011, Algorithm 2 — right-to-left QR sweep
+    /// followed by a left-to-right truncated-SVD sweep).
+    pub fn round(&self, eps: f64, max_rank: usize) -> TtTensor {
+        let n = self.order();
+        if n == 1 {
+            return self.clone();
+        }
+        let dims = self.dims.clone();
+        let mut cores = self.cores.clone();
+        let mut ranks = self.ranks.clone();
+
+        // Right-to-left orthogonalization: make cores 2..N right-orthogonal.
+        for k in (1..n).rev() {
+            let rl = ranks[k];
+            let d = dims[k];
+            let rr = ranks[k + 1];
+            // Row-major view [rl, d*rr]; we need QR of its transpose.
+            let mat = Matrix::from_vec(rl, d * rr, cores[k].clone());
+            let (q, r) = crate::linalg::qr(&mat.transpose()); // (d*rr) × p, p × rl
+            let p = q.cols();
+            // New core k: Qᵀ reshaped [p, d, rr].
+            cores[k] = q.transpose().into_vec();
+            // Absorb Rᵀ (rl × p) into core k-1: [r_{k-1}, d_{k-1}, rl]·(rl×p).
+            let rlm = ranks[k - 1];
+            let dm = dims[k - 1];
+            let absorbed = matmul(&cores[k - 1], r.transpose().data(), rlm * dm, rl, p);
+            cores[k - 1] = absorbed;
+            ranks[k] = p;
+        }
+
+        // Left-to-right truncation sweep.
+        let step_eps = eps / ((n - 1) as f64).sqrt();
+        let norm = {
+            let probe = TtTensor::from_cores(&dims, &ranks, cores.clone());
+            probe.fro_norm()
+        };
+        let abs_tol = step_eps * norm;
+        for k in 0..n - 1 {
+            let rl = ranks[k];
+            let d = dims[k];
+            let rr = ranks[k + 1];
+            let mat = Matrix::from_vec(rl * d, rr, cores[k].clone());
+            let dec = svd(&mat);
+            // Rank for absolute tolerance abs_tol.
+            let mut r = dec.s.len();
+            let mut tail = 0.0;
+            while r > 1 {
+                let add = dec.s[r - 1] * dec.s[r - 1];
+                if (tail + add).sqrt() > abs_tol {
+                    break;
+                }
+                tail += add;
+                r -= 1;
+            }
+            r = r.min(max_rank).max(1);
+            let trunc = dec.truncate(r);
+            cores[k] = trunc.u.data().to_vec();
+            // Carry diag(s)Vᵀ into the next core.
+            let mut sv = trunc.v.transpose();
+            for i in 0..r {
+                let s = trunc.s[i];
+                for x in sv.row_mut(i) {
+                    *x *= s;
+                }
+            }
+            let next = matmul(sv.data(), &cores[k + 1], r, rr, dims[k + 1] * ranks[k + 2]);
+            cores[k + 1] = next;
+            ranks[k + 1] = r;
+        }
+        TtTensor::from_cores(&dims, &ranks, cores)
+    }
+
+    /// Convert to CP is not generally possible; but any CP tensor converts
+    /// to TT — see [`CpTensor::to_tt`].
+    pub fn from_cp(cp: &CpTensor) -> TtTensor {
+        cp.to_tt()
+    }
+
+    /// TT addition: `self + other` with the standard block construction —
+    /// boundary cores concatenate along the free rank, interior cores
+    /// form a block-diagonal. Ranks add; use [`TtTensor::round`] to
+    /// recompress afterwards.
+    pub fn add(&self, other: &TtTensor) -> TtTensor {
+        assert_eq!(self.dims, other.dims, "shape mismatch");
+        let n = self.order();
+        if n == 1 {
+            let core: Vec<f64> = self.cores[0]
+                .iter()
+                .zip(&other.cores[0])
+                .map(|(a, b)| a + b)
+                .collect();
+            return TtTensor::from_cores(&self.dims, &[1, 1], vec![core]);
+        }
+        let mut ranks = vec![0usize; n + 1];
+        ranks[0] = 1;
+        ranks[n] = 1;
+        for k in 1..n {
+            ranks[k] = self.ranks[k] + other.ranks[k];
+        }
+        let mut cores = Vec::with_capacity(n);
+        for m in 0..n {
+            let d = self.dims[m];
+            let (al, ar) = (self.ranks[m], self.ranks[m + 1]);
+            let (bl, br) = (other.ranks[m], other.ranks[m + 1]);
+            let (rl, rr) = (ranks[m], ranks[m + 1]);
+            let mut core = vec![0.0; rl * d * rr];
+            let a = &self.cores[m];
+            let b = &other.cores[m];
+            // A block at (row offset 0, col offset 0); B block at
+            // (row offset rl−bl, col offset rr−br). For boundary cores one
+            // of the offsets degenerates (rl = 1 or rr = 1).
+            let (a_ro, a_co) = (0usize, 0usize);
+            let (b_ro, b_co) = (rl - bl, rr - br);
+            for i in 0..d {
+                for x in 0..al {
+                    for y in 0..ar {
+                        core[((a_ro + x) * d + i) * rr + (a_co + y)] +=
+                            a[(x * d + i) * ar + y];
+                    }
+                }
+                for x in 0..bl {
+                    for y in 0..br {
+                        core[((b_ro + x) * d + i) * rr + (b_co + y)] +=
+                            b[(x * d + i) * br + y];
+                    }
+                }
+            }
+            cores.push(core);
+        }
+        TtTensor::from_cores(&self.dims, &ranks, cores)
+    }
+}
+
+/// Incremental TT entry evaluator with prefix caching.
+///
+/// Evaluating many entries of a TT tensor at *sorted* multi-indices (the
+/// sparse-RP-on-TT-input pattern: nonzero positions are generated in
+/// increasing linear order) shares long index prefixes between
+/// consecutive queries. This evaluator caches the partial products
+/// `v_m = G¹[i₁]·…·Gᵐ[:,i_m,:]` and recomputes only from the first mode
+/// where the index changed — ~2× fewer chain steps at the paper's
+/// medium-order shape (§Perf in EXPERIMENTS.md).
+pub struct TtEntryEvaluator<'a> {
+    x: &'a TtTensor,
+    /// `partials[m]` = row vector after absorbing modes `0..=m`.
+    partials: Vec<Vec<f64>>,
+    prev: Vec<usize>,
+}
+
+impl<'a> TtEntryEvaluator<'a> {
+    /// New evaluator for `x`.
+    pub fn new(x: &'a TtTensor) -> Self {
+        let n = x.order();
+        let partials = (0..n).map(|m| vec![0.0; x.ranks[m + 1]]).collect();
+        Self { x, partials, prev: vec![usize::MAX; n] }
+    }
+
+    /// Invalidate the cache (call between unrelated query streams).
+    pub fn reset(&mut self) {
+        self.prev.fill(usize::MAX);
+    }
+
+    /// Evaluate `x[idx]`, reusing cached prefixes where possible.
+    pub fn eval(&mut self, idx: &[usize]) -> f64 {
+        let n = self.x.order();
+        debug_assert_eq!(idx.len(), n);
+        let first_diff = (0..n).find(|&m| idx[m] != self.prev[m]).unwrap_or(n);
+        for m in first_diff..n {
+            let i = idx[m];
+            let rr = self.x.ranks[m + 1];
+            if m == 0 {
+                let src = self.x.core_slice(0, i);
+                self.partials[0].clear();
+                self.partials[0].extend_from_slice(src);
+            } else {
+                let rl = self.x.ranks[m];
+                let d = self.x.dims[m];
+                let core = &self.x.cores[m];
+                // Split-borrow: previous partial vs current.
+                let (left, right) = self.partials.split_at_mut(m);
+                let v = &left[m - 1];
+                let out = &mut right[0];
+                out.clear();
+                out.resize(rr, 0.0);
+                for a in 0..rl {
+                    let va = v[a];
+                    if va == 0.0 {
+                        continue;
+                    }
+                    let base = (a * d + i) * rr;
+                    for b in 0..rr {
+                        out[b] += va * core[base + b];
+                    }
+                }
+            }
+            self.prev[m] = idx[m];
+        }
+        self.partials[n - 1][0]
+    }
+}
+
+/// Precomputed contraction context for repeatedly taking inner products
+/// of *one* fixed tensor `x` against many TT tensors (the `f_TT(R)`
+/// projection pattern: `k` rows against the same input).
+///
+/// Two optimizations over calling [`TtTensor::inner`] per row (§Perf in
+/// EXPERIMENTS.md):
+/// * the permutation of each `x` core from `[rb, d, rb2]` to
+///   `[(d·rb), rb2]` — needed to turn the second contraction into a plain
+///   GEMM — depends only on `x`, so it is computed **once** here instead
+///   of once per row per mode;
+/// * all intermediates live in a caller-held scratch buffer, so the
+///   per-row cost has zero allocations.
+pub struct TtContraction {
+    dims: Vec<usize>,
+    ranks: Vec<usize>,
+    /// Per mode: `x` core permuted to `[(d·rb), rb2]` row-major.
+    xperm: Vec<Vec<f64>>,
+    /// Scratch buffers (boundary matrix ping-pong + t2).
+    scratch: std::cell::RefCell<(Vec<f64>, Vec<f64>, Vec<f64>)>,
+}
+
+impl TtContraction {
+    /// Build the context for input `x`.
+    pub fn new(x: &TtTensor) -> Self {
+        let n = x.order();
+        let mut xperm = Vec::with_capacity(n);
+        for m in 0..n {
+            let rb = x.ranks[m];
+            let d = x.dims[m];
+            let rb2 = x.ranks[m + 1];
+            let core = &x.cores[m];
+            let mut p = vec![0.0; d * rb * rb2];
+            for bi in 0..rb {
+                for i in 0..d {
+                    let src = &core[(bi * d + i) * rb2..(bi * d + i + 1) * rb2];
+                    let dst = (i * rb + bi) * rb2;
+                    p[dst..dst + rb2].copy_from_slice(src);
+                }
+            }
+            xperm.push(p);
+        }
+        Self {
+            dims: x.dims.clone(),
+            ranks: x.ranks.clone(),
+            xperm,
+            scratch: std::cell::RefCell::new((Vec::new(), Vec::new(), Vec::new())),
+        }
+    }
+
+    /// Inner product `⟨row, x⟩` — identical value to `row.inner(x)` but
+    /// allocation-free and with the x-side permutation amortized.
+    pub fn inner(&self, row: &TtTensor) -> f64 {
+        assert_eq!(row.dims(), &self.dims[..], "shape mismatch");
+        let mut guard = self.scratch.borrow_mut();
+        let (m_buf, next_buf, t2) = &mut *guard;
+        m_buf.clear();
+        m_buf.push(1.0);
+        let mut ra = 1usize;
+        let mut rb = 1usize;
+        for n in 0..self.dims.len() {
+            let d = self.dims[n];
+            let ra2 = row.ranks()[n + 1];
+            let rb2 = self.ranks[n + 1];
+            let a = row.core(n);
+            // t2[a2, (i·rb + b)] = Σ_a A[a, i, a2] · M[a, b]
+            t2.clear();
+            t2.resize(ra2 * d * rb, 0.0);
+            for ai in 0..ra {
+                let mrow = &m_buf[ai * rb..(ai + 1) * rb];
+                let abase = ai * d * ra2;
+                for i in 0..d {
+                    let arow = &a[abase + i * ra2..abase + (i + 1) * ra2];
+                    for (a2, &av) in arow.iter().enumerate() {
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let dst = &mut t2[a2 * (d * rb) + i * rb..a2 * (d * rb) + (i + 1) * rb];
+                        for (dv, &mv) in dst.iter_mut().zip(mrow) {
+                            *dv += av * mv;
+                        }
+                    }
+                }
+            }
+            // M' = t2 [ra2, d·rb] × xperm[n] [(d·rb), rb2]
+            next_buf.clear();
+            next_buf.resize(ra2 * rb2, 0.0);
+            crate::linalg::matmul_acc(t2, &self.xperm[n], next_buf, ra2, d * rb, rb2);
+            std::mem::swap(m_buf, next_buf);
+            ra = ra2;
+            rb = rb2;
+        }
+        debug_assert_eq!(m_buf.len(), 1);
+        m_buf[0]
+    }
+}
+
+/// One step of the TT×TT inner product: contract boundary matrix `m`
+/// (`ra × rb`) with cores `a` (`[ra, d, ra2]`) and `b` (`[rb, d, rb2]`),
+/// returning the new boundary (`ra2 × rb2`).
+pub(crate) fn tt_inner_step(
+    m: &[f64],
+    a: &[f64],
+    b: &[f64],
+    ra: usize,
+    rb: usize,
+    d: usize,
+    ra2: usize,
+    rb2: usize,
+) -> Vec<f64> {
+    // tmp[(d·ra2) × rb] = A_matᵀ (d·ra2 × ra) · M (ra × rb),
+    // where A_mat is the row-major [ra, d·ra2] view of core a.
+    // Compute tmp directly without forming Aᵀ: tmp = Σ_a A[a,·]ᵀ ⊗ M[a,·].
+    let mut tmp = vec![0.0; d * ra2 * rb];
+    for ai in 0..ra {
+        let arow = &a[ai * d * ra2..(ai + 1) * d * ra2];
+        let mrow = &m[ai * rb..(ai + 1) * rb];
+        for (x, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let dst = &mut tmp[x * rb..(x + 1) * rb];
+            for (dv, &mv) in dst.iter_mut().zip(mrow) {
+                *dv += av * mv;
+            }
+        }
+    }
+    // Want out[ra2, rb2] = Σ_{i, bi} tmp[i, a2, bi] · b[bi, i, b2].
+    // Permute tmp [d, ra2, rb] → t2 [ra2, (d·rb)] and b [rb, d, rb2] →
+    // b2 [(d·rb), rb2], then a single GEMM.
+    let mut t2 = vec![0.0; ra2 * d * rb];
+    for i in 0..d {
+        for a2 in 0..ra2 {
+            let src = &tmp[(i * ra2 + a2) * rb..(i * ra2 + a2 + 1) * rb];
+            let dst_base = a2 * (d * rb) + i * rb;
+            t2[dst_base..dst_base + rb].copy_from_slice(src);
+        }
+    }
+    let mut b2 = vec![0.0; d * rb * rb2];
+    for bi in 0..rb {
+        for i in 0..d {
+            let src = &b[(bi * d + i) * rb2..(bi * d + i + 1) * rb2];
+            let dst_base = (i * rb + bi) * rb2;
+            b2[dst_base..dst_base + rb2].copy_from_slice(src);
+        }
+    }
+    matmul(&t2, &b2, ra2, d * rb, rb2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rel_err;
+
+    #[test]
+    fn get_matches_dense() {
+        let mut rng = Rng::seed_from(1);
+        let t = TtTensor::random(&[2, 3, 4], 3, &mut rng);
+        let d = t.to_dense();
+        for idx in Shape::new(t.dims()).iter_indices() {
+            assert!((t.get(&idx) - d.get(&idx)).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn inner_matches_dense() {
+        let mut rng = Rng::seed_from(2);
+        let a = TtTensor::random(&[3, 2, 4, 2], 3, &mut rng);
+        let b = TtTensor::random(&[3, 2, 4, 2], 2, &mut rng);
+        let exact = a.to_dense().inner(&b.to_dense());
+        let fast = a.inner(&b);
+        assert!(
+            (exact - fast).abs() < 1e-9 * exact.abs().max(1.0),
+            "exact={exact} fast={fast}"
+        );
+    }
+
+    #[test]
+    fn norm_matches_dense() {
+        let mut rng = Rng::seed_from(3);
+        let t = TtTensor::random(&[4, 3, 4], 5, &mut rng);
+        assert!((t.fro_norm() - t.to_dense().fro_norm()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn random_unit_norm() {
+        let mut rng = Rng::seed_from(4);
+        let t = TtTensor::random_unit(&[3; 8], 5, &mut rng);
+        assert!((t.fro_norm() - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn uniform_ranks_clip_at_boundaries() {
+        let ranks = TtTensor::uniform_ranks(&[2, 2, 2], 10);
+        // Cut k=1: min(2, 4) = 2; cut k=2: min(4, 2) = 2.
+        assert_eq!(ranks, vec![1, 2, 2, 1]);
+        let ranks = TtTensor::uniform_ranks(&[3; 5], 4);
+        assert_eq!(ranks, vec![1, 3, 4, 4, 3, 1]);
+    }
+
+    #[test]
+    fn projection_row_variances_follow_definition_1() {
+        // Statistically verify the per-core variances of Definition 1.
+        let mut rng = Rng::seed_from(5);
+        let n_modes = 4;
+        let r = 4;
+        let dims = vec![6usize; n_modes];
+        let mut sums = vec![0.0f64; n_modes];
+        let mut counts = vec![0usize; n_modes];
+        for _ in 0..200 {
+            let t = TtTensor::random_projection_row(&dims, r, &mut rng);
+            for k in 0..n_modes {
+                for &x in t.core(k) {
+                    sums[k] += x * x;
+                }
+                counts[k] += t.core(k).len();
+            }
+        }
+        for k in 0..n_modes {
+            let var = sums[k] / counts[k] as f64;
+            let expect = if k == 0 || k == n_modes - 1 {
+                1.0 / (r as f64).sqrt()
+            } else {
+                1.0 / r as f64
+            };
+            assert!(
+                (var - expect).abs() < 0.05 * expect.max(0.1),
+                "core {k}: var={var} expect={expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn tt_svd_exact_for_low_rank_input() {
+        let mut rng = Rng::seed_from(6);
+        let src = TtTensor::random(&[4, 3, 5, 3], 3, &mut rng);
+        let dense = src.to_dense();
+        let rec = TtTensor::tt_svd(&dense, 1e-12, 64);
+        assert!(rel_err(rec.to_dense().data(), dense.data()) < 1e-9);
+        // Rank recovery: at most the generating ranks.
+        for (got, want) in rec.ranks().iter().zip(src.ranks()) {
+            assert!(got <= want, "rank inflation: {got} > {want}");
+        }
+    }
+
+    #[test]
+    fn tt_svd_truncation_error_bounded() {
+        let mut rng = Rng::seed_from(7);
+        let dense = DenseTensor::random(&[4, 4, 4, 4], &mut rng);
+        let eps = 0.3;
+        let approx = TtTensor::tt_svd(&dense, eps, 64);
+        let err = rel_err(approx.to_dense().data(), dense.data());
+        assert!(err <= eps * 1.01, "err={err} > eps={eps}");
+    }
+
+    #[test]
+    fn rounding_recompresses_inflated_ranks() {
+        let mut rng = Rng::seed_from(8);
+        let t = TtTensor::random(&[3, 4, 3, 4], 2, &mut rng);
+        // Inflate by converting to dense and re-decomposing at high rank…
+        let inflated = TtTensor::tt_svd(&t.to_dense(), 1e-14, 64);
+        // …then round back down.
+        let rounded = inflated.round(1e-10, 64);
+        assert!(rel_err(rounded.to_dense().data(), t.to_dense().data()) < 1e-8);
+        assert!(rounded.max_rank() <= t.max_rank().max(2));
+    }
+
+    #[test]
+    fn scale_scales_norm() {
+        let mut rng = Rng::seed_from(9);
+        let mut t = TtTensor::random(&[3, 3, 3], 2, &mut rng);
+        let n0 = t.fro_norm();
+        t.scale(2.5);
+        assert!((t.fro_norm() - 2.5 * n0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn num_params_matches_formula() {
+        // Paper: (N−2)dR² + 2dR parameters for uniform rank R.
+        let t = TtTensor::from_cores(
+            &[5; 6],
+            &TtTensor::uniform_ranks(&[5; 6], 3),
+            TtTensor::uniform_ranks(&[5; 6], 3)
+                .windows(2)
+                .enumerate()
+                .map(|(k, w)| vec![0.0; w[0] * 5 * w[1]].iter().map(|_| k as f64).collect())
+                .collect(),
+        );
+        assert_eq!(t.num_params(), (6 - 2) * 5 * 9 + 2 * 5 * 3);
+    }
+
+    #[test]
+    fn add_matches_dense_sum_and_rounds_back() {
+        let mut rng = Rng::seed_from(24);
+        let dims = [3usize, 4, 2, 3];
+        let a = TtTensor::random(&dims, 2, &mut rng);
+        let b = TtTensor::random(&dims, 3, &mut rng);
+        let sum = a.add(&b);
+        assert_eq!(sum.ranks()[1], 5);
+        let mut want = a.to_dense();
+        for (x, y) in want.data_mut().iter_mut().zip(b.to_dense().data()) {
+            *x += y;
+        }
+        assert!(crate::linalg::rel_err(want.data(), sum.to_dense().data()) < 1e-10);
+        // a + (−a) rounds to (numerical) zero.
+        let mut neg = a.clone();
+        neg.scale(-1.0);
+        let zero = a.add(&neg);
+        assert!(zero.fro_norm() < 1e-8);
+    }
+
+    #[test]
+    fn add_order_one() {
+        let a = TtTensor::from_cores(&[3], &[1, 1], vec![vec![1.0, 2.0, 3.0]]);
+        let b = TtTensor::from_cores(&[3], &[1, 1], vec![vec![0.5, 0.5, 0.5]]);
+        let s = a.add(&b);
+        assert_eq!(s.get(&[1]), 2.5);
+    }
+
+    #[test]
+    fn entry_evaluator_matches_get_over_sorted_stream() {
+        let mut rng = Rng::seed_from(23);
+        let x = TtTensor::random(&[3, 4, 2, 3], 3, &mut rng);
+        let shape = Shape::new(x.dims());
+        let mut eval = TtEntryEvaluator::new(&x);
+        // Sorted linear positions (the sparse-row pattern).
+        for lin in (0..shape.numel()).step_by(7) {
+            let idx = shape.multi(lin);
+            assert!((eval.eval(&idx) - x.get(&idx)).abs() < 1e-12, "lin={lin}");
+        }
+        // Unsorted / repeated queries must also be correct.
+        eval.reset();
+        for lin in [5usize, 5, 3, 60, 2, 2] {
+            let idx = shape.multi(lin);
+            assert!((eval.eval(&idx) - x.get(&idx)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn tt_contraction_matches_inner() {
+        let mut rng = Rng::seed_from(21);
+        let x = TtTensor::random(&[3, 4, 2, 5], 3, &mut rng);
+        let ctx = TtContraction::new(&x);
+        for _ in 0..5 {
+            let row = TtTensor::random_projection_row(&[3, 4, 2, 5], 4, &mut rng);
+            let fast = ctx.inner(&row);
+            let slow = row.inner(&x);
+            assert!(
+                (fast - slow).abs() < 1e-10 * slow.abs().max(1.0),
+                "fast={fast} slow={slow}"
+            );
+        }
+    }
+
+    #[test]
+    fn tt_contraction_handles_nonuniform_ranks() {
+        let mut rng = Rng::seed_from(22);
+        let dims = [2usize, 3, 2];
+        let ranks = [1usize, 2, 3, 1];
+        let cores: Vec<Vec<f64>> = (0..3)
+            .map(|n| rng.gaussian_vec(ranks[n] * dims[n] * ranks[n + 1], 1.0))
+            .collect();
+        let x = TtTensor::from_cores(&dims, &ranks, cores);
+        let ctx = TtContraction::new(&x);
+        let row = TtTensor::random(&dims, 2, &mut rng);
+        assert!((ctx.inner(&row) - row.inner(&x)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn order_one_tensor() {
+        let t = TtTensor::from_cores(&[4], &[1, 1], vec![vec![1.0, 2.0, 3.0, 4.0]]);
+        assert_eq!(t.get(&[2]), 3.0);
+        assert!((t.fro_norm() - 30f64.sqrt()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,208 @@
+//! Tucker decomposition (Tucker 1966) — implemented as the *contrast*
+//! format: the paper's introduction singles out Tucker because its core
+//! has `R^N` parameters, so Tucker-based sketches (Shi & Anandkumar 2019)
+//! "cannot scale to very high-order tensors" while TT/CP grow linearly
+//! in `N`. The [`tests::tucker_parameter_growth_is_exponential`] test
+//! pins that claim down numerically.
+//!
+//! `S = C ×₁ U¹ ×₂ U² … ×_N U^N` with core `C ∈ R^{R×…×R}` and factor
+//! matrices `Uⁿ ∈ R^{dₙ×R}`.
+
+use super::{DenseTensor, Shape};
+use crate::linalg::{matmul, svd, Matrix};
+use crate::rng::Rng;
+
+/// A tensor in Tucker format.
+#[derive(Debug, Clone)]
+pub struct TuckerTensor {
+    dims: Vec<usize>,
+    rank: usize,
+    /// Core tensor, shape `[rank; N]` row-major.
+    core: Vec<f64>,
+    /// Factor `n` is `dims[n] × rank`.
+    factors: Vec<Matrix>,
+}
+
+impl TuckerTensor {
+    /// Build from explicit core + factors.
+    pub fn from_parts(dims: &[usize], rank: usize, core: Vec<f64>, factors: Vec<Matrix>) -> Self {
+        assert_eq!(factors.len(), dims.len());
+        assert_eq!(core.len(), rank.pow(dims.len() as u32), "core size");
+        for (f, &d) in factors.iter().zip(dims) {
+            assert_eq!((f.rows(), f.cols()), (d, rank), "factor shape");
+        }
+        Self { dims: dims.to_vec(), rank, core, factors }
+    }
+
+    /// Random Tucker tensor with i.i.d. standard Gaussian core/factors.
+    pub fn random(dims: &[usize], rank: usize, rng: &mut Rng) -> Self {
+        let n = dims.len();
+        let core = rng.gaussian_vec(rank.pow(n as u32), 1.0);
+        let factors = dims
+            .iter()
+            .map(|&d| Matrix::from_vec(d, rank, rng.gaussian_vec(d * rank, 1.0)))
+            .collect();
+        Self::from_parts(dims, rank, core, factors)
+    }
+
+    /// Mode sizes.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Multilinear rank (uniform).
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Number of parameters — `R^N + Σ dₙR` (the exponential core is the
+    /// point of this type's existence; compare `TtTensor::num_params`).
+    pub fn num_params(&self) -> usize {
+        self.core.len() + self.factors.iter().map(|f| f.rows() * f.cols()).sum::<usize>()
+    }
+
+    /// Materialize as a dense tensor by successive mode products.
+    pub fn to_dense(&self) -> DenseTensor {
+        let n = self.dims.len();
+        // Current tensor flattened as [done-modes…, remaining core modes],
+        // starting with the raw core.
+        let mut data = self.core.clone();
+        let mut lead = 1usize; // product of already-expanded mode sizes
+        for m in 0..n {
+            // data is [lead, rank (mode m), rank^{n-m-1}] — expand mode m:
+            // out[lead, d_m, tail] = Σ_r U[i, r]·data[lead, r, tail].
+            let tail = data.len() / (lead * self.rank);
+            let d = self.dims[m];
+            let f = &self.factors[m];
+            let mut out = vec![0.0; lead * d * tail];
+            for l in 0..lead {
+                // slice [rank, tail] × Uᵀ → use gemm: U [d, rank] × block.
+                let block = &data[l * self.rank * tail..(l + 1) * self.rank * tail];
+                let prod = matmul(f.data(), block, d, self.rank, tail);
+                out[l * d * tail..(l + 1) * d * tail].copy_from_slice(&prod);
+            }
+            data = out;
+            lead *= d;
+        }
+        DenseTensor::from_vec(&self.dims, data)
+    }
+
+    /// Higher-order SVD (HOSVD): Tucker approximation of a dense tensor
+    /// with uniform multilinear rank ≤ `rank`.
+    pub fn hosvd(x: &DenseTensor, rank: usize) -> TuckerTensor {
+        let n = x.order();
+        let rank = rank.min(*x.dims().iter().min().unwrap());
+        // Factors: leading left singular vectors of each matricization.
+        let factors: Vec<Matrix> = (0..n)
+            .map(|m| {
+                let mat = x.matricize(m);
+                let dec = svd(&mat);
+                dec.u.leading_cols(rank.min(dec.u.cols()))
+            })
+            .collect();
+        // Core: C = X ×₁ U¹ᵀ … ×_N U^Nᵀ — same expansion loop with Uᵀ.
+        let mut data = x.data().to_vec();
+        let mut lead = 1usize;
+        let mut cur_dims: Vec<usize> = x.dims().to_vec();
+        for m in 0..n {
+            let d = cur_dims[m];
+            let tail = data.len() / (lead * d);
+            let f_t = factors[m].transpose(); // rank × d
+            let mut out = vec![0.0; lead * rank * tail];
+            for l in 0..lead {
+                let block = &data[l * d * tail..(l + 1) * d * tail];
+                let prod = matmul(f_t.data(), block, rank, d, tail);
+                out[l * rank * tail..(l + 1) * rank * tail].copy_from_slice(&prod);
+            }
+            data = out;
+            cur_dims[m] = rank;
+            lead *= rank;
+        }
+        TuckerTensor::from_parts(x.dims(), rank, data, factors)
+    }
+
+    /// Frobenius norm (via the orthonormal-factor invariant when factors
+    /// come from HOSVD; in general via densification for small shapes).
+    pub fn fro_norm(&self) -> f64 {
+        let numel = Shape::new(&self.dims).numel();
+        assert!(numel <= (1 << 26), "fro_norm: tensor too large to densify");
+        self.to_dense().fro_norm()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rel_err;
+    use crate::tensor::TtTensor;
+
+    #[test]
+    fn to_dense_matches_explicit_sum() {
+        let mut rng = Rng::seed_from(1);
+        let t = TuckerTensor::random(&[3, 4, 2], 2, &mut rng);
+        let d = t.to_dense();
+        // Explicit: S[i,j,k] = Σ_{a,b,c} C[a,b,c]·U¹[i,a]·U²[j,b]·U³[k,c].
+        let r = t.rank();
+        for idx in Shape::new(t.dims()).iter_indices() {
+            let mut want = 0.0;
+            for a in 0..r {
+                for b in 0..r {
+                    for c in 0..r {
+                        want += t.core[(a * r + b) * r + c]
+                            * t.factors[0][(idx[0], a)]
+                            * t.factors[1][(idx[1], b)]
+                            * t.factors[2][(idx[2], c)];
+                    }
+                }
+            }
+            assert!((d.get(&idx) - want).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn hosvd_reconstructs_exactly_at_full_rank() {
+        let mut rng = Rng::seed_from(2);
+        let src = TuckerTensor::random(&[3, 3, 3], 2, &mut rng);
+        let dense = src.to_dense();
+        let rec = TuckerTensor::hosvd(&dense, 3);
+        assert!(rel_err(rec.to_dense().data(), dense.data()) < 1e-9);
+        // And rank-2 HOSVD of a rank-2 tensor is exact too.
+        let rec2 = TuckerTensor::hosvd(&dense, 2);
+        assert!(rel_err(rec2.to_dense().data(), dense.data()) < 1e-8);
+    }
+
+    #[test]
+    fn hosvd_truncation_degrades_gracefully() {
+        let mut rng = Rng::seed_from(3);
+        let dense = DenseTensor::random(&[4, 4, 4], &mut rng);
+        let full = TuckerTensor::hosvd(&dense, 4);
+        let trunc = TuckerTensor::hosvd(&dense, 2);
+        // Normalize by the ORIGINAL tensor (first argument of rel_err).
+        let err_full = rel_err(dense.data(), full.to_dense().data());
+        let err_trunc = rel_err(dense.data(), trunc.to_dense().data());
+        assert!(err_full < 1e-9);
+        assert!(err_trunc > err_full);
+        // HOSVD is an orthogonal projection: error strictly below 100%.
+        assert!(err_trunc < 1.0, "err_trunc={err_trunc}");
+    }
+
+    /// The paper's introduction claim: TT/CP parameters grow linearly in
+    /// N while Tucker's grow exponentially — the reason Tucker-based RP
+    /// (Shi & Anandkumar 2019) cannot reach the high-order regime.
+    #[test]
+    fn tucker_parameter_growth_is_exponential() {
+        let mut rng = Rng::seed_from(4);
+        let r = 3;
+        let mut prev_ratio = 0.0;
+        for n in [4usize, 8, 12] {
+            let dims = vec![3usize; n];
+            let tucker = TuckerTensor::random(&dims, r, &mut rng);
+            let tt = TtTensor::random(&dims, r, &mut rng);
+            let ratio = tucker.num_params() as f64 / tt.num_params() as f64;
+            assert!(ratio > prev_ratio, "ratio must grow with N");
+            prev_ratio = ratio;
+        }
+        // At N=12 the gap is already ~4 orders of magnitude.
+        assert!(prev_ratio > 1e3, "ratio at N=12: {prev_ratio}");
+    }
+}

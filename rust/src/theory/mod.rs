@@ -1,0 +1,156 @@
+//! The paper's theoretical results as executable formulas.
+//!
+//! These functions are used three ways: (i) by the statistical test suite
+//! (`rust/tests/paper_claims.rs`) to check empirical moments against the
+//! bounds of Theorem 1, (ii) by [`suggest_k`] to auto-size projections
+//! from Theorem 2, and (iii) by the ablation benches that regenerate the
+//! bound-vs-measurement comparison.
+
+use crate::linalg::Matrix;
+
+/// Theorem 1 (TT case): `Var(‖f_TT(X)‖²) ≤ (3(1+2/R)^{N−1} − 1)/k · ‖X‖⁴`.
+///
+/// Returns the bound normalized by `‖X‖⁴_F` (i.e. the bound for unit-norm
+/// inputs).
+pub fn tt_variance_bound(n: usize, r: usize, k: usize) -> f64 {
+    assert!(n >= 1 && r >= 1 && k >= 1);
+    let base = 1.0 + 2.0 / r as f64;
+    (3.0 * base.powi(n as i32 - 1) - 1.0) / k as f64
+}
+
+/// Theorem 1 (CP case): `Var(‖f_CP(X)‖²) ≤ (3^{N−1}(1+2/R) − 1)/k · ‖X‖⁴`.
+pub fn cp_variance_bound(n: usize, r: usize, k: usize) -> f64 {
+    assert!(n >= 1 && r >= 1 && k >= 1);
+    let base = 1.0 + 2.0 / r as f64;
+    (3f64.powi(n as i32 - 1) * base - 1.0) / k as f64
+}
+
+/// Classical Gaussian RP variance: `Var(‖f(x)‖²) = 2/k · ‖x‖⁴` (the `N = 1`
+/// special case both theorems reduce to).
+pub fn gaussian_variance(k: usize) -> f64 {
+    2.0 / k as f64
+}
+
+/// The paper's *exact* order-2 TT variance (remark after Theorem 1):
+/// `Var(‖f_TT(X)‖²) = (2‖X‖⁴_F + (6/R)·Tr[(XᵀX)²]) / k`.
+pub fn tt_order2_exact_variance(x: &Matrix, r: usize, k: usize) -> f64 {
+    let xtx = x.transpose().matmul(x);
+    let tr: f64 = {
+        // Tr[(XᵀX)²] = ‖XᵀX‖²_F for symmetric XᵀX.
+        xtx.data().iter().map(|v| v * v).sum()
+    };
+    let n4 = x.fro_norm().powi(4);
+    (2.0 * n4 + 6.0 / r as f64 * tr) / k as f64
+}
+
+/// Theorem 2 (TT case): minimal `k` so that `f_TT(R)` embeds `m` points
+/// with distortion `ε` and failure probability `δ` —
+/// `k ≳ ε⁻²(1+2/R)^N log^{2N}(m/δ)` (constant taken as 1).
+pub fn tt_k_lower_bound(eps: f64, n: usize, r: usize, m: usize, delta: f64) -> f64 {
+    assert!(eps > 0.0 && delta > 0.0 && m >= 1);
+    let log_term = (m as f64 / delta).ln().max(1.0);
+    (1.0 + 2.0 / r as f64).powi(n as i32) * log_term.powi(2 * n as i32) / (eps * eps)
+}
+
+/// Theorem 2 (CP case): `k ≳ ε⁻²·3^{N−1}(1+2/R)·log^{2N}(m/δ)`.
+pub fn cp_k_lower_bound(eps: f64, n: usize, r: usize, m: usize, delta: f64) -> f64 {
+    assert!(eps > 0.0 && delta > 0.0 && m >= 1);
+    let log_term = (m as f64 / delta).ln().max(1.0);
+    3f64.powi(n as i32 - 1) * (1.0 + 2.0 / r as f64) * log_term.powi(2 * n as i32)
+        / (eps * eps)
+}
+
+/// Theorem 5 concentration envelope (TT):
+/// `P(|‖f(X)‖² − ‖X‖²| ≥ ε‖X‖²) ≤ C·exp(−(√k·ε)^{1/N} / ((3K)^{1/2N}·√(1+2/R)))`,
+/// with the absolute constants set to `C = e²`, `K = 1`.
+pub fn tt_concentration_tail(eps: f64, n: usize, r: usize, k: usize) -> f64 {
+    let c = std::f64::consts::E.powi(2);
+    let num = ((k as f64).sqrt() * eps).powf(1.0 / n as f64);
+    let den = 3f64.powf(1.0 / (2.0 * n as f64)) * (1.0 + 2.0 / r as f64).sqrt();
+    (c * (-num / den).exp()).min(1.0)
+}
+
+/// Pick the map (TT vs CP) and the smaller `k` achieving the target
+/// distortion, per Theorem 2. Returns `(map_name, k)`; `k` is an `f64`
+/// because the bounds overflow `usize` for high orders (that being the
+/// paper's point about CP).
+pub fn suggest_k(eps: f64, n: usize, r: usize, m: usize, delta: f64) -> (&'static str, f64) {
+    let tt = tt_k_lower_bound(eps, n, r, m, delta);
+    let cp = cp_k_lower_bound(eps, n, r, m, delta);
+    if tt <= cp {
+        ("tt", tt.ceil())
+    } else {
+        ("cp", cp.ceil())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn bounds_reduce_to_gaussian_at_order_one() {
+        // N = 1, R = 1: both bounds must equal the classical 2/k.
+        assert!((tt_variance_bound(1, 1, 10) - 0.2).abs() < 1e-12);
+        assert!((cp_variance_bound(1, 1, 10) - 0.2).abs() < 1e-12);
+        assert!((gaussian_variance(10) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rank_mitigates_tt_but_not_cp() {
+        // The paper's key qualitative claim: raising R drives the TT bound
+        // toward 2/k but leaves the CP bound's 3^{N-1} factor intact.
+        let n = 12;
+        let k = 100;
+        let tt_hi = tt_variance_bound(n, 1000, k);
+        let cp_hi = cp_variance_bound(n, 1000, k);
+        assert!(tt_hi < 3.0 / k as f64, "tt bound with huge R ≈ 2/k, got {tt_hi}");
+        assert!(
+            cp_hi > 3f64.powi(10) / k as f64,
+            "cp bound must keep the 3^(N-1) factor, got {cp_hi}"
+        );
+    }
+
+    #[test]
+    fn tt_bound_monotone_in_n_and_decreasing_in_r_and_k() {
+        assert!(tt_variance_bound(5, 2, 10) > tt_variance_bound(3, 2, 10));
+        assert!(tt_variance_bound(5, 5, 10) < tt_variance_bound(5, 2, 10));
+        assert!(tt_variance_bound(5, 2, 100) < tt_variance_bound(5, 2, 10));
+    }
+
+    #[test]
+    fn k_lower_bounds_order_tt_below_cp_at_high_order() {
+        let (eps, m, delta) = (0.5, 100, 0.05);
+        for n in [8usize, 12, 25] {
+            let tt = tt_k_lower_bound(eps, n, 10, m, delta);
+            let cp = cp_k_lower_bound(eps, n, 10, m, delta);
+            assert!(tt < cp, "N={n}: tt={tt:.3e} should be < cp={cp:.3e}");
+            assert_eq!(suggest_k(eps, n, 10, m, delta).0, "tt");
+        }
+    }
+
+    #[test]
+    fn order2_exact_variance_bounded_by_theorem1() {
+        // Sub-multiplicativity: Tr[(XᵀX)²] ≤ ‖X‖⁴, so the exact variance is
+        // below the Theorem-1 bound (2 + 6/R)/k·‖X‖⁴ = (3(1+2/R)−1)/k‖X‖⁴.
+        let mut rng = Rng::seed_from(1);
+        for r in [1usize, 5, 20] {
+            let x = Matrix::from_vec(6, 7, rng.gaussian_vec(42, 1.0));
+            let exact = tt_order2_exact_variance(&x, r, 10);
+            let bound = tt_variance_bound(2, r, 10) * x.fro_norm().powi(4);
+            assert!(exact <= bound * (1.0 + 1e-12), "R={r}: {exact} > {bound}");
+        }
+    }
+
+    #[test]
+    fn concentration_tail_decreases_with_k() {
+        // Small k saturates at the trivial bound 1; large k must be < 1
+        // and strictly smaller than the small-k value.
+        let a = tt_concentration_tail(0.5, 3, 5, 10);
+        let b = tt_concentration_tail(0.5, 3, 5, 1_000_000);
+        assert!(b < a, "a={a} b={b}");
+        assert!(b < 1.0 && b > 0.0);
+        assert!(a <= 1.0);
+    }
+}

@@ -1,0 +1,147 @@
+//! Miniature benchmark harness (no criterion offline).
+//!
+//! Provides warmup + timed iterations + summary statistics, and a
+//! [`BenchReport`] collector that renders the per-figure tables the
+//! `cargo bench` targets print and write into `results/`.
+
+use super::csv::CsvTable;
+use super::stats::Summary;
+use super::Timer;
+
+/// Configuration for one measured benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    /// Warmup iterations (not measured).
+    pub warmup: usize,
+    /// Measured samples.
+    pub samples: usize,
+    /// Minimum total measured time; samples are raised to reach it.
+    pub min_time_secs: f64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self { warmup: 3, samples: 10, min_time_secs: 0.05 }
+    }
+}
+
+impl BenchConfig {
+    /// A faster profile for long-running end-to-end benches.
+    pub fn quick() -> Self {
+        Self { warmup: 1, samples: 5, min_time_secs: 0.0 }
+    }
+}
+
+/// Result of one benchmark: per-sample wall times in seconds.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark label.
+    pub name: String,
+    /// Raw sample times (seconds).
+    pub times: Vec<f64>,
+}
+
+impl BenchResult {
+    /// Summary statistics of the samples.
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.times)
+    }
+
+    /// Median seconds per iteration.
+    pub fn median_secs(&self) -> f64 {
+        self.summary().median
+    }
+}
+
+/// Run `f` under the given config and collect timings.
+///
+/// `f` should perform one complete unit of the measured work and return a
+/// value; the value is passed through `std::hint::black_box` so the
+/// optimizer cannot elide the computation.
+pub fn bench<T>(name: &str, cfg: BenchConfig, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..cfg.warmup {
+        std::hint::black_box(f());
+    }
+    // Estimate per-iter time to honor min_time.
+    let probe = Timer::start();
+    std::hint::black_box(f());
+    let per_iter = probe.elapsed_secs().max(1e-9);
+    let needed = (cfg.min_time_secs / per_iter).ceil() as usize;
+    let samples = cfg.samples.max(1).max(needed.min(10_000));
+    let mut times = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Timer::start();
+        std::hint::black_box(f());
+        times.push(t.elapsed_secs());
+    }
+    BenchResult { name: name.to_string(), times }
+}
+
+/// Collects rows of (label, params…, median time) for a figure and renders
+/// them as a console table, CSV and Markdown.
+pub struct BenchReport {
+    title: String,
+    table: CsvTable,
+}
+
+impl BenchReport {
+    /// Start a report with the given column names (first column is the
+    /// series label by convention).
+    pub fn new(title: &str, columns: &[&str]) -> Self {
+        Self { title: title.to_string(), table: CsvTable::new(columns) }
+    }
+
+    /// Append a pre-formatted row.
+    pub fn push(&mut self, cells: Vec<String>) {
+        self.table.push_row(cells);
+    }
+
+    /// Report title.
+    pub fn title(&self) -> &str {
+        &self.title
+    }
+
+    /// Emit to stdout and write CSV into `results/<file>`.
+    pub fn finish(&self, file: &str) {
+        println!("\n=== {} ===", self.title);
+        print!("{}", self.table.to_markdown());
+        let path = std::path::Path::new("results").join(file);
+        match self.table.write_to(&path) {
+            Ok(()) => println!("[written {}]", path.display()),
+            Err(e) => eprintln!("[warn] could not write {}: {e}", path.display()),
+        }
+    }
+
+    /// Access the underlying table (tests).
+    pub fn table(&self) -> &CsvTable {
+        &self.table
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_samples() {
+        let cfg = BenchConfig { warmup: 1, samples: 5, min_time_secs: 0.0 };
+        let r = bench("noop", cfg, || 1 + 1);
+        assert_eq!(r.times.len(), 5);
+        assert!(r.median_secs() >= 0.0);
+    }
+
+    #[test]
+    fn min_time_raises_sample_count() {
+        let cfg = BenchConfig { warmup: 0, samples: 1, min_time_secs: 0.02 };
+        let r = bench("sleepy", cfg, || std::thread::sleep(std::time::Duration::from_millis(1)));
+        assert!(r.times.len() >= 10, "got {} samples", r.times.len());
+    }
+
+    #[test]
+    fn report_accumulates_rows() {
+        let mut rep = BenchReport::new("test", &["series", "k", "secs"]);
+        rep.push(vec!["tt".into(), "10".into(), "0.5".into()]);
+        assert_eq!(rep.table().len(), 1);
+        assert_eq!(rep.title(), "test");
+    }
+}

@@ -1,0 +1,135 @@
+//! Hand-rolled CLI argument parser (no `clap` offline).
+//!
+//! Supports the subcommand + `--key value` + `--flag` grammar used by the
+//! `trp` binary and the benches:
+//!
+//! ```text
+//! trp experiment fig1 --case medium --trials 100 --seed 7 --out results/
+//! ```
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positional arguments and `--key [value]` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Positional arguments in order (e.g. `["experiment", "fig1"]`).
+    pub positional: Vec<String>,
+    /// Options; flags (no value) map to `"true"`.
+    pub options: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (not including argv\[0\]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err("empty option name '--'".into());
+                }
+                // --key=value form.
+                if let Some((k, v)) = key.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                    continue;
+                }
+                // --key value form unless next token is another option.
+                match it.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        let v = it.next().unwrap();
+                        out.options.insert(key.to_string(), v);
+                    }
+                    _ => {
+                        out.options.insert(key.to_string(), "true".to_string());
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process's own arguments.
+    pub fn from_env() -> Result<Args, String> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Positional argument `i`.
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default; errors on unparsable values.
+    pub fn get_parsed_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| format!("invalid value '{v}' for --{key}")),
+        }
+    }
+
+    /// Boolean flag (present or `--key true`).
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("experiment fig1 --case medium --trials 100 --verbose");
+        assert_eq!(a.pos(0), Some("experiment"));
+        assert_eq!(a.pos(1), Some("fig1"));
+        assert_eq!(a.get("case"), Some("medium"));
+        assert_eq!(a.get_parsed_or("trials", 0usize).unwrap(), 100);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("--k=64 --name=tt_rp");
+        assert_eq!(a.get("k"), Some("64"));
+        assert_eq!(a.get("name"), Some("tt_rp"));
+    }
+
+    #[test]
+    fn flag_before_option() {
+        let a = parse("--dry-run --seed 9");
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.get("seed"), Some("9"));
+    }
+
+    #[test]
+    fn invalid_parse_reports_key() {
+        let a = parse("--trials abc");
+        let err = a.get_parsed_or("trials", 1usize).unwrap_err();
+        assert!(err.contains("trials"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.get_or("case", "small"), "small");
+        assert_eq!(a.get_parsed_or("seed", 42u64).unwrap(), 42);
+    }
+}

@@ -1,0 +1,143 @@
+//! Tiny CSV writer (and reader for tests) used by the experiment harness
+//! to emit figure data into `results/`.
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+/// An in-memory CSV table with a fixed header.
+#[derive(Debug, Clone)]
+pub struct CsvTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    /// New table with the given column names.
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row of already-formatted cells.
+    pub fn push_row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Append a row of f64s (formatted with up to 9 significant digits).
+    pub fn push_nums(&mut self, cells: &[f64]) {
+        self.push_row(cells.iter().map(|x| format_num(*x)).collect());
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when no data rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Serialize to CSV text.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        writeln!(out, "{}", self.header.join(",")).unwrap();
+        for row in &self.rows {
+            writeln!(out, "{}", row.join(",")).unwrap();
+        }
+        out
+    }
+
+    /// Render as a GitHub-flavoured Markdown table (for EXPERIMENTS.md).
+    pub fn to_markdown(&self) -> String {
+        let mut out = String::new();
+        writeln!(out, "| {} |", self.header.join(" | ")).unwrap();
+        writeln!(
+            out,
+            "|{}|",
+            self.header.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        )
+        .unwrap();
+        for row in &self.rows {
+            writeln!(out, "| {} |", row.join(" | ")).unwrap();
+        }
+        out
+    }
+
+    /// Write CSV to a file, creating parent directories.
+    pub fn write_to(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+
+    /// Parse a CSV string (no quoting support — our own output only).
+    pub fn parse(text: &str) -> Option<CsvTable> {
+        let mut lines = text.lines();
+        let header: Vec<String> = lines.next()?.split(',').map(|s| s.to_string()).collect();
+        let mut rows = Vec::new();
+        for line in lines {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cells: Vec<String> = line.split(',').map(|s| s.to_string()).collect();
+            if cells.len() != header.len() {
+                return None;
+            }
+            rows.push(cells);
+        }
+        Some(CsvTable { header, rows })
+    }
+}
+
+/// Format a float compactly but losslessly enough for plotting.
+pub fn format_num(x: f64) -> String {
+    if x == x.trunc() && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x:.6e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut t = CsvTable::new(&["k", "distortion"]);
+        t.push_nums(&[10.0, 0.25]);
+        t.push_nums(&[20.0, 0.125]);
+        let parsed = CsvTable::parse(&t.to_csv()).unwrap();
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed.rows[0][0], "10");
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let mut t = CsvTable::new(&["a", "b"]);
+        t.push_row(vec!["1".into(), "2".into()]);
+        let md = t.to_markdown();
+        assert!(md.starts_with("| a | b |"));
+        assert!(md.contains("|---|---|"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_arity_panics() {
+        let mut t = CsvTable::new(&["a", "b"]);
+        t.push_nums(&[1.0]);
+    }
+
+    #[test]
+    fn num_format() {
+        assert_eq!(format_num(42.0), "42");
+        assert!(format_num(0.123456789).contains('e'));
+    }
+}

@@ -1,0 +1,53 @@
+//! Cross-cutting utilities built in-repo (no external crates offline):
+//! JSON, CSV, CLI parsing, summary statistics, a thread pool, a bench
+//! harness and a miniature property-testing framework.
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod proptest;
+pub mod stats;
+pub mod threadpool;
+
+/// Wall-clock stopwatch with nanosecond resolution.
+#[derive(Debug, Clone, Copy)]
+pub struct Timer {
+    start: std::time::Instant,
+}
+
+impl Timer {
+    /// Start a new timer.
+    pub fn start() -> Self {
+        Self { start: std::time::Instant::now() }
+    }
+
+    /// Elapsed seconds.
+    pub fn elapsed_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed milliseconds.
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_secs() * 1e3
+    }
+
+    /// Elapsed microseconds.
+    pub fn elapsed_us(&self) -> f64 {
+        self.elapsed_secs() * 1e6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_is_monotone() {
+        let t = Timer::start();
+        let a = t.elapsed_secs();
+        let b = t.elapsed_secs();
+        assert!(b >= a);
+        assert!(a >= 0.0);
+    }
+}

@@ -1,0 +1,214 @@
+//! Miniature property-based testing framework (no `proptest` offline).
+//!
+//! Provides seeded random case generation, a configurable case count, and
+//! greedy input shrinking for integer-vector inputs. Used by the
+//! coordinator invariants suite (`rust/tests/coordinator_props.rs`) and by
+//! algebraic-property tests across the tensor modules.
+//!
+//! ```
+//! use tensorized_rp::util::proptest::{Config, Gen, run};
+//!
+//! run("addition commutes", Config::default(), |g| {
+//!     let a = g.usize_in(0, 1000);
+//!     let b = g.usize_in(0, 1000);
+//!     if a + b != b + a {
+//!         return Err(format!("a={a} b={b}"));
+//!     }
+//!     Ok(())
+//! });
+//! ```
+
+use crate::rng::Rng;
+
+/// Property-test configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    /// Number of random cases to run.
+    pub cases: usize,
+    /// Base seed; case `i` uses a seed derived from (seed, i) so failures
+    /// reproduce exactly.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 64, seed: 0x7_e57 }
+    }
+}
+
+impl Config {
+    /// Fewer cases — for expensive properties.
+    pub fn slow(cases: usize) -> Self {
+        Self { cases, ..Self::default() }
+    }
+}
+
+/// Per-case random input generator handed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// Trace of drawn scalars — reported on failure for reproduction.
+    trace: Vec<String>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Self { rng: Rng::seed_from(seed), trace: Vec::new() }
+    }
+
+    /// Uniform usize in `[lo, hi]` (inclusive).
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let v = lo + self.rng.below((hi - lo + 1) as u64) as usize;
+        self.trace.push(format!("usize={v}"));
+        v
+    }
+
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let v = self.rng.uniform_in(lo, hi);
+        self.trace.push(format!("f64={v:.6}"));
+        v
+    }
+
+    /// Standard normal.
+    pub fn gaussian(&mut self) -> f64 {
+        let v = self.rng.gaussian();
+        self.trace.push(format!("gauss={v:.6}"));
+        v
+    }
+
+    /// Boolean with probability `p`.
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        let v = self.rng.bernoulli(p);
+        self.trace.push(format!("bool={v}"));
+        v
+    }
+
+    /// Vector of usizes, each in `[lo, hi]`, with length in `[min_len, max_len]`.
+    pub fn usize_vec(&mut self, min_len: usize, max_len: usize, lo: usize, hi: usize) -> Vec<usize> {
+        let len = self.usize_in(min_len, max_len);
+        (0..len).map(|_| self.usize_in(lo, hi)).collect()
+    }
+
+    /// Choose one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[self.usize_in(0, xs.len() - 1)]
+    }
+
+    /// Access the raw generator (for building tensors etc.).
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run a property over `cfg.cases` random cases; panics with the failing
+/// case's seed, index and draw trace on the first counterexample.
+pub fn run<F>(name: &str, cfg: Config, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = crate::rng::derive_seed(cfg.seed, case as u64);
+        let mut g = Gen::new(case_seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {case_seed:#x}):\n  {msg}\n  \
+                 draws: [{}]\n  reproduce with Config {{ cases: 1, seed: {:#x} }} after \
+                 deriving case 0",
+                g.trace.join(", "),
+                case_seed,
+            );
+        }
+    }
+}
+
+/// Greedy shrinking for vector-shaped counterexamples: repeatedly try
+/// dropping elements and halving values while the predicate still fails,
+/// returning the smallest failing input found.
+pub fn shrink_usize_vec<F>(mut input: Vec<usize>, fails: F) -> Vec<usize>
+where
+    F: Fn(&[usize]) -> bool,
+{
+    debug_assert!(fails(&input), "shrink called with a passing input");
+    loop {
+        let mut improved = false;
+        // Try removing each element.
+        let mut i = 0;
+        while i < input.len() {
+            let mut cand = input.clone();
+            cand.remove(i);
+            if !cand.is_empty() && fails(&cand) {
+                input = cand;
+                improved = true;
+            } else {
+                i += 1;
+            }
+        }
+        // Try halving each element.
+        for i in 0..input.len() {
+            while input[i] > 1 {
+                let mut cand = input.clone();
+                cand[i] /= 2;
+                if fails(&cand) {
+                    input = cand;
+                    improved = true;
+                } else {
+                    break;
+                }
+            }
+        }
+        if !improved {
+            return input;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        run("tautology", Config { cases: 32, seed: 1 }, |g| {
+            let x = g.usize_in(0, 10);
+            if x <= 10 { Ok(()) } else { Err("impossible".into()) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must fail'")]
+    fn failing_property_panics_with_trace() {
+        run("must fail", Config { cases: 8, seed: 2 }, |g| {
+            let x = g.usize_in(0, 100);
+            if x < 1000 {
+                Err(format!("x={x}"))
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn cases_are_deterministic() {
+        let mut seen1 = Vec::new();
+        run("collect1", Config { cases: 5, seed: 9 }, |g| {
+            seen1.push(g.usize_in(0, 1_000_000));
+            Ok(())
+        });
+        let mut seen2 = Vec::new();
+        run("collect2", Config { cases: 5, seed: 9 }, |g| {
+            seen2.push(g.usize_in(0, 1_000_000));
+            Ok(())
+        });
+        assert_eq!(seen1, seen2);
+    }
+
+    #[test]
+    fn shrink_finds_minimal_vector() {
+        // Fails whenever the vector contains an element ≥ 10.
+        let shrunk = shrink_usize_vec(vec![3, 50, 7, 100], |v| v.iter().any(|&x| x >= 10));
+        assert_eq!(shrunk.len(), 1);
+        assert!(shrunk[0] >= 10 && shrunk[0] < 20, "shrunk to {shrunk:?}");
+    }
+}

@@ -1,0 +1,188 @@
+//! Property-based tests of the tensor-algebra substrate over random
+//! shapes/ranks (util::proptest). These are the invariants every higher
+//! layer silently relies on.
+
+use tensorized_rp::linalg::{matmul, qr, rel_err, svd, Matrix};
+use tensorized_rp::tensor::{CpTensor, DenseTensor, Shape, TtContraction, TtTensor};
+use tensorized_rp::util::proptest::{run, Config};
+
+#[test]
+fn prop_matricization_preserves_norm_and_roundtrips() {
+    run("matricization", Config { cases: 48, seed: 1 }, |g| {
+        let n = g.usize_in(2, 4);
+        let dims: Vec<usize> = (0..n).map(|_| g.usize_in(1, 5)).collect();
+        let t = DenseTensor::random(&dims, g.rng());
+        for mode in 0..n {
+            let m = t.matricize(mode);
+            if (m.fro_norm() - t.fro_norm()).abs() > 1e-9 {
+                return Err(format!("norm changed in mode-{mode} matricization"));
+            }
+            if m.rows() != dims[mode] || m.cols() != t.numel() / dims[mode] {
+                return Err("matricization shape wrong".into());
+            }
+        }
+        // Split matricization is a pure reshape.
+        if n >= 2 {
+            let split = g.usize_in(1, n - 1);
+            let m = t.matricize_split(split);
+            if m.data() != t.data() {
+                return Err("split matricization moved data".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tt_inner_equals_dense_inner() {
+    run("tt inner", Config { cases: 40, seed: 2 }, |g| {
+        let n = g.usize_in(2, 4);
+        let dims: Vec<usize> = (0..n).map(|_| g.usize_in(2, 4)).collect();
+        let ra = g.usize_in(1, 4);
+        let rb = g.usize_in(1, 4);
+        let a = TtTensor::random(&dims, ra, g.rng());
+        let b = TtTensor::random(&dims, rb, g.rng());
+        let fast = a.inner(&b);
+        let slow = a.to_dense().inner(&b.to_dense());
+        if (fast - slow).abs() > 1e-8 * slow.abs().max(1.0) {
+            return Err(format!("fast={fast} slow={slow}"));
+        }
+        // And the amortized contraction agrees too.
+        let ctx = TtContraction::new(&b);
+        let amortized = ctx.inner(&a);
+        if (amortized - slow).abs() > 1e-8 * slow.abs().max(1.0) {
+            return Err(format!("amortized={amortized} slow={slow}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cp_inner_equalities() {
+    run("cp inner", Config { cases: 40, seed: 3 }, |g| {
+        let n = g.usize_in(2, 4);
+        let dims: Vec<usize> = (0..n).map(|_| g.usize_in(2, 4)).collect();
+        let ra = g.usize_in(1, 4);
+        let rb = g.usize_in(1, 4);
+        let a = CpTensor::random(&dims, ra, g.rng());
+        let b = CpTensor::random(&dims, rb, g.rng());
+        let slow = a.to_dense().inner(&b.to_dense());
+        if (a.inner(&b) - slow).abs() > 1e-8 * slow.abs().max(1.0) {
+            return Err("cp×cp mismatch".into());
+        }
+        // CP→TT conversion preserves inner products.
+        let tt_b = b.to_tt();
+        if (a.inner_tt(&tt_b) - slow).abs() > 1e-7 * slow.abs().max(1.0) {
+            return Err("cp×tt mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tt_svd_respects_tolerance() {
+    run("tt-svd", Config { cases: 16, seed: 4 }, |g| {
+        let n = g.usize_in(2, 4);
+        let dims: Vec<usize> = (0..n).map(|_| g.usize_in(2, 4)).collect();
+        let x = DenseTensor::random(&dims, g.rng());
+        let eps = g.f64_in(0.05, 0.5);
+        let tt = TtTensor::tt_svd(&x, eps, 64);
+        let err = rel_err(tt.to_dense().data(), x.data());
+        if err > eps * 1.01 {
+            return Err(format!("err {err} > eps {eps}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tt_round_preserves_value_and_shrinks_ranks() {
+    run("tt-round", Config { cases: 16, seed: 5 }, |g| {
+        let n = g.usize_in(3, 4);
+        let dims: Vec<usize> = (0..n).map(|_| g.usize_in(2, 4)).collect();
+        let r = g.usize_in(1, 3);
+        let x = TtTensor::random(&dims, r, g.rng());
+        let rounded = x.round(1e-10, 64);
+        let err = rel_err(rounded.to_dense().data(), x.to_dense().data());
+        if err > 1e-7 {
+            return Err(format!("round changed the tensor: {err}"));
+        }
+        // Ranks never exceed the prescribed ones (rounding clips the
+        // redundant boundary parameterization).
+        for (got, want) in rounded.ranks().iter().zip(x.ranks()) {
+            if got > want {
+                return Err(format!("rank grew: {:?} vs {:?}", rounded.ranks(), x.ranks()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_qr_and_svd_factorizations() {
+    run("qr/svd", Config { cases: 24, seed: 6 }, |g| {
+        let m = g.usize_in(1, 10);
+        let n = g.usize_in(1, 10);
+        let a = Matrix::from_vec(m, n, g.rng().gaussian_vec(m * n, 1.0));
+        let (q, r) = qr(&a);
+        if rel_err(q.matmul(&r).data(), a.data()) > 1e-9 {
+            return Err("QR reconstruction failed".into());
+        }
+        let d = svd(&a);
+        if rel_err(d.reconstruct().data(), a.data()) > 1e-8 {
+            return Err("SVD reconstruction failed".into());
+        }
+        // Singular values descending and bounded by the norm.
+        let norm = a.fro_norm();
+        let mut prev = f64::INFINITY;
+        for &s in &d.s {
+            if s > prev + 1e-12 || s > norm + 1e-9 {
+                return Err("singular values unsorted or too large".into());
+            }
+            prev = s;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_gemm_is_linear_and_associative_with_identity() {
+    run("gemm", Config { cases: 32, seed: 7 }, |g| {
+        let m = g.usize_in(1, 12);
+        let k = g.usize_in(1, 12);
+        let n = g.usize_in(1, 12);
+        let a = g.rng().gaussian_vec(m * k, 1.0);
+        let b = g.rng().gaussian_vec(k * n, 1.0);
+        let c = g.rng().gaussian_vec(k * n, 1.0);
+        // A(B + C) = AB + AC.
+        let bc: Vec<f64> = b.iter().zip(&c).map(|(x, y)| x + y).collect();
+        let left = matmul(&a, &bc, m, k, n);
+        let ab = matmul(&a, &b, m, k, n);
+        let ac = matmul(&a, &c, m, k, n);
+        let right: Vec<f64> = ab.iter().zip(&ac).map(|(x, y)| x + y).collect();
+        if rel_err(&left, &right) > 1e-10 {
+            return Err("distributivity failed".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shape_linear_multi_roundtrip() {
+    run("shape index", Config { cases: 64, seed: 8 }, |g| {
+        let n = g.usize_in(1, 6);
+        let dims: Vec<usize> = (0..n).map(|_| g.usize_in(1, 6)).collect();
+        let shape = Shape::new(&dims);
+        let lin = g.usize_in(0, shape.numel() - 1);
+        let idx = shape.multi(lin);
+        if shape.linear(&idx) != lin {
+            return Err(format!("roundtrip failed at {lin}"));
+        }
+        let mut idx2 = vec![0; n];
+        shape.multi_into(lin, &mut idx2);
+        if idx2 != idx {
+            return Err("multi_into disagrees with multi".into());
+        }
+        Ok(())
+    });
+}

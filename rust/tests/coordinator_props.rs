@@ -1,0 +1,217 @@
+//! Property-based tests of the coordinator invariants (DESIGN.md §8),
+//! using the in-repo `util::proptest` framework (no proptest crate
+//! offline — see DESIGN.md §3 for the substitution).
+
+use tensorized_rp::coordinator::{
+    Batcher, BatcherConfig, Coordinator, CoordinatorConfig, MapKey, MapKind, ProjectRequest,
+    ProjectionRegistry, RouteKey, Router,
+};
+use tensorized_rp::tensor::{AnyTensor, CpTensor, DenseTensor, TtTensor};
+use tensorized_rp::util::proptest::{run, Config};
+
+/// Batcher invariant: every pushed item comes out exactly once, in FIFO
+/// order, regardless of the interleaving of pushes/polls/flushes.
+#[test]
+fn prop_batcher_conserves_items_in_order() {
+    run("batcher conservation", Config { cases: 128, seed: 0xBA7C }, |g| {
+        let max_batch = g.usize_in(1, 6);
+        let max_delay = g.usize_in(1, 500) as u64;
+        let mut b = Batcher::new(BatcherConfig { max_batch, max_delay_us: max_delay });
+        let n_ops = g.usize_in(1, 60);
+        let mut now = 0u64;
+        let mut next_id = 0u32;
+        let mut out: Vec<u32> = Vec::new();
+        for _ in 0..n_ops {
+            now += g.usize_in(0, 300) as u64;
+            if g.bool_with(0.7) {
+                if let Some(batch) = b.push(next_id, now) {
+                    if batch.len() > max_batch {
+                        return Err(format!("oversized batch {}", batch.len()));
+                    }
+                    out.extend(batch);
+                }
+                next_id += 1;
+            } else if let Some(batch) = b.poll(now) {
+                out.extend(batch);
+            }
+        }
+        if let Some(batch) = b.flush() {
+            out.extend(batch);
+        }
+        let want: Vec<u32> = (0..next_id).collect();
+        if out != want {
+            return Err(format!("items lost/reordered: got {out:?}, want {want:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// Batcher invariant: a pending item never waits longer than max_delay
+/// past its arrival before poll() at/after the deadline releases it.
+#[test]
+fn prop_batcher_deadline_is_honored() {
+    run("batcher deadline", Config { cases: 64, seed: 0xDEAD }, |g| {
+        let max_delay = g.usize_in(10, 1000) as u64;
+        let mut b = Batcher::new(BatcherConfig { max_batch: 100, max_delay_us: max_delay });
+        let t_arrive = g.usize_in(0, 10_000) as u64;
+        b.push(1u8, t_arrive);
+        // Just before the deadline: nothing.
+        if b.poll(t_arrive + max_delay - 1).is_some() {
+            return Err("flushed before deadline".into());
+        }
+        // At the deadline: flushed.
+        if b.poll(t_arrive + max_delay).is_none() {
+            return Err("not flushed at deadline".into());
+        }
+        Ok(())
+    });
+}
+
+/// Router invariant: routing is total and deterministic, and a payload
+/// routed to an artifact always matches that artifact's signature.
+#[test]
+fn prop_router_total_and_consistent() {
+    run("router totality", Config { cases: 96, seed: 0x0907E }, |g| {
+        let mut router = Router::new();
+        // One TT artifact with random signature.
+        let n = g.usize_in(3, 6);
+        let d = g.usize_in(2, 4);
+        let rt = g.usize_in(1, 4);
+        let spec = tensorized_rp::runtime::ArtifactSpec {
+            name: "art".into(),
+            kind: tensorized_rp::runtime::ArtifactKind::Tt,
+            file: "art.hlo.txt".into(),
+            k: 4,
+            batch: 2,
+            scale: 0.5,
+            use_pallas: false,
+            params: vec![],
+            output_shape: vec![2, 4],
+            n_modes: Some(n),
+            dim: Some(d),
+            rank: Some(2),
+            input_rank: Some(rt),
+            input_dim: None,
+        };
+        router.register_artifacts([&spec]);
+        // Random payload, maybe matching.
+        let pn = g.usize_in(3, 6);
+        let pd = g.usize_in(2, 4);
+        let prt = g.usize_in(1, 4);
+        let x = TtTensor::random(&vec![pd; pn], prt, g.rng());
+        let payload = AnyTensor::Tt(x);
+        let t1 = router.route(&payload);
+        let t2 = router.route(&payload);
+        if t1 != t2 {
+            return Err("routing not deterministic".into());
+        }
+        let matches = pn == n && pd == d && prt == rt;
+        match (matches, &t1) {
+            (true, tensorized_rp::coordinator::RouteTarget::Pjrt(name)) if name == "art" => Ok(()),
+            (false, tensorized_rp::coordinator::RouteTarget::Native) => Ok(()),
+            _ => Err(format!(
+                "route mismatch: match={matches}, target={t1:?} (payload {pn}/{pd}/{prt} vs \
+                 artifact {n}/{d}/{rt})"
+            )),
+        }
+    });
+}
+
+/// RouteKey extraction is stable across clones of the payload.
+#[test]
+fn prop_route_key_stable() {
+    run("route key stability", Config { cases: 64, seed: 0x5AB1E }, |g| {
+        let n = g.usize_in(2, 5);
+        let d = g.usize_in(2, 4);
+        let payload = match g.usize_in(0, 2) {
+            0 => AnyTensor::Tt(TtTensor::random(&vec![d; n], g.usize_in(1, 3), g.rng())),
+            1 => AnyTensor::Cp(CpTensor::random(&vec![d; n], g.usize_in(1, 3), g.rng())),
+            _ => AnyTensor::Dense(DenseTensor::random(&vec![d; n], g.rng())),
+        };
+        let k1 = RouteKey::of(&payload);
+        let k2 = RouteKey::of(&payload.clone());
+        if k1 != k2 {
+            return Err("route key unstable".into());
+        }
+        if k1.dims != payload.dims() {
+            return Err("dims mismatch".into());
+        }
+        Ok(())
+    });
+}
+
+/// Registry invariant: same key ⇒ same map object; embeddings are
+/// reproducible across registries with the same master seed.
+#[test]
+fn prop_registry_determinism() {
+    run("registry determinism", Config { cases: 32, seed: 0x4E6 }, |g| {
+        let seed = g.usize_in(0, 1_000_000) as u64;
+        let n = g.usize_in(2, 4);
+        let d = g.usize_in(2, 4);
+        let rank = g.usize_in(1, 3);
+        let k = g.usize_in(1, 8);
+        let key = MapKey { kind: MapKind::Tt { rank }, dims: vec![d; n], k };
+        let x = AnyTensor::Tt(TtTensor::random_unit(&vec![d; n], 2, g.rng()));
+        let y1 = ProjectionRegistry::new(seed).get_or_create(&key).map.project(&x);
+        let y2 = ProjectionRegistry::new(seed).get_or_create(&key).map.project(&x);
+        if y1 != y2 {
+            return Err("registry draw not deterministic".into());
+        }
+        if y1.len() != k {
+            return Err(format!("wrong embedding size {} != {k}", y1.len()));
+        }
+        Ok(())
+    });
+}
+
+/// End-to-end coordinator invariant: every request is answered exactly
+/// once with its own id, for random payload mixes and worker counts.
+#[test]
+fn prop_coordinator_answers_every_request_once() {
+    run(
+        "coordinator request conservation",
+        Config { cases: 10, seed: 0xC00D },
+        |g| {
+            let workers = g.usize_in(1, 4);
+            let n_req = g.usize_in(1, 24);
+            let coord = Coordinator::start(
+                CoordinatorConfig {
+                    workers,
+                    default_k: 8,
+                    queue_cap: 8,
+                    ..Default::default()
+                },
+                None,
+            );
+            let mut rxs = Vec::new();
+            for i in 0..n_req {
+                let payload = match g.usize_in(0, 2) {
+                    0 => AnyTensor::Tt(TtTensor::random_unit(&[3; 4], 2, g.rng())),
+                    1 => AnyTensor::Cp(CpTensor::random_unit(&[3; 4], 2, g.rng())),
+                    _ => AnyTensor::Dense(DenseTensor::random_unit(&[3, 3], g.rng())),
+                };
+                rxs.push((i as u64, coord.submit(ProjectRequest::new(i as u64, payload))));
+            }
+            for (id, rx) in rxs {
+                let resp = rx
+                    .recv()
+                    .map_err(|e| format!("no response for {id}: {e}"))?
+                    .map_err(|e| format!("request {id} failed: {e}"))?;
+                if resp.id != id {
+                    return Err(format!("id mismatch: got {} want {id}", resp.id));
+                }
+                // Exactly-once: a second recv must find the channel closed,
+                // not a duplicate response.
+                if rx.recv().is_ok() {
+                    return Err(format!("duplicate response for {id}"));
+                }
+            }
+            let m = coord.metrics();
+            if m.completed != n_req as u64 {
+                return Err(format!("completed {} != {n_req}", m.completed));
+            }
+            coord.shutdown();
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,237 @@
+//! Cross-module integration tests: full experiment pipelines on reduced
+//! settings, CLI config plumbing, data → projection → metric flows.
+
+use tensorized_rp::data::images::load_images;
+use tensorized_rp::data::inputs::Regime;
+use tensorized_rp::experiments::{ablations, fig1, fig2, fig3, fig4, MapSpec};
+use tensorized_rp::projections::Projection;
+use tensorized_rp::rng::Rng;
+use tensorized_rp::tensor::{CpTensor, DenseTensor, TtTensor};
+use tensorized_rp::util::csv::CsvTable;
+
+#[test]
+fn fig1_pipeline_quick() {
+    let mut cfg = fig1::Fig1Config::quick(Regime::Small);
+    cfg.ks = vec![8, 64];
+    cfg.trials = 6;
+    let rows = fig1::run(&cfg);
+    assert_eq!(rows.len(), 7 * 2);
+    // Within each series, distortion at k=64 ≤ distortion at k=8 on
+    // average is likely but noisy per-series; check the aggregate.
+    let mean_at = |k: usize| -> f64 {
+        let sel: Vec<f64> = rows.iter().filter(|r| r.k == k).map(|r| r.mean).collect();
+        sel.iter().sum::<f64>() / sel.len() as f64
+    };
+    assert!(mean_at(64) < mean_at(8), "aggregate distortion must shrink with k");
+    // CSV round-trips.
+    let csv = fig1::to_csv(Regime::Small, &rows);
+    let parsed = CsvTable::parse(&csv.to_csv()).unwrap();
+    assert_eq!(parsed.len(), rows.len());
+}
+
+#[test]
+fn fig2_pipeline_quick() {
+    let mut cfg = fig2::Fig2Config::quick();
+    cfg.ks = vec![8];
+    cfg.reps = 1;
+    let rows = fig2::run(&cfg);
+    assert_eq!(rows.len(), 14);
+    assert!(fig2::to_csv(&rows).to_csv().contains("very_sparse"));
+}
+
+#[test]
+fn fig3_pipeline_quick_with_synthetic_images() {
+    let mut cfg = fig3::Fig3Config::quick();
+    cfg.cifar_path = None;
+    cfg.n_images = 4;
+    cfg.ks = vec![12];
+    cfg.trials = 2;
+    let rows = fig3::run(&cfg);
+    assert_eq!(rows.len(), 9);
+    assert!(rows.iter().all(|r| r.source == "synthetic"));
+}
+
+#[test]
+fn fig4_pipeline_quick() {
+    let cfg = fig4::Fig4Config::quick();
+    let rows = fig4::run(&cfg);
+    // Both panels present, all series feasible at small orders.
+    assert!(rows.len() >= 2 * 2 * 5);
+    let csv = fig4::to_csv(&rows);
+    assert!(csv.len() == rows.len());
+}
+
+#[test]
+fn ablation_pipeline_quick() {
+    let cfg = ablations::AblationConfig::quick();
+    let rows = ablations::run_variance_sweep(&cfg);
+    assert_eq!(rows.len(), 2 * cfg.orders.len() * cfg.ranks.len());
+    for r in &rows {
+        assert!(r.emp_var.is_finite() && r.bound > 0.0);
+    }
+}
+
+#[test]
+fn all_maps_agree_across_input_formats_at_scale() {
+    // One shared medium-ish shape; every map must give identical results
+    // for the same tensor presented dense / TT / CP.
+    let mut rng = Rng::seed_from(42);
+    let dims = vec![3usize; 6];
+    let cp_x = CpTensor::random_unit(&dims, 3, &mut rng);
+    let dense_x = cp_x.to_dense();
+    let tt_x = cp_x.to_tt();
+    for spec in [
+        MapSpec::Gaussian,
+        MapSpec::VerySparse,
+        MapSpec::Tt(4),
+        MapSpec::Cp(6),
+    ] {
+        let f = spec.build(&dims, 12, &mut rng);
+        let y_dense = f.project_dense(&dense_x);
+        let y_tt = f.project_tt(&tt_x);
+        let y_cp = f.project_cp(&cp_x);
+        for i in 0..12 {
+            assert!(
+                (y_dense[i] - y_tt[i]).abs() < 1e-8,
+                "{}: dense vs tt at {i}",
+                spec.label()
+            );
+            assert!(
+                (y_dense[i] - y_cp[i]).abs() < 1e-8,
+                "{}: dense vs cp at {i}",
+                spec.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn pairwise_distances_are_preserved_for_moderate_k() {
+    // JL property on a concrete point set: all pairwise distances of 10
+    // image tensors preserved within 60% at k=256 (loose but meaningful).
+    let (images, _) = load_images(10, None, 3);
+    let tensors: Vec<DenseTensor> = images.iter().map(|im| im.to_tensor()).collect();
+    let mut rng = Rng::seed_from(4);
+    let f = tensorized_rp::projections::TtProjection::new(
+        &tensorized_rp::data::images::TENSOR_DIMS,
+        5,
+        256,
+        &mut rng,
+    );
+    let projected: Vec<Vec<f64>> = tensors.iter().map(|t| f.project_dense(t)).collect();
+    for i in 0..tensors.len() {
+        for j in (i + 1)..tensors.len() {
+            let dx = tensors[i].sub(&tensors[j]).fro_norm();
+            let dy: f64 = projected[i]
+                .iter()
+                .zip(&projected[j])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            let ratio = dy / dx;
+            assert!(
+                (0.4..2.5).contains(&ratio),
+                "pair ({i},{j}): ratio {ratio}"
+            );
+        }
+    }
+}
+
+#[test]
+fn non_uniform_mode_sizes_are_supported_end_to_end() {
+    // The theory (and this implementation) allow d₁ ≠ … ≠ d_N; only the
+    // AOT artifacts fix uniform shapes. Exercise every map on mixed dims.
+    let mut rng = Rng::seed_from(77);
+    let dims = vec![2usize, 5, 3, 4];
+    let x_tt = TtTensor::random_unit(&dims, 3, &mut rng);
+    let x_dense = x_tt.to_dense();
+    for spec in [
+        MapSpec::Gaussian,
+        MapSpec::VerySparse,
+        MapSpec::Tt(3),
+        MapSpec::Cp(4),
+    ] {
+        let f = spec.build(&dims, 10, &mut rng);
+        let y_tt = f.project_tt(&x_tt);
+        let y_dense = f.project_dense(&x_dense);
+        assert_eq!(y_tt.len(), 10, "{}", spec.label());
+        for i in 0..10 {
+            assert!(
+                (y_tt[i] - y_dense[i]).abs() < 1e-8,
+                "{} mixed dims: tt vs dense at {i}",
+                spec.label()
+            );
+        }
+    }
+    // TensorSketch and TRP too.
+    let ts = tensorized_rp::projections::TensorSketch::new(&dims, 10, &mut rng);
+    let y = ts.project_dense(&x_dense);
+    assert_eq!(y.len(), 10);
+    let trp = tensorized_rp::projections::TrpProjection::new(&dims, 2, 10, &mut rng);
+    assert_eq!(trp.project_dense(&x_dense).len(), 10);
+}
+
+#[test]
+fn tt_arithmetic_composes_with_projections() {
+    // f(a + b) == f(a) + f(b) where the sum is computed in TT format.
+    let mut rng = Rng::seed_from(78);
+    let dims = vec![3usize; 5];
+    let a = TtTensor::random(&dims, 2, &mut rng);
+    let b = TtTensor::random(&dims, 2, &mut rng);
+    let sum = a.add(&b).round(1e-12, 16);
+    let f = tensorized_rp::projections::TtProjection::new(&dims, 3, 12, &mut rng);
+    let ya = f.project_tt(&a);
+    let yb = f.project_tt(&b);
+    let ysum = f.project_tt(&sum);
+    for i in 0..12 {
+        assert!((ysum[i] - ya[i] - yb[i]).abs() < 1e-8);
+    }
+}
+
+#[test]
+fn tt_svd_roundtrip_through_projection() {
+    // Dense → TT-SVD → project in TT format ≈ project dense directly.
+    let mut rng = Rng::seed_from(5);
+    let src = TtTensor::random(&[4, 3, 4, 3], 3, &mut rng);
+    let dense = src.to_dense();
+    let recompressed = TtTensor::tt_svd(&dense, 1e-10, 32);
+    let f = tensorized_rp::projections::TtProjection::new(&[4, 3, 4, 3], 3, 16, &mut rng);
+    let y1 = f.project_dense(&dense);
+    let y2 = f.project_tt(&recompressed);
+    for (a, b) in y1.iter().zip(&y2) {
+        assert!((a - b).abs() < 1e-7);
+    }
+}
+
+#[test]
+fn workload_trace_feeds_coordinator() {
+    use tensorized_rp::coordinator::{Coordinator, CoordinatorConfig, ProjectRequest};
+    use tensorized_rp::data::workload::{poisson_trace, FormatMix};
+    let trace = poisson_trace(16, 10_000.0, Regime::Small, FormatMix::default(), 8);
+    let coord = Coordinator::start(
+        CoordinatorConfig { default_k: 8, workers: 2, ..Default::default() },
+        None,
+    );
+    let rxs: Vec<_> = trace
+        .payloads
+        .into_iter()
+        .enumerate()
+        .map(|(i, p)| coord.submit(ProjectRequest::new(i as u64, p)))
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        assert_eq!(resp.embedding.len(), 8);
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn theory_guides_experiments_consistently() {
+    // suggest_k must recommend TT in every regime the experiments cover.
+    for n in [3usize, 12, 25] {
+        let (map, _) = tensorized_rp::theory::suggest_k(0.5, n, 10, 100, 0.05);
+        if n > 3 {
+            assert_eq!(map, "tt");
+        }
+    }
+}

@@ -1,0 +1,251 @@
+//! Statistical validation of the paper's theorems and claims (DESIGN.md
+//! §8). All tests are seeded; tolerances are sized from the CLT so the
+//! flake probability is negligible.
+
+use tensorized_rp::linalg::Matrix;
+use tensorized_rp::projections::{
+    squared_norm, CpProjection, Projection, TrpProjection, TtProjection,
+};
+use tensorized_rp::rng::Rng;
+use tensorized_rp::tensor::{AnyTensor, TtTensor};
+use tensorized_rp::theory;
+use tensorized_rp::util::stats::{mean, variance};
+
+/// Empirical moments of ‖f(X)‖² over fresh map draws.
+fn moments(
+    build: impl Fn(&mut Rng) -> Box<dyn Projection>,
+    x: &AnyTensor,
+    trials: usize,
+    seed: u64,
+) -> (f64, f64) {
+    let mut vals = Vec::with_capacity(trials);
+    for t in 0..trials as u64 {
+        let mut rng = Rng::seed_from(tensorized_rp::rng::derive_seed(seed, t));
+        let f = build(&mut rng);
+        vals.push(squared_norm(&f.project(x)));
+    }
+    (mean(&vals), variance(&vals))
+}
+
+#[test]
+fn theorem1_expected_isometry_tt_and_cp() {
+    // E‖f(X)‖² = ‖X‖²_F for both maps, at several (N, R).
+    let mut rng = Rng::seed_from(1);
+    for (n, r) in [(3usize, 2usize), (5, 3), (8, 5)] {
+        let dims = vec![3usize; n];
+        let x = AnyTensor::Tt(TtTensor::random_unit(&dims, 2, &mut rng));
+        let k = 48; // larger k shrinks the per-trial variance
+        let trials = 300;
+        let (m_tt, _) = moments(
+            |rng| Box::new(TtProjection::new(&dims, r, k, rng)),
+            &x,
+            trials,
+            100 + n as u64,
+        );
+        // Theorem 1 TT variance bound → CLT tolerance (4 sigma).
+        let tol_tt = 4.0 * (theory::tt_variance_bound(n, r, k) / trials as f64).sqrt();
+        assert!(
+            (m_tt - 1.0).abs() < tol_tt.max(0.02),
+            "TT N={n} R={r}: mean={m_tt}, tol={tol_tt}"
+        );
+        let (m_cp, _) = moments(
+            |rng| Box::new(CpProjection::new(&dims, r, k, rng)),
+            &x,
+            trials,
+            200 + n as u64,
+        );
+        let tol_cp = 4.0 * (theory::cp_variance_bound(n, r, k) / trials as f64).sqrt();
+        assert!(
+            (m_cp - 1.0).abs() < tol_cp.max(0.02),
+            "CP N={n} R={r}: mean={m_cp}, tol={tol_cp}"
+        );
+    }
+}
+
+#[test]
+fn theorem1_variance_bounds_hold_empirically() {
+    let mut rng = Rng::seed_from(2);
+    for (n, r, k) in [(2usize, 1usize, 8usize), (4, 2, 8), (6, 5, 16)] {
+        let dims = vec![3usize; n];
+        let x = AnyTensor::Tt(TtTensor::random_unit(&dims, 2, &mut rng));
+        // ‖f(X)‖² is heavy-tailed (degree-4N polynomial of Gaussians), so
+        // the sample variance converges slowly — use many trials.
+        let trials = 3000;
+        let (_, v_tt) = moments(
+            |rng| Box::new(TtProjection::new(&dims, r, k, rng)),
+            &x,
+            trials,
+            300 + n as u64,
+        );
+        let bound_tt = theory::tt_variance_bound(n, r, k);
+        // Generous slack for the slow, heavy-tailed convergence.
+        assert!(
+            v_tt <= bound_tt * 1.5,
+            "TT N={n} R={r} k={k}: var={v_tt:.4} bound={bound_tt:.4}"
+        );
+        let (_, v_cp) = moments(
+            |rng| Box::new(CpProjection::new(&dims, r, k, rng)),
+            &x,
+            trials,
+            400 + n as u64,
+        );
+        let bound_cp = theory::cp_variance_bound(n, r, k);
+        assert!(
+            v_cp <= bound_cp * 1.5,
+            "CP N={n} R={r} k={k}: var={v_cp:.4} bound={bound_cp:.4}"
+        );
+    }
+}
+
+#[test]
+fn order2_exact_tt_variance_formula() {
+    // The paper's closed form for order-2 inputs:
+    // Var(‖f_TT(X)‖²) = (2‖X‖⁴ + (6/R)·Tr[(XᵀX)²])/k.
+    let mut rng = Rng::seed_from(3);
+    let (dr, dc, r, k) = (5usize, 4usize, 3usize, 8usize);
+    let x_mat = Matrix::from_vec(dr, dc, rng.gaussian_vec(dr * dc, 1.0));
+    let x = AnyTensor::Dense(tensorized_rp::tensor::DenseTensor::from_vec(
+        &[dr, dc],
+        x_mat.data().to_vec(),
+    ));
+    let exact = theory::tt_order2_exact_variance(&x_mat, r, k);
+    let trials = 4000;
+    let (_, emp) = moments(
+        |rng| Box::new(TtProjection::new(&[dr, dc], r, k, rng)),
+        &x,
+        trials,
+        55,
+    );
+    // 4-sigma band for a sample variance of a heavy-ish tailed statistic.
+    let rel_tol = 0.25;
+    assert!(
+        (emp - exact).abs() < exact * rel_tol,
+        "exact={exact:.4} empirical={emp:.4}"
+    );
+}
+
+#[test]
+fn tt_needs_smaller_k_than_cp_at_high_order() {
+    // The headline: at N=25, TT(10) achieves small distortion at k=64
+    // while CP(100) stays near-useless. (Figure 1 right panel, distilled.)
+    let mut rng = Rng::seed_from(4);
+    let dims = vec![3usize; 25];
+    let x = AnyTensor::Tt(TtTensor::random_unit(&dims, 3, &mut rng));
+    let trials = 30;
+    let mut tt_ds = Vec::new();
+    let mut cp_ds = Vec::new();
+    for t in 0..trials as u64 {
+        let mut rng = Rng::seed_from(tensorized_rp::rng::derive_seed(77, t));
+        let f_tt = TtProjection::new(&dims, 10, 64, &mut rng);
+        tt_ds.push(tensorized_rp::projections::distortion_ratio(
+            &f_tt.project(&x),
+            1.0,
+        ));
+        let f_cp = CpProjection::new(&dims, 100, 64, &mut rng);
+        cp_ds.push(tensorized_rp::projections::distortion_ratio(
+            &f_cp.project(&x),
+            1.0,
+        ));
+    }
+    let tt_mean = mean(&tt_ds);
+    let cp_mean = mean(&cp_ds);
+    assert!(
+        tt_mean < 0.5,
+        "TT(10) should embed well at high order: {tt_mean}"
+    );
+    assert!(
+        cp_mean > 2.0 * tt_mean,
+        "CP(100) should be far worse: tt={tt_mean} cp={cp_mean}"
+    );
+}
+
+#[test]
+fn trp_equivalence_is_exact() {
+    // §3: f_TRP(T) ≡ f_CP(R=T) — exact equality under matched seeds.
+    let mut rng = Rng::seed_from(5);
+    let dims = [3usize, 4, 3, 2];
+    for t in [1usize, 2, 5] {
+        let trp = TrpProjection::new(&dims, t, 9, &mut rng);
+        let cp = trp.as_cp_projection();
+        let x = tensorized_rp::tensor::DenseTensor::random(&dims, &mut rng);
+        let y1 = trp.project_dense(&x);
+        let y2 = cp.project_dense(&x);
+        for (a, b) in y1.iter().zip(&y2) {
+            assert!((a - b).abs() < 1e-10, "T={t}");
+        }
+        assert_eq!(cp.rank(), t);
+    }
+}
+
+#[test]
+fn theorem5_concentration_envelope_holds() {
+    // The fraction of trials with distortion ≥ ε must not exceed the
+    // Theorem 5 tail bound (with its constants, generously).
+    let mut rng = Rng::seed_from(6);
+    let dims = vec![3usize; 4];
+    let x = AnyTensor::Tt(TtTensor::random_unit(&dims, 2, &mut rng));
+    let (n, r, k, eps) = (4usize, 5usize, 128usize, 0.6f64);
+    let trials = 400;
+    let mut exceed = 0usize;
+    for t in 0..trials as u64 {
+        let mut rng = Rng::seed_from(tensorized_rp::rng::derive_seed(88, t));
+        let f = TtProjection::new(&dims, r, k, &mut rng);
+        let d = tensorized_rp::projections::distortion_ratio(&f.project(&x), 1.0);
+        if d >= eps {
+            exceed += 1;
+        }
+    }
+    let emp = exceed as f64 / trials as f64;
+    let bound = theory::tt_concentration_tail(eps, n, r, k);
+    assert!(
+        emp <= bound + 0.05,
+        "empirical tail {emp} exceeds Theorem 5 envelope {bound}"
+    );
+    // And Chebyshev with the Theorem-1 variance bound is also respected.
+    let cheb = theory::tt_variance_bound(n, r, k) / (eps * eps);
+    assert!(emp <= cheb.min(1.0) + 0.05, "tail {emp} vs Chebyshev {cheb}");
+}
+
+#[test]
+fn memory_complexity_matches_paper_table() {
+    // O(kNdR²) for TT vs O(kNdR) for CP vs O(kd^N) dense — concretely.
+    let mut rng = Rng::seed_from(7);
+    let (d, n, k) = (3usize, 8usize, 16usize);
+    let dims = vec![d; n];
+    let tt = TtProjection::new(&dims, 4, k, &mut rng);
+    let cp = CpProjection::new(&dims, 4, k, &mut rng);
+    assert_eq!(tt.num_params(), k * ((n - 2) * d * 16 + 2 * d * 4));
+    assert_eq!(cp.num_params(), k * n * d * 4);
+    let dense_params = k * d.pow(n as u32);
+    assert!(tt.num_params() < dense_params / 20);
+    assert!(cp.num_params() < tt.num_params());
+}
+
+#[test]
+fn complexity_scaling_is_linear_in_order() {
+    // Projection time O(kNd·max(R,R̃)³): doubling N should ≈ double the
+    // time, not square it. Coarse check with generous bounds.
+    let mut rng = Rng::seed_from(8);
+    let time_for = |n: usize, rng: &mut Rng| -> f64 {
+        let dims = vec![3usize; n];
+        let f = TtProjection::new(&dims, 5, 32, rng);
+        let x = TtTensor::random_unit(&dims, 5, rng);
+        // Warmup + median of 5.
+        let mut ts = Vec::new();
+        f.project_tt(&x);
+        for _ in 0..5 {
+            let t = tensorized_rp::util::Timer::start();
+            std::hint::black_box(f.project_tt(&x));
+            ts.push(t.elapsed_secs());
+        }
+        ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ts[2]
+    };
+    let t8 = time_for(8, &mut rng);
+    let t32 = time_for(32, &mut rng);
+    let ratio = t32 / t8;
+    assert!(
+        ratio < 16.0,
+        "time should scale ~linearly in N (got {ratio:.1}× for 4× modes)"
+    );
+}

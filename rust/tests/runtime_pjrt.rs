@@ -1,0 +1,175 @@
+//! PJRT round-trip integration tests: the compiled artifacts must agree
+//! numerically with the native Rust engine on identical parameters.
+//!
+//! These tests require `make artifacts` to have run; they skip (pass
+//! trivially with a note) when `artifacts/manifest.json` is absent so
+//! `cargo test` stays green on a fresh checkout.
+
+use std::path::Path;
+use tensorized_rp::projections::Projection;
+use tensorized_rp::rng::Rng;
+use tensorized_rp::runtime::{pack, ArtifactKind, Manifest, PjrtEngine};
+use tensorized_rp::tensor::{CpTensor, DenseTensor, TtTensor};
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("[skip] artifacts not built; run `make artifacts`");
+        None
+    }
+}
+
+fn engine() -> Option<PjrtEngine> {
+    let dir = artifacts_dir()?;
+    let mut e = PjrtEngine::cpu().expect("PJRT cpu client");
+    e.load_dir(dir).expect("compile artifacts");
+    Some(e)
+}
+
+#[test]
+fn manifest_and_files_are_consistent() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(dir).unwrap();
+    assert!(m.artifacts.len() >= 4, "expected the full artifact set");
+    for spec in &m.artifacts {
+        assert!(dir.join(&spec.file).exists(), "missing {}", spec.file);
+    }
+}
+
+#[test]
+fn tt_artifact_matches_native_engine() {
+    let Some(engine) = engine() else { return };
+    let spec = engine.spec("tt_rp_medium").expect("tt_rp_medium").clone();
+    let (n, d, r, rt) = spec.tt_meta().unwrap();
+    let dims = vec![d; n];
+    let mut rng = Rng::seed_from(123);
+    let f = tensorized_rp::projections::TtProjection::new(&dims, r, spec.k, &mut rng);
+    let (gf, gm, gl) = pack::pack_tt_projection(&f, n, d, r).unwrap();
+    // Two real inputs in a batch of spec.batch (padded).
+    let x1 = TtTensor::random_unit(&dims, rt, &mut rng);
+    let x2 = TtTensor::random_unit(&dims, rt, &mut rng);
+    let (xf, xm, xl) = pack::pack_tt_inputs(&[&x1, &x2], spec.batch, n, d, rt).unwrap();
+    let y = engine
+        .execute("tt_rp_medium", &[gf, gm, gl, xf, xm, xl])
+        .unwrap();
+    assert_eq!(y.len(), spec.batch * spec.k);
+    // Rows 0 and 1 must match the native projection; padded rows are 0.
+    for (row, x) in [(0usize, &x1), (1usize, &x2)] {
+        let want = f.project_tt(x);
+        let got = &y[row * spec.k..(row + 1) * spec.k];
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 2e-4, "row {row}: pjrt={a} native={b}");
+        }
+    }
+    for v in &y[2 * spec.k..] {
+        assert_eq!(*v, 0.0, "padded rows must be exactly zero");
+    }
+}
+
+#[test]
+fn pallas_artifact_matches_reference_artifact() {
+    let Some(engine) = engine() else { return };
+    let spec = engine.spec("tt_rp_medium").unwrap().clone();
+    let (n, d, r, rt) = spec.tt_meta().unwrap();
+    let dims = vec![d; n];
+    let mut rng = Rng::seed_from(7);
+    let f = tensorized_rp::projections::TtProjection::new(&dims, r, spec.k, &mut rng);
+    let (gf, gm, gl) = pack::pack_tt_projection(&f, n, d, r).unwrap();
+    let x = TtTensor::random_unit(&dims, rt, &mut rng);
+    let (xf, xm, xl) = pack::pack_tt_inputs(&[&x], spec.batch, n, d, rt).unwrap();
+    let inputs = vec![gf, gm, gl, xf, xm, xl];
+    let y_ref = engine.execute("tt_rp_medium", &inputs).unwrap();
+    let y_pal = engine.execute("tt_rp_medium_pallas", &inputs).unwrap();
+    for (a, b) in y_ref.iter().zip(&y_pal) {
+        assert!((a - b).abs() < 1e-5, "pallas={b} ref={a}");
+    }
+}
+
+#[test]
+fn cp_artifact_matches_native_engine() {
+    let Some(engine) = engine() else { return };
+    let spec = engine.spec("cp_rp_medium").expect("cp_rp_medium").clone();
+    assert_eq!(spec.kind, ArtifactKind::Cp);
+    let n = spec.n_modes.unwrap();
+    let d = spec.dim.unwrap();
+    let r = spec.rank.unwrap();
+    let rt = spec.input_rank.unwrap();
+    let dims = vec![d; n];
+    let mut rng = Rng::seed_from(9);
+    let f = tensorized_rp::projections::CpProjection::new(&dims, r, spec.k, &mut rng);
+    let a = pack::pack_cp_projection(&f, n, d, r).unwrap();
+    let x = CpTensor::random_unit(&dims, rt, &mut rng);
+    let xp = pack::pack_cp_inputs(&[&x], spec.batch, n, d, rt).unwrap();
+    let y = engine.execute("cp_rp_medium", &[a, xp]).unwrap();
+    let want = f.project_cp(&x);
+    for (got, b) in y[..spec.k].iter().zip(&want) {
+        assert!((got - b).abs() < 2e-4, "pjrt={got} native={b}");
+    }
+}
+
+#[test]
+fn dense_artifact_matches_native_engine() {
+    let Some(engine) = engine() else { return };
+    let spec = engine.spec("gauss_small").expect("gauss_small").clone();
+    let dim = spec.input_dim.unwrap();
+    let mut rng = Rng::seed_from(31);
+    // 15×15×15 = 3375-dim inputs.
+    let f = tensorized_rp::projections::GaussianProjection::new(&[15, 15, 15], spec.k, &mut rng);
+    let w = pack::pack_dense_projection(&f);
+    let x = DenseTensor::random_unit(&[15, 15, 15], &mut rng);
+    let xp = pack::pack_dense_inputs(&[&x], spec.batch, dim).unwrap();
+    let y = engine.execute("gauss_small", &[w, xp]).unwrap();
+    let want = f.project_dense(&x);
+    for (got, b) in y[..spec.k].iter().zip(&want) {
+        assert!((got - b).abs() < 2e-4, "pjrt={got} native={b}");
+    }
+}
+
+#[test]
+fn small_regime_tt_artifact_matches_native() {
+    // The small-order regime artifact (d=15, N=3) — pallas gemm-backed.
+    let Some(engine) = engine() else { return };
+    let spec = engine.spec("tt_rp_small").expect("tt_rp_small").clone();
+    let (n, d, r, rt) = spec.tt_meta().unwrap();
+    assert_eq!((n, d), (3, 15));
+    let dims = vec![d; n];
+    let mut rng = Rng::seed_from(88);
+    let f = tensorized_rp::projections::TtProjection::new(&dims, r, spec.k, &mut rng);
+    let (gf, gm, gl) = pack::pack_tt_projection(&f, n, d, r).unwrap();
+    let x = TtTensor::random_unit(&dims, rt, &mut rng);
+    let (xf, xm, xl) = pack::pack_tt_inputs(&[&x], spec.batch, n, d, rt).unwrap();
+    let y = engine
+        .execute("tt_rp_small", &[gf, gm, gl, xf, xm, xl])
+        .unwrap();
+    let want = f.project_tt(&x);
+    for (got, b) in y[..spec.k].iter().zip(&want) {
+        assert!((got - b).abs() < 2e-4, "pjrt={got} native={b}");
+    }
+}
+
+#[test]
+fn execute_rejects_bad_input_arity_and_shape() {
+    let Some(engine) = engine() else { return };
+    assert!(engine.execute("tt_rp_medium", &[]).is_err());
+    assert!(engine.execute("nonexistent", &[]).is_err());
+    let spec = engine.spec("gauss_small").unwrap().clone();
+    let w = vec![0f32; spec.params[0].numel()];
+    let bad_x = vec![0f32; 3]; // wrong element count
+    assert!(engine.execute("gauss_small", &[w, bad_x]).is_err());
+}
+
+#[test]
+fn exec_stats_accumulate() {
+    let Some(engine) = engine() else { return };
+    let spec = engine.spec("gauss_small").unwrap().clone();
+    let w = vec![0f32; spec.params[0].numel()];
+    let x = vec![0f32; spec.params[1].numel()];
+    let before = engine.stats("gauss_small").unwrap().executions;
+    engine.execute("gauss_small", &[w.clone(), x.clone()]).unwrap();
+    engine.execute("gauss_small", &[w, x]).unwrap();
+    let after = engine.stats("gauss_small").unwrap();
+    assert_eq!(after.executions, before + 2);
+    assert!(after.total_secs > 0.0);
+}
