@@ -71,6 +71,8 @@ pub struct Metrics {
     pub failed: AtomicU64,
     /// PJRT batches executed.
     pub pjrt_batches: AtomicU64,
+    /// Native batches executed (one `project_batch_into` call each).
+    pub native_batches: AtomicU64,
     /// Requests served by the native path.
     pub native_requests: AtomicU64,
     /// Requests served by the PJRT path.
@@ -92,6 +94,8 @@ pub struct MetricsSnapshot {
     pub failed: u64,
     /// See [`Metrics::pjrt_batches`].
     pub pjrt_batches: u64,
+    /// See [`Metrics::native_batches`].
+    pub native_batches: u64,
     /// See [`Metrics::native_requests`].
     pub native_requests: u64,
     /// See [`Metrics::pjrt_requests`].
@@ -119,6 +123,7 @@ impl Metrics {
             completed: self.completed.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
             pjrt_batches: self.pjrt_batches.load(Ordering::Relaxed),
+            native_batches: self.native_batches.load(Ordering::Relaxed),
             native_requests: self.native_requests.load(Ordering::Relaxed),
             pjrt_requests: self.pjrt_requests.load(Ordering::Relaxed),
             padded_slots: self.padded_slots.load(Ordering::Relaxed),

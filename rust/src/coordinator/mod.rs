@@ -8,11 +8,13 @@
 //!                                   │ route on (format, dims, rank)
 //!                  ┌────────────────┴───────────────┐
 //!                  ▼                                ▼
-//!          native path                      PJRT path (per-artifact
-//!          (worker pool, any shape)         dynamic batcher: size B
-//!                  │                        or deadline, zero-padded)
-//!                  ▼                                ▼
-//!          projections::*                   runtime::PjrtEngine
+//!          native path (per-map             PJRT path (per-artifact
+//!          dynamic batcher: size B          dynamic batcher: size B
+//!          or deadline → worker pool,       or deadline, zero-padded)
+//!          one project_batch_into per               ▼
+//!          flush, pooled workspaces)        runtime::PjrtEngine
+//!                  ▼
+//!          projections::* batched kernels
 //!                  └────────────▶ responses ◀───────┘
 //! ```
 //!
@@ -37,4 +39,4 @@ pub use net::{NetClient, NetServer};
 pub use request::{EnginePath, ProjectRequest, ProjectResponse};
 pub use router::{RouteKey, RouteTarget, Router};
 pub use server::{Coordinator, CoordinatorConfig};
-pub use state::{MapKey, MapKind, ProjectionRegistry};
+pub use state::{MapKey, MapKind, ProjectionRegistry, WorkspacePool};

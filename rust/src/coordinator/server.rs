@@ -1,11 +1,19 @@
 //! The coordinator server: bounded ingress queue → dispatcher thread →
-//! (native worker pool | per-artifact dynamic batchers → PJRT engine).
+//! (per-map native dynamic batchers → worker pool | per-artifact dynamic
+//! batchers → PJRT engine).
+//!
+//! Both execution paths are batch-first: the native route accumulates
+//! requests per map signature exactly like the PJRT route does per
+//! artifact, and a flushed batch of `B` requests executes as **one**
+//! [`crate::projections::Projection::project_batch_into`] call on a
+//! pooled [`crate::projections::Workspace`] — there is no per-item
+//! `project` call anywhere in the worker loop.
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::metrics::Metrics;
 use super::request::{EnginePath, ProjectRequest, ProjectResponse};
 use super::router::{RouteTarget, Router};
-use super::state::{MapKey, MapKind, PackedParams, ProjectionRegistry};
+use super::state::{MapKey, MapKind, PackedParams, ProjectionRegistry, WorkspacePool};
 use crate::runtime::{pack, ArtifactKind, PjrtEngine};
 use crate::tensor::AnyTensor;
 use crate::util::threadpool::ThreadPool;
@@ -22,8 +30,13 @@ pub struct CoordinatorConfig {
     pub workers: usize,
     /// Ingress queue capacity (backpressure bound).
     pub queue_cap: usize,
-    /// Dynamic-batcher deadline (µs).
+    /// Dynamic-batcher deadline (µs) — applies to both the PJRT and the
+    /// native batchers.
     pub max_delay_us: u64,
+    /// Native-path batch size: requests sharing a map signature accumulate
+    /// up to this count (or the deadline) and execute as one
+    /// `project_batch_into` call. `1` restores item-at-a-time dispatch.
+    pub native_max_batch: usize,
     /// Master seed for the projection registry.
     pub master_seed: u64,
     /// Map policy for native TT-format requests: TT rank.
@@ -42,6 +55,7 @@ impl Default for CoordinatorConfig {
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             queue_cap: 1024,
             max_delay_us: 2_000,
+            native_max_batch: 16,
             master_seed: 0xC0FFEE,
             default_tt_rank: 5,
             default_cp_rank: 25,
@@ -64,6 +78,7 @@ struct Shared {
     registry: ProjectionRegistry,
     engine: Option<PjrtEngine>,
     metrics: Metrics,
+    workspaces: WorkspacePool,
     cfg: CoordinatorConfig,
     epoch: Instant,
 }
@@ -89,6 +104,7 @@ impl Coordinator {
             registry: ProjectionRegistry::new(cfg.master_seed),
             engine,
             metrics: Metrics::new(),
+            workspaces: WorkspacePool::new(),
             cfg: cfg.clone(),
             epoch: Instant::now(),
         });
@@ -185,6 +201,13 @@ fn dispatcher_loop(shared: Arc<Shared>, rx: Receiver<Envelope>) {
     }
     let pool = ThreadPool::new(shared.cfg.workers, shared.cfg.queue_cap);
     let mut batchers: HashMap<String, Batcher<BatchItem>> = HashMap::new();
+    // Native requests batch per map signature, mirroring the per-artifact
+    // PJRT batchers: size native_max_batch or the shared deadline.
+    let native_cfg = BatcherConfig {
+        max_batch: shared.cfg.native_max_batch.max(1),
+        max_delay_us: shared.cfg.max_delay_us,
+    };
+    let mut native_batchers: HashMap<MapKey, Batcher<Envelope>> = HashMap::new();
 
     loop {
         // Sleep until the nearest batch deadline (or a coarse tick).
@@ -192,6 +215,7 @@ fn dispatcher_loop(shared: Arc<Shared>, rx: Receiver<Envelope>) {
         let next_deadline = batchers
             .values()
             .filter_map(|b| b.deadline_us())
+            .chain(native_batchers.values().filter_map(|b| b.deadline_us()))
             .min()
             .unwrap_or(now + 5_000);
         let wait = Duration::from_micros(next_deadline.saturating_sub(now).max(100));
@@ -199,7 +223,16 @@ fn dispatcher_loop(shared: Arc<Shared>, rx: Receiver<Envelope>) {
             Ok(env) => {
                 match router.route(&env.req.payload) {
                     RouteTarget::Native => {
-                        dispatch_native(&shared, &pool, env);
+                        let key = native_map_key(&shared, &env.req.payload);
+                        // Clone the key only on first sight of a signature;
+                        // the steady-state path just borrows it.
+                        if !native_batchers.contains_key(&key) {
+                            native_batchers.insert(key.clone(), Batcher::new(native_cfg));
+                        }
+                        let b = native_batchers.get_mut(&key).expect("just inserted");
+                        if let Some(batch) = b.push(env, shared.now_us()) {
+                            dispatch_native_batch(&shared, &pool, key, batch);
+                        }
                     }
                     RouteTarget::Pjrt(name) => {
                         let cfg = artifact_batch_cfg[&name];
@@ -212,14 +245,7 @@ fn dispatcher_loop(shared: Arc<Shared>, rx: Receiver<Envelope>) {
                     }
                 }
             }
-            Err(RecvTimeoutError::Timeout) => {
-                let now = shared.now_us();
-                for (name, b) in batchers.iter_mut() {
-                    if let Some(batch) = b.poll(now) {
-                        dispatch_pjrt(&shared, &pool, name, batch);
-                    }
-                }
-            }
+            Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => {
                 // Drain: flush every pending batch, then stop.
                 for (name, b) in batchers.iter_mut() {
@@ -227,8 +253,36 @@ fn dispatcher_loop(shared: Arc<Shared>, rx: Receiver<Envelope>) {
                         dispatch_pjrt(&shared, &pool, name, batch);
                     }
                 }
+                for (key, b) in native_batchers.iter_mut() {
+                    if let Some(batch) = b.flush() {
+                        dispatch_native_batch(&shared, &pool, key.clone(), batch);
+                    }
+                }
                 break;
             }
+        }
+        // Deadline sweep on every iteration — arrivals included — so a
+        // sustained request stream (recv_timeout always returning Ok
+        // before the timeout fires) cannot starve an expired batch past
+        // its max_delay_us deadline.
+        let now = shared.now_us();
+        for (name, b) in batchers.iter_mut() {
+            if let Some(batch) = b.poll(now) {
+                dispatch_pjrt(&shared, &pool, name, batch);
+            }
+        }
+        for (key, b) in native_batchers.iter_mut() {
+            if let Some(batch) = b.poll(now) {
+                dispatch_native_batch(&shared, &pool, key.clone(), batch);
+            }
+        }
+        // MapKey dims come verbatim from (possibly remote) payloads, so
+        // distinct signatures are unbounded over a server's lifetime;
+        // evict idle batchers past a high-water mark to bound both the
+        // map's memory and the sweep above.
+        const MAX_IDLE_NATIVE_BATCHERS: usize = 1024;
+        if native_batchers.len() > MAX_IDLE_NATIVE_BATCHERS {
+            native_batchers.retain(|_, b| !b.is_empty());
         }
     }
     // Dropping the pool joins the workers after queued jobs finish.
@@ -261,25 +315,51 @@ fn native_map_key(shared: &Shared, payload: &AnyTensor) -> MapKey {
     }
 }
 
-fn dispatch_native(shared: &Arc<Shared>, pool: &ThreadPool, env: Envelope) {
+/// Execute one flushed native batch: resolve the shared map, run the
+/// whole batch through a single `project_batch_into` call on a pooled
+/// workspace, then split the `[B, k]` output into per-request replies.
+fn dispatch_native_batch(
+    shared: &Arc<Shared>,
+    pool: &ThreadPool,
+    key: MapKey,
+    batch: Vec<Envelope>,
+) {
     let shared = Arc::clone(shared);
     pool.submit(move || {
-        let key = native_map_key(&shared, &env.req.payload);
         let entry = shared.registry.get_or_create(&key);
+        let k = key.k;
+        let b = batch.len();
+        // Split payloads from reply metadata: `project_batch_into` takes
+        // the payload slice by reference, so no tensor is cloned.
+        let mut payloads = Vec::with_capacity(b);
+        let mut meta = Vec::with_capacity(b);
+        for env in batch {
+            payloads.push(env.req.payload);
+            meta.push((env.req.id, env.submit_us, env.reply));
+        }
+        let mut out = vec![0.0; b * k];
         let t0 = shared.now_us();
-        let embedding = entry.map.project(&env.req.payload);
+        let mut ws = shared.workspaces.acquire();
+        entry.map.project_batch_into(&payloads, &mut out, &mut ws);
+        shared.workspaces.release(ws);
         let t1 = shared.now_us();
-        shared.metrics.native_requests.fetch_add(1, Ordering::Relaxed);
-        shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
-        shared.metrics.e2e_latency.record(t1.saturating_sub(env.submit_us));
-        let resp = ProjectResponse {
-            id: env.req.id,
-            embedding,
-            path: EnginePath::Native,
-            queued_us: t0.saturating_sub(env.submit_us),
-            exec_us: t1 - t0,
-        };
-        let _ = env.reply.send(Ok(resp));
+        shared.metrics.native_batches.fetch_add(1, Ordering::Relaxed);
+        shared
+            .metrics
+            .native_requests
+            .fetch_add(b as u64, Ordering::Relaxed);
+        for (i, (id, submit_us, reply)) in meta.into_iter().enumerate() {
+            shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
+            shared.metrics.e2e_latency.record(t1.saturating_sub(submit_us));
+            let resp = ProjectResponse {
+                id,
+                embedding: out[i * k..(i + 1) * k].to_vec(),
+                path: EnginePath::Native,
+                queued_us: t0.saturating_sub(submit_us),
+                exec_us: t1 - t0,
+            };
+            let _ = reply.send(Ok(resp));
+        }
     });
 }
 
@@ -479,6 +559,48 @@ mod tests {
         assert_eq!(ids, (0..64).collect::<Vec<u64>>());
         assert_eq!(c.metrics().completed, 64);
         c.shutdown();
+    }
+
+    #[test]
+    fn native_batching_matches_item_at_a_time_execution() {
+        // The batched worker path must produce bit-identical embeddings to
+        // a native_max_batch = 1 coordinator with the same master seed.
+        let mut rng = Rng::seed_from(6);
+        let payloads: Vec<AnyTensor> = (0..24)
+            .map(|i| match i % 3 {
+                0 => AnyTensor::Dense(DenseTensor::random_unit(&[4, 4], &mut rng)),
+                1 => AnyTensor::Tt(TtTensor::random_unit(&[3; 4], 2, &mut rng)),
+                _ => AnyTensor::Cp(CpTensor::random_unit(&[3; 4], 2, &mut rng)),
+            })
+            .collect();
+        let run = |native_max_batch: usize| -> Vec<Vec<f64>> {
+            let c = Coordinator::start(
+                CoordinatorConfig {
+                    workers: 2,
+                    default_k: 16,
+                    native_max_batch,
+                    ..Default::default()
+                },
+                None,
+            );
+            let rxs: Vec<_> = payloads
+                .iter()
+                .enumerate()
+                .map(|(i, p)| c.submit(ProjectRequest::new(i as u64, p.clone())))
+                .collect();
+            let out = rxs
+                .into_iter()
+                .map(|rx| rx.recv().unwrap().unwrap().embedding)
+                .collect();
+            let m = c.metrics();
+            assert_eq!(m.native_requests, payloads.len() as u64);
+            assert!(m.native_batches >= 1);
+            c.shutdown();
+            out
+        };
+        let batched = run(8);
+        let single = run(1);
+        assert_eq!(batched, single);
     }
 
     #[test]

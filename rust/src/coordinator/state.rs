@@ -8,6 +8,7 @@
 
 use crate::projections::{
     CpProjection, GaussianProjection, Projection, SparseKind, SparseProjection, TtProjection,
+    Workspace,
 };
 use crate::rng::Rng;
 use crate::runtime::{pack, ArtifactKind, ArtifactSpec};
@@ -63,6 +64,41 @@ pub struct MapEntry {
     pub map: Arc<dyn Projection>,
     /// Packed PJRT parameters, present when an artifact matches this map.
     pub packed: Option<PackedParams>,
+}
+
+/// Pool of reusable projection [`Workspace`]s for the worker threads.
+///
+/// A worker acquires a workspace for the duration of one batch and
+/// releases it afterwards; each workspace's buffers warm up to the
+/// high-water batch size, so steady-state native batches perform no
+/// allocation inside the projection kernels. The pool never shrinks —
+/// its population is bounded by the worker count (a worker holds at most
+/// one workspace at a time).
+#[derive(Default)]
+pub struct WorkspacePool {
+    free: Mutex<Vec<Workspace>>,
+}
+
+impl WorkspacePool {
+    /// New empty pool (workspaces are created lazily on first acquire).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Take a warm workspace, or a fresh one when the pool is empty.
+    pub fn acquire(&self) -> Workspace {
+        self.free.lock().unwrap().pop().unwrap_or_default()
+    }
+
+    /// Return a workspace for reuse.
+    pub fn release(&self, ws: Workspace) {
+        self.free.lock().unwrap().push(ws);
+    }
+
+    /// Number of idle pooled workspaces.
+    pub fn idle(&self) -> usize {
+        self.free.lock().unwrap().len()
+    }
 }
 
 /// Deterministic, thread-safe projection-map registry.

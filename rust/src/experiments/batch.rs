@@ -1,0 +1,175 @@
+//! Batch-size sweep: item-at-a-time `project` vs the batch-first
+//! `project_batch_into` path, per map family on dense inputs.
+//!
+//! This is the serving-layer counterpart of Figure 2's embedding-time
+//! sweep: instead of varying `k`, it varies the flushed batch size `B`
+//! (the coordinator's `native_max_batch`) and reports per-input time for
+//! both execution routes, so the batched path's trajectory is tracked
+//! across PRs (`cargo bench --bench batch_sweep` emits
+//! `BENCH_batch_sweep.json`).
+
+use crate::projections::{
+    CpProjection, GaussianProjection, KroneckerFjlt, Projection, SparseKind, SparseProjection,
+    TrpProjection, TtProjection, Workspace,
+};
+use crate::rng::Rng;
+use crate::tensor::{AnyTensor, DenseTensor};
+use crate::util::bench::{bench, BenchConfig};
+use crate::util::csv::CsvTable;
+
+/// Configuration of the batch-size sweep.
+#[derive(Debug, Clone)]
+pub struct BatchSweepConfig {
+    /// Input mode sizes (inputs are dense, so `∏dims` must materialize).
+    pub dims: Vec<usize>,
+    /// Embedding dimension.
+    pub k: usize,
+    /// Flushed batch sizes to sweep.
+    pub batch_sizes: Vec<usize>,
+    /// Timing profile.
+    pub bench: BenchConfig,
+    /// Input/map seed.
+    pub seed: u64,
+}
+
+impl BatchSweepConfig {
+    /// Full sweep: the paper's medium-order shape, B ∈ {1, 4, 16, 64}.
+    pub fn paper() -> Self {
+        Self {
+            dims: vec![3; 8],
+            k: 64,
+            batch_sizes: vec![1, 4, 16, 64],
+            bench: BenchConfig::default(),
+            seed: 0xBA7C4,
+        }
+    }
+
+    /// Reduced sweep for smoke runs.
+    pub fn quick() -> Self {
+        Self {
+            dims: vec![3; 6],
+            k: 16,
+            batch_sizes: vec![1, 4, 16],
+            bench: BenchConfig::quick(),
+            seed: 0xBA7C4,
+        }
+    }
+}
+
+/// One (map, batch size) measurement.
+#[derive(Debug, Clone)]
+pub struct BatchRow {
+    /// Map label (`Projection::name`).
+    pub map: String,
+    /// Flushed batch size `B`.
+    pub batch: usize,
+    /// Median per-input time through a `project` loop (µs).
+    pub item_us: f64,
+    /// Median per-input time through one `project_batch_into` call (µs).
+    pub batched_us: f64,
+    /// `item_us / batched_us`.
+    pub speedup: f64,
+}
+
+/// The six maps at serving-default ranks.
+fn maps(dims: &[usize], k: usize, rng: &mut Rng) -> Vec<Box<dyn Projection>> {
+    vec![
+        Box::new(GaussianProjection::new(dims, k, rng)),
+        Box::new(SparseProjection::new(dims, k, SparseKind::VerySparse, rng)),
+        Box::new(TtProjection::new(dims, 5, k, rng)),
+        Box::new(CpProjection::new(dims, 5, k, rng)),
+        Box::new(TrpProjection::new(dims, 2, k, rng)),
+        Box::new(KroneckerFjlt::new(dims, k, rng)),
+    ]
+}
+
+/// Run the sweep; both routes see identical inputs and the same drawn map,
+/// so rows differ only in execution path.
+pub fn run(cfg: &BatchSweepConfig) -> Vec<BatchRow> {
+    let mut rng = Rng::seed_from(cfg.seed);
+    let maps = maps(&cfg.dims, cfg.k, &mut rng);
+    let max_b = cfg.batch_sizes.iter().copied().max().unwrap_or(1);
+    let inputs: Vec<AnyTensor> = (0..max_b)
+        .map(|_| AnyTensor::Dense(DenseTensor::random_unit(&cfg.dims, &mut rng)))
+        .collect();
+    let mut rows = Vec::new();
+    let mut ws = Workspace::new();
+    for map in &maps {
+        for &b in &cfg.batch_sizes {
+            let xs = &inputs[..b];
+            let r_item = bench(&format!("{}/item/B{b}", map.name()), cfg.bench, || {
+                let mut acc = 0.0;
+                for x in xs {
+                    acc += map.project(x)[0];
+                }
+                acc
+            });
+            let mut out = vec![0.0; b * map.k()];
+            let r_batch = bench(&format!("{}/batch/B{b}", map.name()), cfg.bench, || {
+                map.project_batch_into(xs, &mut out, &mut ws);
+                out[0]
+            });
+            let item_us = r_item.median_secs() * 1e6 / b as f64;
+            let batched_us = r_batch.median_secs() * 1e6 / b as f64;
+            rows.push(BatchRow {
+                map: map.name(),
+                batch: b,
+                item_us,
+                batched_us,
+                speedup: item_us / batched_us.max(1e-12),
+            });
+        }
+    }
+    rows
+}
+
+/// Render rows as the CSV written under `results/`.
+pub fn to_csv(rows: &[BatchRow]) -> CsvTable {
+    let mut t = CsvTable::new(&[
+        "map",
+        "batch",
+        "item_us_per_input",
+        "batched_us_per_input",
+        "speedup",
+    ]);
+    for r in rows {
+        t.push_row(vec![
+            r.map.clone(),
+            r.batch.to_string(),
+            format!("{:.3}", r.item_us),
+            format!("{:.3}", r.batched_us),
+            format!("{:.2}", r.speedup),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> BatchSweepConfig {
+        BatchSweepConfig {
+            dims: vec![3, 4],
+            k: 4,
+            batch_sizes: vec![1, 3],
+            bench: BenchConfig { warmup: 0, samples: 1, min_time_secs: 0.0 },
+            seed: 9,
+        }
+    }
+
+    #[test]
+    fn sweep_covers_all_maps_and_batches() {
+        let rows = run(&tiny());
+        assert_eq!(rows.len(), 6 * 2);
+        for r in &rows {
+            assert!(r.item_us > 0.0 && r.batched_us > 0.0 && r.speedup.is_finite());
+        }
+    }
+
+    #[test]
+    fn csv_has_one_row_per_measurement() {
+        let rows = run(&tiny());
+        assert_eq!(to_csv(&rows).len(), rows.len());
+    }
+}

@@ -3,7 +3,7 @@
 //! ```text
 //! trp serve       [--requests N] [--rate R] [--case medium] [--no-pjrt]
 //! trp project     --case medium --format tt [--k 64] [--map tt:5]
-//! trp experiment  fig1|fig2|fig3|fig4|ablation [--quick] [--trials T]
+//! trp experiment  fig1|fig2|fig3|fig4|ablation|batch [--quick] [--trials T]
 //! trp bounds      --eps 0.5 --n 12 --r 10 --m 100 [--delta 0.05]
 //! trp artifacts   [--artifacts DIR]          # list + verify compiled set
 //! ```
@@ -12,7 +12,7 @@ use tensorized_rp::config::AppConfig;
 use tensorized_rp::coordinator::{Coordinator, CoordinatorConfig, ProjectRequest};
 use tensorized_rp::data::inputs::{unit_input, Regime};
 use tensorized_rp::data::workload::{poisson_trace, FormatMix};
-use tensorized_rp::experiments::{ablations, fig1, fig2, fig3, fig4, MapSpec};
+use tensorized_rp::experiments::{ablations, batch, fig1, fig2, fig3, fig4, MapSpec};
 use tensorized_rp::rng::Rng;
 use tensorized_rp::runtime::PjrtEngine;
 use tensorized_rp::tensor::AnyTensor;
@@ -61,7 +61,7 @@ fn print_usage() {
          subcommands:\n\
            serve       run the compression service on a synthetic trace\n\
            project     project one random input and print the distortion\n\
-           experiment  regenerate a paper figure: fig1|fig2|fig3|fig4|ablation\n\
+           experiment  regenerate a paper figure: fig1|fig2|fig3|fig4|ablation|batch\n\
            bounds      evaluate the Theorem 2 size bounds\n\
            sketch      sketched SVD demo with a tensorized test matrix (§7)\n\
            client      send requests to a listening `trp serve --listen` instance\n\
@@ -278,6 +278,20 @@ fn cmd_experiment(args: &Args, cfg: &AppConfig) -> Result<(), String> {
             let csv = fig4::to_csv(&rows);
             print!("{}", csv.to_markdown());
             let path = cfg.results_dir.join("fig4_scaling.csv");
+            csv.write_to(&path).map_err(|e| e.to_string())?;
+            println!("[written {}]", path.display());
+        }
+        "batch" => {
+            let mut c = if cfg.quick {
+                batch::BatchSweepConfig::quick()
+            } else {
+                batch::BatchSweepConfig::paper()
+            };
+            c.seed = cfg.seed;
+            let rows = batch::run(&c);
+            let csv = batch::to_csv(&rows);
+            print!("{}", csv.to_markdown());
+            let path = cfg.results_dir.join("batch_sweep.csv");
             csv.write_to(&path).map_err(|e| e.to_string())?;
             println!("[written {}]", path.display());
         }

@@ -9,9 +9,9 @@
 //! `k` exponential in `N` — implemented here both as a first-class map and
 //! as the foil for the TT map in every experiment.
 
-use super::Projection;
+use super::{Projection, Workspace};
 use crate::rng::Rng;
-use crate::tensor::{CpTensor, DenseTensor, TtTensor};
+use crate::tensor::{AnyTensor, CpTensor, DenseTensor, TtTensor};
 
 /// CP random projection map.
 pub struct CpProjection {
@@ -20,6 +20,10 @@ pub struct CpProjection {
     k: usize,
     /// The `k` random CP rows.
     rows: Vec<CpTensor>,
+    /// Per row, per mode: the factor transposed to `[R, dₙ]` row-major so
+    /// each rank component's column is a contiguous slice — precomputed
+    /// once at construction, consumed by the dense contraction kernel.
+    rows_t: Vec<Vec<Vec<f64>>>,
     scale: f64,
 }
 
@@ -31,23 +35,36 @@ impl CpProjection {
         let rows = (0..k)
             .map(|_| CpTensor::random_projection_row(dims, rank, rng))
             .collect();
-        Self {
-            dims: dims.to_vec(),
-            rank,
-            k,
-            rows,
-            scale: 1.0 / (k as f64).sqrt(),
-        }
+        Self::from_parts(dims.to_vec(), rank, k, rows)
     }
 
     /// Assemble a map from pre-built rows (internal; used by the TRP
     /// equivalence construction via [`CpProjection::from_rows`]).
     pub(crate) fn from_parts(dims: Vec<usize>, rank: usize, k: usize, rows: Vec<CpTensor>) -> Self {
+        let rows_t = rows
+            .iter()
+            .map(|row| {
+                (0..dims.len())
+                    .map(|m| {
+                        let f = row.factor(m);
+                        let d = dims[m];
+                        let mut t = vec![0.0; row.rank() * d];
+                        for r in 0..row.rank() {
+                            for i in 0..d {
+                                t[r * d + i] = f[(i, r)];
+                            }
+                        }
+                        t
+                    })
+                    .collect()
+            })
+            .collect();
         Self {
             dims,
             rank,
             k,
             rows,
+            rows_t,
             scale: 1.0 / (k as f64).sqrt(),
         }
     }
@@ -62,27 +79,38 @@ impl CpProjection {
         &self.rows
     }
 
-    /// Inner product of one CP row with a dense tensor:
+    /// Inner products of one CP row with `bsz` dense tensors stacked
+    /// row-major in `stacked`:
     /// `⟨[[A¹,…,A^N]], X⟩ = Σ_r ⟨a¹_r ∘ … ∘ a^N_r, X⟩`, each rank-one term
-    /// contracted mode by mode (`O(D)` per component, right-to-left).
-    fn row_dense_inner(row: &CpTensor, x: &DenseTensor) -> f64 {
-        let dims = x.dims();
+    /// contracted mode by mode right-to-left with the batch folded into
+    /// the leading (prefix) dimension. `bsz = 1` is the single-item path,
+    /// so batched results are bit-identical by construction.
+    fn row_dense_stacked(
+        ft: &[Vec<f64>],
+        rank: usize,
+        dims: &[usize],
+        stacked: &[f64],
+        bsz: usize,
+        out: &mut [f64],
+        cur: &mut Vec<f64>,
+    ) {
         let n = dims.len();
-        let mut total = 0.0;
-        // Reusable buffers across rank components.
-        let mut cur: Vec<f64> = Vec::new();
-        for r in 0..row.rank() {
-            // Contract the last mode: cur[prefix] = Σ_i X[prefix, i]·a^N[i].
+        debug_assert_eq!(stacked.len() % bsz.max(1), 0);
+        for o in out[..bsz].iter_mut() {
+            *o = 0.0;
+        }
+        for r in 0..rank {
+            // Contract the last mode: cur[B·prefix] = Σ_i X[·, i]·a^N_r[i].
             let d_last = dims[n - 1];
-            let prefix = x.numel() / d_last;
+            let prefix = stacked.len() / d_last;
             cur.clear();
             cur.resize(prefix, 0.0);
-            let f_last = row.factor(n - 1);
+            let f_last = &ft[n - 1][r * d_last..(r + 1) * d_last];
             for p in 0..prefix {
                 let base = p * d_last;
                 let mut acc = 0.0;
-                for i in 0..d_last {
-                    acc += x.data()[base + i] * f_last[(i, r)];
+                for (i, &fv) in f_last.iter().enumerate() {
+                    acc += stacked[base + i] * fv;
                 }
                 cur[p] = acc;
             }
@@ -90,19 +118,20 @@ impl CpProjection {
             for m in (0..n - 1).rev() {
                 let d = dims[m];
                 let pref = cur.len() / d;
-                let f = row.factor(m);
+                let f = &ft[m][r * d..(r + 1) * d];
                 for p in 0..pref {
                     let mut acc = 0.0;
-                    for i in 0..d {
-                        acc += cur[p * d + i] * f[(i, r)];
+                    for (i, &fv) in f.iter().enumerate() {
+                        acc += cur[p * d + i] * fv;
                     }
                     cur[p] = acc;
                 }
                 cur.truncate(pref);
             }
-            total += cur[0];
+            for (o, &v) in out[..bsz].iter_mut().zip(cur.iter()) {
+                *o += v;
+            }
         }
-        total
     }
 }
 
@@ -125,10 +154,44 @@ impl Projection for CpProjection {
 
     fn project_dense(&self, x: &DenseTensor) -> Vec<f64> {
         assert_eq!(x.dims(), self.input_dims(), "input shape mismatch");
-        self.rows
+        let mut cur = Vec::new();
+        let mut one = [0.0];
+        self.rows_t
             .iter()
-            .map(|row| Self::row_dense_inner(row, x) * self.scale)
+            .map(|ft| {
+                Self::row_dense_stacked(ft, self.rank, &self.dims, x.data(), 1, &mut one, &mut cur);
+                one[0] * self.scale
+            })
             .collect()
+    }
+
+    fn project_batch_into(&self, xs: &[AnyTensor], out: &mut [f64], ws: &mut Workspace) {
+        let k = self.k;
+        assert_eq!(out.len(), xs.len() * k, "batch output buffer size");
+        if xs.is_empty() {
+            return;
+        }
+        if !super::stack_dense_batch(xs, &self.dims, &mut ws.stack) {
+            super::fallback_batch_into(self, xs, out);
+            return;
+        }
+        let b = xs.len();
+        ws.tmp.clear();
+        ws.tmp.resize(b, 0.0);
+        for (i, ft) in self.rows_t.iter().enumerate() {
+            Self::row_dense_stacked(
+                ft,
+                self.rank,
+                &self.dims,
+                &ws.stack,
+                b,
+                &mut ws.tmp,
+                &mut ws.chain_a,
+            );
+            for (bi, &v) in ws.tmp.iter().enumerate() {
+                out[bi * k + i] = v * self.scale;
+            }
+        }
     }
 
     fn project_tt(&self, x: &TtTensor) -> Vec<f64> {

@@ -11,9 +11,9 @@
 //! low-rank TT tensors have exponentially large CP rank and therefore no
 //! efficient path through this transform.
 
-use super::Projection;
+use super::{Projection, Workspace};
 use crate::rng::Rng;
-use crate::tensor::{CpTensor, DenseTensor};
+use crate::tensor::{AnyTensor, CpTensor, DenseTensor};
 
 /// Kronecker-structured fast JL transform.
 pub struct KroneckerFjlt {
@@ -87,6 +87,58 @@ impl KroneckerFjlt {
         Self::fwht(&mut buf);
         buf
     }
+
+    /// Linear index into the padded tensor (row-major, last mode fastest).
+    fn padded_linear(&self, idx: &[usize]) -> usize {
+        let mut lin = 0usize;
+        for (m, &i) in idx.iter().enumerate() {
+            lin = lin * self.padded[m] + i;
+        }
+        lin
+    }
+
+    /// Dense projection kernel shared by the single-item and batched
+    /// paths: sign-flip + zero-pad into `pad`, FWHT every mode fiber
+    /// (scratch in `fiber`), then read the sampled coordinates into
+    /// `out[..k]`. All buffers are caller-held, so the batched path reuses
+    /// them across items instead of materializing a padded tensor per
+    /// call.
+    fn dense_project_into(
+        &self,
+        x: &DenseTensor,
+        out: &mut [f64],
+        pad: &mut Vec<f64>,
+        fiber: &mut Vec<f64>,
+    ) {
+        let n = self.dims.len();
+        let padded_numel: usize = self.padded.iter().product();
+        pad.clear();
+        pad.resize(padded_numel, 0.0);
+        for idx in crate::tensor::Shape::new(&self.dims).iter_indices() {
+            pad[self.padded_linear(&idx)] = x.get(&idx) * sign_product(&self.signs, &idx);
+        }
+        for mode in 0..n {
+            let d = self.padded[mode];
+            let inner: usize = self.padded[mode + 1..].iter().product();
+            let outer: usize = self.padded[..mode].iter().product();
+            fiber.clear();
+            fiber.resize(d, 0.0);
+            for o in 0..outer {
+                for inn in 0..inner {
+                    for i in 0..d {
+                        fiber[i] = pad[(o * d + i) * inner + inn];
+                    }
+                    Self::fwht(fiber);
+                    for i in 0..d {
+                        pad[(o * d + i) * inner + inn] = fiber[i];
+                    }
+                }
+            }
+        }
+        for (o, s) in out.iter_mut().zip(&self.samples) {
+            *o = pad[self.padded_linear(s)] * self.scale;
+        }
+    }
 }
 
 impl Projection for KroneckerFjlt {
@@ -109,40 +161,26 @@ impl Projection for KroneckerFjlt {
 
     fn project_dense(&self, x: &DenseTensor) -> Vec<f64> {
         assert_eq!(x.dims(), self.input_dims(), "input shape mismatch");
-        let n = self.dims.len();
-        // Materialize the padded tensor, then apply sign+FWHT mode by mode.
-        // Mode-wise application: for each mode, transform all fibers.
-        let mut data = {
-            // Zero-pad into the padded shape.
-            let mut padded = DenseTensor::zeros(&self.padded);
-            for idx in crate::tensor::Shape::new(&self.dims).iter_indices() {
-                padded.set(&idx, x.get(&idx) * sign_product(&self.signs, &idx));
-            }
-            padded
-        };
-        for mode in 0..n {
-            let dims = data.dims().to_vec();
-            let d = dims[mode];
-            let inner: usize = dims[mode + 1..].iter().product();
-            let outer: usize = dims[..mode].iter().product();
-            let buf = data.data_mut();
-            let mut fiber = vec![0.0; d];
-            for o in 0..outer {
-                for inn in 0..inner {
-                    for i in 0..d {
-                        fiber[i] = buf[(o * d + i) * inner + inn];
-                    }
-                    Self::fwht(&mut fiber);
-                    for i in 0..d {
-                        buf[(o * d + i) * inner + inn] = fiber[i];
-                    }
-                }
-            }
+        let mut out = vec![0.0; self.k];
+        let (mut pad, mut fiber) = (Vec::new(), Vec::new());
+        self.dense_project_into(x, &mut out, &mut pad, &mut fiber);
+        out
+    }
+
+    fn project_batch_into(&self, xs: &[AnyTensor], out: &mut [f64], ws: &mut Workspace) {
+        let k = self.k;
+        assert_eq!(out.len(), xs.len() * k, "batch output buffer size");
+        if !super::dense_batch_uniform(xs, &self.dims) {
+            super::fallback_batch_into(self, xs, out);
+            return;
         }
-        self.samples
-            .iter()
-            .map(|s| data.get(s) * self.scale)
-            .collect()
+        // The FWHT has no cross-item contraction to fold, so the batched
+        // win is buffer reuse: one padded scratch + one fiber scratch
+        // serve the whole batch instead of a fresh padded tensor per item.
+        for (x, dst) in xs.iter().zip(out.chunks_exact_mut(k)) {
+            let AnyTensor::Dense(t) = x else { unreachable!() };
+            self.dense_project_into(t, dst, &mut ws.chain_a, &mut ws.chain_b);
+        }
     }
 
     fn project_cp(&self, x: &CpTensor) -> Vec<f64> {

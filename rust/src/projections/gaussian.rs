@@ -4,17 +4,20 @@
 //! Storage `O(kD)` and projection cost `O(kD)` — the baseline the
 //! tensorized maps beat on memory and, for compressed inputs, on time.
 
-use super::Projection;
-use crate::linalg::matvec;
+use super::{Projection, Workspace};
+use crate::linalg::matmul_into;
 use crate::rng::Rng;
-use crate::tensor::DenseTensor;
+use crate::tensor::{AnyTensor, DenseTensor};
 
 /// Dense Gaussian JL transform.
 pub struct GaussianProjection {
     dims: Vec<usize>,
     k: usize,
-    /// `k × D` row-major.
-    matrix: Vec<f64>,
+    /// `A` stored transposed, `D × k` row-major — the layout both the
+    /// single and the batched GEMM kernels consume directly
+    /// (`Y = X_stack · Aᵀ`), fixed once at construction so no execution
+    /// path transposes anything.
+    matrix_t: Vec<f64>,
     scale: f64,
 }
 
@@ -32,11 +35,20 @@ impl GaussianProjection {
             "dense Gaussian RP with {entries} entries is not materializable; \
              use TtProjection / CpProjection"
         );
+        // Draw in the conventional k × D row order (keeps the map drawn
+        // from a given seed identical to earlier revisions), then store
+        // transposed.
         let matrix = rng.gaussian_vec(entries, 1.0);
+        let mut matrix_t = vec![0.0; entries];
+        for i in 0..k {
+            for p in 0..d {
+                matrix_t[p * k + i] = matrix[i * d + p];
+            }
+        }
         Self {
             dims: dims.to_vec(),
             k,
-            matrix,
+            matrix_t,
             scale: 1.0 / (k as f64).sqrt(),
         }
     }
@@ -46,10 +58,18 @@ impl GaussianProjection {
         self.dims.iter().product()
     }
 
-    /// Raw projection matrix (row-major `k × D`), used by the AOT runtime
-    /// to feed identical parameters to the compiled artifact.
-    pub fn matrix(&self) -> &[f64] {
-        &self.matrix
+    /// Projection matrix materialized row-major `k × D` (the layout the
+    /// AOT artifacts compile against); cold path — used once per artifact
+    /// registration by `runtime::pack`.
+    pub fn matrix(&self) -> Vec<f64> {
+        let d = self.input_dim();
+        let mut m = vec![0.0; self.matrix_t.len()];
+        for p in 0..d {
+            for i in 0..self.k {
+                m[i * d + p] = self.matrix_t[p * self.k + i];
+            }
+        }
+        m
     }
 }
 
@@ -67,17 +87,41 @@ impl Projection for GaussianProjection {
     }
 
     fn num_params(&self) -> usize {
-        self.matrix.len()
+        self.matrix_t.len()
     }
 
     fn project_dense(&self, x: &DenseTensor) -> Vec<f64> {
         assert_eq!(x.dims(), self.input_dims(), "input shape mismatch");
+        // Single item = batch of one through the same GEMM kernel.
         let d = self.input_dim();
-        let mut y = matvec(&self.matrix, x.data(), self.k, d);
+        let mut y = vec![0.0; self.k];
+        matmul_into(x.data(), &self.matrix_t, &mut y, 1, d, self.k);
         for v in &mut y {
             *v *= self.scale;
         }
         y
+    }
+
+    fn project_batch_into(&self, xs: &[AnyTensor], out: &mut [f64], ws: &mut Workspace) {
+        let k = self.k;
+        assert_eq!(out.len(), xs.len() * k, "batch output buffer size");
+        if xs.is_empty() {
+            return;
+        }
+        if !super::stack_dense_batch(xs, &self.dims, &mut ws.stack) {
+            super::fallback_batch_into(self, xs, out);
+            return;
+        }
+        // One blocked GEMM over the stacked batch, Y = X_stack · Aᵀ,
+        // writing the [B, k] result directly into `out`. Each output row
+        // depends only on its own input row with p-ascending accumulation
+        // — identical to the single-item kernel, so bit-identical.
+        let b = xs.len();
+        let d = self.input_dim();
+        matmul_into(&ws.stack, &self.matrix_t, out, b, d, k);
+        for v in out.iter_mut() {
+            *v *= self.scale;
+        }
     }
 }
 

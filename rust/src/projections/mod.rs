@@ -1,18 +1,24 @@
 //! Random projection maps — the paper's core contribution plus every
 //! baseline its evaluation compares against.
 //!
-//! | Map | Paper reference | Structure on rows of `A` |
-//! |---|---|---|
-//! | [`GaussianProjection`] | §2.3 | none (dense i.i.d. Gaussian) |
-//! | [`SparseProjection`] | Achlioptas 2003 / Li et al. 2006 | `s`-sparse ±√s |
-//! | [`TtProjection`] | **Definition 1** | rank-`R` tensor train |
-//! | [`CpProjection`] | **Definition 2** | rank-`R` CP |
-//! | [`TrpProjection`] | Sun et al. 2018 (§3 equivalence) | Khatri-Rao rank-1 average |
-//! | [`KroneckerFjlt`] | Jin et al. 2019 (§4.1 comparison) | per-mode SRHT |
+//! | Map | Paper reference | Structure on rows of `A` | Batched dense kernel (`B` inputs) |
+//! |---|---|---|---|
+//! | [`GaussianProjection`] | §2.3 | none (dense i.i.d. Gaussian) | one `k×D×B` GEMM, `O(kDB)` |
+//! | [`SparseProjection`] | Achlioptas 2003 / Li et al. 2006 | `s`-sparse ±√s | shared nonzero sweep, `O(k(D/s)B)` |
+//! | [`TtProjection`] | **Definition 1** | rank-`R` tensor train | batch-folded GEMM chain, `O(kDRB)` |
+//! | [`CpProjection`] | **Definition 2** | rank-`R` CP | batch-folded contraction, `O(kDRB)` |
+//! | [`TrpProjection`] | Sun et al. 2018 (§3 equivalence) | Khatri-Rao rank-1 average | batch-folded GEMM chain, `O(TDkB)` |
+//! | [`KroneckerFjlt`] | Jin et al. 2019 (§4.1 comparison) | per-mode SRHT | workspace-reused FWHT, `O(BD log d)` |
 //!
-//! All maps implement the [`Projection`] trait, which exposes both a
-//! format-dispatching [`Projection::project`] and per-format fast paths
-//! with exactly the complexities the paper states in §3.
+//! All maps implement the [`Projection`] trait, which exposes a
+//! format-dispatching [`Projection::project`], per-format fast paths with
+//! exactly the complexities the paper states in §3, and a batch-first
+//! execution path, [`Projection::project_batch_into`]: the coordinator,
+//! the sketch pipeline and the benches all drive whole batches through one
+//! call with reusable [`Workspace`] scratch, so the per-call transposes
+//! and temporaries of the item-at-a-time path disappear from serving hot
+//! loops. Every map's cores/factors are pre-transposed **once at map
+//! construction** into the layouts its contraction kernels consume.
 
 mod cp;
 mod fjlt;
@@ -32,6 +38,80 @@ pub use trp::TrpProjection;
 pub use tt::TtProjection;
 
 use crate::tensor::{AnyTensor, CpTensor, DenseTensor, TtTensor};
+
+/// Reusable scratch buffers for the batched projection path.
+///
+/// **Contract:** a `Workspace` is plain scratch — no call reads state left
+/// by a previous call, every kernel fully overwrites what it uses, and any
+/// map may be driven with any workspace. Keep one per executing thread
+/// (they are cheap when idle): buffers grow to the high-water mark of the
+/// batches they serve and are reused, so steady-state batched projection
+/// performs no allocation. The coordinator pools them
+/// (`coordinator::WorkspacePool`); standalone callers just hold one.
+#[derive(Debug, Default)]
+pub struct Workspace {
+    /// Stacked row-major batch buffer (`B × numel`).
+    pub(crate) stack: Vec<f64>,
+    /// Contraction-chain ping-pong buffer A.
+    pub(crate) chain_a: Vec<f64>,
+    /// Contraction-chain ping-pong buffer B.
+    pub(crate) chain_b: Vec<f64>,
+    /// Per-row batched results (`B`).
+    pub(crate) tmp: Vec<f64>,
+}
+
+impl Workspace {
+    /// New empty workspace (buffers grow on first use).
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Per-item fallback for `project_batch_into`: dispatch each input
+/// through [`Projection::project`]. One implementation shared by the
+/// trait default and every override's non-uniform-batch branch.
+pub(crate) fn fallback_batch_into<P: Projection + ?Sized>(
+    map: &P,
+    xs: &[AnyTensor],
+    out: &mut [f64],
+) {
+    let k = map.k();
+    for (x, dst) in xs.iter().zip(out.chunks_exact_mut(k)) {
+        dst.copy_from_slice(&map.project(x));
+    }
+}
+
+/// Batched-kernel eligibility: every item dense with exactly the map's
+/// dims. The single source of truth for the fast-path/fallback split —
+/// shared by the stacking maps (via [`stack_dense_batch`]) and the
+/// non-stacking ones (sparse, FJLT).
+pub(crate) fn dense_batch_uniform(xs: &[AnyTensor], dims: &[usize]) -> bool {
+    xs.iter()
+        .all(|x| matches!(x, AnyTensor::Dense(t) if t.dims() == dims))
+}
+
+/// Stack a batch of dense tensors of shape `dims` row-major into `stack`
+/// (`B × ∏dims`). Returns `false` — leaving `stack` unspecified — when any
+/// item is non-dense or has mismatched dims, in which case callers fall
+/// back to per-item dispatch.
+pub(crate) fn stack_dense_batch(
+    xs: &[AnyTensor],
+    dims: &[usize],
+    stack: &mut Vec<f64>,
+) -> bool {
+    if !dense_batch_uniform(xs, dims) {
+        return false;
+    }
+    stack.clear();
+    let numel: usize = dims.iter().product();
+    stack.reserve(xs.len() * numel);
+    for x in xs {
+        if let AnyTensor::Dense(t) = x {
+            stack.extend_from_slice(t.data());
+        }
+    }
+    true
+}
 
 /// A linear map `R^{d₁×…×d_N} → R^k` that (approximately) preserves
 /// Euclidean geometry — a Johnson-Lindenstrauss transform.
@@ -71,6 +151,32 @@ pub trait Projection: Send + Sync {
             AnyTensor::Tt(t) => self.project_tt(t),
             AnyTensor::Cp(t) => self.project_cp(t),
         }
+    }
+
+    /// Project a whole batch into a caller-provided buffer laid out
+    /// row-major as `[xs.len(), k]`, reusing `ws` for every intermediate.
+    ///
+    /// Contract: `out.len() == xs.len() * k()`, and on return
+    /// `out[b·k..(b+1)·k]` is **bit-identical** to `project(&xs[b])` — the
+    /// batched kernels only fold the batch into the leading dimension of
+    /// row-independent GEMMs, never reassociate per-item arithmetic
+    /// (property-tested in `rust/tests/projection_batch_props.rs`).
+    ///
+    /// The default dispatches per item (correct for any map); the six
+    /// structured maps override it with stacked kernels that amortize
+    /// parameter traffic and eliminate per-call allocation.
+    fn project_batch_into(&self, xs: &[AnyTensor], out: &mut [f64], ws: &mut Workspace) {
+        assert_eq!(out.len(), xs.len() * self.k(), "batch output buffer size");
+        let _ = ws;
+        fallback_batch_into(self, xs, out);
+    }
+
+    /// Allocating convenience wrapper around
+    /// [`Projection::project_batch_into`].
+    fn project_batch(&self, xs: &[AnyTensor], ws: &mut Workspace) -> Vec<f64> {
+        let mut out = vec![0.0; xs.len() * self.k()];
+        self.project_batch_into(xs, &mut out, ws);
+        out
     }
 }
 

@@ -12,10 +12,10 @@
 //! i.i.d. standard normal, `⊙` the column-wise Khatri-Rao product;
 //! `f_TRP(T)` averages `T` independent such maps scaled by `1/√T`.
 
-use super::{CpProjection, Projection};
-use crate::linalg::Matrix;
+use super::{CpProjection, Projection, Workspace};
+use crate::linalg::{matmul_into, Matrix};
 use crate::rng::{GaussianSource, Rng};
-use crate::tensor::{CpTensor, DenseTensor};
+use crate::tensor::{AnyTensor, CpTensor, DenseTensor};
 
 /// Khatri-Rao tensor random projection (variance-reduced with `T` terms).
 pub struct TrpProjection {
@@ -83,6 +83,66 @@ impl TrpProjection {
             .collect();
         CpProjection::from_rows(self.dims.clone(), self.t, self.k, rows)
     }
+
+    /// Dense contraction kernel shared by the single-item and batched
+    /// paths: project `bsz` tensors stacked row-major in `stacked`,
+    /// writing `[bsz, k]` into `out`. For each independent TRP the modes
+    /// contract right-to-left with the batch folded into the leading GEMM
+    /// dimension; `bsz = 1` is exactly [`Projection::project_dense`], so
+    /// batched results are bit-identical by construction.
+    fn dense_stacked(
+        &self,
+        stacked: &[f64],
+        bsz: usize,
+        out: &mut [f64],
+        cur: &mut Vec<f64>,
+        next: &mut Vec<f64>,
+    ) {
+        let n = self.dims.len();
+        let kk = self.k;
+        for o in out[..bsz * kk].iter_mut() {
+            *o = 0.0;
+        }
+        for t in 0..self.t {
+            // First contraction handles the last mode with a plain GEMM:
+            // cur[B·prefix, k] = X_mat[B·prefix, d_N] · A^N.
+            let d_last = self.dims[n - 1];
+            let prefix = stacked.len() / d_last;
+            let a_last = &self.factors[t][n - 1];
+            cur.clear();
+            cur.resize(prefix * kk, 0.0);
+            matmul_into(stacked, a_last.data(), cur, prefix, d_last, kk);
+            let mut rows = prefix;
+            // Remaining modes: column-matched contraction
+            // cur[p, i_col] = Σ_i cur[(p·d + i), i_col] · Aⁿ[i, i_col].
+            for mode in (0..n - 1).rev() {
+                let d = self.dims[mode];
+                let pref = rows / d;
+                let a = &self.factors[t][mode];
+                next.clear();
+                next.resize(pref * kk, 0.0);
+                for p in 0..pref {
+                    let dst = &mut next[p * kk..(p + 1) * kk];
+                    for i in 0..d {
+                        let src = &cur[(p * d + i) * kk..(p * d + i + 1) * kk];
+                        let arow = a.row(i);
+                        for c in 0..kk {
+                            dst[c] += src[c] * arow[c];
+                        }
+                    }
+                }
+                std::mem::swap(cur, next);
+                rows = pref;
+            }
+            debug_assert_eq!(rows, bsz);
+            for (acc, &v) in out[..bsz * kk].iter_mut().zip(cur.iter()) {
+                *acc += v;
+            }
+        }
+        for v in out[..bsz * kk].iter_mut() {
+            *v *= self.scale;
+        }
+    }
 }
 
 impl CpProjection {
@@ -121,45 +181,25 @@ impl Projection for TrpProjection {
 
     fn project_dense(&self, x: &DenseTensor) -> Vec<f64> {
         assert_eq!(x.dims(), self.input_dims(), "input shape mismatch");
-        let n = self.dims.len();
         let mut y = vec![0.0; self.k];
-        // For each independent TRP: contract modes right-to-left, keeping a
-        // per-column partial result (cur is [prefix × k] row-major).
-        for t in 0..self.t {
-            // First contraction handles the last mode with a plain GEMM:
-            // cur[prefix, k] = X_mat[prefix, d_N] · A^N.
-            let d_last = self.dims[n - 1];
-            let prefix = x.numel() / d_last;
-            let a_last = &self.factors[t][n - 1];
-            let mut cur = crate::linalg::matmul(x.data(), a_last.data(), prefix, d_last, self.k);
-            // Remaining modes: column-matched contraction
-            // cur[p, i_col] = Σ_i cur[(p·d + i), i_col] · Aⁿ[i, i_col].
-            for mode in (0..n - 1).rev() {
-                let d = self.dims[mode];
-                let pref = cur.len() / (d * self.k);
-                let a = &self.factors[t][mode];
-                let mut next = vec![0.0; pref * self.k];
-                for p in 0..pref {
-                    let dst = &mut next[p * self.k..(p + 1) * self.k];
-                    for i in 0..d {
-                        let src = &cur[(p * d + i) * self.k..(p * d + i + 1) * self.k];
-                        let arow = a.row(i);
-                        for c in 0..self.k {
-                            dst[c] += src[c] * arow[c];
-                        }
-                    }
-                }
-                cur = next;
-            }
-            debug_assert_eq!(cur.len(), self.k);
-            for (acc, v) in y.iter_mut().zip(&cur) {
-                *acc += v;
-            }
-        }
-        for v in &mut y {
-            *v *= self.scale;
-        }
+        let (mut cur, mut next) = (Vec::new(), Vec::new());
+        self.dense_stacked(x.data(), 1, &mut y, &mut cur, &mut next);
         y
+    }
+
+    fn project_batch_into(&self, xs: &[AnyTensor], out: &mut [f64], ws: &mut Workspace) {
+        let k = self.k;
+        assert_eq!(out.len(), xs.len() * k, "batch output buffer size");
+        if xs.is_empty() {
+            return;
+        }
+        if !super::stack_dense_batch(xs, &self.dims, &mut ws.stack) {
+            super::fallback_batch_into(self, xs, out);
+            return;
+        }
+        // `dense_stacked` already emits the required [B, k] layout.
+        let b = xs.len();
+        self.dense_stacked(&ws.stack, b, out, &mut ws.chain_a, &mut ws.chain_b);
     }
 }
 

@@ -5,10 +5,9 @@
 //! cores (`Var = 1/√R` boundary, `1/R` interior). Storage `O(kNdR²)`;
 //! projection cost `O(kNd·max(R,R̃)³)` for rank-`R̃` TT or CP inputs.
 
-use super::Projection;
-use crate::linalg::matmul;
+use super::{Projection, Workspace};
 use crate::rng::Rng;
-use crate::tensor::{CpTensor, DenseTensor, TtTensor};
+use crate::tensor::{CpTensor, DenseTensor, TtDenseContraction, TtTensor};
 
 /// Tensor-train random projection map.
 pub struct TtProjection {
@@ -17,6 +16,10 @@ pub struct TtProjection {
     k: usize,
     /// The `k` random TT rows.
     rows: Vec<TtTensor>,
+    /// Per-row dense-contraction contexts: every row's cores transposed
+    /// once at construction into the GEMM layout, so the dense projection
+    /// hot loop (single *and* batched) performs no per-call transpose.
+    row_ctxs: Vec<TtDenseContraction>,
     scale: f64,
 }
 
@@ -28,23 +31,19 @@ impl TtProjection {
         let rows = (0..k)
             .map(|_| TtTensor::random_projection_row(dims, rank, rng))
             .collect();
-        Self {
-            dims: dims.to_vec(),
-            rank,
-            k,
-            rows,
-            scale: 1.0 / (k as f64).sqrt(),
-        }
+        Self::from_parts(dims.to_vec(), rank, k, rows)
     }
 
     /// Assemble a map from pre-built rows (deserialization path; see
     /// [`TtProjection::from_rows`]).
     pub(crate) fn from_parts(dims: Vec<usize>, rank: usize, k: usize, rows: Vec<TtTensor>) -> Self {
+        let row_ctxs = rows.iter().map(TtDenseContraction::new).collect();
         Self {
             dims,
             rank,
             k,
             rows,
+            row_ctxs,
             scale: 1.0 / (k as f64).sqrt(),
         }
     }
@@ -80,48 +79,6 @@ impl TtProjection {
         parts.into_iter().flatten().collect()
     }
 
-    /// Inner product of one TT row with a dense tensor by right-to-left
-    /// core absorption: `O(D·R)` per mode pass, `O(D·R²)` total.
-    fn row_dense_inner(row: &TtTensor, x: &DenseTensor) -> f64 {
-        let dims = x.dims();
-        let n = dims.len();
-        // cur: row-major [prefix, r] where prefix = d₁…d_m after absorbing
-        // modes m+1..N. Start by absorbing the last core.
-        let d_last = dims[n - 1];
-        let r_last = row.ranks()[n - 1];
-        // core^N is [r_{N-1}, d_N, 1] → matrix [r_{N-1}, d_N]; we need
-        // cur[prefix, r_{N-1}] = X_mat[prefix, d_N] · core^Nᵀ.
-        let prefix = x.numel() / d_last;
-        let core_t = transpose(row.core(n - 1), r_last, d_last);
-        let mut cur = matmul(x.data(), &core_t, prefix, d_last, r_last);
-        let mut r = r_last;
-        for m in (0..n - 1).rev() {
-            let d = dims[m];
-            let rl = row.ranks()[m];
-            let rr = row.ranks()[m + 1];
-            debug_assert_eq!(rr, r);
-            // cur is [pref·d, r]; view as [pref, d·r] (row-major contiguity)
-            // and multiply by core^mᵀ where core^m is [rl, d·rr].
-            let pref = cur.len() / (d * r);
-            let core_t = transpose(row.core(m), rl, d * rr);
-            cur = matmul(&cur, &core_t, pref, d * r, rl);
-            r = rl;
-        }
-        debug_assert_eq!(cur.len(), 1);
-        cur[0]
-    }
-}
-
-/// Transpose a row-major `rows × cols` buffer.
-fn transpose(a: &[f64], rows: usize, cols: usize) -> Vec<f64> {
-    debug_assert_eq!(a.len(), rows * cols);
-    let mut t = vec![0.0; a.len()];
-    for i in 0..rows {
-        for j in 0..cols {
-            t[j * rows + i] = a[i * cols + j];
-        }
-    }
-    t
 }
 
 impl Projection for TtProjection {
@@ -143,10 +100,44 @@ impl Projection for TtProjection {
 
     fn project_dense(&self, x: &DenseTensor) -> Vec<f64> {
         assert_eq!(x.dims(), self.input_dims(), "input shape mismatch");
-        self.rows
+        // Single item = batch of one through the same pre-transposed
+        // contraction contexts (see `row_ctxs`).
+        let (mut cur, mut next) = (Vec::new(), Vec::new());
+        let mut one = [0.0];
+        self.row_ctxs
             .iter()
-            .map(|row| Self::row_dense_inner(row, x) * self.scale)
+            .map(|ctx| {
+                ctx.inner_stacked_into(x.data(), 1, &mut one, &mut cur, &mut next);
+                one[0] * self.scale
+            })
             .collect()
+    }
+
+    fn project_batch_into(&self, xs: &[crate::tensor::AnyTensor], out: &mut [f64], ws: &mut Workspace) {
+        let k = self.k;
+        assert_eq!(out.len(), xs.len() * k, "batch output buffer size");
+        if xs.is_empty() {
+            return;
+        }
+        if !super::stack_dense_batch(xs, &self.dims, &mut ws.stack) {
+            // Compressed/mixed formats: per-item dispatch (bit-identical
+            // by definition; the TT/CP fast paths already amortize the
+            // per-input contraction context across the k rows).
+            super::fallback_batch_into(self, xs, out);
+            return;
+        }
+        // Dense batch: fold all B inputs into the leading GEMM dimension
+        // of each row's absorption chain — one chain of B×-taller GEMMs
+        // per row instead of B separate chains.
+        let b = xs.len();
+        ws.tmp.clear();
+        ws.tmp.resize(b, 0.0);
+        for (i, ctx) in self.row_ctxs.iter().enumerate() {
+            ctx.inner_stacked_into(&ws.stack, b, &mut ws.tmp, &mut ws.chain_a, &mut ws.chain_b);
+            for (bi, &v) in ws.tmp.iter().enumerate() {
+                out[bi * k + i] = v * self.scale;
+            }
+        }
     }
 
     fn project_tt(&self, x: &TtTensor) -> Vec<f64> {

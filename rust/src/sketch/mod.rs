@@ -15,7 +15,7 @@
 
 use crate::linalg::{qr, svd, Matrix, Svd};
 use crate::rng::Rng;
-use crate::tensor::{DenseTensor, TtTensor};
+use crate::tensor::{DenseTensor, TtDenseContraction, TtTensor};
 
 /// Configuration of a tensorized randomized SVD.
 #[derive(Debug, Clone, Copy)]
@@ -59,16 +59,20 @@ pub fn sketched_svd(a: &Matrix, col_dims: &[usize], cfg: SketchConfig) -> Sketch
         .collect();
     let omega_params: usize = omegas.iter().map(|t| t.num_params()).sum();
 
-    // Y = A·Ω  (multiply each row of A, viewed as a col_dims tensor, with
-    // each TT test vector — O(rows·s·cols·R) via the TT-dense contraction).
+    // Y = A·Ω as one batched contraction per test vector: the row-major
+    // buffer of `a` *is* the stacked batch of its rows viewed as col_dims
+    // tensors, so each ω contracts against all rows through a single
+    // batch-folded GEMM chain (cores transposed once per ω) instead of
+    // rows × s scalar inner products — O(rows·s·cols·R) with GEMM-shaped
+    // inner loops and no per-row allocation.
     let mut y = Matrix::zeros(a.rows(), s);
-    for i in 0..a.rows() {
-        let row_tensor = DenseTensor::from_vec(col_dims, a.row(i).to_vec());
-        let ctx_free_row = row_tensor; // clarity
-        for (j, om) in omegas.iter().enumerate() {
-            // ⟨row, ω⟩ via densified ω would cost O(d^N); use the TT-dense
-            // contraction instead.
-            y[(i, j)] = tt_dense_inner(om, &ctx_free_row);
+    let mut col = vec![0.0; a.rows()];
+    let (mut cur, mut next) = (Vec::new(), Vec::new());
+    for (j, om) in omegas.iter().enumerate() {
+        let ctx = TtDenseContraction::new(om);
+        ctx.inner_stacked_into(a.data(), a.rows(), &mut col, &mut cur, &mut next);
+        for (i, &v) in col.iter().enumerate() {
+            y[(i, j)] = v;
         }
     }
 
@@ -83,40 +87,15 @@ pub fn sketched_svd(a: &Matrix, col_dims: &[usize], cfg: SketchConfig) -> Sketch
     }
 }
 
-/// Inner product of a TT tensor with a dense tensor by right-to-left core
-/// absorption (shared with `projections::tt`, specialized here for reuse).
+/// Inner product of a TT tensor with a dense tensor.
+///
+/// Thin convenience wrapper over the single shared absorption
+/// implementation, [`TtDenseContraction`] in `tensor::` (previously this
+/// module and `projections::tt` carried duplicated copies of the chain).
+/// Repeated contractions against the same TT tensor should construct the
+/// context once instead.
 pub fn tt_dense_inner(tt: &TtTensor, x: &DenseTensor) -> f64 {
-    let dims = x.dims();
-    let n = dims.len();
-    let d_last = dims[n - 1];
-    let r_last = tt.ranks()[n - 1];
-    let prefix = x.numel() / d_last;
-    // core^N as matrix [r_{N-1}, d_N]; cur = X_mat · core^Nᵀ.
-    let mut core_t = vec![0.0; d_last * r_last];
-    for a in 0..r_last {
-        for i in 0..d_last {
-            core_t[i * r_last + a] = tt.core(n - 1)[a * d_last + i];
-        }
-    }
-    let mut cur = crate::linalg::matmul(x.data(), &core_t, prefix, d_last, r_last);
-    let mut r = r_last;
-    for m in (0..n - 1).rev() {
-        let d = dims[m];
-        let rl = tt.ranks()[m];
-        let rr = tt.ranks()[m + 1];
-        debug_assert_eq!(rr, r);
-        let pref = cur.len() / (d * r);
-        let mut ct = vec![0.0; d * rr * rl];
-        for a in 0..rl {
-            for x_ in 0..d * rr {
-                ct[x_ * rl + a] = tt.core(m)[a * d * rr + x_];
-            }
-        }
-        cur = crate::linalg::matmul(&cur, &ct, pref, d * r, rl);
-        r = rl;
-    }
-    debug_assert_eq!(cur.len(), 1);
-    cur[0]
+    TtDenseContraction::new(tt).inner(x)
 }
 
 /// Sketched PCA: top-`rank` principal directions of row-observations `a`

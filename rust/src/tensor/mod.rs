@@ -17,7 +17,7 @@ mod tucker;
 pub use cp::CpTensor;
 pub use dense::DenseTensor;
 pub use shape::Shape;
-pub use tt::{TtContraction, TtEntryEvaluator, TtTensor};
+pub use tt::{TtContraction, TtDenseContraction, TtEntryEvaluator, TtTensor};
 pub use tucker::TuckerTensor;
 
 /// How an input tensor is physically represented.

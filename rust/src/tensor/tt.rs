@@ -594,6 +594,110 @@ impl TtContraction {
     }
 }
 
+/// Precomputed right-to-left absorption context for inner products of
+/// *one* fixed TT tensor against many **dense** tensors — the shared
+/// implementation behind `f_TT(R)`'s dense-input projection and the
+/// sketch module's `Y = A·Ω` contraction (previously two duplicated
+/// copies of the same chain).
+///
+/// Running each absorption step as a plain GEMM requires the core
+/// `Gⁿ ∈ [rₙ, dₙ·rₙ₊₁]` transposed to `[(dₙ·rₙ₊₁), rₙ]`; that permutation
+/// depends only on the TT tensor, so it is computed **once** here instead
+/// of once per inner product per mode. [`TtDenseContraction::inner_stacked_into`]
+/// additionally folds a whole batch of dense inputs into the leading GEMM
+/// dimension: `B` separate chains become one chain of `B×`-taller GEMMs,
+/// and each result row of a GEMM depends only on its own input row, so
+/// batched outputs are bit-identical to `B` single calls.
+pub struct TtDenseContraction {
+    dims: Vec<usize>,
+    ranks: Vec<usize>,
+    /// Per mode: core transposed to `[(dₙ·rₙ₊₁), rₙ]` row-major.
+    cores_t: Vec<Vec<f64>>,
+}
+
+impl TtDenseContraction {
+    /// Build the context for `tt`, transposing every core once.
+    pub fn new(tt: &TtTensor) -> Self {
+        let n = tt.order();
+        let mut cores_t = Vec::with_capacity(n);
+        for m in 0..n {
+            let rl = tt.ranks[m];
+            let cols = tt.dims[m] * tt.ranks[m + 1];
+            let core = &tt.cores[m];
+            let mut t = vec![0.0; core.len()];
+            for a in 0..rl {
+                for x in 0..cols {
+                    t[x * rl + a] = core[a * cols + x];
+                }
+            }
+            cores_t.push(t);
+        }
+        Self { dims: tt.dims.clone(), ranks: tt.ranks.clone(), cores_t }
+    }
+
+    /// Mode sizes of the fixed TT tensor.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Inner product `⟨tt, x⟩` with a single dense tensor.
+    pub fn inner(&self, x: &DenseTensor) -> f64 {
+        assert_eq!(x.dims(), &self.dims[..], "shape mismatch");
+        let mut out = [0.0];
+        let (mut cur, mut next) = (Vec::new(), Vec::new());
+        self.inner_stacked_into(x.data(), 1, &mut out, &mut cur, &mut next);
+        out[0]
+    }
+
+    /// Inner products `⟨tt, x_b⟩` for `batch` dense tensors stacked
+    /// row-major in `stacked` (`batch × ∏dims` — exactly the layout of a
+    /// row-major matrix whose rows are the tensors). Writes one result per
+    /// item into `out[..batch]`; `cur`/`next` are caller-held ping-pong
+    /// scratch so steady-state calls allocate nothing.
+    pub fn inner_stacked_into(
+        &self,
+        stacked: &[f64],
+        batch: usize,
+        out: &mut [f64],
+        cur: &mut Vec<f64>,
+        next: &mut Vec<f64>,
+    ) {
+        let n = self.dims.len();
+        let numel: usize = self.dims.iter().product();
+        assert_eq!(stacked.len(), batch * numel, "stacked batch size");
+        assert!(out.len() >= batch, "output buffer size");
+        if batch == 0 {
+            return;
+        }
+        // Absorb the last core: cur[B·prefix, r_{N-1}] =
+        //   X_mat[B·prefix, d_N] · core_tᴺ[d_N, r_{N-1}].
+        let d_last = self.dims[n - 1];
+        let r_last = self.ranks[n - 1];
+        let mut rows = batch * numel / d_last;
+        let mut r = r_last;
+        cur.clear();
+        cur.resize(rows * r_last, 0.0);
+        crate::linalg::matmul_into(stacked, &self.cores_t[n - 1], cur, rows, d_last, r_last);
+        // Remaining modes right-to-left: view cur [rows·d, r] as
+        // [rows, d·r] (row-major contiguity) and absorb core m.
+        for m in (0..n - 1).rev() {
+            let d = self.dims[m];
+            let rl = self.ranks[m];
+            debug_assert_eq!(self.ranks[m + 1], r);
+            let pref = rows / d;
+            next.clear();
+            next.resize(pref * rl, 0.0);
+            crate::linalg::matmul_into(cur, &self.cores_t[m], next, pref, d * r, rl);
+            std::mem::swap(cur, next);
+            rows = pref;
+            r = rl;
+        }
+        debug_assert_eq!(rows, batch);
+        debug_assert_eq!(r, 1);
+        out[..batch].copy_from_slice(&cur[..batch]);
+    }
+}
+
 /// One step of the TT×TT inner product: contract boundary matrix `m`
 /// (`ra × rb`) with cores `a` (`[ra, d, ra2]`) and `b` (`[rb, d, rb2]`),
 /// returning the new boundary (`ra2 × rb2`).
@@ -833,6 +937,53 @@ mod tests {
             let idx = shape.multi(lin);
             assert!((eval.eval(&idx) - x.get(&idx)).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn tt_dense_contraction_matches_densified_inner() {
+        let mut rng = Rng::seed_from(25);
+        let dims = [3usize, 4, 2, 3];
+        let tt = TtTensor::random(&dims, 3, &mut rng);
+        let ctx = TtDenseContraction::new(&tt);
+        for _ in 0..4 {
+            let x = DenseTensor::random(&dims, &mut rng);
+            let fast = ctx.inner(&x);
+            let slow = tt.to_dense().inner(&x);
+            assert!(
+                (fast - slow).abs() < 1e-9 * slow.abs().max(1.0),
+                "fast={fast} slow={slow}"
+            );
+        }
+    }
+
+    #[test]
+    fn tt_dense_contraction_batch_is_bit_identical_to_singles() {
+        let mut rng = Rng::seed_from(26);
+        let dims = [3usize, 2, 4];
+        let tt = TtTensor::random(&dims, 2, &mut rng);
+        let ctx = TtDenseContraction::new(&tt);
+        for batch in [1usize, 3, 8, 17] {
+            let xs: Vec<DenseTensor> =
+                (0..batch).map(|_| DenseTensor::random(&dims, &mut rng)).collect();
+            let mut stacked = Vec::new();
+            for x in &xs {
+                stacked.extend_from_slice(x.data());
+            }
+            let mut out = vec![0.0; batch];
+            let (mut a, mut b) = (Vec::new(), Vec::new());
+            ctx.inner_stacked_into(&stacked, batch, &mut out, &mut a, &mut b);
+            for (x, got) in xs.iter().zip(&out) {
+                assert_eq!(got.to_bits(), ctx.inner(x).to_bits(), "batch={batch}");
+            }
+        }
+    }
+
+    #[test]
+    fn tt_dense_contraction_order_one() {
+        let tt = TtTensor::from_cores(&[3], &[1, 1], vec![vec![1.0, 2.0, 3.0]]);
+        let x = DenseTensor::from_vec(&[3], vec![4.0, 5.0, 6.0]);
+        let ctx = TtDenseContraction::new(&tt);
+        assert!((ctx.inner(&x) - 32.0).abs() < 1e-12);
     }
 
     #[test]

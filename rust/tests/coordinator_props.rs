@@ -215,3 +215,78 @@ fn prop_coordinator_answers_every_request_once() {
         },
     );
 }
+
+/// Batcher invariant (deadline edge): with pushes strictly inside the
+/// window, the batch flushes *exactly* when the oldest item has waited
+/// `max_delay_us` — boundary inclusive, never one tick early — and the
+/// deadline clock fully resets after every flush (`oldest_us` cleared:
+/// the next push restarts the window from its own arrival tick, not the
+/// flushed batch's).
+#[test]
+fn prop_batcher_deadline_boundary_and_reset() {
+    run(
+        "batcher deadline boundary + reset",
+        Config { cases: 128, seed: 0xB0DE },
+        |g| {
+            let max_delay = g.usize_in(1, 1_000) as u64;
+            let n_items = g.usize_in(1, 8);
+            // max_batch above n_items so only the deadline can flush.
+            let mut b = Batcher::new(BatcherConfig {
+                max_batch: n_items + 1,
+                max_delay_us: max_delay,
+            });
+            let t0 = g.usize_in(0, 10_000) as u64;
+            if b.push(0u32, t0).is_some() {
+                return Err("size flush below max_batch".into());
+            }
+            // Later arrivals inside the window must not extend the
+            // deadline (it tracks the *oldest* item).
+            for i in 1..n_items {
+                let t = t0 + (g.usize_in(0, max_delay.saturating_sub(1) as usize) as u64);
+                if b.push(i as u32, t).is_some() {
+                    return Err("size flush below max_batch".into());
+                }
+            }
+            if b.deadline_us() != Some(t0 + max_delay) {
+                return Err(format!(
+                    "deadline {:?} != oldest + max_delay {}",
+                    b.deadline_us(),
+                    t0 + max_delay
+                ));
+            }
+            if b.poll(t0 + max_delay - 1).is_some() {
+                return Err("flushed one tick before the deadline".into());
+            }
+            let batch = b
+                .poll(t0 + max_delay)
+                .ok_or("did not flush exactly at the deadline (boundary must be inclusive)")?;
+            if batch.len() != n_items {
+                return Err(format!("flushed {} of {n_items} items", batch.len()));
+            }
+            // Reset: no residual deadline, an arbitrarily late poll stays
+            // empty, and a new push restarts the window from its own tick.
+            if b.deadline_us().is_some() {
+                return Err("oldest_us not cleared after deadline flush".into());
+            }
+            if b.poll(t0 + 100 * max_delay).is_some() {
+                return Err("phantom flush from an empty batcher".into());
+            }
+            let t1 = t0 + max_delay + 1 + g.usize_in(0, 5_000) as u64;
+            b.push(99u32, t1);
+            if b.deadline_us() != Some(t1 + max_delay) {
+                return Err(format!(
+                    "post-flush deadline {:?} != new arrival + max_delay {}",
+                    b.deadline_us(),
+                    t1 + max_delay
+                ));
+            }
+            if b.poll(t1 + max_delay - 1).is_some() {
+                return Err("post-flush window shrank (stale oldest_us)".into());
+            }
+            if b.poll(t1 + max_delay).is_none() {
+                return Err("post-flush window did not flush at its deadline".into());
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,124 @@
+//! Property tests for the batch-first execution path: for every map
+//! family, `project_batch_into` must produce output **bit-identical** to
+//! per-item `project` — across dense/TT/CP input formats, mixed-format
+//! batches, and batch sizes {1, 3, 8, 17} — while reusing one shared
+//! `Workspace` across all calls (stale scratch must never leak).
+
+use tensorized_rp::projections::{
+    CpProjection, GaussianProjection, KroneckerFjlt, Projection, SparseKind, SparseProjection,
+    TensorSketch, TrpProjection, TtProjection, Workspace,
+};
+use tensorized_rp::rng::Rng;
+use tensorized_rp::tensor::{AnyTensor, CpTensor, DenseTensor, TtTensor};
+use tensorized_rp::util::proptest::{run, Config};
+
+const BATCH_SIZES: [usize; 4] = [1, 3, 8, 17];
+
+fn make_maps(dims: &[usize], k: usize, rng: &mut Rng) -> Vec<Box<dyn Projection>> {
+    vec![
+        Box::new(GaussianProjection::new(dims, k, rng)),
+        Box::new(SparseProjection::new(dims, k, SparseKind::Achlioptas, rng)),
+        Box::new(SparseProjection::new(dims, k, SparseKind::VerySparse, rng)),
+        Box::new(TtProjection::new(dims, 3, k, rng)),
+        Box::new(CpProjection::new(dims, 3, k, rng)),
+        Box::new(TrpProjection::new(dims, 2, k, rng)),
+        Box::new(KroneckerFjlt::new(dims, k, rng)),
+        // 7th map: exercises the trait's default per-item implementation.
+        Box::new(TensorSketch::new(dims, k, rng)),
+    ]
+}
+
+fn input(format: usize, dims: &[usize], rng: &mut Rng) -> AnyTensor {
+    match format {
+        0 => AnyTensor::Dense(DenseTensor::random_unit(dims, rng)),
+        1 => AnyTensor::Tt(TtTensor::random_unit(dims, 2, rng)),
+        _ => AnyTensor::Cp(CpTensor::random_unit(dims, 2, rng)),
+    }
+}
+
+/// Assert bitwise equality between the batched output and per-item
+/// projection for every item of `xs`.
+fn assert_bit_match(map: &dyn Projection, xs: &[AnyTensor], ws: &mut Workspace) -> Result<(), String> {
+    let k = map.k();
+    let mut out = vec![f64::NAN; xs.len() * k];
+    map.project_batch_into(xs, &mut out, ws);
+    for (b, x) in xs.iter().enumerate() {
+        let want = map.project(x);
+        let got = &out[b * k..(b + 1) * k];
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            if g.to_bits() != w.to_bits() {
+                return Err(format!(
+                    "map {} B={} item {b} component {i}: batched {g:?} != single {w:?}",
+                    map.name(),
+                    xs.len()
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn batch_matches_single_for_all_maps_formats_and_sizes() {
+    // Deterministic exhaustive core of the satellite requirement: six
+    // structured maps (+ TensorSketch), three uniform input formats,
+    // B ∈ {1, 3, 8, 17}, one workspace shared across everything.
+    let dims = [3usize, 4, 2];
+    let mut rng = Rng::seed_from(0xB17);
+    let maps = make_maps(&dims, 8, &mut rng);
+    let mut ws = Workspace::new();
+    for map in &maps {
+        for format in 0..3 {
+            for &b in &BATCH_SIZES {
+                let xs: Vec<AnyTensor> =
+                    (0..b).map(|_| input(format, &dims, &mut rng)).collect();
+                assert_bit_match(map.as_ref(), &xs, &mut ws).unwrap();
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_batch_matches_single_on_random_mixed_batches() {
+    run(
+        "batched projection bit-equivalence",
+        Config { cases: 24, seed: 0xBA7C },
+        |g| {
+            // Random small shape, random mixed-format batch: mixed batches
+            // take the per-item fallback inside each override, uniform
+            // dense batches take the stacked kernels — both must match.
+            let order = g.usize_in(2, 4);
+            let dims: Vec<usize> = (0..order).map(|_| g.usize_in(2, 4)).collect();
+            let k = g.usize_in(1, 9);
+            let b = g.usize_in(1, 9);
+            let maps = make_maps(&dims, k, g.rng());
+            let mut ws = Workspace::new();
+            let uniform_dense = g.bool_with(0.5);
+            let xs: Vec<AnyTensor> = (0..b)
+                .map(|_| {
+                    let f = if uniform_dense { 0 } else { g.usize_in(0, 2) };
+                    input(f, &dims, g.rng())
+                })
+                .collect();
+            for map in &maps {
+                assert_bit_match(map.as_ref(), &xs, &mut ws)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn project_batch_convenience_wrapper_matches_into() {
+    let dims = [3usize, 3, 3];
+    let mut rng = Rng::seed_from(7);
+    let f = TtProjection::new(&dims, 2, 6, &mut rng);
+    let xs: Vec<AnyTensor> = (0..5)
+        .map(|_| AnyTensor::Dense(DenseTensor::random_unit(&dims, &mut rng)))
+        .collect();
+    let mut ws = Workspace::new();
+    let via_wrapper = f.project_batch(&xs, &mut ws);
+    let mut via_into = vec![0.0; xs.len() * f.k()];
+    f.project_batch_into(&xs, &mut via_into, &mut ws);
+    assert_eq!(via_wrapper, via_into);
+}

@@ -1,0 +1,149 @@
+//! Offline drop-in for the subset of the `anyhow` crate this workspace
+//! uses: [`Error`], [`Result`], [`anyhow!`], [`bail!`] and the
+//! [`Context`] extension trait. No external registry access is available
+//! in the build environment, so this minimal shim is vendored in-tree.
+//!
+//! Semantics match real `anyhow` for the covered surface: errors carry a
+//! display message (with `context` prepended as `"<context>: <cause>"`)
+//! and any `std::error::Error` converts via `?`.
+
+use std::fmt;
+
+/// A type-erased error with a display message and optional source.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+/// `anyhow`-style result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap a concrete error, preserving it as the source.
+    pub fn new<E: std::error::Error + Send + Sync + 'static>(error: E) -> Self {
+        Self { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    /// Prepend context to the display message.
+    pub fn context<C: fmt::Display>(self, context: C) -> Self {
+        Self { msg: format!("{context}: {}", self.msg), source: self.source }
+    }
+
+    /// The root cause chain's original error, if one was captured.
+    pub fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.source.as_deref().map(|e| e as &(dyn std::error::Error + 'static))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Mirrors anyhow's blanket conversion. `Error` itself deliberately does
+// not implement `std::error::Error`, which keeps this impl coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)` to
+/// `Result`.
+pub trait Context<T, E> {
+    /// Attach a context message to the error case.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Attach a lazily-built context message to the error case.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($msg:expr $(,)?) => {
+        $crate::Error::msg($msg)
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*).into())
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn display_and_context_compose() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(f().unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn result_context_helpers() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("reading {}", "x")).unwrap_err();
+        assert_eq!(e.to_string(), "reading x: missing");
+    }
+
+    #[test]
+    fn macros_format() {
+        let name = "tt";
+        let e = anyhow!("unknown artifact {name:?}");
+        assert_eq!(e.to_string(), "unknown artifact \"tt\"");
+        fn f(x: usize) -> Result<()> {
+            if x > 2 {
+                bail!("too big: {x}");
+            }
+            Ok(())
+        }
+        assert!(f(1).is_ok());
+        assert_eq!(f(3).unwrap_err().to_string(), "too big: 3");
+    }
+}
