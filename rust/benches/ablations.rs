@@ -59,7 +59,8 @@ fn main() {
     );
 
     // (2) Definition-1 prescription ablation.
-    let (prescribed, naive) = ablations::run_prescription_ablation(5, 4, 16, cfg.trials.min(100), 7);
+    let (prescribed, naive) =
+        ablations::run_prescription_ablation(5, 4, 16, cfg.trials.min(100), 7);
     println!(
         "[ablations] E‖f(X)‖² with Definition-1 variances: {prescribed:.3}; \
          with naive unit variances: {naive:.3} (isometry requires ≈ 1)"

@@ -1,0 +1,54 @@
+//! Bench target: ANN recall/QPS sweep — the retrieval-quality trajectory
+//! future PRs track via `BENCH_ann_sweep.json` (also emitted by
+//! `trp experiment ann`).
+//!
+//! ```text
+//! cargo bench --bench ann_sweep [-- --quick] [-- --out FILE]
+//! ```
+//!
+//! Per map family (TT, CP, Gaussian) and projection dimension `m`,
+//! reports recall@topk of the flat and LSH index backends against exact
+//! original-space (TT-format) neighbours, and each backend's query
+//! throughput. Acceptance tripwire for this PR: some `m` where TT reaches
+//! recall ≥ 0.9 while CP at the same `m` is strictly lower.
+
+use tensorized_rp::experiments::ann::{print_verdict, run, to_json, AnnSweepConfig};
+use tensorized_rp::util::bench::BenchReport;
+use tensorized_rp::util::cli::Args;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench")).unwrap();
+    let cfg = if args.flag("quick") {
+        AnnSweepConfig::quick()
+    } else {
+        AnnSweepConfig::paper()
+    };
+    eprintln!(
+        "[ann_sweep] dims={:?} n_corpus={} n_queries={} topk={} ms={:?}",
+        cfg.dims, cfg.n_corpus, cfg.n_queries, cfg.topk, cfg.ms
+    );
+    let rows = run(&cfg);
+
+    let mut report = BenchReport::new(
+        "ANN sweep: recall@topk and QPS vs projection dim m",
+        &["map", "m", "flat_recall", "lsh_recall", "flat_qps", "lsh_qps"],
+    );
+    for r in &rows {
+        report.push(vec![
+            r.map.clone(),
+            r.m.to_string(),
+            format!("{:.4}", r.flat_recall),
+            format!("{:.4}", r.lsh_recall),
+            format!("{:.1}", r.flat_qps),
+            format!("{:.1}", r.lsh_qps),
+        ]);
+    }
+    report.finish("ann_sweep.csv");
+
+    let out_path = args.get_or("out", "BENCH_ann_sweep.json");
+    match std::fs::write(&out_path, to_json(&cfg, &rows).to_string_pretty()) {
+        Ok(()) => println!("[written {out_path}]"),
+        Err(e) => eprintln!("[warn] could not write {out_path}: {e}"),
+    }
+    print_verdict(&rows);
+}

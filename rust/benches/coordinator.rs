@@ -13,7 +13,9 @@ use tensorized_rp::runtime::PjrtEngine;
 use tensorized_rp::util::bench::BenchReport;
 use tensorized_rp::util::cli::Args;
 
-fn run_trace(coord: &Coordinator, trace: &Trace) -> (f64, tensorized_rp::coordinator::MetricsSnapshot) {
+type Snapshot = tensorized_rp::coordinator::MetricsSnapshot;
+
+fn run_trace(coord: &Coordinator, trace: &Trace) -> (f64, Snapshot) {
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = trace
         .payloads

@@ -48,6 +48,18 @@ impl<T> Batcher<T> {
         self.pending.is_empty()
     }
 
+    /// Current size threshold.
+    pub fn max_batch(&self) -> usize {
+        self.cfg.max_batch
+    }
+
+    /// Retarget the size threshold (adaptive batching), clamped to ≥ 1.
+    /// Takes effect from the next push: if the new bound is at or below
+    /// the pending count, the next push flushes immediately.
+    pub fn set_max_batch(&mut self, max_batch: usize) {
+        self.cfg.max_batch = max_batch.max(1);
+    }
+
     /// Add an item at time `now_us`; returns a full batch if the size
     /// threshold is reached.
     pub fn push(&mut self, item: T, now_us: u64) -> Option<Vec<T>> {
@@ -81,6 +93,51 @@ impl<T> Batcher<T> {
         }
         self.oldest_us = None;
         Some(std::mem::take(&mut self.pending))
+    }
+}
+
+/// Sliding-window arrival estimator driving the adaptive native flush
+/// size: the flush threshold tracks how many requests actually arrive
+/// within one batching deadline, so an idle service flushes immediately
+/// (batch of 1, minimal latency) while a saturated one fills the
+/// configured cap (maximal amortization). Time is passed in explicitly,
+/// like [`Batcher`], so the policy is deterministic and testable.
+#[derive(Debug)]
+pub struct ArrivalRate {
+    window_us: u64,
+    /// Tick the current window opened at.
+    start_us: u64,
+    /// Arrivals observed in the current (partial) window.
+    count: u64,
+    /// Arrivals observed in the last *full* window.
+    prev: u64,
+}
+
+impl ArrivalRate {
+    /// New estimator over windows of `window_us` microseconds.
+    pub fn new(window_us: u64) -> Self {
+        Self { window_us: window_us.max(1), start_us: 0, count: 0, prev: 0 }
+    }
+
+    /// Record one arrival at tick `now_us`.
+    pub fn observe(&mut self, now_us: u64) {
+        let elapsed = now_us.saturating_sub(self.start_us);
+        if elapsed >= self.window_us {
+            // Exactly one window rolled over → its count becomes the
+            // estimate; a longer gap means the stream went idle.
+            self.prev = if elapsed < 2 * self.window_us { self.count } else { 0 };
+            self.start_us = now_us - elapsed % self.window_us;
+            self.count = 0;
+        }
+        self.count += 1;
+    }
+
+    /// Suggested flush size: the busier of the last full window and the
+    /// current partial one, clamped to `[1, cap]` (the configured
+    /// `native_max_batch` stays a hard cap).
+    pub fn suggest(&self, cap: usize) -> usize {
+        let observed = usize::try_from(self.prev.max(self.count)).unwrap_or(usize::MAX);
+        observed.clamp(1, cap.max(1))
     }
 }
 
@@ -139,5 +196,57 @@ mod tests {
     fn batch_size_one_flushes_immediately() {
         let mut b = Batcher::new(cfg(1, 1_000_000));
         assert_eq!(b.push(42, 0).unwrap(), vec![42]);
+    }
+
+    #[test]
+    fn set_max_batch_applies_on_next_push() {
+        let mut b = Batcher::new(cfg(10, 1_000));
+        b.push(1, 0);
+        b.push(2, 1);
+        assert_eq!(b.max_batch(), 10);
+        b.set_max_batch(3);
+        let batch = b.push(3, 2).expect("shrunk threshold reached");
+        assert_eq!(batch, vec![1, 2, 3]);
+        b.set_max_batch(0); // clamps to 1
+        assert_eq!(b.push(4, 3).unwrap(), vec![4]);
+    }
+
+    #[test]
+    fn arrival_rate_ramps_under_load() {
+        let mut a = ArrivalRate::new(100);
+        // Idle start: first arrival suggests a batch of 1.
+        a.observe(0);
+        assert_eq!(a.suggest(16), 1);
+        // 9 more arrivals inside the first window.
+        for t in 1..10 {
+            a.observe(t * 10);
+        }
+        assert_eq!(a.suggest(16), 10);
+        // Next window: the full previous window keeps the estimate high
+        // even while the new window is still sparse.
+        a.observe(105);
+        assert_eq!(a.suggest(16), 10);
+        // The cap binds.
+        assert_eq!(a.suggest(4), 4);
+    }
+
+    #[test]
+    fn arrival_rate_decays_after_idle_gap() {
+        let mut a = ArrivalRate::new(100);
+        for t in 0..20 {
+            a.observe(t * 5);
+        }
+        a.observe(110);
+        assert!(a.suggest(64) > 1, "busy stream suggests batching");
+        // A gap of many windows resets the estimate to the new arrival.
+        a.observe(10_000);
+        assert_eq!(a.suggest(64), 1);
+    }
+
+    #[test]
+    fn arrival_rate_suggestion_is_at_least_one() {
+        let a = ArrivalRate::new(50);
+        assert_eq!(a.suggest(8), 1);
+        assert_eq!(a.suggest(0), 1);
     }
 }

@@ -79,6 +79,16 @@ pub struct Metrics {
     pub pjrt_requests: AtomicU64,
     /// Padding slots wasted across all PJRT batches.
     pub padded_slots: AtomicU64,
+    /// High-water adaptive native flush-size target across all lanes
+    /// since startup (equals the configured `native_max_batch` when
+    /// adaptation is off).
+    pub native_flush_max: AtomicU64,
+    /// Index items inserted through the coordinator.
+    pub index_inserts: AtomicU64,
+    /// Index deletes processed through the coordinator.
+    pub index_deletes: AtomicU64,
+    /// Index queries answered through the coordinator.
+    pub index_queries: AtomicU64,
     /// End-to-end latency (submit → response).
     pub e2e_latency: LatencyHistogram,
 }
@@ -102,6 +112,14 @@ pub struct MetricsSnapshot {
     pub pjrt_requests: u64,
     /// See [`Metrics::padded_slots`].
     pub padded_slots: u64,
+    /// See [`Metrics::native_flush_max`].
+    pub native_flush_max: u64,
+    /// See [`Metrics::index_inserts`].
+    pub index_inserts: u64,
+    /// See [`Metrics::index_deletes`].
+    pub index_deletes: u64,
+    /// See [`Metrics::index_queries`].
+    pub index_queries: u64,
     /// Mean end-to-end latency (µs).
     pub mean_latency_us: f64,
     /// p50 end-to-end latency (µs, bucket upper edge).
@@ -127,6 +145,10 @@ impl Metrics {
             native_requests: self.native_requests.load(Ordering::Relaxed),
             pjrt_requests: self.pjrt_requests.load(Ordering::Relaxed),
             padded_slots: self.padded_slots.load(Ordering::Relaxed),
+            native_flush_max: self.native_flush_max.load(Ordering::Relaxed),
+            index_inserts: self.index_inserts.load(Ordering::Relaxed),
+            index_deletes: self.index_deletes.load(Ordering::Relaxed),
+            index_queries: self.index_queries.load(Ordering::Relaxed),
             mean_latency_us: self.e2e_latency.mean_us(),
             p50_latency_us: self.e2e_latency.quantile_us(0.50),
             p99_latency_us: self.e2e_latency.quantile_us(0.99),

@@ -18,11 +18,18 @@
 //!                  └────────────▶ responses ◀───────┘
 //! ```
 //!
-//! Invariants (property-tested in `rust/tests/coordinator_props.rs`):
-//! every submitted request gets exactly one response; responses carry the
-//! request's id; batch padding never leaks between requests; the registry
-//! returns the identical map for identical keys (seed determinism);
-//! bounded queues provide backpressure instead of unbounded growth.
+//! Invariants (property-tested in `rust/tests/coordinator_props.rs` and
+//! `rust/tests/index_props.rs`): every submitted request gets exactly one
+//! response; responses carry the request's id; batch padding never leaks
+//! between requests; the registry returns the identical map for identical
+//! keys (seed determinism); bounded queues provide backpressure instead
+//! of unbounded growth.
+//!
+//! Beyond pure projection, the coordinator serves the similarity-search
+//! subsystem ([`crate::index`]) through four extra wire ops — `insert`,
+//! `query`, `delete`, `stats` — routed per map signature: each signature
+//! owns one deterministic projection map *and* one ANN index over the
+//! embeddings that map produced ([`IndexRegistry`]).
 
 mod batcher;
 mod metrics;
@@ -33,10 +40,12 @@ mod server;
 mod state;
 pub mod wire;
 
-pub use batcher::{Batcher, BatcherConfig};
+pub use batcher::{ArrivalRate, Batcher, BatcherConfig};
 pub use metrics::{LatencyHistogram, Metrics, MetricsSnapshot};
 pub use net::{NetClient, NetServer};
-pub use request::{EnginePath, ProjectRequest, ProjectResponse};
+pub use request::{EnginePath, Payload, ProjectRequest, ProjectResponse, RequestOp};
 pub use router::{RouteKey, RouteTarget, Router};
 pub use server::{Coordinator, CoordinatorConfig};
-pub use state::{MapKey, MapKind, ProjectionRegistry, WorkspacePool};
+pub use state::{
+    IndexRegistry, IndexSlot, MapKey, MapKind, ProjectionRegistry, SharedIndex, WorkspacePool,
+};

@@ -1,6 +1,7 @@
-//! Request/response types of the compression service.
+//! Request/response types of the compression + similarity-search service.
 
-use crate::tensor::AnyTensor;
+use crate::index::{IndexStats, Neighbor};
+use crate::tensor::{AnyTensor, Format};
 
 /// Which execution path served a request.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -20,30 +21,133 @@ impl std::fmt::Display for EnginePath {
     }
 }
 
-/// A projection request: embed `payload` into `R^k` with the service's
-/// configured map for this payload signature.
-#[derive(Debug, Clone)]
-pub struct ProjectRequest {
-    /// Caller-assigned id, echoed in the response.
-    pub id: u64,
-    /// The tensor to embed, in any supported format.
-    pub payload: AnyTensor,
+/// What the service should do with a request.
+///
+/// `Project` is the original compression op. The index ops route to the
+/// ANN index of the request's map signature: `Insert` and `Query` first
+/// flow through the same batched projection path (their payload tensor is
+/// embedded exactly like a `Project` payload), while `Delete` and
+/// `IndexStats` carry only a signature.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestOp {
+    /// Embed the payload and return the embedding.
+    Project,
+    /// Embed the payload and insert it into the signature's index under
+    /// the request id.
+    Insert,
+    /// Embed the payload and return its `k` nearest stored neighbours.
+    Query {
+        /// Number of neighbours requested.
+        k: usize,
+    },
+    /// Remove a previously inserted item from the signature's index.
+    Delete {
+        /// The insert-request id of the item to remove.
+        target: u64,
+    },
+    /// Snapshot the signature's index statistics.
+    IndexStats,
 }
 
-impl ProjectRequest {
-    /// Convenience constructor.
-    pub fn new(id: u64, payload: AnyTensor) -> Self {
-        Self { id, payload }
+/// A request payload: the tensor to embed, or — for ops that carry no
+/// data (`Delete`, `IndexStats`) — just the map signature to route on.
+#[derive(Debug, Clone)]
+pub enum Payload {
+    /// A tensor in any supported format.
+    Tensor(AnyTensor),
+    /// Routing signature only.
+    Signature {
+        /// Payload format of the signature.
+        format: Format,
+        /// Input mode sizes of the signature.
+        dims: Vec<usize>,
+    },
+}
+
+impl Payload {
+    /// The payload's format tag.
+    pub fn format(&self) -> Format {
+        match self {
+            Payload::Tensor(t) => t.format(),
+            Payload::Signature { format, .. } => *format,
+        }
+    }
+
+    /// The payload's mode sizes.
+    pub fn dims(&self) -> &[usize] {
+        match self {
+            Payload::Tensor(t) => t.dims(),
+            Payload::Signature { dims, .. } => dims,
+        }
+    }
+
+    /// The tensor, when one is carried.
+    pub fn tensor(&self) -> Option<&AnyTensor> {
+        match self {
+            Payload::Tensor(t) => Some(t),
+            Payload::Signature { .. } => None,
+        }
     }
 }
 
-/// A completed projection.
+/// A service request: apply `op` to `payload` under the service's
+/// configured map for this payload signature.
+#[derive(Debug, Clone)]
+pub struct ProjectRequest {
+    /// Caller-assigned id, echoed in the response. Doubles as the stored
+    /// item id for `Insert`.
+    pub id: u64,
+    /// What to do.
+    pub op: RequestOp,
+    /// The tensor (or signature) the op applies to.
+    pub payload: Payload,
+}
+
+impl ProjectRequest {
+    /// Plain projection request (the original service op).
+    pub fn new(id: u64, payload: AnyTensor) -> Self {
+        Self { id, op: RequestOp::Project, payload: Payload::Tensor(payload) }
+    }
+
+    /// Index insert: embed `payload` and store it under `id`.
+    pub fn insert(id: u64, payload: AnyTensor) -> Self {
+        Self { id, op: RequestOp::Insert, payload: Payload::Tensor(payload) }
+    }
+
+    /// Index query: embed `payload` and return its `k` nearest neighbours.
+    pub fn query(id: u64, payload: AnyTensor, k: usize) -> Self {
+        Self { id, op: RequestOp::Query { k }, payload: Payload::Tensor(payload) }
+    }
+
+    /// Index delete: remove item `target` from the index of the
+    /// `(format, dims)` signature.
+    pub fn delete(id: u64, target: u64, format: Format, dims: Vec<usize>) -> Self {
+        Self {
+            id,
+            op: RequestOp::Delete { target },
+            payload: Payload::Signature { format, dims },
+        }
+    }
+
+    /// Index statistics for the `(format, dims)` signature.
+    pub fn index_stats(id: u64, format: Format, dims: Vec<usize>) -> Self {
+        Self { id, op: RequestOp::IndexStats, payload: Payload::Signature { format, dims } }
+    }
+}
+
+/// A completed request.
 #[derive(Debug, Clone)]
 pub struct ProjectResponse {
     /// Echo of [`ProjectRequest::id`].
     pub id: u64,
-    /// The embedding `f(X) ∈ R^k`.
+    /// The embedding `f(X) ∈ R^k` (empty for signature-only ops).
     pub embedding: Vec<f64>,
+    /// Nearest neighbours (`Query` responses only).
+    pub neighbors: Option<Vec<Neighbor>>,
+    /// Whether the target existed (`Delete` responses only).
+    pub removed: Option<bool>,
+    /// Index statistics (`IndexStats` responses only).
+    pub index: Option<IndexStats>,
     /// Which engine computed it.
     pub path: EnginePath,
     /// Time spent queued + batched before execution (microseconds).
@@ -56,14 +160,38 @@ pub struct ProjectResponse {
 mod tests {
     use super::*;
     use crate::rng::Rng;
-    use crate::tensor::{DenseTensor, Format};
+    use crate::tensor::DenseTensor;
 
     #[test]
     fn request_carries_payload_format() {
         let mut rng = Rng::seed_from(1);
         let r = ProjectRequest::new(7, AnyTensor::Dense(DenseTensor::random(&[2, 2], &mut rng)));
         assert_eq!(r.id, 7);
+        assert_eq!(r.op, RequestOp::Project);
         assert_eq!(r.payload.format(), Format::Dense);
+        assert!(r.payload.tensor().is_some());
+    }
+
+    #[test]
+    fn signature_payloads_carry_no_tensor() {
+        let r = ProjectRequest::delete(3, 17, Format::Tt, vec![3, 3, 3]);
+        assert_eq!(r.op, RequestOp::Delete { target: 17 });
+        assert_eq!(r.payload.format(), Format::Tt);
+        assert_eq!(r.payload.dims(), &[3, 3, 3]);
+        assert!(r.payload.tensor().is_none());
+        let s = ProjectRequest::index_stats(4, Format::Cp, vec![2, 2]);
+        assert_eq!(s.op, RequestOp::IndexStats);
+    }
+
+    #[test]
+    fn query_constructor_carries_k() {
+        let mut rng = Rng::seed_from(2);
+        let r = ProjectRequest::query(
+            9,
+            AnyTensor::Dense(DenseTensor::random(&[2, 2], &mut rng)),
+            5,
+        );
+        assert_eq!(r.op, RequestOp::Query { k: 5 });
     }
 
     #[test]

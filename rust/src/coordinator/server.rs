@@ -4,18 +4,32 @@
 //!
 //! Both execution paths are batch-first: the native route accumulates
 //! requests per map signature exactly like the PJRT route does per
-//! artifact, and a flushed batch of `B` requests executes as **one**
-//! [`crate::projections::Projection::project_batch_into`] call on a
-//! pooled [`crate::projections::Workspace`] — there is no per-item
-//! `project` call anywhere in the worker loop.
+//! artifact, and a flushed batch of `B` requests executes through
+//! [`crate::projections::Projection::project_batch_into`] calls on pooled
+//! [`crate::projections::Workspace`]s — there is no per-item `project`
+//! call anywhere in the worker loop. A flushed batch of pure projections
+//! is split into per-worker sub-batches (still batched calls) so a single
+//! hot signature saturates the whole pool instead of one worker.
+//!
+//! Index ops ([`RequestOp::Insert`], [`RequestOp::Query`],
+//! [`RequestOp::Delete`], [`RequestOp::IndexStats`]) ride the same native
+//! batchers: inserts and queries are embedded inside the flush's batched
+//! projection call, then applied to the signature's ANN index strictly in
+//! arrival order — within a flush by walking the items in order (runs of
+//! consecutive queries score as one batched GEMM), across flushes via the
+//! per-signature FIFO sequencer ([`super::state::IndexSlot`]).
 
-use super::batcher::{Batcher, BatcherConfig};
+use super::batcher::{ArrivalRate, Batcher, BatcherConfig};
 use super::metrics::Metrics;
-use super::request::{EnginePath, ProjectRequest, ProjectResponse};
+use super::request::{EnginePath, Payload, ProjectRequest, ProjectResponse, RequestOp};
 use super::router::{RouteTarget, Router};
-use super::state::{MapKey, MapKind, PackedParams, ProjectionRegistry, WorkspacePool};
+use super::state::{
+    IndexRegistry, MapKey, MapKind, PackedParams, ProjectionRegistry, SharedIndex, WorkspacePool,
+};
+use crate::index::{AnnIndex, BackendKind, IndexStats, LshConfig, Neighbor};
+use crate::projections::Workspace;
 use crate::runtime::{pack, ArtifactKind, PjrtEngine};
-use crate::tensor::AnyTensor;
+use crate::tensor::{AnyTensor, Format};
 use crate::util::threadpool::ThreadPool;
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
@@ -33,12 +47,20 @@ pub struct CoordinatorConfig {
     /// Dynamic-batcher deadline (µs) — applies to both the PJRT and the
     /// native batchers.
     pub max_delay_us: u64,
-    /// Native-path batch size: requests sharing a map signature accumulate
-    /// up to this count (or the deadline) and execute as one
-    /// `project_batch_into` call. `1` restores item-at-a-time dispatch.
+    /// Native-path batch-size cap: requests sharing a map signature
+    /// accumulate up to this count (or the deadline) and execute as one
+    /// flush. `1` restores item-at-a-time dispatch.
     pub native_max_batch: usize,
+    /// Adapt the native flush size to the observed arrival rate, with
+    /// `native_max_batch` as the cap (see [`ArrivalRate`]). Off = always
+    /// wait for the full `native_max_batch`.
+    pub adaptive_batch: bool,
     /// Master seed for the projection registry.
     pub master_seed: u64,
+    /// ANN backend for per-signature indexes.
+    pub index_backend: BackendKind,
+    /// LSH shape used when `index_backend` is [`BackendKind::Lsh`].
+    pub lsh: LshConfig,
     /// Map policy for native TT-format requests: TT rank.
     pub default_tt_rank: usize,
     /// Map policy for native CP-format requests: CP rank.
@@ -56,7 +78,10 @@ impl Default for CoordinatorConfig {
             queue_cap: 1024,
             max_delay_us: 2_000,
             native_max_batch: 16,
+            adaptive_batch: true,
             master_seed: 0xC0FFEE,
+            index_backend: BackendKind::Flat,
+            lsh: LshConfig::default(),
             default_tt_rank: 5,
             default_cp_rank: 25,
             default_k: 64,
@@ -76,6 +101,7 @@ struct Envelope {
 
 struct Shared {
     registry: ProjectionRegistry,
+    indexes: IndexRegistry,
     engine: Option<PjrtEngine>,
     metrics: Metrics,
     workspaces: WorkspacePool,
@@ -102,12 +128,24 @@ impl Coordinator {
     pub fn start(cfg: CoordinatorConfig, engine: Option<PjrtEngine>) -> Self {
         let shared = Arc::new(Shared {
             registry: ProjectionRegistry::new(cfg.master_seed),
+            indexes: IndexRegistry::new(cfg.master_seed, cfg.index_backend, cfg.lsh),
             engine,
             metrics: Metrics::new(),
             workspaces: WorkspacePool::new(),
             cfg: cfg.clone(),
             epoch: Instant::now(),
         });
+        // With adaptation on, the gauge is a high-water mark of chosen
+        // targets (starts at 0); off, it is simply the configured cap.
+        let initial_flush_max = if cfg.adaptive_batch {
+            0
+        } else {
+            cfg.native_max_batch.max(1) as u64
+        };
+        shared
+            .metrics
+            .native_flush_max
+            .store(initial_flush_max, Ordering::Relaxed);
         let (tx, rx) = sync_channel::<Envelope>(cfg.queue_cap);
         let dispatcher = {
             let shared = Arc::clone(&shared);
@@ -175,6 +213,15 @@ struct BatchItem {
     env: Envelope,
 }
 
+/// Per-signature native batching state: the dynamic batcher plus the
+/// arrival-rate estimator that adapts its flush threshold (estimating per
+/// signature, not globally — a sparse stream must not inherit the
+/// aggregate arrival rate of the busy ones and stall at the deadline).
+struct NativeLane {
+    batcher: Batcher<Envelope>,
+    arrivals: ArrivalRate,
+}
+
 fn dispatcher_loop(shared: Arc<Shared>, rx: Receiver<Envelope>) {
     // Build the routing table from the attached engine's artifacts.
     let mut router = Router::new();
@@ -202,12 +249,14 @@ fn dispatcher_loop(shared: Arc<Shared>, rx: Receiver<Envelope>) {
     let pool = ThreadPool::new(shared.cfg.workers, shared.cfg.queue_cap);
     let mut batchers: HashMap<String, Batcher<BatchItem>> = HashMap::new();
     // Native requests batch per map signature, mirroring the per-artifact
-    // PJRT batchers: size native_max_batch or the shared deadline.
+    // PJRT batchers: size native_max_batch (adaptively shrunk towards the
+    // observed arrival rate) or the shared deadline.
+    let native_cap = shared.cfg.native_max_batch.max(1);
     let native_cfg = BatcherConfig {
-        max_batch: shared.cfg.native_max_batch.max(1),
+        max_batch: native_cap,
         max_delay_us: shared.cfg.max_delay_us,
     };
-    let mut native_batchers: HashMap<MapKey, Batcher<Envelope>> = HashMap::new();
+    let mut native_lanes: HashMap<MapKey, NativeLane> = HashMap::new();
 
     loop {
         // Sleep until the nearest batch deadline (or a coarse tick).
@@ -215,26 +264,59 @@ fn dispatcher_loop(shared: Arc<Shared>, rx: Receiver<Envelope>) {
         let next_deadline = batchers
             .values()
             .filter_map(|b| b.deadline_us())
-            .chain(native_batchers.values().filter_map(|b| b.deadline_us()))
+            .chain(native_lanes.values().filter_map(|l| l.batcher.deadline_us()))
             .min()
             .unwrap_or(now + 5_000);
         let wait = Duration::from_micros(next_deadline.saturating_sub(now).max(100));
         match rx.recv_timeout(wait) {
             Ok(env) => {
-                match router.route(&env.req.payload) {
-                    RouteTarget::Native => {
-                        let key = native_map_key(&shared, &env.req.payload);
-                        // Clone the key only on first sight of a signature;
-                        // the steady-state path just borrows it.
-                        if !native_batchers.contains_key(&key) {
-                            native_batchers.insert(key.clone(), Batcher::new(native_cfg));
+                // Index ops always run native (compiled artifacts only
+                // cover pure projection). Project/Insert/Query without a
+                // tensor payload are unanswerable — reject them here so a
+                // malformed request can never panic a worker.
+                let needs_tensor = matches!(
+                    env.req.op,
+                    RequestOp::Project | RequestOp::Insert | RequestOp::Query { .. }
+                );
+                let target = if needs_tensor && env.req.payload.tensor().is_none() {
+                    None
+                } else {
+                    match (env.req.op, &env.req.payload) {
+                        (RequestOp::Project, Payload::Tensor(t)) => Some(router.route(t)),
+                        _ => Some(RouteTarget::Native),
+                    }
+                };
+                match target {
+                    None => {
+                        shared.metrics.failed.fetch_add(1, Ordering::Relaxed);
+                        let _ = env
+                            .reply
+                            .send(Err("this op requires a tensor payload".into()));
+                    }
+                    Some(RouteTarget::Native) => {
+                        let key = native_map_key(&shared, &env.req);
+                        let lane = native_lanes.entry(key.clone()).or_insert_with(|| {
+                            NativeLane {
+                                batcher: Batcher::new(native_cfg),
+                                arrivals: ArrivalRate::new(shared.cfg.max_delay_us),
+                            }
+                        });
+                        if shared.cfg.adaptive_batch {
+                            lane.arrivals.observe(shared.now_us());
+                            let target_batch = lane.arrivals.suggest(native_cap);
+                            // High-water across lanes: a last-write gauge
+                            // would flap between unrelated signatures.
+                            shared
+                                .metrics
+                                .native_flush_max
+                                .fetch_max(target_batch as u64, Ordering::Relaxed);
+                            lane.batcher.set_max_batch(target_batch);
                         }
-                        let b = native_batchers.get_mut(&key).expect("just inserted");
-                        if let Some(batch) = b.push(env, shared.now_us()) {
+                        if let Some(batch) = lane.batcher.push(env, shared.now_us()) {
                             dispatch_native_batch(&shared, &pool, key, batch);
                         }
                     }
-                    RouteTarget::Pjrt(name) => {
+                    Some(RouteTarget::Pjrt(name)) => {
                         let cfg = artifact_batch_cfg[&name];
                         let b = batchers
                             .entry(name.clone())
@@ -253,8 +335,8 @@ fn dispatcher_loop(shared: Arc<Shared>, rx: Receiver<Envelope>) {
                         dispatch_pjrt(&shared, &pool, name, batch);
                     }
                 }
-                for (key, b) in native_batchers.iter_mut() {
-                    if let Some(batch) = b.flush() {
+                for (key, lane) in native_lanes.iter_mut() {
+                    if let Some(batch) = lane.batcher.flush() {
                         dispatch_native_batch(&shared, &pool, key.clone(), batch);
                     }
                 }
@@ -271,41 +353,43 @@ fn dispatcher_loop(shared: Arc<Shared>, rx: Receiver<Envelope>) {
                 dispatch_pjrt(&shared, &pool, name, batch);
             }
         }
-        for (key, b) in native_batchers.iter_mut() {
-            if let Some(batch) = b.poll(now) {
+        for (key, lane) in native_lanes.iter_mut() {
+            if let Some(batch) = lane.batcher.poll(now) {
                 dispatch_native_batch(&shared, &pool, key.clone(), batch);
             }
         }
         // MapKey dims come verbatim from (possibly remote) payloads, so
         // distinct signatures are unbounded over a server's lifetime;
-        // evict idle batchers past a high-water mark to bound both the
-        // map's memory and the sweep above.
-        const MAX_IDLE_NATIVE_BATCHERS: usize = 1024;
-        if native_batchers.len() > MAX_IDLE_NATIVE_BATCHERS {
-            native_batchers.retain(|_, b| !b.is_empty());
+        // evict idle lanes past a high-water mark to bound both the map's
+        // memory and the sweep above.
+        const MAX_IDLE_NATIVE_LANES: usize = 1024;
+        if native_lanes.len() > MAX_IDLE_NATIVE_LANES {
+            native_lanes.retain(|_, l| !l.batcher.is_empty());
         }
     }
     // Dropping the pool joins the workers after queued jobs finish.
     drop(pool);
 }
 
-/// Map policy for native-path requests.
-fn native_map_key(shared: &Shared, payload: &AnyTensor) -> MapKey {
+/// Map policy for native-path requests (tensor or signature-only: the
+/// policy depends only on format and dims).
+fn native_map_key(shared: &Shared, req: &ProjectRequest) -> MapKey {
     let cfg = &shared.cfg;
-    let dims = payload.dims().to_vec();
-    match payload {
-        AnyTensor::Tt(_) => MapKey {
+    let dims = req.payload.dims().to_vec();
+    match req.payload.format() {
+        Format::Tt => MapKey {
             kind: MapKind::Tt { rank: cfg.default_tt_rank },
             dims,
             k: cfg.default_k,
         },
-        AnyTensor::Cp(_) => MapKey {
+        Format::Cp => MapKey {
             kind: MapKind::Cp { rank: cfg.default_cp_rank },
             dims,
             k: cfg.default_k,
         },
-        AnyTensor::Dense(t) => {
-            let kind = if t.numel() <= cfg.dense_gaussian_limit {
+        Format::Dense => {
+            let numel: usize = dims.iter().product();
+            let kind = if numel <= cfg.dense_gaussian_limit {
                 MapKind::Gaussian
             } else {
                 MapKind::VerySparse
@@ -315,52 +399,254 @@ fn native_map_key(shared: &Shared, payload: &AnyTensor) -> MapKey {
     }
 }
 
-/// Execute one flushed native batch: resolve the shared map, run the
-/// whole batch through a single `project_batch_into` call on a pooled
-/// workspace, then split the `[B, k]` output into per-request replies.
+/// Dispatch one flushed native batch to the worker pool.
+///
+/// Pure-projection flushes are split into per-worker sub-batches (each
+/// still one batched execution) so single-signature saturation keeps the
+/// whole pool busy instead of serializing on one worker. Flushes carrying
+/// index ops run as a single job holding a FIFO ticket for the
+/// signature's [`super::state::IndexSlot`]: within a flush ops apply in
+/// arrival order, and across flushes the tickets keep index phases in
+/// dispatch (= arrival) order even when the jobs land on different
+/// workers.
 fn dispatch_native_batch(
     shared: &Arc<Shared>,
     pool: &ThreadPool,
     key: MapKey,
     batch: Vec<Envelope>,
 ) {
+    let has_index_ops = batch
+        .iter()
+        .any(|env| !matches!(env.req.op, RequestOp::Project));
+    if has_index_ops {
+        let slot = shared.indexes.get_or_create(&key);
+        let ticket = slot.issue_ticket();
+        submit_native_job(shared, pool, key, batch, Some((slot, ticket)));
+        return;
+    }
+    let workers = shared.cfg.workers.max(1);
+    if workers == 1 || batch.len() < 2 {
+        submit_native_job(shared, pool, key, batch, None);
+        return;
+    }
+    let chunk = batch.len().div_ceil(workers);
+    let mut remaining = batch;
+    while remaining.len() > chunk {
+        let rest = remaining.split_off(chunk);
+        submit_native_job(shared, pool, key.clone(), remaining, None);
+        remaining = rest;
+    }
+    submit_native_job(shared, pool, key, remaining, None);
+}
+
+fn submit_native_job(
+    shared: &Arc<Shared>,
+    pool: &ThreadPool,
+    key: MapKey,
+    batch: Vec<Envelope>,
+    index_turn: Option<(SharedIndex, u64)>,
+) {
     let shared = Arc::clone(shared);
-    pool.submit(move || {
+    pool.submit(move || run_native_batch(&shared, key, batch, index_turn));
+}
+
+/// Per-request reply metadata carried through one native flush.
+struct NativeItem {
+    op: RequestOp,
+    id: u64,
+    submit_us: u64,
+    reply: SyncSender<Reply>,
+    /// Row of this item's embedding in the flush's `out` buffer
+    /// (`None` for signature-only ops).
+    row: Option<usize>,
+}
+
+/// Execute one native job: resolve the shared map, run every tensor in
+/// the batch through a single `project_batch_into` call on a pooled
+/// workspace and a pooled output buffer, apply index ops (inside the
+/// flush's sequencer ticket), then split the `[B, k]` output into
+/// per-request replies.
+fn run_native_batch(
+    shared: &Arc<Shared>,
+    key: MapKey,
+    batch: Vec<Envelope>,
+    index_turn: Option<(SharedIndex, u64)>,
+) {
+    let k = key.k;
+    // Split payloads from reply metadata: `project_batch_into` takes the
+    // payload slice by reference, so no tensor is cloned.
+    let mut payloads: Vec<AnyTensor> = Vec::with_capacity(batch.len());
+    let mut items: Vec<NativeItem> = Vec::with_capacity(batch.len());
+    for env in batch {
+        let row = match env.req.payload {
+            Payload::Tensor(t) => {
+                payloads.push(t);
+                Some(payloads.len() - 1)
+            }
+            Payload::Signature { .. } => None,
+        };
+        items.push(NativeItem {
+            op: env.req.op,
+            id: env.req.id,
+            submit_us: env.submit_us,
+            reply: env.reply,
+            row,
+        });
+    }
+    let t0 = shared.now_us();
+    let mut out = shared.workspaces.acquire_buf(payloads.len() * k);
+    let mut ws = shared.workspaces.acquire();
+    if !payloads.is_empty() {
+        // Resolve (and lazily draw) the map only when something actually
+        // projects: signature-only flushes (delete/stats) must not
+        // materialize a projection map — remote-controlled dims would
+        // otherwise grow the registry without bound from tensorless
+        // requests.
         let entry = shared.registry.get_or_create(&key);
-        let k = key.k;
-        let b = batch.len();
-        // Split payloads from reply metadata: `project_batch_into` takes
-        // the payload slice by reference, so no tensor is cloned.
-        let mut payloads = Vec::with_capacity(b);
-        let mut meta = Vec::with_capacity(b);
-        for env in batch {
-            payloads.push(env.req.payload);
-            meta.push((env.req.id, env.submit_us, env.reply));
-        }
-        let mut out = vec![0.0; b * k];
-        let t0 = shared.now_us();
-        let mut ws = shared.workspaces.acquire();
         entry.map.project_batch_into(&payloads, &mut out, &mut ws);
-        shared.workspaces.release(ws);
-        let t1 = shared.now_us();
-        shared.metrics.native_batches.fetch_add(1, Ordering::Relaxed);
-        shared
-            .metrics
-            .native_requests
-            .fetch_add(b as u64, Ordering::Relaxed);
-        for (i, (id, submit_us, reply)) in meta.into_iter().enumerate() {
-            shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
-            shared.metrics.e2e_latency.record(t1.saturating_sub(submit_us));
-            let resp = ProjectResponse {
-                id,
-                embedding: out[i * k..(i + 1) * k].to_vec(),
-                path: EnginePath::Native,
-                queued_us: t0.saturating_sub(submit_us),
-                exec_us: t1 - t0,
-            };
-            let _ = reply.send(Ok(resp));
+    }
+
+    // Index phase (present iff the flush carries index ops, in which case
+    // the dispatcher issued a sequencer ticket). Ops apply strictly in
+    // arrival order — a query never observes a mutation that arrived
+    // after it, whether the two landed in one flush or different flushes
+    // (run_in_turn orders the flushes) — and each run of *consecutive*
+    // queries is scored as one batched GEMM on the pooled workspace.
+    let mut removed: Vec<Option<bool>> = vec![None; items.len()];
+    let mut neighbors: Vec<Option<Vec<Neighbor>>> = (0..items.len()).map(|_| None).collect();
+    let mut stats: Vec<Option<IndexStats>> = (0..items.len()).map(|_| None).collect();
+    if let Some((slot, ticket)) = index_turn {
+        slot.run_in_turn(ticket, |index| {
+            let mut pending: Vec<usize> = Vec::new();
+            for (i, it) in items.iter().enumerate() {
+                match it.op {
+                    RequestOp::Project => {}
+                    RequestOp::Query { .. } => pending.push(i),
+                    RequestOp::Insert => {
+                        score_pending(
+                            index,
+                            shared,
+                            &items,
+                            &out,
+                            &mut pending,
+                            &mut neighbors,
+                            &mut ws,
+                        );
+                        let r = it.row.expect("insert carries a tensor");
+                        index.insert(it.id, &out[r * k..(r + 1) * k]);
+                        shared.metrics.index_inserts.fetch_add(1, Ordering::Relaxed);
+                    }
+                    RequestOp::Delete { target } => {
+                        score_pending(
+                            index,
+                            shared,
+                            &items,
+                            &out,
+                            &mut pending,
+                            &mut neighbors,
+                            &mut ws,
+                        );
+                        removed[i] = Some(index.remove(target));
+                        shared.metrics.index_deletes.fetch_add(1, Ordering::Relaxed);
+                    }
+                    RequestOp::IndexStats => {
+                        score_pending(
+                            index,
+                            shared,
+                            &items,
+                            &out,
+                            &mut pending,
+                            &mut neighbors,
+                            &mut ws,
+                        );
+                        stats[i] = Some(index.stats());
+                    }
+                }
+            }
+            score_pending(
+                index,
+                shared,
+                &items,
+                &out,
+                &mut pending,
+                &mut neighbors,
+                &mut ws,
+            );
+        });
+    }
+    shared.workspaces.release(ws);
+    let t1 = shared.now_us();
+    shared.metrics.native_batches.fetch_add(1, Ordering::Relaxed);
+    shared
+        .metrics
+        .native_requests
+        .fetch_add(items.len() as u64, Ordering::Relaxed);
+    for (i, it) in items.into_iter().enumerate() {
+        shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
+        shared.metrics.e2e_latency.record(t1.saturating_sub(it.submit_us));
+        // Per-reply embeddings are exact-sized copies out of the pooled
+        // flush buffer: they leave the process inside the response, so
+        // pooling them would never recycle anything (the pool covers the
+        // buffers that *do* come back — flush `out` and query staging).
+        let embedding = match it.row {
+            Some(r) => out[r * k..(r + 1) * k].to_vec(),
+            None => Vec::new(),
+        };
+        let resp = ProjectResponse {
+            id: it.id,
+            embedding,
+            neighbors: neighbors[i].take(),
+            removed: removed[i],
+            index: stats[i].take(),
+            path: EnginePath::Native,
+            queued_us: t0.saturating_sub(it.submit_us),
+            exec_us: t1 - t0,
+        };
+        let _ = it.reply.send(Ok(resp));
+    }
+    shared.workspaces.release_buf(out);
+}
+
+/// Score the accumulated run of consecutive queries (`pending` holds
+/// item indices) as one batched GEMM against the index's current state,
+/// then clear the run. Batching only *runs* preserves arrival-order
+/// semantics — a query never observes a mutation that arrived after it —
+/// while still amortizing the scoring GEMM across adjacent queries (the
+/// common bulk-lookup shape).
+fn score_pending(
+    index: &mut dyn AnnIndex,
+    shared: &Shared,
+    items: &[NativeItem],
+    out: &[f64],
+    pending: &mut Vec<usize>,
+    neighbors: &mut [Option<Vec<Neighbor>>],
+    ws: &mut Workspace,
+) {
+    if pending.is_empty() {
+        return;
+    }
+    let k = index.dim();
+    // Stage the run's query embeddings contiguously ([nq, k]) in a
+    // pooled buffer.
+    let mut qs = shared.workspaces.acquire_buf(pending.len() * k);
+    let mut topks = Vec::with_capacity(pending.len());
+    for (qi, &i) in pending.iter().enumerate() {
+        let r = items[i].row.expect("query carries a tensor");
+        qs[qi * k..(qi + 1) * k].copy_from_slice(&out[r * k..(r + 1) * k]);
+        if let RequestOp::Query { k: topk } = items[i].op {
+            topks.push(topk);
         }
-    });
+    }
+    let results = index.query_batch(&qs, &topks, ws);
+    shared
+        .metrics
+        .index_queries
+        .fetch_add(pending.len() as u64, Ordering::Relaxed);
+    for (&i, res) in pending.iter().zip(results) {
+        neighbors[i] = Some(res);
+    }
+    shared.workspaces.release_buf(qs);
+    pending.clear();
 }
 
 fn dispatch_pjrt(shared: &Arc<Shared>, pool: &ThreadPool, artifact: &str, batch: Vec<BatchItem>) {
@@ -416,7 +702,7 @@ fn run_pjrt_batch(shared: &Arc<Shared>, artifact: &str, batch: &[BatchItem]) -> 
                 let xs: Vec<&crate::tensor::TtTensor> = batch
                     .iter()
                     .map(|item| match &item.env.req.payload {
-                        AnyTensor::Tt(t) => Ok(t),
+                        Payload::Tensor(AnyTensor::Tt(t)) => Ok(t),
                         _ => Err("routed non-TT payload to TT artifact".to_string()),
                     })
                     .collect::<Result<_, _>>()?;
@@ -431,7 +717,7 @@ fn run_pjrt_batch(shared: &Arc<Shared>, artifact: &str, batch: &[BatchItem]) -> 
                 let xs: Vec<&crate::tensor::CpTensor> = batch
                     .iter()
                     .map(|item| match &item.env.req.payload {
-                        AnyTensor::Cp(t) => Ok(t),
+                        Payload::Tensor(AnyTensor::Cp(t)) => Ok(t),
                         _ => Err("routed non-CP payload to CP artifact".to_string()),
                     })
                     .collect::<Result<_, _>>()?;
@@ -443,7 +729,7 @@ fn run_pjrt_batch(shared: &Arc<Shared>, artifact: &str, batch: &[BatchItem]) -> 
                 let xs: Vec<&crate::tensor::DenseTensor> = batch
                     .iter()
                     .map(|item| match &item.env.req.payload {
-                        AnyTensor::Dense(t) => Ok(t),
+                        Payload::Tensor(AnyTensor::Dense(t)) => Ok(t),
                         _ => Err("routed non-dense payload to dense artifact".to_string()),
                     })
                     .collect::<Result<_, _>>()?;
@@ -481,6 +767,9 @@ fn run_pjrt_batch(shared: &Arc<Shared>, artifact: &str, batch: &[BatchItem]) -> 
         let resp = ProjectResponse {
             id: item.env.req.id,
             embedding: row,
+            neighbors: None,
+            removed: None,
+            index: None,
             path: EnginePath::Pjrt(artifact.to_string()),
             queued_us: t0.saturating_sub(item.env.submit_us),
             exec_us: t1 - t0,
@@ -517,6 +806,7 @@ mod tests {
             assert_eq!(resp.id, i as u64);
             assert_eq!(resp.embedding.len(), 16);
             assert_eq!(resp.path, EnginePath::Native);
+            assert!(resp.neighbors.is_none());
         }
         let m = c.metrics();
         assert_eq!(m.submitted, 3);
@@ -615,5 +905,206 @@ mod tests {
         // The response must still arrive (drain semantics).
         let resp = rx.recv().unwrap().unwrap();
         assert_eq!(resp.id, 9);
+    }
+
+    #[test]
+    fn index_ops_roundtrip_through_coordinator() {
+        let c = native_coordinator();
+        let mut rng = Rng::seed_from(7);
+        let dims = vec![3usize; 4];
+        let xs: Vec<TtTensor> = (0..6)
+            .map(|_| TtTensor::random_unit(&dims, 2, &mut rng))
+            .collect();
+        for (i, x) in xs.iter().enumerate() {
+            let resp = c
+                .project_blocking(ProjectRequest::insert(i as u64, AnyTensor::Tt(x.clone())))
+                .unwrap();
+            assert_eq!(resp.embedding.len(), 16);
+        }
+        // Query with an inserted item: it must be its own nearest
+        // neighbour at distance 0.
+        let resp = c
+            .project_blocking(ProjectRequest::query(100, AnyTensor::Tt(xs[2].clone()), 3))
+            .unwrap();
+        let ns = resp.neighbors.expect("query returns neighbors");
+        assert_eq!(ns.len(), 3);
+        assert_eq!(ns[0].id, 2);
+        assert!(ns[0].dist < 1e-9);
+        // Delete it and re-query: it must be gone.
+        let resp = c
+            .project_blocking(ProjectRequest::delete(101, 2, Format::Tt, dims.clone()))
+            .unwrap();
+        assert_eq!(resp.removed, Some(true));
+        assert!(resp.embedding.is_empty());
+        let resp = c
+            .project_blocking(ProjectRequest::query(102, AnyTensor::Tt(xs[2].clone()), 3))
+            .unwrap();
+        let ns = resp.neighbors.expect("query returns neighbors");
+        assert!(ns.iter().all(|n| n.id != 2));
+        // Stats reflect the history.
+        let resp = c
+            .project_blocking(ProjectRequest::index_stats(103, Format::Tt, dims))
+            .unwrap();
+        let s = resp.index.expect("stats returned");
+        assert_eq!(s.len, 5);
+        assert_eq!(s.inserts, 6);
+        assert_eq!(s.deletes, 1);
+        assert_eq!(s.queries, 2);
+        let m = c.metrics();
+        assert_eq!(m.index_inserts, 6);
+        assert_eq!(m.index_deletes, 1);
+        assert_eq!(m.index_queries, 2);
+        c.shutdown();
+    }
+
+    #[test]
+    fn cross_flush_index_ops_execute_in_arrival_order() {
+        // Pipelined insert → delete pairs land in separate single-request
+        // flushes on different workers; the per-signature sequencer must
+        // keep them in arrival order (without it, a delete racing ahead
+        // of its insert reports false and leaks the item).
+        let c = Coordinator::start(
+            CoordinatorConfig {
+                workers: 4,
+                default_k: 8,
+                native_max_batch: 1,
+                adaptive_batch: false,
+                ..Default::default()
+            },
+            None,
+        );
+        let mut rng = Rng::seed_from(11);
+        let dims = vec![3usize; 4];
+        let x = TtTensor::random_unit(&dims, 2, &mut rng);
+        for round in 0..20u64 {
+            let rx1 = c.submit(ProjectRequest::insert(round, AnyTensor::Tt(x.clone())));
+            let rx2 = c.submit(ProjectRequest::delete(
+                1000 + round,
+                round,
+                Format::Tt,
+                dims.clone(),
+            ));
+            let r1 = rx1.recv().unwrap().unwrap();
+            let r2 = rx2.recv().unwrap().unwrap();
+            assert_eq!(r1.id, round);
+            assert_eq!(r2.removed, Some(true), "delete must observe the prior insert");
+        }
+        let resp = c
+            .project_blocking(ProjectRequest::index_stats(9999, Format::Tt, dims))
+            .unwrap();
+        assert_eq!(resp.index.unwrap().len, 0, "every insert was deleted in order");
+        c.shutdown();
+    }
+
+    #[test]
+    fn query_before_delete_sees_item_regardless_of_flush_boundaries() {
+        // Arrival-order semantics must not depend on whether a pipelined
+        // query → delete pair shares a flush: the query arrived first, so
+        // it always observes the item.
+        let c = Coordinator::start(
+            CoordinatorConfig {
+                workers: 2,
+                default_k: 8,
+                native_max_batch: 4,
+                adaptive_batch: false,
+                ..Default::default()
+            },
+            None,
+        );
+        let mut rng = Rng::seed_from(12);
+        let dims = vec![3usize; 4];
+        let x = TtTensor::random_unit(&dims, 2, &mut rng);
+        for round in 0..10u64 {
+            c.project_blocking(ProjectRequest::insert(1, AnyTensor::Tt(x.clone())))
+                .unwrap();
+            let rx_q = c.submit(ProjectRequest::query(100 + round, AnyTensor::Tt(x.clone()), 1));
+            let rx_d =
+                c.submit(ProjectRequest::delete(200 + round, 1, Format::Tt, dims.clone()));
+            let q = rx_q.recv().unwrap().unwrap();
+            let d = rx_d.recv().unwrap().unwrap();
+            let ns = q.neighbors.unwrap();
+            assert_eq!(ns.first().map(|n| n.id), Some(1), "query precedes delete");
+            assert_eq!(d.removed, Some(true));
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn delete_of_absent_item_reports_false() {
+        let c = native_coordinator();
+        let resp = c
+            .project_blocking(ProjectRequest::delete(1, 999, Format::Tt, vec![3; 4]))
+            .unwrap();
+        assert_eq!(resp.removed, Some(false));
+        c.shutdown();
+    }
+
+    #[test]
+    fn project_with_signature_payload_is_rejected() {
+        let c = native_coordinator();
+        let req = ProjectRequest {
+            id: 5,
+            op: RequestOp::Project,
+            payload: Payload::Signature { format: Format::Tt, dims: vec![3; 4] },
+        };
+        let reply = c.project_blocking(req);
+        assert!(reply.is_err());
+        assert_eq!(c.metrics().failed, 1);
+        c.shutdown();
+    }
+
+    #[test]
+    fn parallel_flush_split_preserves_results() {
+        // One signature, one big burst, several workers: the flush is
+        // split into sub-batches but responses must be identical to the
+        // single-worker run.
+        let mut rng = Rng::seed_from(8);
+        let payloads: Vec<AnyTensor> = (0..32)
+            .map(|_| AnyTensor::Tt(TtTensor::random_unit(&[3; 4], 2, &mut rng)))
+            .collect();
+        let run = |workers: usize| -> Vec<Vec<f64>> {
+            let c = Coordinator::start(
+                CoordinatorConfig {
+                    workers,
+                    default_k: 8,
+                    native_max_batch: 32,
+                    adaptive_batch: false,
+                    ..Default::default()
+                },
+                None,
+            );
+            let rxs: Vec<_> = payloads
+                .iter()
+                .enumerate()
+                .map(|(i, p)| c.submit(ProjectRequest::new(i as u64, p.clone())))
+                .collect();
+            let out = rxs
+                .into_iter()
+                .map(|rx| rx.recv().unwrap().unwrap().embedding)
+                .collect();
+            c.shutdown();
+            out
+        };
+        assert_eq!(run(4), run(1));
+    }
+
+    #[test]
+    fn adaptive_batch_reports_flush_target() {
+        let c = Coordinator::start(
+            CoordinatorConfig {
+                workers: 2,
+                default_k: 8,
+                native_max_batch: 16,
+                adaptive_batch: true,
+                ..Default::default()
+            },
+            None,
+        );
+        let mut rng = Rng::seed_from(9);
+        let x = TtTensor::random_unit(&[3; 4], 2, &mut rng);
+        let _ = c.project_blocking(ProjectRequest::new(1, AnyTensor::Tt(x)));
+        let m = c.metrics();
+        assert!((1..=16).contains(&m.native_flush_max));
+        c.shutdown();
     }
 }

@@ -6,6 +6,7 @@
 //! from `(master_seed, map key)`, so a restarted coordinator reproduces
 //! identical maps, and the PJRT and native paths share one draw.
 
+use crate::index::{build_index, AnnIndex, BackendKind, LshConfig};
 use crate::projections::{
     CpProjection, GaussianProjection, Projection, SparseKind, SparseProjection, TtProjection,
     Workspace,
@@ -14,7 +15,8 @@ use crate::rng::Rng;
 use crate::runtime::{pack, ArtifactKind, ArtifactSpec};
 use anyhow::Result;
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Which projection family a registry entry uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -77,7 +79,16 @@ pub struct MapEntry {
 #[derive(Default)]
 pub struct WorkspacePool {
     free: Mutex<Vec<Workspace>>,
+    /// Recyclable `f64` buffers: flushed-batch `out` buffers and the
+    /// index path's query-staging buffers (the buffers that come back;
+    /// per-reply embeddings leave the process inside responses and are
+    /// deliberately not pooled).
+    bufs: Mutex<Vec<Vec<f64>>>,
 }
+
+/// Cap on pooled `f64` buffers: the pool only has to cover the in-flight
+/// flushes of the worker pool.
+const MAX_POOLED_BUFS: usize = 64;
 
 impl WorkspacePool {
     /// New empty pool (workspaces are created lazily on first acquire).
@@ -99,6 +110,71 @@ impl WorkspacePool {
     pub fn idle(&self) -> usize {
         self.free.lock().unwrap().len()
     }
+
+    /// Take a zeroed `len`-element buffer, reusing a pooled allocation
+    /// when one of a fitting size exists (steady-state flushes allocate
+    /// nothing). "Fitting" bounds the over-capacity: a flush-sized buffer
+    /// must not be handed out as a `k`-sized reply embedding, or its full
+    /// capacity leaves the process inside the response.
+    pub fn acquire_buf(&self, len: usize) -> Vec<f64> {
+        let mut bufs = self.bufs.lock().unwrap();
+        let fit = bufs
+            .iter()
+            .position(|b| b.capacity() >= len && b.capacity() <= len.saturating_mul(4).max(64));
+        let mut buf = match fit {
+            Some(i) => bufs.swap_remove(i),
+            None => Vec::new(),
+        };
+        drop(bufs);
+        buf.clear();
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Return a buffer for reuse. Buffers handed to clients inside a
+    /// response never come back — only flush `out` buffers and embeddings
+    /// whose reply channel was dropped are recycled — so the pool is
+    /// bounded by [`MAX_POOLED_BUFS`] and excess buffers are simply freed.
+    pub fn release_buf(&self, buf: Vec<f64>) {
+        let mut bufs = self.bufs.lock().unwrap();
+        if bufs.len() < MAX_POOLED_BUFS {
+            bufs.push(buf);
+        }
+    }
+
+    /// Number of idle pooled buffers.
+    pub fn idle_bufs(&self) -> usize {
+        self.bufs.lock().unwrap().len()
+    }
+}
+
+/// Stable seed for a map key: FNV-1a over the key's canonical encoding,
+/// mixed with `master_seed`. Shared by the projection and index
+/// registries (the index registry perturbs the master so hash hyperplanes
+/// never reuse a projection map's stream).
+fn map_key_seed(master_seed: u64, key: &MapKey) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325 ^ master_seed;
+    let mut eat = |x: u64| {
+        h ^= x;
+        h = h.wrapping_mul(0x1_0000_0000_01b3);
+    };
+    match key.kind {
+        MapKind::Tt { rank } => {
+            eat(1);
+            eat(rank as u64);
+        }
+        MapKind::Cp { rank } => {
+            eat(2);
+            eat(rank as u64);
+        }
+        MapKind::Gaussian => eat(3),
+        MapKind::VerySparse => eat(4),
+    }
+    for &d in &key.dims {
+        eat(d as u64);
+    }
+    eat(key.k as u64);
+    h
 }
 
 /// Deterministic, thread-safe projection-map registry.
@@ -115,29 +191,7 @@ impl ProjectionRegistry {
 
     /// Stable per-key seed: hash the key fields into the master seed.
     fn seed_for(&self, key: &MapKey) -> u64 {
-        // FNV-1a over the key's canonical encoding, mixed with the master.
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325 ^ self.master_seed;
-        let mut eat = |x: u64| {
-            h ^= x;
-            h = h.wrapping_mul(0x1_0000_0000_01b3);
-        };
-        match key.kind {
-            MapKind::Tt { rank } => {
-                eat(1);
-                eat(rank as u64);
-            }
-            MapKind::Cp { rank } => {
-                eat(2);
-                eat(rank as u64);
-            }
-            MapKind::Gaussian => eat(3),
-            MapKind::VerySparse => eat(4),
-        }
-        for &d in &key.dims {
-            eat(d as u64);
-        }
-        eat(key.k as u64);
-        h
+        map_key_seed(self.master_seed, key)
     }
 
     /// Get or create the map for `key` (no PJRT packing).
@@ -227,6 +281,111 @@ impl ProjectionRegistry {
     }
 }
 
+/// One signature's ANN index plus the FIFO sequencer that orders the
+/// index phases of its flushes.
+///
+/// Flushes for one signature are dispatched in arrival order but execute
+/// on different pool workers, so without sequencing a pipelined
+/// `insert → delete` pair could reach the index reversed. The dispatcher
+/// reserves a ticket per index-carrying flush ([`IndexSlot::issue_ticket`],
+/// called in dispatch order from the single dispatcher thread); the worker
+/// runs its index phase inside [`IndexSlot::run_in_turn`], which blocks
+/// until every earlier ticket has completed. The worker pool dequeues
+/// jobs FIFO, so ticket `n` always starts before `n+1` and the wait can
+/// never deadlock.
+pub struct IndexSlot {
+    /// The ANN index. Lock it directly for out-of-band access; the
+    /// coordinator's flushes go through [`IndexSlot::run_in_turn`].
+    pub index: Mutex<Box<dyn AnnIndex>>,
+    /// Next ticket allowed to run its index phase.
+    turn: Mutex<u64>,
+    turn_done: Condvar,
+    /// Tickets handed out so far.
+    issued: AtomicU64,
+}
+
+impl IndexSlot {
+    fn new(index: Box<dyn AnnIndex>) -> Self {
+        Self {
+            index: Mutex::new(index),
+            turn: Mutex::new(0),
+            turn_done: Condvar::new(),
+            issued: AtomicU64::new(0),
+        }
+    }
+
+    /// Reserve the next position in this signature's index order. Call in
+    /// dispatch order (the coordinator calls it from the dispatcher
+    /// thread, before submitting the flush to the worker pool).
+    pub fn issue_ticket(&self) -> u64 {
+        self.issued.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Block until `ticket` is at the head of the order, run `f` on the
+    /// locked index, then release the turn to the next ticket.
+    pub fn run_in_turn<R>(&self, ticket: u64, f: impl FnOnce(&mut dyn AnnIndex) -> R) -> R {
+        let mut turn = self.turn.lock().unwrap();
+        while *turn != ticket {
+            turn = self.turn_done.wait(turn).unwrap();
+        }
+        let result = {
+            let mut index = self.index.lock().unwrap();
+            f(index.as_mut())
+        };
+        *turn += 1;
+        self.turn_done.notify_all();
+        result
+    }
+}
+
+/// A per-signature index shared between the registry and worker jobs.
+pub type SharedIndex = Arc<IndexSlot>;
+
+/// Deterministic, thread-safe registry of per-signature ANN indexes.
+///
+/// One index per [`MapKey`]: every item stored in an index was embedded by
+/// that key's projection map, so distances are comparable. Indexes are
+/// created lazily on the first index op for a signature; the LSH backend's
+/// hyperplanes are seeded from `(master_seed, key)` so a restarted
+/// coordinator reproduces identical bucket assignments.
+pub struct IndexRegistry {
+    master_seed: u64,
+    backend: BackendKind,
+    lsh: LshConfig,
+    indexes: Mutex<HashMap<MapKey, SharedIndex>>,
+}
+
+impl IndexRegistry {
+    /// New registry creating `backend` indexes (LSH shape from `lsh`).
+    pub fn new(master_seed: u64, backend: BackendKind, lsh: LshConfig) -> Self {
+        Self { master_seed, backend, lsh, indexes: Mutex::new(HashMap::new()) }
+    }
+
+    /// Get or lazily create the index slot for `key` (dimension `key.k`).
+    pub fn get_or_create(&self, key: &MapKey) -> SharedIndex {
+        let mut indexes = self.indexes.lock().unwrap();
+        if let Some(slot) = indexes.get(key) {
+            return Arc::clone(slot);
+        }
+        // Perturb the master so the hyperplane stream differs from the
+        // projection map drawn for the same key.
+        let seed = map_key_seed(self.master_seed ^ 0xA11_1DE8_5EED, key);
+        let slot = Arc::new(IndexSlot::new(build_index(self.backend, key.k, &self.lsh, seed)));
+        indexes.insert(key.clone(), Arc::clone(&slot));
+        slot
+    }
+
+    /// Number of live indexes.
+    pub fn len(&self) -> usize {
+        self.indexes.lock().unwrap().len()
+    }
+
+    /// True when no index has been created yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -280,5 +439,80 @@ mod tests {
         let tt = MapKey { kind: MapKind::Tt { rank: 3 }, dims: vec![4; 3], k: 5 };
         let cp = MapKey { kind: MapKind::Cp { rank: 3 }, dims: vec![4; 3], k: 5 };
         assert_ne!(reg.seed_for(&tt), reg.seed_for(&cp));
+    }
+
+    #[test]
+    fn buffer_pool_recycles_allocations() {
+        let pool = WorkspacePool::new();
+        let buf = pool.acquire_buf(32);
+        assert_eq!(buf.len(), 32);
+        assert!(buf.iter().all(|&v| v == 0.0));
+        pool.release_buf(buf);
+        assert_eq!(pool.idle_bufs(), 1);
+        // Reacquire at a different size: same allocation, new length, and
+        // the contents are zeroed again.
+        let mut buf = pool.acquire_buf(8);
+        assert_eq!(pool.idle_bufs(), 0);
+        assert_eq!(buf.len(), 8);
+        buf[0] = 7.0;
+        pool.release_buf(buf);
+        let buf = pool.acquire_buf(8);
+        assert!(buf.iter().all(|&v| v == 0.0), "recycled buffers are re-zeroed");
+        pool.release_buf(buf);
+        // A grossly oversized pooled buffer is not handed out for a tiny
+        // request (its capacity would leave the process inside a reply).
+        pool.release_buf(vec![0.0; 4096]);
+        let tiny = pool.acquire_buf(4);
+        assert!(tiny.capacity() < 4096, "flush-sized buffer must not back a tiny reply");
+    }
+
+    #[test]
+    fn index_registry_returns_same_index_for_same_key() {
+        let reg = IndexRegistry::new(
+            7,
+            crate::index::BackendKind::Flat,
+            crate::index::LshConfig::default(),
+        );
+        assert!(reg.is_empty());
+        let a = reg.get_or_create(&tt_key());
+        let b = reg.get_or_create(&tt_key());
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(reg.len(), 1);
+        assert_eq!(a.index.lock().unwrap().dim(), tt_key().k);
+    }
+
+    #[test]
+    fn index_slot_runs_tickets_in_issue_order() {
+        let reg = IndexRegistry::new(
+            1,
+            crate::index::BackendKind::Flat,
+            crate::index::LshConfig::default(),
+        );
+        let slot = reg.get_or_create(&tt_key());
+        let t0 = slot.issue_ticket();
+        let t1 = slot.issue_ticket();
+        assert_eq!((t0, t1), (0, 1));
+        let log = Arc::new(Mutex::new(Vec::new()));
+        // Run the *later* ticket on another thread first: it must block
+        // until the earlier ticket completes.
+        let handle = {
+            let slot = Arc::clone(&slot);
+            let log = Arc::clone(&log);
+            std::thread::spawn(move || {
+                slot.run_in_turn(t1, |_| log.lock().unwrap().push(1));
+            })
+        };
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        slot.run_in_turn(t0, |_| log.lock().unwrap().push(0));
+        handle.join().unwrap();
+        assert_eq!(*log.lock().unwrap(), vec![0, 1]);
+    }
+
+    #[test]
+    fn index_seed_differs_from_map_seed() {
+        // The LSH hyperplane stream must not reuse the projection map's
+        // stream for the same key.
+        let key = tt_key();
+        assert_ne!(map_key_seed(7, &key), map_key_seed(7 ^ 0xA11_1DE8_5EED, &key));
     }
 }

@@ -1,33 +1,57 @@
 //! Wire format: newline-delimited JSON encoding of requests/responses for
 //! the TCP front-end ([`super::net`]).
 //!
-//! Request:
+//! Request (`"op"` defaults to `"project"` when omitted):
 //! ```json
 //! {"id": 7, "format": "tt", "dims": [3,3,3], "ranks": [1,2,2,1],
 //!  "cores": [[…], […], […]]}
-//! {"id": 8, "format": "cp", "dims": [3,3], "rank": 2, "factors": [[…], […]]}
-//! {"id": 9, "format": "dense", "dims": [4,4], "values": [
-
-//! …]}
+//! {"id": 8, "op": "insert", "format": "cp", "dims": [3,3], "rank": 2,
+//!  "factors": [[…], […]]}
+//! {"id": 9, "op": "query", "k": 10, "format": "dense", "dims": [4,4],
+//!  "values": […]}
+//! {"id": 10, "op": "delete", "target": 8, "format": "cp", "dims": [3,3]}
+//! {"id": 11, "op": "stats", "format": "cp", "dims": [3,3]}
 //! ```
-//! Response: `{"id": 7, "embedding": […], "path": "pjrt:tt_rp_medium",
-//! "queued_us": 120, "exec_us": 1500}` or `{"id": 7, "error": "…"}`.
+//! Response: `{"id": 7, "embedding": […], "path": "native", "queued_us":
+//! 120, "exec_us": 1500}`, plus `"neighbors": [{"id": 3, "dist": 0.12},
+//! …]` for queries, `"removed": true|false` for deletes, `"index":
+//! {"backend": "flat", "len": 12, …}` for stats — or `{"id": 7,
+//! "error": "…"}`.
+//!
+//! Limitation: every id on the wire (`id`, `target`, neighbour ids)
+//! travels as a JSON number and therefore round-trips exactly only up to
+//! 2⁵³ − 1. Wire clients must not use larger ids (e.g. raw 64-bit content
+//! hashes); the in-process API has no such limit.
 
-use super::request::{ProjectRequest, ProjectResponse};
+use super::request::{Payload, ProjectRequest, ProjectResponse, RequestOp};
+use crate::index::{IndexStats, Neighbor};
 use crate::linalg::Matrix;
-use crate::tensor::{AnyTensor, CpTensor, DenseTensor, TtTensor};
+use crate::tensor::{AnyTensor, CpTensor, DenseTensor, Format, TtTensor};
 use crate::util::json::{num_arr, obj, usize_arr, Json};
 
 /// Encode a request as a single JSON line (no trailing newline).
 pub fn encode_request(req: &ProjectRequest) -> String {
     let mut fields: Vec<(&str, Json)> = vec![("id", Json::Num(req.id as f64))];
+    match req.op {
+        RequestOp::Project => {}
+        RequestOp::Insert => fields.push(("op", Json::Str("insert".into()))),
+        RequestOp::Query { k } => {
+            fields.push(("op", Json::Str("query".into())));
+            fields.push(("k", Json::Num(k as f64)));
+        }
+        RequestOp::Delete { target } => {
+            fields.push(("op", Json::Str("delete".into())));
+            fields.push(("target", Json::Num(target as f64)));
+        }
+        RequestOp::IndexStats => fields.push(("op", Json::Str("stats".into()))),
+    }
     match &req.payload {
-        AnyTensor::Dense(t) => {
+        Payload::Tensor(AnyTensor::Dense(t)) => {
             fields.push(("format", Json::Str("dense".into())));
             fields.push(("dims", usize_arr(t.dims())));
             fields.push(("values", num_arr(t.data())));
         }
-        AnyTensor::Tt(t) => {
+        Payload::Tensor(AnyTensor::Tt(t)) => {
             fields.push(("format", Json::Str("tt".into())));
             fields.push(("dims", usize_arr(t.dims())));
             fields.push(("ranks", usize_arr(t.ranks())));
@@ -36,7 +60,7 @@ pub fn encode_request(req: &ProjectRequest) -> String {
                 Json::Arr((0..t.order()).map(|n| num_arr(t.core(n))).collect()),
             ));
         }
-        AnyTensor::Cp(t) => {
+        Payload::Tensor(AnyTensor::Cp(t)) => {
             fields.push(("format", Json::Str("cp".into())));
             fields.push(("dims", usize_arr(t.dims())));
             fields.push(("rank", Json::Num(t.rank() as f64)));
@@ -49,6 +73,10 @@ pub fn encode_request(req: &ProjectRequest) -> String {
                 ),
             ));
         }
+        Payload::Signature { format, dims } => {
+            fields.push(("format", Json::Str(format.to_string())));
+            fields.push(("dims", usize_arr(dims)));
+        }
     }
     obj(fields).to_string_compact()
 }
@@ -60,17 +88,38 @@ pub fn decode_request(line: &str) -> Result<ProjectRequest, String> {
         .get("id")
         .and_then(Json::as_f64)
         .ok_or("missing id")? as u64;
-    let format = j.get("format").and_then(Json::as_str).ok_or("missing format")?;
+    let op = match j.get("op").and_then(Json::as_str) {
+        None | Some("project") => RequestOp::Project,
+        Some("insert") => RequestOp::Insert,
+        Some("query") => {
+            let k = j.get("k").and_then(Json::as_usize).ok_or("query needs k")?;
+            RequestOp::Query { k }
+        }
+        Some("delete") => {
+            let target =
+                j.get("target").and_then(Json::as_f64).ok_or("delete needs target")? as u64;
+            RequestOp::Delete { target }
+        }
+        Some("stats") => RequestOp::IndexStats,
+        Some(other) => return Err(format!("unknown op {other:?}")),
+    };
+    let format_str = j.get("format").and_then(Json::as_str).ok_or("missing format")?;
+    let format =
+        Format::parse(format_str).ok_or_else(|| format!("unknown format {format_str:?}"))?;
     let dims = j
         .get("dims")
         .and_then(Json::as_usize_vec)
         .ok_or("missing dims")?;
-    let payload = match format {
-        "dense" => {
+    // Signature-only ops carry no tensor data.
+    if matches!(op, RequestOp::Delete { .. } | RequestOp::IndexStats) {
+        return Ok(ProjectRequest { id, op, payload: Payload::Signature { format, dims } });
+    }
+    let tensor = match format {
+        Format::Dense => {
             let values = num_vec(j.get("values").ok_or("missing values")?)?;
             AnyTensor::Dense(DenseTensor::from_vec(&dims, values))
         }
-        "tt" => {
+        Format::Tt => {
             let ranks = j
                 .get("ranks")
                 .and_then(Json::as_usize_vec)
@@ -82,7 +131,7 @@ pub fn decode_request(line: &str) -> Result<ProjectRequest, String> {
                 .collect::<Result<Vec<_>, _>>()?;
             AnyTensor::Tt(TtTensor::from_cores(&dims, &ranks, cores))
         }
-        "cp" => {
+        Format::Cp => {
             let rank = j
                 .get("rank")
                 .and_then(Json::as_usize)
@@ -101,22 +150,79 @@ pub fn decode_request(line: &str) -> Result<ProjectRequest, String> {
                 .collect::<Result<Vec<_>, String>>()?;
             AnyTensor::Cp(CpTensor::from_factors(factors))
         }
-        other => return Err(format!("unknown format {other:?}")),
     };
-    Ok(ProjectRequest::new(id, payload))
+    Ok(ProjectRequest { id, op, payload: Payload::Tensor(tensor) })
+}
+
+/// Encode index statistics as a JSON object.
+fn index_stats_json(s: &IndexStats) -> Json {
+    obj(vec![
+        ("backend", Json::Str(s.backend.clone())),
+        ("len", Json::Num(s.len as f64)),
+        ("dim", Json::Num(s.dim as f64)),
+        ("inserts", Json::Num(s.inserts as f64)),
+        ("deletes", Json::Num(s.deletes as f64)),
+        ("queries", Json::Num(s.queries as f64)),
+        ("buckets", Json::Num(s.buckets as f64)),
+        ("max_bucket", Json::Num(s.max_bucket as f64)),
+    ])
+}
+
+/// Decode index statistics from a JSON object.
+fn decode_index_stats(j: &Json) -> Result<IndexStats, String> {
+    let get_u64 = |key: &str| -> u64 {
+        j.get(key).and_then(Json::as_f64).unwrap_or(0.0) as u64
+    };
+    Ok(IndexStats {
+        backend: j
+            .get("backend")
+            .and_then(Json::as_str)
+            .ok_or("index stats missing backend")?
+            .to_string(),
+        len: j.get("len").and_then(Json::as_usize).ok_or("index stats missing len")?,
+        dim: j.get("dim").and_then(Json::as_usize).unwrap_or(0),
+        inserts: get_u64("inserts"),
+        deletes: get_u64("deletes"),
+        queries: get_u64("queries"),
+        buckets: j.get("buckets").and_then(Json::as_usize).unwrap_or(0),
+        max_bucket: j.get("max_bucket").and_then(Json::as_usize).unwrap_or(0),
+    })
 }
 
 /// Encode a (successful or failed) response as a JSON line.
 pub fn encode_response(result: &Result<ProjectResponse, String>, fallback_id: u64) -> String {
     match result {
-        Ok(resp) => obj(vec![
-            ("id", Json::Num(resp.id as f64)),
-            ("embedding", num_arr(&resp.embedding)),
-            ("path", Json::Str(resp.path.to_string())),
-            ("queued_us", Json::Num(resp.queued_us as f64)),
-            ("exec_us", Json::Num(resp.exec_us as f64)),
-        ])
-        .to_string_compact(),
+        Ok(resp) => {
+            let mut fields: Vec<(&str, Json)> = vec![
+                ("id", Json::Num(resp.id as f64)),
+                ("embedding", num_arr(&resp.embedding)),
+                ("path", Json::Str(resp.path.to_string())),
+                ("queued_us", Json::Num(resp.queued_us as f64)),
+                ("exec_us", Json::Num(resp.exec_us as f64)),
+            ];
+            if let Some(ns) = &resp.neighbors {
+                fields.push((
+                    "neighbors",
+                    Json::Arr(
+                        ns.iter()
+                            .map(|n| {
+                                obj(vec![
+                                    ("id", Json::Num(n.id as f64)),
+                                    ("dist", Json::Num(n.dist)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ));
+            }
+            if let Some(r) = resp.removed {
+                fields.push(("removed", Json::Bool(r)));
+            }
+            if let Some(s) = &resp.index {
+                fields.push(("index", index_stats_json(s)));
+            }
+            obj(fields).to_string_compact()
+        }
         Err(e) => obj(vec![
             ("id", Json::Num(fallback_id as f64)),
             ("error", Json::Str(e.clone())),
@@ -132,6 +238,12 @@ pub struct WireResponse {
     pub id: u64,
     /// Embedding when successful.
     pub embedding: Option<Vec<f64>>,
+    /// Neighbours (query responses).
+    pub neighbors: Option<Vec<Neighbor>>,
+    /// Delete outcome (delete responses).
+    pub removed: Option<bool>,
+    /// Index statistics (stats responses).
+    pub index: Option<IndexStats>,
     /// Error message when failed.
     pub error: Option<String>,
     /// Serving path string.
@@ -142,10 +254,34 @@ pub struct WireResponse {
 pub fn decode_response(line: &str) -> Result<WireResponse, String> {
     let j = Json::parse(line).map_err(|e| e.to_string())?;
     let id = j.get("id").and_then(Json::as_f64).ok_or("missing id")? as u64;
+    let neighbors = match j.get("neighbors").and_then(Json::as_arr) {
+        Some(items) => Some(
+            items
+                .iter()
+                .map(|n| -> Result<Neighbor, String> {
+                    Ok(Neighbor {
+                        id: n.get("id").and_then(Json::as_f64).ok_or("neighbor missing id")?
+                            as u64,
+                        dist: n
+                            .get("dist")
+                            .and_then(Json::as_f64)
+                            .ok_or("neighbor missing dist")?,
+                    })
+                })
+                .collect::<Result<Vec<_>, _>>()?,
+        ),
+        None => None,
+    };
     Ok(WireResponse {
         id,
         embedding: match j.get("embedding") {
             Some(v) => Some(num_vec(v)?),
+            None => None,
+        },
+        neighbors,
+        removed: j.get("removed").and_then(Json::as_bool),
+        index: match j.get("index") {
+            Some(s) => Some(decode_index_stats(s)?),
             None => None,
         },
         error: j.get("error").and_then(Json::as_str).map(|s| s.to_string()),
@@ -174,8 +310,9 @@ mod tests {
         let line = encode_request(&req);
         let back = decode_request(&line).unwrap();
         assert_eq!(back.id, 42);
+        assert_eq!(back.op, RequestOp::Project);
         match back.payload {
-            AnyTensor::Tt(t) => {
+            Payload::Tensor(AnyTensor::Tt(t)) => {
                 assert_eq!(t.dims(), x.dims());
                 assert!((t.fro_norm() - x.fro_norm()).abs() < 1e-12);
             }
@@ -192,7 +329,9 @@ mod tests {
             AnyTensor::Cp(cp.clone()),
         )))
         .unwrap();
-        assert!((back.payload.fro_norm() - cp.fro_norm()).abs() < 1e-12);
+        assert!(
+            (back.payload.tensor().unwrap().fro_norm() - cp.fro_norm()).abs() < 1e-12
+        );
 
         let d = DenseTensor::random(&[2, 5], &mut rng);
         let back = decode_request(&encode_request(&ProjectRequest::new(
@@ -201,9 +340,47 @@ mod tests {
         )))
         .unwrap();
         match back.payload {
-            AnyTensor::Dense(t) => assert_eq!(t.data(), d.data()),
+            Payload::Tensor(AnyTensor::Dense(t)) => assert_eq!(t.data(), d.data()),
             _ => panic!("wrong format"),
         }
+    }
+
+    #[test]
+    fn index_op_request_roundtrips() {
+        let mut rng = Rng::seed_from(3);
+        let x = TtTensor::random_unit(&[3, 3, 3], 2, &mut rng);
+        // Insert.
+        let back =
+            decode_request(&encode_request(&ProjectRequest::insert(7, AnyTensor::Tt(x.clone()))))
+                .unwrap();
+        assert_eq!(back.op, RequestOp::Insert);
+        assert!(back.payload.tensor().is_some());
+        // Query.
+        let back =
+            decode_request(&encode_request(&ProjectRequest::query(8, AnyTensor::Tt(x), 10)))
+                .unwrap();
+        assert_eq!(back.op, RequestOp::Query { k: 10 });
+        // Delete: signature only.
+        let back = decode_request(&encode_request(&ProjectRequest::delete(
+            9,
+            7,
+            Format::Tt,
+            vec![3, 3, 3],
+        )))
+        .unwrap();
+        assert_eq!(back.op, RequestOp::Delete { target: 7 });
+        assert_eq!(back.payload.format(), Format::Tt);
+        assert_eq!(back.payload.dims(), &[3, 3, 3]);
+        assert!(back.payload.tensor().is_none());
+        // Stats: signature only.
+        let back = decode_request(&encode_request(&ProjectRequest::index_stats(
+            10,
+            Format::Cp,
+            vec![2, 2],
+        )))
+        .unwrap();
+        assert_eq!(back.op, RequestOp::IndexStats);
+        assert_eq!(back.payload.format(), Format::Cp);
     }
 
     #[test]
@@ -211,6 +388,9 @@ mod tests {
         let resp = ProjectResponse {
             id: 9,
             embedding: vec![0.5, -1.5],
+            neighbors: None,
+            removed: None,
+            index: None,
             path: super::super::request::EnginePath::Native,
             queued_us: 10,
             exec_us: 20,
@@ -221,6 +401,9 @@ mod tests {
         assert_eq!(back.embedding.unwrap(), vec![0.5, -1.5]);
         assert_eq!(back.path.as_deref(), Some("native"));
         assert!(back.error.is_none());
+        assert!(back.neighbors.is_none());
+        assert!(back.removed.is_none());
+        assert!(back.index.is_none());
 
         let line = encode_response(&Err("boom".into()), 7);
         let back = decode_response(&line).unwrap();
@@ -230,10 +413,52 @@ mod tests {
     }
 
     #[test]
+    fn response_with_neighbors_and_stats_roundtrips() {
+        let resp = ProjectResponse {
+            id: 11,
+            embedding: vec![0.25],
+            neighbors: Some(vec![
+                Neighbor { id: 3, dist: 0.125 },
+                Neighbor { id: 9, dist: 0.75 },
+            ]),
+            removed: Some(true),
+            index: Some(IndexStats {
+                backend: "lsh".into(),
+                len: 12,
+                dim: 16,
+                inserts: 14,
+                deletes: 2,
+                queries: 5,
+                buckets: 40,
+                max_bucket: 3,
+            }),
+            path: super::super::request::EnginePath::Native,
+            queued_us: 1,
+            exec_us: 2,
+        };
+        let line = encode_response(&Ok(resp.clone()), 11);
+        let back = decode_response(&line).unwrap();
+        assert_eq!(back.neighbors.unwrap(), resp.neighbors.unwrap());
+        assert_eq!(back.removed, Some(true));
+        assert_eq!(back.index.unwrap(), resp.index.unwrap());
+    }
+
+    #[test]
     fn malformed_requests_are_rejected() {
         assert!(decode_request("not json").is_err());
         assert!(decode_request(r#"{"id": 1}"#).is_err());
         assert!(decode_request(r#"{"id":1,"format":"tucker","dims":[2]}"#).is_err());
         assert!(decode_request(r#"{"id":1,"format":"dense","dims":[2]}"#).is_err());
+        // Unknown op / missing op parameters.
+        assert!(decode_request(r#"{"id":1,"op":"upsert","format":"tt","dims":[2]}"#).is_err());
+        assert!(
+            decode_request(r#"{"id":1,"op":"query","format":"dense","dims":[2],"values":[1,2]}"#)
+                .is_err(),
+            "query without k must be rejected"
+        );
+        assert!(
+            decode_request(r#"{"id":1,"op":"delete","format":"tt","dims":[2]}"#).is_err(),
+            "delete without target must be rejected"
+        );
     }
 }

@@ -1,0 +1,428 @@
+//! ANN recall/QPS sweep: retrieval quality of the similarity-search
+//! subsystem as a function of the projection dimension `m`, for TT vs CP
+//! vs dense Gaussian maps.
+//!
+//! This re-validates the paper's core claim — TT needs a smaller embedding
+//! dimension than CP for the same distortion (Theorem 2's `k_CP/k_TT`
+//! ratio) — as an *end-to-end retrieval* measurement: recall@`topk` of
+//! projected-space nearest neighbours against exact original-space
+//! (TT-format) nearest neighbours, on a clustered corpus where neighbour
+//! structure is planted rather than uniform. Both index backends run on
+//! the same embeddings, so the sweep also tracks the LSH backend's recall
+//! floor and the flat/LSH QPS trade-off.
+//!
+//! `trp experiment ann [--quick]` prints the table, writes
+//! `results/ann_sweep.csv` and emits the machine-readable trajectory
+//! `BENCH_ann_sweep.json` (also produced by `cargo bench --bench
+//! ann_sweep`).
+
+use crate::experiments::MapSpec;
+use crate::index::{build_index, AnnIndex, BackendKind, LshConfig, Neighbor};
+use crate::projections::{Projection, Workspace};
+use crate::rng::{derive_seed, Rng};
+use crate::tensor::{AnyTensor, TtTensor};
+use crate::util::csv::CsvTable;
+use crate::util::json::{num_arr, obj, Json};
+
+/// Configuration of the ANN sweep.
+#[derive(Debug, Clone)]
+pub struct AnnSweepConfig {
+    /// Input mode sizes (corpus items are TT tensors of this shape).
+    pub dims: Vec<usize>,
+    /// TT rank of corpus/query tensors.
+    pub input_rank: usize,
+    /// Stored items.
+    pub n_corpus: usize,
+    /// Queries per measurement.
+    pub n_queries: usize,
+    /// Neighbours retrieved per query (recall@topk).
+    pub topk: usize,
+    /// Projection dimensions `m` to sweep.
+    pub ms: Vec<usize>,
+    /// TT rank of the `f_TT(R)` map.
+    pub tt_rank: usize,
+    /// CP rank of the `f_CP(R)` map.
+    pub cp_rank: usize,
+    /// LSH backend shape.
+    pub lsh: LshConfig,
+    /// Master seed (corpus, maps and hash planes all derive from it).
+    pub seed: u64,
+}
+
+impl AnnSweepConfig {
+    /// Full sweep: 10-mode inputs (ambient dim 3¹⁰ = 59 049), m up to 64.
+    pub fn paper() -> Self {
+        Self {
+            dims: vec![3; 10],
+            input_rank: 5,
+            n_corpus: 256,
+            n_queries: 32,
+            topk: 10,
+            ms: vec![4, 6, 8, 12, 16, 24, 32, 64],
+            tt_rank: 5,
+            cp_rank: 5,
+            lsh: LshConfig::default(),
+            seed: 0xA22,
+        }
+    }
+
+    /// Reduced sweep for smoke runs.
+    pub fn quick() -> Self {
+        Self {
+            dims: vec![3; 7],
+            input_rank: 3,
+            n_corpus: 48,
+            n_queries: 8,
+            topk: 5,
+            ms: vec![4, 8, 16],
+            tt_rank: 3,
+            cp_rank: 3,
+            lsh: LshConfig { tables: 6, bits: 8, probes: 4 },
+            seed: 0xA22,
+        }
+    }
+}
+
+/// One (map, m) measurement.
+#[derive(Debug, Clone)]
+pub struct AnnRow {
+    /// Map label ([`MapSpec::label`]).
+    pub map: String,
+    /// Projection dimension `m`.
+    pub m: usize,
+    /// recall@topk of the flat (exact projected-space) backend.
+    pub flat_recall: f64,
+    /// recall@topk of the LSH backend.
+    pub lsh_recall: f64,
+    /// Flat-backend query throughput (queries/s).
+    pub flat_qps: f64,
+    /// LSH-backend query throughput (queries/s).
+    pub lsh_qps: f64,
+    /// Stored parameters of the projection map.
+    pub map_params: usize,
+}
+
+/// Clustered corpus + queries: TT tensors additively jittered around
+/// shared cluster centres (`x = normalize(c + σ·noise)`, all in TT
+/// format — the sum raises the TT rank, which the projection fast paths
+/// handle), so nearest neighbours are meaningful (a query's true
+/// neighbours are its own cluster) instead of the degenerate
+/// uniform-random case where all distances coincide. Cluster size tracks
+/// `topk`, so recall measures cluster recovery: within-cluster squared
+/// distances are ≈ `2σ²/(1+σ²)` while cross-cluster ones are ≈ 2, a
+/// margin the JL maps must preserve.
+fn clustered_inputs(cfg: &AnnSweepConfig, rng: &mut Rng) -> (Vec<TtTensor>, Vec<TtTensor>) {
+    let n_centers = (cfg.n_corpus / cfg.topk.max(1)).max(2);
+    let sigma = 0.35;
+    let centers: Vec<TtTensor> = (0..n_centers)
+        .map(|_| TtTensor::random_unit(&cfg.dims, cfg.input_rank, rng))
+        .collect();
+    let jitter = |center: &TtTensor, rng: &mut Rng| -> TtTensor {
+        let mut noise = TtTensor::random_unit(&cfg.dims, cfg.input_rank, rng);
+        noise.scale(sigma);
+        let mut t = center.add(&noise);
+        let norm = t.fro_norm();
+        if norm > 0.0 {
+            t.scale(1.0 / norm);
+        }
+        t
+    };
+    let corpus: Vec<TtTensor> = (0..cfg.n_corpus)
+        .map(|i| jitter(&centers[i % n_centers], rng))
+        .collect();
+    let queries: Vec<TtTensor> = (0..cfg.n_queries)
+        .map(|i| jitter(&centers[i % n_centers], rng))
+        .collect();
+    (corpus, queries)
+}
+
+/// Exact original-space top-`topk` ids per query, computed entirely in TT
+/// format (`‖x−q‖² = ‖x‖² + ‖q‖² − 2⟨x,q⟩`, no densification).
+fn true_neighbors(corpus: &[TtTensor], queries: &[TtTensor], topk: usize) -> Vec<Vec<u64>> {
+    let corpus_n2: Vec<f64> = corpus
+        .iter()
+        .map(|x| {
+            let n = x.fro_norm();
+            n * n
+        })
+        .collect();
+    queries
+        .iter()
+        .map(|q| {
+            let qn = q.fro_norm();
+            let qn2 = qn * qn;
+            let mut sel = crate::index::TopK::new(topk);
+            for (i, x) in corpus.iter().enumerate() {
+                let d2 = (corpus_n2[i] + qn2 - 2.0 * q.inner(x)).max(0.0);
+                sel.offer(i as u64, d2.sqrt());
+            }
+            sel.into_sorted().into_iter().map(|n| n.id).collect()
+        })
+        .collect()
+}
+
+/// Mean recall of retrieved neighbour sets against the true id sets.
+pub fn recall(results: &[Vec<Neighbor>], truth: &[Vec<u64>]) -> f64 {
+    let mut hits = 0usize;
+    let mut total = 0usize;
+    for (res, t) in results.iter().zip(truth) {
+        total += t.len();
+        hits += res.iter().filter(|n| t.contains(&n.id)).count();
+    }
+    if total == 0 {
+        0.0
+    } else {
+        hits as f64 / total as f64
+    }
+}
+
+/// Whether the dense Gaussian baseline is worth materializing at this
+/// size (`m·D` matrix entries; beyond the bound the tensorized maps are
+/// the whole point).
+fn gaussian_feasible(dims: &[usize], m: usize) -> bool {
+    let d: usize = dims.iter().product();
+    d.saturating_mul(m) <= (1 << 24)
+}
+
+/// Run the sweep. Skipped (infeasible) Gaussian cells are logged, not
+/// silently dropped.
+pub fn run(cfg: &AnnSweepConfig) -> Vec<AnnRow> {
+    let mut rng = Rng::seed_from(cfg.seed);
+    let (corpus, queries) = clustered_inputs(cfg, &mut rng);
+    let truth = true_neighbors(&corpus, &queries, cfg.topk);
+    let specs = [
+        MapSpec::Tt(cfg.tt_rank),
+        MapSpec::Cp(cfg.cp_rank),
+        MapSpec::Gaussian,
+    ];
+    let mut rows = Vec::new();
+    let mut ws = Workspace::new();
+    let corpus_any: Vec<AnyTensor> = corpus.iter().map(|t| AnyTensor::Tt(t.clone())).collect();
+    let query_any: Vec<AnyTensor> = queries.iter().map(|t| AnyTensor::Tt(t.clone())).collect();
+    let topks = vec![cfg.topk; cfg.n_queries];
+    for (si, spec) in specs.iter().enumerate() {
+        for (mi, &m) in cfg.ms.iter().enumerate() {
+            if matches!(spec, MapSpec::Gaussian) && !gaussian_feasible(&cfg.dims, m) {
+                eprintln!("[ann] skipping gaussian at m={m}: dense matrix not materializable");
+                continue;
+            }
+            let stream = ((si as u64) << 32) | mi as u64;
+            let mut map_rng = Rng::seed_from(derive_seed(cfg.seed, stream));
+            let map = spec.build(&cfg.dims, m, &mut map_rng);
+            // Batch-first embedding of corpus and queries.
+            let emb = map.project_batch(&corpus_any, &mut ws);
+            let qemb = map.project_batch(&query_any, &mut ws);
+            // Same embeddings into both backends.
+            let index_seed = derive_seed(cfg.seed, 0xB00 ^ stream);
+            let mut flat = build_index(BackendKind::Flat, m, &cfg.lsh, index_seed);
+            let mut lsh = build_index(BackendKind::Lsh, m, &cfg.lsh, index_seed);
+            for (i, row) in emb.chunks_exact(m).enumerate() {
+                flat.insert(i as u64, row);
+                lsh.insert(i as u64, row);
+            }
+            let t0 = std::time::Instant::now();
+            let flat_res = flat.query_batch(&qemb, &topks, &mut ws);
+            let flat_secs = t0.elapsed().as_secs_f64();
+            let t0 = std::time::Instant::now();
+            let lsh_res = lsh.query_batch(&qemb, &topks, &mut ws);
+            let lsh_secs = t0.elapsed().as_secs_f64();
+            rows.push(AnnRow {
+                map: spec.label(),
+                m,
+                flat_recall: recall(&flat_res, &truth),
+                lsh_recall: recall(&lsh_res, &truth),
+                flat_qps: cfg.n_queries as f64 / flat_secs.max(1e-9),
+                lsh_qps: cfg.n_queries as f64 / lsh_secs.max(1e-9),
+                map_params: map.num_params(),
+            });
+        }
+    }
+    rows
+}
+
+/// Render rows as the CSV written under `results/`.
+pub fn to_csv(rows: &[AnnRow]) -> CsvTable {
+    let mut t = CsvTable::new(&[
+        "map",
+        "m",
+        "flat_recall",
+        "lsh_recall",
+        "flat_qps",
+        "lsh_qps",
+        "map_params",
+    ]);
+    for r in rows {
+        t.push_row(vec![
+            r.map.clone(),
+            r.m.to_string(),
+            format!("{:.4}", r.flat_recall),
+            format!("{:.4}", r.lsh_recall),
+            format!("{:.1}", r.flat_qps),
+            format!("{:.1}", r.lsh_qps),
+            r.map_params.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Machine-readable trajectory document (`BENCH_ann_sweep.json`).
+pub fn to_json(cfg: &AnnSweepConfig, rows: &[AnnRow]) -> Json {
+    let mut maps: Vec<String> = rows.iter().map(|r| r.map.clone()).collect();
+    maps.dedup();
+    let series: Vec<Json> = maps
+        .iter()
+        .map(|name| {
+            let per_map: Vec<&AnnRow> = rows.iter().filter(|r| &r.map == name).collect();
+            obj(vec![
+                ("map", Json::Str(name.clone())),
+                (
+                    "ms",
+                    Json::Arr(per_map.iter().map(|r| Json::Num(r.m as f64)).collect()),
+                ),
+                (
+                    "flat_recall",
+                    num_arr(&per_map.iter().map(|r| r.flat_recall).collect::<Vec<f64>>()),
+                ),
+                (
+                    "lsh_recall",
+                    num_arr(&per_map.iter().map(|r| r.lsh_recall).collect::<Vec<f64>>()),
+                ),
+                (
+                    "flat_qps",
+                    num_arr(&per_map.iter().map(|r| r.flat_qps).collect::<Vec<f64>>()),
+                ),
+                (
+                    "lsh_qps",
+                    num_arr(&per_map.iter().map(|r| r.lsh_qps).collect::<Vec<f64>>()),
+                ),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("bench", Json::Str("ann_sweep".into())),
+        (
+            "dims",
+            Json::Arr(cfg.dims.iter().map(|&d| Json::Num(d as f64)).collect()),
+        ),
+        ("topk", Json::Num(cfg.topk as f64)),
+        ("n_corpus", Json::Num(cfg.n_corpus as f64)),
+        ("n_queries", Json::Num(cfg.n_queries as f64)),
+        ("series", Json::Arr(series)),
+    ])
+}
+
+/// The paper-claim verdict: the smallest `m` where TT reaches
+/// recall@topk ≥ 0.9 on the flat backend while CP at the same `m` is
+/// strictly lower. Returns `(m, tt_recall, cp_recall)` when found.
+pub fn tt_beats_cp_at(rows: &[AnnRow]) -> Option<(usize, f64, f64)> {
+    let mut ms: Vec<usize> = rows.iter().map(|r| r.m).collect();
+    ms.sort_unstable();
+    ms.dedup();
+    for m in ms {
+        let tt = rows
+            .iter()
+            .find(|r| r.m == m && r.map.starts_with("tt_"))
+            .map(|r| r.flat_recall);
+        let cp = rows
+            .iter()
+            .find(|r| r.m == m && r.map.starts_with("cp_"))
+            .map(|r| r.flat_recall);
+        if let (Some(tt), Some(cp)) = (tt, cp) {
+            if tt >= 0.9 && cp < tt {
+                return Some((m, tt, cp));
+            }
+        }
+    }
+    None
+}
+
+/// Print the acceptance verdict (report, don't panic: it is a statistical
+/// claim and machine/seed variation is expected at small sweep sizes).
+pub fn print_verdict(rows: &[AnnRow]) {
+    match tt_beats_cp_at(rows) {
+        Some((m, tt, cp)) => println!(
+            "[ann] PASS: TT recall {tt:.3} ≥ 0.9 at m={m} with CP strictly lower ({cp:.3})"
+        ),
+        None => println!(
+            "[ann] MISS: no m with TT recall ≥ 0.9 and CP strictly lower — inspect the table"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> AnnSweepConfig {
+        AnnSweepConfig {
+            dims: vec![3; 5],
+            input_rank: 2,
+            n_corpus: 24,
+            n_queries: 4,
+            topk: 3,
+            ms: vec![4, 16],
+            tt_rank: 2,
+            cp_rank: 2,
+            lsh: LshConfig { tables: 4, bits: 6, probes: 2 },
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn sweep_covers_all_feasible_cells() {
+        let rows = run(&tiny());
+        // 3 maps × 2 ms, all feasible at this size.
+        assert_eq!(rows.len(), 6);
+        for r in &rows {
+            assert!((0.0..=1.0).contains(&r.flat_recall), "{r:?}");
+            assert!((0.0..=1.0).contains(&r.lsh_recall), "{r:?}");
+            assert!(r.flat_qps > 0.0 && r.lsh_qps > 0.0);
+            assert!(r.map_params > 0);
+        }
+    }
+
+    #[test]
+    fn sweep_is_deterministic_in_seed() {
+        let a = run(&tiny());
+        let b = run(&tiny());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.map, y.map);
+            assert_eq!(x.m, y.m);
+            assert_eq!(x.flat_recall, y.flat_recall);
+            assert_eq!(x.lsh_recall, y.lsh_recall);
+        }
+    }
+
+    #[test]
+    fn recall_helper_counts_hits() {
+        let results = vec![vec![
+            Neighbor { id: 1, dist: 0.0 },
+            Neighbor { id: 2, dist: 1.0 },
+        ]];
+        let truth = vec![vec![1u64, 3u64]];
+        assert!((recall(&results, &truth) - 0.5).abs() < 1e-12);
+        assert_eq!(recall(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn csv_and_json_cover_all_rows() {
+        let cfg = tiny();
+        let rows = run(&cfg);
+        assert_eq!(to_csv(&rows).len(), rows.len());
+        let doc = to_json(&cfg, &rows);
+        let series = doc.get("series").and_then(Json::as_arr).unwrap();
+        assert_eq!(series.len(), 3, "one series per map family");
+    }
+
+    #[test]
+    fn ground_truth_self_query_hits_itself() {
+        let mut rng = Rng::seed_from(5);
+        let dims = vec![3usize; 5];
+        let corpus: Vec<TtTensor> = (0..10)
+            .map(|_| TtTensor::random_unit(&dims, 2, &mut rng))
+            .collect();
+        // Query = corpus item 4: its nearest true neighbour is itself.
+        let truth = true_neighbors(&corpus, &corpus[4..5], 3);
+        assert_eq!(truth[0][0], 4);
+    }
+}

@@ -3,6 +3,7 @@
 //! CSV under `results/` (see DESIGN.md §4 for the experiment index).
 
 pub mod ablations;
+pub mod ann;
 pub mod batch;
 pub mod fig1;
 pub mod fig2;

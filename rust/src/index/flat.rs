@@ -1,0 +1,296 @@
+//! Exact-scan backend: blocked-GEMM scoring + partial top-k select.
+//!
+//! Storage is a dense row-major slot array (`slots × k`) with per-slot
+//! squared norms, an id → slot map, and a tombstone free-list so deletes
+//! are O(1) and slots are recycled. A query batch of `B` vectors is scored
+//! against the *entire* store with one `linalg::matmul_into` call
+//! (`S = X · Qᵀ`, `slots × B`), then per query the squared distances
+//! `‖x‖² + ‖q‖² − 2·S` are reduced by [`super::TopK`]. Tombstoned slots
+//! are scored (keeping the GEMM operands contiguous) and skipped in the
+//! select — the arithmetic waste is bounded by the free-list population.
+//!
+//! Determinism contract: for a fixed insert/delete history the scan order
+//! is fixed, and the GEMM accumulates the reduction dimension in ascending
+//! order regardless of the batch width, so a query returns bit-identical
+//! neighbours whether it is scored alone or inside a batch (this is what
+//! makes coordinator-served queries identical to direct in-process ones).
+
+use super::{AnnIndex, IndexStats, Neighbor, TopK};
+use crate::linalg::matmul_into;
+use crate::projections::Workspace;
+use std::collections::HashMap;
+
+/// Exact nearest-neighbour index over `R^k` embeddings.
+pub struct FlatIndex {
+    dim: usize,
+    /// Slot storage, row-major `slots × dim` (tombstones included).
+    rows: Vec<f64>,
+    /// Per-slot squared norm `‖x‖²`.
+    norms2: Vec<f64>,
+    /// Per-slot item id (stale for tombstoned slots).
+    ids: Vec<u64>,
+    /// Per-slot liveness.
+    live: Vec<bool>,
+    /// Live id → slot.
+    by_id: HashMap<u64, usize>,
+    /// Recyclable tombstoned slots.
+    free: Vec<usize>,
+    inserts: u64,
+    deletes: u64,
+    queries: u64,
+}
+
+impl FlatIndex {
+    /// New empty index over `dim`-dimensional embeddings.
+    pub fn new(dim: usize) -> Self {
+        assert!(dim > 0, "embedding dimension must be positive");
+        Self {
+            dim,
+            rows: Vec::new(),
+            norms2: Vec::new(),
+            ids: Vec::new(),
+            live: Vec::new(),
+            by_id: HashMap::new(),
+            free: Vec::new(),
+            inserts: 0,
+            deletes: 0,
+            queries: 0,
+        }
+    }
+
+    /// Total slots (live + tombstoned).
+    pub fn slots(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// Slot of a live id.
+    pub(crate) fn slot_of(&self, id: u64) -> Option<usize> {
+        self.by_id.get(&id).copied()
+    }
+
+    /// Stored embedding of a slot.
+    pub(crate) fn row(&self, slot: usize) -> &[f64] {
+        &self.rows[slot * self.dim..(slot + 1) * self.dim]
+    }
+
+    /// Stored squared norm of a slot.
+    pub(crate) fn norm2(&self, slot: usize) -> f64 {
+        self.norms2[slot]
+    }
+}
+
+impl AnnIndex for FlatIndex {
+    fn backend(&self) -> &'static str {
+        "flat"
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn len(&self) -> usize {
+        self.by_id.len()
+    }
+
+    fn insert(&mut self, id: u64, embedding: &[f64]) {
+        assert_eq!(embedding.len(), self.dim, "embedding dimension mismatch");
+        let slot = match self.by_id.get(&id) {
+            // Re-insert of a live id overwrites in place.
+            Some(&slot) => slot,
+            None => {
+                let slot = match self.free.pop() {
+                    Some(slot) => slot,
+                    None => {
+                        self.rows.resize(self.rows.len() + self.dim, 0.0);
+                        self.norms2.push(0.0);
+                        self.ids.push(0);
+                        self.live.push(false);
+                        self.ids.len() - 1
+                    }
+                };
+                self.by_id.insert(id, slot);
+                slot
+            }
+        };
+        self.rows[slot * self.dim..(slot + 1) * self.dim].copy_from_slice(embedding);
+        self.norms2[slot] = embedding.iter().map(|v| v * v).sum();
+        self.ids[slot] = id;
+        self.live[slot] = true;
+        self.inserts += 1;
+    }
+
+    fn remove(&mut self, id: u64) -> bool {
+        match self.by_id.remove(&id) {
+            Some(slot) => {
+                self.live[slot] = false;
+                self.free.push(slot);
+                self.deletes += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    fn query_batch(
+        &mut self,
+        qs: &[f64],
+        topks: &[usize],
+        ws: &mut Workspace,
+    ) -> Vec<Vec<Neighbor>> {
+        let d = self.dim;
+        let b = topks.len();
+        assert_eq!(qs.len(), b * d, "query batch layout must be [B, k]");
+        self.queries += b as u64;
+        let n = self.slots();
+        // Stage Qᵀ (d × b) in workspace scratch so the scoring GEMM streams
+        // both operands contiguously.
+        ws.chain_b.clear();
+        ws.chain_b.resize(d * b, 0.0);
+        for (j, q) in qs.chunks_exact(d).enumerate() {
+            for (p, &v) in q.iter().enumerate() {
+                ws.chain_b[p * b + j] = v;
+            }
+        }
+        // S = X · Qᵀ in one blocked GEMM over the whole store.
+        ws.chain_a.clear();
+        ws.chain_a.resize(n * b, 0.0);
+        matmul_into(&self.rows, &ws.chain_b, &mut ws.chain_a, n, d, b);
+        let mut out = Vec::with_capacity(b);
+        for (j, (q, &topk)) in qs.chunks_exact(d).zip(topks).enumerate() {
+            let qn2: f64 = q.iter().map(|v| v * v).sum();
+            let mut sel = TopK::new(topk);
+            for slot in 0..n {
+                if !self.live[slot] {
+                    continue;
+                }
+                // Clamp: cancellation can drive tiny true distances below 0.
+                let d2 = (self.norms2[slot] + qn2 - 2.0 * ws.chain_a[slot * b + j]).max(0.0);
+                sel.offer(self.ids[slot], d2.sqrt());
+            }
+            out.push(sel.into_sorted());
+        }
+        out
+    }
+
+    fn stats(&self) -> IndexStats {
+        IndexStats {
+            backend: self.backend().to_string(),
+            len: self.len(),
+            dim: self.dim,
+            inserts: self.inserts,
+            deletes: self.deletes,
+            queries: self.queries,
+            buckets: 0,
+            max_bucket: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Brute-force reference select used to validate the GEMM path.
+    fn naive_topk(data: &[(u64, Vec<f64>)], q: &[f64], topk: usize) -> Vec<Neighbor> {
+        let mut sel = TopK::new(topk);
+        for (id, x) in data {
+            let d2: f64 = x.iter().zip(q).map(|(a, b)| (a - b) * (a - b)).sum();
+            sel.offer(*id, d2.sqrt());
+        }
+        sel.into_sorted()
+    }
+
+    #[test]
+    fn matches_naive_scan() {
+        let mut rng = Rng::seed_from(1);
+        let dim = 13;
+        let data: Vec<(u64, Vec<f64>)> = (0..57)
+            .map(|i| (i as u64, rng.gaussian_vec(dim, 1.0)))
+            .collect();
+        let mut idx = FlatIndex::new(dim);
+        for (id, x) in &data {
+            idx.insert(*id, x);
+        }
+        let mut ws = Workspace::new();
+        for _ in 0..8 {
+            let q = rng.gaussian_vec(dim, 1.0);
+            let got = idx.query(&q, 5, &mut ws);
+            let want = naive_topk(&data, &q, 5);
+            let got_ids: Vec<u64> = got.iter().map(|n| n.id).collect();
+            let want_ids: Vec<u64> = want.iter().map(|n| n.id).collect();
+            assert_eq!(got_ids, want_ids);
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g.dist - w.dist).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn batched_query_matches_single_query_bitwise() {
+        let mut rng = Rng::seed_from(2);
+        let dim = 16;
+        let mut idx = FlatIndex::new(dim);
+        for i in 0..40u64 {
+            idx.insert(i, &rng.gaussian_vec(dim, 1.0));
+        }
+        let qs: Vec<Vec<f64>> = (0..7).map(|_| rng.gaussian_vec(dim, 1.0)).collect();
+        let flat_qs: Vec<f64> = qs.iter().flatten().copied().collect();
+        let topks = vec![4; qs.len()];
+        let mut ws = Workspace::new();
+        let batched = idx.query_batch(&flat_qs, &topks, &mut ws);
+        for (q, batch_res) in qs.iter().zip(&batched) {
+            let single = idx.query(q, 4, &mut ws);
+            assert_eq!(&single, batch_res, "batched scoring must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn delete_removes_and_reinsert_overwrites() {
+        let mut ws = Workspace::new();
+        let mut idx = FlatIndex::new(2);
+        idx.insert(1, &[0.0, 0.0]);
+        idx.insert(2, &[10.0, 0.0]);
+        assert_eq!(idx.len(), 2);
+        assert!(idx.remove(1));
+        assert!(!idx.remove(1), "double delete is a no-op");
+        assert_eq!(idx.len(), 1);
+        let res = idx.query(&[0.1, 0.0], 5, &mut ws);
+        assert_eq!(res.len(), 1);
+        assert_eq!(res[0].id, 2);
+        // Slot recycling: a new insert reuses the tombstoned slot.
+        idx.insert(3, &[0.2, 0.0]);
+        assert_eq!(idx.slots(), 2);
+        // Overwrite of a live id updates the vector in place.
+        idx.insert(3, &[5.0, 0.0]);
+        assert_eq!(idx.slots(), 2);
+        let res = idx.query(&[5.0, 0.0], 1, &mut ws);
+        assert_eq!(res[0].id, 3);
+        assert!(res[0].dist < 1e-12);
+    }
+
+    #[test]
+    fn empty_index_returns_no_neighbors() {
+        let mut ws = Workspace::new();
+        let mut idx = FlatIndex::new(3);
+        assert!(idx.is_empty());
+        assert!(idx.query(&[1.0, 2.0, 3.0], 4, &mut ws).is_empty());
+    }
+
+    #[test]
+    fn stats_track_operations() {
+        let mut ws = Workspace::new();
+        let mut idx = FlatIndex::new(2);
+        idx.insert(1, &[1.0, 0.0]);
+        idx.insert(2, &[0.0, 1.0]);
+        idx.remove(1);
+        idx.query(&[0.0, 1.0], 1, &mut ws);
+        let s = idx.stats();
+        assert_eq!(s.backend, "flat");
+        assert_eq!(s.len, 1);
+        assert_eq!(s.dim, 2);
+        assert_eq!(s.inserts, 2);
+        assert_eq!(s.deletes, 1);
+        assert_eq!(s.queries, 1);
+    }
+}

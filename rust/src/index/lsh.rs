@@ -1,0 +1,322 @@
+//! Random-hyperplane LSH backend with multi-probe search.
+//!
+//! Each of `tables` hash tables assigns an item a `bits`-bit signature:
+//! bit `i` is the sign of the item's dot product with a Gaussian
+//! hyperplane drawn from the same seeded rng stack as the projection maps
+//! (Charikar 2002 — collision probability `1 − θ/π` per bit). A query
+//! probes its exact bucket in every table plus, per table, the `probes`
+//! buckets obtained by flipping the lowest-margin bits first (multi-probe,
+//! Lv et al. 2007), which recovers most of the recall of extra tables at a
+//! fraction of the memory. Candidates are deduplicated and exactly
+//! re-scored against the stored vectors (storage is a [`FlatIndex`], so
+//! insert/delete semantics — overwrite, tombstones, slot recycling — are
+//! inherited rather than reimplemented).
+
+use super::flat::FlatIndex;
+use super::{AnnIndex, IndexStats, Neighbor, TopK};
+use crate::projections::Workspace;
+use crate::rng::Rng;
+use std::collections::HashMap;
+
+/// LSH shape knobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LshConfig {
+    /// Independent hash tables (more tables → higher recall, more memory).
+    pub tables: usize,
+    /// Signature bits per table (more bits → smaller buckets).
+    pub bits: usize,
+    /// Extra flipped-bit buckets probed per table (multi-probe depth).
+    pub probes: usize,
+}
+
+impl Default for LshConfig {
+    fn default() -> Self {
+        Self { tables: 8, bits: 12, probes: 4 }
+    }
+}
+
+/// Random-hyperplane LSH index over `R^k` embeddings.
+pub struct LshIndex {
+    /// Vector storage + exact re-scoring substrate.
+    flat: FlatIndex,
+    cfg: LshConfig,
+    /// Hyperplanes, row-major `(tables · bits) × dim`.
+    planes: Vec<f64>,
+    /// Per table: signature → item ids.
+    buckets: Vec<HashMap<u64, Vec<u64>>>,
+    queries: u64,
+}
+
+impl LshIndex {
+    /// New empty index; hyperplanes are drawn deterministically from
+    /// `seed`.
+    pub fn new(dim: usize, cfg: LshConfig, seed: u64) -> Self {
+        assert!(dim > 0, "embedding dimension must be positive");
+        assert!(cfg.tables >= 1, "need at least one hash table");
+        assert!(
+            (1..=63).contains(&cfg.bits),
+            "signature bits must be in 1..=63 (codes are u64)"
+        );
+        let mut rng = Rng::seed_from(seed);
+        let planes = rng.gaussian_vec(cfg.tables * cfg.bits * dim, 1.0);
+        Self {
+            flat: FlatIndex::new(dim),
+            cfg,
+            planes,
+            buckets: (0..cfg.tables).map(|_| HashMap::new()).collect(),
+            queries: 0,
+        }
+    }
+
+    /// The configured shape.
+    pub fn config(&self) -> LshConfig {
+        self.cfg
+    }
+
+    /// Hyperplane dot products of one embedding, `tables · bits` values.
+    fn dots_into(&self, embedding: &[f64], dots: &mut Vec<f64>) {
+        dots.clear();
+        dots.reserve(self.cfg.tables * self.cfg.bits);
+        for plane in self.planes.chunks_exact(self.flat.dim()) {
+            dots.push(plane.iter().zip(embedding).map(|(a, b)| a * b).sum());
+        }
+    }
+
+    /// Signature of one table from its slice of dot products.
+    fn code_of(dots_t: &[f64]) -> u64 {
+        let mut code = 0u64;
+        for (i, &v) in dots_t.iter().enumerate() {
+            if v >= 0.0 {
+                code |= 1u64 << i;
+            }
+        }
+        code
+    }
+
+    /// Append the ids bucketed under `(table, code)` to `cands`.
+    fn collect_bucket(&self, table: usize, code: u64, cands: &mut Vec<u64>) {
+        if let Some(ids) = self.buckets[table].get(&code) {
+            cands.extend_from_slice(ids);
+        }
+    }
+
+    /// Remove `id` from its bucket in every table (codes recomputed from
+    /// the stored vector, which must still be live in `flat`).
+    fn unbucket(&mut self, id: u64, dots: &mut Vec<f64>) {
+        let slot = self.flat.slot_of(id).expect("unbucket of a live id");
+        // Copy the row out: recomputing codes borrows `self` immutably
+        // while bucket surgery needs it mutably.
+        let row: Vec<f64> = self.flat.row(slot).to_vec();
+        self.dots_into(&row, dots);
+        for t in 0..self.cfg.tables {
+            let code = Self::code_of(&dots[t * self.cfg.bits..(t + 1) * self.cfg.bits]);
+            if let Some(ids) = self.buckets[t].get_mut(&code) {
+                ids.retain(|&x| x != id);
+                if ids.is_empty() {
+                    self.buckets[t].remove(&code);
+                }
+            }
+        }
+    }
+}
+
+impl AnnIndex for LshIndex {
+    fn backend(&self) -> &'static str {
+        "lsh"
+    }
+
+    fn dim(&self) -> usize {
+        self.flat.dim()
+    }
+
+    fn len(&self) -> usize {
+        self.flat.len()
+    }
+
+    fn insert(&mut self, id: u64, embedding: &[f64]) {
+        assert_eq!(embedding.len(), self.flat.dim(), "embedding dimension mismatch");
+        let mut dots = Vec::new();
+        // Overwrite: drop the old bucket entries before the vector changes.
+        if self.flat.slot_of(id).is_some() {
+            self.unbucket(id, &mut dots);
+        }
+        self.dots_into(embedding, &mut dots);
+        for t in 0..self.cfg.tables {
+            let code = Self::code_of(&dots[t * self.cfg.bits..(t + 1) * self.cfg.bits]);
+            self.buckets[t].entry(code).or_default().push(id);
+        }
+        self.flat.insert(id, embedding);
+    }
+
+    fn remove(&mut self, id: u64) -> bool {
+        if self.flat.slot_of(id).is_none() {
+            return false;
+        }
+        let mut dots = Vec::new();
+        self.unbucket(id, &mut dots);
+        self.flat.remove(id)
+    }
+
+    fn query_batch(
+        &mut self,
+        qs: &[f64],
+        topks: &[usize],
+        ws: &mut Workspace,
+    ) -> Vec<Vec<Neighbor>> {
+        let d = self.flat.dim();
+        let b = topks.len();
+        assert_eq!(qs.len(), b * d, "query batch layout must be [B, k]");
+        self.queries += b as u64;
+        let mut out = Vec::with_capacity(b);
+        let mut cands: Vec<u64> = Vec::new();
+        let mut order: Vec<usize> = Vec::new();
+        for (q, &topk) in qs.chunks_exact(d).zip(topks) {
+            // Hyperplane margins staged in workspace scratch.
+            self.dots_into(q, &mut ws.tmp);
+            cands.clear();
+            for t in 0..self.cfg.tables {
+                let dots_t = &ws.tmp[t * self.cfg.bits..(t + 1) * self.cfg.bits];
+                let code = Self::code_of(dots_t);
+                self.collect_bucket(t, code, &mut cands);
+                // Multi-probe: flip the bits whose hyperplane margin is
+                // smallest — the buckets the query most nearly fell into.
+                order.clear();
+                order.extend(0..self.cfg.bits);
+                order.sort_by(|&x, &y| {
+                    dots_t[x]
+                        .abs()
+                        .partial_cmp(&dots_t[y].abs())
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(x.cmp(&y))
+                });
+                for &bit in order.iter().take(self.cfg.probes) {
+                    self.collect_bucket(t, code ^ (1u64 << bit), &mut cands);
+                }
+            }
+            // Deterministic candidate order: sort + dedup (ids collide
+            // across tables and probes).
+            cands.sort_unstable();
+            cands.dedup();
+            let qn2: f64 = q.iter().map(|v| v * v).sum();
+            let mut sel = TopK::new(topk);
+            for &id in &cands {
+                if let Some(slot) = self.flat.slot_of(id) {
+                    let row = self.flat.row(slot);
+                    let dot: f64 = row.iter().zip(q).map(|(a, b)| a * b).sum();
+                    let d2 = (self.flat.norm2(slot) + qn2 - 2.0 * dot).max(0.0);
+                    sel.offer(id, d2.sqrt());
+                }
+            }
+            out.push(sel.into_sorted());
+        }
+        out
+    }
+
+    fn stats(&self) -> IndexStats {
+        let mut stats = self.flat.stats();
+        stats.backend = self.backend().to_string();
+        stats.queries = self.queries;
+        stats.buckets = self.buckets.iter().map(|t| t.len()).sum();
+        stats.max_bucket = self
+            .buckets
+            .iter()
+            .flat_map(|t| t.values().map(|ids| ids.len()))
+            .max()
+            .unwrap_or(0);
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> LshConfig {
+        LshConfig { tables: 6, bits: 6, probes: 3 }
+    }
+
+    #[test]
+    fn finds_near_duplicates() {
+        // Planted structure: one stored vector is a near-duplicate of the
+        // query, the rest are far; LSH must surface the duplicate.
+        let mut rng = Rng::seed_from(3);
+        let dim = 16;
+        let mut idx = LshIndex::new(dim, small_cfg(), 99);
+        let base = rng.gaussian_vec(dim, 1.0);
+        let near: Vec<f64> = base.iter().map(|v| v + 0.01).collect();
+        idx.insert(0, &near);
+        for i in 1..50u64 {
+            idx.insert(i, &rng.gaussian_vec(dim, 1.0));
+        }
+        let mut ws = Workspace::new();
+        let res = idx.query(&base, 1, &mut ws);
+        assert_eq!(res.len(), 1);
+        assert_eq!(res[0].id, 0, "near-duplicate must be retrieved");
+    }
+
+    #[test]
+    fn insert_delete_roundtrip_cleans_buckets() {
+        let mut rng = Rng::seed_from(4);
+        let dim = 8;
+        let mut idx = LshIndex::new(dim, small_cfg(), 7);
+        let xs: Vec<Vec<f64>> = (0..20).map(|_| rng.gaussian_vec(dim, 1.0)).collect();
+        for (i, x) in xs.iter().enumerate() {
+            idx.insert(i as u64, x);
+        }
+        assert_eq!(idx.len(), 20);
+        let populated = idx.stats().buckets;
+        assert!(populated > 0);
+        for i in 0..20u64 {
+            assert!(idx.remove(i));
+        }
+        assert_eq!(idx.len(), 0);
+        let s = idx.stats();
+        assert_eq!(s.buckets, 0, "deletes must clean every bucket");
+        assert_eq!(s.max_bucket, 0);
+        assert!(!idx.remove(3), "delete of an absent id reports false");
+    }
+
+    #[test]
+    fn overwrite_rebuckets() {
+        let mut rng = Rng::seed_from(5);
+        let dim = 8;
+        let mut idx = LshIndex::new(dim, small_cfg(), 11);
+        let a = rng.gaussian_vec(dim, 1.0);
+        let b: Vec<f64> = a.iter().map(|v| -v).collect();
+        idx.insert(1, &a);
+        idx.insert(1, &b); // overwrite with the antipode
+        assert_eq!(idx.len(), 1);
+        let mut ws = Workspace::new();
+        // Querying near the new value must find it …
+        let res = idx.query(&b, 1, &mut ws);
+        assert_eq!(res.len(), 1);
+        assert!(res[0].dist < 1e-9);
+        // … and each table holds exactly one entry for the id.
+        let s = idx.stats();
+        assert_eq!(s.max_bucket, 1);
+        assert_eq!(s.buckets, idx.config().tables);
+    }
+
+    #[test]
+    fn same_seed_reproduces_hashes() {
+        let mut rng = Rng::seed_from(6);
+        let dim = 8;
+        let xs: Vec<Vec<f64>> = (0..30).map(|_| rng.gaussian_vec(dim, 1.0)).collect();
+        let q = rng.gaussian_vec(dim, 1.0);
+        let run = |seed: u64| -> Vec<Neighbor> {
+            let mut idx = LshIndex::new(dim, small_cfg(), seed);
+            for (i, x) in xs.iter().enumerate() {
+                idx.insert(i as u64, x);
+            }
+            let mut ws = Workspace::new();
+            idx.query(&q, 5, &mut ws)
+        };
+        assert_eq!(run(42), run(42), "same seed → identical results");
+    }
+
+    #[test]
+    #[should_panic(expected = "signature bits")]
+    fn rejects_oversized_signatures() {
+        let _ = LshIndex::new(4, LshConfig { tables: 1, bits: 64, probes: 0 }, 0);
+    }
+}

@@ -1,0 +1,257 @@
+//! Similarity-search index subsystem over projected embeddings.
+//!
+//! The paper's `f_TT(R)` / `f_CP(R)` maps approximately preserve Euclidean
+//! distances (Johnson-Lindenstrauss), so nearest neighbours in the
+//! `k`-dimensional projected space approximate nearest neighbours in the
+//! (possibly astronomically large) original tensor space. This module is
+//! the workload that consumes that guarantee: an in-memory ANN index keyed
+//! by embedding vectors, with two backends behind one [`AnnIndex`] trait:
+//!
+//! * [`FlatIndex`] — exact scan over the projected vectors. Query batches
+//!   are scored with one blocked GEMM (`linalg::matmul_into`) against the
+//!   whole store, then reduced by an exact partial top-k select. Serves as
+//!   both the production backend for modest corpora and the ground truth
+//!   the LSH backend is measured against.
+//! * [`LshIndex`] — random-hyperplane locality-sensitive hashing (Charikar
+//!   2002) with multi-probe search (Lv et al. 2007): candidate buckets are
+//!   probed in ascending hyperplane-margin order, and candidates are
+//!   exactly re-scored against the stored vectors.
+//!
+//! The coordinator exposes the subsystem as wire ops (`insert`, `query`,
+//! `delete`, `stats`) routed per map signature, so every stored embedding
+//! for one index comes from the *same* deterministic projection map (see
+//! `coordinator::state::IndexRegistry`). Distances returned by queries are
+//! Euclidean distances **in the projected space** — within `1 ± ε` of the
+//! original-space distances by the paper's Theorems 1-2.
+
+mod flat;
+mod lsh;
+
+pub use flat::FlatIndex;
+pub use lsh::{LshConfig, LshIndex};
+
+use crate::projections::Workspace;
+
+/// One query result: a stored item and its distance to the query.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Neighbor {
+    /// Caller-assigned item id (the request id of the insert).
+    pub id: u64,
+    /// Euclidean distance in the projected space.
+    pub dist: f64,
+}
+
+/// Point-in-time statistics of one index (the `stats` wire op payload).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IndexStats {
+    /// Backend name (`"flat"` or `"lsh"`).
+    pub backend: String,
+    /// Live (inserted and not deleted) item count.
+    pub len: usize,
+    /// Embedding dimension `k`.
+    pub dim: usize,
+    /// Total inserts processed.
+    pub inserts: u64,
+    /// Total deletes that removed an item.
+    pub deletes: u64,
+    /// Total queries answered.
+    pub queries: u64,
+    /// Occupied hash buckets across all tables (0 for flat).
+    pub buckets: usize,
+    /// Largest bucket population (0 for flat).
+    pub max_bucket: usize,
+}
+
+/// Which ANN backend an index uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// Exact GEMM scan ([`FlatIndex`]).
+    Flat,
+    /// Random-hyperplane LSH ([`LshIndex`]).
+    Lsh,
+}
+
+impl BackendKind {
+    /// Parse from the CLI / config name.
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "flat" => Some(BackendKind::Flat),
+            "lsh" => Some(BackendKind::Lsh),
+            _ => None,
+        }
+    }
+
+    /// Canonical name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Flat => "flat",
+            BackendKind::Lsh => "lsh",
+        }
+    }
+}
+
+/// An approximate-nearest-neighbour index over `R^k` embeddings.
+///
+/// Implementations are driven behind a mutex by the coordinator's worker
+/// pool, so methods take `&mut self` and no internal locking exists.
+pub trait AnnIndex: Send {
+    /// Backend name (matches [`BackendKind::name`]).
+    fn backend(&self) -> &'static str;
+
+    /// Embedding dimension `k` every stored vector must have.
+    fn dim(&self) -> usize;
+
+    /// Live item count.
+    fn len(&self) -> usize;
+
+    /// True when no live items are stored.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Insert (or overwrite) item `id` with the given embedding.
+    fn insert(&mut self, id: u64, embedding: &[f64]);
+
+    /// Remove item `id`; returns whether it was present.
+    fn remove(&mut self, id: u64) -> bool;
+
+    /// Answer a batch of queries laid out row-major as `[topks.len(), k]`.
+    /// `topks[j]` is the neighbour count requested by query `j`. Results
+    /// are sorted by ascending distance (ties broken by ascending id) and
+    /// may be shorter than `topks[j]` when fewer live items exist (or, for
+    /// LSH, fewer candidates were probed).
+    fn query_batch(
+        &mut self,
+        qs: &[f64],
+        topks: &[usize],
+        ws: &mut Workspace,
+    ) -> Vec<Vec<Neighbor>>;
+
+    /// Single-query convenience wrapper around [`AnnIndex::query_batch`].
+    fn query(&mut self, q: &[f64], topk: usize, ws: &mut Workspace) -> Vec<Neighbor> {
+        self.query_batch(q, &[topk], ws).pop().unwrap_or_default()
+    }
+
+    /// Statistics snapshot.
+    fn stats(&self) -> IndexStats;
+}
+
+/// Construct a boxed index of the requested backend.
+///
+/// `seed` only matters for the LSH backend (it draws the hash hyperplanes
+/// from the same deterministic rng stack as the projection maps, so a
+/// restarted coordinator reproduces identical bucket assignments).
+pub fn build_index(
+    kind: BackendKind,
+    dim: usize,
+    lsh: &LshConfig,
+    seed: u64,
+) -> Box<dyn AnnIndex> {
+    match kind {
+        BackendKind::Flat => Box::new(FlatIndex::new(dim)),
+        BackendKind::Lsh => Box::new(LshIndex::new(dim, *lsh, seed)),
+    }
+}
+
+/// Bounded partial top-k select over `(dist, id)` candidates: keeps the
+/// `cap` smallest under the total order (dist, then id), sorted ascending.
+/// O(cap) memory and O(log cap + cap) per accepted offer — the "partial
+/// select" half of the flat backend's scan.
+#[derive(Debug)]
+pub(crate) struct TopK {
+    cap: usize,
+    entries: Vec<Neighbor>,
+}
+
+impl TopK {
+    /// New selector keeping at most `cap` entries.
+    pub(crate) fn new(cap: usize) -> Self {
+        Self { cap, entries: Vec::with_capacity(cap.min(1024)) }
+    }
+
+    /// True when `a` precedes `b` in the (dist, id) total order.
+    fn precedes(a_dist: f64, a_id: u64, b: &Neighbor) -> bool {
+        a_dist < b.dist || (a_dist == b.dist && a_id < b.id)
+    }
+
+    /// Offer one candidate.
+    pub(crate) fn offer(&mut self, id: u64, dist: f64) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.entries.len() == self.cap {
+            let worst = self.entries.last().expect("cap > 0");
+            if !Self::precedes(dist, id, worst) {
+                return;
+            }
+            self.entries.pop();
+        }
+        let pos = self
+            .entries
+            .partition_point(|e| !Self::precedes(dist, id, e));
+        self.entries.insert(pos, Neighbor { id, dist });
+    }
+
+    /// The selected entries, ascending by (dist, id).
+    pub(crate) fn into_sorted(self) -> Vec<Neighbor> {
+        self.entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk_keeps_smallest_sorted() {
+        let mut sel = TopK::new(3);
+        for (id, dist) in [(1u64, 5.0), (2, 1.0), (3, 3.0), (4, 0.5), (5, 4.0)] {
+            sel.offer(id, dist);
+        }
+        let out = sel.into_sorted();
+        let ids: Vec<u64> = out.iter().map(|n| n.id).collect();
+        assert_eq!(ids, vec![4, 2, 3]);
+        assert!(out.windows(2).all(|w| w[0].dist <= w[1].dist));
+    }
+
+    #[test]
+    fn topk_ties_break_by_id() {
+        let mut sel = TopK::new(2);
+        sel.offer(9, 1.0);
+        sel.offer(3, 1.0);
+        sel.offer(7, 1.0);
+        let ids: Vec<u64> = sel.into_sorted().iter().map(|n| n.id).collect();
+        assert_eq!(ids, vec![3, 7]);
+    }
+
+    #[test]
+    fn topk_cap_zero_is_empty() {
+        let mut sel = TopK::new(0);
+        sel.offer(1, 1.0);
+        assert!(sel.into_sorted().is_empty());
+    }
+
+    #[test]
+    fn topk_underfull_returns_all() {
+        let mut sel = TopK::new(10);
+        sel.offer(2, 2.0);
+        sel.offer(1, 1.0);
+        let ids: Vec<u64> = sel.into_sorted().iter().map(|n| n.id).collect();
+        assert_eq!(ids, vec![1, 2]);
+    }
+
+    #[test]
+    fn backend_kind_parse_roundtrip() {
+        for k in [BackendKind::Flat, BackendKind::Lsh] {
+            assert_eq!(BackendKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(BackendKind::parse("annoy"), None);
+    }
+
+    #[test]
+    fn build_index_dispatches_backend() {
+        let lsh = LshConfig::default();
+        assert_eq!(build_index(BackendKind::Flat, 4, &lsh, 1).backend(), "flat");
+        assert_eq!(build_index(BackendKind::Lsh, 4, &lsh, 1).backend(), "lsh");
+    }
+}

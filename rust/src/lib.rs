@@ -19,6 +19,10 @@
 //!   batcher, worker pool and metrics — which executes projections either
 //!   through the native Rust engine or through AOT-compiled XLA artifacts
 //!   ([`runtime`]) produced by the JAX/Pallas build path in `python/`;
+//! * a similarity-search index subsystem ([`index`]) — flat exact-scan and
+//!   random-hyperplane LSH backends over the projected embeddings, served
+//!   through the coordinator as `insert`/`query`/`delete`/`stats` wire ops
+//!   (the workload that consumes the JL distance-preservation guarantee);
 //! * the experiment harness ([`experiments`]) regenerating every figure of
 //!   the paper's evaluation section.
 //!
@@ -41,6 +45,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod index;
 pub mod linalg;
 pub mod projections;
 pub mod rng;

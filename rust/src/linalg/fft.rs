@@ -179,6 +179,7 @@ mod tests {
         let mut delta = vec![0.0; 5];
         delta[1] = 1.0; // shift by one
         let out = circular_convolve(&a, &delta);
-        assert_eq!(out.iter().map(|x| x.round()).collect::<Vec<_>>(), vec![5.0, 1.0, 2.0, 3.0, 4.0]);
+        let rounded: Vec<f64> = out.iter().map(|x| x.round()).collect();
+        assert_eq!(rounded, vec![5.0, 1.0, 2.0, 3.0, 4.0]);
     }
 }

@@ -3,7 +3,7 @@
 //! ```text
 //! trp serve       [--requests N] [--rate R] [--case medium] [--no-pjrt]
 //! trp project     --case medium --format tt [--k 64] [--map tt:5]
-//! trp experiment  fig1|fig2|fig3|fig4|ablation|batch [--quick] [--trials T]
+//! trp experiment  fig1|fig2|fig3|fig4|ablation|batch|ann [--quick] [--trials T]
 //! trp bounds      --eps 0.5 --n 12 --r 10 --m 100 [--delta 0.05]
 //! trp artifacts   [--artifacts DIR]          # list + verify compiled set
 //! ```
@@ -12,7 +12,7 @@ use tensorized_rp::config::AppConfig;
 use tensorized_rp::coordinator::{Coordinator, CoordinatorConfig, ProjectRequest};
 use tensorized_rp::data::inputs::{unit_input, Regime};
 use tensorized_rp::data::workload::{poisson_trace, FormatMix};
-use tensorized_rp::experiments::{ablations, batch, fig1, fig2, fig3, fig4, MapSpec};
+use tensorized_rp::experiments::{ablations, ann, batch, fig1, fig2, fig3, fig4, MapSpec};
 use tensorized_rp::rng::Rng;
 use tensorized_rp::runtime::PjrtEngine;
 use tensorized_rp::tensor::AnyTensor;
@@ -61,7 +61,7 @@ fn print_usage() {
          subcommands:\n\
            serve       run the compression service on a synthetic trace\n\
            project     project one random input and print the distortion\n\
-           experiment  regenerate a paper figure: fig1|fig2|fig3|fig4|ablation|batch\n\
+           experiment  regenerate a paper figure: fig1|fig2|fig3|fig4|ablation|batch|ann\n\
            bounds      evaluate the Theorem 2 size bounds\n\
            sketch      sketched SVD demo with a tensorized test matrix (§7)\n\
            client      send requests to a listening `trp serve --listen` instance\n\
@@ -259,7 +259,8 @@ fn cmd_experiment(args: &Args, cfg: &AppConfig) -> Result<(), String> {
             println!("[written {}]", path.display());
         }
         "fig3" => {
-            let mut c = if cfg.quick { fig3::Fig3Config::quick() } else { fig3::Fig3Config::paper() };
+            let mut c =
+                if cfg.quick { fig3::Fig3Config::quick() } else { fig3::Fig3Config::paper() };
             c.seed = cfg.seed;
             if let Some(t) = cfg.trials {
                 c.trials = t;
@@ -294,6 +295,27 @@ fn cmd_experiment(args: &Args, cfg: &AppConfig) -> Result<(), String> {
             let path = cfg.results_dir.join("batch_sweep.csv");
             csv.write_to(&path).map_err(|e| e.to_string())?;
             println!("[written {}]", path.display());
+        }
+        "ann" => {
+            let mut c = if cfg.quick {
+                ann::AnnSweepConfig::quick()
+            } else {
+                ann::AnnSweepConfig::paper()
+            };
+            c.seed = cfg.seed;
+            let rows = ann::run(&c);
+            let csv = ann::to_csv(&rows);
+            print!("{}", csv.to_markdown());
+            let path = cfg.results_dir.join("ann_sweep.csv");
+            csv.write_to(&path).map_err(|e| e.to_string())?;
+            println!("[written {}]", path.display());
+            // Machine-readable trajectory tracked across PRs alongside
+            // BENCH_batch_sweep.json.
+            let bench_path = args.get_or("bench-out", "BENCH_ann_sweep.json");
+            std::fs::write(&bench_path, ann::to_json(&c, &rows).to_string_pretty())
+                .map_err(|e| e.to_string())?;
+            println!("[written {bench_path}]");
+            ann::print_verdict(&rows);
         }
         "ablation" => {
             let mut c = if cfg.quick {

@@ -113,7 +113,12 @@ impl Projection for TtProjection {
             .collect()
     }
 
-    fn project_batch_into(&self, xs: &[crate::tensor::AnyTensor], out: &mut [f64], ws: &mut Workspace) {
+    fn project_batch_into(
+        &self,
+        xs: &[crate::tensor::AnyTensor],
+        out: &mut [f64],
+        ws: &mut Workspace,
+    ) {
         let k = self.k;
         assert_eq!(out.len(), xs.len() * k, "batch output buffer size");
         if xs.is_empty() {

@@ -111,7 +111,13 @@ pub fn pack_cp_projection(f: &CpProjection, n: usize, d: usize, r: usize) -> Res
 }
 
 /// Pack a batch of CP inputs into `x [B,N,d,R̃]`, zero-padded.
-pub fn pack_cp_inputs(xs: &[&CpTensor], batch: usize, n: usize, d: usize, rt: usize) -> Result<Vec<f32>> {
+pub fn pack_cp_inputs(
+    xs: &[&CpTensor],
+    batch: usize,
+    n: usize,
+    d: usize,
+    rt: usize,
+) -> Result<Vec<f32>> {
     if xs.len() > batch {
         bail!("batch overflow: {} > {batch}", xs.len());
     }

@@ -35,6 +35,18 @@ pub enum Format {
     Cp,
 }
 
+impl Format {
+    /// Parse the canonical wire/CLI name (the inverse of `Display`).
+    pub fn parse(s: &str) -> Option<Format> {
+        match s {
+            "dense" => Some(Format::Dense),
+            "tt" => Some(Format::Tt),
+            "cp" => Some(Format::Cp),
+            _ => None,
+        }
+    }
+}
+
 impl std::fmt::Display for Format {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
@@ -121,5 +133,13 @@ mod tests {
         assert_eq!(Format::Tt.to_string(), "tt");
         assert_eq!(Format::Cp.to_string(), "cp");
         assert_eq!(Format::Dense.to_string(), "dense");
+    }
+
+    #[test]
+    fn format_parse_inverts_display() {
+        for f in [Format::Dense, Format::Tt, Format::Cp] {
+            assert_eq!(Format::parse(&f.to_string()), Some(f));
+        }
+        assert_eq!(Format::parse("tucker"), None);
     }
 }

@@ -85,7 +85,13 @@ impl Gen {
     }
 
     /// Vector of usizes, each in `[lo, hi]`, with length in `[min_len, max_len]`.
-    pub fn usize_vec(&mut self, min_len: usize, max_len: usize, lo: usize, hi: usize) -> Vec<usize> {
+    pub fn usize_vec(
+        &mut self,
+        min_len: usize,
+        max_len: usize,
+        lo: usize,
+        hi: usize,
+    ) -> Vec<usize> {
         let len = self.usize_in(min_len, max_len);
         (0..len).map(|_| self.usize_in(lo, hi)).collect()
     }

@@ -1,0 +1,337 @@
+//! Correctness tests of the similarity-search index subsystem:
+//!
+//! 1. flat-backend top-k equals brute-force top-k in the *original*
+//!    tensor space up to the JL distortion the paper bounds (planted
+//!    low-rank clusters, generous margins);
+//! 2. the LSH backend's recall never falls far below the flat backend on
+//!    the same embeddings;
+//! 3. insert/delete/query/stats round-trip through the coordinator's TCP
+//!    wire path;
+//! 4. coordinator-served `query` results are identical to direct
+//!    in-process index queries over the same registry map and seed
+//!    (the batched service path adds no approximation).
+
+use std::sync::Arc;
+use tensorized_rp::coordinator::{
+    Coordinator, CoordinatorConfig, MapKey, MapKind, NetClient, NetServer, ProjectRequest,
+    ProjectionRegistry,
+};
+use tensorized_rp::index::{build_index, AnnIndex, BackendKind, FlatIndex, LshConfig};
+use tensorized_rp::projections::{Projection, TtProjection, Workspace};
+use tensorized_rp::rng::Rng;
+use tensorized_rp::tensor::{AnyTensor, Format, TtTensor};
+use tensorized_rp::util::proptest::{run, Config};
+
+/// One tensor additively jittered around `center` in TT format:
+/// `normalize(center + σ·noise)`. Within-cluster squared distances are
+/// ≈ `2σ²/(1+σ²)`; cross-cluster ones ≈ 2 — a margin the JL maps must
+/// preserve.
+fn jittered(center: &TtTensor, dims: &[usize], rank: usize, sigma: f64, rng: &mut Rng) -> TtTensor {
+    let mut noise = TtTensor::random_unit(dims, rank, rng);
+    noise.scale(sigma);
+    let mut t = center.add(&noise);
+    let norm = t.fro_norm();
+    if norm > 0.0 {
+        t.scale(1.0 / norm);
+    }
+    t
+}
+
+/// Clustered corpus + queries around *shared* centres, so each query's
+/// true nearest neighbours are the corpus members of its own cluster.
+fn clustered_tt(
+    dims: &[usize],
+    rank: usize,
+    n_centers: usize,
+    n_corpus: usize,
+    n_queries: usize,
+    rng: &mut Rng,
+) -> (Vec<TtTensor>, Vec<TtTensor>) {
+    let centers: Vec<TtTensor> = (0..n_centers)
+        .map(|_| TtTensor::random_unit(dims, rank, rng))
+        .collect();
+    let corpus = (0..n_corpus)
+        .map(|i| jittered(&centers[i % n_centers], dims, rank, 0.35, rng))
+        .collect();
+    let queries = (0..n_queries)
+        .map(|i| jittered(&centers[i % n_centers], dims, rank, 0.35, rng))
+        .collect();
+    (corpus, queries)
+}
+
+/// Exact original-space top-k ids (TT-format distances, no densify).
+fn true_topk(corpus: &[TtTensor], q: &TtTensor, k: usize) -> Vec<u64> {
+    let qn = q.fro_norm();
+    let mut d: Vec<(f64, u64)> = corpus
+        .iter()
+        .enumerate()
+        .map(|(i, x)| {
+            let xn = x.fro_norm();
+            let d2 = (xn * xn + qn * qn - 2.0 * q.inner(x)).max(0.0);
+            (d2, i as u64)
+        })
+        .collect();
+    d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    d.truncate(k);
+    d.into_iter().map(|(_, i)| i).collect()
+}
+
+/// Property: flat-backend top-k over projected embeddings recovers the
+/// original-space top-k up to JL distortion. With m = 64 and clustered
+/// (margin-separated) data the recall floor is comfortably high; exactness
+/// of the flat scan itself is covered by unit tests, this is the JL
+/// end-to-end statement.
+#[test]
+fn prop_flat_topk_matches_original_space_up_to_distortion() {
+    run(
+        "flat recall under JL distortion",
+        Config { cases: 8, seed: 0x11DE },
+        |g| {
+            let dims = vec![3usize; g.usize_in(5, 7)];
+            let rank = g.usize_in(2, 3);
+            let n = g.usize_in(30, 60);
+            let topk = 5;
+            let m = 64;
+            let rng = g.rng();
+            // Cluster size tracks topk, so the true top-k is (roughly) the
+            // query's own cluster and recall measures cluster recovery.
+            let n_centers = (n / topk).max(2);
+            let (corpus, queries) = clustered_tt(&dims, rank, n_centers, n, 4, rng);
+            let mut map_rng = Rng::seed_from(0xF00D);
+            let map = TtProjection::new(&dims, 4, m, &mut map_rng);
+            let mut idx = FlatIndex::new(m);
+            for (i, x) in corpus.iter().enumerate() {
+                idx.insert(i as u64, &map.project_tt(x));
+            }
+            let mut ws = Workspace::new();
+            let mut hits = 0usize;
+            let mut total = 0usize;
+            for q in &queries {
+                let truth = true_topk(&corpus, q, topk);
+                let got = idx.query(&map.project_tt(q), topk, &mut ws);
+                total += topk;
+                hits += got.iter().filter(|nb| truth.contains(&nb.id)).count();
+            }
+            let recall = hits as f64 / total as f64;
+            if recall < 0.6 {
+                return Err(format!(
+                    "recall {recall:.3} below the JL floor (dims {dims:?}, n {n})"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// LSH recall floor: on identical embeddings, multi-probe LSH stays close
+/// to the flat backend's retrieved sets (candidates are exactly
+/// re-scored, so the only loss is candidates never probed).
+#[test]
+fn lsh_recall_floor_against_flat() {
+    let mut rng = Rng::seed_from(0x15A);
+    let dims = vec![3usize; 6];
+    let m = 32;
+    let topk = 5;
+    let (corpus, queries) = clustered_tt(&dims, 3, 16, 80, 10, &mut rng);
+    let mut map_rng = Rng::seed_from(0xBEEF);
+    let map = TtProjection::new(&dims, 4, m, &mut map_rng);
+    let lsh_cfg = LshConfig { tables: 10, bits: 8, probes: 6 };
+    let mut flat = build_index(BackendKind::Flat, m, &lsh_cfg, 1);
+    let mut lsh = build_index(BackendKind::Lsh, m, &lsh_cfg, 1);
+    for (i, x) in corpus.iter().enumerate() {
+        let e = map.project_tt(x);
+        flat.insert(i as u64, &e);
+        lsh.insert(i as u64, &e);
+    }
+    let mut ws = Workspace::new();
+    let mut hits = 0usize;
+    let mut total = 0usize;
+    for q in &queries {
+        let e = map.project_tt(q);
+        let want = flat.query(&e, topk, &mut ws);
+        let got = lsh.query(&e, topk, &mut ws);
+        total += want.len();
+        let got_ids: Vec<u64> = got.iter().map(|n| n.id).collect();
+        hits += want.iter().filter(|n| got_ids.contains(&n.id)).count();
+    }
+    let recall = hits as f64 / total as f64;
+    assert!(
+        recall >= 0.6,
+        "LSH recall vs flat fell to {recall:.3} (want ≥ 0.6)"
+    );
+}
+
+/// Insert/delete/query/stats round-trip over the TCP wire path.
+#[test]
+fn wire_roundtrip_insert_query_delete_stats() {
+    let coord = Arc::new(Coordinator::start(
+        CoordinatorConfig { workers: 2, default_k: 16, ..Default::default() },
+        None,
+    ));
+    let server = NetServer::start(Arc::clone(&coord), "127.0.0.1:0").unwrap();
+    let mut client = NetClient::connect(server.addr()).unwrap();
+    let mut rng = Rng::seed_from(0xCAFE);
+    let dims = vec![3usize; 4];
+    let xs: Vec<TtTensor> = (0..5)
+        .map(|_| TtTensor::random_unit(&dims, 2, &mut rng))
+        .collect();
+    for (i, x) in xs.iter().enumerate() {
+        let resp = client
+            .roundtrip(&ProjectRequest::insert(i as u64, AnyTensor::Tt(x.clone())))
+            .unwrap();
+        assert!(resp.error.is_none(), "{:?}", resp.error);
+        assert_eq!(resp.embedding.unwrap().len(), 16);
+    }
+    // Query an inserted item: itself at distance ~0 first.
+    let resp = client
+        .roundtrip(&ProjectRequest::query(50, AnyTensor::Tt(xs[1].clone()), 3))
+        .unwrap();
+    let ns = resp.neighbors.expect("neighbors over the wire");
+    assert_eq!(ns.len(), 3);
+    assert_eq!(ns[0].id, 1);
+    assert!(ns[0].dist < 1e-9);
+    assert!(ns.windows(2).all(|w| w[0].dist <= w[1].dist));
+    // Delete it.
+    let resp = client
+        .roundtrip(&ProjectRequest::delete(51, 1, Format::Tt, dims.clone()))
+        .unwrap();
+    assert_eq!(resp.removed, Some(true));
+    // Gone from subsequent queries.
+    let resp = client
+        .roundtrip(&ProjectRequest::query(52, AnyTensor::Tt(xs[1].clone()), 5))
+        .unwrap();
+    let ns = resp.neighbors.unwrap();
+    assert_eq!(ns.len(), 4, "only 4 items remain");
+    assert!(ns.iter().all(|n| n.id != 1));
+    // Stats reflect the history.
+    let resp = client
+        .roundtrip(&ProjectRequest::index_stats(53, Format::Tt, dims))
+        .unwrap();
+    let stats = resp.index.expect("stats over the wire");
+    assert_eq!(stats.backend, "flat");
+    assert_eq!(stats.len, 4);
+    assert_eq!(stats.inserts, 5);
+    assert_eq!(stats.deletes, 1);
+    assert_eq!(stats.queries, 2);
+    server.shutdown();
+}
+
+/// Acceptance: coordinator-served queries are identical — ids and
+/// bit-level distances — to direct in-process index queries over the same
+/// registry map (same master seed, same insert order).
+#[test]
+fn coordinator_query_identical_to_direct_index() {
+    let master_seed = 0x5EED;
+    let dims = vec![3usize; 4];
+    let default_k = 16;
+    let tt_rank = 5;
+    let mut rng = Rng::seed_from(0xD1CE);
+    let xs: Vec<TtTensor> = (0..12)
+        .map(|_| TtTensor::random_unit(&dims, 2, &mut rng))
+        .collect();
+    let queries: Vec<TtTensor> = (0..4)
+        .map(|_| TtTensor::random_unit(&dims, 2, &mut rng))
+        .collect();
+
+    // Service side.
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 2,
+            default_k,
+            default_tt_rank: tt_rank,
+            master_seed,
+            ..Default::default()
+        },
+        None,
+    );
+    for (i, x) in xs.iter().enumerate() {
+        coord
+            .project_blocking(ProjectRequest::insert(i as u64, AnyTensor::Tt(x.clone())))
+            .unwrap();
+    }
+    let served: Vec<_> = queries
+        .iter()
+        .enumerate()
+        .map(|(i, q)| {
+            coord
+                .project_blocking(ProjectRequest::query(
+                    100 + i as u64,
+                    AnyTensor::Tt(q.clone()),
+                    5,
+                ))
+                .unwrap()
+                .neighbors
+                .unwrap()
+        })
+        .collect();
+    coord.shutdown();
+
+    // Direct side: same registry map (same master seed + key policy),
+    // same flat backend, same insert order.
+    let registry = ProjectionRegistry::new(master_seed);
+    let key = MapKey {
+        kind: MapKind::Tt { rank: tt_rank },
+        dims: dims.clone(),
+        k: default_k,
+    };
+    let map = registry.get_or_create(&key);
+    let mut idx = FlatIndex::new(default_k);
+    for (i, x) in xs.iter().enumerate() {
+        idx.insert(i as u64, &map.map.project(&AnyTensor::Tt(x.clone())));
+    }
+    let mut ws = Workspace::new();
+    for (q, served_ns) in queries.iter().zip(&served) {
+        let direct = idx.query(&map.map.project(&AnyTensor::Tt(q.clone())), 5, &mut ws);
+        assert_eq!(
+            &direct, served_ns,
+            "coordinator-served query must be identical to the direct index query"
+        );
+    }
+}
+
+/// Property: index contents equal a model HashMap under random
+/// insert/overwrite/delete interleavings, for both backends.
+#[test]
+fn prop_index_matches_model_under_mutation() {
+    run(
+        "index mutation model",
+        Config { cases: 32, seed: 0x10DE },
+        |g| {
+            let dim = g.usize_in(2, 6);
+            let backend = if g.bool_with(0.5) { BackendKind::Flat } else { BackendKind::Lsh };
+            let lsh = LshConfig { tables: 3, bits: 5, probes: 2 };
+            let mut idx = build_index(backend, dim, &lsh, 7);
+            let mut model: std::collections::HashMap<u64, Vec<f64>> =
+                std::collections::HashMap::new();
+            let ops = g.usize_in(1, 60);
+            for _ in 0..ops {
+                let id = g.usize_in(0, 9) as u64;
+                if g.bool_with(0.7) {
+                    let v: Vec<f64> = (0..dim).map(|_| g.gaussian()).collect();
+                    idx.insert(id, &v);
+                    model.insert(id, v);
+                } else {
+                    let removed = idx.remove(id);
+                    let model_removed = model.remove(&id).is_some();
+                    if removed != model_removed {
+                        return Err(format!("remove({id}) = {removed}, model {model_removed}"));
+                    }
+                }
+                if idx.len() != model.len() {
+                    return Err(format!("len {} != model {}", idx.len(), model.len()));
+                }
+            }
+            // Every live item must be retrievable as its own nearest
+            // neighbour at distance ~0 (exact for flat; for LSH the exact
+            // bucket of the item's own hash is always probed).
+            let mut ws = Workspace::new();
+            for (id, v) in &model {
+                let res = idx.query(v, 1, &mut ws);
+                if res.is_empty() || res[0].id != *id || res[0].dist > 1e-9 {
+                    return Err(format!("self-query of {id} failed: {res:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}

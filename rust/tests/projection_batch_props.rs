@@ -38,7 +38,11 @@ fn input(format: usize, dims: &[usize], rng: &mut Rng) -> AnyTensor {
 
 /// Assert bitwise equality between the batched output and per-item
 /// projection for every item of `xs`.
-fn assert_bit_match(map: &dyn Projection, xs: &[AnyTensor], ws: &mut Workspace) -> Result<(), String> {
+fn assert_bit_match(
+    map: &dyn Projection,
+    xs: &[AnyTensor],
+    ws: &mut Workspace,
+) -> Result<(), String> {
     let k = map.k();
     let mut out = vec![f64::NAN; xs.len() * k];
     map.project_batch_into(xs, &mut out, ws);

@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
-# Tier-1 gate for the rust crate: build + tests are hard requirements;
-# formatting and clippy run as advisory checks (promote them to hard
-# failures with TIER1_STRICT=1 once the tree is lint-clean — tracked in
-# ROADMAP.md Open items).
+# Tier-1 gate for the rust crate: build + tests are hard requirements, and
+# — now that the tree is lint-clean — `cargo fmt --check` and
+# `cargo clippy -- -D warnings` gate by default. Set TIER1_STRICT=0 to
+# demote them back to advisory (e.g. on a machine with a divergent
+# rustfmt/clippy version).
 #
 # Usage: scripts/tier1.sh  [from anywhere; operates on rust/]
 set -uo pipefail
@@ -10,7 +11,7 @@ set -uo pipefail
 repo_root="$(cd "$(dirname "$0")/.." && pwd)"
 cd "$repo_root/rust"
 
-strict="${TIER1_STRICT:-0}"
+strict="${TIER1_STRICT:-1}"
 fail=0
 
 echo "== tier1: cargo build --release =="
@@ -24,10 +25,14 @@ fi
 advisory() {
   local label="$1"
   shift
-  echo "== tier1 (advisory): $label =="
+  if [ "$strict" = "1" ]; then
+    echo "== tier1: $label =="
+  else
+    echo "== tier1 (advisory): $label =="
+  fi
   if ! "$@"; then
     if [ "$strict" = "1" ]; then
-      echo "tier1: $label failed (strict mode)"
+      echo "tier1: $label failed (strict mode; set TIER1_STRICT=0 to demote)"
       fail=1
     else
       echo "tier1: $label failed (advisory — not gating; set TIER1_STRICT=1 to gate)"
