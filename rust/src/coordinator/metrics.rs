@@ -89,6 +89,11 @@ pub struct Metrics {
     pub index_deletes: AtomicU64,
     /// Index queries answered through the coordinator.
     pub index_queries: AtomicU64,
+    /// Index snapshots written (explicit `snapshot` ops + periodic).
+    pub index_snapshots: AtomicU64,
+    /// Index restores applied (`restore` wire ops; startup `--restore`
+    /// happens before the metrics are observable and is not counted).
+    pub index_restores: AtomicU64,
     /// End-to-end latency (submit → response).
     pub e2e_latency: LatencyHistogram,
 }
@@ -120,6 +125,10 @@ pub struct MetricsSnapshot {
     pub index_deletes: u64,
     /// See [`Metrics::index_queries`].
     pub index_queries: u64,
+    /// See [`Metrics::index_snapshots`].
+    pub index_snapshots: u64,
+    /// See [`Metrics::index_restores`].
+    pub index_restores: u64,
     /// Mean end-to-end latency (µs).
     pub mean_latency_us: f64,
     /// p50 end-to-end latency (µs, bucket upper edge).
@@ -149,6 +158,8 @@ impl Metrics {
             index_inserts: self.index_inserts.load(Ordering::Relaxed),
             index_deletes: self.index_deletes.load(Ordering::Relaxed),
             index_queries: self.index_queries.load(Ordering::Relaxed),
+            index_snapshots: self.index_snapshots.load(Ordering::Relaxed),
+            index_restores: self.index_restores.load(Ordering::Relaxed),
             mean_latency_us: self.e2e_latency.mean_us(),
             p50_latency_us: self.e2e_latency.quantile_us(0.50),
             p99_latency_us: self.e2e_latency.quantile_us(0.99),

@@ -2,18 +2,33 @@
 //! (std::net — no async runtime offline, and the workload is compute-
 //! bound so blocking I/O threads are the right tool).
 //!
-//! One reader thread per connection; responses are written by the worker
-//! completion path through a per-connection writer lock, so pipelined
-//! requests from one client overlap in the batcher exactly like requests
-//! from different clients.
+//! Exactly two threads per connection: a reader that decodes lines and
+//! submits them to the coordinator, and one reply-writer draining an
+//! mpsc channel of pending replies in request order. Pipelined requests
+//! still overlap in the batcher (submission never waits on a reply);
+//! only the response *writes* are serialized, which the single socket
+//! forces anyway. The reader joins the writer on every exit path — EOF,
+//! read error, or server shutdown — so no handle or thread accumulates
+//! per request.
 
 use super::request::ProjectRequest;
-use super::server::Coordinator;
+use super::server::{Coordinator, Reply};
 use super::wire;
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::net::{Shutdown, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver};
 use std::sync::{Arc, Mutex};
+
+/// Socket handles of live connections, used to unblock their readers at
+/// shutdown. Each handler removes its own entry on exit, so a finished
+/// connection's duplicated fd is closed (and FIN sent) immediately, not
+/// at the next accept.
+type ConnStreams = Arc<Mutex<HashMap<u64, TcpStream>>>;
+/// Join handles of connection reader threads (reaped on accept, joined
+/// at shutdown). A finished handle holds no socket — only exit status.
+type ConnHandles = Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>;
 
 /// Handle to a running TCP server.
 pub struct NetServer {
@@ -21,6 +36,8 @@ pub struct NetServer {
     stop: Arc<AtomicBool>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
     served: Arc<AtomicU64>,
+    conn_streams: ConnStreams,
+    conn_handles: ConnHandles,
 }
 
 impl NetServer {
@@ -33,14 +50,25 @@ impl NetServer {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let served = Arc::new(AtomicU64::new(0));
+        let conn_streams: ConnStreams = Arc::new(Mutex::new(HashMap::new()));
+        let conn_handles: ConnHandles = Arc::new(Mutex::new(Vec::new()));
         let accept_thread = {
             let stop = Arc::clone(&stop);
             let served = Arc::clone(&served);
+            let conn_streams = Arc::clone(&conn_streams);
+            let conn_handles = Arc::clone(&conn_handles);
             std::thread::spawn(move || {
-                accept_loop(listener, coordinator, stop, served);
+                accept_loop(listener, coordinator, stop, served, conn_streams, conn_handles);
             })
         };
-        Ok(NetServer { addr: local, stop, accept_thread: Some(accept_thread), served })
+        Ok(NetServer {
+            addr: local,
+            stop,
+            accept_thread: Some(accept_thread),
+            served,
+            conn_streams,
+            conn_handles,
+        })
     }
 
     /// The bound address (useful with port 0).
@@ -53,8 +81,10 @@ impl NetServer {
         self.served.load(Ordering::Relaxed)
     }
 
-    /// Stop accepting and join the accept loop. Established connections
-    /// finish their in-flight requests.
+    /// Stop accepting, unblock every connection reader (half-close of the
+    /// read side), and join all connection threads. Requests already read
+    /// off a socket get their replies written before the connection
+    /// closes.
     pub fn shutdown(mut self) {
         self.stop_inner();
     }
@@ -63,6 +93,15 @@ impl NetServer {
         self.stop.store(true, Ordering::SeqCst);
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
+        }
+        // Readers block in `lines()`; shutting down the read side makes
+        // that return EOF so the connection drains and exits.
+        for stream in self.conn_streams.lock().unwrap().values() {
+            let _ = stream.shutdown(Shutdown::Read);
+        }
+        let handles: Vec<_> = std::mem::take(&mut *self.conn_handles.lock().unwrap());
+        for handle in handles {
+            let _ = handle.join();
         }
     }
 }
@@ -78,15 +117,34 @@ fn accept_loop(
     coordinator: Arc<Coordinator>,
     stop: Arc<AtomicBool>,
     served: Arc<AtomicU64>,
+    conn_streams: ConnStreams,
+    conn_handles: ConnHandles,
 ) {
+    let mut next_conn_id = 0u64;
     while !stop.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _)) => {
+                // Keep a socket handle for shutdown; a connection we
+                // cannot later unblock is a connection we don't serve.
+                let Ok(peer) = stream.try_clone() else {
+                    continue;
+                };
+                let conn_id = next_conn_id;
+                next_conn_id += 1;
+                conn_streams.lock().unwrap().insert(conn_id, peer);
                 let coordinator = Arc::clone(&coordinator);
                 let served = Arc::clone(&served);
-                std::thread::spawn(move || {
+                let streams = Arc::clone(&conn_streams);
+                let handle = std::thread::spawn(move || {
                     let _ = handle_connection(stream, coordinator, served);
+                    // Drop the registry's duplicated fd as soon as the
+                    // connection ends, so the peer sees FIN now and an
+                    // idle server holds no dead sockets.
+                    streams.lock().unwrap().remove(&conn_id);
                 });
+                let mut handles = conn_handles.lock().unwrap();
+                handles.retain(|h| !h.is_finished());
+                handles.push(handle);
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 std::thread::sleep(std::time::Duration::from_millis(5));
@@ -96,49 +154,74 @@ fn accept_loop(
     }
 }
 
+/// One entry in the per-connection reply queue, in request order.
+enum Outgoing {
+    /// A submitted request: id + the channel its reply arrives on.
+    Pending(u64, Receiver<Reply>),
+    /// An undecodable line: best-effort recovered id (None → `"id":
+    /// null` on the wire) + the decode error.
+    Malformed(Option<u64>, String),
+}
+
 fn handle_connection(
     stream: TcpStream,
     coordinator: Arc<Coordinator>,
     served: Arc<AtomicU64>,
 ) -> std::io::Result<()> {
     stream.set_nonblocking(false)?;
-    let writer = Arc::new(Mutex::new(stream.try_clone()?));
+    let write_half = stream.try_clone()?;
+    let (tx, rx) = channel::<Outgoing>();
+    let writer = std::thread::spawn(move || reply_writer_loop(write_half, rx, served));
     let reader = BufReader::new(stream);
-    let mut reply_threads = Vec::new();
+    let mut read_result = Ok(());
     for line in reader.lines() {
-        let line = line?;
+        let line = match line {
+            Ok(line) => line,
+            Err(e) => {
+                // Fall through to the join below: pending replies still
+                // get written before the connection is torn down.
+                read_result = Err(e);
+                break;
+            }
+        };
         if line.trim().is_empty() {
             continue;
         }
-        match wire::decode_request(&line) {
+        let out = match wire::decode_request(&line) {
             Ok(req) => {
                 let id = req.id;
-                let rx = coordinator.submit(req);
-                let writer = Arc::clone(&writer);
-                let served = Arc::clone(&served);
-                // Reply asynchronously so the client can pipeline.
-                reply_threads.push(std::thread::spawn(move || {
-                    let result = rx
-                        .recv()
-                        .unwrap_or_else(|_| Err("coordinator dropped the request".into()));
-                    let out = wire::encode_response(&result, id);
-                    let mut w = writer.lock().unwrap();
-                    let _ = writeln!(w, "{out}");
-                    let _ = w.flush();
-                    served.fetch_add(1, Ordering::Relaxed);
-                }));
+                Outgoing::Pending(id, coordinator.submit(req))
             }
-            Err(e) => {
-                let mut w = writer.lock().unwrap();
-                let _ = writeln!(w, "{}", wire::encode_response(&Err(e), 0));
-                let _ = w.flush();
-            }
+            Err(e) => Outgoing::Malformed(wire::parse_request_id(&line), e),
+        };
+        if tx.send(out).is_err() {
+            break; // Writer exited (socket write failed): stop reading.
         }
     }
-    for t in reply_threads {
-        let _ = t.join();
+    drop(tx);
+    let _ = writer.join();
+    read_result
+}
+
+/// Drain the reply queue: wait for each pending reply in request order
+/// and write it. Exits when the reader drops its sender (EOF, read
+/// error, shutdown) and the queue is drained, or when a write fails.
+fn reply_writer_loop(mut stream: TcpStream, rx: Receiver<Outgoing>, served: Arc<AtomicU64>) {
+    for out in rx {
+        let line = match out {
+            Outgoing::Pending(id, reply) => {
+                let result = reply
+                    .recv()
+                    .unwrap_or_else(|_| Err("coordinator dropped the request".into()));
+                served.fetch_add(1, Ordering::Relaxed);
+                wire::encode_response(&result, Some(id))
+            }
+            Outgoing::Malformed(id, e) => wire::encode_response(&Err(e), id),
+        };
+        if writeln!(stream, "{line}").and_then(|()| stream.flush()).is_err() {
+            break; // Client gone; the reader notices via the closed channel.
+        }
     }
-    Ok(())
 }
 
 /// Minimal blocking client for the wire protocol (used by tests, the
@@ -202,7 +285,7 @@ mod tests {
         let resp = client
             .roundtrip(&ProjectRequest::new(5, AnyTensor::Tt(x)))
             .unwrap();
-        assert_eq!(resp.id, 5);
+        assert_eq!(resp.id, Some(5));
         assert_eq!(resp.embedding.unwrap().len(), 8);
         assert!(resp.error.is_none());
         server.shutdown();
@@ -218,7 +301,7 @@ mod tests {
             let x = TtTensor::random_unit(&[3; 4], 2, &mut rng);
             client.send(&ProjectRequest::new(i, AnyTensor::Tt(x))).unwrap();
         }
-        let mut ids: Vec<u64> = (0..n).map(|_| client.recv().unwrap().id).collect();
+        let mut ids: Vec<u64> = (0..n).map(|_| client.recv().unwrap().id.unwrap()).collect();
         ids.sort_unstable();
         assert_eq!(ids, (0..n).collect::<Vec<u64>>());
         server.shutdown();
@@ -239,6 +322,113 @@ mod tests {
     }
 
     #[test]
+    fn malformed_line_reply_does_not_collide_with_live_id0_request() {
+        let (_coord, server) = start_server();
+        let stream = TcpStream::connect(server.addr()).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        let mut rng = Rng::seed_from(9);
+        let x = TtTensor::random_unit(&[3; 4], 2, &mut rng);
+        // Pipeline a legitimate id-0 request, then garbage, then a valid
+        // JSON request with an unknown op (its id is recoverable).
+        writeln!(w, "{}", wire::encode_request(&ProjectRequest::new(0, AnyTensor::Tt(x))))
+            .unwrap();
+        writeln!(w, "this is not json").unwrap();
+        writeln!(w, r#"{{"id":42,"op":"upsert","format":"tt","dims":[3]}}"#).unwrap();
+        let mut reader = BufReader::new(stream);
+        let mut resps = Vec::new();
+        for _ in 0..3 {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            resps.push(wire::decode_response(line.trim_end()).unwrap());
+        }
+        // The single writer preserves request order.
+        assert_eq!(resps[0].id, Some(0));
+        assert!(resps[0].error.is_none(), "id 0 is a legitimate request");
+        assert_eq!(resps[1].id, None, "unattributable error must not claim id 0");
+        assert!(resps[1].error.is_some());
+        assert_eq!(resps[2].id, Some(42), "recoverable id is echoed back");
+        assert!(resps[2].error.is_some());
+        server.shutdown();
+    }
+
+    /// Kernel-reported thread count of this process (Linux only).
+    #[cfg(target_os = "linux")]
+    fn current_threads() -> usize {
+        std::fs::read_to_string("/proc/self/status")
+            .ok()
+            .and_then(|s| {
+                s.lines()
+                    .find(|l| l.starts_with("Threads:"))
+                    .and_then(|l| l.split_whitespace().nth(1))
+                    .and_then(|v| v.parse().ok())
+            })
+            .expect("/proc/self/status readable on linux")
+    }
+
+    #[test]
+    #[cfg(target_os = "linux")]
+    fn pipelined_connection_keeps_thread_count_bounded() {
+        use crate::tensor::DenseTensor;
+        // Regression: the reply path used to spawn one thread per
+        // pipelined request and accumulate the handles without bound.
+        // With the single reply-writer the process thread count must stay
+        // flat across a 10k-request pipelined connection.
+        let (_coord, server) = start_server();
+        let mut client = NetClient::connect(server.addr()).unwrap();
+        let mut rng = Rng::seed_from(5);
+        let x = DenseTensor::random(&[2, 2], &mut rng);
+        let baseline = current_threads();
+        let n = 10_000u64;
+        let mut peak = baseline;
+        for i in 0..n {
+            client
+                .send(&ProjectRequest::new(i, AnyTensor::Dense(x.clone())))
+                .unwrap();
+            if i % 1000 == 0 {
+                peak = peak.max(current_threads());
+            }
+        }
+        let mut answered = 0u64;
+        for i in 0..n {
+            let resp = client.recv().unwrap();
+            assert!(resp.error.is_none());
+            answered += 1;
+            if i % 1000 == 0 {
+                peak = peak.max(current_threads());
+            }
+        }
+        assert_eq!(answered, n);
+        // The connection itself adds exactly two threads (reader +
+        // writer). The slack absorbs unrelated tests running in the same
+        // process; the old thread-per-pipelined-request reply path
+        // peaked in the thousands here.
+        assert!(
+            peak <= baseline + 64,
+            "thread count must stay bounded: baseline={baseline} peak={peak}"
+        );
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_unblocks_idle_connections() {
+        // Readers sit in `lines()` between requests; shutdown must
+        // half-close them and return instead of waiting forever.
+        let (_coord, server) = start_server();
+        let mut client = NetClient::connect(server.addr()).unwrap();
+        let mut rng = Rng::seed_from(6);
+        let x = TtTensor::random_unit(&[3; 4], 2, &mut rng);
+        let resp = client.roundtrip(&ProjectRequest::new(1, AnyTensor::Tt(x))).unwrap();
+        assert_eq!(resp.id, Some(1));
+        // Connection stays open and idle while we shut down.
+        let t0 = std::time::Instant::now();
+        server.shutdown();
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(10),
+            "shutdown must not hang on idle connections"
+        );
+    }
+
+    #[test]
     fn multiple_clients_share_the_service() {
         let (_coord, server) = start_server();
         let addr = server.addr();
@@ -251,7 +441,7 @@ mod tests {
                     let resp = client
                         .roundtrip(&ProjectRequest::new(c, AnyTensor::Tt(x)))
                         .unwrap();
-                    assert_eq!(resp.id, c);
+                    assert_eq!(resp.id, Some(c));
                 })
             })
             .collect();

@@ -1,6 +1,6 @@
 //! Request/response types of the compression + similarity-search service.
 
-use crate::index::{IndexStats, Neighbor};
+use crate::index::{IndexStats, Neighbor, SnapshotReport};
 use crate::tensor::{AnyTensor, Format};
 
 /// Which execution path served a request.
@@ -47,6 +47,13 @@ pub enum RequestOp {
     },
     /// Snapshot the signature's index statistics.
     IndexStats,
+    /// Persist the signature's index to the coordinator's snapshot
+    /// directory (a consistent cut between index ops — the write runs
+    /// inside the signature's FIFO sequencer turn).
+    Snapshot,
+    /// Reload the signature's index from its snapshot file, replacing
+    /// the live contents.
+    Restore,
 }
 
 /// A request payload: the tensor to embed, or — for ops that carry no
@@ -133,6 +140,16 @@ impl ProjectRequest {
     pub fn index_stats(id: u64, format: Format, dims: Vec<usize>) -> Self {
         Self { id, op: RequestOp::IndexStats, payload: Payload::Signature { format, dims } }
     }
+
+    /// Persist the `(format, dims)` signature's index to disk.
+    pub fn snapshot(id: u64, format: Format, dims: Vec<usize>) -> Self {
+        Self { id, op: RequestOp::Snapshot, payload: Payload::Signature { format, dims } }
+    }
+
+    /// Reload the `(format, dims)` signature's index from disk.
+    pub fn restore(id: u64, format: Format, dims: Vec<usize>) -> Self {
+        Self { id, op: RequestOp::Restore, payload: Payload::Signature { format, dims } }
+    }
 }
 
 /// A completed request.
@@ -148,6 +165,10 @@ pub struct ProjectResponse {
     pub removed: Option<bool>,
     /// Index statistics (`IndexStats` responses only).
     pub index: Option<IndexStats>,
+    /// Where/what a snapshot wrote (`Snapshot` responses only).
+    pub snapshot: Option<SnapshotReport>,
+    /// Items reloaded (`Restore` responses only).
+    pub restored: Option<u64>,
     /// Which engine computed it.
     pub path: EnginePath,
     /// Time spent queued + batched before execution (microseconds).
@@ -181,6 +202,12 @@ mod tests {
         assert!(r.payload.tensor().is_none());
         let s = ProjectRequest::index_stats(4, Format::Cp, vec![2, 2]);
         assert_eq!(s.op, RequestOp::IndexStats);
+        let p = ProjectRequest::snapshot(5, Format::Tt, vec![3, 3]);
+        assert_eq!(p.op, RequestOp::Snapshot);
+        assert!(p.payload.tensor().is_none());
+        let r = ProjectRequest::restore(6, Format::Tt, vec![3, 3]);
+        assert_eq!(r.op, RequestOp::Restore);
+        assert!(r.payload.tensor().is_none());
     }
 
     #[test]

@@ -26,7 +26,7 @@ use super::router::{RouteTarget, Router};
 use super::state::{
     IndexRegistry, MapKey, MapKind, PackedParams, ProjectionRegistry, SharedIndex, WorkspacePool,
 };
-use crate::index::{AnnIndex, BackendKind, IndexStats, LshConfig, Neighbor};
+use crate::index::{AnnIndex, BackendKind, IndexStats, LshConfig, Neighbor, SnapshotReport};
 use crate::projections::Workspace;
 use crate::runtime::{pack, ArtifactKind, PjrtEngine};
 use crate::tensor::{AnyTensor, Format};
@@ -61,6 +61,16 @@ pub struct CoordinatorConfig {
     pub index_backend: BackendKind,
     /// LSH shape used when `index_backend` is [`BackendKind::Lsh`].
     pub lsh: LshConfig,
+    /// Directory index snapshots are written to and reloaded from.
+    /// `None` disables the `snapshot`/`restore` wire ops and periodic
+    /// snapshots (they reply with an error).
+    pub snapshot_dir: Option<std::path::PathBuf>,
+    /// Write a background snapshot of a signature's index after this
+    /// many mutations (inserts + effective deletes) since its last
+    /// snapshot. `0` disables periodic snapshots. The write runs inside
+    /// the signature's sequencer turn, so it is a consistent cut between
+    /// flushes exactly like an explicit `snapshot` op.
+    pub snapshot_every_ops: u64,
     /// Map policy for native TT-format requests: TT rank.
     pub default_tt_rank: usize,
     /// Map policy for native CP-format requests: CP rank.
@@ -82,6 +92,8 @@ impl Default for CoordinatorConfig {
             master_seed: 0xC0FFEE,
             index_backend: BackendKind::Flat,
             lsh: LshConfig::default(),
+            snapshot_dir: None,
+            snapshot_every_ops: 0,
             default_tt_rank: 5,
             default_cp_rank: 25,
             default_k: 64,
@@ -125,10 +137,20 @@ pub struct Coordinator {
 impl Coordinator {
     /// Start a coordinator. Pass a loaded [`PjrtEngine`] to enable the
     /// compiled path; with `None` everything runs on the native engine.
+    ///
+    /// # Panics
+    /// When `snapshot_every_ops > 0` without a `snapshot_dir`: a server
+    /// that believes periodic durability is on but can never write a
+    /// snapshot must fail at startup, not at the first crash.
     pub fn start(cfg: CoordinatorConfig, engine: Option<PjrtEngine>) -> Self {
+        assert!(
+            cfg.snapshot_every_ops == 0 || cfg.snapshot_dir.is_some(),
+            "snapshot_every_ops requires snapshot_dir"
+        );
         let shared = Arc::new(Shared {
             registry: ProjectionRegistry::new(cfg.master_seed),
-            indexes: IndexRegistry::new(cfg.master_seed, cfg.index_backend, cfg.lsh),
+            indexes: IndexRegistry::new(cfg.master_seed, cfg.index_backend, cfg.lsh)
+                .with_snapshot_dir(cfg.snapshot_dir.clone()),
             engine,
             metrics: Metrics::new(),
             workspaces: WorkspacePool::new(),
@@ -187,6 +209,14 @@ impl Coordinator {
     /// Whether a PJRT engine is attached.
     pub fn has_pjrt(&self) -> bool {
         self.shared.engine.is_some()
+    }
+
+    /// Crash recovery: load every index snapshot in `dir` into the
+    /// registry. Call before serving traffic (`trp serve --restore`);
+    /// per-signature `restore` wire ops cover runtime reloads. Returns
+    /// `(signatures, items)` restored.
+    pub fn restore_from(&self, dir: &std::path::Path) -> Result<(usize, u64), String> {
+        self.shared.indexes.restore_all(dir)
     }
 
     /// Graceful shutdown: drains queued requests, then joins all threads.
@@ -515,16 +545,21 @@ fn run_native_batch(
     let mut removed: Vec<Option<bool>> = vec![None; items.len()];
     let mut neighbors: Vec<Option<Vec<Neighbor>>> = (0..items.len()).map(|_| None).collect();
     let mut stats: Vec<Option<IndexStats>> = (0..items.len()).map(|_| None).collect();
+    let mut snapshots: Vec<Option<SnapshotReport>> = (0..items.len()).map(|_| None).collect();
+    let mut restored: Vec<Option<u64>> = vec![None; items.len()];
+    let mut op_errors: Vec<Option<String>> = vec![None; items.len()];
     if let Some((slot, ticket)) = index_turn {
+        let slot2 = Arc::clone(&slot);
         slot.run_in_turn(ticket, |index| {
             let mut pending: Vec<usize> = Vec::new();
+            let mut mutations = 0u64;
             for (i, it) in items.iter().enumerate() {
                 match it.op {
                     RequestOp::Project => {}
                     RequestOp::Query { .. } => pending.push(i),
                     RequestOp::Insert => {
                         score_pending(
-                            index,
+                            index.as_mut(),
                             shared,
                             &items,
                             &out,
@@ -534,11 +569,12 @@ fn run_native_batch(
                         );
                         let r = it.row.expect("insert carries a tensor");
                         index.insert(it.id, &out[r * k..(r + 1) * k]);
+                        mutations += 1;
                         shared.metrics.index_inserts.fetch_add(1, Ordering::Relaxed);
                     }
                     RequestOp::Delete { target } => {
                         score_pending(
-                            index,
+                            index.as_mut(),
                             shared,
                             &items,
                             &out,
@@ -546,12 +582,14 @@ fn run_native_batch(
                             &mut neighbors,
                             &mut ws,
                         );
-                        removed[i] = Some(index.remove(target));
+                        let hit = index.remove(target);
+                        removed[i] = Some(hit);
+                        mutations += hit as u64;
                         shared.metrics.index_deletes.fetch_add(1, Ordering::Relaxed);
                     }
                     RequestOp::IndexStats => {
                         score_pending(
-                            index,
+                            index.as_mut(),
                             shared,
                             &items,
                             &out,
@@ -561,10 +599,64 @@ fn run_native_batch(
                         );
                         stats[i] = Some(index.stats());
                     }
+                    RequestOp::Snapshot => {
+                        // The turn is held, so the capture is a
+                        // consistent cut: everything that arrived before
+                        // this op is in the file, nothing after.
+                        score_pending(
+                            index.as_mut(),
+                            shared,
+                            &items,
+                            &out,
+                            &mut pending,
+                            &mut neighbors,
+                            &mut ws,
+                        );
+                        match shared.indexes.snapshot_slot(&slot2, index.as_ref()) {
+                            Ok(report) => {
+                                // This flush's mutations so far are in the
+                                // file too — don't re-count them into the
+                                // periodic trigger below.
+                                mutations = 0;
+                                slot2.reset_mutations();
+                                shared
+                                    .metrics
+                                    .index_snapshots
+                                    .fetch_add(1, Ordering::Relaxed);
+                                snapshots[i] = Some(report);
+                            }
+                            Err(e) => op_errors[i] = Some(format!("snapshot failed: {e}")),
+                        }
+                    }
+                    RequestOp::Restore => {
+                        score_pending(
+                            index.as_mut(),
+                            shared,
+                            &items,
+                            &out,
+                            &mut pending,
+                            &mut neighbors,
+                            &mut ws,
+                        );
+                        match shared.indexes.restore_slot(&slot2, index) {
+                            Ok(n) => {
+                                // Earlier mutations in this flush were
+                                // discarded by the reload: the index now
+                                // equals the file exactly.
+                                mutations = 0;
+                                shared
+                                    .metrics
+                                    .index_restores
+                                    .fetch_add(1, Ordering::Relaxed);
+                                restored[i] = Some(n);
+                            }
+                            Err(e) => op_errors[i] = Some(format!("restore failed: {e}")),
+                        }
+                    }
                 }
             }
             score_pending(
-                index,
+                index.as_mut(),
                 shared,
                 &items,
                 &out,
@@ -572,6 +664,20 @@ fn run_native_batch(
                 &mut neighbors,
                 &mut ws,
             );
+            // Periodic background snapshots ride the same turn, so the
+            // file is a consistent cut between flushes.
+            if shared.cfg.snapshot_every_ops > 0
+                && mutations > 0
+                && slot2.note_mutations(mutations) >= shared.cfg.snapshot_every_ops
+            {
+                match shared.indexes.snapshot_slot(&slot2, index.as_ref()) {
+                    Ok(_) => {
+                        slot2.reset_mutations();
+                        shared.metrics.index_snapshots.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(e) => eprintln!("[coordinator] periodic snapshot failed: {e}"),
+                }
+            }
         });
     }
     shared.workspaces.release(ws);
@@ -582,6 +688,11 @@ fn run_native_batch(
         .native_requests
         .fetch_add(items.len() as u64, Ordering::Relaxed);
     for (i, it) in items.into_iter().enumerate() {
+        if let Some(e) = op_errors[i].take() {
+            shared.metrics.failed.fetch_add(1, Ordering::Relaxed);
+            let _ = it.reply.send(Err(e));
+            continue;
+        }
         shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
         shared.metrics.e2e_latency.record(t1.saturating_sub(it.submit_us));
         // Per-reply embeddings are exact-sized copies out of the pooled
@@ -598,6 +709,8 @@ fn run_native_batch(
             neighbors: neighbors[i].take(),
             removed: removed[i],
             index: stats[i].take(),
+            snapshot: snapshots[i].take(),
+            restored: restored[i],
             path: EnginePath::Native,
             queued_us: t0.saturating_sub(it.submit_us),
             exec_us: t1 - t0,
@@ -770,6 +883,8 @@ fn run_pjrt_batch(shared: &Arc<Shared>, artifact: &str, batch: &[BatchItem]) -> 
             neighbors: None,
             removed: None,
             index: None,
+            snapshot: None,
+            restored: None,
             path: EnginePath::Pjrt(artifact.to_string()),
             queued_us: t0.saturating_sub(item.env.submit_us),
             exec_us: t1 - t0,

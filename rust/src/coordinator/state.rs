@@ -6,7 +6,10 @@
 //! from `(master_seed, map key)`, so a restarted coordinator reproduces
 //! identical maps, and the PJRT and native paths share one draw.
 
-use crate::index::{build_index, AnnIndex, BackendKind, LshConfig};
+use crate::index::persist::Cursor;
+use crate::index::{
+    build_index, AnnIndex, BackendKind, IndexSnapshot, LshConfig, SnapshotReport,
+};
 use crate::projections::{
     CpProjection, GaussianProjection, Projection, SparseKind, SparseProjection, TtProjection,
     Workspace,
@@ -15,6 +18,7 @@ use crate::rng::Rng;
 use crate::runtime::{pack, ArtifactKind, ArtifactSpec};
 use anyhow::Result;
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
@@ -46,6 +50,56 @@ pub struct MapKey {
     pub dims: Vec<usize>,
     /// Embedding dimension.
     pub k: usize,
+}
+
+impl MapKey {
+    /// Canonical byte encoding, embedded in index snapshot headers so a
+    /// restored file routes back to its signature:
+    /// `kind tag u8 | rank u64 | ndims u32 | dims u64… | k u64` (LE).
+    pub fn encode(&self) -> Vec<u8> {
+        let (tag, rank): (u8, u64) = match self.kind {
+            MapKind::Tt { rank } => (1, rank as u64),
+            MapKind::Cp { rank } => (2, rank as u64),
+            MapKind::Gaussian => (3, 0),
+            MapKind::VerySparse => (4, 0),
+        };
+        let mut out = Vec::with_capacity(1 + 8 + 4 + self.dims.len() * 8 + 8);
+        out.push(tag);
+        out.extend_from_slice(&rank.to_le_bytes());
+        out.extend_from_slice(&(self.dims.len() as u32).to_le_bytes());
+        for &d in &self.dims {
+            out.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        out.extend_from_slice(&(self.k as u64).to_le_bytes());
+        out
+    }
+
+    /// Inverse of [`MapKey::encode`] (reads through the persistence
+    /// layer's bounds-checked [`Cursor`]).
+    pub fn decode(bytes: &[u8]) -> std::result::Result<MapKey, String> {
+        let mut cur = Cursor::new(bytes);
+        let tag = cur.u8()?;
+        let rank = cur.u64()? as usize;
+        let ndims = cur.u32()? as usize;
+        // Validate the advertised length before allocating for it (this
+        // also rejects trailing bytes).
+        if bytes.len() != 13 + ndims * 8 + 8 {
+            return Err("map key length mismatch".into());
+        }
+        let mut dims = Vec::with_capacity(ndims);
+        for _ in 0..ndims {
+            dims.push(cur.u64()? as usize);
+        }
+        let k = cur.u64()? as usize;
+        let kind = match tag {
+            1 => MapKind::Tt { rank },
+            2 => MapKind::Cp { rank },
+            3 => MapKind::Gaussian,
+            4 => MapKind::VerySparse,
+            other => return Err(format!("unknown map kind tag {other}")),
+        };
+        Ok(MapKey { kind, dims, k })
+    }
 }
 
 /// Cached PJRT parameter buffers for one map (packed once, reused for
@@ -294,6 +348,8 @@ impl ProjectionRegistry {
 /// jobs FIFO, so ticket `n` always starts before `n+1` and the wait can
 /// never deadlock.
 pub struct IndexSlot {
+    /// The signature this index serves (snapshot files are keyed on it).
+    pub key: MapKey,
     /// The ANN index. Lock it directly for out-of-band access; the
     /// coordinator's flushes go through [`IndexSlot::run_in_turn`].
     pub index: Mutex<Box<dyn AnnIndex>>,
@@ -302,16 +358,32 @@ pub struct IndexSlot {
     turn_done: Condvar,
     /// Tickets handed out so far.
     issued: AtomicU64,
+    /// Mutations (inserts + effective deletes) since the last snapshot —
+    /// drives the `snapshot_every_ops` periodic-snapshot trigger.
+    mutations: AtomicU64,
 }
 
 impl IndexSlot {
-    fn new(index: Box<dyn AnnIndex>) -> Self {
+    fn new(key: MapKey, index: Box<dyn AnnIndex>) -> Self {
         Self {
+            key,
             index: Mutex::new(index),
             turn: Mutex::new(0),
             turn_done: Condvar::new(),
             issued: AtomicU64::new(0),
+            mutations: AtomicU64::new(0),
         }
+    }
+
+    /// Record `n` mutations; returns the running total since the last
+    /// snapshot.
+    pub fn note_mutations(&self, n: u64) -> u64 {
+        self.mutations.fetch_add(n, Ordering::Relaxed) + n
+    }
+
+    /// Reset the mutation counter (after a successful snapshot/restore).
+    pub fn reset_mutations(&self) {
+        self.mutations.store(0, Ordering::Relaxed);
     }
 
     /// Reserve the next position in this signature's index order. Call in
@@ -322,15 +394,17 @@ impl IndexSlot {
     }
 
     /// Block until `ticket` is at the head of the order, run `f` on the
-    /// locked index, then release the turn to the next ticket.
-    pub fn run_in_turn<R>(&self, ticket: u64, f: impl FnOnce(&mut dyn AnnIndex) -> R) -> R {
+    /// locked index, then release the turn to the next ticket. The
+    /// closure receives the owning `Box` so a `restore` op can swap the
+    /// whole index while the turn is held.
+    pub fn run_in_turn<R>(&self, ticket: u64, f: impl FnOnce(&mut Box<dyn AnnIndex>) -> R) -> R {
         let mut turn = self.turn.lock().unwrap();
         while *turn != ticket {
             turn = self.turn_done.wait(turn).unwrap();
         }
         let result = {
             let mut index = self.index.lock().unwrap();
-            f(index.as_mut())
+            f(&mut index)
         };
         *turn += 1;
         self.turn_done.notify_all();
@@ -352,13 +426,40 @@ pub struct IndexRegistry {
     master_seed: u64,
     backend: BackendKind,
     lsh: LshConfig,
+    /// Directory index snapshots are written to / reloaded from (`None`
+    /// disables the `snapshot`/`restore` wire ops and periodic
+    /// snapshots).
+    snapshot_dir: Option<PathBuf>,
     indexes: Mutex<HashMap<MapKey, SharedIndex>>,
+}
+
+/// Snapshot file name of a signature: a salted key hash, stable across
+/// master seeds and processes so `--restore` finds files by content.
+fn snapshot_file_name(key: &MapKey) -> String {
+    format!("sig_{:016x}.snap", map_key_seed(0x5EED_F11E, key))
 }
 
 impl IndexRegistry {
     /// New registry creating `backend` indexes (LSH shape from `lsh`).
     pub fn new(master_seed: u64, backend: BackendKind, lsh: LshConfig) -> Self {
-        Self { master_seed, backend, lsh, indexes: Mutex::new(HashMap::new()) }
+        Self {
+            master_seed,
+            backend,
+            lsh,
+            snapshot_dir: None,
+            indexes: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Set the snapshot directory (builder-style).
+    pub fn with_snapshot_dir(mut self, dir: Option<PathBuf>) -> Self {
+        self.snapshot_dir = dir;
+        self
+    }
+
+    /// The configured snapshot directory, when any.
+    pub fn snapshot_dir(&self) -> Option<&Path> {
+        self.snapshot_dir.as_deref()
     }
 
     /// Get or lazily create the index slot for `key` (dimension `key.k`).
@@ -370,9 +471,94 @@ impl IndexRegistry {
         // Perturb the master so the hyperplane stream differs from the
         // projection map drawn for the same key.
         let seed = map_key_seed(self.master_seed ^ 0xA11_1DE8_5EED, key);
-        let slot = Arc::new(IndexSlot::new(build_index(self.backend, key.k, &self.lsh, seed)));
+        let slot = Arc::new(IndexSlot::new(
+            key.clone(),
+            build_index(self.backend, key.k, &self.lsh, seed),
+        ));
         indexes.insert(key.clone(), Arc::clone(&slot));
         slot
+    }
+
+    /// Write a snapshot of `index` (the live contents of `slot`) to the
+    /// configured directory. The caller must hold the slot's sequencer
+    /// turn (or otherwise own the index) so the capture is a consistent
+    /// cut between index ops.
+    pub fn snapshot_slot(
+        &self,
+        slot: &IndexSlot,
+        index: &dyn AnnIndex,
+    ) -> std::result::Result<SnapshotReport, String> {
+        let dir = self.snapshot_dir.as_ref().ok_or("no snapshot_dir configured")?;
+        std::fs::create_dir_all(dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
+        let snap = IndexSnapshot::capture(slot.key.encode(), index);
+        let path = dir.join(snapshot_file_name(&slot.key));
+        let items = snap.items.len() as u64;
+        let bytes = snap.write_atomic(&path)?;
+        Ok(SnapshotReport { path: path.display().to_string(), items, bytes })
+    }
+
+    /// Reload `slot`'s index from its snapshot file in the configured
+    /// directory, replacing the live contents. Caller must hold the
+    /// slot's sequencer turn. Returns the restored item count.
+    pub fn restore_slot(
+        &self,
+        slot: &IndexSlot,
+        index: &mut Box<dyn AnnIndex>,
+    ) -> std::result::Result<u64, String> {
+        let dir = self.snapshot_dir.as_ref().ok_or("no snapshot_dir configured")?;
+        let path = dir.join(snapshot_file_name(&slot.key));
+        let snap = IndexSnapshot::read(&path)?;
+        let key = MapKey::decode(&snap.key_bytes)?;
+        if key != slot.key {
+            return Err(format!("snapshot {} belongs to another signature", path.display()));
+        }
+        // A wrong-dimension index would panic on the next insert — inside
+        // the held sequencer turn, wedging the signature's lane. Reject.
+        if snap.dim != slot.key.k {
+            return Err(format!(
+                "snapshot {} dim {} != signature k {}",
+                path.display(),
+                snap.dim,
+                slot.key.k
+            ));
+        }
+        *index = snap.build();
+        slot.reset_mutations();
+        Ok(snap.items.len() as u64)
+    }
+
+    /// Load every `*.snap` file in `dir` into the registry (crash
+    /// recovery at startup, before traffic). Corrupt or foreign files
+    /// fail the whole restore — a half-recovered corpus silently serving
+    /// wrong results is worse than a loud startup error. Returns
+    /// `(signatures, total items)` restored.
+    pub fn restore_all(&self, dir: &Path) -> std::result::Result<(usize, u64), String> {
+        let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+            .map_err(|e| format!("read {}: {e}", dir.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.extension().is_some_and(|x| x == "snap"))
+            .collect();
+        paths.sort();
+        let mut indexes = self.indexes.lock().unwrap();
+        let mut items = 0u64;
+        for path in &paths {
+            let snap =
+                IndexSnapshot::read(path).map_err(|e| format!("{}: {e}", path.display()))?;
+            let key = MapKey::decode(&snap.key_bytes)
+                .map_err(|e| format!("{}: {e}", path.display()))?;
+            if snap.dim != key.k {
+                return Err(format!(
+                    "{}: snapshot dim {} != signature k {}",
+                    path.display(),
+                    snap.dim,
+                    key.k
+                ));
+            }
+            items += snap.items.len() as u64;
+            let slot = Arc::new(IndexSlot::new(key.clone(), snap.build()));
+            indexes.insert(key, slot);
+        }
+        Ok((paths.len(), items))
     }
 
     /// Number of live indexes.
@@ -506,6 +692,77 @@ mod tests {
         slot.run_in_turn(t0, |_| log.lock().unwrap().push(0));
         handle.join().unwrap();
         assert_eq!(*log.lock().unwrap(), vec![0, 1]);
+    }
+
+    #[test]
+    fn map_key_encoding_roundtrips() {
+        let keys = [
+            tt_key(),
+            MapKey { kind: MapKind::Cp { rank: 7 }, dims: vec![2, 5, 2], k: 9 },
+            MapKey { kind: MapKind::Gaussian, dims: vec![15; 3], k: 64 },
+            MapKey { kind: MapKind::VerySparse, dims: vec![1 << 12], k: 32 },
+        ];
+        for key in keys {
+            assert_eq!(MapKey::decode(&key.encode()).unwrap(), key);
+        }
+        assert!(MapKey::decode(&[]).is_err());
+        assert!(MapKey::decode(&[9; 30]).is_err(), "garbage header rejected");
+        let mut bytes = tt_key().encode();
+        bytes[0] = 9;
+        assert!(MapKey::decode(&bytes).is_err(), "unknown kind tag rejected");
+        bytes[0] = 1;
+        bytes.push(0);
+        assert!(MapKey::decode(&bytes).is_err(), "trailing bytes rejected");
+    }
+
+    #[test]
+    fn registry_snapshot_roundtrips_through_disk() {
+        let dir = std::env::temp_dir()
+            .join(format!("trp_state_snap_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let reg = IndexRegistry::new(
+            7,
+            crate::index::BackendKind::Lsh,
+            crate::index::LshConfig { tables: 3, bits: 5, probes: 2 },
+        )
+        .with_snapshot_dir(Some(dir.clone()));
+        let slot = reg.get_or_create(&tt_key());
+        let mut rng = Rng::seed_from(4);
+        let qs: Vec<Vec<f64>> = (0..4).map(|_| rng.gaussian_vec(tt_key().k, 1.0)).collect();
+        let report = {
+            let mut index = slot.index.lock().unwrap();
+            for i in 0..12u64 {
+                index.insert(i, &rng.gaussian_vec(tt_key().k, 1.0));
+            }
+            reg.snapshot_slot(&slot, index.as_ref()).unwrap()
+        };
+        assert_eq!(report.items, 12);
+        assert!(report.bytes > 0);
+        // A fresh registry (same master seed) restores bit-identically.
+        let reg2 = IndexRegistry::new(
+            7,
+            crate::index::BackendKind::Lsh,
+            crate::index::LshConfig { tables: 3, bits: 5, probes: 2 },
+        );
+        let (sigs, items) = reg2.restore_all(&dir).unwrap();
+        assert_eq!((sigs, items), (1, 12));
+        let slot2 = reg2.get_or_create(&tt_key());
+        let mut ws = crate::projections::Workspace::new();
+        let mut ws2 = crate::projections::Workspace::new();
+        for q in &qs {
+            assert_eq!(
+                slot.index.lock().unwrap().query(q, 3, &mut ws),
+                slot2.index.lock().unwrap().query(q, 3, &mut ws2),
+            );
+        }
+        // Without a snapshot_dir the ops fail loudly instead of writing
+        // somewhere surprising.
+        let slot3 = reg2.get_or_create(&tt_key());
+        let mut index3 = slot3.index.lock().unwrap();
+        assert!(reg2.snapshot_slot(&slot3, index3.as_ref()).is_err());
+        assert!(reg2.restore_slot(&slot3, &mut index3).is_err());
+        drop(index3);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

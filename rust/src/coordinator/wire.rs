@@ -11,12 +11,17 @@
 //!  "values": […]}
 //! {"id": 10, "op": "delete", "target": 8, "format": "cp", "dims": [3,3]}
 //! {"id": 11, "op": "stats", "format": "cp", "dims": [3,3]}
+//! {"id": 12, "op": "snapshot", "format": "cp", "dims": [3,3]}
+//! {"id": 13, "op": "restore", "format": "cp", "dims": [3,3]}
 //! ```
 //! Response: `{"id": 7, "embedding": […], "path": "native", "queued_us":
 //! 120, "exec_us": 1500}`, plus `"neighbors": [{"id": 3, "dist": 0.12},
 //! …]` for queries, `"removed": true|false` for deletes, `"index":
-//! {"backend": "flat", "len": 12, …}` for stats — or `{"id": 7,
-//! "error": "…"}`.
+//! {"backend": "flat", "len": 12, …}` for stats, `"snapshot": {"path":
+//! "…", "items": 12, "bytes": 9001}` / `"restored": 12` for persistence
+//! ops — or `{"id": 7, "error": "…"}`. An error reply to a line the
+//! server could not even extract an id from carries `"id": null`, so it
+//! can never masquerade as a response to a legitimate request id 0.
 //!
 //! Limitation: every id on the wire (`id`, `target`, neighbour ids)
 //! travels as a JSON number and therefore round-trips exactly only up to
@@ -24,7 +29,7 @@
 //! hashes); the in-process API has no such limit.
 
 use super::request::{Payload, ProjectRequest, ProjectResponse, RequestOp};
-use crate::index::{IndexStats, Neighbor};
+use crate::index::{IndexStats, Neighbor, SnapshotReport};
 use crate::linalg::Matrix;
 use crate::tensor::{AnyTensor, CpTensor, DenseTensor, Format, TtTensor};
 use crate::util::json::{num_arr, obj, usize_arr, Json};
@@ -44,6 +49,8 @@ pub fn encode_request(req: &ProjectRequest) -> String {
             fields.push(("target", Json::Num(target as f64)));
         }
         RequestOp::IndexStats => fields.push(("op", Json::Str("stats".into()))),
+        RequestOp::Snapshot => fields.push(("op", Json::Str("snapshot".into()))),
+        RequestOp::Restore => fields.push(("op", Json::Str("restore".into()))),
     }
     match &req.payload {
         Payload::Tensor(AnyTensor::Dense(t)) => {
@@ -101,6 +108,8 @@ pub fn decode_request(line: &str) -> Result<ProjectRequest, String> {
             RequestOp::Delete { target }
         }
         Some("stats") => RequestOp::IndexStats,
+        Some("snapshot") => RequestOp::Snapshot,
+        Some("restore") => RequestOp::Restore,
         Some(other) => return Err(format!("unknown op {other:?}")),
     };
     let format_str = j.get("format").and_then(Json::as_str).ok_or("missing format")?;
@@ -111,7 +120,10 @@ pub fn decode_request(line: &str) -> Result<ProjectRequest, String> {
         .and_then(Json::as_usize_vec)
         .ok_or("missing dims")?;
     // Signature-only ops carry no tensor data.
-    if matches!(op, RequestOp::Delete { .. } | RequestOp::IndexStats) {
+    if matches!(
+        op,
+        RequestOp::Delete { .. } | RequestOp::IndexStats | RequestOp::Snapshot | RequestOp::Restore
+    ) {
         return Ok(ProjectRequest { id, op, payload: Payload::Signature { format, dims } });
     }
     let tensor = match format {
@@ -189,8 +201,23 @@ fn decode_index_stats(j: &Json) -> Result<IndexStats, String> {
     })
 }
 
-/// Encode a (successful or failed) response as a JSON line.
-pub fn encode_response(result: &Result<ProjectResponse, String>, fallback_id: u64) -> String {
+/// Best-effort extraction of the `id` field from a request line that
+/// failed to decode, so the error reply can echo it. Returns `None` for
+/// unparseable lines or non-id values — the reply then carries `"id":
+/// null`, which can never collide with a legitimate response to request
+/// id 0.
+pub fn parse_request_id(line: &str) -> Option<u64> {
+    let v = Json::parse(line).ok()?.get("id")?.as_f64()?;
+    (v.is_finite() && v >= 0.0).then_some(v as u64)
+}
+
+/// Encode a (successful or failed) response as a JSON line. `fallback_id`
+/// is the id an error reply reports; `None` encodes `"id": null`
+/// (unattributable failure, e.g. an unparseable request line).
+pub fn encode_response(
+    result: &Result<ProjectResponse, String>,
+    fallback_id: Option<u64>,
+) -> String {
     match result {
         Ok(resp) => {
             let mut fields: Vec<(&str, Json)> = vec![
@@ -221,10 +248,29 @@ pub fn encode_response(result: &Result<ProjectResponse, String>, fallback_id: u6
             if let Some(s) = &resp.index {
                 fields.push(("index", index_stats_json(s)));
             }
+            if let Some(sr) = &resp.snapshot {
+                fields.push((
+                    "snapshot",
+                    obj(vec![
+                        ("path", Json::Str(sr.path.clone())),
+                        ("items", Json::Num(sr.items as f64)),
+                        ("bytes", Json::Num(sr.bytes as f64)),
+                    ]),
+                ));
+            }
+            if let Some(n) = resp.restored {
+                fields.push(("restored", Json::Num(n as f64)));
+            }
             obj(fields).to_string_compact()
         }
         Err(e) => obj(vec![
-            ("id", Json::Num(fallback_id as f64)),
+            (
+                "id",
+                match fallback_id {
+                    Some(id) => Json::Num(id as f64),
+                    None => Json::Null,
+                },
+            ),
             ("error", Json::Str(e.clone())),
         ])
         .to_string_compact(),
@@ -234,8 +280,9 @@ pub fn encode_response(result: &Result<ProjectResponse, String>, fallback_id: u6
 /// Decoded response for client use.
 #[derive(Debug, Clone)]
 pub struct WireResponse {
-    /// Request id.
-    pub id: u64,
+    /// Request id (`None` for error replies to unattributable requests —
+    /// lines the server could not parse an id out of).
+    pub id: Option<u64>,
     /// Embedding when successful.
     pub embedding: Option<Vec<f64>>,
     /// Neighbours (query responses).
@@ -244,6 +291,10 @@ pub struct WireResponse {
     pub removed: Option<bool>,
     /// Index statistics (stats responses).
     pub index: Option<IndexStats>,
+    /// Snapshot report (snapshot responses).
+    pub snapshot: Option<SnapshotReport>,
+    /// Items reloaded (restore responses).
+    pub restored: Option<u64>,
     /// Error message when failed.
     pub error: Option<String>,
     /// Serving path string.
@@ -253,7 +304,10 @@ pub struct WireResponse {
 /// Decode a response line.
 pub fn decode_response(line: &str) -> Result<WireResponse, String> {
     let j = Json::parse(line).map_err(|e| e.to_string())?;
-    let id = j.get("id").and_then(Json::as_f64).ok_or("missing id")? as u64;
+    let id = match j.get("id") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(v.as_f64().ok_or("bad id")? as u64),
+    };
     let neighbors = match j.get("neighbors").and_then(Json::as_arr) {
         Some(items) => Some(
             items
@@ -284,6 +338,16 @@ pub fn decode_response(line: &str) -> Result<WireResponse, String> {
             Some(s) => Some(decode_index_stats(s)?),
             None => None,
         },
+        snapshot: j.get("snapshot").map(|s| SnapshotReport {
+            path: s
+                .get("path")
+                .and_then(Json::as_str)
+                .unwrap_or_default()
+                .to_string(),
+            items: s.get("items").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            bytes: s.get("bytes").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+        }),
+        restored: j.get("restored").and_then(Json::as_f64).map(|v| v as u64),
         error: j.get("error").and_then(Json::as_str).map(|s| s.to_string()),
         path: j.get("path").and_then(Json::as_str).map(|s| s.to_string()),
     })
@@ -381,6 +445,23 @@ mod tests {
         .unwrap();
         assert_eq!(back.op, RequestOp::IndexStats);
         assert_eq!(back.payload.format(), Format::Cp);
+        // Snapshot / restore: signature only.
+        let back = decode_request(&encode_request(&ProjectRequest::snapshot(
+            11,
+            Format::Tt,
+            vec![3, 3, 3],
+        )))
+        .unwrap();
+        assert_eq!(back.op, RequestOp::Snapshot);
+        assert!(back.payload.tensor().is_none());
+        let back = decode_request(&encode_request(&ProjectRequest::restore(
+            12,
+            Format::Tt,
+            vec![3, 3, 3],
+        )))
+        .unwrap();
+        assert_eq!(back.op, RequestOp::Restore);
+        assert_eq!(back.payload.dims(), &[3, 3, 3]);
     }
 
     #[test]
@@ -391,25 +472,70 @@ mod tests {
             neighbors: None,
             removed: None,
             index: None,
+            snapshot: None,
+            restored: None,
             path: super::super::request::EnginePath::Native,
             queued_us: 10,
             exec_us: 20,
         };
-        let line = encode_response(&Ok(resp), 9);
+        let line = encode_response(&Ok(resp), Some(9));
         let back = decode_response(&line).unwrap();
-        assert_eq!(back.id, 9);
+        assert_eq!(back.id, Some(9));
         assert_eq!(back.embedding.unwrap(), vec![0.5, -1.5]);
         assert_eq!(back.path.as_deref(), Some("native"));
         assert!(back.error.is_none());
         assert!(back.neighbors.is_none());
         assert!(back.removed.is_none());
         assert!(back.index.is_none());
+        assert!(back.snapshot.is_none());
+        assert!(back.restored.is_none());
 
-        let line = encode_response(&Err("boom".into()), 7);
+        let line = encode_response(&Err("boom".into()), Some(7));
         let back = decode_response(&line).unwrap();
-        assert_eq!(back.id, 7);
+        assert_eq!(back.id, Some(7));
         assert_eq!(back.error.as_deref(), Some("boom"));
         assert!(back.embedding.is_none());
+
+        // Unattributable failure: id travels as JSON null, not 0.
+        let line = encode_response(&Err("bad line".into()), None);
+        assert!(line.contains("\"id\":null"), "got: {line}");
+        let back = decode_response(&line).unwrap();
+        assert_eq!(back.id, None);
+        assert_eq!(back.error.as_deref(), Some("bad line"));
+    }
+
+    #[test]
+    fn snapshot_and_restore_responses_roundtrip() {
+        let resp = ProjectResponse {
+            id: 4,
+            embedding: Vec::new(),
+            neighbors: None,
+            removed: None,
+            index: None,
+            snapshot: Some(SnapshotReport {
+                path: "/tmp/snaps/sig_ab.snap".into(),
+                items: 12,
+                bytes: 9001,
+            }),
+            restored: Some(12),
+            path: super::super::request::EnginePath::Native,
+            queued_us: 1,
+            exec_us: 2,
+        };
+        let back = decode_response(&encode_response(&Ok(resp.clone()), Some(4))).unwrap();
+        assert_eq!(back.snapshot, resp.snapshot);
+        assert_eq!(back.restored, Some(12));
+    }
+
+    #[test]
+    fn request_id_is_recovered_best_effort() {
+        // Valid JSON with an id (whatever else is wrong) → recovered.
+        assert_eq!(parse_request_id(r#"{"id":42,"op":"upsert"}"#), Some(42));
+        // No id, negative id, non-numeric id, or non-JSON → None.
+        assert_eq!(parse_request_id(r#"{"op":"insert"}"#), None);
+        assert_eq!(parse_request_id(r#"{"id":-3}"#), None);
+        assert_eq!(parse_request_id(r#"{"id":"seven"}"#), None);
+        assert_eq!(parse_request_id("not json at all"), None);
     }
 
     #[test]
@@ -422,6 +548,8 @@ mod tests {
                 Neighbor { id: 9, dist: 0.75 },
             ]),
             removed: Some(true),
+            snapshot: None,
+            restored: None,
             index: Some(IndexStats {
                 backend: "lsh".into(),
                 len: 12,
@@ -436,7 +564,7 @@ mod tests {
             queued_us: 1,
             exec_us: 2,
         };
-        let line = encode_response(&Ok(resp.clone()), 11);
+        let line = encode_response(&Ok(resp.clone()), Some(11));
         let back = decode_response(&line).unwrap();
         assert_eq!(back.neighbors.unwrap(), resp.neighbors.unwrap());
         assert_eq!(back.removed, Some(true));

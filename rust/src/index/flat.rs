@@ -15,7 +15,7 @@
 //! neighbours whether it is scored alone or inside a batch (this is what
 //! makes coordinator-served queries identical to direct in-process ones).
 
-use super::{AnnIndex, IndexStats, Neighbor, TopK};
+use super::{AnnIndex, BackendKind, IndexStats, LshConfig, Neighbor, TopK};
 use crate::linalg::matmul_into;
 use crate::projections::Workspace;
 use std::collections::HashMap;
@@ -183,6 +183,20 @@ impl AnnIndex for FlatIndex {
             buckets: 0,
             max_bucket: 0,
         }
+    }
+
+    fn for_each_live(&self, visit: &mut dyn FnMut(u64, &[f64])) {
+        for slot in 0..self.slots() {
+            if self.live[slot] {
+                visit(self.ids[slot], self.row(slot));
+            }
+        }
+    }
+
+    fn persist_spec(&self) -> (BackendKind, LshConfig, u64) {
+        // Zeros per the snapshot format spec: the flat backend has no
+        // hash shape and no seed (`persist::IndexSnapshot` layout docs).
+        (BackendKind::Flat, LshConfig { tables: 0, bits: 0, probes: 0 }, 0)
     }
 }
 

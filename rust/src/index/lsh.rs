@@ -13,7 +13,8 @@
 //! inherited rather than reimplemented).
 
 use super::flat::FlatIndex;
-use super::{AnnIndex, IndexStats, Neighbor, TopK};
+use super::{AnnIndex, BackendKind, IndexStats, Neighbor, TopK};
+use crate::linalg::matmul_into;
 use crate::projections::Workspace;
 use crate::rng::Rng;
 use std::collections::HashMap;
@@ -40,8 +41,11 @@ pub struct LshIndex {
     /// Vector storage + exact re-scoring substrate.
     flat: FlatIndex,
     cfg: LshConfig,
-    /// Hyperplanes, row-major `(tables · bits) × dim`.
-    planes: Vec<f64>,
+    /// Hyperplane seed (persisted in snapshots so buckets re-derive).
+    seed: u64,
+    /// Hyperplanes pre-transposed to `dim × (tables · bits)`, so hashing
+    /// a batch of `B` embeddings is one `B × dim · dim × (T·b)` GEMM.
+    planes_t: Vec<f64>,
     /// Per table: signature → item ids.
     buckets: Vec<HashMap<u64, Vec<u64>>>,
     queries: u64,
@@ -58,11 +62,21 @@ impl LshIndex {
             "signature bits must be in 1..=63 (codes are u64)"
         );
         let mut rng = Rng::seed_from(seed);
-        let planes = rng.gaussian_vec(cfg.tables * cfg.bits * dim, 1.0);
+        // Drawn plane-major (the historical stream order), stored
+        // transposed for the hashing GEMM.
+        let tb = cfg.tables * cfg.bits;
+        let planes = rng.gaussian_vec(tb * dim, 1.0);
+        let mut planes_t = vec![0.0; dim * tb];
+        for j in 0..tb {
+            for p in 0..dim {
+                planes_t[p * tb + j] = planes[j * dim + p];
+            }
+        }
         Self {
             flat: FlatIndex::new(dim),
             cfg,
-            planes,
+            seed,
+            planes_t,
             buckets: (0..cfg.tables).map(|_| HashMap::new()).collect(),
             queries: 0,
         }
@@ -73,13 +87,24 @@ impl LshIndex {
         self.cfg
     }
 
+    /// Hyperplane dot products of a batch of embeddings (row-major
+    /// `[b, dim]`), written to `dots` as `[b, tables · bits]` — one GEMM
+    /// against the transposed plane matrix, whatever the batch width.
+    /// The GEMM accumulates the reduction dimension in the same ascending
+    /// order for every `b`, so a code computed at insert time (`b = 1`)
+    /// is bit-identical to the same vector hashed inside a query batch.
+    fn dots_batch_into(&self, embeddings: &[f64], b: usize, dots: &mut Vec<f64>) {
+        let d = self.flat.dim();
+        let tb = self.cfg.tables * self.cfg.bits;
+        debug_assert_eq!(embeddings.len(), b * d);
+        dots.clear();
+        dots.resize(b * tb, 0.0);
+        matmul_into(embeddings, &self.planes_t, dots, b, d, tb);
+    }
+
     /// Hyperplane dot products of one embedding, `tables · bits` values.
     fn dots_into(&self, embedding: &[f64], dots: &mut Vec<f64>) {
-        dots.clear();
-        dots.reserve(self.cfg.tables * self.cfg.bits);
-        for plane in self.planes.chunks_exact(self.flat.dim()) {
-            dots.push(plane.iter().zip(embedding).map(|(a, b)| a * b).sum());
-        }
+        self.dots_batch_into(embedding, 1, dots);
     }
 
     /// Signature of one table from its slice of dot products.
@@ -167,26 +192,32 @@ impl AnnIndex for LshIndex {
         let b = topks.len();
         assert_eq!(qs.len(), b * d, "query batch layout must be [B, k]");
         self.queries += b as u64;
+        // Hyperplane margins of the whole flush's queries in one GEMM
+        // against the plane matrix, staged in workspace scratch.
+        let tb = self.cfg.tables * self.cfg.bits;
+        let mut dots = std::mem::take(&mut ws.tmp);
+        self.dots_batch_into(qs, b, &mut dots);
         let mut out = Vec::with_capacity(b);
         let mut cands: Vec<u64> = Vec::new();
         let mut order: Vec<usize> = Vec::new();
-        for (q, &topk) in qs.chunks_exact(d).zip(topks) {
-            // Hyperplane margins staged in workspace scratch.
-            self.dots_into(q, &mut ws.tmp);
+        for (j, (q, &topk)) in qs.chunks_exact(d).zip(topks).enumerate() {
+            let dots_q = &dots[j * tb..(j + 1) * tb];
             cands.clear();
             for t in 0..self.cfg.tables {
-                let dots_t = &ws.tmp[t * self.cfg.bits..(t + 1) * self.cfg.bits];
+                let dots_t = &dots_q[t * self.cfg.bits..(t + 1) * self.cfg.bits];
                 let code = Self::code_of(dots_t);
                 self.collect_bucket(t, code, &mut cands);
                 // Multi-probe: flip the bits whose hyperplane margin is
                 // smallest — the buckets the query most nearly fell into.
+                // `total_cmp` keeps the comparator a total order under
+                // NaN margins (a NaN-margin bit sorts last and the probe
+                // sequence stays deterministic).
                 order.clear();
                 order.extend(0..self.cfg.bits);
                 order.sort_by(|&x, &y| {
                     dots_t[x]
                         .abs()
-                        .partial_cmp(&dots_t[y].abs())
-                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .total_cmp(&dots_t[y].abs())
                         .then(x.cmp(&y))
                 });
                 for &bit in order.iter().take(self.cfg.probes) {
@@ -209,6 +240,7 @@ impl AnnIndex for LshIndex {
             }
             out.push(sel.into_sorted());
         }
+        ws.tmp = dots;
         out
     }
 
@@ -224,6 +256,16 @@ impl AnnIndex for LshIndex {
             .max()
             .unwrap_or(0);
         stats
+    }
+
+    fn for_each_live(&self, visit: &mut dyn FnMut(u64, &[f64])) {
+        // Buckets re-derive from the seeded planes on re-insert, so only
+        // the flat substrate's live vectors need to travel.
+        self.flat.for_each_live(visit);
+    }
+
+    fn persist_spec(&self) -> (BackendKind, LshConfig, u64) {
+        (BackendKind::Lsh, self.cfg, self.seed)
     }
 }
 
@@ -312,6 +354,46 @@ mod tests {
             idx.query(&q, 5, &mut ws)
         };
         assert_eq!(run(42), run(42), "same seed → identical results");
+    }
+
+    #[test]
+    fn nan_margin_query_terminates_with_deterministic_probes() {
+        // A query with a NaN component poisons every hyperplane margin;
+        // the probe order must stay a fixed total order (total_cmp)
+        // instead of scrambling on a non-total comparator.
+        let mut rng = Rng::seed_from(8);
+        let dim = 8;
+        let mut idx = LshIndex::new(dim, small_cfg(), 13);
+        for i in 0..30u64 {
+            idx.insert(i, &rng.gaussian_vec(dim, 1.0));
+        }
+        let mut q = rng.gaussian_vec(dim, 1.0);
+        q[3] = f64::NAN;
+        let mut ws = Workspace::new();
+        let a = idx.query(&q, 5, &mut ws);
+        let b = idx.query(&q, 5, &mut ws);
+        assert_eq!(a, b, "NaN margins must not scramble probe order");
+    }
+
+    #[test]
+    fn batched_query_hashing_matches_single_query() {
+        // The flush-wide hashing GEMM must reproduce the per-query path
+        // bit-for-bit (same kernel, same reduction order per row).
+        let mut rng = Rng::seed_from(9);
+        let dim = 12;
+        let mut idx = LshIndex::new(dim, small_cfg(), 21);
+        for i in 0..60u64 {
+            idx.insert(i, &rng.gaussian_vec(dim, 1.0));
+        }
+        let qs: Vec<Vec<f64>> = (0..7).map(|_| rng.gaussian_vec(dim, 1.0)).collect();
+        let flat_qs: Vec<f64> = qs.iter().flatten().copied().collect();
+        let topks = vec![5; qs.len()];
+        let mut ws = Workspace::new();
+        let batched = idx.query_batch(&flat_qs, &topks, &mut ws);
+        for (q, batch_res) in qs.iter().zip(&batched) {
+            let single = idx.query(q, 5, &mut ws);
+            assert_eq!(&single, batch_res, "batched hashing must be bit-identical");
+        }
     }
 
     #[test]

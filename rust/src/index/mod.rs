@@ -26,9 +26,11 @@
 
 mod flat;
 mod lsh;
+pub(crate) mod persist;
 
 pub use flat::FlatIndex;
 pub use lsh::{LshConfig, LshIndex};
+pub use persist::{IndexSnapshot, SnapshotReport};
 
 use crate::projections::Workspace;
 
@@ -134,6 +136,16 @@ pub trait AnnIndex: Send {
 
     /// Statistics snapshot.
     fn stats(&self) -> IndexStats;
+
+    /// Visit every live item (id, stored embedding) in a deterministic
+    /// order. Drives snapshot capture ([`IndexSnapshot::capture`]).
+    fn for_each_live(&self, visit: &mut dyn FnMut(u64, &[f64]));
+
+    /// Backend identity + config needed to rebuild this index empty:
+    /// `(kind, lsh shape, hyperplane seed)`. Stored in snapshot headers
+    /// so a restore re-derives the LSH buckets instead of serializing
+    /// them (the flat backend reports an all-zero LSH shape and seed).
+    fn persist_spec(&self) -> (BackendKind, LshConfig, u64);
 }
 
 /// Construct a boxed index of the requested backend.
@@ -170,8 +182,15 @@ impl TopK {
     }
 
     /// True when `a` precedes `b` in the (dist, id) total order.
+    /// `total_cmp` (not `<`/`==`) keeps the order total under NaN
+    /// distances, so a poisoned query still selects deterministically
+    /// instead of scrambling on comparator inconsistency.
     fn precedes(a_dist: f64, a_id: u64, b: &Neighbor) -> bool {
-        a_dist < b.dist || (a_dist == b.dist && a_id < b.id)
+        match a_dist.total_cmp(&b.dist) {
+            std::cmp::Ordering::Less => true,
+            std::cmp::Ordering::Equal => a_id < b.id,
+            std::cmp::Ordering::Greater => false,
+        }
     }
 
     /// Offer one candidate.
@@ -222,6 +241,23 @@ mod tests {
         sel.offer(7, 1.0);
         let ids: Vec<u64> = sel.into_sorted().iter().map(|n| n.id).collect();
         assert_eq!(ids, vec![3, 7]);
+    }
+
+    #[test]
+    fn topk_orders_nan_distances_deterministically() {
+        // total_cmp places NaN after every finite distance, so a NaN
+        // candidate never displaces a real neighbour and repeated runs
+        // agree exactly.
+        let run = || {
+            let mut sel = TopK::new(3);
+            sel.offer(1, f64::NAN);
+            sel.offer(2, 1.0);
+            sel.offer(3, 0.5);
+            sel.offer(4, f64::NAN);
+            sel.into_sorted().iter().map(|n| n.id).collect::<Vec<u64>>()
+        };
+        assert_eq!(run(), vec![3, 2, 1]);
+        assert_eq!(run(), run());
     }
 
     #[test]

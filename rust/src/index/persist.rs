@@ -1,0 +1,376 @@
+//! Versioned, checksummed binary snapshots of one signature's ANN index.
+//!
+//! What is stored versus re-derived mirrors the projection maps'
+//! durability model: a snapshot holds only what cannot be re-derived —
+//! the live `id → vector` pairs plus the backend identity (kind, LSH
+//! shape, hyperplane seed). LSH buckets are deliberately NOT serialized:
+//! they re-derive from the seeded hyperplanes when the items are
+//! re-inserted on load, exactly as the projection maps re-derive from
+//! `(master_seed, map key)` on restart (`coordinator::ProjectionRegistry`).
+//!
+//! The signature itself travels as an opaque byte string encoded by the
+//! caller (`coordinator::state::MapKey::encode`), so this module stays
+//! below the coordinator in the layering.
+//!
+//! On-disk layout (all integers little-endian):
+//!
+//! ```text
+//! magic  b"TRPSNAP\0"                       8 bytes
+//! version u32                               currently 1
+//! key_len u32, key bytes                    opaque signature encoding
+//! backend u8                                0 = flat, 1 = lsh
+//! tables u64, bits u64, probes u64          LSH shape (zeros for flat)
+//! seed u64                                  LSH hyperplane seed
+//! dim u64                                   embedding dimension k
+//! count u64                                 live item count
+//! count × (id u64, dim × f64)               items in capture order
+//! checksum u64                              FNV-1a over all prior bytes
+//! ```
+//!
+//! Files are written atomically (temp file + rename), so a crash mid-
+//! snapshot leaves the previous snapshot intact rather than a torn file.
+
+use super::{build_index, AnnIndex, BackendKind, LshConfig};
+use std::path::Path;
+
+/// File magic: identifies a TRP index snapshot.
+const MAGIC: &[u8; 8] = b"TRPSNAP\0";
+/// Current format version.
+const VERSION: u32 = 1;
+
+/// Where a snapshot was written and what it covered (returned inside
+/// `snapshot` responses and by the registry API).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotReport {
+    /// Snapshot file path.
+    pub path: String,
+    /// Live items captured.
+    pub items: u64,
+    /// Encoded size in bytes.
+    pub bytes: u64,
+}
+
+/// An in-memory snapshot of one signature's index: everything needed to
+/// rebuild it bit-identically (buckets re-derive; see module docs).
+pub struct IndexSnapshot {
+    /// Opaque signature encoding (the coordinator's `MapKey::encode`).
+    pub key_bytes: Vec<u8>,
+    /// Backend to rebuild.
+    pub backend: BackendKind,
+    /// LSH shape (ignored by the flat backend).
+    pub lsh: LshConfig,
+    /// LSH hyperplane seed (ignored by the flat backend).
+    pub seed: u64,
+    /// Embedding dimension.
+    pub dim: usize,
+    /// Live `id → vector` pairs in capture order.
+    pub items: Vec<(u64, Vec<f64>)>,
+}
+
+impl IndexSnapshot {
+    /// Capture the live contents of `index` under the given signature
+    /// encoding. The caller must hold whatever ordering guarantee makes
+    /// this a consistent cut (the coordinator captures inside the
+    /// signature's FIFO sequencer turn).
+    pub fn capture(key_bytes: Vec<u8>, index: &dyn AnnIndex) -> Self {
+        let (backend, lsh, seed) = index.persist_spec();
+        let mut items = Vec::with_capacity(index.len());
+        index.for_each_live(&mut |id, v| items.push((id, v.to_vec())));
+        Self { key_bytes, backend, lsh, seed, dim: index.dim(), items }
+    }
+
+    /// Rebuild the index: construct the stored backend empty and re-insert
+    /// every item in capture order. Queries against the result are
+    /// bit-identical to the captured index (distances are per-slot
+    /// arithmetic and the top-k order is total, so slot renumbering from
+    /// tombstone compaction cannot change any result).
+    pub fn build(&self) -> Box<dyn AnnIndex> {
+        let mut index = build_index(self.backend, self.dim, &self.lsh, self.seed);
+        for (id, v) in &self.items {
+            index.insert(*id, v);
+        }
+        index
+    }
+
+    /// Serialize to the versioned, checksummed binary format.
+    pub fn encode(&self) -> Vec<u8> {
+        let cap = 64 + self.key_bytes.len() + self.items.len() * (8 + self.dim * 8);
+        let mut out = Vec::with_capacity(cap);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.key_bytes.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.key_bytes);
+        out.push(match self.backend {
+            BackendKind::Flat => 0,
+            BackendKind::Lsh => 1,
+        });
+        out.extend_from_slice(&(self.lsh.tables as u64).to_le_bytes());
+        out.extend_from_slice(&(self.lsh.bits as u64).to_le_bytes());
+        out.extend_from_slice(&(self.lsh.probes as u64).to_le_bytes());
+        out.extend_from_slice(&self.seed.to_le_bytes());
+        out.extend_from_slice(&(self.dim as u64).to_le_bytes());
+        out.extend_from_slice(&(self.items.len() as u64).to_le_bytes());
+        for (id, v) in &self.items {
+            out.extend_from_slice(&id.to_le_bytes());
+            debug_assert_eq!(v.len(), self.dim);
+            for x in v {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        let sum = fnv1a(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Parse and validate (magic, version, checksum, exact length).
+    pub fn decode(bytes: &[u8]) -> Result<Self, String> {
+        if bytes.len() < MAGIC.len() + 4 + 8 {
+            return Err("snapshot truncated".into());
+        }
+        let (body, sum_bytes) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(sum_bytes.try_into().unwrap());
+        if fnv1a(body) != stored {
+            return Err("snapshot checksum mismatch (corrupt or torn file)".into());
+        }
+        let mut cur = Cursor::new(body);
+        if cur.take(MAGIC.len())? != MAGIC {
+            return Err("not a TRP index snapshot (bad magic)".into());
+        }
+        let version = cur.u32()?;
+        if version != VERSION {
+            return Err(format!("unsupported snapshot version {version} (expected {VERSION})"));
+        }
+        let key_len = cur.u32()? as usize;
+        let key_bytes = cur.take(key_len)?.to_vec();
+        let backend = match cur.u8()? {
+            0 => BackendKind::Flat,
+            1 => BackendKind::Lsh,
+            other => return Err(format!("unknown backend tag {other}")),
+        };
+        let lsh = LshConfig {
+            tables: cur.u64()? as usize,
+            bits: cur.u64()? as usize,
+            probes: cur.u64()? as usize,
+        };
+        let seed = cur.u64()?;
+        let dim = cur.u64()? as usize;
+        if dim == 0 {
+            return Err("snapshot dim must be positive".into());
+        }
+        // Reject shapes [`build`] could not construct: `LshIndex::new`
+        // asserts these, and a panic during restore would either abort
+        // startup or wedge a sequencer lane instead of returning an error.
+        if backend == BackendKind::Lsh && (lsh.tables < 1 || !(1..=63).contains(&lsh.bits)) {
+            return Err(format!(
+                "snapshot LSH shape invalid (tables {}, bits {})",
+                lsh.tables, lsh.bits
+            ));
+        }
+        let count = cur.u64()? as usize;
+        let mut items = Vec::with_capacity(count.min(1 << 20));
+        for _ in 0..count {
+            let id = cur.u64()?;
+            let mut v = Vec::with_capacity(dim);
+            for _ in 0..dim {
+                v.push(f64::from_le_bytes(cur.take(8)?.try_into().unwrap()));
+            }
+            items.push((id, v));
+        }
+        if cur.pos != body.len() {
+            return Err("snapshot has trailing bytes".into());
+        }
+        Ok(Self { key_bytes, backend, lsh, seed, dim, items })
+    }
+
+    /// Write atomically and durably: encode to `<path>.tmp`, fsync it,
+    /// rename over `path`, then fsync the parent directory so the rename
+    /// itself survives a crash. Returns the encoded size in bytes.
+    pub fn write_atomic(&self, path: &Path) -> Result<u64, String> {
+        use std::io::Write as _;
+        let bytes = self.encode();
+        let mut tmp = path.as_os_str().to_owned();
+        tmp.push(".tmp");
+        let tmp = std::path::PathBuf::from(tmp);
+        {
+            let mut f = std::fs::File::create(&tmp)
+                .map_err(|e| format!("create {}: {e}", tmp.display()))?;
+            f.write_all(&bytes)
+                .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+            f.sync_all().map_err(|e| format!("sync {}: {e}", tmp.display()))?;
+        }
+        std::fs::rename(&tmp, path).map_err(|e| format!("rename to {}: {e}", path.display()))?;
+        // Directory fsync is what persists the rename; best-effort on
+        // platforms where directories cannot be opened as files.
+        if let Some(dir) = path.parent() {
+            if let Ok(d) = std::fs::File::open(dir) {
+                let _ = d.sync_all();
+            }
+        }
+        Ok(bytes.len() as u64)
+    }
+
+    /// Read and validate a snapshot file.
+    pub fn read(path: &Path) -> Result<Self, String> {
+        let bytes = std::fs::read(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        Self::decode(&bytes)
+    }
+}
+
+/// FNV-1a over a byte string (the same family the registry's key seeding
+/// uses; collisions are irrelevant here — this only detects corruption).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_0000_01b3);
+    }
+    h
+}
+
+/// Bounds-checked little-endian reader, shared by the snapshot decoder
+/// and the coordinator's `MapKey` codec (one implementation of the
+/// truncation/overflow handling, not two that can drift).
+pub(crate) struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    /// Reader over `bytes`, starting at offset 0.
+    pub(crate) fn new(bytes: &'a [u8]) -> Self {
+        Self { bytes, pos: 0 }
+    }
+
+    /// Consume and return the next `n` bytes.
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8], String> {
+        let end = self.pos.checked_add(n).ok_or("length overflow")?;
+        if end > self.bytes.len() {
+            return Err("unexpected end of input".into());
+        }
+        let s = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    /// Consume one byte.
+    pub(crate) fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Consume a little-endian u32.
+    pub(crate) fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Consume a little-endian u64.
+    pub(crate) fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::{FlatIndex, LshIndex};
+    use crate::projections::Workspace;
+    use crate::rng::Rng;
+
+    fn sample_flat() -> FlatIndex {
+        let mut rng = Rng::seed_from(1);
+        let mut idx = FlatIndex::new(6);
+        for i in 0..17u64 {
+            idx.insert(i, &rng.gaussian_vec(6, 1.0));
+        }
+        idx.remove(4);
+        idx.remove(9);
+        idx
+    }
+
+    #[test]
+    fn roundtrip_is_lossless() {
+        let idx = sample_flat();
+        let snap = IndexSnapshot::capture(vec![1, 2, 3], &idx);
+        assert_eq!(snap.items.len(), 15, "tombstones are not captured");
+        let back = IndexSnapshot::decode(&snap.encode()).unwrap();
+        assert_eq!(back.key_bytes, vec![1, 2, 3]);
+        assert_eq!(back.backend, BackendKind::Flat);
+        assert_eq!(back.dim, 6);
+        assert_eq!(back.items, snap.items, "vectors must round-trip bit-exactly");
+    }
+
+    #[test]
+    fn rebuilt_index_answers_bit_identically() {
+        let mut rng = Rng::seed_from(2);
+        let dim = 8;
+        let cfg = LshConfig { tables: 4, bits: 6, probes: 2 };
+        let mut idx = LshIndex::new(dim, cfg, 77);
+        for i in 0..40u64 {
+            idx.insert(i, &rng.gaussian_vec(dim, 1.0));
+        }
+        idx.remove(7);
+        let snap = IndexSnapshot::capture(Vec::new(), &idx);
+        assert_eq!(snap.backend, BackendKind::Lsh);
+        assert_eq!(snap.seed, 77, "hyperplane seed travels in the header");
+        let mut rebuilt = snap.build();
+        let mut ws = Workspace::new();
+        for _ in 0..6 {
+            let q = rng.gaussian_vec(dim, 1.0);
+            assert_eq!(
+                idx.query(&q, 5, &mut ws),
+                rebuilt.query(&q, 5, &mut ws),
+                "restored index must answer bit-identically"
+            );
+        }
+    }
+
+    #[test]
+    fn checksum_corruption_is_rejected() {
+        let snap = IndexSnapshot::capture(vec![9], &sample_flat());
+        let mut bytes = snap.encode();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x40;
+        let err = IndexSnapshot::decode(&bytes).unwrap_err();
+        assert!(err.contains("checksum"), "got: {err}");
+    }
+
+    #[test]
+    fn truncation_is_rejected() {
+        let snap = IndexSnapshot::capture(Vec::new(), &sample_flat());
+        let bytes = snap.encode();
+        for cut in [0, 7, bytes.len() / 2, bytes.len() - 1] {
+            assert!(IndexSnapshot::decode(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_version_are_rejected() {
+        let snap = IndexSnapshot::capture(Vec::new(), &sample_flat());
+        // Bad magic (re-checksummed so the magic check is what fires).
+        let mut bytes = snap.encode();
+        bytes[0] = b'X';
+        let n = bytes.len();
+        let sum = fnv1a(&bytes[..n - 8]).to_le_bytes();
+        bytes[n - 8..].copy_from_slice(&sum);
+        assert!(IndexSnapshot::decode(&bytes).unwrap_err().contains("magic"));
+        // Future version (re-checksummed likewise).
+        let mut bytes = snap.encode();
+        bytes[8..12].copy_from_slice(&2u32.to_le_bytes());
+        let sum = fnv1a(&bytes[..n - 8]).to_le_bytes();
+        bytes[n - 8..].copy_from_slice(&sum);
+        assert!(IndexSnapshot::decode(&bytes).unwrap_err().contains("version"));
+    }
+
+    #[test]
+    fn write_is_atomic_and_readable() {
+        let dir = std::env::temp_dir().join(format!("trp_persist_unit_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sig_test.snap");
+        let snap = IndexSnapshot::capture(vec![5, 5], &sample_flat());
+        let bytes = snap.write_atomic(&path).unwrap();
+        assert_eq!(bytes, std::fs::metadata(&path).unwrap().len());
+        assert!(!path.with_extension("snap.tmp").exists());
+        let back = IndexSnapshot::read(&path).unwrap();
+        assert_eq!(back.items, snap.items);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -2,6 +2,9 @@
 //!
 //! ```text
 //! trp serve       [--requests N] [--rate R] [--case medium] [--no-pjrt]
+//!                 [--listen ADDR] [--snapshot-dir DIR] [--snapshot-every N]
+//!                 [--restore DIR]
+//! trp snapshot    --connect ADDR --case medium --format tt [--restore]
 //! trp project     --case medium --format tt [--k 64] [--map tt:5]
 //! trp experiment  fig1|fig2|fig3|fig4|ablation|batch|ann [--quick] [--trials T]
 //! trp bounds      --eps 0.5 --n 12 --r 10 --m 100 [--delta 0.05]
@@ -15,7 +18,7 @@ use tensorized_rp::data::workload::{poisson_trace, FormatMix};
 use tensorized_rp::experiments::{ablations, ann, batch, fig1, fig2, fig3, fig4, MapSpec};
 use tensorized_rp::rng::Rng;
 use tensorized_rp::runtime::PjrtEngine;
-use tensorized_rp::tensor::AnyTensor;
+use tensorized_rp::tensor::{AnyTensor, Format};
 use tensorized_rp::theory;
 use tensorized_rp::util::cli::Args;
 
@@ -42,6 +45,7 @@ fn run(args: &Args) -> Result<(), String> {
     match args.pos(0) {
         Some("serve") => cmd_serve(args, &cfg),
         Some("client") => cmd_client(args, &cfg),
+        Some("snapshot") => cmd_snapshot(args),
         Some("project") => cmd_project(args, &cfg),
         Some("experiment") => cmd_experiment(args, &cfg),
         Some("bounds") => cmd_bounds(args),
@@ -65,6 +69,9 @@ fn print_usage() {
            bounds      evaluate the Theorem 2 size bounds\n\
            sketch      sketched SVD demo with a tensorized test matrix (§7)\n\
            client      send requests to a listening `trp serve --listen` instance\n\
+                       (--op project|insert|query|stats)\n\
+           snapshot    ask a listening server to snapshot (or, with\n\
+                       --restore, reload) a signature's index\n\
            artifacts   list and verify the compiled artifact set\n\
          \n\
          common options: --seed S --trials T --threads W --quick --artifacts DIR --out DIR"
@@ -98,10 +105,32 @@ fn cmd_serve(args: &Args, cfg: &AppConfig) -> Result<(), String> {
         None
     };
 
+    let snapshot_dir = args.get("snapshot-dir").map(std::path::PathBuf::from);
+    let snapshot_every: u64 = args.get_parsed_or("snapshot-every", 0u64)?;
+    if snapshot_every > 0 && snapshot_dir.is_none() {
+        return Err("--snapshot-every requires --snapshot-dir".into());
+    }
     let coord = Coordinator::start(
-        CoordinatorConfig { master_seed: cfg.seed, ..Default::default() },
+        CoordinatorConfig {
+            master_seed: cfg.seed,
+            snapshot_dir,
+            snapshot_every_ops: snapshot_every,
+            ..Default::default()
+        },
         engine,
     );
+
+    // --restore DIR: crash recovery — reload every index snapshot before
+    // any traffic is accepted.
+    if let Some(dir) = args.get("restore").map(std::path::PathBuf::from) {
+        let (sigs, items) = coord
+            .restore_from(&dir)
+            .map_err(|e| format!("restore from {}: {e}", dir.display()))?;
+        println!(
+            "[serve] restored {items} items across {sigs} signatures from {}",
+            dir.display()
+        );
+    }
 
     // --listen ADDR: expose the service over TCP instead of replaying a
     // synthetic trace (newline-delimited JSON; see coordinator::wire).
@@ -162,28 +191,87 @@ fn cmd_client(args: &Args, cfg: &AppConfig) -> Result<(), String> {
     let addr = args.get("connect").unwrap_or("127.0.0.1:7070");
     let case = Regime::parse(&args.get_or("case", "medium")).ok_or("bad --case")?;
     let format = args.get_or("format", "tt");
+    let op = args.get_or("op", "project");
     let n: usize = args.get_parsed_or("requests", 4usize)?;
+    let topk: usize = args.get_parsed_or("k", 5usize)?;
     let mut client =
         tensorized_rp::coordinator::NetClient::connect(addr).map_err(|e| e.to_string())?;
     let mut rng = Rng::seed_from(cfg.seed);
     for i in 0..n {
-        let x = unit_input(&case.dims(), case.input_rank(), &format, &mut rng);
-        let resp = client
-            .roundtrip(&ProjectRequest::new(i as u64, x))
-            .map_err(|e| e.to_string())?;
-        match (resp.embedding, resp.error) {
-            (Some(y), _) => {
-                let n2: f64 = y.iter().map(|v| v * v).sum();
-                println!(
-                    "id={} k={} ‖y‖²={n2:.4} via {}",
-                    resp.id,
-                    y.len(),
-                    resp.path.unwrap_or_default()
-                );
+        let req = match op.as_str() {
+            "project" | "insert" | "query" => {
+                let x = unit_input(&case.dims(), case.input_rank(), &format, &mut rng);
+                match op.as_str() {
+                    "project" => ProjectRequest::new(i as u64, x),
+                    "insert" => ProjectRequest::insert(i as u64, x),
+                    _ => ProjectRequest::query(i as u64, x, topk),
+                }
             }
-            (_, Some(e)) => println!("id={} error: {e}", resp.id),
-            _ => println!("id={} empty response", resp.id),
+            "stats" => {
+                let f = Format::parse(&format).ok_or("bad --format")?;
+                ProjectRequest::index_stats(i as u64, f, case.dims())
+            }
+            other => return Err(format!("unknown --op {other} (project|insert|query|stats)")),
+        };
+        let resp = client.roundtrip(&req).map_err(|e| e.to_string())?;
+        let id = resp
+            .id
+            .map(|v| v.to_string())
+            .unwrap_or_else(|| "null".into());
+        if let Some(e) = resp.error {
+            println!("id={id} error: {e}");
+            continue;
         }
+        if let Some(ns) = resp.neighbors {
+            let nearest = ns
+                .first()
+                .map(|nb| format!("{}@{:.4}", nb.id, nb.dist))
+                .unwrap_or_else(|| "-".into());
+            println!("id={id} neighbors={} nearest={nearest}", ns.len());
+        } else if let Some(s) = resp.index {
+            println!(
+                "id={id} index backend={} len={} inserts={} deletes={} queries={}",
+                s.backend, s.len, s.inserts, s.deletes, s.queries
+            );
+        } else if let Some(y) = resp.embedding {
+            let n2: f64 = y.iter().map(|v| v * v).sum();
+            println!(
+                "id={id} k={} ‖y‖²={n2:.4} via {}",
+                y.len(),
+                resp.path.unwrap_or_default()
+            );
+        } else {
+            println!("id={id} empty response");
+        }
+    }
+    Ok(())
+}
+
+/// Ask a listening server to persist (or reload) one signature's index:
+/// `trp snapshot --connect ADDR --case medium --format tt [--restore]`.
+/// The server writes to its own `--snapshot-dir`; this just triggers the
+/// op through the wire protocol so the cut is sequenced with live
+/// traffic.
+fn cmd_snapshot(args: &Args) -> Result<(), String> {
+    let addr = args.get("connect").unwrap_or("127.0.0.1:7070");
+    let case = Regime::parse(&args.get_or("case", "medium")).ok_or("bad --case")?;
+    let format = Format::parse(&args.get_or("format", "tt")).ok_or("bad --format")?;
+    let mut client =
+        tensorized_rp::coordinator::NetClient::connect(addr).map_err(|e| e.to_string())?;
+    let req = if args.flag("restore") {
+        ProjectRequest::restore(1, format, case.dims())
+    } else {
+        ProjectRequest::snapshot(1, format, case.dims())
+    };
+    let resp = client.roundtrip(&req).map_err(|e| e.to_string())?;
+    if let Some(e) = resp.error {
+        return Err(e);
+    }
+    if let Some(rep) = resp.snapshot {
+        println!("[snapshot] {} items ({} bytes) → {}", rep.items, rep.bytes, rep.path);
+    }
+    if let Some(items) = resp.restored {
+        println!("[restore] {items} items reloaded");
     }
     Ok(())
 }

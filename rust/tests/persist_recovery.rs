@@ -1,0 +1,212 @@
+//! Snapshot / crash-recovery tests of the index persistence subsystem:
+//!
+//! 1. property: over both backends (flat, LSH) and both payload formats
+//!    (dense, TT), a coordinator that snapshots under concurrent
+//!    pipelined traffic, dies, and is restored from disk answers every
+//!    query **bit-identically** to an uninterrupted coordinator that
+//!    received exactly the pre-snapshot ops — and the snapshot is a
+//!    consistent cut (ops submitted after the snapshot op are absent);
+//! 2. the `snapshot`/`restore` wire ops round-trip over TCP, reporting
+//!    file path/items/bytes and reloading the on-disk state;
+//! 3. periodic snapshots (`snapshot_every_ops`) write files without any
+//!    explicit op;
+//! 4. snapshot ops on a coordinator without a configured snapshot
+//!    directory fail loudly instead of silently dropping durability.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use tensorized_rp::coordinator::{
+    Coordinator, CoordinatorConfig, NetClient, NetServer, ProjectRequest,
+};
+use tensorized_rp::data::inputs::unit_input;
+use tensorized_rp::index::{BackendKind, LshConfig};
+use tensorized_rp::rng::Rng;
+use tensorized_rp::tensor::{AnyTensor, Format};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("trp_recovery_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn coordinator(backend: BackendKind, snapshot_dir: Option<&Path>, every: u64) -> Coordinator {
+    Coordinator::start(
+        CoordinatorConfig {
+            workers: 3,
+            default_k: 12,
+            master_seed: 0xFEED,
+            index_backend: backend,
+            lsh: LshConfig { tables: 4, bits: 8, probes: 2 },
+            snapshot_dir: snapshot_dir.map(|d| d.to_path_buf()),
+            snapshot_every_ops: every,
+            ..Default::default()
+        },
+        None,
+    )
+}
+
+#[test]
+fn snapshot_restore_is_bit_identical_across_backends_and_formats() {
+    for backend in [BackendKind::Flat, BackendKind::Lsh] {
+        for format in ["dense", "tt"] {
+            let tag = format!("{}_{format}", backend.name());
+            let dir = tmp_dir(&tag);
+            let dims = vec![3usize; 4];
+            let mut rng = Rng::seed_from(31);
+            let payloads: Vec<AnyTensor> =
+                (0..24).map(|_| unit_input(&dims, 2, format, &mut rng)).collect();
+            let queries: Vec<AnyTensor> =
+                (0..6).map(|_| unit_input(&dims, 2, format, &mut rng)).collect();
+            let fmt = payloads[0].format();
+
+            // Coordinator A: inserts, a delete, the snapshot, and
+            // post-snapshot traffic — all pipelined before a single
+            // reply is awaited, so the snapshot cut happens under
+            // concurrent in-flight ops.
+            let a = coordinator(backend, Some(&dir), 0);
+            let mut rxs = Vec::new();
+            for (i, p) in payloads.iter().enumerate() {
+                rxs.push(a.submit(ProjectRequest::insert(i as u64, p.clone())));
+            }
+            rxs.push(a.submit(ProjectRequest::delete(100, 3, fmt, dims.clone())));
+            rxs.push(a.submit(ProjectRequest::snapshot(101, fmt, dims.clone())));
+            rxs.push(a.submit(ProjectRequest::delete(102, 5, fmt, dims.clone())));
+            for rx in rxs {
+                rx.recv().unwrap().unwrap();
+            }
+            assert_eq!(a.metrics().index_snapshots, 1);
+            a.shutdown(); // the "kill"
+
+            // Coordinator B: fresh process image, restored from disk.
+            let b = coordinator(backend, Some(&dir), 0);
+            let (sigs, items) = b.restore_from(&dir).unwrap();
+            assert_eq!(sigs, 1, "[{tag}] one signature was snapshotted");
+            assert_eq!(items, 23, "[{tag}] snapshot holds the pre-cut state");
+
+            // Coordinator C: never snapshotted, never restarted; receives
+            // exactly the pre-snapshot ops. This is the ground truth.
+            let c = coordinator(backend, None, 0);
+            for (i, p) in payloads.iter().enumerate() {
+                c.project_blocking(ProjectRequest::insert(i as u64, p.clone())).unwrap();
+            }
+            c.project_blocking(ProjectRequest::delete(100, 3, fmt, dims.clone())).unwrap();
+
+            for (qi, q) in queries.iter().enumerate() {
+                let id = 500 + qi as u64;
+                let nb = b
+                    .project_blocking(ProjectRequest::query(id, q.clone(), 5))
+                    .unwrap()
+                    .neighbors
+                    .unwrap();
+                let nc = c
+                    .project_blocking(ProjectRequest::query(id, q.clone(), 5))
+                    .unwrap()
+                    .neighbors
+                    .unwrap();
+                assert_eq!(
+                    nb, nc,
+                    "[{tag}] restored queries must be bit-identical to the \
+                     uninterrupted coordinator"
+                );
+                assert!(nb.iter().all(|n| n.id != 3), "[{tag}] pre-cut delete persisted");
+            }
+            // Consistent cut: the delete submitted after the snapshot op
+            // must NOT be reflected in the restored corpus.
+            let stats = b
+                .project_blocking(ProjectRequest::index_stats(900, fmt, dims.clone()))
+                .unwrap()
+                .index
+                .unwrap();
+            assert_eq!(stats.len, 23, "[{tag}] post-snapshot delete is not in the file");
+            b.shutdown();
+            c.shutdown();
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+    }
+}
+
+#[test]
+fn snapshot_and_restore_ops_roundtrip_over_the_wire() {
+    let dir = tmp_dir("wire");
+    let dims = vec![3usize; 4];
+    let coord = Arc::new(coordinator(BackendKind::Flat, Some(&dir), 0));
+    let server = NetServer::start(Arc::clone(&coord), "127.0.0.1:0").unwrap();
+    let mut client = NetClient::connect(server.addr()).unwrap();
+    let mut rng = Rng::seed_from(7);
+    for i in 0..4u64 {
+        let x = unit_input(&dims, 2, "tt", &mut rng);
+        let resp = client.roundtrip(&ProjectRequest::insert(i, x)).unwrap();
+        assert!(resp.error.is_none());
+    }
+    // Snapshot: the reply reports what was written.
+    let resp = client
+        .roundtrip(&ProjectRequest::snapshot(50, Format::Tt, dims.clone()))
+        .unwrap();
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    let report = resp.snapshot.expect("snapshot report over the wire");
+    assert_eq!(report.items, 4);
+    assert!(report.bytes > 0);
+    assert!(Path::new(&report.path).exists(), "file at the reported path");
+    // Mutate past the snapshot, then restore: back to the cut.
+    for i in 4..6u64 {
+        let x = unit_input(&dims, 2, "tt", &mut rng);
+        client.roundtrip(&ProjectRequest::insert(i, x)).unwrap();
+    }
+    let resp = client
+        .roundtrip(&ProjectRequest::restore(51, Format::Tt, dims.clone()))
+        .unwrap();
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert_eq!(resp.restored, Some(4));
+    let resp = client
+        .roundtrip(&ProjectRequest::index_stats(52, Format::Tt, dims))
+        .unwrap();
+    assert_eq!(resp.index.unwrap().len, 4, "restore rewound to the snapshot cut");
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn periodic_snapshots_fire_on_mutation_count() {
+    let dir = tmp_dir("periodic");
+    let dims = vec![3usize; 4];
+    let coord = coordinator(BackendKind::Flat, Some(&dir), 4);
+    let mut rng = Rng::seed_from(9);
+    for i in 0..10u64 {
+        let x = unit_input(&dims, 2, "tt", &mut rng);
+        coord.project_blocking(ProjectRequest::insert(i, x)).unwrap();
+    }
+    assert!(
+        coord.metrics().index_snapshots >= 1,
+        "10 inserts at snapshot_every_ops=4 must write at least one snapshot"
+    );
+    let snaps: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "snap"))
+        .collect();
+    assert_eq!(snaps.len(), 1, "one signature → one snapshot file");
+    // The file is a valid snapshot a fresh coordinator can recover from.
+    let fresh = coordinator(BackendKind::Flat, None, 0);
+    let (sigs, items) = fresh.restore_from(&dir).unwrap();
+    assert_eq!(sigs, 1);
+    assert!((4..=10).contains(&items), "periodic cut holds 4..=10 items, got {items}");
+    coord.shutdown();
+    fresh.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn snapshot_without_configured_dir_fails_loudly() {
+    let dims = vec![3usize; 4];
+    let coord = coordinator(BackendKind::Flat, None, 0);
+    let mut rng = Rng::seed_from(11);
+    let x = unit_input(&dims, 2, "tt", &mut rng);
+    coord.project_blocking(ProjectRequest::insert(0, x)).unwrap();
+    let reply = coord.project_blocking(ProjectRequest::snapshot(1, Format::Tt, dims.clone()));
+    assert!(reply.is_err(), "snapshot without snapshot_dir must error");
+    let reply = coord.project_blocking(ProjectRequest::restore(2, Format::Tt, dims));
+    assert!(reply.is_err(), "restore without snapshot_dir must error");
+    assert_eq!(coord.metrics().failed, 2);
+    coord.shutdown();
+}

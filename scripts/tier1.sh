@@ -22,6 +22,14 @@ if [ "$fail" -eq 0 ]; then
   cargo test -q || fail=1
 fi
 
+# Snapshot round-trip is load-bearing for crash recovery: run it as its
+# own named gate so a persistence regression is visible at a glance
+# (cheap — the test binary is already built by the full run above).
+if [ "$fail" -eq 0 ]; then
+  echo "== tier1: snapshot round-trip (persist_recovery) =="
+  cargo test -q --test persist_recovery || fail=1
+fi
+
 advisory() {
   local label="$1"
   shift
