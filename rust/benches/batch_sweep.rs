@@ -5,16 +5,17 @@
 //! cargo bench --bench batch_sweep [-- --quick] [-- --out FILE]
 //! ```
 //!
-//! Per map family and B ∈ {1, 4, 16, 64} (quick: {1, 4, 16}) on dense
-//! inputs, reports per-input time through an item-at-a-time `project`
-//! loop vs one `project_batch_into` call, the speedup, and per-map
-//! throughput in inputs/s. Acceptance tripwire for this PR: batched TT on
-//! the dense medium-order shape must reach ≥ 2× item-at-a-time at B = 16.
+//! Per map family, input format (dense for all six maps; TT and CP format
+//! for the tensorized TT/CP/TRP maps) and B ∈ {1, 4, 16, 64} (quick:
+//! {1, 4, 16}), reports per-input time through an item-at-a-time
+//! `project` loop vs one `project_batch_into` call, the speedup, and
+//! per-map throughput in inputs/s. Acceptance tripwire for this PR:
+//! batched TT-map throughput on **TT-format** inputs must reach ≥ 2×
+//! item-at-a-time at B = 16 (the dense tripwire from PR 1 stays).
 
-use tensorized_rp::experiments::batch::{run, BatchSweepConfig};
+use tensorized_rp::experiments::batch::{print_verdict, run, to_json, BatchSweepConfig};
 use tensorized_rp::util::bench::BenchReport;
 use tensorized_rp::util::cli::Args;
-use tensorized_rp::util::json::{num_arr, obj, Json};
 
 fn main() {
     let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench")).unwrap();
@@ -24,18 +25,19 @@ fn main() {
         BatchSweepConfig::paper()
     };
     eprintln!(
-        "[batch_sweep] dims={:?} k={} batch_sizes={:?}",
-        cfg.dims, cfg.k, cfg.batch_sizes
+        "[batch_sweep] dims={:?} k={} input_rank={} batch_sizes={:?}",
+        cfg.dims, cfg.k, cfg.input_rank, cfg.batch_sizes
     );
     let rows = run(&cfg);
 
     let mut report = BenchReport::new(
         "Batch-size sweep: project loop vs project_batch_into",
-        &["map", "B", "item_us/input", "batched_us/input", "speedup"],
+        &["map", "input", "B", "item_us/input", "batched_us/input", "speedup"],
     );
     for r in &rows {
         report.push(vec![
             r.map.clone(),
+            r.input.clone(),
             r.batch.to_string(),
             format!("{:.3}", r.item_us),
             format!("{:.3}", r.batched_us),
@@ -44,63 +46,13 @@ fn main() {
     }
     report.finish("batch_sweep.csv");
 
-    // Machine-readable trajectory file: per-map series over B with
-    // batched throughput (inputs/s).
-    let mut maps: Vec<String> = rows.iter().map(|r| r.map.clone()).collect();
-    maps.dedup();
-    let series: Vec<Json> = maps
-        .iter()
-        .map(|name| {
-            let per_map: Vec<_> = rows.iter().filter(|r| &r.map == name).collect();
-            obj(vec![
-                ("map", Json::Str(name.clone())),
-                (
-                    "batch_sizes",
-                    Json::Arr(per_map.iter().map(|r| Json::Num(r.batch as f64)).collect()),
-                ),
-                (
-                    "batched_throughput_per_s",
-                    num_arr(
-                        &per_map
-                            .iter()
-                            .map(|r| 1e6 / r.batched_us.max(1e-12))
-                            .collect::<Vec<f64>>(),
-                    ),
-                ),
-                (
-                    "item_throughput_per_s",
-                    num_arr(
-                        &per_map
-                            .iter()
-                            .map(|r| 1e6 / r.item_us.max(1e-12))
-                            .collect::<Vec<f64>>(),
-                    ),
-                ),
-                (
-                    "speedup",
-                    num_arr(&per_map.iter().map(|r| r.speedup).collect::<Vec<f64>>()),
-                ),
-            ])
-        })
-        .collect();
-    let doc = obj(vec![
-        ("bench", Json::Str("batch_sweep".into())),
-        ("dims", Json::Arr(cfg.dims.iter().map(|&d| Json::Num(d as f64)).collect())),
-        ("k", Json::Num(cfg.k as f64)),
-        ("series", Json::Arr(series)),
-    ]);
+    // Machine-readable trajectory file: one series per (map, input).
+    let doc = to_json(&cfg, &rows);
     let out_path = args.get_or("out", "BENCH_batch_sweep.json");
     match std::fs::write(&out_path, doc.to_string_pretty()) {
         Ok(()) => println!("[written {out_path}]"),
         Err(e) => eprintln!("[warn] could not write {out_path}: {e}"),
     }
 
-    // Acceptance tripwire (report, don't panic: machine load varies).
-    for r in rows.iter().filter(|r| r.map.starts_with("TT(") && r.batch == 16) {
-        let verdict = if r.speedup >= 2.0 { "PASS" } else { "MISS" };
-        println!(
-            "[batch_sweep] TT dense B=16 batched speedup: {:.2}x ({verdict}, target ≥ 2x)",
-            r.speedup
-        );
-    }
+    print_verdict(&rows);
 }

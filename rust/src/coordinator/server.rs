@@ -71,6 +71,10 @@ pub struct CoordinatorConfig {
     /// the signature's sequencer turn, so it is a consistent cut between
     /// flushes exactly like an explicit `snapshot` op.
     pub snapshot_every_ops: u64,
+    /// Snapshot rotation depth: keep this many sequenced snapshot files
+    /// per signature, pruning the oldest after each successful write
+    /// (minimum 1; restore always reads the newest).
+    pub snapshot_keep: usize,
     /// Map policy for native TT-format requests: TT rank.
     pub default_tt_rank: usize,
     /// Map policy for native CP-format requests: CP rank.
@@ -94,6 +98,7 @@ impl Default for CoordinatorConfig {
             lsh: LshConfig::default(),
             snapshot_dir: None,
             snapshot_every_ops: 0,
+            snapshot_keep: super::state::DEFAULT_SNAPSHOT_KEEP,
             default_tt_rank: 5,
             default_cp_rank: 25,
             default_k: 64,
@@ -150,7 +155,8 @@ impl Coordinator {
         let shared = Arc::new(Shared {
             registry: ProjectionRegistry::new(cfg.master_seed),
             indexes: IndexRegistry::new(cfg.master_seed, cfg.index_backend, cfg.lsh)
-                .with_snapshot_dir(cfg.snapshot_dir.clone()),
+                .with_snapshot_dir(cfg.snapshot_dir.clone())
+                .with_snapshot_keep(cfg.snapshot_keep),
             engine,
             metrics: Metrics::new(),
             workspaces: WorkspacePool::new(),

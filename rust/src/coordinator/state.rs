@@ -430,13 +430,59 @@ pub struct IndexRegistry {
     /// disables the `snapshot`/`restore` wire ops and periodic
     /// snapshots).
     snapshot_dir: Option<PathBuf>,
+    /// Rotation depth: how many snapshot files to keep per signature
+    /// (oldest pruned after each successful write; minimum 1).
+    snapshot_keep: usize,
     indexes: Mutex<HashMap<MapKey, SharedIndex>>,
 }
 
-/// Snapshot file name of a signature: a salted key hash, stable across
-/// master seeds and processes so `--restore` finds files by content.
-fn snapshot_file_name(key: &MapKey) -> String {
-    format!("sig_{:016x}.snap", map_key_seed(0x5EED_F11E, key))
+/// Default rotation depth: the latest snapshot plus one predecessor, so a
+/// snapshot that lands torn or wrong still leaves a recovery point.
+pub const DEFAULT_SNAPSHOT_KEEP: usize = 2;
+
+/// Snapshot file-name prefix of a signature: a salted key hash, stable
+/// across master seeds and processes so `--restore` finds files by
+/// content. Full names are `<prefix>.<seq>.snap` with a monotonically
+/// increasing per-signature sequence number (rotation), and the legacy
+/// unsequenced `<prefix>.snap` reads as sequence 0.
+fn snapshot_prefix(key: &MapKey) -> String {
+    format!("sig_{:016x}", map_key_seed(0x5EED_F11E, key))
+}
+
+/// Split a snapshot file name into `(signature stem, sequence)`.
+/// `sig_ab.00000003.snap → ("sig_ab", 3)`, legacy `sig_ab.snap →
+/// ("sig_ab", 0)`; `None` for non-snapshot names.
+fn parse_snap_name(name: &str) -> Option<(String, u64)> {
+    let rest = name.strip_suffix(".snap")?;
+    if let Some((stem, seq)) = rest.rsplit_once('.') {
+        if let Ok(s) = seq.parse::<u64>() {
+            return Some((stem.to_string(), s));
+        }
+    }
+    Some((rest.to_string(), 0))
+}
+
+/// All snapshot files of one signature in `dir`, ascending by sequence.
+/// IO errors propagate: treating an unreadable directory as "no
+/// snapshots" would restart the rotation sequence below existing files
+/// (so a later restore would silently load a stale higher sequence).
+fn list_snapshots(dir: &Path, prefix: &str) -> std::result::Result<Vec<(u64, PathBuf)>, String> {
+    let rd = std::fs::read_dir(dir).map_err(|e| format!("read {}: {e}", dir.display()))?;
+    let mut found: Vec<(u64, PathBuf)> = Vec::new();
+    for entry in rd {
+        let p = entry.map_err(|e| format!("read {}: {e}", dir.display()))?.path();
+        let name = match p.file_name().and_then(|s| s.to_str()) {
+            Some(n) => n.to_string(),
+            None => continue,
+        };
+        if let Some((stem, seq)) = parse_snap_name(&name) {
+            if stem == prefix {
+                found.push((seq, p));
+            }
+        }
+    }
+    found.sort();
+    Ok(found)
 }
 
 impl IndexRegistry {
@@ -447,6 +493,7 @@ impl IndexRegistry {
             backend,
             lsh,
             snapshot_dir: None,
+            snapshot_keep: DEFAULT_SNAPSHOT_KEEP,
             indexes: Mutex::new(HashMap::new()),
         }
     }
@@ -454,6 +501,13 @@ impl IndexRegistry {
     /// Set the snapshot directory (builder-style).
     pub fn with_snapshot_dir(mut self, dir: Option<PathBuf>) -> Self {
         self.snapshot_dir = dir;
+        self
+    }
+
+    /// Set the per-signature rotation depth (builder-style; clamped to
+    /// ≥ 1 — "keep zero snapshots" would delete the file just written).
+    pub fn with_snapshot_keep(mut self, keep: usize) -> Self {
+        self.snapshot_keep = keep.max(1);
         self
     }
 
@@ -480,9 +534,12 @@ impl IndexRegistry {
     }
 
     /// Write a snapshot of `index` (the live contents of `slot`) to the
-    /// configured directory. The caller must hold the slot's sequencer
-    /// turn (or otherwise own the index) so the capture is a consistent
-    /// cut between index ops.
+    /// configured directory under the signature's next sequence number,
+    /// then prune the oldest files beyond the rotation depth (only after
+    /// the atomic rename succeeded — a failed write never costs an
+    /// existing recovery point). The caller must hold the slot's
+    /// sequencer turn (or otherwise own the index) so the capture is a
+    /// consistent cut between index ops.
     pub fn snapshot_slot(
         &self,
         slot: &IndexSlot,
@@ -491,23 +548,37 @@ impl IndexRegistry {
         let dir = self.snapshot_dir.as_ref().ok_or("no snapshot_dir configured")?;
         std::fs::create_dir_all(dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
         let snap = IndexSnapshot::capture(slot.key.encode(), index);
-        let path = dir.join(snapshot_file_name(&slot.key));
+        let prefix = snapshot_prefix(&slot.key);
+        let mut existing = list_snapshots(dir, &prefix)?;
+        let seq = existing.last().map(|(s, _)| s + 1).unwrap_or(1);
+        let path = dir.join(format!("{prefix}.{seq:08}.snap"));
         let items = snap.items.len() as u64;
         let bytes = snap.write_atomic(&path)?;
+        existing.push((seq, path.clone()));
+        while existing.len() > self.snapshot_keep {
+            // Best-effort prune: a leftover old file is re-pruned next
+            // time and never shadows the newest sequence on restore.
+            let (_, old) = existing.remove(0);
+            let _ = std::fs::remove_file(old);
+        }
         Ok(SnapshotReport { path: path.display().to_string(), items, bytes })
     }
 
-    /// Reload `slot`'s index from its snapshot file in the configured
-    /// directory, replacing the live contents. Caller must hold the
-    /// slot's sequencer turn. Returns the restored item count.
+    /// Reload `slot`'s index from its newest snapshot file in the
+    /// configured directory, replacing the live contents. Caller must
+    /// hold the slot's sequencer turn. Returns the restored item count.
     pub fn restore_slot(
         &self,
         slot: &IndexSlot,
         index: &mut Box<dyn AnnIndex>,
     ) -> std::result::Result<u64, String> {
         let dir = self.snapshot_dir.as_ref().ok_or("no snapshot_dir configured")?;
-        let path = dir.join(snapshot_file_name(&slot.key));
-        let snap = IndexSnapshot::read(&path)?;
+        let prefix = snapshot_prefix(&slot.key);
+        let snaps = list_snapshots(dir, &prefix)?;
+        let (_, path) = snaps
+            .last()
+            .ok_or_else(|| format!("no snapshot for this signature in {}", dir.display()))?;
+        let snap = IndexSnapshot::read(path)?;
         let key = MapKey::decode(&snap.key_bytes)?;
         if key != slot.key {
             return Err(format!("snapshot {} belongs to another signature", path.display()));
@@ -527,21 +598,45 @@ impl IndexRegistry {
         Ok(snap.items.len() as u64)
     }
 
-    /// Load every `*.snap` file in `dir` into the registry (crash
-    /// recovery at startup, before traffic). Corrupt or foreign files
-    /// fail the whole restore — a half-recovered corpus silently serving
-    /// wrong results is worse than a loud startup error. Returns
+    /// Load the **newest** snapshot of every signature in `dir` into the
+    /// registry (crash recovery at startup, before traffic): rotation
+    /// keeps up to `snapshot_keep` sequenced files per signature, and
+    /// recovery reads only the highest sequence of each. A corrupt or
+    /// foreign newest file fails the whole restore — a half-recovered
+    /// corpus silently serving wrong results is worse than a loud startup
+    /// error (older rotations stay on disk for manual recovery). Returns
     /// `(signatures, total items)` restored.
     pub fn restore_all(&self, dir: &Path) -> std::result::Result<(usize, u64), String> {
-        let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)
+        let paths: Vec<PathBuf> = std::fs::read_dir(dir)
             .map_err(|e| format!("read {}: {e}", dir.display()))?
             .filter_map(|e| e.ok().map(|e| e.path()))
             .filter(|p| p.extension().is_some_and(|x| x == "snap"))
             .collect();
-        paths.sort();
+        // Newest sequence per signature stem (legacy unsequenced files
+        // read as sequence 0, so a sequenced successor supersedes them).
+        let mut newest: HashMap<String, (u64, PathBuf)> = HashMap::new();
+        for path in paths {
+            let name = match path.file_name().and_then(|s| s.to_str()) {
+                Some(n) => n.to_string(),
+                None => continue,
+            };
+            let (stem, seq) = match parse_snap_name(&name) {
+                Some(parts) => parts,
+                None => continue,
+            };
+            let supersedes = match newest.get(&stem) {
+                Some((best, _)) => seq > *best,
+                None => true,
+            };
+            if supersedes {
+                newest.insert(stem, (seq, path));
+            }
+        }
+        let mut loads: Vec<&(u64, PathBuf)> = newest.values().collect();
+        loads.sort();
         let mut indexes = self.indexes.lock().unwrap();
         let mut items = 0u64;
-        for path in &paths {
+        for (_, path) in loads {
             let snap =
                 IndexSnapshot::read(path).map_err(|e| format!("{}: {e}", path.display()))?;
             let key = MapKey::decode(&snap.key_bytes)
@@ -558,7 +653,7 @@ impl IndexRegistry {
             let slot = Arc::new(IndexSlot::new(key.clone(), snap.build()));
             indexes.insert(key, slot);
         }
-        Ok((paths.len(), items))
+        Ok((newest.len(), items))
     }
 
     /// Number of live indexes.
@@ -762,6 +857,85 @@ mod tests {
         assert!(reg2.snapshot_slot(&slot3, index3.as_ref()).is_err());
         assert!(reg2.restore_slot(&slot3, &mut index3).is_err());
         drop(index3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_rotation_keeps_last_n_and_restores_newest() {
+        let dir = std::env::temp_dir()
+            .join(format!("trp_state_rot_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let reg = IndexRegistry::new(
+            7,
+            crate::index::BackendKind::Flat,
+            crate::index::LshConfig::default(),
+        )
+        .with_snapshot_dir(Some(dir.clone()))
+        .with_snapshot_keep(2);
+        let slot = reg.get_or_create(&tt_key());
+        for round in 0..3u64 {
+            let mut index = slot.index.lock().unwrap();
+            index.insert(round, &vec![round as f64; tt_key().k]);
+            reg.snapshot_slot(&slot, index.as_ref()).unwrap();
+        }
+        // Three writes, rotation depth 2: the two newest sequences remain.
+        let prefix = snapshot_prefix(&tt_key());
+        let snaps = list_snapshots(&dir, &prefix).unwrap();
+        let seqs: Vec<u64> = snaps.iter().map(|(s, _)| *s).collect();
+        assert_eq!(seqs, vec![2, 3], "oldest snapshot must be pruned");
+        // restore_slot reads the newest cut (all three items).
+        {
+            let mut index = slot.index.lock().unwrap();
+            index.remove(0);
+            let restored = reg.restore_slot(&slot, &mut index).unwrap();
+            assert_eq!(restored, 3);
+            assert_eq!(index.len(), 3);
+            // Counters restored from the capture, not the rebuild.
+            assert_eq!(index.stats().inserts, 3);
+        }
+        // Startup recovery also picks the newest sequence per signature.
+        let reg2 = IndexRegistry::new(
+            7,
+            crate::index::BackendKind::Flat,
+            crate::index::LshConfig::default(),
+        );
+        assert_eq!(reg2.restore_all(&dir).unwrap(), (1, 3));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_unsequenced_snapshots_still_restore() {
+        let dir = std::env::temp_dir()
+            .join(format!("trp_state_legacy_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let reg = IndexRegistry::new(
+            7,
+            crate::index::BackendKind::Flat,
+            crate::index::LshConfig::default(),
+        )
+        .with_snapshot_dir(Some(dir.clone()));
+        let slot = reg.get_or_create(&tt_key());
+        // Write a PR 3-era file: `<prefix>.snap`, no sequence.
+        {
+            let mut index = slot.index.lock().unwrap();
+            index.insert(1, &vec![1.0; tt_key().k]);
+            let snap = crate::index::IndexSnapshot::capture(slot.key.encode(), index.as_ref());
+            let legacy = dir.join(format!("{}.snap", snapshot_prefix(&tt_key())));
+            snap.write_atomic(&legacy).unwrap();
+            index.insert(2, &vec![2.0; tt_key().k]);
+            // The legacy file reads as sequence 0, so restore finds it…
+            let restored = reg.restore_slot(&slot, &mut index).unwrap();
+            assert_eq!(restored, 1);
+            // …and the next rotation write supersedes it with sequence 1.
+            index.insert(3, &vec![3.0; tt_key().k]);
+            reg.snapshot_slot(&slot, index.as_ref()).unwrap();
+            let restored = reg.restore_slot(&slot, &mut index).unwrap();
+            assert_eq!(restored, 2, "sequenced snapshot supersedes the legacy file");
+        }
+        assert_eq!(parse_snap_name("sig_ab.00000003.snap"), Some(("sig_ab".into(), 3)));
+        assert_eq!(parse_snap_name("sig_ab.snap"), Some(("sig_ab".into(), 0)));
+        assert_eq!(parse_snap_name("notes.txt"), None);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

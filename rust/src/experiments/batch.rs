@@ -1,11 +1,15 @@
 //! Batch-size sweep: item-at-a-time `project` vs the batch-first
-//! `project_batch_into` path, per map family on dense inputs.
+//! `project_batch_into` path, per map family and **per input format**.
 //!
 //! This is the serving-layer counterpart of Figure 2's embedding-time
 //! sweep: instead of varying `k`, it varies the flushed batch size `B`
 //! (the coordinator's `native_max_batch`) and reports per-input time for
-//! both execution routes, so the batched path's trajectory is tracked
-//! across PRs (`cargo bench --bench batch_sweep` emits
+//! both execution routes. Dense inputs sweep all six maps; TT-format and
+//! CP-format inputs sweep the three tensorized maps (TT/CP/TRP) whose
+//! batched compressed-input kernels this repository implements — the
+//! exact workload the paper's efficiency claim is about. The batched
+//! path's trajectory is tracked across PRs (`cargo bench --bench
+//! batch_sweep` and `trp experiment batch` both emit
 //! `BENCH_batch_sweep.json`).
 
 use crate::projections::{
@@ -13,17 +17,20 @@ use crate::projections::{
     TrpProjection, TtProjection, Workspace,
 };
 use crate::rng::Rng;
-use crate::tensor::{AnyTensor, DenseTensor};
+use crate::tensor::{AnyTensor, CpTensor, DenseTensor, TtTensor};
 use crate::util::bench::{bench, BenchConfig};
 use crate::util::csv::CsvTable;
+use crate::util::json::{num_arr, obj, Json};
 
 /// Configuration of the batch-size sweep.
 #[derive(Debug, Clone)]
 pub struct BatchSweepConfig {
-    /// Input mode sizes (inputs are dense, so `∏dims` must materialize).
+    /// Input mode sizes (dense inputs materialize `∏dims`).
     pub dims: Vec<usize>,
     /// Embedding dimension.
     pub k: usize,
+    /// Rank `R̃` of the TT/CP-format inputs.
+    pub input_rank: usize,
     /// Flushed batch sizes to sweep.
     pub batch_sizes: Vec<usize>,
     /// Timing profile.
@@ -38,6 +45,7 @@ impl BatchSweepConfig {
         Self {
             dims: vec![3; 8],
             k: 64,
+            input_rank: 5,
             batch_sizes: vec![1, 4, 16, 64],
             bench: BenchConfig::default(),
             seed: 0xBA7C4,
@@ -49,6 +57,7 @@ impl BatchSweepConfig {
         Self {
             dims: vec![3; 6],
             k: 16,
+            input_rank: 3,
             batch_sizes: vec![1, 4, 16],
             bench: BenchConfig::quick(),
             seed: 0xBA7C4,
@@ -56,11 +65,13 @@ impl BatchSweepConfig {
     }
 }
 
-/// One (map, batch size) measurement.
+/// One (map, input format, batch size) measurement.
 #[derive(Debug, Clone)]
 pub struct BatchRow {
     /// Map label (`Projection::name`).
     pub map: String,
+    /// Input format label: `dense`, `tt` or `cp`.
+    pub input: String,
     /// Flushed batch size `B`.
     pub batch: usize,
     /// Median per-input time through a `project` loop (µs).
@@ -71,53 +82,79 @@ pub struct BatchRow {
     pub speedup: f64,
 }
 
-/// The six maps at serving-default ranks.
-fn maps(dims: &[usize], k: usize, rng: &mut Rng) -> Vec<Box<dyn Projection>> {
+/// The six maps at serving-default ranks; the flag marks the tensorized
+/// maps that run the compressed-input batch kernels (TT/CP-format sweeps
+/// cover exactly those).
+fn maps(dims: &[usize], k: usize, rng: &mut Rng) -> Vec<(Box<dyn Projection>, bool)> {
     vec![
-        Box::new(GaussianProjection::new(dims, k, rng)),
-        Box::new(SparseProjection::new(dims, k, SparseKind::VerySparse, rng)),
-        Box::new(TtProjection::new(dims, 5, k, rng)),
-        Box::new(CpProjection::new(dims, 5, k, rng)),
-        Box::new(TrpProjection::new(dims, 2, k, rng)),
-        Box::new(KroneckerFjlt::new(dims, k, rng)),
+        (Box::new(GaussianProjection::new(dims, k, rng)) as Box<dyn Projection>, false),
+        (Box::new(SparseProjection::new(dims, k, SparseKind::VerySparse, rng)), false),
+        (Box::new(TtProjection::new(dims, 5, k, rng)), true),
+        (Box::new(CpProjection::new(dims, 5, k, rng)), true),
+        (Box::new(TrpProjection::new(dims, 2, k, rng)), true),
+        (Box::new(KroneckerFjlt::new(dims, k, rng)), false),
     ]
 }
 
-/// Run the sweep; both routes see identical inputs and the same drawn map,
-/// so rows differ only in execution path.
+/// Measure one `(map, input set)` pair over the configured batch sizes;
+/// both routes see identical inputs and the same drawn map, so rows
+/// differ only in execution path.
+fn sweep_inputs(
+    map: &dyn Projection,
+    input: &str,
+    inputs: &[AnyTensor],
+    cfg: &BatchSweepConfig,
+    ws: &mut Workspace,
+    rows: &mut Vec<BatchRow>,
+) {
+    for &b in &cfg.batch_sizes {
+        let xs = &inputs[..b];
+        let r_item = bench(&format!("{}/{input}/item/B{b}", map.name()), cfg.bench, || {
+            let mut acc = 0.0;
+            for x in xs {
+                acc += map.project(x)[0];
+            }
+            acc
+        });
+        let mut out = vec![0.0; b * map.k()];
+        let r_batch = bench(&format!("{}/{input}/batch/B{b}", map.name()), cfg.bench, || {
+            map.project_batch_into(xs, &mut out, ws);
+            out[0]
+        });
+        let item_us = r_item.median_secs() * 1e6 / b as f64;
+        let batched_us = r_batch.median_secs() * 1e6 / b as f64;
+        rows.push(BatchRow {
+            map: map.name(),
+            input: input.to_string(),
+            batch: b,
+            item_us,
+            batched_us,
+            speedup: item_us / batched_us.max(1e-12),
+        });
+    }
+}
+
+/// Run the sweep.
 pub fn run(cfg: &BatchSweepConfig) -> Vec<BatchRow> {
     let mut rng = Rng::seed_from(cfg.seed);
     let maps = maps(&cfg.dims, cfg.k, &mut rng);
     let max_b = cfg.batch_sizes.iter().copied().max().unwrap_or(1);
-    let inputs: Vec<AnyTensor> = (0..max_b)
+    let dense_inputs: Vec<AnyTensor> = (0..max_b)
         .map(|_| AnyTensor::Dense(DenseTensor::random_unit(&cfg.dims, &mut rng)))
+        .collect();
+    let tt_inputs: Vec<AnyTensor> = (0..max_b)
+        .map(|_| AnyTensor::Tt(TtTensor::random_unit(&cfg.dims, cfg.input_rank, &mut rng)))
+        .collect();
+    let cp_inputs: Vec<AnyTensor> = (0..max_b)
+        .map(|_| AnyTensor::Cp(CpTensor::random_unit(&cfg.dims, cfg.input_rank, &mut rng)))
         .collect();
     let mut rows = Vec::new();
     let mut ws = Workspace::new();
-    for map in &maps {
-        for &b in &cfg.batch_sizes {
-            let xs = &inputs[..b];
-            let r_item = bench(&format!("{}/item/B{b}", map.name()), cfg.bench, || {
-                let mut acc = 0.0;
-                for x in xs {
-                    acc += map.project(x)[0];
-                }
-                acc
-            });
-            let mut out = vec![0.0; b * map.k()];
-            let r_batch = bench(&format!("{}/batch/B{b}", map.name()), cfg.bench, || {
-                map.project_batch_into(xs, &mut out, &mut ws);
-                out[0]
-            });
-            let item_us = r_item.median_secs() * 1e6 / b as f64;
-            let batched_us = r_batch.median_secs() * 1e6 / b as f64;
-            rows.push(BatchRow {
-                map: map.name(),
-                batch: b,
-                item_us,
-                batched_us,
-                speedup: item_us / batched_us.max(1e-12),
-            });
+    for (map, compressed) in &maps {
+        sweep_inputs(map.as_ref(), "dense", &dense_inputs, cfg, &mut ws, &mut rows);
+        if *compressed {
+            sweep_inputs(map.as_ref(), "tt", &tt_inputs, cfg, &mut ws, &mut rows);
+            sweep_inputs(map.as_ref(), "cp", &cp_inputs, cfg, &mut ws, &mut rows);
         }
     }
     rows
@@ -127,6 +164,7 @@ pub fn run(cfg: &BatchSweepConfig) -> Vec<BatchRow> {
 pub fn to_csv(rows: &[BatchRow]) -> CsvTable {
     let mut t = CsvTable::new(&[
         "map",
+        "input",
         "batch",
         "item_us_per_input",
         "batched_us_per_input",
@@ -135,6 +173,7 @@ pub fn to_csv(rows: &[BatchRow]) -> CsvTable {
     for r in rows {
         t.push_row(vec![
             r.map.clone(),
+            r.input.clone(),
             r.batch.to_string(),
             format!("{:.3}", r.item_us),
             format!("{:.3}", r.batched_us),
@@ -142,6 +181,74 @@ pub fn to_csv(rows: &[BatchRow]) -> CsvTable {
         ]);
     }
     t
+}
+
+/// Machine-readable trajectory document (`BENCH_batch_sweep.json`): one
+/// series per `(map, input format)` with batched/item throughput and
+/// speedup over `B`. Shared by the bench binary and `trp experiment
+/// batch` so both emit the same schema.
+pub fn to_json(cfg: &BatchSweepConfig, rows: &[BatchRow]) -> Json {
+    let mut keys: Vec<(String, String)> = Vec::new();
+    for r in rows {
+        let key = (r.map.clone(), r.input.clone());
+        if keys.last() != Some(&key) {
+            keys.push(key);
+        }
+    }
+    let series: Vec<Json> = keys
+        .iter()
+        .map(|(name, input)| {
+            let per: Vec<_> = rows
+                .iter()
+                .filter(|r| &r.map == name && &r.input == input)
+                .collect();
+            obj(vec![
+                ("map", Json::Str(name.clone())),
+                ("input", Json::Str(input.clone())),
+                (
+                    "batch_sizes",
+                    Json::Arr(per.iter().map(|r| Json::Num(r.batch as f64)).collect()),
+                ),
+                (
+                    "batched_throughput_per_s",
+                    num_arr(
+                        &per.iter()
+                            .map(|r| 1e6 / r.batched_us.max(1e-12))
+                            .collect::<Vec<f64>>(),
+                    ),
+                ),
+                (
+                    "item_throughput_per_s",
+                    num_arr(
+                        &per.iter()
+                            .map(|r| 1e6 / r.item_us.max(1e-12))
+                            .collect::<Vec<f64>>(),
+                    ),
+                ),
+                ("speedup", num_arr(&per.iter().map(|r| r.speedup).collect::<Vec<f64>>())),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("bench", Json::Str("batch_sweep".into())),
+        ("dims", Json::Arr(cfg.dims.iter().map(|&d| Json::Num(d as f64)).collect())),
+        ("k", Json::Num(cfg.k as f64)),
+        ("input_rank", Json::Num(cfg.input_rank as f64)),
+        ("series", Json::Arr(series)),
+    ])
+}
+
+/// Print the acceptance tripwire verdicts (report, don't panic: machine
+/// load varies): batched TT-map throughput ≥ 2× item-at-a-time at B = 16
+/// on dense **and** TT-format inputs.
+pub fn print_verdict(rows: &[BatchRow]) {
+    for r in rows.iter().filter(|r| r.map.starts_with("TT(") && r.batch == 16) {
+        let verdict = if r.speedup >= 2.0 { "PASS" } else { "MISS" };
+        println!(
+            "[batch_sweep] TT {} B=16 batched speedup: {:.2}x ({verdict}, target ≥ 2x)",
+            r.input, r.speedup
+        );
+    }
 }
 
 #[cfg(test)]
@@ -152,6 +259,7 @@ mod tests {
         BatchSweepConfig {
             dims: vec![3, 4],
             k: 4,
+            input_rank: 2,
             batch_sizes: vec![1, 3],
             bench: BenchConfig { warmup: 0, samples: 1, min_time_secs: 0.0 },
             seed: 9,
@@ -159,17 +267,38 @@ mod tests {
     }
 
     #[test]
-    fn sweep_covers_all_maps_and_batches() {
+    fn sweep_covers_all_maps_formats_and_batches() {
         let rows = run(&tiny());
-        assert_eq!(rows.len(), 6 * 2);
+        // 6 maps × dense + 3 tensorized maps × {tt, cp}, × 2 batch sizes.
+        assert_eq!(rows.len(), (6 + 3 * 2) * 2);
         for r in &rows {
             assert!(r.item_us > 0.0 && r.batched_us > 0.0 && r.speedup.is_finite());
         }
+        let mut tt_curves = 0;
+        for r in &rows {
+            if r.map.starts_with("TT(") && r.input == "tt" {
+                tt_curves += 1;
+            }
+        }
+        assert_eq!(tt_curves, 2, "TT-input curve must exist for the TT map");
     }
 
     #[test]
     fn csv_has_one_row_per_measurement() {
         let rows = run(&tiny());
         assert_eq!(to_csv(&rows).len(), rows.len());
+    }
+
+    #[test]
+    fn json_has_one_series_per_map_input_pair() {
+        let cfg = tiny();
+        let rows = run(&cfg);
+        let doc = to_json(&cfg, &rows);
+        let series = doc.get("series").and_then(Json::as_arr).expect("series array");
+        assert_eq!(series.len(), 6 + 3 * 2);
+        for s in series {
+            let b = s.get("batch_sizes").and_then(Json::as_arr).expect("batch sizes");
+            assert_eq!(b.len(), cfg.batch_sizes.len());
+        }
     }
 }

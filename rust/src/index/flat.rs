@@ -198,6 +198,12 @@ impl AnnIndex for FlatIndex {
         // hash shape and no seed (`persist::IndexSnapshot` layout docs).
         (BackendKind::Flat, LshConfig { tables: 0, bits: 0, probes: 0 }, 0)
     }
+
+    fn restore_counters(&mut self, inserts: u64, deletes: u64, queries: u64) {
+        self.inserts = inserts;
+        self.deletes = deletes;
+        self.queries = queries;
+    }
 }
 
 #[cfg(test)]

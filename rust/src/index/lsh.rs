@@ -267,6 +267,13 @@ impl AnnIndex for LshIndex {
     fn persist_spec(&self) -> (BackendKind, LshConfig, u64) {
         (BackendKind::Lsh, self.cfg, self.seed)
     }
+
+    fn restore_counters(&mut self, inserts: u64, deletes: u64, queries: u64) {
+        // The flat substrate's query counter tracks internal re-scoring
+        // only and is shadowed by `self.queries` in `stats`, so it resets.
+        self.flat.restore_counters(inserts, deletes, 0);
+        self.queries = queries;
+    }
 }
 
 #[cfg(test)]

@@ -146,6 +146,15 @@ pub trait AnnIndex: Send {
     /// so a restore re-derives the LSH buckets instead of serializing
     /// them (the flat backend reports an all-zero LSH shape and seed).
     fn persist_spec(&self) -> (BackendKind, LshConfig, u64);
+
+    /// Overwrite the lifetime stats counters. Snapshot restore calls this
+    /// after re-inserting the captured items, so the rebuild's own insert
+    /// increments are replaced by the captured totals instead of counters
+    /// silently resetting to the corpus size. Default: no-op (an index
+    /// without counters has nothing to restore).
+    fn restore_counters(&mut self, inserts: u64, deletes: u64, queries: u64) {
+        let _ = (inserts, deletes, queries);
+    }
 }
 
 /// Construct a boxed index of the requested backend.

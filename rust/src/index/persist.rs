@@ -16,16 +16,21 @@
 //!
 //! ```text
 //! magic  b"TRPSNAP\0"                       8 bytes
-//! version u32                               currently 1
+//! version u32                               currently 2
 //! key_len u32, key bytes                    opaque signature encoding
 //! backend u8                                0 = flat, 1 = lsh
 //! tables u64, bits u64, probes u64          LSH shape (zeros for flat)
 //! seed u64                                  LSH hyperplane seed
 //! dim u64                                   embedding dimension k
+//! inserts u64, deletes u64, queries u64     lifetime stats counters (v2+)
 //! count u64                                 live item count
 //! count × (id u64, dim × f64)               items in capture order
 //! checksum u64                              FNV-1a over all prior bytes
 //! ```
+//!
+//! Version 1 files (no counter block) still decode — their counters read
+//! as `(live count, 0, 0)`, exactly the totals a v1-era restore rebuild
+//! produced.
 //!
 //! Files are written atomically (temp file + rename), so a crash mid-
 //! snapshot leaves the previous snapshot intact rather than a torn file.
@@ -35,8 +40,10 @@ use std::path::Path;
 
 /// File magic: identifies a TRP index snapshot.
 const MAGIC: &[u8; 8] = b"TRPSNAP\0";
-/// Current format version.
-const VERSION: u32 = 1;
+/// Current format version (2 added the stats-counter block).
+const VERSION: u32 = 2;
+/// Oldest version this build still decodes.
+const MIN_VERSION: u32 = 1;
 
 /// Where a snapshot was written and what it covered (returned inside
 /// `snapshot` responses and by the registry API).
@@ -63,6 +70,12 @@ pub struct IndexSnapshot {
     pub seed: u64,
     /// Embedding dimension.
     pub dim: usize,
+    /// Lifetime insert counter at capture time.
+    pub inserts: u64,
+    /// Lifetime effective-delete counter at capture time.
+    pub deletes: u64,
+    /// Lifetime query counter at capture time.
+    pub queries: u64,
     /// Live `id → vector` pairs in capture order.
     pub items: Vec<(u64, Vec<f64>)>,
 }
@@ -74,13 +87,26 @@ impl IndexSnapshot {
     /// signature's FIFO sequencer turn).
     pub fn capture(key_bytes: Vec<u8>, index: &dyn AnnIndex) -> Self {
         let (backend, lsh, seed) = index.persist_spec();
+        let stats = index.stats();
         let mut items = Vec::with_capacity(index.len());
         index.for_each_live(&mut |id, v| items.push((id, v.to_vec())));
-        Self { key_bytes, backend, lsh, seed, dim: index.dim(), items }
+        Self {
+            key_bytes,
+            backend,
+            lsh,
+            seed,
+            dim: index.dim(),
+            inserts: stats.inserts,
+            deletes: stats.deletes,
+            queries: stats.queries,
+            items,
+        }
     }
 
-    /// Rebuild the index: construct the stored backend empty and re-insert
-    /// every item in capture order. Queries against the result are
+    /// Rebuild the index: construct the stored backend empty, re-insert
+    /// every item in capture order, then restore the captured stats
+    /// counters (re-insertion's own increments are an artifact of the
+    /// rebuild, not served traffic). Queries against the result are
     /// bit-identical to the captured index (distances are per-slot
     /// arithmetic and the top-k order is total, so slot renumbering from
     /// tombstone compaction cannot change any result).
@@ -89,6 +115,7 @@ impl IndexSnapshot {
         for (id, v) in &self.items {
             index.insert(*id, v);
         }
+        index.restore_counters(self.inserts, self.deletes, self.queries);
         index
     }
 
@@ -109,6 +136,9 @@ impl IndexSnapshot {
         out.extend_from_slice(&(self.lsh.probes as u64).to_le_bytes());
         out.extend_from_slice(&self.seed.to_le_bytes());
         out.extend_from_slice(&(self.dim as u64).to_le_bytes());
+        out.extend_from_slice(&self.inserts.to_le_bytes());
+        out.extend_from_slice(&self.deletes.to_le_bytes());
+        out.extend_from_slice(&self.queries.to_le_bytes());
         out.extend_from_slice(&(self.items.len() as u64).to_le_bytes());
         for (id, v) in &self.items {
             out.extend_from_slice(&id.to_le_bytes());
@@ -137,8 +167,10 @@ impl IndexSnapshot {
             return Err("not a TRP index snapshot (bad magic)".into());
         }
         let version = cur.u32()?;
-        if version != VERSION {
-            return Err(format!("unsupported snapshot version {version} (expected {VERSION})"));
+        if !(MIN_VERSION..=VERSION).contains(&version) {
+            return Err(format!(
+                "unsupported snapshot version {version} (expected {MIN_VERSION}..={VERSION})"
+            ));
         }
         let key_len = cur.u32()? as usize;
         let key_bytes = cur.take(key_len)?.to_vec();
@@ -166,6 +198,13 @@ impl IndexSnapshot {
                 lsh.tables, lsh.bits
             ));
         }
+        // v1 files predate the counter block; resolved after `count` is
+        // known (a v1-era rebuild counted one insert per live item).
+        let counters = if version >= 2 {
+            Some((cur.u64()?, cur.u64()?, cur.u64()?))
+        } else {
+            None
+        };
         let count = cur.u64()? as usize;
         let mut items = Vec::with_capacity(count.min(1 << 20));
         for _ in 0..count {
@@ -179,7 +218,11 @@ impl IndexSnapshot {
         if cur.pos != body.len() {
             return Err("snapshot has trailing bytes".into());
         }
-        Ok(Self { key_bytes, backend, lsh, seed, dim, items })
+        // v1 restores left the counters at the rebuild's own re-insert
+        // totals (`restore_counters` didn't exist); reproduce that rather
+        // than inventing an impossible inserts=0-with-items state.
+        let (inserts, deletes, queries) = counters.unwrap_or((items.len() as u64, 0, 0));
+        Ok(Self { key_bytes, backend, lsh, seed, dim, inserts, deletes, queries, items })
     }
 
     /// Write atomically and durably: encode to `<path>.tmp`, fsync it,
@@ -354,10 +397,72 @@ mod tests {
         assert!(IndexSnapshot::decode(&bytes).unwrap_err().contains("magic"));
         // Future version (re-checksummed likewise).
         let mut bytes = snap.encode();
-        bytes[8..12].copy_from_slice(&2u32.to_le_bytes());
+        bytes[8..12].copy_from_slice(&99u32.to_le_bytes());
         let sum = fnv1a(&bytes[..n - 8]).to_le_bytes();
         bytes[n - 8..].copy_from_slice(&sum);
         assert!(IndexSnapshot::decode(&bytes).unwrap_err().contains("version"));
+    }
+
+    #[test]
+    fn stats_counters_survive_capture_and_rebuild() {
+        let mut rng = Rng::seed_from(9);
+        let mut idx = FlatIndex::new(4);
+        for i in 0..10u64 {
+            idx.insert(i, &rng.gaussian_vec(4, 1.0));
+        }
+        idx.remove(3);
+        let mut ws = Workspace::new();
+        idx.query(&[0.0; 4], 2, &mut ws);
+        idx.query(&[1.0, 0.0, 0.0, 0.0], 2, &mut ws);
+        let snap = IndexSnapshot::capture(Vec::new(), &idx);
+        assert_eq!((snap.inserts, snap.deletes, snap.queries), (10, 1, 2));
+        let back = IndexSnapshot::decode(&snap.encode()).unwrap();
+        assert_eq!((back.inserts, back.deletes, back.queries), (10, 1, 2));
+        // Rebuild: counters equal the captured totals, not the rebuild's
+        // own 9 re-inserts.
+        let rebuilt = back.build();
+        let s = rebuilt.stats();
+        assert_eq!(s.inserts, 10, "restore must not reset the insert counter");
+        assert_eq!(s.deletes, 1);
+        assert_eq!(s.queries, 2);
+        assert_eq!(s.len, 9);
+    }
+
+    #[test]
+    fn lsh_counters_survive_rebuild() {
+        let mut rng = Rng::seed_from(10);
+        let cfg = LshConfig { tables: 3, bits: 5, probes: 2 };
+        let mut idx = LshIndex::new(5, cfg, 11);
+        for i in 0..7u64 {
+            idx.insert(i, &rng.gaussian_vec(5, 1.0));
+        }
+        let mut ws = Workspace::new();
+        idx.query(&rng.gaussian_vec(5, 1.0), 3, &mut ws);
+        let rebuilt = IndexSnapshot::capture(Vec::new(), &idx).build();
+        let s = rebuilt.stats();
+        assert_eq!((s.inserts, s.deletes, s.queries), (7, 0, 1));
+    }
+
+    #[test]
+    fn version_1_files_decode_with_rebuild_era_counters() {
+        // Splice the 24-byte counter block out of a v2 file and patch the
+        // version down — the layout that v1 writers produced.
+        let snap = IndexSnapshot::capture(vec![1, 2, 3], &sample_flat());
+        let v2 = snap.encode();
+        let ctr_off = 8 + 4 + 4 + snap.key_bytes.len() + 1 + 24 + 8 + 8;
+        let mut v1: Vec<u8> = Vec::new();
+        v1.extend_from_slice(&v2[..ctr_off]);
+        v1.extend_from_slice(&v2[ctr_off + 24..v2.len() - 8]);
+        v1[8..12].copy_from_slice(&1u32.to_le_bytes());
+        let sum = fnv1a(&v1).to_le_bytes();
+        v1.extend_from_slice(&sum);
+        let back = IndexSnapshot::decode(&v1).unwrap();
+        // A v1-era restore counted one insert per re-inserted live item;
+        // decoding must reproduce that, not an inserts=0-with-items state.
+        let live = snap.items.len() as u64;
+        assert_eq!((back.inserts, back.deletes, back.queries), (live, 0, 0));
+        assert_eq!(back.build().stats().inserts, live);
+        assert_eq!(back.items, snap.items, "items are unaffected by the version");
     }
 
     #[test]

@@ -110,11 +110,17 @@ fn cmd_serve(args: &Args, cfg: &AppConfig) -> Result<(), String> {
     if snapshot_every > 0 && snapshot_dir.is_none() {
         return Err("--snapshot-every requires --snapshot-dir".into());
     }
+    // Rotation depth: keep the last N snapshot files per signature.
+    let snapshot_keep: usize = args.get_parsed_or("snapshot-keep", 2usize)?;
+    if snapshot_keep == 0 {
+        return Err("--snapshot-keep must be ≥ 1".into());
+    }
     let coord = Coordinator::start(
         CoordinatorConfig {
             master_seed: cfg.seed,
             snapshot_dir,
             snapshot_every_ops: snapshot_every,
+            snapshot_keep,
             ..Default::default()
         },
         engine,
@@ -383,6 +389,14 @@ fn cmd_experiment(args: &Args, cfg: &AppConfig) -> Result<(), String> {
             let path = cfg.results_dir.join("batch_sweep.csv");
             csv.write_to(&path).map_err(|e| e.to_string())?;
             println!("[written {}]", path.display());
+            // Machine-readable trajectory tracked across PRs (same schema
+            // as `cargo bench --bench batch_sweep`), now with TT-input
+            // and CP-input series next to the dense ones.
+            let bench_path = args.get_or("bench-out", "BENCH_batch_sweep.json");
+            std::fs::write(&bench_path, batch::to_json(&c, &rows).to_string_pretty())
+                .map_err(|e| e.to_string())?;
+            println!("[written {bench_path}]");
+            batch::print_verdict(&rows);
         }
         "ann" => {
             let mut c = if cfg.quick {

@@ -8,21 +8,28 @@
 //! `3^{N-1}` factor that the rank `R` cannot mitigate, so this map needs
 //! `k` exponential in `N` — implemented here both as a first-class map and
 //! as the foil for the TT map in every experiment.
+//!
+//! The `k` rows are resident **once**, as the transposed `[R, dₙ]` factor
+//! layout every execution path consumes; the raw factor matrices are
+//! derived on demand by [`CpProjection::rows`] for the cold paths.
 
 use super::{Projection, Workspace};
+use crate::linalg::Matrix;
 use crate::rng::Rng;
-use crate::tensor::{AnyTensor, CpTensor, DenseTensor, TtTensor};
+use crate::tensor::{
+    AnyTensor, CpBatchContraction, CpTensor, DenseTensor, TtBatchContraction, TtTensor,
+};
 
 /// CP random projection map.
 pub struct CpProjection {
     dims: Vec<usize>,
     rank: usize,
     k: usize,
-    /// The `k` random CP rows.
-    rows: Vec<CpTensor>,
     /// Per row, per mode: the factor transposed to `[R, dₙ]` row-major so
     /// each rank component's column is a contiguous slice — precomputed
-    /// once at construction, consumed by the dense contraction kernel.
+    /// once at construction, consumed by the dense contraction kernel,
+    /// the Gram kernels and the right-to-left compressed chains. The
+    /// rows' only resident copy.
     rows_t: Vec<Vec<Vec<f64>>>,
     scale: f64,
 }
@@ -39,11 +46,13 @@ impl CpProjection {
     }
 
     /// Assemble a map from pre-built rows (internal; used by the TRP
-    /// equivalence construction via [`CpProjection::from_rows`]).
+    /// equivalence construction via [`CpProjection::from_rows`]). The raw
+    /// factors are transposed into the resident layout and dropped.
     pub(crate) fn from_parts(dims: Vec<usize>, rank: usize, k: usize, rows: Vec<CpTensor>) -> Self {
         let rows_t = rows
             .iter()
             .map(|row| {
+                assert_eq!(row.rank(), rank, "row rank mismatch");
                 (0..dims.len())
                     .map(|m| {
                         let f = row.factor(m);
@@ -63,7 +72,6 @@ impl CpProjection {
             dims,
             rank,
             k,
-            rows,
             rows_t,
             scale: 1.0 / (k as f64).sqrt(),
         }
@@ -74,9 +82,38 @@ impl CpProjection {
         self.rank
     }
 
-    /// The random CP rows.
-    pub fn rows(&self) -> &[CpTensor] {
-        &self.rows
+    /// The random CP rows in raw factor layout, derived on demand from
+    /// the resident transposed factors (cold path: AOT packing and JSON
+    /// serialization; bit-exact round-trip).
+    pub fn rows(&self) -> Vec<CpTensor> {
+        self.rows_t
+            .iter()
+            .map(|row| {
+                let factors = row
+                    .iter()
+                    .zip(&self.dims)
+                    .map(|(t, &d)| {
+                        let mut f = Matrix::zeros(d, self.rank);
+                        for r in 0..self.rank {
+                            for i in 0..d {
+                                f[(i, r)] = t[r * d + i];
+                            }
+                        }
+                        f
+                    })
+                    .collect();
+                CpTensor::from_factors(factors)
+            })
+            .collect()
+    }
+
+    /// Stored parameter count — one transposed copy of every factor (the
+    /// seed stored every row twice: raw + transposed).
+    pub fn resident_params(&self) -> usize {
+        self.rows_t
+            .iter()
+            .map(|row| row.iter().map(Vec::len).sum::<usize>())
+            .sum()
     }
 
     /// Inner products of one CP row with `bsz` dense tensors stacked
@@ -133,6 +170,28 @@ impl CpProjection {
             }
         }
     }
+
+    /// Dense kernel over an explicit target list (the mixed-batch dense
+    /// shape-group): identical arithmetic to the uniform path, scattered
+    /// writes.
+    fn dense_group_into(
+        &self,
+        stacked: &[f64],
+        targets: &[usize],
+        out: &mut [f64],
+        tmp: &mut Vec<f64>,
+        cur: &mut Vec<f64>,
+    ) {
+        let k = self.k;
+        tmp.clear();
+        tmp.resize(targets.len(), 0.0);
+        for (i, ft) in self.rows_t.iter().enumerate() {
+            Self::row_dense_stacked(ft, self.rank, &self.dims, stacked, targets.len(), tmp, cur);
+            for (&target, &v) in targets.iter().zip(tmp.iter()) {
+                out[target * k + i] = v * self.scale;
+            }
+        }
+    }
 }
 
 impl Projection for CpProjection {
@@ -149,7 +208,7 @@ impl Projection for CpProjection {
     }
 
     fn num_params(&self) -> usize {
-        self.rows.iter().map(|r| r.num_params()).sum()
+        self.resident_params()
     }
 
     fn project_dense(&self, x: &DenseTensor) -> Vec<f64> {
@@ -171,43 +230,91 @@ impl Projection for CpProjection {
         if xs.is_empty() {
             return;
         }
-        if !super::stack_dense_batch(xs, &self.dims, &mut ws.stack) {
-            super::fallback_batch_into(self, xs, out);
+        if super::stack_dense_batch(xs, &self.dims, &mut ws.stack) {
+            let b = xs.len();
+            ws.tmp.clear();
+            ws.tmp.resize(b, 0.0);
+            for (i, ft) in self.rows_t.iter().enumerate() {
+                Self::row_dense_stacked(
+                    ft,
+                    self.rank,
+                    &self.dims,
+                    &ws.stack,
+                    b,
+                    &mut ws.tmp,
+                    &mut ws.chain_a,
+                );
+                for (bi, &v) in ws.tmp.iter().enumerate() {
+                    out[bi * k + i] = v * self.scale;
+                }
+            }
             return;
         }
-        let b = xs.len();
-        ws.tmp.clear();
-        ws.tmp.resize(b, 0.0);
-        for (i, ft) in self.rows_t.iter().enumerate() {
-            Self::row_dense_stacked(
-                ft,
+        // Compressed/mixed batch: blocked kernels per shape-group.
+        let groups = super::partition_by_shape(xs, &self.dims);
+        if !groups.dense.is_empty() {
+            super::stack_dense_group(xs, &groups.dense, &mut ws.stack);
+            // Split-borrow the workspace fields the helper needs.
+            let (stack, tmp, cur) = (&ws.stack, &mut ws.tmp, &mut ws.chain_a);
+            self.dense_group_into(stack, &groups.dense, out, tmp, cur);
+        }
+        for group in &groups.tt {
+            let items = super::tt_group_items(xs, group);
+            let ctx = TtBatchContraction::for_compressed_rows(&items);
+            ws.tmp.clear();
+            ws.tmp.resize(group.len() * k, 0.0);
+            ctx.inner_cp_rows_into(
+                &self.rows_t,
                 self.rank,
-                &self.dims,
-                &ws.stack,
-                b,
                 &mut ws.tmp,
-                &mut ws.chain_a,
+                &mut ws.panel_a,
+                &mut ws.panel_b,
             );
-            for (bi, &v) in ws.tmp.iter().enumerate() {
-                out[bi * k + i] = v * self.scale;
-            }
+            super::scatter_scaled(&ws.tmp, group, k, self.scale, out);
+        }
+        for group in &groups.cp {
+            let items = super::cp_group_items(xs, group);
+            let ctx = CpBatchContraction::new(&items);
+            ws.tmp.clear();
+            ws.tmp.resize(group.len() * k, 0.0);
+            ctx.gram_cp_rows_into(
+                &self.rows_t,
+                self.rank,
+                &mut ws.tmp,
+                &mut ws.panel_a,
+                &mut ws.panel_b,
+            );
+            super::scatter_scaled(&ws.tmp, group, k, self.scale, out);
+        }
+        for &i in &groups.stragglers {
+            out[i * k..(i + 1) * k].copy_from_slice(&self.project(&xs[i]));
         }
     }
 
     fn project_tt(&self, x: &TtTensor) -> Vec<f64> {
         assert_eq!(x.dims(), self.input_dims(), "input shape mismatch");
-        self.rows
-            .iter()
-            .map(|row| row.inner_tt(x) * self.scale)
-            .collect()
+        // Group of one through the blocked kernel the batched path uses —
+        // batched outputs are bit-identical by construction.
+        let ctx = TtBatchContraction::for_compressed_rows(&[x]);
+        let mut out = vec![0.0; self.k];
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        ctx.inner_cp_rows_into(&self.rows_t, self.rank, &mut out, &mut pa, &mut pb);
+        for v in &mut out {
+            *v *= self.scale;
+        }
+        out
     }
 
     fn project_cp(&self, x: &CpTensor) -> Vec<f64> {
         assert_eq!(x.dims(), self.input_dims(), "input shape mismatch");
-        self.rows
-            .iter()
-            .map(|row| row.inner(x) * self.scale)
-            .collect()
+        let ctx = CpBatchContraction::new(&[x]);
+        let mut out = vec![0.0; self.k];
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        ctx.gram_cp_rows_into(&self.rows_t, self.rank, &mut out, &mut pa, &mut pb);
+        for v in &mut out {
+            *v *= self.scale;
+        }
+        out
     }
 }
 
@@ -259,6 +366,21 @@ mod tests {
         let (d, n, r, k) = (5usize, 6usize, 4usize, 3usize);
         let f = CpProjection::new(&vec![d; n], r, k, &mut rng);
         assert_eq!(f.num_params(), k * n * d * r);
+    }
+
+    #[test]
+    fn parameters_are_resident_once() {
+        // Memory dedup: only the transposed factor layout is resident;
+        // the raw rows derive on demand and round-trip bit-exactly.
+        let mut rng = Rng::seed_from(9);
+        let dims = [3usize, 4, 2];
+        let f = CpProjection::new(&dims, 3, 5, &mut rng);
+        assert_eq!(f.resident_params(), f.num_params());
+        let rows = f.rows();
+        assert_eq!(rows.len(), 5);
+        let g = CpProjection::from_rows(dims.to_vec(), 3, 5, rows);
+        let x = CpTensor::random_unit(&dims, 2, &mut rng);
+        assert_eq!(f.project_cp(&x), g.project_cp(&x), "derived rows must round-trip");
     }
 
     #[test]

@@ -19,6 +19,14 @@
 //! and temporaries of the item-at-a-time path disappear from serving hot
 //! loops. Every map's cores/factors are pre-transposed **once at map
 //! construction** into the layouts its contraction kernels consume.
+//!
+//! Batching is not dense-only: a flushed batch of **TT or CP format**
+//! inputs — the exact workload the paper optimizes for — is partitioned
+//! into shape-groups ([`partition_by_shape`]: dense / per TT rank vector /
+//! per CP rank) and each group runs through the blocked compressed-input
+//! kernels of `tensor::batch`, one GEMM sequence per group instead of one
+//! full contraction chain per item. Items whose dims mismatch the map
+//! take the per-item path unchanged.
 
 mod cp;
 mod fjlt;
@@ -58,6 +66,12 @@ pub struct Workspace {
     pub(crate) chain_b: Vec<f64>,
     /// Per-row batched results (`B`).
     pub(crate) tmp: Vec<f64>,
+    /// Compressed-batch boundary/state panel (tensor::batch kernels).
+    pub(crate) panel_a: Vec<f64>,
+    /// Compressed-batch GEMM operand panel.
+    pub(crate) panel_b: Vec<f64>,
+    /// Compressed-batch regroup/staging panel.
+    pub(crate) panel_c: Vec<f64>,
 }
 
 impl Workspace {
@@ -88,6 +102,116 @@ pub(crate) fn fallback_batch_into<P: Projection + ?Sized>(
 pub(crate) fn dense_batch_uniform(xs: &[AnyTensor], dims: &[usize]) -> bool {
     xs.iter()
         .all(|x| matches!(x, AnyTensor::Dense(t) if t.dims() == dims))
+}
+
+/// A mixed batch partitioned into the shape-groups the batched kernels
+/// consume: one group of all dense items, one group per distinct TT rank
+/// vector, one group per distinct CP rank. Groups hold item indices into
+/// the original batch in arrival order, so scattered writes land each
+/// item's output at its own `out` row.
+pub(crate) struct ShapeGroups {
+    /// Dense items (uniform by the map-dims check).
+    pub dense: Vec<usize>,
+    /// TT items, one group per distinct rank vector.
+    pub tt: Vec<Vec<usize>>,
+    /// CP items, one group per distinct rank.
+    pub cp: Vec<Vec<usize>>,
+    /// Items whose dims mismatch the map's: they take the per-item path,
+    /// which surfaces the same shape-mismatch panic as before.
+    pub stragglers: Vec<usize>,
+}
+
+/// Partition a batch by `(format, shape)` for the compressed-input batch
+/// kernels. The single source of truth for the shape-grouping rules
+/// (documented in the README's performance section).
+pub(crate) fn partition_by_shape(xs: &[AnyTensor], dims: &[usize]) -> ShapeGroups {
+    let mut groups = ShapeGroups {
+        dense: Vec::new(),
+        tt: Vec::new(),
+        cp: Vec::new(),
+        stragglers: Vec::new(),
+    };
+    let mut tt_keys: Vec<Vec<usize>> = Vec::new();
+    let mut cp_keys: Vec<usize> = Vec::new();
+    for (i, x) in xs.iter().enumerate() {
+        if x.dims() != dims {
+            groups.stragglers.push(i);
+            continue;
+        }
+        match x {
+            AnyTensor::Dense(_) => groups.dense.push(i),
+            AnyTensor::Tt(t) => {
+                match tt_keys.iter().position(|k| k.as_slice() == t.ranks()) {
+                    Some(g) => groups.tt[g].push(i),
+                    None => {
+                        tt_keys.push(t.ranks().to_vec());
+                        groups.tt.push(vec![i]);
+                    }
+                }
+            }
+            AnyTensor::Cp(t) => match cp_keys.iter().position(|&r| r == t.rank()) {
+                Some(g) => groups.cp[g].push(i),
+                None => {
+                    cp_keys.push(t.rank());
+                    groups.cp.push(vec![i]);
+                }
+            },
+        }
+    }
+    groups
+}
+
+/// Collect the TT items of one shape-group (indices from
+/// [`partition_by_shape`], so the format is guaranteed).
+pub(crate) fn tt_group_items<'a>(xs: &'a [AnyTensor], group: &[usize]) -> Vec<&'a TtTensor> {
+    group
+        .iter()
+        .map(|&i| match &xs[i] {
+            AnyTensor::Tt(t) => t,
+            _ => unreachable!("TT shape-group holds a non-TT item"),
+        })
+        .collect()
+}
+
+/// Collect the CP items of one shape-group.
+pub(crate) fn cp_group_items<'a>(xs: &'a [AnyTensor], group: &[usize]) -> Vec<&'a CpTensor> {
+    group
+        .iter()
+        .map(|&i| match &xs[i] {
+            AnyTensor::Cp(t) => t,
+            _ => unreachable!("CP shape-group holds a non-CP item"),
+        })
+        .collect()
+}
+
+/// Scatter a group-local `[group.len(), k]` kernel result into the global
+/// batch buffer, applying the map's scale per element — the same final
+/// multiply the per-item paths perform, so scattered outputs stay
+/// bit-identical to per-item dispatch.
+pub(crate) fn scatter_scaled(
+    vals: &[f64],
+    group: &[usize],
+    k: usize,
+    scale: f64,
+    out: &mut [f64],
+) {
+    for (gi, &target) in group.iter().enumerate() {
+        let src = &vals[gi * k..(gi + 1) * k];
+        for (dst, &v) in out[target * k..(target + 1) * k].iter_mut().zip(src) {
+            *dst = v * scale;
+        }
+    }
+}
+
+/// Stack the dense items named by `group` (indices from
+/// [`partition_by_shape`], format guaranteed) row-major into `stack`.
+pub(crate) fn stack_dense_group(xs: &[AnyTensor], group: &[usize], stack: &mut Vec<f64>) {
+    stack.clear();
+    for &i in group {
+        if let AnyTensor::Dense(t) = &xs[i] {
+            stack.extend_from_slice(t.data());
+        }
+    }
 }
 
 /// Stack a batch of dense tensors of shape `dims` row-major into `stack`

@@ -15,15 +15,22 @@
 use super::{CpProjection, Projection, Workspace};
 use crate::linalg::{matmul_into, Matrix};
 use crate::rng::{GaussianSource, Rng};
-use crate::tensor::{AnyTensor, CpTensor, DenseTensor};
+use crate::tensor::{
+    AnyTensor, CpBatchContraction, CpTensor, DenseTensor, TtBatchContraction, TtTensor,
+};
 
 /// Khatri-Rao tensor random projection (variance-reduced with `T` terms).
 pub struct TrpProjection {
     dims: Vec<usize>,
     k: usize,
     t: usize,
-    /// `factors[t][n]` is `Aⁿ` of the `t`-th independent TRP: `dₙ × k`.
+    /// `factors[t][n]` is `Aⁿ` of the `t`-th independent TRP: `dₙ × k`
+    /// (the layout the dense GEMM kernels consume).
     factors: Vec<Vec<Matrix>>,
+    /// `factors_t[t][n]` is `Aⁿ` transposed to `[k, dₙ]` row-major — the
+    /// layout the compressed-input kernels consume, pre-transposed once
+    /// at construction like every other map's parameters.
+    factors_t: Vec<Vec<Vec<f64>>>,
     scale: f64,
 }
 
@@ -31,10 +38,28 @@ impl TrpProjection {
     /// Draw a fresh `f_TRP(T)`; `t = 1` gives the plain TRP.
     pub fn new(dims: &[usize], t: usize, k: usize, rng: &mut Rng) -> Self {
         assert!(t >= 1 && k >= 1);
-        let factors = (0..t)
+        let factors: Vec<Vec<Matrix>> = (0..t)
             .map(|_| {
                 dims.iter()
                     .map(|&d| Matrix::from_vec(d, k, rng.gaussian_vec(d * k, 1.0)))
+                    .collect()
+            })
+            .collect();
+        let factors_t = factors
+            .iter()
+            .map(|term| {
+                term.iter()
+                    .map(|a| {
+                        let (d, kk) = (a.rows(), a.cols());
+                        let ad = a.data();
+                        let mut ft = vec![0.0; kk * d];
+                        for i in 0..d {
+                            for col in 0..kk {
+                                ft[col * d + i] = ad[i * kk + col];
+                            }
+                        }
+                        ft
+                    })
                     .collect()
             })
             .collect();
@@ -43,6 +68,7 @@ impl TrpProjection {
             k,
             t,
             factors,
+            factors_t,
             // 1/√k from the JLT scaling, 1/√T from the averaging.
             scale: 1.0 / ((k * t) as f64).sqrt(),
         }
@@ -193,13 +219,78 @@ impl Projection for TrpProjection {
         if xs.is_empty() {
             return;
         }
-        if !super::stack_dense_batch(xs, &self.dims, &mut ws.stack) {
-            super::fallback_batch_into(self, xs, out);
+        if super::stack_dense_batch(xs, &self.dims, &mut ws.stack) {
+            // `dense_stacked` already emits the required [B, k] layout.
+            let b = xs.len();
+            self.dense_stacked(&ws.stack, b, out, &mut ws.chain_a, &mut ws.chain_b);
             return;
         }
-        // `dense_stacked` already emits the required [B, k] layout.
-        let b = xs.len();
-        self.dense_stacked(&ws.stack, b, out, &mut ws.chain_a, &mut ws.chain_b);
+        // Compressed/mixed batch: blocked kernels per shape-group — each
+        // averaged Khatri-Rao term is a rank-1 chain, stacked T·k wide.
+        let groups = super::partition_by_shape(xs, &self.dims);
+        if !groups.dense.is_empty() {
+            super::stack_dense_group(xs, &groups.dense, &mut ws.stack);
+            ws.tmp.clear();
+            ws.tmp.resize(groups.dense.len() * k, 0.0);
+            self.dense_stacked(
+                &ws.stack,
+                groups.dense.len(),
+                &mut ws.tmp,
+                &mut ws.chain_a,
+                &mut ws.chain_b,
+            );
+            // `dense_stacked` already applied the scale; scatter verbatim.
+            for (gi, &target) in groups.dense.iter().enumerate() {
+                out[target * k..(target + 1) * k].copy_from_slice(&ws.tmp[gi * k..(gi + 1) * k]);
+            }
+        }
+        for group in &groups.tt {
+            let items = super::tt_group_items(xs, group);
+            let ctx = TtBatchContraction::for_compressed_rows(&items);
+            ws.tmp.clear();
+            ws.tmp.resize(group.len() * k, 0.0);
+            ctx.inner_trp_into(&self.factors_t, k, &mut ws.tmp, &mut ws.panel_a, &mut ws.panel_b);
+            super::scatter_scaled(&ws.tmp, group, k, self.scale, out);
+        }
+        for group in &groups.cp {
+            let items = super::cp_group_items(xs, group);
+            let ctx = CpBatchContraction::new(&items);
+            ws.tmp.clear();
+            ws.tmp.resize(group.len() * k, 0.0);
+            ctx.gram_trp_into(&self.factors_t, k, &mut ws.tmp, &mut ws.panel_a, &mut ws.panel_b);
+            super::scatter_scaled(&ws.tmp, group, k, self.scale, out);
+        }
+        for &i in &groups.stragglers {
+            out[i * k..(i + 1) * k].copy_from_slice(&self.project(&xs[i]));
+        }
+    }
+
+    fn project_tt(&self, x: &TtTensor) -> Vec<f64> {
+        assert_eq!(x.dims(), self.input_dims(), "input shape mismatch");
+        // Compressed-format fast path (the seed densified here, which both
+        // lost the paper's cost advantage and refused high-order inputs):
+        // a group of one through the blocked kernel the batched path uses,
+        // so batched outputs are bit-identical by construction.
+        let ctx = TtBatchContraction::for_compressed_rows(&[x]);
+        let mut out = vec![0.0; self.k];
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        ctx.inner_trp_into(&self.factors_t, self.k, &mut out, &mut pa, &mut pb);
+        for v in &mut out {
+            *v *= self.scale;
+        }
+        out
+    }
+
+    fn project_cp(&self, x: &CpTensor) -> Vec<f64> {
+        assert_eq!(x.dims(), self.input_dims(), "input shape mismatch");
+        let ctx = CpBatchContraction::new(&[x]);
+        let mut out = vec![0.0; self.k];
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        ctx.gram_trp_into(&self.factors_t, self.k, &mut out, &mut pa, &mut pb);
+        for v in &mut out {
+            *v *= self.scale;
+        }
+        out
     }
 }
 
@@ -247,6 +338,42 @@ mod tests {
         let cp = trp.as_cp_projection();
         assert_eq!(cp.rank(), 1);
         assert_eq!(cp.name(), "CP(R=1)");
+    }
+
+    #[test]
+    fn compressed_inputs_match_dense_reference() {
+        // The TRP's own TT/CP fast paths (the seed densified here) must
+        // agree with the dense computation.
+        let mut rng = Rng::seed_from(6);
+        let dims = [3usize, 3, 2];
+        for t in [1usize, 2] {
+            let trp = TrpProjection::new(&dims, t, 5, &mut rng);
+            let x_tt = TtTensor::random_unit(&dims, 2, &mut rng);
+            let y = trp.project_tt(&x_tt);
+            let want = trp.project_dense(&x_tt.to_dense());
+            for (a, b) in y.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-9, "T={t}: tt={a} dense={b}");
+            }
+            let x_cp = CpTensor::random_unit(&dims, 3, &mut rng);
+            let y = trp.project_cp(&x_cp);
+            let want = trp.project_dense(&x_cp.to_dense());
+            for (a, b) in y.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-9, "T={t}: cp={a} dense={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn compressed_inputs_work_on_high_order_without_densifying() {
+        // d=3, N=25 — the seed's densifying fallback would refuse this.
+        let mut rng = Rng::seed_from(7);
+        let dims = vec![3usize; 25];
+        let trp = TrpProjection::new(&dims, 2, 4, &mut rng);
+        let y = trp.project_tt(&TtTensor::random_unit(&dims, 3, &mut rng));
+        assert_eq!(y.len(), 4);
+        assert!(y.iter().all(|v| v.is_finite()));
+        let y = trp.project_cp(&CpTensor::random_unit(&dims, 2, &mut rng));
+        assert!(y.iter().all(|v| v.is_finite()));
     }
 
     #[test]

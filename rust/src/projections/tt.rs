@@ -4,21 +4,28 @@
 //! Component `i` of the map is `(1/√k)·⟨⟨⟨G¹ᵢ,…,G^Nᵢ⟩⟩, X⟩` with Gaussian
 //! cores (`Var = 1/√R` boundary, `1/R` interior). Storage `O(kNdR²)`;
 //! projection cost `O(kNd·max(R,R̃)³)` for rank-`R̃` TT or CP inputs.
+//!
+//! The `k` rows are resident **once**, as the pre-transposed
+//! [`TtDenseContraction`] contexts every execution path (dense and
+//! compressed, single and batched) consumes; the raw-core view is derived
+//! on demand by [`TtProjection::rows`] for the cold paths (AOT packing,
+//! serialization), mirroring `gaussian::matrix()`.
 
 use super::{Projection, Workspace};
 use crate::rng::Rng;
-use crate::tensor::{CpTensor, DenseTensor, TtDenseContraction, TtTensor};
+use crate::tensor::{
+    AnyTensor, CpBatchContraction, CpTensor, DenseTensor, TtBatchContraction, TtDenseContraction,
+    TtTensor,
+};
 
 /// Tensor-train random projection map.
 pub struct TtProjection {
     dims: Vec<usize>,
     rank: usize,
     k: usize,
-    /// The `k` random TT rows.
-    rows: Vec<TtTensor>,
-    /// Per-row dense-contraction contexts: every row's cores transposed
-    /// once at construction into the GEMM layout, so the dense projection
-    /// hot loop (single *and* batched) performs no per-call transpose.
+    /// Per-row contraction contexts: every row's cores transposed once at
+    /// construction into the GEMM layout shared by the dense chain and
+    /// the compressed-input batch kernels — the rows' only resident copy.
     row_ctxs: Vec<TtDenseContraction>,
     scale: f64,
 }
@@ -35,14 +42,14 @@ impl TtProjection {
     }
 
     /// Assemble a map from pre-built rows (deserialization path; see
-    /// [`TtProjection::from_rows`]).
+    /// [`TtProjection::from_rows`]). The raw rows are transposed into the
+    /// resident contraction layout and dropped.
     pub(crate) fn from_parts(dims: Vec<usize>, rank: usize, k: usize, rows: Vec<TtTensor>) -> Self {
         let row_ctxs = rows.iter().map(TtDenseContraction::new).collect();
         Self {
             dims,
             rank,
             k,
-            rows,
             row_ctxs,
             scale: 1.0 / (k as f64).sqrt(),
         }
@@ -53,32 +60,45 @@ impl TtProjection {
         self.rank
     }
 
-    /// The random TT rows (used by the AOT runtime to feed the compiled
-    /// artifact the same parameters the native engine uses).
-    pub fn rows(&self) -> &[TtTensor] {
-        &self.rows
+    /// The random TT rows in raw-core layout, derived on demand from the
+    /// resident transposed contexts (cold path: AOT packing and JSON
+    /// serialization; bit-exact round-trip).
+    pub fn rows(&self) -> Vec<TtTensor> {
+        self.row_ctxs.iter().map(|c| c.to_tt()).collect()
+    }
+
+    /// Stored parameter count — one transposed copy of every core. The
+    /// memory-dedup regression test pins this to [`Projection::num_params`]
+    /// (the seed stored every row twice: raw + transposed).
+    pub fn resident_params(&self) -> usize {
+        self.row_ctxs.iter().map(|c| c.num_elems()).sum()
     }
 
     /// Parallel TT-input projection: shard the `k` rows across `threads`
-    /// workers (each with its own contraction scratch). Bit-identical to
-    /// [`Projection::project_tt`]; used by the experiment sweeps when a
-    /// single very large projection dominates (e.g. k ≥ 1000).
+    /// workers (each with its own panel scratch). Bit-identical to
+    /// [`Projection::project_tt`] — the batch kernel's stacked GEMMs
+    /// compute each row's chain independently, so row-subsets reproduce
+    /// the full map's values exactly. Used by the experiment sweeps when
+    /// a single very large projection dominates (e.g. k ≥ 1000).
     pub fn project_tt_parallel(&self, x: &TtTensor, threads: usize) -> Vec<f64> {
         assert_eq!(x.dims(), self.input_dims(), "input shape mismatch");
         if threads <= 1 || self.k < 2 * threads {
             return self.project_tt(x);
         }
+        let ctx = TtBatchContraction::for_tt_map(&[x]);
         let chunk = self.k.div_ceil(threads);
-        let chunks: Vec<&[TtTensor]> = self.rows.chunks(chunk).collect();
+        let chunks: Vec<&[TtDenseContraction]> = self.row_ctxs.chunks(chunk).collect();
         let parts = crate::util::threadpool::par_map(chunks, threads, |rows| {
-            let ctx = crate::tensor::TtContraction::new(x);
-            rows.iter()
-                .map(|row| ctx.inner(row) * self.scale)
-                .collect::<Vec<f64>>()
+            let mut out = vec![0.0; rows.len()];
+            let (mut pa, mut pb, mut pc) = (Vec::new(), Vec::new(), Vec::new());
+            ctx.inner_tt_rows_into(rows, &mut out, &mut pa, &mut pb, &mut pc);
+            for v in &mut out {
+                *v *= self.scale;
+            }
+            out
         });
         parts.into_iter().flatten().collect()
     }
-
 }
 
 impl Projection for TtProjection {
@@ -95,7 +115,7 @@ impl Projection for TtProjection {
     }
 
     fn num_params(&self) -> usize {
-        self.rows.iter().map(|r| r.num_params()).sum()
+        self.resident_params()
     }
 
     fn project_dense(&self, x: &DenseTensor) -> Vec<f64> {
@@ -113,55 +133,99 @@ impl Projection for TtProjection {
             .collect()
     }
 
-    fn project_batch_into(
-        &self,
-        xs: &[crate::tensor::AnyTensor],
-        out: &mut [f64],
-        ws: &mut Workspace,
-    ) {
+    fn project_batch_into(&self, xs: &[AnyTensor], out: &mut [f64], ws: &mut Workspace) {
         let k = self.k;
         assert_eq!(out.len(), xs.len() * k, "batch output buffer size");
         if xs.is_empty() {
             return;
         }
-        if !super::stack_dense_batch(xs, &self.dims, &mut ws.stack) {
-            // Compressed/mixed formats: per-item dispatch (bit-identical
-            // by definition; the TT/CP fast paths already amortize the
-            // per-input contraction context across the k rows).
-            super::fallback_batch_into(self, xs, out);
+        if super::stack_dense_batch(xs, &self.dims, &mut ws.stack) {
+            // Uniform dense batch: fold all B inputs into the leading GEMM
+            // dimension of each row's absorption chain — one chain of
+            // B×-taller GEMMs per row instead of B separate chains.
+            let b = xs.len();
+            ws.tmp.clear();
+            ws.tmp.resize(b, 0.0);
+            for (i, ctx) in self.row_ctxs.iter().enumerate() {
+                ctx.inner_stacked_into(&ws.stack, b, &mut ws.tmp, &mut ws.chain_a, &mut ws.chain_b);
+                for (bi, &v) in ws.tmp.iter().enumerate() {
+                    out[bi * k + i] = v * self.scale;
+                }
+            }
             return;
         }
-        // Dense batch: fold all B inputs into the leading GEMM dimension
-        // of each row's absorption chain — one chain of B×-taller GEMMs
-        // per row instead of B separate chains.
-        let b = xs.len();
-        ws.tmp.clear();
-        ws.tmp.resize(b, 0.0);
-        for (i, ctx) in self.row_ctxs.iter().enumerate() {
-            ctx.inner_stacked_into(&ws.stack, b, &mut ws.tmp, &mut ws.chain_a, &mut ws.chain_b);
-            for (bi, &v) in ws.tmp.iter().enumerate() {
-                out[bi * k + i] = v * self.scale;
+        // Compressed/mixed batch: one blocked kernel per shape-group —
+        // the per-item contraction chains fold into k + B GEMMs per mode
+        // (TT groups) or one stacked GEMM per row per mode (CP groups).
+        let groups = super::partition_by_shape(xs, &self.dims);
+        if !groups.dense.is_empty() {
+            super::stack_dense_group(xs, &groups.dense, &mut ws.stack);
+            ws.tmp.clear();
+            ws.tmp.resize(groups.dense.len(), 0.0);
+            for (i, ctx) in self.row_ctxs.iter().enumerate() {
+                ctx.inner_stacked_into(
+                    &ws.stack,
+                    groups.dense.len(),
+                    &mut ws.tmp,
+                    &mut ws.chain_a,
+                    &mut ws.chain_b,
+                );
+                for (&target, &v) in groups.dense.iter().zip(ws.tmp.iter()) {
+                    out[target * k + i] = v * self.scale;
+                }
             }
+        }
+        for group in &groups.tt {
+            let items = super::tt_group_items(xs, group);
+            let ctx = TtBatchContraction::for_tt_map(&items);
+            ws.tmp.clear();
+            ws.tmp.resize(group.len() * k, 0.0);
+            ctx.inner_tt_rows_into(
+                &self.row_ctxs,
+                &mut ws.tmp,
+                &mut ws.panel_a,
+                &mut ws.panel_b,
+                &mut ws.panel_c,
+            );
+            super::scatter_scaled(&ws.tmp, group, k, self.scale, out);
+        }
+        for group in &groups.cp {
+            let items = super::cp_group_items(xs, group);
+            let ctx = CpBatchContraction::new(&items);
+            ws.tmp.clear();
+            ws.tmp.resize(group.len() * k, 0.0);
+            ctx.inner_tt_rows_into(&self.row_ctxs, &mut ws.tmp, &mut ws.panel_a, &mut ws.panel_b);
+            super::scatter_scaled(&ws.tmp, group, k, self.scale, out);
+        }
+        for &i in &groups.stragglers {
+            out[i * k..(i + 1) * k].copy_from_slice(&self.project(&xs[i]));
         }
     }
 
     fn project_tt(&self, x: &TtTensor) -> Vec<f64> {
         assert_eq!(x.dims(), self.input_dims(), "input shape mismatch");
-        // Amortize the x-side core permutation across all k rows and run
-        // the per-row chain allocation-free (see TtContraction).
-        let ctx = crate::tensor::TtContraction::new(x);
-        self.rows
-            .iter()
-            .map(|row| ctx.inner(row) * self.scale)
-            .collect()
+        // Group of one through the same blocked kernel the batched path
+        // uses — batched outputs are bit-identical by construction.
+        let ctx = TtBatchContraction::for_tt_map(&[x]);
+        let mut out = vec![0.0; self.k];
+        let (mut pa, mut pb, mut pc) = (Vec::new(), Vec::new(), Vec::new());
+        ctx.inner_tt_rows_into(&self.row_ctxs, &mut out, &mut pa, &mut pb, &mut pc);
+        for v in &mut out {
+            *v *= self.scale;
+        }
+        out
     }
 
     fn project_cp(&self, x: &CpTensor) -> Vec<f64> {
         assert_eq!(x.dims(), self.input_dims(), "input shape mismatch");
-        self.rows
-            .iter()
-            .map(|row| x.inner_tt(row) * self.scale)
-            .collect()
+        let ctx = CpBatchContraction::new(&[x]);
+        let mut out = vec![0.0; self.k];
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        ctx.inner_tt_rows_into(&self.row_ctxs, &mut out, &mut pa, &mut pb);
+        for v in &mut out {
+            *v *= self.scale;
+        }
+        out
     }
 }
 
@@ -241,6 +305,23 @@ mod tests {
         let (d, n, r, k) = (5usize, 6usize, 3usize, 7usize);
         let f = TtProjection::new(&vec![d; n], r, k, &mut rng);
         assert_eq!(f.num_params(), k * ((n - 2) * d * r * r + 2 * d * r));
+    }
+
+    #[test]
+    fn parameters_are_resident_once() {
+        // Memory dedup: the seed stored every row twice (raw cores for the
+        // compressed paths + transposed contexts for the dense GEMMs); now
+        // only the transposed layout is resident and the raw view derives
+        // on demand, bit-exactly.
+        let mut rng = Rng::seed_from(8);
+        let dims = [3usize, 4, 3];
+        let f = TtProjection::new(&dims, 3, 6, &mut rng);
+        assert_eq!(f.resident_params(), f.num_params());
+        let rows = f.rows();
+        assert_eq!(rows.len(), 6);
+        let g = TtProjection::from_rows(dims.to_vec(), 3, 6, rows);
+        let x = TtTensor::random_unit(&dims, 2, &mut rng);
+        assert_eq!(f.project_tt(&x), g.project_tt(&x), "derived rows must round-trip");
     }
 
     #[test]

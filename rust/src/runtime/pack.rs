@@ -36,11 +36,14 @@ pub fn pack_tt_projection(
     d: usize,
     r: usize,
 ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
-    let k = f.rows().len();
+    // Cold path: the raw-core rows are derived on demand from the map's
+    // resident transposed layout (once per artifact registration).
+    let rows = f.rows();
+    let k = rows.len();
     let mut g_first = Vec::with_capacity(k * d * r);
     let mut g_mid = Vec::with_capacity(k * (n - 2) * r * d * r);
     let mut g_last = Vec::with_capacity(k * r * d);
-    for row in f.rows() {
+    for row in &rows {
         check_tt_uniform(row, n, d, r, "projection row")?;
         push_tt_cores(row, n, &mut g_first, &mut g_mid, &mut g_last);
     }
@@ -93,8 +96,9 @@ fn push_tt_cores(
 
 /// Pack the rows of a [`CpProjection`] into `a [k,N,d,R]`.
 pub fn pack_cp_projection(f: &CpProjection, n: usize, d: usize, r: usize) -> Result<Vec<f32>> {
-    let mut a = Vec::with_capacity(f.rows().len() * n * d * r);
-    for row in f.rows() {
+    let rows = f.rows();
+    let mut a = Vec::with_capacity(rows.len() * n * d * r);
+    for row in &rows {
         if row.dims() != vec![d; n].as_slice() || row.rank() != r {
             bail!(
                 "projection row: dims {:?} rank {} != ([{d};{n}], {r})",

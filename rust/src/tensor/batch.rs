@@ -1,0 +1,849 @@
+//! Batched compressed-input contraction kernels.
+//!
+//! The paper's efficiency claim is that tensorized maps apply cheaply to
+//! inputs *given in TT or CP format* — and a serving flush delivers many
+//! such inputs at once. These contexts group a flush's same-shape,
+//! same-rank compressed inputs, stack their cores / factor columns into
+//! contiguous panels **once**, and run every mode of the contraction
+//! chain as blocked GEMMs over the whole group: one GEMM sequence per
+//! shape-group instead of one full chain per `(row, item)` pair.
+//!
+//! Bit-equivalence contract (property-tested in
+//! `rust/tests/projection_batch_props.rs`): every kernel folds the batch
+//! into either the leading rows or the trailing columns of GEMMs whose
+//! output entries are computed independently with ascending-index
+//! accumulation (`linalg::matmul_acc`), so a group of `B` items produces
+//! outputs bit-identical to `B` single-item (`B = 1`) calls, and any
+//! row-subset of the map produces the same values as the full map
+//! (which is what lets `project_tt_parallel` shard rows).
+//!
+//! * [`TtBatchContraction`] — a group of TT inputs, contracted against a
+//!   TT map's rows ([`TtBatchContraction::inner_tt_rows_into`]), a CP
+//!   map's rows ([`TtBatchContraction::inner_cp_rows_into`]), or a TRP's
+//!   Khatri-Rao factors ([`TtBatchContraction::inner_trp_into`]).
+//! * [`CpBatchContraction`] — the CP-input analogue with the same three
+//!   map-side entry points.
+
+use super::tt::TtDenseContraction;
+use super::{CpTensor, TtTensor};
+use crate::linalg::matmul_into;
+
+/// A group of same-shape, same-rank TT inputs with their cores permuted
+/// once into the two layouts the blocked kernels consume.
+pub struct TtBatchContraction {
+    dims: Vec<usize>,
+    /// Shared input rank vector (length `N + 1`).
+    ranks: Vec<usize>,
+    /// Group size `B`.
+    b: usize,
+    /// Per mode: `B` blocks of the core permuted to `[(d·rₘ), rₘ₊₁]`
+    /// row-major (`xperm[m][bi·sz + (i·rₘ + a)·rₘ₊₁ + a2] = X[a, i, a2]`)
+    /// — the right operand of the TT-map chain's absorb-input GEMM.
+    xperm: Vec<Vec<f64>>,
+    /// Per mode: `B` blocks of the core transposed to `[(d·rₘ₊₁), rₘ]`
+    /// row-major (`cores_t[m][bi·sz + (i·rₘ₊₁ + ar)·rₘ + a] = X[a, i, ar]`)
+    /// — the right operand of the CP/TRP right-to-left chain GEMM.
+    cores_t: Vec<Vec<f64>>,
+}
+
+impl TtBatchContraction {
+    /// Build the group context with **both** panel layouts (convenience
+    /// for callers driving more than one kernel family). Panics unless
+    /// every item shares one `(dims, ranks)` shape — the caller
+    /// partitions mixed batches into shape-groups first
+    /// (`projections::partition_by_shape`).
+    pub fn new(items: &[&TtTensor]) -> Self {
+        Self::with_layouts(items, true, true)
+    }
+
+    /// Panels for a TT map's chain only (`inner_tt_rows_into` reads
+    /// `xperm`; the `cores_t` staging is skipped).
+    pub fn for_tt_map(items: &[&TtTensor]) -> Self {
+        Self::with_layouts(items, true, false)
+    }
+
+    /// Panels for CP/TRP right-to-left chains only
+    /// (`inner_cp_rows_into`/`inner_trp_into` read `cores_t`; the
+    /// `xperm` staging is skipped).
+    pub fn for_compressed_rows(items: &[&TtTensor]) -> Self {
+        Self::with_layouts(items, false, true)
+    }
+
+    fn with_layouts(items: &[&TtTensor], want_xperm: bool, want_cores_t: bool) -> Self {
+        assert!(!items.is_empty(), "empty TT batch group");
+        let dims = items[0].dims().to_vec();
+        let ranks = items[0].ranks().to_vec();
+        for x in items {
+            assert_eq!(x.dims(), &dims[..], "TT group dims mismatch");
+            assert_eq!(x.ranks(), &ranks[..], "TT group ranks mismatch");
+        }
+        let b = items.len();
+        let n = dims.len();
+        let mut xperm = Vec::with_capacity(n);
+        let mut cores_t = Vec::with_capacity(n);
+        for m in 0..n {
+            let rl = ranks[m];
+            let d = dims[m];
+            let rr = ranks[m + 1];
+            let sz = rl * d * rr;
+            // Unwanted layouts stay empty per mode (a kernel touching one
+            // panics loudly on the slice bound rather than reading junk).
+            let mut xp = if want_xperm { vec![0.0; b * sz] } else { Vec::new() };
+            let mut ct = if want_cores_t { vec![0.0; b * sz] } else { Vec::new() };
+            for (bi, x) in items.iter().enumerate() {
+                let core = x.core(m);
+                let (xp_base, ct_base) = (bi * sz, bi * sz);
+                for a in 0..rl {
+                    for i in 0..d {
+                        let src = &core[(a * d + i) * rr..(a * d + i + 1) * rr];
+                        if want_xperm {
+                            let dst = xp_base + (i * rl + a) * rr;
+                            xp[dst..dst + rr].copy_from_slice(src);
+                        }
+                        if want_cores_t {
+                            for (ar, &v) in src.iter().enumerate() {
+                                ct[ct_base + (i * rr + ar) * rl + a] = v;
+                            }
+                        }
+                    }
+                }
+            }
+            xperm.push(xp);
+            cores_t.push(ct);
+        }
+        Self { dims, ranks, b, xperm, cores_t }
+    }
+
+    /// Group size `B`.
+    pub fn batch(&self) -> usize {
+        self.b
+    }
+
+    /// Mode sizes of the group.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Shared rank vector of the group.
+    pub fn ranks(&self) -> &[usize] {
+        &self.ranks
+    }
+
+    fn xperm_item(&self, m: usize, bi: usize) -> &[f64] {
+        let sz = self.ranks[m] * self.dims[m] * self.ranks[m + 1];
+        &self.xperm[m][bi * sz..(bi + 1) * sz]
+    }
+
+    fn core_t_item(&self, m: usize, bi: usize) -> &[f64] {
+        let sz = self.ranks[m] * self.dims[m] * self.ranks[m + 1];
+        &self.cores_t[m][bi * sz..(bi + 1) * sz]
+    }
+
+    /// Contract the group against the rows of a **TT map** (given as the
+    /// rows' pre-transposed [`TtDenseContraction`] contexts), writing raw
+    /// inner products `out[bi·rows.len() + r] = ⟨rowᵣ, x_bᵢ⟩`.
+    ///
+    /// Per mode: one absorb-row GEMM per map row over all `B` boundary
+    /// matrices at once, then one absorb-input GEMM per item over all map
+    /// rows at once — `k + B` GEMMs per mode instead of `k·B` hand-rolled
+    /// chains. `pa`/`pb`/`pc` are caller-held panel scratch
+    /// (`projections::Workspace::panel_*`).
+    pub fn inner_tt_rows_into(
+        &self,
+        rows: &[TtDenseContraction],
+        out: &mut [f64],
+        pa: &mut Vec<f64>,
+        pb: &mut Vec<f64>,
+        pc: &mut Vec<f64>,
+    ) {
+        let n = self.dims.len();
+        let b = self.b;
+        let kr = rows.len();
+        assert!(out.len() >= b * kr, "output buffer size");
+        if kr == 0 {
+            return;
+        }
+        for row in rows {
+            assert_eq!(row.dims(), &self.dims[..], "map row shape mismatch");
+        }
+        // Boundary panels: per row r a row-major [raᵣ, B·rb] block,
+        // blocks concatenated in row order. At mode boundary 0 every
+        // rank is 1: one 1×B block of ones per row.
+        pa.clear();
+        pa.resize(kr * b, 1.0);
+        for m in 0..n {
+            let d = self.dims[m];
+            let rb = self.ranks[m];
+            let rb2 = self.ranks[m + 1];
+            // Absorb the row core: Tᵣ[(i·ra2 + a2), (bi·rb + bv)] =
+            //   Σₐ rowᵣ[a, i, a2] · Mᵣ[a, (bi·rb + bv)] — one GEMM per row
+            // with the whole group folded into the columns.
+            let total_t: usize = rows.iter().map(|r| d * r.ranks()[m + 1] * b * rb).sum();
+            pb.clear();
+            pb.resize(total_t, 0.0);
+            let mut mo = 0usize;
+            let mut to = 0usize;
+            for row in rows {
+                let ra = row.ranks()[m];
+                let ra2 = row.ranks()[m + 1];
+                let msz = ra * b * rb;
+                let tsz = d * ra2 * b * rb;
+                matmul_into(
+                    row.core_t(m),
+                    &pa[mo..mo + msz],
+                    &mut pb[to..to + tsz],
+                    d * ra2,
+                    ra,
+                    b * rb,
+                );
+                mo += msz;
+                to += tsz;
+            }
+            // Regroup per item: t2_bᵢ[(roffᵣ + a2), (i·rb + bv)], stacking
+            // every map row's block vertically (k2 = Σᵣ ra2ᵣ rows).
+            let k2: usize = rows.iter().map(|r| r.ranks()[m + 1]).sum();
+            pc.clear();
+            pc.resize(b * k2 * d * rb, 0.0);
+            let mut to = 0usize;
+            let mut roff = 0usize;
+            for row in rows {
+                let ra2 = row.ranks()[m + 1];
+                for i in 0..d {
+                    for a2 in 0..ra2 {
+                        let src_base = to + (i * ra2 + a2) * (b * rb);
+                        for bi in 0..b {
+                            let src = &pb[src_base + bi * rb..src_base + (bi + 1) * rb];
+                            let dst = bi * (k2 * d * rb) + (roff + a2) * (d * rb) + i * rb;
+                            pc[dst..dst + rb].copy_from_slice(src);
+                        }
+                    }
+                }
+                to += d * ra2 * b * rb;
+                roff += ra2;
+            }
+            // Absorb the input core: one GEMM per item over the stacked
+            // rows: N_bᵢ = t2_bᵢ · xperm_bᵢ ((k2 × d·rb) × (d·rb × rb2)).
+            pb.clear();
+            pb.resize(b * k2 * rb2, 0.0);
+            for bi in 0..b {
+                matmul_into(
+                    &pc[bi * k2 * d * rb..(bi + 1) * k2 * d * rb],
+                    self.xperm_item(m, bi),
+                    &mut pb[bi * k2 * rb2..(bi + 1) * k2 * rb2],
+                    k2,
+                    d * rb,
+                    rb2,
+                );
+            }
+            // Regroup back into per-row boundary panels for mode m + 1.
+            pa.clear();
+            pa.resize(k2 * b * rb2, 0.0);
+            let mut m2 = 0usize;
+            let mut roff = 0usize;
+            for row in rows {
+                let ra2 = row.ranks()[m + 1];
+                for a2 in 0..ra2 {
+                    for bi in 0..b {
+                        let src = bi * (k2 * rb2) + (roff + a2) * rb2;
+                        let dst = m2 + a2 * (b * rb2) + bi * rb2;
+                        pa[dst..dst + rb2].copy_from_slice(&pb[src..src + rb2]);
+                    }
+                }
+                m2 += ra2 * b * rb2;
+                roff += ra2;
+            }
+        }
+        // Every rank is 1 again: pa[r·b + bi] is ⟨rowᵣ, x_bᵢ⟩.
+        for r in 0..kr {
+            for bi in 0..b {
+                out[bi * kr + r] = pa[r * b + bi];
+            }
+        }
+    }
+
+    /// Contract the group against the rows of a **CP map**, given as the
+    /// map's pre-transposed factors (`rows_t[r][m]` is `[rank, dₘ]`
+    /// row-major), all rows sharing `rank`. Writes raw inner products
+    /// `out[bi·rows_t.len() + r]`.
+    ///
+    /// The chain runs right-to-left per `(row, component)` pair with all
+    /// `k·rank` pairs stacked into the leading GEMM rows: per mode, one
+    /// GEMM per item against that item's transposed core.
+    pub fn inner_cp_rows_into(
+        &self,
+        rows_t: &[Vec<Vec<f64>>],
+        rank: usize,
+        out: &mut [f64],
+        pa: &mut Vec<f64>,
+        pb: &mut Vec<f64>,
+    ) {
+        let n = self.dims.len();
+        let b = self.b;
+        let kr = rows_t.len();
+        assert!(out.len() >= b * kr, "output buffer size");
+        if kr == 0 {
+            return;
+        }
+        let kp = kr * rank;
+        // State V per item: [(kr·rank), rₘ] blocks, item-major.
+        pa.clear();
+        pa.resize(b * kp, 1.0);
+        for m in (0..n).rev() {
+            let d = self.dims[m];
+            let rl = self.ranks[m];
+            let rr = self.ranks[m + 1];
+            // U[(row·rank + ρ), (i·rr + ar)] = fᵣ[ρ, i] · V[(row·rank + ρ), ar].
+            pb.clear();
+            pb.resize(b * kp * d * rr, 0.0);
+            for bi in 0..b {
+                let v_base = bi * kp * rr;
+                let u_base = bi * kp * d * rr;
+                for (ri, row) in rows_t.iter().enumerate() {
+                    let ft = &row[m];
+                    debug_assert_eq!(ft.len(), rank * d);
+                    for p in 0..rank {
+                        let vrow = &pa[v_base + (ri * rank + p) * rr..][..rr];
+                        let urow = &mut pb[u_base + (ri * rank + p) * d * rr..][..d * rr];
+                        for i in 0..d {
+                            let f = ft[p * d + i];
+                            for (u, &v) in urow[i * rr..(i + 1) * rr].iter_mut().zip(vrow) {
+                                *u = f * v;
+                            }
+                        }
+                    }
+                }
+            }
+            // V' = U · core_t (one GEMM per item over all kp chains).
+            pa.clear();
+            pa.resize(b * kp * rl, 0.0);
+            for bi in 0..b {
+                matmul_into(
+                    &pb[bi * kp * d * rr..(bi + 1) * kp * d * rr],
+                    self.core_t_item(m, bi),
+                    &mut pa[bi * kp * rl..(bi + 1) * kp * rl],
+                    kp,
+                    d * rr,
+                    rl,
+                );
+            }
+        }
+        // Left boundary rank 1: sum the rank components per (item, row).
+        for bi in 0..b {
+            for ri in 0..kr {
+                let mut acc = 0.0;
+                for p in 0..rank {
+                    acc += pa[bi * kp + ri * rank + p];
+                }
+                out[bi * kr + ri] = acc;
+            }
+        }
+    }
+
+    /// Contract the group against a **TRP** (Khatri-Rao) map:
+    /// `factors_t[t][m]` is the `t`-th averaged term's factor transposed
+    /// to `[k, dₘ]` row-major (the map's pre-transposed compressed-kernel
+    /// layout). Writes the raw per-component sums over terms,
+    /// `out[bi·k + col] = Σₜ ⟨⊗ₘ Aᵐₜ[:, col], x_bᵢ⟩` (unscaled).
+    pub fn inner_trp_into(
+        &self,
+        factors_t: &[Vec<Vec<f64>>],
+        k: usize,
+        out: &mut [f64],
+        pa: &mut Vec<f64>,
+        pb: &mut Vec<f64>,
+    ) {
+        let n = self.dims.len();
+        let b = self.b;
+        let t_terms = factors_t.len();
+        assert!(out.len() >= b * k, "output buffer size");
+        if t_terms == 0 || k == 0 {
+            for v in out[..b * k].iter_mut() {
+                *v = 0.0;
+            }
+            return;
+        }
+        let kp = t_terms * k;
+        pa.clear();
+        pa.resize(b * kp, 1.0);
+        for m in (0..n).rev() {
+            let d = self.dims[m];
+            let rl = self.ranks[m];
+            let rr = self.ranks[m + 1];
+            pb.clear();
+            pb.resize(b * kp * d * rr, 0.0);
+            for bi in 0..b {
+                let v_base = bi * kp * rr;
+                let u_base = bi * kp * d * rr;
+                for (t, term) in factors_t.iter().enumerate() {
+                    let ft = &term[m];
+                    debug_assert_eq!(ft.len(), k * d);
+                    for col in 0..k {
+                        let chain = t * k + col;
+                        let vrow = &pa[v_base + chain * rr..][..rr];
+                        let urow = &mut pb[u_base + chain * d * rr..][..d * rr];
+                        for i in 0..d {
+                            let f = ft[col * d + i];
+                            for (u, &v) in urow[i * rr..(i + 1) * rr].iter_mut().zip(vrow) {
+                                *u = f * v;
+                            }
+                        }
+                    }
+                }
+            }
+            pa.clear();
+            pa.resize(b * kp * rl, 0.0);
+            for bi in 0..b {
+                matmul_into(
+                    &pb[bi * kp * d * rr..(bi + 1) * kp * d * rr],
+                    self.core_t_item(m, bi),
+                    &mut pa[bi * kp * rl..(bi + 1) * kp * rl],
+                    kp,
+                    d * rr,
+                    rl,
+                );
+            }
+        }
+        // Average structure: sum the T independent terms per component,
+        // in ascending term order (the per-item order).
+        for bi in 0..b {
+            for col in 0..k {
+                let mut acc = 0.0;
+                for t in 0..t_terms {
+                    acc += pa[bi * kp + t * k + col];
+                }
+                out[bi * k + col] = acc;
+            }
+        }
+    }
+}
+
+/// A group of same-shape, same-rank CP inputs with their factors stacked
+/// once into the panels the blocked kernels consume.
+pub struct CpBatchContraction {
+    dims: Vec<usize>,
+    /// Shared CP rank of the group's items.
+    rank: usize,
+    /// Group size `B`.
+    b: usize,
+    /// Per mode: `B` blocks of the factor transposed to `[rank, dₘ]`
+    /// (`factors_t[m][bi·sz + ρ·d + i] = F_bᵢ[i, ρ]`).
+    factors_t: Vec<Vec<f64>>,
+    /// Per mode: one stacked `[dₘ, B·rank]` panel
+    /// (`panel[m][i·(B·rank) + bi·rank + ρ] = F_bᵢ[i, ρ]`) — the right
+    /// operand of the Gram GEMMs, covering the whole group at once.
+    panel: Vec<Vec<f64>>,
+}
+
+impl CpBatchContraction {
+    /// Build the group context. Panics unless every item shares one
+    /// `(dims, rank)` shape.
+    pub fn new(items: &[&CpTensor]) -> Self {
+        assert!(!items.is_empty(), "empty CP batch group");
+        let dims = items[0].dims().to_vec();
+        let rank = items[0].rank();
+        for x in items {
+            assert_eq!(x.dims(), &dims[..], "CP group dims mismatch");
+            assert_eq!(x.rank(), rank, "CP group rank mismatch");
+        }
+        let b = items.len();
+        let n = dims.len();
+        let mut factors_t = Vec::with_capacity(n);
+        let mut panel = Vec::with_capacity(n);
+        for m in 0..n {
+            let d = dims[m];
+            let mut ft = vec![0.0; b * rank * d];
+            let mut pn = vec![0.0; d * b * rank];
+            for (bi, x) in items.iter().enumerate() {
+                let f = x.factor(m);
+                for i in 0..d {
+                    for p in 0..rank {
+                        let v = f[(i, p)];
+                        ft[bi * rank * d + p * d + i] = v;
+                        pn[i * (b * rank) + bi * rank + p] = v;
+                    }
+                }
+            }
+            factors_t.push(ft);
+            panel.push(pn);
+        }
+        Self { dims, rank, b, factors_t, panel }
+    }
+
+    /// Group size `B`.
+    pub fn batch(&self) -> usize {
+        self.b
+    }
+
+    /// Mode sizes of the group.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Shared CP rank of the group.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn ft_item(&self, m: usize, bi: usize) -> &[f64] {
+        let sz = self.rank * self.dims[m];
+        &self.factors_t[m][bi * sz..(bi + 1) * sz]
+    }
+
+    /// Contract the group against the rows of a **TT map** (the rows'
+    /// [`TtDenseContraction`] contexts). Writes raw inner products
+    /// `out[bi·rows.len() + r] = ⟨rowᵣ, x_bᵢ⟩`.
+    ///
+    /// Right-to-left chain per `(item, component)` with all `B·rank`
+    /// chains folded into the leading GEMM rows — one GEMM per map row
+    /// per mode for the entire group (the row's transposed core is shared
+    /// across items).
+    pub fn inner_tt_rows_into(
+        &self,
+        rows: &[TtDenseContraction],
+        out: &mut [f64],
+        pa: &mut Vec<f64>,
+        pb: &mut Vec<f64>,
+    ) {
+        let n = self.dims.len();
+        let b = self.b;
+        let rank = self.rank;
+        let kr = rows.len();
+        assert!(out.len() >= b * kr, "output buffer size");
+        for (ri, row) in rows.iter().enumerate() {
+            assert_eq!(row.dims(), &self.dims[..], "map row shape mismatch");
+            let rranks = row.ranks();
+            pa.clear();
+            pa.resize(b * rank, 1.0);
+            for m in (0..n).rev() {
+                let d = self.dims[m];
+                let rl = rranks[m];
+                let rr = rranks[m + 1];
+                // U[(bi·rank + ρ), (i·rr + ar)] = F_bᵢ[i, ρ] · V[(bi·rank + ρ), ar].
+                pb.clear();
+                pb.resize(b * rank * d * rr, 0.0);
+                for bi in 0..b {
+                    let ft = self.ft_item(m, bi);
+                    for p in 0..rank {
+                        let chain = bi * rank + p;
+                        let vrow = &pa[chain * rr..(chain + 1) * rr];
+                        let urow = &mut pb[chain * d * rr..(chain + 1) * d * rr];
+                        for i in 0..d {
+                            let f = ft[p * d + i];
+                            for (u, &v) in urow[i * rr..(i + 1) * rr].iter_mut().zip(vrow) {
+                                *u = f * v;
+                            }
+                        }
+                    }
+                }
+                // V' = U · core_t — one GEMM for the whole group.
+                pa.clear();
+                pa.resize(b * rank * rl, 0.0);
+                matmul_into(pb, row.core_t(m), pa, b * rank, d * rr, rl);
+            }
+            for bi in 0..b {
+                let mut acc = 0.0;
+                for p in 0..rank {
+                    acc += pa[bi * rank + p];
+                }
+                out[bi * kr + ri] = acc;
+            }
+        }
+    }
+
+    /// Contract the group against the rows of a **CP map** via per-mode
+    /// Gram matrices: `⟨rowᵣ, x⟩ = Σ_{ρ,ρ'} Πₘ (AᵣᵐᵀFᵐ)[ρ, ρ']`.
+    /// `rows_t[r][m]` is the row's factor transposed to `[rank_map, dₘ]`.
+    /// Writes raw inner products `out[bi·rows_t.len() + r]`.
+    ///
+    /// One Gram GEMM per row per mode covers the whole group (the group
+    /// panel stacks every item's factor columns side by side).
+    pub fn gram_cp_rows_into(
+        &self,
+        rows_t: &[Vec<Vec<f64>>],
+        rank_map: usize,
+        out: &mut [f64],
+        pa: &mut Vec<f64>,
+        pb: &mut Vec<f64>,
+    ) {
+        let n = self.dims.len();
+        let b = self.b;
+        let rin = self.rank;
+        let kr = rows_t.len();
+        assert!(out.len() >= b * kr, "output buffer size");
+        for (ri, row) in rows_t.iter().enumerate() {
+            // Running Hadamard product of the per-mode Gram matrices,
+            // [rank_map, B·rin].
+            pa.clear();
+            pa.resize(rank_map * b * rin, 1.0);
+            for m in 0..n {
+                let d = self.dims[m];
+                debug_assert_eq!(row[m].len(), rank_map * d);
+                pb.clear();
+                pb.resize(rank_map * b * rin, 0.0);
+                matmul_into(&row[m], &self.panel[m], pb, rank_map, d, b * rin);
+                for (h, &g) in pa.iter_mut().zip(pb.iter()) {
+                    *h *= g;
+                }
+            }
+            for bi in 0..b {
+                let mut acc = 0.0;
+                for p in 0..rank_map {
+                    let base = p * (b * rin) + bi * rin;
+                    for q in 0..rin {
+                        acc += pa[base + q];
+                    }
+                }
+                out[bi * kr + ri] = acc;
+            }
+        }
+    }
+
+    /// Contract the group against a **TRP** map (`factors_t[t][m]` is
+    /// term `t`'s factor pre-transposed to `[k, dₘ]`): each term is a
+    /// rank-1 Gram chain. Writes raw sums over terms, `out[bi·k + col]`
+    /// (unscaled).
+    pub fn gram_trp_into(
+        &self,
+        factors_t: &[Vec<Vec<f64>>],
+        k: usize,
+        out: &mut [f64],
+        pa: &mut Vec<f64>,
+        pb: &mut Vec<f64>,
+    ) {
+        let n = self.dims.len();
+        let b = self.b;
+        let rin = self.rank;
+        assert!(out.len() >= b * k, "output buffer size");
+        for v in out[..b * k].iter_mut() {
+            *v = 0.0;
+        }
+        for term in factors_t {
+            // H[col, (bi·rin + ρ')] = Πₘ (Aᵐ[:, col]ᵀ Fᵐ_bᵢ[:, ρ']).
+            pa.clear();
+            pa.resize(k * b * rin, 1.0);
+            for m in 0..n {
+                let d = self.dims[m];
+                debug_assert_eq!(term[m].len(), k * d);
+                pb.clear();
+                pb.resize(k * b * rin, 0.0);
+                matmul_into(&term[m], &self.panel[m], pb, k, d, b * rin);
+                for (h, &g) in pa.iter_mut().zip(pb.iter()) {
+                    *h *= g;
+                }
+            }
+            for bi in 0..b {
+                for col in 0..k {
+                    let base = col * (b * rin) + bi * rin;
+                    let mut acc = 0.0;
+                    for q in 0..rin {
+                        acc += pa[base + q];
+                    }
+                    out[bi * k + col] += acc;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn tt_rows(dims: &[usize], rank: usize, k: usize, rng: &mut Rng) -> Vec<TtDenseContraction> {
+        (0..k)
+            .map(|_| TtDenseContraction::new(&TtTensor::random_projection_row(dims, rank, rng)))
+            .collect()
+    }
+
+    #[test]
+    fn tt_group_matches_tt_inner_and_is_batch_invariant() {
+        let mut rng = Rng::seed_from(41);
+        let dims = [3usize, 4, 2, 3];
+        let rows_raw: Vec<TtTensor> = (0..5)
+            .map(|_| TtTensor::random_projection_row(&dims, 3, &mut rng))
+            .collect();
+        let rows: Vec<TtDenseContraction> = rows_raw.iter().map(TtDenseContraction::new).collect();
+        for b in [1usize, 3, 8] {
+            let items: Vec<TtTensor> =
+                (0..b).map(|_| TtTensor::random_unit(&dims, 2, &mut rng)).collect();
+            let refs: Vec<&TtTensor> = items.iter().collect();
+            let ctx = TtBatchContraction::new(&refs);
+            let mut out = vec![0.0; b * rows.len()];
+            let (mut pa, mut pb, mut pc) = (Vec::new(), Vec::new(), Vec::new());
+            ctx.inner_tt_rows_into(&rows, &mut out, &mut pa, &mut pb, &mut pc);
+            for (bi, x) in items.iter().enumerate() {
+                for (r, row) in rows_raw.iter().enumerate() {
+                    let want = row.inner(x);
+                    let got = out[bi * rows.len() + r];
+                    assert!(
+                        (got - want).abs() < 1e-9 * want.abs().max(1.0),
+                        "b={b} item {bi} row {r}: got {got} want {want}"
+                    );
+                }
+                // Batch invariance: the group result is bit-identical to a
+                // singleton-group run of the same item.
+                let solo = TtBatchContraction::new(&[x]);
+                let mut one = vec![0.0; rows.len()];
+                solo.inner_tt_rows_into(&rows, &mut one, &mut pa, &mut pb, &mut pc);
+                for r in 0..rows.len() {
+                    assert_eq!(
+                        out[bi * rows.len() + r].to_bits(),
+                        one[r].to_bits(),
+                        "b={b} item {bi} row {r} not bit-identical"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tt_group_row_subsets_are_bit_identical() {
+        // Sharding the map rows (project_tt_parallel) must not change any
+        // value: each row's chain is independent inside the stacked GEMMs.
+        let mut rng = Rng::seed_from(42);
+        let dims = [3usize, 3, 3];
+        let rows = tt_rows(&dims, 4, 6, &mut rng);
+        let x = TtTensor::random_unit(&dims, 3, &mut rng);
+        let ctx = TtBatchContraction::for_tt_map(&[&x]);
+        let (mut pa, mut pb, mut pc) = (Vec::new(), Vec::new(), Vec::new());
+        let mut full = vec![0.0; rows.len()];
+        ctx.inner_tt_rows_into(&rows, &mut full, &mut pa, &mut pb, &mut pc);
+        for chunk in [1usize, 2, 4] {
+            let mut parts = Vec::new();
+            for rows_chunk in rows.chunks(chunk) {
+                let mut out = vec![0.0; rows_chunk.len()];
+                ctx.inner_tt_rows_into(rows_chunk, &mut out, &mut pa, &mut pb, &mut pc);
+                parts.extend(out);
+            }
+            for (a, b) in full.iter().zip(&parts) {
+                assert_eq!(a.to_bits(), b.to_bits(), "chunk={chunk}");
+            }
+        }
+    }
+
+    #[test]
+    fn cp_map_rows_over_tt_group_match_dense() {
+        let mut rng = Rng::seed_from(43);
+        let dims = [3usize, 2, 4];
+        let cp_rows: Vec<CpTensor> = (0..4)
+            .map(|_| CpTensor::random_projection_row(&dims, 3, &mut rng))
+            .collect();
+        let rows_t: Vec<Vec<Vec<f64>>> = cp_rows
+            .iter()
+            .map(|row| {
+                (0..dims.len())
+                    .map(|m| {
+                        let f = row.factor(m);
+                        let d = dims[m];
+                        let mut t = vec![0.0; row.rank() * d];
+                        for p in 0..row.rank() {
+                            for i in 0..d {
+                                t[p * d + i] = f[(i, p)];
+                            }
+                        }
+                        t
+                    })
+                    .collect()
+            })
+            .collect();
+        let items: Vec<TtTensor> =
+            (0..3).map(|_| TtTensor::random_unit(&dims, 2, &mut rng)).collect();
+        let refs: Vec<&TtTensor> = items.iter().collect();
+        let ctx = TtBatchContraction::for_compressed_rows(&refs);
+        let mut out = vec![0.0; items.len() * cp_rows.len()];
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        ctx.inner_cp_rows_into(&rows_t, 3, &mut out, &mut pa, &mut pb);
+        for (bi, x) in items.iter().enumerate() {
+            for (r, row) in cp_rows.iter().enumerate() {
+                let want = row.inner_tt(x);
+                let got = out[bi * cp_rows.len() + r];
+                assert!(
+                    (got - want).abs() < 1e-9 * want.abs().max(1.0),
+                    "item {bi} row {r}: got {got} want {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cp_group_kernels_match_cp_inner() {
+        let mut rng = Rng::seed_from(44);
+        let dims = [3usize, 4, 2];
+        let tt_map = tt_rows(&dims, 2, 3, &mut rng);
+        let tt_raw: Vec<TtTensor> = tt_map.iter().map(|c| c.to_tt()).collect();
+        let items: Vec<CpTensor> =
+            (0..4).map(|_| CpTensor::random_unit(&dims, 3, &mut rng)).collect();
+        let refs: Vec<&CpTensor> = items.iter().collect();
+        let ctx = CpBatchContraction::new(&refs);
+        assert_eq!(ctx.batch(), 4);
+        assert_eq!(ctx.rank(), 3);
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        let mut out = vec![0.0; items.len() * tt_map.len()];
+        ctx.inner_tt_rows_into(&tt_map, &mut out, &mut pa, &mut pb);
+        for (bi, x) in items.iter().enumerate() {
+            for (r, row) in tt_raw.iter().enumerate() {
+                let want = x.inner_tt(row);
+                let got = out[bi * tt_map.len() + r];
+                assert!(
+                    (got - want).abs() < 1e-9 * want.abs().max(1.0),
+                    "item {bi} row {r}: got {got} want {want}"
+                );
+            }
+        }
+        // CP-map Gram kernel against CpTensor::inner.
+        let cp_rows: Vec<CpTensor> = (0..3)
+            .map(|_| CpTensor::random_projection_row(&dims, 2, &mut rng))
+            .collect();
+        let rows_t: Vec<Vec<Vec<f64>>> = cp_rows
+            .iter()
+            .map(|row| {
+                (0..dims.len())
+                    .map(|m| {
+                        let f = row.factor(m);
+                        let d = dims[m];
+                        let mut t = vec![0.0; row.rank() * d];
+                        for p in 0..row.rank() {
+                            for i in 0..d {
+                                t[p * d + i] = f[(i, p)];
+                            }
+                        }
+                        t
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut out = vec![0.0; items.len() * cp_rows.len()];
+        ctx.gram_cp_rows_into(&rows_t, 2, &mut out, &mut pa, &mut pb);
+        for (bi, x) in items.iter().enumerate() {
+            for (r, row) in cp_rows.iter().enumerate() {
+                let want = row.inner(x);
+                let got = out[bi * cp_rows.len() + r];
+                assert!(
+                    (got - want).abs() < 1e-9 * want.abs().max(1.0),
+                    "gram item {bi} row {r}: got {got} want {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn order_one_groups_work() {
+        let mut rng = Rng::seed_from(45);
+        let dims = [5usize];
+        let rows = tt_rows(&dims, 2, 2, &mut rng);
+        let items: Vec<TtTensor> =
+            (0..2).map(|_| TtTensor::random_unit(&dims, 2, &mut rng)).collect();
+        let refs: Vec<&TtTensor> = items.iter().collect();
+        let ctx = TtBatchContraction::for_tt_map(&refs);
+        let mut out = vec![0.0; 4];
+        let (mut pa, mut pb, mut pc) = (Vec::new(), Vec::new(), Vec::new());
+        ctx.inner_tt_rows_into(&rows, &mut out, &mut pa, &mut pb, &mut pc);
+        for (bi, x) in items.iter().enumerate() {
+            for (r, row) in rows.iter().enumerate() {
+                let want = row.to_tt().inner(x);
+                assert!((out[bi * 2 + r] - want).abs() < 1e-10);
+            }
+        }
+    }
+}

@@ -8,12 +8,14 @@
 //! compressed form, norms, random generation with the paper's variance
 //! prescriptions, TT-SVD and TT-rounding.
 
+mod batch;
 mod cp;
 mod dense;
 mod shape;
 mod tt;
 mod tucker;
 
+pub use batch::{CpBatchContraction, TtBatchContraction};
 pub use cp::CpTensor;
 pub use dense::DenseTensor;
 pub use shape::Shape;

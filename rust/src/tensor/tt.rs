@@ -640,6 +640,47 @@ impl TtDenseContraction {
         &self.dims
     }
 
+    /// Rank vector of the fixed TT tensor (length `N + 1`).
+    pub fn ranks(&self) -> &[usize] {
+        &self.ranks
+    }
+
+    /// Transposed core `m`, `[(dₘ·rₘ₊₁), rₘ]` row-major — the layout both
+    /// the dense chain and the batched compressed-input kernels
+    /// (`tensor::batch`) consume.
+    pub(crate) fn core_t(&self, m: usize) -> &[f64] {
+        &self.cores_t[m]
+    }
+
+    /// Total stored parameters (one transposed copy of every core).
+    pub fn num_elems(&self) -> usize {
+        self.cores_t.iter().map(|c| c.len()).sum()
+    }
+
+    /// Reconstruct the raw [`TtTensor`] by transposing the stored cores
+    /// back. Cold path (AOT packing, serialization): since this context
+    /// became the maps' only resident row layout, the raw-core view is
+    /// derived on demand instead of being stored twice — exactly how
+    /// `gaussian::matrix()` treats the untransposed matrix.
+    pub fn to_tt(&self) -> TtTensor {
+        let n = self.dims.len();
+        let cores = (0..n)
+            .map(|m| {
+                let rl = self.ranks[m];
+                let cols = self.dims[m] * self.ranks[m + 1];
+                let t = &self.cores_t[m];
+                let mut core = vec![0.0; rl * cols];
+                for a in 0..rl {
+                    for x in 0..cols {
+                        core[a * cols + x] = t[x * rl + a];
+                    }
+                }
+                core
+            })
+            .collect();
+        TtTensor::from_cores(&self.dims, &self.ranks, cores)
+    }
+
     /// Inner product `⟨tt, x⟩` with a single dense tensor.
     pub fn inner(&self, x: &DenseTensor) -> f64 {
         assert_eq!(x.dims(), &self.dims[..], "shape mismatch");
@@ -976,6 +1017,20 @@ mod tests {
                 assert_eq!(got.to_bits(), ctx.inner(x).to_bits(), "batch={batch}");
             }
         }
+    }
+
+    #[test]
+    fn tt_dense_contraction_roundtrips_to_tt() {
+        let mut rng = Rng::seed_from(27);
+        let t = TtTensor::random(&[3, 4, 2], 3, &mut rng);
+        let ctx = TtDenseContraction::new(&t);
+        let back = ctx.to_tt();
+        assert_eq!(back.dims(), t.dims());
+        assert_eq!(back.ranks(), t.ranks());
+        for m in 0..t.order() {
+            assert_eq!(back.core(m), t.core(m), "core {m} must round-trip bit-exactly");
+        }
+        assert_eq!(ctx.num_elems(), t.num_params());
     }
 
     #[test]

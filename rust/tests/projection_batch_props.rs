@@ -83,6 +83,93 @@ fn batch_matches_single_for_all_maps_formats_and_sizes() {
 }
 
 #[test]
+fn compressed_shape_groups_match_single_bitwise() {
+    // The compressed-input batch kernels: TT/CP/TRP maps × TT/CP inputs,
+    // homogeneous and heterogeneous (mixed rank and mixed format)
+    // batches, including the B = 1 degenerate group. Every batched
+    // output must be bit-identical to per-item `project` dispatch.
+    let dims = [3usize, 4, 2];
+    let mut rng = Rng::seed_from(0xC0DE);
+    let maps: Vec<Box<dyn Projection>> = vec![
+        Box::new(TtProjection::new(&dims, 3, 7, &mut rng)),
+        Box::new(CpProjection::new(&dims, 4, 7, &mut rng)),
+        Box::new(TrpProjection::new(&dims, 2, 7, &mut rng)),
+    ];
+    let mut ws = Workspace::new();
+    for map in &maps {
+        // Homogeneous TT batches over B ∈ {1, 3, 8, 17}.
+        for &b in &BATCH_SIZES {
+            let xs: Vec<AnyTensor> = (0..b)
+                .map(|_| AnyTensor::Tt(TtTensor::random_unit(&dims, 3, &mut rng)))
+                .collect();
+            assert_bit_match(map.as_ref(), &xs, &mut ws).unwrap();
+            let xs: Vec<AnyTensor> = (0..b)
+                .map(|_| AnyTensor::Cp(CpTensor::random_unit(&dims, 2, &mut rng)))
+                .collect();
+            assert_bit_match(map.as_ref(), &xs, &mut ws).unwrap();
+        }
+        // Heterogeneous ranks: TT rank 2 and 4 interleaved — two
+        // shape-groups inside one flush, plus a singleton (B = 1) group.
+        let mut xs: Vec<AnyTensor> = Vec::new();
+        for i in 0..7 {
+            let rank = if i % 2 == 0 { 2 } else { 4 };
+            xs.push(AnyTensor::Tt(TtTensor::random_unit(&dims, rank, &mut rng)));
+        }
+        xs.push(AnyTensor::Tt(TtTensor::random_unit(&dims, 1, &mut rng)));
+        assert_bit_match(map.as_ref(), &xs, &mut ws).unwrap();
+        // Fully mixed: dense + TT (two ranks) + CP (two ranks) in one
+        // batch — dense group, two TT groups, two CP groups.
+        let xs: Vec<AnyTensor> = vec![
+            AnyTensor::Cp(CpTensor::random_unit(&dims, 3, &mut rng)),
+            AnyTensor::Dense(DenseTensor::random_unit(&dims, &mut rng)),
+            AnyTensor::Tt(TtTensor::random_unit(&dims, 2, &mut rng)),
+            AnyTensor::Cp(CpTensor::random_unit(&dims, 1, &mut rng)),
+            AnyTensor::Tt(TtTensor::random_unit(&dims, 4, &mut rng)),
+            AnyTensor::Dense(DenseTensor::random_unit(&dims, &mut rng)),
+            AnyTensor::Tt(TtTensor::random_unit(&dims, 2, &mut rng)),
+            AnyTensor::Cp(CpTensor::random_unit(&dims, 3, &mut rng)),
+        ];
+        assert_bit_match(map.as_ref(), &xs, &mut ws).unwrap();
+    }
+}
+
+#[test]
+fn prop_compressed_batches_match_single_on_random_shapes() {
+    run(
+        "compressed-batch bit-equivalence",
+        Config { cases: 20, seed: 0xC0DE2 },
+        |g| {
+            let order = g.usize_in(2, 4);
+            let dims: Vec<usize> = (0..order).map(|_| g.usize_in(2, 4)).collect();
+            let k = g.usize_in(1, 9);
+            let b = g.usize_in(1, 9);
+            let maps: Vec<Box<dyn Projection>> = vec![
+                Box::new(TtProjection::new(&dims, g.usize_in(1, 4), k, g.rng())),
+                Box::new(CpProjection::new(&dims, g.usize_in(1, 4), k, g.rng())),
+                Box::new(TrpProjection::new(&dims, g.usize_in(1, 3), k, g.rng())),
+            ];
+            let mut ws = Workspace::new();
+            // Random per-item format AND rank: exercises the
+            // shape-group partitioning across group counts and sizes.
+            let xs: Vec<AnyTensor> = (0..b)
+                .map(|_| {
+                    let rank = g.usize_in(1, 4);
+                    match g.usize_in(0, 2) {
+                        0 => AnyTensor::Dense(DenseTensor::random_unit(&dims, g.rng())),
+                        1 => AnyTensor::Tt(TtTensor::random_unit(&dims, rank, g.rng())),
+                        _ => AnyTensor::Cp(CpTensor::random_unit(&dims, rank, g.rng())),
+                    }
+                })
+                .collect();
+            for map in &maps {
+                assert_bit_match(map.as_ref(), &xs, &mut ws)?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_batch_matches_single_on_random_mixed_batches() {
     run(
         "batched projection bit-equivalence",

@@ -30,6 +30,14 @@ if [ "$fail" -eq 0 ]; then
   cargo test -q --test persist_recovery || fail=1
 fi
 
+# The compressed-input batch kernels are gated on bit-equivalence with
+# per-item dispatch: name the property suite so a batching regression is
+# visible at a glance (also cheap — binary already built).
+if [ "$fail" -eq 0 ]; then
+  echo "== tier1: compressed-batch bit-equivalence (projection_batch_props) =="
+  cargo test -q --test projection_batch_props || fail=1
+fi
+
 advisory() {
   local label="$1"
   shift
