@@ -30,13 +30,14 @@ fn main() {
     let rows = run(&cfg);
 
     let mut report = BenchReport::new(
-        "ANN sweep: recall@topk and QPS vs projection dim m",
-        &["map", "m", "flat_recall", "lsh_recall", "flat_qps", "lsh_qps"],
+        "ANN sweep: recall@topk and QPS vs projection dim m and shard count",
+        &["map", "m", "shards", "flat_recall", "lsh_recall", "flat_qps", "lsh_qps"],
     );
     for r in &rows {
         report.push(vec![
             r.map.clone(),
             r.m.to_string(),
+            r.shards.to_string(),
             format!("{:.4}", r.flat_recall),
             format!("{:.4}", r.lsh_recall),
             format!("{:.1}", r.flat_qps),

@@ -94,6 +94,16 @@ pub struct Metrics {
     /// Index restores applied (`restore` wire ops; startup `--restore`
     /// happens before the metrics are observable and is not counted).
     pub index_restores: AtomicU64,
+    /// High-water partition imbalance across all signatures: `max − min`
+    /// of any signature's per-shard live item counts, sampled after each
+    /// index flush (0 while unsharded or perfectly balanced) — makes a
+    /// skewed id hash observable instead of silently serializing one
+    /// lane.
+    pub index_shard_max_skew: AtomicU64,
+    /// High-water count of one signature's shard passes executing
+    /// concurrently — >1 proves a single hot signature's index phases
+    /// actually spread across workers.
+    pub index_shard_parallel: AtomicU64,
     /// End-to-end latency (submit → response).
     pub e2e_latency: LatencyHistogram,
 }
@@ -129,6 +139,10 @@ pub struct MetricsSnapshot {
     pub index_snapshots: u64,
     /// See [`Metrics::index_restores`].
     pub index_restores: u64,
+    /// See [`Metrics::index_shard_max_skew`].
+    pub index_shard_max_skew: u64,
+    /// See [`Metrics::index_shard_parallel`].
+    pub index_shard_parallel: u64,
     /// Mean end-to-end latency (µs).
     pub mean_latency_us: f64,
     /// p50 end-to-end latency (µs, bucket upper edge).
@@ -160,6 +174,8 @@ impl Metrics {
             index_queries: self.index_queries.load(Ordering::Relaxed),
             index_snapshots: self.index_snapshots.load(Ordering::Relaxed),
             index_restores: self.index_restores.load(Ordering::Relaxed),
+            index_shard_max_skew: self.index_shard_max_skew.load(Ordering::Relaxed),
+            index_shard_parallel: self.index_shard_parallel.load(Ordering::Relaxed),
             mean_latency_us: self.e2e_latency.mean_us(),
             p50_latency_us: self.e2e_latency.quantile_us(0.50),
             p99_latency_us: self.e2e_latency.quantile_us(0.99),

@@ -47,5 +47,6 @@ pub use request::{EnginePath, Payload, ProjectRequest, ProjectResponse, RequestO
 pub use router::{RouteKey, RouteTarget, Router};
 pub use server::{Coordinator, CoordinatorConfig};
 pub use state::{
-    IndexRegistry, IndexSlot, MapKey, MapKind, ProjectionRegistry, SharedIndex, WorkspacePool,
+    snapshot_file_stem, IndexRegistry, IndexSlot, MapKey, MapKind, ProjectionRegistry,
+    RestorePlan, SharedIndex, WorkspacePool,
 };

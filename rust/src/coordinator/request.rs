@@ -45,14 +45,19 @@ pub enum RequestOp {
         /// The insert-request id of the item to remove.
         target: u64,
     },
-    /// Snapshot the signature's index statistics.
+    /// Snapshot the signature's index statistics (aggregated across its
+    /// shards: mutation counters and sizes sum, the query counter is the
+    /// signature total).
     IndexStats,
     /// Persist the signature's index to the coordinator's snapshot
-    /// directory (a consistent cut between index ops — the write runs
-    /// inside the signature's FIFO sequencer turn).
+    /// directory (a consistent cut between index ops — the capture
+    /// freezes each shard's live pairs inside that shard's sequencer
+    /// turn at this op's arrival position, and the files are written
+    /// after every lane is released).
     Snapshot,
-    /// Reload the signature's index from its snapshot file, replacing
-    /// the live contents.
+    /// Reload the signature's index from its newest snapshot sequence
+    /// (or legacy single-file snapshot), replacing the live contents —
+    /// pairs re-partition into the configured shard count.
     Restore,
 }
 

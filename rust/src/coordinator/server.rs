@@ -24,9 +24,13 @@ use super::metrics::Metrics;
 use super::request::{EnginePath, Payload, ProjectRequest, ProjectResponse, RequestOp};
 use super::router::{RouteTarget, Router};
 use super::state::{
-    IndexRegistry, MapKey, MapKind, PackedParams, ProjectionRegistry, SharedIndex, WorkspacePool,
+    IndexRegistry, MapKey, MapKind, PackedParams, ProjectionRegistry, RestorePlan, SharedIndex,
+    WorkspacePool,
 };
-use crate::index::{AnnIndex, BackendKind, IndexStats, LshConfig, Neighbor, SnapshotReport};
+use crate::index::{
+    combine_stats, shard_of, AnnIndex, BackendKind, IndexSnapshot, IndexStats, LshConfig,
+    Neighbor, SnapshotReport,
+};
 use crate::projections::Workspace;
 use crate::runtime::{pack, ArtifactKind, PjrtEngine};
 use crate::tensor::{AnyTensor, Format};
@@ -59,8 +63,15 @@ pub struct CoordinatorConfig {
     pub master_seed: u64,
     /// ANN backend for per-signature indexes.
     pub index_backend: BackendKind,
-    /// LSH shape used when `index_backend` is [`BackendKind::Lsh`].
+    /// LSH shape used when `index_backend` is [`BackendKind::Lsh`]
+    /// (static, or derived via [`LshConfig::auto`] by the CLI).
     pub lsh: LshConfig,
+    /// Shards per signature index (`trp serve --index-shards`). 1 =
+    /// unsharded. Each shard owns its own sequencer lane, so a single hot
+    /// signature's index phases spread across the worker pool; queries
+    /// scatter to every shard and gather via a k-way merge, bit-identical
+    /// to the unsharded answers (`crate::index::sharded` docs).
+    pub index_shards: usize,
     /// Directory index snapshots are written to and reloaded from.
     /// `None` disables the `snapshot`/`restore` wire ops and periodic
     /// snapshots (they reply with an error).
@@ -96,6 +107,7 @@ impl Default for CoordinatorConfig {
             master_seed: 0xC0FFEE,
             index_backend: BackendKind::Flat,
             lsh: LshConfig::default(),
+            index_shards: 1,
             snapshot_dir: None,
             snapshot_every_ops: 0,
             snapshot_keep: super::state::DEFAULT_SNAPSHOT_KEEP,
@@ -156,7 +168,8 @@ impl Coordinator {
             registry: ProjectionRegistry::new(cfg.master_seed),
             indexes: IndexRegistry::new(cfg.master_seed, cfg.index_backend, cfg.lsh)
                 .with_snapshot_dir(cfg.snapshot_dir.clone())
-                .with_snapshot_keep(cfg.snapshot_keep),
+                .with_snapshot_keep(cfg.snapshot_keep)
+                .with_shards(cfg.index_shards),
             engine,
             metrics: Metrics::new(),
             workspaces: WorkspacePool::new(),
@@ -215,6 +228,13 @@ impl Coordinator {
     /// Whether a PJRT engine is attached.
     pub fn has_pjrt(&self) -> bool {
         self.shared.engine.is_some()
+    }
+
+    /// Out-of-band access to a signature's index slot (tests, ops
+    /// tooling). Creates the slot lazily exactly like the first index op
+    /// for the signature would.
+    pub fn index_slot(&self, key: &MapKey) -> SharedIndex {
+        self.shared.indexes.get_or_create(key)
     }
 
     /// Crash recovery: load every index snapshot in `dir` into the
@@ -440,11 +460,20 @@ fn native_map_key(shared: &Shared, req: &ProjectRequest) -> MapKey {
 /// Pure-projection flushes are split into per-worker sub-batches (each
 /// still one batched execution) so single-signature saturation keeps the
 /// whole pool busy instead of serializing on one worker. Flushes carrying
-/// index ops run as a single job holding a FIFO ticket for the
-/// signature's [`super::state::IndexSlot`]: within a flush ops apply in
-/// arrival order, and across flushes the tickets keep index phases in
-/// dispatch (= arrival) order even when the jobs land on different
-/// workers.
+/// index ops run as a single job holding a FIFO ticket on each shard lane
+/// the flush touches ([`super::state::IndexSlot::issue_tickets`], called
+/// here on the dispatcher thread so every lane's ticket order equals
+/// arrival order): within a flush ops apply in arrival order, across
+/// flushes the lane tickets keep same-shard index phases ordered even
+/// when the jobs land on different workers — and flushes touching
+/// disjoint shards advance in parallel, which is what lets a single hot
+/// signature saturate the pool during bulk ingest.
+///
+/// Scatter ops (query, stats, snapshot, restore) take the signature-level
+/// epoch barrier — a ticket on every lane. Periodic snapshots capture at
+/// the end of a mutation flush, so the flush that crosses the mutation
+/// threshold is granted the barrier too — ordinary ingest flushes keep
+/// their targeted-lane fan-out.
 fn dispatch_native_batch(
     shared: &Arc<Shared>,
     pool: &ThreadPool,
@@ -456,8 +485,48 @@ fn dispatch_native_batch(
         .any(|env| !matches!(env.req.op, RequestOp::Project));
     if has_index_ops {
         let slot = shared.indexes.get_or_create(&key);
-        let ticket = slot.issue_ticket();
-        submit_native_job(shared, pool, key, batch, Some((slot, ticket)));
+        // Periodic snapshots need every lane ticketed to capture — but
+        // only the flush that actually crosses the threshold pays for
+        // the barrier; ordinary ingest flushes keep their targeted-lane
+        // fan-out. The threshold read races with in-flight cuts, which
+        // only shifts the capture to a nearby flush (the worker
+        // re-checks under its own tickets).
+        let periodic_barrier = shared.cfg.snapshot_every_ops > 0 && {
+            let bound = batch
+                .iter()
+                .filter(|env| {
+                    matches!(env.req.op, RequestOp::Insert | RequestOp::Delete { .. })
+                })
+                .count() as u64;
+            bound > 0
+                && slot.pending_mutations() + bound >= shared.cfg.snapshot_every_ops
+        };
+        let needs_barrier = periodic_barrier
+            || batch.iter().any(|env| {
+                matches!(
+                    env.req.op,
+                    RequestOp::Query { .. }
+                        | RequestOp::IndexStats
+                        | RequestOp::Snapshot
+                        | RequestOp::Restore
+                )
+            });
+        let tickets = if needs_barrier || slot.shards() == 1 {
+            slot.issue_barrier()
+        } else {
+            let mut shards: Vec<usize> = batch
+                .iter()
+                .filter_map(|env| match env.req.op {
+                    RequestOp::Insert => Some(shard_of(env.req.id, slot.shards())),
+                    RequestOp::Delete { target } => Some(shard_of(target, slot.shards())),
+                    _ => None,
+                })
+                .collect();
+            shards.sort_unstable();
+            shards.dedup();
+            slot.issue_tickets(&shards)
+        };
+        submit_native_job(shared, pool, key, batch, Some((slot, tickets)));
         return;
     }
     let workers = shared.cfg.workers.max(1);
@@ -480,7 +549,7 @@ fn submit_native_job(
     pool: &ThreadPool,
     key: MapKey,
     batch: Vec<Envelope>,
-    index_turn: Option<(SharedIndex, u64)>,
+    index_turn: Option<(SharedIndex, Vec<(usize, u64)>)>,
 ) {
     let shared = Arc::clone(shared);
     pool.submit(move || run_native_batch(&shared, key, batch, index_turn));
@@ -499,14 +568,14 @@ struct NativeItem {
 
 /// Execute one native job: resolve the shared map, run every tensor in
 /// the batch through a single `project_batch_into` call on a pooled
-/// workspace and a pooled output buffer, apply index ops (inside the
-/// flush's sequencer ticket), then split the `[B, k]` output into
-/// per-request replies.
+/// workspace and a pooled output buffer, apply index ops (one pass per
+/// ticketed shard lane, each inside that lane's sequencer turn), then
+/// split the `[B, k]` output into per-request replies.
 fn run_native_batch(
     shared: &Arc<Shared>,
     key: MapKey,
     batch: Vec<Envelope>,
-    index_turn: Option<(SharedIndex, u64)>,
+    index_turn: Option<(SharedIndex, Vec<(usize, u64)>)>,
 ) {
     let k = key.k;
     // Split payloads from reply metadata: `project_batch_into` takes the
@@ -543,148 +612,289 @@ fn run_native_batch(
     }
 
     // Index phase (present iff the flush carries index ops, in which case
-    // the dispatcher issued a sequencer ticket). Ops apply strictly in
-    // arrival order — a query never observes a mutation that arrived
-    // after it, whether the two landed in one flush or different flushes
-    // (run_in_turn orders the flushes) — and each run of *consecutive*
-    // queries is scored as one batched GEMM on the pooled workspace.
+    // the dispatcher issued a sequencer ticket per touched shard lane).
+    // The job runs one pass per ticketed shard, in ascending shard order;
+    // within each pass it walks the items in order and applies the ops
+    // belonging to that shard, so ops apply strictly in arrival order —
+    // a query never observes a mutation that arrived after it, whether
+    // the two landed in one flush or different flushes (the lane tickets
+    // order the flushes per shard, and same-id mutations always share a
+    // shard). Each run of queries uninterrupted *by that shard's
+    // mutations* is scored as one batched GEMM on the pooled workspace;
+    // per-query results gather across passes through a k-way merge under
+    // the same (dist, id) total order the per-shard selects use, which is
+    // what keeps sharded answers bit-identical to unsharded ones.
     let mut removed: Vec<Option<bool>> = vec![None; items.len()];
     let mut neighbors: Vec<Option<Vec<Neighbor>>> = (0..items.len()).map(|_| None).collect();
     let mut stats: Vec<Option<IndexStats>> = (0..items.len()).map(|_| None).collect();
     let mut snapshots: Vec<Option<SnapshotReport>> = (0..items.len()).map(|_| None).collect();
     let mut restored: Vec<Option<u64>> = vec![None; items.len()];
     let mut op_errors: Vec<Option<String>> = vec![None; items.len()];
-    if let Some((slot, ticket)) = index_turn {
-        let slot2 = Arc::clone(&slot);
-        slot.run_in_turn(ticket, |index| {
-            let mut pending: Vec<usize> = Vec::new();
-            let mut mutations = 0u64;
-            for (i, it) in items.iter().enumerate() {
-                match it.op {
-                    RequestOp::Project => {}
-                    RequestOp::Query { .. } => pending.push(i),
-                    RequestOp::Insert => {
-                        score_pending(
-                            index.as_mut(),
-                            shared,
-                            &items,
-                            &out,
-                            &mut pending,
-                            &mut neighbors,
-                            &mut ws,
-                        );
-                        let r = it.row.expect("insert carries a tensor");
-                        index.insert(it.id, &out[r * k..(r + 1) * k]);
-                        mutations += 1;
-                        shared.metrics.index_inserts.fetch_add(1, Ordering::Relaxed);
-                    }
-                    RequestOp::Delete { target } => {
-                        score_pending(
-                            index.as_mut(),
-                            shared,
-                            &items,
-                            &out,
-                            &mut pending,
-                            &mut neighbors,
-                            &mut ws,
-                        );
-                        let hit = index.remove(target);
-                        removed[i] = Some(hit);
-                        mutations += hit as u64;
-                        shared.metrics.index_deletes.fetch_add(1, Ordering::Relaxed);
-                    }
-                    RequestOp::IndexStats => {
-                        score_pending(
-                            index.as_mut(),
-                            shared,
-                            &items,
-                            &out,
-                            &mut pending,
-                            &mut neighbors,
-                            &mut ws,
-                        );
-                        stats[i] = Some(index.stats());
-                    }
-                    RequestOp::Snapshot => {
-                        // The turn is held, so the capture is a
-                        // consistent cut: everything that arrived before
-                        // this op is in the file, nothing after.
-                        score_pending(
-                            index.as_mut(),
-                            shared,
-                            &items,
-                            &out,
-                            &mut pending,
-                            &mut neighbors,
-                            &mut ws,
-                        );
-                        match shared.indexes.snapshot_slot(&slot2, index.as_ref()) {
-                            Ok(report) => {
-                                // This flush's mutations so far are in the
-                                // file too — don't re-count them into the
-                                // periodic trigger below.
-                                mutations = 0;
-                                slot2.reset_mutations();
-                                shared
-                                    .metrics
-                                    .index_snapshots
-                                    .fetch_add(1, Ordering::Relaxed);
-                                snapshots[i] = Some(report);
+    if let Some((slot, tickets)) = index_turn {
+        let nshards = slot.shards();
+        let snapshot_dir_set = shared.indexes.snapshot_dir().is_some();
+        // Stage every query embedding once, contiguously ([nq, k], query
+        // arrival order) in a pooled buffer. A run of queries is always a
+        // consecutive ordinal range, so per-lane scoring slices this
+        // buffer directly — no re-staging per shard pass.
+        let query_items: Vec<usize> = items
+            .iter()
+            .enumerate()
+            .filter(|(_, it)| matches!(it.op, RequestOp::Query { .. }))
+            .map(|(i, _)| i)
+            .collect();
+        let mut qstage = shared.workspaces.acquire_buf(query_items.len() * k);
+        let mut topks_all = Vec::with_capacity(query_items.len());
+        let mut qord: Vec<usize> = vec![0; items.len()];
+        for (qi, &i) in query_items.iter().enumerate() {
+            let r = items[i].row.expect("query carries a tensor");
+            qstage[qi * k..(qi + 1) * k].copy_from_slice(&out[r * k..(r + 1) * k]);
+            if let RequestOp::Query { k: topk } = items[i].op {
+                topks_all.push(topk);
+            }
+            qord[i] = qi;
+        }
+        // Off-turn preparation: resolve restore plans (disk reads,
+        // checksum verification, re-partition, rebuild) before any lane
+        // is held, so a slow disk never stalls serving.
+        let mut restore_plans: Vec<Option<Result<RestorePlan, String>>> =
+            (0..items.len()).map(|_| None).collect();
+        for (i, it) in items.iter().enumerate() {
+            if matches!(it.op, RequestOp::Restore) {
+                restore_plans[i] = Some(shared.indexes.restore_plan(&slot));
+            }
+        }
+        // Copy-on-write snapshot captures: each pass freezes its shard's
+        // live-pairs view at the op's arrival position (a memcpy inside
+        // the turn); encoding and disk IO happen after every lane is
+        // released, so big-corpus snapshots no longer stall the
+        // signature's lanes. `cut_marks` records each lane's noted-
+        // mutation watermark at the same position — advanced into the
+        // covered watermark only after the write succeeds.
+        let mut captures: Vec<Vec<IndexSnapshot>> = (0..items.len()).map(|_| Vec::new()).collect();
+        let mut cut_marks: Vec<Vec<(usize, u64)>> = (0..items.len()).map(|_| Vec::new()).collect();
+        // Periodic snapshot decision, made up front: the captures must
+        // happen inside the lane turns, but whether this flush crosses
+        // the threshold is only exactly known afterwards — so the
+        // trigger uses the mutation upper bound (a delete of an absent id
+        // overshoots by firing one flush early, which is harmless for a
+        // background durability knob). Capturing requires a ticket on
+        // every lane; the dispatcher grants that barrier to threshold-
+        // crossing flushes (see `dispatch_native_batch`), so a flush
+        // without it simply leaves the trigger armed for a later one.
+        let flush_mut_bound = items
+            .iter()
+            .filter(|it| matches!(it.op, RequestOp::Insert | RequestOp::Delete { .. }))
+            .count() as u64;
+        let has_explicit_snapshot = items.iter().any(|it| matches!(it.op, RequestOp::Snapshot));
+        let barrier_held = tickets.len() == nshards;
+        let periodic_due = shared.cfg.snapshot_every_ops > 0
+            && snapshot_dir_set
+            && !has_explicit_snapshot
+            && flush_mut_bound > 0
+            && barrier_held
+            && slot.pending_mutations() + flush_mut_bound >= shared.cfg.snapshot_every_ops;
+        let mut periodic_captures: Vec<IndexSnapshot> = Vec::new();
+        let mut periodic_marks: Vec<(usize, u64)> = Vec::new();
+        for &(s, ticket) in &tickets {
+            slot.run_shard_turn(s, ticket, |index| {
+                let mut pending: Vec<usize> = Vec::new();
+                for (i, it) in items.iter().enumerate() {
+                    match it.op {
+                        RequestOp::Project => {}
+                        RequestOp::Query { .. } => pending.push(i),
+                        RequestOp::Insert => {
+                            if shard_of(it.id, nshards) == s {
+                                score_pending(
+                                    index.as_mut(),
+                                    &qstage,
+                                    &topks_all,
+                                    &qord,
+                                    &mut pending,
+                                    &mut neighbors,
+                                    &mut ws,
+                                );
+                                let r = it.row.expect("insert carries a tensor");
+                                index.insert(it.id, &out[r * k..(r + 1) * k]);
+                                slot.note_shard_mutations(s, 1);
+                                shared.metrics.index_inserts.fetch_add(1, Ordering::Relaxed);
                             }
-                            Err(e) => op_errors[i] = Some(format!("snapshot failed: {e}")),
                         }
-                    }
-                    RequestOp::Restore => {
-                        score_pending(
-                            index.as_mut(),
-                            shared,
-                            &items,
-                            &out,
-                            &mut pending,
-                            &mut neighbors,
-                            &mut ws,
-                        );
-                        match shared.indexes.restore_slot(&slot2, index) {
-                            Ok(n) => {
-                                // Earlier mutations in this flush were
-                                // discarded by the reload: the index now
-                                // equals the file exactly.
-                                mutations = 0;
-                                shared
-                                    .metrics
-                                    .index_restores
-                                    .fetch_add(1, Ordering::Relaxed);
-                                restored[i] = Some(n);
+                        RequestOp::Delete { target } => {
+                            if shard_of(target, nshards) == s {
+                                score_pending(
+                                    index.as_mut(),
+                                    &qstage,
+                                    &topks_all,
+                                    &qord,
+                                    &mut pending,
+                                    &mut neighbors,
+                                    &mut ws,
+                                );
+                                let hit = index.remove(target);
+                                removed[i] = Some(hit);
+                                slot.note_shard_mutations(s, hit as u64);
+                                shared.metrics.index_deletes.fetch_add(1, Ordering::Relaxed);
                             }
-                            Err(e) => op_errors[i] = Some(format!("restore failed: {e}")),
+                        }
+                        RequestOp::IndexStats => {
+                            score_pending(
+                                index.as_mut(),
+                                &qstage,
+                                &topks_all,
+                                &qord,
+                                &mut pending,
+                                &mut neighbors,
+                                &mut ws,
+                            );
+                            // Signature-level aggregate, folded shard by
+                            // shard (sums mutations/len, max for queries).
+                            stats[i] = Some(combine_stats(stats[i].take(), index.stats()));
+                        }
+                        RequestOp::Snapshot => {
+                            // Every lane holds a ticket at this op's
+                            // arrival position (epoch barrier), so the
+                            // union of the per-shard freezes is a
+                            // consistent cut: everything that arrived
+                            // before this op is captured, nothing after.
+                            score_pending(
+                                index.as_mut(),
+                                &qstage,
+                                &topks_all,
+                                &qord,
+                                &mut pending,
+                                &mut neighbors,
+                                &mut ws,
+                            );
+                            if snapshot_dir_set {
+                                captures[i].push(IndexSnapshot::capture(
+                                    slot.key.encode(),
+                                    index.as_ref(),
+                                ));
+                                cut_marks[i].push((s, slot.shard_noted(s)));
+                            }
+                        }
+                        RequestOp::Restore => {
+                            score_pending(
+                                index.as_mut(),
+                                &qstage,
+                                &topks_all,
+                                &qord,
+                                &mut pending,
+                                &mut neighbors,
+                                &mut ws,
+                            );
+                            // Swap in the pre-built shard; mutations that
+                            // arrived earlier in this flush were applied
+                            // above and are discarded by the reload, ops
+                            // after this item apply to the restored
+                            // state. (The *source* was resolved off-turn
+                            // before the passes: a snapshot's files land
+                            // only after its lanes release, so a restore
+                            // pipelined behind a snapshot without
+                            // awaiting its reply may resolve the
+                            // previous sequence — the snapshot reply is
+                            // the read-your-writes barrier.)
+                            if let Some(Ok(plan)) = restore_plans[i].as_mut() {
+                                if let Some(replacement) = plan.shards[s].take() {
+                                    *index = replacement;
+                                    // The reload discarded everything
+                                    // applied to this lane so far; mark
+                                    // it covered at this position.
+                                    cut_marks[i].push((s, slot.shard_noted(s)));
+                                }
+                            }
                         }
                     }
                 }
-            }
-            score_pending(
-                index.as_mut(),
-                shared,
-                &items,
-                &out,
-                &mut pending,
-                &mut neighbors,
-                &mut ws,
-            );
-            // Periodic background snapshots ride the same turn, so the
-            // file is a consistent cut between flushes.
-            if shared.cfg.snapshot_every_ops > 0
-                && mutations > 0
-                && slot2.note_mutations(mutations) >= shared.cfg.snapshot_every_ops
-            {
-                match shared.indexes.snapshot_slot(&slot2, index.as_ref()) {
-                    Ok(_) => {
-                        slot2.reset_mutations();
-                        shared.metrics.index_snapshots.fetch_add(1, Ordering::Relaxed);
-                    }
-                    Err(e) => eprintln!("[coordinator] periodic snapshot failed: {e}"),
+                score_pending(
+                    index.as_mut(),
+                    &qstage,
+                    &topks_all,
+                    &qord,
+                    &mut pending,
+                    &mut neighbors,
+                    &mut ws,
+                );
+                if periodic_due {
+                    // End-of-flush consistent cut for the periodic
+                    // trigger (the dispatcher granted this flush the
+                    // full barrier, so every lane contributes).
+                    periodic_captures
+                        .push(IndexSnapshot::capture(slot.key.encode(), index.as_ref()));
+                    periodic_marks.push((s, slot.shard_noted(s)));
                 }
+            });
+        }
+        // Every lane is released — serving continues while the frozen
+        // captures are encoded and written (the COW half of the design),
+        // and the reply metadata below is filled in. On success each
+        // cut's recorded per-lane watermarks advance the covered marks:
+        // mutations noted during the write (by this flush after the cut
+        // position, or by later flushes) sit above the watermark and stay
+        // pending toward the next periodic trigger.
+        for (i, it) in items.iter().enumerate() {
+            match it.op {
+                RequestOp::Snapshot => {
+                    if !snapshot_dir_set {
+                        op_errors[i] = Some("snapshot failed: no snapshot_dir configured".into());
+                        continue;
+                    }
+                    match shared.indexes.write_snapshot(&slot, &captures[i]) {
+                        Ok(report) => {
+                            shared.metrics.index_snapshots.fetch_add(1, Ordering::Relaxed);
+                            snapshots[i] = Some(report);
+                            for &(s, w) in &cut_marks[i] {
+                                slot.cover_shard(s, w);
+                            }
+                        }
+                        Err(e) => op_errors[i] = Some(format!("snapshot failed: {e}")),
+                    }
+                }
+                RequestOp::Restore => {
+                    match restore_plans[i].take().expect("plan resolved above") {
+                        Ok(plan) => {
+                            shared.metrics.index_restores.fetch_add(1, Ordering::Relaxed);
+                            restored[i] = Some(plan.items);
+                            for &(s, w) in &cut_marks[i] {
+                                slot.cover_shard(s, w);
+                            }
+                        }
+                        Err(e) => op_errors[i] = Some(format!("restore failed: {e}")),
+                    }
+                }
+                _ => {}
             }
-        });
+        }
+        if periodic_due {
+            match shared.indexes.write_snapshot(&slot, &periodic_captures) {
+                Ok(_) => {
+                    shared.metrics.index_snapshots.fetch_add(1, Ordering::Relaxed);
+                    for &(s, w) in &periodic_marks {
+                        slot.cover_shard(s, w);
+                    }
+                }
+                Err(e) => eprintln!("[coordinator] periodic snapshot failed: {e}"),
+            }
+        }
+        let nqueries = items
+            .iter()
+            .filter(|it| matches!(it.op, RequestOp::Query { .. }))
+            .count() as u64;
+        if nqueries > 0 {
+            shared.metrics.index_queries.fetch_add(nqueries, Ordering::Relaxed);
+        }
+        // Observability: partition imbalance and how many lanes actually
+        // overlapped (high-water gauges, like `native_flush_max`).
+        shared
+            .metrics
+            .index_shard_max_skew
+            .fetch_max(slot.max_skew(), Ordering::Relaxed);
+        shared
+            .metrics
+            .index_shard_parallel
+            .fetch_max(slot.parallel_high_water(), Ordering::Relaxed);
+        shared.workspaces.release_buf(qstage);
     }
     shared.workspaces.release(ws);
     let t1 = shared.now_us();
@@ -726,17 +936,25 @@ fn run_native_batch(
     shared.workspaces.release_buf(out);
 }
 
-/// Score the accumulated run of consecutive queries (`pending` holds
-/// item indices) as one batched GEMM against the index's current state,
-/// then clear the run. Batching only *runs* preserves arrival-order
-/// semantics — a query never observes a mutation that arrived after it —
-/// while still amortizing the scoring GEMM across adjacent queries (the
-/// common bulk-lookup shape).
+/// Score the accumulated run of queries (`pending` holds item indices)
+/// as one batched GEMM against one shard's current state, merge each
+/// query's per-shard results into its gathered top-k, then clear the run.
+/// Batching only *runs* preserves arrival-order semantics — a query
+/// never observes a mutation that arrived after it — while still
+/// amortizing the scoring GEMM across adjacent queries (the common
+/// bulk-lookup shape). A run is broken only by mutations belonging to
+/// the shard being scored: other shards' mutations cannot change this
+/// shard's answers, so the sharded run widths amortize even better than
+/// the unsharded ones without changing any result.
+///
+/// The run's embeddings are a contiguous slice of the flush-wide
+/// `qstage` buffer (`qord` maps item index → query ordinal) — staged
+/// once per flush, not once per shard pass.
 fn score_pending(
     index: &mut dyn AnnIndex,
-    shared: &Shared,
-    items: &[NativeItem],
-    out: &[f64],
+    qstage: &[f64],
+    topks_all: &[usize],
+    qord: &[usize],
     pending: &mut Vec<usize>,
     neighbors: &mut [Option<Vec<Neighbor>>],
     ws: &mut Workspace,
@@ -745,26 +963,22 @@ fn score_pending(
         return;
     }
     let k = index.dim();
-    // Stage the run's query embeddings contiguously ([nq, k]) in a
-    // pooled buffer.
-    let mut qs = shared.workspaces.acquire_buf(pending.len() * k);
-    let mut topks = Vec::with_capacity(pending.len());
-    for (qi, &i) in pending.iter().enumerate() {
-        let r = items[i].row.expect("query carries a tensor");
-        qs[qi * k..(qi + 1) * k].copy_from_slice(&out[r * k..(r + 1) * k]);
-        if let RequestOp::Query { k: topk } = items[i].op {
-            topks.push(topk);
-        }
+    // A run is always a consecutive ordinal range: every query item
+    // between two run breaks is pushed, in item order.
+    let start = qord[pending[0]];
+    let end = start + pending.len();
+    debug_assert_eq!(qord[*pending.last().expect("non-empty run")], end - 1);
+    let qs = &qstage[start * k..end * k];
+    let topks = &topks_all[start..end];
+    let results = index.query_batch(qs, topks, ws);
+    for ((&i, res), &cap) in pending.iter().zip(results).zip(topks) {
+        // Gather: fold this shard's list into the query's accumulated
+        // top-k (k-way merge under the (dist, id) total order).
+        neighbors[i] = Some(match neighbors[i].take() {
+            None => res,
+            Some(acc) => crate::index::merge_neighbors(acc, res, cap),
+        });
     }
-    let results = index.query_batch(&qs, &topks, ws);
-    shared
-        .metrics
-        .index_queries
-        .fetch_add(pending.len() as u64, Ordering::Relaxed);
-    for (&i, res) in pending.iter().zip(results) {
-        neighbors[i] = Some(res);
-    }
-    shared.workspaces.release_buf(qs);
     pending.clear();
 }
 
@@ -1207,6 +1421,181 @@ mod tests {
             out
         };
         assert_eq!(run(4), run(1));
+    }
+
+    #[test]
+    fn sharded_index_ops_match_unsharded_bitwise() {
+        // One interleaved insert/query/delete/stats history, replayed
+        // sequentially against S ∈ {1, 2, 4}: responses must be
+        // bit-identical (the tier-1 sharding contract at the service
+        // level).
+        type OpOut = (Option<Vec<f64>>, Option<Vec<crate::index::Neighbor>>, Option<bool>);
+        let mut rng = Rng::seed_from(21);
+        let dims = vec![3usize; 4];
+        let xs: Vec<TtTensor> = (0..18)
+            .map(|_| TtTensor::random_unit(&dims, 2, &mut rng))
+            .collect();
+        let run = |shards: usize| -> Vec<OpOut> {
+            let c = Coordinator::start(
+                CoordinatorConfig {
+                    workers: 3,
+                    default_k: 12,
+                    index_shards: shards,
+                    ..Default::default()
+                },
+                None,
+            );
+            let mut outs = Vec::new();
+            for (i, x) in xs.iter().enumerate() {
+                let r = c
+                    .project_blocking(ProjectRequest::insert(i as u64, AnyTensor::Tt(x.clone())))
+                    .unwrap();
+                outs.push((Some(r.embedding), None, None));
+            }
+            for (i, x) in xs.iter().take(6).enumerate() {
+                let r = c
+                    .project_blocking(ProjectRequest::query(
+                        100 + i as u64,
+                        AnyTensor::Tt(x.clone()),
+                        5,
+                    ))
+                    .unwrap();
+                outs.push((None, r.neighbors, None));
+            }
+            for target in [2u64, 9, 400] {
+                let r = c
+                    .project_blocking(ProjectRequest::delete(
+                        200 + target,
+                        target,
+                        Format::Tt,
+                        dims.clone(),
+                    ))
+                    .unwrap();
+                outs.push((None, None, r.removed));
+            }
+            let r = c
+                .project_blocking(ProjectRequest::query(300, AnyTensor::Tt(xs[2].clone()), 4))
+                .unwrap();
+            outs.push((None, r.neighbors, None));
+            let stats = c
+                .project_blocking(ProjectRequest::index_stats(301, Format::Tt, dims.clone()))
+                .unwrap()
+                .index
+                .unwrap();
+            assert_eq!(stats.len, 16);
+            assert_eq!(stats.inserts, 18);
+            assert_eq!(stats.deletes, 2, "backend counter counts effective deletes only");
+            assert_eq!(stats.queries, 7);
+            assert_eq!(stats.shards, shards);
+            c.shutdown();
+            outs
+        };
+        let unsharded = run(1);
+        assert_eq!(run(2), unsharded, "S=2 must be bit-identical to S=1");
+        assert_eq!(run(4), unsharded, "S=4 must be bit-identical to S=1");
+    }
+
+    #[test]
+    fn sharded_cross_flush_ordering_holds_on_same_id() {
+        // The PR 2 ordering test, under sharding: pipelined insert →
+        // delete pairs on one id land in separate single-request flushes
+        // on different workers; the id's shard lane must keep them in
+        // arrival order.
+        let c = Coordinator::start(
+            CoordinatorConfig {
+                workers: 4,
+                default_k: 8,
+                native_max_batch: 1,
+                adaptive_batch: false,
+                index_shards: 4,
+                ..Default::default()
+            },
+            None,
+        );
+        let mut rng = Rng::seed_from(13);
+        let dims = vec![3usize; 4];
+        let x = TtTensor::random_unit(&dims, 2, &mut rng);
+        for round in 0..20u64 {
+            let rx1 = c.submit(ProjectRequest::insert(round, AnyTensor::Tt(x.clone())));
+            let rx2 = c.submit(ProjectRequest::delete(
+                1000 + round,
+                round,
+                Format::Tt,
+                dims.clone(),
+            ));
+            let r1 = rx1.recv().unwrap().unwrap();
+            let r2 = rx2.recv().unwrap().unwrap();
+            assert_eq!(r1.id, round);
+            assert_eq!(r2.removed, Some(true), "delete must observe the prior insert");
+        }
+        let resp = c
+            .project_blocking(ProjectRequest::index_stats(9999, Format::Tt, dims))
+            .unwrap();
+        assert_eq!(resp.index.unwrap().len, 0, "every insert was deleted in order");
+        let m = c.metrics();
+        assert_eq!(m.index_inserts, 20);
+        assert_eq!(m.index_deletes, 20);
+        c.shutdown();
+    }
+
+    #[test]
+    fn insert_only_flushes_ticket_only_their_shards() {
+        // Deterministic lane-independence proof: hold one shard's lane
+        // open out of band; an insert hashing to another shard must still
+        // complete, while an insert hashing to the held shard stays
+        // blocked until release.
+        let c = Coordinator::start(
+            CoordinatorConfig {
+                workers: 2,
+                default_k: 8,
+                native_max_batch: 1,
+                adaptive_batch: false,
+                index_shards: 2,
+                ..Default::default()
+            },
+            None,
+        );
+        let key = MapKey {
+            kind: MapKind::Tt { rank: CoordinatorConfig::default().default_tt_rank },
+            dims: vec![3; 4],
+            k: 8,
+        };
+        let slot = c.index_slot(&key);
+        assert_eq!(slot.shards(), 2);
+        // Ids on each shard under the stable partitioning rule.
+        let id_a = (0..).find(|&id| shard_of(id, 2) == 0).unwrap();
+        let id_b = (0..).find(|&id| shard_of(id, 2) == 1).unwrap();
+        // Hold lane 1's next turn on a helper thread.
+        let tickets = slot.issue_tickets(&[1]);
+        let (hold_tx, hold_rx) = std::sync::mpsc::channel::<()>();
+        let holder = {
+            let slot = Arc::clone(&slot);
+            let ticket = tickets[0].1;
+            std::thread::spawn(move || {
+                slot.run_shard_turn(1, ticket, |_| hold_rx.recv().unwrap());
+            })
+        };
+        let mut rng = Rng::seed_from(17);
+        let x = TtTensor::random_unit(&[3; 4], 2, &mut rng);
+        // Shard-0 insert completes although lane 1 is held…
+        let r = c
+            .submit(ProjectRequest::insert(id_a, AnyTensor::Tt(x.clone())))
+            .recv_timeout(std::time::Duration::from_secs(20))
+            .expect("shard-0 flush must not wait on the held shard-1 lane")
+            .unwrap();
+        assert_eq!(r.id, id_a);
+        // …while a shard-1 insert stays queued behind the held turn…
+        let rx_b = c.submit(ProjectRequest::insert(id_b, AnyTensor::Tt(x)));
+        assert!(
+            rx_b.recv_timeout(std::time::Duration::from_millis(300)).is_err(),
+            "shard-1 flush must wait for the held lane"
+        );
+        // …until the lane is released.
+        hold_tx.send(()).unwrap();
+        holder.join().unwrap();
+        let r = rx_b.recv().unwrap().unwrap();
+        assert_eq!(r.id, id_b);
+        c.shutdown();
     }
 
     #[test]

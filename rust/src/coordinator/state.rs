@@ -6,9 +6,9 @@
 //! from `(master_seed, map key)`, so a restarted coordinator reproduces
 //! identical maps, and the PJRT and native paths share one draw.
 
-use crate::index::persist::Cursor;
+use crate::index::persist::{self, Cursor, ManifestShard, ShardManifest};
 use crate::index::{
-    build_index, AnnIndex, BackendKind, IndexSnapshot, LshConfig, SnapshotReport,
+    build_index, shard_of, AnnIndex, BackendKind, IndexSnapshot, LshConfig, SnapshotReport,
 };
 use crate::projections::{
     CpProjection, GaussianProjection, Projection, SparseKind, SparseProjection, TtProjection,
@@ -17,7 +17,7 @@ use crate::projections::{
 use crate::rng::Rng;
 use crate::runtime::{pack, ArtifactKind, ArtifactSpec};
 use anyhow::Result;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -335,80 +335,219 @@ impl ProjectionRegistry {
     }
 }
 
-/// One signature's ANN index plus the FIFO sequencer that orders the
-/// index phases of its flushes.
+/// One shard's execution lane: the backend index plus the FIFO sequencer
+/// state that orders the shard's passes across flushes.
+struct ShardLane {
+    /// The shard's backend index.
+    index: Mutex<Box<dyn AnnIndex>>,
+    /// Next ticket allowed to run its pass on this lane.
+    turn: Mutex<u64>,
+    turn_done: Condvar,
+    /// Tickets handed out so far on this lane.
+    issued: AtomicU64,
+    /// Live items after the lane's most recent completed pass (feeds the
+    /// `index_shard_max_skew` gauge without locking the index).
+    len: AtomicU64,
+    /// Lifetime effective mutations applied to this lane, incremented
+    /// *inside* the lane's turn — so a cut reading it during its own
+    /// pass observes exactly the mutations its capture covers.
+    noted: AtomicU64,
+    /// Watermark of [`ShardLane::noted`] covered by the newest successful
+    /// snapshot/restore. Advanced by `fetch_max`, so overlapping cuts
+    /// commute: the pending count `noted − covered` can never be wiped by
+    /// a stale baseline (mutations a cut did not capture stay pending).
+    covered: AtomicU64,
+}
+
+/// One signature's sharded ANN index: `S` backend shards, each behind its
+/// own FIFO sequencer lane, under a signature-level epoch barrier.
 ///
 /// Flushes for one signature are dispatched in arrival order but execute
-/// on different pool workers, so without sequencing a pipelined
-/// `insert → delete` pair could reach the index reversed. The dispatcher
-/// reserves a ticket per index-carrying flush ([`IndexSlot::issue_ticket`],
-/// called in dispatch order from the single dispatcher thread); the worker
-/// runs its index phase inside [`IndexSlot::run_in_turn`], which blocks
-/// until every earlier ticket has completed. The worker pool dequeues
-/// jobs FIFO, so ticket `n` always starts before `n+1` and the wait can
-/// never deadlock.
+/// on different pool workers. The dispatcher reserves a ticket on every
+/// lane the flush touches ([`IndexSlot::issue_tickets`], called in
+/// dispatch order from the single dispatcher thread); the worker runs one
+/// pass per touched shard, in ascending shard order, each inside
+/// [`IndexSlot::run_shard_turn`], which blocks until every earlier ticket
+/// on that lane has completed.
+///
+/// **Ordering.** Conflicting ops on the same id always hash to the same
+/// shard ([`crate::index::shard_of`]), and that lane's tickets are issued
+/// in dispatch (= arrival) order, so same-id pairs can never reorder.
+/// Queries scatter: they hold a ticket on *every* lane (the signature-
+/// level epoch barrier), so each shard scores a query at exactly the
+/// query's arrival position in that shard's mutation stream — releasing
+/// lane `s` before acquiring lane `s + 1` is safe because a later op
+/// holds later tickets on every lane it touches and therefore still
+/// observes the barrier op's effects (or pre-state) consistently.
+/// Snapshot and restore ops ride the same barrier, which is what makes a
+/// capture a consistent cut without ever freezing all lanes at once.
+///
+/// **Liveness.** The pool dequeues jobs FIFO and lane tickets are issued
+/// in dispatch order, so the earliest unfinished flush holds the head
+/// ticket of every lane it waits on; it always progresses, hence no
+/// deadlock — the same argument as the PR 2 single-lane design, per lane.
 pub struct IndexSlot {
     /// The signature this index serves (snapshot files are keyed on it).
     pub key: MapKey,
-    /// The ANN index. Lock it directly for out-of-band access; the
-    /// coordinator's flushes go through [`IndexSlot::run_in_turn`].
-    pub index: Mutex<Box<dyn AnnIndex>>,
-    /// Next ticket allowed to run its index phase.
-    turn: Mutex<u64>,
-    turn_done: Condvar,
-    /// Tickets handed out so far.
-    issued: AtomicU64,
-    /// Mutations (inserts + effective deletes) since the last snapshot —
-    /// drives the `snapshot_every_ops` periodic-snapshot trigger.
-    mutations: AtomicU64,
+    /// Per-shard lanes (length ≥ 1; 1 = the unsharded special case).
+    lanes: Vec<ShardLane>,
+    /// Shard passes currently executing (across all lanes).
+    active_passes: AtomicU64,
+    /// High-water of [`IndexSlot::active_passes`] — proves index phases
+    /// of one signature ran on more than one worker at once.
+    parallel_high_water: AtomicU64,
+    /// Serializes this signature's off-turn snapshot writes and restore
+    /// reads: sequence numbers are picked from a directory listing, so
+    /// two concurrent writers (pipelined explicit snapshots, or explicit
+    /// + periodic from adjacent flushes) could otherwise claim the same
+    /// sequence and interleave renames into a corrupt newest sequence.
+    /// Never held while a lane turn is held, so serving is unaffected.
+    snapshot_io: Mutex<()>,
 }
 
 impl IndexSlot {
-    fn new(key: MapKey, index: Box<dyn AnnIndex>) -> Self {
+    fn new(key: MapKey, shards: Vec<Box<dyn AnnIndex>>) -> Self {
+        assert!(!shards.is_empty(), "a slot needs at least one shard");
+        let lanes = shards
+            .into_iter()
+            .map(|index| {
+                let len = index.len() as u64;
+                ShardLane {
+                    index: Mutex::new(index),
+                    turn: Mutex::new(0),
+                    turn_done: Condvar::new(),
+                    issued: AtomicU64::new(0),
+                    len: AtomicU64::new(len),
+                    noted: AtomicU64::new(0),
+                    covered: AtomicU64::new(0),
+                }
+            })
+            .collect();
         Self {
             key,
-            index: Mutex::new(index),
-            turn: Mutex::new(0),
-            turn_done: Condvar::new(),
-            issued: AtomicU64::new(0),
-            mutations: AtomicU64::new(0),
+            lanes,
+            active_passes: AtomicU64::new(0),
+            parallel_high_water: AtomicU64::new(0),
+            snapshot_io: Mutex::new(()),
         }
     }
 
-    /// Record `n` mutations; returns the running total since the last
-    /// snapshot.
-    pub fn note_mutations(&self, n: u64) -> u64 {
-        self.mutations.fetch_add(n, Ordering::Relaxed) + n
+    /// Number of shards (= lanes).
+    pub fn shards(&self) -> usize {
+        self.lanes.len()
     }
 
-    /// Reset the mutation counter (after a successful snapshot/restore).
-    pub fn reset_mutations(&self) {
-        self.mutations.store(0, Ordering::Relaxed);
+    /// Record `n` effective mutations applied to `shard`. Must be called
+    /// while the lane's turn (or its index lock, out of band) is held, so
+    /// a cut reading [`IndexSlot::shard_noted`] during its own pass on
+    /// that lane observes exactly what its capture covers.
+    pub fn note_shard_mutations(&self, shard: usize, n: u64) {
+        self.lanes[shard].noted.fetch_add(n, Ordering::Relaxed);
     }
 
-    /// Reserve the next position in this signature's index order. Call in
-    /// dispatch order (the coordinator calls it from the dispatcher
-    /// thread, before submitting the flush to the worker pool).
-    pub fn issue_ticket(&self) -> u64 {
-        self.issued.fetch_add(1, Ordering::Relaxed)
+    /// Lifetime effective-mutation count of one lane (the cut watermark a
+    /// snapshot/restore records at its arrival position).
+    pub fn shard_noted(&self, shard: usize) -> u64 {
+        self.lanes[shard].noted.load(Ordering::Relaxed)
     }
 
-    /// Block until `ticket` is at the head of the order, run `f` on the
-    /// locked index, then release the turn to the next ticket. The
-    /// closure receives the owning `Box` so a `restore` op can swap the
-    /// whole index while the turn is held.
-    pub fn run_in_turn<R>(&self, ticket: u64, f: impl FnOnce(&mut Box<dyn AnnIndex>) -> R) -> R {
-        let mut turn = self.turn.lock().unwrap();
+    /// Advance one lane's covered watermark after a successful
+    /// snapshot/restore. `fetch_max` makes overlapping cuts commute —
+    /// whichever write finishes last, the covered watermark ends at the
+    /// newest cut, and mutations no cut captured stay pending (a plain
+    /// subtract/reset could wipe counts noted during a slow off-turn
+    /// write, silently widening the periodic-durability window).
+    pub fn cover_shard(&self, shard: usize, watermark: u64) {
+        self.lanes[shard].covered.fetch_max(watermark, Ordering::Relaxed);
+    }
+
+    /// Mutations not yet covered by any snapshot/restore cut — drives the
+    /// `snapshot_every_ops` periodic trigger (approximate under
+    /// concurrency; the trigger only needs a threshold).
+    pub fn pending_mutations(&self) -> u64 {
+        self.lanes
+            .iter()
+            .map(|l| {
+                l.noted
+                    .load(Ordering::Relaxed)
+                    .saturating_sub(l.covered.load(Ordering::Relaxed))
+            })
+            .sum()
+    }
+
+
+    /// Reserve the next position on each of the given lanes, in the order
+    /// given (callers pass ascending shard ids). Call in dispatch order —
+    /// the coordinator calls it from the single dispatcher thread, before
+    /// submitting the flush to the worker pool — so every lane's ticket
+    /// sequence equals arrival order.
+    pub fn issue_tickets(&self, shards: &[usize]) -> Vec<(usize, u64)> {
+        shards
+            .iter()
+            .map(|&s| (s, self.lanes[s].issued.fetch_add(1, Ordering::Relaxed)))
+            .collect()
+    }
+
+    /// Reserve the next position on **every** lane — the signature-level
+    /// epoch barrier (queries, stats, snapshot, restore).
+    pub fn issue_barrier(&self) -> Vec<(usize, u64)> {
+        self.issue_tickets(&(0..self.lanes.len()).collect::<Vec<usize>>())
+    }
+
+    /// Block until `ticket` is at the head of lane `shard`, run `f` on
+    /// the locked shard index, then release the turn to the next ticket.
+    /// The closure receives the owning `Box` so a `restore` op can swap
+    /// the shard's index while the turn is held.
+    pub fn run_shard_turn<R>(
+        &self,
+        shard: usize,
+        ticket: u64,
+        f: impl FnOnce(&mut Box<dyn AnnIndex>) -> R,
+    ) -> R {
+        let lane = &self.lanes[shard];
+        let mut turn = lane.turn.lock().unwrap();
         while *turn != ticket {
-            turn = self.turn_done.wait(turn).unwrap();
+            turn = lane.turn_done.wait(turn).unwrap();
         }
+        let active = self.active_passes.fetch_add(1, Ordering::Relaxed) + 1;
+        self.parallel_high_water.fetch_max(active, Ordering::Relaxed);
         let result = {
-            let mut index = self.index.lock().unwrap();
-            f(&mut index)
+            let mut index = lane.index.lock().unwrap();
+            let r = f(&mut index);
+            lane.len.store(index.len() as u64, Ordering::Relaxed);
+            r
         };
+        self.active_passes.fetch_sub(1, Ordering::Relaxed);
         *turn += 1;
-        self.turn_done.notify_all();
+        lane.turn_done.notify_all();
         result
+    }
+
+    /// Lock one shard's index directly (out-of-band access for tests and
+    /// ops tooling; coordinator flushes go through
+    /// [`IndexSlot::run_shard_turn`]).
+    pub fn lock_shard(&self, shard: usize) -> std::sync::MutexGuard<'_, Box<dyn AnnIndex>> {
+        self.lanes[shard].index.lock().unwrap()
+    }
+
+    /// Live item count per shard, as of each lane's last completed pass.
+    pub fn shard_lens(&self) -> Vec<u64> {
+        self.lanes.iter().map(|l| l.len.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Partition imbalance: `max − min` of the per-shard live counts (the
+    /// `index_shard_max_skew` gauge; 0 for a single shard).
+    pub fn max_skew(&self) -> u64 {
+        let lens = self.shard_lens();
+        match (lens.iter().max(), lens.iter().min()) {
+            (Some(mx), Some(mn)) => mx - mn,
+            _ => 0,
+        }
+    }
+
+    /// High-water of concurrently executing shard passes since creation.
+    pub fn parallel_high_water(&self) -> u64 {
+        self.parallel_high_water.load(Ordering::Relaxed)
     }
 }
 
@@ -417,11 +556,14 @@ pub type SharedIndex = Arc<IndexSlot>;
 
 /// Deterministic, thread-safe registry of per-signature ANN indexes.
 ///
-/// One index per [`MapKey`]: every item stored in an index was embedded by
-/// that key's projection map, so distances are comparable. Indexes are
-/// created lazily on the first index op for a signature; the LSH backend's
-/// hyperplanes are seeded from `(master_seed, key)` so a restarted
-/// coordinator reproduces identical bucket assignments.
+/// One sharded index per [`MapKey`]: every item stored in an index was
+/// embedded by that key's projection map, so distances are comparable.
+/// Indexes are created lazily on the first index op for a signature; the
+/// LSH backend's hyperplanes are seeded from `(master_seed, key)` so a
+/// restarted coordinator reproduces identical bucket assignments. Every
+/// shard of one signature shares that seed — per-shard hyperplanes would
+/// make LSH candidate sets (and therefore recall) depend on the shard
+/// count, breaking the bit-identity gate (`index::sharded` module docs).
 pub struct IndexRegistry {
     master_seed: u64,
     backend: BackendKind,
@@ -430,9 +572,11 @@ pub struct IndexRegistry {
     /// disables the `snapshot`/`restore` wire ops and periodic
     /// snapshots).
     snapshot_dir: Option<PathBuf>,
-    /// Rotation depth: how many snapshot files to keep per signature
+    /// Rotation depth: how many snapshot sequences to keep per signature
     /// (oldest pruned after each successful write; minimum 1).
     snapshot_keep: usize,
+    /// Shards per signature (minimum 1 = unsharded).
+    shards: usize,
     indexes: Mutex<HashMap<MapKey, SharedIndex>>,
 }
 
@@ -440,53 +584,227 @@ pub struct IndexRegistry {
 /// snapshot that lands torn or wrong still leaves a recovery point.
 pub const DEFAULT_SNAPSHOT_KEEP: usize = 2;
 
-/// Snapshot file-name prefix of a signature: a salted key hash, stable
+/// Default shard count: unsharded (one lane per signature).
+pub const DEFAULT_INDEX_SHARDS: usize = 1;
+
+/// Snapshot file-name stem of a signature: a salted key hash, stable
 /// across master seeds and processes so `--restore` finds files by
-/// content. Full names are `<prefix>.<seq>.snap` with a monotonically
-/// increasing per-signature sequence number (rotation), and the legacy
-/// unsequenced `<prefix>.snap` reads as sequence 0.
-fn snapshot_prefix(key: &MapKey) -> String {
+/// content. A snapshot sequence `<seq>` consists of per-shard files
+/// `<stem>.<seq>.shard<j>.snap` plus the checksummed root
+/// `<stem>.<seq>.manifest` (written last — a sequence without a readable
+/// manifest is never restored). Legacy pre-shard files `<stem>.<seq>.snap`
+/// and unsequenced `<stem>.snap` (reads as sequence 0) restore by
+/// re-partitioning their pairs into the configured shard count.
+pub fn snapshot_file_stem(key: &MapKey) -> String {
     format!("sig_{:016x}", map_key_seed(0x5EED_F11E, key))
 }
 
-/// Split a snapshot file name into `(signature stem, sequence)`.
-/// `sig_ab.00000003.snap → ("sig_ab", 3)`, legacy `sig_ab.snap →
-/// ("sig_ab", 0)`; `None` for non-snapshot names.
-fn parse_snap_name(name: &str) -> Option<(String, u64)> {
-    let rest = name.strip_suffix(".snap")?;
-    if let Some((stem, seq)) = rest.rsplit_once('.') {
-        if let Ok(s) = seq.parse::<u64>() {
-            return Some((stem.to_string(), s));
-        }
-    }
-    Some((rest.to_string(), 0))
+/// What role a snapshot-directory file plays in a sequence.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum SnapKind {
+    /// Pre-shard single-file snapshot (`<stem>[.<seq>].snap`).
+    Legacy,
+    /// One shard's file of a sharded sequence
+    /// (`<stem>.<seq>.shard<j>.snap`).
+    Shard,
+    /// Sharded sequence root (`<stem>.<seq>.manifest`).
+    Manifest,
 }
 
-/// All snapshot files of one signature in `dir`, ascending by sequence.
-/// IO errors propagate: treating an unreadable directory as "no
-/// snapshots" would restart the rotation sequence below existing files
-/// (so a later restore would silently load a stale higher sequence).
-fn list_snapshots(dir: &Path, prefix: &str) -> std::result::Result<Vec<(u64, PathBuf)>, String> {
+/// Split a snapshot-directory file name into `(stem, sequence, kind)`;
+/// `None` for names that belong to no snapshot layout.
+fn parse_snapshot_name(name: &str) -> Option<(String, u64, SnapKind)> {
+    if let Some(rest) = name.strip_suffix(".manifest") {
+        let (stem, seq) = rest.rsplit_once('.')?;
+        let seq = seq.parse::<u64>().ok()?;
+        return Some((stem.to_string(), seq, SnapKind::Manifest));
+    }
+    let rest = name.strip_suffix(".snap")?;
+    if let Some((front, last)) = rest.rsplit_once('.') {
+        if last.strip_prefix("shard").is_some_and(|j| j.parse::<usize>().is_ok()) {
+            let (stem, seq) = front.rsplit_once('.')?;
+            let seq = seq.parse::<u64>().ok()?;
+            return Some((stem.to_string(), seq, SnapKind::Shard));
+        }
+        if let Ok(seq) = last.parse::<u64>() {
+            return Some((front.to_string(), seq, SnapKind::Legacy));
+        }
+    }
+    Some((rest.to_string(), 0, SnapKind::Legacy))
+}
+
+/// The files of one snapshot sequence.
+#[derive(Debug, Default)]
+struct SeqFiles {
+    manifest: Option<PathBuf>,
+    shards: Vec<PathBuf>,
+    legacy: Option<PathBuf>,
+}
+
+impl SeqFiles {
+    /// A sequence restores iff its root exists: the manifest (sharded) or
+    /// the legacy single file. Orphan shard files — a crash between shard
+    /// writes and the manifest rename — are never restored from.
+    fn restorable(&self) -> bool {
+        self.manifest.is_some() || self.legacy.is_some()
+    }
+}
+
+/// All snapshot sequences of one signature in `dir`, ascending. IO errors
+/// propagate: treating an unreadable directory as "no snapshots" would
+/// restart the rotation sequence below existing files (so a later restore
+/// would silently load a stale higher sequence).
+fn list_sequences(dir: &Path, stem: &str) -> std::result::Result<Vec<(u64, SeqFiles)>, String> {
     let rd = std::fs::read_dir(dir).map_err(|e| format!("read {}: {e}", dir.display()))?;
-    let mut found: Vec<(u64, PathBuf)> = Vec::new();
+    let mut map: BTreeMap<u64, SeqFiles> = BTreeMap::new();
     for entry in rd {
         let p = entry.map_err(|e| format!("read {}: {e}", dir.display()))?.path();
         let name = match p.file_name().and_then(|s| s.to_str()) {
             Some(n) => n.to_string(),
             None => continue,
         };
-        if let Some((stem, seq)) = parse_snap_name(&name) {
-            if stem == prefix {
-                found.push((seq, p));
+        if let Some((s, seq, kind)) = parse_snapshot_name(&name) {
+            if s != stem {
+                continue;
+            }
+            let e = map.entry(seq).or_default();
+            match kind {
+                SnapKind::Manifest => e.manifest = Some(p),
+                SnapKind::Shard => e.shards.push(p),
+                SnapKind::Legacy => e.legacy = Some(p),
             }
         }
     }
-    found.sort();
-    Ok(found)
+    Ok(map.into_iter().collect())
+}
+
+/// A decoded snapshot source — a sharded manifest sequence or a legacy
+/// single file — flattened to signature level so it can re-partition into
+/// any shard count (answers are shard-count invariant).
+struct SnapshotSource {
+    key: MapKey,
+    backend: BackendKind,
+    lsh: LshConfig,
+    seed: u64,
+    dim: usize,
+    inserts: u64,
+    deletes: u64,
+    queries: u64,
+    items: Vec<(u64, Vec<f64>)>,
+}
+
+/// Read the newest restorable sequence of `stem` in `dir`. Manifest
+/// sequences verify every shard file against the manifest's whole-file
+/// checksum and item count before trusting it; a corrupt member fails the
+/// read loudly (older sequences stay on disk for manual recovery).
+fn read_snapshot_source(dir: &Path, stem: &str) -> std::result::Result<SnapshotSource, String> {
+    let seqs = list_sequences(dir, stem)?;
+    let (_, files) = seqs
+        .into_iter()
+        .rev()
+        .find(|(_, f)| f.restorable())
+        .ok_or_else(|| format!("no snapshot for this signature in {}", dir.display()))?;
+    if let Some(mpath) = files.manifest {
+        let manifest =
+            ShardManifest::read(&mpath).map_err(|e| format!("{}: {e}", mpath.display()))?;
+        let key = MapKey::decode(&manifest.key_bytes)
+            .map_err(|e| format!("{}: {e}", mpath.display()))?;
+        let mut snaps: Vec<IndexSnapshot> = Vec::with_capacity(manifest.shards.len());
+        for entry in &manifest.shards {
+            let spath = dir.join(&entry.file);
+            let bytes = std::fs::read(&spath)
+                .map_err(|e| format!("read {}: {e}", spath.display()))?;
+            if persist::fnv1a(&bytes) != entry.checksum {
+                return Err(format!(
+                    "{}: shard file checksum disagrees with the manifest",
+                    spath.display()
+                ));
+            }
+            let snap = IndexSnapshot::decode(&bytes)
+                .map_err(|e| format!("{}: {e}", spath.display()))?;
+            if snap.key_bytes != manifest.key_bytes {
+                return Err(format!(
+                    "{}: shard file belongs to another signature",
+                    spath.display()
+                ));
+            }
+            if snap.items.len() as u64 != entry.items {
+                return Err(format!(
+                    "{}: item count disagrees with the manifest",
+                    spath.display()
+                ));
+            }
+            snaps.push(snap);
+        }
+        let (backend, lsh, seed, dim) =
+            (snaps[0].backend, snaps[0].lsh, snaps[0].seed, snaps[0].dim);
+        let mut inserts = 0u64;
+        let mut deletes = 0u64;
+        let mut queries = 0u64;
+        let mut items = Vec::with_capacity(snaps.iter().map(|s| s.items.len()).sum());
+        for snap in snaps {
+            if (snap.backend, snap.dim) != (backend, dim) {
+                return Err(format!(
+                    "{}: shard files disagree on backend identity",
+                    mpath.display()
+                ));
+            }
+            // Mutation counters sum across shards; the query counter takes
+            // the max (every query scattered to every shard, so each
+            // shard's counter already equals the signature total).
+            inserts += snap.inserts;
+            deletes += snap.deletes;
+            queries = queries.max(snap.queries);
+            items.extend(snap.items);
+        }
+        Ok(SnapshotSource { key, backend, lsh, seed, dim, inserts, deletes, queries, items })
+    } else {
+        let path = files.legacy.expect("restorable sequence has a root");
+        let snap = IndexSnapshot::read(&path).map_err(|e| format!("{}: {e}", path.display()))?;
+        let key = MapKey::decode(&snap.key_bytes).map_err(|e| format!("{}: {e}", path.display()))?;
+        Ok(SnapshotSource {
+            key,
+            backend: snap.backend,
+            lsh: snap.lsh,
+            seed: snap.seed,
+            dim: snap.dim,
+            inserts: snap.inserts,
+            deletes: snap.deletes,
+            queries: snap.queries,
+            items: snap.items,
+        })
+    }
+}
+
+/// Re-partition a snapshot source into `shards` fresh backend shards (the
+/// legacy-migration path when the source was unsharded or sharded
+/// differently): every pair routes by [`shard_of`], counters restore
+/// through the shared re-attribution rule
+/// ([`crate::index::restore_shard_counters`]).
+fn build_shards(src: SnapshotSource, shards: usize) -> Vec<Box<dyn AnnIndex>> {
+    let mut out: Vec<Box<dyn AnnIndex>> = (0..shards)
+        .map(|_| build_index(src.backend, src.dim, &src.lsh, src.seed))
+        .collect();
+    for (id, v) in &src.items {
+        out[shard_of(*id, shards)].insert(*id, v);
+    }
+    crate::index::restore_shard_counters(&mut out, src.inserts, src.deletes, src.queries);
+    out
+}
+
+/// Pre-built replacement shards for an in-turn restore: resolved off-turn
+/// (file reads, checksum verification, re-partition, rebuild) so each
+/// lane is held only for the pointer swap.
+pub struct RestorePlan {
+    /// Replacement index per shard, taken during that lane's pass.
+    pub shards: Vec<Option<Box<dyn AnnIndex>>>,
+    /// Total live items restored.
+    pub items: u64,
 }
 
 impl IndexRegistry {
-    /// New registry creating `backend` indexes (LSH shape from `lsh`).
+    /// New registry creating `backend` indexes (LSH shape from `lsh`),
+    /// unsharded by default ([`IndexRegistry::with_shards`]).
     pub fn new(master_seed: u64, backend: BackendKind, lsh: LshConfig) -> Self {
         Self {
             master_seed,
@@ -494,6 +812,7 @@ impl IndexRegistry {
             lsh,
             snapshot_dir: None,
             snapshot_keep: DEFAULT_SNAPSHOT_KEEP,
+            shards: DEFAULT_INDEX_SHARDS,
             indexes: Mutex::new(HashMap::new()),
         }
     }
@@ -505,15 +824,27 @@ impl IndexRegistry {
     }
 
     /// Set the per-signature rotation depth (builder-style; clamped to
-    /// ≥ 1 — "keep zero snapshots" would delete the file just written).
+    /// ≥ 1 — "keep zero snapshots" would delete the sequence just
+    /// written).
     pub fn with_snapshot_keep(mut self, keep: usize) -> Self {
         self.snapshot_keep = keep.max(1);
+        self
+    }
+
+    /// Set the per-signature shard count (builder-style; clamped to ≥ 1).
+    pub fn with_shards(mut self, shards: usize) -> Self {
+        self.shards = shards.max(1);
         self
     }
 
     /// The configured snapshot directory, when any.
     pub fn snapshot_dir(&self) -> Option<&Path> {
         self.snapshot_dir.as_deref()
+    }
+
+    /// The configured per-signature shard count.
+    pub fn shards(&self) -> usize {
+        self.shards
     }
 
     /// Get or lazily create the index slot for `key` (dimension `key.k`).
@@ -523,137 +854,218 @@ impl IndexRegistry {
             return Arc::clone(slot);
         }
         // Perturb the master so the hyperplane stream differs from the
-        // projection map drawn for the same key.
+        // projection map drawn for the same key. Every shard gets the
+        // SAME seed — shard-invariant LSH codes are what make sharded
+        // answers bit-identical to unsharded ones (struct docs).
         let seed = map_key_seed(self.master_seed ^ 0xA11_1DE8_5EED, key);
-        let slot = Arc::new(IndexSlot::new(
-            key.clone(),
-            build_index(self.backend, key.k, &self.lsh, seed),
-        ));
+        let backends: Vec<Box<dyn AnnIndex>> = (0..self.shards)
+            .map(|_| build_index(self.backend, key.k, &self.lsh, seed))
+            .collect();
+        let slot = Arc::new(IndexSlot::new(key.clone(), backends));
         indexes.insert(key.clone(), Arc::clone(&slot));
         slot
     }
 
-    /// Write a snapshot of `index` (the live contents of `slot`) to the
-    /// configured directory under the signature's next sequence number,
-    /// then prune the oldest files beyond the rotation depth (only after
-    /// the atomic rename succeeded — a failed write never costs an
-    /// existing recovery point). The caller must hold the slot's
-    /// sequencer turn (or otherwise own the index) so the capture is a
-    /// consistent cut between index ops.
-    pub fn snapshot_slot(
+    /// Write one snapshot sequence from per-shard captures (one
+    /// [`IndexSnapshot`] per shard, in shard order): each shard file is
+    /// written atomically, then the checksummed manifest (the sequence
+    /// root) last, then sequences beyond the rotation depth are pruned —
+    /// only after the manifest rename succeeded, so a failed write never
+    /// costs an existing recovery point.
+    ///
+    /// The captures are frozen views (copy-on-write capture): the
+    /// coordinator copies each shard's live pairs inside that lane's
+    /// sequencer turn and calls this *off-turn*, so encoding and disk IO
+    /// of a big corpus never stall the signature's lanes.
+    pub fn write_snapshot(
         &self,
         slot: &IndexSlot,
-        index: &dyn AnnIndex,
+        captures: &[IndexSnapshot],
     ) -> std::result::Result<SnapshotReport, String> {
+        let key = &slot.key;
         let dir = self.snapshot_dir.as_ref().ok_or("no snapshot_dir configured")?;
-        std::fs::create_dir_all(dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
-        let snap = IndexSnapshot::capture(slot.key.encode(), index);
-        let prefix = snapshot_prefix(&slot.key);
-        let mut existing = list_snapshots(dir, &prefix)?;
-        let seq = existing.last().map(|(s, _)| s + 1).unwrap_or(1);
-        let path = dir.join(format!("{prefix}.{seq:08}.snap"));
-        let items = snap.items.len() as u64;
-        let bytes = snap.write_atomic(&path)?;
-        existing.push((seq, path.clone()));
-        while existing.len() > self.snapshot_keep {
-            // Best-effort prune: a leftover old file is re-pruned next
-            // time and never shadows the newest sequence on restore.
-            let (_, old) = existing.remove(0);
-            let _ = std::fs::remove_file(old);
+        if captures.is_empty() {
+            return Err("snapshot write needs at least one shard capture".into());
         }
-        Ok(SnapshotReport { path: path.display().to_string(), items, bytes })
+        // Serialize with this signature's other off-turn snapshot IO —
+        // concurrent writers would claim the same sequence number.
+        let _io = slot.snapshot_io.lock().unwrap();
+        std::fs::create_dir_all(dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
+        let stem = snapshot_file_stem(key);
+        let seq = list_sequences(dir, &stem)?.last().map(|(s, _)| s + 1).unwrap_or(1);
+        let mut entries = Vec::with_capacity(captures.len());
+        let mut items_total = 0u64;
+        let mut bytes_total = 0u64;
+        for (j, snap) in captures.iter().enumerate() {
+            let name = format!("{stem}.{seq:08}.shard{j}.snap");
+            let bytes = snap.encode();
+            persist::write_bytes_atomic(&dir.join(&name), &bytes)?;
+            items_total += snap.items.len() as u64;
+            bytes_total += bytes.len() as u64;
+            entries.push(ManifestShard {
+                file: name,
+                items: snap.items.len() as u64,
+                checksum: persist::fnv1a(&bytes),
+            });
+        }
+        let manifest = ShardManifest { key_bytes: key.encode(), shards: entries };
+        let mpath = dir.join(format!("{stem}.{seq:08}.manifest"));
+        bytes_total += manifest.write_atomic(&mpath)?;
+        // Prune beyond the rotation depth. Orphan sequences (shard files
+        // without a manifest — a crashed write) older than the kept
+        // window are swept too; they were never restorable.
+        let seqs = list_sequences(dir, &stem)?;
+        let restorable = seqs.iter().filter(|(_, f)| f.restorable()).count();
+        let mut to_drop = restorable.saturating_sub(self.snapshot_keep);
+        for (s, files) in seqs {
+            if to_drop == 0 || s >= seq {
+                break;
+            }
+            let was_restorable = files.restorable();
+            if let Some(m) = files.manifest {
+                let _ = std::fs::remove_file(m);
+            }
+            for p in files.shards {
+                let _ = std::fs::remove_file(p);
+            }
+            if let Some(l) = files.legacy {
+                let _ = std::fs::remove_file(l);
+            }
+            if was_restorable {
+                to_drop -= 1;
+            }
+        }
+        Ok(SnapshotReport {
+            path: mpath.display().to_string(),
+            items: items_total,
+            bytes: bytes_total,
+        })
     }
 
-    /// Reload `slot`'s index from its newest snapshot file in the
-    /// configured directory, replacing the live contents. Caller must
-    /// hold the slot's sequencer turn. Returns the restored item count.
-    pub fn restore_slot(
-        &self,
-        slot: &IndexSlot,
-        index: &mut Box<dyn AnnIndex>,
-    ) -> std::result::Result<u64, String> {
+    /// Out-of-band snapshot of a slot (tests, tooling): captures each
+    /// shard under its lock in ascending shard order, then writes the
+    /// sequence. Unlike the coordinator's flushes — which capture inside
+    /// each lane's sequencer turn at one arrival position — this cut is
+    /// only per-shard consistent; call it on a quiescent slot when a
+    /// signature-wide arrival-order cut matters. Mutation watermarks are
+    /// recorded per shard at capture time and covered only on success,
+    /// so concurrent traffic is never silently marked as durable.
+    pub fn snapshot_slot(&self, slot: &IndexSlot) -> std::result::Result<SnapshotReport, String> {
+        if self.snapshot_dir.is_none() {
+            return Err("no snapshot_dir configured".into());
+        }
+        let mut captures = Vec::with_capacity(slot.shards());
+        let mut marks = Vec::with_capacity(slot.shards());
+        for s in 0..slot.shards() {
+            let guard = slot.lock_shard(s);
+            captures.push(IndexSnapshot::capture(slot.key.encode(), guard.as_ref()));
+            // Read under the index lock: mutation noting happens while
+            // that lock is held, so the watermark matches the capture.
+            marks.push((s, slot.shard_noted(s)));
+        }
+        let report = self.write_snapshot(slot, &captures)?;
+        for (s, w) in marks {
+            slot.cover_shard(s, w);
+        }
+        Ok(report)
+    }
+
+    /// Build the replacement shards for restoring `slot` from its newest
+    /// snapshot sequence — file reads, checksum verification and the
+    /// re-partition all happen here, off-turn, so lanes are later held
+    /// only for the pointer swap. Works for both sharded sequences and
+    /// legacy single-file snapshots (pairs re-partition by [`shard_of`]
+    /// into the slot's shard count).
+    pub fn restore_plan(&self, slot: &IndexSlot) -> std::result::Result<RestorePlan, String> {
         let dir = self.snapshot_dir.as_ref().ok_or("no snapshot_dir configured")?;
-        let prefix = snapshot_prefix(&slot.key);
-        let snaps = list_snapshots(dir, &prefix)?;
-        let (_, path) = snaps
-            .last()
-            .ok_or_else(|| format!("no snapshot for this signature in {}", dir.display()))?;
-        let snap = IndexSnapshot::read(path)?;
-        let key = MapKey::decode(&snap.key_bytes)?;
-        if key != slot.key {
-            return Err(format!("snapshot {} belongs to another signature", path.display()));
+        let stem = snapshot_file_stem(&slot.key);
+        // Serialize with in-flight snapshot writes so rotation can never
+        // prune a sequence out from under this read. Note the weaker
+        // cross-op ordering this buys: a snapshot's files land *after*
+        // its lanes release, so a restore pipelined behind a snapshot
+        // without awaiting its reply may still resolve the previous
+        // sequence — the snapshot reply (sent only after the manifest
+        // rename) is the read-your-writes barrier clients should await.
+        let src = {
+            let _io = slot.snapshot_io.lock().unwrap();
+            read_snapshot_source(dir, &stem)?
+        };
+        if src.key != slot.key {
+            return Err("snapshot belongs to another signature".into());
         }
         // A wrong-dimension index would panic on the next insert — inside
-        // the held sequencer turn, wedging the signature's lane. Reject.
-        if snap.dim != slot.key.k {
+        // a held sequencer turn, wedging the signature's lanes. Reject.
+        if src.dim != slot.key.k {
             return Err(format!(
-                "snapshot {} dim {} != signature k {}",
-                path.display(),
-                snap.dim,
-                slot.key.k
+                "snapshot dim {} != signature k {}",
+                src.dim, slot.key.k
             ));
         }
-        *index = snap.build();
-        slot.reset_mutations();
-        Ok(snap.items.len() as u64)
+        let items = src.items.len() as u64;
+        let shards = build_shards(src, slot.shards());
+        Ok(RestorePlan { shards: shards.into_iter().map(Some).collect(), items })
     }
 
-    /// Load the **newest** snapshot of every signature in `dir` into the
-    /// registry (crash recovery at startup, before traffic): rotation
-    /// keeps up to `snapshot_keep` sequenced files per signature, and
-    /// recovery reads only the highest sequence of each. A corrupt or
-    /// foreign newest file fails the whole restore — a half-recovered
-    /// corpus silently serving wrong results is worse than a loud startup
-    /// error (older rotations stay on disk for manual recovery). Returns
-    /// `(signatures, total items)` restored.
+    /// Out-of-band restore of a slot (tests, tooling): builds the plan,
+    /// swaps every shard under its lock, covering each shard's mutation
+    /// watermark at its swap position (the reload discards everything
+    /// applied so far). Returns the restored item count.
+    pub fn restore_slot(&self, slot: &IndexSlot) -> std::result::Result<u64, String> {
+        let plan = self.restore_plan(slot)?;
+        for (s, replacement) in plan.shards.into_iter().enumerate() {
+            let replacement = replacement.expect("plan covers every shard");
+            let len = replacement.len() as u64;
+            let mut guard = slot.lanes[s].index.lock().unwrap();
+            *guard = replacement;
+            slot.lanes[s].len.store(len, Ordering::Relaxed);
+            slot.cover_shard(s, slot.shard_noted(s));
+            drop(guard);
+        }
+        Ok(plan.items)
+    }
+
+    /// Load the **newest** restorable sequence of every signature in
+    /// `dir` into the registry (crash recovery at startup, before
+    /// traffic), re-partitioning each into the configured shard count. A
+    /// corrupt or foreign newest sequence fails the whole restore — a
+    /// half-recovered corpus silently serving wrong results is worse than
+    /// a loud startup error (older sequences stay on disk for manual
+    /// recovery). Returns `(signatures, total items)` restored.
     pub fn restore_all(&self, dir: &Path) -> std::result::Result<(usize, u64), String> {
-        let paths: Vec<PathBuf> = std::fs::read_dir(dir)
-            .map_err(|e| format!("read {}: {e}", dir.display()))?
-            .filter_map(|e| e.ok().map(|e| e.path()))
-            .filter(|p| p.extension().is_some_and(|x| x == "snap"))
-            .collect();
-        // Newest sequence per signature stem (legacy unsequenced files
-        // read as sequence 0, so a sequenced successor supersedes them).
-        let mut newest: HashMap<String, (u64, PathBuf)> = HashMap::new();
-        for path in paths {
-            let name = match path.file_name().and_then(|s| s.to_str()) {
+        let rd = std::fs::read_dir(dir).map_err(|e| format!("read {}: {e}", dir.display()))?;
+        // Signatures are stems with at least one sequence root (manifest
+        // or legacy file); bare shard files never restore. BTreeSet makes
+        // the load order deterministic.
+        let mut stems: BTreeSet<String> = BTreeSet::new();
+        for entry in rd {
+            let p = entry.map_err(|e| format!("read {}: {e}", dir.display()))?.path();
+            let name = match p.file_name().and_then(|s| s.to_str()) {
                 Some(n) => n.to_string(),
                 None => continue,
             };
-            let (stem, seq) = match parse_snap_name(&name) {
-                Some(parts) => parts,
-                None => continue,
-            };
-            let supersedes = match newest.get(&stem) {
-                Some((best, _)) => seq > *best,
-                None => true,
-            };
-            if supersedes {
-                newest.insert(stem, (seq, path));
+            if let Some((stem, _, kind)) = parse_snapshot_name(&name) {
+                if matches!(kind, SnapKind::Manifest | SnapKind::Legacy) {
+                    stems.insert(stem);
+                }
             }
         }
-        let mut loads: Vec<&(u64, PathBuf)> = newest.values().collect();
-        loads.sort();
         let mut indexes = self.indexes.lock().unwrap();
         let mut items = 0u64;
-        for (_, path) in loads {
-            let snap =
-                IndexSnapshot::read(path).map_err(|e| format!("{}: {e}", path.display()))?;
-            let key = MapKey::decode(&snap.key_bytes)
-                .map_err(|e| format!("{}: {e}", path.display()))?;
-            if snap.dim != key.k {
+        let count = stems.len();
+        for stem in stems {
+            let src = read_snapshot_source(dir, &stem).map_err(|e| format!("{stem}: {e}"))?;
+            if src.dim != src.key.k {
                 return Err(format!(
-                    "{}: snapshot dim {} != signature k {}",
-                    path.display(),
-                    snap.dim,
-                    key.k
+                    "{stem}: snapshot dim {} != signature k {}",
+                    src.dim, src.key.k
                 ));
             }
-            items += snap.items.len() as u64;
-            let slot = Arc::new(IndexSlot::new(key.clone(), snap.build()));
-            indexes.insert(key, slot);
+            let key = src.key.clone();
+            items += src.items.len() as u64;
+            let shards = build_shards(src, self.shards);
+            indexes.insert(key.clone(), Arc::new(IndexSlot::new(key, shards)));
         }
-        Ok((newest.len(), items))
+        Ok((count, items))
     }
 
     /// Number of live indexes.
@@ -759,20 +1171,21 @@ mod tests {
         let b = reg.get_or_create(&tt_key());
         assert!(Arc::ptr_eq(&a, &b));
         assert_eq!(reg.len(), 1);
-        assert_eq!(a.index.lock().unwrap().dim(), tt_key().k);
+        assert_eq!(a.shards(), 1, "default is unsharded");
+        assert_eq!(a.lock_shard(0).dim(), tt_key().k);
     }
 
     #[test]
-    fn index_slot_runs_tickets_in_issue_order() {
+    fn index_slot_runs_lane_tickets_in_issue_order() {
         let reg = IndexRegistry::new(
             1,
             crate::index::BackendKind::Flat,
             crate::index::LshConfig::default(),
         );
         let slot = reg.get_or_create(&tt_key());
-        let t0 = slot.issue_ticket();
-        let t1 = slot.issue_ticket();
-        assert_eq!((t0, t1), (0, 1));
+        let t0 = slot.issue_tickets(&[0]);
+        let t1 = slot.issue_tickets(&[0]);
+        assert_eq!((t0[0], t1[0]), ((0, 0), (0, 1)));
         let log = Arc::new(Mutex::new(Vec::new()));
         // Run the *later* ticket on another thread first: it must block
         // until the earlier ticket completes.
@@ -780,13 +1193,68 @@ mod tests {
             let slot = Arc::clone(&slot);
             let log = Arc::clone(&log);
             std::thread::spawn(move || {
-                slot.run_in_turn(t1, |_| log.lock().unwrap().push(1));
+                slot.run_shard_turn(0, 1, |_| log.lock().unwrap().push(1));
             })
         };
         std::thread::sleep(std::time::Duration::from_millis(20));
-        slot.run_in_turn(t0, |_| log.lock().unwrap().push(0));
+        slot.run_shard_turn(0, 0, |_| log.lock().unwrap().push(0));
         handle.join().unwrap();
         assert_eq!(*log.lock().unwrap(), vec![0, 1]);
+    }
+
+    #[test]
+    fn shard_lanes_sequence_independently() {
+        // A held turn on one lane must not stall another lane — that
+        // independence is the whole point of sharding the slot.
+        let reg = IndexRegistry::new(
+            1,
+            crate::index::BackendKind::Flat,
+            crate::index::LshConfig::default(),
+        )
+        .with_shards(2);
+        let slot = reg.get_or_create(&tt_key());
+        assert_eq!(slot.shards(), 2);
+        // Hold lane 1's first turn open on another thread.
+        let (hold_tx, hold_rx) = std::sync::mpsc::channel::<()>();
+        let (entered_tx, entered_rx) = std::sync::mpsc::channel::<()>();
+        let holder = {
+            let slot = Arc::clone(&slot);
+            std::thread::spawn(move || {
+                slot.run_shard_turn(1, 0, |_| {
+                    entered_tx.send(()).unwrap();
+                    hold_rx.recv().unwrap();
+                });
+            })
+        };
+        entered_rx.recv().unwrap();
+        // Lane 0 advances while lane 1 is held.
+        let before = std::time::Instant::now();
+        slot.run_shard_turn(0, 0, |index| index.insert(4, &vec![0.0; tt_key().k]));
+        assert!(
+            before.elapsed() < std::time::Duration::from_secs(2),
+            "lane 0 must not wait for lane 1's held turn"
+        );
+        hold_tx.send(()).unwrap();
+        holder.join().unwrap();
+        // Both lanes saw exactly one pass; skew reflects the lone insert.
+        assert_eq!(slot.shard_lens(), vec![1, 0]);
+        assert_eq!(slot.max_skew(), 1);
+        assert!(slot.parallel_high_water() >= 1);
+    }
+
+    #[test]
+    fn barrier_tickets_cover_every_lane() {
+        let reg = IndexRegistry::new(
+            1,
+            crate::index::BackendKind::Flat,
+            crate::index::LshConfig::default(),
+        )
+        .with_shards(3);
+        let slot = reg.get_or_create(&tt_key());
+        let tickets = slot.issue_barrier();
+        assert_eq!(tickets, vec![(0, 0), (1, 0), (2, 0)]);
+        let tickets = slot.issue_tickets(&[2]);
+        assert_eq!(tickets, vec![(2, 1)], "lanes advance independently");
     }
 
     #[test]
@@ -824,39 +1292,146 @@ mod tests {
         let slot = reg.get_or_create(&tt_key());
         let mut rng = Rng::seed_from(4);
         let qs: Vec<Vec<f64>> = (0..4).map(|_| rng.gaussian_vec(tt_key().k, 1.0)).collect();
-        let report = {
-            let mut index = slot.index.lock().unwrap();
+        {
+            let mut index = slot.lock_shard(0);
             for i in 0..12u64 {
                 index.insert(i, &rng.gaussian_vec(tt_key().k, 1.0));
             }
-            reg.snapshot_slot(&slot, index.as_ref()).unwrap()
-        };
+        }
+        let report = reg.snapshot_slot(&slot).unwrap();
         assert_eq!(report.items, 12);
         assert!(report.bytes > 0);
-        // A fresh registry (same master seed) restores bit-identically.
+        assert!(report.path.ends_with(".manifest"), "report points at the sequence root");
+        // A fresh registry (same master seed), sharded 3-way, restores
+        // bit-identically: the legacy-free migration path re-partitions.
         let reg2 = IndexRegistry::new(
             7,
             crate::index::BackendKind::Lsh,
             crate::index::LshConfig { tables: 3, bits: 5, probes: 2 },
-        );
+        )
+        .with_shards(3);
         let (sigs, items) = reg2.restore_all(&dir).unwrap();
         assert_eq!((sigs, items), (1, 12));
         let slot2 = reg2.get_or_create(&tt_key());
+        assert_eq!(slot2.shards(), 3);
+        assert_eq!(slot2.shard_lens().iter().sum::<u64>(), 12);
         let mut ws = crate::projections::Workspace::new();
-        let mut ws2 = crate::projections::Workspace::new();
         for q in &qs {
-            assert_eq!(
-                slot.index.lock().unwrap().query(q, 3, &mut ws),
-                slot2.index.lock().unwrap().query(q, 3, &mut ws2),
-            );
+            let want = slot.lock_shard(0).query(q, 3, &mut ws);
+            // Scatter-gather over the restored shards must agree bitwise.
+            let got = (0..3).fold(Vec::new(), |acc, s| {
+                let res = slot2.lock_shard(s).query(q, 3, &mut ws);
+                crate::index::merge_neighbors(acc, res, 3)
+            });
+            assert_eq!(got, want);
         }
+        // Aggregated counters survive the re-partition.
+        let total_inserts: u64 = (0..3).map(|s| slot2.lock_shard(s).stats().inserts).sum();
+        assert_eq!(total_inserts, 12);
         // Without a snapshot_dir the ops fail loudly instead of writing
         // somewhere surprising.
         let slot3 = reg2.get_or_create(&tt_key());
-        let mut index3 = slot3.index.lock().unwrap();
-        assert!(reg2.snapshot_slot(&slot3, index3.as_ref()).is_err());
-        assert!(reg2.restore_slot(&slot3, &mut index3).is_err());
-        drop(index3);
+        assert!(reg2.snapshot_slot(&slot3).is_err());
+        assert!(reg2.restore_slot(&slot3).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sharded_snapshot_writes_manifest_plus_shard_files() {
+        let dir = std::env::temp_dir()
+            .join(format!("trp_state_shardsnap_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let reg = IndexRegistry::new(
+            3,
+            crate::index::BackendKind::Flat,
+            crate::index::LshConfig::default(),
+        )
+        .with_snapshot_dir(Some(dir.clone()))
+        .with_shards(4);
+        let slot = reg.get_or_create(&tt_key());
+        for i in 0..40u64 {
+            let s = shard_of(i, 4);
+            slot.lock_shard(s).insert(i, &vec![i as f64; tt_key().k]);
+        }
+        let report = reg.snapshot_slot(&slot).unwrap();
+        assert_eq!(report.items, 40);
+        let stem = snapshot_file_stem(&tt_key());
+        let seqs = list_sequences(&dir, &stem).unwrap();
+        assert_eq!(seqs.len(), 1);
+        let (_, files) = &seqs[0];
+        assert!(files.manifest.is_some());
+        assert_eq!(files.shards.len(), 4, "one file per shard");
+        assert!(files.legacy.is_none());
+        // Restoring into a differently-sharded registry keeps every item.
+        let reg2 = IndexRegistry::new(
+            3,
+            crate::index::BackendKind::Flat,
+            crate::index::LshConfig::default(),
+        )
+        .with_shards(2);
+        assert_eq!(reg2.restore_all(&dir).unwrap(), (1, 40));
+        let slot2 = reg2.get_or_create(&tt_key());
+        let mut seen = Vec::new();
+        for s in 0..2 {
+            slot2.lock_shard(s).for_each_live(&mut |id, v| {
+                assert_eq!(v, &vec![id as f64; tt_key().k][..]);
+                seen.push(id);
+            });
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..40).collect::<Vec<u64>>());
+        // A corrupted shard file fails the restore loudly.
+        let shard_path = files.shards[0].clone();
+        let mut bytes = std::fs::read(&shard_path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0x20;
+        std::fs::write(&shard_path, bytes).unwrap();
+        let reg3 = IndexRegistry::new(
+            3,
+            crate::index::BackendKind::Flat,
+            crate::index::LshConfig::default(),
+        );
+        assert!(reg3.restore_all(&dir).is_err(), "corrupt shard member must fail loudly");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_snapshot_writes_claim_distinct_sequences() {
+        // Off-turn writes race-freely: the per-slot snapshot_io lock
+        // serializes sequence-number selection, so concurrent writers can
+        // never interleave renames into one corrupt sequence.
+        let dir = std::env::temp_dir()
+            .join(format!("trp_state_concsnap_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let reg = Arc::new(
+            IndexRegistry::new(
+                7,
+                crate::index::BackendKind::Flat,
+                crate::index::LshConfig::default(),
+            )
+            .with_snapshot_dir(Some(dir.clone()))
+            .with_snapshot_keep(8),
+        );
+        let slot = reg.get_or_create(&tt_key());
+        slot.lock_shard(0).insert(1, &vec![1.0; tt_key().k]);
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let reg = Arc::clone(&reg);
+                let slot = Arc::clone(&slot);
+                std::thread::spawn(move || reg.snapshot_slot(&slot).unwrap())
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let seqs = list_sequences(&dir, &snapshot_file_stem(&tt_key())).unwrap();
+        let kept: Vec<u64> = seqs.iter().map(|(s, _)| *s).collect();
+        assert_eq!(kept, vec![1, 2, 3, 4], "each writer claims its own sequence");
+        for (_, files) in &seqs {
+            assert!(files.manifest.is_some(), "every sequence is manifest-rooted");
+        }
+        // The newest sequence restores cleanly.
+        assert_eq!(reg.restore_slot(&slot).unwrap(), 1);
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -874,21 +1449,25 @@ mod tests {
         .with_snapshot_keep(2);
         let slot = reg.get_or_create(&tt_key());
         for round in 0..3u64 {
-            let mut index = slot.index.lock().unwrap();
-            index.insert(round, &vec![round as f64; tt_key().k]);
-            reg.snapshot_slot(&slot, index.as_ref()).unwrap();
+            slot.lock_shard(0).insert(round, &vec![round as f64; tt_key().k]);
+            reg.snapshot_slot(&slot).unwrap();
         }
-        // Three writes, rotation depth 2: the two newest sequences remain.
-        let prefix = snapshot_prefix(&tt_key());
-        let snaps = list_snapshots(&dir, &prefix).unwrap();
-        let seqs: Vec<u64> = snaps.iter().map(|(s, _)| *s).collect();
-        assert_eq!(seqs, vec![2, 3], "oldest snapshot must be pruned");
+        // Three writes, rotation depth 2: the two newest sequences remain
+        // (manifest + shard file each).
+        let stem = snapshot_file_stem(&tt_key());
+        let seqs = list_sequences(&dir, &stem).unwrap();
+        let kept: Vec<u64> = seqs.iter().map(|(s, _)| *s).collect();
+        assert_eq!(kept, vec![2, 3], "oldest sequence must be pruned");
+        for (_, files) in &seqs {
+            assert!(files.manifest.is_some());
+            assert_eq!(files.shards.len(), 1);
+        }
         // restore_slot reads the newest cut (all three items).
+        slot.lock_shard(0).remove(0);
+        let restored = reg.restore_slot(&slot).unwrap();
+        assert_eq!(restored, 3);
         {
-            let mut index = slot.index.lock().unwrap();
-            index.remove(0);
-            let restored = reg.restore_slot(&slot, &mut index).unwrap();
-            assert_eq!(restored, 3);
+            let index = slot.lock_shard(0);
             assert_eq!(index.len(), 3);
             // Counters restored from the capture, not the rebuild.
             assert_eq!(index.stats().inserts, 3);
@@ -916,27 +1495,92 @@ mod tests {
         )
         .with_snapshot_dir(Some(dir.clone()));
         let slot = reg.get_or_create(&tt_key());
-        // Write a PR 3-era file: `<prefix>.snap`, no sequence.
+        // Write a PR 3-era file: `<stem>.snap`, single file, no sequence.
         {
-            let mut index = slot.index.lock().unwrap();
+            let mut index = slot.lock_shard(0);
             index.insert(1, &vec![1.0; tt_key().k]);
             let snap = crate::index::IndexSnapshot::capture(slot.key.encode(), index.as_ref());
-            let legacy = dir.join(format!("{}.snap", snapshot_prefix(&tt_key())));
+            let legacy = dir.join(format!("{}.snap", snapshot_file_stem(&tt_key())));
             snap.write_atomic(&legacy).unwrap();
             index.insert(2, &vec![2.0; tt_key().k]);
-            // The legacy file reads as sequence 0, so restore finds it…
-            let restored = reg.restore_slot(&slot, &mut index).unwrap();
-            assert_eq!(restored, 1);
-            // …and the next rotation write supersedes it with sequence 1.
-            index.insert(3, &vec![3.0; tt_key().k]);
-            reg.snapshot_slot(&slot, index.as_ref()).unwrap();
-            let restored = reg.restore_slot(&slot, &mut index).unwrap();
-            assert_eq!(restored, 2, "sequenced snapshot supersedes the legacy file");
         }
-        assert_eq!(parse_snap_name("sig_ab.00000003.snap"), Some(("sig_ab".into(), 3)));
-        assert_eq!(parse_snap_name("sig_ab.snap"), Some(("sig_ab".into(), 0)));
-        assert_eq!(parse_snap_name("notes.txt"), None);
+        // The legacy file reads as sequence 0, so restore finds it…
+        let restored = reg.restore_slot(&slot).unwrap();
+        assert_eq!(restored, 1);
+        // …and the next rotation write supersedes it with sequence 1.
+        slot.lock_shard(0).insert(3, &vec![3.0; tt_key().k]);
+        reg.snapshot_slot(&slot).unwrap();
+        let restored = reg.restore_slot(&slot).unwrap();
+        assert_eq!(restored, 2, "sequenced snapshot supersedes the legacy file");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_snapshot_repartitions_into_configured_shards() {
+        // The migration path: a pre-shard single-file snapshot restores
+        // into a sharded registry with every pair routed by the id hash.
+        let dir = std::env::temp_dir()
+            .join(format!("trp_state_migrate_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut legacy_index = crate::index::FlatIndex::new(tt_key().k);
+        for i in 0..25u64 {
+            legacy_index.insert(i, &vec![i as f64; tt_key().k]);
+        }
+        legacy_index.remove(7);
+        let snap = crate::index::IndexSnapshot::capture(tt_key().encode(), &legacy_index);
+        snap.write_atomic(&dir.join(format!("{}.snap", snapshot_file_stem(&tt_key()))))
+            .unwrap();
+        let reg = IndexRegistry::new(
+            7,
+            crate::index::BackendKind::Flat,
+            crate::index::LshConfig::default(),
+        )
+        .with_snapshot_dir(Some(dir.clone()))
+        .with_shards(4);
+        let (sigs, items) = reg.restore_all(&dir).unwrap();
+        assert_eq!((sigs, items), (1, 24));
+        let slot = reg.get_or_create(&tt_key());
+        assert_eq!(slot.shards(), 4);
+        // Every pair landed on its hash shard; nothing was lost or moved.
+        for s in 0..4 {
+            slot.lock_shard(s).for_each_live(&mut |id, v| {
+                assert_eq!(shard_of(id, 4), s, "pair routed to the wrong shard");
+                assert_eq!(v, &vec![id as f64; tt_key().k][..]);
+            });
+        }
+        let total: u64 = slot.shard_lens().iter().sum();
+        assert_eq!(total, 24);
+        // Aggregated counters reproduce the legacy totals.
+        let inserts: u64 = (0..4).map(|s| slot.lock_shard(s).stats().inserts).sum();
+        let deletes: u64 = (0..4).map(|s| slot.lock_shard(s).stats().deletes).sum();
+        assert_eq!((inserts, deletes), (25, 1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn snapshot_names_parse_every_layout() {
+        assert_eq!(
+            parse_snapshot_name("sig_ab.00000003.snap"),
+            Some(("sig_ab".into(), 3, SnapKind::Legacy))
+        );
+        assert_eq!(
+            parse_snapshot_name("sig_ab.snap"),
+            Some(("sig_ab".into(), 0, SnapKind::Legacy))
+        );
+        assert_eq!(
+            parse_snapshot_name("sig_ab.00000003.shard2.snap"),
+            Some(("sig_ab".into(), 3, SnapKind::Shard))
+        );
+        assert_eq!(
+            parse_snapshot_name("sig_ab.00000003.manifest"),
+            Some(("sig_ab".into(), 3, SnapKind::Manifest))
+        );
+        assert_eq!(parse_snapshot_name("notes.txt"), None);
+        // Shard files without a parsable sequence are ignored entirely
+        // (they could otherwise masquerade as legacy roots and clobber a
+        // signature's restore).
+        assert_eq!(parse_snapshot_name("sig.shard2.snap"), None);
     }
 
     #[test]

@@ -177,6 +177,10 @@ fn index_stats_json(s: &IndexStats) -> Json {
         ("queries", Json::Num(s.queries as f64)),
         ("buckets", Json::Num(s.buckets as f64)),
         ("max_bucket", Json::Num(s.max_bucket as f64)),
+        ("shards", Json::Num(s.shards as f64)),
+        ("tables", Json::Num(s.tables as f64)),
+        ("bits", Json::Num(s.bits as f64)),
+        ("probes", Json::Num(s.probes as f64)),
     ])
 }
 
@@ -198,6 +202,12 @@ fn decode_index_stats(j: &Json) -> Result<IndexStats, String> {
         queries: get_u64("queries"),
         buckets: j.get("buckets").and_then(Json::as_usize).unwrap_or(0),
         max_bucket: j.get("max_bucket").and_then(Json::as_usize).unwrap_or(0),
+        // Pre-shard servers omit these; 1 shard / zero LSH shape matches
+        // what they actually ran.
+        shards: j.get("shards").and_then(Json::as_usize).unwrap_or(1),
+        tables: j.get("tables").and_then(Json::as_usize).unwrap_or(0),
+        bits: j.get("bits").and_then(Json::as_usize).unwrap_or(0),
+        probes: j.get("probes").and_then(Json::as_usize).unwrap_or(0),
     })
 }
 
@@ -559,6 +569,10 @@ mod tests {
                 queries: 5,
                 buckets: 40,
                 max_bucket: 3,
+                shards: 4,
+                tables: 8,
+                bits: 12,
+                probes: 4,
             }),
             path: super::super::request::EnginePath::Native,
             queued_us: 1,

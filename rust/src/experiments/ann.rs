@@ -17,7 +17,7 @@
 //! ann_sweep`).
 
 use crate::experiments::MapSpec;
-use crate::index::{build_index, AnnIndex, BackendKind, LshConfig, Neighbor};
+use crate::index::{AnnIndex, BackendKind, LshConfig, Neighbor, ShardedIndex};
 use crate::projections::{Projection, Workspace};
 use crate::rng::{derive_seed, Rng};
 use crate::tensor::{AnyTensor, TtTensor};
@@ -45,6 +45,9 @@ pub struct AnnSweepConfig {
     pub cp_rank: usize,
     /// LSH backend shape.
     pub lsh: LshConfig,
+    /// Shard counts to sweep (QPS-vs-shard-count series; recall is
+    /// asserted bit-identical across counts — the sharding contract).
+    pub shards: Vec<usize>,
     /// Master seed (corpus, maps and hash planes all derive from it).
     pub seed: u64,
 }
@@ -62,6 +65,7 @@ impl AnnSweepConfig {
             tt_rank: 5,
             cp_rank: 5,
             lsh: LshConfig::default(),
+            shards: vec![1, 2, 4],
             seed: 0xA22,
         }
     }
@@ -78,6 +82,7 @@ impl AnnSweepConfig {
             tt_rank: 3,
             cp_rank: 3,
             lsh: LshConfig { tables: 6, bits: 8, probes: 4 },
+            shards: vec![1, 2],
             seed: 0xA22,
         }
     }
@@ -90,6 +95,8 @@ pub struct AnnRow {
     pub map: String,
     /// Projection dimension `m`.
     pub m: usize,
+    /// Index shard count of this measurement.
+    pub shards: usize,
     /// recall@topk of the flat (exact projected-space) backend.
     pub flat_recall: f64,
     /// recall@topk of the LSH backend.
@@ -212,29 +219,44 @@ pub fn run(cfg: &AnnSweepConfig) -> Vec<AnnRow> {
             // Batch-first embedding of corpus and queries.
             let emb = map.project_batch(&corpus_any, &mut ws);
             let qemb = map.project_batch(&query_any, &mut ws);
-            // Same embeddings into both backends.
+            // Same embeddings into both backends, across the shard-count
+            // axis (scatter-gather over S partitions; S = 1 is the plain
+            // unsharded scan).
             let index_seed = derive_seed(cfg.seed, 0xB00 ^ stream);
-            let mut flat = build_index(BackendKind::Flat, m, &cfg.lsh, index_seed);
-            let mut lsh = build_index(BackendKind::Lsh, m, &cfg.lsh, index_seed);
-            for (i, row) in emb.chunks_exact(m).enumerate() {
-                flat.insert(i as u64, row);
-                lsh.insert(i as u64, row);
+            let mut baseline: Option<(Vec<Vec<Neighbor>>, Vec<Vec<Neighbor>>)> = None;
+            for &s in &cfg.shards {
+                let mut flat = ShardedIndex::new(BackendKind::Flat, m, &cfg.lsh, index_seed, s);
+                let mut lsh = ShardedIndex::new(BackendKind::Lsh, m, &cfg.lsh, index_seed, s);
+                for (i, row) in emb.chunks_exact(m).enumerate() {
+                    flat.insert(i as u64, row);
+                    lsh.insert(i as u64, row);
+                }
+                let t0 = std::time::Instant::now();
+                let flat_res = flat.query_batch(&qemb, &topks, &mut ws);
+                let flat_secs = t0.elapsed().as_secs_f64();
+                let t0 = std::time::Instant::now();
+                let lsh_res = lsh.query_batch(&qemb, &topks, &mut ws);
+                let lsh_secs = t0.elapsed().as_secs_f64();
+                // The sharding contract, checked live on every cell:
+                // answers must be bit-identical across shard counts.
+                match &baseline {
+                    None => baseline = Some((flat_res.clone(), lsh_res.clone())),
+                    Some((f0, l0)) => {
+                        assert_eq!(&flat_res, f0, "sharded flat answers must be bit-identical");
+                        assert_eq!(&lsh_res, l0, "sharded LSH answers must be bit-identical");
+                    }
+                }
+                rows.push(AnnRow {
+                    map: spec.label(),
+                    m,
+                    shards: s,
+                    flat_recall: recall(&flat_res, &truth),
+                    lsh_recall: recall(&lsh_res, &truth),
+                    flat_qps: cfg.n_queries as f64 / flat_secs.max(1e-9),
+                    lsh_qps: cfg.n_queries as f64 / lsh_secs.max(1e-9),
+                    map_params: map.num_params(),
+                });
             }
-            let t0 = std::time::Instant::now();
-            let flat_res = flat.query_batch(&qemb, &topks, &mut ws);
-            let flat_secs = t0.elapsed().as_secs_f64();
-            let t0 = std::time::Instant::now();
-            let lsh_res = lsh.query_batch(&qemb, &topks, &mut ws);
-            let lsh_secs = t0.elapsed().as_secs_f64();
-            rows.push(AnnRow {
-                map: spec.label(),
-                m,
-                flat_recall: recall(&flat_res, &truth),
-                lsh_recall: recall(&lsh_res, &truth),
-                flat_qps: cfg.n_queries as f64 / flat_secs.max(1e-9),
-                lsh_qps: cfg.n_queries as f64 / lsh_secs.max(1e-9),
-                map_params: map.num_params(),
-            });
         }
     }
     rows
@@ -245,6 +267,7 @@ pub fn to_csv(rows: &[AnnRow]) -> CsvTable {
     let mut t = CsvTable::new(&[
         "map",
         "m",
+        "shards",
         "flat_recall",
         "lsh_recall",
         "flat_qps",
@@ -255,6 +278,7 @@ pub fn to_csv(rows: &[AnnRow]) -> CsvTable {
         t.push_row(vec![
             r.map.clone(),
             r.m.to_string(),
+            r.shards.to_string(),
             format!("{:.4}", r.flat_recall),
             format!("{:.4}", r.lsh_recall),
             format!("{:.1}", r.flat_qps),
@@ -265,35 +289,47 @@ pub fn to_csv(rows: &[AnnRow]) -> CsvTable {
     t
 }
 
-/// Machine-readable trajectory document (`BENCH_ann_sweep.json`).
+/// Machine-readable trajectory document (`BENCH_ann_sweep.json`): one
+/// series per `(map, shard count)` — recall curves are shard-invariant by
+/// the sharding contract, while the QPS curves expose the scatter-gather
+/// overhead/scaling across the shard axis.
 pub fn to_json(cfg: &AnnSweepConfig, rows: &[AnnRow]) -> Json {
-    let mut maps: Vec<String> = rows.iter().map(|r| r.map.clone()).collect();
-    maps.dedup();
-    let series: Vec<Json> = maps
+    let mut groups: Vec<(String, usize)> = Vec::new();
+    for r in rows {
+        let g = (r.map.clone(), r.shards);
+        if !groups.contains(&g) {
+            groups.push(g);
+        }
+    }
+    let series: Vec<Json> = groups
         .iter()
-        .map(|name| {
-            let per_map: Vec<&AnnRow> = rows.iter().filter(|r| &r.map == name).collect();
+        .map(|(name, shards)| {
+            let per: Vec<&AnnRow> = rows
+                .iter()
+                .filter(|r| &r.map == name && r.shards == *shards)
+                .collect();
             obj(vec![
                 ("map", Json::Str(name.clone())),
+                ("shards", Json::Num(*shards as f64)),
                 (
                     "ms",
-                    Json::Arr(per_map.iter().map(|r| Json::Num(r.m as f64)).collect()),
+                    Json::Arr(per.iter().map(|r| Json::Num(r.m as f64)).collect()),
                 ),
                 (
                     "flat_recall",
-                    num_arr(&per_map.iter().map(|r| r.flat_recall).collect::<Vec<f64>>()),
+                    num_arr(&per.iter().map(|r| r.flat_recall).collect::<Vec<f64>>()),
                 ),
                 (
                     "lsh_recall",
-                    num_arr(&per_map.iter().map(|r| r.lsh_recall).collect::<Vec<f64>>()),
+                    num_arr(&per.iter().map(|r| r.lsh_recall).collect::<Vec<f64>>()),
                 ),
                 (
                     "flat_qps",
-                    num_arr(&per_map.iter().map(|r| r.flat_qps).collect::<Vec<f64>>()),
+                    num_arr(&per.iter().map(|r| r.flat_qps).collect::<Vec<f64>>()),
                 ),
                 (
                     "lsh_qps",
-                    num_arr(&per_map.iter().map(|r| r.lsh_qps).collect::<Vec<f64>>()),
+                    num_arr(&per.iter().map(|r| r.lsh_qps).collect::<Vec<f64>>()),
                 ),
             ])
         })
@@ -307,6 +343,10 @@ pub fn to_json(cfg: &AnnSweepConfig, rows: &[AnnRow]) -> Json {
         ("topk", Json::Num(cfg.topk as f64)),
         ("n_corpus", Json::Num(cfg.n_corpus as f64)),
         ("n_queries", Json::Num(cfg.n_queries as f64)),
+        (
+            "shards",
+            Json::Arr(cfg.shards.iter().map(|&s| Json::Num(s as f64)).collect()),
+        ),
         ("series", Json::Arr(series)),
     ])
 }
@@ -364,6 +404,7 @@ mod tests {
             tt_rank: 2,
             cp_rank: 2,
             lsh: LshConfig { tables: 4, bits: 6, probes: 2 },
+            shards: vec![1, 3],
             seed: 11,
         }
     }
@@ -371,13 +412,20 @@ mod tests {
     #[test]
     fn sweep_covers_all_feasible_cells() {
         let rows = run(&tiny());
-        // 3 maps × 2 ms, all feasible at this size.
-        assert_eq!(rows.len(), 6);
+        // 3 maps × 2 ms × 2 shard counts, all feasible at this size.
+        // (`run` itself asserts recall is bit-identical across the shard
+        // axis — the sharding contract, checked live on every cell.)
+        assert_eq!(rows.len(), 12);
         for r in &rows {
             assert!((0.0..=1.0).contains(&r.flat_recall), "{r:?}");
             assert!((0.0..=1.0).contains(&r.lsh_recall), "{r:?}");
             assert!(r.flat_qps > 0.0 && r.lsh_qps > 0.0);
             assert!(r.map_params > 0);
+        }
+        for pair in rows.chunks_exact(2) {
+            assert_eq!((pair[0].shards, pair[1].shards), (1, 3));
+            assert_eq!(pair[0].flat_recall, pair[1].flat_recall);
+            assert_eq!(pair[0].lsh_recall, pair[1].lsh_recall);
         }
     }
 
@@ -411,7 +459,16 @@ mod tests {
         assert_eq!(to_csv(&rows).len(), rows.len());
         let doc = to_json(&cfg, &rows);
         let series = doc.get("series").and_then(Json::as_arr).unwrap();
-        assert_eq!(series.len(), 3, "one series per map family");
+        assert_eq!(series.len(), 6, "one series per (map family, shard count)");
+        for s in series {
+            let shards = s.get("shards").and_then(Json::as_usize).unwrap();
+            assert!(shards == 1 || shards == 3);
+            assert_eq!(
+                s.get("ms").and_then(Json::as_arr).unwrap().len(),
+                cfg.ms.len(),
+                "every m belongs to exactly one (map, shards) series"
+            );
+        }
     }
 
     #[test]

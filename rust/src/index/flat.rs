@@ -182,6 +182,10 @@ impl AnnIndex for FlatIndex {
             queries: self.queries,
             buckets: 0,
             max_bucket: 0,
+            shards: 1,
+            tables: 0,
+            bits: 0,
+            probes: 0,
         }
     }
 

@@ -36,6 +36,36 @@ impl Default for LshConfig {
     }
 }
 
+impl LshConfig {
+    /// Derive a shape from the expected corpus size and a target recall
+    /// instead of static knobs (the ROADMAP auto-tuning item). When the
+    /// index is sharded, pass the expected **per-shard** corpus size —
+    /// each shard hashes only its own partition.
+    ///
+    /// Heuristics (deterministic, clamped to constructible ranges):
+    ///
+    /// * `bits ≈ log₂(corpus)` — O(1) expected occupancy per bucket, so
+    ///   candidate re-scoring stays cheap as the corpus grows;
+    /// * `probes = bits / 3` (clamped to 2..=8) — deeper signatures merit
+    ///   deeper multi-probe, which buys recall far cheaper than tables;
+    /// * `tables` from the Charikar collision model: a "design" near
+    ///   pair at cosine 0.9 collides per bit with `p = 1 − θ/π ≈ 0.86`;
+    ///   per table with `p^bits`, boosted by multi-probe (each probed
+    ///   flip carries ≈ `(1−p)/p` of the exact bucket's mass); tables is
+    ///   the count driving the miss probability below `1 − target`.
+    pub fn auto(corpus_hint: usize, target_recall: f64) -> LshConfig {
+        let n = corpus_hint.max(2) as f64;
+        let bits = (n.log2().ceil() as usize).clamp(4, 24);
+        let probes = (bits / 3).clamp(2, 8);
+        let p_bit: f64 = 1.0 - (0.9f64).acos() / std::f64::consts::PI;
+        let p_table = p_bit.powi(bits as i32);
+        let p_eff = (p_table * (1.0 + probes as f64 * (1.0 - p_bit) / p_bit)).min(0.95);
+        let target = target_recall.clamp(0.05, 0.999);
+        let tables = ((1.0 - target).ln() / (1.0 - p_eff).ln()).ceil() as usize;
+        LshConfig { tables: tables.clamp(1, 64), bits, probes }
+    }
+}
+
 /// Random-hyperplane LSH index over `R^k` embeddings.
 pub struct LshIndex {
     /// Vector storage + exact re-scoring substrate.
@@ -248,6 +278,9 @@ impl AnnIndex for LshIndex {
         let mut stats = self.flat.stats();
         stats.backend = self.backend().to_string();
         stats.queries = self.queries;
+        stats.tables = self.cfg.tables;
+        stats.bits = self.cfg.bits;
+        stats.probes = self.cfg.probes;
         stats.buckets = self.buckets.iter().map(|t| t.len()).sum();
         stats.max_bucket = self
             .buckets
@@ -407,5 +440,50 @@ mod tests {
     #[should_panic(expected = "signature bits")]
     fn rejects_oversized_signatures() {
         let _ = LshIndex::new(4, LshConfig { tables: 1, bits: 64, probes: 0 }, 0);
+    }
+
+    #[test]
+    fn auto_shapes_are_constructible_across_the_input_range() {
+        for corpus in [0usize, 1, 10, 100, 10_000, 1_000_000, 1 << 30] {
+            for recall in [0.0, 0.5, 0.9, 0.99, 1.0] {
+                let cfg = LshConfig::auto(corpus, recall);
+                assert!(cfg.tables >= 1, "{corpus}/{recall}: {cfg:?}");
+                assert!((1..=63).contains(&cfg.bits), "{corpus}/{recall}: {cfg:?}");
+                assert!(cfg.probes <= cfg.bits, "{corpus}/{recall}: {cfg:?}");
+                // Must actually construct (the snapshot decoder rejects
+                // shapes `LshIndex::new` would panic on).
+                let _ = LshIndex::new(4, cfg, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn auto_scales_bits_with_corpus_and_tables_with_recall() {
+        let small = LshConfig::auto(100, 0.9);
+        let large = LshConfig::auto(1_000_000, 0.9);
+        assert!(
+            large.bits > small.bits,
+            "bigger corpus → longer signatures ({small:?} vs {large:?})"
+        );
+        let lax = LshConfig::auto(10_000, 0.5);
+        let tight = LshConfig::auto(10_000, 0.99);
+        assert!(
+            tight.tables > lax.tables,
+            "higher target recall → more tables ({lax:?} vs {tight:?})"
+        );
+        assert_eq!(
+            LshConfig::auto(10_000, 0.9),
+            LshConfig::auto(10_000, 0.9),
+            "auto-tuning is deterministic"
+        );
+    }
+
+    #[test]
+    fn stats_report_the_effective_shape() {
+        let cfg = LshConfig::auto(5_000, 0.9);
+        let idx = LshIndex::new(8, cfg, 3);
+        let s = idx.stats();
+        assert_eq!((s.tables, s.bits, s.probes), (cfg.tables, cfg.bits, cfg.probes));
+        assert_eq!(s.shards, 1);
     }
 }

@@ -27,10 +27,14 @@
 mod flat;
 mod lsh;
 pub(crate) mod persist;
+mod sharded;
 
 pub use flat::FlatIndex;
 pub use lsh::{LshConfig, LshIndex};
 pub use persist::{IndexSnapshot, SnapshotReport};
+pub use sharded::{
+    combine_stats, merge_neighbors, restore_shard_counters, shard_of, ShardedIndex,
+};
 
 use crate::projections::Workspace;
 
@@ -62,6 +66,16 @@ pub struct IndexStats {
     pub buckets: usize,
     /// Largest bucket population (0 for flat).
     pub max_bucket: usize,
+    /// Shards aggregated into this snapshot (1 for a plain backend;
+    /// [`combine_stats`] sums it).
+    pub shards: usize,
+    /// LSH hash tables in effect (0 for flat) — reported so auto-tuned
+    /// shapes ([`LshConfig::auto`]) are observable through `stats`.
+    pub tables: usize,
+    /// LSH signature bits per table (0 for flat).
+    pub bits: usize,
+    /// LSH multi-probe depth (0 for flat).
+    pub probes: usize,
 }
 
 /// Which ANN backend an index uses.
@@ -174,10 +188,20 @@ pub fn build_index(
     }
 }
 
+/// The `(dist, id)` total order shared by the per-shard top-k selects
+/// ([`TopK`]) and the scatter-gather merge ([`merge_neighbors`]).
+/// `total_cmp` (not `<`/`==`) keeps the order total under NaN distances,
+/// so a poisoned query still selects deterministically — and having
+/// exactly one definition is what keeps sharded gathers bit-identical to
+/// unsharded selects on tied distances.
+pub(crate) fn neighbor_order(a: &Neighbor, b: &Neighbor) -> std::cmp::Ordering {
+    a.dist.total_cmp(&b.dist).then(a.id.cmp(&b.id))
+}
+
 /// Bounded partial top-k select over `(dist, id)` candidates: keeps the
-/// `cap` smallest under the total order (dist, then id), sorted ascending.
-/// O(cap) memory and O(log cap + cap) per accepted offer — the "partial
-/// select" half of the flat backend's scan.
+/// `cap` smallest under [`neighbor_order`], sorted ascending. O(cap)
+/// memory and O(log cap + cap) per accepted offer — the "partial select"
+/// half of the flat backend's scan.
 #[derive(Debug)]
 pub(crate) struct TopK {
     cap: usize,
@@ -190,16 +214,9 @@ impl TopK {
         Self { cap, entries: Vec::with_capacity(cap.min(1024)) }
     }
 
-    /// True when `a` precedes `b` in the (dist, id) total order.
-    /// `total_cmp` (not `<`/`==`) keeps the order total under NaN
-    /// distances, so a poisoned query still selects deterministically
-    /// instead of scrambling on comparator inconsistency.
+    /// True when `a` strictly precedes `b` under [`neighbor_order`].
     fn precedes(a_dist: f64, a_id: u64, b: &Neighbor) -> bool {
-        match a_dist.total_cmp(&b.dist) {
-            std::cmp::Ordering::Less => true,
-            std::cmp::Ordering::Equal => a_id < b.id,
-            std::cmp::Ordering::Greater => false,
-        }
+        neighbor_order(&Neighbor { id: a_id, dist: a_dist }, b) == std::cmp::Ordering::Less
     }
 
     /// Offer one candidate.

@@ -229,26 +229,8 @@ impl IndexSnapshot {
     /// rename over `path`, then fsync the parent directory so the rename
     /// itself survives a crash. Returns the encoded size in bytes.
     pub fn write_atomic(&self, path: &Path) -> Result<u64, String> {
-        use std::io::Write as _;
         let bytes = self.encode();
-        let mut tmp = path.as_os_str().to_owned();
-        tmp.push(".tmp");
-        let tmp = std::path::PathBuf::from(tmp);
-        {
-            let mut f = std::fs::File::create(&tmp)
-                .map_err(|e| format!("create {}: {e}", tmp.display()))?;
-            f.write_all(&bytes)
-                .map_err(|e| format!("write {}: {e}", tmp.display()))?;
-            f.sync_all().map_err(|e| format!("sync {}: {e}", tmp.display()))?;
-        }
-        std::fs::rename(&tmp, path).map_err(|e| format!("rename to {}: {e}", path.display()))?;
-        // Directory fsync is what persists the rename; best-effort on
-        // platforms where directories cannot be opened as files.
-        if let Some(dir) = path.parent() {
-            if let Ok(d) = std::fs::File::open(dir) {
-                let _ = d.sync_all();
-            }
-        }
+        write_bytes_atomic(path, &bytes)?;
         Ok(bytes.len() as u64)
     }
 
@@ -259,9 +241,159 @@ impl IndexSnapshot {
     }
 }
 
+/// Atomic + durable byte-level file write shared by snapshot files and
+/// shard manifests: write `<path>.tmp`, fsync, rename over `path`, fsync
+/// the parent directory (best-effort where directories cannot be opened).
+pub(crate) fn write_bytes_atomic(path: &Path, bytes: &[u8]) -> Result<(), String> {
+    use std::io::Write as _;
+    let mut tmp = path.as_os_str().to_owned();
+    tmp.push(".tmp");
+    let tmp = std::path::PathBuf::from(tmp);
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .map_err(|e| format!("create {}: {e}", tmp.display()))?;
+        f.write_all(bytes)
+            .map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        f.sync_all().map_err(|e| format!("sync {}: {e}", tmp.display()))?;
+    }
+    std::fs::rename(&tmp, path).map_err(|e| format!("rename to {}: {e}", path.display()))?;
+    if let Some(dir) = path.parent() {
+        if let Ok(d) = std::fs::File::open(dir) {
+            let _ = d.sync_all();
+        }
+    }
+    Ok(())
+}
+
+/// One shard file's manifest entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestShard {
+    /// Shard file name, relative to the manifest's directory.
+    pub file: String,
+    /// Live items in the shard file.
+    pub items: u64,
+    /// FNV-1a over the shard file's complete bytes — detects a torn or
+    /// swapped shard file even though each shard file also self-checks.
+    pub checksum: u64,
+}
+
+/// The root of a sharded snapshot: names every shard file of one capture
+/// sequence with its item count and whole-file checksum. Written last
+/// (after every shard file's atomic rename), so a crash mid-snapshot
+/// leaves orphan shard files but never a manifest pointing at missing or
+/// half-written data; restore only trusts sequences whose manifest reads
+/// back clean.
+///
+/// On-disk layout (little-endian, FNV-1a checksummed like snapshots):
+///
+/// ```text
+/// magic  b"TRPMANI\0"                      8 bytes
+/// version u32                              currently 1
+/// key_len u32, key bytes                   opaque signature encoding
+/// shard_count u64
+/// shard_count × (file_len u32, file bytes, items u64, checksum u64)
+/// checksum u64                             FNV-1a over all prior bytes
+/// ```
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardManifest {
+    /// Opaque signature encoding (the coordinator's `MapKey::encode`).
+    pub key_bytes: Vec<u8>,
+    /// Per-shard entries in shard order.
+    pub shards: Vec<ManifestShard>,
+}
+
+/// Manifest file magic.
+const MANIFEST_MAGIC: &[u8; 8] = b"TRPMANI\0";
+/// Current manifest format version.
+const MANIFEST_VERSION: u32 = 1;
+
+impl ShardManifest {
+    /// Total live items across all shard files.
+    pub fn total_items(&self) -> u64 {
+        self.shards.iter().map(|s| s.items).sum()
+    }
+
+    /// Serialize to the versioned, checksummed binary format.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            32 + self.key_bytes.len()
+                + self.shards.iter().map(|s| 20 + s.file.len()).sum::<usize>(),
+        );
+        out.extend_from_slice(MANIFEST_MAGIC);
+        out.extend_from_slice(&MANIFEST_VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.key_bytes.len() as u32).to_le_bytes());
+        out.extend_from_slice(&self.key_bytes);
+        out.extend_from_slice(&(self.shards.len() as u64).to_le_bytes());
+        for s in &self.shards {
+            out.extend_from_slice(&(s.file.len() as u32).to_le_bytes());
+            out.extend_from_slice(s.file.as_bytes());
+            out.extend_from_slice(&s.items.to_le_bytes());
+            out.extend_from_slice(&s.checksum.to_le_bytes());
+        }
+        let sum = fnv1a(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Parse and validate (magic, version, checksum, exact length).
+    pub fn decode(bytes: &[u8]) -> Result<Self, String> {
+        if bytes.len() < MANIFEST_MAGIC.len() + 4 + 8 {
+            return Err("manifest truncated".into());
+        }
+        let (body, sum_bytes) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(sum_bytes.try_into().unwrap());
+        if fnv1a(body) != stored {
+            return Err("manifest checksum mismatch (corrupt or torn file)".into());
+        }
+        let mut cur = Cursor::new(body);
+        if cur.take(MANIFEST_MAGIC.len())? != MANIFEST_MAGIC {
+            return Err("not a TRP shard manifest (bad magic)".into());
+        }
+        let version = cur.u32()?;
+        if version != MANIFEST_VERSION {
+            return Err(format!(
+                "unsupported manifest version {version} (expected {MANIFEST_VERSION})"
+            ));
+        }
+        let key_len = cur.u32()? as usize;
+        let key_bytes = cur.take(key_len)?.to_vec();
+        let count = cur.u64()? as usize;
+        if count == 0 {
+            return Err("manifest names zero shard files".into());
+        }
+        let mut shards = Vec::with_capacity(count.min(1 << 16));
+        for _ in 0..count {
+            let file_len = cur.u32()? as usize;
+            let file = String::from_utf8(cur.take(file_len)?.to_vec())
+                .map_err(|_| "manifest shard file name is not UTF-8".to_string())?;
+            let items = cur.u64()?;
+            let checksum = cur.u64()?;
+            shards.push(ManifestShard { file, items, checksum });
+        }
+        if cur.pos != body.len() {
+            return Err("manifest has trailing bytes".into());
+        }
+        Ok(Self { key_bytes, shards })
+    }
+
+    /// Write atomically (see [`write_bytes_atomic`]). Returns encoded
+    /// size in bytes.
+    pub fn write_atomic(&self, path: &Path) -> Result<u64, String> {
+        let bytes = self.encode();
+        write_bytes_atomic(path, &bytes)?;
+        Ok(bytes.len() as u64)
+    }
+
+    /// Read and validate a manifest file.
+    pub fn read(path: &Path) -> Result<Self, String> {
+        let bytes = std::fs::read(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+        Self::decode(&bytes)
+    }
+}
+
 /// FNV-1a over a byte string (the same family the registry's key seeding
 /// uses; collisions are irrelevant here — this only detects corruption).
-fn fnv1a(bytes: &[u8]) -> u64 {
+pub(crate) fn fnv1a(bytes: &[u8]) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for &b in bytes {
         h ^= b as u64;
@@ -463,6 +595,48 @@ mod tests {
         assert_eq!((back.inserts, back.deletes, back.queries), (live, 0, 0));
         assert_eq!(back.build().stats().inserts, live);
         assert_eq!(back.items, snap.items, "items are unaffected by the version");
+    }
+
+    #[test]
+    fn manifest_roundtrips_and_rejects_corruption() {
+        let m = ShardManifest {
+            key_bytes: vec![1, 2, 3],
+            shards: vec![
+                ManifestShard { file: "sig_ab.00000001.shard0.snap".into(), items: 7, checksum: 9 },
+                ManifestShard { file: "sig_ab.00000001.shard1.snap".into(), items: 5, checksum: 4 },
+            ],
+        };
+        assert_eq!(m.total_items(), 12);
+        let bytes = m.encode();
+        let back = ShardManifest::decode(&bytes).unwrap();
+        assert_eq!(back, m);
+        // Flipped byte → checksum failure.
+        let mut bad = bytes.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0x10;
+        assert!(ShardManifest::decode(&bad).unwrap_err().contains("checksum"));
+        // Truncations are rejected.
+        for cut in [0, 9, bytes.len() / 2, bytes.len() - 1] {
+            assert!(ShardManifest::decode(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+        // Zero shard files is not a valid capture.
+        let empty = ShardManifest { key_bytes: Vec::new(), shards: Vec::new() };
+        assert!(ShardManifest::decode(&empty.encode()).unwrap_err().contains("zero"));
+    }
+
+    #[test]
+    fn manifest_write_is_atomic_and_readable() {
+        let dir = std::env::temp_dir().join(format!("trp_manifest_unit_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sig_x.00000001.manifest");
+        let m = ShardManifest {
+            key_bytes: vec![9],
+            shards: vec![ManifestShard { file: "f0".into(), items: 1, checksum: 2 }],
+        };
+        let bytes = m.write_atomic(&path).unwrap();
+        assert_eq!(bytes, std::fs::metadata(&path).unwrap().len());
+        assert_eq!(ShardManifest::read(&path).unwrap(), m);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

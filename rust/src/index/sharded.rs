@@ -1,0 +1,407 @@
+//! Sharded index execution: hash-partitioning one signature's corpus
+//! across `S` independent backend shards with scatter-gather queries.
+//!
+//! The partitioning rule is a stable id hash ([`shard_of`]): an item's
+//! shard depends only on its id and the shard count, never on insertion
+//! order, so conflicting ops on the same id always land on the same shard
+//! and a re-partition (snapshot restore into a different `S`) is a pure
+//! function of the stored pairs.
+//!
+//! **Bit-identity contract.** Sharded queries are bit-identical to the
+//! unsharded index for any shard count:
+//!
+//! * every shard is built with the *same* hyperplane seed, so an LSH item
+//!   hashes to the same bucket codes in whichever shard it lives — the
+//!   union of per-shard candidate sets equals the unsharded candidate set
+//!   exactly (per-shard seeds would make recall depend on the shard
+//!   count, which the tier-1 bit-identity gate forbids);
+//! * per-item scores are shard-count invariant: `linalg::matmul_into`
+//!   accumulates the reduction dimension in ascending order independently
+//!   per output element, so an item's dot product does not depend on how
+//!   many other rows share its GEMM;
+//! * the gather is a k-way merge of per-shard top-k lists under the same
+//!   `(dist, id)` total order (`total_cmp`) the per-shard selects use, so
+//!   merging per-shard top-k equals the global top-k of the union.
+//!
+//! [`ShardedIndex`] is the in-process composition (experiments, property
+//! tests, benches). The coordinator does not use it directly — it drives
+//! one sequencer lane per shard (`coordinator::state::IndexSlot`) so
+//! shards advance in parallel across pool workers — but both paths share
+//! [`shard_of`], [`merge_neighbors`] and [`combine_stats`], which is what
+//! keeps them bit-identical to each other.
+
+use super::{build_index, neighbor_order, AnnIndex, BackendKind, IndexStats, LshConfig, Neighbor};
+use crate::projections::Workspace;
+
+/// Stable shard of an item id: a SplitMix64 finalizer over the id,
+/// reduced modulo the shard count. The finalizer decorrelates shard
+/// assignment from dense sequential ids (raw `id % S` would stripe a
+/// counter workload perfectly but correlate with any id scheme that
+/// strides), and the mapping is a pure function of `(id, shards)` so
+/// restores can re-partition into any shard count.
+pub fn shard_of(id: u64, shards: usize) -> usize {
+    debug_assert!(shards > 0, "shard count must be positive");
+    if shards <= 1 {
+        return 0;
+    }
+    let mut z = id.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^= z >> 31;
+    (z % shards as u64) as usize
+}
+
+/// Merge two neighbour lists (each sorted ascending by the shared
+/// `(dist, id)` total order, [`super`]'s `neighbor_order`) into the `cap`
+/// smallest of their union, preserving that order — the same comparator
+/// the per-shard [`super::TopK`] selects use, so the gather can never
+/// disagree with the selects on ties or NaN distances. Merging is
+/// associative under truncation — any element of the global top-`cap` is
+/// within the top-`cap` of every union it appears in — so folding shards
+/// pairwise in any order yields the global top-`cap`.
+pub fn merge_neighbors(a: Vec<Neighbor>, b: Vec<Neighbor>, cap: usize) -> Vec<Neighbor> {
+    if b.is_empty() {
+        let mut a = a;
+        a.truncate(cap);
+        return a;
+    }
+    if a.is_empty() {
+        let mut b = b;
+        b.truncate(cap);
+        return b;
+    }
+    let mut out = Vec::with_capacity(cap.min(a.len() + b.len()));
+    let (mut i, mut j) = (0usize, 0usize);
+    while out.len() < cap && (i < a.len() || j < b.len()) {
+        let take_a = match (a.get(i), b.get(j)) {
+            (Some(x), Some(y)) => neighbor_order(x, y) != std::cmp::Ordering::Greater,
+            (Some(_), None) => true,
+            _ => false,
+        };
+        if take_a {
+            out.push(a[i]);
+            i += 1;
+        } else {
+            out.push(b[j]);
+            j += 1;
+        }
+    }
+    out
+}
+
+/// Fold one shard's statistics into a signature-level aggregate.
+///
+/// Additive fields (`len`, `inserts`, `deletes`, `buckets`, `shards`)
+/// sum; `max_bucket` takes the maximum. `queries` also takes the maximum:
+/// every query scatters to every shard, so each shard's query counter
+/// already equals the signature total and summing would multiply it by
+/// the shard count. Backend identity and LSH shape are asserted equal in
+/// debug builds (shards of one signature share them by construction).
+pub fn combine_stats(acc: Option<IndexStats>, s: IndexStats) -> IndexStats {
+    match acc {
+        None => s,
+        Some(mut acc) => {
+            debug_assert_eq!(acc.backend, s.backend);
+            debug_assert_eq!(acc.dim, s.dim);
+            acc.len += s.len;
+            acc.inserts += s.inserts;
+            acc.deletes += s.deletes;
+            acc.queries = acc.queries.max(s.queries);
+            acc.buckets += s.buckets;
+            acc.max_bucket = acc.max_bucket.max(s.max_bucket);
+            acc.shards += s.shards;
+            acc
+        }
+    }
+}
+
+/// Apply restored lifetime counters to a set of shards under the
+/// aggregation rules [`combine_stats`] inverts: mutation totals cannot be
+/// re-attributed per shard after a re-partition, so shard 0 carries them
+/// (the sum-aggregate reproduces the totals), while the query total is
+/// set on every shard (the max-aggregate reproduces it). Shared by
+/// [`ShardedIndex::restore_counters`] and the coordinator's snapshot
+/// restore path — one rule, not two that can drift.
+pub fn restore_shard_counters(
+    shards: &mut [Box<dyn AnnIndex>],
+    inserts: u64,
+    deletes: u64,
+    queries: u64,
+) {
+    for (s, shard) in shards.iter_mut().enumerate() {
+        if s == 0 {
+            shard.restore_counters(inserts, deletes, queries);
+        } else {
+            shard.restore_counters(0, 0, queries);
+        }
+    }
+}
+
+/// An id-hash-partitioned composition of `S` backend shards behind the
+/// one [`AnnIndex`] trait: inserts and deletes route to their id's shard,
+/// queries scatter to every shard and gather via [`merge_neighbors`].
+///
+/// See the module docs for the bit-identity contract with the unsharded
+/// backends.
+pub struct ShardedIndex {
+    dim: usize,
+    shards: Vec<Box<dyn AnnIndex>>,
+}
+
+impl ShardedIndex {
+    /// Build `shards` backend shards (clamped to ≥ 1), every one seeded
+    /// with the *same* `seed` so LSH bucket codes are shard-invariant
+    /// (module docs).
+    pub fn new(
+        kind: BackendKind,
+        dim: usize,
+        lsh: &LshConfig,
+        seed: u64,
+        shards: usize,
+    ) -> Self {
+        let shards = shards.max(1);
+        Self {
+            dim,
+            shards: (0..shards).map(|_| build_index(kind, dim, lsh, seed)).collect(),
+        }
+    }
+
+    /// Number of shards.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Live item counts per shard (the skew observable).
+    pub fn shard_lens(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.len()).collect()
+    }
+}
+
+impl AnnIndex for ShardedIndex {
+    fn backend(&self) -> &'static str {
+        self.shards[0].backend()
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+
+    fn insert(&mut self, id: u64, embedding: &[f64]) {
+        let s = shard_of(id, self.shards.len());
+        self.shards[s].insert(id, embedding);
+    }
+
+    fn remove(&mut self, id: u64) -> bool {
+        let s = shard_of(id, self.shards.len());
+        self.shards[s].remove(id)
+    }
+
+    fn query_batch(
+        &mut self,
+        qs: &[f64],
+        topks: &[usize],
+        ws: &mut Workspace,
+    ) -> Vec<Vec<Neighbor>> {
+        let mut merged: Vec<Vec<Neighbor>> = vec![Vec::new(); topks.len()];
+        for shard in &mut self.shards {
+            let res = shard.query_batch(qs, topks, ws);
+            for ((m, r), &cap) in merged.iter_mut().zip(res).zip(topks) {
+                *m = merge_neighbors(std::mem::take(m), r, cap);
+            }
+        }
+        merged
+    }
+
+    fn stats(&self) -> IndexStats {
+        self.shards
+            .iter()
+            .fold(None, |acc, s| Some(combine_stats(acc, s.stats())))
+            .expect("at least one shard")
+    }
+
+    fn for_each_live(&self, visit: &mut dyn FnMut(u64, &[f64])) {
+        for shard in &self.shards {
+            shard.for_each_live(visit);
+        }
+    }
+
+    fn persist_spec(&self) -> (BackendKind, LshConfig, u64) {
+        // The shards share backend identity and seed; captured pairs
+        // re-partition into whatever shard count the restoring side is
+        // configured with (answers are shard-count invariant).
+        self.shards[0].persist_spec()
+    }
+
+    fn restore_counters(&mut self, inserts: u64, deletes: u64, queries: u64) {
+        restore_shard_counters(&mut self.shards, inserts, deletes, queries);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn lsh_cfg() -> LshConfig {
+        LshConfig { tables: 4, bits: 6, probes: 2 }
+    }
+
+    #[test]
+    fn shard_of_is_stable_and_in_range() {
+        for id in 0..500u64 {
+            assert_eq!(shard_of(id, 1), 0);
+            for s in [2usize, 3, 4, 7] {
+                let a = shard_of(id, s);
+                assert!(a < s);
+                assert_eq!(a, shard_of(id, s), "stable per (id, shards)");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_of_spreads_sequential_ids() {
+        let s = 4;
+        let mut counts = vec![0usize; s];
+        for id in 0..4000u64 {
+            counts[shard_of(id, s)] += 1;
+        }
+        for &c in &counts {
+            // Uniform would be 1000; allow wide slack — this only guards
+            // against degenerate striping (everything on one shard).
+            assert!((600..=1400).contains(&c), "skewed partition: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn merge_keeps_global_topk_in_order() {
+        let a = vec![
+            Neighbor { id: 1, dist: 0.1 },
+            Neighbor { id: 5, dist: 0.5 },
+            Neighbor { id: 7, dist: 0.9 },
+        ];
+        let b = vec![
+            Neighbor { id: 2, dist: 0.2 },
+            Neighbor { id: 3, dist: 0.5 },
+        ];
+        let m = merge_neighbors(a.clone(), b.clone(), 4);
+        let ids: Vec<u64> = m.iter().map(|n| n.id).collect();
+        // Tie at 0.5 breaks by ascending id: 3 before 5.
+        assert_eq!(ids, vec![1, 2, 3, 5]);
+        // Merging in either order agrees.
+        assert_eq!(merge_neighbors(b, a, 4), m);
+    }
+
+    #[test]
+    fn merge_handles_empty_and_caps() {
+        let a = vec![Neighbor { id: 1, dist: 0.5 }];
+        assert_eq!(merge_neighbors(a.clone(), Vec::new(), 3), a);
+        assert_eq!(merge_neighbors(Vec::new(), a.clone(), 3), a);
+        assert!(merge_neighbors(a.clone(), a, 0).is_empty());
+    }
+
+    #[test]
+    fn merge_orders_nan_last_deterministically() {
+        let a = vec![Neighbor { id: 1, dist: f64::NAN }];
+        let b = vec![Neighbor { id: 2, dist: 0.5 }];
+        let m = merge_neighbors(a, b, 2);
+        let ids: Vec<u64> = m.iter().map(|n| n.id).collect();
+        assert_eq!(ids, vec![2, 1], "NaN sorts after every finite distance");
+    }
+
+    #[test]
+    fn sharded_queries_bit_identical_to_unsharded_both_backends() {
+        // The tier-1 contract at the data-structure level: identical
+        // mutation history, identical queries, S ∈ {1, 2, 4} vs the plain
+        // backend — results must match bitwise.
+        let mut rng = Rng::seed_from(42);
+        let dim = 12;
+        let n = 80;
+        let items: Vec<(u64, Vec<f64>)> =
+            (0..n).map(|i| (i as u64, rng.gaussian_vec(dim, 1.0))).collect();
+        let queries: Vec<Vec<f64>> = (0..9).map(|_| rng.gaussian_vec(dim, 1.0)).collect();
+        for kind in [BackendKind::Flat, BackendKind::Lsh] {
+            let mut base = build_index(kind, dim, &lsh_cfg(), 77);
+            for (id, v) in &items {
+                base.insert(*id, v);
+            }
+            // Interleave deletes + overwrites so tombstones and
+            // re-bucketing are exercised too.
+            base.remove(3);
+            base.remove(40);
+            base.insert(7, &items[8].1);
+            let mut ws = Workspace::new();
+            let flat_qs: Vec<f64> = queries.iter().flatten().copied().collect();
+            let topks = vec![6; queries.len()];
+            let want = base.query_batch(&flat_qs, &topks, &mut ws);
+            for s in [1usize, 2, 4] {
+                let mut idx = ShardedIndex::new(kind, dim, &lsh_cfg(), 77, s);
+                for (id, v) in &items {
+                    idx.insert(*id, v);
+                }
+                idx.remove(3);
+                idx.remove(40);
+                idx.insert(7, &items[8].1);
+                assert_eq!(idx.len(), base.len());
+                let got = idx.query_batch(&flat_qs, &topks, &mut ws);
+                assert_eq!(
+                    got, want,
+                    "{} S={s}: sharded answers must be bit-identical",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stats_aggregate_across_shards() {
+        let mut rng = Rng::seed_from(3);
+        let dim = 6;
+        let mut idx = ShardedIndex::new(BackendKind::Lsh, dim, &lsh_cfg(), 5, 4);
+        for i in 0..30u64 {
+            idx.insert(i, &rng.gaussian_vec(dim, 1.0));
+        }
+        idx.remove(2);
+        let mut ws = Workspace::new();
+        idx.query(&rng.gaussian_vec(dim, 1.0), 3, &mut ws);
+        idx.query(&rng.gaussian_vec(dim, 1.0), 3, &mut ws);
+        let s = idx.stats();
+        assert_eq!(s.backend, "lsh");
+        assert_eq!(s.len, 29, "len sums across shards");
+        assert_eq!(s.inserts, 30);
+        assert_eq!(s.deletes, 1);
+        assert_eq!(s.queries, 2, "queries are signature-level, not ×S");
+        assert_eq!(s.shards, 4);
+        assert_eq!((s.tables, s.bits, s.probes), (4, 6, 2));
+        assert_eq!(idx.shard_lens().iter().sum::<usize>(), 29);
+    }
+
+    #[test]
+    fn restore_counters_respect_aggregation_rules() {
+        let mut idx = ShardedIndex::new(BackendKind::Flat, 4, &lsh_cfg(), 1, 3);
+        for i in 0..6u64 {
+            idx.insert(i, &[0.0; 4]);
+        }
+        idx.restore_counters(10, 2, 5);
+        let s = idx.stats();
+        assert_eq!((s.inserts, s.deletes, s.queries), (10, 2, 5));
+    }
+
+    #[test]
+    fn for_each_live_covers_every_shard() {
+        let mut idx = ShardedIndex::new(BackendKind::Flat, 3, &lsh_cfg(), 1, 4);
+        for i in 0..20u64 {
+            idx.insert(i, &[i as f64; 3]);
+        }
+        let mut seen = Vec::new();
+        idx.for_each_live(&mut |id, v| {
+            assert_eq!(v, &[id as f64; 3]);
+            seen.push(id);
+        });
+        seen.sort_unstable();
+        assert_eq!(seen, (0..20).collect::<Vec<u64>>());
+    }
+}

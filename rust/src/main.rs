@@ -3,10 +3,12 @@
 //! ```text
 //! trp serve       [--requests N] [--rate R] [--case medium] [--no-pjrt]
 //!                 [--listen ADDR] [--snapshot-dir DIR] [--snapshot-every N]
-//!                 [--restore DIR]
+//!                 [--restore DIR] [--index-shards S]
+//!                 [--index-backend flat|lsh] [--lsh T,B,P | --lsh-auto N [--lsh-recall R]]
 //! trp snapshot    --connect ADDR --case medium --format tt [--restore]
 //! trp project     --case medium --format tt [--k 64] [--map tt:5]
 //! trp experiment  fig1|fig2|fig3|fig4|ablation|batch|ann [--quick] [--trials T]
+//!                 [--shards 1,2,4]           # ann: QPS-vs-shard-count axis
 //! trp bounds      --eps 0.5 --n 12 --r 10 --m 100 [--delta 0.05]
 //! trp artifacts   [--artifacts DIR]          # list + verify compiled set
 //! ```
@@ -64,6 +66,9 @@ fn print_usage() {
          \n\
          subcommands:\n\
            serve       run the compression service on a synthetic trace\n\
+                       (--index-shards S partitions each signature's ANN\n\
+                       index across S parallel lanes; --index-backend\n\
+                       flat|lsh, --lsh T,B,P or --lsh-auto N --lsh-recall R)\n\
            project     project one random input and print the distortion\n\
            experiment  regenerate a paper figure: fig1|fig2|fig3|fig4|ablation|batch|ann\n\
            bounds      evaluate the Theorem 2 size bounds\n\
@@ -110,17 +115,57 @@ fn cmd_serve(args: &Args, cfg: &AppConfig) -> Result<(), String> {
     if snapshot_every > 0 && snapshot_dir.is_none() {
         return Err("--snapshot-every requires --snapshot-dir".into());
     }
-    // Rotation depth: keep the last N snapshot files per signature.
+    // Rotation depth: keep the last N snapshot sequences per signature.
     let snapshot_keep: usize = args.get_parsed_or("snapshot-keep", 2usize)?;
     if snapshot_keep == 0 {
         return Err("--snapshot-keep must be ≥ 1".into());
     }
+    // Sharding: partition each signature's index across N sequencer
+    // lanes so a single hot signature saturates the worker pool.
+    let index_shards: usize = args.get_parsed_or("index-shards", 1usize)?;
+    if index_shards == 0 {
+        return Err("--index-shards must be ≥ 1".into());
+    }
+    let index_backend = {
+        let name = args.get_or("index-backend", "flat");
+        tensorized_rp::index::BackendKind::parse(&name)
+            .ok_or_else(|| format!("bad --index-backend {name} (flat|lsh)"))?
+    };
+    // LSH shape: static `--lsh T,B,P`, or derived from the expected
+    // corpus size + target recall (`--lsh-auto N [--lsh-recall R]`; the
+    // hint is divided across shards — each shard hashes only its own
+    // partition). `stats` responses report the effective shape.
+    let lsh = if let Some(hint) = args.get("lsh-auto") {
+        let corpus: usize = hint.parse().map_err(|_| format!("bad --lsh-auto {hint}"))?;
+        let recall: f64 = args.get_parsed_or("lsh-recall", 0.9f64)?;
+        let per_shard = (corpus / index_shards).max(1);
+        let auto = tensorized_rp::index::LshConfig::auto(per_shard, recall);
+        println!(
+            "[serve] lsh auto({per_shard}/shard, recall {recall}): tables={} bits={} probes={}",
+            auto.tables, auto.bits, auto.probes
+        );
+        auto
+    } else if let Some(shape) = args.get("lsh") {
+        let parts: Vec<usize> = shape
+            .split(',')
+            .map(|v| v.parse().map_err(|_| format!("bad --lsh {shape} (want T,B,P)")))
+            .collect::<Result<_, String>>()?;
+        if parts.len() != 3 {
+            return Err(format!("bad --lsh {shape} (want T,B,P)"));
+        }
+        tensorized_rp::index::LshConfig { tables: parts[0], bits: parts[1], probes: parts[2] }
+    } else {
+        tensorized_rp::index::LshConfig::default()
+    };
     let coord = Coordinator::start(
         CoordinatorConfig {
             master_seed: cfg.seed,
             snapshot_dir,
             snapshot_every_ops: snapshot_every,
             snapshot_keep,
+            index_shards,
+            index_backend,
+            lsh,
             ..Default::default()
         },
         engine,
@@ -405,6 +450,17 @@ fn cmd_experiment(args: &Args, cfg: &AppConfig) -> Result<(), String> {
                 ann::AnnSweepConfig::paper()
             };
             c.seed = cfg.seed;
+            // Shard-count axis: BENCH_ann_sweep.json then carries a
+            // QPS-vs-shard-count series per (map, m) cell.
+            if let Some(list) = args.get("shards") {
+                c.shards = list
+                    .split(',')
+                    .map(|v| v.parse().map_err(|_| format!("bad --shards entry {v}")))
+                    .collect::<Result<Vec<usize>, String>>()?;
+                if c.shards.is_empty() || c.shards.contains(&0) {
+                    return Err("--shards needs a comma list of counts ≥ 1".into());
+                }
+            }
             let rows = ann::run(&c);
             let csv = ann::to_csv(&rows);
             print!("{}", csv.to_markdown());

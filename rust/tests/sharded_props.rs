@@ -1,0 +1,397 @@
+//! Sharded index execution properties — the tier-1 gates of the sharding
+//! layer:
+//!
+//! 1. bit-identity: pipelined `insert → query → delete → query` cycles on
+//!    the same id, plus phased concurrent multi-connection traffic,
+//!    return bit-identical responses for `S ∈ {1, 2, 4}` vs the
+//!    unsharded baseline (`S = 1` runs the same code over a single lane,
+//!    and `index_props::coordinator_query_identical_to_direct_index`
+//!    anchors that to a direct unsharded index);
+//! 2. legacy migration: a pre-shard single-file snapshot restores into a
+//!    sharded coordinator by re-partitioning, answering bit-identically
+//!    to the unsharded index it captured;
+//! 3. consistency: a snapshot captured mid-pipelined-traffic is a
+//!    consistent cut, and restores (into a different shard count) to
+//!    exactly that cut;
+//! 4. saturation: a single hot signature's index phases overlap across
+//!    workers (`index_shard_parallel ≥ 2`), which the unsharded design
+//!    could never do.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use tensorized_rp::coordinator::{
+    snapshot_file_stem, Coordinator, CoordinatorConfig, MapKey, MapKind, ProjectRequest,
+    ProjectionRegistry,
+};
+use tensorized_rp::index::{
+    shard_of, AnnIndex, BackendKind, FlatIndex, IndexSnapshot, LshConfig, Neighbor,
+};
+use tensorized_rp::projections::{Projection, Workspace};
+use tensorized_rp::rng::Rng;
+use tensorized_rp::tensor::{AnyTensor, Format, TtTensor};
+
+const DIMS: [usize; 4] = [3, 3, 3, 3];
+const K: usize = 12;
+const MASTER_SEED: u64 = 0x5AADED;
+
+fn coordinator(backend: BackendKind, shards: usize, snapshot_dir: Option<PathBuf>) -> Coordinator {
+    Coordinator::start(
+        CoordinatorConfig {
+            workers: 4,
+            default_k: K,
+            master_seed: MASTER_SEED,
+            index_backend: backend,
+            lsh: LshConfig { tables: 4, bits: 7, probes: 2 },
+            index_shards: shards,
+            snapshot_dir,
+            ..Default::default()
+        },
+        None,
+    )
+}
+
+fn sig_key() -> MapKey {
+    MapKey {
+        kind: MapKind::Tt { rank: CoordinatorConfig::default().default_tt_rank },
+        dims: DIMS.to_vec(),
+        k: K,
+    }
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("trp_sharded_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn tensors(n: usize, seed: u64) -> Vec<TtTensor> {
+    let mut rng = Rng::seed_from(seed);
+    (0..n).map(|_| TtTensor::random_unit(&DIMS, 2, &mut rng)).collect()
+}
+
+/// Property 1a (named tier-1 gate): pipelined same-id cycles are ordered
+/// and bit-identical for S ∈ {1, 2, 4}. Every `insert → query → delete →
+/// query` quad rides the pipeline without awaiting replies, so flush
+/// boundaries land arbitrarily — arrival-order semantics must hold
+/// regardless, on every shard count.
+#[test]
+fn pipelined_same_id_cycles_bit_identical_for_s_1_2_4() {
+    let xs = tensors(30, 7);
+    let run = |shards: usize| -> Vec<(Option<Vec<Neighbor>>, Option<bool>)> {
+        let c = coordinator(BackendKind::Flat, shards, None);
+        let mut rxs = Vec::new();
+        for (id, x) in xs.iter().enumerate() {
+            let id = id as u64;
+            rxs.push(c.submit(ProjectRequest::insert(id, AnyTensor::Tt(x.clone()))));
+            rxs.push(c.submit(ProjectRequest::query(1000 + id, AnyTensor::Tt(x.clone()), 3)));
+            rxs.push(c.submit(ProjectRequest::delete(2000 + id, id, Format::Tt, DIMS.to_vec())));
+            rxs.push(c.submit(ProjectRequest::query(3000 + id, AnyTensor::Tt(x.clone()), 3)));
+        }
+        let out: Vec<_> = rxs
+            .into_iter()
+            .map(|rx| {
+                let r = rx.recv().unwrap().unwrap();
+                (r.neighbors, r.removed)
+            })
+            .collect();
+        c.shutdown();
+        out
+    };
+    let baseline = run(1);
+    // Semantic spot-checks on the unsharded baseline: the first query of
+    // each quad sees exactly its own item (everything earlier was
+    // deleted), the second sees an empty index.
+    for (i, quad) in baseline.chunks_exact(4).enumerate() {
+        let ns = quad[1].0.as_ref().expect("query returns neighbors");
+        assert_eq!(ns.len(), 1, "round {i}: only the round's own item is live");
+        assert_eq!(ns[0].id, i as u64);
+        assert!(ns[0].dist < 1e-9);
+        assert_eq!(quad[2].1, Some(true), "round {i}: delete observes the insert");
+        assert_eq!(quad[3].0.as_deref(), Some(&[][..]), "round {i}: post-delete query is empty");
+    }
+    assert_eq!(run(2), baseline, "S=2 must be bit-identical to the unsharded baseline");
+    assert_eq!(run(4), baseline, "S=4 must be bit-identical to the unsharded baseline");
+}
+
+/// Property 1b: the same gate under concurrent multi-connection traffic,
+/// for both backends. Concurrency is phased so the results stay
+/// deterministic: concurrent inserts on disjoint ids (any interleaving
+/// produces the same corpus), then concurrent queries against the frozen
+/// corpus, then a pipelined mixed tail.
+#[test]
+fn concurrent_traffic_bit_identical_for_s_1_2_4() {
+    const THREADS: usize = 4;
+    const PER_THREAD: usize = 12;
+    let inserts: Vec<Vec<TtTensor>> =
+        (0..THREADS).map(|t| tensors(PER_THREAD, 100 + t as u64)).collect();
+    let queries = tensors(6, 900);
+    for backend in [BackendKind::Flat, BackendKind::Lsh] {
+        let run = |shards: usize| -> Vec<Vec<Vec<Neighbor>>> {
+            let c = Arc::new(coordinator(backend, shards, None));
+            // Phase 1: concurrent inserts from THREADS "connections".
+            let handles: Vec<_> = (0..THREADS)
+                .map(|t| {
+                    let c = Arc::clone(&c);
+                    let xs = inserts[t].clone();
+                    std::thread::spawn(move || {
+                        for (i, x) in xs.into_iter().enumerate() {
+                            let id = (t * 1000 + i) as u64;
+                            c.project_blocking(ProjectRequest::insert(id, AnyTensor::Tt(x)))
+                                .unwrap();
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            // Phase 2: concurrent queries against the frozen corpus.
+            let handles: Vec<_> = (0..THREADS)
+                .map(|t| {
+                    let c = Arc::clone(&c);
+                    let qs = queries.clone();
+                    std::thread::spawn(move || {
+                        qs.into_iter()
+                            .enumerate()
+                            .map(|(i, q)| {
+                                c.project_blocking(ProjectRequest::query(
+                                    (9000 + t * 100 + i) as u64,
+                                    AnyTensor::Tt(q),
+                                    5,
+                                ))
+                                .unwrap()
+                                .neighbors
+                                .unwrap()
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            let out: Vec<Vec<Vec<Neighbor>>> =
+                handles.into_iter().map(|h| h.join().unwrap()).collect();
+            c.shutdown();
+            out
+        };
+        let baseline = run(1);
+        if backend == BackendKind::Flat {
+            // Exact scan always fills k on a 48-item corpus; LSH may
+            // legitimately probe fewer candidates — for it the property
+            // is the cross-shard comparison alone.
+            for row in &baseline {
+                for ns in row {
+                    assert_eq!(ns.len(), 5, "corpus is large enough for k=5");
+                }
+            }
+        }
+        assert_eq!(run(2), baseline, "{}: S=2 differs from baseline", backend.name());
+        assert_eq!(run(4), baseline, "{}: S=4 differs from baseline", backend.name());
+    }
+}
+
+/// Property 2 (legacy migration): a pre-shard single-file snapshot — the
+/// PR 3/4 on-disk layout — restores into a sharded coordinator by
+/// re-partitioning its pairs, and post-restore queries are bit-identical
+/// to the unsharded index the file captured.
+#[test]
+fn legacy_snapshot_restores_bit_identical_into_sharded_coordinator() {
+    let dir = tmp_dir("legacy");
+    let key = sig_key();
+    let xs = tensors(20, 41);
+    let queries = tensors(5, 42);
+    // The unsharded baseline: the same deterministic map the coordinator
+    // draws (same master seed + key policy), feeding a plain FlatIndex.
+    let registry = ProjectionRegistry::new(MASTER_SEED);
+    let map = registry.get_or_create(&key);
+    let mut baseline = FlatIndex::new(K);
+    for (i, x) in xs.iter().enumerate() {
+        baseline.insert(i as u64, &map.map.project(&AnyTensor::Tt(x.clone())));
+    }
+    // Write the legacy layout: one unsequenced `<stem>.snap` file.
+    let snap = IndexSnapshot::capture(key.encode(), &baseline);
+    snap.write_atomic(&dir.join(format!("{}.snap", snapshot_file_stem(&key)))).unwrap();
+    // A sharded coordinator restores it at startup (re-partition into 4).
+    let c = coordinator(BackendKind::Flat, 4, Some(dir.clone()));
+    let (sigs, items) = c.restore_from(&dir).unwrap();
+    assert_eq!((sigs, items), (1, 20));
+    let slot = c.index_slot(&key);
+    assert_eq!(slot.shards(), 4);
+    assert_eq!(slot.shard_lens().iter().sum::<u64>(), 20);
+    let mut ws = Workspace::new();
+    for (qi, q) in queries.iter().enumerate() {
+        let served = c
+            .project_blocking(ProjectRequest::query(500 + qi as u64, AnyTensor::Tt(q.clone()), 6))
+            .unwrap()
+            .neighbors
+            .unwrap();
+        let direct = baseline.query(&map.map.project(&AnyTensor::Tt(q.clone())), 6, &mut ws);
+        assert_eq!(served, direct, "restored sharded answers must match the legacy index");
+    }
+    // The wire `restore` op re-reads the same legacy file at runtime:
+    // mutate past the cut, restore, and the extra item is gone.
+    c.project_blocking(ProjectRequest::insert(777, AnyTensor::Tt(queries[0].clone()))).unwrap();
+    let r = c
+        .project_blocking(ProjectRequest::restore(778, Format::Tt, DIMS.to_vec()))
+        .unwrap();
+    assert_eq!(r.restored, Some(20));
+    let stats = c
+        .project_blocking(ProjectRequest::index_stats(779, Format::Tt, DIMS.to_vec()))
+        .unwrap()
+        .index
+        .unwrap();
+    assert_eq!(stats.len, 20, "restore rewound past the post-cut insert");
+    assert_eq!(stats.shards, 4);
+    c.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Property 3: a snapshot op pipelined into the middle of a burst —
+/// submitted before any reply is awaited — captures exactly the ops that
+/// arrived before it (consistent cut across every shard), writes the
+/// sharded manifest layout off-turn, and restores into a *different*
+/// shard count bit-identically.
+#[test]
+fn snapshot_mid_traffic_is_a_consistent_cut_across_shards() {
+    let dir = tmp_dir("cut");
+    let xs = tensors(60, 77);
+    let queries = tensors(5, 78);
+    let c = coordinator(BackendKind::Flat, 4, Some(dir.clone()));
+    let mut rxs = Vec::new();
+    for (i, x) in xs.iter().take(40).enumerate() {
+        rxs.push(c.submit(ProjectRequest::insert(i as u64, AnyTensor::Tt(x.clone()))));
+    }
+    rxs.push(c.submit(ProjectRequest::snapshot(5000, Format::Tt, DIMS.to_vec())));
+    for (i, x) in xs.iter().enumerate().skip(40) {
+        rxs.push(c.submit(ProjectRequest::insert(i as u64, AnyTensor::Tt(x.clone()))));
+    }
+    let mut report = None;
+    for rx in rxs {
+        let resp = rx.recv().unwrap().unwrap();
+        if let Some(s) = resp.snapshot {
+            report = Some(s);
+        }
+    }
+    let report = report.expect("snapshot op replies with a report");
+    assert_eq!(report.items, 40, "the cut holds exactly the pre-snapshot arrivals");
+    assert!(report.path.ends_with(".manifest"), "sharded snapshots are manifest-rooted");
+    let stem = snapshot_file_stem(&sig_key());
+    let shard_files: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .filter(|e| {
+            let n = e.file_name().to_string_lossy().into_owned();
+            n.starts_with(&stem) && n.contains(".shard") && n.ends_with(".snap")
+        })
+        .collect();
+    assert_eq!(shard_files.len(), 4, "one file per shard");
+    assert_eq!(c.metrics().index_snapshots, 1);
+    c.shutdown(); // the "kill"
+
+    // Restore into a coordinator sharded differently (2 ≠ 4): the pairs
+    // re-partition, and answers must match a replay of exactly the
+    // pre-cut ops on an unsharded coordinator.
+    let b = coordinator(BackendKind::Flat, 2, Some(dir.clone()));
+    let (sigs, items) = b.restore_from(&dir).unwrap();
+    assert_eq!((sigs, items), (1, 40));
+    let replay = coordinator(BackendKind::Flat, 1, None);
+    for (i, x) in xs.iter().take(40).enumerate() {
+        replay
+            .project_blocking(ProjectRequest::insert(i as u64, AnyTensor::Tt(x.clone())))
+            .unwrap();
+    }
+    for (qi, q) in queries.iter().enumerate() {
+        let id = 6000 + qi as u64;
+        let restored = b
+            .project_blocking(ProjectRequest::query(id, AnyTensor::Tt(q.clone()), 7))
+            .unwrap()
+            .neighbors
+            .unwrap();
+        let truth = replay
+            .project_blocking(ProjectRequest::query(id, AnyTensor::Tt(q.clone()), 7))
+            .unwrap()
+            .neighbors
+            .unwrap();
+        assert_eq!(restored, truth, "restored cut must answer like the pre-cut replay");
+        assert!(restored.iter().all(|n| n.id < 40), "post-cut inserts must be absent");
+    }
+    b.shutdown();
+    replay.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Property 4 (saturation): with one hot signature sharded 4-ways and
+/// single-insert flushes, index phases must overlap across workers —
+/// `index_shard_parallel ≥ 2` — which the single-lane design could never
+/// produce. Skipped on single-core machines (no real overlap to observe);
+/// retried in rounds elsewhere since the gauge is a high-water mark over
+/// genuinely concurrent passes.
+#[test]
+fn saturation_runs_index_phases_on_multiple_workers() {
+    if std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) < 2 {
+        eprintln!("[sharded_props] single-core machine — skipping the overlap assertion");
+        return;
+    }
+    let c = Coordinator::start(
+        CoordinatorConfig {
+            workers: 4,
+            default_k: K,
+            master_seed: MASTER_SEED,
+            index_backend: BackendKind::Lsh,
+            lsh: LshConfig { tables: 6, bits: 8, probes: 2 },
+            index_shards: 4,
+            // Single-request flushes: every insert is its own job, so
+            // disjoint-shard jobs can run truly concurrently.
+            native_max_batch: 1,
+            adaptive_batch: false,
+            ..Default::default()
+        },
+        None,
+    );
+    let mut rng = Rng::seed_from(55);
+    for round in 0..6u64 {
+        let xs: Vec<TtTensor> =
+            (0..200).map(|_| TtTensor::random_unit(&DIMS, 2, &mut rng)).collect();
+        let rxs: Vec<_> = xs
+            .into_iter()
+            .enumerate()
+            .map(|(i, x)| {
+                c.submit(ProjectRequest::insert(round * 1000 + i as u64, AnyTensor::Tt(x)))
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap().unwrap();
+        }
+        if c.metrics().index_shard_parallel >= 2 {
+            break;
+        }
+    }
+    let m = c.metrics();
+    assert!(
+        m.index_shard_parallel >= 2,
+        "sharded single-signature ingest must overlap index phases across \
+         workers (saw high-water {})",
+        m.index_shard_parallel
+    );
+    // The skew gauge observed a live (possibly imbalanced) partition.
+    let stats = c
+        .project_blocking(ProjectRequest::index_stats(1, Format::Tt, DIMS.to_vec()))
+        .unwrap()
+        .index
+        .unwrap();
+    assert_eq!(stats.shards, 4);
+    assert!(stats.len > 0);
+    c.shutdown();
+}
+
+/// The partitioning rule is pure and stable — restore re-partitions rely
+/// on it, so pin it down at the integration level too.
+#[test]
+fn partitioning_is_stable_and_total() {
+    for id in 0..1000u64 {
+        for s in [1usize, 2, 4, 8] {
+            assert!(shard_of(id, s) < s);
+            assert_eq!(shard_of(id, s), shard_of(id, s));
+        }
+        assert_eq!(shard_of(id, 1), 0);
+    }
+}

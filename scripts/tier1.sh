@@ -38,6 +38,15 @@ if [ "$fail" -eq 0 ]; then
   cargo test -q --test projection_batch_props || fail=1
 fi
 
+# Sharded index execution is gated on bit-identity with the unsharded
+# baseline (S ∈ {1,2,4}) plus ordering/migration/consistent-cut
+# properties: name the suite so a sharding regression is visible at a
+# glance (cheap — binary already built by the full run above).
+if [ "$fail" -eq 0 ]; then
+  echo "== tier1: sharded-ordering bit-identity (sharded_props) =="
+  cargo test -q --test sharded_props || fail=1
+fi
+
 advisory() {
   local label="$1"
   shift
