@@ -13,7 +13,9 @@
 //! batched TT-map throughput on **TT-format** inputs must reach ≥ 2×
 //! item-at-a-time at B = 16 (the dense tripwire from PR 1 stays).
 
-use tensorized_rp::experiments::batch::{print_verdict, run, to_json, BatchSweepConfig};
+use tensorized_rp::experiments::batch::{
+    kernel_bench, print_kernel_verdict, print_verdict, run, to_json, BatchSweepConfig,
+};
 use tensorized_rp::util::bench::BenchReport;
 use tensorized_rp::util::cli::Args;
 
@@ -46,8 +48,12 @@ fn main() {
     }
     report.finish("batch_sweep.csv");
 
+    // Kernel micro-benchmark on the sweep's GEMM shape mix: packed
+    // kernel vs the frozen PR 5 baseline, emitted as the `kernel` series.
+    let krows = kernel_bench(&cfg);
+
     // Machine-readable trajectory file: one series per (map, input).
-    let doc = to_json(&cfg, &rows);
+    let doc = to_json(&cfg, &rows, &krows);
     let out_path = args.get_or("out", "BENCH_batch_sweep.json");
     match std::fs::write(&out_path, doc.to_string_pretty()) {
         Ok(()) => println!("[written {out_path}]"),
@@ -55,4 +61,5 @@ fn main() {
     }
 
     print_verdict(&rows);
+    print_kernel_verdict(&krows);
 }

@@ -1,0 +1,87 @@
+//! Bench target: GEMM-kernel roofline micro-benchmark — GFLOP/s of the
+//! packed SIMD kernel vs the frozen PR 5 scalar kernel
+//! (`linalg::gemm::reference`) on the GEMM shape mix the batch sweep
+//! actually issues (dense flush, flat-index scan, TT-chain absorb-row
+//! and fused absorb-input GEMMs).
+//!
+//! ```text
+//! cargo bench --bench kernel_bench [-- --quick] [-- --out FILE]
+//! ```
+//!
+//! Emits the rows into `BENCH_batch_sweep.json` as the `kernel` series:
+//! when the file already exists (written by `cargo bench --bench
+//! batch_sweep` or `trp experiment batch`) only its `kernel` key is
+//! replaced, so the sweep series are preserved; otherwise a fresh
+//! document with empty sweep series is written. Acceptance tripwire for
+//! this PR: packed kernel ≥ 2× the PR 5 baseline on the dominant shapes.
+
+use tensorized_rp::experiments::batch::{
+    kernel_bench, print_kernel_verdict, to_json, BatchSweepConfig, KernelRow,
+};
+use tensorized_rp::util::bench::BenchReport;
+use tensorized_rp::util::cli::Args;
+use tensorized_rp::util::json::{obj, Json};
+
+/// Serialize kernel rows exactly as `to_json` does for its `kernel` key.
+fn kernel_json(krows: &[KernelRow]) -> Json {
+    Json::Arr(
+        krows
+            .iter()
+            .map(|r| {
+                obj(vec![
+                    ("shape", Json::Str(r.shape.clone())),
+                    ("m", Json::Num(r.m as f64)),
+                    ("k", Json::Num(r.k as f64)),
+                    ("n", Json::Num(r.n as f64)),
+                    ("packed_gflops", Json::Num(r.packed_gflops)),
+                    ("reference_gflops", Json::Num(r.reference_gflops)),
+                    ("speedup", Json::Num(r.speedup)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1).filter(|a| a != "--bench")).unwrap();
+    let cfg = if args.flag("quick") {
+        BatchSweepConfig::quick()
+    } else {
+        BatchSweepConfig::paper()
+    };
+    eprintln!("[kernel_bench] dims={:?} k={} input_rank={}", cfg.dims, cfg.k, cfg.input_rank);
+    let krows = kernel_bench(&cfg);
+
+    let mut report = BenchReport::new(
+        "GEMM kernel roofline: packed SIMD vs frozen PR 5 scalar kernel",
+        &["shape", "m", "k", "n", "packed_gflops", "reference_gflops", "speedup"],
+    );
+    for r in &krows {
+        report.push(vec![
+            r.shape.clone(),
+            r.m.to_string(),
+            r.k.to_string(),
+            r.n.to_string(),
+            format!("{:.2}", r.packed_gflops),
+            format!("{:.2}", r.reference_gflops),
+            format!("{:.2}", r.speedup),
+        ]);
+    }
+    report.finish("kernel_bench.csv");
+
+    let out_path = args.get_or("out", "BENCH_batch_sweep.json");
+    let mut doc = std::fs::read_to_string(&out_path)
+        .ok()
+        .and_then(|s| Json::parse(&s).ok())
+        .filter(|d| matches!(d, Json::Obj(_)))
+        .unwrap_or_else(|| to_json(&cfg, &[], &[]));
+    if let Json::Obj(map) = &mut doc {
+        map.insert("kernel".to_string(), kernel_json(&krows));
+    }
+    match std::fs::write(&out_path, doc.to_string_pretty()) {
+        Ok(()) => println!("[written {out_path} (kernel series)]"),
+        Err(e) => eprintln!("[warn] could not write {out_path}: {e}"),
+    }
+
+    print_kernel_verdict(&krows);
+}

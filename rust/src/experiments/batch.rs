@@ -12,6 +12,7 @@
 //! batch_sweep` and `trp experiment batch` both emit
 //! `BENCH_batch_sweep.json`).
 
+use crate::linalg::gemm;
 use crate::projections::{
     CpProjection, GaussianProjection, KroneckerFjlt, Projection, SparseKind, SparseProjection,
     TrpProjection, TtProjection, Workspace,
@@ -160,6 +161,79 @@ pub fn run(cfg: &BatchSweepConfig) -> Vec<BatchRow> {
     rows
 }
 
+/// GFLOP/s of the packed kernel vs the frozen PR 5 scalar kernel
+/// (`linalg::gemm::reference`) on one GEMM shape from the sweep's hot
+/// paths.
+#[derive(Debug, Clone)]
+pub struct KernelRow {
+    /// Which hot path issues the shape.
+    pub shape: String,
+    /// GEMM dimensions (`m×k×n`).
+    pub m: usize,
+    /// Reduction dimension.
+    pub k: usize,
+    /// Output columns.
+    pub n: usize,
+    /// Packed/SIMD kernel throughput (GFLOP/s, median).
+    pub packed_gflops: f64,
+    /// Frozen PR 5 scalar kernel throughput (GFLOP/s, median).
+    pub reference_gflops: f64,
+    /// `packed_gflops / reference_gflops`.
+    pub speedup: f64,
+}
+
+/// The GEMM shape mix the batch sweep actually issues at `cfg`'s sizes:
+/// the dense-flush stacked GEMM, a flat-index scoring scan, and the
+/// TT-map chain's two per-mode GEMMs (absorb-row, absorb-input with the
+/// regroups now fused into it). `maps()` pins the TT map rank at 5, so
+/// the chain shapes use it too.
+fn kernel_shapes(cfg: &BatchSweepConfig) -> Vec<(String, usize, usize, usize)> {
+    let d_total: usize = cfg.dims.iter().product();
+    let b_max = cfg.batch_sizes.iter().copied().max().unwrap_or(1);
+    let d = cfg.dims[0];
+    let map_rank = 5usize;
+    let k2 = cfg.k * map_rank;
+    vec![
+        ("dense_flush".into(), b_max, d_total, cfg.k),
+        ("flat_scan".into(), 256, cfg.k, 32),
+        ("tt_absorb_row".into(), d * map_rank, map_rank, b_max.min(16) * cfg.input_rank),
+        ("tt_absorb_input".into(), k2, d * cfg.input_rank, cfg.input_rank),
+    ]
+}
+
+/// Micro-benchmark the kernel on the sweep's shape mix: both the live
+/// packed kernel and the frozen PR 5 baseline see identical operands.
+pub fn kernel_bench(cfg: &BatchSweepConfig) -> Vec<KernelRow> {
+    let mut rng = Rng::seed_from(cfg.seed ^ 0x6E41);
+    let mut rows = Vec::new();
+    for (shape, m, kk, n) in kernel_shapes(cfg) {
+        let a = rng.gaussian_vec(m * kk, 1.0);
+        let b = rng.gaussian_vec(kk * n, 1.0);
+        let mut c = vec![0.0; m * n];
+        let r_new = bench(&format!("kernel/{shape}/packed"), cfg.bench, || {
+            gemm::matmul_into(&a, &b, &mut c, m, kk, n);
+            c[0]
+        });
+        let r_ref = bench(&format!("kernel/{shape}/reference"), cfg.bench, || {
+            gemm::reference::matmul_into(&a, &b, &mut c, m, kk, n);
+            c[0]
+        });
+        let flops = (2 * m * kk * n) as f64;
+        let packed_gflops = flops / r_new.median_secs().max(1e-12) / 1e9;
+        let reference_gflops = flops / r_ref.median_secs().max(1e-12) / 1e9;
+        rows.push(KernelRow {
+            shape,
+            m,
+            k: kk,
+            n,
+            packed_gflops,
+            reference_gflops,
+            speedup: packed_gflops / reference_gflops.max(1e-12),
+        });
+    }
+    rows
+}
+
 /// Render rows as the CSV written under `results/`.
 pub fn to_csv(rows: &[BatchRow]) -> CsvTable {
     let mut t = CsvTable::new(&[
@@ -185,9 +259,11 @@ pub fn to_csv(rows: &[BatchRow]) -> CsvTable {
 
 /// Machine-readable trajectory document (`BENCH_batch_sweep.json`): one
 /// series per `(map, input format)` with batched/item throughput and
-/// speedup over `B`. Shared by the bench binary and `trp experiment
-/// batch` so both emit the same schema.
-pub fn to_json(cfg: &BatchSweepConfig, rows: &[BatchRow]) -> Json {
+/// speedup over `B`, plus a top-level `kernel` array of GFLOP/s rows
+/// (packed vs frozen-PR 5 kernel) when the micro-benchmark ran. Shared
+/// by the bench binary and `trp experiment batch` so both emit the same
+/// schema.
+pub fn to_json(cfg: &BatchSweepConfig, rows: &[BatchRow], kernel: &[KernelRow]) -> Json {
     let mut keys: Vec<(String, String)> = Vec::new();
     for r in rows {
         let key = (r.map.clone(), r.input.clone());
@@ -229,12 +305,27 @@ pub fn to_json(cfg: &BatchSweepConfig, rows: &[BatchRow]) -> Json {
             ])
         })
         .collect();
+    let kernel_rows: Vec<Json> = kernel
+        .iter()
+        .map(|r| {
+            obj(vec![
+                ("shape", Json::Str(r.shape.clone())),
+                ("m", Json::Num(r.m as f64)),
+                ("k", Json::Num(r.k as f64)),
+                ("n", Json::Num(r.n as f64)),
+                ("packed_gflops", Json::Num(r.packed_gflops)),
+                ("reference_gflops", Json::Num(r.reference_gflops)),
+                ("speedup", Json::Num(r.speedup)),
+            ])
+        })
+        .collect();
     obj(vec![
         ("bench", Json::Str("batch_sweep".into())),
         ("dims", Json::Arr(cfg.dims.iter().map(|&d| Json::Num(d as f64)).collect())),
         ("k", Json::Num(cfg.k as f64)),
         ("input_rank", Json::Num(cfg.input_rank as f64)),
         ("series", Json::Arr(series)),
+        ("kernel", Json::Arr(kernel_rows)),
     ])
 }
 
@@ -247,6 +338,18 @@ pub fn print_verdict(rows: &[BatchRow]) {
         println!(
             "[batch_sweep] TT {} B=16 batched speedup: {:.2}x ({verdict}, target ≥ 2x)",
             r.input, r.speedup
+        );
+    }
+}
+
+/// Print the kernel tripwire: packed kernel ≥ 2× the frozen PR 5 scalar
+/// kernel on the dominant (largest-flop) sweep shapes.
+pub fn print_kernel_verdict(rows: &[KernelRow]) {
+    for r in rows {
+        let verdict = if r.speedup >= 2.0 { "PASS" } else { "MISS" };
+        println!(
+            "[kernel_bench] {} ({}x{}x{}): {:.2} GFLOP/s vs {:.2} reference = {:.2}x ({verdict}, target ≥ 2x on dominant shapes)",
+            r.shape, r.m, r.k, r.n, r.packed_gflops, r.reference_gflops, r.speedup
         );
     }
 }
@@ -293,12 +396,34 @@ mod tests {
     fn json_has_one_series_per_map_input_pair() {
         let cfg = tiny();
         let rows = run(&cfg);
-        let doc = to_json(&cfg, &rows);
+        let doc = to_json(&cfg, &rows, &[]);
         let series = doc.get("series").and_then(Json::as_arr).expect("series array");
         assert_eq!(series.len(), 6 + 3 * 2);
         for s in series {
             let b = s.get("batch_sizes").and_then(Json::as_arr).expect("batch sizes");
             assert_eq!(b.len(), cfg.batch_sizes.len());
+        }
+        // Kernel array is present even when the micro-benchmark didn't run.
+        let kernel = doc.get("kernel").and_then(Json::as_arr).expect("kernel array");
+        assert!(kernel.is_empty());
+    }
+
+    #[test]
+    fn kernel_bench_covers_shape_mix_and_serializes() {
+        let cfg = tiny();
+        let krows = kernel_bench(&cfg);
+        assert_eq!(krows.len(), 4, "one row per hot-path shape");
+        for r in &krows {
+            assert!(r.m > 0 && r.k > 0 && r.n > 0);
+            assert!(r.packed_gflops > 0.0 && r.reference_gflops > 0.0);
+            assert!(r.speedup.is_finite());
+        }
+        let doc = to_json(&cfg, &run(&cfg), &krows);
+        let kernel = doc.get("kernel").and_then(Json::as_arr).expect("kernel array");
+        assert_eq!(kernel.len(), krows.len());
+        for (j, r) in kernel.iter().zip(&krows) {
+            assert_eq!(j.get("m").and_then(Json::as_f64), Some(r.m as f64));
+            assert!(j.get("speedup").and_then(Json::as_f64).is_some());
         }
     }
 }

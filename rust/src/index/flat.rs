@@ -151,7 +151,11 @@ impl AnnIndex for FlatIndex {
                 ws.chain_b[p * b + j] = v;
             }
         }
-        // S = X · Qᵀ in one blocked GEMM over the whole store.
+        // S = X · Qᵀ in one packed GEMM over the whole store. Large scans
+        // split row panels across workers inside the kernel
+        // (`linalg::gemm` parallel path) — rank-stable partitioning keeps
+        // the per-element chains, and hence the neighbour sets, identical
+        // at every worker count.
         ws.chain_a.clear();
         ws.chain_a.resize(n * b, 0.0);
         matmul_into(&self.rows, &ws.chain_b, &mut ws.chain_a, n, d, b);

@@ -106,6 +106,28 @@ impl Matrix {
         out
     }
 
+    /// Matrix product `selfᵀ · other` without materializing the
+    /// transpose: the GEMM packs A through a column-stride gather
+    /// ([`super::gemm::matmul_gather_scatter_acc`]), so the result is
+    /// bit-identical to `self.transpose().matmul(other)` while skipping
+    /// the `rows × cols` copy. Used by the sketching and theory layers
+    /// for their Gram/projection products.
+    pub fn t_matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "inner dimension mismatch");
+        let mut out = Matrix::zeros(self.cols, other.cols);
+        let n = other.cols;
+        super::gemm::matmul_gather_scatter_acc(
+            |i, p| self.data[p * self.cols + i],
+            other.data(),
+            out.data_mut(),
+            self.cols,
+            self.rows,
+            n,
+            |i| i * n,
+        );
+        out
+    }
+
     /// Frobenius norm.
     pub fn fro_norm(&self) -> f64 {
         self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
@@ -189,6 +211,22 @@ mod tests {
         let b = Matrix::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
         let c = a.matmul(&b);
         assert_eq!(c.data(), &[19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn t_matmul_matches_materialized_transpose() {
+        let mut rng = crate::rng::Rng::seed_from(31);
+        let (r, c, n) = (23, 9, 14);
+        let a = Matrix::from_vec(r, c, rng.gaussian_vec(r * c, 1.0));
+        let b = Matrix::from_vec(r, n, rng.gaussian_vec(r * n, 1.0));
+        let fused = a.t_matmul(&b);
+        let materialized = a.transpose().matmul(&b);
+        assert_eq!(fused.rows(), c);
+        assert_eq!(fused.cols(), n);
+        // Bit-identical, not just close: same kernel, same chains.
+        for (x, y) in fused.data().iter().zip(materialized.data()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
     }
 
     #[test]

@@ -4,8 +4,9 @@
 //! layer needs are implemented here from scratch:
 //!
 //! * [`Matrix`] — a minimal row-major matrix type,
-//! * [`matmul`] / [`Matrix::matmul`] — cache-blocked GEMM with a
-//!   micro-kernel written to autovectorize,
+//! * [`matmul`] / [`Matrix::matmul`] — packed, register-tiled GEMM with
+//!   an AVX2 microkernel behind runtime feature detection (see
+//!   [`gemm`] for the kernel architecture and determinism contract),
 //! * [`qr`] — Householder QR (thin), used by TT orthogonalization,
 //! * [`svd`] — one-sided Jacobi SVD, used by TT-SVD and TT-rounding.
 //!
@@ -13,12 +14,15 @@
 //! identities (reconstruction, orthogonality, known decompositions).
 
 pub mod fft;
-mod gemm;
+pub mod gemm;
 mod matrix;
 mod qr;
 mod svd;
 
-pub use gemm::{matmul, matmul_acc, matmul_into, matvec};
+pub use gemm::{
+    gemm_threads, matmul, matmul_acc, matmul_acc_with_threads, matmul_gather_scatter_acc,
+    matmul_into, matvec, set_gemm_threads,
+};
 pub use matrix::Matrix;
 pub use qr::qr;
 pub use svd::{svd, Svd};

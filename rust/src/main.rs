@@ -435,13 +435,16 @@ fn cmd_experiment(args: &Args, cfg: &AppConfig) -> Result<(), String> {
             csv.write_to(&path).map_err(|e| e.to_string())?;
             println!("[written {}]", path.display());
             // Machine-readable trajectory tracked across PRs (same schema
-            // as `cargo bench --bench batch_sweep`), now with TT-input
-            // and CP-input series next to the dense ones.
+            // as `cargo bench --bench batch_sweep`): TT-input and CP-input
+            // series next to the dense ones, plus the kernel GFLOP/s rows
+            // (packed vs frozen PR 5 kernel) on the sweep's shape mix.
+            let krows = batch::kernel_bench(&c);
             let bench_path = args.get_or("bench-out", "BENCH_batch_sweep.json");
-            std::fs::write(&bench_path, batch::to_json(&c, &rows).to_string_pretty())
+            std::fs::write(&bench_path, batch::to_json(&c, &rows, &krows).to_string_pretty())
                 .map_err(|e| e.to_string())?;
             println!("[written {bench_path}]");
             batch::print_verdict(&rows);
+            batch::print_kernel_verdict(&krows);
         }
         "ann" => {
             let mut c = if cfg.quick {

@@ -112,10 +112,13 @@ impl Projection for GaussianProjection {
             super::fallback_batch_into(self, xs, out);
             return;
         }
-        // One blocked GEMM over the stacked batch, Y = X_stack · Aᵀ,
+        // One packed GEMM over the stacked batch, Y = X_stack · Aᵀ,
         // writing the [B, k] result directly into `out`. Each output row
         // depends only on its own input row with p-ascending accumulation
-        // — identical to the single-item kernel, so bit-identical.
+        // — identical to the single-item kernel, so bit-identical. Dense
+        // flushes are the largest GEMMs in the system (B × D × k); above
+        // the kernel's flop floor they split row panels across workers
+        // (`linalg::gemm` parallel path) without changing any chain.
         let b = xs.len();
         let d = self.input_dim();
         matmul_into(&ws.stack, &self.matrix_t, out, b, d, k);

@@ -68,10 +68,12 @@ pub struct Workspace {
     pub(crate) tmp: Vec<f64>,
     /// Compressed-batch boundary/state panel (tensor::batch kernels).
     pub(crate) panel_a: Vec<f64>,
-    /// Compressed-batch GEMM operand panel.
+    /// Compressed-batch GEMM operand panel. (A third regroup/staging
+    /// panel existed until the TT×TT regroup permutes were fused into
+    /// the GEMM's pack prologue / store epilogue —
+    /// `linalg::matmul_gather_scatter_acc` — so the kernels no longer
+    /// round-trip panels through scratch.)
     pub(crate) panel_b: Vec<f64>,
-    /// Compressed-batch regroup/staging panel.
-    pub(crate) panel_c: Vec<f64>,
 }
 
 impl Workspace {

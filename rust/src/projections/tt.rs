@@ -90,8 +90,8 @@ impl TtProjection {
         let chunks: Vec<&[TtDenseContraction]> = self.row_ctxs.chunks(chunk).collect();
         let parts = crate::util::threadpool::par_map(chunks, threads, |rows| {
             let mut out = vec![0.0; rows.len()];
-            let (mut pa, mut pb, mut pc) = (Vec::new(), Vec::new(), Vec::new());
-            ctx.inner_tt_rows_into(rows, &mut out, &mut pa, &mut pb, &mut pc);
+            let (mut pa, mut pb) = (Vec::new(), Vec::new());
+            ctx.inner_tt_rows_into(rows, &mut out, &mut pa, &mut pb);
             for v in &mut out {
                 *v *= self.scale;
             }
@@ -180,13 +180,7 @@ impl Projection for TtProjection {
             let ctx = TtBatchContraction::for_tt_map(&items);
             ws.tmp.clear();
             ws.tmp.resize(group.len() * k, 0.0);
-            ctx.inner_tt_rows_into(
-                &self.row_ctxs,
-                &mut ws.tmp,
-                &mut ws.panel_a,
-                &mut ws.panel_b,
-                &mut ws.panel_c,
-            );
+            ctx.inner_tt_rows_into(&self.row_ctxs, &mut ws.tmp, &mut ws.panel_a, &mut ws.panel_b);
             super::scatter_scaled(&ws.tmp, group, k, self.scale, out);
         }
         for group in &groups.cp {
@@ -208,8 +202,8 @@ impl Projection for TtProjection {
         // uses — batched outputs are bit-identical by construction.
         let ctx = TtBatchContraction::for_tt_map(&[x]);
         let mut out = vec![0.0; self.k];
-        let (mut pa, mut pb, mut pc) = (Vec::new(), Vec::new(), Vec::new());
-        ctx.inner_tt_rows_into(&self.row_ctxs, &mut out, &mut pa, &mut pb, &mut pc);
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        ctx.inner_tt_rows_into(&self.row_ctxs, &mut out, &mut pa, &mut pb);
         for v in &mut out {
             *v *= self.scale;
         }

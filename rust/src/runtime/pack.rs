@@ -12,6 +12,15 @@
 //!
 //! Batches smaller than the compiled `B` are zero-padded; the caller slices
 //! the first `b·k` outputs.
+//!
+//! This module is the **ahead-of-time** packing story: f32, whole-tensor
+//! layouts fixed by the compiled PJRT artifact, produced once per
+//! registration. Its serving-time counterpart lives in `linalg::gemm`,
+//! which packs f64 operands into `MR`/`NR` micro-panels *per GEMM call*
+//! (zero-padded edge lanes, gather-based A access) for the native packed
+//! kernel — same idea (restructure memory once so the hot loop streams
+//! contiguously), different layout contract and precision, so the two
+//! deliberately do not share code.
 
 use crate::projections::{CpProjection, GaussianProjection, TtProjection};
 use crate::tensor::{CpTensor, DenseTensor, TtTensor};

@@ -76,9 +76,11 @@ pub fn sketched_svd(a: &Matrix, col_dims: &[usize], cfg: SketchConfig) -> Sketch
         }
     }
 
-    // Q = orth(Y); B = QᵀA; SVD(B) and lift back.
+    // Q = orth(Y); B = QᵀA; SVD(B) and lift back. QᵀA runs through the
+    // transpose-gathering GEMM entry (no Qᵀ materialization) — every
+    // product in the sketch pipeline now hits the one packed kernel.
     let (q, _) = qr(&y);
-    let b = q.transpose().matmul(a);
+    let b = q.t_matmul(a);
     let inner = svd(&b);
     let trunc = inner.truncate(cfg.rank);
     SketchedSvd {

@@ -146,15 +146,26 @@ impl TtBatchContraction {
     /// Per mode: one absorb-row GEMM per map row over all `B` boundary
     /// matrices at once, then one absorb-input GEMM per item over all map
     /// rows at once — `k + B` GEMMs per mode instead of `k·B` hand-rolled
-    /// chains. `pa`/`pb`/`pc` are caller-held panel scratch
+    /// chains. `pa`/`pb` are caller-held panel scratch
     /// (`projections::Workspace::panel_*`).
+    ///
+    /// The two regroup permutes that PR 4 staged through a third scratch
+    /// panel (flagged pure-memory-traffic-hot in its notes) are fused
+    /// into the absorb-input GEMM itself via
+    /// [`crate::linalg::matmul_gather_scatter_acc`]: regroup #1 becomes
+    /// the GEMM's A-side *gather* (the pack prologue reads `pb` through
+    /// the permutation index map) and regroup #2 becomes its C-side row
+    /// *scatter* (the store epilogue lands each output row directly at
+    /// its mode-`m+1` boundary-panel slot). Bit-identical to the staged
+    /// path by the kernel's determinism contract — same operand values,
+    /// same ascending-index chains — which
+    /// [`Self::inner_tt_rows_into_unfused`] pins as a regression test.
     pub fn inner_tt_rows_into(
         &self,
         rows: &[TtDenseContraction],
         out: &mut [f64],
         pa: &mut Vec<f64>,
         pb: &mut Vec<f64>,
-        pc: &mut Vec<f64>,
     ) {
         let n = self.dims.len();
         let b = self.b;
@@ -171,6 +182,10 @@ impl TtBatchContraction {
         // rank is 1: one 1×B block of ones per row.
         pa.clear();
         pa.resize(kr * b, 1.0);
+        // Fused-regroup index maps, rebuilt per mode (k2 global rows).
+        let mut row_base: Vec<usize> = Vec::new();
+        let mut row_stride: Vec<usize> = Vec::new();
+        let mut row_dst: Vec<usize> = Vec::new();
         for m in 0..n {
             let d = self.dims[m];
             let rb = self.ranks[m];
@@ -178,6 +193,105 @@ impl TtBatchContraction {
             // Absorb the row core: Tᵣ[(i·ra2 + a2), (bi·rb + bv)] =
             //   Σₐ rowᵣ[a, i, a2] · Mᵣ[a, (bi·rb + bv)] — one GEMM per row
             // with the whole group folded into the columns.
+            let total_t: usize = rows.iter().map(|r| d * r.ranks()[m + 1] * b * rb).sum();
+            pb.clear();
+            pb.resize(total_t, 0.0);
+            let mut mo = 0usize;
+            let mut to = 0usize;
+            for row in rows {
+                let ra = row.ranks()[m];
+                let ra2 = row.ranks()[m + 1];
+                let msz = ra * b * rb;
+                let tsz = d * ra2 * b * rb;
+                matmul_into(
+                    row.core_t(m),
+                    &pa[mo..mo + msz],
+                    &mut pb[to..to + tsz],
+                    d * ra2,
+                    ra,
+                    b * rb,
+                );
+                mo += msz;
+                to += tsz;
+            }
+            // Absorb the input core with both regroups fused into the
+            // GEMM. Conceptual A operand per item (the old staged t2):
+            //   t2_bᵢ[(roffᵣ + a2), (i·rb + bv)]
+            //     = pb[toᵣ + (i·ra2ᵣ + a2)·(B·rb) + bi·rb + bv]
+            // so global row g = roffᵣ + a2 gathers through
+            //   row_base[g]   = toᵣ + a2·(B·rb)      (the i = 0 slot)
+            //   row_stride[g] = ra2ᵣ·(B·rb)          (step per i)
+            // and its output row lands at the mode-(m+1) boundary slot
+            //   row_dst[g]    = m2ᵣ + a2·(B·rb2)     (+ bi·rb2 per item),
+            // which is exactly where the staged path's regroup #2 copied.
+            let k2: usize = rows.iter().map(|r| r.ranks()[m + 1]).sum();
+            row_base.clear();
+            row_stride.clear();
+            row_dst.clear();
+            let mut to = 0usize;
+            let mut m2 = 0usize;
+            for row in rows {
+                let ra2 = row.ranks()[m + 1];
+                for a2 in 0..ra2 {
+                    row_base.push(to + a2 * (b * rb));
+                    row_stride.push(ra2 * (b * rb));
+                    row_dst.push(m2 + a2 * (b * rb2));
+                }
+                to += d * ra2 * b * rb;
+                m2 += ra2 * b * rb2;
+            }
+            let pb_read: &[f64] = pb;
+            pa.clear();
+            pa.resize(k2 * b * rb2, 0.0);
+            for bi in 0..b {
+                crate::linalg::matmul_gather_scatter_acc(
+                    |g, p| pb_read[row_base[g] + (p / rb) * row_stride[g] + bi * rb + p % rb],
+                    self.xperm_item(m, bi),
+                    pa,
+                    k2,
+                    d * rb,
+                    rb2,
+                    |g| row_dst[g] + bi * rb2,
+                );
+            }
+        }
+        // Every rank is 1 again: pa[r·b + bi] is ⟨rowᵣ, x_bᵢ⟩.
+        for r in 0..kr {
+            for bi in 0..b {
+                out[bi * kr + r] = pa[r * b + bi];
+            }
+        }
+    }
+
+    /// The PR 4 staged path — regroup #1 into a materialized `t2` panel,
+    /// a plain absorb-input GEMM, regroup #2 back out — kept as the
+    /// baseline the fused-regroup bit-identity regression test
+    /// (`rust/tests/gemm_kernel_props.rs`) compares against. Allocates
+    /// its scratch internally; not used by any production path.
+    pub fn inner_tt_rows_into_unfused(
+        &self,
+        rows: &[TtDenseContraction],
+        out: &mut [f64],
+        pa: &mut Vec<f64>,
+        pb: &mut Vec<f64>,
+    ) {
+        let n = self.dims.len();
+        let b = self.b;
+        let kr = rows.len();
+        assert!(out.len() >= b * kr, "output buffer size");
+        if kr == 0 {
+            return;
+        }
+        for row in rows {
+            assert_eq!(row.dims(), &self.dims[..], "map row shape mismatch");
+        }
+        let mut pc: Vec<f64> = Vec::new();
+        pa.clear();
+        pa.resize(kr * b, 1.0);
+        for m in 0..n {
+            let d = self.dims[m];
+            let rb = self.ranks[m];
+            let rb2 = self.ranks[m + 1];
             let total_t: usize = rows.iter().map(|r| d * r.ranks()[m + 1] * b * rb).sum();
             pb.clear();
             pb.resize(total_t, 0.0);
@@ -253,7 +367,6 @@ impl TtBatchContraction {
                 roff += ra2;
             }
         }
-        // Every rank is 1 again: pa[r·b + bi] is ⟨rowᵣ, x_bᵢ⟩.
         for r in 0..kr {
             for bi in 0..b {
                 out[bi * kr + r] = pa[r * b + bi];
@@ -670,8 +783,8 @@ mod tests {
             let refs: Vec<&TtTensor> = items.iter().collect();
             let ctx = TtBatchContraction::new(&refs);
             let mut out = vec![0.0; b * rows.len()];
-            let (mut pa, mut pb, mut pc) = (Vec::new(), Vec::new(), Vec::new());
-            ctx.inner_tt_rows_into(&rows, &mut out, &mut pa, &mut pb, &mut pc);
+            let (mut pa, mut pb) = (Vec::new(), Vec::new());
+            ctx.inner_tt_rows_into(&rows, &mut out, &mut pa, &mut pb);
             for (bi, x) in items.iter().enumerate() {
                 for (r, row) in rows_raw.iter().enumerate() {
                     let want = row.inner(x);
@@ -685,7 +798,7 @@ mod tests {
                 // singleton-group run of the same item.
                 let solo = TtBatchContraction::new(&[x]);
                 let mut one = vec![0.0; rows.len()];
-                solo.inner_tt_rows_into(&rows, &mut one, &mut pa, &mut pb, &mut pc);
+                solo.inner_tt_rows_into(&rows, &mut one, &mut pa, &mut pb);
                 for r in 0..rows.len() {
                     assert_eq!(
                         out[bi * rows.len() + r].to_bits(),
@@ -706,14 +819,14 @@ mod tests {
         let rows = tt_rows(&dims, 4, 6, &mut rng);
         let x = TtTensor::random_unit(&dims, 3, &mut rng);
         let ctx = TtBatchContraction::for_tt_map(&[&x]);
-        let (mut pa, mut pb, mut pc) = (Vec::new(), Vec::new(), Vec::new());
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
         let mut full = vec![0.0; rows.len()];
-        ctx.inner_tt_rows_into(&rows, &mut full, &mut pa, &mut pb, &mut pc);
+        ctx.inner_tt_rows_into(&rows, &mut full, &mut pa, &mut pb);
         for chunk in [1usize, 2, 4] {
             let mut parts = Vec::new();
             for rows_chunk in rows.chunks(chunk) {
                 let mut out = vec![0.0; rows_chunk.len()];
-                ctx.inner_tt_rows_into(rows_chunk, &mut out, &mut pa, &mut pb, &mut pc);
+                ctx.inner_tt_rows_into(rows_chunk, &mut out, &mut pa, &mut pb);
                 parts.extend(out);
             }
             for (a, b) in full.iter().zip(&parts) {
@@ -837,8 +950,8 @@ mod tests {
         let refs: Vec<&TtTensor> = items.iter().collect();
         let ctx = TtBatchContraction::for_tt_map(&refs);
         let mut out = vec![0.0; 4];
-        let (mut pa, mut pb, mut pc) = (Vec::new(), Vec::new(), Vec::new());
-        ctx.inner_tt_rows_into(&rows, &mut out, &mut pa, &mut pb, &mut pc);
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        ctx.inner_tt_rows_into(&rows, &mut out, &mut pa, &mut pb);
         for (bi, x) in items.iter().enumerate() {
             for (r, row) in rows.iter().enumerate() {
                 let want = row.to_tt().inner(x);

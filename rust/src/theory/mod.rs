@@ -34,7 +34,7 @@ pub fn gaussian_variance(k: usize) -> f64 {
 /// The paper's *exact* order-2 TT variance (remark after Theorem 1):
 /// `Var(‖f_TT(X)‖²) = (2‖X‖⁴_F + (6/R)·Tr[(XᵀX)²]) / k`.
 pub fn tt_order2_exact_variance(x: &Matrix, r: usize, k: usize) -> f64 {
-    let xtx = x.transpose().matmul(x);
+    let xtx = x.t_matmul(x);
     let tr: f64 = {
         // Tr[(XᵀX)²] = ‖XᵀX‖²_F for symmetric XᵀX.
         xtx.data().iter().map(|v| v * v).sum()

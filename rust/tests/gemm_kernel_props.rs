@@ -1,0 +1,147 @@
+//! Property gates for the packed GEMM kernel (`linalg::gemm`), named in
+//! `scripts/tier1.sh`:
+//!
+//! 1. **Exhaustive small-shape sweep** — every `m ∈ 1..=2·MR`,
+//!    `n ∈ 1..=2·NR` (crossing every microkernel edge-tile case) over a
+//!    `k` ladder spanning the dot, simple and packed dispatch paths,
+//!    checked **bit-identical** to the naive triple loop: the kernel's
+//!    determinism contract says each output element is one ascending-`k`
+//!    IEEE chain, which is exactly what naive computes.
+//! 2. **Parallel row-panel bit-identity** — worker counts {1, 2, 4}
+//!    produce bitwise-equal output (rank-stable partitioning).
+//! 3. **Fused-regroup TT×TT regression** — the group kernel with the
+//!    regroup permutes fused into the GEMM pack/store
+//!    (`inner_tt_rows_into`) stays bit-identical to the staged PR 4
+//!    path (`inner_tt_rows_into_unfused`).
+//! 4. **NaN/Inf propagation** — `0·NaN` and `0·∞` reach the output on
+//!    every dispatch path (the seed kernel's zero-skip swallowed them).
+
+use tensorized_rp::linalg::gemm::{self, MR, NR};
+use tensorized_rp::linalg::{matmul, matmul_acc_with_threads, matmul_into, matvec};
+use tensorized_rp::rng::Rng;
+use tensorized_rp::tensor::{TtBatchContraction, TtDenseContraction, TtTensor};
+
+/// Naive triple loop: acc starts at zero and adds in ascending-`k`
+/// order — the chain the kernel contract pins.
+fn matmul_naive(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let mut c = vec![0.0; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0;
+            for p in 0..k {
+                acc += a[i * k + p] * b[p * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+#[test]
+fn exhaustive_small_shapes_bit_match_naive() {
+    let mut rng = Rng::seed_from(0x6E11);
+    // k ladder: 1 (degenerate), around the tile sizes, and 300 (pushes
+    // m ≥ MR, n ≥ NR shapes over the packing threshold and across a KC
+    // boundary in combination with the widest m·n).
+    for k in [1usize, 2, 3, 7, 8, 9, 300] {
+        for m in 1..=2 * MR {
+            for n in 1..=2 * NR {
+                let a = rng.gaussian_vec(m * k, 1.0);
+                let b = rng.gaussian_vec(k * n, 1.0);
+                let got = matmul(&a, &b, m, k, n);
+                let want = matmul_naive(&a, &b, m, k, n);
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        g.to_bits(),
+                        w.to_bits(),
+                        "shape {m}x{k}x{n} element {i}: {g:?} != naive {w:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_row_panels_bit_identical_across_worker_counts() {
+    let mut rng = Rng::seed_from(0x6E12);
+    // Crosses the parallel flop floor and leaves a ragged last panel
+    // (150 rows = 37 full MR-tiles + 2 rows).
+    let (m, k, n) = (150usize, 130usize, 80usize);
+    let a = rng.gaussian_vec(m * k, 1.0);
+    let b = rng.gaussian_vec(k * n, 1.0);
+    // Accumulate onto a nonzero C so the chains include a C prologue.
+    let c0 = rng.gaussian_vec(m * n, 1.0);
+    let mut base = c0.clone();
+    matmul_acc_with_threads(&a, &b, &mut base, m, k, n, 1);
+    for threads in [2usize, 4] {
+        let mut c = c0.clone();
+        matmul_acc_with_threads(&a, &b, &mut c, m, k, n, threads);
+        for (i, (x, y)) in c.iter().zip(&base).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "threads={threads} element {i}");
+        }
+    }
+}
+
+#[test]
+fn fused_tt_regroup_bit_identical_to_unfused() {
+    let mut rng = Rng::seed_from(0x6E13);
+    let dims = [3usize, 4, 2, 3];
+    let rows_raw: Vec<TtTensor> = (0..6)
+        .map(|_| TtTensor::random_projection_row(&dims, 3, &mut rng))
+        .collect();
+    let rows: Vec<TtDenseContraction> = rows_raw.iter().map(TtDenseContraction::new).collect();
+    for b in [1usize, 4, 9] {
+        let items: Vec<TtTensor> =
+            (0..b).map(|_| TtTensor::random_unit(&dims, 2, &mut rng)).collect();
+        let refs: Vec<&TtTensor> = items.iter().collect();
+        let ctx = TtBatchContraction::for_tt_map(&refs);
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        let mut fused = vec![f64::NAN; b * rows.len()];
+        ctx.inner_tt_rows_into(&rows, &mut fused, &mut pa, &mut pb);
+        let mut staged = vec![f64::NAN; b * rows.len()];
+        ctx.inner_tt_rows_into_unfused(&rows, &mut staged, &mut pa, &mut pb);
+        for (i, (f, s)) in fused.iter().zip(&staged).enumerate() {
+            assert_eq!(
+                f.to_bits(),
+                s.to_bits(),
+                "B={b} slot {i}: fused {f:?} != staged {s:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn nan_and_inf_propagate_on_every_dispatch_path() {
+    // Dot path (n = 1).
+    let y = matvec(&[0.0, 1.0], &[f64::NAN, 2.0], 1, 2);
+    assert!(y[0].is_nan(), "dot path swallowed 0·NaN");
+    // Simple path (small shape, n > 1).
+    let mut a = vec![1.0; 2 * 5];
+    a[2] = 0.0;
+    let mut b = vec![1.0; 5 * 3];
+    b[2 * 3] = f64::INFINITY; // row p=2 of B: 0·∞ = NaN for output row 0
+    let c = matmul(&a, &b, 2, 5, 3);
+    assert!(c[0].is_nan(), "simple path swallowed 0·∞");
+    // Packed path: big enough shape, one zero A entry against a NaN row.
+    let (m, k, n) = (16usize, 256usize, 32usize);
+    let mut a = vec![1.0; m * k];
+    a[7 * k + 100] = 0.0;
+    let mut b = vec![1.0; k * n];
+    for v in &mut b[100 * n..101 * n] {
+        *v = f64::NAN;
+    }
+    let mut c = vec![0.0; m * n];
+    matmul_into(&a, &b, &mut c, m, k, n);
+    for j in 0..n {
+        assert!(c[7 * n + j].is_nan(), "packed path swallowed 0·NaN at col {j}");
+    }
+    // Rows whose A entry is 1.0 against the NaN B row are NaN too (sanity
+    // that the poison came from the product, not the zero special case).
+    assert!(c[0].is_nan());
+    // The frozen PR 5 reference keeps its historical zero-skip: the same
+    // dot-shape product does NOT propagate there (documented contrast).
+    let mut cref = vec![0.0; 1];
+    gemm::reference::matmul_into(&[0.0, 1.0], &[f64::NAN, 2.0], &mut cref, 1, 2, 1);
+    assert!(!cref[0].is_nan());
+}

@@ -47,6 +47,16 @@ if [ "$fail" -eq 0 ]; then
   cargo test -q --test sharded_props || fail=1
 fi
 
+# The packed GEMM kernel is gated on its determinism contract: exhaustive
+# small-shape bitwise match vs the naive chain, parallel row-panel
+# bit-identity across worker counts {1,2,4}, fused-regroup TT×TT bitwise
+# regression vs the staged path, and NaN/Inf propagation. Name the suite
+# so a kernel regression is visible at a glance (cheap — already built).
+if [ "$fail" -eq 0 ]; then
+  echo "== tier1: GEMM kernel bit-identity (gemm_kernel_props) =="
+  cargo test -q --test gemm_kernel_props || fail=1
+fi
+
 advisory() {
   local label="$1"
   shift
