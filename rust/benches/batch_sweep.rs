@@ -14,7 +14,8 @@
 //! item-at-a-time at B = 16 (the dense tripwire from PR 1 stays).
 
 use tensorized_rp::experiments::batch::{
-    kernel_bench, print_kernel_verdict, print_verdict, run, to_json, BatchSweepConfig,
+    kernel_bench, print_kernel_verdict, print_trace_verdict, print_verdict, run, to_json,
+    trace_overhead, BatchSweepConfig,
 };
 use tensorized_rp::util::bench::BenchReport;
 use tensorized_rp::util::cli::Args;
@@ -52,8 +53,12 @@ fn main() {
     // kernel vs the frozen PR 5 baseline, emitted as the `kernel` series.
     let krows = kernel_bench(&cfg);
 
+    // Tracing tripwire on the B = 16 serving point: bit-identical
+    // responses with tracing off vs on, bounded enabled-path overhead.
+    let trow = trace_overhead(&cfg);
+
     // Machine-readable trajectory file: one series per (map, input).
-    let doc = to_json(&cfg, &rows, &krows);
+    let doc = to_json(&cfg, &rows, &krows, Some(&trow));
     let out_path = args.get_or("out", "BENCH_batch_sweep.json");
     match std::fs::write(&out_path, doc.to_string_pretty()) {
         Ok(()) => println!("[written {out_path}]"),
@@ -62,4 +67,5 @@ fn main() {
 
     print_verdict(&rows);
     print_kernel_verdict(&krows);
+    print_trace_verdict(&trow);
 }

@@ -86,6 +86,13 @@ impl<T> Batcher<T> {
         self.oldest_us.map(|t0| t0 + self.cfg.max_delay_us)
     }
 
+    /// Tick the current (pending) batch opened at — the arrival of its
+    /// oldest item. The dispatcher reads this before flushing so the
+    /// flush-assembly span/histogram covers first-enqueue → dispatch.
+    pub fn opened_us(&self) -> Option<u64> {
+        self.oldest_us
+    }
+
     /// Unconditionally take the pending batch.
     pub fn flush(&mut self) -> Option<Vec<T>> {
         if self.pending.is_empty() {
@@ -190,6 +197,17 @@ mod tests {
         b.push(2, 1);
         assert_eq!(b.flush().unwrap(), vec![1, 2]);
         assert!(b.is_empty());
+    }
+
+    #[test]
+    fn opened_us_tracks_oldest_and_clears_on_flush() {
+        let mut b = Batcher::new(cfg(10, 500));
+        assert_eq!(b.opened_us(), None);
+        b.push(1, 100);
+        b.push(2, 300);
+        assert_eq!(b.opened_us(), Some(100));
+        b.flush();
+        assert_eq!(b.opened_us(), None);
     }
 
     #[test]

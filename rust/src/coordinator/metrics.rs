@@ -42,21 +42,35 @@ impl LatencyHistogram {
         self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
     }
 
-    /// Approximate quantile (upper edge of the bucket containing it).
+    /// Approximate quantile, interpolated linearly within the containing
+    /// log₂ bucket: the `r`-th of `c` observations in bucket `[2^b,
+    /// 2^(b+1))` estimates as `2^b + 2^b·r/c`, so the estimate degrades
+    /// gracefully from the lower edge up to the upper edge instead of
+    /// always reporting the upper edge (which overstated every quantile
+    /// by up to 2×).
     pub fn quantile_us(&self, q: f64) -> u64 {
         let n = self.count();
         if n == 0 {
             return 0;
         }
-        let target = (q * n as f64).ceil() as u64;
+        let target = ((q * n as f64).ceil() as u64).max(1);
         let mut seen = 0;
         for (b, bucket) in self.buckets.iter().enumerate() {
-            seen += bucket.load(Ordering::Relaxed);
-            if seen >= target {
-                return 1u64 << (b + 1); // upper edge
+            let c = bucket.load(Ordering::Relaxed);
+            if c > 0 && seen + c >= target {
+                let lower = 1u64 << b;
+                let rank = target - seen; // 1..=c
+                return lower + lower.saturating_mul(rank) / c;
             }
+            seen += c;
         }
         1u64 << BUCKETS
+    }
+
+    /// Raw bucket counts (bucket `b` covers `[2^b, 2^(b+1))` µs); the
+    /// exported histogram representation.
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
     }
 }
 
@@ -98,13 +112,22 @@ pub struct Metrics {
     /// of any signature's per-shard live item counts, sampled after each
     /// index flush (0 while unsharded or perfectly balanced) — makes a
     /// skewed id hash observable instead of silently serializing one
-    /// lane.
+    /// lane. Resettable ([`Metrics::reset_high_water`]) so one early
+    /// skewed flush does not poison the gauge forever; the matching
+    /// current value is `index_shard_skew_now`.
     pub index_shard_max_skew: AtomicU64,
     /// High-water count of one signature's shard passes executing
     /// concurrently — >1 proves a single hot signature's index phases
-    /// actually spread across workers.
+    /// actually spread across workers. Resettable like
+    /// `index_shard_max_skew`.
     pub index_shard_parallel: AtomicU64,
-    /// End-to-end latency (submit → response).
+    /// Last-sampled (current) partition imbalance, refreshed after every
+    /// index flush — decays when balance recovers, unlike the high-water.
+    pub index_shard_skew_now: AtomicU64,
+    /// Last-sampled count of concurrently executing shard passes.
+    pub index_shard_parallel_now: AtomicU64,
+    /// End-to-end latency (submit → response), recorded for successful
+    /// *and* failed replies so error tail latency is visible.
     pub e2e_latency: LatencyHistogram,
 }
 
@@ -143,11 +166,15 @@ pub struct MetricsSnapshot {
     pub index_shard_max_skew: u64,
     /// See [`Metrics::index_shard_parallel`].
     pub index_shard_parallel: u64,
+    /// See [`Metrics::index_shard_skew_now`].
+    pub index_shard_skew_now: u64,
+    /// See [`Metrics::index_shard_parallel_now`].
+    pub index_shard_parallel_now: u64,
     /// Mean end-to-end latency (µs).
     pub mean_latency_us: f64,
-    /// p50 end-to-end latency (µs, bucket upper edge).
+    /// p50 end-to-end latency (µs, interpolated within its bucket).
     pub p50_latency_us: u64,
-    /// p99 end-to-end latency (µs, bucket upper edge).
+    /// p99 end-to-end latency (µs, interpolated within its bucket).
     pub p99_latency_us: u64,
 }
 
@@ -176,10 +203,21 @@ impl Metrics {
             index_restores: self.index_restores.load(Ordering::Relaxed),
             index_shard_max_skew: self.index_shard_max_skew.load(Ordering::Relaxed),
             index_shard_parallel: self.index_shard_parallel.load(Ordering::Relaxed),
+            index_shard_skew_now: self.index_shard_skew_now.load(Ordering::Relaxed),
+            index_shard_parallel_now: self.index_shard_parallel_now.load(Ordering::Relaxed),
             mean_latency_us: self.e2e_latency.mean_us(),
             p50_latency_us: self.e2e_latency.quantile_us(0.50),
             p99_latency_us: self.e2e_latency.quantile_us(0.99),
         }
+    }
+
+    /// Zero the resettable high-water gauges (`index_shard_max_skew`,
+    /// `index_shard_parallel`) so a fresh observation window starts —
+    /// the `metrics` wire op with `reset:true` calls this *after*
+    /// snapshotting, so the reply still reports the pre-reset values.
+    pub fn reset_high_water(&self) {
+        self.index_shard_max_skew.store(0, Ordering::Relaxed);
+        self.index_shard_parallel.store(0, Ordering::Relaxed);
     }
 }
 
@@ -206,9 +244,44 @@ mod tests {
         let p50 = h.quantile_us(0.5);
         let p99 = h.quantile_us(0.99);
         assert!(p50 <= p99);
-        // p50 of 1..=1000 is ~500; bucket upper edge is 512.
-        assert_eq!(p50, 512);
-        assert_eq!(p99, 1024);
+        // p50 of 1..=1000 is ~500. The containing bucket is [256, 512);
+        // interpolation lands near the true value instead of the upper
+        // edge (512 before, a 2% overstatement; up to 2× in general).
+        assert!((490..=512).contains(&p50), "p50={p50}");
+        // p99 is 990; its bucket [512, 1024) only spans up to 1000, so
+        // the uniform-within-bucket estimate overshoots slightly but
+        // stays inside the bucket.
+        assert!((990..=1024).contains(&p99), "p99={p99}");
+    }
+
+    #[test]
+    fn quantile_interpolates_within_bucket() {
+        // 4 observations, all in bucket [256, 512): ranks 1..=4 must
+        // spread across the bucket, not collapse onto the upper edge.
+        let h = LatencyHistogram::new();
+        for _ in 0..4 {
+            h.record(300);
+        }
+        assert_eq!(h.quantile_us(0.25), 256 + 64);
+        assert_eq!(h.quantile_us(0.50), 256 + 128);
+        assert_eq!(h.quantile_us(1.00), 512);
+        // A single observation reports the bucket's upper edge.
+        let one = LatencyHistogram::new();
+        one.record(3);
+        assert_eq!(one.quantile_us(0.5), 4);
+    }
+
+    #[test]
+    fn bucket_counts_expose_the_distribution() {
+        let h = LatencyHistogram::new();
+        h.record(1); // bucket 0
+        h.record(5); // bucket 2
+        h.record(5); // bucket 2
+        let buckets = h.bucket_counts();
+        assert_eq!(buckets.len(), 30);
+        assert_eq!(buckets[0], 1);
+        assert_eq!(buckets[2], 2);
+        assert_eq!(buckets.iter().sum::<u64>(), h.count());
     }
 
     #[test]
@@ -228,6 +301,21 @@ mod tests {
         assert_eq!(s.submitted, 3);
         assert_eq!(s.completed, 2);
         assert!(s.mean_latency_us > 0.0);
+    }
+
+    #[test]
+    fn high_water_gauges_reset_but_counters_survive() {
+        let m = Metrics::new();
+        m.index_shard_max_skew.fetch_max(9, Ordering::Relaxed);
+        m.index_shard_parallel.fetch_max(4, Ordering::Relaxed);
+        m.index_shard_skew_now.store(2, Ordering::Relaxed);
+        m.index_inserts.fetch_add(7, Ordering::Relaxed);
+        m.reset_high_water();
+        let s = m.snapshot();
+        assert_eq!(s.index_shard_max_skew, 0);
+        assert_eq!(s.index_shard_parallel, 0);
+        assert_eq!(s.index_shard_skew_now, 2, "current gauge untouched");
+        assert_eq!(s.index_inserts, 7, "counters untouched");
     }
 
     #[test]

@@ -45,7 +45,7 @@ pub use metrics::{LatencyHistogram, Metrics, MetricsSnapshot};
 pub use net::{NetClient, NetServer};
 pub use request::{EnginePath, Payload, ProjectRequest, ProjectResponse, RequestOp};
 pub use router::{RouteKey, RouteTarget, Router};
-pub use server::{Coordinator, CoordinatorConfig};
+pub use server::{Coordinator, CoordinatorConfig, Reply};
 pub use state::{
     snapshot_file_stem, IndexRegistry, IndexSlot, MapKey, MapKind, ProjectionRegistry,
     RestorePlan, SharedIndex, WorkspacePool,

@@ -14,6 +14,7 @@
 use super::request::ProjectRequest;
 use super::server::{Coordinator, Reply};
 use super::wire;
+use crate::obs::{Span, TraceRecorder};
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{Shutdown, TcpListener, TcpStream, ToSocketAddrs};
@@ -171,7 +172,11 @@ fn handle_connection(
     stream.set_nonblocking(false)?;
     let write_half = stream.try_clone()?;
     let (tx, rx) = channel::<Outgoing>();
-    let writer = std::thread::spawn(move || reply_writer_loop(write_half, rx, served));
+    let trace = coordinator.trace();
+    let writer = {
+        let trace = trace.clone();
+        std::thread::spawn(move || reply_writer_loop(write_half, rx, served, trace))
+    };
     let reader = BufReader::new(stream);
     let mut read_result = Ok(());
     for line in reader.lines() {
@@ -187,10 +192,22 @@ fn handle_connection(
         if line.trim().is_empty() {
             continue;
         }
+        let t0 = trace.as_ref().map(|t| t.now_us());
         let out = match wire::decode_request(&line) {
             Ok(req) => {
                 let id = req.id;
-                Outgoing::Pending(id, coordinator.submit(req))
+                let pending = coordinator.submit(req);
+                // "recv" covers decode + submit (to batcher enqueue).
+                if let (Some(t), Some(start)) = (trace.as_deref(), t0) {
+                    t.record(Span {
+                        stage: "recv",
+                        req: Some(id),
+                        start_us: start,
+                        dur_us: t.now_us().saturating_sub(start),
+                        ..Span::default()
+                    });
+                }
+                Outgoing::Pending(id, pending)
             }
             Err(e) => Outgoing::Malformed(wire::parse_request_id(&line), e),
         };
@@ -206,19 +223,37 @@ fn handle_connection(
 /// Drain the reply queue: wait for each pending reply in request order
 /// and write it. Exits when the reader drops its sender (EOF, read
 /// error, shutdown) and the queue is drained, or when a write fails.
-fn reply_writer_loop(mut stream: TcpStream, rx: Receiver<Outgoing>, served: Arc<AtomicU64>) {
+fn reply_writer_loop(
+    mut stream: TcpStream,
+    rx: Receiver<Outgoing>,
+    served: Arc<AtomicU64>,
+    trace: Option<Arc<TraceRecorder>>,
+) {
     for out in rx {
-        let line = match out {
+        let (id, result) = match out {
             Outgoing::Pending(id, reply) => {
                 let result = reply
                     .recv()
                     .unwrap_or_else(|_| Err("coordinator dropped the request".into()));
                 served.fetch_add(1, Ordering::Relaxed);
-                wire::encode_response(&result, Some(id))
+                (Some(id), result)
             }
-            Outgoing::Malformed(id, e) => wire::encode_response(&Err(e), id),
+            Outgoing::Malformed(id, e) => (id, Err(e)),
         };
-        if writeln!(stream, "{line}").and_then(|()| stream.flush()).is_err() {
+        // "write" covers encode + socket write (not the reply wait).
+        let t0 = trace.as_ref().map(|t| t.now_us());
+        let line = wire::encode_response(&result, id);
+        let wrote = writeln!(stream, "{line}").and_then(|()| stream.flush());
+        if let (Some(t), Some(start)) = (trace.as_deref(), t0) {
+            t.record(Span {
+                stage: "write",
+                req: id,
+                start_us: start,
+                dur_us: t.now_us().saturating_sub(start),
+                ..Span::default()
+            });
+        }
+        if wrote.is_err() {
             break; // Client gone; the reader notices via the closed channel.
         }
     }

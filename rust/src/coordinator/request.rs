@@ -59,6 +59,16 @@ pub enum RequestOp {
     /// (or legacy single-file snapshot), replacing the live contents —
     /// pairs re-partition into the configured shard count.
     Restore,
+    /// Return the full observability snapshot (global counters,
+    /// per-signature stage histograms, GEMM profile, trace stats).
+    /// Answered directly on the dispatcher thread — it never batches and
+    /// never touches a worker. With `reset`, the high-water gauges are
+    /// cleared *after* the snapshot is taken.
+    Metrics {
+        /// Reset resettable gauges (shard skew / parallel high-waters)
+        /// after snapshotting.
+        reset: bool,
+    },
 }
 
 /// A request payload: the tensor to embed, or — for ops that carry no
@@ -155,6 +165,16 @@ impl ProjectRequest {
     pub fn restore(id: u64, format: Format, dims: Vec<usize>) -> Self {
         Self { id, op: RequestOp::Restore, payload: Payload::Signature { format, dims } }
     }
+
+    /// Observability snapshot. Carries an empty signature payload — the
+    /// op is global, so there is nothing to route on.
+    pub fn metrics(id: u64, reset: bool) -> Self {
+        Self {
+            id,
+            op: RequestOp::Metrics { reset },
+            payload: Payload::Signature { format: Format::Dense, dims: vec![] },
+        }
+    }
 }
 
 /// A completed request.
@@ -174,6 +194,8 @@ pub struct ProjectResponse {
     pub snapshot: Option<SnapshotReport>,
     /// Items reloaded (`Restore` responses only).
     pub restored: Option<u64>,
+    /// Observability snapshot (`Metrics` responses only).
+    pub metrics: Option<crate::obs::ObsSnapshot>,
     /// Which engine computed it.
     pub path: EnginePath,
     /// Time spent queued + batched before execution (microseconds).
@@ -213,6 +235,10 @@ mod tests {
         let r = ProjectRequest::restore(6, Format::Tt, vec![3, 3]);
         assert_eq!(r.op, RequestOp::Restore);
         assert!(r.payload.tensor().is_none());
+        let m = ProjectRequest::metrics(8, true);
+        assert_eq!(m.op, RequestOp::Metrics { reset: true });
+        assert!(m.payload.tensor().is_none());
+        assert!(m.payload.dims().is_empty());
     }
 
     #[test]

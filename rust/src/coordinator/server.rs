@@ -31,6 +31,7 @@ use crate::index::{
     combine_stats, shard_of, AnnIndex, BackendKind, IndexSnapshot, IndexStats, LshConfig,
     Neighbor, SnapshotReport,
 };
+use crate::obs::{Span, Stage};
 use crate::projections::Workspace;
 use crate::runtime::{pack, ArtifactKind, PjrtEngine};
 use crate::tensor::{AnyTensor, Format};
@@ -94,6 +95,11 @@ pub struct CoordinatorConfig {
     pub default_k: usize,
     /// Dense inputs above this size use very sparse RP instead of Gaussian.
     pub dense_gaussian_limit: usize,
+    /// Request tracing (`trp serve --trace-dir`): spans are recorded
+    /// lock-free and drained to rotated JSONL files. `None` disables
+    /// tracing entirely — the per-request cost is then a single relaxed
+    /// atomic load, and responses are bit-identical either way.
+    pub trace: Option<crate::obs::TraceConfig>,
 }
 
 impl Default for CoordinatorConfig {
@@ -115,6 +121,7 @@ impl Default for CoordinatorConfig {
             default_cp_rank: 25,
             default_k: 64,
             dense_gaussian_limit: 1 << 20,
+            trace: None,
         }
     }
 }
@@ -133,6 +140,13 @@ struct Shared {
     indexes: IndexRegistry,
     engine: Option<PjrtEngine>,
     metrics: Metrics,
+    /// Per-signature counters + stage histograms (always on: recording
+    /// is pure atomics and never touches the request path's results).
+    sigs: crate::obs::MetricsRegistry,
+    /// Trace recorder, when `cfg.trace` is set.
+    trace: Option<Arc<crate::obs::TraceRecorder>>,
+    /// Flush ids for trace spans (monotonic across both lanes).
+    next_flush_id: std::sync::atomic::AtomicU64,
     workspaces: WorkspacePool,
     cfg: CoordinatorConfig,
     epoch: Instant,
@@ -141,6 +155,36 @@ struct Shared {
 impl Shared {
     fn now_us(&self) -> u64 {
         self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Full observability snapshot; with `reset`, the resettable
+    /// high-water gauges are cleared *after* the snapshot is taken.
+    fn obs_snapshot(&self, reset: bool) -> crate::obs::ObsSnapshot {
+        self.refresh_now_gauges();
+        let snap = crate::obs::ObsSnapshot {
+            global: self.metrics.snapshot(),
+            signatures: self.sigs.snapshot(),
+            gemm: crate::obs::gemm_stats_snapshot(),
+            trace: self.trace.as_ref().map(|t| t.stats()).unwrap_or_default(),
+        };
+        if reset {
+            self.metrics.reset_high_water();
+        }
+        snap
+    }
+
+    /// Store the *current* shard skew / overlap values (the companions of
+    /// the `index_shard_max_skew` / `index_shard_parallel` high-waters)
+    /// by walking the live index slots at snapshot time.
+    fn refresh_now_gauges(&self) {
+        let mut skew = 0u64;
+        let mut parallel = 0u64;
+        for slot in self.indexes.all_slots() {
+            skew = skew.max(slot.max_skew());
+            parallel = parallel.max(slot.active_passes());
+        }
+        self.metrics.index_shard_skew_now.store(skew, Ordering::Relaxed);
+        self.metrics.index_shard_parallel_now.store(parallel, Ordering::Relaxed);
     }
 }
 
@@ -164,6 +208,23 @@ impl Coordinator {
             cfg.snapshot_every_ops == 0 || cfg.snapshot_dir.is_some(),
             "snapshot_every_ops requires snapshot_dir"
         );
+        // One clock epoch shared with the trace recorder, so span
+        // timestamps line up with `queued_us`/`exec_us` in responses.
+        let epoch = Instant::now();
+        let trace = cfg.trace.as_ref().and_then(|tc| {
+            match crate::obs::TraceRecorder::start(tc.clone(), epoch) {
+                Ok(rec) => {
+                    // GEMM shape profiling rides along with tracing; it
+                    // observes timings only, never results.
+                    crate::obs::set_gemm_profiling(true);
+                    Some(rec)
+                }
+                Err(e) => {
+                    eprintln!("[coordinator] tracing disabled: {e}");
+                    None
+                }
+            }
+        });
         let shared = Arc::new(Shared {
             registry: ProjectionRegistry::new(cfg.master_seed),
             indexes: IndexRegistry::new(cfg.master_seed, cfg.index_backend, cfg.lsh)
@@ -172,9 +233,12 @@ impl Coordinator {
                 .with_shards(cfg.index_shards),
             engine,
             metrics: Metrics::new(),
+            sigs: crate::obs::MetricsRegistry::new(),
+            trace,
+            next_flush_id: std::sync::atomic::AtomicU64::new(0),
             workspaces: WorkspacePool::new(),
             cfg: cfg.clone(),
-            epoch: Instant::now(),
+            epoch,
         });
         // With adaptation on, the gauge is a high-water mark of chosen
         // targets (starts at 0); off, it is simply the configured cap.
@@ -220,9 +284,30 @@ impl Coordinator {
             .unwrap_or_else(|_| Err("coordinator dropped the request".into()))
     }
 
-    /// Metrics snapshot.
+    /// Metrics snapshot (with the current-value shard gauges refreshed).
     pub fn metrics(&self) -> super::MetricsSnapshot {
+        self.shared.refresh_now_gauges();
         self.shared.metrics.snapshot()
+    }
+
+    /// Full observability snapshot — global counters, per-signature stage
+    /// histograms, GEMM profile, trace stats — exactly what the `metrics`
+    /// wire op returns. With `reset`, the resettable high-water gauges
+    /// clear *after* the snapshot is taken.
+    pub fn obs_snapshot(&self, reset: bool) -> crate::obs::ObsSnapshot {
+        self.shared.obs_snapshot(reset)
+    }
+
+    /// The trace recorder, when tracing is enabled (the TCP front-end
+    /// records its socket-side spans through this).
+    pub fn trace(&self) -> Option<Arc<crate::obs::TraceRecorder>> {
+        self.shared.trace.as_ref().map(Arc::clone)
+    }
+
+    /// Microseconds since the coordinator's clock epoch (the time base of
+    /// every span and `queued_us`/`exec_us` field).
+    pub fn now_us(&self) -> u64 {
+        self.shared.now_us()
     }
 
     /// Whether a PJRT engine is attached.
@@ -254,6 +339,12 @@ impl Coordinator {
         drop(self.tx.take());
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
+        }
+        // Workers are joined (the dispatcher drops the pool on exit), so
+        // every span has been recorded; drain the ring before returning
+        // to leave complete trace files behind.
+        if let Some(t) = &self.shared.trace {
+            t.shutdown();
         }
     }
 }
@@ -325,6 +416,30 @@ fn dispatcher_loop(shared: Arc<Shared>, rx: Receiver<Envelope>) {
             .unwrap_or(now + 5_000);
         let wait = Duration::from_micros(next_deadline.saturating_sub(now).max(100));
         match rx.recv_timeout(wait) {
+            // Observability snapshots are answered synchronously on the
+            // dispatcher thread: they never batch, never queue behind a
+            // flush, and never touch a worker — a metrics poll must not
+            // perturb serving.
+            Ok(env) if matches!(env.req.op, RequestOp::Metrics { .. }) => {
+                let reset = matches!(env.req.op, RequestOp::Metrics { reset: true });
+                let snap = shared.obs_snapshot(reset);
+                let t1 = shared.now_us();
+                shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
+                shared.metrics.e2e_latency.record(t1.saturating_sub(env.submit_us));
+                let _ = env.reply.send(Ok(ProjectResponse {
+                    id: env.req.id,
+                    embedding: Vec::new(),
+                    neighbors: None,
+                    removed: None,
+                    index: None,
+                    snapshot: None,
+                    restored: None,
+                    metrics: Some(snap),
+                    path: EnginePath::Native,
+                    queued_us: 0,
+                    exec_us: t1.saturating_sub(env.submit_us),
+                }));
+            }
             Ok(env) => {
                 // Index ops always run native (compiled artifacts only
                 // cover pure projection). Project/Insert/Query without a
@@ -345,6 +460,13 @@ fn dispatcher_loop(shared: Arc<Shared>, rx: Receiver<Envelope>) {
                 match target {
                     None => {
                         shared.metrics.failed.fetch_add(1, Ordering::Relaxed);
+                        // Error replies count toward end-to-end latency
+                        // too — a dashboard that only sees successes
+                        // under-reports a failing service.
+                        shared
+                            .metrics
+                            .e2e_latency
+                            .record(shared.now_us().saturating_sub(env.submit_us));
                         let _ = env
                             .reply
                             .send(Err("this op requires a tensor payload".into()));
@@ -368,8 +490,13 @@ fn dispatcher_loop(shared: Arc<Shared>, rx: Receiver<Envelope>) {
                                 .fetch_max(target_batch as u64, Ordering::Relaxed);
                             lane.batcher.set_max_batch(target_batch);
                         }
-                        if let Some(batch) = lane.batcher.push(env, shared.now_us()) {
-                            dispatch_native_batch(&shared, &pool, key, batch);
+                        // Read before pushing: a flush clears the
+                        // batcher's open tick (a fresh single-item flush
+                        // opened just now).
+                        let now_push = shared.now_us();
+                        let opened = lane.batcher.opened_us().unwrap_or(now_push);
+                        if let Some(batch) = lane.batcher.push(env, now_push) {
+                            dispatch_native_batch(&shared, &pool, key, batch, opened);
                         }
                     }
                     Some(RouteTarget::Pjrt(name)) => {
@@ -392,8 +519,9 @@ fn dispatcher_loop(shared: Arc<Shared>, rx: Receiver<Envelope>) {
                     }
                 }
                 for (key, lane) in native_lanes.iter_mut() {
+                    let opened = lane.batcher.opened_us().unwrap_or_else(|| shared.now_us());
                     if let Some(batch) = lane.batcher.flush() {
-                        dispatch_native_batch(&shared, &pool, key.clone(), batch);
+                        dispatch_native_batch(&shared, &pool, key.clone(), batch, opened);
                     }
                 }
                 break;
@@ -410,8 +538,9 @@ fn dispatcher_loop(shared: Arc<Shared>, rx: Receiver<Envelope>) {
             }
         }
         for (key, lane) in native_lanes.iter_mut() {
+            let opened = lane.batcher.opened_us().unwrap_or(now);
             if let Some(batch) = lane.batcher.poll(now) {
-                dispatch_native_batch(&shared, &pool, key.clone(), batch);
+                dispatch_native_batch(&shared, &pool, key.clone(), batch, opened);
             }
         }
         // MapKey dims come verbatim from (possibly remote) payloads, so
@@ -479,6 +608,7 @@ fn dispatch_native_batch(
     pool: &ThreadPool,
     key: MapKey,
     batch: Vec<Envelope>,
+    opened_us: u64,
 ) {
     let has_index_ops = batch
         .iter()
@@ -526,22 +656,22 @@ fn dispatch_native_batch(
             shards.dedup();
             slot.issue_tickets(&shards)
         };
-        submit_native_job(shared, pool, key, batch, Some((slot, tickets)));
+        submit_native_job(shared, pool, key, batch, opened_us, Some((slot, tickets)));
         return;
     }
     let workers = shared.cfg.workers.max(1);
     if workers == 1 || batch.len() < 2 {
-        submit_native_job(shared, pool, key, batch, None);
+        submit_native_job(shared, pool, key, batch, opened_us, None);
         return;
     }
     let chunk = batch.len().div_ceil(workers);
     let mut remaining = batch;
     while remaining.len() > chunk {
         let rest = remaining.split_off(chunk);
-        submit_native_job(shared, pool, key.clone(), remaining, None);
+        submit_native_job(shared, pool, key.clone(), remaining, opened_us, None);
         remaining = rest;
     }
-    submit_native_job(shared, pool, key, remaining, None);
+    submit_native_job(shared, pool, key, remaining, opened_us, None);
 }
 
 fn submit_native_job(
@@ -549,10 +679,11 @@ fn submit_native_job(
     pool: &ThreadPool,
     key: MapKey,
     batch: Vec<Envelope>,
+    opened_us: u64,
     index_turn: Option<(SharedIndex, Vec<(usize, u64)>)>,
 ) {
     let shared = Arc::clone(shared);
-    pool.submit(move || run_native_batch(&shared, key, batch, index_turn));
+    pool.submit(move || run_native_batch(&shared, key, batch, opened_us, index_turn));
 }
 
 /// Per-request reply metadata carried through one native flush.
@@ -575,9 +706,13 @@ fn run_native_batch(
     shared: &Arc<Shared>,
     key: MapKey,
     batch: Vec<Envelope>,
+    opened_us: u64,
     index_turn: Option<(SharedIndex, Vec<(usize, u64)>)>,
 ) {
     let k = key.k;
+    let sig = shared.sigs.get(&key.label());
+    let flush_id = shared.next_flush_id.fetch_add(1, Ordering::Relaxed);
+    let tr = shared.trace.as_deref();
     // Split payloads from reply metadata: `project_batch_into` takes the
     // payload slice by reference, so no tensor is cloned.
     let mut payloads: Vec<AnyTensor> = Vec::with_capacity(batch.len());
@@ -599,6 +734,41 @@ fn run_native_batch(
         });
     }
     let t0 = shared.now_us();
+    // Per-signature accounting: one flush, one queue-wait observation per
+    // item, op counters by kind. Pure atomics — always on.
+    sig.flushes.fetch_add(1, Ordering::Relaxed);
+    sig.requests.fetch_add(items.len() as u64, Ordering::Relaxed);
+    sig.record_stage(Stage::FlushAssembly, t0.saturating_sub(opened_us));
+    for it in &items {
+        sig.record_stage(Stage::QueueWait, t0.saturating_sub(it.submit_us));
+        let ctr = match it.op {
+            RequestOp::Project => &sig.projects,
+            RequestOp::Insert => &sig.inserts,
+            RequestOp::Query { .. } => &sig.queries,
+            RequestOp::Delete { .. } => &sig.deletes,
+            _ => continue,
+        };
+        ctr.fetch_add(1, Ordering::Relaxed);
+    }
+    if let Some(tr) = tr {
+        tr.record(Span {
+            stage: "assemble",
+            flush: Some(flush_id),
+            start_us: opened_us,
+            dur_us: t0.saturating_sub(opened_us),
+            ..Span::default()
+        });
+        for it in &items {
+            tr.record(Span {
+                stage: "queue",
+                req: Some(it.id),
+                flush: Some(flush_id),
+                start_us: it.submit_us,
+                dur_us: t0.saturating_sub(it.submit_us),
+                ..Span::default()
+            });
+        }
+    }
     let mut out = shared.workspaces.acquire_buf(payloads.len() * k);
     let mut ws = shared.workspaces.acquire();
     if !payloads.is_empty() {
@@ -608,7 +778,19 @@ fn run_native_batch(
         // otherwise grow the registry without bound from tensorless
         // requests.
         let entry = shared.registry.get_or_create(&key);
+        let t_p0 = shared.now_us();
         entry.map.project_batch_into(&payloads, &mut out, &mut ws);
+        let t_p1 = shared.now_us();
+        sig.record_stage(Stage::Project, t_p1.saturating_sub(t_p0));
+        if let Some(tr) = tr {
+            tr.record(Span {
+                stage: "project",
+                flush: Some(flush_id),
+                start_us: t_p0,
+                dur_us: t_p1.saturating_sub(t_p0),
+                ..Span::default()
+            });
+        }
     }
 
     // Index phase (present iff the flush carries index ops, in which case
@@ -696,12 +878,21 @@ fn run_native_batch(
             && slot.pending_mutations() + flush_mut_bound >= shared.cfg.snapshot_every_ops;
         let mut periodic_captures: Vec<IndexSnapshot> = Vec::new();
         let mut periodic_marks: Vec<(usize, u64)> = Vec::new();
+        // k-way merge time, accumulated across every scored run of every
+        // shard pass (recorded once per flush below).
+        let mut merge_us = 0u64;
         for &(s, ticket) in &tickets {
+            // Lane wait = request → grant of this shard's sequencer turn;
+            // the closure stamps its own entry so the wait/scan split is
+            // exact.
+            let t_wait0 = shared.now_us();
+            let mut t_scan0 = t_wait0;
             slot.run_shard_turn(s, ticket, |index| {
+                t_scan0 = shared.now_us();
                 let mut pending: Vec<usize> = Vec::new();
                 for (i, it) in items.iter().enumerate() {
                     match it.op {
-                        RequestOp::Project => {}
+                        RequestOp::Project | RequestOp::Metrics { .. } => {}
                         RequestOp::Query { .. } => pending.push(i),
                         RequestOp::Insert => {
                             if shard_of(it.id, nshards) == s {
@@ -713,6 +904,7 @@ fn run_native_batch(
                                     &mut pending,
                                     &mut neighbors,
                                     &mut ws,
+                                    &mut merge_us,
                                 );
                                 let r = it.row.expect("insert carries a tensor");
                                 index.insert(it.id, &out[r * k..(r + 1) * k]);
@@ -730,6 +922,7 @@ fn run_native_batch(
                                     &mut pending,
                                     &mut neighbors,
                                     &mut ws,
+                                    &mut merge_us,
                                 );
                                 let hit = index.remove(target);
                                 removed[i] = Some(hit);
@@ -746,6 +939,7 @@ fn run_native_batch(
                                 &mut pending,
                                 &mut neighbors,
                                 &mut ws,
+                                &mut merge_us,
                             );
                             // Signature-level aggregate, folded shard by
                             // shard (sums mutations/len, max for queries).
@@ -765,6 +959,7 @@ fn run_native_batch(
                                 &mut pending,
                                 &mut neighbors,
                                 &mut ws,
+                                &mut merge_us,
                             );
                             if snapshot_dir_set {
                                 captures[i].push(IndexSnapshot::capture(
@@ -783,6 +978,7 @@ fn run_native_batch(
                                 &mut pending,
                                 &mut neighbors,
                                 &mut ws,
+                                &mut merge_us,
                             );
                             // Swap in the pre-built shard; mutations that
                             // arrived earlier in this flush were applied
@@ -815,6 +1011,7 @@ fn run_native_batch(
                     &mut pending,
                     &mut neighbors,
                     &mut ws,
+                    &mut merge_us,
                 );
                 if periodic_due {
                     // End-of-flush consistent cut for the periodic
@@ -825,6 +1022,22 @@ fn run_native_batch(
                     periodic_marks.push((s, slot.shard_noted(s)));
                 }
             });
+            let t_scan1 = shared.now_us();
+            sig.record_stage(Stage::LaneWait, t_scan0.saturating_sub(t_wait0));
+            sig.record_stage(Stage::IndexScan, t_scan1.saturating_sub(t_scan0));
+            if let Some(tr) = tr {
+                tr.record(Span {
+                    stage: "index",
+                    flush: Some(flush_id),
+                    shard: Some(s as u32),
+                    start_us: t_scan0,
+                    dur_us: t_scan1.saturating_sub(t_scan0),
+                    ..Span::default()
+                });
+            }
+        }
+        if !query_items.is_empty() {
+            sig.record_stage(Stage::Merge, merge_us);
         }
         // Every lane is released — serving continues while the frozen
         // captures are encoded and written (the COW half of the design),
@@ -840,7 +1053,10 @@ fn run_native_batch(
                         op_errors[i] = Some("snapshot failed: no snapshot_dir configured".into());
                         continue;
                     }
-                    match shared.indexes.write_snapshot(&slot, &captures[i]) {
+                    let t_w0 = shared.now_us();
+                    let write = shared.indexes.write_snapshot(&slot, &captures[i]);
+                    record_snapshot_write(shared, &sig, flush_id, t_w0);
+                    match write {
                         Ok(report) => {
                             shared.metrics.index_snapshots.fetch_add(1, Ordering::Relaxed);
                             snapshots[i] = Some(report);
@@ -867,7 +1083,10 @@ fn run_native_batch(
             }
         }
         if periodic_due {
-            match shared.indexes.write_snapshot(&slot, &periodic_captures) {
+            let t_w0 = shared.now_us();
+            let write = shared.indexes.write_snapshot(&slot, &periodic_captures);
+            record_snapshot_write(shared, &sig, flush_id, t_w0);
+            match write {
                 Ok(_) => {
                     shared.metrics.index_snapshots.fetch_add(1, Ordering::Relaxed);
                     for &(s, w) in &periodic_marks {
@@ -906,6 +1125,9 @@ fn run_native_batch(
     for (i, it) in items.into_iter().enumerate() {
         if let Some(e) = op_errors[i].take() {
             shared.metrics.failed.fetch_add(1, Ordering::Relaxed);
+            // Failed replies count toward end-to-end latency too.
+            shared.metrics.e2e_latency.record(t1.saturating_sub(it.submit_us));
+            sig.errors.fetch_add(1, Ordering::Relaxed);
             let _ = it.reply.send(Err(e));
             continue;
         }
@@ -927,13 +1149,47 @@ fn run_native_batch(
             index: stats[i].take(),
             snapshot: snapshots[i].take(),
             restored: restored[i],
+            metrics: None,
             path: EnginePath::Native,
             queued_us: t0.saturating_sub(it.submit_us),
             exec_us: t1 - t0,
         };
         let _ = it.reply.send(Ok(resp));
     }
+    let t2 = shared.now_us();
+    sig.record_stage(Stage::Reply, t2.saturating_sub(t1));
+    if let Some(tr) = tr {
+        tr.record(Span {
+            stage: "reply",
+            flush: Some(flush_id),
+            start_us: t1,
+            dur_us: t2.saturating_sub(t1),
+            ..Span::default()
+        });
+    }
     shared.workspaces.release_buf(out);
+}
+
+/// Record one snapshot-file write that started at `t_w0` (stage
+/// histogram + optional `snapshot` span — the write happens off-turn, so
+/// it gets its own stage instead of inflating `index_scan`).
+fn record_snapshot_write(
+    shared: &Arc<Shared>,
+    sig: &crate::obs::SigMetrics,
+    flush_id: u64,
+    t_w0: u64,
+) {
+    let t_w1 = shared.now_us();
+    sig.record_stage(Stage::SnapshotWrite, t_w1.saturating_sub(t_w0));
+    if let Some(tr) = &shared.trace {
+        tr.record(Span {
+            stage: "snapshot",
+            flush: Some(flush_id),
+            start_us: t_w0,
+            dur_us: t_w1.saturating_sub(t_w0),
+            ..Span::default()
+        });
+    }
 }
 
 /// Score the accumulated run of queries (`pending` holds item indices)
@@ -950,6 +1206,7 @@ fn run_native_batch(
 /// The run's embeddings are a contiguous slice of the flush-wide
 /// `qstage` buffer (`qord` maps item index → query ordinal) — staged
 /// once per flush, not once per shard pass.
+#[allow(clippy::too_many_arguments)]
 fn score_pending(
     index: &mut dyn AnnIndex,
     qstage: &[f64],
@@ -958,6 +1215,7 @@ fn score_pending(
     pending: &mut Vec<usize>,
     neighbors: &mut [Option<Vec<Neighbor>>],
     ws: &mut Workspace,
+    merge_us: &mut u64,
 ) {
     if pending.is_empty() {
         return;
@@ -971,6 +1229,7 @@ fn score_pending(
     let qs = &qstage[start * k..end * k];
     let topks = &topks_all[start..end];
     let results = index.query_batch(qs, topks, ws);
+    let m0 = Instant::now();
     for ((&i, res), &cap) in pending.iter().zip(results).zip(topks) {
         // Gather: fold this shard's list into the query's accumulated
         // top-k (k-way merge under the (dist, id) total order).
@@ -979,6 +1238,7 @@ fn score_pending(
             Some(acc) => crate::index::merge_neighbors(acc, res, cap),
         });
     }
+    *merge_us += m0.elapsed().as_micros() as u64;
     pending.clear();
 }
 
@@ -991,7 +1251,13 @@ fn dispatch_pjrt(shared: &Arc<Shared>, pool: &ThreadPool, artifact: &str, batch:
                 .metrics
                 .failed
                 .fetch_add(batch.len() as u64, Ordering::Relaxed);
+            let t_err = shared.now_us();
             for item in batch {
+                // Failed replies count toward end-to-end latency too.
+                shared
+                    .metrics
+                    .e2e_latency
+                    .record(t_err.saturating_sub(item.env.submit_us));
                 let _ = item.env.reply.send(Err(msg.clone()));
             }
         }
@@ -1105,6 +1371,7 @@ fn run_pjrt_batch(shared: &Arc<Shared>, artifact: &str, batch: &[BatchItem]) -> 
             index: None,
             snapshot: None,
             restored: None,
+            metrics: None,
             path: EnginePath::Pjrt(artifact.to_string()),
             queued_us: t0.saturating_sub(item.env.submit_us),
             exec_us: t1 - t0,
@@ -1595,6 +1862,77 @@ mod tests {
         holder.join().unwrap();
         let r = rx_b.recv().unwrap().unwrap();
         assert_eq!(r.id, id_b);
+        c.shutdown();
+    }
+
+    #[test]
+    fn metrics_op_returns_snapshot_with_signature_breakdown() {
+        let c = native_coordinator();
+        let mut rng = Rng::seed_from(31);
+        let dims = vec![3usize; 4];
+        let xs: Vec<TtTensor> = (0..4)
+            .map(|_| TtTensor::random_unit(&dims, 2, &mut rng))
+            .collect();
+        for (i, x) in xs.iter().enumerate() {
+            c.project_blocking(ProjectRequest::insert(i as u64, AnyTensor::Tt(x.clone())))
+                .unwrap();
+        }
+        c.project_blocking(ProjectRequest::query(9, AnyTensor::Tt(xs[0].clone()), 2))
+            .unwrap();
+        let resp = c.project_blocking(ProjectRequest::metrics(10, false)).unwrap();
+        assert!(resp.embedding.is_empty());
+        let snap = resp.metrics.expect("metrics op returns a snapshot");
+        // The snapshot is taken before the metrics op counts itself.
+        assert_eq!(snap.global.submitted, 6);
+        assert_eq!(snap.global.completed, 5);
+        assert_eq!(snap.global.index_inserts, 4);
+        assert_eq!(snap.global.index_queries, 1);
+        let sig = snap
+            .signatures
+            .iter()
+            .find(|s| s.signature == "tt-r5/3x3x3x3/k16")
+            .expect("per-signature entry under the map label");
+        assert_eq!(sig.inserts, 4);
+        assert_eq!(sig.queries, 1);
+        assert_eq!(sig.requests, 5);
+        assert!(sig.flushes >= 1);
+        for stage in ["queue_wait", "flush_assembly", "project_gemm", "index_scan", "reply"] {
+            assert!(
+                sig.stages.iter().any(|st| st.stage == stage && st.count > 0),
+                "missing stage histogram {stage}"
+            );
+        }
+        assert!(!snap.trace.enabled, "no --trace-dir configured");
+        c.shutdown();
+    }
+
+    #[test]
+    fn metrics_reset_clears_high_water_gauges() {
+        let c = Coordinator::start(
+            CoordinatorConfig {
+                workers: 2,
+                default_k: 8,
+                index_shards: 2,
+                ..Default::default()
+            },
+            None,
+        );
+        let mut rng = Rng::seed_from(32);
+        for i in 0..6u64 {
+            let x = TtTensor::random_unit(&[3; 4], 2, &mut rng);
+            c.project_blocking(ProjectRequest::insert(i, AnyTensor::Tt(x)))
+                .unwrap();
+        }
+        let snap = c.project_blocking(ProjectRequest::metrics(100, true)).unwrap().metrics.unwrap();
+        assert!(snap.global.index_shard_parallel >= 1, "index passes ran");
+        assert_eq!(snap.global.index_shard_parallel_now, 0, "idle at snapshot time");
+        // reset=true clears the high-waters AFTER the snapshot above.
+        let snap2 =
+            c.project_blocking(ProjectRequest::metrics(101, false)).unwrap().metrics.unwrap();
+        assert_eq!(snap2.global.index_shard_parallel, 0, "high-water cleared by reset");
+        assert_eq!(snap2.global.index_shard_max_skew, 0);
+        // Counters survive a reset.
+        assert_eq!(snap2.global.index_inserts, 6);
         c.shutdown();
     }
 

@@ -53,6 +53,21 @@ pub struct MapKey {
 }
 
 impl MapKey {
+    /// Human-readable signature label, the key of the observability
+    /// registry and the `sig` label of every exported per-signature
+    /// metric (e.g. `tt-r5/3x3x3/k64`).
+    pub fn label(&self) -> String {
+        let kind = match self.kind {
+            MapKind::Tt { rank } => format!("tt-r{rank}"),
+            MapKind::Cp { rank } => format!("cp-r{rank}"),
+            MapKind::Gaussian => "gaussian".to_string(),
+            MapKind::VerySparse => "verysparse".to_string(),
+        };
+        let dims =
+            self.dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x");
+        format!("{kind}/{dims}/k{}", self.k)
+    }
+
     /// Canonical byte encoding, embedded in index snapshot headers so a
     /// restored file routes back to its signature:
     /// `kind tag u8 | rank u64 | ndims u32 | dims u64… | k u64` (LE).
@@ -549,6 +564,12 @@ impl IndexSlot {
     pub fn parallel_high_water(&self) -> u64 {
         self.parallel_high_water.load(Ordering::Relaxed)
     }
+
+    /// Shard passes executing right now (the current-value companion of
+    /// [`IndexSlot::parallel_high_water`]).
+    pub fn active_passes(&self) -> u64 {
+        self.active_passes.load(Ordering::Relaxed)
+    }
 }
 
 /// A per-signature index shared between the registry and worker jobs.
@@ -864,6 +885,12 @@ impl IndexRegistry {
         let slot = Arc::new(IndexSlot::new(key.clone(), backends));
         indexes.insert(key.clone(), Arc::clone(&slot));
         slot
+    }
+
+    /// Every live slot (for current-value gauges: the metrics snapshot
+    /// samples skew and active passes across all signatures).
+    pub fn all_slots(&self) -> Vec<SharedIndex> {
+        self.indexes.lock().unwrap().values().map(Arc::clone).collect()
     }
 
     /// Write one snapshot sequence from per-shard captures (one

@@ -13,6 +13,7 @@
 //! {"id": 11, "op": "stats", "format": "cp", "dims": [3,3]}
 //! {"id": 12, "op": "snapshot", "format": "cp", "dims": [3,3]}
 //! {"id": 13, "op": "restore", "format": "cp", "dims": [3,3]}
+//! {"id": 14, "op": "metrics", "reset": false}
 //! ```
 //! Response: `{"id": 7, "embedding": […], "path": "native", "queued_us":
 //! 120, "exec_us": 1500}`, plus `"neighbors": [{"id": 3, "dist": 0.12},
@@ -51,6 +52,14 @@ pub fn encode_request(req: &ProjectRequest) -> String {
         RequestOp::IndexStats => fields.push(("op", Json::Str("stats".into()))),
         RequestOp::Snapshot => fields.push(("op", Json::Str("snapshot".into()))),
         RequestOp::Restore => fields.push(("op", Json::Str("restore".into()))),
+        RequestOp::Metrics { reset } => {
+            // Global op: no routing signature on the wire at all.
+            fields.push(("op", Json::Str("metrics".into())));
+            if reset {
+                fields.push(("reset", Json::Bool(true)));
+            }
+            return obj(fields).to_string_compact();
+        }
     }
     match &req.payload {
         Payload::Tensor(AnyTensor::Dense(t)) => {
@@ -110,6 +119,11 @@ pub fn decode_request(line: &str) -> Result<ProjectRequest, String> {
         Some("stats") => RequestOp::IndexStats,
         Some("snapshot") => RequestOp::Snapshot,
         Some("restore") => RequestOp::Restore,
+        Some("metrics") => {
+            // Global op: needs neither format nor dims.
+            let reset = j.get("reset").and_then(Json::as_bool).unwrap_or(false);
+            return Ok(ProjectRequest::metrics(id, reset));
+        }
         Some(other) => return Err(format!("unknown op {other:?}")),
     };
     let format_str = j.get("format").and_then(Json::as_str).ok_or("missing format")?;
@@ -271,6 +285,9 @@ pub fn encode_response(
             if let Some(n) = resp.restored {
                 fields.push(("restored", Json::Num(n as f64)));
             }
+            if let Some(m) = &resp.metrics {
+                fields.push(("metrics", m.to_json()));
+            }
             obj(fields).to_string_compact()
         }
         Err(e) => obj(vec![
@@ -305,6 +322,8 @@ pub struct WireResponse {
     pub snapshot: Option<SnapshotReport>,
     /// Items reloaded (restore responses).
     pub restored: Option<u64>,
+    /// Observability snapshot (metrics responses).
+    pub metrics: Option<crate::obs::ObsSnapshot>,
     /// Error message when failed.
     pub error: Option<String>,
     /// Serving path string.
@@ -358,6 +377,10 @@ pub fn decode_response(line: &str) -> Result<WireResponse, String> {
             bytes: s.get("bytes").and_then(Json::as_f64).unwrap_or(0.0) as u64,
         }),
         restored: j.get("restored").and_then(Json::as_f64).map(|v| v as u64),
+        metrics: match j.get("metrics") {
+            Some(m) => Some(crate::obs::ObsSnapshot::from_json(m)?),
+            None => None,
+        },
         error: j.get("error").and_then(Json::as_str).map(|s| s.to_string()),
         path: j.get("path").and_then(Json::as_str).map(|s| s.to_string()),
     })
@@ -484,6 +507,7 @@ mod tests {
             index: None,
             snapshot: None,
             restored: None,
+            metrics: None,
             path: super::super::request::EnginePath::Native,
             queued_us: 10,
             exec_us: 20,
@@ -528,6 +552,7 @@ mod tests {
                 bytes: 9001,
             }),
             restored: Some(12),
+            metrics: None,
             path: super::super::request::EnginePath::Native,
             queued_us: 1,
             exec_us: 2,
@@ -535,6 +560,41 @@ mod tests {
         let back = decode_response(&encode_response(&Ok(resp.clone()), Some(4))).unwrap();
         assert_eq!(back.snapshot, resp.snapshot);
         assert_eq!(back.restored, Some(12));
+    }
+
+    #[test]
+    fn metrics_request_and_response_roundtrip() {
+        // Request: global, no signature fields on the wire.
+        let line = encode_request(&ProjectRequest::metrics(14, true));
+        assert!(!line.contains("format"), "got: {line}");
+        let back = decode_request(&line).unwrap();
+        assert_eq!(back.op, RequestOp::Metrics { reset: true });
+        // A bare client line without `reset` defaults to false.
+        let back = decode_request(r#"{"id":2,"op":"metrics"}"#).unwrap();
+        assert_eq!(back.op, RequestOp::Metrics { reset: false });
+
+        // Response carrying a snapshot.
+        let snap = crate::obs::ObsSnapshot {
+            global: super::super::metrics::Metrics::new().snapshot(),
+            signatures: Vec::new(),
+            gemm: Vec::new(),
+            trace: crate::obs::TraceStats::default(),
+        };
+        let resp = ProjectResponse {
+            id: 14,
+            embedding: Vec::new(),
+            neighbors: None,
+            removed: None,
+            index: None,
+            snapshot: None,
+            restored: None,
+            metrics: Some(snap.clone()),
+            path: super::super::request::EnginePath::Native,
+            queued_us: 0,
+            exec_us: 1,
+        };
+        let back = decode_response(&encode_response(&Ok(resp), Some(14))).unwrap();
+        assert_eq!(back.metrics.unwrap(), snap);
     }
 
     #[test]
@@ -574,6 +634,7 @@ mod tests {
                 bits: 12,
                 probes: 4,
             }),
+            metrics: None,
             path: super::super::request::EnginePath::Native,
             queued_us: 1,
             exec_us: 2,

@@ -234,6 +234,91 @@ pub fn kernel_bench(cfg: &BatchSweepConfig) -> Vec<KernelRow> {
     rows
 }
 
+/// Trace-overhead measurement: the B = 16 batched-TT serving point run
+/// through a real coordinator with tracing off, then on. The contract is
+/// twofold: the two response streams must be bit-identical (spans carry
+/// ids, stage tags and timestamps — never numeric payload), and the
+/// enabled-path cost per request must stay small (≤ 3% tripwire).
+#[derive(Debug, Clone)]
+pub struct TraceOverheadRow {
+    /// Pipelined batch size of the measured point.
+    pub batch: usize,
+    /// Requests timed per run (after warmup).
+    pub requests: usize,
+    /// Per-request wall time with tracing off (µs).
+    pub off_us_per_req: f64,
+    /// Per-request wall time with tracing + GEMM profiling on (µs).
+    pub on_us_per_req: f64,
+    /// `on/off − 1` (small negative values are machine noise).
+    pub overhead_frac: f64,
+    /// Whether the two embedding streams were bit-identical.
+    pub identical: bool,
+}
+
+/// Measure [`TraceOverheadRow`] on `cfg`'s shape: two coordinators with
+/// the same master seed (hence identical maps), one traced into a temp
+/// dir, fed the same pipelined TT-format rounds.
+pub fn trace_overhead(cfg: &BatchSweepConfig) -> TraceOverheadRow {
+    use crate::coordinator::{Coordinator, CoordinatorConfig, ProjectRequest};
+    let b = 16usize;
+    let warmup = 2usize;
+    let rounds = 6usize;
+    let mut rng = Rng::seed_from(cfg.seed ^ 0x0B5E);
+    let inputs: Vec<AnyTensor> = (0..b)
+        .map(|_| AnyTensor::Tt(TtTensor::random_unit(&cfg.dims, cfg.input_rank, &mut rng)))
+        .collect();
+    let run_once = |trace: Option<crate::obs::TraceConfig>| -> (f64, Vec<Vec<f64>>) {
+        // The serve path switches GEMM profiling on with tracing; mirror
+        // that here and switch it back off so runs stay comparable.
+        crate::obs::set_gemm_profiling(trace.is_some());
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                master_seed: cfg.seed,
+                default_k: cfg.k,
+                trace,
+                ..Default::default()
+            },
+            None,
+        );
+        let mut outs = Vec::new();
+        let mut timed = 0.0f64;
+        let mut id = 0u64;
+        for round in 0..(warmup + rounds) {
+            let t0 = std::time::Instant::now();
+            let rxs: Vec<_> = inputs
+                .iter()
+                .map(|x| {
+                    id += 1;
+                    coord.submit(ProjectRequest::new(id, x.clone()))
+                })
+                .collect();
+            let embs: Vec<Vec<f64>> = rxs
+                .into_iter()
+                .map(|rx| rx.recv().expect("coordinator alive").expect("project ok").embedding)
+                .collect();
+            if round >= warmup {
+                timed += t0.elapsed().as_secs_f64();
+                outs.extend(embs);
+            }
+        }
+        coord.shutdown();
+        crate::obs::set_gemm_profiling(false);
+        (timed * 1e6 / (rounds * b) as f64, outs)
+    };
+    let (off_us, e_off) = run_once(None);
+    let dir = std::env::temp_dir().join(format!("trp_trace_overhead_{}", std::process::id()));
+    let (on_us, e_on) = run_once(Some(crate::obs::TraceConfig::new(&dir)));
+    let _ = std::fs::remove_dir_all(&dir);
+    TraceOverheadRow {
+        batch: b,
+        requests: rounds * b,
+        off_us_per_req: off_us,
+        on_us_per_req: on_us,
+        overhead_frac: on_us / off_us.max(1e-12) - 1.0,
+        identical: e_off == e_on,
+    }
+}
+
 /// Render rows as the CSV written under `results/`.
 pub fn to_csv(rows: &[BatchRow]) -> CsvTable {
     let mut t = CsvTable::new(&[
@@ -262,8 +347,14 @@ pub fn to_csv(rows: &[BatchRow]) -> CsvTable {
 /// speedup over `B`, plus a top-level `kernel` array of GFLOP/s rows
 /// (packed vs frozen-PR 5 kernel) when the micro-benchmark ran. Shared
 /// by the bench binary and `trp experiment batch` so both emit the same
-/// schema.
-pub fn to_json(cfg: &BatchSweepConfig, rows: &[BatchRow], kernel: &[KernelRow]) -> Json {
+/// schema. `trace` adds the `trace_overhead` entry (null when the
+/// measurement didn't run).
+pub fn to_json(
+    cfg: &BatchSweepConfig,
+    rows: &[BatchRow],
+    kernel: &[KernelRow],
+    trace: Option<&TraceOverheadRow>,
+) -> Json {
     let mut keys: Vec<(String, String)> = Vec::new();
     for r in rows {
         let key = (r.map.clone(), r.input.clone());
@@ -326,6 +417,20 @@ pub fn to_json(cfg: &BatchSweepConfig, rows: &[BatchRow], kernel: &[KernelRow]) 
         ("input_rank", Json::Num(cfg.input_rank as f64)),
         ("series", Json::Arr(series)),
         ("kernel", Json::Arr(kernel_rows)),
+        (
+            "trace_overhead",
+            match trace {
+                Some(t) => obj(vec![
+                    ("batch", Json::Num(t.batch as f64)),
+                    ("requests", Json::Num(t.requests as f64)),
+                    ("off_us_per_req", Json::Num(t.off_us_per_req)),
+                    ("on_us_per_req", Json::Num(t.on_us_per_req)),
+                    ("overhead_frac", Json::Num(t.overhead_frac)),
+                    ("identical", Json::Bool(t.identical)),
+                ]),
+                None => Json::Null,
+            },
+        ),
     ])
 }
 
@@ -340,6 +445,21 @@ pub fn print_verdict(rows: &[BatchRow]) {
             r.input, r.speedup
         );
     }
+}
+
+/// Print the tracing tripwire: responses bit-identical with tracing on
+/// vs off, and the enabled-path cost per request small.
+pub fn print_trace_verdict(t: &TraceOverheadRow) {
+    let verdict = if t.identical { "PASS" } else { "FAIL" };
+    println!(
+        "[trace_overhead] B={} identical={} ({verdict}) off={:.1}µs/req on={:.1}µs/req \
+         overhead={:+.1}% (target ≤ 3%)",
+        t.batch,
+        t.identical,
+        t.off_us_per_req,
+        t.on_us_per_req,
+        t.overhead_frac * 100.0
+    );
 }
 
 /// Print the kernel tripwire: packed kernel ≥ 2× the frozen PR 5 scalar
@@ -396,7 +516,7 @@ mod tests {
     fn json_has_one_series_per_map_input_pair() {
         let cfg = tiny();
         let rows = run(&cfg);
-        let doc = to_json(&cfg, &rows, &[]);
+        let doc = to_json(&cfg, &rows, &[], None);
         let series = doc.get("series").and_then(Json::as_arr).expect("series array");
         assert_eq!(series.len(), 6 + 3 * 2);
         for s in series {
@@ -406,6 +526,20 @@ mod tests {
         // Kernel array is present even when the micro-benchmark didn't run.
         let kernel = doc.get("kernel").and_then(Json::as_arr).expect("kernel array");
         assert!(kernel.is_empty());
+        assert_eq!(doc.get("trace_overhead"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn trace_overhead_is_bit_identical_and_serializes() {
+        let cfg = tiny();
+        let t = trace_overhead(&cfg);
+        assert!(t.identical, "tracing must not perturb embeddings");
+        assert_eq!(t.batch, 16);
+        assert!(t.off_us_per_req > 0.0 && t.on_us_per_req > 0.0);
+        let doc = to_json(&cfg, &[], &[], Some(&t));
+        let entry = doc.get("trace_overhead").expect("trace_overhead entry");
+        assert_eq!(entry.get("identical").and_then(Json::as_bool), Some(true));
+        assert!(entry.get("overhead_frac").and_then(Json::as_f64).is_some());
     }
 
     #[test]
@@ -418,7 +552,7 @@ mod tests {
             assert!(r.packed_gflops > 0.0 && r.reference_gflops > 0.0);
             assert!(r.speedup.is_finite());
         }
-        let doc = to_json(&cfg, &run(&cfg), &krows);
+        let doc = to_json(&cfg, &run(&cfg), &krows, None);
         let kernel = doc.get("kernel").and_then(Json::as_arr).expect("kernel array");
         assert_eq!(kernel.len(), krows.len());
         for (j, r) in kernel.iter().zip(&krows) {

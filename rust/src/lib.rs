@@ -23,6 +23,10 @@
 //!   random-hyperplane LSH backends over the projected embeddings, served
 //!   through the coordinator as `insert`/`query`/`delete`/`stats` wire ops
 //!   (the workload that consumes the JL distance-preservation guarantee);
+//! * an observability layer ([`obs`]) — lock-free request tracing drained
+//!   to rotated JSONL, a per-signature metrics registry with per-stage
+//!   latency histograms, and GEMM shape-bucket profiling, exported over
+//!   the wire via the `metrics` op and rendered by `trp metrics`;
 //! * the experiment harness ([`experiments`]) regenerating every figure of
 //!   the paper's evaluation section.
 //!
@@ -47,6 +51,7 @@ pub mod data;
 pub mod experiments;
 pub mod index;
 pub mod linalg;
+pub mod obs;
 pub mod projections;
 pub mod rng;
 pub mod runtime;

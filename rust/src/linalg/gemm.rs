@@ -122,7 +122,31 @@ pub fn matmul_acc(a: &[f64], b: &[f64], c: &mut [f64], m: usize, k: usize, n: us
 
 /// [`matmul_acc`] with an explicit worker count — the test hook for the
 /// thread-count bit-identity gate, and the inner entry of the default.
+///
+/// This is the funnel every packed-operand GEMM passes through, so it is
+/// also where the observability layer's shape profile hooks in: when
+/// `obs::gemm_profiling` is on, the call's wall time and flop count are
+/// aggregated by shape bucket. The numeric path is untouched either way
+/// (the disabled cost is one relaxed atomic load).
 pub fn matmul_acc_with_threads(
+    a: &[f64],
+    b: &[f64],
+    c: &mut [f64],
+    m: usize,
+    k: usize,
+    n: usize,
+    threads: usize,
+) {
+    if crate::obs::gemm_profiling_enabled() {
+        let t0 = std::time::Instant::now();
+        matmul_acc_threads_impl(a, b, c, m, k, n, threads);
+        crate::obs::gemm_record(m, k, n, t0.elapsed().as_micros() as u64);
+        return;
+    }
+    matmul_acc_threads_impl(a, b, c, m, k, n, threads);
+}
+
+fn matmul_acc_threads_impl(
     a: &[f64],
     b: &[f64],
     c: &mut [f64],
@@ -189,6 +213,12 @@ pub fn matmul_gather_scatter_acc(
 ) {
     debug_assert_eq!(b.len(), k * n);
     if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    if crate::obs::gemm_profiling_enabled() {
+        let t0 = std::time::Instant::now();
+        gemm_serial(&a_at, b, c, m, k, n, &row_off);
+        crate::obs::gemm_record(m, k, n, t0.elapsed().as_micros() as u64);
         return;
     }
     gemm_serial(&a_at, b, c, m, k, n, &row_off);

@@ -5,6 +5,9 @@
 //!                 [--listen ADDR] [--snapshot-dir DIR] [--snapshot-every N]
 //!                 [--restore DIR] [--index-shards S]
 //!                 [--index-backend flat|lsh] [--lsh T,B,P | --lsh-auto N [--lsh-recall R]]
+//!                 [--trace-dir DIR [--trace-file-cap BYTES] [--trace-keep N]]
+//! trp metrics     --connect ADDR [--watch [--interval SECS]] [--reset]
+//! trp metrics     --check-trace FILE          # CI: validate span JSONL coverage
 //! trp snapshot    --connect ADDR --case medium --format tt [--restore]
 //! trp project     --case medium --format tt [--k 64] [--map tt:5]
 //! trp experiment  fig1|fig2|fig3|fig4|ablation|batch|ann [--quick] [--trials T]
@@ -47,6 +50,7 @@ fn run(args: &Args) -> Result<(), String> {
     match args.pos(0) {
         Some("serve") => cmd_serve(args, &cfg),
         Some("client") => cmd_client(args, &cfg),
+        Some("metrics") => cmd_metrics(args),
         Some("snapshot") => cmd_snapshot(args),
         Some("project") => cmd_project(args, &cfg),
         Some("experiment") => cmd_experiment(args, &cfg),
@@ -68,13 +72,18 @@ fn print_usage() {
            serve       run the compression service on a synthetic trace\n\
                        (--index-shards S partitions each signature's ANN\n\
                        index across S parallel lanes; --index-backend\n\
-                       flat|lsh, --lsh T,B,P or --lsh-auto N --lsh-recall R)\n\
+                       flat|lsh, --lsh T,B,P or --lsh-auto N --lsh-recall R;\n\
+                       --trace-dir DIR records request spans as rotated JSONL)\n\
            project     project one random input and print the distortion\n\
            experiment  regenerate a paper figure: fig1|fig2|fig3|fig4|ablation|batch|ann\n\
            bounds      evaluate the Theorem 2 size bounds\n\
            sketch      sketched SVD demo with a tensorized test matrix (§7)\n\
            client      send requests to a listening `trp serve --listen` instance\n\
-                       (--op project|insert|query|stats)\n\
+                       (--op project|insert|query|stats|metrics)\n\
+           metrics     Prometheus-style dump of a live server's observability\n\
+                       snapshot (--watch to refresh; --reset clears the\n\
+                       high-water gauges; --check-trace FILE validates a\n\
+                       span JSONL file for CI)\n\
            snapshot    ask a listening server to snapshot (or, with\n\
                        --restore, reload) a signature's index\n\
            artifacts   list and verify the compiled artifact set\n\
@@ -157,6 +166,27 @@ fn cmd_serve(args: &Args, cfg: &AppConfig) -> Result<(), String> {
     } else {
         tensorized_rp::index::LshConfig::default()
     };
+    // Tracing: --trace-dir DIR drains request-level spans to rotated
+    // JSONL files under DIR (see obs::trace). Off by default — and the
+    // response stream is bit-identical either way.
+    let trace = match args.get("trace-dir") {
+        Some(dir) => {
+            let mut tc = tensorized_rp::obs::TraceConfig::new(dir);
+            tc.max_file_bytes = args.get_parsed_or("trace-file-cap", tc.max_file_bytes)?;
+            tc.keep_files = args.get_parsed_or("trace-keep", tc.keep_files)?;
+            if tc.keep_files == 0 {
+                return Err("--trace-keep must be ≥ 1".into());
+            }
+            println!(
+                "[serve] tracing to {}/trace.jsonl (cap {} bytes × {} files)",
+                tc.dir.display(),
+                tc.max_file_bytes,
+                tc.keep_files
+            );
+            Some(tc)
+        }
+        None => None,
+    };
     let coord = Coordinator::start(
         CoordinatorConfig {
             master_seed: cfg.seed,
@@ -166,6 +196,7 @@ fn cmd_serve(args: &Args, cfg: &AppConfig) -> Result<(), String> {
             index_shards,
             index_backend,
             lsh,
+            trace,
             ..Default::default()
         },
         engine,
@@ -244,6 +275,8 @@ fn cmd_client(args: &Args, cfg: &AppConfig) -> Result<(), String> {
     let format = args.get_or("format", "tt");
     let op = args.get_or("op", "project");
     let n: usize = args.get_parsed_or("requests", 4usize)?;
+    // A metrics snapshot is global: one request tells the whole story.
+    let n = if op == "metrics" { 1 } else { n };
     let topk: usize = args.get_parsed_or("k", 5usize)?;
     let mut client =
         tensorized_rp::coordinator::NetClient::connect(addr).map_err(|e| e.to_string())?;
@@ -262,7 +295,10 @@ fn cmd_client(args: &Args, cfg: &AppConfig) -> Result<(), String> {
                 let f = Format::parse(&format).ok_or("bad --format")?;
                 ProjectRequest::index_stats(i as u64, f, case.dims())
             }
-            other => return Err(format!("unknown --op {other} (project|insert|query|stats)")),
+            "metrics" => ProjectRequest::metrics(i as u64, args.flag("reset")),
+            other => {
+                return Err(format!("unknown --op {other} (project|insert|query|stats|metrics)"))
+            }
         };
         let resp = client.roundtrip(&req).map_err(|e| e.to_string())?;
         let id = resp
@@ -273,7 +309,37 @@ fn cmd_client(args: &Args, cfg: &AppConfig) -> Result<(), String> {
             println!("id={id} error: {e}");
             continue;
         }
-        if let Some(ns) = resp.neighbors {
+        if let Some(m) = resp.metrics {
+            println!(
+                "id={id} metrics: submitted={} completed={} failed={} signatures={} \
+                 gemm_buckets={} trace_recorded={}",
+                m.global.submitted,
+                m.global.completed,
+                m.global.failed,
+                m.signatures.len(),
+                m.gemm.len(),
+                m.trace.recorded
+            );
+            for s in &m.signatures {
+                let stages = s
+                    .stages
+                    .iter()
+                    .map(|st| format!("{}:p50={}µs/p99={}µs", st.stage, st.p50_us, st.p99_us))
+                    .collect::<Vec<_>>()
+                    .join(" ");
+                println!(
+                    "  sig {} req={} proj={} ins={} qry={} del={} err={} flushes={} | {stages}",
+                    s.signature,
+                    s.requests,
+                    s.projects,
+                    s.inserts,
+                    s.queries,
+                    s.deletes,
+                    s.errors,
+                    s.flushes
+                );
+            }
+        } else if let Some(ns) = resp.neighbors {
             let nearest = ns
                 .first()
                 .map(|nb| format!("{}@{:.4}", nb.id, nb.dist))
@@ -295,6 +361,94 @@ fn cmd_client(args: &Args, cfg: &AppConfig) -> Result<(), String> {
             println!("id={id} empty response");
         }
     }
+    Ok(())
+}
+
+/// Render a live server's observability snapshot as a Prometheus-style
+/// text dump (`trp metrics --connect ADDR [--watch] [--reset]`), or
+/// validate a span JSONL file (`trp metrics --check-trace FILE` — the CI
+/// trace smoke job's assertion).
+fn cmd_metrics(args: &Args) -> Result<(), String> {
+    if let Some(path) = args.get("check-trace") {
+        return check_trace(std::path::Path::new(path));
+    }
+    let addr = args.get("connect").unwrap_or("127.0.0.1:7070");
+    let reset = args.flag("reset");
+    let watch = args.flag("watch");
+    let interval: u64 = args.get_parsed_or("interval", 2u64)?;
+    let mut client =
+        tensorized_rp::coordinator::NetClient::connect(addr).map_err(|e| e.to_string())?;
+    let mut id = 0u64;
+    loop {
+        let resp = client
+            .roundtrip(&ProjectRequest::metrics(id, reset))
+            .map_err(|e| e.to_string())?;
+        if let Some(e) = resp.error {
+            return Err(e);
+        }
+        let snap = resp.metrics.ok_or("server answered without a metrics snapshot")?;
+        print!("{}", snap.to_prometheus());
+        if !watch {
+            return Ok(());
+        }
+        println!("# ---");
+        id += 1;
+        std::thread::sleep(std::time::Duration::from_secs(interval.max(1)));
+    }
+}
+
+/// Every line must parse as a span record with a known stage tag and
+/// integer timing fields, and every required pipeline stage must appear
+/// at least once. `Err` (exit 1) otherwise, so CI can gate on it.
+fn check_trace(path: &std::path::Path) -> Result<(), String> {
+    use tensorized_rp::obs::{OPTIONAL_STAGES, REQUIRED_STAGES};
+    use tensorized_rp::util::json::Json;
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    let mut seen: std::collections::BTreeMap<&str, u64> = std::collections::BTreeMap::new();
+    let mut lines = 0u64;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line)
+            .map_err(|e| format!("{}:{}: bad JSON: {e}", path.display(), i + 1))?;
+        let stage = v
+            .get("stage")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("{}:{}: span without a stage tag", path.display(), i + 1))?;
+        let known = REQUIRED_STAGES.iter().chain(OPTIONAL_STAGES.iter());
+        let stage = known
+            .copied()
+            .find(|s| *s == stage)
+            .ok_or_else(|| format!("{}:{}: unknown stage {stage:?}", path.display(), i + 1))?;
+        for key in ["start_us", "dur_us"] {
+            if v.get(key).and_then(Json::as_usize).is_none() {
+                return Err(format!(
+                    "{}:{}: span missing integer {key}",
+                    path.display(),
+                    i + 1
+                ));
+            }
+        }
+        *seen.entry(stage).or_insert(0) += 1;
+        lines += 1;
+    }
+    if lines == 0 {
+        return Err(format!("{}: no spans recorded", path.display()));
+    }
+    let missing: Vec<&str> =
+        REQUIRED_STAGES.iter().copied().filter(|s| !seen.contains_key(s)).collect();
+    if !missing.is_empty() {
+        return Err(format!(
+            "{}: {lines} spans but missing required stages: {}",
+            path.display(),
+            missing.join(", ")
+        ));
+    }
+    let summary =
+        seen.iter().map(|(s, n)| format!("{s}={n}")).collect::<Vec<_>>().join(" ");
+    println!("[check-trace] {}: {lines} spans ok — {summary}", path.display());
     Ok(())
 }
 
@@ -439,12 +593,19 @@ fn cmd_experiment(args: &Args, cfg: &AppConfig) -> Result<(), String> {
             // series next to the dense ones, plus the kernel GFLOP/s rows
             // (packed vs frozen PR 5 kernel) on the sweep's shape mix.
             let krows = batch::kernel_bench(&c);
+            // Tracing tripwire: same coordinator point with tracing off
+            // vs on — responses must be bit-identical, overhead small.
+            let trow = batch::trace_overhead(&c);
             let bench_path = args.get_or("bench-out", "BENCH_batch_sweep.json");
-            std::fs::write(&bench_path, batch::to_json(&c, &rows, &krows).to_string_pretty())
-                .map_err(|e| e.to_string())?;
+            std::fs::write(
+                &bench_path,
+                batch::to_json(&c, &rows, &krows, Some(&trow)).to_string_pretty(),
+            )
+            .map_err(|e| e.to_string())?;
             println!("[written {bench_path}]");
             batch::print_verdict(&rows);
             batch::print_kernel_verdict(&krows);
+            batch::print_trace_verdict(&trow);
         }
         "ann" => {
             let mut c = if cfg.quick {

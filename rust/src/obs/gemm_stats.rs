@@ -1,0 +1,144 @@
+//! GEMM kernel profiling by shape bucket.
+//!
+//! Rides the public `linalg::gemm` entry points (the microkernel is
+//! untouched): when enabled, each call records its wall time and flop
+//! count under a shape bucket whose dims are rounded up to powers of two
+//! — so `63×250×64` and `64×256×64` aggregate together and the profile
+//! stays a handful of rows instead of one per exact shape.
+//!
+//! The enable flag is a single relaxed atomic load on the disabled path
+//! (the same idiom as `linalg::gemm::gemm_threads`). It is switched on
+//! together with request tracing (`trp serve --trace-dir`) and directly
+//! by tests/benches via [`set_gemm_profiling`].
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+type ShapeKey = (usize, usize, usize);
+
+#[derive(Debug, Default, Clone, Copy)]
+struct Agg {
+    calls: u64,
+    flops: u64,
+    time_us: u64,
+}
+
+fn table() -> &'static Mutex<HashMap<ShapeKey, Agg>> {
+    static TABLE: OnceLock<Mutex<HashMap<ShapeKey, Agg>>> = OnceLock::new();
+    TABLE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Is profiling on? (One relaxed load — the entire disabled-path cost.)
+#[inline]
+pub fn gemm_profiling_enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Toggle profiling process-wide.
+pub fn set_gemm_profiling(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Record one profiled GEMM call of logical shape `m×k×n` that took
+/// `dur_us`. Called by `linalg::gemm` only when profiling is enabled.
+pub fn gemm_record(m: usize, k: usize, n: usize, dur_us: u64) {
+    let key =
+        (m.next_power_of_two().max(1), k.next_power_of_two().max(1), n.next_power_of_two().max(1));
+    let flops = 2u64
+        .saturating_mul(m as u64)
+        .saturating_mul(k as u64)
+        .saturating_mul(n as u64);
+    let mut t = table().lock().unwrap();
+    let agg = t.entry(key).or_default();
+    agg.calls += 1;
+    agg.flops = agg.flops.saturating_add(flops);
+    agg.time_us = agg.time_us.saturating_add(dur_us);
+}
+
+/// Aggregated profile of one GEMM shape bucket.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GemmShapeStat {
+    /// Bucket upper bound for `m` (power of two).
+    pub m: usize,
+    /// Bucket upper bound for `k`.
+    pub k: usize,
+    /// Bucket upper bound for `n`.
+    pub n: usize,
+    /// Calls aggregated into this bucket.
+    pub calls: u64,
+    /// Total `2·m·k·n` flops of the *actual* shapes (not the bucket
+    /// bounds).
+    pub flops: u64,
+    /// Total wall time in µs.
+    pub time_us: u64,
+}
+
+impl GemmShapeStat {
+    /// Achieved throughput in GFLOP/s (0 when no time was observed).
+    pub fn gflops(&self) -> f64 {
+        if self.time_us == 0 {
+            return 0.0;
+        }
+        self.flops as f64 / (self.time_us as f64 * 1e3)
+    }
+}
+
+/// Current profile, busiest bucket (by time) first.
+pub fn gemm_stats_snapshot() -> Vec<GemmShapeStat> {
+    let t = table().lock().unwrap();
+    let mut out: Vec<GemmShapeStat> = t
+        .iter()
+        .map(|(&(m, k, n), a)| GemmShapeStat {
+            m,
+            k,
+            n,
+            calls: a.calls,
+            flops: a.flops,
+            time_us: a.time_us,
+        })
+        .collect();
+    out.sort_by(|a, b| b.time_us.cmp(&a.time_us).then((b.m, b.k, b.n).cmp(&(a.m, a.k, a.n))));
+    out
+}
+
+/// Clear the profile (process-wide; tests and `reset`ing snapshots).
+pub fn reset_gemm_stats() {
+    table().lock().unwrap().clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_bucket_to_powers_of_two() {
+        reset_gemm_stats();
+        gemm_record(63, 250, 64, 10);
+        gemm_record(64, 256, 64, 30);
+        gemm_record(4, 4, 4, 1);
+        let snap = gemm_stats_snapshot();
+        let big = snap.iter().find(|s| (s.m, s.k, s.n) == (64, 256, 64)).expect("merged bucket");
+        assert_eq!(big.calls, 2);
+        assert_eq!(big.time_us, 40);
+        assert_eq!(big.flops, 2 * 63 * 250 * 64 + 2 * 64 * 256 * 64);
+        assert!(big.gflops() > 0.0);
+        // The table is process-global and other tests may profile their
+        // own GEMMs concurrently, so assert the ordering *property*
+        // rather than which bucket is globally busiest.
+        assert!(snap.windows(2).all(|w| w[0].time_us >= w[1].time_us), "sorted busiest first");
+        reset_gemm_stats();
+        assert!(gemm_stats_snapshot().is_empty());
+    }
+
+    #[test]
+    fn flag_toggles_and_restores() {
+        let was = gemm_profiling_enabled();
+        set_gemm_profiling(true);
+        assert!(gemm_profiling_enabled());
+        set_gemm_profiling(was);
+        assert_eq!(gemm_profiling_enabled(), was);
+    }
+}

@@ -1,0 +1,40 @@
+//! Observability: request-level tracing and the per-signature metrics
+//! registry.
+//!
+//! Three layers, all off the numeric hot path:
+//!
+//! * [`trace`] — a lock-free bounded span ring. Producers (network
+//!   threads, the dispatcher, worker jobs) record [`Span`]s with one CAS;
+//!   a single drainer thread serializes them to size-capped, rotated
+//!   JSONL files under `trp serve --trace-dir`. Tracing is
+//!   zero-perturbation by construction: spans carry only ids, stage tags
+//!   and timestamps — never numeric payload — so responses are
+//!   bit-identical with tracing on or off (tier-1 gate in
+//!   `tests/obs_props.rs`), and the disabled path is a single `Option`
+//!   check.
+//! * [`registry`] — per-signature counters and per-stage log-bucketed
+//!   latency histograms, keyed like the projection-map registry (one
+//!   entry per map signature). Always on; recording is a handful of
+//!   relaxed atomics per flush.
+//! * [`gemm_stats`] — flop + wall-time aggregation by GEMM shape bucket,
+//!   hooked at the public `linalg::gemm` entries (never inside the
+//!   microkernel) behind one relaxed atomic flag.
+//!
+//! The whole picture is exported as an [`ObsSnapshot`]: over the wire via
+//! the `metrics` op, as JSON via `trp client --op metrics`, and as a
+//! Prometheus-style text dump via `trp metrics [--watch]`.
+
+pub mod gemm_stats;
+pub mod registry;
+pub mod trace;
+
+pub use gemm_stats::{
+    gemm_profiling_enabled, gemm_record, gemm_stats_snapshot, reset_gemm_stats,
+    set_gemm_profiling, GemmShapeStat,
+};
+pub use registry::{
+    MetricsRegistry, ObsSnapshot, SigMetrics, SigSnapshot, Stage, StageSnapshot, STAGE_COUNT,
+};
+pub use trace::{
+    Span, SpanRing, TraceConfig, TraceRecorder, TraceStats, OPTIONAL_STAGES, REQUIRED_STAGES,
+};

@@ -1,0 +1,619 @@
+//! Per-signature metrics registry + the full observability snapshot.
+//!
+//! Keyed like the projection-map registry: one [`SigMetrics`] per map
+//! signature label, created lazily on first traffic. Each entry carries
+//! request/op counters plus per-stage log-bucketed latency histograms,
+//! so a slow query is attributable to batcher wait vs GEMM vs shard
+//! fan-out vs reply — per signature, not just globally.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::{LatencyHistogram, MetricsSnapshot};
+use crate::obs::gemm_stats::GemmShapeStat;
+use crate::obs::trace::TraceStats;
+use crate::util::json::{obj, Json};
+
+/// Number of per-signature stage histograms.
+pub const STAGE_COUNT: usize = 8;
+
+/// Pipeline stages with a per-signature latency histogram.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Submit → flush start (batcher + queue wait), per request.
+    QueueWait,
+    /// First enqueue → worker pickup of the flush, per flush.
+    FlushAssembly,
+    /// `project_batch_into` wall time, per flush.
+    Project,
+    /// Wait for a shard lane's sequencer turn, per shard pass.
+    LaneWait,
+    /// In-turn index work (inserts/deletes/batched query scoring), per
+    /// shard pass.
+    IndexScan,
+    /// k-way merge of per-shard query candidates, per flush.
+    Merge,
+    /// Reply construction + channel send fan-out, per flush.
+    Reply,
+    /// Off-turn snapshot file writes, per snapshot.
+    SnapshotWrite,
+}
+
+impl Stage {
+    /// Every stage, in histogram-slot order.
+    pub const ALL: [Stage; STAGE_COUNT] = [
+        Stage::QueueWait,
+        Stage::FlushAssembly,
+        Stage::Project,
+        Stage::LaneWait,
+        Stage::IndexScan,
+        Stage::Merge,
+        Stage::Reply,
+        Stage::SnapshotWrite,
+    ];
+
+    /// Stable exported name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::QueueWait => "queue_wait",
+            Stage::FlushAssembly => "flush_assembly",
+            Stage::Project => "project_gemm",
+            Stage::LaneWait => "lane_wait",
+            Stage::IndexScan => "index_scan",
+            Stage::Merge => "merge",
+            Stage::Reply => "reply",
+            Stage::SnapshotWrite => "snapshot_write",
+        }
+    }
+}
+
+/// Counters + stage histograms for one map signature.
+#[derive(Debug)]
+pub struct SigMetrics {
+    /// Requests routed to this signature (any op).
+    pub requests: AtomicU64,
+    /// `project` ops served.
+    pub projects: AtomicU64,
+    /// `insert` ops served.
+    pub inserts: AtomicU64,
+    /// `query` ops served.
+    pub queries: AtomicU64,
+    /// `delete` ops served.
+    pub deletes: AtomicU64,
+    /// Error replies sent for this signature.
+    pub errors: AtomicU64,
+    /// Native flushes executed for this signature.
+    pub flushes: AtomicU64,
+    stages: [LatencyHistogram; STAGE_COUNT],
+}
+
+impl Default for SigMetrics {
+    fn default() -> Self {
+        Self {
+            requests: AtomicU64::new(0),
+            projects: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
+            queries: AtomicU64::new(0),
+            deletes: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            flushes: AtomicU64::new(0),
+            stages: std::array::from_fn(|_| LatencyHistogram::new()),
+        }
+    }
+}
+
+impl SigMetrics {
+    /// The histogram of one stage.
+    pub fn stage(&self, s: Stage) -> &LatencyHistogram {
+        &self.stages[s as usize]
+    }
+
+    /// Record one observation into a stage histogram.
+    pub fn record_stage(&self, s: Stage, us: u64) {
+        self.stages[s as usize].record(us);
+    }
+}
+
+/// Lazily-populated map signature → [`SigMetrics`], mirroring how the
+/// projection registry keys its maps.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    sigs: Mutex<HashMap<String, Arc<SigMetrics>>>,
+}
+
+impl MetricsRegistry {
+    /// New empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The signature's metrics, created on first use. Callers hold the
+    /// returned `Arc` for the duration of a flush so recording is pure
+    /// atomics.
+    pub fn get(&self, label: &str) -> Arc<SigMetrics> {
+        let mut m = self.sigs.lock().unwrap();
+        Arc::clone(m.entry(label.to_string()).or_default())
+    }
+
+    /// Number of signatures seen.
+    pub fn len(&self) -> usize {
+        self.sigs.lock().unwrap().len()
+    }
+
+    /// True when no signature has reported yet.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Point-in-time copy of every signature, sorted by label for
+    /// deterministic exposition.
+    pub fn snapshot(&self) -> Vec<SigSnapshot> {
+        let m = self.sigs.lock().unwrap();
+        let mut out: Vec<SigSnapshot> =
+            m.iter().map(|(label, sig)| SigSnapshot::capture(label, sig)).collect();
+        out.sort_by(|a, b| a.signature.cmp(&b.signature));
+        out
+    }
+}
+
+/// Point-in-time copy of one stage histogram.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageSnapshot {
+    /// Stage name (see [`Stage::name`]).
+    pub stage: String,
+    /// Observation count.
+    pub count: u64,
+    /// Mean µs.
+    pub mean_us: f64,
+    /// Interpolated p50 µs.
+    pub p50_us: u64,
+    /// Interpolated p99 µs.
+    pub p99_us: u64,
+    /// Raw log₂ bucket counts (bucket b covers `[2^b, 2^(b+1))` µs).
+    pub buckets: Vec<u64>,
+}
+
+/// Point-in-time copy of one signature's metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SigSnapshot {
+    /// Signature label (map kind/dims/k).
+    pub signature: String,
+    /// See [`SigMetrics::requests`].
+    pub requests: u64,
+    /// See [`SigMetrics::projects`].
+    pub projects: u64,
+    /// See [`SigMetrics::inserts`].
+    pub inserts: u64,
+    /// See [`SigMetrics::queries`].
+    pub queries: u64,
+    /// See [`SigMetrics::deletes`].
+    pub deletes: u64,
+    /// See [`SigMetrics::errors`].
+    pub errors: u64,
+    /// See [`SigMetrics::flushes`].
+    pub flushes: u64,
+    /// Non-empty stage histograms, in [`Stage::ALL`] order.
+    pub stages: Vec<StageSnapshot>,
+}
+
+impl SigSnapshot {
+    fn capture(label: &str, sig: &SigMetrics) -> Self {
+        let stages = Stage::ALL
+            .iter()
+            .filter_map(|&s| {
+                let h = sig.stage(s);
+                if h.count() == 0 {
+                    return None;
+                }
+                Some(StageSnapshot {
+                    stage: s.name().to_string(),
+                    count: h.count(),
+                    mean_us: h.mean_us(),
+                    p50_us: h.quantile_us(0.50),
+                    p99_us: h.quantile_us(0.99),
+                    buckets: h.bucket_counts(),
+                })
+            })
+            .collect();
+        Self {
+            signature: label.to_string(),
+            requests: sig.requests.load(Ordering::Relaxed),
+            projects: sig.projects.load(Ordering::Relaxed),
+            inserts: sig.inserts.load(Ordering::Relaxed),
+            queries: sig.queries.load(Ordering::Relaxed),
+            deletes: sig.deletes.load(Ordering::Relaxed),
+            errors: sig.errors.load(Ordering::Relaxed),
+            flushes: sig.flushes.load(Ordering::Relaxed),
+            stages,
+        }
+    }
+}
+
+/// The full observability picture, as returned by the `metrics` wire op.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObsSnapshot {
+    /// Global service counters + end-to-end latency.
+    pub global: MetricsSnapshot,
+    /// Per-signature breakdown.
+    pub signatures: Vec<SigSnapshot>,
+    /// GEMM kernel profile by shape bucket (empty unless profiling is
+    /// enabled — it is switched on together with tracing).
+    pub gemm: Vec<GemmShapeStat>,
+    /// Trace recorder counters.
+    pub trace: TraceStats,
+}
+
+fn u(v: Option<&Json>) -> u64 {
+    v.and_then(Json::as_f64).unwrap_or(0.0) as u64
+}
+
+fn f(v: Option<&Json>) -> f64 {
+    v.and_then(Json::as_f64).unwrap_or(0.0)
+}
+
+fn global_to_json(g: &MetricsSnapshot) -> Json {
+    let n = |x: u64| Json::Num(x as f64);
+    obj(vec![
+        ("submitted", n(g.submitted)),
+        ("completed", n(g.completed)),
+        ("failed", n(g.failed)),
+        ("pjrt_batches", n(g.pjrt_batches)),
+        ("native_batches", n(g.native_batches)),
+        ("native_requests", n(g.native_requests)),
+        ("pjrt_requests", n(g.pjrt_requests)),
+        ("padded_slots", n(g.padded_slots)),
+        ("native_flush_max", n(g.native_flush_max)),
+        ("index_inserts", n(g.index_inserts)),
+        ("index_deletes", n(g.index_deletes)),
+        ("index_queries", n(g.index_queries)),
+        ("index_snapshots", n(g.index_snapshots)),
+        ("index_restores", n(g.index_restores)),
+        ("index_shard_max_skew", n(g.index_shard_max_skew)),
+        ("index_shard_parallel", n(g.index_shard_parallel)),
+        ("index_shard_skew_now", n(g.index_shard_skew_now)),
+        ("index_shard_parallel_now", n(g.index_shard_parallel_now)),
+        ("mean_latency_us", Json::Num(g.mean_latency_us)),
+        ("p50_latency_us", n(g.p50_latency_us)),
+        ("p99_latency_us", n(g.p99_latency_us)),
+    ])
+}
+
+fn global_from_json(v: &Json) -> MetricsSnapshot {
+    MetricsSnapshot {
+        submitted: u(v.get("submitted")),
+        completed: u(v.get("completed")),
+        failed: u(v.get("failed")),
+        pjrt_batches: u(v.get("pjrt_batches")),
+        native_batches: u(v.get("native_batches")),
+        native_requests: u(v.get("native_requests")),
+        pjrt_requests: u(v.get("pjrt_requests")),
+        padded_slots: u(v.get("padded_slots")),
+        native_flush_max: u(v.get("native_flush_max")),
+        index_inserts: u(v.get("index_inserts")),
+        index_deletes: u(v.get("index_deletes")),
+        index_queries: u(v.get("index_queries")),
+        index_snapshots: u(v.get("index_snapshots")),
+        index_restores: u(v.get("index_restores")),
+        index_shard_max_skew: u(v.get("index_shard_max_skew")),
+        index_shard_parallel: u(v.get("index_shard_parallel")),
+        index_shard_skew_now: u(v.get("index_shard_skew_now")),
+        index_shard_parallel_now: u(v.get("index_shard_parallel_now")),
+        mean_latency_us: f(v.get("mean_latency_us")),
+        p50_latency_us: u(v.get("p50_latency_us")),
+        p99_latency_us: u(v.get("p99_latency_us")),
+    }
+}
+
+impl ObsSnapshot {
+    /// Wire encoding.
+    pub fn to_json(&self) -> Json {
+        let sigs = self
+            .signatures
+            .iter()
+            .map(|s| {
+                let stages = s
+                    .stages
+                    .iter()
+                    .map(|st| {
+                        obj(vec![
+                            ("stage", Json::Str(st.stage.clone())),
+                            ("count", Json::Num(st.count as f64)),
+                            ("mean_us", Json::Num(st.mean_us)),
+                            ("p50_us", Json::Num(st.p50_us as f64)),
+                            ("p99_us", Json::Num(st.p99_us as f64)),
+                            (
+                                "buckets",
+                                Json::Arr(
+                                    st.buckets.iter().map(|&b| Json::Num(b as f64)).collect(),
+                                ),
+                            ),
+                        ])
+                    })
+                    .collect();
+                obj(vec![
+                    ("signature", Json::Str(s.signature.clone())),
+                    ("requests", Json::Num(s.requests as f64)),
+                    ("projects", Json::Num(s.projects as f64)),
+                    ("inserts", Json::Num(s.inserts as f64)),
+                    ("queries", Json::Num(s.queries as f64)),
+                    ("deletes", Json::Num(s.deletes as f64)),
+                    ("errors", Json::Num(s.errors as f64)),
+                    ("flushes", Json::Num(s.flushes as f64)),
+                    ("stages", Json::Arr(stages)),
+                ])
+            })
+            .collect();
+        let gemm = self
+            .gemm
+            .iter()
+            .map(|g| {
+                obj(vec![
+                    ("m", Json::Num(g.m as f64)),
+                    ("k", Json::Num(g.k as f64)),
+                    ("n", Json::Num(g.n as f64)),
+                    ("calls", Json::Num(g.calls as f64)),
+                    ("flops", Json::Num(g.flops as f64)),
+                    ("time_us", Json::Num(g.time_us as f64)),
+                ])
+            })
+            .collect();
+        obj(vec![
+            ("global", global_to_json(&self.global)),
+            ("signatures", Json::Arr(sigs)),
+            ("gemm", Json::Arr(gemm)),
+            (
+                "trace",
+                obj(vec![
+                    ("enabled", Json::Bool(self.trace.enabled)),
+                    ("recorded", Json::Num(self.trace.recorded as f64)),
+                    ("dropped", Json::Num(self.trace.dropped as f64)),
+                    ("written", Json::Num(self.trace.written as f64)),
+                    ("rotations", Json::Num(self.trace.rotations as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Inverse of [`ObsSnapshot::to_json`].
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let global = global_from_json(v.get("global").ok_or("metrics missing 'global'")?);
+        let mut signatures = Vec::new();
+        if let Some(arr) = v.get("signatures").and_then(Json::as_arr) {
+            for s in arr {
+                let mut stages = Vec::new();
+                if let Some(sts) = s.get("stages").and_then(Json::as_arr) {
+                    for st in sts {
+                        stages.push(StageSnapshot {
+                            stage: st
+                                .get("stage")
+                                .and_then(Json::as_str)
+                                .unwrap_or_default()
+                                .to_string(),
+                            count: u(st.get("count")),
+                            mean_us: f(st.get("mean_us")),
+                            p50_us: u(st.get("p50_us")),
+                            p99_us: u(st.get("p99_us")),
+                            buckets: st
+                                .get("buckets")
+                                .and_then(Json::as_arr)
+                                .map(|b| {
+                                    b.iter()
+                                        .map(|x| x.as_f64().unwrap_or(0.0) as u64)
+                                        .collect()
+                                })
+                                .unwrap_or_default(),
+                        });
+                    }
+                }
+                signatures.push(SigSnapshot {
+                    signature: s
+                        .get("signature")
+                        .and_then(Json::as_str)
+                        .unwrap_or_default()
+                        .to_string(),
+                    requests: u(s.get("requests")),
+                    projects: u(s.get("projects")),
+                    inserts: u(s.get("inserts")),
+                    queries: u(s.get("queries")),
+                    deletes: u(s.get("deletes")),
+                    errors: u(s.get("errors")),
+                    flushes: u(s.get("flushes")),
+                    stages,
+                });
+            }
+        }
+        let mut gemm = Vec::new();
+        if let Some(arr) = v.get("gemm").and_then(Json::as_arr) {
+            for g in arr {
+                gemm.push(GemmShapeStat {
+                    m: u(g.get("m")) as usize,
+                    k: u(g.get("k")) as usize,
+                    n: u(g.get("n")) as usize,
+                    calls: u(g.get("calls")),
+                    flops: u(g.get("flops")),
+                    time_us: u(g.get("time_us")),
+                });
+            }
+        }
+        let trace = match v.get("trace") {
+            Some(t) => TraceStats {
+                enabled: t.get("enabled").and_then(Json::as_bool).unwrap_or(false),
+                recorded: u(t.get("recorded")),
+                dropped: u(t.get("dropped")),
+                written: u(t.get("written")),
+                rotations: u(t.get("rotations")),
+            },
+            None => TraceStats::default(),
+        };
+        Ok(Self { global, signatures, gemm, trace })
+    }
+
+    /// Prometheus-style text exposition (`trp metrics`).
+    pub fn to_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let g = &self.global;
+        let mut counter = |name: &str, v: u64| {
+            let _ = writeln!(out, "# TYPE trp_{name} counter\ntrp_{name} {v}");
+        };
+        counter("submitted_total", g.submitted);
+        counter("completed_total", g.completed);
+        counter("failed_total", g.failed);
+        counter("native_batches_total", g.native_batches);
+        counter("native_requests_total", g.native_requests);
+        counter("pjrt_batches_total", g.pjrt_batches);
+        counter("pjrt_requests_total", g.pjrt_requests);
+        counter("padded_slots_total", g.padded_slots);
+        counter("index_inserts_total", g.index_inserts);
+        counter("index_deletes_total", g.index_deletes);
+        counter("index_queries_total", g.index_queries);
+        counter("index_snapshots_total", g.index_snapshots);
+        counter("index_restores_total", g.index_restores);
+        let mut gauge = |name: &str, v: f64| {
+            let _ = writeln!(out, "# TYPE trp_{name} gauge\ntrp_{name} {v}");
+        };
+        gauge("native_flush_max", g.native_flush_max as f64);
+        gauge("index_shard_max_skew_highwater", g.index_shard_max_skew as f64);
+        gauge("index_shard_parallel_highwater", g.index_shard_parallel as f64);
+        gauge("index_shard_max_skew", g.index_shard_skew_now as f64);
+        gauge("index_shard_parallel", g.index_shard_parallel_now as f64);
+        gauge("e2e_latency_mean_us", g.mean_latency_us);
+        gauge("e2e_latency_us{quantile=\"0.5\"}", g.p50_latency_us as f64);
+        gauge("e2e_latency_us{quantile=\"0.99\"}", g.p99_latency_us as f64);
+        let _ = writeln!(out, "# TYPE trp_sig_ops_total counter");
+        for s in &self.signatures {
+            for (op, v) in [
+                ("project", s.projects),
+                ("insert", s.inserts),
+                ("query", s.queries),
+                ("delete", s.deletes),
+                ("error", s.errors),
+            ] {
+                let _ = writeln!(
+                    out,
+                    "trp_sig_ops_total{{sig=\"{}\",op=\"{op}\"}} {v}",
+                    s.signature
+                );
+            }
+            let _ = writeln!(
+                out,
+                "trp_sig_flushes_total{{sig=\"{}\"}} {}",
+                s.signature, s.flushes
+            );
+        }
+        let _ = writeln!(out, "# TYPE trp_stage_latency_us summary");
+        for s in &self.signatures {
+            for st in &s.stages {
+                let sig = &s.signature;
+                let stage = &st.stage;
+                let _ = writeln!(
+                    out,
+                    "trp_stage_latency_us{{sig=\"{sig}\",stage=\"{stage}\",quantile=\"0.5\"}} {}",
+                    st.p50_us
+                );
+                let _ = writeln!(
+                    out,
+                    "trp_stage_latency_us{{sig=\"{sig}\",stage=\"{stage}\",quantile=\"0.99\"}} {}",
+                    st.p99_us
+                );
+                let _ = writeln!(
+                    out,
+                    "trp_stage_latency_us_count{{sig=\"{sig}\",stage=\"{stage}\"}} {}",
+                    st.count
+                );
+                let _ = writeln!(
+                    out,
+                    "trp_stage_latency_us_mean{{sig=\"{sig}\",stage=\"{stage}\"}} {:.1}",
+                    st.mean_us
+                );
+            }
+        }
+        if !self.gemm.is_empty() {
+            let _ = writeln!(out, "# TYPE trp_gemm_time_us_total counter");
+            for gs in &self.gemm {
+                let shape = format!("{}x{}x{}", gs.m, gs.k, gs.n);
+                let _ = writeln!(out, "trp_gemm_calls_total{{shape=\"{shape}\"}} {}", gs.calls);
+                let _ = writeln!(out, "trp_gemm_flops_total{{shape=\"{shape}\"}} {}", gs.flops);
+                let _ =
+                    writeln!(out, "trp_gemm_time_us_total{{shape=\"{shape}\"}} {}", gs.time_us);
+            }
+        }
+        let t = &self.trace;
+        let _ = writeln!(out, "# TYPE trp_trace_spans_total counter");
+        let _ = writeln!(out, "trp_trace_enabled {}", u64::from(t.enabled));
+        let _ = writeln!(out, "trp_trace_spans_total {}", t.recorded);
+        let _ = writeln!(out, "trp_trace_spans_dropped_total {}", t.dropped);
+        let _ = writeln!(out, "trp_trace_spans_written_total {}", t.written);
+        let _ = writeln!(out, "trp_trace_rotations_total {}", t.rotations);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> ObsSnapshot {
+        let reg = MetricsRegistry::new();
+        let sig = reg.get("tt-r5/3x3x3/k64");
+        sig.requests.fetch_add(4, Ordering::Relaxed);
+        sig.queries.fetch_add(2, Ordering::Relaxed);
+        sig.record_stage(Stage::QueueWait, 120);
+        sig.record_stage(Stage::Project, 900);
+        sig.record_stage(Stage::Project, 1_800);
+        let global = crate::coordinator::Metrics::new().snapshot();
+        ObsSnapshot {
+            global,
+            signatures: reg.snapshot(),
+            gemm: vec![GemmShapeStat { m: 16, k: 64, n: 64, calls: 3, flops: 393_216, time_us: 42 }],
+            trace: TraceStats { enabled: true, recorded: 10, dropped: 1, written: 9, rotations: 0 },
+        }
+    }
+
+    #[test]
+    fn registry_is_per_signature() {
+        let reg = MetricsRegistry::new();
+        reg.get("a").inserts.fetch_add(3, Ordering::Relaxed);
+        reg.get("b").inserts.fetch_add(5, Ordering::Relaxed);
+        let snap = reg.snapshot();
+        assert_eq!(snap.len(), 2);
+        assert_eq!(snap[0].signature, "a");
+        assert_eq!(snap[0].inserts, 3);
+        assert_eq!(snap[1].inserts, 5);
+        // Re-fetching the same label returns the same underlying entry.
+        assert_eq!(reg.get("a").inserts.load(Ordering::Relaxed), 3);
+        assert_eq!(reg.len(), 2);
+    }
+
+    #[test]
+    fn snapshot_json_roundtrips() {
+        let snap = sample();
+        let text = snap.to_json().to_string_compact();
+        let back = ObsSnapshot::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.signatures, snap.signatures);
+        assert_eq!(back.gemm, snap.gemm);
+        assert_eq!(back.trace, snap.trace);
+        assert_eq!(back.global, snap.global);
+    }
+
+    #[test]
+    fn empty_stages_are_omitted() {
+        let reg = MetricsRegistry::new();
+        let sig = reg.get("x");
+        sig.record_stage(Stage::Reply, 10);
+        let snap = reg.snapshot();
+        assert_eq!(snap[0].stages.len(), 1);
+        assert_eq!(snap[0].stages[0].stage, "reply");
+    }
+
+    #[test]
+    fn prometheus_dump_names_required_stages() {
+        let text = sample().to_prometheus();
+        assert!(text.contains("trp_submitted_total"));
+        assert!(text.contains("stage=\"queue_wait\""));
+        assert!(text.contains("stage=\"project_gemm\""));
+        assert!(text.contains("trp_gemm_time_us_total{shape=\"16x64x64\"} 42"));
+        assert!(text.contains("trp_trace_spans_dropped_total 1"));
+    }
+}

@@ -1,0 +1,491 @@
+//! Lock-free request tracing: a fixed-size span ring drained to rotated
+//! JSONL files.
+//!
+//! Producers call [`TraceRecorder::record`] from any thread; the cost is
+//! one CAS plus a couple of relaxed stores (Vyukov bounded-MPMC slot
+//! protocol). When the ring is full the span is dropped and counted —
+//! recording never blocks and never allocates, so tracing cannot perturb
+//! request execution. A single drainer thread owns all file IO: it pops
+//! spans, serializes one JSONL line each, and rotates the output file
+//! once it crosses the configured size cap (`trace.jsonl` →
+//! `trace.jsonl.1` → … up to `keep_files` generations, the daemon-log
+//! idiom).
+
+use std::cell::UnsafeCell;
+use std::fs::{self, File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Stage tags every traced serving pipeline must emit at least once for
+/// a request that flows the full native path: socket read + decode,
+/// batcher wait, flush assembly, projection GEMM, index phase, reply
+/// fan-out, socket write. `trp metrics --check-trace` asserts coverage.
+pub const REQUIRED_STAGES: [&str; 7] =
+    ["recv", "queue", "assemble", "project", "index", "reply", "write"];
+
+/// Stage tags that are valid but only appear for specific workloads
+/// (off-turn snapshot writes).
+pub const OPTIONAL_STAGES: [&str; 1] = ["snapshot"];
+
+/// One timed stage of a request's (or flush's) life; serializes to one
+/// JSONL line. `Copy` so ring slots move it without drop glue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Span {
+    /// Stage tag (one of [`REQUIRED_STAGES`] / [`OPTIONAL_STAGES`]).
+    pub stage: &'static str,
+    /// Request id, when the span belongs to a single request.
+    pub req: Option<u64>,
+    /// Flush id, when the span belongs to a batched flush.
+    pub flush: Option<u64>,
+    /// Index shard, for per-shard index phases.
+    pub shard: Option<u32>,
+    /// Start tick (µs on the coordinator clock — µs since server start).
+    pub start_us: u64,
+    /// Duration in µs.
+    pub dur_us: u64,
+}
+
+impl Span {
+    /// The span's JSONL line (no trailing newline). Hand-formatted: every
+    /// field is an integer or a static identifier, so no escaping is
+    /// needed and the drainer stays allocation-light.
+    pub fn to_jsonl(&self) -> String {
+        let mut s = String::with_capacity(96);
+        s.push_str("{\"stage\":\"");
+        s.push_str(self.stage);
+        s.push('"');
+        for (name, v) in [("req", self.req), ("flush", self.flush)] {
+            s.push_str(",\"");
+            s.push_str(name);
+            s.push_str("\":");
+            match v {
+                Some(x) => s.push_str(&x.to_string()),
+                None => s.push_str("null"),
+            }
+        }
+        s.push_str(",\"shard\":");
+        match self.shard {
+            Some(x) => s.push_str(&x.to_string()),
+            None => s.push_str("null"),
+        }
+        s.push_str(",\"start_us\":");
+        s.push_str(&self.start_us.to_string());
+        s.push_str(",\"dur_us\":");
+        s.push_str(&self.dur_us.to_string());
+        s.push('}');
+        s
+    }
+}
+
+/// One ring slot: a sequence stamp (the Vyukov handshake) plus the span
+/// payload, written only by the producer that won the slot's CAS.
+struct Slot {
+    seq: AtomicUsize,
+    span: UnsafeCell<Span>,
+}
+
+/// Bounded lock-free MPMC span queue (Vyukov protocol). Capacity is a
+/// power of two; a push against a full ring drops the span and counts it
+/// rather than blocking — tracing must never back-pressure serving.
+pub struct SpanRing {
+    slots: Box<[Slot]>,
+    mask: usize,
+    enqueue_pos: AtomicUsize,
+    dequeue_pos: AtomicUsize,
+    dropped: AtomicU64,
+}
+
+// SAFETY: slot payloads are only written by the producer that CAS-won
+// `enqueue_pos` for that slot and only read by the consumer that CAS-won
+// `dequeue_pos`, with the acquire/release `seq` stamp ordering the two.
+unsafe impl Send for SpanRing {}
+unsafe impl Sync for SpanRing {}
+
+impl SpanRing {
+    /// New ring with capacity rounded up to a power of two (minimum 2).
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(2).next_power_of_two();
+        let slots = (0..cap)
+            .map(|i| Slot { seq: AtomicUsize::new(i), span: UnsafeCell::new(Span::default()) })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        Self {
+            slots,
+            mask: cap - 1,
+            enqueue_pos: AtomicUsize::new(0),
+            dequeue_pos: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Capacity (always a power of two).
+    pub fn capacity(&self) -> usize {
+        self.mask + 1
+    }
+
+    /// Spans dropped against a full ring since creation.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Enqueue; returns `false` (and counts a drop) when the ring is full.
+    pub fn push(&self, span: Span) -> bool {
+        let mut pos = self.enqueue_pos.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let diff = seq as isize - pos as isize;
+            if diff == 0 {
+                match self.enqueue_pos.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        // SAFETY: winning the CAS gives this thread sole
+                        // write access to the slot until the release
+                        // store below publishes it.
+                        unsafe { *slot.span.get() = span };
+                        slot.seq.store(pos.wrapping_add(1), Ordering::Release);
+                        return true;
+                    }
+                    Err(p) => pos = p,
+                }
+            } else if diff < 0 {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+                return false;
+            } else {
+                pos = self.enqueue_pos.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Dequeue the oldest span, if any.
+    pub fn pop(&self) -> Option<Span> {
+        let mut pos = self.dequeue_pos.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[pos & self.mask];
+            let seq = slot.seq.load(Ordering::Acquire);
+            let diff = seq as isize - pos.wrapping_add(1) as isize;
+            if diff == 0 {
+                match self.dequeue_pos.compare_exchange_weak(
+                    pos,
+                    pos.wrapping_add(1),
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        // SAFETY: winning the CAS gives this thread sole
+                        // read access; the release store recycles the
+                        // slot for the producer one lap ahead.
+                        let span = unsafe { *slot.span.get() };
+                        slot.seq.store(pos.wrapping_add(self.mask + 1), Ordering::Release);
+                        return Some(span);
+                    }
+                    Err(p) => pos = p,
+                }
+            } else if diff < 0 {
+                return None;
+            } else {
+                pos = self.dequeue_pos.load(Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Where and how the drainer writes trace output.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Directory for `trace.jsonl` (+ rotated generations). Created if
+    /// missing.
+    pub dir: PathBuf,
+    /// Span ring capacity (rounded up to a power of two).
+    pub ring_capacity: usize,
+    /// Rotate the current file once it exceeds this many bytes.
+    pub max_file_bytes: u64,
+    /// Rotated generations kept (`trace.jsonl.1` … `.keep_files`).
+    pub keep_files: usize,
+}
+
+impl TraceConfig {
+    /// Defaults: 64 Ki spans in flight, 8 MiB files, 4 generations.
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self {
+            dir: dir.into(),
+            ring_capacity: 1 << 16,
+            max_file_bytes: 8 * 1024 * 1024,
+            keep_files: 4,
+        }
+    }
+}
+
+/// Point-in-time trace counters (exported in the metrics snapshot).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TraceStats {
+    /// Whether a recorder is attached at all.
+    pub enabled: bool,
+    /// Spans offered to the ring (including dropped ones).
+    pub recorded: u64,
+    /// Spans dropped against a full ring.
+    pub dropped: u64,
+    /// JSONL lines written to disk.
+    pub written: u64,
+    /// File rotations performed.
+    pub rotations: u64,
+}
+
+/// The shared tracing endpoint: producers record spans, one drainer
+/// thread persists them. Dropping the coordinator calls [`shutdown`]
+/// (via the owner) which drains the ring before the thread exits, so
+/// files are complete once the server has stopped.
+///
+/// [`shutdown`]: TraceRecorder::shutdown
+pub struct TraceRecorder {
+    ring: SpanRing,
+    epoch: Instant,
+    recorded: AtomicU64,
+    written: AtomicU64,
+    rotations: AtomicU64,
+    stop: AtomicBool,
+    drainer: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl std::fmt::Debug for TraceRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceRecorder").field("stats", &self.stats()).finish()
+    }
+}
+
+impl TraceRecorder {
+    /// Start a recorder + drainer thread writing under `cfg.dir`.
+    /// `epoch` must be the coordinator's clock epoch so span timestamps
+    /// line up with `queued_us`/`exec_us` in responses.
+    pub fn start(cfg: TraceConfig, epoch: Instant) -> std::io::Result<Arc<Self>> {
+        fs::create_dir_all(&cfg.dir)?;
+        let rec = Arc::new(Self {
+            ring: SpanRing::new(cfg.ring_capacity),
+            epoch,
+            recorded: AtomicU64::new(0),
+            written: AtomicU64::new(0),
+            rotations: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+            drainer: Mutex::new(None),
+        });
+        let rec2 = Arc::clone(&rec);
+        let handle = std::thread::Builder::new()
+            .name("trp-trace".into())
+            .spawn(move || rec2.drain_loop(&cfg))?;
+        *rec.drainer.lock().unwrap() = Some(handle);
+        Ok(rec)
+    }
+
+    /// Microseconds since the coordinator epoch.
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Record one span (lock-free; drops + counts when the ring is full).
+    pub fn record(&self, span: Span) {
+        self.recorded.fetch_add(1, Ordering::Relaxed);
+        self.ring.push(span);
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> TraceStats {
+        TraceStats {
+            enabled: true,
+            recorded: self.recorded.load(Ordering::Relaxed),
+            dropped: self.ring.dropped(),
+            written: self.written.load(Ordering::Relaxed),
+            rotations: self.rotations.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop the drainer after it has flushed every recorded span.
+    /// Idempotent; called by the coordinator's shutdown.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let handle = self.drainer.lock().unwrap().take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+
+    fn drain_loop(&self, cfg: &TraceConfig) {
+        let path = cfg.dir.join("trace.jsonl");
+        let mut out = match open_append(&path) {
+            Ok(o) => o,
+            Err(_) => return,
+        };
+        let mut bytes = out.1;
+        loop {
+            let mut drained = false;
+            while let Some(span) = self.ring.pop() {
+                drained = true;
+                let mut line = span.to_jsonl();
+                line.push('\n');
+                if out.0.write_all(line.as_bytes()).is_ok() {
+                    self.written.fetch_add(1, Ordering::Relaxed);
+                    bytes += line.len() as u64;
+                }
+                if bytes >= cfg.max_file_bytes {
+                    let _ = out.0.flush();
+                    rotate(cfg, &path);
+                    self.rotations.fetch_add(1, Ordering::Relaxed);
+                    match open_append(&path) {
+                        Ok(o) => {
+                            out = o;
+                            bytes = out.1;
+                        }
+                        Err(_) => return,
+                    }
+                }
+            }
+            let _ = out.0.flush();
+            if self.stop.load(Ordering::SeqCst) {
+                // One final sweep: producers stopped before `stop` was
+                // set, so an empty ring here means we are done.
+                if self.ring.pop().is_none() {
+                    return;
+                }
+                continue;
+            }
+            if !drained {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+/// Open (append) the current trace file; returns the writer and its
+/// existing size so rotation accounting survives recorder restarts.
+fn open_append(path: &Path) -> std::io::Result<(BufWriter<File>, u64)> {
+    let file = OpenOptions::new().create(true).append(true).open(path)?;
+    let len = file.metadata().map(|m| m.len()).unwrap_or(0);
+    Ok((BufWriter::new(file), len))
+}
+
+/// Shift `trace.jsonl.{i}` → `.{i+1}` (oldest beyond `keep_files`
+/// falls off), then retire the current file to `.1`.
+fn rotate(cfg: &TraceConfig, path: &Path) {
+    for i in (1..cfg.keep_files.max(1)).rev() {
+        let from = path.with_extension(format!("jsonl.{i}"));
+        let to = path.with_extension(format!("jsonl.{}", i + 1));
+        let _ = fs::rename(&from, &to);
+    }
+    let _ = fs::rename(path, path.with_extension("jsonl.1"));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_roundtrips_in_order() {
+        let r = SpanRing::new(8);
+        for i in 0..5u64 {
+            assert!(r.push(Span { req: Some(i), stage: "queue", ..Span::default() }));
+        }
+        for i in 0..5u64 {
+            assert_eq!(r.pop().unwrap().req, Some(i));
+        }
+        assert!(r.pop().is_none());
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn full_ring_drops_and_counts() {
+        let r = SpanRing::new(4);
+        for _ in 0..4 {
+            assert!(r.push(Span::default()));
+        }
+        assert!(!r.push(Span::default()));
+        assert_eq!(r.dropped(), 1);
+        // Popping frees a slot again.
+        assert!(r.pop().is_some());
+        assert!(r.push(Span::default()));
+    }
+
+    #[test]
+    fn concurrent_producers_lose_nothing_with_room() {
+        let r = Arc::new(SpanRing::new(1 << 12));
+        let mut handles = Vec::new();
+        for t in 0..4u64 {
+            let r = Arc::clone(&r);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500u64 {
+                    r.push(Span { req: Some(t * 1000 + i), stage: "recv", ..Span::default() });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut seen = 0;
+        while r.pop().is_some() {
+            seen += 1;
+        }
+        assert_eq!(seen, 2000);
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn span_jsonl_parses_and_roundtrips_fields() {
+        let span = Span {
+            stage: "index",
+            req: None,
+            flush: Some(7),
+            shard: Some(2),
+            start_us: 123,
+            dur_us: 45,
+        };
+        let line = span.to_jsonl();
+        let v = crate::util::json::Json::parse(&line).expect("valid JSON");
+        assert_eq!(v.get("stage").and_then(|s| s.as_str()), Some("index"));
+        assert!(matches!(v.get("req"), Some(crate::util::json::Json::Null)));
+        assert_eq!(v.get("flush").and_then(|s| s.as_usize()), Some(7));
+        assert_eq!(v.get("shard").and_then(|s| s.as_usize()), Some(2));
+        assert_eq!(v.get("dur_us").and_then(|s| s.as_usize()), Some(45));
+    }
+
+    #[test]
+    fn recorder_writes_and_rotates_jsonl() {
+        let dir = std::env::temp_dir().join(format!("trp_trace_test_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let mut cfg = TraceConfig::new(&dir);
+        cfg.max_file_bytes = 256; // force rotation quickly
+        cfg.keep_files = 2;
+        let rec = TraceRecorder::start(cfg, Instant::now()).unwrap();
+        for i in 0..64u64 {
+            rec.record(Span {
+                stage: "recv",
+                req: Some(i),
+                start_us: rec.now_us(),
+                ..Span::default()
+            });
+        }
+        rec.shutdown();
+        let stats = rec.stats();
+        assert_eq!(stats.recorded, 64);
+        assert_eq!(stats.written, 64);
+        assert!(stats.rotations >= 1, "256-byte cap must rotate");
+        // Every surviving line parses.
+        let mut lines = 0;
+        for name in ["trace.jsonl", "trace.jsonl.1", "trace.jsonl.2"] {
+            let p = dir.join(name);
+            if let Ok(text) = fs::read_to_string(&p) {
+                for line in text.lines() {
+                    crate::util::json::Json::parse(line).expect("line parses");
+                    lines += 1;
+                }
+            }
+        }
+        assert!(lines > 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,395 @@
+//! Observability properties — the tier-1 gates of the tracing + metrics
+//! layer:
+//!
+//! 1. zero perturbation: the full response stream (embeddings, neighbor
+//!    lists, delete acks) is bit-identical with tracing on vs off, for
+//!    `{flat, lsh} × {dense, tt} × S ∈ {1, 2, 4}`;
+//! 2. exact accounting: multi-connection pipelined TCP traffic produces
+//!    exact global and per-signature counter totals in the `metrics`
+//!    wire op's snapshot;
+//! 3. isolation: signatures never leak counts into each other's entries;
+//! 4. histogram consistency: per-stage histograms are internally
+//!    consistent (bucket mass equals the count, p50 ≤ p99), and error
+//!    replies record end-to-end latency too;
+//! 5. coverage: a traced serve session writes parseable span JSONL in
+//!    which every required pipeline stage appears.
+
+use std::sync::Arc;
+use tensorized_rp::coordinator::{
+    Coordinator, CoordinatorConfig, NetClient, NetServer, Payload, ProjectRequest, RequestOp,
+};
+use tensorized_rp::index::{BackendKind, LshConfig};
+use tensorized_rp::obs::{TraceConfig, OPTIONAL_STAGES, REQUIRED_STAGES};
+use tensorized_rp::rng::Rng;
+use tensorized_rp::tensor::{AnyTensor, DenseTensor, Format, TtTensor};
+use tensorized_rp::util::json::Json;
+
+const DIMS: [usize; 4] = [3, 3, 3, 3];
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("trp_obs_props_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// One response reduced to exactly-comparable bits: id, embedding bit
+/// patterns, neighbor (id, dist-bits) pairs, delete ack.
+type ExactResponse = (u64, Vec<u64>, Option<Vec<(u64, u64)>>, Option<bool>);
+
+/// Pipelined insert → query → delete → query workload against a fresh
+/// coordinator; the same seeds produce the same inputs and maps on every
+/// call, so two runs may differ only through the serving pipeline itself.
+fn run_workload(
+    backend: BackendKind,
+    fmt: &str,
+    shards: usize,
+    trace: Option<TraceConfig>,
+) -> Vec<ExactResponse> {
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 4,
+            default_k: 12,
+            master_seed: 0xB17,
+            index_backend: backend,
+            lsh: LshConfig { tables: 4, bits: 7, probes: 2 },
+            index_shards: shards,
+            trace,
+            ..Default::default()
+        },
+        None,
+    );
+    let mut rng = Rng::seed_from(0xF00D);
+    let input = |rng: &mut Rng| -> AnyTensor {
+        if fmt == "tt" {
+            AnyTensor::Tt(TtTensor::random_unit(&DIMS, 2, rng))
+        } else {
+            AnyTensor::Dense(DenseTensor::random_unit(&DIMS, rng))
+        }
+    };
+    let mut out: Vec<ExactResponse> = Vec::new();
+    let drain = |rxs: Vec<std::sync::mpsc::Receiver<tensorized_rp::coordinator::Reply>>,
+                     out: &mut Vec<ExactResponse>| {
+        for rx in rxs {
+            let resp = rx.recv().expect("coordinator alive").expect("request ok");
+            out.push((
+                resp.id,
+                resp.embedding.iter().map(|v| v.to_bits()).collect(),
+                resp.neighbors.map(|ns| {
+                    ns.iter().map(|n| (n.id, n.dist.to_bits())).collect()
+                }),
+                resp.removed,
+            ));
+        }
+    };
+    let rxs: Vec<_> = (0..8u64)
+        .map(|i| coord.submit(ProjectRequest::insert(i, input(&mut rng))))
+        .collect();
+    drain(rxs, &mut out);
+    let rxs: Vec<_> = (0..4u64)
+        .map(|i| coord.submit(ProjectRequest::query(100 + i, input(&mut rng), 3)))
+        .collect();
+    drain(rxs, &mut out);
+    let rxs: Vec<_> = [2u64, 5]
+        .iter()
+        .map(|&t| coord.submit(ProjectRequest::delete(200 + t, t, Format::Tt, DIMS.to_vec())))
+        .collect();
+    // Deletes route on the TT signature; for the dense sweep they miss
+    // (removed = false) — still part of the compared stream.
+    drain(rxs, &mut out);
+    let rxs: Vec<_> = (0..2u64)
+        .map(|i| coord.submit(ProjectRequest::query(300 + i, input(&mut rng), 3)))
+        .collect();
+    drain(rxs, &mut out);
+    coord.shutdown();
+    out
+}
+
+#[test]
+fn tracing_is_bit_identical_across_backends_formats_and_shards() {
+    for backend in [BackendKind::Flat, BackendKind::Lsh] {
+        for fmt in ["dense", "tt"] {
+            for shards in [1usize, 2, 4] {
+                let dir = temp_dir(&format!("ident_{backend:?}_{fmt}_{shards}"));
+                let off = run_workload(backend, fmt, shards, None);
+                let on = run_workload(backend, fmt, shards, Some(TraceConfig::new(&dir)));
+                let _ = std::fs::remove_dir_all(&dir);
+                assert_eq!(off.len(), on.len());
+                assert_eq!(
+                    off, on,
+                    "tracing perturbed responses at {backend:?}/{fmt}/S={shards}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn multi_connection_pipelined_traffic_has_exact_counter_totals() {
+    let coord = Arc::new(Coordinator::start(
+        CoordinatorConfig { workers: 4, default_k: 12, master_seed: 0xC0, ..Default::default() },
+        None,
+    ));
+    let server = NetServer::start(Arc::clone(&coord), "127.0.0.1:0").unwrap();
+    let addr = server.addr();
+    let handles: Vec<_> = (0..4u64)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut client = NetClient::connect(addr).unwrap();
+                let mut rng = Rng::seed_from(100 + c);
+                let base = c * 1000;
+                let dims = DIMS.to_vec();
+                for i in 0..10 {
+                    let x = TtTensor::random_unit(&DIMS, 2, &mut rng);
+                    client.send(&ProjectRequest::insert(base + i, AnyTensor::Tt(x))).unwrap();
+                }
+                for i in 0..5 {
+                    let x = TtTensor::random_unit(&DIMS, 2, &mut rng);
+                    client
+                        .send(&ProjectRequest::query(base + 100 + i, AnyTensor::Tt(x), 3))
+                        .unwrap();
+                }
+                for t in [base, base + 1] {
+                    client
+                        .send(&ProjectRequest::delete(500 + t, t, Format::Tt, dims.clone()))
+                        .unwrap();
+                }
+                for i in 0..3 {
+                    let x = TtTensor::random_unit(&DIMS, 2, &mut rng);
+                    client.send(&ProjectRequest::new(base + 300 + i, AnyTensor::Tt(x))).unwrap();
+                }
+                for _ in 0..20 {
+                    let resp = client.recv().unwrap();
+                    assert!(resp.error.is_none(), "pipelined request failed: {resp:?}");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    // 4 connections × (10 insert + 5 query + 2 delete + 3 project) = 80.
+    let mut client = NetClient::connect(addr).unwrap();
+    let resp = client.roundtrip(&ProjectRequest::metrics(9999, false)).unwrap();
+    assert!(resp.error.is_none());
+    let snap = resp.metrics.expect("metrics snapshot over the wire");
+    assert_eq!(snap.global.submitted, 81, "80 traffic requests + this metrics op");
+    assert_eq!(snap.global.completed, 80, "snapshot precedes the op counting itself");
+    assert_eq!(snap.global.failed, 0);
+    assert_eq!(snap.global.index_inserts, 40);
+    assert_eq!(snap.global.index_queries, 20);
+    assert_eq!(snap.global.index_deletes, 8);
+    assert_eq!(snap.signatures.len(), 1, "one TT signature served everything");
+    let sig = &snap.signatures[0];
+    assert_eq!(sig.signature, "tt-r5/3x3x3x3/k12");
+    assert_eq!(sig.requests, 80);
+    assert_eq!(sig.inserts, 40);
+    assert_eq!(sig.queries, 20);
+    assert_eq!(sig.deletes, 8);
+    assert_eq!(sig.projects, 12);
+    assert_eq!(sig.errors, 0);
+    assert!(sig.flushes >= 1);
+    server.shutdown();
+}
+
+#[test]
+fn signatures_do_not_leak_counts_into_each_other() {
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers: 2, default_k: 8, master_seed: 7, ..Default::default() },
+        None,
+    );
+    let mut rng = Rng::seed_from(3);
+    for i in 0..5u64 {
+        let x = TtTensor::random_unit(&DIMS, 2, &mut rng);
+        coord.project_blocking(ProjectRequest::insert(i, AnyTensor::Tt(x))).unwrap();
+    }
+    for i in 0..3u64 {
+        let x = DenseTensor::random_unit(&[4, 4], &mut rng);
+        coord.project_blocking(ProjectRequest::new(100 + i, AnyTensor::Dense(x))).unwrap();
+    }
+    for i in 0..2u64 {
+        let x = TtTensor::random_unit(&[2, 2, 2], 2, &mut rng);
+        coord.project_blocking(ProjectRequest::query(200 + i, AnyTensor::Tt(x), 1)).unwrap();
+    }
+    let snap =
+        coord.project_blocking(ProjectRequest::metrics(999, false)).unwrap().metrics.unwrap();
+    assert_eq!(snap.signatures.len(), 3);
+    let get = |label: &str| {
+        snap.signatures
+            .iter()
+            .find(|s| s.signature == label)
+            .unwrap_or_else(|| panic!("missing signature {label}"))
+    };
+    let a = get("tt-r5/3x3x3x3/k8");
+    assert_eq!((a.requests, a.inserts, a.projects, a.queries), (5, 5, 0, 0));
+    let b = get("gaussian/4x4/k8");
+    assert_eq!((b.requests, b.projects, b.inserts, b.queries), (3, 3, 0, 0));
+    let c = get("tt-r5/2x2x2/k8");
+    assert_eq!((c.requests, c.queries, c.inserts, c.projects), (2, 2, 0, 0));
+    coord.shutdown();
+}
+
+#[test]
+fn stage_histograms_are_internally_consistent() {
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers: 2, default_k: 8, master_seed: 9, ..Default::default() },
+        None,
+    );
+    let mut rng = Rng::seed_from(21);
+    let rxs: Vec<_> = (0..20u64)
+        .map(|i| {
+            let x = TtTensor::random_unit(&DIMS, 2, &mut rng);
+            coord.submit(ProjectRequest::insert(i, AnyTensor::Tt(x)))
+        })
+        .collect();
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    let snap =
+        coord.project_blocking(ProjectRequest::metrics(99, false)).unwrap().metrics.unwrap();
+    assert!(snap.global.p50_latency_us >= 1, "e2e histogram must have observations");
+    assert!(snap.global.p50_latency_us <= snap.global.p99_latency_us);
+    let sig = &snap.signatures[0];
+    assert!(!sig.stages.is_empty());
+    for st in &sig.stages {
+        assert!(st.count > 0, "capture omits empty stages, got {st:?}");
+        assert_eq!(
+            st.buckets.iter().sum::<u64>(),
+            st.count,
+            "bucket mass must equal the observation count in {}",
+            st.stage
+        );
+        assert!(st.p50_us <= st.p99_us, "quantiles out of order in {}", st.stage);
+        assert!(st.mean_us >= 0.0);
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn error_replies_record_end_to_end_latency() {
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers: 2, default_k: 8, master_seed: 1, ..Default::default() },
+        None,
+    );
+    // A `project` op with a signature-only payload is rejected before it
+    // ever reaches a worker — exactly the path that used to skip the
+    // e2e histogram.
+    let req = ProjectRequest {
+        id: 1,
+        op: RequestOp::Project,
+        payload: Payload::Signature { format: Format::Tt, dims: DIMS.to_vec() },
+    };
+    assert!(coord.project_blocking(req).is_err());
+    let snap =
+        coord.project_blocking(ProjectRequest::metrics(2, false)).unwrap().metrics.unwrap();
+    assert_eq!(snap.global.failed, 1);
+    assert!(
+        snap.global.p50_latency_us >= 1,
+        "failed reply must land in the e2e latency histogram"
+    );
+    coord.shutdown();
+}
+
+#[test]
+fn metrics_reset_over_the_wire_clears_high_waters_only() {
+    let coord = Arc::new(Coordinator::start(
+        CoordinatorConfig {
+            workers: 4,
+            default_k: 8,
+            master_seed: 2,
+            index_shards: 2,
+            ..Default::default()
+        },
+        None,
+    ));
+    let server = NetServer::start(Arc::clone(&coord), "127.0.0.1:0").unwrap();
+    let mut client = NetClient::connect(server.addr()).unwrap();
+    let mut rng = Rng::seed_from(5);
+    for i in 0..8u64 {
+        let x = TtTensor::random_unit(&DIMS, 2, &mut rng);
+        let resp = client.roundtrip(&ProjectRequest::insert(i, AnyTensor::Tt(x))).unwrap();
+        assert!(resp.error.is_none());
+    }
+    let snap = client
+        .roundtrip(&ProjectRequest::metrics(100, true))
+        .unwrap()
+        .metrics
+        .expect("snapshot");
+    assert!(snap.global.index_shard_parallel >= 1);
+    assert_eq!(snap.global.index_inserts, 8);
+    assert!(!snap.trace.enabled, "no trace configured on this server");
+    let snap2 = client
+        .roundtrip(&ProjectRequest::metrics(101, false))
+        .unwrap()
+        .metrics
+        .expect("snapshot");
+    assert_eq!(snap2.global.index_shard_parallel, 0, "reset cleared the high-water");
+    assert_eq!(snap2.global.index_shard_max_skew, 0);
+    assert_eq!(snap2.global.index_inserts, 8, "counters survive a reset");
+    assert_eq!(snap2.signatures[0].inserts, 8);
+    server.shutdown();
+}
+
+#[test]
+fn traced_serve_session_writes_parseable_spans_covering_every_stage() {
+    let dir = temp_dir("coverage");
+    let coord = Arc::new(Coordinator::start(
+        CoordinatorConfig {
+            workers: 2,
+            default_k: 8,
+            master_seed: 4,
+            trace: Some(TraceConfig::new(&dir)),
+            ..Default::default()
+        },
+        None,
+    ));
+    let server = NetServer::start(Arc::clone(&coord), "127.0.0.1:0").unwrap();
+    let mut client = NetClient::connect(server.addr()).unwrap();
+    let mut rng = Rng::seed_from(11);
+    for i in 0..12u64 {
+        let x = TtTensor::random_unit(&DIMS, 2, &mut rng);
+        client.send(&ProjectRequest::insert(i, AnyTensor::Tt(x))).unwrap();
+    }
+    for _ in 0..12 {
+        assert!(client.recv().unwrap().error.is_none());
+    }
+    let x = TtTensor::random_unit(&DIMS, 2, &mut rng);
+    let resp = client.roundtrip(&ProjectRequest::query(100, AnyTensor::Tt(x), 3)).unwrap();
+    assert!(resp.error.is_none());
+    drop(client);
+    server.shutdown();
+    // Last Arc: drop joins the dispatcher and drains the span ring to
+    // disk before the recorder thread exits.
+    drop(coord);
+    let mut stages = std::collections::BTreeSet::new();
+    let mut lines = 0u64;
+    for entry in std::fs::read_dir(&dir).expect("trace dir exists") {
+        let path = entry.unwrap().path();
+        let text = std::fs::read_to_string(&path).unwrap();
+        for line in text.lines() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let v = Json::parse(line)
+                .unwrap_or_else(|e| panic!("unparseable span line {line:?}: {e}"));
+            let stage = v
+                .get("stage")
+                .and_then(Json::as_str)
+                .unwrap_or_else(|| panic!("span without stage: {line:?}"))
+                .to_string();
+            assert!(
+                REQUIRED_STAGES.contains(&stage.as_str())
+                    || OPTIONAL_STAGES.contains(&stage.as_str()),
+                "unknown stage tag {stage:?}"
+            );
+            assert!(v.get("start_us").and_then(Json::as_usize).is_some(), "bad start_us");
+            assert!(v.get("dur_us").and_then(Json::as_usize).is_some(), "bad dur_us");
+            stages.insert(stage);
+            lines += 1;
+        }
+    }
+    assert!(lines > 0, "traced session must write spans");
+    for s in REQUIRED_STAGES {
+        assert!(stages.contains(s), "required stage {s:?} missing from {stages:?}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

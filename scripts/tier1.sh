@@ -57,6 +57,16 @@ if [ "$fail" -eq 0 ]; then
   cargo test -q --test gemm_kernel_props || fail=1
 fi
 
+# Observability is gated on zero perturbation: the response stream must
+# be bit-identical with tracing on vs off across backends, formats and
+# shard counts, counters must total exactly under pipelined traffic, and
+# a traced session's span JSONL must cover every pipeline stage. Name
+# the suite so a tracing regression is visible at a glance.
+if [ "$fail" -eq 0 ]; then
+  echo "== tier1: tracing zero-perturbation (obs_props) =="
+  cargo test -q --test obs_props || fail=1
+fi
+
 advisory() {
   local label="$1"
   shift
