@@ -62,7 +62,7 @@ fn main() {
         let best = rows
             .iter()
             .filter(|r| r.k == kmax)
-            .min_by(|a, b| a.mean.partial_cmp(&b.mean).unwrap())
+            .min_by(|a, b| a.mean.total_cmp(&b.mean))
             .unwrap();
         println!("[fig1:{}] best at k={kmax}: {} ({:.4})", case.name(), best.map, best.mean);
     }

@@ -41,7 +41,7 @@ fn main() {
         let fastest = rows
             .iter()
             .filter(|r| r.input_format == panel && r.k == kmax)
-            .min_by(|a, b| a.secs.partial_cmp(&b.secs).unwrap())
+            .min_by(|a, b| a.secs.total_cmp(&b.secs))
             .unwrap();
         println!(
             "[fig2:{panel}-input] fastest at k={kmax}: {} ({:.3e}s)",

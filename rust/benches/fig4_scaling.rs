@@ -42,7 +42,7 @@ fn main() {
         if let Some(fastest) = rows
             .iter()
             .filter(|r| r.input_format == panel && r.order == nmax)
-            .min_by(|a, b| a.secs.partial_cmp(&b.secs).unwrap())
+            .min_by(|a, b| a.secs.total_cmp(&b.secs))
         {
             println!(
                 "[fig4:{panel}-input] fastest at N={nmax}: {} ({:.3e}s)",

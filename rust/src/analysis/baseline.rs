@@ -1,0 +1,149 @@
+//! The committed lint baseline: grandfathered findings that are known,
+//! tracked, and excluded from the gate without a per-site waiver.
+//!
+//! Each entry is `rule<TAB>path<TAB>hash`, where `hash` is the FNV-1a
+//! digest of the flagged line's *stripped, trimmed* code — so the entry
+//! survives reformatting and line drift but dies (goes stale) the
+//! moment the offending code changes, forcing a fresh decision. Every
+//! entry is consumed at most once per run; leftovers are reported as
+//! stale so the file cannot silently rot.
+
+use std::path::Path;
+
+/// FNV-1a over the bytes of `s` — stable, dependency-free, and plenty
+/// for distinguishing source lines.
+pub fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+#[derive(Debug, Clone, PartialEq)]
+struct Entry {
+    rule: String,
+    path: String,
+    hash: u64,
+    used: bool,
+}
+
+/// A parsed baseline file plus per-run consumption state.
+#[derive(Debug, Clone, Default)]
+pub struct Baseline {
+    entries: Vec<Entry>,
+}
+
+impl Baseline {
+    /// Parse baseline text. Blank lines and `#` comments are ignored.
+    pub fn parse(text: &str) -> Result<Baseline, String> {
+        let mut entries = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut parts = line.split('\t');
+            let (rule, path, hash) = match (parts.next(), parts.next(), parts.next()) {
+                (Some(r), Some(p), Some(h)) => (r, p, h),
+                _ => return Err(format!("baseline line {}: want rule<TAB>path<TAB>hash", i + 1)),
+            };
+            let hash = u64::from_str_radix(hash, 16)
+                .map_err(|_| format!("baseline line {}: bad hash {hash:?}", i + 1))?;
+            entries.push(Entry {
+                rule: rule.to_string(),
+                path: path.to_string(),
+                hash,
+                used: false,
+            });
+        }
+        Ok(Baseline { entries })
+    }
+
+    /// Load from `path`; a missing file is an empty baseline.
+    pub fn load(path: &Path) -> Result<Baseline, String> {
+        match std::fs::read_to_string(path) {
+            Ok(text) => Self::parse(&text),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(Baseline::default()),
+            Err(e) => Err(format!("read {}: {e}", path.display())),
+        }
+    }
+
+    /// Consume one matching entry, if any. Each entry absorbs a single
+    /// finding per run, so duplicating a line past its baselined count
+    /// still fails the gate.
+    pub fn consume(&mut self, rule: &str, path: &str, line_code: &str) -> bool {
+        let h = fnv1a(line_code.trim());
+        for e in &mut self.entries {
+            if !e.used && e.rule == rule && e.path == path && e.hash == h {
+                e.used = true;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Entries no run finding matched — dead weight to prune.
+    pub fn stale(&self) -> usize {
+        self.entries.iter().filter(|e| !e.used).count()
+    }
+
+    /// Serialize findings as baseline text (sorted, deduplicated).
+    pub fn render(findings: &[(String, String, String)]) -> String {
+        let mut rows: Vec<String> = findings
+            .iter()
+            .map(|(rule, path, code)| format!("{rule}\t{path}\t{:016x}", fnv1a(code.trim())))
+            .collect();
+        rows.sort();
+        rows.dedup();
+        let mut out = String::from(
+            "# trp lint baseline — grandfathered findings (rule<TAB>path<TAB>fnv1a of the\n\
+             # stripped line). Regenerate with `trp lint --write-baseline`; keep it empty.\n",
+        );
+        for r in rows {
+            out.push_str(&r);
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_consume_and_stale() {
+        let code = "let x = y.partial_cmp(z);";
+        let text = format!(
+            "# comment\n\nfloat-total-order\tsrc/a.rs\t{:016x}\nno-fma\tsrc/b.rs\t{:016x}\n",
+            fnv1a(code),
+            fnv1a("a.mul_add(b, c)")
+        );
+        let mut b = Baseline::parse(&text).unwrap();
+        assert!(b.consume("float-total-order", "src/a.rs", &format!("  {code}  ")));
+        // Same entry does not absorb a second finding.
+        assert!(!b.consume("float-total-order", "src/a.rs", code));
+        assert!(!b.consume("no-fma", "src/b.rs", "different code"));
+        assert_eq!(b.stale(), 1);
+    }
+
+    #[test]
+    fn render_roundtrips_through_parse() {
+        let findings = vec![
+            ("no-fma".to_string(), "src/b.rs".to_string(), "a.mul_add(b, c)".to_string()),
+            ("no-fma".to_string(), "src/b.rs".to_string(), "a.mul_add(b, c)".to_string()),
+        ];
+        let text = Baseline::render(&findings);
+        let mut b = Baseline::parse(&text).unwrap();
+        assert!(b.consume("no-fma", "src/b.rs", "a.mul_add(b, c)"));
+        assert_eq!(b.stale(), 0);
+    }
+
+    #[test]
+    fn bad_lines_are_rejected() {
+        assert!(Baseline::parse("just-one-field\n").is_err());
+        assert!(Baseline::parse("rule\tpath\tnothex\n").is_err());
+    }
+}

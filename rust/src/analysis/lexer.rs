@@ -1,0 +1,277 @@
+//! Comment- and literal-stripping lexer over Rust source text.
+//!
+//! The rule engine must never match on comment text or string contents:
+//! a rule id mentioned in prose, or `"panic!"` inside a log message, is
+//! not a violation. Each source line is therefore split into the *code*
+//! that survives stripping and the *comment* text found on it. Literal
+//! bodies are blanked but their delimiters stay (`"a,b"` becomes `""`)
+//! so surrounding expressions still read as expressions; raw strings
+//! collapse to `""`; lifetimes are distinguished from char literals so
+//! `&'a str` survives intact. Block comments — including nested ones —
+//! and multi-line string literals carry their state across lines.
+
+/// One source line, split into stripped code and comment text.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StrippedLine {
+    /// Code with comments removed and literal bodies blanked.
+    pub code: String,
+    /// Concatenated text of every comment on the line.
+    pub comment: String,
+}
+
+enum Mode {
+    Code,
+    LineComment,
+    /// Nesting depth (Rust block comments nest).
+    BlockComment(u32),
+    Str,
+    /// Number of `#`s in the raw-string fence.
+    RawStr(u32),
+}
+
+/// Does the raw-string opener `r#*"` (or `br#*"`) start at `i`?
+/// Returns `(hashes, chars_to_skip)` covering the opening quote.
+fn raw_open(b: &[char], i: usize) -> Option<(u32, usize)> {
+    let mut j = i;
+    if b.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if b.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while b.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) == Some(&'"') {
+        Some((hashes, j + 1 - i))
+    } else {
+        None
+    }
+}
+
+fn ends_in_ident(code: &str) -> bool {
+    code.chars().next_back().is_some_and(|c| c.is_alphanumeric() || c == '_')
+}
+
+/// Strip `source` into per-line code/comment views (1-based indexing is
+/// the caller's job: `lines[n - 1]` is source line `n`).
+pub fn strip(source: &str) -> Vec<StrippedLine> {
+    let b: Vec<char> = source.chars().collect();
+    let mut out = Vec::new();
+    let mut line = StrippedLine::default();
+    let mut mode = Mode::Code;
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        if c == '\n' {
+            if matches!(mode, Mode::LineComment) {
+                mode = Mode::Code;
+            }
+            out.push(std::mem::take(&mut line));
+            i += 1;
+            continue;
+        }
+        match mode {
+            Mode::LineComment => {
+                line.comment.push(c);
+                i += 1;
+            }
+            Mode::BlockComment(depth) => {
+                if c == '*' && b.get(i + 1) == Some(&'/') {
+                    // Inner closers stay visible in the comment text;
+                    // only the outermost one ends the comment.
+                    if depth <= 1 {
+                        mode = Mode::Code;
+                    } else {
+                        line.comment.push_str("*/");
+                        mode = Mode::BlockComment(depth - 1);
+                    }
+                    i += 2;
+                } else if c == '/' && b.get(i + 1) == Some(&'*') {
+                    line.comment.push_str("/*");
+                    mode = Mode::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    line.comment.push(c);
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if c == '\\' {
+                    // Skip the escaped char; a trailing `\` before the
+                    // newline is Rust's line continuation.
+                    if b.get(i + 1) == Some(&'\n') {
+                        out.push(std::mem::take(&mut line));
+                    }
+                    i += 2;
+                } else if c == '"' {
+                    line.code.push('"');
+                    mode = Mode::Code;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::RawStr(hashes) => {
+                if c == '"' {
+                    let mut n = 0u32;
+                    while n < hashes && b.get(i + 1 + n as usize) == Some(&'#') {
+                        n += 1;
+                    }
+                    if n == hashes {
+                        line.code.push('"');
+                        mode = Mode::Code;
+                        i += 1 + hashes as usize;
+                    } else {
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+            Mode::Code => {
+                let next = b.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    mode = Mode::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    mode = Mode::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    line.code.push('"');
+                    mode = Mode::Str;
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !ends_in_ident(&line.code) {
+                    if let Some((hashes, skip)) = raw_open(&b, i) {
+                        line.code.push('"');
+                        mode = Mode::RawStr(hashes);
+                        i += skip;
+                    } else if c == 'b' && next == Some('"') {
+                        line.code.push('"');
+                        mode = Mode::Str;
+                        i += 2;
+                    } else {
+                        line.code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // Lifetime or char literal? After the quote: `\` means
+                    // an escaped char literal; `x'` means a plain one;
+                    // anything else is a lifetime (`&'a`, `'static`).
+                    match (next, b.get(i + 2).copied()) {
+                        (Some('\\'), third) => {
+                            // `'\n'`, `'\''`, `'\u{1F600}'`: find the close
+                            // quote past the escape.
+                            let mut j = i + 3;
+                            if third == Some('u') && b.get(i + 3) == Some(&'{') {
+                                while j < b.len() && b[j] != '}' {
+                                    j += 1;
+                                }
+                                j += 1;
+                            }
+                            if b.get(j) == Some(&'\'') {
+                                line.code.push_str("''");
+                                i = j + 1;
+                            } else {
+                                line.code.push('\'');
+                                i += 1;
+                            }
+                        }
+                        (Some(nc), Some('\'')) if nc != '\'' && nc != '\n' => {
+                            line.code.push_str("''");
+                            i += 3;
+                        }
+                        _ => {
+                            line.code.push('\'');
+                            i += 1;
+                        }
+                    }
+                } else {
+                    line.code.push(c);
+                    i += 1;
+                }
+            }
+        }
+    }
+    if !line.code.is_empty() || !line.comment.is_empty() {
+        out.push(line);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn code_of(src: &str) -> Vec<String> {
+        strip(src).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn line_comments_move_to_comment_channel() {
+        let lines = strip("let x = 1; // trailing note\n// full-line note\n");
+        assert_eq!(lines[0].code, "let x = 1; ");
+        assert_eq!(lines[0].comment, " trailing note");
+        assert_eq!(lines[1].code, "");
+        assert_eq!(lines[1].comment, " full-line note");
+    }
+
+    #[test]
+    fn string_bodies_are_blanked() {
+        let c = code_of("let s = \"panic!(boom) // not code\";\n");
+        assert_eq!(c[0], "let s = \"\";");
+    }
+
+    #[test]
+    fn escaped_quotes_stay_inside_the_string() {
+        let c = code_of(r#"let s = "a\"b"; let t = 2;"#);
+        assert_eq!(c[0], r#"let s = ""; let t = 2;"#);
+    }
+
+    #[test]
+    fn raw_strings_collapse() {
+        let c = code_of("let s = r#\"has \"quotes\" and // slashes\"#; done();\n");
+        assert_eq!(c[0], "let s = \"\"; done();");
+    }
+
+    #[test]
+    fn nested_block_comments_end_correctly() {
+        let lines = strip("a /* x /* y */ z */ b\n");
+        assert_eq!(lines[0].code, "a  b");
+        assert_eq!(lines[0].comment, " x /* y */ z ");
+    }
+
+    #[test]
+    fn block_comment_spans_lines() {
+        let lines = strip("before /* one\ntwo */ after\n");
+        assert_eq!(lines[0].code, "before ");
+        assert_eq!(lines[1].code, " after");
+        assert_eq!(lines[1].comment, "two ");
+    }
+
+    #[test]
+    fn lifetimes_survive_char_literals_blank() {
+        let c = code_of("fn f<'a>(s: &'a str) -> char { 'x' }\nlet n = '\\n'; let q = '\\'';\n");
+        assert_eq!(c[0], "fn f<'a>(s: &'a str) -> char { '' }");
+        assert_eq!(c[1], "let n = ''; let q = '';");
+    }
+
+    #[test]
+    fn multiline_string_keeps_line_count() {
+        let lines = strip("let s = \"one\ntwo\nthree\"; end();\n");
+        assert_eq!(lines.len(), 3);
+        assert_eq!(lines[0].code, "let s = \"");
+        assert_eq!(lines[1].code, "");
+        assert_eq!(lines[2].code, "\"; end();");
+    }
+
+    #[test]
+    fn identifier_ending_in_r_does_not_open_raw_string() {
+        // `for` ends in `r`; the quote after it is a plain string.
+        let c = code_of("for x in var\"\".chars() {}\n");
+        assert_eq!(c[0], "for x in var\"\".chars() {}");
+    }
+}

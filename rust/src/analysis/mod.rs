@@ -1,0 +1,470 @@
+//! `trp lint` — the crate's own determinism & concurrency static
+//! analysis, run over its own source tree and enforced as a tier-1
+//! gate.
+//!
+//! The serving contract this repo makes (bit-identical replies for an
+//! identical request stream, regardless of shard count, worker
+//! interleaving, or tracing) rests on a handful of source-level
+//! invariants that the compiler does not check: floats are ordered with
+//! a total order, the numeric core never fuses multiply-adds, the
+//! serving path never panics, hash-map iteration order never reaches an
+//! output, `unsafe` stays inside three audited modules with written
+//! justifications, and `Ordering::Relaxed` never carries a cross-thread
+//! handoff. This module checks all six textually:
+//!
+//! * [`lexer`] strips comments and literal bodies so rules match only
+//!   real code;
+//! * [`rules`] holds the six-rule catalog with its scoping tables;
+//! * [`baseline`] grandfathers known findings by content hash;
+//! * this file runs the engine: source walk, waiver resolution, report
+//!   assembly, text/JSON rendering.
+//!
+//! Intentional exceptions are waived **at the site** with a
+//! `lint:allow` comment naming the rule and a mandatory reason — e.g.
+//! `// lint:allow(unordered-iteration): feeds an order-insensitive
+//! reduction.` — on the offending line or the comment line(s) directly
+//! above it; `lint:allow-file` scopes the waiver to a module audited as
+//! a unit. `trp lint` exits nonzero on any unwaived, unbaselined
+//! finding, which is exactly what the `lint_clean` tier-1 gate asserts.
+
+pub mod baseline;
+pub mod lexer;
+pub mod rules;
+
+use crate::util::json::{obj, Json};
+use baseline::Baseline;
+use lexer::StrippedLine;
+use std::path::{Path, PathBuf};
+
+pub use rules::RULE_IDS;
+
+/// One finding: a rule tripped at a source line.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    /// Rule id (one of [`rules::RULE_IDS`], or `waiver-syntax`).
+    pub rule: &'static str,
+    /// Crate-relative path with forward slashes.
+    pub path: String,
+    /// 1-based source line.
+    pub line: usize,
+    /// Human-readable explanation.
+    pub message: String,
+}
+
+impl Diagnostic {
+    /// `path:line rule-id message` — the stable text form promised by
+    /// the `trp lint` CLI contract.
+    pub fn render(&self) -> String {
+        format!("{}:{} {} {}", self.path, self.line, self.rule, self.message)
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("rule", Json::Str(self.rule.to_string())),
+            ("path", Json::Str(self.path.clone())),
+            ("line", Json::Num(self.line as f64)),
+            ("message", Json::Str(self.message.clone())),
+        ])
+    }
+}
+
+/// A parsed `lint:allow` comment.
+#[derive(Debug, Clone)]
+struct Waiver {
+    rules: Vec<String>,
+    reason: String,
+    file_wide: bool,
+    /// Line the waiver comment sits on (1-based).
+    at: usize,
+    /// Code line the waiver covers (resolved; file-wide waivers cover all).
+    target: usize,
+}
+
+/// Scan one line's comment text for waivers. Malformed waivers become
+/// `waiver-syntax` diagnostics — they can NOT be waived or baselined.
+fn parse_waivers(
+    comment: &str,
+    path: &str,
+    lineno: usize,
+    out: &mut Vec<Waiver>,
+    errs: &mut Vec<Diagnostic>,
+) {
+    let mut rest = comment;
+    let mut base = 0usize;
+    while let Some(pos) = rest.find("lint:allow") {
+        let after = &rest[pos + "lint:allow".len()..];
+        let (file_wide, after) = match after.strip_prefix("-file") {
+            Some(a) => (true, a),
+            None => (false, after),
+        };
+        let bad = |errs: &mut Vec<Diagnostic>, msg: &str| {
+            errs.push(Diagnostic {
+                rule: "waiver-syntax",
+                path: path.to_string(),
+                line: lineno,
+                message: msg.to_string(),
+            });
+        };
+        let Some(after) = after.strip_prefix('(') else {
+            // A prose mention of the grammar (no rule list follows), not
+            // a waiver attempt. Skipping is fail-safe: the finding it
+            // failed to waive stays visible.
+            base += pos + 1;
+            rest = &comment[base..];
+            continue;
+        };
+        let Some(close) = after.find(')') else {
+            bad(errs, "malformed waiver: unclosed rule list");
+            return;
+        };
+        let rule_list = &after[..close];
+        let tail = &after[close + 1..];
+        let Some(tail) = tail.trim_start().strip_prefix(':') else {
+            bad(errs, "malformed waiver: missing `: <reason>` after the rule list");
+            return;
+        };
+        // The reason runs to the end of this comment line.
+        let reason_end = tail.find('\n').unwrap_or(tail.len());
+        let reason = tail[..reason_end].trim().to_string();
+        let mut rules_named = Vec::new();
+        for r in rule_list.split(',') {
+            let r = r.trim();
+            if rules::RULE_IDS.contains(&r) {
+                rules_named.push(r.to_string());
+            } else {
+                bad(errs, &format!("waiver names unknown rule {r:?}"));
+            }
+        }
+        if reason.is_empty() {
+            bad(errs, "waiver without a reason: every exception must say why");
+        } else if !rules_named.is_empty() {
+            out.push(Waiver {
+                rules: rules_named,
+                reason,
+                file_wide,
+                at: lineno,
+                target: lineno, // resolved by `resolve_waiver_targets`
+            });
+        }
+        base += pos + 1;
+        rest = &comment[base..];
+    }
+}
+
+/// A waiver on a code-bearing line covers that line; a waiver on a
+/// comment-only line covers the next code-bearing line (so a waiver
+/// comment may span several lines above its target).
+fn resolve_waiver_targets(waivers: &mut [Waiver], lines: &[StrippedLine]) {
+    for w in waivers.iter_mut() {
+        if w.file_wide {
+            continue;
+        }
+        let own = &lines[w.at - 1];
+        if !own.code.trim().is_empty() {
+            w.target = w.at;
+            continue;
+        }
+        w.target = lines
+            .iter()
+            .enumerate()
+            .skip(w.at)
+            .take(10)
+            .find(|(_, l)| !l.code.trim().is_empty())
+            .map(|(i, _)| i + 1)
+            .unwrap_or(w.at);
+    }
+}
+
+/// The outcome of linting a tree.
+#[derive(Debug, Clone, Default)]
+pub struct LintReport {
+    /// Unwaived, unbaselined findings — these fail the gate.
+    pub violations: Vec<Diagnostic>,
+    /// Findings covered by a site or file waiver, with the written reason.
+    pub waived: Vec<(Diagnostic, String)>,
+    /// Findings absorbed by the committed baseline.
+    pub baselined: Vec<Diagnostic>,
+    /// Baseline entries nothing matched (prune them).
+    pub stale_baseline: usize,
+    /// Files scanned.
+    pub files: usize,
+}
+
+impl LintReport {
+    /// Stable text rendering: one `path:line rule message` per finding
+    /// (sorted by path, line, rule), then a one-line summary.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        for d in &self.violations {
+            out.push_str(&d.render());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "lint: {} violations, {} waived, {} baselined ({} stale), {} files\n",
+            self.violations.len(),
+            self.waived.len(),
+            self.baselined.len(),
+            self.stale_baseline,
+            self.files
+        ));
+        out
+    }
+
+    /// JSON rendering for CI artifacts.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("violations", Json::Arr(self.violations.iter().map(|d| d.to_json()).collect())),
+            (
+                "waived",
+                Json::Arr(
+                    self.waived
+                        .iter()
+                        .map(|(d, reason)| match d.to_json() {
+                            Json::Obj(mut m) => {
+                                m.insert("reason".to_string(), Json::Str(reason.clone()));
+                                Json::Obj(m)
+                            }
+                            other => other,
+                        })
+                        .collect(),
+                ),
+            ),
+            ("baselined", Json::Arr(self.baselined.iter().map(|d| d.to_json()).collect())),
+            (
+                "summary",
+                obj(vec![
+                    ("violations", Json::Num(self.violations.len() as f64)),
+                    ("waived", Json::Num(self.waived.len() as f64)),
+                    ("baselined", Json::Num(self.baselined.len() as f64)),
+                    ("stale_baseline", Json::Num(self.stale_baseline as f64)),
+                    ("files", Json::Num(self.files as f64)),
+                ]),
+            ),
+        ])
+    }
+}
+
+fn sort_diags(v: &mut [Diagnostic]) {
+    v.sort_by(|a, b| {
+        a.path.cmp(&b.path).then(a.line.cmp(&b.line)).then(a.rule.cmp(b.rule))
+    });
+}
+
+/// Recursively collect `.rs` files under `dir`, as crate-relative
+/// forward-slash paths, sorted for a stable report.
+fn collect_sources(root: &Path) -> Result<Vec<(String, PathBuf)>, String> {
+    let mut out = Vec::new();
+    for top in ["src", "tests", "benches", "examples"] {
+        let dir = root.join(top);
+        if dir.is_dir() {
+            walk(&dir, top, &mut out)?;
+        }
+    }
+    out.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(out)
+}
+
+fn walk(dir: &Path, rel: &str, out: &mut Vec<(String, PathBuf)>) -> Result<(), String> {
+    let rd = std::fs::read_dir(dir).map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    let mut entries: Vec<_> = rd
+        .collect::<Result<Vec<_>, _>>()
+        .map_err(|e| format!("read_dir {}: {e}", dir.display()))?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let name = e.file_name().to_string_lossy().into_owned();
+        let path = e.path();
+        let rel_child = format!("{rel}/{name}");
+        if path.is_dir() {
+            if name != "target" && name != "vendor" {
+                walk(&path, &rel_child, out)?;
+            }
+        } else if name.ends_with(".rs") {
+            out.push((rel_child, path));
+        }
+    }
+    Ok(())
+}
+
+/// Lint one file's text (exposed for fixture tests).
+pub fn lint_source(path: &str, source: &str, baseline: &mut Baseline) -> LintReport {
+    let lines = lexer::strip(source);
+    let mut waivers = Vec::new();
+    let mut waiver_errs = Vec::new();
+    for (i, l) in lines.iter().enumerate() {
+        if l.comment.contains("lint:allow") {
+            parse_waivers(&l.comment, path, i + 1, &mut waivers, &mut waiver_errs);
+        }
+    }
+    resolve_waiver_targets(&mut waivers, &lines);
+
+    let mut report = LintReport { files: 1, ..Default::default() };
+    report.violations.extend(waiver_errs);
+    for d in rules::run_rules(path, &lines) {
+        let waiver = waivers.iter().find(|w| {
+            w.rules.iter().any(|r| r == d.rule) && (w.file_wide || w.target == d.line)
+        });
+        if let Some(w) = waiver {
+            report.waived.push((d, w.reason.clone()));
+            continue;
+        }
+        let code = lines.get(d.line - 1).map(|l| l.code.as_str()).unwrap_or("");
+        if baseline.consume(d.rule, d.path.as_str(), code) {
+            report.baselined.push(d);
+        } else {
+            report.violations.push(d);
+        }
+    }
+    report
+}
+
+/// Lint the crate tree rooted at `root` (the directory holding `src/`).
+/// The baseline is consumed across all files; stale entries are counted
+/// at the end.
+pub fn lint_root(root: &Path, mut baseline: Baseline) -> Result<LintReport, String> {
+    let sources = collect_sources(root)?;
+    if sources.is_empty() {
+        return Err(format!("{}: no Rust sources found (is this the crate root?)", root.display()));
+    }
+    let mut report = LintReport::default();
+    for (rel, path) in &sources {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        let file_report = lint_source(rel, &text, &mut baseline);
+        report.violations.extend(file_report.violations);
+        report.waived.extend(file_report.waived);
+        report.baselined.extend(file_report.baselined);
+        report.files += 1;
+    }
+    report.stale_baseline = baseline.stale();
+    sort_diags(&mut report.violations);
+    sort_diags(&mut report.baselined);
+    report.waived.sort_by(|a, b| {
+        a.0.path.cmp(&b.0.path).then(a.0.line.cmp(&b.0.line)).then(a.0.rule.cmp(b.0.rule))
+    });
+    Ok(report)
+}
+
+/// All (rule, path, stripped-code) triples a `--write-baseline` run
+/// should grandfather: the current unwaived findings.
+pub fn baseline_rows(root: &Path) -> Result<Vec<(String, String, String)>, String> {
+    let report = lint_root(root, Baseline::default())?;
+    let mut rows = Vec::new();
+    for d in &report.violations {
+        if d.rule == "waiver-syntax" {
+            continue; // fix these, don't grandfather them
+        }
+        let text = std::fs::read_to_string(root.join(&d.path))
+            .map_err(|e| format!("read {}: {e}", d.path))?;
+        let lines = lexer::strip(&text);
+        let code = lines.get(d.line - 1).map(|l| l.code.clone()).unwrap_or_default();
+        rows.push((d.rule.to_string(), d.path.clone(), code));
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn site_waiver_covers_same_line_and_line_above() {
+        let mut b = Baseline::default();
+        let same = "v.sort_by(|a, b| a.partial_cmp(b).unwrap()); // lint:allow(float-total-order): legacy ordering kept for the fixture.\n";
+        let r = lint_source("src/util/x.rs", same, &mut b);
+        assert!(r.violations.is_empty());
+        assert_eq!(r.waived.len(), 1);
+        assert_eq!(r.waived[0].1, "legacy ordering kept for the fixture.");
+
+        let above = "// lint:allow(float-total-order): spans two comment lines\n// before the code it waives.\nv.sort_by(|a, b| a.partial_cmp(b).unwrap());\n";
+        let r = lint_source("src/util/x.rs", above, &mut b);
+        assert!(r.violations.is_empty());
+        assert_eq!(r.waived.len(), 1);
+    }
+
+    #[test]
+    fn waiver_does_not_leak_to_other_lines_or_rules() {
+        let mut b = Baseline::default();
+        let src = "// lint:allow(no-fma): wrong rule for the site below.\nv.sort_by(|a, b| a.partial_cmp(b).unwrap());\n";
+        let r = lint_source("src/util/x.rs", src, &mut b);
+        assert_eq!(r.violations.len(), 1);
+        assert_eq!(r.violations[0].rule, "float-total-order");
+        assert!(r.waived.is_empty());
+    }
+
+    #[test]
+    fn file_waiver_covers_every_site_of_that_rule() {
+        let mut b = Baseline::default();
+        let src = "// lint:allow-file(float-total-order): fixture file is all about partial_cmp.\nlet a = x.partial_cmp(&y);\nlet b = x.partial_cmp(&z);\n";
+        let r = lint_source("src/util/x.rs", src, &mut b);
+        assert!(r.violations.is_empty());
+        assert_eq!(r.waived.len(), 2);
+    }
+
+    #[test]
+    fn reasonless_or_unknown_waivers_are_violations() {
+        let mut b = Baseline::default();
+        let r = lint_source("src/util/x.rs", "let y = 1; // lint:allow(float-total-order):\n", &mut b);
+        assert_eq!(r.violations.len(), 1);
+        assert_eq!(r.violations[0].rule, "waiver-syntax");
+
+        let r = lint_source("src/util/x.rs", "let y = 1; // lint:allow(not-a-rule): reason\n", &mut b);
+        assert_eq!(r.violations.len(), 1);
+        assert_eq!(r.violations[0].rule, "waiver-syntax");
+    }
+
+    #[test]
+    fn prose_mention_of_the_grammar_is_not_a_waiver() {
+        let mut b = Baseline::default();
+        let src = "// a `lint:allow` comment names the rule and gives a reason.\nlet y = 1;\n";
+        let r = lint_source("src/util/x.rs", src, &mut b);
+        assert!(r.violations.is_empty());
+        assert!(r.waived.is_empty());
+    }
+
+    #[test]
+    fn baseline_absorbs_then_goes_stale() {
+        let src = "let a = x.partial_cmp(&y);\n";
+        let rows = vec![(
+            "float-total-order".to_string(),
+            "src/util/x.rs".to_string(),
+            "let a = x.partial_cmp(&y);".to_string(),
+        )];
+        let mut b = Baseline::parse(&Baseline::render(&rows)).unwrap();
+        let r = lint_source("src/util/x.rs", src, &mut b);
+        assert!(r.violations.is_empty());
+        assert_eq!(r.baselined.len(), 1);
+        assert_eq!(b.stale(), 0);
+
+        // Changed code no longer matches the baselined hash.
+        let mut b = Baseline::parse(&Baseline::render(&rows)).unwrap();
+        let r = lint_source("src/util/x.rs", "let a = z.partial_cmp(&y);\n", &mut b);
+        assert_eq!(r.violations.len(), 1);
+        assert_eq!(b.stale(), 1);
+    }
+
+    #[test]
+    fn report_renders_text_and_json() {
+        let mut b = Baseline::default();
+        let r = lint_source("src/util/x.rs", "let a = x.partial_cmp(&y);\n", &mut b);
+        let text = r.to_text();
+        assert!(text.contains("src/util/x.rs:1 float-total-order"));
+        assert!(text.contains("lint: 1 violations"));
+        let j = r.to_json();
+        let v = j.get("violations").and_then(Json::as_arr).unwrap();
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].get("line").and_then(Json::as_usize), Some(1));
+        assert_eq!(
+            j.get("summary").and_then(|s| s.get("violations")).and_then(Json::as_usize),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn multi_rule_waiver_list() {
+        let mut b = Baseline::default();
+        let src = "// lint:allow(float-total-order, no-fma): one comment, two rules.\nlet a = x.partial_cmp(&y);\n";
+        let r = lint_source("src/util/x.rs", src, &mut b);
+        assert!(r.violations.is_empty());
+        assert_eq!(r.waived.len(), 1);
+    }
+}

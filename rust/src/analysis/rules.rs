@@ -1,0 +1,493 @@
+//! The `trp lint` rule catalog: determinism and concurrency contracts
+//! this crate promises (bit-identical replies for identical request
+//! streams, no panics on the serving path, audited `unsafe`), checked
+//! textually over the stripped source (see [`super::lexer`]).
+//!
+//! Every rule is scoped tightly enough to stay quiet on idiomatic code;
+//! intentional exceptions carry a `lint:allow` waiver at the site (see
+//! [`super`]) so the contract and its escape hatches are both
+//! reviewable in the diff.
+
+use super::lexer::StrippedLine;
+use super::Diagnostic;
+
+/// Every rule id, for waiver validation and `--help` text.
+pub const RULE_IDS: &[&str] = &[
+    "float-total-order",
+    "no-fma",
+    "hot-path-panic",
+    "unordered-iteration",
+    "unsafe-audit",
+    "relaxed-handoff",
+];
+
+/// Hot serving path: a panic here kills a worker or wedges a lane.
+const HOT_PATHS: &[&str] = &[
+    "src/coordinator/server.rs",
+    "src/coordinator/net.rs",
+    "src/coordinator/state.rs",
+    "src/coordinator/batcher.rs",
+];
+
+/// Modules where `mul_add`/FMA would silently change numeric results
+/// between builds (fused vs separate rounding).
+const FMA_SCOPE_PREFIXES: &[&str] = &["src/linalg/", "src/tensor/", "src/projections/"];
+
+/// Files where hash-order leaking into output order is a determinism
+/// bug: reply assembly, GEMM grouping, snapshot encoding, index scans.
+const ITER_SCOPE: &[&str] = &[
+    "src/coordinator/server.rs",
+    "src/coordinator/state.rs",
+    "src/coordinator/net.rs",
+    "src/coordinator/batcher.rs",
+    "src/coordinator/router.rs",
+    "src/runtime/engine.rs",
+    "src/obs/registry.rs",
+    "src/obs/gemm_stats.rs",
+];
+const ITER_SCOPE_PREFIXES: &[&str] = &["src/index/"];
+
+/// The only modules allowed to contain `unsafe` at all; each block must
+/// still carry an adjacent `// SAFETY:` comment.
+const UNSAFE_WHITELIST: &[&str] =
+    &["src/linalg/gemm.rs", "src/obs/trace.rs", "src/runtime/engine.rs"];
+
+/// Pure counter/gauge modules: every atomic is monotonic bookkeeping
+/// read for display, never a cross-thread handoff.
+const RELAXED_FILE_ALLOW: &[&str] =
+    &["src/coordinator/metrics.rs", "src/obs/registry.rs", "src/obs/gemm_stats.rs"];
+
+/// Identifiers whose `Ordering::Relaxed` use is audited as counter /
+/// gauge / watermark traffic, seeded from the metrics and sequencer
+/// sites in tree. The sequencer entries (`issued`, `noted`, `covered`,
+/// `len`, `active_passes`, `parallel_high_water`) are monotonic
+/// watermarks whose cross-thread visibility is anchored by the per-lane
+/// turn mutex and the epoch barrier, not by the atomic's own ordering.
+const RELAXED_IDENT_ALLOW: &[&str] = &[
+    "metrics",
+    "submitted",
+    "completed",
+    "failed",
+    "flushes",
+    "requests",
+    "errors",
+    "projects",
+    "inserts",
+    "queries",
+    "deletes",
+    "next_flush_id",
+    "served",
+    "dropped",
+    "recorded",
+    "written",
+    "rotations",
+    "issued",
+    "noted",
+    "covered",
+    "len",
+    "active_passes",
+    "parallel_high_water",
+    "GEMM_THREADS",
+    "POISON_RECOVERIES",
+    "JOBS_PANICKED",
+];
+
+fn is_ident_char(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Does `word` appear in `hay` with non-identifier characters (or the
+/// text boundary) on both sides?
+fn has_word(hay: &str, word: &str) -> bool {
+    for (pos, _) in hay.match_indices(word) {
+        let before_ok = !hay[..pos].chars().next_back().is_some_and(is_ident_char);
+        let after_ok = !hay[pos + word.len()..].chars().next().is_some_and(is_ident_char);
+        if before_ok && after_ok {
+            return true;
+        }
+    }
+    false
+}
+
+/// Index of the first top-level `#[cfg(test)]` line (the unit-test
+/// module marker), or `lines.len()` if none. Rules about serving-path
+/// behavior stop looking there.
+fn test_cutoff(lines: &[StrippedLine]) -> usize {
+    lines
+        .iter()
+        .position(|l| l.code.starts_with("#[cfg(test)]"))
+        .unwrap_or(lines.len())
+}
+
+fn diag(rule: &'static str, path: &str, line: usize, message: String) -> Diagnostic {
+    Diagnostic { rule, path: path.to_string(), line, message }
+}
+
+/// Run every rule over one stripped file. `path` is the crate-relative
+/// path with forward slashes (e.g. `src/coordinator/state.rs`).
+pub fn run_rules(path: &str, lines: &[StrippedLine]) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    float_total_order(path, lines, &mut out);
+    no_fma(path, lines, &mut out);
+    hot_path_panic(path, lines, &mut out);
+    unordered_iteration(path, lines, &mut out);
+    unsafe_audit(path, lines, &mut out);
+    relaxed_handoff(path, lines, &mut out);
+    out
+}
+
+/// `float-total-order`: `partial_cmp` on floats yields `None` for NaN,
+/// and the usual `.unwrap()` chaser turns a poisoned value into a panic
+/// mid-sort — or worse, an `unwrap_or(Equal)` silently scrambles the
+/// order. `f64::total_cmp` is total, NaN-safe, and bit-identical on the
+/// NaN-free data this crate sorts. Benches are exempt (they sort their
+/// own timings).
+fn float_total_order(path: &str, lines: &[StrippedLine], out: &mut Vec<Diagnostic>) {
+    if path.starts_with("benches/") {
+        return;
+    }
+    for (i, l) in lines.iter().enumerate() {
+        if has_word(&l.code, "partial_cmp") {
+            out.push(diag(
+                "float-total-order",
+                path,
+                i + 1,
+                "partial_cmp on floats is not a total order; use f64::total_cmp".into(),
+            ));
+        }
+    }
+}
+
+/// `no-fma`: fused multiply-add rounds once where `a * b + c` rounds
+/// twice, so a kernel that picks FMA per-target produces different bits
+/// per machine. The numeric core must not use it.
+fn no_fma(path: &str, lines: &[StrippedLine], out: &mut Vec<Diagnostic>) {
+    if !FMA_SCOPE_PREFIXES.iter().any(|p| path.starts_with(p)) {
+        return;
+    }
+    for (i, l) in lines.iter().enumerate() {
+        if has_word(&l.code, "mul_add") || l.code.contains("fmadd") || l.code.contains("fmsub")
+        {
+            out.push(diag(
+                "no-fma",
+                path,
+                i + 1,
+                "fused multiply-add changes rounding vs mul-then-add; keep the numeric core FMA-free".into(),
+            ));
+        }
+    }
+}
+
+/// `hot-path-panic`: a panic in the dispatcher, a lane closure, or the
+/// connection loop takes down a worker thread (or poisons a lane mutex)
+/// instead of failing one request. Serving code must convert these into
+/// error replies or logged degradation.
+fn hot_path_panic(path: &str, lines: &[StrippedLine], out: &mut Vec<Diagnostic>) {
+    if !HOT_PATHS.contains(&path) {
+        return;
+    }
+    const PANICKY: &[&str] =
+        &[".unwrap()", ".expect(", "panic!(", "unreachable!(", "todo!(", "unimplemented!("];
+    let cutoff = test_cutoff(lines);
+    for (i, l) in lines.iter().enumerate().take(cutoff) {
+        if let Some(p) = PANICKY.iter().find(|p| l.code.contains(**p)) {
+            out.push(diag(
+                "hot-path-panic",
+                path,
+                i + 1,
+                format!(
+                    "{} can panic on the serving path; reply with an error or degrade instead",
+                    p.trim_matches(|c| c == '.' || c == '(' || c == ')')
+                ),
+            ));
+        }
+    }
+}
+
+/// Identifiers bound to a `HashMap`/`HashSet` anywhere in the file:
+/// struct fields (`name: HashMap<..>`), lets (`let name = HashMap::..`)
+/// and params (`name: &HashMap<..>`). Textual, so a same-named local in
+/// another function also matches — that is the conservative direction.
+fn hash_bound_idents(lines: &[StrippedLine]) -> Vec<String> {
+    let mut idents: Vec<String> = Vec::new();
+    for l in lines {
+        let code = &l.code;
+        let hit = match (code.find("HashMap"), code.find("HashSet")) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (Some(a), None) => Some(a),
+            (None, Some(b)) => Some(b),
+            (None, None) => None,
+        };
+        let Some(hit) = hit else { continue };
+        let prefix: Vec<char> = code[..hit].chars().collect();
+        // Find the last single `:` (not `::`) or bare `=` before the
+        // type: that is the binder separating the name from it.
+        let mut binder = None;
+        for (j, &c) in prefix.iter().enumerate() {
+            let prev = if j > 0 { Some(prefix[j - 1]) } else { None };
+            let next = prefix.get(j + 1).copied();
+            if c == ':' && prev != Some(':') && next != Some(':') {
+                binder = Some(j);
+            }
+            if c == '='
+                && !matches!(prev, Some('=' | '!' | '<' | '>' | '+' | '-' | '*' | '/' | '&' | '|' | '^'))
+                && !matches!(next, Some('=' | '>'))
+            {
+                binder = Some(j);
+            }
+        }
+        let Some(binder) = binder else { continue };
+        let mut j = binder;
+        while j > 0 && prefix[j - 1].is_whitespace() {
+            j -= 1;
+        }
+        let end = j;
+        while j > 0 && is_ident_char(prefix[j - 1]) {
+            j -= 1;
+        }
+        let ident: String = prefix[j..end].iter().collect();
+        if ident.is_empty()
+            || ident.chars().next().is_some_and(|c| c.is_ascii_digit())
+            || matches!(ident.as_str(), "let" | "mut" | "pub" | "const" | "static" | "in")
+        {
+            continue;
+        }
+        if !idents.contains(&ident) {
+            idents.push(ident);
+        }
+    }
+    idents
+}
+
+/// `unordered-iteration`: iterating a `HashMap`/`HashSet` yields an
+/// arbitrary (per-process!) order. If that order reaches reply
+/// assembly, GEMM grouping, or snapshot bytes, identical runs produce
+/// different output. Iteration is fine when the result is re-sorted or
+/// reduced order-insensitively within the next few lines.
+fn unordered_iteration(path: &str, lines: &[StrippedLine], out: &mut Vec<Diagnostic>) {
+    let in_scope = ITER_SCOPE.contains(&path)
+        || ITER_SCOPE_PREFIXES.iter().any(|p| path.starts_with(p));
+    if !in_scope {
+        return;
+    }
+    const ITER_METHODS: &[&str] = &[
+        ".iter()",
+        ".iter_mut()",
+        ".keys()",
+        ".values()",
+        ".values_mut()",
+        ".into_iter()",
+        ".into_keys()",
+        ".into_values()",
+        ".drain(",
+    ];
+    // Order-insensitive consumption close by: an explicit re-sort, a
+    // BTree re-collect, or a commutative reduction.
+    const SETTLES_ORDER: &[&str] =
+        &["sort", "BTree", ".max", ".min", ".sum", ".count(", ".any(", ".all(", ".fold(0"];
+    let idents = hash_bound_idents(lines);
+    if idents.is_empty() {
+        return;
+    }
+    let cutoff = test_cutoff(lines);
+    for (i, l) in lines.iter().enumerate().take(cutoff) {
+        let code = &l.code;
+        let iterates = ITER_METHODS.iter().any(|m| code.contains(m))
+            || (code.contains("for ") && code.contains(" in "));
+        if !iterates {
+            continue;
+        }
+        let Some(name) = idents.iter().find(|id| has_word(code, id)) else { continue };
+        let window: String = lines[i..(i + 4).min(cutoff)]
+            .iter()
+            .map(|l| l.code.as_str())
+            .collect::<Vec<_>>()
+            .join("\n");
+        if SETTLES_ORDER.iter().any(|s| window.contains(s)) {
+            continue;
+        }
+        out.push(diag(
+            "unordered-iteration",
+            path,
+            i + 1,
+            format!(
+                "iterating hash container `{name}` in arbitrary order with no nearby sort or order-insensitive reduction"
+            ),
+        ));
+    }
+}
+
+/// `unsafe-audit`: `unsafe` may only appear in the three audited
+/// modules, and every occurrence needs a `// SAFETY:` justification on
+/// the same line or the contiguous comment/attribute block above it.
+fn unsafe_audit(path: &str, lines: &[StrippedLine], out: &mut Vec<Diagnostic>) {
+    for (i, l) in lines.iter().enumerate() {
+        if !has_word(&l.code, "unsafe") {
+            continue;
+        }
+        if !UNSAFE_WHITELIST.contains(&path) {
+            out.push(diag(
+                "unsafe-audit",
+                path,
+                i + 1,
+                "unsafe outside the audited modules (linalg/gemm.rs, obs/trace.rs, runtime/engine.rs)".into(),
+            ));
+            continue;
+        }
+        let mut justified = l.comment.contains("SAFETY:");
+        let mut j = i;
+        while !justified && j > 0 && i - j < 15 {
+            j -= 1;
+            let above = &lines[j];
+            if above.comment.contains("SAFETY:") {
+                justified = true;
+            } else if above.code.trim().is_empty() || above.code.trim_start().starts_with("#[") {
+                continue;
+            } else {
+                break;
+            }
+        }
+        if !justified {
+            out.push(diag(
+                "unsafe-audit",
+                path,
+                i + 1,
+                "unsafe block without an adjacent `// SAFETY:` comment".into(),
+            ));
+        }
+    }
+}
+
+/// `relaxed-handoff`: `Ordering::Relaxed` is correct for counters and
+/// gauges but silently wrong on an atomic that *publishes* data to
+/// another thread. Any Relaxed use outside the counter modules must
+/// touch an audited counter/watermark identifier (the receiver may sit
+/// on an earlier line of a split method chain, so a small lookbehind
+/// window is searched) or carry a waiver explaining the protocol.
+fn relaxed_handoff(path: &str, lines: &[StrippedLine], out: &mut Vec<Diagnostic>) {
+    if RELAXED_FILE_ALLOW.contains(&path) {
+        return;
+    }
+    let cutoff = test_cutoff(lines);
+    for (i, l) in lines.iter().enumerate().take(cutoff) {
+        if !l.code.contains("Ordering::Relaxed") && !l.code.contains("atomic::Relaxed") {
+            continue;
+        }
+        let window: String = lines[i.saturating_sub(4)..=i]
+            .iter()
+            .map(|l| l.code.as_str())
+            .collect::<Vec<_>>()
+            .join("\n");
+        if RELAXED_IDENT_ALLOW.iter().any(|id| has_word(&window, id)) {
+            continue;
+        }
+        out.push(diag(
+            "relaxed-handoff",
+            path,
+            i + 1,
+            "Ordering::Relaxed on an atomic that is not an audited counter/gauge; use Acquire/Release or waive with the protocol argument".into(),
+        ));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::strip;
+    use super::*;
+
+    fn run_on(path: &str, src: &str) -> Vec<Diagnostic> {
+        run_rules(path, &strip(src))
+    }
+
+    fn rules_of(diags: &[Diagnostic]) -> Vec<&str> {
+        diags.iter().map(|d| d.rule).collect()
+    }
+
+    #[test]
+    fn float_total_order_flags_partial_cmp_but_not_benches() {
+        let src = "v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n";
+        assert_eq!(rules_of(&run_on("src/util/stats.rs", src)), vec!["float-total-order"]);
+        assert!(run_on("benches/fig2.rs", src).is_empty());
+        assert!(run_on("src/util/stats.rs", "v.sort_by(f64::total_cmp);\n").is_empty());
+    }
+
+    #[test]
+    fn partial_cmp_in_comment_or_string_is_ignored() {
+        let src = "// partial_cmp was here\nlet s = \"partial_cmp\";\n";
+        assert!(run_on("src/util/stats.rs", src).is_empty());
+    }
+
+    #[test]
+    fn no_fma_scoped_to_numeric_core() {
+        let src = "let y = a.mul_add(b, c);\n";
+        assert_eq!(rules_of(&run_on("src/linalg/gemm2.rs", src)), vec!["no-fma"]);
+        assert!(run_on("src/coordinator/router2.rs", src).is_empty());
+    }
+
+    #[test]
+    fn hot_path_panic_flags_unwrap_before_tests_only() {
+        let src = "let x = rx.recv().unwrap();\n#[cfg(test)]\nmod tests {\n    fn t() { y.unwrap(); }\n}\n";
+        let d = run_on("src/coordinator/net.rs", src);
+        assert_eq!(rules_of(&d), vec!["hot-path-panic"]);
+        assert_eq!(d[0].line, 1);
+        assert!(run_on("src/index/flat.rs", "x.unwrap();\n").is_empty());
+    }
+
+    #[test]
+    fn unwrap_or_variants_do_not_trip_hot_path_panic() {
+        let src = "let x = m.get(&k).copied().unwrap_or(0);\nlet y = o.unwrap_or_else(Vec::new);\n";
+        assert!(run_on("src/coordinator/net.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unordered_iteration_flags_unsorted_hash_walk() {
+        let src = "struct S { table: HashMap<u32, u32> }\nfor v in self.table.values() {\n    emit(v);\n}\n";
+        let d = run_on("src/coordinator/router.rs", src);
+        assert_eq!(rules_of(&d), vec!["unordered-iteration"]);
+        assert_eq!(d[0].line, 2);
+    }
+
+    #[test]
+    fn unordered_iteration_settled_by_sort_or_reduction() {
+        let sorted = "struct S { table: HashMap<u32, u32> }\nlet mut v: Vec<u32> = table.values().copied().collect();\nv.sort();\n";
+        assert!(run_on("src/coordinator/router.rs", sorted).is_empty());
+        let reduced = "struct S { table: HashMap<u32, u32> }\nlet top = table.values().max();\n";
+        assert!(run_on("src/coordinator/router.rs", reduced).is_empty());
+    }
+
+    #[test]
+    fn unsafe_audit_whitelist_and_safety_comment() {
+        let bare = "unsafe { do_it() };\n";
+        assert_eq!(rules_of(&run_on("src/coordinator/server.rs", bare)), vec!["unsafe-audit"]);
+        assert_eq!(rules_of(&run_on("src/linalg/gemm.rs", bare)), vec!["unsafe-audit"]);
+        let justified = "// SAFETY: bounds checked above.\nunsafe { do_it() };\n";
+        assert!(run_on("src/linalg/gemm.rs", justified).is_empty());
+        let through_attr = "// SAFETY: caller checks avx2.\n#[target_feature(enable = \"avx2\")]\nunsafe fn k() {}\n";
+        assert!(run_on("src/linalg/gemm.rs", through_attr).is_empty());
+    }
+
+    #[test]
+    fn relaxed_handoff_allows_counters_flags_handoffs() {
+        let counter = "self.metrics.submitted.fetch_add(1, Ordering::Relaxed);\n";
+        assert!(run_on("src/coordinator/server.rs", counter).is_empty());
+        let split = "shared\n    .metrics\n    .native_flush_max\n    .store(v, Ordering::Relaxed);\n";
+        assert!(run_on("src/coordinator/server.rs", split).is_empty());
+        let handoff = "self.ready_flag.store(true, Ordering::Relaxed);\n";
+        assert_eq!(
+            rules_of(&run_on("src/coordinator/server.rs", handoff)),
+            vec!["relaxed-handoff"]
+        );
+    }
+
+    #[test]
+    fn hash_bound_idents_sees_fields_lets_and_params() {
+        let lines = strip(
+            "struct S { by_id: HashMap<u64, usize> }\nlet mut seen = HashSet::new();\nfn f(m: &HashMap<u32, u32>) {}\nuse std::collections::HashMap;\n",
+        );
+        let ids = hash_bound_idents(&lines);
+        assert!(ids.contains(&"by_id".to_string()));
+        assert!(ids.contains(&"seen".to_string()));
+        assert!(ids.contains(&"m".to_string()));
+        assert!(!ids.contains(&"collections".to_string()));
+    }
+}

@@ -15,6 +15,7 @@ use super::request::ProjectRequest;
 use super::server::{Coordinator, Reply};
 use super::wire;
 use crate::obs::{Span, TraceRecorder};
+use crate::util::sync::lock_recover;
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{Shutdown, TcpListener, TcpStream, ToSocketAddrs};
@@ -97,10 +98,12 @@ impl NetServer {
         }
         // Readers block in `lines()`; shutting down the read side makes
         // that return EOF so the connection drains and exits.
-        for stream in self.conn_streams.lock().unwrap().values() {
+        // lint:allow(unordered-iteration): every live socket gets the same
+        // half-close; visit order cannot affect any reply.
+        for stream in lock_recover(&self.conn_streams).values() {
             let _ = stream.shutdown(Shutdown::Read);
         }
-        let handles: Vec<_> = std::mem::take(&mut *self.conn_handles.lock().unwrap());
+        let handles: Vec<_> = std::mem::take(&mut *lock_recover(&self.conn_handles));
         for handle in handles {
             let _ = handle.join();
         }
@@ -132,7 +135,7 @@ fn accept_loop(
                 };
                 let conn_id = next_conn_id;
                 next_conn_id += 1;
-                conn_streams.lock().unwrap().insert(conn_id, peer);
+                lock_recover(&conn_streams).insert(conn_id, peer);
                 let coordinator = Arc::clone(&coordinator);
                 let served = Arc::clone(&served);
                 let streams = Arc::clone(&conn_streams);
@@ -141,9 +144,9 @@ fn accept_loop(
                     // Drop the registry's duplicated fd as soon as the
                     // connection ends, so the peer sees FIN now and an
                     // idle server holds no dead sockets.
-                    streams.lock().unwrap().remove(&conn_id);
+                    lock_recover(&streams).remove(&conn_id);
                 });
-                let mut handles = conn_handles.lock().unwrap();
+                let mut handles = lock_recover(&conn_handles);
                 handles.retain(|h| !h.is_finished());
                 handles.push(handle);
             }

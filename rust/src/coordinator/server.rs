@@ -269,11 +269,16 @@ impl Coordinator {
             reply: reply_tx,
         };
         self.shared.metrics.submitted.fetch_add(1, Ordering::Relaxed);
-        self.tx
-            .as_ref()
-            .expect("coordinator shut down")
-            .send(env)
-            .expect("dispatcher gone");
+        // A closed ingress (shutdown racing a late submit, or a dead
+        // dispatcher) degrades to an error reply on the caller's channel
+        // — never a panic in the submitting connection thread.
+        let undelivered = match self.tx.as_ref() {
+            Some(tx) => tx.send(env).err().map(|e| e.0),
+            None => Some(env),
+        };
+        if let Some(env) = undelivered {
+            let _ = env.reply.send(Err("coordinator is shut down".into()));
+        }
         reply_rx
     }
 
@@ -513,11 +518,13 @@ fn dispatcher_loop(shared: Arc<Shared>, rx: Receiver<Envelope>) {
             Err(RecvTimeoutError::Timeout) => {}
             Err(RecvTimeoutError::Disconnected) => {
                 // Drain: flush every pending batch, then stop.
+                // lint:allow(unordered-iteration): each flush is one signature's whole queue; dispatch order across signatures cannot affect any reply.
                 for (name, b) in batchers.iter_mut() {
                     if let Some(batch) = b.flush() {
                         dispatch_pjrt(&shared, &pool, name, batch);
                     }
                 }
+                // lint:allow(unordered-iteration): same argument as the PJRT drain above — per-signature flushes are independent.
                 for (key, lane) in native_lanes.iter_mut() {
                     let opened = lane.batcher.opened_us().unwrap_or_else(|| shared.now_us());
                     if let Some(batch) = lane.batcher.flush() {
@@ -532,11 +539,13 @@ fn dispatcher_loop(shared: Arc<Shared>, rx: Receiver<Envelope>) {
         // before the timeout fires) cannot starve an expired batch past
         // its max_delay_us deadline.
         let now = shared.now_us();
+        // lint:allow(unordered-iteration): deadline expiry flushes are independent per signature; sweep order cannot affect any reply.
         for (name, b) in batchers.iter_mut() {
             if let Some(batch) = b.poll(now) {
                 dispatch_pjrt(&shared, &pool, name, batch);
             }
         }
+        // lint:allow(unordered-iteration): same argument as the PJRT sweep above — per-signature deadline flushes are independent.
         for (key, lane) in native_lanes.iter_mut() {
             let opened = lane.batcher.opened_us().unwrap_or(now);
             if let Some(batch) = lane.batcher.poll(now) {
@@ -771,25 +780,33 @@ fn run_native_batch(
     }
     let mut out = shared.workspaces.acquire_buf(payloads.len() * k);
     let mut ws = shared.workspaces.acquire();
+    // A failed map draw poisons the whole flush with error replies — but
+    // the flush still walks its sequencer turns below, because tickets
+    // were already issued and an unadvanced turn would wedge the lane.
+    let mut flush_error: Option<String> = None;
     if !payloads.is_empty() {
         // Resolve (and lazily draw) the map only when something actually
         // projects: signature-only flushes (delete/stats) must not
         // materialize a projection map — remote-controlled dims would
         // otherwise grow the registry without bound from tensorless
         // requests.
-        let entry = shared.registry.get_or_create(&key);
-        let t_p0 = shared.now_us();
-        entry.map.project_batch_into(&payloads, &mut out, &mut ws);
-        let t_p1 = shared.now_us();
-        sig.record_stage(Stage::Project, t_p1.saturating_sub(t_p0));
-        if let Some(tr) = tr {
-            tr.record(Span {
-                stage: "project",
-                flush: Some(flush_id),
-                start_us: t_p0,
-                dur_us: t_p1.saturating_sub(t_p0),
-                ..Span::default()
-            });
+        match shared.registry.get_or_create(&key) {
+            Ok(entry) => {
+                let t_p0 = shared.now_us();
+                entry.map.project_batch_into(&payloads, &mut out, &mut ws);
+                let t_p1 = shared.now_us();
+                sig.record_stage(Stage::Project, t_p1.saturating_sub(t_p0));
+                if let Some(tr) = tr {
+                    tr.record(Span {
+                        stage: "project",
+                        flush: Some(flush_id),
+                        start_us: t_p0,
+                        dur_us: t_p1.saturating_sub(t_p0),
+                        ..Span::default()
+                    });
+                }
+            }
+            Err(e) => flush_error = Some(format!("projection map creation failed: {e}")),
         }
     }
 
@@ -812,6 +829,11 @@ fn run_native_batch(
     let mut snapshots: Vec<Option<SnapshotReport>> = (0..items.len()).map(|_| None).collect();
     let mut restored: Vec<Option<u64>> = vec![None; items.len()];
     let mut op_errors: Vec<Option<String>> = vec![None; items.len()];
+    if let Some(e) = &flush_error {
+        for oe in op_errors.iter_mut() {
+            *oe = Some(e.clone());
+        }
+    }
     if let Some((slot, tickets)) = index_turn {
         let nshards = slot.shards();
         let snapshot_dir_set = shared.indexes.snapshot_dir().is_some();
@@ -829,8 +851,19 @@ fn run_native_batch(
         let mut topks_all = Vec::with_capacity(query_items.len());
         let mut qord: Vec<usize> = vec![0; items.len()];
         for (qi, &i) in query_items.iter().enumerate() {
-            let r = items[i].row.expect("query carries a tensor");
-            qstage[qi * k..(qi + 1) * k].copy_from_slice(&out[r * k..(r + 1) * k]);
+            match items[i].row {
+                // A query without a staged embedding (the dispatcher
+                // rejects tensorless queries, so this is belt-and-braces)
+                // degrades to an error reply; its staging slot stays
+                // zeroed and the scored result is discarded by the
+                // error-reply path.
+                Some(r) => {
+                    qstage[qi * k..(qi + 1) * k].copy_from_slice(&out[r * k..(r + 1) * k])
+                }
+                None => {
+                    op_errors[i].get_or_insert_with(|| "query payload carried no tensor".into());
+                }
+            }
             if let RequestOp::Query { k: topk } = items[i].op {
                 topks_all.push(topk);
             }
@@ -889,6 +922,13 @@ fn run_native_batch(
             let mut t_scan0 = t_wait0;
             slot.run_shard_turn(s, ticket, |index| {
                 t_scan0 = shared.now_us();
+                // A flush-wide failure (no projection ran, `out` holds
+                // zeros) must not mutate or score anything — but the turn
+                // itself still runs, releasing the ticket to later
+                // flushes.
+                if flush_error.is_some() {
+                    return;
+                }
                 let mut pending: Vec<usize> = Vec::new();
                 for (i, it) in items.iter().enumerate() {
                     match it.op {
@@ -896,6 +936,16 @@ fn run_native_batch(
                         RequestOp::Query { .. } => pending.push(i),
                         RequestOp::Insert => {
                             if shard_of(it.id, nshards) == s {
+                                // No embedding staged (dispatcher rejects
+                                // tensorless inserts; defensive) → error
+                                // reply, and the mutation is skipped, so
+                                // no pending-query flush is needed.
+                                let Some(r) = it.row else {
+                                    op_errors[i].get_or_insert_with(|| {
+                                        "insert payload carried no tensor".into()
+                                    });
+                                    continue;
+                                };
                                 score_pending(
                                     index.as_mut(),
                                     &qstage,
@@ -906,7 +956,6 @@ fn run_native_batch(
                                     &mut ws,
                                     &mut merge_us,
                                 );
-                                let r = it.row.expect("insert carries a tensor");
                                 index.insert(it.id, &out[r * k..(r + 1) * k]);
                                 slot.note_shard_mutations(s, 1);
                                 shared.metrics.index_inserts.fetch_add(1, Ordering::Relaxed);
@@ -1047,6 +1096,12 @@ fn run_native_batch(
         // position, or by later flushes) sit above the watermark and stay
         // pending toward the next periodic trigger.
         for (i, it) in items.iter().enumerate() {
+            if op_errors[i].is_some() {
+                // Already failed (flush-wide or per-item): no capture was
+                // taken and no restore swap ran, so there is nothing to
+                // write or report for this item.
+                continue;
+            }
             match it.op {
                 RequestOp::Snapshot => {
                     if !snapshot_dir_set {
@@ -1068,7 +1123,10 @@ fn run_native_batch(
                     }
                 }
                 RequestOp::Restore => {
-                    match restore_plans[i].take().expect("plan resolved above") {
+                    match restore_plans[i]
+                        .take()
+                        .unwrap_or_else(|| Err("restore plan was never resolved".into()))
+                    {
                         Ok(plan) => {
                             shared.metrics.index_restores.fetch_add(1, Ordering::Relaxed);
                             restored[i] = Some(plan.items);
@@ -1082,7 +1140,7 @@ fn run_native_batch(
                 _ => {}
             }
         }
-        if periodic_due {
+        if periodic_due && flush_error.is_none() {
             let t_w0 = shared.now_us();
             let write = shared.indexes.write_snapshot(&slot, &periodic_captures);
             record_snapshot_write(shared, &sig, flush_id, t_w0);
@@ -1225,7 +1283,7 @@ fn score_pending(
     // between two run breaks is pushed, in item order.
     let start = qord[pending[0]];
     let end = start + pending.len();
-    debug_assert_eq!(qord[*pending.last().expect("non-empty run")], end - 1);
+    debug_assert_eq!(pending.last().map(|&i| qord[i]), Some(end - 1));
     let qs = &qstage[start * k..end * k];
     let topks = &topks_all[start..end];
     let results = index.query_batch(qs, topks, ws);
@@ -1277,12 +1335,16 @@ fn run_pjrt_batch(shared: &Arc<Shared>, artifact: &str, batch: &[BatchItem]) -> 
     let dims = spec.input_dims().unwrap_or_else(|| vec![spec.input_dim.unwrap_or(0)]);
     let key = match spec.kind {
         ArtifactKind::Tt => MapKey {
-            kind: MapKind::Tt { rank: spec.rank.unwrap() },
+            kind: MapKind::Tt {
+                rank: spec.rank.ok_or_else(|| format!("artifact {artifact} missing rank"))?,
+            },
             dims,
             k: spec.k,
         },
         ArtifactKind::Cp => MapKey {
-            kind: MapKind::Cp { rank: spec.rank.unwrap() },
+            kind: MapKind::Cp {
+                rank: spec.rank.ok_or_else(|| format!("artifact {artifact} missing rank"))?,
+            },
             dims,
             k: spec.k,
         },
@@ -1310,9 +1372,10 @@ fn run_pjrt_batch(shared: &Arc<Shared>, artifact: &str, batch: &[BatchItem]) -> 
                 Ok(vec![g.0.clone(), g.1.clone(), g.2.clone(), xf, xm, xl])
             }
             (ArtifactKind::Cp, Some(PackedParams::Cp(a))) => {
-                let n = spec.n_modes.unwrap();
-                let d = spec.dim.unwrap();
-                let rt = spec.input_rank.unwrap();
+                let n = spec.n_modes.ok_or_else(|| "CP artifact missing n_modes".to_string())?;
+                let d = spec.dim.ok_or_else(|| "CP artifact missing dim".to_string())?;
+                let rt =
+                    spec.input_rank.ok_or_else(|| "CP artifact missing input_rank".to_string())?;
                 let xs: Vec<&crate::tensor::CpTensor> = batch
                     .iter()
                     .map(|item| match &item.env.req.payload {
@@ -1324,7 +1387,8 @@ fn run_pjrt_batch(shared: &Arc<Shared>, artifact: &str, batch: &[BatchItem]) -> 
                 Ok(vec![a.as_ref().clone(), x])
             }
             (ArtifactKind::Dense, Some(PackedParams::Dense(w))) => {
-                let dim = spec.input_dim.unwrap();
+                let dim =
+                    spec.input_dim.ok_or_else(|| "dense artifact missing input_dim".to_string())?;
                 let xs: Vec<&crate::tensor::DenseTensor> = batch
                     .iter()
                     .map(|item| match &item.env.req.payload {

@@ -16,7 +16,8 @@ use crate::projections::{
 };
 use crate::rng::Rng;
 use crate::runtime::{pack, ArtifactKind, ArtifactSpec};
-use anyhow::Result;
+use crate::util::sync::{lock_recover, wait_recover};
+use anyhow::{anyhow, Result};
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -167,17 +168,17 @@ impl WorkspacePool {
 
     /// Take a warm workspace, or a fresh one when the pool is empty.
     pub fn acquire(&self) -> Workspace {
-        self.free.lock().unwrap().pop().unwrap_or_default()
+        lock_recover(&self.free).pop().unwrap_or_default()
     }
 
     /// Return a workspace for reuse.
     pub fn release(&self, ws: Workspace) {
-        self.free.lock().unwrap().push(ws);
+        lock_recover(&self.free).push(ws);
     }
 
     /// Number of idle pooled workspaces.
     pub fn idle(&self) -> usize {
-        self.free.lock().unwrap().len()
+        lock_recover(&self.free).len()
     }
 
     /// Take a zeroed `len`-element buffer, reusing a pooled allocation
@@ -186,7 +187,7 @@ impl WorkspacePool {
     /// must not be handed out as a `k`-sized reply embedding, or its full
     /// capacity leaves the process inside the response.
     pub fn acquire_buf(&self, len: usize) -> Vec<f64> {
-        let mut bufs = self.bufs.lock().unwrap();
+        let mut bufs = lock_recover(&self.bufs);
         let fit = bufs
             .iter()
             .position(|b| b.capacity() >= len && b.capacity() <= len.saturating_mul(4).max(64));
@@ -205,7 +206,7 @@ impl WorkspacePool {
     /// whose reply channel was dropped are recycled — so the pool is
     /// bounded by [`MAX_POOLED_BUFS`] and excess buffers are simply freed.
     pub fn release_buf(&self, buf: Vec<f64>) {
-        let mut bufs = self.bufs.lock().unwrap();
+        let mut bufs = lock_recover(&self.bufs);
         if bufs.len() < MAX_POOLED_BUFS {
             bufs.push(buf);
         }
@@ -213,7 +214,7 @@ impl WorkspacePool {
 
     /// Number of idle pooled buffers.
     pub fn idle_bufs(&self) -> usize {
-        self.bufs.lock().unwrap().len()
+        lock_recover(&self.bufs).len()
     }
 }
 
@@ -263,9 +264,12 @@ impl ProjectionRegistry {
         map_key_seed(self.master_seed, key)
     }
 
-    /// Get or create the map for `key` (no PJRT packing).
-    pub fn get_or_create(&self, key: &MapKey) -> Arc<MapEntry> {
-        self.get_or_create_inner(key, None).expect("native map creation cannot fail")
+    /// Get or create the map for `key` (no PJRT packing). Native map
+    /// creation is infallible today, but the fallible signature keeps the
+    /// worker path free of panics: a future failure mode becomes an error
+    /// reply, not a dead worker.
+    pub fn get_or_create(&self, key: &MapKey) -> Result<Arc<MapEntry>> {
+        self.get_or_create_inner(key, None)
     }
 
     /// Get or create the map for `key`, packing parameters for `spec`'s
@@ -283,7 +287,7 @@ impl ProjectionRegistry {
         key: &MapKey,
         spec: Option<&ArtifactSpec>,
     ) -> Result<Arc<MapEntry>> {
-        let mut maps = self.maps.lock().unwrap();
+        let mut maps = lock_recover(&self.maps);
         if let Some(e) = maps.get(key) {
             // Upgrade an existing entry with packing if newly needed.
             if e.packed.is_some() || spec.is_none() {
@@ -309,8 +313,8 @@ impl ProjectionRegistry {
                 let f = CpProjection::new(&key.dims, rank, key.k, &mut rng);
                 let packed = match spec {
                     Some(s) if s.kind == ArtifactKind::Cp => {
-                        let n = s.n_modes.unwrap();
-                        let d = s.dim.unwrap();
+                        let n = s.n_modes.ok_or_else(|| anyhow!("CP artifact missing n_modes"))?;
+                        let d = s.dim.ok_or_else(|| anyhow!("CP artifact missing dim"))?;
                         Some(PackedParams::Cp(Arc::new(pack::pack_cp_projection(
                             &f, n, d, rank,
                         )?)))
@@ -341,7 +345,7 @@ impl ProjectionRegistry {
 
     /// Number of registered maps.
     pub fn len(&self) -> usize {
-        self.maps.lock().unwrap().len()
+        lock_recover(&self.maps).len()
     }
 
     /// True when no maps have been drawn yet.
@@ -513,36 +517,55 @@ impl IndexSlot {
     /// the locked shard index, then release the turn to the next ticket.
     /// The closure receives the owning `Box` so a `restore` op can swap
     /// the shard's index while the turn is held.
+    ///
+    /// Panic-safe: the turn advances (and waiters are notified) even when
+    /// `f` panics, via a drop guard — a panicking pass must degrade to one
+    /// failed request, not wedge every later ticket on the lane. Poisoned
+    /// lane locks are recovered for the same reason.
     pub fn run_shard_turn<R>(
         &self,
         shard: usize,
         ticket: u64,
         f: impl FnOnce(&mut Box<dyn AnnIndex>) -> R,
     ) -> R {
-        let lane = &self.lanes[shard];
-        let mut turn = lane.turn.lock().unwrap();
-        while *turn != ticket {
-            turn = lane.turn_done.wait(turn).unwrap();
+        /// Advances the lane turn on drop, so an unwinding pass still
+        /// releases the lane to the next ticket.
+        struct TurnGuard<'a> {
+            slot: &'a IndexSlot,
+            lane: &'a ShardLane,
         }
+        impl Drop for TurnGuard<'_> {
+            fn drop(&mut self) {
+                self.slot.active_passes.fetch_sub(1, Ordering::Relaxed);
+                *lock_recover(&self.lane.turn) += 1;
+                self.lane.turn_done.notify_all();
+            }
+        }
+
+        let lane = &self.lanes[shard];
+        let mut turn = lock_recover(&lane.turn);
+        while *turn != ticket {
+            turn = wait_recover(&lane.turn_done, turn);
+        }
+        // Release the turn mutex while the pass runs: only this thread's
+        // ticket matches, so waiters that wake early just re-check and
+        // block again. The drop guard below reacquires it to advance.
+        drop(turn);
         let active = self.active_passes.fetch_add(1, Ordering::Relaxed) + 1;
         self.parallel_high_water.fetch_max(active, Ordering::Relaxed);
-        let result = {
-            let mut index = lane.index.lock().unwrap();
-            let r = f(&mut index);
-            lane.len.store(index.len() as u64, Ordering::Relaxed);
-            r
-        };
-        self.active_passes.fetch_sub(1, Ordering::Relaxed);
-        *turn += 1;
-        lane.turn_done.notify_all();
-        result
+        let _turn_guard = TurnGuard { slot: self, lane };
+        let mut index = lock_recover(&lane.index);
+        let r = f(&mut index);
+        lane.len.store(index.len() as u64, Ordering::Relaxed);
+        drop(index);
+        r
     }
 
     /// Lock one shard's index directly (out-of-band access for tests and
     /// ops tooling; coordinator flushes go through
     /// [`IndexSlot::run_shard_turn`]).
     pub fn lock_shard(&self, shard: usize) -> std::sync::MutexGuard<'_, Box<dyn AnnIndex>> {
-        self.lanes[shard].index.lock().unwrap()
+        lock_recover(&self.lanes[shard].index)
     }
 
     /// Live item count per shard, as of each lane's last completed pass.
@@ -780,7 +803,9 @@ fn read_snapshot_source(dir: &Path, stem: &str) -> std::result::Result<SnapshotS
         }
         Ok(SnapshotSource { key, backend, lsh, seed, dim, inserts, deletes, queries, items })
     } else {
-        let path = files.legacy.expect("restorable sequence has a root");
+        let Some(path) = files.legacy else {
+            return Err("restorable sequence lost its root mid-read".into());
+        };
         let snap = IndexSnapshot::read(&path).map_err(|e| format!("{}: {e}", path.display()))?;
         let key = MapKey::decode(&snap.key_bytes).map_err(|e| format!("{}: {e}", path.display()))?;
         Ok(SnapshotSource {
@@ -870,7 +895,7 @@ impl IndexRegistry {
 
     /// Get or lazily create the index slot for `key` (dimension `key.k`).
     pub fn get_or_create(&self, key: &MapKey) -> SharedIndex {
-        let mut indexes = self.indexes.lock().unwrap();
+        let mut indexes = lock_recover(&self.indexes);
         if let Some(slot) = indexes.get(key) {
             return Arc::clone(slot);
         }
@@ -890,7 +915,9 @@ impl IndexRegistry {
     /// Every live slot (for current-value gauges: the metrics snapshot
     /// samples skew and active passes across all signatures).
     pub fn all_slots(&self) -> Vec<SharedIndex> {
-        self.indexes.lock().unwrap().values().map(Arc::clone).collect()
+        // lint:allow(unordered-iteration): feeds order-insensitive gauge
+        // reductions (max skew, active-pass sums), never reply ordering.
+        lock_recover(&self.indexes).values().map(Arc::clone).collect()
     }
 
     /// Write one snapshot sequence from per-shard captures (one
@@ -916,7 +943,7 @@ impl IndexRegistry {
         }
         // Serialize with this signature's other off-turn snapshot IO —
         // concurrent writers would claim the same sequence number.
-        let _io = slot.snapshot_io.lock().unwrap();
+        let _io = lock_recover(&slot.snapshot_io);
         std::fs::create_dir_all(dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
         let stem = snapshot_file_stem(key);
         let seq = list_sequences(dir, &stem)?.last().map(|(s, _)| s + 1).unwrap_or(1);
@@ -1014,7 +1041,7 @@ impl IndexRegistry {
         // sequence — the snapshot reply (sent only after the manifest
         // rename) is the read-your-writes barrier clients should await.
         let src = {
-            let _io = slot.snapshot_io.lock().unwrap();
+            let _io = lock_recover(&slot.snapshot_io);
             read_snapshot_source(dir, &stem)?
         };
         if src.key != slot.key {
@@ -1040,9 +1067,11 @@ impl IndexRegistry {
     pub fn restore_slot(&self, slot: &IndexSlot) -> std::result::Result<u64, String> {
         let plan = self.restore_plan(slot)?;
         for (s, replacement) in plan.shards.into_iter().enumerate() {
-            let replacement = replacement.expect("plan covers every shard");
+            let Some(replacement) = replacement else {
+                return Err(format!("restore plan missing shard {s}"));
+            };
             let len = replacement.len() as u64;
-            let mut guard = slot.lanes[s].index.lock().unwrap();
+            let mut guard = lock_recover(&slot.lanes[s].index);
             *guard = replacement;
             slot.lanes[s].len.store(len, Ordering::Relaxed);
             slot.cover_shard(s, slot.shard_noted(s));
@@ -1076,7 +1105,7 @@ impl IndexRegistry {
                 }
             }
         }
-        let mut indexes = self.indexes.lock().unwrap();
+        let mut indexes = lock_recover(&self.indexes);
         let mut items = 0u64;
         let count = stems.len();
         for stem in stems {
@@ -1097,7 +1126,7 @@ impl IndexRegistry {
 
     /// Number of live indexes.
     pub fn len(&self) -> usize {
-        self.indexes.lock().unwrap().len()
+        lock_recover(&self.indexes).len()
     }
 
     /// True when no index has been created yet.
@@ -1118,8 +1147,8 @@ mod tests {
     #[test]
     fn same_key_returns_same_map() {
         let reg = ProjectionRegistry::new(42);
-        let a = reg.get_or_create(&tt_key());
-        let b = reg.get_or_create(&tt_key());
+        let a = reg.get_or_create(&tt_key()).unwrap();
+        let b = reg.get_or_create(&tt_key()).unwrap();
         assert!(Arc::ptr_eq(&a, &b));
         assert_eq!(reg.len(), 1);
     }
@@ -1128,8 +1157,8 @@ mod tests {
     fn same_master_seed_reproduces_identical_maps() {
         let mut rng = Rng::seed_from(9);
         let x = AnyTensor::Tt(TtTensor::random_unit(&[3; 4], 2, &mut rng));
-        let y1 = ProjectionRegistry::new(42).get_or_create(&tt_key()).map.project(&x);
-        let y2 = ProjectionRegistry::new(42).get_or_create(&tt_key()).map.project(&x);
+        let y1 = ProjectionRegistry::new(42).get_or_create(&tt_key()).unwrap().map.project(&x);
+        let y2 = ProjectionRegistry::new(42).get_or_create(&tt_key()).unwrap().map.project(&x);
         assert_eq!(y1, y2);
     }
 
@@ -1137,18 +1166,18 @@ mod tests {
     fn different_master_seed_differs() {
         let mut rng = Rng::seed_from(9);
         let x = AnyTensor::Tt(TtTensor::random_unit(&[3; 4], 2, &mut rng));
-        let y1 = ProjectionRegistry::new(1).get_or_create(&tt_key()).map.project(&x);
-        let y2 = ProjectionRegistry::new(2).get_or_create(&tt_key()).map.project(&x);
+        let y1 = ProjectionRegistry::new(1).get_or_create(&tt_key()).unwrap().map.project(&x);
+        let y2 = ProjectionRegistry::new(2).get_or_create(&tt_key()).unwrap().map.project(&x);
         assert_ne!(y1, y2);
     }
 
     #[test]
     fn different_keys_get_different_maps() {
         let reg = ProjectionRegistry::new(42);
-        let a = reg.get_or_create(&tt_key());
+        let a = reg.get_or_create(&tt_key()).unwrap();
         let mut k2 = tt_key();
         k2.k = 7;
-        let b = reg.get_or_create(&k2);
+        let b = reg.get_or_create(&k2).unwrap();
         assert!(!Arc::ptr_eq(&a, &b));
         assert_eq!(reg.len(), 2);
     }

@@ -72,7 +72,7 @@ fn time_projection(f: &dyn crate::projections::Projection, x: &AnyTensor, reps: 
         std::hint::black_box(f.project(x));
         times.push(t.elapsed_secs());
     }
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times.sort_by(f64::total_cmp);
     times[times.len() / 2]
 }
 

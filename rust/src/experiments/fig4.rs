@@ -103,7 +103,7 @@ pub fn run(cfg: &Fig4Config) -> Vec<Fig4Row> {
                     std::hint::black_box(f.project(x));
                     times.push(t.elapsed_secs());
                 }
-                times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                times.sort_by(f64::total_cmp);
                 rows.push(Fig4Row {
                     input_format: panel.to_string(),
                     map: spec.label(),

@@ -28,7 +28,12 @@
 //!   latency histograms, and GEMM shape-bucket profiling, exported over
 //!   the wire via the `metrics` op and rendered by `trp metrics`;
 //! * the experiment harness ([`experiments`]) regenerating every figure of
-//!   the paper's evaluation section.
+//!   the paper's evaluation section;
+//! * a self-auditing static analysis ([`analysis`]) — the `trp lint`
+//!   determinism & concurrency pass (float total orders, FMA-free numeric
+//!   core, panic-free serving path, ordered iteration, audited `unsafe`,
+//!   justified `Relaxed`) run over this very source tree and enforced as
+//!   a tier-1 gate.
 //!
 //! ## Quickstart
 //!
@@ -45,6 +50,7 @@
 //! assert!(distortion < 1.0);
 //! ```
 
+pub mod analysis;
 pub mod config;
 pub mod coordinator;
 pub mod data;

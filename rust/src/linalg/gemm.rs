@@ -456,6 +456,13 @@ fn kernel_4x8_scalar(ap: &[f64], bp: &[f64], kc: usize, tile: &mut [f64; MR * NR
 /// one broadcast per A lane, explicit `vmulpd`+`vaddpd` (no FMA — FMA's
 /// single rounding would diverge from the scalar kernel and break the
 /// cross-path determinism contract).
+// SAFETY: callers must (1) only call this when AVX2 is available (the
+// `kernel_4x8` dispatcher probes at runtime) and (2) pass panels with
+// `ap.len() >= kc * MR` and `bp.len() >= kc * NR` (the packing routines
+// allocate exactly that, and the debug_assert re-checks). All raw-pointer
+// arithmetic below stays inside those bounds: the A/B cursors advance by
+// MR/NR per k step for `kc` steps, and the tile pointer covers the fixed
+// MR*NR accumulator array. `loadu`/`storeu` make no alignment assumption.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn kernel_4x8_avx2(ap: &[f64], bp: &[f64], kc: usize, tile: &mut [f64; MR * NR]) {

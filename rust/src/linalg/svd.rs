@@ -143,7 +143,9 @@ pub fn svd(a: &Matrix) -> Svd {
     }
     // Sort descending by singular value.
     let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&a, &b| s[b].partial_cmp(&s[a]).unwrap());
+    // NaN-safe descending order (total_cmp, reversed operands) —
+    // identical to the old partial_cmp sort on finite spectra.
+    order.sort_by(|&a, &b| s[b].total_cmp(&s[a]));
     let mut u_sorted = Matrix::zeros(n, n);
     let mut v_sorted = Matrix::zeros(n, n);
     let mut s_sorted = vec![0.0; n];

@@ -14,6 +14,7 @@
 //!                 [--shards 1,2,4]           # ann: QPS-vs-shard-count axis
 //! trp bounds      --eps 0.5 --n 12 --r 10 --m 100 [--delta 0.05]
 //! trp artifacts   [--artifacts DIR]          # list + verify compiled set
+//! trp lint        [--json] [--baseline FILE] [--write-baseline] [--root DIR]
 //! ```
 
 use tensorized_rp::config::AppConfig;
@@ -57,6 +58,7 @@ fn run(args: &Args) -> Result<(), String> {
         Some("bounds") => cmd_bounds(args),
         Some("sketch") => cmd_sketch(args, &cfg),
         Some("artifacts") => cmd_artifacts(&cfg),
+        Some("lint") => cmd_lint(args),
         _ => {
             print_usage();
             Ok(())
@@ -87,6 +89,10 @@ fn print_usage() {
            snapshot    ask a listening server to snapshot (or, with\n\
                        --restore, reload) a signature's index\n\
            artifacts   list and verify the compiled artifact set\n\
+           lint        determinism & concurrency static analysis over this\n\
+                       crate's own sources (--json for the CI artifact;\n\
+                       --baseline FILE, --write-baseline to grandfather;\n\
+                       exits nonzero on any unwaived finding)\n\
          \n\
          common options: --seed S --trials T --threads W --quick --artifacts DIR --out DIR"
     )
@@ -729,6 +735,52 @@ fn cmd_sketch(args: &Args, cfg: &AppConfig) -> Result<(), String> {
         cols * (rank + 8)
     );
     Ok(())
+}
+
+/// Run the determinism & concurrency lint over this crate's own source
+/// tree (`trp lint [--json] [--baseline FILE] [--write-baseline]
+/// [--root DIR]`). Exit status is the gate: nonzero iff any finding is
+/// neither waived at the site nor absorbed by the baseline.
+fn cmd_lint(args: &Args) -> Result<(), String> {
+    use tensorized_rp::analysis::{self, baseline::Baseline};
+    let root = match args.get("root") {
+        Some(dir) => std::path::PathBuf::from(dir),
+        // Default to the crate we were built from; fall back to the
+        // current directory when it looks like a crate root (CI runs
+        // from a fresh checkout where the embedded path still holds).
+        None => {
+            let here = std::path::Path::new("src");
+            if here.is_dir() && std::path::Path::new("Cargo.toml").is_file() {
+                std::path::PathBuf::from(".")
+            } else {
+                std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            }
+        }
+    };
+    let bpath = args
+        .get("baseline")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| root.join("lint_baseline.txt"));
+    if args.flag("write-baseline") {
+        let rows = analysis::baseline_rows(&root)?;
+        let n = rows.len();
+        std::fs::write(&bpath, Baseline::render(&rows))
+            .map_err(|e| format!("write {}: {e}", bpath.display()))?;
+        println!("[lint] grandfathered {n} findings into {}", bpath.display());
+        return Ok(());
+    }
+    let baseline = Baseline::load(&bpath)?;
+    let report = analysis::lint_root(&root, baseline)?;
+    if args.flag("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        print!("{}", report.to_text());
+    }
+    if report.violations.is_empty() {
+        Ok(())
+    } else {
+        Err(format!("{} unwaived lint violations", report.violations.len()))
+    }
 }
 
 fn cmd_artifacts(cfg: &AppConfig) -> Result<(), String> {

@@ -11,6 +11,8 @@
 //! `trace.jsonl.1` → … up to `keep_files` generations, the daemon-log
 //! idiom).
 
+// lint:allow-file(relaxed-handoff): Vyukov MPMC ring — the per-slot `seq` acquire/release stamps order every payload access; the position counters are reservation cursors whose races are resolved by the CAS, so their loads may be Relaxed.
+
 use std::cell::UnsafeCell;
 use std::fs::{self, File, OpenOptions};
 use std::io::{BufWriter, Write};
@@ -103,6 +105,8 @@ pub struct SpanRing {
 // `enqueue_pos` for that slot and only read by the consumer that CAS-won
 // `dequeue_pos`, with the acquire/release `seq` stamp ordering the two.
 unsafe impl Send for SpanRing {}
+// SAFETY: shared-reference access is the whole point of the ring — every
+// slot access is mediated by the CAS/seq protocol described above.
 unsafe impl Sync for SpanRing {}
 
 impl SpanRing {

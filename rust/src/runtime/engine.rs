@@ -140,7 +140,7 @@ impl PjrtEngine {
             );
         }
         {
-            let mut stats = loaded.stats.lock().unwrap();
+            let mut stats = crate::util::sync::lock_recover(&loaded.stats);
             stats.executions += 1;
             stats.total_secs += t.elapsed_secs();
         }
@@ -149,14 +149,20 @@ impl PjrtEngine {
 
     /// Execution statistics for an artifact.
     pub fn stats(&self, name: &str) -> Option<ExecStats> {
-        self.loaded.get(name).map(|l| *l.stats.lock().unwrap())
+        self.loaded.get(name).map(|l| *crate::util::sync::lock_recover(&l.stats))
     }
 }
 
-// The PJRT client and executables are internally synchronized; the xla
-// crate just doesn't mark them. Execution from the coordinator worker pool
-// requires Send + Sync.
+// SAFETY: the PJRT client and its loaded executables are internally
+// synchronized (PJRT's C API is thread-safe for execution), and every
+// piece of engine state this crate adds on top is either immutable after
+// load (specs, executable handles) or behind a `Mutex` (per-artifact
+// stats). The xla binding just doesn't mark the FFI handles; execution
+// from the coordinator worker pool requires Send.
 unsafe impl Send for PjrtEngine {}
+// SAFETY: shared references only read immutable artifact metadata or go
+// through the stats `Mutex`; the FFI execution entry point is safe to
+// call concurrently (see the Send justification above).
 unsafe impl Sync for PjrtEngine {}
 
 #[cfg(test)]

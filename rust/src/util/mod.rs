@@ -8,6 +8,7 @@ pub mod csv;
 pub mod json;
 pub mod proptest;
 pub mod stats;
+pub mod sync;
 pub mod threadpool;
 
 /// Wall-clock stopwatch with nanosecond resolution.

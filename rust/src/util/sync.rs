@@ -1,0 +1,100 @@
+//! Poison-tolerant synchronization helpers.
+//!
+//! A thread that panics while holding a `Mutex` poisons it; the default
+//! `.lock().unwrap()` then panics in *every other* thread that touches
+//! that lock, cascading one bug into a dead worker pool and a wedged
+//! coordinator. Serving state in this crate is kept consistent by the
+//! sequencer-turn protocol and per-batch ownership, not by lock
+//! poisoning, so the right degradation is to recover the guard and keep
+//! serving: the helpers here do that, warn once per process, and count
+//! recoveries so tests (and operators, via stderr) can observe that a
+//! worker panicked without the process dying.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard, Once};
+
+/// Lifetime count of poisoned-lock recoveries (0 in a healthy process).
+static POISON_RECOVERIES: AtomicU64 = AtomicU64::new(0);
+static WARN_ONCE: Once = Once::new();
+
+fn note_recovery() {
+    POISON_RECOVERIES.fetch_add(1, Ordering::Relaxed);
+    WARN_ONCE.call_once(|| {
+        eprintln!(
+            "trp: recovered a poisoned lock (a worker thread panicked); \
+             serving continues in degraded mode"
+        );
+    });
+}
+
+/// How many times a poisoned lock has been recovered in this process.
+pub fn poison_recoveries() -> u64 {
+    POISON_RECOVERIES.load(Ordering::Relaxed)
+}
+
+/// Lock `m`, recovering the guard when a panicking thread poisoned it.
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            note_recovery();
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// Wait on `cv`, recovering the reacquired guard when poisoned.
+pub fn wait_recover<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    match cv.wait(guard) {
+        Ok(g) => g,
+        Err(poisoned) => {
+            note_recovery();
+            poisoned.into_inner()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_recover_survives_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        let before = poison_recoveries();
+        let mut g = lock_recover(&m);
+        *g += 1;
+        assert_eq!(*g, 8);
+        assert!(poison_recoveries() > before);
+    }
+
+    #[test]
+    fn wait_recover_times_out_cleanly() {
+        // Plain happy-path check: wait_recover returns the guard once
+        // notified (poisoned condvar waits are covered by the mutex test
+        // above — the recovery path is shared).
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let p2 = Arc::clone(&pair);
+        let t = std::thread::spawn(move || {
+            let (m, cv) = &*p2;
+            let mut done = lock_recover(m);
+            while !*done {
+                done = wait_recover(cv, done);
+            }
+        });
+        {
+            let (m, cv) = &*pair;
+            *lock_recover(m) = true;
+            cv.notify_all();
+        }
+        t.join().unwrap();
+    }
+}

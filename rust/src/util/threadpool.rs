@@ -9,7 +9,23 @@ use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
+use crate::util::sync::lock_recover;
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Count of jobs that panicked inside a pool worker (the workers survive;
+/// this is the observable trace that something did go wrong).
+static JOBS_PANICKED: AtomicUsize = AtomicUsize::new(0);
+
+fn warn_job_panicked() {
+    JOBS_PANICKED.fetch_add(1, Ordering::SeqCst);
+    eprintln!("trp: a pool job panicked; the worker thread recovered");
+}
+
+/// Lifetime count of pool jobs that panicked (0 in a healthy process).
+pub fn jobs_panicked() -> usize {
+    JOBS_PANICKED.load(Ordering::SeqCst)
+}
 
 /// A fixed pool of worker threads consuming from a bounded queue.
 pub struct ThreadPool {
@@ -32,13 +48,21 @@ impl ThreadPool {
                 let queued = Arc::clone(&queued);
                 std::thread::spawn(move || loop {
                     let job = {
-                        let guard = rx.lock().unwrap();
+                        let guard = lock_recover(&rx);
                         guard.recv()
                     };
                     match job {
                         Ok(job) => {
                             queued.fetch_sub(1, Ordering::SeqCst);
-                            job();
+                            // A panicking job must not kill the worker:
+                            // the pool is fixed-size, so every lost
+                            // thread permanently shrinks serving
+                            // capacity. Contain the panic, log once,
+                            // keep draining the queue.
+                            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(job));
+                            if r.is_err() {
+                                warn_job_panicked();
+                            }
                         }
                         Err(_) => break, // channel closed: shut down
                     }
@@ -170,6 +194,22 @@ mod tests {
         let accepted = pool.try_submit(|| {});
         assert!(!accepted, "queue should be full");
         drop(held);
+    }
+
+    #[test]
+    fn panicking_job_does_not_kill_worker() {
+        let pool = ThreadPool::new(1, 8);
+        let before = jobs_panicked();
+        pool.submit(|| panic!("injected worker panic"));
+        // The single worker must survive to run the follow-up job.
+        let counter = Arc::new(AtomicU64::new(0));
+        let c = Arc::clone(&counter);
+        pool.submit(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+        assert!(jobs_panicked() > before);
     }
 
     #[test]

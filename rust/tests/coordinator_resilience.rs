@@ -1,0 +1,115 @@
+//! Panic containment in the serving path.
+//!
+//! PR 8's hot-path-panic paydown converted the coordinator's lock/ticket
+//! plumbing to poison-tolerant recovery (`lock_recover`/`wait_recover`)
+//! and made the sequencer's turn hand-off panic-safe via a drop guard.
+//! These tests inject worker panics at both seams and assert the lane
+//! keeps serving — no wedged turn, no permanently poisoned shard.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use tensorized_rp::coordinator::{IndexRegistry, MapKey, MapKind, WorkspacePool};
+use tensorized_rp::index::{BackendKind, LshConfig};
+use tensorized_rp::util::sync::poison_recoveries;
+
+fn two_shard_slot() -> tensorized_rp::coordinator::SharedIndex {
+    let reg = IndexRegistry::new(97, BackendKind::Flat, LshConfig::default()).with_shards(2);
+    reg.get_or_create(&MapKey { kind: MapKind::Tt { rank: 2 }, dims: vec![3; 4], k: 4 })
+}
+
+#[test]
+fn poisoned_shard_lock_does_not_wedge_the_lane() {
+    let slot = two_shard_slot();
+    // Inject the failure: a worker panics while holding shard 0's index
+    // lock, poisoning the mutex.
+    let holder = {
+        let slot = Arc::clone(&slot);
+        std::thread::spawn(move || {
+            let _guard = slot.lock_shard(0);
+            panic!("injected worker crash while holding the shard lock");
+        })
+    };
+    assert!(holder.join().is_err(), "injected panic should propagate to join");
+
+    let before = poison_recoveries();
+    // Continued service: a sequenced insert pass on the poisoned shard
+    // must recover the lock and apply its write.
+    let (shard, ticket) = slot.issue_tickets(&[0])[0];
+    slot.run_shard_turn(shard, ticket, |index| index.insert(11, &[0.25, 1.0, 0.0, -0.5]));
+    assert_eq!(slot.shard_lens(), vec![1, 0]);
+    assert!(poison_recoveries() > before, "recovery path should be the one that served");
+
+    // And reads still answer on the same shard.
+    let pool = WorkspacePool::new();
+    let mut ws = pool.acquire();
+    let (shard, ticket) = slot.issue_tickets(&[0])[0];
+    let hits =
+        slot.run_shard_turn(shard, ticket, |index| index.query(&[0.25, 1.0, 0.0, -0.5], 1, &mut ws));
+    assert_eq!(hits.len(), 1);
+    assert_eq!(hits[0].id, 11);
+}
+
+#[test]
+fn panicking_pass_hands_the_turn_to_the_next_ticket() {
+    let slot = two_shard_slot();
+    let (s0, t0) = slot.issue_tickets(&[0])[0];
+    let (s1, t1) = slot.issue_tickets(&[0])[0];
+    assert_eq!((s0, t0, s1, t1), (0, 0, 0, 1));
+
+    // Inject the failure: the first ticket's pass panics mid-turn.
+    let outcome = catch_unwind(AssertUnwindSafe(|| {
+        slot.run_shard_turn(s0, t0, |_index| {
+            panic!("injected pass failure");
+        })
+    }));
+    assert!(outcome.is_err(), "injected panic should unwind out of the pass");
+
+    // Continued service: the follower ticket's pass must run. If the
+    // drop guard failed to advance the turn this would block forever,
+    // so drive it on a thread under a watchdog instead of inline.
+    let follower = {
+        let slot = Arc::clone(&slot);
+        std::thread::spawn(move || {
+            slot.run_shard_turn(s1, t1, |index| index.insert(21, &[1.0, 0.0, 0.0, 0.0]));
+        })
+    };
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !follower.is_finished() {
+        assert!(
+            Instant::now() < deadline,
+            "lane wedged: the turn did not advance past the panicking pass"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    follower.join().expect("follower pass completes normally");
+    assert_eq!(slot.shard_lens(), vec![1, 0]);
+
+    // The untouched lane was never involved and still sequences from 0.
+    let (shard, ticket) = slot.issue_tickets(&[1])[0];
+    assert_eq!((shard, ticket), (1, 0));
+    slot.run_shard_turn(shard, ticket, |index| index.insert(22, &[0.0, 1.0, 0.0, 0.0]));
+    assert_eq!(slot.shard_lens(), vec![1, 1]);
+}
+
+#[test]
+fn barrier_still_covers_every_lane_after_a_panic() {
+    // A panic on one lane must not desync issue_barrier's per-lane
+    // tickets: drain a full barrier after an injected failure.
+    let slot = two_shard_slot();
+    let (shard, ticket) = slot.issue_tickets(&[1])[0];
+    let _ = catch_unwind(AssertUnwindSafe(|| {
+        slot.run_shard_turn(shard, ticket, |_index| {
+            panic!("injected pass failure");
+        });
+    }));
+
+    for (shard, ticket) in slot.issue_barrier() {
+        let base = 30 + shard as u64;
+        slot.run_shard_turn(shard, ticket, |index| {
+            index.insert(base, &[0.5, 0.5, 0.5, 0.5])
+        });
+    }
+    assert_eq!(slot.shard_lens(), vec![1, 1]);
+}

@@ -71,7 +71,7 @@ fn true_topk(corpus: &[TtTensor], q: &TtTensor, k: usize) -> Vec<u64> {
             (d2, i as u64)
         })
         .collect();
-    d.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    d.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
     d.truncate(k);
     d.into_iter().map(|(_, i)| i).collect()
 }

@@ -1,0 +1,91 @@
+//! Regression tests for the `float-total-order` paydown.
+//!
+//! PR 8 replaced every `partial_cmp().unwrap()` float sort in the tree
+//! with `f64::total_cmp`. These tests pin the claim that made the swap
+//! safe: on NaN-free data the two comparators induce bit-identical
+//! orderings (total_cmp additionally orders -0.0 below +0.0, which the
+//! fixtures below avoid — no sort site in the tree distinguishes signed
+//! zeros), and unlike the old comparator total_cmp cannot panic.
+
+use tensorized_rp::rng::Rng;
+use tensorized_rp::util::stats::Summary;
+
+/// Gaussian draws plus the awkward magnitudes: exact duplicates, zero,
+/// subnormals, and extreme exponents. No NaN, no -0.0.
+fn nan_free_fixture(seed: u64, n: usize) -> Vec<f64> {
+    let mut rng = Rng::seed_from(seed);
+    let mut xs = rng.gaussian_vec(n, 1.0);
+    xs.push(0.0);
+    xs.push(1.0);
+    xs.push(1.0);
+    xs.push(-1.0);
+    xs.push(f64::MIN_POSITIVE / 4.0); // subnormal
+    xs.push(f64::MAX);
+    xs.push(f64::MIN);
+    xs.push(f64::EPSILON);
+    xs
+}
+
+#[test]
+fn total_cmp_sort_is_bit_identical_to_partial_cmp_on_nan_free_data() {
+    for seed in [3, 41, 271, 828] {
+        let xs = nan_free_fixture(seed, 997);
+        let mut by_total = xs.clone();
+        by_total.sort_by(f64::total_cmp);
+        let mut by_partial = xs.clone();
+        // lint:allow(float-total-order): this is the regression fixture — it deliberately reproduces the replaced comparator to prove the swap changed no ordering.
+        by_partial.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+        assert_eq!(bits(&by_total), bits(&by_partial), "seed {seed}");
+    }
+}
+
+#[test]
+fn dist_then_id_tiebreak_matches_old_comparator() {
+    // The index query paths sort (distance, id) pairs; duplicate
+    // distances exercise the id tiebreak both comparators share.
+    let mut rng = Rng::seed_from(7);
+    let mut pairs: Vec<(f64, u64)> = rng
+        .gaussian_vec(500, 1.0)
+        .into_iter()
+        .enumerate()
+        .map(|(i, d)| (d.abs(), i as u64))
+        .collect();
+    let dups: Vec<(f64, u64)> = pairs[..100].iter().map(|&(d, id)| (d, id + 10_000)).collect();
+    pairs.extend(dups);
+    let mut by_total = pairs.clone();
+    by_total.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    let mut by_partial = pairs;
+    // lint:allow(float-total-order): regression fixture for the replaced tuple comparator (see above).
+    by_partial.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    let key = |v: &[(f64, u64)]| v.iter().map(|(d, id)| (d.to_bits(), *id)).collect::<Vec<_>>();
+    assert_eq!(key(&by_total), key(&by_partial));
+}
+
+#[test]
+fn summary_percentiles_unchanged_by_the_comparator_swap() {
+    // Summary::of sorts internally; recompute its order statistics with
+    // the old comparator and check bit equality of every reported field.
+    let xs = nan_free_fixture(1234, 503);
+    let s = Summary::of(&xs);
+    let mut sorted = xs.clone();
+    // lint:allow(float-total-order): regression fixture for the replaced comparator (see above).
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert_eq!(s.min.to_bits(), sorted[0].to_bits());
+    assert_eq!(s.max.to_bits(), sorted[sorted.len() - 1].to_bits());
+    let pct = |p: f64| tensorized_rp::util::stats::percentile_sorted(&sorted, p);
+    assert_eq!(s.median.to_bits(), pct(50.0).to_bits());
+    assert_eq!(s.p95.to_bits(), pct(95.0).to_bits());
+}
+
+#[test]
+fn total_cmp_stays_total_where_the_old_comparator_panicked() {
+    // The motivating failure mode: one NaN distance (e.g. a 0/0 from a
+    // degenerate norm) turned a query into a panic under
+    // partial_cmp().unwrap(). total_cmp sorts it deterministically last.
+    let mut xs = vec![2.0, f64::NAN, -1.0, f64::INFINITY, 0.5, f64::NEG_INFINITY];
+    xs.sort_by(f64::total_cmp);
+    assert_eq!(xs[0], f64::NEG_INFINITY);
+    assert_eq!(xs[4], f64::INFINITY);
+    assert!(xs[5].is_nan(), "positive NaN sorts above +inf in the total order");
+}

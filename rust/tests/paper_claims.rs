@@ -238,7 +238,7 @@ fn complexity_scaling_is_linear_in_order() {
             std::hint::black_box(f.project_tt(&x));
             ts.push(t.elapsed_secs());
         }
-        ts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        ts.sort_by(f64::total_cmp);
         ts[2]
     };
     let t8 = time_for(8, &mut rng);

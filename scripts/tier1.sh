@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
-# Tier-1 gate for the rust crate: build + tests are hard requirements, and
-# — now that the tree is lint-clean — `cargo fmt --check` and
-# `cargo clippy -- -D warnings` gate by default. Set TIER1_STRICT=0 to
+# Tier-1 gate for the rust crate: build + tests + the in-repo static
+# analysis (`trp lint`) are hard requirements, and `cargo fmt --check`
+# and `cargo clippy -- -D warnings` gate by default. Set TIER1_STRICT=0 to
 # demote them back to advisory (e.g. on a machine with a divergent
 # rustfmt/clippy version).
 #
@@ -65,6 +65,18 @@ fi
 if [ "$fail" -eq 0 ]; then
   echo "== tier1: tracing zero-perturbation (obs_props) =="
   cargo test -q --test obs_props || fail=1
+fi
+
+# The determinism/concurrency static-analysis pass is gated on a clean
+# tree: zero unwaived findings across the six rules (float-total-order,
+# no-fma, hot-path-panic, unordered-iteration, unsafe-audit,
+# relaxed-handoff), an empty baseline, and a written reason on every
+# waiver. Run both the in-tree meta-test and the CLI itself, so the gate
+# exercises the same binary CI exports (cheap — release build above).
+if [ "$fail" -eq 0 ]; then
+  echo "== tier1: static-analysis clean tree (lint_clean) =="
+  cargo test -q --test lint_clean || fail=1
+  cargo run -q --release --bin trp -- lint || fail=1
 fi
 
 advisory() {
