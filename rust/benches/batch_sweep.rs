@@ -14,8 +14,8 @@
 //! item-at-a-time at B = 16 (the dense tripwire from PR 1 stays).
 
 use tensorized_rp::experiments::batch::{
-    kernel_bench, print_kernel_verdict, print_trace_verdict, print_verdict, run, to_json,
-    trace_overhead, BatchSweepConfig,
+    kernel_bench, print_kernel_verdict, print_trace_verdict, print_verdict, print_wal_verdict,
+    run, to_json, trace_overhead, wal_overhead, BatchSweepConfig,
 };
 use tensorized_rp::util::bench::BenchReport;
 use tensorized_rp::util::cli::Args;
@@ -57,8 +57,13 @@ fn main() {
     // responses with tracing off vs on, bounded enabled-path overhead.
     let trow = trace_overhead(&cfg);
 
+    // Durability tripwire on the B = 16 insert point: bit-identical
+    // responses with the write-ahead log off vs on, and WAL-on
+    // retaining ≥ 80% of WAL-off insert throughput.
+    let wrow = wal_overhead(&cfg);
+
     // Machine-readable trajectory file: one series per (map, input).
-    let doc = to_json(&cfg, &rows, &krows, Some(&trow));
+    let doc = to_json(&cfg, &rows, &krows, Some(&trow), Some(&wrow));
     let out_path = args.get_or("out", "BENCH_batch_sweep.json");
     match std::fs::write(&out_path, doc.to_string_pretty()) {
         Ok(()) => println!("[written {out_path}]"),
@@ -68,4 +73,5 @@ fn main() {
     print_verdict(&rows);
     print_kernel_verdict(&krows);
     print_trace_verdict(&trow);
+    print_wal_verdict(&wrow);
 }

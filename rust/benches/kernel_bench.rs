@@ -74,7 +74,7 @@ fn main() {
         .ok()
         .and_then(|s| Json::parse(&s).ok())
         .filter(|d| matches!(d, Json::Obj(_)))
-        .unwrap_or_else(|| to_json(&cfg, &[], &[], None));
+        .unwrap_or_else(|| to_json(&cfg, &[], &[], None, None));
     if let Json::Obj(map) = &mut doc {
         map.insert("kernel".to_string(), kernel_json(&krows));
     }

@@ -9,12 +9,13 @@
 //! a total order, the numeric core never fuses multiply-adds, the
 //! serving path never panics, hash-map iteration order never reaches an
 //! output, `unsafe` stays inside three audited modules with written
-//! justifications, and `Ordering::Relaxed` never carries a cross-thread
-//! handoff. This module checks all six textually:
+//! justifications, `Ordering::Relaxed` never carries a cross-thread
+//! handoff, and the durability files never publish or acknowledge bytes
+//! that were not fsynced. This module checks all seven textually:
 //!
 //! * [`lexer`] strips comments and literal bodies so rules match only
 //!   real code;
-//! * [`rules`] holds the six-rule catalog with its scoping tables;
+//! * [`rules`] holds the seven-rule catalog with its scoping tables;
 //! * [`baseline`] grandfathers known findings by content hash;
 //! * this file runs the engine: source walk, waiver resolution, report
 //!   assembly, text/JSON rendering.

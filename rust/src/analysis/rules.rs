@@ -19,15 +19,23 @@ pub const RULE_IDS: &[&str] = &[
     "unordered-iteration",
     "unsafe-audit",
     "relaxed-handoff",
+    "fsync-discipline",
 ];
 
-/// Hot serving path: a panic here kills a worker or wedges a lane.
+/// Hot serving path: a panic here kills a worker or wedges a lane. The
+/// WAL engine is on it — an append or group-commit runs inside every
+/// mutation flush.
 const HOT_PATHS: &[&str] = &[
     "src/coordinator/server.rs",
     "src/coordinator/net.rs",
     "src/coordinator/state.rs",
     "src/coordinator/batcher.rs",
+    "src/index/wal.rs",
 ];
+
+/// Durability-critical files: bytes these write must actually reach the
+/// disk before a rename publishes them or an `Ok` acknowledges them.
+const FSYNC_SCOPE: &[&str] = &["src/index/wal.rs", "src/index/persist.rs"];
 
 /// Modules where `mul_add`/FMA would silently change numeric results
 /// between builds (fused vs separate rounding).
@@ -45,6 +53,8 @@ const ITER_SCOPE: &[&str] = &[
     "src/obs/registry.rs",
     "src/obs/gemm_stats.rs",
 ];
+// The prefix covers the whole index subsystem, WAL included: replay
+// order and snapshot bytes must not inherit hash-iteration order.
 const ITER_SCOPE_PREFIXES: &[&str] = &["src/index/"];
 
 /// The only modules allowed to contain `unsafe` at all; each block must
@@ -90,6 +100,15 @@ const RELAXED_IDENT_ALLOW: &[&str] = &[
     "GEMM_THREADS",
     "POISON_RECOVERIES",
     "JOBS_PANICKED",
+    // WAL watermarks and counters: `wal_seq`/`wal_covered` are per-lane
+    // monotonic marks read in-turn (the lane turn mutex anchors their
+    // visibility); the rest are display-only metrics.
+    "wal_seq",
+    "wal_covered",
+    "wal_appends",
+    "wal_fsyncs",
+    "wal_replayed",
+    "wal_lag",
 ];
 
 fn is_ident_char(c: char) -> bool {
@@ -133,6 +152,7 @@ pub fn run_rules(path: &str, lines: &[StrippedLine]) -> Vec<Diagnostic> {
     unordered_iteration(path, lines, &mut out);
     unsafe_audit(path, lines, &mut out);
     relaxed_handoff(path, lines, &mut out);
+    fsync_discipline(path, lines, &mut out);
     out
 }
 
@@ -390,6 +410,58 @@ fn relaxed_handoff(path: &str, lines: &[StrippedLine], out: &mut Vec<Diagnostic>
     }
 }
 
+/// `fsync-discipline`: in the durability-critical files, a rename that
+/// publishes freshly written bytes without an intervening `sync_all` /
+/// `sync_data` leaves a crash window where the name exists but the
+/// content does not — the OS may reorder the metadata commit ahead of
+/// the data flush. Likewise `let _ =` on a sync call throws away the
+/// only signal that the bytes did NOT reach the platter; durability
+/// errors must propagate to the caller. The scan is linear (a sync on
+/// any line settles earlier writes), which matches the straight-line
+/// write→sync→rename shape both files use.
+fn fsync_discipline(path: &str, lines: &[StrippedLine], out: &mut Vec<Diagnostic>) {
+    if !FSYNC_SCOPE.contains(&path) {
+        return;
+    }
+    let cutoff = test_cutoff(lines);
+    let mut dirty_write: Option<usize> = None;
+    for (i, l) in lines.iter().enumerate().take(cutoff) {
+        let code = &l.code;
+        if code.contains("sync_all") || code.contains("sync_data") {
+            if code.trim_start().starts_with("let _ =") {
+                out.push(diag(
+                    "fsync-discipline",
+                    path,
+                    i + 1,
+                    "fsync result discarded with `let _ =`; a durability error must propagate"
+                        .into(),
+                ));
+            }
+            dirty_write = None;
+            continue;
+        }
+        // `.write(true)` is the OpenOptions builder, not a write.
+        let writes = code.contains(".write_all(")
+            || (code.contains(".write(") && !code.contains(".write(true)"));
+        if writes {
+            dirty_write = Some(i + 1);
+        }
+        if code.contains("rename(") {
+            if let Some(w) = dirty_write.take() {
+                out.push(diag(
+                    "fsync-discipline",
+                    path,
+                    i + 1,
+                    format!(
+                        "rename publishes bytes written at line {w} with no intervening \
+                         sync_all/sync_data; a crash can leave the name without the content"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::super::lexer::strip;
@@ -477,6 +549,31 @@ mod tests {
             rules_of(&run_on("src/coordinator/server.rs", handoff)),
             vec!["relaxed-handoff"]
         );
+    }
+
+    #[test]
+    fn fsync_discipline_requires_sync_between_write_and_rename() {
+        let dirty = "f.write_all(&buf)?;\nstd::fs::rename(&tmp, &path)?;\n";
+        let d = run_on("src/index/persist.rs", dirty);
+        assert_eq!(rules_of(&d), vec!["fsync-discipline"]);
+        assert_eq!(d[0].line, 2);
+        let synced =
+            "f.write_all(&buf)?;\nf.sync_all().map_err(|e| e.to_string())?;\nstd::fs::rename(&tmp, &path)?;\n";
+        assert!(run_on("src/index/persist.rs", synced).is_empty());
+        // Out of scope: ordinary files may rename freely.
+        assert!(run_on("src/util/csv.rs", dirty).is_empty());
+    }
+
+    #[test]
+    fn fsync_discipline_flags_discarded_sync_result() {
+        let src = "let _ = dir.sync_all();\n";
+        assert_eq!(rules_of(&run_on("src/index/wal.rs", src)), vec!["fsync-discipline"]);
+        assert!(run_on("src/index/wal.rs", "dir.sync_all().map_err(|e| e.to_string())?;\n")
+            .is_empty());
+        // The OpenOptions builder's `.write(true)` is not a write.
+        let open =
+            "let f = OpenOptions::new().write(true).open(&p)?;\nstd::fs::rename(&p, &q)?;\n";
+        assert!(run_on("src/index/wal.rs", open).is_empty());
     }
 
     #[test]

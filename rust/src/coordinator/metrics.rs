@@ -126,6 +126,13 @@ pub struct Metrics {
     pub index_shard_skew_now: AtomicU64,
     /// Last-sampled count of concurrently executing shard passes.
     pub index_shard_parallel_now: AtomicU64,
+    /// WAL records appended (inserts + deletes logged; 0 with WAL off).
+    pub wal_appends: AtomicU64,
+    /// WAL group-commit fsyncs issued (one per touched lane per flush
+    /// under the `flush` policy — the batching is what this counts).
+    pub wal_fsyncs: AtomicU64,
+    /// WAL records replayed by startup crash recovery.
+    pub wal_replayed: AtomicU64,
     /// End-to-end latency (submit → response), recorded for successful
     /// *and* failed replies so error tail latency is visible.
     pub e2e_latency: LatencyHistogram,
@@ -170,6 +177,12 @@ pub struct MetricsSnapshot {
     pub index_shard_skew_now: u64,
     /// See [`Metrics::index_shard_parallel_now`].
     pub index_shard_parallel_now: u64,
+    /// See [`Metrics::wal_appends`].
+    pub wal_appends: u64,
+    /// See [`Metrics::wal_fsyncs`].
+    pub wal_fsyncs: u64,
+    /// See [`Metrics::wal_replayed`].
+    pub wal_replayed: u64,
     /// Mean end-to-end latency (µs).
     pub mean_latency_us: f64,
     /// p50 end-to-end latency (µs, interpolated within its bucket).
@@ -205,6 +218,9 @@ impl Metrics {
             index_shard_parallel: self.index_shard_parallel.load(Ordering::Relaxed),
             index_shard_skew_now: self.index_shard_skew_now.load(Ordering::Relaxed),
             index_shard_parallel_now: self.index_shard_parallel_now.load(Ordering::Relaxed),
+            wal_appends: self.wal_appends.load(Ordering::Relaxed),
+            wal_fsyncs: self.wal_fsyncs.load(Ordering::Relaxed),
+            wal_replayed: self.wal_replayed.load(Ordering::Relaxed),
             mean_latency_us: self.e2e_latency.mean_us(),
             p50_latency_us: self.e2e_latency.quantile_us(0.50),
             p99_latency_us: self.e2e_latency.quantile_us(0.99),

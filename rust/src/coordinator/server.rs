@@ -28,8 +28,8 @@ use super::state::{
     WorkspacePool,
 };
 use crate::index::{
-    combine_stats, shard_of, AnnIndex, BackendKind, IndexSnapshot, IndexStats, LshConfig,
-    Neighbor, SnapshotReport,
+    combine_stats, shard_of, wal, AnnIndex, BackendKind, IndexSnapshot, IndexStats, LshConfig,
+    Neighbor, SnapshotReport, WalConfig, WalFsync,
 };
 use crate::obs::{Span, Stage};
 use crate::projections::Workspace;
@@ -100,6 +100,21 @@ pub struct CoordinatorConfig {
     /// tracing entirely — the per-request cost is then a single relaxed
     /// atomic load, and responses are bit-identical either way.
     pub trace: Option<crate::obs::TraceConfig>,
+    /// Write-ahead log directory (`trp serve --wal-dir`). Every insert
+    /// and delete is appended to a per-signature, per-shard-lane
+    /// segmented log inside its sequencer turn, group-commit fsynced once
+    /// per lane per flush, and replayed over the newest snapshot
+    /// checkpoint at startup ([`IndexRegistry::recover_wal`]). `None`
+    /// disables the WAL entirely — responses are bit-identical either
+    /// way. Requires `snapshot_dir` (checkpoints are snapshot cuts).
+    pub wal_dir: Option<std::path::PathBuf>,
+    /// WAL segment rotation cap in bytes (`--wal-segment-cap`).
+    pub wal_segment_cap: u64,
+    /// WAL group-commit policy (`--wal-fsync {flush,every-<n>}`):
+    /// `Flush` fsyncs every flush that appended (acked ⇒ durable);
+    /// `EveryN(n)` trades the crash-durability of up to `n` acked ops
+    /// per lane for fewer fsyncs.
+    pub wal_fsync: WalFsync,
 }
 
 impl Default for CoordinatorConfig {
@@ -122,6 +137,9 @@ impl Default for CoordinatorConfig {
             default_k: 64,
             dense_gaussian_limit: 1 << 20,
             trace: None,
+            wal_dir: None,
+            wal_segment_cap: wal::DEFAULT_SEGMENT_CAP,
+            wal_fsync: WalFsync::Flush,
         }
     }
 }
@@ -182,6 +200,11 @@ impl Shared {
         for slot in self.indexes.all_slots() {
             skew = skew.max(slot.max_skew());
             parallel = parallel.max(slot.active_passes());
+            // Replay-cost signal: ops logged above the last checkpoint.
+            self.sigs
+                .get(&slot.key.label())
+                .wal_lag
+                .store(slot.wal_lag(), Ordering::Relaxed);
         }
         self.metrics.index_shard_skew_now.store(skew, Ordering::Relaxed);
         self.metrics.index_shard_parallel_now.store(parallel, Ordering::Relaxed);
@@ -202,11 +225,19 @@ impl Coordinator {
     /// # Panics
     /// When `snapshot_every_ops > 0` without a `snapshot_dir`: a server
     /// that believes periodic durability is on but can never write a
-    /// snapshot must fail at startup, not at the first crash.
+    /// snapshot must fail at startup, not at the first crash. Likewise
+    /// when `wal_dir` is set without a `snapshot_dir` (WAL checkpoints
+    /// are snapshot cuts), or when WAL recovery fails — serving over a
+    /// corrupt or silently rolled-back corpus is worse than refusing to
+    /// start.
     pub fn start(cfg: CoordinatorConfig, engine: Option<PjrtEngine>) -> Self {
         assert!(
             cfg.snapshot_every_ops == 0 || cfg.snapshot_dir.is_some(),
             "snapshot_every_ops requires snapshot_dir"
+        );
+        assert!(
+            cfg.wal_dir.is_none() || cfg.snapshot_dir.is_some(),
+            "wal_dir requires snapshot_dir (WAL checkpoints are snapshot cuts)"
         );
         // One clock epoch shared with the trace recorder, so span
         // timestamps line up with `queued_us`/`exec_us` in responses.
@@ -230,7 +261,12 @@ impl Coordinator {
             indexes: IndexRegistry::new(cfg.master_seed, cfg.index_backend, cfg.lsh)
                 .with_snapshot_dir(cfg.snapshot_dir.clone())
                 .with_snapshot_keep(cfg.snapshot_keep)
-                .with_shards(cfg.index_shards),
+                .with_shards(cfg.index_shards)
+                .with_wal(cfg.wal_dir.clone().map(|dir| WalConfig {
+                    dir,
+                    segment_cap: cfg.wal_segment_cap.max(1),
+                    fsync: cfg.wal_fsync,
+                })),
             engine,
             metrics: Metrics::new(),
             sigs: crate::obs::MetricsRegistry::new(),
@@ -251,6 +287,23 @@ impl Coordinator {
             .metrics
             .native_flush_max
             .store(initial_flush_max, Ordering::Relaxed);
+        // WAL crash recovery runs before the dispatcher exists, so the
+        // first request already observes the pre-crash state (no-op with
+        // the WAL off). A failure is fatal by design — see `# Panics`.
+        let recovered = shared.indexes.recover_wal();
+        assert!(
+            recovered.is_ok(),
+            "wal recovery failed: {}",
+            recovered.as_ref().err().map(String::as_str).unwrap_or("")
+        );
+        if let Ok((sigs, replayed)) = recovered {
+            shared.metrics.wal_replayed.fetch_add(replayed, Ordering::Relaxed);
+            if replayed > 0 {
+                eprintln!(
+                    "[coordinator] wal recovery: replayed {replayed} record(s) across {sigs} signature(s)"
+                );
+            }
+        }
         let (tx, rx) = sync_channel::<Envelope>(cfg.queue_cap);
         let dispatcher = {
             let shared = Arc::clone(&shared);
@@ -885,9 +938,12 @@ fn run_native_batch(
         // released, so big-corpus snapshots no longer stall the
         // signature's lanes. `cut_marks` records each lane's noted-
         // mutation watermark at the same position — advanced into the
-        // covered watermark only after the write succeeds.
+        // covered watermark only after the write succeeds — plus the
+        // lane's WAL seq at the cut (the checkpoint watermark written
+        // into the manifest; 0 with the WAL off).
         let mut captures: Vec<Vec<IndexSnapshot>> = (0..items.len()).map(|_| Vec::new()).collect();
-        let mut cut_marks: Vec<Vec<(usize, u64)>> = (0..items.len()).map(|_| Vec::new()).collect();
+        let mut cut_marks: Vec<Vec<(usize, u64, u64)>> =
+            (0..items.len()).map(|_| Vec::new()).collect();
         // Periodic snapshot decision, made up front: the captures must
         // happen inside the lane turns, but whether this flush crosses
         // the threshold is only exactly known afterwards — so the
@@ -910,7 +966,7 @@ fn run_native_batch(
             && barrier_held
             && slot.pending_mutations() + flush_mut_bound >= shared.cfg.snapshot_every_ops;
         let mut periodic_captures: Vec<IndexSnapshot> = Vec::new();
-        let mut periodic_marks: Vec<(usize, u64)> = Vec::new();
+        let mut periodic_marks: Vec<(usize, u64, u64)> = Vec::new();
         // k-way merge time, accumulated across every scored run of every
         // shard pass (recorded once per flush below).
         let mut merge_us = 0u64;
@@ -956,7 +1012,23 @@ fn run_native_batch(
                                     &mut ws,
                                     &mut merge_us,
                                 );
-                                index.insert(it.id, &out[r * k..(r + 1) * k]);
+                                let row = &out[r * k..(r + 1) * k];
+                                // Log-before-apply: an op that cannot be
+                                // made durable must not mutate (its reply
+                                // carries the error instead of an ack).
+                                match slot.wal_append(s, wal::WAL_OP_INSERT, it.id, row) {
+                                    Ok(Some(_)) => {
+                                        shared.metrics.wal_appends.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                    Ok(None) => {}
+                                    Err(e) => {
+                                        op_errors[i].get_or_insert_with(|| {
+                                            format!("wal append failed: {e}")
+                                        });
+                                        continue;
+                                    }
+                                }
+                                index.insert(it.id, row);
                                 slot.note_shard_mutations(s, 1);
                                 shared.metrics.index_inserts.fetch_add(1, Ordering::Relaxed);
                             }
@@ -973,6 +1045,21 @@ fn run_native_batch(
                                     &mut ws,
                                     &mut merge_us,
                                 );
+                                // A delete of an absent id still logs (the
+                                // replayed remove is the same no-op), so
+                                // replay never needs the pre-image.
+                                match slot.wal_append(s, wal::WAL_OP_DELETE, target, &[]) {
+                                    Ok(Some(_)) => {
+                                        shared.metrics.wal_appends.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                    Ok(None) => {}
+                                    Err(e) => {
+                                        op_errors[i].get_or_insert_with(|| {
+                                            format!("wal append failed: {e}")
+                                        });
+                                        continue;
+                                    }
+                                }
                                 let hit = index.remove(target);
                                 removed[i] = Some(hit);
                                 slot.note_shard_mutations(s, hit as u64);
@@ -1015,7 +1102,7 @@ fn run_native_batch(
                                     slot.key.encode(),
                                     index.as_ref(),
                                 ));
-                                cut_marks[i].push((s, slot.shard_noted(s)));
+                                cut_marks[i].push((s, slot.shard_noted(s), slot.wal_seq(s)));
                             }
                         }
                         RequestOp::Restore => {
@@ -1046,7 +1133,17 @@ fn run_native_batch(
                                     // The reload discarded everything
                                     // applied to this lane so far; mark
                                     // it covered at this position.
-                                    cut_marks[i].push((s, slot.shard_noted(s)));
+                                    cut_marks[i].push((s, slot.shard_noted(s), 0));
+                                    // The logged tail predates the restored
+                                    // snapshot — replaying it would
+                                    // resurrect the ops the reload just
+                                    // discarded, so the lane's log restarts
+                                    // here.
+                                    if let Err(e) = slot.wal_reset(s) {
+                                        op_errors[i].get_or_insert_with(|| {
+                                            format!("wal reset failed: {e}")
+                                        });
+                                    }
                                 }
                             }
                         }
@@ -1068,7 +1165,7 @@ fn run_native_batch(
                     // full barrier, so every lane contributes).
                     periodic_captures
                         .push(IndexSnapshot::capture(slot.key.encode(), index.as_ref()));
-                    periodic_marks.push((s, slot.shard_noted(s)));
+                    periodic_marks.push((s, slot.shard_noted(s), slot.wal_seq(s)));
                 }
             });
             let t_scan1 = shared.now_us();
@@ -1087,6 +1184,47 @@ fn run_native_batch(
         }
         if !query_items.is_empty() {
             sig.record_stage(Stage::Merge, merge_us);
+        }
+        // Group commit: one `sync_data` per touched lane per flush (not
+        // per op), after every lane's turn released and before any reply
+        // goes out — an acked mutation is a durable one under the
+        // `flush` policy. On failure, every mutation this flush routed
+        // to the failing lane answers with an error instead of a
+        // silently-volatile ack.
+        if slot.wal_enabled() && flush_error.is_none() {
+            let fsync = shared
+                .indexes
+                .wal_config()
+                .map(|c| c.fsync)
+                .unwrap_or(WalFsync::Flush);
+            let t_f0 = shared.now_us();
+            let mut synced = false;
+            for &(s, _) in &tickets {
+                match slot.wal_commit(s, fsync) {
+                    Ok(did) => {
+                        if did {
+                            synced = true;
+                            shared.metrics.wal_fsyncs.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                    Err(e) => {
+                        for (i, it) in items.iter().enumerate() {
+                            let on_lane = match it.op {
+                                RequestOp::Insert => shard_of(it.id, nshards) == s,
+                                RequestOp::Delete { target } => shard_of(target, nshards) == s,
+                                _ => false,
+                            };
+                            if on_lane {
+                                op_errors[i]
+                                    .get_or_insert_with(|| format!("wal fsync failed: {e}"));
+                            }
+                        }
+                    }
+                }
+            }
+            if synced {
+                sig.record_stage(Stage::WalFsync, shared.now_us().saturating_sub(t_f0));
+            }
         }
         // Every lane is released — serving continues while the frozen
         // captures are encoded and written (the COW half of the design),
@@ -1109,15 +1247,15 @@ fn run_native_batch(
                         continue;
                     }
                     let t_w0 = shared.now_us();
-                    let write = shared.indexes.write_snapshot(&slot, &captures[i]);
+                    let wal_marks = wal_mark_vec(&slot, nshards, &cut_marks[i]);
+                    let write =
+                        shared.indexes.write_snapshot_with_marks(&slot, &captures[i], &wal_marks);
                     record_snapshot_write(shared, &sig, flush_id, t_w0);
                     match write {
                         Ok(report) => {
                             shared.metrics.index_snapshots.fetch_add(1, Ordering::Relaxed);
                             snapshots[i] = Some(report);
-                            for &(s, w) in &cut_marks[i] {
-                                slot.cover_shard(s, w);
-                            }
+                            cover_cut(&slot, &cut_marks[i]);
                         }
                         Err(e) => op_errors[i] = Some(format!("snapshot failed: {e}")),
                     }
@@ -1130,7 +1268,7 @@ fn run_native_batch(
                         Ok(plan) => {
                             shared.metrics.index_restores.fetch_add(1, Ordering::Relaxed);
                             restored[i] = Some(plan.items);
-                            for &(s, w) in &cut_marks[i] {
+                            for &(s, w, _) in &cut_marks[i] {
                                 slot.cover_shard(s, w);
                             }
                         }
@@ -1142,14 +1280,14 @@ fn run_native_batch(
         }
         if periodic_due && flush_error.is_none() {
             let t_w0 = shared.now_us();
-            let write = shared.indexes.write_snapshot(&slot, &periodic_captures);
+            let wal_marks = wal_mark_vec(&slot, nshards, &periodic_marks);
+            let write =
+                shared.indexes.write_snapshot_with_marks(&slot, &periodic_captures, &wal_marks);
             record_snapshot_write(shared, &sig, flush_id, t_w0);
             match write {
                 Ok(_) => {
                     shared.metrics.index_snapshots.fetch_add(1, Ordering::Relaxed);
-                    for &(s, w) in &periodic_marks {
-                        slot.cover_shard(s, w);
-                    }
+                    cover_cut(&slot, &periodic_marks);
                 }
                 Err(e) => eprintln!("[coordinator] periodic snapshot failed: {e}"),
             }
@@ -1226,6 +1364,37 @@ fn run_native_batch(
         });
     }
     shared.workspaces.release_buf(out);
+}
+
+/// Per-lane WAL watermark vector for a snapshot write: the in-turn
+/// `wal_seq` readings recorded at the cut, indexed by lane. Empty with
+/// the WAL off, which keeps the manifest byte-identical to the WAL-less
+/// format. Snapshot cuts hold the full lane barrier, so every lane has
+/// an entry; a lane the cut somehow missed stays at watermark 0 (replay
+/// re-applies it — idempotent, never lossy).
+fn wal_mark_vec(slot: &SharedIndex, nshards: usize, cut: &[(usize, u64, u64)]) -> Vec<u64> {
+    if !slot.wal_enabled() {
+        return Vec::new();
+    }
+    let mut marks = vec![0u64; nshards];
+    for &(s, _, m) in cut {
+        marks[s] = m;
+    }
+    marks
+}
+
+/// After a snapshot write durably renamed its manifest: advance each
+/// lane's covered-mutation watermark (periodic-trigger accounting) and
+/// its covered WAL watermark (which truncates fully-covered segments).
+/// Truncation failure is a disk-space leak, not a correctness problem —
+/// recovery skips covered records — so it logs instead of failing ops.
+fn cover_cut(slot: &SharedIndex, cut: &[(usize, u64, u64)]) {
+    for &(s, w, m) in cut {
+        slot.cover_shard(s, w);
+        if let Err(e) = slot.wal_cover(s, m) {
+            eprintln!("[coordinator] wal truncation failed: {e}");
+        }
+    }
 }
 
 /// Record one snapshot-file write that started at `t_w0` (stage

@@ -8,7 +8,8 @@
 
 use crate::index::persist::{self, Cursor, ManifestShard, ShardManifest};
 use crate::index::{
-    build_index, shard_of, AnnIndex, BackendKind, IndexSnapshot, LshConfig, SnapshotReport,
+    build_index, shard_of, wal, AnnIndex, BackendKind, IndexSnapshot, LshConfig, SnapshotReport,
+    WalConfig, WalFsync, WalWriter,
 };
 use crate::projections::{
     CpProjection, GaussianProjection, Projection, SparseKind, SparseProjection, TtProjection,
@@ -376,6 +377,20 @@ struct ShardLane {
     /// commute: the pending count `noted − covered` can never be wiped by
     /// a stale baseline (mutations a cut did not capture stay pending).
     covered: AtomicU64,
+    /// This lane's WAL append handle (`None` when the WAL is off). The
+    /// inner `Result` turns a failed writer open into per-op error
+    /// replies instead of a panic on the serving path. Appended to only
+    /// inside the lane's sequencer turn; synced and truncated off-turn
+    /// (its own mutex, never held together with the index lock by those
+    /// callers, so no lock-order inversion).
+    wal: Option<Mutex<std::result::Result<WalWriter, String>>>,
+    /// Last appended WAL seq, mirrored out of the writer so gauges and
+    /// in-turn mark capture read it without the WAL mutex.
+    wal_seq: AtomicU64,
+    /// Highest WAL seq covered by a durable checkpoint (`fetch_max`, like
+    /// [`ShardLane::covered`]). `wal_seq − wal_covered` is the lane's
+    /// replay cost — the `index_wal_lag` gauge.
+    wal_covered: AtomicU64,
 }
 
 /// One signature's sharded ANN index: `S` backend shards, each behind its
@@ -426,11 +441,38 @@ pub struct IndexSlot {
 
 impl IndexSlot {
     fn new(key: MapKey, shards: Vec<Box<dyn AnnIndex>>) -> Self {
+        Self::new_with_wal(key, shards, None)
+    }
+
+    /// Like [`IndexSlot::new`], attaching one WAL writer per lane when
+    /// `wals` is present (`wals.len()` must equal the shard count). Every
+    /// writer arrives freshly opened with its covered watermark equal to
+    /// its last seq (startup always runs [`IndexRegistry::recover_wal`]
+    /// first), so the lag gauge starts at zero; an `Err` writer serves as
+    /// a sentinel that fails that lane's mutations loudly.
+    fn new_with_wal(
+        key: MapKey,
+        shards: Vec<Box<dyn AnnIndex>>,
+        wals: Option<Vec<std::result::Result<WalWriter, String>>>,
+    ) -> Self {
         assert!(!shards.is_empty(), "a slot needs at least one shard");
+        if let Some(w) = &wals {
+            assert!(w.len() == shards.len(), "one WAL writer per lane");
+        }
+        let mut wals: Vec<Option<std::result::Result<WalWriter, String>>> = match wals {
+            Some(v) => v.into_iter().map(Some).collect(),
+            None => (0..shards.len()).map(|_| None).collect(),
+        };
         let lanes = shards
             .into_iter()
-            .map(|index| {
+            .zip(wals.iter_mut())
+            .map(|(index, wal_state)| {
                 let len = index.len() as u64;
+                let wal_state = wal_state.take();
+                let seq = match &wal_state {
+                    Some(Ok(w)) => w.seq(),
+                    _ => 0,
+                };
                 ShardLane {
                     index: Mutex::new(index),
                     turn: Mutex::new(0),
@@ -439,6 +481,9 @@ impl IndexSlot {
                     len: AtomicU64::new(len),
                     noted: AtomicU64::new(0),
                     covered: AtomicU64::new(0),
+                    wal: wal_state.map(Mutex::new),
+                    wal_seq: AtomicU64::new(seq),
+                    wal_covered: AtomicU64::new(seq),
                 }
             })
             .collect();
@@ -492,6 +537,104 @@ impl IndexSlot {
                     .saturating_sub(l.covered.load(Ordering::Relaxed))
             })
             .sum()
+    }
+
+    /// True when this slot's lanes log to a write-ahead log.
+    pub fn wal_enabled(&self) -> bool {
+        self.lanes.first().is_some_and(|l| l.wal.is_some())
+    }
+
+    /// Append one op to a lane's WAL. MUST be called inside the lane's
+    /// sequencer turn — that is the whole durability design: replay order
+    /// equals arrival order because the log is written at the op's
+    /// arrival position. Returns the record's seq, or `None` when the WAL
+    /// is off. Durability requires a later [`IndexSlot::wal_commit`].
+    pub fn wal_append(
+        &self,
+        shard: usize,
+        op: u8,
+        id: u64,
+        payload: &[f64],
+    ) -> std::result::Result<Option<u64>, String> {
+        let lane = &self.lanes[shard];
+        let Some(w) = &lane.wal else { return Ok(None) };
+        let mut guard = lock_recover(w);
+        let writer = guard.as_mut().map_err(|e| e.clone())?;
+        let seq = writer.append(op, id, payload)?;
+        lane.wal_seq.store(seq, Ordering::Relaxed);
+        Ok(Some(seq))
+    }
+
+    /// Group-commit point for one lane: `sync_data` its segment per the
+    /// fsync policy (`Flush` syncs any unsynced appends; `EveryN` only
+    /// once N accumulate). Called once per touched lane per coordinator
+    /// flush — never per op. Returns whether a sync actually ran.
+    pub fn wal_commit(
+        &self,
+        shard: usize,
+        fsync: WalFsync,
+    ) -> std::result::Result<bool, String> {
+        let lane = &self.lanes[shard];
+        let Some(w) = &lane.wal else { return Ok(false) };
+        let mut guard = lock_recover(w);
+        let writer = guard.as_mut().map_err(|e| e.clone())?;
+        let due = match fsync {
+            WalFsync::Flush => writer.unsynced() > 0,
+            WalFsync::EveryN(n) => writer.unsynced() >= n,
+        };
+        if due {
+            writer.sync()?;
+        }
+        Ok(due)
+    }
+
+    /// Last appended WAL seq of one lane (0 when nothing was logged).
+    /// Read in-turn by snapshot cuts: the value is the checkpoint
+    /// watermark the capture covers.
+    pub fn wal_seq(&self, shard: usize) -> u64 {
+        self.lanes[shard].wal_seq.load(Ordering::Relaxed)
+    }
+
+    /// Ops logged but not yet covered by a durable checkpoint, summed
+    /// over lanes — the `index_wal_lag` gauge (replay cost on crash).
+    pub fn wal_lag(&self) -> u64 {
+        self.lanes
+            .iter()
+            .map(|l| {
+                l.wal_seq
+                    .load(Ordering::Relaxed)
+                    .saturating_sub(l.wal_covered.load(Ordering::Relaxed))
+            })
+            .sum()
+    }
+
+    /// Advance one lane's WAL covered watermark after its checkpoint
+    /// manifest was durably renamed, and truncate fully covered segments.
+    /// Off-turn safe: takes only the lane's WAL mutex. Returns the number
+    /// of deleted segments.
+    pub fn wal_cover(&self, shard: usize, mark: u64) -> std::result::Result<usize, String> {
+        let lane = &self.lanes[shard];
+        let Some(w) = &lane.wal else { return Ok(0) };
+        lane.wal_covered.fetch_max(mark, Ordering::Relaxed);
+        let mut guard = lock_recover(w);
+        let writer = guard.as_mut().map_err(|e| e.clone())?;
+        writer.truncate_covered(mark)
+    }
+
+    /// Drop one lane's logged tail and start a fresh chain — the runtime
+    /// `restore` op rewinds the index to the newest snapshot, so replay
+    /// of the pre-restore tail over it would resurrect discarded ops.
+    /// Called inside the lane's turn at the restore's arrival position;
+    /// seq numbering continues, so post-restore records stay above every
+    /// older checkpoint watermark.
+    pub fn wal_reset(&self, shard: usize) -> std::result::Result<(), String> {
+        let lane = &self.lanes[shard];
+        let Some(w) = &lane.wal else { return Ok(()) };
+        let mut guard = lock_recover(w);
+        let writer = guard.as_mut().map_err(|e| e.clone())?;
+        writer.reset()?;
+        lane.wal_covered.fetch_max(writer.seq(), Ordering::Relaxed);
+        Ok(())
     }
 
 
@@ -621,6 +764,9 @@ pub struct IndexRegistry {
     snapshot_keep: usize,
     /// Shards per signature (minimum 1 = unsharded).
     shards: usize,
+    /// Write-ahead log configuration (`None` disables logging; requires
+    /// `snapshot_dir`, since checkpoints are snapshot cuts).
+    wal: Option<WalConfig>,
     indexes: Mutex<HashMap<MapKey, SharedIndex>>,
 }
 
@@ -735,6 +881,9 @@ struct SnapshotSource {
     deletes: u64,
     queries: u64,
     items: Vec<(u64, Vec<f64>)>,
+    /// Per-lane WAL watermarks this capture covers (empty for legacy or
+    /// WAL-less sequences).
+    wal_marks: Vec<u64>,
 }
 
 /// Read the newest restorable sequence of `stem` in `dir`. Manifest
@@ -801,7 +950,18 @@ fn read_snapshot_source(dir: &Path, stem: &str) -> std::result::Result<SnapshotS
             queries = queries.max(snap.queries);
             items.extend(snap.items);
         }
-        Ok(SnapshotSource { key, backend, lsh, seed, dim, inserts, deletes, queries, items })
+        Ok(SnapshotSource {
+            key,
+            backend,
+            lsh,
+            seed,
+            dim,
+            inserts,
+            deletes,
+            queries,
+            items,
+            wal_marks: manifest.wal_marks,
+        })
     } else {
         let Some(path) = files.legacy else {
             return Err("restorable sequence lost its root mid-read".into());
@@ -818,6 +978,7 @@ fn read_snapshot_source(dir: &Path, stem: &str) -> std::result::Result<SnapshotS
             deletes: snap.deletes,
             queries: snap.queries,
             items: snap.items,
+            wal_marks: Vec::new(),
         })
     }
 }
@@ -859,6 +1020,7 @@ impl IndexRegistry {
             snapshot_dir: None,
             snapshot_keep: DEFAULT_SNAPSHOT_KEEP,
             shards: DEFAULT_INDEX_SHARDS,
+            wal: None,
             indexes: Mutex::new(HashMap::new()),
         }
     }
@@ -881,6 +1043,19 @@ impl IndexRegistry {
     pub fn with_shards(mut self, shards: usize) -> Self {
         self.shards = shards.max(1);
         self
+    }
+
+    /// Enable the write-ahead log (builder-style). Callers must also
+    /// configure a snapshot directory — checkpoints are snapshot cuts,
+    /// and a WAL that can never truncate grows without bound.
+    pub fn with_wal(mut self, wal: Option<WalConfig>) -> Self {
+        self.wal = wal;
+        self
+    }
+
+    /// The configured WAL, when any.
+    pub fn wal_config(&self) -> Option<&WalConfig> {
+        self.wal.as_ref()
     }
 
     /// The configured snapshot directory, when any.
@@ -907,9 +1082,59 @@ impl IndexRegistry {
         let backends: Vec<Box<dyn AnnIndex>> = (0..self.shards)
             .map(|_| build_index(self.backend, key.k, &self.lsh, seed))
             .collect();
-        let slot = Arc::new(IndexSlot::new(key.clone(), backends));
+        // Fresh WAL lanes start above any checkpoint watermark already on
+        // disk for this signature, so records logged from here on can
+        // never be mistaken for already-covered ones by a later recovery.
+        let start = self.newest_checkpoint_mark(key) + 1;
+        let slot =
+            Arc::new(IndexSlot::new_with_wal(key.clone(), backends, self.make_wal_writers(key, start)));
         indexes.insert(key.clone(), Arc::clone(&slot));
         slot
+    }
+
+    /// One freshly opened WAL writer per lane for `key` (`None` when the
+    /// WAL is off). Open failures become `Err` sentinels — the lane
+    /// serves error replies for mutations instead of panicking.
+    fn make_wal_writers(
+        &self,
+        key: &MapKey,
+        fresh_start_seq: u64,
+    ) -> Option<Vec<std::result::Result<WalWriter, String>>> {
+        let cfg = self.wal.as_ref()?;
+        let stem = snapshot_file_stem(key);
+        Some(
+            (0..self.shards)
+                .map(|j| {
+                    WalWriter::open(
+                        &cfg.dir,
+                        &stem,
+                        j as u32,
+                        key.encode(),
+                        cfg.segment_cap,
+                        fresh_start_seq,
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    /// Highest WAL watermark recorded in `key`'s newest restorable
+    /// snapshot manifest (0 when there is none, or on any read problem —
+    /// best-effort by design: this only seeds fresh writers above stale
+    /// marks, and the infallible `get_or_create` path cannot surface an
+    /// error).
+    fn newest_checkpoint_mark(&self, key: &MapKey) -> u64 {
+        if self.wal.is_none() {
+            return 0;
+        }
+        let Some(dir) = self.snapshot_dir.as_ref() else { return 0 };
+        let stem = snapshot_file_stem(key);
+        let Ok(seqs) = list_sequences(dir, &stem) else { return 0 };
+        let Some(mpath) = seqs.into_iter().rev().find_map(|(_, f)| f.manifest) else { return 0 };
+        match ShardManifest::read(&mpath) {
+            Ok(m) => m.wal_marks.into_iter().max().unwrap_or(0),
+            Err(_) => 0,
+        }
     }
 
     /// Every live slot (for current-value gauges: the metrics snapshot
@@ -936,14 +1161,41 @@ impl IndexRegistry {
         slot: &IndexSlot,
         captures: &[IndexSnapshot],
     ) -> std::result::Result<SnapshotReport, String> {
-        let key = &slot.key;
+        self.write_snapshot_with_marks(slot, captures, &[])
+    }
+
+    /// [`IndexRegistry::write_snapshot`] with the per-lane WAL watermarks
+    /// the captures cover. The marks MUST be read at capture time (inside
+    /// each lane's turn, or under its index lock) — recording a later seq
+    /// would let recovery skip ops the snapshot never saw. WAL-enabled
+    /// callers must use this form; empty marks in a WAL-enabled manifest
+    /// would make recovery replay (double-apply) the whole log.
+    pub fn write_snapshot_with_marks(
+        &self,
+        slot: &IndexSlot,
+        captures: &[IndexSnapshot],
+        wal_marks: &[u64],
+    ) -> std::result::Result<SnapshotReport, String> {
+        // Serialize with this signature's other off-turn snapshot IO —
+        // concurrent writers would claim the same sequence number.
+        let _io = lock_recover(&slot.snapshot_io);
+        self.write_sequence(&slot.key, captures, wal_marks)
+    }
+
+    /// Write one snapshot sequence (shard files, then the manifest root,
+    /// then rotation pruning) with no slot locking — the startup WAL
+    /// recovery writes its checkpoint through here before any slot
+    /// exists; concurrent callers must hold the slot's `snapshot_io`.
+    fn write_sequence(
+        &self,
+        key: &MapKey,
+        captures: &[IndexSnapshot],
+        wal_marks: &[u64],
+    ) -> std::result::Result<SnapshotReport, String> {
         let dir = self.snapshot_dir.as_ref().ok_or("no snapshot_dir configured")?;
         if captures.is_empty() {
             return Err("snapshot write needs at least one shard capture".into());
         }
-        // Serialize with this signature's other off-turn snapshot IO —
-        // concurrent writers would claim the same sequence number.
-        let _io = lock_recover(&slot.snapshot_io);
         std::fs::create_dir_all(dir).map_err(|e| format!("create {}: {e}", dir.display()))?;
         let stem = snapshot_file_stem(key);
         let seq = list_sequences(dir, &stem)?.last().map(|(s, _)| s + 1).unwrap_or(1);
@@ -962,7 +1214,11 @@ impl IndexRegistry {
                 checksum: persist::fnv1a(&bytes),
             });
         }
-        let manifest = ShardManifest { key_bytes: key.encode(), shards: entries };
+        let manifest = ShardManifest {
+            key_bytes: key.encode(),
+            shards: entries,
+            wal_marks: wal_marks.to_vec(),
+        };
         let mpath = dir.join(format!("{stem}.{seq:08}.manifest"));
         bytes_total += manifest.write_atomic(&mpath)?;
         // Prune beyond the rotation depth. Orphan sequences (shard files
@@ -1008,18 +1264,28 @@ impl IndexRegistry {
         if self.snapshot_dir.is_none() {
             return Err("no snapshot_dir configured".into());
         }
+        let logged = slot.wal_enabled();
         let mut captures = Vec::with_capacity(slot.shards());
         let mut marks = Vec::with_capacity(slot.shards());
+        let mut wal_marks = Vec::with_capacity(if logged { slot.shards() } else { 0 });
         for s in 0..slot.shards() {
             let guard = slot.lock_shard(s);
             captures.push(IndexSnapshot::capture(slot.key.encode(), guard.as_ref()));
-            // Read under the index lock: mutation noting happens while
-            // that lock is held, so the watermark matches the capture.
+            // Read under the index lock: mutation noting (and WAL
+            // appending) happens while that lock is held, so the
+            // watermarks match the capture.
             marks.push((s, slot.shard_noted(s)));
+            if logged {
+                wal_marks.push(slot.wal_seq(s));
+            }
         }
-        let report = self.write_snapshot(slot, &captures)?;
+        let report = self.write_snapshot_with_marks(slot, &captures, &wal_marks)?;
         for (s, w) in marks {
             slot.cover_shard(s, w);
+        }
+        // The manifest rename is durable; covered segments may go now.
+        for (s, &m) in wal_marks.iter().enumerate() {
+            slot.wal_cover(s, m)?;
         }
         Ok(report)
     }
@@ -1075,6 +1341,9 @@ impl IndexRegistry {
             *guard = replacement;
             slot.lanes[s].len.store(len, Ordering::Relaxed);
             slot.cover_shard(s, slot.shard_noted(s));
+            // The logged tail predates the restored snapshot: replaying
+            // it over the rewound state would resurrect discarded ops.
+            slot.wal_reset(s)?;
             drop(guard);
         }
         Ok(plan.items)
@@ -1107,7 +1376,7 @@ impl IndexRegistry {
         }
         let mut indexes = lock_recover(&self.indexes);
         let mut items = 0u64;
-        let count = stems.len();
+        let mut count = 0usize;
         for stem in stems {
             let src = read_snapshot_source(dir, &stem).map_err(|e| format!("{stem}: {e}"))?;
             if src.dim != src.key.k {
@@ -1117,11 +1386,197 @@ impl IndexRegistry {
                 ));
             }
             let key = src.key.clone();
+            // WAL recovery already rebuilt this signature as snapshot +
+            // replayed tail — strictly newer than the snapshot alone, so
+            // a snapshot-only reload here would silently roll it back.
+            if self.wal.is_some() && indexes.contains_key(&key) {
+                continue;
+            }
+            count += 1;
             items += src.items.len() as u64;
+            // Fresh WAL lanes start above the restored checkpoint's own
+            // watermarks, so post-restore appends stay unambiguously
+            // newer than what this snapshot covers.
+            let start = src.wal_marks.iter().copied().max().unwrap_or(0) + 1;
+            let wals = self.make_wal_writers(&key, start);
             let shards = build_shards(src, self.shards);
-            indexes.insert(key.clone(), Arc::new(IndexSlot::new(key, shards)));
+            indexes.insert(key.clone(), Arc::new(IndexSlot::new_with_wal(key, shards, wals)));
         }
         Ok((count, items))
+    }
+
+    /// Startup crash recovery for the write-ahead log: for every
+    /// signature with WAL segments on disk, rebuild its index as
+    /// *newest restorable snapshot + replay of the logged tail*, then
+    /// checkpoint the recovered state and restart the log. Signatures
+    /// with snapshots but no WAL files load from their snapshots, so
+    /// recovery is self-contained (not gated on a restore flag). No-op
+    /// when the WAL is off. Returns `(signatures loaded, records
+    /// replayed)`.
+    ///
+    /// Must run before serving, single-threaded. Crash-safe at every
+    /// step: the recovered state is checkpointed with watermarks `[M]`
+    /// (`M` = highest seq any surviving record or old mark reaches)
+    /// *before* old segments are deleted, and fresh lanes start at
+    /// `M + 1` — so a crash mid-cleanup leaves only records a rerun
+    /// provably skips, and new appends can never collide with covered
+    /// seqs. Lane-count changes are safe for the same reason: a lane
+    /// index beyond the recorded marks falls back to `M`.
+    pub fn recover_wal(&self) -> std::result::Result<(usize, u64), String> {
+        let Some(cfg) = self.wal.clone() else { return Ok((0, 0)) };
+        let snap_dir = self
+            .snapshot_dir
+            .clone()
+            .ok_or("wal requires a snapshot_dir (checkpoints are snapshot cuts)")?;
+        std::fs::create_dir_all(&cfg.dir)
+            .map_err(|e| format!("create {}: {e}", cfg.dir.display()))?;
+        std::fs::create_dir_all(&snap_dir)
+            .map_err(|e| format!("create {}: {e}", snap_dir.display()))?;
+        let mut sigs = 0usize;
+        let mut replayed_total = 0u64;
+        for (stem, lanes) in wal::scan_dir(&cfg.dir)? {
+            // Read every lane's stream (BTreeMap: ascending shard id).
+            // `None` lanes (only a torn-header file) carry no records.
+            let mut streams: Vec<wal::LaneStream> = Vec::new();
+            let mut wal_key: Option<Vec<u8>> = None;
+            for (shard, files) in &lanes {
+                let Some(stream) = wal::read_lane(files).map_err(|e| format!("{stem}: {e}"))?
+                else {
+                    continue;
+                };
+                if stream.shard != *shard {
+                    return Err(format!(
+                        "{stem}: shard{shard} header names shard {}",
+                        stream.shard
+                    ));
+                }
+                match &wal_key {
+                    Some(k) if *k != stream.key_bytes => {
+                        return Err(format!("{stem}: lanes disagree on the signature encoding"));
+                    }
+                    Some(_) => {}
+                    None => wal_key = Some(stream.key_bytes.clone()),
+                }
+                streams.push(stream);
+            }
+            // Newest restorable snapshot of this signature, if any.
+            let has_snapshot = list_sequences(&snap_dir, &stem)
+                .map_err(|e| format!("{stem}: {e}"))?
+                .iter()
+                .any(|(_, f)| f.restorable());
+            let src = if has_snapshot {
+                Some(read_snapshot_source(&snap_dir, &stem).map_err(|e| format!("{stem}: {e}"))?)
+            } else {
+                None
+            };
+            // Resolve the signature; snapshot and WAL headers must agree.
+            let key = match (&src, &wal_key) {
+                (Some(s), Some(kb)) => {
+                    if s.key.encode() != *kb {
+                        return Err(format!(
+                            "{stem}: wal lanes belong to a different signature than the snapshot"
+                        ));
+                    }
+                    s.key.clone()
+                }
+                (Some(s), None) => s.key.clone(),
+                (None, Some(kb)) => MapKey::decode(kb).map_err(|e| format!("{stem}: {e}"))?,
+                // Only torn-header files and no snapshot: no state exists.
+                (None, None) => continue,
+            };
+            let marks = src.as_ref().map(|s| s.wal_marks.clone()).unwrap_or_default();
+            let max_mark = marks.iter().copied().max().unwrap_or(0);
+            let mut shards: Vec<Box<dyn AnnIndex>> = match src {
+                Some(src) => {
+                    if src.dim != src.key.k {
+                        return Err(format!(
+                            "{stem}: snapshot dim {} != signature k {}",
+                            src.dim, src.key.k
+                        ));
+                    }
+                    build_shards(src, self.shards)
+                }
+                None => {
+                    // WAL-only recovery (crash before the first
+                    // checkpoint): start empty, exactly as
+                    // `get_or_create` would have built this signature.
+                    let seed = map_key_seed(self.master_seed ^ 0xA11_1DE8_5EED, &key);
+                    (0..self.shards)
+                        .map(|_| build_index(self.backend, key.k, &self.lsh, seed))
+                        .collect()
+                }
+            };
+            // Replay each lane's tail above its covered watermark. A lane
+            // beyond the recorded marks (lane-count drift from a crashed
+            // recovery or a shard-count change) falls back to `max_mark`:
+            // such files survive only from a cleanup crash *after* a
+            // checkpoint at `M ≥` all their seqs, so skipping is exact.
+            let mut high = max_mark;
+            let mut replayed = 0u64;
+            for stream in &streams {
+                let covered = marks.get(stream.shard as usize).copied().unwrap_or(max_mark);
+                if let Some(last) = stream.records.last() {
+                    high = high.max(last.seq);
+                }
+                for rec in &stream.records {
+                    if rec.seq <= covered {
+                        continue;
+                    }
+                    if rec.op == wal::WAL_OP_INSERT {
+                        if rec.payload.len() != key.k {
+                            return Err(format!(
+                                "{stem}: wal insert {} carries dim {} (signature k {})",
+                                rec.id,
+                                rec.payload.len(),
+                                key.k
+                            ));
+                        }
+                        shards[shard_of(rec.id, self.shards)].insert(rec.id, &rec.payload);
+                    } else {
+                        shards[shard_of(rec.id, self.shards)].remove(rec.id);
+                    }
+                    replayed += 1;
+                }
+            }
+            // Checkpoint the recovered state BEFORE touching the log:
+            // once the manifest with marks `[high]` is durably renamed,
+            // every surviving pre-recovery record is skippable, so a
+            // crash anywhere in the cleanup below recovers to the same
+            // state (never a double-apply).
+            let captures: Vec<IndexSnapshot> =
+                shards.iter().map(|s| IndexSnapshot::capture(key.encode(), s.as_ref())).collect();
+            let cp_marks = vec![high; self.shards];
+            self.write_sequence(&key, &captures, &cp_marks)
+                .map_err(|e| format!("{stem}: {e}"))?;
+            for files in lanes.values() {
+                for (_, path) in files {
+                    std::fs::remove_file(path)
+                        .map_err(|e| format!("remove {}: {e}", path.display()))?;
+                }
+            }
+            let wals: Vec<std::result::Result<WalWriter, String>> = (0..self.shards)
+                .map(|j| {
+                    WalWriter::open(
+                        &cfg.dir,
+                        &stem,
+                        j as u32,
+                        key.encode(),
+                        cfg.segment_cap,
+                        high + 1,
+                    )
+                })
+                .collect();
+            let slot = Arc::new(IndexSlot::new_with_wal(key.clone(), shards, Some(wals)));
+            lock_recover(&self.indexes).insert(key, slot);
+            sigs += 1;
+            replayed_total += replayed;
+        }
+        // Signatures with snapshots but no WAL files (never mutated since
+        // their lanes were truncated away, or a crash landed exactly
+        // between recovery's checkpoint and its fresh segments) load from
+        // their snapshots; `restore_all` skips everything handled above.
+        let (snap_sigs, _items) = self.restore_all(&snap_dir)?;
+        Ok((sigs + snap_sigs, replayed_total))
     }
 
     /// Number of live indexes.
@@ -1449,6 +1904,135 @@ mod tests {
         );
         assert!(reg3.restore_all(&dir).is_err(), "corrupt shard member must fail loudly");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn wal_recovery_replays_the_logged_tail_into_a_different_shard_count() {
+        let base = std::env::temp_dir()
+            .join(format!("trp_state_wal_{}", std::process::id()));
+        let snap = base.join("snap");
+        let wal_dir = base.join("wal");
+        let _ = std::fs::remove_dir_all(&base);
+        let wal_cfg = WalConfig {
+            dir: wal_dir.clone(),
+            segment_cap: 1 << 16,
+            fsync: WalFsync::Flush,
+        };
+        let reg = IndexRegistry::new(
+            7,
+            crate::index::BackendKind::Flat,
+            crate::index::LshConfig::default(),
+        )
+        .with_snapshot_dir(Some(snap.clone()))
+        .with_shards(2)
+        .with_wal(Some(wal_cfg.clone()));
+        std::fs::create_dir_all(&wal_dir).unwrap();
+        let slot = reg.get_or_create(&tt_key());
+        assert!(slot.wal_enabled());
+        // Log + apply, exactly as a server turn does.
+        for i in 0..10u64 {
+            let v = vec![i as f64; tt_key().k];
+            let s = shard_of(i, 2);
+            slot.wal_append(s, wal::WAL_OP_INSERT, i, &v).unwrap();
+            slot.lock_shard(s).insert(i, &v);
+        }
+        let s3 = shard_of(3, 2);
+        slot.wal_append(s3, wal::WAL_OP_DELETE, 3, &[]).unwrap();
+        slot.lock_shard(s3).remove(3);
+        for s in 0..2 {
+            slot.wal_commit(s, WalFsync::Flush).unwrap();
+        }
+        assert_eq!(slot.wal_lag(), 11, "nothing checkpointed yet");
+        // "Crash": drop the registry with no snapshot ever taken, then
+        // recover into a *different* shard count.
+        drop(slot);
+        drop(reg);
+        let reg2 = IndexRegistry::new(
+            7,
+            crate::index::BackendKind::Flat,
+            crate::index::LshConfig::default(),
+        )
+        .with_snapshot_dir(Some(snap.clone()))
+        .with_shards(3)
+        .with_wal(Some(wal_cfg.clone()));
+        assert_eq!(reg2.recover_wal().unwrap(), (1, 11));
+        let slot2 = reg2.get_or_create(&tt_key());
+        assert_eq!(slot2.shards(), 3);
+        assert_eq!(slot2.wal_lag(), 0, "recovery checkpoints what it rebuilt");
+        let mut seen = Vec::new();
+        for s in 0..3 {
+            slot2.lock_shard(s).for_each_live(&mut |id, v| {
+                assert_eq!(v, &vec![id as f64; tt_key().k][..]);
+                seen.push(id);
+            });
+        }
+        seen.sort_unstable();
+        let want: Vec<u64> = (0..10).filter(|&i| i != 3).collect();
+        assert_eq!(seen, want, "replay applies the delete too");
+        // Recovery is idempotent: a second pass finds the checkpoint it
+        // wrote, replays nothing, and lands on the same state.
+        drop(slot2);
+        drop(reg2);
+        let reg3 = IndexRegistry::new(
+            7,
+            crate::index::BackendKind::Flat,
+            crate::index::LshConfig::default(),
+        )
+        .with_snapshot_dir(Some(snap))
+        .with_shards(3)
+        .with_wal(Some(wal_cfg));
+        assert_eq!(reg3.recover_wal().unwrap(), (1, 0));
+        let slot3 = reg3.get_or_create(&tt_key());
+        assert_eq!(slot3.shard_lens().iter().sum::<u64>(), 9);
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn snapshot_checkpoint_records_marks_and_drains_the_lag() {
+        let base = std::env::temp_dir()
+            .join(format!("trp_state_walcp_{}", std::process::id()));
+        let snap = base.join("snap");
+        let wal_dir = base.join("wal");
+        let _ = std::fs::remove_dir_all(&base);
+        std::fs::create_dir_all(&wal_dir).unwrap();
+        let wal_cfg = WalConfig {
+            dir: wal_dir,
+            segment_cap: 1 << 16,
+            fsync: WalFsync::Flush,
+        };
+        let reg = IndexRegistry::new(
+            7,
+            crate::index::BackendKind::Flat,
+            crate::index::LshConfig::default(),
+        )
+        .with_snapshot_dir(Some(snap.clone()))
+        .with_wal(Some(wal_cfg.clone()));
+        let slot = reg.get_or_create(&tt_key());
+        for i in 0..5u64 {
+            let v = vec![i as f64; tt_key().k];
+            slot.wal_append(0, wal::WAL_OP_INSERT, i, &v).unwrap();
+            slot.lock_shard(0).insert(i, &v);
+        }
+        slot.wal_commit(0, WalFsync::Flush).unwrap();
+        assert_eq!(slot.wal_lag(), 5);
+        reg.snapshot_slot(&slot).unwrap();
+        assert_eq!(slot.wal_lag(), 0, "the cut covers everything logged so far");
+        let src = read_snapshot_source(&snap, &snapshot_file_stem(&tt_key())).unwrap();
+        assert_eq!(src.wal_marks, vec![5], "manifest carries the lane watermark");
+        // Post-checkpoint recovery replays nothing yet restores all items.
+        drop(slot);
+        drop(reg);
+        let reg2 = IndexRegistry::new(
+            7,
+            crate::index::BackendKind::Flat,
+            crate::index::LshConfig::default(),
+        )
+        .with_snapshot_dir(Some(snap))
+        .with_wal(Some(wal_cfg));
+        assert_eq!(reg2.recover_wal().unwrap(), (1, 0));
+        let slot2 = reg2.get_or_create(&tt_key());
+        assert_eq!(slot2.shard_lens(), vec![5]);
+        let _ = std::fs::remove_dir_all(&base);
     }
 
     #[test]

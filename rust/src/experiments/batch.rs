@@ -319,6 +319,110 @@ pub fn trace_overhead(cfg: &BatchSweepConfig) -> TraceOverheadRow {
     }
 }
 
+/// WAL-overhead measurement: the B = 16 pipelined **insert** serving
+/// point run through a real coordinator with the write-ahead log off,
+/// then on (fsync mode `flush`, i.e. one group-commit fsync per touched
+/// lane per flush). The contract is twofold: the two serving streams
+/// must be bit-identical (the log is written ahead of the same apply,
+/// never a different one), and WAL-on must retain ≥ 80% of WAL-off
+/// insert throughput.
+#[derive(Debug, Clone)]
+pub struct WalOverheadRow {
+    /// Pipelined batch size of the measured point.
+    pub batch: usize,
+    /// Inserts timed per run (after warmup).
+    pub requests: usize,
+    /// Per-insert wall time with the WAL off (µs).
+    pub off_us_per_req: f64,
+    /// Per-insert wall time with the WAL on (µs).
+    pub on_us_per_req: f64,
+    /// WAL-on throughput as a fraction of WAL-off (`off_us / on_us`).
+    pub retained_frac: f64,
+    /// Whether insert embeddings and post-ingest neighbor lists were
+    /// bit-identical across the two runs.
+    pub identical: bool,
+}
+
+/// Measure [`WalOverheadRow`] on `cfg`'s shape: two coordinators with
+/// the same master seed (hence identical maps), one logging into a temp
+/// WAL dir, fed the same pipelined TT-format insert rounds and then the
+/// same probe queries.
+pub fn wal_overhead(cfg: &BatchSweepConfig) -> WalOverheadRow {
+    use crate::coordinator::{Coordinator, CoordinatorConfig, ProjectRequest};
+    let b = 16usize;
+    let warmup = 2usize;
+    let rounds = 6usize;
+    let mut rng = Rng::seed_from(cfg.seed ^ 0x3A1D);
+    let inputs: Vec<AnyTensor> = (0..(warmup + rounds) * b)
+        .map(|_| AnyTensor::Tt(TtTensor::random_unit(&cfg.dims, cfg.input_rank, &mut rng)))
+        .collect();
+    let probes: Vec<AnyTensor> = (0..4)
+        .map(|_| AnyTensor::Tt(TtTensor::random_unit(&cfg.dims, cfg.input_rank, &mut rng)))
+        .collect();
+    let run_once = |wal: Option<&std::path::Path>| -> (f64, Vec<Vec<f64>>) {
+        let coord = Coordinator::start(
+            CoordinatorConfig {
+                master_seed: cfg.seed,
+                default_k: cfg.k,
+                snapshot_dir: wal.map(|d| d.join("snap")),
+                wal_dir: wal.map(|d| d.join("wal")),
+                ..Default::default()
+            },
+            None,
+        );
+        let mut outs = Vec::new();
+        let mut timed = 0.0f64;
+        let mut id = 0u64;
+        for round in 0..(warmup + rounds) {
+            let xs = &inputs[round * b..(round + 1) * b];
+            let t0 = std::time::Instant::now();
+            let rxs: Vec<_> = xs
+                .iter()
+                .map(|x| {
+                    id += 1;
+                    coord.submit(ProjectRequest::insert(id, x.clone()))
+                })
+                .collect();
+            let embs: Vec<Vec<f64>> = rxs
+                .into_iter()
+                .map(|rx| rx.recv().expect("coordinator alive").expect("insert ok").embedding)
+                .collect();
+            if round >= warmup {
+                timed += t0.elapsed().as_secs_f64();
+                outs.extend(embs);
+            }
+        }
+        // Probe queries after ingest: an ordering or apply divergence
+        // would surface here even if per-insert embeddings agree.
+        for (i, p) in probes.iter().enumerate() {
+            let resp = coord
+                .project_blocking(ProjectRequest::query(90_000 + i as u64, p.clone(), 8))
+                .expect("query ok");
+            outs.push(
+                resp.neighbors
+                    .expect("neighbors present")
+                    .iter()
+                    .flat_map(|n| [n.id as f64, n.dist])
+                    .collect(),
+            );
+        }
+        coord.shutdown();
+        (timed * 1e6 / (rounds * b) as f64, outs)
+    };
+    let (off_us, s_off) = run_once(None);
+    let dir = std::env::temp_dir().join(format!("trp_wal_overhead_{}", std::process::id()));
+    let (on_us, s_on) = run_once(Some(&dir));
+    let _ = std::fs::remove_dir_all(&dir);
+    WalOverheadRow {
+        batch: b,
+        requests: rounds * b,
+        off_us_per_req: off_us,
+        on_us_per_req: on_us,
+        retained_frac: off_us / on_us.max(1e-12),
+        identical: s_off == s_on,
+    }
+}
+
 /// Render rows as the CSV written under `results/`.
 pub fn to_csv(rows: &[BatchRow]) -> CsvTable {
     let mut t = CsvTable::new(&[
@@ -347,13 +451,14 @@ pub fn to_csv(rows: &[BatchRow]) -> CsvTable {
 /// speedup over `B`, plus a top-level `kernel` array of GFLOP/s rows
 /// (packed vs frozen-PR 5 kernel) when the micro-benchmark ran. Shared
 /// by the bench binary and `trp experiment batch` so both emit the same
-/// schema. `trace` adds the `trace_overhead` entry (null when the
-/// measurement didn't run).
+/// schema. `trace` adds the `trace_overhead` entry and `wal` the
+/// `wal_overhead` entry (each null when its measurement didn't run).
 pub fn to_json(
     cfg: &BatchSweepConfig,
     rows: &[BatchRow],
     kernel: &[KernelRow],
     trace: Option<&TraceOverheadRow>,
+    wal: Option<&WalOverheadRow>,
 ) -> Json {
     let mut keys: Vec<(String, String)> = Vec::new();
     for r in rows {
@@ -431,6 +536,20 @@ pub fn to_json(
                 None => Json::Null,
             },
         ),
+        (
+            "wal_overhead",
+            match wal {
+                Some(w) => obj(vec![
+                    ("batch", Json::Num(w.batch as f64)),
+                    ("requests", Json::Num(w.requests as f64)),
+                    ("off_us_per_req", Json::Num(w.off_us_per_req)),
+                    ("on_us_per_req", Json::Num(w.on_us_per_req)),
+                    ("retained_frac", Json::Num(w.retained_frac)),
+                    ("identical", Json::Bool(w.identical)),
+                ]),
+                None => Json::Null,
+            },
+        ),
     ])
 }
 
@@ -459,6 +578,21 @@ pub fn print_trace_verdict(t: &TraceOverheadRow) {
         t.off_us_per_req,
         t.on_us_per_req,
         t.overhead_frac * 100.0
+    );
+}
+
+/// Print the WAL tripwire: responses bit-identical with the log on vs
+/// off, and WAL-on insert throughput retaining ≥ 80% of WAL-off.
+pub fn print_wal_verdict(w: &WalOverheadRow) {
+    let verdict = if w.identical && w.retained_frac >= 0.8 { "PASS" } else { "MISS" };
+    println!(
+        "[wal_overhead] B={} identical={} off={:.1}µs/req on={:.1}µs/req \
+         retained={:.1}% ({verdict}, target ≥ 80% and bit-identical)",
+        w.batch,
+        w.identical,
+        w.off_us_per_req,
+        w.on_us_per_req,
+        w.retained_frac * 100.0
     );
 }
 
@@ -516,7 +650,7 @@ mod tests {
     fn json_has_one_series_per_map_input_pair() {
         let cfg = tiny();
         let rows = run(&cfg);
-        let doc = to_json(&cfg, &rows, &[], None);
+        let doc = to_json(&cfg, &rows, &[], None, None);
         let series = doc.get("series").and_then(Json::as_arr).expect("series array");
         assert_eq!(series.len(), 6 + 3 * 2);
         for s in series {
@@ -527,6 +661,7 @@ mod tests {
         let kernel = doc.get("kernel").and_then(Json::as_arr).expect("kernel array");
         assert!(kernel.is_empty());
         assert_eq!(doc.get("trace_overhead"), Some(&Json::Null));
+        assert_eq!(doc.get("wal_overhead"), Some(&Json::Null));
     }
 
     #[test]
@@ -536,10 +671,24 @@ mod tests {
         assert!(t.identical, "tracing must not perturb embeddings");
         assert_eq!(t.batch, 16);
         assert!(t.off_us_per_req > 0.0 && t.on_us_per_req > 0.0);
-        let doc = to_json(&cfg, &[], &[], Some(&t));
+        let doc = to_json(&cfg, &[], &[], Some(&t), None);
         let entry = doc.get("trace_overhead").expect("trace_overhead entry");
         assert_eq!(entry.get("identical").and_then(Json::as_bool), Some(true));
         assert!(entry.get("overhead_frac").and_then(Json::as_f64).is_some());
+    }
+
+    #[test]
+    fn wal_overhead_is_bit_identical_and_serializes() {
+        let cfg = tiny();
+        let w = wal_overhead(&cfg);
+        assert!(w.identical, "the write-ahead log must not perturb responses");
+        assert_eq!(w.batch, 16);
+        assert!(w.off_us_per_req > 0.0 && w.on_us_per_req > 0.0);
+        assert!(w.retained_frac > 0.0 && w.retained_frac.is_finite());
+        let doc = to_json(&cfg, &[], &[], None, Some(&w));
+        let entry = doc.get("wal_overhead").expect("wal_overhead entry");
+        assert_eq!(entry.get("identical").and_then(Json::as_bool), Some(true));
+        assert!(entry.get("retained_frac").and_then(Json::as_f64).is_some());
     }
 
     #[test]
@@ -552,7 +701,7 @@ mod tests {
             assert!(r.packed_gflops > 0.0 && r.reference_gflops > 0.0);
             assert!(r.speedup.is_finite());
         }
-        let doc = to_json(&cfg, &run(&cfg), &krows, None);
+        let doc = to_json(&cfg, &run(&cfg), &krows, None, None);
         let kernel = doc.get("kernel").and_then(Json::as_arr).expect("kernel array");
         assert_eq!(kernel.len(), krows.len());
         for (j, r) in kernel.iter().zip(&krows) {

@@ -28,6 +28,7 @@ mod flat;
 mod lsh;
 pub(crate) mod persist;
 mod sharded;
+pub mod wal;
 
 pub use flat::FlatIndex;
 pub use lsh::{LshConfig, LshIndex};
@@ -35,6 +36,7 @@ pub use persist::{IndexSnapshot, SnapshotReport};
 pub use sharded::{
     combine_stats, merge_neighbors, restore_shard_counters, shard_of, ShardedIndex,
 };
+pub use wal::{WalConfig, WalFsync, WalWriter};
 
 use crate::projections::Workspace;
 

@@ -243,7 +243,9 @@ impl IndexSnapshot {
 
 /// Atomic + durable byte-level file write shared by snapshot files and
 /// shard manifests: write `<path>.tmp`, fsync, rename over `path`, fsync
-/// the parent directory (best-effort where directories cannot be opened).
+/// the parent directory. Every fsync failure propagates — a durability
+/// claim that swallows the directory sync is a silent lie after a crash
+/// (the rename itself may not have reached disk).
 pub(crate) fn write_bytes_atomic(path: &Path, bytes: &[u8]) -> Result<(), String> {
     use std::io::Write as _;
     let mut tmp = path.as_os_str().to_owned();
@@ -257,10 +259,13 @@ pub(crate) fn write_bytes_atomic(path: &Path, bytes: &[u8]) -> Result<(), String
         f.sync_all().map_err(|e| format!("sync {}: {e}", tmp.display()))?;
     }
     std::fs::rename(&tmp, path).map_err(|e| format!("rename to {}: {e}", path.display()))?;
+    // A bare relative file name has `parent() == Some("")`; "." is what
+    // that actually means to the filesystem.
     if let Some(dir) = path.parent() {
-        if let Ok(d) = std::fs::File::open(dir) {
-            let _ = d.sync_all();
-        }
+        let dir = if dir.as_os_str().is_empty() { Path::new(".") } else { dir };
+        let d = std::fs::File::open(dir)
+            .map_err(|e| format!("open dir {}: {e}", dir.display()))?;
+        d.sync_all().map_err(|e| format!("sync dir {}: {e}", dir.display()))?;
     }
     Ok(())
 }
@@ -288,24 +293,36 @@ pub struct ManifestShard {
 ///
 /// ```text
 /// magic  b"TRPMANI\0"                      8 bytes
-/// version u32                              currently 1
+/// version u32                              1 or 2
 /// key_len u32, key bytes                   opaque signature encoding
 /// shard_count u64
 /// shard_count × (file_len u32, file bytes, items u64, checksum u64)
+/// mark_count u64, mark_count × u64         WAL watermarks (v2 only)
 /// checksum u64                             FNV-1a over all prior bytes
 /// ```
+///
+/// Version 2 adds the per-lane WAL covered watermarks: this capture
+/// includes every logged op with `seq ≤ wal_marks[lane]`, so replay
+/// starts above them and fully covered segments may be truncated once
+/// the manifest rename is durable. A WAL-less coordinator writes v1 —
+/// byte-identical to pre-WAL builds — and v1 files decode with empty
+/// marks (nothing covered: replay everything).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ShardManifest {
     /// Opaque signature encoding (the coordinator's `MapKey::encode`).
     pub key_bytes: Vec<u8>,
     /// Per-shard entries in shard order.
     pub shards: Vec<ManifestShard>,
+    /// Per-lane WAL covered watermarks (empty when the WAL is off).
+    pub wal_marks: Vec<u64>,
 }
 
 /// Manifest file magic.
 const MANIFEST_MAGIC: &[u8; 8] = b"TRPMANI\0";
-/// Current manifest format version.
+/// Manifest format version without WAL watermarks.
 const MANIFEST_VERSION: u32 = 1;
+/// Manifest format version carrying WAL watermarks.
+const MANIFEST_VERSION_WAL: u32 = 2;
 
 impl ShardManifest {
     /// Total live items across all shard files.
@@ -320,7 +337,11 @@ impl ShardManifest {
                 + self.shards.iter().map(|s| 20 + s.file.len()).sum::<usize>(),
         );
         out.extend_from_slice(MANIFEST_MAGIC);
-        out.extend_from_slice(&MANIFEST_VERSION.to_le_bytes());
+        // v1 stays byte-identical when the WAL is off, so WAL-less
+        // deployments produce files older builds still read.
+        let version =
+            if self.wal_marks.is_empty() { MANIFEST_VERSION } else { MANIFEST_VERSION_WAL };
+        out.extend_from_slice(&version.to_le_bytes());
         out.extend_from_slice(&(self.key_bytes.len() as u32).to_le_bytes());
         out.extend_from_slice(&self.key_bytes);
         out.extend_from_slice(&(self.shards.len() as u64).to_le_bytes());
@@ -329,6 +350,12 @@ impl ShardManifest {
             out.extend_from_slice(s.file.as_bytes());
             out.extend_from_slice(&s.items.to_le_bytes());
             out.extend_from_slice(&s.checksum.to_le_bytes());
+        }
+        if version >= MANIFEST_VERSION_WAL {
+            out.extend_from_slice(&(self.wal_marks.len() as u64).to_le_bytes());
+            for m in &self.wal_marks {
+                out.extend_from_slice(&m.to_le_bytes());
+            }
         }
         let sum = fnv1a(&out);
         out.extend_from_slice(&sum.to_le_bytes());
@@ -350,9 +377,10 @@ impl ShardManifest {
             return Err("not a TRP shard manifest (bad magic)".into());
         }
         let version = cur.u32()?;
-        if version != MANIFEST_VERSION {
+        if !(MANIFEST_VERSION..=MANIFEST_VERSION_WAL).contains(&version) {
             return Err(format!(
-                "unsupported manifest version {version} (expected {MANIFEST_VERSION})"
+                "unsupported manifest version {version} \
+                 (expected {MANIFEST_VERSION}..={MANIFEST_VERSION_WAL})"
             ));
         }
         let key_len = cur.u32()? as usize;
@@ -370,10 +398,18 @@ impl ShardManifest {
             let checksum = cur.u64()?;
             shards.push(ManifestShard { file, items, checksum });
         }
+        let mut wal_marks = Vec::new();
+        if version >= MANIFEST_VERSION_WAL {
+            let mark_count = cur.u64()? as usize;
+            wal_marks.reserve(mark_count.min(1 << 16));
+            for _ in 0..mark_count {
+                wal_marks.push(cur.u64()?);
+            }
+        }
         if cur.pos != body.len() {
             return Err("manifest has trailing bytes".into());
         }
-        Ok(Self { key_bytes, shards })
+        Ok(Self { key_bytes, shards, wal_marks })
     }
 
     /// Write atomically (see [`write_bytes_atomic`]). Returns encoded
@@ -440,6 +476,12 @@ impl<'a> Cursor<'a> {
     /// Consume a little-endian u64.
     pub(crate) fn u64(&mut self) -> Result<u64, String> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Current read offset (for exact-length / trailing-byte checks by
+    /// decoders outside this module).
+    pub(crate) fn pos(&self) -> usize {
+        self.pos
     }
 }
 
@@ -605,6 +647,7 @@ mod tests {
                 ManifestShard { file: "sig_ab.00000001.shard0.snap".into(), items: 7, checksum: 9 },
                 ManifestShard { file: "sig_ab.00000001.shard1.snap".into(), items: 5, checksum: 4 },
             ],
+            wal_marks: Vec::new(),
         };
         assert_eq!(m.total_items(), 12);
         let bytes = m.encode();
@@ -620,8 +663,34 @@ mod tests {
             assert!(ShardManifest::decode(&bytes[..cut]).is_err(), "cut at {cut}");
         }
         // Zero shard files is not a valid capture.
-        let empty = ShardManifest { key_bytes: Vec::new(), shards: Vec::new() };
+        let empty =
+            ShardManifest { key_bytes: Vec::new(), shards: Vec::new(), wal_marks: Vec::new() };
         assert!(ShardManifest::decode(&empty.encode()).unwrap_err().contains("zero"));
+    }
+
+    #[test]
+    fn manifest_wal_marks_roundtrip_and_v1_stays_byte_stable() {
+        let base = ShardManifest {
+            key_bytes: vec![7],
+            shards: vec![ManifestShard { file: "f0".into(), items: 3, checksum: 1 }],
+            wal_marks: Vec::new(),
+        };
+        // Empty marks encode as v1: the version field says 1 and decoding
+        // yields empty marks back.
+        let v1 = base.encode();
+        assert_eq!(u32::from_le_bytes(v1[8..12].try_into().unwrap()), 1);
+        assert_eq!(ShardManifest::decode(&v1).unwrap(), base);
+        // Non-empty marks encode as v2 and round-trip.
+        let with_marks = ShardManifest { wal_marks: vec![12, 0, 99], ..base.clone() };
+        let v2 = with_marks.encode();
+        assert_eq!(u32::from_le_bytes(v2[8..12].try_into().unwrap()), 2);
+        assert_eq!(ShardManifest::decode(&v2).unwrap(), with_marks);
+        // The two encodings agree on everything but the version field and
+        // the appended mark block (+ checksum): WAL-off output carries no
+        // trace of the WAL feature.
+        assert_eq!(&v1[..8], &v2[..8]);
+        assert_eq!(&v1[12..v1.len() - 8], &v2[12..v1.len() - 8]);
+        assert_eq!(v2.len(), v1.len() + 8 + 3 * 8);
     }
 
     #[test]

@@ -1,0 +1,1154 @@
+//! Per-signature, per-shard-lane segmented write-ahead log.
+//!
+//! Snapshots alone lose every mutation since the last cut; this module
+//! closes that gap. Each shard lane of a signature appends its
+//! insert/delete ops to its own segment chain
+//! (`sig_<hash>.shard<j>.<seg>.wal`) *inside the lane's sequencer turn*,
+//! so replay order equals arrival order by construction — no cross-lane
+//! interleaving exists to reconstruct, because ops for one id always land
+//! in one lane (`shard_of`). Durability is group-committed: the
+//! coordinator batches one `sync_data` per touched lane per flush (or per
+//! N appended ops, see [`WalFsync`]), never one per op.
+//!
+//! ## On-disk format (little-endian throughout)
+//!
+//! Segment header — written once at segment creation, fsynced before any
+//! record, and self-describing so a WAL-only recovery (crash before the
+//! first checkpoint) can rebuild an empty index for the right signature:
+//!
+//! ```text
+//! magic     b"TRPWAL0\0"    8 bytes
+//! version   u32             currently 1
+//! shard     u32             lane index this file belongs to
+//! start_seq u64             seq of the first record in this segment
+//! key_len   u32, key bytes  opaque signature encoding (MapKey::encode)
+//! ```
+//!
+//! Record frame — length-framed and FNV-1a-checksummed:
+//!
+//! ```text
+//! len  u32                  body length in bytes
+//! body seq u64 | op u8 | id u64 | dim u32 | dim × f64
+//! sum  u64                  FNV-1a over the body bytes
+//! ```
+//!
+//! ## Torn-tail contract
+//!
+//! Appends are single `write_all` calls, so a crash leaves at most a
+//! *prefix* of the final frame on disk. Readers therefore:
+//!
+//! * tolerate an incomplete frame at the end of the **final** segment
+//!   (scan-to-last-valid: replay recovers exactly the valid prefix);
+//! * reject — loudly, never silently skipping — a *complete* frame whose
+//!   checksum mismatches, anywhere: that is real corruption, not a torn
+//!   write;
+//! * reject torn records or torn headers in a **non-final** segment
+//!   (rotation fsyncs a segment before opening its successor, so a torn
+//!   non-final segment cannot be produced by a crash);
+//! * enforce seq contiguity within and across segments (segment `N+1`
+//!   must start at the seq after segment `N`'s last record).
+//!
+//! Checkpoints are snapshot cuts: the manifest records each lane's
+//! covered watermark, and [`WalWriter::truncate_covered`] deletes fully
+//! covered segments only after the manifest is durably renamed.
+
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use super::persist::{fnv1a, Cursor};
+
+/// Segment file magic.
+const WAL_MAGIC: &[u8; 8] = b"TRPWAL0\0";
+/// Current segment format version.
+const WAL_VERSION: u32 = 1;
+/// Fixed header length before the variable-length key bytes.
+const HEADER_FIXED: usize = 8 + 4 + 4 + 8 + 4;
+/// Frame overhead: length prefix + checksum suffix.
+const FRAME_OVERHEAD: usize = 4 + 8;
+/// Body length of a record with a `dim`-element payload.
+const BODY_FIXED: usize = 8 + 1 + 8 + 4;
+
+/// WAL op tag: insert (payload = embedding).
+pub const WAL_OP_INSERT: u8 = 1;
+/// WAL op tag: delete (payload empty).
+pub const WAL_OP_DELETE: u8 = 2;
+
+/// Default segment rotation cap (bytes).
+pub const DEFAULT_SEGMENT_CAP: u64 = 8 * 1024 * 1024;
+
+/// When the coordinator fsyncs appended WAL records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WalFsync {
+    /// One `sync_data` per touched lane per flush, before replies are
+    /// sent — an acked mutation is durable.
+    Flush,
+    /// `sync_data` once a lane accumulates N unsynced appends — cheaper,
+    /// but up to N−1 acked ops per lane can be lost to a crash.
+    EveryN(u64),
+}
+
+impl WalFsync {
+    /// Parse the `--wal-fsync` CLI value: `flush` or `every-<n>`.
+    pub fn parse(s: &str) -> Result<WalFsync, String> {
+        if s == "flush" {
+            return Ok(WalFsync::Flush);
+        }
+        if let Some(n) = s.strip_prefix("every-") {
+            let n: u64 = n
+                .parse()
+                .map_err(|_| format!("bad --wal-fsync '{s}' (expected 'flush' or 'every-<n>')"))?;
+            if n == 0 {
+                return Err("--wal-fsync every-0 is meaningless; use 'flush'".into());
+            }
+            return Ok(WalFsync::EveryN(n));
+        }
+        Err(format!("bad --wal-fsync '{s}' (expected 'flush' or 'every-<n>')"))
+    }
+
+    /// Canonical name (inverse of [`WalFsync::parse`]).
+    pub fn name(&self) -> String {
+        match self {
+            WalFsync::Flush => "flush".to_string(),
+            WalFsync::EveryN(n) => format!("every-{n}"),
+        }
+    }
+}
+
+/// WAL configuration carried by the coordinator.
+#[derive(Debug, Clone)]
+pub struct WalConfig {
+    /// Directory holding the segment files.
+    pub dir: PathBuf,
+    /// Segment rotation threshold in bytes.
+    pub segment_cap: u64,
+    /// Group-commit fsync policy.
+    pub fsync: WalFsync,
+}
+
+/// One decoded WAL record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WalRecord {
+    /// Per-lane sequence number (starts at 1; contiguous).
+    pub seq: u64,
+    /// [`WAL_OP_INSERT`] or [`WAL_OP_DELETE`].
+    pub op: u8,
+    /// Item id the op targets.
+    pub id: u64,
+    /// Embedding for inserts; empty for deletes.
+    pub payload: Vec<f64>,
+}
+
+/// A fully read lane: every valid record across the segment chain.
+#[derive(Debug, Clone)]
+pub struct LaneStream {
+    /// Lane index from the segment headers.
+    pub shard: u32,
+    /// Opaque signature encoding from the segment headers.
+    pub key_bytes: Vec<u8>,
+    /// Records in seq order (contiguous).
+    pub records: Vec<WalRecord>,
+    /// Readable segments in the chain.
+    pub segments: usize,
+    /// Bytes of torn (tolerated) tail discarded from the final segment.
+    pub torn_bytes: u64,
+    /// `start_seq` of the first segment (1 for a never-truncated lane).
+    pub first_seq: u64,
+}
+
+/// Decoded segment header.
+#[derive(Debug, Clone)]
+struct SegmentHeader {
+    shard: u32,
+    start_seq: u64,
+    key_bytes: Vec<u8>,
+}
+
+/// One scanned segment: header, valid records, and tail accounting.
+struct SegmentScan {
+    header: SegmentHeader,
+    records: Vec<WalRecord>,
+    /// Byte length of header + valid frames (the truncate-to point).
+    valid_len: u64,
+    /// Bytes past `valid_len` (a torn final frame; 0 when clean).
+    torn_bytes: u64,
+}
+
+/// Outcome of scanning one segment file.
+enum SegmentScanOutcome {
+    /// The header itself is incomplete — a crash inside segment creation.
+    /// Tolerable only for the newest segment of a lane.
+    TornHeader,
+    /// Header parsed; records scanned to the last valid frame.
+    Scanned(SegmentScan),
+}
+
+fn read_u32_at(bytes: &[u8], p: usize) -> u32 {
+    let mut b = [0u8; 4];
+    b.copy_from_slice(&bytes[p..p + 4]);
+    u32::from_le_bytes(b)
+}
+
+fn read_u64_at(bytes: &[u8], p: usize) -> u64 {
+    let mut b = [0u8; 8];
+    b.copy_from_slice(&bytes[p..p + 8]);
+    u64::from_le_bytes(b)
+}
+
+/// Segment file name for `(stem, shard, seg)`.
+pub fn wal_file_name(stem: &str, shard: u32, seg: u64) -> String {
+    format!("{stem}.shard{shard}.{seg:08}.wal")
+}
+
+/// Parse a WAL file name back into `(stem, shard, seg)`; `None` when the
+/// name is not a WAL segment.
+pub fn parse_wal_name(name: &str) -> Option<(String, u32, u64)> {
+    let rest = name.strip_suffix(".wal")?;
+    let (rest, seg_s) = rest.rsplit_once('.')?;
+    let (stem, shard_s) = rest.rsplit_once('.')?;
+    let shard: u32 = shard_s.strip_prefix("shard")?.parse().ok()?;
+    let seg: u64 = seg_s.parse().ok()?;
+    if seg == 0 || stem.is_empty() {
+        return None;
+    }
+    Some((stem.to_string(), shard, seg))
+}
+
+/// Discover every WAL lane under `dir`: stem → shard → seg-sorted file
+/// list. A missing directory is an empty result, not an error.
+#[allow(clippy::type_complexity)]
+pub fn scan_dir(dir: &Path) -> Result<BTreeMap<String, BTreeMap<u32, Vec<(u64, PathBuf)>>>, String> {
+    let mut out: BTreeMap<String, BTreeMap<u32, Vec<(u64, PathBuf)>>> = BTreeMap::new();
+    let entries = match std::fs::read_dir(dir) {
+        Ok(e) => e,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(out),
+        Err(e) => return Err(format!("read wal dir {}: {e}", dir.display())),
+    };
+    for entry in entries {
+        let entry = entry.map_err(|e| format!("read wal dir {}: {e}", dir.display()))?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        let Some((stem, shard, seg)) = parse_wal_name(name) else { continue };
+        out.entry(stem).or_default().entry(shard).or_default().push((seg, entry.path()));
+    }
+    for lanes in out.values_mut() {
+        for files in lanes.values_mut() {
+            files.sort_by_key(|(seg, _)| *seg);
+        }
+    }
+    Ok(out)
+}
+
+fn encode_header(shard: u32, start_seq: u64, key_bytes: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_FIXED + key_bytes.len());
+    out.extend_from_slice(WAL_MAGIC);
+    out.extend_from_slice(&WAL_VERSION.to_le_bytes());
+    out.extend_from_slice(&shard.to_le_bytes());
+    out.extend_from_slice(&start_seq.to_le_bytes());
+    out.extend_from_slice(&(key_bytes.len() as u32).to_le_bytes());
+    out.extend_from_slice(key_bytes);
+    out
+}
+
+/// Encode one length-framed, checksummed record.
+fn encode_frame(seq: u64, op: u8, id: u64, payload: &[f64]) -> Vec<u8> {
+    let body_len = BODY_FIXED + payload.len() * 8;
+    let mut out = Vec::with_capacity(4 + body_len + 8);
+    out.extend_from_slice(&(body_len as u32).to_le_bytes());
+    out.extend_from_slice(&seq.to_le_bytes());
+    out.push(op);
+    out.extend_from_slice(&id.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    for v in payload {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    let sum = fnv1a(&out[4..]);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+fn decode_body(body: &[u8]) -> Result<WalRecord, String> {
+    let mut cur = Cursor::new(body);
+    let seq = cur.u64()?;
+    let op = cur.u8()?;
+    if op != WAL_OP_INSERT && op != WAL_OP_DELETE {
+        return Err(format!("unknown wal op tag {op}"));
+    }
+    let id = cur.u64()?;
+    let dim = cur.u32()? as usize;
+    let raw = cur.take(dim.checked_mul(8).ok_or("wal payload length overflow")?)?;
+    let mut payload = Vec::with_capacity(dim);
+    for chunk in raw.chunks_exact(8) {
+        let mut b = [0u8; 8];
+        b.copy_from_slice(chunk);
+        payload.push(f64::from_le_bytes(b));
+    }
+    if cur.pos() != body.len() {
+        return Err("wal record body has trailing bytes".into());
+    }
+    Ok(WalRecord { seq, op, id, payload })
+}
+
+/// Scan one segment file: parse the header, then frames up to the last
+/// valid one. Returns [`SegmentScanOutcome::TornHeader`] when the header
+/// is an incomplete prefix (crash inside creation); errors loudly on bad
+/// magic/version, checksum mismatch, malformed bodies, or seq gaps.
+fn scan_segment(path: &Path) -> Result<SegmentScanOutcome, String> {
+    let bytes = std::fs::read(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    if bytes.len() < 8 {
+        return Ok(SegmentScanOutcome::TornHeader);
+    }
+    if &bytes[..8] != WAL_MAGIC {
+        return Err(format!("{}: not a TRP wal segment (bad magic)", path.display()));
+    }
+    let mut cur = Cursor::new(&bytes);
+    let _ = cur.take(8); // magic, verified above
+    let Ok(version) = cur.u32() else { return Ok(SegmentScanOutcome::TornHeader) };
+    if version != WAL_VERSION {
+        return Err(format!(
+            "{}: unsupported wal version {version} (expected {WAL_VERSION})",
+            path.display()
+        ));
+    }
+    let (Ok(shard), Ok(start_seq), Ok(key_len)) = (cur.u32(), cur.u64(), cur.u32()) else {
+        return Ok(SegmentScanOutcome::TornHeader);
+    };
+    let Ok(key_bytes) = cur.take(key_len as usize) else {
+        return Ok(SegmentScanOutcome::TornHeader);
+    };
+    let header = SegmentHeader { shard, start_seq, key_bytes: key_bytes.to_vec() };
+    let mut p = cur.pos();
+    let total = bytes.len();
+    let mut records = Vec::new();
+    let mut expected = start_seq;
+    while p < total {
+        let remaining = total - p;
+        if remaining < 4 {
+            break; // torn length prefix
+        }
+        let len = read_u32_at(&bytes, p) as usize;
+        let Some(need) = len.checked_add(FRAME_OVERHEAD) else { break };
+        if remaining < need {
+            break; // torn frame (only a prefix was written)
+        }
+        let body = &bytes[p + 4..p + 4 + len];
+        let stored = read_u64_at(&bytes, p + 4 + len);
+        if fnv1a(body) != stored {
+            return Err(format!(
+                "{}: record checksum mismatch at byte {p} (corruption, not a torn tail)",
+                path.display()
+            ));
+        }
+        let rec = decode_body(body).map_err(|e| format!("{}: {e} at byte {p}", path.display()))?;
+        if rec.seq != expected {
+            return Err(format!(
+                "{}: wal sequence gap at byte {p} (expected seq {expected}, found {})",
+                path.display(),
+                rec.seq
+            ));
+        }
+        expected += 1;
+        records.push(rec);
+        p += need;
+    }
+    Ok(SegmentScanOutcome::Scanned(SegmentScan {
+        header,
+        records,
+        valid_len: p as u64,
+        torn_bytes: (total - p) as u64,
+    }))
+}
+
+/// Read one lane's full record stream from its seg-sorted segment files.
+///
+/// Returns `Ok(None)` when the lane has no readable segment (only a
+/// torn-header file — a crash during the very first segment creation).
+/// Torn tails are tolerated on the final segment only; everything else
+/// (mid-segment corruption, cross-segment seq gaps, header mismatches)
+/// errors loudly.
+pub fn read_lane(files: &[(u64, PathBuf)]) -> Result<Option<LaneStream>, String> {
+    let mut records = Vec::new();
+    let mut head: Option<(u32, Vec<u8>, u64)> = None;
+    let mut torn_bytes = 0u64;
+    let mut segments = 0usize;
+    let mut prev_last: Option<u64> = None;
+    for (i, (_seg, path)) in files.iter().enumerate() {
+        let is_final = i + 1 == files.len();
+        let scan = match scan_segment(path)? {
+            SegmentScanOutcome::TornHeader => {
+                if is_final {
+                    break;
+                }
+                return Err(format!(
+                    "{}: torn header on a non-final wal segment",
+                    path.display()
+                ));
+            }
+            SegmentScanOutcome::Scanned(s) => s,
+        };
+        if !is_final && scan.torn_bytes > 0 {
+            return Err(format!(
+                "{}: torn record inside a non-final wal segment",
+                path.display()
+            ));
+        }
+        if !is_final && scan.records.is_empty() {
+            return Err(format!("{}: empty non-final wal segment", path.display()));
+        }
+        match &head {
+            None => {
+                head = Some((
+                    scan.header.shard,
+                    scan.header.key_bytes.clone(),
+                    scan.header.start_seq,
+                ));
+            }
+            Some((shard0, key0, _)) => {
+                if scan.header.shard != *shard0 || scan.header.key_bytes != *key0 {
+                    return Err(format!(
+                        "{}: segment header disagrees with the lane's first segment",
+                        path.display()
+                    ));
+                }
+            }
+        }
+        if let Some(prev) = prev_last {
+            if scan.header.start_seq != prev + 1 {
+                return Err(format!(
+                    "{}: wal segment starts at seq {} but the previous segment ended at {prev}",
+                    path.display(),
+                    scan.header.start_seq
+                ));
+            }
+        }
+        prev_last = Some(scan.records.last().map_or(scan.header.start_seq - 1, |r| r.seq));
+        torn_bytes += scan.torn_bytes;
+        segments += 1;
+        records.extend(scan.records);
+    }
+    let Some((shard, key_bytes, first_seq)) = head else {
+        return Ok(None);
+    };
+    Ok(Some(LaneStream { shard, key_bytes, records, segments, torn_bytes, first_seq }))
+}
+
+/// A closed (rotated-away) segment still on disk, awaiting checkpoint
+/// truncation.
+#[derive(Debug)]
+struct ClosedSeg {
+    path: PathBuf,
+    last_seq: u64,
+}
+
+/// Append-side handle for one shard lane's segment chain.
+///
+/// One writer exists per `(signature, shard)` lane, driven inside that
+/// lane's sequencer turn, so appends are externally serialized; the
+/// writer itself does no locking. `sync` is the group-commit point the
+/// coordinator batches per flush.
+#[derive(Debug)]
+pub struct WalWriter {
+    dir: PathBuf,
+    stem: String,
+    shard: u32,
+    key_bytes: Vec<u8>,
+    segment_cap: u64,
+    /// Last appended seq (0 before the first append of a fresh lane).
+    seq: u64,
+    seg: u64,
+    file: File,
+    seg_bytes: u64,
+    seg_records: u64,
+    unsynced: u64,
+    closed: Vec<ClosedSeg>,
+}
+
+fn sync_parent_dir(dir: &Path) -> Result<(), String> {
+    let d = File::open(dir).map_err(|e| format!("open wal dir {}: {e}", dir.display()))?;
+    d.sync_all().map_err(|e| format!("sync wal dir {}: {e}", dir.display()))
+}
+
+impl WalWriter {
+    /// Open (or create) the lane `(stem, shard)` under `dir`.
+    ///
+    /// Existing segments are validated like [`read_lane`]: a torn tail on
+    /// the final segment is truncated away (`set_len` to the last valid
+    /// frame) and appending continues from the last durable seq; a
+    /// torn-header final segment (crash inside rotation) is deleted. A
+    /// fresh lane starts at segment 1 with `start_seq = fresh_start_seq`
+    /// (1 for a brand-new signature; recovery passes its replay watermark
+    /// + 1 so new appends stay above the checkpoint marks).
+    pub fn open(
+        dir: &Path,
+        stem: &str,
+        shard: u32,
+        key_bytes: Vec<u8>,
+        segment_cap: u64,
+        fresh_start_seq: u64,
+    ) -> Result<WalWriter, String> {
+        std::fs::create_dir_all(dir)
+            .map_err(|e| format!("create wal dir {}: {e}", dir.display()))?;
+        let mut files: Vec<(u64, PathBuf)> = scan_dir(dir)?
+            .remove(stem)
+            .and_then(|mut lanes| lanes.remove(&shard))
+            .unwrap_or_default();
+        // A crash inside rotation can leave the newest segment with a
+        // torn header; drop it and continue on the previous segment.
+        if let Some((_, path)) = files.last() {
+            if matches!(scan_segment(path)?, SegmentScanOutcome::TornHeader) {
+                std::fs::remove_file(path)
+                    .map_err(|e| format!("remove {}: {e}", path.display()))?;
+                files.pop();
+            }
+        }
+        let mut w = WalWriter {
+            dir: dir.to_path_buf(),
+            stem: stem.to_string(),
+            shard,
+            key_bytes,
+            segment_cap: segment_cap.max(1),
+            seq: 0,
+            seg: 0,
+            // Placeholder; replaced below before any use. /dev/null-like
+            // behavior is unnecessary because open_fresh/open_existing
+            // always overwrite it — but File has no cheap dummy, so open
+            // the directory read-only as the initial value.
+            file: File::open(dir).map_err(|e| format!("open wal dir {}: {e}", dir.display()))?,
+            seg_bytes: 0,
+            seg_records: 0,
+            unsynced: 0,
+            closed: Vec::new(),
+        };
+        if files.is_empty() {
+            w.open_fresh(1, fresh_start_seq.max(1))?;
+            w.seq = fresh_start_seq.max(1) - 1;
+            return Ok(w);
+        }
+        let n = files.len();
+        let mut prev_last: Option<u64> = None;
+        for (i, (seg_no, path)) in files.iter().enumerate() {
+            let scan = match scan_segment(path)? {
+                SegmentScanOutcome::TornHeader => {
+                    return Err(format!(
+                        "{}: torn header on a non-final wal segment",
+                        path.display()
+                    ))
+                }
+                SegmentScanOutcome::Scanned(s) => s,
+            };
+            if scan.header.shard != shard {
+                return Err(format!(
+                    "{}: header names shard {} but the file name says {shard}",
+                    path.display(),
+                    scan.header.shard
+                ));
+            }
+            if scan.header.key_bytes != w.key_bytes {
+                return Err(format!(
+                    "{}: wal lane belongs to a different signature",
+                    path.display()
+                ));
+            }
+            if let Some(prev) = prev_last {
+                if scan.header.start_seq != prev + 1 {
+                    return Err(format!(
+                        "{}: wal segment starts at seq {} but the previous segment ended at {prev}",
+                        path.display(),
+                        scan.header.start_seq
+                    ));
+                }
+            }
+            let last_seq = scan.records.last().map_or(scan.header.start_seq - 1, |r| r.seq);
+            prev_last = Some(last_seq);
+            if i + 1 < n {
+                if scan.torn_bytes > 0 {
+                    return Err(format!(
+                        "{}: torn record inside a non-final wal segment",
+                        path.display()
+                    ));
+                }
+                if scan.records.is_empty() {
+                    return Err(format!("{}: empty non-final wal segment", path.display()));
+                }
+                w.closed.push(ClosedSeg { path: path.clone(), last_seq });
+            } else {
+                if scan.torn_bytes > 0 {
+                    // Truncate the torn tail so appends continue from the
+                    // last valid frame instead of burying it.
+                    let f = OpenOptions::new()
+                        .read(true)
+                        .write(true)
+                        .open(path)
+                        .map_err(|e| format!("open {}: {e}", path.display()))?;
+                    f.set_len(scan.valid_len)
+                        .map_err(|e| format!("truncate {}: {e}", path.display()))?;
+                    f.sync_all().map_err(|e| format!("sync {}: {e}", path.display()))?;
+                }
+                w.file = OpenOptions::new()
+                    .append(true)
+                    .open(path)
+                    .map_err(|e| format!("open {}: {e}", path.display()))?;
+                w.seg = *seg_no;
+                w.seg_bytes = scan.valid_len;
+                w.seg_records = scan.records.len() as u64;
+                w.seq = last_seq;
+            }
+        }
+        Ok(w)
+    }
+
+    fn seg_path(&self, seg: u64) -> PathBuf {
+        self.dir.join(wal_file_name(&self.stem, self.shard, seg))
+    }
+
+    /// Create segment `seg` starting at `start_seq`: write + fsync the
+    /// header, then fsync the directory so the file name is durable.
+    fn open_fresh(&mut self, seg: u64, start_seq: u64) -> Result<(), String> {
+        let path = self.seg_path(seg);
+        let mut f = OpenOptions::new()
+            .write(true)
+            .create_new(true)
+            .open(&path)
+            .map_err(|e| format!("create {}: {e}", path.display()))?;
+        let header = encode_header(self.shard, start_seq, &self.key_bytes);
+        f.write_all(&header).map_err(|e| format!("write {}: {e}", path.display()))?;
+        f.sync_all().map_err(|e| format!("sync {}: {e}", path.display()))?;
+        sync_parent_dir(&self.dir)?;
+        self.file = f;
+        self.seg = seg;
+        self.seg_bytes = header.len() as u64;
+        self.seg_records = 0;
+        Ok(())
+    }
+
+    /// Rotate to a fresh segment: fsync the current one (its records are
+    /// now durable), remember it for checkpoint truncation, and open the
+    /// successor starting at `seq + 1`.
+    fn rotate(&mut self) -> Result<(), String> {
+        self.file
+            .sync_data()
+            .map_err(|e| format!("sync {}: {e}", self.seg_path(self.seg).display()))?;
+        self.unsynced = 0;
+        self.closed.push(ClosedSeg { path: self.seg_path(self.seg), last_seq: self.seq });
+        self.open_fresh(self.seg + 1, self.seq + 1)
+    }
+
+    /// Append one op. Rotates first when the current segment is at the
+    /// size cap. Returns the record's seq. Durability requires a
+    /// subsequent [`WalWriter::sync`] (group-committed by the caller).
+    pub fn append(&mut self, op: u8, id: u64, payload: &[f64]) -> Result<u64, String> {
+        if self.seg_bytes >= self.segment_cap && self.seg_records > 0 {
+            self.rotate()?;
+        }
+        let seq = self.seq + 1;
+        let frame = encode_frame(seq, op, id, payload);
+        self.file
+            .write_all(&frame)
+            .map_err(|e| format!("wal append {}: {e}", self.seg_path(self.seg).display()))?;
+        self.seq = seq;
+        self.seg_bytes += frame.len() as u64;
+        self.seg_records += 1;
+        self.unsynced += 1;
+        Ok(seq)
+    }
+
+    /// Group-commit: `sync_data` the current segment. Closed segments
+    /// were fsynced at rotation, so this covers every unsynced append.
+    pub fn sync(&mut self) -> Result<(), String> {
+        self.file
+            .sync_data()
+            .map_err(|e| format!("wal sync {}: {e}", self.seg_path(self.seg).display()))?;
+        self.unsynced = 0;
+        Ok(())
+    }
+
+    /// Last appended seq (0 when nothing was ever appended).
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Appends not yet covered by a [`WalWriter::sync`].
+    pub fn unsynced(&self) -> u64 {
+        self.unsynced
+    }
+
+    /// Delete every segment of this lane and start a fresh chain at
+    /// `seq + 1` — the runtime `restore` wire op rewinds index state to a
+    /// snapshot, so the logged tail must not be replayed over it. Seq
+    /// numbering continues (never regresses) so records appended after
+    /// the reset stay above any older checkpoint watermark.
+    pub fn reset(&mut self) -> Result<(), String> {
+        for c in std::mem::take(&mut self.closed) {
+            std::fs::remove_file(&c.path)
+                .map_err(|e| format!("remove {}: {e}", c.path.display()))?;
+        }
+        let current = self.seg_path(self.seg);
+        std::fs::remove_file(&current)
+            .map_err(|e| format!("remove {}: {e}", current.display()))?;
+        self.unsynced = 0;
+        self.open_fresh(1, self.seq + 1)
+    }
+
+    /// Checkpoint truncation: delete segments fully covered by the
+    /// durable watermark `mark` (every record seq ≤ mark is captured in a
+    /// durably renamed manifest). When the *active* segment is fully
+    /// covered and non-empty, rotate past it first so the lane always
+    /// keeps a live segment. Call only after the manifest rename is
+    /// durable. Returns the number of deleted segments.
+    pub fn truncate_covered(&mut self, mark: u64) -> Result<usize, String> {
+        let mut deleted = 0usize;
+        for c in std::mem::take(&mut self.closed) {
+            if c.last_seq <= mark {
+                std::fs::remove_file(&c.path)
+                    .map_err(|e| format!("remove {}: {e}", c.path.display()))?;
+                deleted += 1;
+            } else {
+                self.closed.push(c);
+            }
+        }
+        if self.seq <= mark && self.seg_records > 0 {
+            let old = self.seg_path(self.seg);
+            self.open_fresh(self.seg + 1, self.seq + 1)?;
+            std::fs::remove_file(&old).map_err(|e| format!("remove {}: {e}", old.display()))?;
+            self.unsynced = 0;
+            deleted += 1;
+        }
+        if deleted > 0 {
+            sync_parent_dir(&self.dir)?;
+        }
+        Ok(deleted)
+    }
+}
+
+/// Per-lane summary for `trp wal verify`.
+#[derive(Debug, Clone)]
+pub struct LaneReport {
+    /// Lane index.
+    pub shard: u32,
+    /// Readable segments.
+    pub segments: usize,
+    /// Valid records across the chain.
+    pub records: u64,
+    /// Seq of the first record position (the first segment's start_seq).
+    pub first_seq: u64,
+    /// Last valid seq (first_seq − 1 when the chain holds no records).
+    pub last_seq: u64,
+    /// Torn tail bytes discarded by scan-to-last-valid.
+    pub torn_bytes: u64,
+    /// Total on-disk bytes of the lane's files.
+    pub bytes: u64,
+}
+
+/// Per-signature summary for `trp wal verify`.
+#[derive(Debug, Clone)]
+pub struct StemReport {
+    /// File stem (`sig_<hash>`).
+    pub stem: String,
+    /// Opaque signature encoding from the segment headers (empty when no
+    /// lane was readable).
+    pub key_bytes: Vec<u8>,
+    /// Lane summaries in shard order.
+    pub lanes: Vec<LaneReport>,
+    /// First corruption hit, if any (lanes after it are still reported).
+    pub error: Option<String>,
+}
+
+/// Verify every WAL chain under `dir`: scan-to-last-valid per lane,
+/// reporting torn tails (tolerated) separately from corruption (loud,
+/// recorded in [`StemReport::error`]).
+pub fn verify_dir(dir: &Path) -> Result<Vec<StemReport>, String> {
+    let mut out = Vec::new();
+    for (stem, lanes) in scan_dir(dir)? {
+        let mut report = StemReport {
+            stem: stem.clone(),
+            key_bytes: Vec::new(),
+            lanes: Vec::new(),
+            error: None,
+        };
+        for (shard, files) in &lanes {
+            let bytes: u64 = files
+                .iter()
+                .map(|(_, p)| std::fs::metadata(p).map(|m| m.len()).unwrap_or(0))
+                .sum();
+            match read_lane(files) {
+                Ok(Some(stream)) => {
+                    if stream.shard != *shard {
+                        report.error.get_or_insert(format!(
+                            "{stem}.shard{shard}: header names shard {}",
+                            stream.shard
+                        ));
+                    }
+                    if report.key_bytes.is_empty() {
+                        report.key_bytes = stream.key_bytes.clone();
+                    } else if report.key_bytes != stream.key_bytes {
+                        report.error.get_or_insert(format!(
+                            "{stem}.shard{shard}: lanes disagree on the signature encoding"
+                        ));
+                    }
+                    report.lanes.push(LaneReport {
+                        shard: *shard,
+                        segments: stream.segments,
+                        records: stream.records.len() as u64,
+                        first_seq: stream.first_seq,
+                        last_seq: stream
+                            .records
+                            .last()
+                            .map_or(stream.first_seq.saturating_sub(1), |r| r.seq),
+                        torn_bytes: stream.torn_bytes,
+                        bytes,
+                    });
+                }
+                Ok(None) => {
+                    report.lanes.push(LaneReport {
+                        shard: *shard,
+                        segments: 0,
+                        records: 0,
+                        first_seq: 0,
+                        last_seq: 0,
+                        torn_bytes: bytes,
+                        bytes,
+                    });
+                }
+                Err(e) => {
+                    report.error.get_or_insert(e);
+                    report.lanes.push(LaneReport {
+                        shard: *shard,
+                        segments: 0,
+                        records: 0,
+                        first_seq: 0,
+                        last_seq: 0,
+                        torn_bytes: 0,
+                        bytes,
+                    });
+                }
+            }
+        }
+        out.push(report);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("trp_wal_unit_{}_{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn key() -> Vec<u8> {
+        vec![9, 8, 7, 6]
+    }
+
+    fn lane_files(dir: &Path, stem: &str, shard: u32) -> Vec<(u64, PathBuf)> {
+        scan_dir(dir).unwrap().remove(stem).and_then(|mut l| l.remove(&shard)).unwrap_or_default()
+    }
+
+    #[test]
+    fn fsync_policy_parses_and_rejects() {
+        assert_eq!(WalFsync::parse("flush").unwrap(), WalFsync::Flush);
+        assert_eq!(WalFsync::parse("every-64").unwrap(), WalFsync::EveryN(64));
+        assert!(WalFsync::parse("every-0").is_err());
+        assert!(WalFsync::parse("always").is_err());
+        assert!(WalFsync::parse("every-x").is_err());
+        assert_eq!(WalFsync::EveryN(8).name(), "every-8");
+        assert_eq!(WalFsync::parse(&WalFsync::Flush.name()).unwrap(), WalFsync::Flush);
+    }
+
+    #[test]
+    fn file_name_roundtrips() {
+        let name = wal_file_name("sig_00ff", 3, 12);
+        assert_eq!(name, "sig_00ff.shard3.00000012.wal");
+        assert_eq!(parse_wal_name(&name), Some(("sig_00ff".to_string(), 3, 12)));
+        assert_eq!(parse_wal_name("sig_00ff.snap"), None);
+        assert_eq!(parse_wal_name("sig_00ff.shard3.00000000.wal"), None);
+        assert_eq!(parse_wal_name("x.shardx.00000001.wal"), None);
+    }
+
+    #[test]
+    fn append_read_roundtrip_preserves_order_and_bits() {
+        let dir = tmp_dir("roundtrip");
+        let mut w = WalWriter::open(&dir, "sig_a", 0, key(), DEFAULT_SEGMENT_CAP, 1).unwrap();
+        assert_eq!(w.append(WAL_OP_INSERT, 7, &[1.5, -2.25, 3.125]).unwrap(), 1);
+        assert_eq!(w.append(WAL_OP_DELETE, 7, &[]).unwrap(), 2);
+        assert_eq!(w.append(WAL_OP_INSERT, 9, &[f64::MIN_POSITIVE, -0.0]).unwrap(), 3);
+        w.sync().unwrap();
+        assert_eq!(w.seq(), 3);
+        let stream = read_lane(&lane_files(&dir, "sig_a", 0)).unwrap().unwrap();
+        assert_eq!(stream.shard, 0);
+        assert_eq!(stream.key_bytes, key());
+        assert_eq!(stream.records.len(), 3);
+        assert_eq!(stream.records[0].payload, vec![1.5, -2.25, 3.125]);
+        assert_eq!(stream.records[1].op, WAL_OP_DELETE);
+        assert!(stream.records[1].payload.is_empty());
+        assert_eq!(stream.records[2].payload[1].to_bits(), (-0.0f64).to_bits());
+        assert_eq!(stream.torn_bytes, 0);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rotation_splits_segments_and_replay_spans_them() {
+        let dir = tmp_dir("rotate");
+        // Cap small enough that every record rotates after the first.
+        let mut w = WalWriter::open(&dir, "sig_r", 1, key(), 64, 1).unwrap();
+        for i in 0..10u64 {
+            w.append(WAL_OP_INSERT, i, &[i as f64; 4]).unwrap();
+        }
+        w.sync().unwrap();
+        let files = lane_files(&dir, "sig_r", 1);
+        assert!(files.len() > 1, "size cap must rotate, got {} segment(s)", files.len());
+        let stream = read_lane(&files).unwrap().unwrap();
+        assert_eq!(stream.records.len(), 10);
+        assert_eq!(stream.segments, files.len());
+        for (i, r) in stream.records.iter().enumerate() {
+            assert_eq!(r.seq, i as u64 + 1);
+            assert_eq!(r.id, i as u64);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_at_every_byte_offset_recovers_exact_prefix() {
+        // Satellite contract: truncate a segment at EVERY byte offset of
+        // the final record and assert replay recovers exactly the
+        // records before it.
+        let dir = tmp_dir("torn");
+        let mut w = WalWriter::open(&dir, "sig_t", 0, key(), DEFAULT_SEGMENT_CAP, 1).unwrap();
+        for i in 0..4u64 {
+            w.append(WAL_OP_INSERT, i, &[i as f64, 0.5]).unwrap();
+        }
+        w.sync().unwrap();
+        drop(w);
+        let files = lane_files(&dir, "sig_t", 0);
+        assert_eq!(files.len(), 1);
+        let path = files[0].1.clone();
+        let full = std::fs::read(&path).unwrap();
+        let frame_len = (4 + BODY_FIXED + 2 * 8 + 8) as u64;
+        let final_start = full.len() as u64 - frame_len;
+        for cut in final_start..full.len() as u64 {
+            std::fs::write(&path, &full[..cut as usize]).unwrap();
+            let stream = read_lane(&files).unwrap().unwrap();
+            assert_eq!(
+                stream.records.len(),
+                3,
+                "cut at byte {cut}: exactly the prefix before the torn record"
+            );
+            assert_eq!(stream.records.last().unwrap().seq, 3);
+            assert_eq!(stream.torn_bytes, cut - final_start);
+        }
+        // Untruncated file still replays all 4.
+        std::fs::write(&path, &full).unwrap();
+        assert_eq!(read_lane(&files).unwrap().unwrap().records.len(), 4);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checksum_bad_record_with_valid_followers_is_rejected_loudly() {
+        // Satellite contract: a complete frame with a bad checksum is
+        // corruption, not a torn tail — replay must refuse, not skip.
+        let dir = tmp_dir("badsum");
+        let mut w = WalWriter::open(&dir, "sig_c", 0, key(), DEFAULT_SEGMENT_CAP, 1).unwrap();
+        for i in 0..3u64 {
+            w.append(WAL_OP_INSERT, i, &[1.0, 2.0]).unwrap();
+        }
+        w.sync().unwrap();
+        drop(w);
+        let files = lane_files(&dir, "sig_c", 0);
+        let path = files[0].1.clone();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let frame_len = 4 + BODY_FIXED + 2 * 8 + 8;
+        // Flip one payload byte of the SECOND record (valid record after
+        // it): checksum must catch it and the error must be loud.
+        let second_body = bytes.len() - 2 * frame_len + 4;
+        bytes[second_body + BODY_FIXED + 3] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_lane(&files).unwrap_err();
+        assert!(err.contains("checksum mismatch"), "loud rejection, got: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reopen_after_torn_tail_truncates_and_continues_seq() {
+        let dir = tmp_dir("reopen");
+        let mut w = WalWriter::open(&dir, "sig_o", 2, key(), DEFAULT_SEGMENT_CAP, 1).unwrap();
+        for i in 0..5u64 {
+            w.append(WAL_OP_INSERT, i, &[i as f64]).unwrap();
+        }
+        w.sync().unwrap();
+        drop(w);
+        let files = lane_files(&dir, "sig_o", 2);
+        let path = files[0].1.clone();
+        let full = std::fs::read(&path).unwrap();
+        // Tear the final record in half.
+        std::fs::write(&path, &full[..full.len() - 7]).unwrap();
+        let mut w = WalWriter::open(&dir, "sig_o", 2, key(), DEFAULT_SEGMENT_CAP, 1).unwrap();
+        assert_eq!(w.seq(), 4, "torn record 5 truncated away");
+        assert_eq!(w.append(WAL_OP_DELETE, 9, &[]).unwrap(), 5, "seq continues after the cut");
+        w.sync().unwrap();
+        let stream = read_lane(&lane_files(&dir, "sig_o", 2)).unwrap().unwrap();
+        assert_eq!(stream.records.len(), 5);
+        assert_eq!(stream.records[4].op, WAL_OP_DELETE);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn reset_clears_the_lane_and_keeps_seq_monotonic() {
+        let dir = tmp_dir("reset");
+        let mut w = WalWriter::open(&dir, "sig_x", 0, key(), 64, 1).unwrap();
+        for i in 0..6u64 {
+            w.append(WAL_OP_INSERT, i, &[2.0; 3]).unwrap();
+        }
+        w.sync().unwrap();
+        assert!(lane_files(&dir, "sig_x", 0).len() > 1);
+        w.reset().unwrap();
+        let files = lane_files(&dir, "sig_x", 0);
+        assert_eq!(files.len(), 1, "reset leaves exactly one fresh segment");
+        assert_eq!(w.append(WAL_OP_INSERT, 50, &[1.0]).unwrap(), 7, "seq never regresses");
+        w.sync().unwrap();
+        let stream = read_lane(&lane_files(&dir, "sig_x", 0)).unwrap().unwrap();
+        assert_eq!(stream.records.len(), 1);
+        assert_eq!(stream.first_seq, 7);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncate_covered_deletes_only_covered_segments() {
+        let dir = tmp_dir("truncate");
+        let mut w = WalWriter::open(&dir, "sig_k", 0, key(), 64, 1).unwrap();
+        for i in 0..8u64 {
+            w.append(WAL_OP_INSERT, i, &[3.0; 3]).unwrap();
+        }
+        w.sync().unwrap();
+        let before = lane_files(&dir, "sig_k", 0).len();
+        assert!(before >= 3, "need several segments, got {before}");
+        // Watermark in the middle: early segments go, the tail stays.
+        let deleted = w.truncate_covered(4).unwrap();
+        assert!(deleted >= 1);
+        let stream = read_lane(&lane_files(&dir, "sig_k", 0)).unwrap().unwrap();
+        assert_eq!(stream.records.last().unwrap().seq, 8, "uncovered tail survives");
+        assert!(stream.records[0].seq > 1, "covered head was truncated");
+        assert!(stream.records[0].seq <= 5, "no uncovered record may be dropped");
+        // Full coverage: everything goes, lane stays appendable.
+        let _ = w.truncate_covered(8).unwrap();
+        let stream = read_lane(&lane_files(&dir, "sig_k", 0)).unwrap().unwrap();
+        assert!(stream.records.is_empty());
+        assert_eq!(w.append(WAL_OP_INSERT, 99, &[1.0]).unwrap(), 9);
+        w.sync().unwrap();
+        let stream = read_lane(&lane_files(&dir, "sig_k", 0)).unwrap().unwrap();
+        assert_eq!(stream.records.len(), 1);
+        assert_eq!(stream.records[0].seq, 9);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_header_final_segment_is_dropped_not_fatal() {
+        let dir = tmp_dir("tornhead");
+        let mut w = WalWriter::open(&dir, "sig_h", 0, key(), 64, 1).unwrap();
+        for i in 0..4u64 {
+            w.append(WAL_OP_INSERT, i, &[4.0; 3]).unwrap();
+        }
+        w.sync().unwrap();
+        drop(w);
+        let files = lane_files(&dir, "sig_h", 0);
+        let last_seg = files.last().unwrap().0;
+        // Simulate a crash inside rotation: successor exists but only a
+        // header prefix was written.
+        let torn = dir.join(wal_file_name("sig_h", 0, last_seg + 1));
+        std::fs::write(&torn, &WAL_MAGIC[..5]).unwrap();
+        let all = lane_files(&dir, "sig_h", 0);
+        let stream = read_lane(&all).unwrap().unwrap();
+        assert_eq!(stream.records.len(), 4, "torn-header segment contributes nothing");
+        let mut w = WalWriter::open(&dir, "sig_h", 0, key(), 64, 1).unwrap();
+        assert_eq!(w.seq(), 4);
+        assert!(!torn.exists(), "reopen deletes the torn-header segment");
+        assert_eq!(w.append(WAL_OP_INSERT, 9, &[1.0]).unwrap(), 5);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cross_segment_seq_gap_is_rejected() {
+        let dir = tmp_dir("gap");
+        let mut w = WalWriter::open(&dir, "sig_g", 0, key(), 64, 1).unwrap();
+        for i in 0..6u64 {
+            w.append(WAL_OP_INSERT, i, &[5.0; 3]).unwrap();
+        }
+        w.sync().unwrap();
+        drop(w);
+        let files = lane_files(&dir, "sig_g", 0);
+        assert!(files.len() >= 3);
+        // Delete a MIDDLE segment: replay must refuse, not bridge the gap.
+        std::fs::remove_file(&files[1].1).unwrap();
+        let err = read_lane(&lane_files(&dir, "sig_g", 0)).unwrap_err();
+        assert!(err.contains("previous segment ended"), "got: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn bad_magic_is_loud_everywhere() {
+        let dir = tmp_dir("magic");
+        let mut w = WalWriter::open(&dir, "sig_m", 0, key(), DEFAULT_SEGMENT_CAP, 1).unwrap();
+        w.append(WAL_OP_INSERT, 1, &[1.0]).unwrap();
+        w.sync().unwrap();
+        drop(w);
+        let files = lane_files(&dir, "sig_m", 0);
+        let mut bytes = std::fs::read(&files[0].1).unwrap();
+        bytes[0] ^= 0xFF;
+        std::fs::write(&files[0].1, &bytes).unwrap();
+        assert!(read_lane(&files).unwrap_err().contains("bad magic"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_or_torn_only_lane_reads_as_none() {
+        let dir = tmp_dir("none");
+        assert!(read_lane(&[]).unwrap().is_none());
+        let torn = dir.join(wal_file_name("sig_n", 0, 1));
+        std::fs::write(&torn, b"TRP").unwrap();
+        let files = lane_files(&dir, "sig_n", 0);
+        assert!(read_lane(&files).unwrap().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn verify_dir_reports_lanes_and_corruption() {
+        let dir = tmp_dir("verify");
+        for shard in 0..2u32 {
+            let mut w = WalWriter::open(&dir, "sig_v", shard, key(), 64, 1).unwrap();
+            for i in 0..5u64 {
+                w.append(WAL_OP_INSERT, i, &[6.0; 3]).unwrap();
+            }
+            w.sync().unwrap();
+        }
+        let reports = verify_dir(&dir).unwrap();
+        assert_eq!(reports.len(), 1);
+        assert_eq!(reports[0].stem, "sig_v");
+        assert_eq!(reports[0].lanes.len(), 2);
+        assert!(reports[0].error.is_none());
+        assert_eq!(reports[0].key_bytes, key());
+        for lane in &reports[0].lanes {
+            assert_eq!(lane.records, 5);
+            assert_eq!(lane.last_seq, 5);
+            assert_eq!(lane.torn_bytes, 0);
+            assert!(lane.bytes > 0);
+        }
+        // Corrupt one lane: verify still reports, with a loud error.
+        let files = lane_files(&dir, "sig_v", 1);
+        let mut bytes = std::fs::read(&files[0].1).unwrap();
+        let n = bytes.len();
+        bytes[n - 10] ^= 0xFF;
+        std::fs::write(&files[0].1, &bytes).unwrap();
+        let reports = verify_dir(&dir).unwrap();
+        assert!(reports[0].error.is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scan_dir_of_missing_directory_is_empty() {
+        let dir = std::env::temp_dir().join("trp_wal_unit_never_created");
+        assert!(scan_dir(&dir).unwrap().is_empty());
+    }
+}

@@ -6,6 +6,8 @@
 //!                 [--restore DIR] [--index-shards S]
 //!                 [--index-backend flat|lsh] [--lsh T,B,P | --lsh-auto N [--lsh-recall R]]
 //!                 [--trace-dir DIR [--trace-file-cap BYTES] [--trace-keep N]]
+//!                 [--wal-dir DIR [--wal-segment-cap BYTES] [--wal-fsync flush|every-N]]
+//! trp wal         verify|dump [--dir DIR] [--json]
 //! trp metrics     --connect ADDR [--watch [--interval SECS]] [--reset]
 //! trp metrics     --check-trace FILE          # CI: validate span JSONL coverage
 //! trp snapshot    --connect ADDR --case medium --format tt [--restore]
@@ -59,6 +61,7 @@ fn run(args: &Args) -> Result<(), String> {
         Some("sketch") => cmd_sketch(args, &cfg),
         Some("artifacts") => cmd_artifacts(&cfg),
         Some("lint") => cmd_lint(args),
+        Some("wal") => cmd_wal(args),
         _ => {
             print_usage();
             Ok(())
@@ -75,7 +78,9 @@ fn print_usage() {
                        (--index-shards S partitions each signature's ANN\n\
                        index across S parallel lanes; --index-backend\n\
                        flat|lsh, --lsh T,B,P or --lsh-auto N --lsh-recall R;\n\
-                       --trace-dir DIR records request spans as rotated JSONL)\n\
+                       --trace-dir DIR records request spans as rotated JSONL;\n\
+                       --wal-dir DIR logs every mutation ahead of apply so a\n\
+                       SIGKILL loses nothing past the last group-commit fsync)\n\
            project     project one random input and print the distortion\n\
            experiment  regenerate a paper figure: fig1|fig2|fig3|fig4|ablation|batch|ann\n\
            bounds      evaluate the Theorem 2 size bounds\n\
@@ -88,6 +93,10 @@ fn print_usage() {
                        span JSONL file for CI)\n\
            snapshot    ask a listening server to snapshot (or, with\n\
                        --restore, reload) a signature's index\n\
+           wal         offline write-ahead-log inspection: `verify` checks\n\
+                       every segment chain (headers, checksums, seq\n\
+                       continuity; exits nonzero on corruption replay would\n\
+                       refuse), `dump` prints the decodable records\n\
            artifacts   list and verify the compiled artifact set\n\
            lint        determinism & concurrency static analysis over this\n\
                        crate's own sources (--json for the CI artifact;\n\
@@ -193,6 +202,29 @@ fn cmd_serve(args: &Args, cfg: &AppConfig) -> Result<(), String> {
         }
         None => None,
     };
+    // Durability: --wal-dir DIR turns on the per-signature, per-shard-lane
+    // write-ahead log (index::wal). Requires --snapshot-dir because WAL
+    // checkpoints are snapshot cuts — recovery replays the segment tail on
+    // top of the newest restorable snapshot, and runs inside
+    // `Coordinator::start` before any traffic is accepted.
+    let wal_dir = args.get("wal-dir").map(std::path::PathBuf::from);
+    if wal_dir.is_some() && snapshot_dir.is_none() {
+        return Err("--wal-dir requires --snapshot-dir (WAL checkpoints are snapshot cuts)".into());
+    }
+    let wal_segment_cap: u64 =
+        args.get_parsed_or("wal-segment-cap", tensorized_rp::index::wal::DEFAULT_SEGMENT_CAP)?;
+    if wal_segment_cap == 0 {
+        return Err("--wal-segment-cap must be ≥ 1".into());
+    }
+    let wal_fsync = tensorized_rp::index::WalFsync::parse(&args.get_or("wal-fsync", "flush"))
+        .map_err(|e| format!("bad --wal-fsync: {e}"))?;
+    if let Some(dir) = &wal_dir {
+        println!(
+            "[serve] wal at {} (segment cap {wal_segment_cap} bytes, fsync {})",
+            dir.display(),
+            wal_fsync.name()
+        );
+    }
     let coord = Coordinator::start(
         CoordinatorConfig {
             master_seed: cfg.seed,
@@ -203,6 +235,9 @@ fn cmd_serve(args: &Args, cfg: &AppConfig) -> Result<(), String> {
             index_backend,
             lsh,
             trace,
+            wal_dir,
+            wal_segment_cap,
+            wal_fsync,
             ..Default::default()
         },
         engine,
@@ -602,16 +637,21 @@ fn cmd_experiment(args: &Args, cfg: &AppConfig) -> Result<(), String> {
             // Tracing tripwire: same coordinator point with tracing off
             // vs on — responses must be bit-identical, overhead small.
             let trow = batch::trace_overhead(&c);
+            // Durability tripwire: same insert point with the WAL off vs
+            // on — responses must be bit-identical and WAL-on must
+            // retain ≥ 80% of WAL-off insert throughput.
+            let wrow = batch::wal_overhead(&c);
             let bench_path = args.get_or("bench-out", "BENCH_batch_sweep.json");
             std::fs::write(
                 &bench_path,
-                batch::to_json(&c, &rows, &krows, Some(&trow)).to_string_pretty(),
+                batch::to_json(&c, &rows, &krows, Some(&trow), Some(&wrow)).to_string_pretty(),
             )
             .map_err(|e| e.to_string())?;
             println!("[written {bench_path}]");
             batch::print_verdict(&rows);
             batch::print_kernel_verdict(&krows);
             batch::print_trace_verdict(&trow);
+            batch::print_wal_verdict(&wrow);
         }
         "ann" => {
             let mut c = if cfg.quick {
@@ -780,6 +820,116 @@ fn cmd_lint(args: &Args) -> Result<(), String> {
         Ok(())
     } else {
         Err(format!("{} unwaived lint violations", report.violations.len()))
+    }
+}
+
+/// Offline inspection of a write-ahead-log directory. `trp wal verify
+/// [--dir D] [--json]` scans every segment chain (headers, checksums,
+/// sequence continuity) and exits nonzero on any corruption that recovery
+/// replay would refuse — torn final records are tolerated and reported as
+/// `torn_bytes`. `trp wal dump [--dir D]` prints every decodable record.
+fn cmd_wal(args: &Args) -> Result<(), String> {
+    use tensorized_rp::index::wal;
+    use tensorized_rp::util::json::{obj, Json};
+    let action = args.pos(1).ok_or("wal needs an action: verify|dump")?;
+    let dir = std::path::PathBuf::from(args.get_or("dir", "wal"));
+    match action {
+        "verify" => {
+            let reports = wal::verify_dir(&dir)?;
+            let bad: Vec<&str> = reports
+                .iter()
+                .filter(|r| r.error.is_some())
+                .map(|r| r.stem.as_str())
+                .collect();
+            if args.flag("json") {
+                let stems: Vec<Json> = reports
+                    .iter()
+                    .map(|r| {
+                        let lanes: Vec<Json> = r
+                            .lanes
+                            .iter()
+                            .map(|l| {
+                                obj(vec![
+                                    ("shard", Json::Num(f64::from(l.shard))),
+                                    ("segments", Json::Num(l.segments as f64)),
+                                    ("records", Json::Num(l.records as f64)),
+                                    ("first_seq", Json::Num(l.first_seq as f64)),
+                                    ("last_seq", Json::Num(l.last_seq as f64)),
+                                    ("torn_bytes", Json::Num(l.torn_bytes as f64)),
+                                    ("bytes", Json::Num(l.bytes as f64)),
+                                ])
+                            })
+                            .collect();
+                        let mut fields = vec![
+                            ("stem", Json::Str(r.stem.clone())),
+                            ("ok", Json::Num(f64::from(u8::from(r.error.is_none())))),
+                            ("lanes", Json::Arr(lanes)),
+                        ];
+                        if let Some(e) = &r.error {
+                            fields.push(("error", Json::Str(e.clone())));
+                        }
+                        obj(fields)
+                    })
+                    .collect();
+                let report = obj(vec![
+                    ("dir", Json::Str(dir.display().to_string())),
+                    ("stems", Json::Arr(stems)),
+                    ("corrupt", Json::Num(bad.len() as f64)),
+                ]);
+                println!("{}", report.to_string_pretty());
+            } else {
+                for r in &reports {
+                    println!("[wal] {}: {}", r.stem, r.error.as_deref().unwrap_or("ok"));
+                    for l in &r.lanes {
+                        println!(
+                            "  shard{} segs={} records={} seq={}..={} torn_bytes={} bytes={}",
+                            l.shard,
+                            l.segments,
+                            l.records,
+                            l.first_seq,
+                            l.last_seq,
+                            l.torn_bytes,
+                            l.bytes
+                        );
+                    }
+                }
+                if reports.is_empty() {
+                    println!("[wal] {}: no segments", dir.display());
+                }
+            }
+            if bad.is_empty() {
+                Ok(())
+            } else {
+                Err(format!("wal verify: corruption in {}", bad.join(", ")))
+            }
+        }
+        "dump" => {
+            for (stem, lanes) in wal::scan_dir(&dir)? {
+                for (shard, files) in &lanes {
+                    match wal::read_lane(files) {
+                        Ok(Some(stream)) => {
+                            for rec in &stream.records {
+                                let op = if rec.op == wal::WAL_OP_DELETE {
+                                    "delete"
+                                } else {
+                                    "insert"
+                                };
+                                println!(
+                                    "{stem} shard={shard} seq={} {op} id={} dim={}",
+                                    rec.seq,
+                                    rec.id,
+                                    rec.payload.len()
+                                );
+                            }
+                        }
+                        Ok(None) => println!("# {stem}.shard{shard}: torn header only"),
+                        Err(e) => println!("# {stem}.shard{shard}: {e}"),
+                    }
+                }
+            }
+            Ok(())
+        }
+        other => Err(format!("unknown wal action {other} (verify|dump)")),
     }
 }
 

@@ -16,7 +16,7 @@ use crate::obs::trace::TraceStats;
 use crate::util::json::{obj, Json};
 
 /// Number of per-signature stage histograms.
-pub const STAGE_COUNT: usize = 8;
+pub const STAGE_COUNT: usize = 9;
 
 /// Pipeline stages with a per-signature latency histogram.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -38,6 +38,9 @@ pub enum Stage {
     Reply,
     /// Off-turn snapshot file writes, per snapshot.
     SnapshotWrite,
+    /// WAL group-commit fsync (all touched lanes), per flush that
+    /// actually synced — the price of an acked-⇒-durable flush.
+    WalFsync,
 }
 
 impl Stage {
@@ -51,6 +54,7 @@ impl Stage {
         Stage::Merge,
         Stage::Reply,
         Stage::SnapshotWrite,
+        Stage::WalFsync,
     ];
 
     /// Stable exported name.
@@ -64,6 +68,7 @@ impl Stage {
             Stage::Merge => "merge",
             Stage::Reply => "reply",
             Stage::SnapshotWrite => "snapshot_write",
+            Stage::WalFsync => "wal_fsync",
         }
     }
 }
@@ -85,6 +90,10 @@ pub struct SigMetrics {
     pub errors: AtomicU64,
     /// Native flushes executed for this signature.
     pub flushes: AtomicU64,
+    /// Gauge: WAL records appended since the last checkpoint (the replay
+    /// cost a crash would incur right now; 0 with the WAL off). Stored
+    /// by the coordinator's gauge refresh at snapshot time.
+    pub wal_lag: AtomicU64,
     stages: [LatencyHistogram; STAGE_COUNT],
 }
 
@@ -98,6 +107,7 @@ impl Default for SigMetrics {
             deletes: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             flushes: AtomicU64::new(0),
+            wal_lag: AtomicU64::new(0),
             stages: std::array::from_fn(|_| LatencyHistogram::new()),
         }
     }
@@ -193,6 +203,8 @@ pub struct SigSnapshot {
     pub errors: u64,
     /// See [`SigMetrics::flushes`].
     pub flushes: u64,
+    /// See [`SigMetrics::wal_lag`].
+    pub wal_lag: u64,
     /// Non-empty stage histograms, in [`Stage::ALL`] order.
     pub stages: Vec<StageSnapshot>,
 }
@@ -225,6 +237,7 @@ impl SigSnapshot {
             deletes: sig.deletes.load(Ordering::Relaxed),
             errors: sig.errors.load(Ordering::Relaxed),
             flushes: sig.flushes.load(Ordering::Relaxed),
+            wal_lag: sig.wal_lag.load(Ordering::Relaxed),
             stages,
         }
     }
@@ -273,6 +286,9 @@ fn global_to_json(g: &MetricsSnapshot) -> Json {
         ("index_shard_parallel", n(g.index_shard_parallel)),
         ("index_shard_skew_now", n(g.index_shard_skew_now)),
         ("index_shard_parallel_now", n(g.index_shard_parallel_now)),
+        ("wal_appends", n(g.wal_appends)),
+        ("wal_fsyncs", n(g.wal_fsyncs)),
+        ("wal_replayed", n(g.wal_replayed)),
         ("mean_latency_us", Json::Num(g.mean_latency_us)),
         ("p50_latency_us", n(g.p50_latency_us)),
         ("p99_latency_us", n(g.p99_latency_us)),
@@ -299,6 +315,9 @@ fn global_from_json(v: &Json) -> MetricsSnapshot {
         index_shard_parallel: u(v.get("index_shard_parallel")),
         index_shard_skew_now: u(v.get("index_shard_skew_now")),
         index_shard_parallel_now: u(v.get("index_shard_parallel_now")),
+        wal_appends: u(v.get("wal_appends")),
+        wal_fsyncs: u(v.get("wal_fsyncs")),
+        wal_replayed: u(v.get("wal_replayed")),
         mean_latency_us: f(v.get("mean_latency_us")),
         p50_latency_us: u(v.get("p50_latency_us")),
         p99_latency_us: u(v.get("p99_latency_us")),
@@ -340,6 +359,7 @@ impl ObsSnapshot {
                     ("deletes", Json::Num(s.deletes as f64)),
                     ("errors", Json::Num(s.errors as f64)),
                     ("flushes", Json::Num(s.flushes as f64)),
+                    ("wal_lag", Json::Num(s.wal_lag as f64)),
                     ("stages", Json::Arr(stages)),
                 ])
             })
@@ -419,6 +439,7 @@ impl ObsSnapshot {
                     deletes: u(s.get("deletes")),
                     errors: u(s.get("errors")),
                     flushes: u(s.get("flushes")),
+                    wal_lag: u(s.get("wal_lag")),
                     stages,
                 });
             }
@@ -470,6 +491,9 @@ impl ObsSnapshot {
         counter("index_queries_total", g.index_queries);
         counter("index_snapshots_total", g.index_snapshots);
         counter("index_restores_total", g.index_restores);
+        counter("wal_appends_total", g.wal_appends);
+        counter("wal_fsyncs_total", g.wal_fsyncs);
+        counter("wal_replayed_total", g.wal_replayed);
         let mut gauge = |name: &str, v: f64| {
             let _ = writeln!(out, "# TYPE trp_{name} gauge\ntrp_{name} {v}");
         };
@@ -500,6 +524,14 @@ impl ObsSnapshot {
                 out,
                 "trp_sig_flushes_total{{sig=\"{}\"}} {}",
                 s.signature, s.flushes
+            );
+        }
+        let _ = writeln!(out, "# TYPE trp_index_wal_lag gauge");
+        for s in &self.signatures {
+            let _ = writeln!(
+                out,
+                "trp_index_wal_lag{{sig=\"{}\"}} {}",
+                s.signature, s.wal_lag
             );
         }
         let _ = writeln!(out, "# TYPE trp_stage_latency_us summary");
@@ -559,6 +591,7 @@ mod tests {
         let sig = reg.get("tt-r5/3x3x3/k64");
         sig.requests.fetch_add(4, Ordering::Relaxed);
         sig.queries.fetch_add(2, Ordering::Relaxed);
+        sig.wal_lag.store(3, Ordering::Relaxed);
         sig.record_stage(Stage::QueueWait, 120);
         sig.record_stage(Stage::Project, 900);
         sig.record_stage(Stage::Project, 1_800);
@@ -615,5 +648,7 @@ mod tests {
         assert!(text.contains("stage=\"project_gemm\""));
         assert!(text.contains("trp_gemm_time_us_total{shape=\"16x64x64\"} 42"));
         assert!(text.contains("trp_trace_spans_dropped_total 1"));
+        assert!(text.contains("trp_index_wal_lag{sig=\"tt-r5/3x3x3/k64\"} 3"));
+        assert!(text.contains("trp_wal_appends_total"));
     }
 }

@@ -71,7 +71,7 @@ fn every_waiver_on_the_live_tree_has_a_written_reason() {
 }
 
 #[test]
-fn rule_catalog_is_the_documented_six() {
+fn rule_catalog_is_the_documented_seven() {
     let expected = [
         "float-total-order",
         "no-fma",
@@ -79,6 +79,7 @@ fn rule_catalog_is_the_documented_six() {
         "unordered-iteration",
         "unsafe-audit",
         "relaxed-handoff",
+        "fsync-discipline",
     ];
     assert_eq!(RULE_IDS, &expected[..]);
 }

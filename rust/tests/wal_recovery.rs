@@ -1,0 +1,462 @@
+//! Tier-1 gate: crash recovery through the write-ahead log.
+//!
+//! The durability contract under test: with `wal_dir` configured, every
+//! acknowledged mutation survives an abrupt process death (no shutdown,
+//! no final snapshot), and a restarted coordinator answers queries
+//! **bit-identically** to an uninterrupted twin that received exactly
+//! the recovered ops. Crashes are injected three ways:
+//!
+//! 1. in-process "SIGKILL" (`std::mem::forget` of the live coordinator —
+//!    no destructor runs, exactly like a kill) at the end of a pipelined
+//!    ingest burst, across {flat, lsh} × S ∈ {1, 2, 4}, always restoring
+//!    into a *different* shard count;
+//! 2. a real `SIGKILL` of a `trp serve --listen --wal-dir` child process
+//!    at randomized points during concurrent pipelined TCP ingest —
+//!    recovery must hold acked ⊆ recovered ⊆ sent;
+//! 3. an injected panic mid shard-turn (poisons the lane), after which
+//!    the WAL must still be appendable and replayable.
+//!
+//! Plus the zero-behavior-change tripwire: without `wal_dir` the
+//! coordinator's replies are bit-identical to a WAL-less twin and no WAL
+//! counter ever moves.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use tensorized_rp::coordinator::{
+    Coordinator, CoordinatorConfig, IndexRegistry, MapKey, MapKind, NetClient, ProjectRequest,
+};
+use tensorized_rp::data::inputs::unit_input;
+use tensorized_rp::index::{shard_of, wal, BackendKind, LshConfig, WalConfig, WalFsync};
+use tensorized_rp::rng::Rng;
+use tensorized_rp::tensor::AnyTensor;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("trp_walrec_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn coordinator(
+    backend: BackendKind,
+    shards: usize,
+    snap: Option<&Path>,
+    wal_dir: Option<&Path>,
+) -> Coordinator {
+    Coordinator::start(
+        CoordinatorConfig {
+            workers: 3,
+            default_k: 12,
+            master_seed: 0xFEED,
+            index_backend: backend,
+            lsh: LshConfig { tables: 4, bits: 8, probes: 2 },
+            index_shards: shards,
+            snapshot_dir: snap.map(Path::to_path_buf),
+            wal_dir: wal_dir.map(Path::to_path_buf),
+            // Tiny cap so every burst crosses several segment rotations.
+            wal_segment_cap: 1024,
+            wal_fsync: WalFsync::Flush,
+            ..Default::default()
+        },
+        None,
+    )
+}
+
+/// Pipelined burst: 24 inserts, then a delete of id 3, all submitted
+/// before a single reply is awaited.
+fn ingest_burst(coord: &Coordinator, payloads: &[AnyTensor]) {
+    let fmt = payloads[0].format();
+    let dims = vec![3usize; 4];
+    let mut rxs = Vec::new();
+    for (i, p) in payloads.iter().enumerate() {
+        rxs.push(coord.submit(ProjectRequest::insert(i as u64, p.clone())));
+    }
+    rxs.push(coord.submit(ProjectRequest::delete(100, 3, fmt, dims)));
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+}
+
+fn query_ids(coord: &Coordinator, q: &AnyTensor, id: u64, k: usize) -> Vec<u64> {
+    coord
+        .project_blocking(ProjectRequest::query(id, q.clone(), k))
+        .unwrap()
+        .neighbors
+        .unwrap()
+        .iter()
+        .map(|n| n.id)
+        .collect()
+}
+
+#[test]
+fn killed_coordinator_recovers_bit_identically_into_a_different_shard_count() {
+    for backend in [BackendKind::Flat, BackendKind::Lsh] {
+        for (s_before, s_after) in [(1usize, 2usize), (2, 4), (4, 1)] {
+            let tag = format!("{}_{s_before}to{s_after}", backend.name());
+            let root = tmp_dir(&tag);
+            let snap = root.join("snap");
+            let wal_dir = root.join("wal");
+            let dims = vec![3usize; 4];
+            let mut rng = Rng::seed_from(31);
+            let payloads: Vec<AnyTensor> =
+                (0..24).map(|_| unit_input(&dims, 2, "tt", &mut rng)).collect();
+            let queries: Vec<AnyTensor> =
+                (0..6).map(|_| unit_input(&dims, 2, "tt", &mut rng)).collect();
+
+            // Coordinator A ingests, gets every ack, then "dies": forget
+            // runs no destructor — no shutdown snapshot, no WAL close,
+            // exactly the state a SIGKILL leaves behind.
+            let a = coordinator(backend, s_before, Some(&snap), Some(&wal_dir));
+            ingest_burst(&a, &payloads);
+            std::mem::forget(a);
+
+            // Coordinator B restarts with a DIFFERENT shard count;
+            // recovery runs inside start(), before any traffic.
+            let b = coordinator(backend, s_after, Some(&snap), Some(&wal_dir));
+            assert_eq!(
+                b.metrics().wal_replayed,
+                25,
+                "[{tag}] 24 inserts + 1 delete replayed from the segment tail"
+            );
+
+            // Twin C: uninterrupted, same ops, same shard count as B.
+            let c = coordinator(backend, s_after, None, None);
+            ingest_burst(&c, &payloads);
+
+            for (qi, q) in queries.iter().enumerate() {
+                let id = 500 + qi as u64;
+                let nb = b
+                    .project_blocking(ProjectRequest::query(id, q.clone(), 5))
+                    .unwrap()
+                    .neighbors
+                    .unwrap();
+                let nc = c
+                    .project_blocking(ProjectRequest::query(id, q.clone(), 5))
+                    .unwrap()
+                    .neighbors
+                    .unwrap();
+                assert_eq!(
+                    nb, nc,
+                    "[{tag}] recovered replies must be bit-identical to the twin"
+                );
+                assert!(nb.iter().all(|n| n.id != 3), "[{tag}] logged delete replayed");
+            }
+            b.shutdown();
+            c.shutdown();
+            let _ = std::fs::remove_dir_all(&root);
+        }
+    }
+}
+
+#[test]
+fn snapshot_checkpoint_bounds_replay_to_the_segment_tail() {
+    let root = tmp_dir("checkpoint");
+    let snap = root.join("snap");
+    let wal_dir = root.join("wal");
+    let dims = vec![3usize; 4];
+    let mut rng = Rng::seed_from(47);
+    let payloads: Vec<AnyTensor> =
+        (0..24).map(|_| unit_input(&dims, 2, "tt", &mut rng)).collect();
+    let queries: Vec<AnyTensor> =
+        (0..4).map(|_| unit_input(&dims, 2, "tt", &mut rng)).collect();
+    let fmt = payloads[0].format();
+
+    // A: 12 inserts, a snapshot op (the WAL checkpoint), 12 more inserts
+    // and a delete — all pipelined — then death without shutdown.
+    let a = coordinator(BackendKind::Flat, 2, Some(&snap), Some(&wal_dir));
+    let mut rxs = Vec::new();
+    for (i, p) in payloads.iter().take(12).enumerate() {
+        rxs.push(a.submit(ProjectRequest::insert(i as u64, p.clone())));
+    }
+    rxs.push(a.submit(ProjectRequest::snapshot(200, fmt, dims.clone())));
+    for (i, p) in payloads.iter().enumerate().skip(12) {
+        rxs.push(a.submit(ProjectRequest::insert(i as u64, p.clone())));
+    }
+    rxs.push(a.submit(ProjectRequest::delete(201, 3, fmt, dims.clone())));
+    for rx in rxs {
+        rx.recv().unwrap().unwrap();
+    }
+    assert_eq!(a.metrics().index_snapshots, 1);
+    std::mem::forget(a);
+
+    // B restores into 3 shards: the checkpoint supplies the first 12
+    // items, the WAL supplies ONLY the 13-op tail past the marks.
+    let b = coordinator(BackendKind::Flat, 3, Some(&snap), Some(&wal_dir));
+    assert_eq!(
+        b.metrics().wal_replayed,
+        13,
+        "records covered by the checkpoint watermarks must not replay"
+    );
+
+    let c = coordinator(BackendKind::Flat, 3, None, None);
+    ingest_burst(&c, &payloads);
+
+    for (qi, q) in queries.iter().enumerate() {
+        let id = 600 + qi as u64;
+        let nb = b
+            .project_blocking(ProjectRequest::query(id, q.clone(), 5))
+            .unwrap()
+            .neighbors
+            .unwrap();
+        let nc = c
+            .project_blocking(ProjectRequest::query(id, q.clone(), 5))
+            .unwrap()
+            .neighbors
+            .unwrap();
+        assert_eq!(nb, nc, "checkpoint + tail must equal the uninterrupted stream");
+    }
+    b.shutdown();
+    c.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn sigkill_mid_pipelined_ingest_loses_no_acked_op() {
+    let root = tmp_dir("sigkill");
+    for (round, kill_ms) in [40u64, 160].into_iter().enumerate() {
+        let snap = root.join(format!("snap{round}"));
+        let wal_dir = root.join(format!("wal{round}"));
+        std::fs::create_dir_all(&snap).unwrap();
+
+        let mut child = std::process::Command::new(env!("CARGO_BIN_EXE_trp"))
+            .args([
+                "serve",
+                "--listen",
+                "127.0.0.1:0",
+                "--no-pjrt",
+                "--seed",
+                "4242",
+                "--snapshot-dir",
+                snap.to_str().unwrap(),
+                "--wal-dir",
+                wal_dir.to_str().unwrap(),
+                "--wal-segment-cap",
+                "8192",
+            ])
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::null())
+            .spawn()
+            .expect("spawn trp serve");
+        let addr = {
+            use std::io::BufRead;
+            let out = child.stdout.take().unwrap();
+            let mut found = None;
+            for line in std::io::BufReader::new(out).lines() {
+                let line = line.unwrap();
+                if let Some(rest) = line.strip_prefix("[serve] listening on ") {
+                    found = rest.split_whitespace().next().map(str::to_string);
+                    break;
+                }
+            }
+            found.expect("child announced its listen address")
+        };
+
+        // Concurrent pipelined ingest until the connection dies under us.
+        let acked = Arc::new(Mutex::new(Vec::<u64>::new()));
+        let sent = Arc::new(AtomicU64::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let ingest = {
+            let (acked, sent, stop) = (Arc::clone(&acked), Arc::clone(&sent), Arc::clone(&stop));
+            std::thread::spawn(move || {
+                let Ok(mut client) = NetClient::connect(&addr) else { return };
+                let dims = vec![3usize; 4];
+                let mut rng = Rng::seed_from(1717);
+                for i in 0..u64::MAX {
+                    if stop.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let x = unit_input(&dims, 2, "tt", &mut rng);
+                    sent.fetch_add(1, Ordering::Relaxed);
+                    match client.roundtrip(&ProjectRequest::insert(i, x)) {
+                        Ok(resp) if resp.error.is_none() => acked.lock().unwrap().push(i),
+                        _ => break,
+                    }
+                }
+            })
+        };
+        // The kill point is randomized by scheduling: the delay lands
+        // wherever the ingest loop happens to be — mid-flush included.
+        std::thread::sleep(Duration::from_millis(kill_ms));
+        child.kill().expect("SIGKILL the serving child");
+        child.wait().unwrap();
+        stop.store(true, Ordering::Relaxed);
+        ingest.join().unwrap();
+        let acked: Vec<u64> = std::mem::take(&mut acked.lock().unwrap());
+        let sent = sent.load(Ordering::Relaxed);
+
+        // Recover in-process under the child's exact serving identity
+        // (seed, default_k, backend); shard count is free to differ.
+        let b = Coordinator::start(
+            CoordinatorConfig {
+                master_seed: 4242,
+                snapshot_dir: Some(snap.clone()),
+                wal_dir: Some(wal_dir.clone()),
+                index_shards: 2,
+                ..Default::default()
+            },
+            None,
+        );
+        let dims = vec![3usize; 4];
+        let mut qrng = Rng::seed_from(99);
+        let probe = unit_input(&dims, 2, "tt", &mut qrng);
+        let recovered = query_ids(&b, &probe, 1_000_000, sent as usize + 1);
+        let rset: std::collections::BTreeSet<u64> = recovered.iter().copied().collect();
+
+        // acked ⊆ recovered ⊆ sent.
+        assert!(
+            rset.iter().all(|&id| id < sent),
+            "[round {round}] recovered an id that was never sent"
+        );
+        for id in &acked {
+            assert!(
+                rset.contains(id),
+                "[round {round}] acked insert {id} lost across SIGKILL \
+                 ({} acked, {} recovered of {} sent)",
+                acked.len(),
+                rset.len(),
+                sent
+            );
+        }
+
+        // Twin: a fresh WAL-less coordinator fed exactly the recovered
+        // set must answer bit-identically.
+        let t = Coordinator::start(
+            CoordinatorConfig { master_seed: 4242, ..Default::default() },
+            None,
+        );
+        let mut prng = Rng::seed_from(1717);
+        let payloads: Vec<AnyTensor> =
+            (0..sent).map(|_| unit_input(&dims, 2, "tt", &mut prng)).collect();
+        for &id in &rset {
+            t.project_blocking(ProjectRequest::insert(id, payloads[id as usize].clone()))
+                .unwrap();
+        }
+        for qi in 0..4u64 {
+            let q = unit_input(&dims, 2, "tt", &mut qrng);
+            let nb = b
+                .project_blocking(ProjectRequest::query(2_000_000 + qi, q.clone(), 8))
+                .unwrap()
+                .neighbors
+                .unwrap();
+            let nt = t
+                .project_blocking(ProjectRequest::query(2_000_000 + qi, q.clone(), 8))
+                .unwrap()
+                .neighbors
+                .unwrap();
+            assert_eq!(
+                nb, nt,
+                "[round {round}] recovered replies must be bit-identical to a twin \
+                 built from the recovered set"
+            );
+        }
+        b.shutdown();
+        t.shutdown();
+    }
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn injected_panic_mid_turn_leaves_the_wal_appendable_and_replayable() {
+    let root = tmp_dir("panic");
+    let snap = root.join("snap");
+    let wal_dir = root.join("wal");
+    let make = || {
+        IndexRegistry::new(0xFEED, BackendKind::Flat, LshConfig::default())
+            .with_snapshot_dir(Some(snap.clone()))
+            .with_shards(2)
+            .with_wal(Some(WalConfig {
+                dir: wal_dir.clone(),
+                segment_cap: 1 << 16,
+                fsync: WalFsync::Flush,
+            }))
+    };
+    let key = MapKey { kind: MapKind::Tt { rank: 2 }, dims: vec![3; 4], k: 6 };
+
+    let r1 = make();
+    let slot = r1.get_or_create(&key);
+    let log_and_apply = |id: u64| {
+        let s = shard_of(id, 2);
+        let payload = vec![id as f64; 6];
+        slot.wal_append(s, wal::WAL_OP_INSERT, id, &payload).unwrap().unwrap();
+        let t = slot.issue_tickets(&[s]);
+        slot.run_shard_turn(s, t[0].1, |ix| ix.insert(id, &payload));
+        slot.note_shard_mutations(s, 1);
+    };
+    for id in 0..10u64 {
+        log_and_apply(id);
+    }
+    for s in 0..2 {
+        slot.wal_commit(s, WalFsync::Flush).unwrap();
+    }
+
+    // Inject a panic mid shard-turn: the lane's index mutex poisons, the
+    // turn still advances (drop guard), and the WAL must keep working.
+    let t = slot.issue_tickets(&[0]);
+    let hit: std::thread::Result<()> =
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            slot.run_shard_turn(0, t[0].1, |_| panic!("injected fault"))
+        }));
+    assert!(hit.is_err(), "the injected panic must surface");
+
+    // The lane survives: one more logged op after the poisoning.
+    log_and_apply(100);
+    for s in 0..2 {
+        slot.wal_commit(s, WalFsync::Flush).unwrap();
+    }
+    drop(slot);
+    std::mem::forget(r1); // crash: no destructors
+
+    let r2 = make();
+    let (sigs, replayed) = r2.recover_wal().unwrap();
+    assert_eq!((sigs, replayed), (1, 11), "10 + 1 post-panic records replay");
+    let slot = r2.get_or_create(&key);
+    let mut ids = Vec::new();
+    for s in 0..2 {
+        slot.lock_shard(s).for_each_live(&mut |id, _| ids.push(id));
+    }
+    ids.sort_unstable();
+    let expect: Vec<u64> = (0..10u64).chain([100]).collect();
+    assert_eq!(ids, expect, "every logged op survives the injected panic");
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn wal_off_is_bit_identical_and_never_logs() {
+    let root = tmp_dir("waloff");
+    let snap = root.join("snap");
+    let wal_dir = root.join("wal");
+    let dims = vec![3usize; 4];
+    let mut rng = Rng::seed_from(13);
+    let payloads: Vec<AnyTensor> =
+        (0..16).map(|_| unit_input(&dims, 2, "tt", &mut rng)).collect();
+    let queries: Vec<AnyTensor> =
+        (0..4).map(|_| unit_input(&dims, 2, "tt", &mut rng)).collect();
+
+    let on = coordinator(BackendKind::Flat, 2, Some(&snap), Some(&wal_dir));
+    let off = coordinator(BackendKind::Flat, 2, None, None);
+    ingest_burst(&on, &payloads);
+    ingest_burst(&off, &payloads);
+    for (qi, q) in queries.iter().enumerate() {
+        let id = 700 + qi as u64;
+        assert_eq!(
+            query_ids(&on, q, id, 5),
+            query_ids(&off, q, id, 5),
+            "the WAL must not perturb replies"
+        );
+    }
+    let m_on = on.metrics();
+    let m_off = off.metrics();
+    assert_eq!(m_on.wal_appends, 17, "16 inserts + 1 delete logged");
+    assert!(m_on.wal_fsyncs >= 1, "group commit synced at least once");
+    assert_eq!(
+        (m_off.wal_appends, m_off.wal_fsyncs, m_off.wal_replayed),
+        (0, 0, 0),
+        "no wal_dir → zero WAL activity"
+    );
+    on.shutdown();
+    off.shutdown();
+    let _ = std::fs::remove_dir_all(&root);
+}

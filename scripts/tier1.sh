@@ -67,12 +67,25 @@ if [ "$fail" -eq 0 ]; then
   cargo test -q --test obs_props || fail=1
 fi
 
+# Crash recovery through the write-ahead log is gated on its durability
+# contract: SIGKILL (real and simulated) plus injected-panic crashes
+# during concurrent pipelined ingest, recovered coordinators answering
+# bit-identically to uninterrupted twins across {flat,lsh} × S ∈ {1,2,4}
+# with restore into a different shard count, and zero behavior change
+# with the WAL off. Name the suite so a durability regression is visible
+# at a glance (the child-process test reuses the release `trp` binary).
+if [ "$fail" -eq 0 ]; then
+  echo "== tier1: WAL crash recovery (wal_recovery) =="
+  cargo test -q --test wal_recovery || fail=1
+fi
+
 # The determinism/concurrency static-analysis pass is gated on a clean
-# tree: zero unwaived findings across the six rules (float-total-order,
+# tree: zero unwaived findings across the seven rules (float-total-order,
 # no-fma, hot-path-panic, unordered-iteration, unsafe-audit,
-# relaxed-handoff), an empty baseline, and a written reason on every
-# waiver. Run both the in-tree meta-test and the CLI itself, so the gate
-# exercises the same binary CI exports (cheap — release build above).
+# relaxed-handoff, fsync-discipline), an empty baseline, and a written
+# reason on every waiver. Run both the in-tree meta-test and the CLI
+# itself, so the gate exercises the same binary CI exports (cheap —
+# release build above).
 if [ "$fail" -eq 0 ]; then
   echo "== tier1: static-analysis clean tree (lint_clean) =="
   cargo test -q --test lint_clean || fail=1
