@@ -24,18 +24,23 @@ pub const RULE_IDS: &[&str] = &[
 
 /// Hot serving path: a panic here kills a worker or wedges a lane. The
 /// WAL engine is on it — an append or group-commit runs inside every
-/// mutation flush.
+/// mutation flush. The SLO sampler runs beside it: a panic there would
+/// silently stop alarm evaluation while serving continues.
 const HOT_PATHS: &[&str] = &[
     "src/coordinator/server.rs",
     "src/coordinator/net.rs",
     "src/coordinator/state.rs",
     "src/coordinator/batcher.rs",
     "src/index/wal.rs",
+    "src/obs/slo.rs",
 ];
 
 /// Durability-critical files: bytes these write must actually reach the
 /// disk before a rename publishes them or an `Ok` acknowledges them.
-const FSYNC_SCOPE: &[&str] = &["src/index/wal.rs", "src/index/persist.rs"];
+/// The SLO alarm log is in scope — a paged alarm that only ever lived
+/// in the page cache is an alarm a crash un-rings.
+const FSYNC_SCOPE: &[&str] =
+    &["src/index/wal.rs", "src/index/persist.rs", "src/obs/slo.rs"];
 
 /// Modules where `mul_add`/FMA would silently change numeric results
 /// between builds (fused vs separate rounding).
@@ -52,6 +57,8 @@ const ITER_SCOPE: &[&str] = &[
     "src/runtime/engine.rs",
     "src/obs/registry.rs",
     "src/obs/gemm_stats.rs",
+    "src/obs/analyze.rs",
+    "src/obs/slo.rs",
 ];
 // The prefix covers the whole index subsystem, WAL included: replay
 // order and snapshot bytes must not inherit hash-iteration order.
@@ -109,6 +116,9 @@ const RELAXED_IDENT_ALLOW: &[&str] = &[
     "wal_fsyncs",
     "wal_replayed",
     "wal_lag",
+    // Trace-context id allocator: a pure monotonic ticket counter whose
+    // values are opaque ids — no data is published through it.
+    "next_trace_id",
 ];
 
 fn is_ident_char(c: char) -> bool {

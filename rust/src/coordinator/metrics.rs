@@ -4,7 +4,15 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Number of log₂ latency buckets (1µs … ~17min).
-const BUCKETS: usize = 30;
+pub const BUCKETS: usize = 30;
+
+/// The histogram bucket a latency lands in: bucket `b` covers
+/// `[2^b, 2^(b+1))` µs, clamped to the last bucket. Public so exemplar
+/// storage and the SLO burn-rate engine index buckets identically to
+/// [`LatencyHistogram::record`].
+pub fn bucket_index(us: u64) -> usize {
+    (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1)
+}
 
 /// Log₂-bucketed latency histogram over microseconds.
 #[derive(Debug, Default)]
@@ -22,8 +30,7 @@ impl LatencyHistogram {
 
     /// Record one latency observation.
     pub fn record(&self, us: u64) {
-        let b = (64 - us.max(1).leading_zeros() as usize - 1).min(BUCKETS - 1);
-        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum_us.fetch_add(us, Ordering::Relaxed);
     }
@@ -340,5 +347,20 @@ mod tests {
         h.record(u64::MAX);
         assert_eq!(h.count(), 1);
         assert!(h.quantile_us(1.0) >= 1 << 29);
+    }
+
+    #[test]
+    fn bucket_index_matches_record() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 1);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+        for us in [1u64, 7, 300, 1_000_000] {
+            let h = LatencyHistogram::new();
+            h.record(us);
+            assert_eq!(h.bucket_counts()[bucket_index(us)], 1);
+        }
     }
 }

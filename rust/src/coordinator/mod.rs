@@ -41,7 +41,7 @@ mod state;
 pub mod wire;
 
 pub use batcher::{ArrivalRate, Batcher, BatcherConfig};
-pub use metrics::{LatencyHistogram, Metrics, MetricsSnapshot};
+pub use metrics::{bucket_index, LatencyHistogram, Metrics, MetricsSnapshot, BUCKETS};
 pub use net::{NetClient, NetServer};
 pub use request::{EnginePath, Payload, ProjectRequest, ProjectResponse, RequestOp};
 pub use router::{RouteKey, RouteTarget, Router};

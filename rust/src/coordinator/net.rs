@@ -160,8 +160,9 @@ fn accept_loop(
 
 /// One entry in the per-connection reply queue, in request order.
 enum Outgoing {
-    /// A submitted request: id + the channel its reply arrives on.
-    Pending(u64, Receiver<Reply>),
+    /// A submitted request: id + the channel its reply arrives on + the
+    /// trace context its spans carry (client-supplied or assigned).
+    Pending(u64, Receiver<Reply>, Option<u64>),
     /// An undecodable line: best-effort recovered id (None → `"id":
     /// null` on the wire) + the decode error.
     Malformed(Option<u64>, String),
@@ -199,18 +200,23 @@ fn handle_connection(
         let out = match wire::decode_request(&line) {
             Ok(req) => {
                 let id = req.id;
-                let pending = coordinator.submit(req);
+                // Resolve the trace context up front so the recv span,
+                // the coordinator's internal spans, and the write span
+                // all share one id per request.
+                let span_trace = coordinator.span_trace_for(&req);
+                let pending = coordinator.submit_with_span(req, span_trace);
                 // "recv" covers decode + submit (to batcher enqueue).
                 if let (Some(t), Some(start)) = (trace.as_deref(), t0) {
                     t.record(Span {
                         stage: "recv",
                         req: Some(id),
+                        trace: span_trace,
                         start_us: start,
                         dur_us: t.now_us().saturating_sub(start),
                         ..Span::default()
                     });
                 }
-                Outgoing::Pending(id, pending)
+                Outgoing::Pending(id, pending, span_trace)
             }
             Err(e) => Outgoing::Malformed(wire::parse_request_id(&line), e),
         };
@@ -233,15 +239,15 @@ fn reply_writer_loop(
     trace: Option<Arc<TraceRecorder>>,
 ) {
     for out in rx {
-        let (id, result) = match out {
-            Outgoing::Pending(id, reply) => {
+        let (id, result, span_trace) = match out {
+            Outgoing::Pending(id, reply, span_trace) => {
                 let result = reply
                     .recv()
                     .unwrap_or_else(|_| Err("coordinator dropped the request".into()));
                 served.fetch_add(1, Ordering::Relaxed);
-                (Some(id), result)
+                (Some(id), result, span_trace)
             }
-            Outgoing::Malformed(id, e) => (id, Err(e)),
+            Outgoing::Malformed(id, e) => (id, Err(e), None),
         };
         // "write" covers encode + socket write (not the reply wait).
         let t0 = trace.as_ref().map(|t| t.now_us());
@@ -251,6 +257,7 @@ fn reply_writer_loop(
             t.record(Span {
                 stage: "write",
                 req: id,
+                trace: span_trace,
                 start_us: start,
                 dur_us: t.now_us().saturating_sub(start),
                 ..Span::default()

@@ -123,22 +123,28 @@ pub struct ProjectRequest {
     pub op: RequestOp,
     /// The tensor (or signature) the op applies to.
     pub payload: Payload,
+    /// Optional trace context: a caller-chosen correlation id threaded
+    /// into every span this request produces and echoed in the response.
+    /// When absent and tracing is enabled, the dispatcher assigns one for
+    /// spans only — assigned ids are never echoed, so responses stay
+    /// bit-identical with tracing on vs off.
+    pub trace: Option<u64>,
 }
 
 impl ProjectRequest {
     /// Plain projection request (the original service op).
     pub fn new(id: u64, payload: AnyTensor) -> Self {
-        Self { id, op: RequestOp::Project, payload: Payload::Tensor(payload) }
+        Self { id, op: RequestOp::Project, payload: Payload::Tensor(payload), trace: None }
     }
 
     /// Index insert: embed `payload` and store it under `id`.
     pub fn insert(id: u64, payload: AnyTensor) -> Self {
-        Self { id, op: RequestOp::Insert, payload: Payload::Tensor(payload) }
+        Self { id, op: RequestOp::Insert, payload: Payload::Tensor(payload), trace: None }
     }
 
     /// Index query: embed `payload` and return its `k` nearest neighbours.
     pub fn query(id: u64, payload: AnyTensor, k: usize) -> Self {
-        Self { id, op: RequestOp::Query { k }, payload: Payload::Tensor(payload) }
+        Self { id, op: RequestOp::Query { k }, payload: Payload::Tensor(payload), trace: None }
     }
 
     /// Index delete: remove item `target` from the index of the
@@ -148,22 +154,38 @@ impl ProjectRequest {
             id,
             op: RequestOp::Delete { target },
             payload: Payload::Signature { format, dims },
+            trace: None,
         }
     }
 
     /// Index statistics for the `(format, dims)` signature.
     pub fn index_stats(id: u64, format: Format, dims: Vec<usize>) -> Self {
-        Self { id, op: RequestOp::IndexStats, payload: Payload::Signature { format, dims } }
+        Self {
+            id,
+            op: RequestOp::IndexStats,
+            payload: Payload::Signature { format, dims },
+            trace: None,
+        }
     }
 
     /// Persist the `(format, dims)` signature's index to disk.
     pub fn snapshot(id: u64, format: Format, dims: Vec<usize>) -> Self {
-        Self { id, op: RequestOp::Snapshot, payload: Payload::Signature { format, dims } }
+        Self {
+            id,
+            op: RequestOp::Snapshot,
+            payload: Payload::Signature { format, dims },
+            trace: None,
+        }
     }
 
     /// Reload the `(format, dims)` signature's index from disk.
     pub fn restore(id: u64, format: Format, dims: Vec<usize>) -> Self {
-        Self { id, op: RequestOp::Restore, payload: Payload::Signature { format, dims } }
+        Self {
+            id,
+            op: RequestOp::Restore,
+            payload: Payload::Signature { format, dims },
+            trace: None,
+        }
     }
 
     /// Observability snapshot. Carries an empty signature payload — the
@@ -173,7 +195,14 @@ impl ProjectRequest {
             id,
             op: RequestOp::Metrics { reset },
             payload: Payload::Signature { format: Format::Dense, dims: vec![] },
+            trace: None,
         }
+    }
+
+    /// Attach a trace-context id (builder style).
+    pub fn with_trace(mut self, trace: u64) -> Self {
+        self.trace = Some(trace);
+        self
     }
 }
 
@@ -196,6 +225,9 @@ pub struct ProjectResponse {
     pub restored: Option<u64>,
     /// Observability snapshot (`Metrics` responses only).
     pub metrics: Option<crate::obs::ObsSnapshot>,
+    /// Echo of the caller-supplied trace context, when one was supplied.
+    /// Dispatcher-assigned span ids are never echoed here.
+    pub trace: Option<u64>,
     /// Which engine computed it.
     pub path: EnginePath,
     /// Time spent queued + batched before execution (microseconds).
@@ -250,6 +282,14 @@ mod tests {
             5,
         );
         assert_eq!(r.op, RequestOp::Query { k: 5 });
+    }
+
+    #[test]
+    fn trace_context_defaults_off_and_attaches() {
+        let r = ProjectRequest::metrics(1, false);
+        assert_eq!(r.trace, None);
+        let r = ProjectRequest::index_stats(2, Format::Tt, vec![3, 3]).with_trace(0xABCD);
+        assert_eq!(r.trace, Some(0xABCD));
     }
 
     #[test]

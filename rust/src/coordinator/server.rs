@@ -115,6 +115,12 @@ pub struct CoordinatorConfig {
     /// `EveryN(n)` trades the crash-durability of up to `n` acked ops
     /// per lane for fewer fsyncs.
     pub wal_fsync: WalFsync,
+    /// SLO policy (`trp serve --slo <file.toml>`): per-signature latency
+    /// and error-rate objectives evaluated as multi-window burn rates by
+    /// a background engine fed from the always-on metrics registry.
+    /// `None` disables the engine entirely — it only ever *reads*
+    /// metrics, so responses are bit-identical either way.
+    pub slo: Option<crate::obs::SloConfig>,
 }
 
 impl Default for CoordinatorConfig {
@@ -140,6 +146,7 @@ impl Default for CoordinatorConfig {
             wal_dir: None,
             wal_segment_cap: wal::DEFAULT_SEGMENT_CAP,
             wal_fsync: WalFsync::Flush,
+            slo: None,
         }
     }
 }
@@ -151,6 +158,11 @@ struct Envelope {
     req: ProjectRequest,
     submit_us: u64,
     reply: SyncSender<Reply>,
+    /// Trace-context id threaded into this request's spans: the caller's
+    /// `req.trace` when supplied, otherwise a dispatcher-assigned id
+    /// (tracing enabled only). Never echoed in responses unless the
+    /// caller supplied it — see [`ProjectRequest::trace`].
+    span_trace: Option<u64>,
 }
 
 struct Shared {
@@ -160,11 +172,18 @@ struct Shared {
     metrics: Metrics,
     /// Per-signature counters + stage histograms (always on: recording
     /// is pure atomics and never touches the request path's results).
-    sigs: crate::obs::MetricsRegistry,
+    /// `Arc` so the SLO engine's sampler thread reads the same registry
+    /// without holding the whole `Shared` alive.
+    sigs: Arc<crate::obs::MetricsRegistry>,
     /// Trace recorder, when `cfg.trace` is set.
     trace: Option<Arc<crate::obs::TraceRecorder>>,
     /// Flush ids for trace spans (monotonic across both lanes).
     next_flush_id: std::sync::atomic::AtomicU64,
+    /// Dispatcher-assigned trace-context ids for requests that arrive
+    /// without one (tracing enabled only).
+    next_trace_id: std::sync::atomic::AtomicU64,
+    /// SLO burn-rate engine, when `cfg.slo` is set.
+    slo: Option<Arc<crate::obs::SloEngine>>,
     workspaces: WorkspacePool,
     cfg: CoordinatorConfig,
     epoch: Instant,
@@ -184,6 +203,7 @@ impl Shared {
             signatures: self.sigs.snapshot(),
             gemm: crate::obs::gemm_stats_snapshot(),
             trace: self.trace.as_ref().map(|t| t.stats()).unwrap_or_default(),
+            slo: self.slo.as_ref().map(|s| s.status()).unwrap_or_default(),
         };
         if reset {
             self.metrics.reset_high_water();
@@ -256,6 +276,16 @@ impl Coordinator {
                 }
             }
         });
+        let sigs = Arc::new(crate::obs::MetricsRegistry::new());
+        let slo = cfg.slo.clone().and_then(|sc| {
+            match crate::obs::SloEngine::start(sc, Arc::clone(&sigs)) {
+                Ok(engine) => Some(engine),
+                Err(e) => {
+                    eprintln!("[coordinator] slo engine disabled: {e}");
+                    None
+                }
+            }
+        });
         let shared = Arc::new(Shared {
             registry: ProjectionRegistry::new(cfg.master_seed),
             indexes: IndexRegistry::new(cfg.master_seed, cfg.index_backend, cfg.lsh)
@@ -269,9 +299,11 @@ impl Coordinator {
                 })),
             engine,
             metrics: Metrics::new(),
-            sigs: crate::obs::MetricsRegistry::new(),
+            sigs,
             trace,
             next_flush_id: std::sync::atomic::AtomicU64::new(0),
+            next_trace_id: std::sync::atomic::AtomicU64::new(1),
+            slo,
             workspaces: WorkspacePool::new(),
             cfg: cfg.clone(),
             epoch,
@@ -312,14 +344,45 @@ impl Coordinator {
         Self { shared, tx: Some(tx), dispatcher: Some(dispatcher) }
     }
 
+    /// The trace-context id `req`'s spans will carry: the caller's
+    /// `req.trace` when supplied; otherwise, with tracing enabled, a
+    /// freshly assigned id (so every traced request is correlatable even
+    /// when the client sends no context). `None` with tracing off and no
+    /// client context. The front-end calls this *before*
+    /// [`submit_with_span`] so its socket-side spans share the id.
+    ///
+    /// [`submit_with_span`]: Coordinator::submit_with_span
+    pub fn span_trace_for(&self, req: &ProjectRequest) -> Option<u64> {
+        req.trace.or_else(|| {
+            self.shared
+                .trace
+                .as_ref()
+                .map(|_| self.shared.next_trace_id.fetch_add(1, Ordering::Relaxed))
+        })
+    }
+
     /// Submit a request; blocks if the ingress queue is full
     /// (backpressure). Returns the channel the response arrives on.
     pub fn submit(&self, req: ProjectRequest) -> Receiver<Reply> {
+        let span_trace = self.span_trace_for(&req);
+        self.submit_with_span(req, span_trace)
+    }
+
+    /// [`submit`](Coordinator::submit) with an explicit span trace-
+    /// context id (from [`span_trace_for`](Coordinator::span_trace_for)),
+    /// so a network front-end can tag its recv/write spans with the same
+    /// id the in-flight spans will carry.
+    pub fn submit_with_span(
+        &self,
+        req: ProjectRequest,
+        span_trace: Option<u64>,
+    ) -> Receiver<Reply> {
         let (reply_tx, reply_rx) = sync_channel(1);
         let env = Envelope {
             req,
             submit_us: self.shared.now_us(),
             reply: reply_tx,
+            span_trace,
         };
         self.shared.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         // A closed ingress (shutdown racing a late submit, or a dead
@@ -403,6 +466,11 @@ impl Coordinator {
         // to leave complete trace files behind.
         if let Some(t) = &self.shared.trace {
             t.shutdown();
+        }
+        // Stop the SLO sampler after the workers: the final registry
+        // state is then complete for its last evaluation tick.
+        if let Some(s) = &self.shared.slo {
+            s.shutdown();
         }
     }
 }
@@ -493,6 +561,7 @@ fn dispatcher_loop(shared: Arc<Shared>, rx: Receiver<Envelope>) {
                     snapshot: None,
                     restored: None,
                     metrics: Some(snap),
+                    trace: env.req.trace,
                     path: EnginePath::Native,
                     queued_us: 0,
                     exec_us: t1.saturating_sub(env.submit_us),
@@ -757,6 +826,12 @@ struct NativeItem {
     /// Row of this item's embedding in the flush's `out` buffer
     /// (`None` for signature-only ops).
     row: Option<usize>,
+    /// Caller-supplied trace context, echoed in the response.
+    trace: Option<u64>,
+    /// Trace context carried by this item's spans and exemplars
+    /// (caller-supplied or dispatcher-assigned; never echoed unless
+    /// caller-supplied).
+    span: Option<u64>,
 }
 
 /// Execute one native job: resolve the shared map, run every tensor in
@@ -793,16 +868,24 @@ fn run_native_batch(
             submit_us: env.submit_us,
             reply: env.reply,
             row,
+            trace: env.req.trace,
+            span: env.span_trace,
         });
     }
     let t0 = shared.now_us();
+    // Flush-level span context: the first item's trace id represents the
+    // flush (its waterfall is the one a flush span belongs to), and the
+    // signature label is interned once per flush so spans carry a small
+    // integer instead of a string.
+    let flush_trace = items.first().and_then(|it| it.span);
+    let sig_id = tr.map(|t| t.intern(&key.label()));
     // Per-signature accounting: one flush, one queue-wait observation per
     // item, op counters by kind. Pure atomics — always on.
     sig.flushes.fetch_add(1, Ordering::Relaxed);
     sig.requests.fetch_add(items.len() as u64, Ordering::Relaxed);
-    sig.record_stage(Stage::FlushAssembly, t0.saturating_sub(opened_us));
+    sig.record_stage_traced(Stage::FlushAssembly, t0.saturating_sub(opened_us), flush_trace);
     for it in &items {
-        sig.record_stage(Stage::QueueWait, t0.saturating_sub(it.submit_us));
+        sig.record_stage_traced(Stage::QueueWait, t0.saturating_sub(it.submit_us), it.span);
         let ctr = match it.op {
             RequestOp::Project => &sig.projects,
             RequestOp::Insert => &sig.inserts,
@@ -816,6 +899,8 @@ fn run_native_batch(
         tr.record(Span {
             stage: "assemble",
             flush: Some(flush_id),
+            trace: flush_trace,
+            sig: sig_id,
             start_us: opened_us,
             dur_us: t0.saturating_sub(opened_us),
             ..Span::default()
@@ -825,6 +910,8 @@ fn run_native_batch(
                 stage: "queue",
                 req: Some(it.id),
                 flush: Some(flush_id),
+                trace: it.span,
+                sig: sig_id,
                 start_us: it.submit_us,
                 dur_us: t0.saturating_sub(it.submit_us),
                 ..Span::default()
@@ -848,11 +935,13 @@ fn run_native_batch(
                 let t_p0 = shared.now_us();
                 entry.map.project_batch_into(&payloads, &mut out, &mut ws);
                 let t_p1 = shared.now_us();
-                sig.record_stage(Stage::Project, t_p1.saturating_sub(t_p0));
+                sig.record_stage_traced(Stage::Project, t_p1.saturating_sub(t_p0), flush_trace);
                 if let Some(tr) = tr {
                     tr.record(Span {
                         stage: "project",
                         flush: Some(flush_id),
+                        trace: flush_trace,
+                        sig: sig_id,
                         start_us: t_p0,
                         dur_us: t_p1.saturating_sub(t_p0),
                         ..Span::default()
@@ -1169,13 +1258,15 @@ fn run_native_batch(
                 }
             });
             let t_scan1 = shared.now_us();
-            sig.record_stage(Stage::LaneWait, t_scan0.saturating_sub(t_wait0));
-            sig.record_stage(Stage::IndexScan, t_scan1.saturating_sub(t_scan0));
+            sig.record_stage_traced(Stage::LaneWait, t_scan0.saturating_sub(t_wait0), flush_trace);
+            sig.record_stage_traced(Stage::IndexScan, t_scan1.saturating_sub(t_scan0), flush_trace);
             if let Some(tr) = tr {
                 tr.record(Span {
                     stage: "index",
                     flush: Some(flush_id),
                     shard: Some(s as u32),
+                    trace: flush_trace,
+                    sig: sig_id,
                     start_us: t_scan0,
                     dur_us: t_scan1.saturating_sub(t_scan0),
                     ..Span::default()
@@ -1183,7 +1274,7 @@ fn run_native_batch(
             }
         }
         if !query_items.is_empty() {
-            sig.record_stage(Stage::Merge, merge_us);
+            sig.record_stage_traced(Stage::Merge, merge_us, flush_trace);
         }
         // Group commit: one `sync_data` per touched lane per flush (not
         // per op), after every lane's turn released and before any reply
@@ -1223,7 +1314,11 @@ fn run_native_batch(
                 }
             }
             if synced {
-                sig.record_stage(Stage::WalFsync, shared.now_us().saturating_sub(t_f0));
+                sig.record_stage_traced(
+                    Stage::WalFsync,
+                    shared.now_us().saturating_sub(t_f0),
+                    flush_trace,
+                );
             }
         }
         // Every lane is released — serving continues while the frozen
@@ -1250,7 +1345,7 @@ fn run_native_batch(
                     let wal_marks = wal_mark_vec(&slot, nshards, &cut_marks[i]);
                     let write =
                         shared.indexes.write_snapshot_with_marks(&slot, &captures[i], &wal_marks);
-                    record_snapshot_write(shared, &sig, flush_id, t_w0);
+                    record_snapshot_write(shared, &sig, flush_id, t_w0, flush_trace, sig_id);
                     match write {
                         Ok(report) => {
                             shared.metrics.index_snapshots.fetch_add(1, Ordering::Relaxed);
@@ -1283,7 +1378,7 @@ fn run_native_batch(
             let wal_marks = wal_mark_vec(&slot, nshards, &periodic_marks);
             let write =
                 shared.indexes.write_snapshot_with_marks(&slot, &periodic_captures, &wal_marks);
-            record_snapshot_write(shared, &sig, flush_id, t_w0);
+            record_snapshot_write(shared, &sig, flush_id, t_w0, flush_trace, sig_id);
             match write {
                 Ok(_) => {
                     shared.metrics.index_snapshots.fetch_add(1, Ordering::Relaxed);
@@ -1323,12 +1418,14 @@ fn run_native_batch(
             shared.metrics.failed.fetch_add(1, Ordering::Relaxed);
             // Failed replies count toward end-to-end latency too.
             shared.metrics.e2e_latency.record(t1.saturating_sub(it.submit_us));
+            sig.record_e2e(t1.saturating_sub(it.submit_us), it.span);
             sig.errors.fetch_add(1, Ordering::Relaxed);
             let _ = it.reply.send(Err(e));
             continue;
         }
         shared.metrics.completed.fetch_add(1, Ordering::Relaxed);
         shared.metrics.e2e_latency.record(t1.saturating_sub(it.submit_us));
+        sig.record_e2e(t1.saturating_sub(it.submit_us), it.span);
         // Per-reply embeddings are exact-sized copies out of the pooled
         // flush buffer: they leave the process inside the response, so
         // pooling them would never recycle anything (the pool covers the
@@ -1346,6 +1443,7 @@ fn run_native_batch(
             snapshot: snapshots[i].take(),
             restored: restored[i],
             metrics: None,
+            trace: it.trace,
             path: EnginePath::Native,
             queued_us: t0.saturating_sub(it.submit_us),
             exec_us: t1 - t0,
@@ -1353,11 +1451,13 @@ fn run_native_batch(
         let _ = it.reply.send(Ok(resp));
     }
     let t2 = shared.now_us();
-    sig.record_stage(Stage::Reply, t2.saturating_sub(t1));
+    sig.record_stage_traced(Stage::Reply, t2.saturating_sub(t1), flush_trace);
     if let Some(tr) = tr {
         tr.record(Span {
             stage: "reply",
             flush: Some(flush_id),
+            trace: flush_trace,
+            sig: sig_id,
             start_us: t1,
             dur_us: t2.saturating_sub(t1),
             ..Span::default()
@@ -1405,13 +1505,17 @@ fn record_snapshot_write(
     sig: &crate::obs::SigMetrics,
     flush_id: u64,
     t_w0: u64,
+    flush_trace: Option<u64>,
+    sig_id: Option<u32>,
 ) {
     let t_w1 = shared.now_us();
-    sig.record_stage(Stage::SnapshotWrite, t_w1.saturating_sub(t_w0));
+    sig.record_stage_traced(Stage::SnapshotWrite, t_w1.saturating_sub(t_w0), flush_trace);
     if let Some(tr) = &shared.trace {
         tr.record(Span {
             stage: "snapshot",
             flush: Some(flush_id),
+            trace: flush_trace,
+            sig: sig_id,
             start_us: t_w0,
             dur_us: t_w1.saturating_sub(t_w0),
             ..Span::default()
@@ -1605,6 +1709,7 @@ fn run_pjrt_batch(shared: &Arc<Shared>, artifact: &str, batch: &[BatchItem]) -> 
             snapshot: None,
             restored: None,
             metrics: None,
+            trace: item.env.req.trace,
             path: EnginePath::Pjrt(artifact.to_string()),
             queued_us: t0.saturating_sub(item.env.submit_us),
             exec_us: t1 - t0,
@@ -1881,6 +1986,7 @@ mod tests {
             id: 5,
             op: RequestOp::Project,
             payload: Payload::Signature { format: Format::Tt, dims: vec![3; 4] },
+            trace: None,
         };
         let reply = c.project_blocking(req);
         assert!(reply.is_err());

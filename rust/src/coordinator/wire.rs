@@ -24,10 +24,17 @@
 //! server could not even extract an id from carries `"id": null`, so it
 //! can never masquerade as a response to a legitimate request id 0.
 //!
-//! Limitation: every id on the wire (`id`, `target`, neighbour ids)
-//! travels as a JSON number and therefore round-trips exactly only up to
-//! 2⁵³ − 1. Wire clients must not use larger ids (e.g. raw 64-bit content
-//! hashes); the in-process API has no such limit.
+//! Any request may additionally carry `"trace": <number>` — a trace
+//! context id threaded into every span the request produces and echoed
+//! verbatim in the response (`"trace": <number>` rides Ok replies only
+//! when the client supplied one; dispatcher-assigned span ids never
+//! appear on the wire).
+//!
+//! Limitation: every id on the wire (`id`, `target`, neighbour ids — and
+//! the `trace` context id) travels as a JSON number and therefore
+//! round-trips exactly only up to 2⁵³ − 1. Wire clients must not use
+//! larger ids (e.g. raw 64-bit content hashes); the in-process API has no
+//! such limit.
 
 use super::request::{Payload, ProjectRequest, ProjectResponse, RequestOp};
 use crate::index::{IndexStats, Neighbor, SnapshotReport};
@@ -38,6 +45,11 @@ use crate::util::json::{num_arr, obj, usize_arr, Json};
 /// Encode a request as a single JSON line (no trailing newline).
 pub fn encode_request(req: &ProjectRequest) -> String {
     let mut fields: Vec<(&str, Json)> = vec![("id", Json::Num(req.id as f64))];
+    // Trace context rides every op, including the early-returning
+    // `metrics` arm below.
+    if let Some(t) = req.trace {
+        fields.push(("trace", Json::Num(t as f64)));
+    }
     match req.op {
         RequestOp::Project => {}
         RequestOp::Insert => fields.push(("op", Json::Str("insert".into()))),
@@ -104,6 +116,7 @@ pub fn decode_request(line: &str) -> Result<ProjectRequest, String> {
         .get("id")
         .and_then(Json::as_f64)
         .ok_or("missing id")? as u64;
+    let trace = j.get("trace").and_then(Json::as_f64).map(|v| v as u64);
     let op = match j.get("op").and_then(Json::as_str) {
         None | Some("project") => RequestOp::Project,
         Some("insert") => RequestOp::Insert,
@@ -122,7 +135,9 @@ pub fn decode_request(line: &str) -> Result<ProjectRequest, String> {
         Some("metrics") => {
             // Global op: needs neither format nor dims.
             let reset = j.get("reset").and_then(Json::as_bool).unwrap_or(false);
-            return Ok(ProjectRequest::metrics(id, reset));
+            let mut req = ProjectRequest::metrics(id, reset);
+            req.trace = trace;
+            return Ok(req);
         }
         Some(other) => return Err(format!("unknown op {other:?}")),
     };
@@ -138,7 +153,12 @@ pub fn decode_request(line: &str) -> Result<ProjectRequest, String> {
         op,
         RequestOp::Delete { .. } | RequestOp::IndexStats | RequestOp::Snapshot | RequestOp::Restore
     ) {
-        return Ok(ProjectRequest { id, op, payload: Payload::Signature { format, dims } });
+        return Ok(ProjectRequest {
+            id,
+            op,
+            payload: Payload::Signature { format, dims },
+            trace,
+        });
     }
     let tensor = match format {
         Format::Dense => {
@@ -177,7 +197,7 @@ pub fn decode_request(line: &str) -> Result<ProjectRequest, String> {
             AnyTensor::Cp(CpTensor::from_factors(factors))
         }
     };
-    Ok(ProjectRequest { id, op, payload: Payload::Tensor(tensor) })
+    Ok(ProjectRequest { id, op, payload: Payload::Tensor(tensor), trace })
 }
 
 /// Encode index statistics as a JSON object.
@@ -288,6 +308,9 @@ pub fn encode_response(
             if let Some(m) = &resp.metrics {
                 fields.push(("metrics", m.to_json()));
             }
+            if let Some(t) = resp.trace {
+                fields.push(("trace", Json::Num(t as f64)));
+            }
             obj(fields).to_string_compact()
         }
         Err(e) => obj(vec![
@@ -324,6 +347,8 @@ pub struct WireResponse {
     pub restored: Option<u64>,
     /// Observability snapshot (metrics responses).
     pub metrics: Option<crate::obs::ObsSnapshot>,
+    /// Echo of the request's trace context id, when one was supplied.
+    pub trace: Option<u64>,
     /// Error message when failed.
     pub error: Option<String>,
     /// Serving path string.
@@ -381,6 +406,7 @@ pub fn decode_response(line: &str) -> Result<WireResponse, String> {
             Some(m) => Some(crate::obs::ObsSnapshot::from_json(m)?),
             None => None,
         },
+        trace: j.get("trace").and_then(Json::as_f64).map(|v| v as u64),
         error: j.get("error").and_then(Json::as_str).map(|s| s.to_string()),
         path: j.get("path").and_then(Json::as_str).map(|s| s.to_string()),
     })
@@ -508,6 +534,7 @@ mod tests {
             snapshot: None,
             restored: None,
             metrics: None,
+            trace: None,
             path: super::super::request::EnginePath::Native,
             queued_us: 10,
             exec_us: 20,
@@ -553,6 +580,7 @@ mod tests {
             }),
             restored: Some(12),
             metrics: None,
+            trace: None,
             path: super::super::request::EnginePath::Native,
             queued_us: 1,
             exec_us: 2,
@@ -579,6 +607,7 @@ mod tests {
             signatures: Vec::new(),
             gemm: Vec::new(),
             trace: crate::obs::TraceStats::default(),
+            slo: Vec::new(),
         };
         let resp = ProjectResponse {
             id: 14,
@@ -589,12 +618,56 @@ mod tests {
             snapshot: None,
             restored: None,
             metrics: Some(snap.clone()),
+            trace: None,
             path: super::super::request::EnginePath::Native,
             queued_us: 0,
             exec_us: 1,
         };
         let back = decode_response(&encode_response(&Ok(resp), Some(14))).unwrap();
         assert_eq!(back.metrics.unwrap(), snap);
+    }
+
+    #[test]
+    fn trace_context_roundtrips_on_requests_and_responses() {
+        // Every request kind carries the trace field, including the
+        // signature-free metrics op.
+        let mut rng = Rng::seed_from(4);
+        let x = TtTensor::random_unit(&[3, 3], 2, &mut rng);
+        let req = ProjectRequest::insert(5, AnyTensor::Tt(x)).with_trace(9001);
+        let line = encode_request(&req);
+        assert!(line.contains("\"trace\":9001"), "got: {line}");
+        assert_eq!(decode_request(&line).unwrap().trace, Some(9001));
+        let line = encode_request(&ProjectRequest::metrics(6, false).with_trace(77));
+        assert_eq!(decode_request(&line).unwrap().trace, Some(77));
+        let line =
+            encode_request(&ProjectRequest::delete(7, 5, Format::Tt, vec![3, 3]).with_trace(3));
+        assert_eq!(decode_request(&line).unwrap().trace, Some(3));
+        // Requests without context stay context-free on the wire.
+        let line = encode_request(&ProjectRequest::metrics(8, false));
+        assert!(!line.contains("trace"), "got: {line}");
+        assert_eq!(decode_request(&line).unwrap().trace, None);
+
+        // Responses echo the context only when present.
+        let resp = ProjectResponse {
+            id: 5,
+            embedding: vec![1.0],
+            neighbors: None,
+            removed: None,
+            index: None,
+            snapshot: None,
+            restored: None,
+            metrics: None,
+            trace: Some(9001),
+            path: super::super::request::EnginePath::Native,
+            queued_us: 1,
+            exec_us: 2,
+        };
+        let line = encode_response(&Ok(resp.clone()), Some(5));
+        assert!(line.contains("\"trace\":9001"), "got: {line}");
+        assert_eq!(decode_response(&line).unwrap().trace, Some(9001));
+        let line = encode_response(&Ok(ProjectResponse { trace: None, ..resp }), Some(5));
+        assert!(!line.contains("trace"), "got: {line}");
+        assert_eq!(decode_response(&line).unwrap().trace, None);
     }
 
     #[test]
@@ -635,6 +708,7 @@ mod tests {
                 probes: 4,
             }),
             metrics: None,
+            trace: None,
             path: super::super::request::EnginePath::Native,
             queued_us: 1,
             exec_us: 2,

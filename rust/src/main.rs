@@ -2,14 +2,20 @@
 //!
 //! ```text
 //! trp serve       [--requests N] [--rate R] [--case medium] [--no-pjrt]
-//!                 [--listen ADDR] [--snapshot-dir DIR] [--snapshot-every N]
+//!                 [--listen ADDR [--listen-secs N]]
+//!                 [--snapshot-dir DIR] [--snapshot-every N]
 //!                 [--restore DIR] [--index-shards S]
 //!                 [--index-backend flat|lsh] [--lsh T,B,P | --lsh-auto N [--lsh-recall R]]
-//!                 [--trace-dir DIR [--trace-file-cap BYTES] [--trace-keep N]]
+//!                 [--trace-dir DIR [--trace-file-cap BYTES] [--trace-keep N]
+//!                  [--trace-ring-cap SPANS]]
+//!                 [--slo FILE [--slo-alarms PATH]]
 //!                 [--wal-dir DIR [--wal-segment-cap BYTES] [--wal-fsync flush|every-N]]
 //! trp wal         verify|dump [--dir DIR] [--json]
 //! trp metrics     --connect ADDR [--watch [--interval SECS]] [--reset]
 //! trp metrics     --check-trace FILE          # CI: validate span JSONL coverage
+//! trp trace       analyze [--dir DIR] [--json] [--gate [--min-frac F]]
+//! trp trace       analyze --diff DIR_A DIR_B [--json]
+//! trp slo         --connect ADDR [--watch [--interval SECS]] | --file FILE
 //! trp snapshot    --connect ADDR --case medium --format tt [--restore]
 //! trp project     --case medium --format tt [--k 64] [--map tt:5]
 //! trp experiment  fig1|fig2|fig3|fig4|ablation|batch|ann [--quick] [--trials T]
@@ -62,6 +68,8 @@ fn run(args: &Args) -> Result<(), String> {
         Some("artifacts") => cmd_artifacts(&cfg),
         Some("lint") => cmd_lint(args),
         Some("wal") => cmd_wal(args),
+        Some("trace") => cmd_trace(args),
+        Some("slo") => cmd_slo(args),
         _ => {
             print_usage();
             Ok(())
@@ -80,7 +88,9 @@ fn print_usage() {
                        flat|lsh, --lsh T,B,P or --lsh-auto N --lsh-recall R;\n\
                        --trace-dir DIR records request spans as rotated JSONL;\n\
                        --wal-dir DIR logs every mutation ahead of apply so a\n\
-                       SIGKILL loses nothing past the last group-commit fsync)\n\
+                       SIGKILL loses nothing past the last group-commit fsync;\n\
+                       --listen-secs N stops after N seconds with a clean\n\
+                       drain so CI gets a sealed trace stream)\n\
            project     project one random input and print the distortion\n\
            experiment  regenerate a paper figure: fig1|fig2|fig3|fig4|ablation|batch|ann\n\
            bounds      evaluate the Theorem 2 size bounds\n\
@@ -93,6 +103,17 @@ fn print_usage() {
                        span JSONL file for CI)\n\
            snapshot    ask a listening server to snapshot (or, with\n\
                        --restore, reload) a signature's index\n\
+           trace       offline span analysis over a `--trace-dir`:\n\
+                       `analyze` stitches rotated JSONL generations,\n\
+                       reconstructs per-request waterfalls, attributes the\n\
+                       critical path per signature and reports flush\n\
+                       fan-out (--json for the CI artifact; --gate\n\
+                       [--min-frac F] exits nonzero unless ≥ F of requests\n\
+                       reconstruct with zero ring drops; --diff A B\n\
+                       compares two trace dirs stage by stage)\n\
+           slo         burn-rate status of a live server's objectives\n\
+                       (--connect ADDR [--watch]; --file FILE validates an\n\
+                       objectives TOML offline without a server)\n\
            wal         offline write-ahead-log inspection: `verify` checks\n\
                        every segment chain (headers, checksums, seq\n\
                        continuity; exits nonzero on corruption replay would\n\
@@ -192,15 +213,52 @@ fn cmd_serve(args: &Args, cfg: &AppConfig) -> Result<(), String> {
             if tc.keep_files == 0 {
                 return Err("--trace-keep must be ≥ 1".into());
             }
+            // Ring sizing: under sustained overload the ring sheds spans
+            // (counted, surfaced by `trp metrics --check-trace`); raising
+            // the cap trades memory for loss-free capture.
+            tc.ring_capacity = args.get_parsed_or("trace-ring-cap", tc.ring_capacity)?;
+            if tc.ring_capacity == 0 {
+                return Err("--trace-ring-cap must be ≥ 1".into());
+            }
             println!(
-                "[serve] tracing to {}/trace.jsonl (cap {} bytes × {} files)",
+                "[serve] tracing to {}/trace.jsonl (cap {} bytes × {} files, ring {} spans)",
                 tc.dir.display(),
                 tc.max_file_bytes,
-                tc.keep_files
+                tc.keep_files,
+                tc.ring_capacity.next_power_of_two()
             );
             Some(tc)
         }
         None => None,
+    };
+    // SLO objectives: --slo FILE loads a declarative TOML of per-signature
+    // burn-rate objectives (see obs::slo). Alarm transitions append to
+    // --slo-alarms PATH, defaulting to alarms.jsonl under the trace dir.
+    let slo = match args.get("slo") {
+        Some(path) => {
+            let mut sc = tensorized_rp::obs::SloConfig::load(std::path::Path::new(path))?;
+            if let Some(p) = args.get("slo-alarms") {
+                sc.alarms_path = Some(std::path::PathBuf::from(p));
+            } else if sc.alarms_path.is_none() {
+                sc.alarms_path = trace.as_ref().map(|tc| tc.dir.join("alarms.jsonl"));
+            }
+            println!(
+                "[serve] slo: {} objectives from {path} (poll {} ms, alarms {})",
+                sc.objectives.len(),
+                sc.poll_interval_ms,
+                sc.alarms_path
+                    .as_ref()
+                    .map(|p| p.display().to_string())
+                    .unwrap_or_else(|| "off".into())
+            );
+            Some(sc)
+        }
+        None => {
+            if args.get("slo-alarms").is_some() {
+                return Err("--slo-alarms requires --slo FILE".into());
+            }
+            None
+        }
     };
     // Durability: --wal-dir DIR turns on the per-signature, per-shard-lane
     // write-ahead log (index::wal). Requires --snapshot-dir because WAL
@@ -235,6 +293,7 @@ fn cmd_serve(args: &Args, cfg: &AppConfig) -> Result<(), String> {
             index_backend,
             lsh,
             trace,
+            slo,
             wal_dir,
             wal_segment_cap,
             wal_fsync,
@@ -257,7 +316,12 @@ fn cmd_serve(args: &Args, cfg: &AppConfig) -> Result<(), String> {
 
     // --listen ADDR: expose the service over TCP instead of replaying a
     // synthetic trace (newline-delimited JSON; see coordinator::wire).
+    // --listen-secs N bounds the lifetime: after N seconds the server
+    // stops accepting, drains, and shuts the coordinator down cleanly —
+    // sealing the trace stream — so CI can gate on a complete JSONL
+    // stream instead of SIGTERM-truncated files. 0 (default) = forever.
     if let Some(addr) = args.get("listen") {
+        let listen_secs: u64 = args.get_parsed_or("listen-secs", 0u64)?;
         let coord = std::sync::Arc::new(coord);
         let server = tensorized_rp::coordinator::NetServer::start(
             std::sync::Arc::clone(&coord),
@@ -265,17 +329,32 @@ fn cmd_serve(args: &Args, cfg: &AppConfig) -> Result<(), String> {
         )
         .map_err(|e| e.to_string())?;
         println!("[serve] listening on {} — Ctrl-C to stop", server.addr());
+        let started = std::time::Instant::now();
+        let mut up = 0u64;
         loop {
-            std::thread::sleep(std::time::Duration::from_secs(5));
-            let m = coord.metrics();
-            println!(
-                "[serve] served={} completed={} pjrt_batches={} mean={:.0}µs",
-                server.served(),
-                m.completed,
-                m.pjrt_batches,
-                m.mean_latency_us
-            );
+            std::thread::sleep(std::time::Duration::from_secs(1));
+            up += 1;
+            if up % 5 == 0 {
+                let m = coord.metrics();
+                println!(
+                    "[serve] served={} completed={} pjrt_batches={} mean={:.0}µs",
+                    server.served(),
+                    m.completed,
+                    m.pjrt_batches,
+                    m.mean_latency_us
+                );
+            }
+            if listen_secs > 0 && started.elapsed().as_secs() >= listen_secs {
+                break;
+            }
         }
+        println!("[serve] --listen-secs {listen_secs} elapsed; draining");
+        server.shutdown();
+        match std::sync::Arc::try_unwrap(coord) {
+            Ok(c) => c.shutdown(),
+            Err(_) => eprintln!("[serve] coordinator still referenced; skipping drain"),
+        }
+        return Ok(());
     }
 
     let trace = poisson_trace(n, rate, case, FormatMix::default(), cfg.seed);
@@ -439,8 +518,11 @@ fn cmd_metrics(args: &Args) -> Result<(), String> {
 }
 
 /// Every line must parse as a span record with a known stage tag and
-/// integer timing fields, and every required pipeline stage must appear
-/// at least once. `Err` (exit 1) otherwise, so CI can gate on it.
+/// integer timing fields (meta records — anchors, signature interning,
+/// the stats seal — are validated and skipped), and every required
+/// pipeline stage must appear at least once. A stats seal reporting ring
+/// drops > 0 fails the check loudly: the stream is incomplete and the fix
+/// is `--trace-ring-cap`. `Err` (exit 1) otherwise, so CI can gate on it.
 fn check_trace(path: &std::path::Path) -> Result<(), String> {
     use tensorized_rp::obs::{OPTIONAL_STAGES, REQUIRED_STAGES};
     use tensorized_rp::util::json::Json;
@@ -448,12 +530,25 @@ fn check_trace(path: &std::path::Path) -> Result<(), String> {
         std::fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
     let mut seen: std::collections::BTreeMap<&str, u64> = std::collections::BTreeMap::new();
     let mut lines = 0u64;
+    let mut metas = 0u64;
+    let mut dropped: Option<u64> = None;
     for (i, line) in text.lines().enumerate() {
         if line.trim().is_empty() {
             continue;
         }
         let v = Json::parse(line)
             .map_err(|e| format!("{}:{}: bad JSON: {e}", path.display(), i + 1))?;
+        if let Some(kind) = v.get("meta").and_then(Json::as_str) {
+            if kind == "stats" {
+                dropped = Some(
+                    v.get("dropped").and_then(Json::as_usize).ok_or_else(|| {
+                        format!("{}:{}: stats meta without a dropped count", path.display(), i + 1)
+                    })? as u64,
+                );
+            }
+            metas += 1;
+            continue;
+        }
         let stage = v
             .get("stage")
             .and_then(Json::as_str)
@@ -487,10 +582,146 @@ fn check_trace(path: &std::path::Path) -> Result<(), String> {
             missing.join(", ")
         ));
     }
+    if let Some(d) = dropped {
+        if d > 0 {
+            return Err(format!(
+                "{}: span ring dropped {d} spans — the stream is incomplete; \
+                 raise `trp serve --trace-ring-cap`",
+                path.display()
+            ));
+        }
+    }
     let summary =
         seen.iter().map(|(s, n)| format!("{s}={n}")).collect::<Vec<_>>().join(" ");
-    println!("[check-trace] {}: {lines} spans ok — {summary}", path.display());
+    println!(
+        "[check-trace] {}: {lines} spans ok ({metas} meta records, dropped={}) — {summary}",
+        path.display(),
+        dropped.map(|d| d.to_string()).unwrap_or_else(|| "unsealed".into())
+    );
     Ok(())
+}
+
+/// Offline trace analysis: `trp trace analyze [--dir DIR] [--json]
+/// [--gate [--min-frac F]]` stitches the rotated JSONL generations under
+/// DIR, reconstructs per-request waterfalls and prints critical-path
+/// attribution per signature plus flush fan-out; `--gate` turns the
+/// report into a CI assertion (≥ F of requests reconstructed, full stage
+/// coverage, zero ring drops, sealed stream). `--diff DIR_A DIR_B`
+/// compares two runs stage by stage and flags p99 regressions.
+fn cmd_trace(args: &Args) -> Result<(), String> {
+    use tensorized_rp::obs::{analyze_dir, diff_reports, diff_to_json, render_diff};
+    let action = args.pos(1).ok_or("trace needs an action: analyze")?;
+    if action != "analyze" {
+        return Err(format!("unknown trace action {action} (analyze)"));
+    }
+    if let Some(a) = args.get("diff") {
+        let b = args
+            .pos(2)
+            .ok_or("--diff needs two directories: --diff DIR_A DIR_B")?;
+        let ra = analyze_dir(std::path::Path::new(a))?;
+        let rb = analyze_dir(std::path::Path::new(b))?;
+        let rows = diff_reports(&ra, &rb);
+        if args.flag("json") {
+            println!("{}", diff_to_json(&rows).to_string_pretty());
+        } else {
+            print!("{}", render_diff(&rows));
+        }
+        return Ok(());
+    }
+    let dir = std::path::PathBuf::from(args.get_or("dir", "trace"));
+    let report = analyze_dir(&dir)?;
+    if args.flag("json") {
+        println!("{}", report.to_json().to_string_pretty());
+    } else {
+        print!("{}", report.render());
+    }
+    if args.flag("gate") {
+        let min_frac: f64 = args.get_parsed_or("min-frac", 0.99f64)?;
+        report
+            .gate(min_frac)
+            .map_err(|errs| format!("trace analyze gate failed:\n  {}", errs.join("\n  ")))?;
+        println!(
+            "[trace-analyze] gate ok: {}/{} requests reconstructed (≥ {:.0}% required), \
+             zero ring drops",
+            report.reconstructed,
+            report.requests,
+            min_frac * 100.0
+        );
+    }
+    Ok(())
+}
+
+/// Burn-rate status of a live server's SLO objectives: `trp slo
+/// --connect ADDR [--watch [--interval SECS]]` renders the
+/// [`SloStatusSnapshot`](tensorized_rp::obs::SloStatusSnapshot) rows the
+/// server exports in its metrics snapshot. `--file FILE` instead
+/// validates an objectives TOML offline and prints what it declares.
+fn cmd_slo(args: &Args) -> Result<(), String> {
+    if let Some(path) = args.get("file") {
+        let cfg = tensorized_rp::obs::SloConfig::load(std::path::Path::new(path))?;
+        println!(
+            "[slo] {path}: {} objectives (poll {} ms, alarms {})",
+            cfg.objectives.len(),
+            cfg.poll_interval_ms,
+            cfg.alarms_path
+                .as_ref()
+                .map(|p| p.display().to_string())
+                .unwrap_or_else(|| "unset".into())
+        );
+        for o in &cfg.objectives {
+            let mut targets = Vec::new();
+            if let Some(t) = o.p99_latency_us {
+                targets.push(format!("p99_latency_us≤{t}"));
+            }
+            if let Some(r) = o.error_rate {
+                targets.push(format!("error_rate≤{r}"));
+            }
+            println!(
+                "  sig {}: {} | windows {}s/{}s, burn threshold {}",
+                o.signature,
+                targets.join(" "),
+                o.fast_window_s,
+                o.slow_window_s,
+                o.burn_threshold
+            );
+        }
+        return Ok(());
+    }
+    let addr = args.get("connect").unwrap_or("127.0.0.1:7070");
+    let watch = args.flag("watch");
+    let interval: u64 = args.get_parsed_or("interval", 2u64)?;
+    let mut client =
+        tensorized_rp::coordinator::NetClient::connect(addr).map_err(|e| e.to_string())?;
+    let mut id = 0u64;
+    loop {
+        let resp = client
+            .roundtrip(&ProjectRequest::metrics(id, false))
+            .map_err(|e| e.to_string())?;
+        if let Some(e) = resp.error {
+            return Err(e);
+        }
+        let snap = resp.metrics.ok_or("server answered without a metrics snapshot")?;
+        if snap.slo.is_empty() {
+            println!("[slo] no objectives loaded — start the server with --slo FILE");
+        }
+        for s in &snap.slo {
+            println!(
+                "sig {} {} target={} fast_burn={:.2} slow_burn={:.2} {}",
+                s.signature,
+                s.objective,
+                s.target,
+                s.fast_burn,
+                s.slow_burn,
+                if s.firing { "FIRING" } else { "ok" }
+            );
+        }
+        if !watch {
+            return Ok(());
+        }
+        println!("# ---");
+        id += 1;
+        std::thread::sleep(std::time::Duration::from_secs(interval.max(1)));
+    }
 }
 
 /// Ask a listening server to persist (or reload) one signature's index:

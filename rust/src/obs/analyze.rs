@@ -1,0 +1,1040 @@
+//! Offline trace analysis: `trp trace analyze`.
+//!
+//! Reads the rotated JSONL span stream a [`super::TraceRecorder`] wrote
+//! (`trace.jsonl.N` … `trace.jsonl`, oldest generation first), stitches
+//! the generations back into one timeline using the per-file
+//! `{"meta":"anchor",…}` records, and reconstructs each request's
+//! waterfall:
+//!
+//! ```text
+//!   recv → queue → assemble → project → index(shard*) → reply → write
+//! ```
+//!
+//! Request spans (`recv`, `queue`, `write`) are joined to flush spans
+//! (`assemble`, `project`, `index`, `reply`, `snapshot`) through the
+//! queue span, which carries both the request id and the flush id. A
+//! request instance is keyed by its queue span — not its request id —
+//! so clients that reuse ids across invocations cannot alias two
+//! requests into one.
+//!
+//! On top of the waterfalls the analyzer derives per-signature
+//! critical-path attribution (which stage the p50/p99 actually lives
+//! in; per-shard index time enters as the *max* across shards, since
+//! shards scan in parallel), flush fan-out statistics, a `--diff` mode
+//! comparing two trace directories, and a `--gate` mode that fails
+//! loudly unless ≥ `min_frac` of requests reconstruct with full stage
+//! coverage and the sealed stats record proves zero ring drops.
+
+use crate::util::json::{obj, Json};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One span parsed back off disk, with its start mapped onto the
+/// wall-clock timeline via the generation's anchor record.
+#[derive(Debug, Clone)]
+struct ParsedSpan {
+    stage: String,
+    req: Option<u64>,
+    flush: Option<u64>,
+    shard: Option<u32>,
+    trace: Option<u64>,
+    sig: Option<u32>,
+    /// Wall-clock start in µs (`anchor.unix_us + start_us − anchor.epoch_us`).
+    wall_us: i64,
+    dur_us: u64,
+}
+
+/// Everything read from one trace directory.
+#[derive(Debug, Default)]
+struct TraceStream {
+    spans: Vec<ParsedSpan>,
+    /// Interned signature id → label (from `{"meta":"sig",…}` records).
+    sig_labels: BTreeMap<u32, String>,
+    /// Final recorder counters, when the stream was sealed cleanly.
+    stats: Option<StreamStats>,
+    /// Lines that failed to parse (a killed writer can truncate the
+    /// last line; tolerated but reported).
+    malformed_lines: u64,
+    files_read: usize,
+}
+
+/// The sealed `{"meta":"stats",…}` counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StreamStats {
+    /// Spans offered to the ring.
+    pub recorded: u64,
+    /// Spans dropped against a full ring.
+    pub dropped: u64,
+    /// Span lines written.
+    pub written: u64,
+    /// File rotations performed.
+    pub rotations: u64,
+}
+
+/// Per-stage latency attribution within one signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StagePath {
+    /// Stage tag.
+    pub stage: String,
+    /// Median stage duration across reconstructed requests, µs.
+    pub p50_us: u64,
+    /// p99 stage duration, µs.
+    pub p99_us: u64,
+    /// Share of the signature's summed critical-path time spent here.
+    pub share: f64,
+}
+
+/// Critical-path summary of one signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SigPath {
+    /// Signature label (or `sig<N>`/`unknown` when unresolvable).
+    pub signature: String,
+    /// Reconstructed requests attributed to this signature.
+    pub count: u64,
+    /// End-to-end p50 (recv start → write end), µs.
+    pub e2e_p50_us: u64,
+    /// End-to-end p99, µs.
+    pub e2e_p99_us: u64,
+    /// Stage breakdown in pipeline order.
+    pub stages: Vec<StagePath>,
+}
+
+/// Flush fan-out statistics.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FanOut {
+    /// Flushes observed.
+    pub flushes: u64,
+    /// Smallest batch.
+    pub min_items: u64,
+    /// Mean batch size.
+    pub mean_items: f64,
+    /// Largest batch.
+    pub max_items: u64,
+}
+
+/// One bar of the slowest-request waterfall.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WaterfallRow {
+    /// Stage tag (`index` rows repeat per shard).
+    pub stage: String,
+    /// Shard, for per-shard rows.
+    pub shard: Option<u32>,
+    /// Offset from the request's first span, µs.
+    pub offset_us: u64,
+    /// Duration, µs.
+    pub dur_us: u64,
+}
+
+/// The slowest reconstructed request, for the terminal waterfall.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Waterfall {
+    /// Request id.
+    pub req: u64,
+    /// Trace-context id, when the request carried one.
+    pub trace: Option<u64>,
+    /// Signature label.
+    pub signature: String,
+    /// End-to-end µs.
+    pub total_us: u64,
+    /// Bars in start order.
+    pub rows: Vec<WaterfallRow>,
+}
+
+/// Full analysis of one trace directory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AnalyzeReport {
+    /// Trace directory analyzed.
+    pub dir: String,
+    /// Rotation generations read.
+    pub files_read: usize,
+    /// Request instances observed (one per queue span).
+    pub requests: u64,
+    /// Requests whose full waterfall reconstructed.
+    pub reconstructed: u64,
+    /// `reconstructed / requests` (1.0 when there were no requests).
+    pub reconstructed_frac: f64,
+    /// Distinct stage tags seen.
+    pub stages_covered: Vec<String>,
+    /// Required stages never seen (empty = full coverage).
+    pub missing_stages: Vec<String>,
+    /// Ring drops per the sealed stats record (`None` = stream was not
+    /// sealed, e.g. the server was killed).
+    pub ring_dropped: Option<u64>,
+    /// Span lines that failed to parse.
+    pub malformed_lines: u64,
+    /// Flush fan-out.
+    pub fanout: FanOut,
+    /// Per-signature critical paths, sorted by label.
+    pub signatures: Vec<SigPath>,
+    /// The slowest reconstructed request.
+    pub slowest: Option<Waterfall>,
+}
+
+/// Stage tags in pipeline order, used for attribution and display.
+const PATH_STAGES: [&str; 7] =
+    ["recv", "queue", "assemble", "project", "index", "reply", "write"];
+
+/// List the generations of one trace directory, oldest first:
+/// `trace.jsonl.<highest>` … `trace.jsonl.1`, then `trace.jsonl`.
+fn generation_files(dir: &Path) -> Result<Vec<PathBuf>, String> {
+    let mut suffixes: Vec<u64> = Vec::new();
+    let entries =
+        std::fs::read_dir(dir).map_err(|e| format!("read {}: {e}", dir.display()))?;
+    for entry in entries.flatten() {
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if let Some(suffix) = name.strip_prefix("trace.jsonl.") {
+            if let Ok(n) = suffix.parse::<u64>() {
+                suffixes.push(n);
+            }
+        }
+    }
+    suffixes.sort_unstable_by(|a, b| b.cmp(a));
+    let mut files: Vec<PathBuf> =
+        suffixes.iter().map(|n| dir.join(format!("trace.jsonl.{n}"))).collect();
+    let live = dir.join("trace.jsonl");
+    if live.is_file() {
+        files.push(live);
+    }
+    if files.is_empty() {
+        return Err(format!("no trace.jsonl* files under {}", dir.display()));
+    }
+    Ok(files)
+}
+
+fn get_u64(v: &Json, key: &str) -> Option<u64> {
+    v.get(key).and_then(|x| x.as_usize()).map(|x| x as u64)
+}
+
+/// Parse every generation of `dir` into one stitched stream.
+fn read_stream(dir: &Path) -> Result<TraceStream, String> {
+    let files = generation_files(dir)?;
+    let mut stream = TraceStream { files_read: files.len(), ..TraceStream::default() };
+    for path in &files {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        // Fallback when a generation lost its anchor (killed mid-open):
+        // raw ticks still order spans within the file.
+        let mut anchor: (i64, i64) = (0, 0);
+        for line in text.lines() {
+            let Ok(v) = Json::parse(line) else {
+                stream.malformed_lines += 1;
+                continue;
+            };
+            if let Some(meta) = v.get("meta").and_then(|m| m.as_str()) {
+                match meta {
+                    "anchor" => {
+                        let unix = get_u64(&v, "unix_us").unwrap_or(0) as i64;
+                        let epoch = get_u64(&v, "epoch_us").unwrap_or(0) as i64;
+                        anchor = (unix, epoch);
+                    }
+                    "sig" => {
+                        if let (Some(id), Some(label)) = (
+                            get_u64(&v, "id"),
+                            v.get("label").and_then(|l| l.as_str()),
+                        ) {
+                            stream.sig_labels.insert(id as u32, label.to_string());
+                        }
+                    }
+                    "stats" => {
+                        stream.stats = Some(StreamStats {
+                            recorded: get_u64(&v, "recorded").unwrap_or(0),
+                            dropped: get_u64(&v, "dropped").unwrap_or(0),
+                            written: get_u64(&v, "written").unwrap_or(0),
+                            rotations: get_u64(&v, "rotations").unwrap_or(0),
+                        });
+                    }
+                    _ => stream.malformed_lines += 1,
+                }
+                continue;
+            }
+            let Some(stage) = v.get("stage").and_then(|s| s.as_str()) else {
+                stream.malformed_lines += 1;
+                continue;
+            };
+            let start_us = get_u64(&v, "start_us").unwrap_or(0) as i64;
+            stream.spans.push(ParsedSpan {
+                stage: stage.to_string(),
+                req: get_u64(&v, "req"),
+                flush: get_u64(&v, "flush"),
+                shard: get_u64(&v, "shard").map(|s| s as u32),
+                trace: get_u64(&v, "trace"),
+                sig: get_u64(&v, "sig").map(|s| s as u32),
+                wall_us: anchor.0 + (start_us - anchor.1),
+                dur_us: get_u64(&v, "dur_us").unwrap_or(0),
+            });
+        }
+    }
+    Ok(stream)
+}
+
+/// One flush's spans, indexed by role.
+#[derive(Debug, Default)]
+struct FlushGroup {
+    assemble: Option<usize>,
+    project: Option<usize>,
+    index: Vec<usize>,
+    reply: Option<usize>,
+    snapshot: Option<usize>,
+    sig: Option<u32>,
+    items: u64,
+}
+
+/// One reconstructed (or partial) request instance.
+#[derive(Debug)]
+struct Instance {
+    req: u64,
+    trace: Option<u64>,
+    sig: Option<u32>,
+    flush: Option<u64>,
+    queue: usize,
+    recv: Option<usize>,
+    write: Option<usize>,
+}
+
+fn quantile(sorted: &[u64], q: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let pos = (q * (sorted.len() - 1) as f64).round() as usize;
+    sorted[pos.min(sorted.len() - 1)]
+}
+
+/// Analyze one trace directory.
+pub fn analyze_dir(dir: &Path) -> Result<AnalyzeReport, String> {
+    let stream = read_stream(dir)?;
+    let spans = &stream.spans;
+
+    // Flush-level grouping.
+    let mut flushes: BTreeMap<u64, FlushGroup> = BTreeMap::new();
+    for (i, s) in spans.iter().enumerate() {
+        let Some(f) = s.flush else { continue };
+        let g = flushes.entry(f).or_default();
+        match s.stage.as_str() {
+            "assemble" => g.assemble = Some(i),
+            "project" => g.project = Some(i),
+            "index" => g.index.push(i),
+            "reply" => g.reply = Some(i),
+            "snapshot" => g.snapshot = Some(i),
+            "queue" => g.items += 1,
+            _ => {}
+        }
+        if g.sig.is_none() {
+            g.sig = s.sig;
+        }
+    }
+
+    // Request instances: one per queue span, joined to recv/write spans
+    // of the same request id in arrival order (i-th queue instance of an
+    // id pairs with its i-th recv and i-th write).
+    let mut recvs: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+    let mut writes: BTreeMap<u64, Vec<usize>> = BTreeMap::new();
+    let mut queues: Vec<usize> = Vec::new();
+    for (i, s) in spans.iter().enumerate() {
+        match (s.stage.as_str(), s.req) {
+            ("recv", Some(r)) => recvs.entry(r).or_default().push(i),
+            ("write", Some(r)) => writes.entry(r).or_default().push(i),
+            ("queue", Some(_)) => queues.push(i),
+            _ => {}
+        }
+    }
+    for list in recvs.values_mut().chain(writes.values_mut()) {
+        list.sort_by_key(|&i| spans[i].wall_us);
+    }
+    queues.sort_by_key(|&i| spans[i].wall_us);
+    let has_net_spans = !recvs.is_empty();
+    let mut recv_cursor: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut write_cursor: BTreeMap<u64, usize> = BTreeMap::new();
+    let mut instances: Vec<Instance> = Vec::new();
+    for &q in &queues {
+        let s = &spans[q];
+        let req = match s.req {
+            Some(r) => r,
+            None => continue,
+        };
+        let next = |map: &BTreeMap<u64, Vec<usize>>, cur: &mut BTreeMap<u64, usize>| {
+            let pos = cur.entry(req).or_insert(0);
+            let idx = map.get(&req).and_then(|l| l.get(*pos)).copied();
+            if idx.is_some() {
+                *pos += 1;
+            }
+            idx
+        };
+        instances.push(Instance {
+            req,
+            trace: s.trace,
+            sig: s.sig,
+            flush: s.flush,
+            queue: q,
+            recv: next(&recvs, &mut recv_cursor),
+            write: next(&writes, &mut write_cursor),
+        });
+    }
+
+    // Reconstruction: queue + a complete flush, and — when the stream
+    // contains network spans at all — the request's recv and write.
+    let complete = |inst: &Instance| -> bool {
+        let Some(f) = inst.flush else { return false };
+        let Some(g) = flushes.get(&f) else { return false };
+        let flush_ok = g.assemble.is_some() && g.project.is_some() && g.reply.is_some();
+        let net_ok = !has_net_spans || (inst.recv.is_some() && inst.write.is_some());
+        flush_ok && net_ok
+    };
+
+    let requests = instances.len() as u64;
+    let mut reconstructed = 0u64;
+    // Per-signature accumulators: stage name → durations, plus e2e.
+    let mut by_sig: BTreeMap<String, (Vec<u64>, BTreeMap<&'static str, Vec<u64>>)> =
+        BTreeMap::new();
+    let mut slowest: Option<(u64, usize)> = None; // (e2e, instance idx)
+    for (idx, inst) in instances.iter().enumerate() {
+        if !complete(inst) {
+            continue;
+        }
+        reconstructed += 1;
+        let g = &flushes[&inst.flush.unwrap_or(0)];
+        let label = inst
+            .sig
+            .or(g.sig)
+            .map(|id| {
+                stream
+                    .sig_labels
+                    .get(&id)
+                    .cloned()
+                    .unwrap_or_else(|| format!("sig{id}"))
+            })
+            .unwrap_or_else(|| "unknown".to_string());
+        let dur = |i: Option<usize>| i.map(|i| spans[i].dur_us).unwrap_or(0);
+        let index_max = g.index.iter().map(|&i| spans[i].dur_us).max().unwrap_or(0);
+        let stage_durs: [(&'static str, u64); 7] = [
+            ("recv", dur(inst.recv)),
+            ("queue", dur(Some(inst.queue))),
+            ("assemble", dur(g.assemble)),
+            ("project", dur(g.project)),
+            ("index", index_max),
+            ("reply", dur(g.reply)),
+            ("write", dur(inst.write)),
+        ];
+        let first = inst.recv.unwrap_or(inst.queue);
+        let last = inst
+            .write
+            .or(g.reply)
+            .unwrap_or(inst.queue);
+        let e2e = (spans[last].wall_us + spans[last].dur_us as i64)
+            .saturating_sub(spans[first].wall_us)
+            .max(0) as u64;
+        let entry = by_sig.entry(label).or_default();
+        entry.0.push(e2e);
+        for (name, d) in stage_durs {
+            entry.1.entry(name).or_default().push(d);
+        }
+        if slowest.map(|(t, _)| e2e > t).unwrap_or(true) {
+            slowest = Some((e2e, idx));
+        }
+    }
+
+    // Stage coverage.
+    let mut covered: Vec<String> = Vec::new();
+    for s in spans {
+        if !covered.contains(&s.stage) {
+            covered.push(s.stage.clone());
+        }
+    }
+    covered.sort();
+    let missing: Vec<String> = super::trace::REQUIRED_STAGES
+        .iter()
+        .filter(|r| !covered.iter().any(|c| c.as_str() == **r))
+        .map(|r| r.to_string())
+        .collect();
+
+    // Fan-out over flushes that actually batched requests.
+    let sizes: Vec<u64> =
+        flushes.values().map(|g| g.items).filter(|&n| n > 0).collect();
+    let fanout = FanOut {
+        flushes: sizes.len() as u64,
+        min_items: sizes.iter().copied().min().unwrap_or(0),
+        mean_items: if sizes.is_empty() {
+            0.0
+        } else {
+            sizes.iter().sum::<u64>() as f64 / sizes.len() as f64
+        },
+        max_items: sizes.iter().copied().max().unwrap_or(0),
+    };
+
+    // Per-signature critical paths.
+    let mut signatures: Vec<SigPath> = Vec::new();
+    for (label, (mut e2e, stages)) in by_sig {
+        e2e.sort_unstable();
+        let total_mean_sum: f64 = stages
+            .values()
+            .map(|v| v.iter().sum::<u64>() as f64)
+            .sum::<f64>()
+            .max(1.0);
+        let mut rows = Vec::new();
+        for name in PATH_STAGES {
+            let Some(durs) = stages.get(name) else { continue };
+            let mut sorted = durs.clone();
+            sorted.sort_unstable();
+            rows.push(StagePath {
+                stage: name.to_string(),
+                p50_us: quantile(&sorted, 0.50),
+                p99_us: quantile(&sorted, 0.99),
+                share: durs.iter().sum::<u64>() as f64 / total_mean_sum,
+            });
+        }
+        signatures.push(SigPath {
+            signature: label,
+            count: e2e.len() as u64,
+            e2e_p50_us: quantile(&e2e, 0.50),
+            e2e_p99_us: quantile(&e2e, 0.99),
+            stages: rows,
+        });
+    }
+
+    // The slowest request's waterfall.
+    let slowest = slowest.map(|(total, idx)| {
+        let inst = &instances[idx];
+        let g = &flushes[&inst.flush.unwrap_or(0)];
+        let mut picks: Vec<usize> = Vec::new();
+        if let Some(r) = inst.recv {
+            picks.push(r);
+        }
+        picks.push(inst.queue);
+        for i in [g.assemble, g.project, g.reply, g.snapshot].into_iter().flatten() {
+            picks.push(i);
+        }
+        picks.extend(g.index.iter().copied());
+        if let Some(w) = inst.write {
+            picks.push(w);
+        }
+        picks.sort_by_key(|&i| spans[i].wall_us);
+        let t0 = picks.first().map(|&i| spans[i].wall_us).unwrap_or(0);
+        let rows = picks
+            .iter()
+            .map(|&i| WaterfallRow {
+                stage: spans[i].stage.clone(),
+                shard: spans[i].shard,
+                offset_us: (spans[i].wall_us - t0).max(0) as u64,
+                dur_us: spans[i].dur_us,
+            })
+            .collect();
+        let signature = inst
+            .sig
+            .or(g.sig)
+            .and_then(|id| stream.sig_labels.get(&id).cloned())
+            .unwrap_or_else(|| "unknown".to_string());
+        Waterfall { req: inst.req, trace: inst.trace, signature, total_us: total, rows }
+    });
+
+    Ok(AnalyzeReport {
+        dir: dir.display().to_string(),
+        files_read: stream.files_read,
+        requests,
+        reconstructed,
+        reconstructed_frac: if requests == 0 {
+            1.0
+        } else {
+            reconstructed as f64 / requests as f64
+        },
+        stages_covered: covered,
+        missing_stages: missing,
+        ring_dropped: stream.stats.map(|s| s.dropped),
+        malformed_lines: stream.malformed_lines,
+        fanout,
+        signatures,
+        slowest,
+    })
+}
+
+impl AnalyzeReport {
+    /// The report as a JSON document (the `--json` output).
+    pub fn to_json(&self) -> Json {
+        let sig_json = |p: &SigPath| {
+            obj(vec![
+                ("signature", Json::Str(p.signature.clone())),
+                ("count", Json::Num(p.count as f64)),
+                ("e2e_p50_us", Json::Num(p.e2e_p50_us as f64)),
+                ("e2e_p99_us", Json::Num(p.e2e_p99_us as f64)),
+                (
+                    "stages",
+                    Json::Arr(
+                        p.stages
+                            .iter()
+                            .map(|s| {
+                                obj(vec![
+                                    ("stage", Json::Str(s.stage.clone())),
+                                    ("p50_us", Json::Num(s.p50_us as f64)),
+                                    ("p99_us", Json::Num(s.p99_us as f64)),
+                                    ("share", Json::Num(s.share)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ])
+        };
+        let mut pairs = vec![
+            ("dir", Json::Str(self.dir.clone())),
+            ("files_read", Json::Num(self.files_read as f64)),
+            ("requests", Json::Num(self.requests as f64)),
+            ("reconstructed", Json::Num(self.reconstructed as f64)),
+            ("reconstructed_frac", Json::Num(self.reconstructed_frac)),
+            (
+                "stages_covered",
+                Json::Arr(self.stages_covered.iter().cloned().map(Json::Str).collect()),
+            ),
+            (
+                "missing_stages",
+                Json::Arr(self.missing_stages.iter().cloned().map(Json::Str).collect()),
+            ),
+            (
+                "ring_dropped",
+                self.ring_dropped.map(|d| Json::Num(d as f64)).unwrap_or(Json::Null),
+            ),
+            ("malformed_lines", Json::Num(self.malformed_lines as f64)),
+            (
+                "fanout",
+                obj(vec![
+                    ("flushes", Json::Num(self.fanout.flushes as f64)),
+                    ("min_items", Json::Num(self.fanout.min_items as f64)),
+                    ("mean_items", Json::Num(self.fanout.mean_items)),
+                    ("max_items", Json::Num(self.fanout.max_items as f64)),
+                ]),
+            ),
+            ("signatures", Json::Arr(self.signatures.iter().map(sig_json).collect())),
+        ];
+        if let Some(w) = &self.slowest {
+            pairs.push((
+                "slowest",
+                obj(vec![
+                    ("req", Json::Num(w.req as f64)),
+                    (
+                        "trace",
+                        w.trace.map(|t| Json::Num(t as f64)).unwrap_or(Json::Null),
+                    ),
+                    ("signature", Json::Str(w.signature.clone())),
+                    ("total_us", Json::Num(w.total_us as f64)),
+                ]),
+            ));
+        }
+        obj(pairs)
+    }
+
+    /// Gate the report: `Ok(())` when at least `min_frac` of requests
+    /// reconstructed, every required stage appeared, and the sealed
+    /// stats record proves zero ring drops. Failures list every broken
+    /// condition.
+    pub fn gate(&self, min_frac: f64) -> Result<(), Vec<String>> {
+        let mut failures = Vec::new();
+        if self.requests == 0 {
+            failures.push("no requests found in the trace stream".to_string());
+        }
+        if self.reconstructed_frac < min_frac {
+            failures.push(format!(
+                "reconstructed {}/{} requests ({:.4}) < required {:.4}",
+                self.reconstructed, self.requests, self.reconstructed_frac, min_frac
+            ));
+        }
+        if !self.missing_stages.is_empty() {
+            failures.push(format!(
+                "required stages never observed: {}",
+                self.missing_stages.join(", ")
+            ));
+        }
+        match self.ring_dropped {
+            Some(0) => {}
+            Some(d) => failures.push(format!("span ring dropped {d} spans")),
+            None => failures.push(
+                "stream is not sealed (no stats record) — cannot prove zero drops"
+                    .to_string(),
+            ),
+        }
+        if failures.is_empty() {
+            Ok(())
+        } else {
+            Err(failures)
+        }
+    }
+
+    /// Human-readable report: summary, per-signature critical paths, and
+    /// the slowest request's waterfall.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "trace analysis of {} ({} generation{})\n",
+            self.dir,
+            self.files_read,
+            if self.files_read == 1 { "" } else { "s" }
+        ));
+        out.push_str(&format!(
+            "  requests {}  reconstructed {} ({:.1}%)  ring_dropped {}  malformed {}\n",
+            self.requests,
+            self.reconstructed,
+            self.reconstructed_frac * 100.0,
+            self.ring_dropped.map(|d| d.to_string()).unwrap_or_else(|| "?".to_string()),
+            self.malformed_lines,
+        ));
+        if !self.missing_stages.is_empty() {
+            out.push_str(&format!("  MISSING stages: {}\n", self.missing_stages.join(", ")));
+        }
+        out.push_str(&format!(
+            "  flush fan-out: {} flushes, {}–{} items (mean {:.2})\n",
+            self.fanout.flushes, self.fanout.min_items, self.fanout.max_items,
+            self.fanout.mean_items,
+        ));
+        for sig in &self.signatures {
+            out.push_str(&format!(
+                "\n  {}  n={}  e2e p50 {}µs  p99 {}µs\n",
+                sig.signature, sig.count, sig.e2e_p50_us, sig.e2e_p99_us
+            ));
+            for st in &sig.stages {
+                out.push_str(&format!(
+                    "    {:<9} p50 {:>8}µs  p99 {:>8}µs  {:>5.1}%\n",
+                    st.stage,
+                    st.p50_us,
+                    st.p99_us,
+                    st.share * 100.0
+                ));
+            }
+        }
+        if let Some(w) = &self.slowest {
+            out.push('\n');
+            out.push_str(&render_waterfall(w));
+        }
+        out
+    }
+}
+
+/// ASCII waterfall of one request, 48 columns of timeline.
+pub fn render_waterfall(w: &Waterfall) -> String {
+    const COLS: u64 = 48;
+    let mut out = format!(
+        "  slowest request: req={} trace={} sig={} total={}µs\n",
+        w.req,
+        w.trace.map(|t| t.to_string()).unwrap_or_else(|| "-".to_string()),
+        w.signature,
+        w.total_us
+    );
+    let span_end = w.rows.iter().map(|r| r.offset_us + r.dur_us).max().unwrap_or(1);
+    let scale = span_end.max(1);
+    for r in &w.rows {
+        let lead = (r.offset_us * COLS / scale).min(COLS - 1);
+        let mut width = (r.dur_us * COLS).div_ceil(scale);
+        width = width.clamp(1, COLS - lead);
+        let tag = match r.shard {
+            Some(s) => format!("{}/{s}", r.stage),
+            None => r.stage.clone(),
+        };
+        out.push_str(&format!(
+            "    {:<10} |{}{}{}| {}µs\n",
+            tag,
+            " ".repeat(lead as usize),
+            "█".repeat(width as usize),
+            " ".repeat((COLS - lead - width) as usize),
+            r.dur_us
+        ));
+    }
+    out
+}
+
+/// One row of a `--diff` comparison.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiffRow {
+    /// Signature label.
+    pub signature: String,
+    /// Stage tag, or `e2e`.
+    pub stage: String,
+    /// p99 in the baseline directory, µs.
+    pub a_p99_us: u64,
+    /// p99 in the candidate directory, µs.
+    pub b_p99_us: u64,
+    /// Relative change of p99, percent (positive = regression).
+    pub delta_pct: f64,
+}
+
+/// Compare two analyzed directories signature-by-signature.
+pub fn diff_reports(a: &AnalyzeReport, b: &AnalyzeReport) -> Vec<DiffRow> {
+    let mut rows = Vec::new();
+    for sa in &a.signatures {
+        let Some(sb) = b.signatures.iter().find(|s| s.signature == sa.signature) else {
+            continue;
+        };
+        let pct = |x: u64, y: u64| {
+            if x == 0 {
+                0.0
+            } else {
+                (y as f64 - x as f64) / x as f64 * 100.0
+            }
+        };
+        rows.push(DiffRow {
+            signature: sa.signature.clone(),
+            stage: "e2e".to_string(),
+            a_p99_us: sa.e2e_p99_us,
+            b_p99_us: sb.e2e_p99_us,
+            delta_pct: pct(sa.e2e_p99_us, sb.e2e_p99_us),
+        });
+        for st_a in &sa.stages {
+            let Some(st_b) = sb.stages.iter().find(|s| s.stage == st_a.stage) else {
+                continue;
+            };
+            rows.push(DiffRow {
+                signature: sa.signature.clone(),
+                stage: st_a.stage.clone(),
+                a_p99_us: st_a.p99_us,
+                b_p99_us: st_b.p99_us,
+                delta_pct: pct(st_a.p99_us, st_b.p99_us),
+            });
+        }
+    }
+    rows
+}
+
+/// Diff rows as JSON.
+pub fn diff_to_json(rows: &[DiffRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                obj(vec![
+                    ("signature", Json::Str(r.signature.clone())),
+                    ("stage", Json::Str(r.stage.clone())),
+                    ("a_p99_us", Json::Num(r.a_p99_us as f64)),
+                    ("b_p99_us", Json::Num(r.b_p99_us as f64)),
+                    ("delta_pct", Json::Num(r.delta_pct)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Diff rows as a terminal table.
+pub fn render_diff(rows: &[DiffRow]) -> String {
+    let mut out = String::from(
+        "  signature                     stage      a_p99(µs)  b_p99(µs)   Δ%\n",
+    );
+    for r in rows {
+        out.push_str(&format!(
+            "  {:<29} {:<9} {:>9} {:>10} {:>+7.1}\n",
+            r.signature, r.stage, r.a_p99_us, r.b_p99_us, r.delta_pct
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "trp_analyze_{tag}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn span_line(
+        stage: &str,
+        req: Option<u64>,
+        flush: Option<u64>,
+        shard: Option<u32>,
+        trace: Option<u64>,
+        sig: Option<u32>,
+        start: u64,
+        dur: u64,
+    ) -> String {
+        let n = |v: Option<u64>| v.map(|x| x.to_string()).unwrap_or_else(|| "null".into());
+        format!(
+            "{{\"stage\":\"{stage}\",\"req\":{},\"flush\":{},\"shard\":{},\"trace\":{},\
+             \"sig\":{},\"start_us\":{start},\"dur_us\":{dur}}}",
+            n(req),
+            n(flush),
+            n(shard.map(u64::from)),
+            n(trace),
+            n(sig.map(u64::from)),
+        )
+    }
+
+    /// Write one request's full waterfall; `base` staggers the clock and
+    /// `slow` stretches the project stage 10× (shifting everything after
+    /// it, as a real regression would).
+    fn full_request(
+        out: &mut Vec<String>,
+        req: u64,
+        flush: u64,
+        trace: u64,
+        base: u64,
+        slow: bool,
+    ) {
+        let project_dur = if slow { 400 } else { 40 };
+        let t_index = base + 28 + project_dur;
+        out.push(span_line("recv", Some(req), None, None, Some(trace), None, base, 5));
+        out.push(span_line(
+            "queue", Some(req), Some(flush), None, Some(trace), Some(0), base + 5, 20,
+        ));
+        out.push(span_line(
+            "assemble", None, Some(flush), None, Some(trace), Some(0), base + 25, 3,
+        ));
+        out.push(span_line(
+            "project", None, Some(flush), None, Some(trace), Some(0), base + 28,
+            project_dur,
+        ));
+        out.push(span_line(
+            "index", None, Some(flush), Some(0), Some(trace), Some(0), t_index, 7,
+        ));
+        out.push(span_line(
+            "index", None, Some(flush), Some(1), Some(trace), Some(0), t_index, 9,
+        ));
+        out.push(span_line(
+            "reply", None, Some(flush), None, Some(trace), Some(0), t_index + 10, 4,
+        ));
+        out.push(span_line(
+            "write", Some(req), None, None, Some(trace), None, t_index + 15, 6,
+        ));
+    }
+
+    fn write_dir(dir: &Path, slow: bool) {
+        // Generation .1 holds request 1; the live file holds request 2 —
+        // the analyzer must stitch both through their own anchors.
+        let mut gen1 = vec![
+            "{\"meta\":\"anchor\",\"unix_us\":1000000,\"epoch_us\":0,\"pid\":1}".to_string(),
+            "{\"meta\":\"sig\",\"id\":0,\"label\":\"tt-r2/d[3,3]/k8\"}".to_string(),
+        ];
+        full_request(&mut gen1, 1, 100, 71, 0, slow);
+        let mut live = vec![
+            "{\"meta\":\"anchor\",\"unix_us\":1001000,\"epoch_us\":1000,\"pid\":1}".to_string(),
+            "{\"meta\":\"sig\",\"id\":0,\"label\":\"tt-r2/d[3,3]/k8\"}".to_string(),
+        ];
+        full_request(&mut live, 2, 101, 72, 1000, slow);
+        live.push(
+            "{\"meta\":\"stats\",\"recorded\":16,\"dropped\":0,\"written\":16,\"rotations\":1}"
+                .to_string(),
+        );
+        let mut f = std::fs::File::create(dir.join("trace.jsonl.1")).unwrap();
+        writeln!(f, "{}", gen1.join("\n")).unwrap();
+        let mut f = std::fs::File::create(dir.join("trace.jsonl")).unwrap();
+        writeln!(f, "{}", live.join("\n")).unwrap();
+    }
+
+    #[test]
+    fn reconstructs_requests_across_rotated_generations() {
+        let dir = temp_dir("stitch");
+        write_dir(&dir, false);
+        let report = analyze_dir(&dir).unwrap();
+        assert_eq!(report.files_read, 2);
+        assert_eq!(report.requests, 2);
+        assert_eq!(report.reconstructed, 2);
+        assert_eq!(report.reconstructed_frac, 1.0);
+        assert!(report.missing_stages.is_empty(), "{:?}", report.missing_stages);
+        assert_eq!(report.ring_dropped, Some(0));
+        assert_eq!(report.fanout.flushes, 2);
+        assert_eq!(report.fanout.max_items, 1);
+        assert_eq!(report.signatures.len(), 1);
+        let sig = &report.signatures[0];
+        assert_eq!(sig.signature, "tt-r2/d[3,3]/k8");
+        assert_eq!(sig.count, 2);
+        // recv@0 → write end @ base+28+40+15+6 = 89 on each generation's
+        // timeline.
+        assert_eq!(sig.e2e_p50_us, 89);
+        // Parallel shards enter as the max (9), not the sum (16).
+        let index = sig.stages.iter().find(|s| s.stage == "index").unwrap();
+        assert_eq!(index.p50_us, 9);
+        // Project dominates the critical path.
+        let project = sig.stages.iter().find(|s| s.stage == "project").unwrap();
+        assert!(project.share > 0.3, "share={}", project.share);
+        report.gate(0.99).unwrap();
+        // The waterfall names every pipeline stage.
+        let text = report.render();
+        for stage in PATH_STAGES {
+            assert!(text.contains(stage), "render must mention {stage}");
+        }
+        // JSON output parses back.
+        let j = report.to_json().to_string_compact();
+        let v = Json::parse(&j).unwrap();
+        assert_eq!(v.get("reconstructed").and_then(|x| x.as_usize()), Some(2));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gate_fails_on_drops_missing_stages_and_partial_requests() {
+        let dir = temp_dir("gate");
+        let lines = [
+            "{\"meta\":\"anchor\",\"unix_us\":1000,\"epoch_us\":0,\"pid\":1}".to_string(),
+            // A queue span with no flush group: cannot reconstruct.
+            span_line("queue", Some(1), Some(9), None, None, None, 0, 10),
+            "{\"meta\":\"stats\",\"recorded\":5,\"dropped\":3,\"written\":2,\"rotations\":0}"
+                .to_string(),
+        ];
+        std::fs::write(dir.join("trace.jsonl"), lines.join("\n")).unwrap();
+        let report = analyze_dir(&dir).unwrap();
+        assert_eq!(report.requests, 1);
+        assert_eq!(report.reconstructed, 0);
+        let failures = report.gate(0.99).unwrap_err();
+        let text = failures.join("; ");
+        assert!(text.contains("dropped 3"), "{text}");
+        assert!(text.contains("required stages never observed"), "{text}");
+        assert!(text.contains("reconstructed 0/1"), "{text}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unsealed_stream_cannot_prove_zero_drops() {
+        let dir = temp_dir("unsealed");
+        std::fs::write(
+            dir.join("trace.jsonl"),
+            "{\"meta\":\"anchor\",\"unix_us\":1000,\"epoch_us\":0,\"pid\":1}\n",
+        )
+        .unwrap();
+        let report = analyze_dir(&dir).unwrap();
+        assert_eq!(report.ring_dropped, None);
+        let failures = report.gate(0.5).unwrap_err();
+        assert!(failures.iter().any(|f| f.contains("not sealed")), "{failures:?}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn diff_flags_the_regressed_stage() {
+        let dir_a = temp_dir("diff_a");
+        let dir_b = temp_dir("diff_b");
+        write_dir(&dir_a, false);
+        write_dir(&dir_b, true); // project is 10× slower
+        let a = analyze_dir(&dir_a).unwrap();
+        let b = analyze_dir(&dir_b).unwrap();
+        let rows = diff_reports(&a, &b);
+        let project = rows
+            .iter()
+            .find(|r| r.stage == "project")
+            .expect("project row present");
+        assert!(project.delta_pct > 500.0, "delta={}", project.delta_pct);
+        let recv = rows.iter().find(|r| r.stage == "recv").unwrap();
+        assert_eq!(recv.delta_pct, 0.0);
+        let e2e = rows.iter().find(|r| r.stage == "e2e").unwrap();
+        assert!(e2e.delta_pct > 100.0);
+        // Render + JSON don't panic and mention the signature.
+        assert!(render_diff(&rows).contains("tt-r2/d[3,3]/k8"));
+        let j = diff_to_json(&rows).to_string_compact();
+        assert!(Json::parse(&j).is_ok());
+        let _ = std::fs::remove_dir_all(&dir_a);
+        let _ = std::fs::remove_dir_all(&dir_b);
+    }
+
+    #[test]
+    fn tolerates_truncated_tail_lines() {
+        let dir = temp_dir("trunc");
+        let mut lines = vec![
+            "{\"meta\":\"anchor\",\"unix_us\":1000,\"epoch_us\":0,\"pid\":1}".to_string(),
+        ];
+        full_request(&mut lines, 1, 5, 9, 0, false);
+        let mut text = lines.join("\n");
+        text.push_str("\n{\"stage\":\"re"); // killed mid-write
+        std::fs::write(dir.join("trace.jsonl"), text).unwrap();
+        let report = analyze_dir(&dir).unwrap();
+        assert_eq!(report.requests, 1);
+        assert_eq!(report.reconstructed, 1);
+        assert_eq!(report.malformed_lines, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

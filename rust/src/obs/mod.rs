@@ -23,18 +23,34 @@
 //! The whole picture is exported as an [`ObsSnapshot`]: over the wire via
 //! the `metrics` op, as JSON via `trp client --op metrics`, and as a
 //! Prometheus-style text dump via `trp metrics [--watch]`.
+//!
+//! Two analysis layers sit on top of the recorders:
+//!
+//! * [`analyze`] — `trp trace analyze`: offline reconstruction of
+//!   per-request waterfalls from the rotated JSONL stream, critical-path
+//!   attribution per signature, flush fan-out stats, A/B diffs and a CI
+//!   gate (≥ N% of requests reconstructed, zero ring drops).
+//! * [`slo`] — declarative per-signature objectives (`trp serve --slo`)
+//!   evaluated as multi-window burn rates over the metrics registry,
+//!   exported in the snapshot and appended to `alarms.jsonl` on every
+//!   firing/clear transition.
 
+pub mod analyze;
 pub mod gemm_stats;
 pub mod registry;
+pub mod slo;
 pub mod trace;
 
+pub use analyze::{analyze_dir, diff_reports, diff_to_json, render_diff, AnalyzeReport};
 pub use gemm_stats::{
     gemm_profiling_enabled, gemm_record, gemm_stats_snapshot, reset_gemm_stats,
     set_gemm_profiling, GemmShapeStat,
 };
 pub use registry::{
-    MetricsRegistry, ObsSnapshot, SigMetrics, SigSnapshot, Stage, StageSnapshot, STAGE_COUNT,
+    MetricsRegistry, ObsSnapshot, SigMetrics, SigSnapshot, SloStatusSnapshot, Stage,
+    StageSnapshot, E2E_STAGE, STAGE_COUNT,
 };
+pub use slo::{Objective, SloConfig, SloEngine};
 pub use trace::{
     Span, SpanRing, TraceConfig, TraceRecorder, TraceStats, OPTIONAL_STAGES, REQUIRED_STAGES,
 };

@@ -10,13 +10,18 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
-use crate::coordinator::{LatencyHistogram, MetricsSnapshot};
+use crate::coordinator::{bucket_index, LatencyHistogram, MetricsSnapshot, BUCKETS};
 use crate::obs::gemm_stats::GemmShapeStat;
 use crate::obs::trace::TraceStats;
 use crate::util::json::{obj, Json};
 
 /// Number of per-signature stage histograms.
 pub const STAGE_COUNT: usize = 9;
+
+/// Name of the per-signature end-to-end pseudo-stage exported alongside
+/// the pipeline stages (submit → reply send, per request). The SLO
+/// engine evaluates latency objectives against this histogram.
+pub const E2E_STAGE: &str = "e2e";
 
 /// Pipeline stages with a per-signature latency histogram.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -95,6 +100,14 @@ pub struct SigMetrics {
     /// by the coordinator's gauge refresh at snapshot time.
     pub wal_lag: AtomicU64,
     stages: [LatencyHistogram; STAGE_COUNT],
+    /// End-to-end latency per request of this signature (submit → reply
+    /// send) — the histogram latency SLOs are evaluated against.
+    e2e: LatencyHistogram,
+    /// Per-bucket exemplars: the last trace id (+1, so 0 = none) that
+    /// landed in each stage-histogram bucket. Last-writer-wins relaxed
+    /// stores — an exemplar is a sample, not a counter.
+    stage_exemplars: [[AtomicU64; BUCKETS]; STAGE_COUNT],
+    e2e_exemplars: [AtomicU64; BUCKETS],
 }
 
 impl Default for SigMetrics {
@@ -109,6 +122,9 @@ impl Default for SigMetrics {
             flushes: AtomicU64::new(0),
             wal_lag: AtomicU64::new(0),
             stages: std::array::from_fn(|_| LatencyHistogram::new()),
+            e2e: LatencyHistogram::new(),
+            stage_exemplars: std::array::from_fn(|_| std::array::from_fn(|_| AtomicU64::new(0))),
+            e2e_exemplars: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
 }
@@ -123,6 +139,30 @@ impl SigMetrics {
     pub fn record_stage(&self, s: Stage, us: u64) {
         self.stages[s as usize].record(us);
     }
+
+    /// Record one observation and, when a trace context is attached,
+    /// stamp it as the bucket's exemplar — linking a hot histogram
+    /// bucket to a concrete request's span waterfall.
+    pub fn record_stage_traced(&self, s: Stage, us: u64, trace: Option<u64>) {
+        self.stages[s as usize].record(us);
+        if let Some(t) = trace {
+            self.stage_exemplars[s as usize][bucket_index(us)]
+                .store(t.wrapping_add(1), Ordering::Relaxed);
+        }
+    }
+
+    /// Record one end-to-end observation (submit → reply send) with an
+    /// optional trace-context exemplar.
+    pub fn record_e2e(&self, us: u64, trace: Option<u64>) {
+        self.e2e.record(us);
+        if let Some(t) = trace {
+            self.e2e_exemplars[bucket_index(us)].store(t.wrapping_add(1), Ordering::Relaxed);
+        }
+    }
+}
+
+fn exemplar_vec(row: &[AtomicU64; BUCKETS]) -> Vec<u64> {
+    row.iter().map(|e| e.load(Ordering::Relaxed)).collect()
 }
 
 /// Lazily-populated map signature → [`SigMetrics`], mirroring how the
@@ -182,6 +222,9 @@ pub struct StageSnapshot {
     pub p99_us: u64,
     /// Raw log₂ bucket counts (bucket b covers `[2^b, 2^(b+1))` µs).
     pub buckets: Vec<u64>,
+    /// Per-bucket exemplar trace ids, encoded `trace_id + 1` (0 = no
+    /// exemplar). Aligned with `buckets`.
+    pub exemplars: Vec<u64>,
 }
 
 /// Point-in-time copy of one signature's metrics.
@@ -211,7 +254,7 @@ pub struct SigSnapshot {
 
 impl SigSnapshot {
     fn capture(label: &str, sig: &SigMetrics) -> Self {
-        let stages = Stage::ALL
+        let mut stages: Vec<StageSnapshot> = Stage::ALL
             .iter()
             .filter_map(|&s| {
                 let h = sig.stage(s);
@@ -225,9 +268,21 @@ impl SigSnapshot {
                     p50_us: h.quantile_us(0.50),
                     p99_us: h.quantile_us(0.99),
                     buckets: h.bucket_counts(),
+                    exemplars: exemplar_vec(&sig.stage_exemplars[s as usize]),
                 })
             })
             .collect();
+        if sig.e2e.count() > 0 {
+            stages.push(StageSnapshot {
+                stage: E2E_STAGE.to_string(),
+                count: sig.e2e.count(),
+                mean_us: sig.e2e.mean_us(),
+                p50_us: sig.e2e.quantile_us(0.50),
+                p99_us: sig.e2e.quantile_us(0.99),
+                buckets: sig.e2e.bucket_counts(),
+                exemplars: exemplar_vec(&sig.e2e_exemplars),
+            });
+        }
         Self {
             signature: label.to_string(),
             requests: sig.requests.load(Ordering::Relaxed),
@@ -243,6 +298,27 @@ impl SigSnapshot {
     }
 }
 
+/// Point-in-time status of one SLO objective, exported in the snapshot
+/// so `trp slo` and Prometheus scrapes see burn rates without touching
+/// the engine's internals.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloStatusSnapshot {
+    /// Signature the objective applies to (`*` = every signature).
+    pub signature: String,
+    /// Objective kind: `p99_latency_us` or `error_rate`.
+    pub objective: String,
+    /// Objective target (µs for latency, fraction for error rate).
+    pub target: f64,
+    /// Burn rate over the fast window (1.0 = consuming budget exactly
+    /// at the sustainable rate).
+    pub fast_burn: f64,
+    /// Burn rate over the slow window.
+    pub slow_burn: f64,
+    /// Whether the alarm is currently firing (both windows over the
+    /// burn threshold).
+    pub firing: bool,
+}
+
 /// The full observability picture, as returned by the `metrics` wire op.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ObsSnapshot {
@@ -255,6 +331,9 @@ pub struct ObsSnapshot {
     pub gemm: Vec<GemmShapeStat>,
     /// Trace recorder counters.
     pub trace: TraceStats,
+    /// SLO objective statuses (empty unless `trp serve --slo` loaded a
+    /// policy file).
+    pub slo: Vec<SloStatusSnapshot>,
 }
 
 fn u(v: Option<&Json>) -> u64 {
@@ -347,6 +426,12 @@ impl ObsSnapshot {
                                     st.buckets.iter().map(|&b| Json::Num(b as f64)).collect(),
                                 ),
                             ),
+                            (
+                                "exemplars",
+                                Json::Arr(
+                                    st.exemplars.iter().map(|&e| Json::Num(e as f64)).collect(),
+                                ),
+                            ),
                         ])
                     })
                     .collect();
@@ -378,6 +463,20 @@ impl ObsSnapshot {
                 ])
             })
             .collect();
+        let slo = self
+            .slo
+            .iter()
+            .map(|s| {
+                obj(vec![
+                    ("signature", Json::Str(s.signature.clone())),
+                    ("objective", Json::Str(s.objective.clone())),
+                    ("target", Json::Num(s.target)),
+                    ("fast_burn", Json::Num(s.fast_burn)),
+                    ("slow_burn", Json::Num(s.slow_burn)),
+                    ("firing", Json::Bool(s.firing)),
+                ])
+            })
+            .collect();
         obj(vec![
             ("global", global_to_json(&self.global)),
             ("signatures", Json::Arr(sigs)),
@@ -392,6 +491,7 @@ impl ObsSnapshot {
                     ("rotations", Json::Num(self.trace.rotations as f64)),
                 ]),
             ),
+            ("slo", Json::Arr(slo)),
         ])
     }
 
@@ -416,6 +516,15 @@ impl ObsSnapshot {
                             p99_us: u(st.get("p99_us")),
                             buckets: st
                                 .get("buckets")
+                                .and_then(Json::as_arr)
+                                .map(|b| {
+                                    b.iter()
+                                        .map(|x| x.as_f64().unwrap_or(0.0) as u64)
+                                        .collect()
+                                })
+                                .unwrap_or_default(),
+                            exemplars: st
+                                .get("exemplars")
                                 .and_then(Json::as_arr)
                                 .map(|b| {
                                     b.iter()
@@ -467,7 +576,28 @@ impl ObsSnapshot {
             },
             None => TraceStats::default(),
         };
-        Ok(Self { global, signatures, gemm, trace })
+        let mut slo = Vec::new();
+        if let Some(arr) = v.get("slo").and_then(Json::as_arr) {
+            for s in arr {
+                slo.push(SloStatusSnapshot {
+                    signature: s
+                        .get("signature")
+                        .and_then(Json::as_str)
+                        .unwrap_or_default()
+                        .to_string(),
+                    objective: s
+                        .get("objective")
+                        .and_then(Json::as_str)
+                        .unwrap_or_default()
+                        .to_string(),
+                    target: f(s.get("target")),
+                    fast_burn: f(s.get("fast_burn")),
+                    slow_burn: f(s.get("slow_burn")),
+                    firing: s.get("firing").and_then(Json::as_bool).unwrap_or(false),
+                });
+            }
+        }
+        Ok(Self { global, signatures, gemm, trace, slo })
     }
 
     /// Prometheus-style text exposition (`trp metrics`).
@@ -561,6 +691,46 @@ impl ObsSnapshot {
                 );
             }
         }
+        if self.signatures.iter().any(|s| s.stages.iter().any(|st| st.exemplars.iter().any(|&e| e != 0))) {
+            let _ = writeln!(out, "# TYPE trp_stage_exemplar_trace_id gauge");
+            for s in &self.signatures {
+                for st in &s.stages {
+                    for (b, &e) in st.exemplars.iter().enumerate() {
+                        if e != 0 {
+                            let _ = writeln!(
+                                out,
+                                "trp_stage_exemplar_trace_id{{sig=\"{}\",stage=\"{}\",bucket=\"{b}\"}} {}",
+                                s.signature,
+                                st.stage,
+                                e - 1
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        if !self.slo.is_empty() {
+            let _ = writeln!(out, "# TYPE trp_slo_burn_rate gauge");
+            for s in &self.slo {
+                for (window, burn) in [("fast", s.fast_burn), ("slow", s.slow_burn)] {
+                    let _ = writeln!(
+                        out,
+                        "trp_slo_burn_rate{{sig=\"{}\",objective=\"{}\",window=\"{window}\"}} {burn}",
+                        s.signature, s.objective
+                    );
+                }
+            }
+            let _ = writeln!(out, "# TYPE trp_slo_firing gauge");
+            for s in &self.slo {
+                let _ = writeln!(
+                    out,
+                    "trp_slo_firing{{sig=\"{}\",objective=\"{}\"}} {}",
+                    s.signature,
+                    s.objective,
+                    u64::from(s.firing)
+                );
+            }
+        }
         if !self.gemm.is_empty() {
             let _ = writeln!(out, "# TYPE trp_gemm_time_us_total counter");
             for gs in &self.gemm {
@@ -593,14 +763,23 @@ mod tests {
         sig.queries.fetch_add(2, Ordering::Relaxed);
         sig.wal_lag.store(3, Ordering::Relaxed);
         sig.record_stage(Stage::QueueWait, 120);
-        sig.record_stage(Stage::Project, 900);
+        sig.record_stage_traced(Stage::Project, 900, Some(77));
         sig.record_stage(Stage::Project, 1_800);
+        sig.record_e2e(2_500, Some(78));
         let global = crate::coordinator::Metrics::new().snapshot();
         ObsSnapshot {
             global,
             signatures: reg.snapshot(),
             gemm: vec![GemmShapeStat { m: 16, k: 64, n: 64, calls: 3, flops: 393_216, time_us: 42 }],
             trace: TraceStats { enabled: true, recorded: 10, dropped: 1, written: 9, rotations: 0 },
+            slo: vec![SloStatusSnapshot {
+                signature: "*".to_string(),
+                objective: "p99_latency_us".to_string(),
+                target: 5000.0,
+                fast_burn: 0.5,
+                slow_burn: 0.25,
+                firing: false,
+            }],
         }
     }
 
@@ -628,6 +807,33 @@ mod tests {
         assert_eq!(back.gemm, snap.gemm);
         assert_eq!(back.trace, snap.trace);
         assert_eq!(back.global, snap.global);
+        assert_eq!(back.slo, snap.slo);
+    }
+
+    #[test]
+    fn exemplars_land_in_the_matching_bucket() {
+        let reg = MetricsRegistry::new();
+        let sig = reg.get("x");
+        sig.record_stage_traced(Stage::Project, 900, Some(41));
+        sig.record_stage(Stage::Project, 900); // no context: exemplar kept
+        sig.record_e2e(10, None); // no context: e2e exemplar stays empty
+        sig.record_e2e(10, Some(42));
+        let snap = reg.snapshot();
+        let project = snap[0].stages.iter().find(|s| s.stage == "project_gemm").unwrap();
+        let b = crate::coordinator::bucket_index(900);
+        assert_eq!(project.exemplars[b], 41 + 1, "exemplar encodes trace_id + 1");
+        assert_eq!(project.buckets[b], 2);
+        // Every nonzero exemplar sits in a nonzero bucket.
+        for st in &snap[0].stages {
+            for (i, &e) in st.exemplars.iter().enumerate() {
+                if e != 0 {
+                    assert!(st.buckets[i] > 0, "exemplar without observations in {}", st.stage);
+                }
+            }
+        }
+        let e2e = snap[0].stages.iter().find(|s| s.stage == E2E_STAGE).unwrap();
+        assert_eq!(e2e.count, 2);
+        assert_eq!(e2e.exemplars[crate::coordinator::bucket_index(10)], 42 + 1);
     }
 
     #[test]
@@ -650,5 +856,15 @@ mod tests {
         assert!(text.contains("trp_trace_spans_dropped_total 1"));
         assert!(text.contains("trp_index_wal_lag{sig=\"tt-r5/3x3x3/k64\"} 3"));
         assert!(text.contains("trp_wal_appends_total"));
+        // Exemplars export the decoded trace id for nonzero buckets only.
+        let b = crate::coordinator::bucket_index(900);
+        assert!(text.contains(&format!(
+            "trp_stage_exemplar_trace_id{{sig=\"tt-r5/3x3x3/k64\",stage=\"project_gemm\",bucket=\"{b}\"}} 77"
+        )));
+        assert!(text.contains("stage=\"e2e\""));
+        assert!(text.contains(
+            "trp_slo_burn_rate{sig=\"*\",objective=\"p99_latency_us\",window=\"fast\"} 0.5"
+        ));
+        assert!(text.contains("trp_slo_firing{sig=\"*\",objective=\"p99_latency_us\"} 0"));
     }
 }

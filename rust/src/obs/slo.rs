@@ -1,0 +1,754 @@
+//! Declarative SLOs evaluated as multi-window burn rates.
+//!
+//! `trp serve --slo objectives.toml` loads a set of per-signature
+//! [`Objective`]s (p99 latency in µs, error rate as a fraction) and
+//! starts one [`SloEngine`] sampler thread. Every poll tick the engine
+//! snapshots the always-on [`MetricsRegistry`], derives a cumulative
+//! (bad, total) counter pair per objective, and computes the burn rate
+//! over a fast and a slow window:
+//!
+//! ```text
+//!   burn(window) = (Δbad / Δtotal over the window) / error_budget
+//! ```
+//!
+//! where the error budget is `0.01` for p99 objectives (1% of requests
+//! may exceed the target) and the configured rate for error-rate
+//! objectives. An alarm fires when *both* windows exceed the burn
+//! threshold — the fast window catches the regression quickly, the slow
+//! window keeps one noisy tick from paging — and clears when either
+//! window drops back below it. Transitions are appended as JSONL to the
+//! alarms file (fsynced per record, like the WAL) and the current
+//! status is exported in every [`super::ObsSnapshot`].
+//!
+//! The engine only *reads* metrics: responses stay bit-identical with
+//! SLOs configured or not. Config parsing is a hand-rolled TOML subset
+//! (`key = value` scalars and `[[objective]]` tables) so the binary
+//! stays dependency-free.
+
+use super::registry::{MetricsRegistry, SigSnapshot, SloStatusSnapshot, E2E_STAGE};
+use crate::coordinator::bucket_index;
+use crate::util::sync::lock_recover;
+use std::collections::VecDeque;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Error budget for p99 latency objectives: 1% of requests may exceed
+/// the target before the budget is consumed at burn rate 1.0.
+const LATENCY_BUDGET: f64 = 0.01;
+
+/// One service-level objective, bound to a map signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Objective {
+    /// Signature label the objective applies to; `*` matches every
+    /// signature (counters are summed across matches).
+    pub signature: String,
+    /// p99 end-to-end latency target in µs (an observation counts
+    /// against the budget when it lands in a histogram bucket strictly
+    /// above the target's bucket).
+    pub p99_latency_us: Option<u64>,
+    /// Error-rate target as a fraction of requests (also the budget).
+    pub error_rate: Option<f64>,
+    /// Fast burn window, seconds.
+    pub fast_window_s: f64,
+    /// Slow burn window, seconds.
+    pub slow_window_s: f64,
+    /// Burn threshold: fires when both windows are at or above it.
+    pub burn_threshold: f64,
+}
+
+impl Default for Objective {
+    fn default() -> Self {
+        Self {
+            signature: "*".to_string(),
+            p99_latency_us: None,
+            error_rate: None,
+            fast_window_s: 300.0,
+            slow_window_s: 3600.0,
+            burn_threshold: 14.0,
+        }
+    }
+}
+
+/// Parsed `--slo` configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloConfig {
+    /// Objectives, in file order.
+    pub objectives: Vec<Objective>,
+    /// Sampler poll interval in milliseconds.
+    pub poll_interval_ms: u64,
+    /// Where alarm transitions are appended as JSONL (`None` = no
+    /// alarm log, status export only).
+    pub alarms_path: Option<PathBuf>,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        Self { objectives: Vec::new(), poll_interval_ms: 1000, alarms_path: None }
+    }
+}
+
+/// One scalar value in the TOML subset.
+enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    fn parse(raw: &str, line_no: usize) -> Result<TomlValue, String> {
+        let raw = raw.trim();
+        if let Some(rest) = raw.strip_prefix('"') {
+            let Some(inner) = rest.strip_suffix('"') else {
+                return Err(format!("line {line_no}: unterminated string"));
+            };
+            return Ok(TomlValue::Str(inner.to_string()));
+        }
+        match raw {
+            "true" => return Ok(TomlValue::Bool(true)),
+            "false" => return Ok(TomlValue::Bool(false)),
+            _ => {}
+        }
+        raw.parse::<f64>()
+            .map(TomlValue::Num)
+            .map_err(|_| format!("line {line_no}: expected string, number or bool, got `{raw}`"))
+    }
+
+    fn as_num(&self, key: &str, line_no: usize) -> Result<f64, String> {
+        match self {
+            TomlValue::Num(n) => Ok(*n),
+            _ => Err(format!("line {line_no}: `{key}` must be a number")),
+        }
+    }
+
+    fn as_str(&self, key: &str, line_no: usize) -> Result<&str, String> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => Err(format!("line {line_no}: `{key}` must be a quoted string")),
+        }
+    }
+}
+
+/// Strip a `#` comment that starts outside any string literal.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+impl SloConfig {
+    /// Parse the TOML subset: top-level `key = value` pairs
+    /// (`poll_interval_ms`, `alarms_path`) and `[[objective]]` tables
+    /// with `signature`, `p99_latency_us`, `error_rate`,
+    /// `fast_window_s`, `slow_window_s`, `burn_threshold` keys.
+    pub fn parse_toml(text: &str) -> Result<SloConfig, String> {
+        let mut cfg = SloConfig::default();
+        let mut current: Option<Objective> = None;
+        for (idx, raw_line) in text.lines().enumerate() {
+            let line_no = idx + 1;
+            let line = strip_comment(raw_line).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if line == "[[objective]]" {
+                if let Some(obj) = current.take() {
+                    validate_objective(&obj)?;
+                    cfg.objectives.push(obj);
+                }
+                current = Some(Objective::default());
+                continue;
+            }
+            if line.starts_with('[') {
+                return Err(format!(
+                    "line {line_no}: unknown table `{line}` (only [[objective]] is supported)"
+                ));
+            }
+            let Some((key, raw_val)) = line.split_once('=') else {
+                return Err(format!("line {line_no}: expected `key = value`, got `{line}`"));
+            };
+            let key = key.trim();
+            let val = TomlValue::parse(raw_val, line_no)?;
+            match current.as_mut() {
+                Some(obj) => match key {
+                    "signature" => obj.signature = val.as_str(key, line_no)?.to_string(),
+                    "p99_latency_us" => {
+                        let n = val.as_num(key, line_no)?;
+                        if n < 1.0 || n.fract() != 0.0 {
+                            return Err(format!(
+                                "line {line_no}: `p99_latency_us` must be a positive integer"
+                            ));
+                        }
+                        obj.p99_latency_us = Some(n as u64);
+                    }
+                    "error_rate" => {
+                        let n = val.as_num(key, line_no)?;
+                        if !(n > 0.0 && n <= 1.0) {
+                            return Err(format!(
+                                "line {line_no}: `error_rate` must be in (0, 1]"
+                            ));
+                        }
+                        obj.error_rate = Some(n);
+                    }
+                    "fast_window_s" => obj.fast_window_s = positive(&val, key, line_no)?,
+                    "slow_window_s" => obj.slow_window_s = positive(&val, key, line_no)?,
+                    "burn_threshold" => obj.burn_threshold = positive(&val, key, line_no)?,
+                    _ => return Err(format!("line {line_no}: unknown objective key `{key}`")),
+                },
+                None => match key {
+                    "poll_interval_ms" => {
+                        let n = val.as_num(key, line_no)?;
+                        if n < 1.0 || n.fract() != 0.0 {
+                            return Err(format!(
+                                "line {line_no}: `poll_interval_ms` must be a positive integer"
+                            ));
+                        }
+                        cfg.poll_interval_ms = n as u64;
+                    }
+                    "alarms_path" => {
+                        cfg.alarms_path = Some(PathBuf::from(val.as_str(key, line_no)?));
+                    }
+                    _ => return Err(format!("line {line_no}: unknown top-level key `{key}`")),
+                },
+            }
+        }
+        if let Some(obj) = current.take() {
+            validate_objective(&obj)?;
+            cfg.objectives.push(obj);
+        }
+        if cfg.objectives.is_empty() {
+            return Err("no [[objective]] tables found".to_string());
+        }
+        Ok(cfg)
+    }
+
+    /// Read and parse an SLO file.
+    pub fn load(path: &Path) -> Result<SloConfig, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("read {}: {e}", path.display()))?;
+        Self::parse_toml(&text).map_err(|e| format!("{}: {e}", path.display()))
+    }
+}
+
+fn positive(val: &TomlValue, key: &str, line_no: usize) -> Result<f64, String> {
+    let n = val.as_num(key, line_no)?;
+    if n > 0.0 {
+        Ok(n)
+    } else {
+        Err(format!("line {line_no}: `{key}` must be positive"))
+    }
+}
+
+fn validate_objective(obj: &Objective) -> Result<(), String> {
+    if obj.p99_latency_us.is_none() && obj.error_rate.is_none() {
+        return Err(format!(
+            "objective for `{}` sets neither p99_latency_us nor error_rate",
+            obj.signature
+        ));
+    }
+    if obj.fast_window_s > obj.slow_window_s {
+        return Err(format!(
+            "objective for `{}`: fast_window_s must not exceed slow_window_s",
+            obj.signature
+        ));
+    }
+    Ok(())
+}
+
+/// What an objective counts: requests over the latency target, or
+/// error replies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum CheckKind {
+    /// Bad = e2e observations in buckets strictly above the target's.
+    P99Latency(u64),
+    /// Bad = error replies; the rate is also the budget.
+    ErrorRate(f64),
+}
+
+impl CheckKind {
+    fn name(self) -> &'static str {
+        match self {
+            CheckKind::P99Latency(_) => "p99_latency_us",
+            CheckKind::ErrorRate(_) => "error_rate",
+        }
+    }
+
+    fn target(self) -> f64 {
+        match self {
+            CheckKind::P99Latency(us) => us as f64,
+            CheckKind::ErrorRate(r) => r,
+        }
+    }
+
+    fn budget(self) -> f64 {
+        match self {
+            CheckKind::P99Latency(_) => LATENCY_BUDGET,
+            CheckKind::ErrorRate(r) => r,
+        }
+    }
+}
+
+/// One evaluated check: an objective expanded per kind, with its sample
+/// history and alarm state. Owned by the sampler thread.
+struct CheckState {
+    signature: String,
+    kind: CheckKind,
+    fast_window_s: f64,
+    slow_window_s: f64,
+    burn_threshold: f64,
+    /// `(t_seconds, cumulative bad, cumulative total)` samples, oldest
+    /// first, pruned to the slow window (plus one boundary sample).
+    samples: VecDeque<(f64, u64, u64)>,
+    firing: bool,
+}
+
+impl CheckState {
+    /// Cumulative (bad, total) for this check across matching
+    /// signatures of one registry snapshot.
+    fn accumulate(&self, sigs: &[SigSnapshot]) -> (u64, u64) {
+        let mut bad = 0u64;
+        let mut total = 0u64;
+        for sig in sigs {
+            if self.signature != "*" && self.signature != sig.signature {
+                continue;
+            }
+            match self.kind {
+                CheckKind::P99Latency(target_us) => {
+                    if let Some(e2e) = sig.stages.iter().find(|s| s.stage == E2E_STAGE) {
+                        let cut = bucket_index(target_us);
+                        for (b, &n) in e2e.buckets.iter().enumerate() {
+                            if b > cut {
+                                bad += n;
+                            }
+                        }
+                        total += e2e.count;
+                    }
+                }
+                CheckKind::ErrorRate(_) => {
+                    bad += sig.errors;
+                    total += sig.requests;
+                }
+            }
+        }
+        (bad, total)
+    }
+
+    /// Burn rate over one trailing window ending at the newest sample.
+    fn window_burn(&self, now_s: f64, window_s: f64) -> f64 {
+        let Some(&(_, bad1, total1)) = self.samples.back() else {
+            return 0.0;
+        };
+        // Reference point: the newest sample at or before the window
+        // start; before one window of history exists, the oldest.
+        let start = now_s - window_s;
+        let mut reference = None;
+        for &s in self.samples.iter() {
+            if s.0 <= start {
+                reference = Some(s);
+            } else {
+                break;
+            }
+        }
+        let (_, bad0, total0) =
+            reference.unwrap_or_else(|| *self.samples.front().unwrap_or(&(0.0, 0, 0)));
+        let d_total = total1.saturating_sub(total0);
+        if d_total == 0 {
+            return 0.0; // No traffic in the window consumes no budget.
+        }
+        let d_bad = bad1.saturating_sub(bad0);
+        (d_bad as f64 / d_total as f64) / self.kind.budget()
+    }
+
+    /// Record one sample, prune history, and return the new status +
+    /// whether the alarm state changed.
+    fn tick(&mut self, now_s: f64, sigs: &[SigSnapshot]) -> (SloStatusSnapshot, bool) {
+        let (bad, total) = self.accumulate(sigs);
+        self.samples.push_back((now_s, bad, total));
+        // Keep one sample at or beyond the slow-window boundary so the
+        // reference lookup always has an anchor.
+        while self.samples.len() > 2
+            && self.samples[1].0 <= now_s - self.slow_window_s
+        {
+            self.samples.pop_front();
+        }
+        let fast_burn = self.window_burn(now_s, self.fast_window_s);
+        let slow_burn = self.window_burn(now_s, self.slow_window_s);
+        let firing = fast_burn >= self.burn_threshold && slow_burn >= self.burn_threshold;
+        let changed = firing != self.firing;
+        self.firing = firing;
+        let status = SloStatusSnapshot {
+            signature: self.signature.clone(),
+            objective: self.kind.name().to_string(),
+            target: self.kind.target(),
+            fast_burn,
+            slow_burn,
+            firing,
+        };
+        (status, changed)
+    }
+}
+
+/// Background evaluator: one thread sampling the metrics registry,
+/// exporting burn rates, and appending alarm transitions.
+pub struct SloEngine {
+    registry: Arc<MetricsRegistry>,
+    poll_interval_ms: u64,
+    status: Mutex<Vec<SloStatusSnapshot>>,
+    stop: AtomicBool,
+    /// Wakes the sampler early at shutdown (poll intervals can be long).
+    gate: (Mutex<()>, Condvar),
+    alarms: Option<Mutex<File>>,
+    worker: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl SloEngine {
+    /// Start the sampler thread. Fails only when the alarms file cannot
+    /// be opened — a bad objective list is rejected at parse time.
+    pub fn start(cfg: SloConfig, registry: Arc<MetricsRegistry>) -> std::io::Result<Arc<Self>> {
+        let alarms = match &cfg.alarms_path {
+            Some(path) => {
+                if let Some(parent) = path.parent() {
+                    if !parent.as_os_str().is_empty() {
+                        std::fs::create_dir_all(parent)?;
+                    }
+                }
+                Some(Mutex::new(
+                    OpenOptions::new().create(true).append(true).open(path)?,
+                ))
+            }
+            None => None,
+        };
+        let mut checks = Vec::new();
+        for obj in &cfg.objectives {
+            let kinds = obj
+                .p99_latency_us
+                .map(CheckKind::P99Latency)
+                .into_iter()
+                .chain(obj.error_rate.map(CheckKind::ErrorRate));
+            for kind in kinds {
+                checks.push(CheckState {
+                    signature: obj.signature.clone(),
+                    kind,
+                    fast_window_s: obj.fast_window_s,
+                    slow_window_s: obj.slow_window_s,
+                    burn_threshold: obj.burn_threshold,
+                    samples: VecDeque::new(),
+                    firing: false,
+                });
+            }
+        }
+        let engine = Arc::new(SloEngine {
+            registry,
+            poll_interval_ms: cfg.poll_interval_ms.max(1),
+            status: Mutex::new(Vec::new()),
+            stop: AtomicBool::new(false),
+            gate: (Mutex::new(()), Condvar::new()),
+            alarms,
+            worker: Mutex::new(None),
+        });
+        let runner = Arc::clone(&engine);
+        let handle = std::thread::Builder::new()
+            .name("trp-slo".to_string())
+            .spawn(move || runner.run(checks))?;
+        *lock_recover(&engine.worker) = Some(handle);
+        Ok(engine)
+    }
+
+    /// Current burn rates and alarm states, one entry per
+    /// (objective, kind) pair, in config order.
+    pub fn status(&self) -> Vec<SloStatusSnapshot> {
+        lock_recover(&self.status).clone()
+    }
+
+    /// Stop the sampler and join it. Idempotent.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Release);
+        self.gate.1.notify_all();
+        let handle = lock_recover(&self.worker).take();
+        if let Some(h) = handle {
+            let _ = h.join();
+        }
+    }
+
+    fn run(&self, mut checks: Vec<CheckState>) {
+        let t0 = Instant::now();
+        loop {
+            if self.stop.load(Ordering::Acquire) {
+                return;
+            }
+            let now_s = t0.elapsed().as_secs_f64();
+            let sigs = self.registry.snapshot();
+            let mut statuses = Vec::with_capacity(checks.len());
+            for check in checks.iter_mut() {
+                let (status, changed) = check.tick(now_s, &sigs);
+                if changed {
+                    self.append_alarm(&status);
+                }
+                statuses.push(status);
+            }
+            *lock_recover(&self.status) = statuses;
+            let guard = lock_recover(&self.gate.0);
+            // Condvar timeout is the poll pacing; notify_all from
+            // shutdown cuts long intervals short.
+            let _unused = self
+                .gate
+                .1
+                .wait_timeout(guard, std::time::Duration::from_millis(self.poll_interval_ms));
+        }
+    }
+
+    /// Append one alarm transition as JSONL, fsynced like a WAL record:
+    /// an alarm line that only exists in the page cache is an alarm a
+    /// crash un-rings.
+    fn append_alarm(&self, status: &SloStatusSnapshot) {
+        let Some(alarms) = &self.alarms else {
+            return;
+        };
+        let unix_us = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0);
+        let state = if status.firing { "firing" } else { "clear" };
+        let line = format!(
+            "{{\"unix_us\":{},\"signature\":\"{}\",\"objective\":\"{}\",\"target\":{},\
+             \"fast_burn\":{},\"slow_burn\":{},\"state\":\"{}\"}}",
+            unix_us,
+            escape(&status.signature),
+            status.objective,
+            status.target,
+            status.fast_burn,
+            status.slow_burn,
+            state,
+        );
+        let mut f = lock_recover(alarms);
+        if let Err(e) = writeln!(f, "{line}").and_then(|()| f.sync_data()) {
+            eprintln!("[slo] alarm append failed: {e}");
+        }
+    }
+}
+
+impl Drop for SloEngine {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::MetricsRegistry;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "trp_slo_{tag}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn toml_subset_parses_objectives_and_top_level_keys() {
+        let text = r#"
+            # service objectives
+            poll_interval_ms = 250
+            alarms_path = "alarms/slo.jsonl"
+
+            [[objective]]
+            signature = "*"            # every signature
+            p99_latency_us = 5000
+            error_rate = 0.01
+
+            [[objective]]
+            signature = "dense/d[8,8]/k16"
+            p99_latency_us = 2000
+            fast_window_s = 60
+            slow_window_s = 600
+            burn_threshold = 6
+        "#;
+        let cfg = SloConfig::parse_toml(text).unwrap();
+        assert_eq!(cfg.poll_interval_ms, 250);
+        assert_eq!(cfg.alarms_path.as_deref(), Some(Path::new("alarms/slo.jsonl")));
+        assert_eq!(cfg.objectives.len(), 2);
+        let o0 = &cfg.objectives[0];
+        assert_eq!(o0.signature, "*");
+        assert_eq!(o0.p99_latency_us, Some(5000));
+        assert_eq!(o0.error_rate, Some(0.01));
+        assert_eq!(o0.fast_window_s, 300.0);
+        assert_eq!(o0.slow_window_s, 3600.0);
+        assert_eq!(o0.burn_threshold, 14.0);
+        let o1 = &cfg.objectives[1];
+        assert_eq!(o1.signature, "dense/d[8,8]/k16");
+        assert_eq!(o1.fast_window_s, 60.0);
+        assert_eq!(o1.slow_window_s, 600.0);
+        assert_eq!(o1.burn_threshold, 6.0);
+    }
+
+    #[test]
+    fn toml_rejects_bad_configs() {
+        // An objective with no target is meaningless.
+        let err = SloConfig::parse_toml("[[objective]]\nsignature = \"*\"\n").unwrap_err();
+        assert!(err.contains("neither"), "{err}");
+        // No objectives at all.
+        let err = SloConfig::parse_toml("poll_interval_ms = 100\n").unwrap_err();
+        assert!(err.contains("no [[objective]]"), "{err}");
+        // Unknown keys fail loudly instead of being ignored.
+        let err =
+            SloConfig::parse_toml("[[objective]]\np99_latency_us = 10\ntypo_key = 3\n")
+                .unwrap_err();
+        assert!(err.contains("typo_key"), "{err}");
+        // Out-of-range error rate.
+        let err =
+            SloConfig::parse_toml("[[objective]]\nerror_rate = 1.5\n").unwrap_err();
+        assert!(err.contains("error_rate"), "{err}");
+        // Inverted windows.
+        let err = SloConfig::parse_toml(
+            "[[objective]]\np99_latency_us = 10\nfast_window_s = 100\nslow_window_s = 10\n",
+        )
+        .unwrap_err();
+        assert!(err.contains("fast_window_s"), "{err}");
+    }
+
+    #[test]
+    fn burn_rate_is_windowed_delta_over_budget() {
+        let mut check = CheckState {
+            signature: "*".to_string(),
+            kind: CheckKind::P99Latency(1000),
+            fast_window_s: 10.0,
+            slow_window_s: 100.0,
+            burn_threshold: 14.0,
+            samples: VecDeque::new(),
+            firing: false,
+        };
+        // 100 requests, 2 bad at t=0; 200 requests, 52 bad at t=10:
+        // over the fast window the delta is 50/100 = 0.5 bad fraction,
+        // burn = 0.5 / 0.01 = 50.
+        check.samples.push_back((0.0, 2, 100));
+        check.samples.push_back((10.0, 52, 200));
+        let burn = check.window_burn(10.0, 10.0);
+        assert!((burn - 50.0).abs() < 1e-9, "burn={burn}");
+        // Slow window reaches back to the oldest sample → same here.
+        let slow = check.window_burn(10.0, 100.0);
+        assert!((slow - 50.0).abs() < 1e-9, "slow={slow}");
+        // No traffic in the window → zero burn (lets alarms clear).
+        check.samples.push_back((20.0, 52, 200));
+        let idle = check.window_burn(20.0, 10.0);
+        assert_eq!(idle, 0.0);
+    }
+
+    #[test]
+    fn alarm_fires_under_injected_latency_and_clears_when_traffic_stops() {
+        let dir = temp_dir("fire");
+        let alarms_path = dir.join("alarms.jsonl");
+        // A 1µs p99 target puts every real observation (≥ 2µs) strictly
+        // above the target bucket, so the burn rate saturates at
+        // 1/0.01 = 100 ≫ 14 while traffic flows.
+        let cfg = SloConfig {
+            objectives: vec![Objective {
+                signature: "*".to_string(),
+                p99_latency_us: Some(1),
+                fast_window_s: 0.05,
+                slow_window_s: 0.1,
+                ..Objective::default()
+            }],
+            poll_interval_ms: 10,
+            alarms_path: Some(alarms_path.clone()),
+        };
+        let registry = Arc::new(MetricsRegistry::new());
+        let engine = SloEngine::start(cfg, Arc::clone(&registry)).unwrap();
+        let sig = registry.get("dense/d[4]/k8");
+
+        // Inject slow traffic until the alarm fires.
+        let deadline = Instant::now() + std::time::Duration::from_secs(10);
+        let mut fired = false;
+        while Instant::now() < deadline {
+            sig.record_e2e(5_000, Some(42));
+            if engine.status().iter().any(|s| s.firing) {
+                fired = true;
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        assert!(fired, "SLO alarm must fire under sustained over-target latency");
+
+        // Stop traffic: burn falls to zero once the windows drain and
+        // the alarm clears.
+        let deadline = Instant::now() + std::time::Duration::from_secs(10);
+        let mut cleared = false;
+        while Instant::now() < deadline {
+            if engine.status().iter().all(|s| !s.firing) {
+                cleared = true;
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(cleared, "SLO alarm must clear when traffic stops");
+        engine.shutdown();
+
+        // Both transitions landed in the alarm log, in order.
+        let log = std::fs::read_to_string(&alarms_path).unwrap();
+        let states: Vec<&str> = log
+            .lines()
+            .map(|l| {
+                assert!(l.contains("\"signature\":\"*\""), "{l}");
+                assert!(l.contains("\"objective\":\"p99_latency_us\""), "{l}");
+                if l.contains("\"state\":\"firing\"") {
+                    "firing"
+                } else {
+                    assert!(l.contains("\"state\":\"clear\""), "{l}");
+                    "clear"
+                }
+            })
+            .collect();
+        assert!(!states.is_empty());
+        assert_eq!(states[0], "firing", "first transition is the alarm firing");
+        assert_eq!(*states.last().unwrap(), "clear", "last transition is the clear");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn status_reports_every_check_without_alarms_file() {
+        let cfg = SloConfig {
+            objectives: vec![Objective {
+                signature: "*".to_string(),
+                p99_latency_us: Some(1_000_000),
+                error_rate: Some(0.5),
+                fast_window_s: 0.05,
+                slow_window_s: 0.1,
+                ..Objective::default()
+            }],
+            poll_interval_ms: 5,
+            alarms_path: None,
+        };
+        let registry = Arc::new(MetricsRegistry::new());
+        let engine = SloEngine::start(cfg, Arc::clone(&registry)).unwrap();
+        let deadline = Instant::now() + std::time::Duration::from_secs(5);
+        while engine.status().len() < 2 && Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let status = engine.status();
+        assert_eq!(status.len(), 2, "one check per objective kind");
+        assert_eq!(status[0].objective, "p99_latency_us");
+        assert_eq!(status[0].target, 1_000_000.0);
+        assert_eq!(status[1].objective, "error_rate");
+        assert_eq!(status[1].target, 0.5);
+        assert!(!status[0].firing && !status[1].firing);
+        engine.shutdown();
+        // Shutdown is idempotent (Drop runs it again).
+        engine.shutdown();
+    }
+}

@@ -45,6 +45,12 @@ pub struct Span {
     pub flush: Option<u64>,
     /// Index shard, for per-shard index phases.
     pub shard: Option<u32>,
+    /// Trace-context id: client-supplied or dispatcher-assigned. For
+    /// flush-level spans this is the first batched request's context.
+    pub trace: Option<u64>,
+    /// Interned signature id (see [`TraceRecorder::intern`]), resolved
+    /// through the `{"meta":"sig",…}` records in the same stream.
+    pub sig: Option<u32>,
     /// Start tick (µs on the coordinator clock — µs since server start).
     pub start_us: u64,
     /// Duration in µs.
@@ -56,7 +62,7 @@ impl Span {
     /// field is an integer or a static identifier, so no escaping is
     /// needed and the drainer stays allocation-light.
     pub fn to_jsonl(&self) -> String {
-        let mut s = String::with_capacity(96);
+        let mut s = String::with_capacity(128);
         s.push_str("{\"stage\":\"");
         s.push_str(self.stage);
         s.push('"');
@@ -71,6 +77,16 @@ impl Span {
         }
         s.push_str(",\"shard\":");
         match self.shard {
+            Some(x) => s.push_str(&x.to_string()),
+            None => s.push_str("null"),
+        }
+        s.push_str(",\"trace\":");
+        match self.trace {
+            Some(x) => s.push_str(&x.to_string()),
+            None => s.push_str("null"),
+        }
+        s.push_str(",\"sig\":");
+        match self.sig {
             Some(x) => s.push_str(&x.to_string()),
             None => s.push_str("null"),
         }
@@ -257,6 +273,10 @@ pub struct TraceRecorder {
     rotations: AtomicU64,
     stop: AtomicBool,
     drainer: Mutex<Option<JoinHandle<()>>>,
+    /// Interned signature labels, indexed by the ids spans carry in
+    /// their `sig` field. The drainer publishes them as
+    /// `{"meta":"sig",…}` records so offline analysis can resolve them.
+    interned: Mutex<Vec<String>>,
 }
 
 impl std::fmt::Debug for TraceRecorder {
@@ -279,6 +299,7 @@ impl TraceRecorder {
             rotations: AtomicU64::new(0),
             stop: AtomicBool::new(false),
             drainer: Mutex::new(None),
+            interned: Mutex::new(Vec::new()),
         });
         let rec2 = Arc::clone(&rec);
         let handle = std::thread::Builder::new()
@@ -297,6 +318,19 @@ impl TraceRecorder {
     pub fn record(&self, span: Span) {
         self.recorded.fetch_add(1, Ordering::Relaxed);
         self.ring.push(span);
+    }
+
+    /// Intern a signature label, returning the id spans should carry in
+    /// their `sig` field. Called once per flush (not per span), so a
+    /// short mutex-guarded scan is fine; the signature population is a
+    /// handful of entries.
+    pub fn intern(&self, label: &str) -> u32 {
+        let mut st = self.interned.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(pos) = st.iter().position(|l| l == label) {
+            return pos as u32;
+        }
+        st.push(label.to_string());
+        (st.len() - 1) as u32
     }
 
     /// Current counters.
@@ -327,7 +361,16 @@ impl TraceRecorder {
             Err(_) => return,
         };
         let mut bytes = out.1;
+        // Anchor the span clock to wall time at the top of every file so
+        // traces from different processes align on one timeline.
+        bytes += write_meta(&mut out.0, &self.anchor_meta());
+        let mut emitted_sigs = 0usize;
         loop {
+            // Publish newly interned signature labels before sweeping, so
+            // a sig record normally precedes the spans that reference it.
+            for line in self.sig_meta_lines(&mut emitted_sigs) {
+                bytes += write_meta(&mut out.0, &line);
+            }
             let mut drained = false;
             while let Some(span) = self.ring.pop() {
                 drained = true;
@@ -348,21 +391,87 @@ impl TraceRecorder {
                         }
                         Err(_) => return,
                     }
+                    // Every generation must stand alone: re-anchor the
+                    // clock and re-publish the full signature table.
+                    bytes += write_meta(&mut out.0, &self.anchor_meta());
+                    emitted_sigs = 0;
+                    for line in self.sig_meta_lines(&mut emitted_sigs) {
+                        bytes += write_meta(&mut out.0, &line);
+                    }
                 }
             }
             let _ = out.0.flush();
-            if self.stop.load(Ordering::SeqCst) {
-                // One final sweep: producers stopped before `stop` was
-                // set, so an empty ring here means we are done.
-                if self.ring.pop().is_none() {
-                    return;
-                }
-                continue;
+            if self.stop.load(Ordering::SeqCst) && !drained {
+                // Producers stopped before `stop` was set, so a sweep
+                // that found nothing means the ring is dry: seal the
+                // stream with the final counters and exit.
+                write_meta(&mut out.0, &self.stats_meta());
+                let _ = out.0.flush();
+                return;
             }
             if !drained {
                 std::thread::sleep(Duration::from_millis(5));
             }
         }
+    }
+
+    /// `{"meta":"anchor",…}` line mapping the span clock onto wall time:
+    /// `wall_us(span) = unix_us + (span.start_us - epoch_us)`.
+    fn anchor_meta(&self) -> String {
+        let unix_us = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0);
+        format!(
+            "{{\"meta\":\"anchor\",\"unix_us\":{unix_us},\"epoch_us\":{},\"pid\":{}}}",
+            self.now_us(),
+            std::process::id()
+        )
+    }
+
+    /// `{"meta":"stats",…}` line with the final counters — lets offline
+    /// analysis prove zero ring drops without a live server.
+    fn stats_meta(&self) -> String {
+        let s = self.stats();
+        format!(
+            "{{\"meta\":\"stats\",\"recorded\":{},\"dropped\":{},\"written\":{},\"rotations\":{}}}",
+            s.recorded, s.dropped, s.written, s.rotations
+        )
+    }
+
+    /// `{"meta":"sig",…}` lines for interned labels not yet published to
+    /// the current file; advances `next` past them.
+    fn sig_meta_lines(&self, next: &mut usize) -> Vec<String> {
+        let fresh: Vec<String> = {
+            let st = self.interned.lock().unwrap_or_else(|e| e.into_inner());
+            if *next >= st.len() {
+                return Vec::new();
+            }
+            st[*next..].to_vec()
+        };
+        let lines = fresh
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let esc = l.replace('\\', "\\\\").replace('"', "\\\"");
+                format!("{{\"meta\":\"sig\",\"id\":{},\"label\":\"{esc}\"}}", *next + i)
+            })
+            .collect();
+        *next += fresh.len();
+        lines
+    }
+}
+
+/// Write one meta line (newline appended); returns the bytes written so
+/// rotation accounting includes meta records, while `written` — which
+/// counts *spans* — does not.
+fn write_meta(w: &mut BufWriter<File>, line: &str) -> u64 {
+    let mut line = line.to_string();
+    line.push('\n');
+    if w.write_all(line.as_bytes()).is_ok() {
+        line.len() as u64
+    } else {
+        0
     }
 }
 
@@ -445,6 +554,8 @@ mod tests {
             req: None,
             flush: Some(7),
             shard: Some(2),
+            trace: Some(9001),
+            sig: Some(1),
             start_us: 123,
             dur_us: 45,
         };
@@ -454,7 +565,14 @@ mod tests {
         assert!(matches!(v.get("req"), Some(crate::util::json::Json::Null)));
         assert_eq!(v.get("flush").and_then(|s| s.as_usize()), Some(7));
         assert_eq!(v.get("shard").and_then(|s| s.as_usize()), Some(2));
+        assert_eq!(v.get("trace").and_then(|s| s.as_usize()), Some(9001));
+        assert_eq!(v.get("sig").and_then(|s| s.as_usize()), Some(1));
         assert_eq!(v.get("dur_us").and_then(|s| s.as_usize()), Some(45));
+        // Context-free spans serialize trace/sig as null.
+        let bare = Span { stage: "recv", ..Span::default() }.to_jsonl();
+        let v = crate::util::json::Json::parse(&bare).expect("valid JSON");
+        assert!(matches!(v.get("trace"), Some(crate::util::json::Json::Null)));
+        assert!(matches!(v.get("sig"), Some(crate::util::json::Json::Null)));
     }
 
     #[test]
@@ -476,20 +594,64 @@ mod tests {
         rec.shutdown();
         let stats = rec.stats();
         assert_eq!(stats.recorded, 64);
-        assert_eq!(stats.written, 64);
+        assert_eq!(stats.written, 64, "meta records must not count as written spans");
         assert!(stats.rotations >= 1, "256-byte cap must rotate");
-        // Every surviving line parses.
+        // Every surviving line parses, and every generation opens with a
+        // wall-clock anchor so it can be analyzed in isolation.
         let mut lines = 0;
         for name in ["trace.jsonl", "trace.jsonl.1", "trace.jsonl.2"] {
             let p = dir.join(name);
             if let Ok(text) = fs::read_to_string(&p) {
-                for line in text.lines() {
-                    crate::util::json::Json::parse(line).expect("line parses");
+                for (i, line) in text.lines().enumerate() {
+                    let v = crate::util::json::Json::parse(line).expect("line parses");
+                    if i == 0 {
+                        assert_eq!(
+                            v.get("meta").and_then(|m| m.as_str()),
+                            Some("anchor"),
+                            "{name} must open with an anchor record"
+                        );
+                        assert!(v.get("unix_us").and_then(|u| u.as_usize()).is_some());
+                        assert!(v.get("epoch_us").and_then(|u| u.as_usize()).is_some());
+                    }
                     lines += 1;
                 }
             }
         }
         assert!(lines > 0);
+        // The live file is sealed with a stats record proving zero drops.
+        let text = fs::read_to_string(dir.join("trace.jsonl")).unwrap();
+        let last = text.lines().last().expect("nonempty live file");
+        let v = crate::util::json::Json::parse(last).unwrap();
+        assert_eq!(v.get("meta").and_then(|m| m.as_str()), Some("stats"));
+        assert_eq!(v.get("dropped").and_then(|d| d.as_usize()), Some(0));
+        assert_eq!(v.get("written").and_then(|d| d.as_usize()), Some(64));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn interned_signatures_are_stable_and_published() {
+        let dir = std::env::temp_dir().join(format!("trp_trace_sig_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        let rec = TraceRecorder::start(TraceConfig::new(&dir), Instant::now()).unwrap();
+        let a = rec.intern("tt-r5/3x3x3x3/k12");
+        let b = rec.intern("dense/3x3x3x3/k12");
+        assert_eq!(rec.intern("tt-r5/3x3x3x3/k12"), a, "re-interning must dedupe");
+        assert_ne!(a, b);
+        rec.record(Span { stage: "project", sig: Some(a), ..Span::default() });
+        rec.shutdown();
+        let text = fs::read_to_string(dir.join("trace.jsonl")).unwrap();
+        let mut labels = std::collections::BTreeMap::new();
+        for line in text.lines() {
+            let v = crate::util::json::Json::parse(line).unwrap();
+            if v.get("meta").and_then(|m| m.as_str()) == Some("sig") {
+                labels.insert(
+                    v.get("id").and_then(|i| i.as_usize()).unwrap(),
+                    v.get("label").and_then(|l| l.as_str()).unwrap().to_string(),
+                );
+            }
+        }
+        assert_eq!(labels.get(&(a as usize)).map(String::as_str), Some("tt-r5/3x3x3x3/k12"));
+        assert_eq!(labels.get(&(b as usize)).map(String::as_str), Some("dense/3x3x3x3/k12"));
         let _ = fs::remove_dir_all(&dir);
     }
 }

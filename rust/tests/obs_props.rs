@@ -12,14 +12,23 @@
 //!    consistent (bucket mass equals the count, p50 ≤ p99), and error
 //!    replies record end-to-end latency too;
 //! 5. coverage: a traced serve session writes parseable span JSONL in
-//!    which every required pipeline stage appears.
+//!    which every required pipeline stage appears, meta records (anchor,
+//!    signature interning, stats seal) frame the stream, and the seal
+//!    proves zero ring drops;
+//! 6. context: a client-supplied trace id is echoed in the response and
+//!    threaded into spans; dispatcher-assigned ids never reach the wire;
+//! 7. exemplars: context-carrying traffic stamps per-bucket histogram
+//!    exemplars that always sit in populated buckets;
+//! 8. objectives: a `--slo` objective fires its burn-rate alarm under
+//!    injected over-target latency and clears when traffic stops, with
+//!    both transitions appended to `alarms.jsonl`.
 
 use std::sync::Arc;
 use tensorized_rp::coordinator::{
     Coordinator, CoordinatorConfig, NetClient, NetServer, Payload, ProjectRequest, RequestOp,
 };
 use tensorized_rp::index::{BackendKind, LshConfig};
-use tensorized_rp::obs::{TraceConfig, OPTIONAL_STAGES, REQUIRED_STAGES};
+use tensorized_rp::obs::{Objective, SloConfig, TraceConfig, OPTIONAL_STAGES, REQUIRED_STAGES};
 use tensorized_rp::rng::Rng;
 use tensorized_rp::tensor::{AnyTensor, DenseTensor, Format, TtTensor};
 use tensorized_rp::util::json::Json;
@@ -33,17 +42,25 @@ fn temp_dir(tag: &str) -> std::path::PathBuf {
 }
 
 /// One response reduced to exactly-comparable bits: id, embedding bit
-/// patterns, neighbor (id, dist-bits) pairs, delete ack.
-type ExactResponse = (u64, Vec<u64>, Option<Vec<(u64, u64)>>, Option<bool>);
+/// patterns, neighbor (id, dist-bits) pairs, delete ack, trace echo.
+type ExactResponse = (u64, Vec<u64>, Option<Vec<(u64, u64)>>, Option<bool>, Option<u64>);
+
+/// Deterministic per-request trace-context id for `ctx` workloads.
+fn ctx_id(req_id: u64) -> u64 {
+    req_id ^ 0xA5A5
+}
 
 /// Pipelined insert → query → delete → query workload against a fresh
 /// coordinator; the same seeds produce the same inputs and maps on every
 /// call, so two runs may differ only through the serving pipeline itself.
+/// With `ctx`, every request carries a client-supplied trace-context id
+/// derived from its request id — still deterministic across runs.
 fn run_workload(
     backend: BackendKind,
     fmt: &str,
     shards: usize,
     trace: Option<TraceConfig>,
+    ctx: bool,
 ) -> Vec<ExactResponse> {
     let coord = Coordinator::start(
         CoordinatorConfig {
@@ -67,6 +84,14 @@ fn run_workload(
         }
     };
     let mut out: Vec<ExactResponse> = Vec::new();
+    let with_ctx = |req: ProjectRequest| {
+        let t = ctx_id(req.id);
+        if ctx {
+            req.with_trace(t)
+        } else {
+            req
+        }
+    };
     let drain = |rxs: Vec<std::sync::mpsc::Receiver<tensorized_rp::coordinator::Reply>>,
                      out: &mut Vec<ExactResponse>| {
         for rx in rxs {
@@ -78,26 +103,29 @@ fn run_workload(
                     ns.iter().map(|n| (n.id, n.dist.to_bits())).collect()
                 }),
                 resp.removed,
+                resp.trace,
             ));
         }
     };
     let rxs: Vec<_> = (0..8u64)
-        .map(|i| coord.submit(ProjectRequest::insert(i, input(&mut rng))))
+        .map(|i| coord.submit(with_ctx(ProjectRequest::insert(i, input(&mut rng)))))
         .collect();
     drain(rxs, &mut out);
     let rxs: Vec<_> = (0..4u64)
-        .map(|i| coord.submit(ProjectRequest::query(100 + i, input(&mut rng), 3)))
+        .map(|i| coord.submit(with_ctx(ProjectRequest::query(100 + i, input(&mut rng), 3))))
         .collect();
     drain(rxs, &mut out);
     let rxs: Vec<_> = [2u64, 5]
         .iter()
-        .map(|&t| coord.submit(ProjectRequest::delete(200 + t, t, Format::Tt, DIMS.to_vec())))
+        .map(|&t| {
+            coord.submit(with_ctx(ProjectRequest::delete(200 + t, t, Format::Tt, DIMS.to_vec())))
+        })
         .collect();
     // Deletes route on the TT signature; for the dense sweep they miss
     // (removed = false) — still part of the compared stream.
     drain(rxs, &mut out);
     let rxs: Vec<_> = (0..2u64)
-        .map(|i| coord.submit(ProjectRequest::query(300 + i, input(&mut rng), 3)))
+        .map(|i| coord.submit(with_ctx(ProjectRequest::query(300 + i, input(&mut rng), 3))))
         .collect();
     drain(rxs, &mut out);
     coord.shutdown();
@@ -109,15 +137,29 @@ fn tracing_is_bit_identical_across_backends_formats_and_shards() {
     for backend in [BackendKind::Flat, BackendKind::Lsh] {
         for fmt in ["dense", "tt"] {
             for shards in [1usize, 2, 4] {
-                let dir = temp_dir(&format!("ident_{backend:?}_{fmt}_{shards}"));
-                let off = run_workload(backend, fmt, shards, None);
-                let on = run_workload(backend, fmt, shards, Some(TraceConfig::new(&dir)));
-                let _ = std::fs::remove_dir_all(&dir);
-                assert_eq!(off.len(), on.len());
-                assert_eq!(
-                    off, on,
-                    "tracing perturbed responses at {backend:?}/{fmt}/S={shards}"
-                );
+                for ctx in [false, true] {
+                    let dir = temp_dir(&format!("ident_{backend:?}_{fmt}_{shards}_{ctx}"));
+                    let off = run_workload(backend, fmt, shards, None, ctx);
+                    let on =
+                        run_workload(backend, fmt, shards, Some(TraceConfig::new(&dir)), ctx);
+                    let _ = std::fs::remove_dir_all(&dir);
+                    assert_eq!(off.len(), on.len());
+                    assert_eq!(
+                        off, on,
+                        "tracing perturbed responses at {backend:?}/{fmt}/S={shards}/ctx={ctx}"
+                    );
+                    // Echo semantics ride the same comparison: a supplied
+                    // context comes back verbatim, and without one the
+                    // response stays context-free even while the
+                    // dispatcher assigns span ids internally.
+                    for (id, _, _, _, echo) in &on {
+                        if ctx {
+                            assert_eq!(*echo, Some(ctx_id(*id)), "context echo at id {id}");
+                        } else {
+                            assert_eq!(*echo, None, "assigned span id leaked at id {id}");
+                        }
+                    }
+                }
             }
         }
     }
@@ -277,6 +319,7 @@ fn error_replies_record_end_to_end_latency() {
         id: 1,
         op: RequestOp::Project,
         payload: Payload::Signature { format: Format::Tt, dims: DIMS.to_vec() },
+        trace: None,
     };
     assert!(coord.project_blocking(req).is_err());
     let snap =
@@ -362,15 +405,40 @@ fn traced_serve_session_writes_parseable_spans_covering_every_stage() {
     drop(coord);
     let mut stages = std::collections::BTreeSet::new();
     let mut lines = 0u64;
+    let mut anchors = 0u64;
+    let mut traced_spans = 0u64;
+    let mut sealed_dropped: Option<u64> = None;
     for entry in std::fs::read_dir(&dir).expect("trace dir exists") {
         let path = entry.unwrap().path();
         let text = std::fs::read_to_string(&path).unwrap();
-        for line in text.lines() {
+        for (i, line) in text.lines().enumerate() {
             if line.trim().is_empty() {
                 continue;
             }
             let v = Json::parse(line)
                 .unwrap_or_else(|e| panic!("unparseable span line {line:?}: {e}"));
+            if let Some(kind) = v.get("meta").and_then(Json::as_str) {
+                match kind {
+                    "anchor" => {
+                        // Wall-clock anchor leads every generation so
+                        // spans from different processes align.
+                        assert_eq!(i, 0, "anchor must be the first line of {path:?}");
+                        assert!(v.get("unix_us").and_then(Json::as_usize).is_some());
+                        assert!(v.get("epoch_us").and_then(Json::as_usize).is_some());
+                        anchors += 1;
+                    }
+                    "sig" => {
+                        assert!(v.get("id").and_then(Json::as_usize).is_some());
+                        assert!(v.get("label").and_then(Json::as_str).is_some());
+                    }
+                    "stats" => {
+                        sealed_dropped =
+                            Some(v.get("dropped").and_then(Json::as_usize).unwrap() as u64);
+                    }
+                    other => panic!("unknown meta record kind {other:?}"),
+                }
+                continue;
+            }
             let stage = v
                 .get("stage")
                 .and_then(Json::as_str)
@@ -383,13 +451,193 @@ fn traced_serve_session_writes_parseable_spans_covering_every_stage() {
             );
             assert!(v.get("start_us").and_then(Json::as_usize).is_some(), "bad start_us");
             assert!(v.get("dur_us").and_then(Json::as_usize).is_some(), "bad dur_us");
+            if v.get("trace").and_then(Json::as_usize).is_some() {
+                traced_spans += 1;
+            }
             stages.insert(stage);
             lines += 1;
         }
     }
     assert!(lines > 0, "traced session must write spans");
+    assert!(anchors >= 1, "every generation opens with a wall-clock anchor");
+    assert!(
+        traced_spans > 0,
+        "tracing-enabled sessions assign trace-context ids to spans"
+    );
+    assert_eq!(sealed_dropped, Some(0), "clean shutdown seals the stream with zero drops");
     for s in REQUIRED_STAGES {
         assert!(stages.contains(s), "required stage {s:?} missing from {stages:?}");
     }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn trace_context_echoes_over_the_wire_only_when_supplied() {
+    let dir = temp_dir("echo");
+    let coord = Arc::new(Coordinator::start(
+        CoordinatorConfig {
+            workers: 2,
+            default_k: 8,
+            master_seed: 13,
+            trace: Some(TraceConfig::new(&dir)),
+            ..Default::default()
+        },
+        None,
+    ));
+    let server = NetServer::start(Arc::clone(&coord), "127.0.0.1:0").unwrap();
+    let mut client = NetClient::connect(server.addr()).unwrap();
+    let mut rng = Rng::seed_from(17);
+    let x = TtTensor::random_unit(&DIMS, 2, &mut rng);
+    let resp = client
+        .roundtrip(&ProjectRequest::insert(1, AnyTensor::Tt(x)).with_trace(0xCAFE))
+        .unwrap();
+    assert!(resp.error.is_none());
+    assert_eq!(resp.trace, Some(0xCAFE), "client-supplied context echoes verbatim");
+    // No context supplied: even with tracing enabled (the dispatcher is
+    // assigning span ids right now) the response stays context-free.
+    let x = TtTensor::random_unit(&DIMS, 2, &mut rng);
+    let resp = client.roundtrip(&ProjectRequest::query(2, AnyTensor::Tt(x), 1)).unwrap();
+    assert!(resp.error.is_none());
+    assert_eq!(resp.trace, None, "dispatcher-assigned ids never reach the wire");
+    // The early-returning metrics arm echoes too.
+    let resp = client.roundtrip(&ProjectRequest::metrics(3, false).with_trace(7)).unwrap();
+    assert!(resp.error.is_none());
+    assert_eq!(resp.trace, Some(7));
+    drop(client);
+    server.shutdown();
+    drop(coord);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn client_supplied_context_stamps_histogram_exemplars() {
+    // No trace dir: exemplars ride the always-on registry and need only
+    // the request's own context id.
+    let coord = Coordinator::start(
+        CoordinatorConfig { workers: 2, default_k: 8, master_seed: 31, ..Default::default() },
+        None,
+    );
+    let mut rng = Rng::seed_from(23);
+    for i in 0..10u64 {
+        let x = TtTensor::random_unit(&DIMS, 2, &mut rng);
+        coord
+            .project_blocking(ProjectRequest::insert(i, AnyTensor::Tt(x)).with_trace(1000 + i))
+            .unwrap();
+    }
+    let snap =
+        coord.project_blocking(ProjectRequest::metrics(99, false)).unwrap().metrics.unwrap();
+    let sig = snap
+        .signatures
+        .iter()
+        .find(|s| s.signature.starts_with("tt-"))
+        .expect("TT signature present");
+    let mut nonzero = 0u64;
+    for st in &sig.stages {
+        assert_eq!(
+            st.exemplars.len(),
+            st.buckets.len(),
+            "exemplars align with buckets in {}",
+            st.stage
+        );
+        for (b, &e) in st.exemplars.iter().enumerate() {
+            if e == 0 {
+                continue;
+            }
+            nonzero += 1;
+            assert!(
+                st.buckets[b] > 0,
+                "exemplar without observations in {} bucket {b}",
+                st.stage
+            );
+            let t = e - 1;
+            assert!(
+                (1000..1010).contains(&t),
+                "exemplar {t} in {} is not one of the supplied context ids",
+                st.stage
+            );
+        }
+    }
+    assert!(nonzero > 0, "context-carrying traffic must stamp at least one exemplar");
+    coord.shutdown();
+}
+
+#[test]
+fn slo_alarm_fires_under_injected_latency_and_clears_when_traffic_stops() {
+    let dir = temp_dir("slo");
+    std::fs::create_dir_all(&dir).unwrap();
+    let alarms = dir.join("alarms.jsonl");
+    // A 1 µs p99 target no real request can meet: every observation
+    // burns budget, so the alarm must fire under sustained traffic. The
+    // objective names the traffic signature explicitly so the metrics
+    // polls below (a different signature) don't feed the burn windows.
+    let slo = SloConfig {
+        objectives: vec![Objective {
+            signature: "tt-r5/3x3x3x3/k8".into(),
+            p99_latency_us: Some(1),
+            error_rate: None,
+            fast_window_s: 0.05,
+            slow_window_s: 0.1,
+            burn_threshold: 14.0,
+        }],
+        poll_interval_ms: 10,
+        alarms_path: Some(alarms.clone()),
+    };
+    let coord = Coordinator::start(
+        CoordinatorConfig {
+            workers: 2,
+            default_k: 8,
+            master_seed: 77,
+            slo: Some(slo),
+            ..Default::default()
+        },
+        None,
+    );
+    let mut rng = Rng::seed_from(41);
+    let mut fired = false;
+    for round in 0..400u64 {
+        let x = TtTensor::random_unit(&DIMS, 2, &mut rng);
+        coord.project_blocking(ProjectRequest::insert(round, AnyTensor::Tt(x))).unwrap();
+        let snap = coord
+            .project_blocking(ProjectRequest::metrics(10_000 + round, false))
+            .unwrap()
+            .metrics
+            .unwrap();
+        if snap.slo.iter().any(|s| s.firing) {
+            fired = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    assert!(fired, "sustained over-target traffic must trip the burn-rate alarm");
+    // Stop the traffic. Once both windows see no new observations the
+    // burn rate reads zero and the alarm clears.
+    let mut cleared = false;
+    for i in 0..500u64 {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        let snap = coord
+            .project_blocking(ProjectRequest::metrics(20_000 + i, false))
+            .unwrap()
+            .metrics
+            .unwrap();
+        if snap.slo.iter().all(|s| !s.firing) {
+            cleared = true;
+            break;
+        }
+    }
+    assert!(cleared, "alarm must clear once traffic stops");
+    coord.shutdown();
+    let text = std::fs::read_to_string(&alarms).expect("alarm transitions were appended");
+    let states: Vec<String> = text
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| {
+            let v = Json::parse(l).expect("alarm line parses");
+            assert!(v.get("unix_us").and_then(Json::as_usize).is_some());
+            assert!(v.get("signature").and_then(Json::as_str).is_some());
+            v.get("state").and_then(Json::as_str).expect("alarm state").to_string()
+        })
+        .collect();
+    assert!(states.contains(&"firing".to_string()), "firing transition logged");
+    assert_eq!(states.last().map(String::as_str), Some("clear"), "clear transition logged last");
     let _ = std::fs::remove_dir_all(&dir);
 }
